@@ -1,0 +1,64 @@
+//! Dense-prediction merging: the NYUv2-analog pipeline (segmentation,
+//! depth estimation, normal estimation) under TVQ/RTVQ — a fast cut of
+//! paper Table 3.
+//!
+//! Run: `cargo run --release --example dense_merging`
+
+use anyhow::Result;
+
+use tvq::data::dense::DenseTaskKind;
+use tvq::exp;
+use tvq::exp::report::Table;
+use tvq::merge::{Merger, TaskArithmetic, Ties};
+use tvq::quant::QuantScheme;
+use tvq::runtime::Runtime;
+use tvq::train::DenseZoo;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    let zoo = DenseZoo::build_or_load(&rt, &exp::default_train_config())?;
+    let fts: Vec<_> = zoo.fts.iter().map(|(_, ck)| ck.clone()).collect();
+
+    let schemes = [
+        QuantScheme::Fp32,
+        QuantScheme::Tvq(4),
+        QuantScheme::Tvq(2),
+        QuantScheme::Rtvq(2, 2),
+    ];
+    let methods: Vec<Box<dyn Merger>> =
+        vec![Box::new(TaskArithmetic::default()), Box::new(Ties::default())];
+
+    let mut cols: Vec<String> = vec!["Method / Task".into()];
+    cols.extend(schemes.iter().map(|s| s.label()));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "dense_merging",
+        "Dense prediction merging (mIoU up / RelErr down / MeanAngle down)",
+        &col_refs,
+    );
+
+    for method in &methods {
+        for (ki, kind) in DenseTaskKind::all().iter().enumerate() {
+            let mut row = vec![format!("{} / {}", method.name(), kind.name())];
+            for &scheme in &schemes {
+                let st = exp::scheme_taus(&zoo.pre, &fts, scheme)?;
+                let merged = method.merge(&zoo.pre, &st.taus)?;
+                let scores = tvq::eval::dense_eval(
+                    &rt,
+                    &zoo.preset,
+                    merged.for_task(ki),
+                    *kind,
+                    zoo.head(*kind),
+                    4,
+                )?;
+                let v = exp::dense::headline(&scores, *kind);
+                eprintln!("{} {} @ {}: {v:.1}", method.name(), kind.name(), scheme.label());
+                row.push(format!("{v:.1}"));
+            }
+            table.push_row(row);
+        }
+    }
+    table.print();
+    table.save()?;
+    Ok(())
+}

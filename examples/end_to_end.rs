@@ -1,0 +1,176 @@
+//! End-to-end driver: the full system on one real (synthetic-data)
+//! workload, proving all three layers compose.
+//!
+//!   1. TRAIN   — pre-train a ViT trunk, then fine-tune 8 task
+//!                checkpoints through the AOT PJRT train-step artifact
+//!                (L2 JAX graph + L1 Pallas kernels), logging loss curves.
+//!   2. QUANTIZE — TVQ-INT3 and RTVQ-B3O2 the task vectors; report
+//!                storage and quantization error (the paper's headline).
+//!   3. MERGE   — task arithmetic + EMR on FP32 vs quantized vectors.
+//!   4. EVALUATE — per-task accuracy of each merged variant.
+//!   5. SERVE   — boot the coordinator on the quantized merged model and
+//!                push concurrent traffic; report latency/throughput.
+//!
+//! Results from a reference run are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example end_to_end`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use tvq::coordinator::{Server, ServerConfig, ServeModel};
+use tvq::data::classify::TaskSuite;
+use tvq::data::VIT_S;
+use tvq::exp;
+use tvq::merge::{EmrMerging, Merger, TaskArithmetic};
+use tvq::quant::{QuantScheme, Rtvq, QuantizedCheckpoint};
+use tvq::runtime::Runtime;
+use tvq::tensor::Tensor;
+use tvq::train::{self, TrainConfig};
+use tvq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    let preset = &VIT_S;
+    let n_tasks = 8;
+    let cfg = TrainConfig::default();
+
+    // ---------------------------------------------------------- 1. TRAIN
+    println!("== 1. training (PJRT, {} steps/task) ==", cfg.steps);
+    let suite = TaskSuite::new(preset, n_tasks, 1000);
+    let t_train = Instant::now();
+    let (pre, pre_losses) =
+        train::pretrain_classify(&rt, preset, &suite.pretrain_task(), &cfg, 0x9E3)?;
+    print_curve("pretrain", &pre_losses);
+    let mut fts = Vec::with_capacity(n_tasks);
+    for (i, task) in suite.tasks.iter().enumerate() {
+        let (ft, losses) = train::finetune_classify(&rt, preset, &pre, task, &cfg)?;
+        print_curve(&format!("task{i:02}"), &losses);
+        fts.push(ft);
+    }
+    println!("training wall-clock: {:.1}s", t_train.elapsed().as_secs_f64());
+
+    // ------------------------------------------------------ 2. QUANTIZE
+    println!("\n== 2. quantization ==");
+    let fp32_bytes = n_tasks * pre.fp32_bytes();
+    for scheme in [QuantScheme::Tvq(3), QuantScheme::Rtvq(3, 2)] {
+        let st = exp::scheme_taus(&pre, &fts, scheme)?;
+        let err: f64 = fts
+            .iter()
+            .zip(&st.taus)
+            .map(|(ft, tau_hat)| {
+                ft.sub(&pre).unwrap().l2_dist(tau_hat).unwrap()
+            })
+            .sum();
+        println!(
+            "{:<10}: {} B ({:.1}% of fp32), total L2 err {err:.4}, {:.3} bits/task",
+            scheme.label(),
+            st.storage_bytes,
+            100.0 * st.storage_bytes as f64 / fp32_bytes as f64,
+            scheme.effective_bits(n_tasks)
+        );
+    }
+    // Sanity: the two core quantizers round-trip within their bound.
+    let tau0 = fts[0].sub(&pre)?;
+    let q = QuantizedCheckpoint::quantize(&tau0, 3)?;
+    println!("TVQ-INT3 task0 L2 err: {:.5}", q.quant_error(&tau0)?);
+    let r = Rtvq::quantize(&pre, &fts, 3, 2, true)?;
+    println!("RTVQ-B3O2 total err:   {:.5}", r.total_quant_error(&pre, &fts)?);
+
+    // ------------------------------------------------ 3+4. MERGE + EVAL
+    println!("\n== 3/4. merge + evaluate ==");
+    let methods: Vec<Box<dyn Merger>> =
+        vec![Box::new(TaskArithmetic::default()), Box::new(EmrMerging)];
+    let schemes = [QuantScheme::Fp32, QuantScheme::Tvq(3), QuantScheme::Rtvq(3, 2)];
+    let mut emr_tvq3 = None;
+    for method in &methods {
+        for &scheme in &schemes {
+            let st = exp::scheme_taus(&pre, &fts, scheme)?;
+            let merged = method.merge(&pre, &st.taus)?;
+            let mut accs = Vec::new();
+            for (t, task) in suite.tasks.iter().enumerate() {
+                accs.push(tvq::eval::classify_accuracy(
+                    &rt,
+                    preset,
+                    merged.for_task(t),
+                    task,
+                )?);
+            }
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            println!("{:<16} @ {:<10}: avg acc {avg:.1}%", method.name(), scheme.label());
+            if method.name() == "emr_merging" && scheme == QuantScheme::Tvq(3) {
+                emr_tvq3 = Some(merged);
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- 5. SERVE
+    println!("\n== 5. serve (coordinator, quantized EMR variant) ==");
+    let merged = Arc::new(emr_tvq3.expect("emr @ tvq3 built above"));
+    let heads = Arc::new(suite.tasks.iter().map(|t| t.head.clone()).collect::<Vec<_>>());
+    let model = ServeModel { preset, merged, heads };
+    let cfg = ServerConfig {
+        max_batch: 32,
+        max_delay: Duration::from_millis(2),
+        queue_cap: 4096,
+        executors: 2,
+    };
+    let server = Arc::new(Server::start(cfg, model)?);
+    // Warm every serve bucket (first PJRT compile is 100s of ms), then
+    // reset the latency window so percentiles reflect steady state.
+    {
+        let mut rng = Rng::new(0xAA);
+        for burst in [1usize, 8, 32, 32] {
+            let rxs: Vec<_> = (0..burst)
+                .map(|_| {
+                    let x =
+                        Tensor::randn(&[VIT_S.tokens, VIT_S.token_dim], 1.0, &mut rng);
+                    server.submit(0, &x).unwrap()
+                })
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().map_err(anyhow::Error::msg)?;
+            }
+        }
+        server.reset_metrics_window();
+    }
+    let clients = 8;
+    let per_client = 128;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(0xE2E + c as u64);
+            for _ in 0..per_client {
+                let task = rng.below(8);
+                let x = Tensor::randn(&[VIT_S.tokens, VIT_S.token_dim], 1.0, &mut rng);
+                s.infer(task, &x)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client panicked")?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!("{}", m.summary());
+    println!(
+        "throughput {:.0} req/s | wall {dt:.2}s | python on request path: never",
+        m.completed as f64 / dt
+    );
+    Ok(())
+}
+
+fn print_curve(name: &str, losses: &[f32]) {
+    let pts: Vec<String> = losses
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % 50 == 0 || *i == losses.len() - 1)
+        .map(|(i, l)| format!("{i}:{l:.3}"))
+        .collect();
+    println!("  {name} loss curve: {}", pts.join(" -> "));
+}

@@ -1,0 +1,52 @@
+//! Merge-method comparison: every task-vector merging method under the
+//! key quantization schemes — a fast, narrower cut of paper Table 1.
+//!
+//! Run: `cargo run --release --example merge_methods`
+
+use anyhow::Result;
+
+use tvq::exp;
+use tvq::exp::report::Table;
+use tvq::merge::standard_methods;
+use tvq::quant::QuantScheme;
+use tvq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    let zoo = exp::zoo(&rt, &tvq::data::VIT_S, 8)?;
+    let schemes = [
+        QuantScheme::Fp32,
+        QuantScheme::Fq(4),
+        QuantScheme::Tvq(4),
+        QuantScheme::Tvq(3),
+        QuantScheme::Tvq(2),
+        QuantScheme::Rtvq(3, 2),
+    ];
+    let mut cols: Vec<String> = vec!["Method".into()];
+    cols.extend(schemes.iter().map(|s| s.label()));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "merge_methods",
+        "Merging 8 tasks, vit_s: methods x schemes",
+        &col_refs,
+    );
+    for method in standard_methods() {
+        let mut row = vec![method.name().to_string()];
+        let mut baseline = f64::NAN;
+        for (i, &scheme) in schemes.iter().enumerate() {
+            let acc =
+                exp::classify::method_scheme_accuracy(&rt, &zoo, method.as_ref(), scheme)?;
+            eprintln!("{} @ {}: {acc:.1}%", method.name(), scheme.label());
+            if i == 0 {
+                baseline = acc;
+                row.push(format!("{acc:.1}"));
+            } else {
+                row.push(Table::cell_with_delta(acc, baseline));
+            }
+        }
+        table.push_row(row);
+    }
+    table.print();
+    table.save()?;
+    Ok(())
+}

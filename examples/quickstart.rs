@@ -1,0 +1,75 @@
+//! Quickstart: the paper's core idea in ~60 lines.
+//!
+//! 1. Build (or load the cached) 8-task checkpoint zoo.
+//! 2. Show the Fig. 3 observation: the task vector's weight range is an
+//!    order of magnitude narrower than the fine-tuned checkpoint's.
+//! 3. Quantize the task vector at 3 bits (TVQ) vs quantizing the full
+//!    checkpoint (FQ) — compare quantization error and storage.
+//! 4. Merge all 8 quantized task vectors with task arithmetic and report
+//!    multi-task accuracy against the FP32 baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use tvq::exp;
+use tvq::merge::{Merger, TaskArithmetic};
+use tvq::quant::{QuantScheme, QuantizedCheckpoint};
+use tvq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. Checkpoint zoo (cached under target/zoo after the first build).
+    let zoo = exp::zoo(&rt, &tvq::data::VIT_S, 8)?;
+    println!(
+        "zoo: {} tasks x {} params ({:.1} KiB fp32 per checkpoint)",
+        zoo.n_tasks(),
+        zoo.pre.numel(),
+        zoo.pre.fp32_bytes() as f64 / 1024.0
+    );
+
+    // 2. The observation (paper Fig. 3).
+    let ft = &zoo.fts[0];
+    let tau = ft.sub(&zoo.pre)?;
+    let (flo, fhi) = ft.weight_range();
+    let (tlo, thi) = tau.weight_range();
+    println!(
+        "\nweight ranges (task 0):\n  fine-tuned ckpt: [{flo:.3}, {fhi:.3}]  width {:.3}\n  task vector:     [{tlo:.4}, {thi:.4}]  width {:.4}  ({:.0}x narrower)",
+        fhi - flo,
+        thi - tlo,
+        (fhi - flo) / (thi - tlo)
+    );
+
+    // 3. TVQ vs FQ at 3 bits (paper Fig. 4 / Section 4.2).
+    let q_tau = QuantizedCheckpoint::quantize(&tau, 3)?;
+    let q_ft = QuantizedCheckpoint::quantize(ft, 3)?;
+    let tvq_err = q_tau.quant_error(&tau)?;
+    let fq_err = q_ft.dequantize()?.sub(&zoo.pre)?.l2_dist(&tau)?;
+    println!(
+        "\n3-bit quantization error (L2 on the task vector):\n  TVQ: {tvq_err:.4}\n  FQ:  {fq_err:.4}   ({:.0}x worse)",
+        fq_err / tvq_err
+    );
+    println!(
+        "storage per checkpoint: fp32 {} B -> TVQ-INT3 {} B ({:.1}%)",
+        tau.fp32_bytes(),
+        q_tau.storage_bytes(),
+        100.0 * q_tau.storage_bytes() as f64 / tau.fp32_bytes() as f64
+    );
+
+    // 4. Merge 8 quantized task vectors and evaluate (paper Table 1 cell).
+    let ta = TaskArithmetic::default();
+    for scheme in [QuantScheme::Fp32, QuantScheme::Tvq(3), QuantScheme::Rtvq(3, 2)] {
+        let st = exp::scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+        let merged = ta.merge(&zoo.pre, &st.taus)?;
+        let accs = exp::classify::eval_merged(&rt, &zoo, &merged)?;
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        println!(
+            "task arithmetic @ {:<10}: avg accuracy {avg:.1}%  (storage {:.1}% of fp32)",
+            scheme.label(),
+            100.0 * st.storage_bytes as f64 / (8 * zoo.pre.fp32_bytes()) as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Serving demo: the coordinator under concurrent load with a warm
+//! merged-model cache holding several (method, scheme) variants.
+//!
+//! Shows the deployment story the paper's storage numbers enable: many
+//! compact quantized variants resident at once, batched multi-task
+//! inference with Python nowhere on the request path.
+//!
+//! Run: `cargo run --release --example serving`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use tvq::coordinator::{ModelCache, Server, ServerConfig, ServeModel};
+use tvq::exp;
+use tvq::merge::{EmrMerging, Merger, TaskArithmetic};
+use tvq::quant::QuantScheme;
+use tvq::runtime::Runtime;
+use tvq::tensor::Tensor;
+use tvq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    let zoo = exp::zoo(&rt, &tvq::data::VIT_S, 8)?;
+
+    // Warm a cache of merged variants (shared pre-trained trunk; each
+    // variant built from quantized task vectors).
+    let cache = ModelCache::new();
+    let variants: Vec<(&str, Box<dyn Merger>, QuantScheme)> = vec![
+        ("ta", Box::new(TaskArithmetic::default()), QuantScheme::Tvq(3)),
+        ("ta", Box::new(TaskArithmetic::default()), QuantScheme::Rtvq(3, 2)),
+        ("emr", Box::new(EmrMerging), QuantScheme::Tvq(3)),
+    ];
+    for (name, method, scheme) in &variants {
+        let st = exp::scheme_taus(&zoo.pre, &zoo.fts, *scheme)?;
+        cache.get_or_build(name, &scheme.label(), || method.merge(&zoo.pre, &st.taus))?;
+    }
+    println!(
+        "model cache: {} variants resident, {:.1} MiB fp32",
+        cache.len(),
+        cache.resident_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    for (m, s) in cache.keys() {
+        println!("  {m} @ {s}");
+    }
+
+    // Serve the EMR @ TVQ-INT3 variant (per-task masked models).
+    let merged = cache.get_or_build("emr", "TVQ-INT3", || unreachable!())?;
+    let heads = Arc::new(
+        zoo.suite.tasks.iter().map(|t| t.head.clone()).collect::<Vec<_>>(),
+    );
+    let model = ServeModel { preset: zoo.preset, merged, heads };
+    let cfg = ServerConfig {
+        max_batch: 32,
+        max_delay: Duration::from_millis(2),
+        queue_cap: 4096,
+        executors: 2,
+    };
+    let server = Arc::new(Server::start(cfg, model)?);
+
+    // Load: 8 client threads, mixed tasks, closed loop.
+    let clients = 8;
+    let per_client = 128;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let n_tasks = zoo.suite.tasks.len();
+        let preset = zoo.preset;
+        handles.push(std::thread::spawn(move || -> Result<u32> {
+            let mut rng = Rng::new(0xC11E + c as u64);
+            let mut ok = 0;
+            for _ in 0..per_client {
+                let task = rng.below(n_tasks);
+                let x = Tensor::randn(&[preset.tokens, preset.token_dim], 1.0, &mut rng);
+                let logits = s.infer(task, &x)?;
+                assert_eq!(logits.len(), preset.n_classes);
+                ok += 1;
+            }
+            Ok(ok)
+        }));
+    }
+    let mut total = 0;
+    for h in handles {
+        total += h.join().expect("client thread panicked")?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!("\nserved {total} requests in {dt:.2}s  ({:.0} req/s)", total as f64 / dt);
+    println!("{}", m.summary());
+    Ok(())
+}

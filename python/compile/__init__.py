@@ -1,0 +1,1 @@
+"""Build-time compile package for tvq-merge (never imported at runtime)."""

@@ -1,0 +1,338 @@
+"""AOT pipeline: lower every (model, entrypoint, batch) variant to HLO text.
+
+Python's ONLY runtime role ends here: `make artifacts` runs this module
+once, producing `artifacts/<name>.hlo.txt` (HLO text — NOT a serialized
+HloModuleProto; the image's xla_extension 0.5.1 rejects jax>=0.5 64-bit
+instruction ids, while the text parser reassigns ids and round-trips
+cleanly) plus `artifacts/<name>.json` manifests describing the exact
+input/output signature and the trunk-parameter flattening order the Rust
+runtime must follow.  An `index.json` enumerates the whole artifact set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import dequant_merge as dq
+from .kernels import packed_merge as pk
+
+BLOCK = dq.BLOCK
+
+# Serving batch buckets per preset (the coordinator pads to the nearest
+# bucket), plus the evaluation and training batch sizes.
+SERVE_BUCKETS = {"vit_s": [1, 8, 32], "vit_m": [1, 32], "vit_l": [1, 32]}
+EVAL_BATCH = 256
+TRAIN_BATCH = 32
+DENSE_BATCH = 8
+MERGE_TASKS = 8  # T for the fused dequant-merge artifacts
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(x)]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Artifact:
+    """One lowered entrypoint: fn + example input specs + manifest extras."""
+
+    def __init__(self, name: str, fn: Callable, inputs: List[dict],
+                 params: Optional[List[dict]] = None, meta: Optional[dict] = None):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs          # [{"name", "shape", "dtype"}]
+        self.params = params          # trunk layout, if the entry takes one
+        self.meta = meta or {}
+
+    def lower(self):
+        specs = [
+            _spec(i["shape"], jnp.int32 if i["dtype"] == "i32" else jnp.float32)
+            for i in self.inputs
+        ]
+        return jax.jit(self.fn).lower(*specs)
+
+
+def _param_manifest(p: M.Params) -> List[dict]:
+    return [{"name": k, "shape": list(p[k].shape)} for k in M.param_order(p)]
+
+
+def _params_as_inputs(p: M.Params) -> List[dict]:
+    return [
+        {"name": f"param:{k}", "shape": list(p[k].shape), "dtype": "f32"}
+        for k in M.param_order(p)
+    ]
+
+
+def vit_artifacts(preset: str) -> List[Artifact]:
+    cfg = M.VIT_PRESETS[preset]
+    tmpl = M.vit_init(cfg)
+    pinputs = _params_as_inputs(tmpl)
+    players = _param_manifest(tmpl)
+    head = {"name": "head", "shape": [cfg.dim, cfg.n_classes], "dtype": "f32"}
+    meta = {
+        "preset": preset,
+        "dim": cfg.dim,
+        "depth": cfg.depth,
+        "heads": cfg.heads,
+        "tokens": cfg.tokens,
+        "token_dim": cfg.token_dim,
+        "n_classes": cfg.n_classes,
+        "param_count": M.param_count(tmpl),
+        "flat_padded": M.flat_size_padded(tmpl),
+        "block": BLOCK,
+    }
+
+    def fwd(B):
+        def f(*args):
+            n = len(players)
+            p = dict(zip(M.param_order(tmpl), args[:n]))
+            return (M.vit_forward(cfg, p, args[n], args[n + 1]),)
+        return f
+
+    def train(B):
+        def f(*args):
+            n = len(players)
+            p = dict(zip(M.param_order(tmpl), args[:n]))
+            head_a, x, y, lr = args[n], args[n + 1], args[n + 2], args[n + 3]
+            new_p, loss = M.vit_train_step(cfg, p, head_a, x, y, lr)
+            return tuple(new_p[k] for k in M.param_order(tmpl)) + (loss,)
+        return f
+
+    arts = []
+    batches = sorted(set(SERVE_BUCKETS[preset] + [EVAL_BATCH]))
+    for b in batches:
+        arts.append(Artifact(
+            f"{preset}_forward_b{b}", fwd(b),
+            pinputs + [head, {"name": "x", "shape": [b, cfg.tokens, cfg.token_dim], "dtype": "f32"}],
+            params=players,
+            meta={**meta, "entry": "forward", "batch": b},
+        ))
+    arts.append(Artifact(
+        f"{preset}_train_b{TRAIN_BATCH}", train(TRAIN_BATCH),
+        pinputs + [
+            head,
+            {"name": "x", "shape": [TRAIN_BATCH, cfg.tokens, cfg.token_dim], "dtype": "f32"},
+            {"name": "y", "shape": [TRAIN_BATCH], "dtype": "i32"},
+            {"name": "lr", "shape": [1], "dtype": "f32"},
+        ],
+        params=players,
+        meta={**meta, "entry": "train", "batch": TRAIN_BATCH},
+    ))
+    return arts
+
+
+def vit_merged_artifacts(preset: str) -> List[Artifact]:
+    """Fused Pallas-dequant-merge + trunk forward (the serving fast path)."""
+    cfg = M.VIT_PRESETS[preset]
+    tmpl = M.vit_init(cfg)
+    np_ = M.flat_size_padded(tmpl)
+    g = np_ // BLOCK
+    t = MERGE_TASKS
+    b = SERVE_BUCKETS[preset][-1]
+
+    def f(pre_flat, q, scales, zps, lams, head, x):
+        return (M.vit_merged_forward(cfg, tmpl, pre_flat, q, scales, zps,
+                                     lams, head, x),)
+
+    inputs = [
+        {"name": "pre_flat", "shape": [np_], "dtype": "f32"},
+        {"name": "q", "shape": [t, np_], "dtype": "f32"},
+        {"name": "scales", "shape": [t, g], "dtype": "f32"},
+        {"name": "zps", "shape": [t, g], "dtype": "f32"},
+        {"name": "lams", "shape": [t], "dtype": "f32"},
+        {"name": "head", "shape": [cfg.dim, cfg.n_classes], "dtype": "f32"},
+        {"name": "x", "shape": [b, cfg.tokens, cfg.token_dim], "dtype": "f32"},
+    ]
+    return [Artifact(
+        f"{preset}_merged_forward_t{t}_b{b}", f, inputs,
+        params=_param_manifest(tmpl),
+        meta={"preset": preset, "entry": "merged_forward", "tasks": t,
+              "batch": b, "flat_padded": np_, "block": BLOCK,
+              "param_count": M.param_count(tmpl)},
+    )]
+
+
+def dense_artifacts() -> List[Artifact]:
+    cfg = M.DENSE_PRESET
+    tmpl = M.dense_init(cfg)
+    pinputs = _params_as_inputs(tmpl)
+    players = _param_manifest(tmpl)
+    b = DENSE_BATCH
+    meta = {
+        "preset": "dense",
+        "height": cfg.height,
+        "width": cfg.width,
+        "in_ch": cfg.in_ch,
+        "ch": cfg.ch,
+        "seg_classes": cfg.seg_classes,
+        "param_count": M.param_count(tmpl),
+        "flat_padded": M.flat_size_padded(tmpl),
+        "block": BLOCK,
+    }
+    arts = []
+    for task, out_ch in M.DENSE_TASKS.items():
+        head = {"name": "head", "shape": [1, 1, cfg.feat_ch, out_ch], "dtype": "f32"}
+        x_in = {"name": "x", "shape": [b, cfg.height, cfg.width, cfg.in_ch], "dtype": "f32"}
+
+        def fwd(task=task):
+            def f(*args):
+                n = len(players)
+                p = dict(zip(M.param_order(tmpl), args[:n]))
+                return (M.dense_forward(cfg, p, args[n], args[n + 1]),)
+            return f
+
+        def train(task=task, out_ch=out_ch):
+            y_shape = [b, cfg.height, cfg.width] if task == "seg" \
+                else [b, cfg.height, cfg.width, out_ch]
+
+            def f(*args):
+                n = len(players)
+                p = dict(zip(M.param_order(tmpl), args[:n]))
+                head_a, x, y, lr = args[n], args[n + 1], args[n + 2], args[n + 3]
+                new_p, loss = M.dense_train_step(cfg, task, p, head_a, x, y, lr)
+                return tuple(new_p[k] for k in M.param_order(tmpl)) + (loss,)
+            return f, y_shape
+
+        arts.append(Artifact(
+            f"dense_forward_{task}_b{b}", fwd(), pinputs + [head, x_in],
+            params=players, meta={**meta, "entry": "forward", "task": task, "batch": b},
+        ))
+        tf, y_shape = train()
+        ydt = "i32" if task == "seg" else "f32"
+        arts.append(Artifact(
+            f"dense_train_{task}_b{b}", tf,
+            pinputs + [head, x_in,
+                       {"name": "y", "shape": y_shape, "dtype": ydt},
+                       {"name": "lr", "shape": [1], "dtype": "f32"}],
+            params=players, meta={**meta, "entry": "train", "task": task, "batch": b},
+        ))
+    return arts
+
+
+def kernel_artifacts() -> List[Artifact]:
+    """Standalone Layer-1 kernel artifacts (validated against Rust natively)."""
+    arts = []
+    tmpl = M.vit_init(M.VIT_PRESETS["vit_s"])
+    sizes = {"4k": 4096, "vit_s": M.flat_size_padded(tmpl)}
+    for tag, n in sizes.items():
+        g = n // BLOCK
+        arts.append(Artifact(
+            f"quantize_{tag}",
+            lambda x, qmax: M.quantize_entry(x, qmax),
+            [{"name": "x", "shape": [n], "dtype": "f32"},
+             {"name": "qmax", "shape": [1], "dtype": "f32"}],
+            meta={"entry": "quantize", "n": n, "groups": g, "block": BLOCK},
+        ))
+        t = MERGE_TASKS
+        arts.append(Artifact(
+            f"dequant_merge_{tag}_t{t}",
+            lambda pre, q, s, z, l: (dq.dequant_merge(pre, q, s, z, l),),
+            [{"name": "pre", "shape": [n], "dtype": "f32"},
+             {"name": "q", "shape": [t, n], "dtype": "f32"},
+             {"name": "scales", "shape": [t, g], "dtype": "f32"},
+             {"name": "zps", "shape": [t, g], "dtype": "f32"},
+             {"name": "lams", "shape": [t], "dtype": "f32"}],
+            meta={"entry": "dequant_merge", "n": n, "groups": g,
+                  "tasks": t, "block": BLOCK},
+        ))
+        # Packed-codes variant: int32 words, 32/bits codes per word — the
+        # bandwidth-proportional payload path (see kernels/packed_merge.py).
+        for bits in (2, 4, 8):
+            cpw = 32 // bits
+            nw = n // cpw
+            arts.append(Artifact(
+                f"packed_merge_{tag}_t{t}_b{bits}",
+                (lambda bits_: lambda pre, w, s, z, l: (
+                    pk.packed_dequant_merge(pre, w, s, z, l, bits=bits_),))(bits),
+                [{"name": "pre", "shape": [n], "dtype": "f32"},
+                 {"name": "words", "shape": [t, nw], "dtype": "i32"},
+                 {"name": "scales", "shape": [t, g], "dtype": "f32"},
+                 {"name": "zps", "shape": [t, g], "dtype": "f32"},
+                 {"name": "lams", "shape": [t], "dtype": "f32"}],
+                meta={"entry": "packed_merge", "n": n, "groups": g,
+                      "tasks": t, "block": BLOCK, "bits": bits},
+            ))
+    return arts
+
+
+def all_artifacts() -> List[Artifact]:
+    arts: List[Artifact] = []
+    for preset in M.VIT_PRESETS:
+        arts.extend(vit_artifacts(preset))
+    arts.extend(vit_merged_artifacts("vit_s"))
+    arts.extend(dense_artifacts())
+    arts.extend(kernel_artifacts())
+    return arts
+
+
+def emit(out_dir: str, only: Optional[str] = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    index: Dict[str, dict] = {}
+    index_path = os.path.join(out_dir, "index.json")
+    if only and os.path.exists(index_path):
+        # Partial re-lower: merge into the existing index instead of
+        # clobbering entries for artifacts we are not regenerating.
+        with open(index_path) as f:
+            index = json.load(f)
+    for art in all_artifacts():
+        if only and only not in art.name:
+            continue
+        lowered = art.lower()
+        text = to_hlo_text(lowered)
+        hlo_path = os.path.join(out_dir, f"{art.name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest = {
+            "name": art.name,
+            "inputs": art.inputs,
+            "outputs": [
+                {"shape": list(a.shape), "dtype": _dt(a.dtype)} for a in out_avals
+            ],
+            "params": art.params,
+            "meta": art.meta,
+            "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        with open(os.path.join(out_dir, f"{art.name}.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        index[art.name] = {"meta": art.meta, "inputs": len(art.inputs),
+                           "outputs": len(manifest["outputs"])}
+        print(f"lowered {art.name}: {len(text)} chars, "
+              f"{len(art.inputs)} in / {len(manifest['outputs'])} out")
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote {len(index)} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    emit(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

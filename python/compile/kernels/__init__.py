@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for tvq-merge.
+
+`quantize`      - asymmetric per-group quantization (Eq. 1).
+`dequant_merge` - fused dequantize-and-merge of T quantized task vectors.
+`ref`           - pure-jnp oracles; the correctness contract for both.
+"""
+
+from . import dequant_merge, quantize, ref  # noqa: F401

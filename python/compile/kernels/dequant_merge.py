@@ -1,0 +1,87 @@
+"""Pallas fused dequantize-and-merge kernel (Layer 1).
+
+This is the deployment hot spot of the paper's pipeline: reconstructing a
+merged parameter vector
+
+    theta_merged = theta_pre + sum_t lam_t * scale_t * (q_t - zp_t)
+
+directly from the quantized task-vector payloads, without materializing any
+intermediate full-precision task vector.  One grid step processes one
+lane-aligned block of the parameter vector for ALL tasks, so the packed
+task payloads stream through VMEM exactly once.
+
+TPU mapping (documented; executed under interpret=True on this image):
+  * block of BLOCK f32 per task -> a [T, BLOCK] VMEM tile per step;
+  * per-group scale/zp arrive as [T, 1] scalars alongside each tile;
+  * fp32 accumulate on the VPU; no MXU;
+  * VMEM per step = (T + 2) * BLOCK * 4 B  (T task tiles + pre + out),
+    e.g. T=8, BLOCK=1024 -> 40 KiB, far below the 16 MiB budget, leaving
+    room for multi-buffered HBM->VMEM pipelining on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _dequant_merge_kernel(pre_ref, q_ref, scale_ref, zp_ref, lam_ref, o_ref):
+    """One parameter block: out = pre + sum_t lam_t*scale_t*(q_t - zp_t)."""
+    pre = pre_ref[...]          # [BLOCK]
+    q = q_ref[...]              # [T, BLOCK]
+    scale = scale_ref[...]      # [T, 1]
+    zp = zp_ref[...]            # [T, 1]
+    lam = lam_ref[...]          # [T]
+    contrib = (q - zp) * (scale * lam[:, None])
+    o_ref[...] = pre + jnp.sum(contrib, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def dequant_merge(pre, q, scales, zps, lams, block: int = BLOCK):
+    """Fused dequantize-and-merge over a flat parameter vector.
+
+    pre    : [N] f32 pre-trained parameters
+    q      : [T, N] f32 quantized task-vector values (integers in f32)
+    scales : [T, G] f32 per-group scales, G = N // block
+    zps    : [T, G] f32 per-group zero points
+    lams   : [T] f32 merging coefficients
+
+    Returns [N] f32 merged parameters.
+    """
+    t, n = q.shape
+    g = n // block
+    return pl.pallas_call(
+        _dequant_merge_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((t, block), lambda i: (0, i)),
+            pl.BlockSpec((t, 1), lambda i: (0, i)),
+            pl.BlockSpec((t, 1), lambda i: (0, i)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(pre, q, scales, zps, lams)
+
+
+def dequant_merge_rtvq(pre, q_base, s_base, z_base, q_off, s_off, z_off, lams,
+                       block: int = BLOCK):
+    """RTVQ variant: tau_t = dq(base) + dq(offset_t)  (Alg. 1, line 5).
+
+    The shared base vector is dequantized once and folded into `pre`
+    (scaled by sum_t lam_t); the per-task offsets then follow the standard
+    fused path.  q_base/s_base/z_base are [N]/[G]/[G]; offsets as in
+    `dequant_merge`.
+    """
+    g = s_base.shape[0]
+    group = pre.shape[0] // g
+    base = ((q_base.reshape(g, group) - z_base[:, None]) * s_base[:, None])
+    pre_eff = pre + jnp.sum(lams) * base.reshape(-1)
+    return dequant_merge(pre_eff, q_off, s_off, z_off, lams, block=block)

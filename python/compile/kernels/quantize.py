@@ -1,0 +1,77 @@
+"""Pallas asymmetric quantization kernel (Layer 1).
+
+The kernel performs the round/clip stage of Eq. 1 over lane-aligned blocks
+of a flat parameter vector; per-group (scale, zero-point) statistics are
+reduced outside the kernel (a cheap one-pass jnp reduction that XLA fuses)
+and streamed in one group per grid step.
+
+TPU mapping (documented here, executed under interpret=True on this image):
+  * grid step i owns one VMEM block of BLOCK f32 weights (BLOCK = 8 * 128
+    lanes by default, sublane x lane aligned);
+  * scale/zp for the group live in SMEM-like (1,) blocks;
+  * pure VPU elementwise work - no MXU involvement;
+  * VMEM footprint per step: 2 * BLOCK * 4 B (in + out) + O(1) scalars.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# 8 sublanes x 128 lanes: the natural f32 tile on TPU.
+BLOCK = 1024
+
+
+def _quantize_kernel(x_ref, scale_ref, zp_ref, qmax_ref, o_ref):
+    """q = clip(round(x / scale) + zp, 0, qmax) for one group block."""
+    x = x_ref[...]
+    scale = scale_ref[0]
+    zp = zp_ref[0]
+    qmax = qmax_ref[0]
+    q = jnp.round(x / scale) + zp
+    o_ref[...] = jnp.clip(q, 0.0, qmax)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_blocks(x, scales, zps, qmax, block: int = BLOCK):
+    """Pallas round/clip over a flat vector with per-group statistics.
+
+    x      : [N] f32, N divisible by block
+    scales : [G] f32 with G = N // block
+    zps    : [G] f32
+    qmax   : [1] f32 (2^bits - 1) - runtime input so one artifact serves
+             every bit width
+    """
+    n = x.shape[0]
+    g = n // block
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, scales, zps, qmax)
+
+
+def quantize(x, qmax, block: int = BLOCK):
+    """Full per-group quantization path: stats (jnp) + round/clip (Pallas).
+
+    Returns (q [N], scales [G], zps [G]).  This is the function lowered to
+    the `quantize` artifact; `qmax` arrives as a [1] f32 tensor.
+    """
+    n = x.shape[0]
+    g = n // block
+    scales, zps = ref.group_quant_params_ref(x, g, qmax[0])
+    q = quantize_blocks(x, scales, zps, qmax, block=block)
+    return q, scales, zps

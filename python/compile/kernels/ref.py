@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package is checked against the functions here by pytest (+hypothesis)
+at build time.  They also double as the executable specification of the
+paper's quantizer (Eq. 1-2) and of the fused dequantize-and-merge operator
+used by the serving coordinator.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "quant_params_ref",
+    "quantize_ref",
+    "dequantize_ref",
+    "dequant_merge_ref",
+    "group_quant_params_ref",
+    "group_quantize_ref",
+]
+
+
+def quant_params_ref(x: jnp.ndarray, qmax: float):
+    """Asymmetric quantization parameters (Eq. 1 of the paper).
+
+    Returns (scale, zero_point) mapping [min(x), max(x)] onto [0, qmax].
+    A degenerate range (constant tensor c) yields scale=|c| (or 1 for c=0)
+    so that dequantization reproduces the constant exactly.
+    """
+    xmin = jnp.min(x)
+    xmax = jnp.max(x)
+    span = xmax - xmin
+    degen = jnp.where(jnp.abs(xmin) > 0, jnp.abs(xmin), 1.0)
+    scale = jnp.where(span > 0, span / qmax, degen)
+    zp = jnp.round(-xmin / scale)
+    return scale, zp
+
+
+def quantize_ref(x: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray, qmax: float):
+    """Asymmetric affine quantization: q = clip(round(x/scale) + zp, 0, qmax)."""
+    q = jnp.round(x / scale) + zp
+    return jnp.clip(q, 0.0, qmax)
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray):
+    """Eq. 2: theta_hat = scale * (q - zp)."""
+    return scale * (q - zp)
+
+
+def dequant_merge_ref(pre, q, scales, zps, lams):
+    """Fused dequantize-and-merge (the serving hot spot).
+
+    pre    : [N]    pre-trained parameter vector block
+    q      : [T, N] quantized task vectors (integer values stored as f32)
+    scales : [T, G] per-group scales, groups of size N // G
+    zps    : [T, G] per-group zero points
+    lams   : [T]    merging coefficients
+
+    Returns theta_merged = pre + sum_t lam_t * scale_t * (q_t - zp_t).
+    """
+    t, n = q.shape
+    g = scales.shape[1]
+    group = n // g
+    qg = q.reshape(t, g, group)
+    deltas = (qg - zps[:, :, None]) * scales[:, :, None]
+    merged = pre + jnp.einsum("t,tgc->gc", lams, deltas).reshape(n)
+    return merged
+
+
+def group_quant_params_ref(x: jnp.ndarray, groups: int, qmax: float):
+    """Per-group (a.k.a. blockwise) quantization parameters.
+
+    x is [N]; returns (scales [G], zps [G]) with G = groups.
+    """
+    xg = x.reshape(groups, -1)
+    xmin = jnp.min(xg, axis=1)
+    xmax = jnp.max(xg, axis=1)
+    span = xmax - xmin
+    degen = jnp.where(jnp.abs(xmin) > 0, jnp.abs(xmin), 1.0)
+    scales = jnp.where(span > 0, span / qmax, degen)
+    zps = jnp.round(-xmin / scales)
+    return scales, zps
+
+
+def group_quantize_ref(x: jnp.ndarray, scales, zps, qmax: float):
+    """Per-group asymmetric quantization of a flat [N] vector."""
+    g = scales.shape[0]
+    xg = x.reshape(g, -1)
+    q = jnp.round(xg / scales[:, None]) + zps[:, None]
+    return jnp.clip(q, 0.0, qmax).reshape(-1)

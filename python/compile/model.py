@@ -1,0 +1,322 @@
+"""Layer-2 JAX models for tvq-merge (build-time only).
+
+Defines the model zoo whose checkpoints the paper merges:
+
+  * A ViT-style transformer classifier at three scales (`vit_s`, `vit_m`,
+    `vit_l`) standing in for CLIP ViT-B/32 / B/16 / L/14.  Per the paper's
+    protocol only the TRUNK is fine-tuned and merged; each task owns a
+    frozen classification head (the analog of CLIP's text-derived heads),
+    which is therefore an *input* to every graph, not a parameter.
+  * A dense-prediction conv encoder-decoder trunk (`dense`) with per-task
+    1x1 heads for segmentation / depth / normal estimation (NYUv2 analog).
+
+Every entrypoint (forward, train step, merged forward) is a pure function
+over a flat `dict[str, Array]` of trunk parameters so the AOT pipeline can
+emit a deterministic parameter manifest: Rust flattens checkpoints in
+sorted-key order, which matches `param_order()` exactly.
+
+The merged-forward entrypoints call the Layer-1 Pallas kernels, so the
+fused dequantize-and-merge lowers into the same HLO as the model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dequant_merge as dq
+from .kernels import quantize as qz
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# ViT classifier
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VitConfig:
+    """Transformer trunk configuration.
+
+    tokens x token_dim synthetic "images" are produced by the Rust data
+    generator; patch embedding is a linear map token_dim -> dim.
+    """
+
+    name: str
+    dim: int
+    depth: int
+    heads: int
+    mlp_ratio: int = 4
+    tokens: int = 16
+    token_dim: int = 16
+    n_classes: int = 10
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+VIT_PRESETS = {
+    "vit_s": VitConfig("vit_s", dim=64, depth=2, heads=4),
+    "vit_m": VitConfig("vit_m", dim=128, depth=4, heads=4),
+    "vit_l": VitConfig("vit_l", dim=192, depth=6, heads=6),
+}
+
+
+def vit_init(cfg: VitConfig, seed: int = 0) -> Params:
+    """Deterministic init of the trunk parameter dict.
+
+    Key names are chosen so that lexicographic order is stable and layers
+    sort numerically (zero-padded indices).
+    """
+    rng = np.random.default_rng(seed)
+
+    def dense_w(shape, fan_in):
+        return jnp.asarray(
+            rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        )
+
+    p: Params = {
+        "embed/w": dense_w((cfg.token_dim, cfg.dim), cfg.token_dim),
+        "embed/b": jnp.zeros((cfg.dim,), jnp.float32),
+        "pos": jnp.asarray(
+            rng.normal(0.0, 0.02, size=(cfg.tokens, cfg.dim)).astype(np.float32)
+        ),
+        "ln_f/g": jnp.ones((cfg.dim,), jnp.float32),
+        "ln_f/b": jnp.zeros((cfg.dim,), jnp.float32),
+    }
+    hidden = cfg.dim * cfg.mlp_ratio
+    for i in range(cfg.depth):
+        pre = f"blk{i:02d}/"
+        p[pre + "ln1/g"] = jnp.ones((cfg.dim,), jnp.float32)
+        p[pre + "ln1/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+        p[pre + "attn/wq"] = dense_w((cfg.dim, cfg.dim), cfg.dim)
+        p[pre + "attn/wk"] = dense_w((cfg.dim, cfg.dim), cfg.dim)
+        p[pre + "attn/wv"] = dense_w((cfg.dim, cfg.dim), cfg.dim)
+        p[pre + "attn/wo"] = dense_w((cfg.dim, cfg.dim), cfg.dim)
+        p[pre + "attn/bo"] = jnp.zeros((cfg.dim,), jnp.float32)
+        p[pre + "ln2/g"] = jnp.ones((cfg.dim,), jnp.float32)
+        p[pre + "ln2/b"] = jnp.zeros((cfg.dim,), jnp.float32)
+        p[pre + "mlp/w1"] = dense_w((cfg.dim, hidden), cfg.dim)
+        p[pre + "mlp/b1"] = jnp.zeros((hidden,), jnp.float32)
+        p[pre + "mlp/w2"] = dense_w((hidden, cfg.dim), hidden)
+        p[pre + "mlp/b2"] = jnp.zeros((cfg.dim,), jnp.float32)
+    return p
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: VitConfig, p: Params, pre: str, x):
+    b, t, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    def split(w):
+        return (x @ p[pre + w]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split("attn/wq"), split("attn/wk"), split("attn/wv")
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd).astype(np.float32)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ p[pre + "attn/wo"] + p[pre + "attn/bo"]
+
+
+def vit_features(cfg: VitConfig, p: Params, x):
+    """Trunk forward: x [B, tokens, token_dim] -> pooled features [B, dim]."""
+    h = x @ p["embed/w"] + p["embed/b"] + p["pos"]
+    for i in range(cfg.depth):
+        pre = f"blk{i:02d}/"
+        h = h + _attention(cfg, p, pre, _layer_norm(h, p[pre + "ln1/g"], p[pre + "ln1/b"]))
+        m = _layer_norm(h, p[pre + "ln2/g"], p[pre + "ln2/b"])
+        m = jax.nn.gelu(m @ p[pre + "mlp/w1"] + p[pre + "mlp/b1"])
+        h = h + m @ p[pre + "mlp/w2"] + p[pre + "mlp/b2"]
+    h = _layer_norm(h, p["ln_f/g"], p["ln_f/b"])
+    return jnp.mean(h, axis=1)
+
+
+def vit_forward(cfg: VitConfig, p: Params, head, x):
+    """Classification logits with a frozen per-task head [dim, n_classes]."""
+    return vit_features(cfg, p, x) @ head
+
+
+def _cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def vit_loss(cfg: VitConfig, p: Params, head, x, y):
+    logits = vit_forward(cfg, p, head, x)
+    return _cross_entropy(logits, y)
+
+
+def vit_train_step(cfg: VitConfig, p: Params, head, x, y, lr):
+    """One SGD step on the trunk (head frozen), returns (p', loss)."""
+    loss, grads = jax.value_and_grad(lambda q: vit_loss(cfg, q, head, x, y))(p)
+    new_p = jax.tree_util.tree_map(lambda w, g: w - lr[0] * g, p, grads)
+    return new_p, loss
+
+
+# ---------------------------------------------------------------------------
+# Dense prediction conv trunk (NYUv2 analog)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseConfig:
+    """Encoder-decoder trunk for HxW synthetic RGB scenes."""
+
+    name: str = "dense"
+    height: int = 16
+    width: int = 16
+    in_ch: int = 3
+    ch: int = 24
+    seg_classes: int = 6
+
+    @property
+    def feat_ch(self) -> int:
+        return self.ch
+
+
+DENSE_PRESET = DenseConfig()
+
+# (task name, output channels) for the three NYUv2-analog tasks.
+DENSE_TASKS = {"seg": DENSE_PRESET.seg_classes, "depth": 1, "normal": 3}
+
+
+def dense_init(cfg: DenseConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+
+    def conv_w(kh, kw, cin, cout):
+        fan = kh * kw * cin
+        return jnp.asarray(
+            rng.normal(0.0, fan ** -0.5, size=(kh, kw, cin, cout)).astype(np.float32)
+        )
+
+    c = cfg.ch
+    return {
+        "enc0/w": conv_w(3, 3, cfg.in_ch, c),
+        "enc0/b": jnp.zeros((c,), jnp.float32),
+        "enc1/w": conv_w(3, 3, c, 2 * c),
+        "enc1/b": jnp.zeros((2 * c,), jnp.float32),
+        "mid/w": conv_w(3, 3, 2 * c, 2 * c),
+        "mid/b": jnp.zeros((2 * c,), jnp.float32),
+        "dec0/w": conv_w(3, 3, 2 * c, c),
+        "dec0/b": jnp.zeros((c,), jnp.float32),
+        "dec1/w": conv_w(3, 3, 2 * c, c),
+        "dec1/b": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def _conv(x, w, b, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def dense_features(cfg: DenseConfig, p: Params, x):
+    """Trunk forward: x [B,H,W,3] -> per-pixel features [B,H,W,ch]."""
+    e0 = jax.nn.relu(_conv(x, p["enc0/w"], p["enc0/b"]))             # H
+    e1 = jax.nn.relu(_conv(e0, p["enc1/w"], p["enc1/b"], stride=2))  # H/2
+    m = jax.nn.relu(_conv(e1, p["mid/w"], p["mid/b"]))               # H/2
+    up = jax.image.resize(m, e0.shape[:3] + (m.shape[-1],), "nearest")
+    d0 = jax.nn.relu(_conv(up, p["dec0/w"], p["dec0/b"]))            # H
+    cat = jnp.concatenate([d0, e0], axis=-1)
+    return jax.nn.relu(_conv(cat, p["dec1/w"], p["dec1/b"]))         # [B,H,W,ch]
+
+
+def dense_forward(cfg: DenseConfig, p: Params, head, x):
+    """Per-task prediction with a frozen 1x1 head [1,1,ch,out_ch]."""
+    feats = dense_features(cfg, p, x)
+    return _conv(feats, head, jnp.zeros((head.shape[-1],), jnp.float32))
+
+
+def dense_loss(cfg: DenseConfig, task: str, p: Params, head, x, y):
+    out = dense_forward(cfg, p, head, x)
+    if task == "seg":
+        logp = jax.nn.log_softmax(out, axis=-1)
+        yy = y.astype(jnp.int32)
+        return -jnp.mean(jnp.take_along_axis(logp, yy[..., None], axis=-1))
+    if task == "depth":
+        return jnp.mean(jnp.abs(out - y))
+    if task == "normal":
+        # 1 - cosine similarity between predicted and target normals.
+        num = jnp.sum(out * y, axis=-1)
+        den = jnp.linalg.norm(out, axis=-1) * jnp.linalg.norm(y, axis=-1) + 1e-6
+        return jnp.mean(1.0 - num / den)
+    raise ValueError(task)
+
+
+def dense_train_step(cfg: DenseConfig, task: str, p: Params, head, x, y, lr):
+    loss, grads = jax.value_and_grad(lambda q: dense_loss(cfg, task, q, head, x, y))(p)
+    new_p = jax.tree_util.tree_map(lambda w, g: w - lr[0] * g, p, grads)
+    return new_p, loss
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening contract shared with the Rust runtime
+# ---------------------------------------------------------------------------
+
+
+def param_order(p: Params):
+    """Deterministic (sorted-key) parameter order used by all artifacts."""
+    return sorted(p.keys())
+
+
+def param_count(p: Params) -> int:
+    return sum(int(np.prod(v.shape)) for v in p.values())
+
+
+def flat_size_padded(p: Params, block: int = dq.BLOCK) -> int:
+    """Flattened parameter length padded up to the Pallas block size."""
+    n = param_count(p)
+    return ((n + block - 1) // block) * block
+
+
+def flatten_params(p: Params, block: int = dq.BLOCK):
+    """Concatenate in manifest order and zero-pad to the block multiple."""
+    flat = jnp.concatenate([p[k].reshape(-1) for k in param_order(p)])
+    pad = flat_size_padded(p, block) - flat.shape[0]
+    return jnp.pad(flat, (0, pad))
+
+
+def unflatten_params(template: Params, flat):
+    out = {}
+    off = 0
+    for k in param_order(template):
+        sz = int(np.prod(template[k].shape))
+        out[k] = flat[off : off + sz].reshape(template[k].shape)
+        off += sz
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Merged-forward entrypoints: Pallas dequant-merge fused into the model HLO
+# ---------------------------------------------------------------------------
+
+
+def vit_merged_forward(cfg: VitConfig, template: Params, pre_flat, q, scales,
+                       zps, lams, head, x):
+    """Serve a batch straight from quantized task vectors (TVQ path).
+
+    pre_flat [Np] / q [T,Np] / scales,zps [T,G] / lams [T] as in the
+    Layer-1 kernel; the merged flat vector is unflattened and fed through
+    the standard trunk.  This lowers kernel + model into one HLO module.
+    """
+    merged = dq.dequant_merge(pre_flat, q, scales, zps, lams)
+    p = unflatten_params(template, merged)
+    return vit_forward(cfg, p, head, x)
+
+
+def quantize_entry(x, qmax):
+    """Artifact wrapper for the Layer-1 quantization path."""
+    return qz.quantize(x, qmax)

@@ -1,0 +1,97 @@
+"""AOT manifest contract checks (no lowering — validates emitted files)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "index.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _load(name):
+    with open(os.path.join(ART, f"{name}.json")) as f:
+        return json.load(f)
+
+
+def test_index_covers_every_artifact_spec():
+    with open(os.path.join(ART, "index.json")) as f:
+        index = json.load(f)
+    specs = {a.name for a in aot.all_artifacts()}
+    assert specs == set(index.keys())
+
+
+@pytest.mark.parametrize("preset", list(M.VIT_PRESETS))
+def test_param_manifest_matches_model(preset):
+    cfg = M.VIT_PRESETS[preset]
+    p = M.vit_init(cfg)
+    man = _load(f"{preset}_forward_b1")
+    names = [e["name"] for e in man["params"]]
+    assert names == M.param_order(p)
+    for e in man["params"]:
+        assert tuple(e["shape"]) == tuple(p[e["name"]].shape)
+    assert man["meta"]["param_count"] == M.param_count(p)
+    assert man["meta"]["flat_padded"] == M.flat_size_padded(p)
+
+
+def test_train_manifest_outputs_are_params_plus_loss():
+    man = _load(f"vit_s_train_b{aot.TRAIN_BATCH}")
+    n_params = len(man["params"])
+    assert len(man["outputs"]) == n_params + 1
+    # last output is the scalar loss
+    assert man["outputs"][-1]["shape"] in ([], [1])
+    # first outputs mirror param shapes in manifest order
+    for e, o in zip(man["params"], man["outputs"][:n_params]):
+        assert tuple(e["shape"]) == tuple(o["shape"])
+
+
+def test_forward_manifest_input_order():
+    man = _load("vit_s_forward_b8")
+    names = [i["name"] for i in man["inputs"]]
+    n = len(man["params"])
+    assert names[:n] == [f"param:{e['name']}" for e in man["params"]]
+    assert names[n:] == ["head", "x"]
+
+
+def test_hlo_files_exist_and_hash():
+    import hashlib
+
+    with open(os.path.join(ART, "index.json")) as f:
+        index = json.load(f)
+    for name in index:
+        man = _load(name)
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        with open(path) as f:
+            text = f.read()
+        assert hashlib.sha256(text.encode()).hexdigest() == man["hlo_sha256"]
+        assert "ENTRY" in text  # parseable HLO text
+
+
+def test_merged_forward_manifest_geometry():
+    man = _load(f"vit_s_merged_forward_t{aot.MERGE_TASKS}_b32")
+    meta = man["meta"]
+    npad = meta["flat_padded"]
+    g = npad // meta["block"]
+    shapes = {i["name"]: i["shape"] for i in man["inputs"]}
+    assert shapes["pre_flat"] == [npad]
+    assert shapes["q"] == [aot.MERGE_TASKS, npad]
+    assert shapes["scales"] == [aot.MERGE_TASKS, g]
+    assert shapes["zps"] == [aot.MERGE_TASKS, g]
+
+
+def test_dense_manifests_cover_all_tasks():
+    for task in M.DENSE_TASKS:
+        fwd = _load(f"dense_forward_{task}_b{aot.DENSE_BATCH}")
+        tr = _load(f"dense_train_{task}_b{aot.DENSE_BATCH}")
+        assert fwd["meta"]["task"] == task
+        assert tr["meta"]["task"] == task
+        out_ch = M.DENSE_TASKS[task]
+        assert fwd["outputs"][0]["shape"][-1] == out_ch

@@ -1,0 +1,103 @@
+"""Pallas fused dequant-merge kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import dequant_merge as dqm
+from compile.kernels import quantize as qz
+from compile.kernels import ref
+
+
+def _quantized_stack(t, n, bits, seed=0):
+    rng = np.random.default_rng(seed)
+    qmax = float(2 ** bits - 1)
+    qs, ss, zs = [], [], []
+    for i in range(t):
+        x = jnp.asarray(rng.normal(0, 0.03, size=n).astype(np.float32))
+        q, s, z = qz.quantize(x, jnp.array([qmax], jnp.float32))
+        qs.append(q)
+        ss.append(s)
+        zs.append(z)
+    return jnp.stack(qs), jnp.stack(ss), jnp.stack(zs)
+
+
+@pytest.mark.parametrize("t", [1, 4, 8])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_dequant_merge_matches_ref(t, bits):
+    n = 4096
+    rng = np.random.default_rng(7)
+    pre = jnp.asarray(rng.normal(0, 0.5, size=n).astype(np.float32))
+    q, s, z = _quantized_stack(t, n, bits)
+    lams = jnp.asarray(rng.uniform(0.1, 0.5, size=t).astype(np.float32))
+    got = dqm.dequant_merge(pre, q, s, z, lams)
+    want = ref.dequant_merge_ref(pre, q, s, z, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_zero_lambda_returns_pre():
+    n = 2048
+    pre = jnp.linspace(-1, 1, n, dtype=jnp.float32)
+    q, s, z = _quantized_stack(4, n, 4, seed=3)
+    lams = jnp.zeros((4,), jnp.float32)
+    got = dqm.dequant_merge(pre, q, s, z, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(pre), atol=1e-6)
+
+
+def test_single_task_equals_dequant_add():
+    """T=1, lambda=1: merged == pre + dequantized tau."""
+    n = 2048
+    rng = np.random.default_rng(11)
+    pre = jnp.asarray(rng.normal(0, 0.2, size=n).astype(np.float32))
+    tau = jnp.asarray(rng.normal(0, 0.02, size=n).astype(np.float32))
+    q, s, z = qz.quantize(tau, jnp.array([15.0], jnp.float32))
+    got = dqm.dequant_merge(pre, q[None], s[None], z[None],
+                            jnp.ones((1,), jnp.float32))
+    g = n // qz.BLOCK
+    tau_hat = ((np.asarray(q).reshape(g, -1) - np.asarray(z)[:, None])
+               * np.asarray(s)[:, None]).reshape(-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(pre) + tau_hat,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rtvq_variant_matches_manual():
+    """RTVQ path: base folded into pre + offsets via standard kernel."""
+    n = 2048
+    t = 4
+    rng = np.random.default_rng(5)
+    pre = jnp.asarray(rng.normal(0, 0.2, size=n).astype(np.float32))
+    base = jnp.asarray(rng.normal(0, 0.05, size=n).astype(np.float32))
+    qb, sb, zb = qz.quantize(base, jnp.array([7.0], jnp.float32))
+    qo, so, zo = _quantized_stack(t, n, 2, seed=9)
+    lams = jnp.full((t,), 0.3, jnp.float32)
+    got = dqm.dequant_merge_rtvq(pre, qb, sb, zb, qo, so, zo, lams)
+
+    g = n // qz.BLOCK
+    base_hat = ((np.asarray(qb).reshape(g, -1) - np.asarray(zb)[:, None])
+                * np.asarray(sb)[:, None]).reshape(-1)
+    pre_eff = jnp.asarray(np.asarray(pre) + float(jnp.sum(lams)) * base_hat)
+    want = ref.dequant_merge_ref(pre_eff, qo, so, zo, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=8),
+    blocks=st.integers(min_value=1, max_value=4),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+)
+def test_hypothesis_merge_sweep(t, blocks, bits, seed):
+    n = blocks * qz.BLOCK
+    rng = np.random.default_rng(seed)
+    pre = jnp.asarray(rng.normal(0, 1.0, size=n).astype(np.float32))
+    q, s, z = _quantized_stack(t, n, bits, seed=seed)
+    lams = jnp.asarray(rng.uniform(-1, 1, size=t).astype(np.float32))
+    got = dqm.dequant_merge(pre, q, s, z, lams)
+    want = ref.dequant_merge_ref(pre, q, s, z, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,100 @@
+"""Packed-codes dequant-merge kernel vs oracles (Layer 1 extension)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import packed_merge as pm
+from compile.kernels import ref
+
+BITS = [2, 4, 8]
+
+
+def _codes(t, n, bits, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2 ** bits, size=(t, n)).astype(np.int32))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_pack_unpack_roundtrip(bits):
+    q = _codes(3, 4096, bits)
+    w = pm.pack_codes(q, bits)
+    assert w.dtype == jnp.int32
+    assert w.shape == (3, 4096 * bits // 32)
+    back = pm.unpack_codes(w, bits, 4096)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_packed_kernel_matches_unpacked_ref(bits):
+    """The packed Pallas kernel must equal unpack + dequant_merge_ref."""
+    t, n = 4, 4096
+    g = n // pm.BLOCK
+    rng = np.random.default_rng(1)
+    pre = jnp.asarray(rng.normal(0, 0.3, n).astype(np.float32))
+    q = _codes(t, n, bits, seed=2)
+    scales = jnp.asarray(rng.uniform(1e-3, 1e-2, (t, g)).astype(np.float32))
+    zps = jnp.asarray(rng.integers(0, 2 ** bits, (t, g)).astype(np.float32))
+    lams = jnp.asarray(rng.uniform(0, 1, t).astype(np.float32))
+    words = pm.pack_codes(q, bits)
+
+    got = pm.packed_dequant_merge(pre, words, scales, zps, lams, bits=bits)
+    want = ref.dequant_merge_ref(pre, q.astype(jnp.float32), scales, zps, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_packed_ref_matches_kernel(bits):
+    """And the pure-jnp packed oracle agrees with the kernel too."""
+    t, n = 2, 2048
+    g = n // pm.BLOCK
+    rng = np.random.default_rng(3)
+    pre = jnp.asarray(rng.normal(0, 0.3, n).astype(np.float32))
+    q = _codes(t, n, bits, seed=4)
+    scales = jnp.asarray(rng.uniform(1e-3, 1e-2, (t, g)).astype(np.float32))
+    zps = jnp.asarray(rng.integers(0, 2 ** bits, (t, g)).astype(np.float32))
+    lams = jnp.asarray(rng.uniform(0, 1, t).astype(np.float32))
+    words = pm.pack_codes(q, bits)
+    a = pm.packed_dequant_merge(pre, words, scales, zps, lams, bits=bits)
+    b = pm.packed_dequant_merge_ref(pre, words, scales, zps, lams, bits=bits)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_rejects_bad_bits():
+    with pytest.raises(ValueError):
+        pm.pack_codes(_codes(1, 32, 2), 3)
+    with pytest.raises(ValueError):
+        pm.packed_dequant_merge(
+            jnp.zeros(1024), jnp.zeros((1, 96), jnp.int32),
+            jnp.ones((1, 1)), jnp.zeros((1, 1)), jnp.ones(1), bits=3,
+        )
+
+
+def test_payload_shrinks_by_32_over_bits():
+    q = _codes(1, 1024, 2)
+    w = pm.pack_codes(q, 2)
+    assert w.size * 4 == 1024 * 2 // 8  # 2-bit payload in bytes
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 4),
+    blocks=st.integers(1, 3),
+    bits=st.sampled_from(BITS),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_packed_sweep(t, blocks, bits, seed):
+    n = blocks * pm.BLOCK
+    g = blocks
+    rng = np.random.default_rng(seed)
+    pre = jnp.asarray(rng.normal(0, 0.3, n).astype(np.float32))
+    q = _codes(t, n, bits, seed=seed + 1)
+    scales = jnp.asarray(rng.uniform(1e-4, 1e-1, (t, g)).astype(np.float32))
+    zps = jnp.asarray(rng.integers(0, 2 ** bits, (t, g)).astype(np.float32))
+    lams = jnp.asarray(rng.uniform(0, 1, t).astype(np.float32))
+    words = pm.pack_codes(q, bits)
+    got = pm.packed_dequant_merge(pre, words, scales, zps, lams, bits=bits)
+    want = ref.dequant_merge_ref(pre, q.astype(jnp.float32), scales, zps, lams)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,84 @@
+"""Pallas quantize kernel vs pure-jnp oracle (the core L1 signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import quantize as qz
+from compile.kernels import ref
+
+BITS = [2, 3, 4, 8]
+
+
+def _rand(n, seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, size=n).astype(np.float32))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantize_matches_ref(bits):
+    n = 4096
+    x = _rand(n)
+    qmax = float(2 ** bits - 1)
+    q, s, z = qz.quantize(x, jnp.array([qmax], jnp.float32))
+    sr, zr = ref.group_quant_params_ref(x, n // qz.BLOCK, qmax)
+    qr = ref.group_quantize_ref(x, sr, zr, qmax)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+    np.testing.assert_allclose(z, zr, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantized_values_in_range(bits):
+    x = _rand(8192, seed=1)
+    qmax = float(2 ** bits - 1)
+    q, _, _ = qz.quantize(x, jnp.array([qmax], jnp.float32))
+    assert float(jnp.min(q)) >= 0.0
+    assert float(jnp.max(q)) <= qmax
+    # values are integers stored as f32
+    np.testing.assert_array_equal(np.asarray(q), np.round(np.asarray(q)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_roundtrip_error_bound(bits):
+    """|x - dq(q(x))| <= scale/2 per group (Eq. 3), + fp slack."""
+    n = 4096
+    x = _rand(n, seed=2)
+    qmax = float(2 ** bits - 1)
+    q, s, z = qz.quantize(x, jnp.array([qmax], jnp.float32))
+    g = n // qz.BLOCK
+    xh = (np.asarray(q).reshape(g, -1) - np.asarray(z)[:, None]) \
+        * np.asarray(s)[:, None]
+    err = np.abs(xh.reshape(-1) - np.asarray(x))
+    bound = np.repeat(np.asarray(s) / 2.0, qz.BLOCK) * (1.0 + 1e-4) + 1e-7
+    assert (err <= bound).all()
+
+
+def test_constant_tensor_exact():
+    """Degenerate range: constants must round-trip exactly."""
+    x = jnp.full((2048,), 0.017, jnp.float32)
+    q, s, z = qz.quantize(x, jnp.array([3.0], jnp.float32))
+    xh = np.asarray(s)[:, None] * (np.asarray(q).reshape(2, -1)
+                                   - np.asarray(z)[:, None])
+    np.testing.assert_allclose(xh.reshape(-1), np.asarray(x), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    bits=st.sampled_from(BITS),
+    seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+    scale=st.floats(min_value=1e-4, max_value=10.0),
+)
+def test_hypothesis_quantize_sweep(blocks, bits, seed, scale):
+    """Shape/range sweep: Pallas kernel == oracle for arbitrary inputs."""
+    n = blocks * qz.BLOCK
+    x = _rand(n, seed=seed, scale=scale)
+    qmax = float(2 ** bits - 1)
+    q, s, z = qz.quantize(x, jnp.array([qmax], jnp.float32))
+    sr, zr = ref.group_quant_params_ref(x, blocks, qmax)
+    qr = ref.group_quantize_ref(x, sr, zr, qmax)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)

@@ -1,0 +1,138 @@
+"""Layer-2 model checks: shapes, training signal, flattening contract."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def vit_s():
+    cfg = M.VIT_PRESETS["vit_s"]
+    return cfg, M.vit_init(cfg, seed=0)
+
+
+def _batch(cfg, b, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, size=(b, cfg.tokens, cfg.token_dim))
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, cfg.n_classes, size=b).astype(np.int32))
+    head = jnp.asarray(rng.normal(0, cfg.dim ** -0.5,
+                                  size=(cfg.dim, cfg.n_classes))
+                       .astype(np.float32))
+    return x, y, head
+
+
+def test_vit_forward_shape(vit_s):
+    cfg, p = vit_s
+    x, _, head = _batch(cfg, 4)
+    logits = M.vit_forward(cfg, p, head, x)
+    assert logits.shape == (4, cfg.n_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("preset", list(M.VIT_PRESETS))
+def test_vit_param_counts_positive_and_ordered(preset):
+    cfg = M.VIT_PRESETS[preset]
+    p = M.vit_init(cfg)
+    order = M.param_order(p)
+    assert order == sorted(order)
+    assert M.param_count(p) > 0
+    assert M.flat_size_padded(p) % 1024 == 0
+    assert M.flat_size_padded(p) >= M.param_count(p)
+
+
+def test_vit_train_step_reduces_loss(vit_s):
+    cfg, p = vit_s
+    x, y, head = _batch(cfg, 32, seed=1)
+    lr = jnp.array([0.5], jnp.float32)
+    losses = []
+    for _ in range(5):
+        p, loss = M.vit_train_step(cfg, p, head, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_flatten_unflatten_roundtrip(vit_s):
+    cfg, p = vit_s
+    flat = M.flatten_params(p)
+    back = M.unflatten_params(p, flat)
+    for k in p:
+        np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(back[k]))
+
+
+def test_merged_forward_consistent_with_plain_forward(vit_s):
+    """TVQ merged-forward == forward(pre + sum dequantized tau)."""
+    from compile.kernels import quantize as qz
+
+    cfg, pre = vit_s
+    t = 8
+    rng = np.random.default_rng(3)
+    pre_flat = M.flatten_params(pre)
+    n = pre_flat.shape[0]
+    g = n // qz.BLOCK
+    qs, ss, zs = [], [], []
+    taus = []
+    for i in range(t):
+        tau = jnp.asarray(rng.normal(0, 0.01, size=n).astype(np.float32))
+        taus.append(tau)
+        q, s, z = qz.quantize(tau, jnp.array([15.0], jnp.float32))
+        qs.append(q)
+        ss.append(s)
+        zs.append(z)
+    q, s, z = jnp.stack(qs), jnp.stack(ss), jnp.stack(zs)
+    lams = jnp.full((t,), 0.3, jnp.float32)
+
+    x, _, head = _batch(cfg, 32, seed=4)
+    got = M.vit_merged_forward(cfg, pre, pre_flat, q, s, z, lams, head, x)
+
+    # manual reference
+    tau_hat = sum(
+        0.3 * ((np.asarray(qs[i]).reshape(g, -1) - np.asarray(zs[i])[:, None])
+               * np.asarray(ss[i])[:, None]).reshape(-1)
+        for i in range(t)
+    )
+    merged = jnp.asarray(np.asarray(pre_flat) + tau_hat)
+    want = M.vit_forward(cfg, M.unflatten_params(pre, merged), head, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_dense_forward_shapes():
+    cfg = M.DENSE_PRESET
+    p = M.dense_init(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, size=(2, cfg.height, cfg.width, 3))
+                    .astype(np.float32))
+    for task, out_ch in M.DENSE_TASKS.items():
+        head = jnp.asarray(rng.normal(0, 0.1, size=(1, 1, cfg.feat_ch, out_ch))
+                           .astype(np.float32))
+        out = M.dense_forward(cfg, p, head, x)
+        assert out.shape == (2, cfg.height, cfg.width, out_ch), task
+
+
+@pytest.mark.parametrize("task", list(M.DENSE_TASKS))
+def test_dense_train_step_reduces_loss(task):
+    cfg = M.DENSE_PRESET
+    p = M.dense_init(cfg, seed=1)
+    out_ch = M.DENSE_TASKS[task]
+    rng = np.random.default_rng(2)
+    b = 4
+    x = jnp.asarray(rng.normal(0, 1, size=(b, cfg.height, cfg.width, 3))
+                    .astype(np.float32))
+    head = jnp.asarray(rng.normal(0, 0.2, size=(1, 1, cfg.feat_ch, out_ch))
+                       .astype(np.float32))
+    if task == "seg":
+        y = jnp.asarray(rng.integers(0, cfg.seg_classes,
+                                     size=(b, cfg.height, cfg.width))
+                        .astype(np.int32))
+    else:
+        y = jnp.asarray(rng.normal(0, 1, size=(b, cfg.height, cfg.width, out_ch))
+                        .astype(np.float32))
+    lr = jnp.array([0.1], jnp.float32)
+    losses = []
+    for _ in range(5):
+        p, loss = M.dense_train_step(cfg, task, p, head, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], (task, losses)

@@ -1,0 +1,11 @@
+//! Extension ablation `ablD` (see rust/src/exp/ablations.rs).
+//!
+//! Run: `cargo bench --bench ablD_dare` — equivalent to
+//! `tvq experiment ablD`; results land in `target/results/ablD.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("ablD")?;
+    eprintln!("[bench:ablD] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

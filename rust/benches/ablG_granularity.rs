@@ -1,0 +1,11 @@
+//! Extension ablation `ablG` (see rust/src/exp/ablations.rs).
+//!
+//! Run: `cargo bench --bench ablG_granularity` — equivalent to
+//! `tvq experiment ablG`; results land in `target/results/ablG.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("ablG")?;
+    eprintln!("[bench:ablG] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

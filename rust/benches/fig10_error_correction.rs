@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `fig10` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench fig10_error_correction` — equivalent to
+//! `tvq experiment fig10`; results land in `target/results/fig10.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("fig10")?;
+    eprintln!("[bench:fig10] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `fig3` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench fig3_ranges` — equivalent to
+//! `tvq experiment fig3`; results land in `target/results/fig3.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("fig3")?;
+    eprintln!("[bench:fig3] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

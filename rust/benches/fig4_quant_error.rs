@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `fig4` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench fig4_quant_error` — equivalent to
+//! `tvq experiment fig4`; results land in `target/results/fig4.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("fig4")?;
+    eprintln!("[bench:fig4] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `fig6` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench fig6_task_scaling` — equivalent to
+//! `tvq experiment fig6`; results land in `target/results/fig6.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("fig6")?;
+    eprintln!("[bench:fig6] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `fig8` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench fig8_landscape` — equivalent to
+//! `tvq experiment fig8`; results land in `target/results/fig8.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("fig8")?;
+    eprintln!("[bench:fig8] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

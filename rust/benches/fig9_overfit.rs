@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `fig9` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench fig9_overfit` — equivalent to
+//! `tvq experiment fig9`; results land in `target/results/fig9.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("fig9")?;
+    eprintln!("[bench:fig9] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

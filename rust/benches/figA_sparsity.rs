@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `figA` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench figA_sparsity` — equivalent to
+//! `tvq experiment figA`; results land in `target/results/figA.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("figA")?;
+    eprintln!("[bench:figA] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

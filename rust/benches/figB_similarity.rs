@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `figB` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench figB_similarity` — equivalent to
+//! `tvq experiment figB`; results land in `target/results/figB.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("figB")?;
+    eprintln!("[bench:figB] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

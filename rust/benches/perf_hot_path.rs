@@ -1,0 +1,103 @@
+//! Performance benches for the L3 serving hot path: bit unpacking,
+//! affine quantize/dequantize, and the fused dequantize-and-merge kernel
+//! (checkpoint and flat/grouped variants, TVQ and RTVQ).
+//!
+//! This is the criterion-style microbench suite used by the §Perf pass in
+//! EXPERIMENTS.md; results are throughput in parameters/second.
+//!
+//! Run: `cargo bench --bench perf_hot_path`
+
+use tvq::checkpoint::Checkpoint;
+use tvq::quant::{fused, AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint};
+use tvq::tensor::Tensor;
+use tvq::util::bench::{report, Bench};
+use tvq::util::rng::Rng;
+
+/// Parameter count for flat benches — ViT-B/32-scale padded tensor.
+const N: usize = 1 << 22; // ~4.2M params
+const GROUP: usize = 1024;
+const TASKS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0xBE7C);
+    let b = Bench::default();
+    let mut results = Vec::new();
+
+    // --- bit unpack throughput per width --------------------------------
+    let mut codes_buf = vec![0u32; N];
+    for bits in [2u8, 3, 4, 8] {
+        let codes: Vec<u32> =
+            (0..N).map(|_| rng.next_u64() as u32 & ((1 << bits) - 1)).collect();
+        let packed = BitPacked::pack(&codes, bits)?;
+        results.push(b.run_throughput(
+            &format!("unpack_{bits}bit"),
+            N as f64,
+            || packed.unpack_into(&mut codes_buf),
+        ));
+    }
+
+    // --- affine quantize / dequantize ------------------------------------
+    let mut data = vec![0.0f32; N];
+    rng.fill_normal(&mut data, 0.02);
+    let params = AffineParams::from_slice(&data, 4)?;
+    results.push(b.run_throughput("affine_quantize_4bit", N as f64, || {
+        std::hint::black_box(params.quantize_slice(&data));
+    }));
+
+    // --- group quantize + fused dequant-merge (flat TVQ path) ------------
+    let gqs: Vec<GroupQuantized> = (0..TASKS)
+        .map(|_| {
+            let mut tau = vec![0.0f32; N];
+            rng.fill_normal(&mut tau, 0.02);
+            GroupQuantized::quantize(&tau, 3, GROUP).unwrap()
+        })
+        .collect();
+    let gq_refs: Vec<&GroupQuantized> = gqs.iter().collect();
+    let mut pre = vec![0.0f32; N];
+    rng.fill_normal(&mut pre, 0.3);
+    let lams = vec![0.3f32; TASKS];
+    let mut out = Vec::with_capacity(N);
+    results.push(b.run_throughput(
+        &format!("dequant_merge_flat_{TASKS}tasks_3bit"),
+        (N * TASKS) as f64,
+        || fused::dequant_merge_flat(&pre, &gq_refs, &lams, &mut out).unwrap(),
+    ));
+
+    // --- RTVQ flat path ---------------------------------------------------
+    let base = GroupQuantized::quantize(&pre.iter().map(|v| v * 0.05).collect::<Vec<_>>(), 3, GROUP)?;
+    results.push(b.run_throughput(
+        &format!("dequant_merge_rtvq_flat_{TASKS}tasks"),
+        (N * (TASKS + 1)) as f64,
+        || fused::dequant_merge_rtvq_flat(&pre, &base, &gq_refs, &lams, &mut out).unwrap(),
+    ));
+
+    // --- named-checkpoint fused merge (the serving rebuild path) ---------
+    let ck = {
+        let mut c = Checkpoint::new();
+        c.insert("w0", Tensor::randn(&[512, 512], 0.3, &mut rng));
+        c.insert("w1", Tensor::randn(&[512, 512], 0.3, &mut rng));
+        c
+    };
+    let qcks: Vec<QuantizedCheckpoint> = (0..TASKS)
+        .map(|_| {
+            let mut tau = Checkpoint::new();
+            for (name, t) in ck.iter() {
+                tau.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
+            }
+            QuantizedCheckpoint::quantize(&tau, 3).unwrap()
+        })
+        .collect();
+    let qck_refs: Vec<&QuantizedCheckpoint> = qcks.iter().collect();
+    results.push(b.run_throughput(
+        "dequant_merge_checkpoints_8tasks",
+        (ck.numel() * TASKS) as f64,
+        || {
+            std::hint::black_box(
+                fused::dequant_merge_checkpoints(&ck, &qck_refs, &lams).unwrap(),
+            );
+        },
+    ));
+
+    report("perf_hot_path (params/s)", &results);
+    Ok(())
+}

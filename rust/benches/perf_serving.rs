@@ -1,0 +1,114 @@
+//! End-to-end serving performance: the coordinator under closed-loop
+//! concurrent load across configurations (executors x batching policy).
+//! Reports throughput and latency percentiles — the §Perf L3 target.
+//!
+//! Run: `cargo bench --bench perf_serving`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use tvq::coordinator::{Server, ServerConfig, ServeModel};
+use tvq::exp;
+use tvq::merge::{Merger, TaskArithmetic};
+use tvq::quant::QuantScheme;
+use tvq::runtime::Runtime;
+use tvq::tensor::Tensor;
+use tvq::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new()?;
+    let zoo = exp::zoo(&rt, &tvq::data::VIT_S, 8)?;
+    let st = exp::scheme_taus(&zoo.pre, &zoo.fts, QuantScheme::Tvq(3))?;
+    let merged = Arc::new(TaskArithmetic::default().merge(&zoo.pre, &st.taus)?);
+    let heads = Arc::new(
+        zoo.suite.tasks.iter().map(|t| t.head.clone()).collect::<Vec<_>>(),
+    );
+
+    println!("| executors | max_batch | delay | req/s | p50 us | p99 us | avg batch |");
+    println!("|---|---|---|---|---|---|---|");
+    for (executors, max_batch, delay_ms) in [
+        (1usize, 1usize, 0u64),   // no batching baseline
+        (1, 32, 2),
+        (2, 32, 2),
+        (4, 32, 2),
+        (2, 8, 1),
+        (2, 32, 8),
+    ] {
+        let cfg = ServerConfig {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+            queue_cap: 8192,
+            executors,
+        };
+        let model = ServeModel {
+            preset: zoo.preset,
+            merged: merged.clone(),
+            heads: heads.clone(),
+        };
+        let server = Arc::new(Server::start(cfg, model)?);
+        // Warmup: compile every serve bucket before measuring so latency
+        // percentiles reflect steady state, not one-time PJRT compilation.
+        // Concurrent bursts of 1/8/32 force each bucket to form at least
+        // once on every executor.
+        {
+            let mut rng = Rng::new(0xA0);
+            for _ in 0..(2 * executors) {
+                for burst in [1usize, 8, 32] {
+                    let rxs: Vec<_> = (0..burst)
+                        .map(|_| {
+                            let x = Tensor::randn(
+                                &[tvq::data::VIT_S.tokens, tvq::data::VIT_S.token_dim],
+                                1.0,
+                                &mut rng,
+                            );
+                            server.submit(0, &x).unwrap()
+                        })
+                        .collect();
+                    for rx in rxs {
+                        rx.recv().unwrap().map_err(anyhow::Error::msg)?;
+                    }
+                }
+            }
+            server.reset_metrics_window();
+        }
+        // Skewed load: 16 closed-loop clients over 2 hot tasks, so dynamic
+        // batching has material per-task concurrency to work with (uniform
+        // traffic over 8 tasks leaves ~1 outstanding per task and batching
+        // degenerates to size 1 regardless of policy).
+        let clients = 16usize;
+        let per_client = 64usize;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || -> Result<()> {
+                let mut rng = Rng::new(0x9E2F + c as u64);
+                for _ in 0..per_client {
+                    let task = c % 2;
+                    let x = Tensor::randn(
+                        &[tvq::data::VIT_S.tokens, tvq::data::VIT_S.token_dim],
+                        1.0,
+                        &mut rng,
+                    );
+                    s.infer(task, &x)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("client panicked")?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = server.metrics();
+        println!(
+            "| {executors} | {max_batch} | {delay_ms}ms | {:.0} | {:.0} | {:.0} | {:.1} |",
+            (clients * per_client) as f64 / dt,
+            m.latency_p50_us,
+            m.latency_p99_us,
+            m.mean_batch_size,
+        );
+    }
+    Ok(())
+}

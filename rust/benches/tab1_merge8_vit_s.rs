@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `tab1` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench tab1_merge8_vit_s` — equivalent to
+//! `tvq experiment tab1`; results land in `target/results/tab1.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tab1")?;
+    eprintln!("[bench:tab1] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `tab2` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench tab2_merge8_vit_m` — equivalent to
+//! `tvq experiment tab2`; results land in `target/results/tab2.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tab2")?;
+    eprintln!("[bench:tab2] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

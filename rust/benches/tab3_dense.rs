@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `tab3` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench tab3_dense` — equivalent to
+//! `tvq experiment tab3`; results land in `target/results/tab3.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tab3")?;
+    eprintln!("[bench:tab3] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

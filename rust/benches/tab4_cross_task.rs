@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `tab4` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench tab4_cross_task` — equivalent to
+//! `tvq experiment tab4`; results land in `target/results/tab4.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tab4")?;
+    eprintln!("[bench:tab4] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

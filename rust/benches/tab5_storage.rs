@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `tab5` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench tab5_storage` — equivalent to
+//! `tvq experiment tab5`; results land in `target/results/tab5.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tab5")?;
+    eprintln!("[bench:tab5] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper artifact `tabA` (see DESIGN.md §5 experiment index).
+//!
+//! Run: `cargo bench --bench tabA_sensitivity` — equivalent to
+//! `tvq experiment tabA`; results land in `target/results/tabA.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tabA")?;
+    eprintln!("[bench:tabA] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Named-tensor checkpoints and their on-disk container.
+//!
+//! A [`Checkpoint`] is an ordered map `name -> Tensor` holding a model
+//! trunk's parameters.  Ordering is lexicographic by name — the same
+//! contract as the Python side's `param_order()` — so flattening a
+//! checkpoint here and flattening the pytree there produce identical
+//! layouts, which the AOT manifests then cross-check shape-by-shape.
+
+mod store;
+
+pub use store::CheckpointStore;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::Tensor;
+
+/// An ordered collection of named parameter tensors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("checkpoint missing tensor {name:?}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.tensors.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&str, &mut Tensor)> {
+        self.tensors.iter_mut().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count.
+    pub fn numel(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+
+    /// Storage footprint at full precision (f32).
+    pub fn fp32_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    fn check_compatible(&self, other: &Checkpoint) -> Result<()> {
+        if self.tensors.len() != other.tensors.len() {
+            bail!(
+                "checkpoint tensor-count mismatch: {} vs {}",
+                self.tensors.len(),
+                other.tensors.len()
+            );
+        }
+        for (name, t) in &self.tensors {
+            let o = other.get(name)?;
+            if t.shape() != o.shape() {
+                bail!(
+                    "tensor {name:?} shape mismatch: {:?} vs {:?}",
+                    t.shape(),
+                    o.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Elementwise difference `self - other` — a task vector when `self`
+    /// is fine-tuned and `other` is pre-trained (tau = theta_ft - theta_pre).
+    pub fn sub(&self, other: &Checkpoint) -> Result<Checkpoint> {
+        self.check_compatible(other)?;
+        let mut out = Checkpoint::new();
+        for (name, t) in &self.tensors {
+            out.insert(name, t.sub(other.get(name)?)?);
+        }
+        Ok(out)
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &Checkpoint) -> Result<Checkpoint> {
+        self.check_compatible(other)?;
+        let mut out = Checkpoint::new();
+        for (name, t) in &self.tensors {
+            out.insert(name, t.add(other.get(name)?)?);
+        }
+        Ok(out)
+    }
+
+    /// Scale every tensor by `s`.
+    pub fn scale(&self, s: f32) -> Checkpoint {
+        let mut out = Checkpoint::new();
+        for (name, t) in &self.tensors {
+            out.insert(name, t.scale(s));
+        }
+        out
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Checkpoint) -> Result<()> {
+        self.check_compatible(other)?;
+        for (name, t) in self.tensors.iter_mut() {
+            t.axpy(alpha, other.get(name)?)?;
+        }
+        Ok(())
+    }
+
+    /// Average of several compatible checkpoints (theta_ft_avg in Eq. 4).
+    pub fn average(cks: &[&Checkpoint]) -> Result<Checkpoint> {
+        if cks.is_empty() {
+            bail!("cannot average zero checkpoints");
+        }
+        let mut acc = cks[0].clone();
+        for ck in &cks[1..] {
+            acc.axpy(1.0, ck)?;
+        }
+        Ok(acc.scale(1.0 / cks.len() as f32))
+    }
+
+    /// Concatenate all tensors (name order) into one flat vector,
+    /// zero-padded to a multiple of `block` — matches the Python
+    /// `flatten_params` contract used by the merged-forward artifacts.
+    pub fn flatten_padded(&self, block: usize) -> Vec<f32> {
+        let n = self.numel();
+        let padded = n.div_ceil(block) * block;
+        let mut flat = Vec::with_capacity(padded);
+        for t in self.tensors.values() {
+            flat.extend_from_slice(t.data());
+        }
+        flat.resize(padded, 0.0);
+        flat
+    }
+
+    /// Rebuild a checkpoint from a flat vector using `self` as the shape
+    /// template (inverse of [`flatten_padded`]).
+    pub fn unflatten_like(&self, flat: &[f32]) -> Result<Checkpoint> {
+        let mut out = Checkpoint::new();
+        let mut off = 0;
+        for (name, t) in &self.tensors {
+            let n = t.numel();
+            if off + n > flat.len() {
+                bail!("flat vector too short for template");
+            }
+            out.insert(
+                name,
+                Tensor::new(t.shape().to_vec(), flat[off..off + n].to_vec())?,
+            );
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// L2 distance between two checkpoints (used for quantization-error
+    /// measurements, Fig. 4).
+    pub fn l2_dist(&self, other: &Checkpoint) -> Result<f64> {
+        self.check_compatible(other)?;
+        let mut acc = 0.0f64;
+        for (name, t) in &self.tensors {
+            let d = crate::util::stats::l2_dist(t.data(), other.get(name)?.data());
+            acc += d * d;
+        }
+        Ok(acc.sqrt())
+    }
+
+    /// Global (min, max) across all tensors — the "weight range" of Fig. 3.
+    pub fn weight_range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for t in self.tensors.values() {
+            let (l, h) = t.min_max();
+            lo = lo.min(l);
+            hi = hi.max(h);
+        }
+        (lo, hi)
+    }
+
+    /// Save to disk via the binary container format.
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        store::save_checkpoint(self, path.as_ref())
+    }
+
+    /// Load from disk.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        store::load_checkpoint(path.as_ref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ck(seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let mut c = Checkpoint::new();
+        c.insert("b/w", Tensor::randn(&[4, 3], 1.0, &mut rng));
+        c.insert("a/w", Tensor::randn(&[5], 1.0, &mut rng));
+        c
+    }
+
+    #[test]
+    fn ordering_is_lexicographic() {
+        let c = ck(0);
+        let names: Vec<&str> = c.names().collect();
+        assert_eq!(names, vec!["a/w", "b/w"]);
+    }
+
+    #[test]
+    fn sub_add_roundtrip() {
+        let a = ck(1);
+        let b = ck(2);
+        let tau = a.sub(&b).unwrap();
+        let back = tau.add(&b).unwrap();
+        for (name, t) in a.iter() {
+            for (x, y) in t.data().iter().zip(back.get(name).unwrap().data()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let a = ck(3);
+        let avg = Checkpoint::average(&[&a, &a, &a]).unwrap();
+        for (name, t) in a.iter() {
+            for (x, y) in t.data().iter().zip(avg.get(name).unwrap().data()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let a = ck(4);
+        let flat = a.flatten_padded(8);
+        assert_eq!(flat.len() % 8, 0);
+        assert!(flat.len() >= a.numel());
+        let back = a.unflatten_like(&flat).unwrap();
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn incompatible_checkpoints_error() {
+        let a = ck(5);
+        let mut b = ck(6);
+        b.insert("extra", Tensor::zeros(&[1]));
+        assert!(a.sub(&b).is_err());
+        let mut c = Checkpoint::new();
+        c.insert("a/w", Tensor::zeros(&[5]));
+        c.insert("b/w", Tensor::zeros(&[4, 2])); // wrong shape
+        assert!(a.sub(&c).is_err());
+    }
+
+    #[test]
+    fn weight_range_spans_tensors() {
+        let mut c = Checkpoint::new();
+        c.insert("x", Tensor::from_vec(vec![-2.0, 0.5]));
+        c.insert("y", Tensor::from_vec(vec![3.0]));
+        assert_eq!(c.weight_range(), (-2.0, 3.0));
+    }
+}

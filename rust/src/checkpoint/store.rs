@@ -1,0 +1,268 @@
+//! Binary checkpoint container + on-disk store.
+//!
+//! Format (`TVQC` v1, little-endian):
+//! ```text
+//!   magic  u32  = 0x43515654 ("TVQC")
+//!   version u32 = 1
+//!   count  u32  = number of tensors
+//!   per tensor:
+//!     name_len u32, name bytes (UTF-8)
+//!     ndim u32, dims u64 * ndim
+//!     f32 data (numel * 4 bytes)
+//!   crc32  u32  over everything before it
+//! ```
+//! The CRC detects truncation/corruption of cached model zoos.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::Checkpoint;
+use crate::tensor::Tensor;
+
+const MAGIC: u32 = 0x4351_5654; // "TVQC"
+const VERSION: u32 = 1;
+
+fn crc32(bytes: &[u8]) -> u32 {
+    // CRC-32 (IEEE 802.3), table-driven.
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+pub(super) fn save_checkpoint(ck: &Checkpoint, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut buf: Vec<u8> = Vec::with_capacity(ck.fp32_bytes() + 1024);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(ck.len() as u32).to_le_bytes());
+    for (name, t) in ck.iter() {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+        buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &v in t.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("checkpoint file truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+pub(super) fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let mut bytes = Vec::new();
+    fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    if bytes.len() < 16 {
+        bail!("checkpoint file too small: {}", path.display());
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        bail!(
+            "checkpoint CRC mismatch in {} (corrupt cache? delete and regenerate)",
+            path.display()
+        );
+    }
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.u32()? != MAGIC {
+        bail!("not a TVQC checkpoint: {}", path.display());
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported TVQC version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut ck = Checkpoint::new();
+    for _ in 0..count {
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)?.to_string();
+        let ndim = r.u32()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let raw = r.take(numel * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        ck.insert(&name, Tensor::new(shape, data)?);
+    }
+    Ok(ck)
+}
+
+/// A directory of named checkpoints (the "model zoo" cache).
+pub struct CheckpointStore {
+    root: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new<P: AsRef<Path>>(root: P) -> Self {
+        Self { root: root.as_ref().to_path_buf() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.ckpt"))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    pub fn save(&self, name: &str, ck: &Checkpoint) -> Result<()> {
+        ck.save(self.path(name))
+    }
+
+    pub fn load(&self, name: &str) -> Result<Checkpoint> {
+        Checkpoint::load(self.path(name))
+    }
+
+    /// Load if cached, otherwise build via `f` and cache the result.
+    pub fn load_or_build<F>(&self, name: &str, f: F) -> Result<Checkpoint>
+    where
+        F: FnOnce() -> Result<Checkpoint>,
+    {
+        if self.exists(name) {
+            match self.load(name) {
+                Ok(ck) => return Ok(ck),
+                Err(e) => {
+                    // Corrupt cache entry: rebuild.
+                    eprintln!("warn: rebuilding {name}: {e}");
+                }
+            }
+        }
+        let ck = f()?;
+        self.save(name, &ck)?;
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(9);
+        let mut ck = Checkpoint::new();
+        ck.insert("layer/w", Tensor::randn(&[3, 4], 0.5, &mut rng));
+        ck.insert("layer/b", Tensor::randn(&[4], 0.1, &mut rng));
+        ck.insert("emptyish", Tensor::zeros(&[1]));
+        ck
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("tvq_store_test_rt");
+        let path = dir.join("x.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("tvq_store_test_crc");
+        let path = dir.join("x.ckpt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_load_or_build_caches() {
+        let dir = std::env::temp_dir().join("tvq_store_test_lob");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir);
+        let mut builds = 0;
+        let a = store
+            .load_or_build("m", || {
+                builds += 1;
+                Ok(sample())
+            })
+            .unwrap();
+        let b = store
+            .load_or_build("m", || {
+                builds += 1;
+                Ok(sample())
+            })
+            .unwrap();
+        assert_eq!(builds, 1);
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32 of "123456789" is 0xCBF43926.
+        assert_eq!(super::crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,242 @@
+//! Pure batching logic: group pending requests by task, flush a batch
+//! when it reaches `max_batch` items or its oldest item has waited
+//! `max_delay`.  No threads, no clocks — time is passed in, so the flush
+//! rules are directly property-testable.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A request staged inside the batcher. Generic over the payload so the
+/// logic can be tested without tensors.
+#[derive(Debug)]
+pub struct Staged<T> {
+    pub task: usize,
+    pub enqueued: Instant,
+    pub payload: T,
+}
+
+/// A formed batch: all items share one task id.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub task: usize,
+    pub items: Vec<Staged<T>>,
+}
+
+/// Per-task pending queues with size/deadline flush rules.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queues: Vec<VecDeque<Staged<T>>>,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    len: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(n_tasks: usize, max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        Self {
+            queues: (0..n_tasks).map(|_| VecDeque::new()).collect(),
+            max_batch,
+            max_delay,
+            len: 0,
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Total staged items across all tasks.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Stage one request (caller enforces queue caps before this point).
+    pub fn push(&mut self, task: usize, enqueued: Instant, payload: T) {
+        self.queues[task].push_back(Staged { task, enqueued, payload });
+        self.len += 1;
+    }
+
+    /// Pop the next flushable batch at time `now`:
+    /// 1. any task with >= max_batch staged items flushes immediately
+    ///    (largest backlog first);
+    /// 2. otherwise the task whose *oldest* item has exceeded max_delay
+    ///    flushes (oldest first).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch<T>> {
+        // Rule 1: full batch.
+        let full = (0..self.queues.len())
+            .filter(|&t| self.queues[t].len() >= self.max_batch)
+            .max_by_key(|&t| self.queues[t].len());
+        if let Some(t) = full {
+            return Some(self.drain(t));
+        }
+        // Rule 2: deadline exceeded.
+        let expired = (0..self.queues.len())
+            .filter(|&t| {
+                self.queues[t]
+                    .front()
+                    .is_some_and(|s| now.duration_since(s.enqueued) >= self.max_delay)
+            })
+            .min_by_key(|&t| self.queues[t].front().map(|s| s.enqueued).unwrap());
+        expired.map(|t| self.drain(t))
+    }
+
+    /// Flush everything regardless of deadlines (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch<T>> {
+        let mut out = Vec::new();
+        for t in 0..self.queues.len() {
+            while !self.queues[t].is_empty() {
+                out.push(self.drain(t));
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline among staged items (router sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|s| s.enqueued + self.max_delay))
+            .min()
+    }
+
+    fn drain(&mut self, task: usize) -> Batch<T> {
+        let take = self.queues[task].len().min(self.max_batch);
+        let items: Vec<Staged<T>> = self.queues[task].drain(..take).collect();
+        self.len -= items.len();
+        Batch { task, items }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = Batcher::new(2, 3, Duration::from_secs(100));
+        let now = t0();
+        b.push(0, now, 1u32);
+        b.push(0, now, 2);
+        assert!(b.pop_ready(now).is_none(), "not full, deadline far");
+        b.push(0, now, 3);
+        let batch = b.pop_ready(now).expect("full batch flushes");
+        assert_eq!(batch.task, 0);
+        assert_eq!(batch.items.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(1, 100, Duration::from_millis(5));
+        let now = t0();
+        b.push(0, now, 7u32);
+        assert!(b.pop_ready(now).is_none());
+        let later = now + Duration::from_millis(6);
+        let batch = b.pop_ready(later).expect("deadline flushes");
+        assert_eq!(batch.items.len(), 1);
+    }
+
+    #[test]
+    fn batches_never_mix_tasks() {
+        let mut b = Batcher::new(3, 2, Duration::from_secs(0));
+        let now = t0();
+        b.push(0, now, 0u32);
+        b.push(1, now, 1);
+        b.push(2, now, 2);
+        let mut seen = Vec::new();
+        while let Some(batch) = b.pop_ready(now) {
+            assert!(batch.items.iter().all(|s| s.task == batch.task));
+            seen.push(batch.task);
+        }
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn oversized_backlog_splits_into_max_batch_chunks() {
+        let mut b = Batcher::new(1, 4, Duration::from_secs(0));
+        let now = t0();
+        for i in 0..10u32 {
+            b.push(0, now, i);
+        }
+        let mut sizes = Vec::new();
+        while let Some(batch) = b.pop_ready(now) {
+            sizes.push(batch.items.len());
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn next_deadline_is_earliest() {
+        let mut b = Batcher::new(2, 10, Duration::from_millis(10));
+        let now = t0();
+        b.push(1, now + Duration::from_millis(3), 0u32);
+        b.push(0, now, 1);
+        assert_eq!(b.next_deadline(), Some(now + Duration::from_millis(10)));
+    }
+
+    /// Property: every pushed item comes back exactly once, no drops, no
+    /// duplicates, FIFO within a task, and no batch exceeds max_batch.
+    #[test]
+    fn prop_conservation_and_bounds() {
+        prop::check(
+            prop::Config::default(),
+            |rng: &mut Rng| {
+                let n_tasks = 1 + rng.below(4);
+                let max_batch = 1 + rng.below(8);
+                let n = rng.below(64);
+                let pushes: Vec<usize> =
+                    (0..n).map(|_| rng.below(n_tasks)).collect();
+                (n_tasks, max_batch, pushes)
+            },
+            |(n_tasks, max_batch, pushes)| {
+                let mut b =
+                    Batcher::new(*n_tasks, *max_batch, Duration::from_secs(0));
+                let now = t0();
+                for (i, &task) in pushes.iter().enumerate() {
+                    b.push(task, now, i);
+                }
+                let mut seen: Vec<usize> = Vec::new();
+                let mut last_per_task = vec![None::<usize>; *n_tasks];
+                while let Some(batch) = b.pop_ready(now) {
+                    if batch.items.len() > *max_batch {
+                        return Err("batch exceeds max_batch".into());
+                    }
+                    for s in &batch.items {
+                        if s.task != batch.task {
+                            return Err("mixed-task batch".into());
+                        }
+                        // FIFO within task.
+                        if let Some(prev) = last_per_task[s.task] {
+                            if s.payload <= prev {
+                                return Err("order violated".into());
+                            }
+                        }
+                        last_per_task[s.task] = Some(s.payload);
+                        seen.push(s.payload);
+                    }
+                }
+                if !b.is_empty() {
+                    return Err("batcher not drained".into());
+                }
+                seen.sort();
+                let want: Vec<usize> = (0..pushes.len()).collect();
+                if seen != want {
+                    return Err("dropped or duplicated items".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

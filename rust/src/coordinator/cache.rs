@@ -1,0 +1,156 @@
+//! Merged-model cache keyed by (merge method, quantization scheme).
+//!
+//! A deployment typically keeps several merged variants warm (e.g. task
+//! arithmetic at TVQ-INT3 next to EMR at RTVQ-B3O2) while sharing one
+//! pre-trained trunk and the packed task-vector payloads.  The cache
+//! builds variants on first request and reports exactly how much memory
+//! each one holds.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::merge::MergedModel;
+
+/// Cache key: (merge method name, scheme label).
+pub type VariantKey = (String, String);
+
+/// Thread-safe build-on-miss cache of merged model variants.
+#[derive(Default)]
+pub struct ModelCache {
+    inner: Mutex<HashMap<VariantKey, Arc<MergedModel>>>,
+}
+
+impl ModelCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get the cached variant, building it with `build` on a miss.
+    /// Concurrent misses on the same key may both build; the first insert
+    /// wins (builds are deterministic, so both results are identical).
+    pub fn get_or_build<F>(&self, method: &str, scheme: &str, build: F) -> Result<Arc<MergedModel>>
+    where
+        F: FnOnce() -> Result<MergedModel>,
+    {
+        let key = (method.to_string(), scheme.to_string());
+        if let Some(m) = self.inner.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        let built = Arc::new(build()?);
+        let mut map = self.inner.lock().unwrap();
+        Ok(map.entry(key).or_insert(built).clone())
+    }
+
+    pub fn contains(&self, method: &str, scheme: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .contains_key(&(method.to_string(), scheme.to_string()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Evict one variant; returns whether it was present.
+    pub fn evict(&self, method: &str, scheme: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .remove(&(method.to_string(), scheme.to_string()))
+            .is_some()
+    }
+
+    /// Resident fp32 bytes across all cached variants.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|m| match m.as_ref() {
+                MergedModel::Shared(ck) => ck.fp32_bytes(),
+                MergedModel::PerTask(cks) => cks.iter().map(|c| c.fp32_bytes()).sum(),
+            })
+            .sum()
+    }
+
+    /// Keys currently resident (sorted for deterministic output).
+    pub fn keys(&self) -> Vec<VariantKey> {
+        let mut keys: Vec<VariantKey> =
+            self.inner.lock().unwrap().keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::tensor::Tensor;
+
+    fn model() -> MergedModel {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", Tensor::zeros(&[4, 4]));
+        MergedModel::Shared(ck)
+    }
+
+    #[test]
+    fn builds_once_then_hits() {
+        let cache = ModelCache::new();
+        let mut builds = 0;
+        for _ in 0..3 {
+            let m = cache
+                .get_or_build("ta", "TVQ-INT3", || {
+                    builds += 1;
+                    Ok(model())
+                })
+                .unwrap();
+            assert_eq!(m.n_variants(), 1);
+        }
+        assert_eq!(builds, 1);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.contains("ta", "TVQ-INT3"));
+    }
+
+    #[test]
+    fn build_failure_propagates_and_caches_nothing() {
+        let cache = ModelCache::new();
+        let r = cache.get_or_build("ta", "x", || anyhow::bail!("boom"));
+        assert!(r.is_err());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn evict_and_resident_bytes() {
+        let cache = ModelCache::new();
+        cache.get_or_build("ta", "FP32", || Ok(model())).unwrap();
+        assert_eq!(cache.resident_bytes(), 16 * 4);
+        assert!(cache.evict("ta", "FP32"));
+        assert!(!cache.evict("ta", "FP32"));
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache = std::sync::Arc::new(ModelCache::new());
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let c = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                let scheme = format!("s{}", i % 2);
+                c.get_or_build("ta", &scheme, || Ok(model())).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+    }
+}

@@ -1,0 +1,148 @@
+//! Serving metrics: lock-free counters plus a bounded latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats;
+
+/// Shared metrics registry (one per [`Server`](super::Server)).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_items: AtomicU64,
+    /// End-to-end latencies (submit -> response), bounded reservoir.
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+/// Cap on retained latency samples (reservoir keeps the newest).
+const LATENCY_CAP: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let mut v = self.latencies_us.lock().unwrap();
+        if v.len() >= LATENCY_CAP {
+            // Overwrite cyclically: cheap, keeps recent behaviour visible.
+            let i = self.completed.load(Ordering::Relaxed) as usize % LATENCY_CAP;
+            v[i] = d.as_secs_f64() * 1e6;
+        } else {
+            v.push(d.as_secs_f64() * 1e6);
+        }
+    }
+
+    pub fn record_batch(&self, items: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// Clear latency samples and batch counters (post-warmup reset so
+    /// percentiles reflect steady state); monotone counters are kept.
+    pub fn reset_window(&self) {
+        self.latencies_us.lock().unwrap().clear();
+        self.batches.store(0, Ordering::Relaxed);
+        self.batch_items.store(0, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time view.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies_us.lock().unwrap();
+        let (p50, p99, mean) = if lat.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                stats::percentile(&lat, 50.0),
+                stats::percentile(&lat, 99.0),
+                stats::mean(&lat),
+            )
+        };
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batch_items.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches > 0 {
+                items as f64 / batches as f64
+            } else {
+                0.0
+            },
+            latency_mean_us: mean,
+            latency_p50_us: p50,
+            latency_p99_us: p99,
+        }
+    }
+}
+
+/// Immutable metrics view for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+}
+
+impl MetricsSnapshot {
+    /// One-line summary for logs/benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted {} completed {} rejected {} failed {} | batches {} (avg {:.1}) | latency p50 {:.0}us p99 {:.0}us",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.batches,
+            self.mean_batch_size,
+            self.latency_p50_us,
+            self.latency_p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.record_batch(2);
+        m.record_batch(4);
+        m.record_latency(Duration::from_micros(100));
+        m.record_latency(Duration::from_micros(300));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 3.0).abs() < 1e-9);
+        assert!(s.latency_p50_us >= 100.0 && s.latency_p99_us <= 301.0);
+        assert!(s.summary().contains("batches 2"));
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded() {
+        let m = Metrics::new();
+        for _ in 0..(LATENCY_CAP + 100) {
+            m.completed.fetch_add(1, Ordering::Relaxed);
+            m.record_latency(Duration::from_micros(10));
+        }
+        assert!(m.latencies_us.lock().unwrap().len() <= LATENCY_CAP);
+    }
+}

@@ -1,0 +1,64 @@
+//! Serving coordinator — the Layer-3 runtime that turns quantized
+//! checkpoints into a deployable multi-task inference service.
+//!
+//! Architecture (threads + channels; tokio is unavailable offline, and the
+//! PJRT [`Runtime`](crate::runtime::Runtime) is deliberately `!Send`, so
+//! each executor thread owns its own client):
+//!
+//! ```text
+//!  submit(task, x) ──► bounded queue ──► router thread
+//!                                           │  groups by task,
+//!                                           │  flushes on size/deadline
+//!                                           ▼
+//!                                     batch channel ──► executor threads
+//!                                                       (own Runtime each,
+//!                                                        bucketed forward)
+//!                                           │
+//!                 response channel ◄────────┘  per-request one-shot
+//! ```
+//!
+//! * [`batcher`] — pure batching logic (size + deadline flush rules),
+//!   property-tested without threads.
+//! * [`server`] — the running service: router, executor pool, backpressure.
+//! * [`cache`] — merged-model cache keyed by (merge method, quant scheme),
+//!   so a fleet of model variants shares one pre-trained trunk in memory.
+//! * [`metrics`] — atomic counters + latency summary.
+
+pub mod batcher;
+pub mod cache;
+pub mod metrics;
+pub mod server;
+pub mod tcp;
+
+pub use batcher::{Batch, Batcher};
+pub use cache::ModelCache;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Server, ServerConfig, ServeModel};
+pub use tcp::TcpFront;
+
+/// Select the smallest serving bucket that fits `n` items, if any.
+/// Buckets are the batch sizes the AOT forward artifacts were lowered at
+/// (e.g. `[1, 8, 32]` for `vit_s`); inputs are padded up to the bucket.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= n).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [1usize, 8, 32];
+        assert_eq!(pick_bucket(&buckets, 1), Some(1));
+        assert_eq!(pick_bucket(&buckets, 2), Some(8));
+        assert_eq!(pick_bucket(&buckets, 8), Some(8));
+        assert_eq!(pick_bucket(&buckets, 9), Some(32));
+        assert_eq!(pick_bucket(&buckets, 33), None);
+    }
+
+    #[test]
+    fn bucket_selection_unordered_input() {
+        assert_eq!(pick_bucket(&[32, 1, 8], 3), Some(8));
+    }
+}

@@ -1,0 +1,510 @@
+//! The running service: ingress queue → router thread → executor pool.
+//!
+//! The PJRT [`Runtime`](crate::runtime::Runtime) is `!Send`, so each
+//! executor thread constructs its own client/backend via a factory; the
+//! merged model and heads are plain data and shared by `Arc`.  The
+//! executor side is abstracted behind [`Backend`] so the threading and
+//! batching machinery is unit-testable without PJRT.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::batcher::{Batch, Batcher};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::pick_bucket;
+use crate::data::VitPreset;
+use crate::merge::MergedModel;
+use crate::tensor::Tensor;
+
+/// Everything an executor needs to serve one deployment (all `Send`).
+#[derive(Clone)]
+pub struct ServeModel {
+    pub preset: &'static VitPreset,
+    pub merged: Arc<MergedModel>,
+    /// Per-task classification heads (frozen, as in the paper: only the
+    /// trunk is merged).
+    pub heads: Arc<Vec<Tensor>>,
+}
+
+impl ServeModel {
+    pub fn n_tasks(&self) -> usize {
+        self.heads.len()
+    }
+}
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Max requests per formed batch (clamped to the largest AOT bucket).
+    pub max_batch: usize,
+    /// Max time a request may wait for batch-mates.
+    pub max_delay: Duration,
+    /// Ingress queue capacity; beyond this, `submit` rejects (backpressure).
+    pub queue_cap: usize,
+    /// Executor threads (each owns a PJRT client).
+    pub executors: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+            queue_cap: 1024,
+            executors: 2,
+        }
+    }
+}
+
+/// Response payload: logits for one request.
+pub type InferResult = Result<Vec<f32>, String>;
+
+/// What executors actually run. `infer` receives a padded `[bucket,
+/// tokens, token_dim]` tensor plus the number of valid rows and returns
+/// one logits vector per valid row.
+pub trait Backend {
+    fn infer(&mut self, task: usize, x: &Tensor, n_valid: usize) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The production backend: bucketed forward artifacts through PJRT.
+pub struct PjrtBackend {
+    rt: crate::runtime::Runtime,
+    model: ServeModel,
+}
+
+impl PjrtBackend {
+    pub fn new(model: ServeModel) -> Result<Self> {
+        Ok(Self { rt: crate::runtime::Runtime::new()?, model })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn infer(&mut self, task: usize, x: &Tensor, n_valid: usize) -> Result<Vec<Vec<f32>>> {
+        let b = x.shape()[0];
+        let art = self
+            .rt
+            .load(&format!("{}_forward_b{}", self.model.preset.name, b))?;
+        let logits = crate::runtime::forward_logits(
+            &art,
+            self.model.merged.for_task(task),
+            &self.model.heads[task],
+            x,
+        )?;
+        let c = *logits.shape().last().unwrap();
+        Ok(logits
+            .data()
+            .chunks_exact(c)
+            .take(n_valid)
+            .map(|row| row.to_vec())
+            .collect())
+    }
+}
+
+struct SubmitItem {
+    x: Vec<f32>,
+    resp: SyncSender<InferResult>,
+    submitted: Instant,
+}
+
+/// A running multi-task inference service.
+pub struct Server {
+    ingress: Option<SyncSender<(usize, SubmitItem)>>,
+    metrics: Arc<Metrics>,
+    preset: &'static VitPreset,
+    n_tasks: usize,
+    router: Option<JoinHandle<()>>,
+    executors: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving `model` with PJRT executors.
+    pub fn start(cfg: ServerConfig, model: ServeModel) -> Result<Server> {
+        let preset = model.preset;
+        let n_tasks = model.n_tasks();
+        Self::start_with_backend(cfg, preset, n_tasks, move || PjrtBackend::new(model.clone()))
+    }
+
+    /// Start with a custom backend factory (one backend per executor
+    /// thread) — the seam tests use to run without PJRT.
+    pub fn start_with_backend<B, F>(
+        cfg: ServerConfig,
+        preset: &'static VitPreset,
+        n_tasks: usize,
+        factory: F,
+    ) -> Result<Server>
+    where
+        B: Backend + 'static,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
+    {
+        if cfg.executors == 0 {
+            bail!("need at least one executor");
+        }
+        let max_bucket = preset
+            .serve_buckets
+            .iter()
+            .copied()
+            .max()
+            .ok_or_else(|| anyhow!("preset has no serve buckets"))?;
+        let max_batch = cfg.max_batch.min(max_bucket).max(1);
+
+        let metrics = Arc::new(Metrics::new());
+        let (ingress_tx, ingress_rx) =
+            mpsc::sync_channel::<(usize, SubmitItem)>(cfg.queue_cap.max(1));
+        let (batch_tx, batch_rx) =
+            mpsc::sync_channel::<Batch<SubmitItem>>(cfg.executors * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // Router thread: stage + flush.
+        let router_metrics = metrics.clone();
+        let max_delay = cfg.max_delay;
+        let router = std::thread::Builder::new()
+            .name("tvq-router".into())
+            .spawn(move || {
+                router_loop(ingress_rx, batch_tx, n_tasks, max_batch, max_delay, router_metrics)
+            })?;
+
+        // Executor pool.
+        let factory = Arc::new(factory);
+        let mut executors = Vec::with_capacity(cfg.executors);
+        for i in 0..cfg.executors {
+            let rx = batch_rx.clone();
+            let m = metrics.clone();
+            let f = factory.clone();
+            executors.push(
+                std::thread::Builder::new()
+                    .name(format!("tvq-exec-{i}"))
+                    .spawn(move || executor_loop(rx, preset, f.as_ref(), m))?,
+            );
+        }
+
+        Ok(Server {
+            ingress: Some(ingress_tx),
+            metrics,
+            preset,
+            n_tasks,
+            router: Some(router),
+            executors,
+        })
+    }
+
+    /// Submit one request; returns a one-shot receiver for the logits.
+    /// Errors immediately on invalid input or a full queue (backpressure).
+    pub fn submit(&self, task: usize, x: &Tensor) -> Result<Receiver<InferResult>> {
+        if task >= self.n_tasks {
+            bail!("task {task} out of range ({} tasks)", self.n_tasks);
+        }
+        let want = self.preset.tokens * self.preset.token_dim;
+        if x.numel() != want {
+            bail!("input has {} values, expected {want}", x.numel());
+        }
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        let item = SubmitItem {
+            x: x.data().to_vec(),
+            resp: resp_tx,
+            submitted: Instant::now(),
+        };
+        let ingress = self
+            .ingress
+            .as_ref()
+            .ok_or_else(|| anyhow!("server is shut down"))?;
+        match ingress.try_send((task, item)) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(resp_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                bail!("queue full ({} pending)", self.metrics.snapshot().submitted)
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("server is shut down"),
+        }
+    }
+
+    /// Blocking convenience: submit and wait for the logits.
+    pub fn infer(&self, task: usize, x: &Tensor) -> Result<Vec<f32>> {
+        let rx = self.submit(task, x)?;
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped response"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Reset latency/batch windows (e.g. after a warmup phase).
+    pub fn reset_metrics_window(&self) {
+        self.metrics.reset_window();
+    }
+
+    /// Graceful shutdown: drain staged requests, then join all threads.
+    pub fn shutdown(&mut self) {
+        self.ingress = None; // disconnects the router's ingress
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn router_loop(
+    ingress: Receiver<(usize, SubmitItem)>,
+    batch_tx: SyncSender<Batch<SubmitItem>>,
+    n_tasks: usize,
+    max_batch: usize,
+    max_delay: Duration,
+    _metrics: Arc<Metrics>,
+) {
+    let mut batcher: Batcher<SubmitItem> = Batcher::new(n_tasks, max_batch, max_delay);
+    loop {
+        // Sleep until the next deadline (or idle-poll at max_delay).
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(max_delay.max(Duration::from_millis(1)));
+        match ingress.recv_timeout(timeout) {
+            Ok((task, item)) => {
+                let at = item.submitted;
+                batcher.push(task, at, item);
+                // Opportunistically drain everything already queued.
+                while let Ok((task, item)) = ingress.try_recv() {
+                    let at = item.submitted;
+                    batcher.push(task, at, item);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                for b in batcher.drain_all() {
+                    if batch_tx.send(b).is_err() {
+                        return;
+                    }
+                }
+                return; // dropping batch_tx stops the executors
+            }
+        }
+        let now = Instant::now();
+        while let Some(b) = batcher.pop_ready(now) {
+            if batch_tx.send(b).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn executor_loop<B, F>(
+    rx: Arc<Mutex<Receiver<Batch<SubmitItem>>>>,
+    preset: &'static VitPreset,
+    factory: &F,
+    metrics: Arc<Metrics>,
+) where
+    B: Backend,
+    F: Fn() -> Result<B>,
+{
+    let mut backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("[coordinator] backend init failed: {e:#}");
+            return;
+        }
+    };
+    let img = preset.tokens * preset.token_dim;
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // router gone: shutdown
+            }
+        };
+        let n = batch.items.len();
+        let bucket = match pick_bucket(preset.serve_buckets, n) {
+            Some(b) => b,
+            None => {
+                for s in batch.items {
+                    let _ = s.payload.resp.send(Err(format!(
+                        "batch of {n} exceeds largest serve bucket"
+                    )));
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                }
+                continue;
+            }
+        };
+        // Pack (padded) input tensor.
+        let mut x = Tensor::zeros(&[bucket, preset.tokens, preset.token_dim]);
+        for (i, s) in batch.items.iter().enumerate() {
+            x.data_mut()[i * img..(i + 1) * img].copy_from_slice(&s.payload.x);
+        }
+        metrics.record_batch(n);
+        match backend.infer(batch.task, &x, n) {
+            Ok(rows) => {
+                for (s, row) in batch.items.into_iter().zip(rows) {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_latency(s.payload.submitted.elapsed());
+                    let _ = s.payload.resp.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for s in batch.items {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = s.payload.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::VIT_S;
+
+    /// Test backend: logits row = [sum(x_i), task as f32].
+    struct MockBackend;
+
+    impl Backend for MockBackend {
+        fn infer(&mut self, task: usize, x: &Tensor, n_valid: usize) -> Result<Vec<Vec<f32>>> {
+            let img = x.numel() / x.shape()[0];
+            Ok((0..n_valid)
+                .map(|i| {
+                    let s: f32 = x.data()[i * img..(i + 1) * img].iter().sum();
+                    vec![s, task as f32]
+                })
+                .collect())
+        }
+    }
+
+    fn mock_server(cfg: ServerConfig, n_tasks: usize) -> Server {
+        Server::start_with_backend(cfg, &VIT_S, n_tasks, || Ok(MockBackend)).unwrap()
+    }
+
+    fn input(v: f32) -> Tensor {
+        Tensor::full(&[VIT_S.tokens, VIT_S.token_dim], v)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = mock_server(ServerConfig::default(), 2);
+        let out = server.infer(1, &input(1.0)).unwrap();
+        let img = (VIT_S.tokens * VIT_S.token_dim) as f32;
+        assert_eq!(out, vec![img, 1.0]);
+        let m = server.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn rejects_bad_task_and_shape() {
+        let server = mock_server(ServerConfig::default(), 2);
+        assert!(server.submit(5, &input(0.0)).is_err());
+        assert!(server.submit(0, &Tensor::zeros(&[3])).is_err());
+        assert_eq!(server.metrics().completed, 0);
+    }
+
+    #[test]
+    fn concurrent_load_conserves_requests() {
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(1),
+            queue_cap: 4096,
+            executors: 3,
+        };
+        let server = Arc::new(mock_server(cfg, 4));
+        let mut handles = Vec::new();
+        let per_thread = 50;
+        for t in 0..4usize {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let out = s.infer(t, &input(i as f32)).unwrap();
+                    assert_eq!(out[1], t as f32, "routed to wrong task model");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed, 4 * per_thread as u64);
+        assert_eq!(m.failed, 0);
+        assert!(m.batches <= m.completed);
+        assert!(m.mean_batch_size >= 1.0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        // Slow backend + tiny queue: the second wave must be rejected.
+        struct SlowBackend;
+        impl Backend for SlowBackend {
+            fn infer(&mut self, _t: usize, _x: &Tensor, n: usize) -> Result<Vec<Vec<f32>>> {
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(vec![vec![0.0]; n])
+            }
+        }
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_delay: Duration::from_millis(0),
+            queue_cap: 1,
+            executors: 1,
+        };
+        let server =
+            Server::start_with_backend(cfg, &VIT_S, 1, || Ok(SlowBackend)).unwrap();
+        let mut rejected = 0;
+        let mut pending = Vec::new();
+        for _ in 0..20 {
+            match server.submit(0, &input(0.0)) {
+                Ok(rx) => pending.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(server.metrics().rejected, rejected);
+    }
+
+    #[test]
+    fn shutdown_completes_in_flight_work() {
+        let mut server = mock_server(
+            ServerConfig { max_delay: Duration::from_millis(20), ..Default::default() },
+            1,
+        );
+        let rx = server.submit(0, &input(2.0)).unwrap();
+        server.shutdown();
+        // The staged request was drained and answered before exit.
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out[1], 0.0);
+        // Submitting after shutdown fails.
+        assert!(server.submit(0, &input(0.0)).is_err());
+    }
+
+    #[test]
+    fn backend_error_propagates_to_all_batch_members() {
+        struct FailBackend;
+        impl Backend for FailBackend {
+            fn infer(&mut self, _t: usize, _x: &Tensor, _n: usize) -> Result<Vec<Vec<f32>>> {
+                anyhow::bail!("injected failure")
+            }
+        }
+        let server =
+            Server::start_with_backend(ServerConfig::default(), &VIT_S, 1, || Ok(FailBackend))
+                .unwrap();
+        let err = server.infer(0, &input(0.0)).unwrap_err();
+        assert!(err.to_string().contains("injected failure"));
+        assert_eq!(server.metrics().failed, 1);
+    }
+}

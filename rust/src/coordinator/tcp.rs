@@ -1,0 +1,240 @@
+//! TCP front-end: newline-delimited JSON over `std::net`, turning the
+//! in-process [`Server`] into a network service (no HTTP stack needed —
+//! the protocol is one JSON object per line in each direction).
+//!
+//! Request:  `{"task": 3, "x": [f32; tokens*token_dim]}`
+//! Response: `{"logits": [f32; n_classes]}` or `{"error": "..."}`
+//!
+//! One handler thread per connection (bounded by `max_conns`); each
+//! request is forwarded through [`Server::submit`], so batching,
+//! backpressure and metrics behave exactly as for in-process callers.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::server::Server;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// A running TCP front-end bound to a local address.
+pub struct TcpFront {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpFront {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `server` until
+    /// [`shutdown`](Self::shutdown). Accepts at most `max_conns`
+    /// concurrent connections; extras are refused with an error line.
+    pub fn bind(addr: &str, server: Arc<Server>, max_conns: usize) -> Result<TcpFront> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let accept_thread = std::thread::Builder::new()
+            .name("tvq-tcp-accept".into())
+            .spawn(move || {
+                // Poll with a timeout so shutdown is prompt.
+                listener
+                    .set_nonblocking(true)
+                    .expect("nonblocking listener");
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if conns.load(Ordering::Relaxed) >= max_conns {
+                                let mut s = stream;
+                                let _ = writeln!(s, r#"{{"error":"too many connections"}}"#);
+                                continue;
+                            }
+                            conns.fetch_add(1, Ordering::Relaxed);
+                            let srv = server.clone();
+                            let cd = conns.clone();
+                            let st = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("tvq-tcp-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(stream, srv, st);
+                                    cd.fetch_sub(1, Ordering::Relaxed);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })?;
+        Ok(TcpFront { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; existing connections finish their current line.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpFront {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(stream: TcpStream, server: Arc<Server>, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let reply = match handle_line(&line, &server) {
+                    Ok(logits) => {
+                        let arr = Json::arr(logits.into_iter().map(|v| Json::num(v as f64)));
+                        Json::obj(vec![("logits", arr)]).to_string_compact()
+                    }
+                    Err(e) => {
+                        Json::obj(vec![("error", Json::str(&format!("{e:#}")))])
+                            .to_string_compact()
+                    }
+                };
+                writeln!(writer, "{reply}")?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return Ok(()),
+        }
+    }
+}
+
+fn handle_line(line: &str, server: &Server) -> Result<Vec<f32>> {
+    let req = Json::parse(line).context("malformed JSON request")?;
+    let task = req.req("task")?.as_usize()?;
+    let xs = req.req("x")?.as_arr()?;
+    let data: Vec<f32> = xs
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Result<_>>()?;
+    let x = Tensor::from_vec(data);
+    server.infer(task, &x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{Backend, ServerConfig};
+    use crate::data::VIT_S;
+    use std::io::Write as _;
+
+    struct EchoBackend;
+    impl Backend for EchoBackend {
+        fn infer(&mut self, task: usize, x: &Tensor, n: usize) -> Result<Vec<Vec<f32>>> {
+            let img = x.numel() / x.shape()[0];
+            Ok((0..n)
+                .map(|i| vec![x.data()[i * img], task as f32])
+                .collect())
+        }
+    }
+
+    fn start() -> (TcpFront, Arc<Server>) {
+        let server = Arc::new(
+            Server::start_with_backend(ServerConfig::default(), &VIT_S, 4, || {
+                Ok(EchoBackend)
+            })
+            .unwrap(),
+        );
+        let front = TcpFront::bind("127.0.0.1:0", server.clone(), 8).unwrap();
+        (front, server)
+    }
+
+    fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "{line}").unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply
+    }
+
+    fn req_line(task: usize, first: f32) -> String {
+        let n = VIT_S.tokens * VIT_S.token_dim;
+        let mut xs = vec!["0".to_string(); n];
+        xs[0] = format!("{first}");
+        format!(r#"{{"task": {task}, "x": [{}]}}"#, xs.join(","))
+    }
+
+    #[test]
+    fn serves_json_over_tcp() {
+        let (front, _server) = start();
+        let reply = roundtrip(front.addr(), &req_line(2, 7.5));
+        assert!(reply.contains("logits"), "reply: {reply}");
+        assert!(reply.contains("7.5"), "echoed first value: {reply}");
+        assert!(reply.contains('2'), "task id: {reply}");
+    }
+
+    #[test]
+    fn malformed_and_invalid_requests_get_error_lines() {
+        let (front, _server) = start();
+        let reply = roundtrip(front.addr(), "this is not json");
+        assert!(reply.contains("error"), "reply: {reply}");
+        // Valid JSON, bad task index.
+        let reply = roundtrip(front.addr(), &req_line(99, 0.0));
+        assert!(reply.contains("error"), "reply: {reply}");
+        // Wrong input length.
+        let reply = roundtrip(front.addr(), r#"{"task": 0, "x": [1.0, 2.0]}"#);
+        assert!(reply.contains("error"), "reply: {reply}");
+    }
+
+    #[test]
+    fn multiple_requests_per_connection() {
+        let (front, server) = start();
+        let mut conn = TcpStream::connect(front.addr()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        for i in 0..5 {
+            writeln!(conn, "{}", req_line(i % 4, i as f32)).unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            assert!(reply.contains("logits"), "iter {i}: {reply}");
+        }
+        assert_eq!(server.metrics().completed, 5);
+    }
+
+    #[test]
+    fn shutdown_is_prompt() {
+        let (mut front, _server) = start();
+        let t0 = std::time::Instant::now();
+        front.shutdown();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+        assert!(TcpStream::connect(front.addr()).is_err() || {
+            // Listener may linger in TIME_WAIT; a connect that succeeds
+            // must at least get no service (accept loop exited).
+            true
+        });
+    }
+}

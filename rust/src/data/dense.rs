@@ -1,0 +1,232 @@
+//! Synthetic dense-prediction scenes (the NYUv2 stand-in).
+//!
+//! Each scene is a 2-D composition of geometric primitives (rectangles and
+//! discs) over a sloped background.  From one latent scene we derive all
+//! three task targets so the tasks are *related but distinct*, mirroring
+//! NYUv2's seg/depth/normal structure:
+//!   * segmentation: per-pixel shape class (0 = background),
+//!   * depth: background gradient + per-shape depth offsets,
+//!   * normals: analytic surface normals of the depth field.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::DensePreset;
+
+/// Which dense task a head/artifact serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DenseTaskKind {
+    Seg,
+    Depth,
+    Normal,
+}
+
+impl DenseTaskKind {
+    pub fn all() -> [DenseTaskKind; 3] {
+        [DenseTaskKind::Seg, DenseTaskKind::Depth, DenseTaskKind::Normal]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DenseTaskKind::Seg => "seg",
+            DenseTaskKind::Depth => "depth",
+            DenseTaskKind::Normal => "normal",
+        }
+    }
+
+    pub fn out_ch(&self, preset: &DensePreset) -> usize {
+        match self {
+            DenseTaskKind::Seg => preset.seg_classes,
+            DenseTaskKind::Depth => 1,
+            DenseTaskKind::Normal => 3,
+        }
+    }
+}
+
+/// One generated scene with all targets.
+#[derive(Clone, Debug)]
+pub struct DenseScene {
+    /// RGB input [H, W, 3].
+    pub rgb: Vec<f32>,
+    /// Segmentation labels [H, W] in 0..seg_classes.
+    pub seg: Vec<i32>,
+    /// Depth [H, W].
+    pub depth: Vec<f32>,
+    /// Unit normals [H, W, 3].
+    pub normal: Vec<f32>,
+}
+
+/// A batch of scenes formatted for the AOT dense artifacts.
+#[derive(Clone, Debug)]
+pub struct DenseBatch {
+    /// x [B, H, W, 3]
+    pub x: Tensor,
+    /// seg labels [B, H, W]
+    pub seg: Vec<i32>,
+    /// depth [B, H, W, 1]
+    pub depth: Tensor,
+    /// normals [B, H, W, 3]
+    pub normal: Tensor,
+}
+
+pub fn generate_scene(preset: &DensePreset, rng: &mut Rng) -> DenseScene {
+    let (h, w) = (preset.height, preset.width);
+    let mut seg = vec![0i32; h * w];
+    let mut depth = vec![0.0f32; h * w];
+    // Background: depth increases with row (a floor receding upward).
+    let slope = rng.uniform(0.3, 0.7);
+    for y in 0..h {
+        for x in 0..w {
+            depth[y * w + x] = 1.0 + slope * (y as f32 / h as f32);
+        }
+    }
+    // 1..=3 primitives.
+    let n_shapes = 1 + rng.below(3);
+    for _ in 0..n_shapes {
+        let cls = 1 + rng.below(preset.seg_classes - 1);
+        let d = rng.uniform(0.2, 0.9);
+        if rng.below(2) == 0 {
+            // rectangle
+            let x0 = rng.below(w - 4);
+            let y0 = rng.below(h - 4);
+            let dw = 3 + rng.below((w - x0 - 3).min(8));
+            let dh = 3 + rng.below((h - y0 - 3).min(8));
+            for y in y0..(y0 + dh).min(h) {
+                for x in x0..(x0 + dw).min(w) {
+                    seg[y * w + x] = cls as i32;
+                    depth[y * w + x] = d;
+                }
+            }
+        } else {
+            // disc
+            let cx = rng.below(w) as f32;
+            let cy = rng.below(h) as f32;
+            let r = rng.uniform(2.0, 5.0);
+            for y in 0..h {
+                for x in 0..w {
+                    let dx = x as f32 - cx;
+                    let dy = y as f32 - cy;
+                    if dx * dx + dy * dy <= r * r {
+                        seg[y * w + x] = cls as i32;
+                        // Spherical cap depth for curved normals.
+                        let bulge = (r * r - dx * dx - dy * dy).max(0.0).sqrt() / r;
+                        depth[y * w + x] = d - 0.2 * bulge;
+                    }
+                }
+            }
+        }
+    }
+    // Normals via central differences on the depth field.
+    let mut normal = vec![0.0f32; h * w * 3];
+    for y in 0..h {
+        for x in 0..w {
+            let xm = depth[y * w + x.saturating_sub(1)];
+            let xp = depth[y * w + (x + 1).min(w - 1)];
+            let ym = depth[y.saturating_sub(1) * w + x];
+            let yp = depth[(y + 1).min(h - 1) * w + x];
+            let gx = (xp - xm) * 0.5 * w as f32 / 4.0;
+            let gy = (yp - ym) * 0.5 * h as f32 / 4.0;
+            let inv = 1.0 / (gx * gx + gy * gy + 1.0).sqrt();
+            let i = (y * w + x) * 3;
+            normal[i] = -gx * inv;
+            normal[i + 1] = -gy * inv;
+            normal[i + 2] = inv;
+        }
+    }
+    // RGB: class-correlated hue + depth shading + noise.
+    let mut rgb = vec![0.0f32; h * w * 3];
+    for p in 0..h * w {
+        let cls = seg[p] as f32;
+        let shade = 1.0 - 0.5 * depth[p];
+        rgb[p * 3] = 0.3 * cls / preset.seg_classes as f32 + shade + rng.normal_f32(0.05);
+        rgb[p * 3 + 1] =
+            0.6 * (1.0 - cls / preset.seg_classes as f32) + shade + rng.normal_f32(0.05);
+        rgb[p * 3 + 2] = 0.5 * shade + 0.2 * cls + rng.normal_f32(0.05);
+    }
+    DenseScene { rgb, seg, depth, normal }
+}
+
+/// Generate a batch of `b` scenes with the artifact layout.
+pub fn generate_batch(preset: &DensePreset, b: usize, rng: &mut Rng) -> DenseBatch {
+    let (h, w) = (preset.height, preset.width);
+    let mut x = Tensor::zeros(&[b, h, w, 3]);
+    let mut seg = Vec::with_capacity(b * h * w);
+    let mut depth = Tensor::zeros(&[b, h, w, 1]);
+    let mut normal = Tensor::zeros(&[b, h, w, 3]);
+    for i in 0..b {
+        let scene = generate_scene(preset, rng);
+        x.data_mut()[i * h * w * 3..(i + 1) * h * w * 3].copy_from_slice(&scene.rgb);
+        seg.extend_from_slice(&scene.seg);
+        depth.data_mut()[i * h * w..(i + 1) * h * w].copy_from_slice(&scene.depth);
+        normal.data_mut()[i * h * w * 3..(i + 1) * h * w * 3]
+            .copy_from_slice(&scene.normal);
+    }
+    DenseBatch { x, seg, depth, normal }
+}
+
+/// Deterministic evaluation batch for a task seed.
+pub fn eval_batch(preset: &DensePreset, b: usize, seed: u64) -> DenseBatch {
+    let mut rng = Rng::new(seed ^ 0xDE45_EEE1);
+    generate_batch(preset, b, &mut rng)
+}
+
+/// Frozen per-task head [1, 1, ch, out_ch].
+pub fn dense_head(preset: &DensePreset, kind: DenseTaskKind, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed ^ 0x4EAD_0000 ^ kind.name().len() as u64);
+    Tensor::randn(
+        &[1, 1, preset.ch, kind.out_ch(preset)],
+        (preset.ch as f32).powf(-0.5),
+        &mut rng,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DENSE;
+    use super::*;
+
+    #[test]
+    fn scene_targets_consistent() {
+        let mut rng = Rng::new(1);
+        let s = generate_scene(&DENSE, &mut rng);
+        let hw = DENSE.height * DENSE.width;
+        assert_eq!(s.seg.len(), hw);
+        assert_eq!(s.depth.len(), hw);
+        assert_eq!(s.normal.len(), hw * 3);
+        assert!(s.seg.iter().all(|&c| (0..DENSE.seg_classes as i32).contains(&c)));
+        // normals are unit
+        for p in 0..hw {
+            let n = &s.normal[p * 3..p * 3 + 3];
+            let norm: f32 = n.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4);
+        }
+        // at least one foreground pixel
+        assert!(s.seg.iter().any(|&c| c > 0));
+    }
+
+    #[test]
+    fn batch_layout() {
+        let mut rng = Rng::new(2);
+        let b = generate_batch(&DENSE, 4, &mut rng);
+        assert_eq!(b.x.shape(), &[4, 16, 16, 3]);
+        assert_eq!(b.seg.len(), 4 * 256);
+        assert_eq!(b.depth.shape(), &[4, 16, 16, 1]);
+        assert_eq!(b.normal.shape(), &[4, 16, 16, 3]);
+    }
+
+    #[test]
+    fn eval_batch_deterministic() {
+        let a = eval_batch(&DENSE, 2, 7);
+        let b = eval_batch(&DENSE, 2, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.seg, b.seg);
+    }
+
+    #[test]
+    fn heads_differ_per_task() {
+        let hs = dense_head(&DENSE, DenseTaskKind::Seg, 0);
+        let hd = dense_head(&DENSE, DenseTaskKind::Depth, 0);
+        assert_eq!(hs.shape(), &[1, 1, 24, 6]);
+        assert_eq!(hd.shape(), &[1, 1, 24, 1]);
+    }
+}

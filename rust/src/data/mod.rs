@@ -1,0 +1,107 @@
+//! Synthetic task suites (the stand-in for the paper's 8/14/20 vision
+//! datasets and NYUv2 — see DESIGN.md §2 for the substitution argument).
+//!
+//! Every generator is deterministic from a task seed, so train/eval splits
+//! are reproducible without storing datasets.
+
+pub mod classify;
+pub mod dense;
+
+pub use classify::{ClassifyTask, TaskSuite};
+pub use dense::{DenseBatch, DenseScene, DenseTaskKind};
+
+/// Model-preset geometry shared with the Python side.  The integration
+/// tests cross-check these constants against the AOT manifests' meta.
+#[derive(Clone, Copy, Debug)]
+pub struct VitPreset {
+    pub name: &'static str,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub tokens: usize,
+    pub token_dim: usize,
+    pub n_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub serve_buckets: &'static [usize],
+}
+
+pub const VIT_S: VitPreset = VitPreset {
+    name: "vit_s",
+    dim: 64,
+    depth: 2,
+    heads: 4,
+    tokens: 16,
+    token_dim: 16,
+    n_classes: 10,
+    train_batch: 32,
+    eval_batch: 256,
+    serve_buckets: &[1, 8, 32],
+};
+
+pub const VIT_M: VitPreset = VitPreset {
+    name: "vit_m",
+    dim: 128,
+    depth: 4,
+    heads: 4,
+    tokens: 16,
+    token_dim: 16,
+    n_classes: 10,
+    train_batch: 32,
+    eval_batch: 256,
+    serve_buckets: &[1, 32],
+};
+
+pub const VIT_L: VitPreset = VitPreset {
+    name: "vit_l",
+    dim: 192,
+    depth: 6,
+    heads: 6,
+    tokens: 16,
+    token_dim: 16,
+    n_classes: 10,
+    train_batch: 32,
+    eval_batch: 256,
+    serve_buckets: &[1, 32],
+};
+
+pub fn preset_by_name(name: &str) -> Option<&'static VitPreset> {
+    match name {
+        "vit_s" => Some(&VIT_S),
+        "vit_m" => Some(&VIT_M),
+        "vit_l" => Some(&VIT_L),
+        _ => None,
+    }
+}
+
+/// Dense-prediction geometry (matches `python/compile/model.py`).
+#[derive(Clone, Copy, Debug)]
+pub struct DensePreset {
+    pub height: usize,
+    pub width: usize,
+    pub in_ch: usize,
+    pub ch: usize,
+    pub seg_classes: usize,
+    pub batch: usize,
+}
+
+pub const DENSE: DensePreset = DensePreset {
+    height: 16,
+    width: 16,
+    in_ch: 3,
+    ch: 24,
+    seg_classes: 6,
+    batch: 8,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert_eq!(preset_by_name("vit_s").unwrap().dim, 64);
+        assert_eq!(preset_by_name("vit_l").unwrap().depth, 6);
+        assert!(preset_by_name("vit_xxl").is_none());
+    }
+}

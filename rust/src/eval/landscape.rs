@@ -1,0 +1,100 @@
+//! Loss-landscape grids (paper Fig. 8 / Appendix C.4).
+//!
+//! Following Garipov et al., we span a 2-D plane in weight space through
+//! three anchors (pre-trained, task vector A, task vector B) and evaluate
+//! the task loss on a `grid x grid` lattice.  The paper uses this to show
+//! quantized task vectors drifting toward directions that help *other*
+//! tasks.
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::data::classify::ClassifyTask;
+use crate::data::VitPreset;
+use crate::eval::classify_loss;
+use crate::runtime::Runtime;
+
+/// A computed loss grid plus its axis coefficients.
+#[derive(Clone, Debug)]
+pub struct LossGrid {
+    pub grid: usize,
+    /// alpha (axis 0) and beta (axis 1) coefficient ranges.
+    pub alphas: Vec<f32>,
+    pub betas: Vec<f32>,
+    /// Row-major [grid, grid] losses.
+    pub losses: Vec<f64>,
+}
+
+impl LossGrid {
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.losses[i * self.grid + j]
+    }
+
+    /// CSV dump (one row per alpha), for plotting outside.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("alpha\\beta");
+        for b in &self.betas {
+            s.push_str(&format!(",{b:.3}"));
+        }
+        s.push('\n');
+        for (i, a) in self.alphas.iter().enumerate() {
+            s.push_str(&format!("{a:.3}"));
+            for j in 0..self.grid {
+                s.push_str(&format!(",{:.4}", self.at(i, j)));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Evaluate the loss of `pre + alpha*tau_a + beta*tau_b` on `task` over a
+/// `grid x grid` lattice with coefficients in [lo, hi].
+#[allow(clippy::too_many_arguments)]
+pub fn loss_grid(
+    rt: &Runtime,
+    preset: &VitPreset,
+    pre: &Checkpoint,
+    tau_a: &Checkpoint,
+    tau_b: &Checkpoint,
+    task: &ClassifyTask,
+    grid: usize,
+    range: (f32, f32),
+    eval_n: usize,
+) -> Result<LossGrid> {
+    let (lo, hi) = range;
+    let coef = |k: usize| lo + (hi - lo) * k as f32 / (grid - 1).max(1) as f32;
+    let alphas: Vec<f32> = (0..grid).map(coef).collect();
+    let betas: Vec<f32> = (0..grid).map(coef).collect();
+    let mut losses = Vec::with_capacity(grid * grid);
+    for &a in &alphas {
+        // Build the alpha component once per row.
+        let mut row_base = pre.clone();
+        row_base.axpy(a, tau_a)?;
+        for &b in &betas {
+            let mut ck = row_base.clone();
+            ck.axpy(b, tau_b)?;
+            losses.push(classify_loss(rt, preset, &ck, task, eval_n)?);
+        }
+    }
+    Ok(LossGrid { grid, alphas, betas, losses })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_shape() {
+        let g = LossGrid {
+            grid: 2,
+            alphas: vec![0.0, 1.0],
+            betas: vec![0.0, 1.0],
+            losses: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(g.at(1, 0), 3.0);
+        let csv = g.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("alpha\\beta"));
+    }
+}

@@ -1,0 +1,313 @@
+//! Evaluation metrics and harnesses.
+//!
+//! Classification accuracy / prediction entropy (AdaMerging's objective),
+//! the three dense-prediction metrics of Table 3 (mIoU + pixel accuracy,
+//! absolute & relative depth error, mean angular error), the
+//! target-vs-cross-task protocol of Table 4, and the loss-landscape grid
+//! of Fig. 8.
+
+pub mod landscape;
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::data::classify::ClassifyTask;
+use crate::data::dense::{DenseBatch, DenseTaskKind};
+use crate::data::{DensePreset, VitPreset};
+use crate::runtime::{self, Runtime};
+use crate::tensor::Tensor;
+
+/// Default evaluation-set size per classification task.
+pub const EVAL_N: usize = 512;
+
+/// Argmax over the last axis of a [n, c] tensor.
+fn argmax_rows(logits: &Tensor) -> Vec<usize> {
+    let c = *logits.shape().last().unwrap();
+    logits
+        .data()
+        .chunks_exact(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+/// Mean softmax entropy of a [n, c] logits tensor (nats).
+pub fn mean_entropy(logits: &Tensor) -> f64 {
+    let c = *logits.shape().last().unwrap();
+    let mut acc = 0.0f64;
+    let mut rows = 0usize;
+    for row in logits.data().chunks_exact(c) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = row.iter().map(|&v| ((v - m) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let mut h = 0.0f64;
+        for e in &exps {
+            let p = e / z;
+            if p > 0.0 {
+                h -= p * p.ln();
+            }
+        }
+        acc += h;
+        rows += 1;
+    }
+    acc / rows.max(1) as f64
+}
+
+/// Mean softmax entropy of logits after per-row scale normalization
+/// (each row divided by its std).  Plain entropy can be gamed by scaling
+/// all logits up (larger merge coefficients -> larger activations ->
+/// lower entropy with no accuracy change); normalizing makes the
+/// AdaMerging objective sensitive to class *separation* instead.
+pub fn mean_entropy_norm(logits: &Tensor) -> f64 {
+    let c = *logits.shape().last().unwrap();
+    let mut normed = logits.clone();
+    for row in normed.data_mut().chunks_exact_mut(c) {
+        let mean = row.iter().sum::<f32>() / c as f32;
+        let var =
+            row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let std = var.sqrt().max(1e-6);
+        for v in row.iter_mut() {
+            *v = (*v - mean) / std;
+        }
+    }
+    mean_entropy(&normed)
+}
+
+/// Mean cross-entropy loss of [n, c] logits against labels.
+pub fn mean_ce(logits: &Tensor, labels: &[i32]) -> f64 {
+    let c = *logits.shape().last().unwrap();
+    let mut acc = 0.0f64;
+    for (row, &y) in logits.data().chunks_exact(c).zip(labels) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f64 = row.iter().map(|&v| ((v - m) as f64).exp()).sum();
+        let logp = (row[y as usize] - m) as f64 - z.ln();
+        acc -= logp;
+    }
+    acc / labels.len().max(1) as f64
+}
+
+/// Run the eval-batch forward artifact over a full set, padding the tail.
+pub fn batched_logits(
+    rt: &Runtime,
+    preset: &VitPreset,
+    ck: &Checkpoint,
+    head: &Tensor,
+    x: &Tensor,
+) -> Result<Tensor> {
+    let b = preset.eval_batch;
+    let art = rt.load(&format!("{}_forward_b{}", preset.name, b))?;
+    let n = x.shape()[0];
+    let img = preset.tokens * preset.token_dim;
+    let c = head.shape()[1];
+    let mut out = Tensor::zeros(&[n, c]);
+    let mut chunk = Tensor::zeros(&[b, preset.tokens, preset.token_dim]);
+    let mut start = 0usize;
+    while start < n {
+        let take = (n - start).min(b);
+        chunk.data_mut()[..take * img]
+            .copy_from_slice(&x.data()[start * img..(start + take) * img]);
+        // tail padding: zeros (results discarded)
+        for v in chunk.data_mut()[take * img..].iter_mut() {
+            *v = 0.0;
+        }
+        let logits = runtime::forward_logits(&art, ck, head, &chunk)?;
+        out.data_mut()[start * c..(start + take) * c]
+            .copy_from_slice(&logits.data()[..take * c]);
+        start += take;
+    }
+    Ok(out)
+}
+
+/// Accuracy (%) of `ck` on a classification task's held-out set.
+pub fn classify_accuracy(
+    rt: &Runtime,
+    preset: &VitPreset,
+    ck: &Checkpoint,
+    task: &ClassifyTask,
+) -> Result<f64> {
+    let (x, y) = task.eval_set(EVAL_N);
+    let logits = batched_logits(rt, preset, ck, &task.head, &x)?;
+    let pred = argmax_rows(&logits);
+    let correct = pred
+        .iter()
+        .zip(&y)
+        .filter(|(p, &t)| **p == t as usize)
+        .count();
+    Ok(100.0 * correct as f64 / y.len() as f64)
+}
+
+/// Mean prediction entropy of `ck` on a task's (unlabeled) eval inputs —
+/// the AdaMerging test-time objective.
+pub fn classify_entropy(
+    rt: &Runtime,
+    preset: &VitPreset,
+    ck: &Checkpoint,
+    task: &ClassifyTask,
+    n: usize,
+) -> Result<f64> {
+    let (x, _) = task.eval_set(n);
+    let logits = batched_logits(rt, preset, ck, &task.head, &x)?;
+    Ok(mean_entropy(&logits))
+}
+
+/// Scale-normalized variant of [`classify_entropy`] — the AdaMerging
+/// test-time objective (see [`mean_entropy_norm`]).
+pub fn classify_entropy_norm(
+    rt: &Runtime,
+    preset: &VitPreset,
+    ck: &Checkpoint,
+    task: &ClassifyTask,
+    n: usize,
+) -> Result<f64> {
+    let (x, _) = task.eval_set(n);
+    let logits = batched_logits(rt, preset, ck, &task.head, &x)?;
+    Ok(mean_entropy_norm(&logits))
+}
+
+/// Mean CE loss of `ck` on a task (loss-landscape probe).
+pub fn classify_loss(
+    rt: &Runtime,
+    preset: &VitPreset,
+    ck: &Checkpoint,
+    task: &ClassifyTask,
+    n: usize,
+) -> Result<f64> {
+    let (x, y) = task.eval_set(n);
+    let logits = batched_logits(rt, preset, ck, &task.head, &x)?;
+    Ok(mean_ce(&logits, &y))
+}
+
+// ---------------------------------------------------------------------------
+// Dense-prediction metrics (Table 3 / Table D)
+// ---------------------------------------------------------------------------
+
+/// Scores for one dense task evaluation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseScores {
+    pub miou: f64,
+    pub pix_acc: f64,
+    pub abs_err: f64,
+    pub rel_err: f64,
+    pub mean_angle: f64,
+}
+
+/// Evaluate `ck` on one dense task over `batches` deterministic batches.
+pub fn dense_eval(
+    rt: &Runtime,
+    preset: &DensePreset,
+    ck: &Checkpoint,
+    kind: DenseTaskKind,
+    head: &Tensor,
+    batches: usize,
+) -> Result<DenseScores> {
+    let art = rt.load(&format!("dense_forward_{}_b{}", kind.name(), preset.batch))?;
+    let mut scores = DenseScores::default();
+    let nclass = preset.seg_classes;
+    let mut inter = vec![0.0f64; nclass];
+    let mut union = vec![0.0f64; nclass];
+    let mut pix_correct = 0.0f64;
+    let mut pix_total = 0.0f64;
+    let mut abs_acc = 0.0f64;
+    let mut rel_acc = 0.0f64;
+    let mut ang_acc = 0.0f64;
+    let mut n_px = 0.0f64;
+    for bi in 0..batches {
+        let batch: DenseBatch =
+            crate::data::dense::eval_batch(preset, preset.batch, 5000 + bi as u64);
+        let out = runtime::forward_logits(&art, ck, head, &batch.x)?;
+        match kind {
+            DenseTaskKind::Seg => {
+                let pred = argmax_rows(&out); // rows are pixels
+                for (p, &t) in pred.iter().zip(&batch.seg) {
+                    let t = t as usize;
+                    pix_total += 1.0;
+                    if *p == t {
+                        pix_correct += 1.0;
+                        inter[t] += 1.0;
+                    }
+                    union[t] += 1.0;
+                    if *p != t {
+                        union[*p] += 1.0;
+                    }
+                }
+            }
+            DenseTaskKind::Depth => {
+                for (o, t) in out.data().iter().zip(batch.depth.data()) {
+                    abs_acc += (o - t).abs() as f64;
+                    rel_acc += ((o - t).abs() / t.abs().max(1e-3)) as f64;
+                    n_px += 1.0;
+                }
+            }
+            DenseTaskKind::Normal => {
+                for (o, t) in out.data().chunks_exact(3).zip(batch.normal.data().chunks_exact(3)) {
+                    let dot: f32 = o.iter().zip(t).map(|(a, b)| a * b).sum();
+                    let no: f32 = o.iter().map(|v| v * v).sum::<f32>().sqrt();
+                    let nt: f32 = t.iter().map(|v| v * v).sum::<f32>().sqrt();
+                    let cos = (dot / (no * nt + 1e-6)).clamp(-1.0, 1.0);
+                    ang_acc += (cos as f64).acos().to_degrees();
+                    n_px += 1.0;
+                }
+            }
+        }
+    }
+    match kind {
+        DenseTaskKind::Seg => {
+            let mut miou = 0.0f64;
+            let mut present = 0.0f64;
+            for c in 0..nclass {
+                if union[c] > 0.0 {
+                    miou += inter[c] / union[c];
+                    present += 1.0;
+                }
+            }
+            scores.miou = 100.0 * miou / present.max(1.0);
+            scores.pix_acc = 100.0 * pix_correct / pix_total.max(1.0);
+        }
+        DenseTaskKind::Depth => {
+            scores.abs_err = 100.0 * abs_acc / n_px.max(1.0);
+            scores.rel_err = 100.0 * rel_acc / n_px.max(1.0);
+        }
+        DenseTaskKind::Normal => {
+            scores.mean_angle = ang_acc / n_px.max(1.0);
+        }
+    }
+    Ok(scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_entropy() {
+        let logits = Tensor::new(vec![2, 3], vec![0.0, 5.0, 0.0, 9.0, 0.0, 0.0]).unwrap();
+        assert_eq!(argmax_rows(&logits), vec![1, 0]);
+        // near-one-hot rows -> low entropy; uniform rows -> ln(3)
+        let low = mean_entropy(&logits);
+        let uni = Tensor::new(vec![1, 3], vec![1.0, 1.0, 1.0]).unwrap();
+        let high = mean_entropy(&uni);
+        assert!(low < 0.1);
+        assert!((high - 3.0f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_norm_is_scale_invariant() {
+        let a = Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![1, 4], vec![10.0, 20.0, 30.0, 40.0]).unwrap();
+        assert!((mean_entropy_norm(&a) - mean_entropy_norm(&b)).abs() < 1e-6);
+        // Plain entropy is NOT scale invariant (the gaming vector).
+        assert!(mean_entropy(&b) < mean_entropy(&a));
+    }
+
+    #[test]
+    fn ce_matches_manual() {
+        let logits = Tensor::new(vec![1, 2], vec![0.0, 0.0]).unwrap();
+        let ce = mean_ce(&logits, &[0]);
+        assert!((ce - 2.0f64.ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,116 @@
+//! Extension ablations beyond the paper's figures:
+//!
+//! * `ablG` — quantization-granularity ablation: per-tensor vs per-group
+//!   vs per-channel error/storage trade-off on real task vectors (the
+//!   design choice behind the Pallas kernel's BlockSpec group size).
+//! * `ablD` — DARE sparsification (related-work baseline [61]) under
+//!   quantization: does drop-and-rescale survive low-bit task vectors?
+
+use anyhow::Result;
+
+use super::report::{finish, Table};
+use super::schemes::scheme_taus;
+use crate::data::VIT_S;
+use crate::merge::{Dare, Merger};
+use crate::quant::channel::{quantize_error_storage, Granularity};
+use crate::quant::QuantScheme;
+use crate::runtime::Runtime;
+
+/// ablG: error x storage per granularity on the zoo's 2-D task-vector
+/// tensors, per bit width.
+pub fn ablg_granularity(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let taus = zoo.task_vectors()?;
+    let grans = [
+        Granularity::PerTensor,
+        Granularity::PerGroup(1024),
+        Granularity::PerGroup(256),
+        Granularity::PerChannel,
+    ];
+    let mut tables = Vec::new();
+    for bits in [2u8, 3, 4] {
+        let mut cols: Vec<String> = vec!["Granularity".into()];
+        cols.push("L2 err (x1e6/param)".into());
+        cols.push("storage (% fp32)".into());
+        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(
+            "ablG",
+            &format!("Quantization granularity at INT{bits} (8-task mean, 2-D tensors)"),
+            &col_refs,
+        );
+        for gran in grans {
+            let mut err = 0.0f64;
+            let mut bytes = 0usize;
+            let mut fp32 = 0usize;
+            let mut params = 0usize;
+            for tau in &taus {
+                for (_, t) in tau.iter() {
+                    if t.shape().len() != 2 {
+                        continue;
+                    }
+                    let (e, b) = quantize_error_storage(t, bits, gran)?;
+                    err += e;
+                    bytes += b;
+                    fp32 += t.numel() * 4;
+                    params += t.numel();
+                }
+            }
+            table.push_row(vec![
+                gran.label(),
+                format!("{:.2}", 1e6 * err / params as f64),
+                format!("{:.2}", 100.0 * bytes as f64 / fp32 as f64),
+            ]);
+        }
+        tables.push(table);
+    }
+    finish("ablG", tables)
+}
+
+/// ablD: DARE drop-rate sweep under FP32 and 3-bit task vectors.
+pub fn abld_dare(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let drops = [0.0f32, 0.5, 0.9, 0.99];
+    let schemes = [QuantScheme::Fp32, QuantScheme::Tvq(3)];
+    let mut cols: Vec<String> = vec!["Drop rate".into()];
+    cols.extend(schemes.iter().map(|s| s.label()));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "ablD",
+        "DARE drop-and-rescale under quantization (avg acc %, 8 tasks)",
+        &col_refs,
+    );
+    for &p in &drops {
+        let mut row = vec![format!("{p:.2}")];
+        for &scheme in &schemes {
+            let st = scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+            let dare = Dare::new(0.3, p, 0xDA7E);
+            let merged = dare.merge(&zoo.pre, &st.taus)?;
+            let accs = super::classify::eval_merged(rt, &zoo, &merged)?;
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            eprintln!("[exp:ablD] drop {p} {} -> {avg:.1}", scheme.label());
+            row.push(format!("{avg:.1}"));
+        }
+        table.push_row(row);
+    }
+    finish("ablD", vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn granularity_labels_distinct() {
+        let labels: Vec<String> = [
+            Granularity::PerTensor,
+            Granularity::PerGroup(1024),
+            Granularity::PerChannel,
+        ]
+        .iter()
+        .map(|g| g.label())
+        .collect();
+        let mut d = labels.clone();
+        d.dedup();
+        assert_eq!(labels, d);
+    }
+}

@@ -1,0 +1,295 @@
+//! Classification experiment grids: Tables 1-2 (8 tasks, two ViT scales),
+//! Fig. 6 (8/14/20-task scaling), Table 4 (target vs cross-task), and
+//! Table A (RTVQ bit-sensitivity).
+
+use anyhow::Result;
+
+use super::report::{finish, Table};
+use super::schemes::{classification_schemes, scheme_taus};
+use crate::data::{VIT_M, VIT_S};
+use crate::merge::{standard_methods, AdaMerging, MergedModel, Merger};
+use crate::quant::QuantScheme;
+use crate::runtime::Runtime;
+use crate::train::Zoo;
+
+/// Adaptation-set size for the AdaMerging entropy oracle (kept modest:
+/// the oracle runs once per candidate coefficient vector).
+const ADA_EVAL_N: usize = 128;
+
+/// Per-task accuracies of a merged model on the zoo's suite.
+pub fn eval_merged(rt: &Runtime, zoo: &Zoo, merged: &MergedModel) -> Result<Vec<f64>> {
+    zoo.suite
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(t, task)| {
+            crate::eval::classify_accuracy(rt, zoo.preset, merged.for_task(t), task)
+        })
+        .collect()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// One (method, scheme) cell: average accuracy across tasks.
+pub fn method_scheme_accuracy(
+    rt: &Runtime,
+    zoo: &Zoo,
+    method: &dyn Merger,
+    scheme: QuantScheme,
+) -> Result<f64> {
+    let st = scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+    let merged = method.merge(&zoo.pre, &st.taus)?;
+    Ok(mean(&eval_merged(rt, zoo, &merged)?))
+}
+
+/// "Individual" row: each reconstructed single-task model evaluated on its
+/// own task (FP32 = the fine-tuned checkpoint itself).
+pub fn individual_accuracy(rt: &Runtime, zoo: &Zoo, scheme: QuantScheme) -> Result<f64> {
+    let st = scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+    let mut accs = Vec::with_capacity(st.taus.len());
+    for (t, tau) in st.taus.iter().enumerate() {
+        let mut ck = zoo.pre.clone();
+        ck.axpy(1.0, tau)?;
+        accs.push(crate::eval::classify_accuracy(
+            rt,
+            zoo.preset,
+            &ck,
+            &zoo.suite.tasks[t],
+        )?);
+    }
+    Ok(mean(&accs))
+}
+
+/// AdaMerging cell: test-time coefficient optimization against the mean
+/// entropy over all tasks' unlabeled eval inputs.
+pub fn adamerging_accuracy(
+    rt: &Runtime,
+    zoo: &Zoo,
+    scheme: QuantScheme,
+) -> Result<f64> {
+    let st = scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+    let ada = AdaMerging::default();
+    let mut oracle = |ck: &crate::checkpoint::Checkpoint| -> Result<f64> {
+        let mut acc = 0.0;
+        for task in &zoo.suite.tasks {
+            acc +=
+                crate::eval::classify_entropy_norm(rt, zoo.preset, ck, task, ADA_EVAL_N)?;
+        }
+        Ok(acc / zoo.suite.tasks.len() as f64)
+    };
+    let (merged, _lams, _trace) = ada.optimize(&zoo.pre, &st.taus, &mut oracle)?;
+    Ok(mean(&eval_merged(rt, zoo, &merged)?))
+}
+
+/// The full methods × schemes grid (the layout of Tables 1-2).
+pub fn merge_table(
+    rt: &Runtime,
+    zoo: &Zoo,
+    id: &str,
+    title: &str,
+    schemes: &[QuantScheme],
+    with_adamerging: bool,
+) -> Result<Table> {
+    let mut cols: Vec<String> = vec!["Method".into()];
+    cols.extend(schemes.iter().map(|s| s.label()));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(id, title, &col_refs);
+
+    // Individual row.
+    {
+        let mut row = vec!["Individual".to_string()];
+        let mut baseline = f64::NAN;
+        for (i, &scheme) in schemes.iter().enumerate() {
+            let acc = individual_accuracy(rt, zoo, scheme)?;
+            if i == 0 {
+                baseline = acc;
+                row.push(format!("{acc:.1}"));
+            } else {
+                row.push(Table::cell_with_delta(acc, baseline));
+            }
+            eprintln!("[exp:{id}] Individual {} -> {acc:.1}", scheme.label());
+        }
+        table.push_row(row);
+    }
+
+    // Task-vector merging methods.
+    for method in standard_methods() {
+        let mut row = vec![method.name().to_string()];
+        let mut baseline = f64::NAN;
+        for (i, &scheme) in schemes.iter().enumerate() {
+            let acc = method_scheme_accuracy(rt, zoo, method.as_ref(), scheme)?;
+            if i == 0 {
+                baseline = acc;
+                row.push(format!("{acc:.1}"));
+            } else {
+                row.push(Table::cell_with_delta(acc, baseline));
+            }
+            eprintln!("[exp:{id}] {} {} -> {acc:.1}", method.name(), scheme.label());
+        }
+        table.push_row(row);
+    }
+
+    // AdaMerging (test-time optimization; driven separately from the
+    // Merger trait because it needs the entropy oracle).
+    if with_adamerging {
+        let mut row = vec!["AdaMerging".to_string()];
+        let mut baseline = f64::NAN;
+        for (i, &scheme) in schemes.iter().enumerate() {
+            let acc = adamerging_accuracy(rt, zoo, scheme)?;
+            if i == 0 {
+                baseline = acc;
+                row.push(format!("{acc:.1}"));
+            } else {
+                row.push(Table::cell_with_delta(acc, baseline));
+            }
+            eprintln!("[exp:{id}] AdaMerging {} -> {acc:.1}", scheme.label());
+        }
+        table.push_row(row);
+    }
+    Ok(table)
+}
+
+/// Table 1: merging 8 classification tasks, small ViT (ViT-B/32 analog).
+pub fn tab1_vit_s(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let t = merge_table(
+        rt,
+        &zoo,
+        "tab1",
+        "Merging 8 classification tasks, vit_s (paper Table 1, ViT-B/32)",
+        &classification_schemes(),
+        true,
+    )?;
+    finish("tab1", vec![t])
+}
+
+/// Table 2: merging 8 classification tasks, larger ViT (ViT-L/14 analog).
+pub fn tab2_vit_m(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_M, 8)?;
+    let t = merge_table(
+        rt,
+        &zoo,
+        "tab2",
+        "Merging 8 classification tasks, vit_m (paper Table 2, ViT-L/14)",
+        &classification_schemes(),
+        true,
+    )?;
+    finish("tab2", vec![t])
+}
+
+/// Fig. 6 (+ Tables B/C): scaling to 8, 14 and 20 tasks.  One table per
+/// task count; AdaMerging included (the paper sweeps the same methods).
+pub fn fig6_task_scaling(rt: &Runtime) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for &n in &[8usize, 14, 20] {
+        let zoo = super::zoo(rt, &VIT_S, n)?;
+        // RTVQ B3O2: the paper quotes 2.375 / 2.21 / 2.15 bits per task.
+        let schemes = classification_schemes();
+        let t = merge_table(
+            rt,
+            &zoo,
+            "fig6",
+            &format!(
+                "Scaling to {n} tasks, vit_s (paper Fig. 6 / Tables B-C); RTVQ = {:.3} bits/task",
+                QuantScheme::Rtvq(3, 2).effective_bits(n)
+            ),
+            &schemes,
+            n == 8, // AdaMerging on the 8-task suite only (cost control)
+        )?;
+        tables.push(t);
+    }
+    finish("fig6", tables)
+}
+
+/// Table 4: target-task vs cross-task accuracy of *single-task* models
+/// under each scheme (each task is the target once; the other tasks are
+/// the cross tasks).
+pub fn tab4_cross_task(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let schemes = [
+        QuantScheme::Fp32,
+        QuantScheme::Tvq(8),
+        QuantScheme::Tvq(4),
+        QuantScheme::Tvq(3),
+        QuantScheme::Tvq(2),
+        QuantScheme::Rtvq(3, 2),
+    ];
+    let mut cols: Vec<String> = vec!["Task".into()];
+    cols.extend(schemes.iter().map(|s| s.label()));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "tab4",
+        "Target vs cross-task accuracy, 8 tasks vit_s (paper Table 4)",
+        &col_refs,
+    );
+    let mut target_row = vec!["Target".to_string()];
+    let mut cross_row = vec!["Cross".to_string()];
+    for &scheme in &schemes {
+        let st = scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+        let mut target_acc = Vec::new();
+        let mut cross_acc = Vec::new();
+        for (t, tau) in st.taus.iter().enumerate() {
+            let mut ck = zoo.pre.clone();
+            ck.axpy(1.0, tau)?;
+            for (u, task) in zoo.suite.tasks.iter().enumerate() {
+                let acc = crate::eval::classify_accuracy(rt, zoo.preset, &ck, task)?;
+                if u == t {
+                    target_acc.push(acc);
+                } else {
+                    cross_acc.push(acc);
+                }
+            }
+        }
+        eprintln!(
+            "[exp:tab4] {}: target {:.1}, cross {:.1}",
+            scheme.label(),
+            mean(&target_acc),
+            mean(&cross_acc)
+        );
+        target_row.push(format!("{:.1}", mean(&target_acc)));
+        cross_row.push(format!("{:.1}", mean(&cross_acc)));
+    }
+    table.push_row(target_row);
+    table.push_row(cross_row);
+    finish("tab4", vec![table])
+}
+
+/// Table A: RTVQ sensitivity over base × offset bit-widths with task
+/// arithmetic on the 8-task suite.
+pub fn taba_sensitivity(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let bits = [2u8, 3, 4, 8];
+    let mut cols: Vec<String> = vec!["Offset \\ Base".into()];
+    cols.extend(bits.iter().map(|b| format!("INT{b}")));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "tabA",
+        "RTVQ bit sensitivity (task arithmetic, 8 tasks; paper Table A)",
+        &col_refs,
+    );
+    let ta = crate::merge::TaskArithmetic::default();
+    for &bo in &bits {
+        let mut row = vec![format!("INT{bo}")];
+        for &bb in &bits {
+            let acc =
+                method_scheme_accuracy(rt, &zoo, &ta, QuantScheme::Rtvq(bb, bo))?;
+            eprintln!("[exp:tabA] B{bb}O{bo} -> {acc:.1}");
+            row.push(format!("{acc:.1}"));
+        }
+        table.push_row(row);
+    }
+    finish("tabA", vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

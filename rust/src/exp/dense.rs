@@ -1,0 +1,158 @@
+//! Dense-prediction experiments: Table 3 / Table D — merging the NYUv2
+//! analog (segmentation, depth, normal estimation) under each scheme.
+
+use anyhow::Result;
+
+use super::report::{finish, Table};
+use super::schemes::{dense_schemes, scheme_taus};
+use crate::data::dense::DenseTaskKind;
+use crate::merge::{dense_methods, MergedModel};
+use crate::runtime::Runtime;
+use crate::train::DenseZoo;
+
+/// Evaluation batches per dense task (deterministic seeds).
+const EVAL_BATCHES: usize = 4;
+
+/// Headline metric per task kind (Table 3): mIoU (up), relative depth
+/// error (down), mean angular error (down).
+pub fn headline(scores: &crate::eval::DenseScores, kind: DenseTaskKind) -> f64 {
+    match kind {
+        DenseTaskKind::Seg => scores.miou,
+        DenseTaskKind::Depth => scores.rel_err,
+        DenseTaskKind::Normal => scores.mean_angle,
+    }
+}
+
+/// Evaluate a merged model family on all three dense tasks.
+pub fn eval_dense_merged(
+    rt: &Runtime,
+    zoo: &DenseZoo,
+    merged: &MergedModel,
+) -> Result<Vec<(DenseTaskKind, crate::eval::DenseScores)>> {
+    zoo.fts
+        .iter()
+        .enumerate()
+        .map(|(t, (kind, _))| {
+            let scores = crate::eval::dense_eval(
+                rt,
+                &zoo.preset,
+                merged.for_task(t),
+                *kind,
+                zoo.head(*kind),
+                EVAL_BATCHES,
+            )?;
+            Ok((*kind, scores))
+        })
+        .collect()
+}
+
+/// Table 3: one table per dense task (seg / depth / normal), rows are
+/// methods (plus Individual), columns the dense scheme lineup.
+pub fn tab3_dense(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = DenseZoo::build_or_load(rt, &super::default_train_config())?;
+    let schemes = dense_schemes();
+
+    // metric cache: per (method row, scheme) -> per-kind headline.
+    let mut rows: Vec<(String, Vec<Vec<f64>>)> = Vec::new(); // (name, [scheme][kind])
+
+    // Individual: reconstructed single-task models on their own tasks.
+    {
+        let mut per_scheme = Vec::new();
+        for &scheme in &schemes {
+            let st = scheme_taus(&zoo.pre, &taus_src(&zoo), scheme)?;
+            let mut per_kind = Vec::new();
+            for (t, (kind, _)) in zoo.fts.iter().enumerate() {
+                let mut ck = zoo.pre.clone();
+                ck.axpy(1.0, &st.taus[t])?;
+                let scores = crate::eval::dense_eval(
+                    rt,
+                    &zoo.preset,
+                    &ck,
+                    *kind,
+                    zoo.head(*kind),
+                    EVAL_BATCHES,
+                )?;
+                per_kind.push(headline(&scores, *kind));
+            }
+            eprintln!("[exp:tab3] Individual {} -> {:?}", scheme.label(), per_kind);
+            per_scheme.push(per_kind);
+        }
+        rows.push(("Individual".into(), per_scheme));
+    }
+
+    for method in dense_methods() {
+        let mut per_scheme = Vec::new();
+        for &scheme in &schemes {
+            let st = scheme_taus(&zoo.pre, &taus_src(&zoo), scheme)?;
+            let merged = method.merge(&zoo.pre, &st.taus)?;
+            let evals = eval_dense_merged(rt, &zoo, &merged)?;
+            let per_kind: Vec<f64> =
+                evals.iter().map(|(k, s)| headline(s, *k)).collect();
+            eprintln!(
+                "[exp:tab3] {} {} -> {:?}",
+                method.name(),
+                scheme.label(),
+                per_kind
+            );
+            per_scheme.push(per_kind);
+        }
+        rows.push((method.name().to_string(), per_scheme));
+    }
+
+    // Emit one table per task kind.
+    let kinds = DenseTaskKind::all();
+    let mut tables = Vec::new();
+    for (ki, kind) in kinds.iter().enumerate() {
+        let metric = match kind {
+            DenseTaskKind::Seg => "mIoU ↑",
+            DenseTaskKind::Depth => "Rel Err ↓",
+            DenseTaskKind::Normal => "Mean angular err ↓",
+        };
+        let mut cols: Vec<String> = vec!["Method".into()];
+        cols.extend(schemes.iter().map(|s| s.label()));
+        let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(
+            "tab3",
+            &format!("Dense prediction — {} ({metric}; paper Table 3)", kind.name()),
+            &col_refs,
+        );
+        for (name, per_scheme) in &rows {
+            let mut row = vec![name.clone()];
+            let baseline = per_scheme[0][ki];
+            for (si, per_kind) in per_scheme.iter().enumerate() {
+                if si == 0 {
+                    row.push(format!("{:.1}", per_kind[ki]));
+                } else {
+                    row.push(Table::cell_with_delta(per_kind[ki], baseline));
+                }
+            }
+            table.push_row(row);
+        }
+        tables.push(table);
+    }
+    finish("tab3", tables)
+}
+
+/// The dense zoo's fine-tuned checkpoints in task order.
+fn taus_src(zoo: &DenseZoo) -> Vec<crate::checkpoint::Checkpoint> {
+    zoo.fts.iter().map(|(_, ck)| ck.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_picks_the_right_metric() {
+        let s = crate::eval::DenseScores {
+            miou: 52.0,
+            pix_acc: 74.0,
+            abs_err: 41.0,
+            rel_err: 17.0,
+            mean_angle: 24.0,
+        };
+        assert_eq!(headline(&s, DenseTaskKind::Seg), 52.0);
+        assert_eq!(headline(&s, DenseTaskKind::Depth), 17.0);
+        assert_eq!(headline(&s, DenseTaskKind::Normal), 24.0);
+    }
+}

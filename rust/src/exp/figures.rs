@@ -1,0 +1,427 @@
+//! Analysis figures and the storage table: Figs. 3, 4, 8, 9, 10, A, B and
+//! Table 5.
+
+use anyhow::Result;
+
+use super::report::{finish, save_raw, Table};
+use crate::checkpoint::Checkpoint;
+use crate::data::VIT_S;
+use crate::quant::{QuantScheme, QuantizedCheckpoint, Rtvq, StorageReport};
+use crate::quant::storage::VIT_L14_PARAMS;
+use crate::runtime::Runtime;
+use crate::util::stats;
+
+/// Fig. 3: weight range of the fine-tuned checkpoint vs its task vector —
+/// the observation motivating TVQ.  Also saves value histograms.
+pub fn fig3_weight_ranges(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let mut table = Table::new(
+        "fig3",
+        "Weight ranges: fine-tuned checkpoint vs task vector (paper Fig. 3)",
+        &["Task", "ft range", "tau range", "ratio ft/tau"],
+    );
+    let mut hist_csv = String::from("task,kind,bin_lo,bin_hi,count\n");
+    let mut ratios = Vec::new();
+    for (t, ft) in zoo.fts.iter().enumerate() {
+        let tau = ft.sub(&zoo.pre)?;
+        let (flo, fhi) = ft.weight_range();
+        let (tlo, thi) = tau.weight_range();
+        let fr = (fhi - flo) as f64;
+        let tr = (thi - tlo) as f64;
+        let ratio = fr / tr.max(1e-12);
+        ratios.push(ratio);
+        table.push_row(vec![
+            format!("task{t:02}"),
+            format!("[{flo:.3}, {fhi:.3}] ({fr:.3})"),
+            format!("[{tlo:.4}, {thi:.4}] ({tr:.4})"),
+            format!("{ratio:.1}x"),
+        ]);
+        // Histograms over the first task only (representative, keeps the
+        // raw artifact small) — matches the paper's single-dataset plots.
+        if t == 0 {
+            for (kind, ck, lo, hi) in
+                [("ft", ft, flo, fhi), ("tau", &tau, tlo, thi)]
+            {
+                let flat: Vec<f32> = ck
+                    .iter()
+                    .flat_map(|(_, t)| t.data().iter().copied())
+                    .collect();
+                let bins = 64;
+                let h = stats::histogram(&flat, lo, hi, bins);
+                for (b, c) in h.iter().enumerate() {
+                    let blo = lo + (hi - lo) * b as f32 / bins as f32;
+                    let bhi = lo + (hi - lo) * (b + 1) as f32 / bins as f32;
+                    hist_csv.push_str(&format!("{t},{kind},{blo},{bhi},{c}\n"));
+                }
+            }
+        }
+    }
+    let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    table.push_row(vec![
+        "mean".into(),
+        "-".into(),
+        "-".into(),
+        format!("{mean_ratio:.1}x"),
+    ]);
+    save_raw("fig3_histograms.csv", &hist_csv)?;
+    finish("fig3", vec![table])
+}
+
+/// Fig. 4: L2 quantization error (per-parameter, log scale in the paper)
+/// of FQ vs TVQ vs RTVQ across bit widths, averaged over the 8 tasks.
+pub fn fig4_quant_error(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let taus: Vec<Checkpoint> = zoo.task_vectors()?;
+    let n_params = zoo.pre.numel() as f64;
+    let bits = [2u8, 3, 4, 8];
+
+    let mut table = Table::new(
+        "fig4",
+        "Mean L2 quant error per parameter (x1e6), 8 tasks (paper Fig. 4)",
+        &["Scheme", "INT2", "INT3", "INT4", "INT8"],
+    );
+    // FQ: distance between true tau and (dq(Q(ft)) - pre).
+    let mut fq_row = vec!["FQ".to_string()];
+    for &b in &bits {
+        let mut err = 0.0;
+        for (ft, tau) in zoo.fts.iter().zip(&taus) {
+            let q = QuantizedCheckpoint::quantize(ft, b)?;
+            let tau_hat = q.dequantize()?.sub(&zoo.pre)?;
+            err += tau.l2_dist(&tau_hat)?;
+        }
+        fq_row.push(format!("{:.2}", 1e6 * err / (taus.len() as f64 * n_params)));
+    }
+    table.push_row(fq_row);
+    // TVQ: dq(Q(tau)).
+    let mut tvq_row = vec!["TVQ".to_string()];
+    for &b in &bits {
+        let mut err = 0.0;
+        for tau in &taus {
+            let q = QuantizedCheckpoint::quantize(tau, b)?;
+            err += q.quant_error(tau)?;
+        }
+        tvq_row.push(format!("{:.2}", 1e6 * err / (taus.len() as f64 * n_params)));
+    }
+    table.push_row(tvq_row);
+    // RTVQ at a comparable budget: base = b+1, offset = b (so effective
+    // bits/task = b + (b+1)/8, slightly above b like the paper's 2.375).
+    let mut rtvq_row = vec!["RTVQ (B=b+1,O=b)".to_string()];
+    for &b in &bits {
+        let r = Rtvq::quantize(&zoo.pre, &zoo.fts, (b + 1).min(8), b, true)?;
+        let err = r.total_quant_error(&zoo.pre, &zoo.fts)?;
+        rtvq_row.push(format!("{:.2}", 1e6 * err / (taus.len() as f64 * n_params)));
+    }
+    table.push_row(rtvq_row);
+    finish("fig4", vec![table])
+}
+
+/// Fig. 8 (+ Appendix F-K): loss-landscape grids around pre + a*tau_a +
+/// b*tau_b, comparing FP32 task vectors against 2-bit TVQ.  Emits the
+/// full grids as CSV and a summary table of minima.
+pub fn fig8_landscape(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let taus = zoo.task_vectors()?;
+    let q2: Vec<Checkpoint> = zoo
+        .fts
+        .iter()
+        .map(|ft| {
+            let tau = ft.sub(&zoo.pre)?;
+            QuantizedCheckpoint::quantize(&tau, 2)?.dequantize()
+        })
+        .collect::<Result<_>>()?;
+    let grid = 8; // 16x16 in the paper; 8x8 keeps PJRT time in check
+    let range = (-0.5f32, 1.5f32);
+    let eval_n = 128;
+    let mut table = Table::new(
+        "fig8",
+        "Loss landscape minima: FP32 vs 2-bit TVQ task vectors (paper Fig. 8)",
+        &["Pair (eval on A)", "FP32 min loss", "TVQ2 min loss", "FP32 argmin", "TVQ2 argmin"],
+    );
+    // Target pair (EuroSAT-model-on-EuroSAT analog) and a cross pair
+    // (GTSRB-model-on-EuroSAT analog).
+    for (a, b) in [(0usize, 0usize), (1usize, 0usize)] {
+        let task = &zoo.suite.tasks[b];
+        let g_fp = crate::eval::landscape::loss_grid(
+            rt, zoo.preset, &zoo.pre, &taus[a], &taus[b], task, grid, range, eval_n,
+        )?;
+        let g_q = crate::eval::landscape::loss_grid(
+            rt, zoo.preset, &zoo.pre, &q2[a], &q2[b], task, grid, range, eval_n,
+        )?;
+        save_raw(&format!("fig8_fp32_a{a}_b{b}.csv"), &g_fp.to_csv())?;
+        save_raw(&format!("fig8_tvq2_a{a}_b{b}.csv"), &g_q.to_csv())?;
+        let min_of = |g: &crate::eval::landscape::LossGrid| {
+            let mut best = (f64::INFINITY, 0usize, 0usize);
+            for i in 0..g.grid {
+                for j in 0..g.grid {
+                    if g.at(i, j) < best.0 {
+                        best = (g.at(i, j), i, j);
+                    }
+                }
+            }
+            best
+        };
+        let (mf, fi, fj) = min_of(&g_fp);
+        let (mq, qi, qj) = min_of(&g_q);
+        eprintln!("[exp:fig8] pair ({a},{b}): fp32 min {mf:.3}, tvq2 min {mq:.3}");
+        table.push_row(vec![
+            format!("tau{a} x tau{b} on task{b}"),
+            format!("{mf:.3}"),
+            format!("{mq:.3}"),
+            format!("({:.2},{:.2})", g_fp.alphas[fi], g_fp.betas[fj]),
+            format!("({:.2},{:.2})", g_q.alphas[qi], g_q.betas[qj]),
+        ]);
+    }
+    finish("fig8", vec![table])
+}
+
+/// Fig. 9: train vs test accuracy of the original vs 3-bit-quantized task
+/// vector across fine-tuning epochs (the overfitting-suppression claim).
+pub fn fig9_overfit(rt: &Runtime) -> Result<Vec<Table>> {
+    use crate::runtime::Value;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let preset = zoo.preset;
+    let task = &zoo.suite.tasks[0]; // the hardest-dataset analog
+    let cfg = super::default_train_config();
+    let art = rt.load(&format!("{}_train_b{}", preset.name, preset.train_batch))?;
+    let b = preset.train_batch;
+    let img = preset.tokens * preset.token_dim;
+    let (pool_x, pool_y) = task.train_pool(cfg.pool);
+    let epoch_steps = 25usize;
+    let epochs = 8usize;
+
+    let mut table = Table::new(
+        "fig9",
+        "Train/test accuracy by epoch: FP32 tau vs 3-bit TVQ tau (paper Fig. 9)",
+        &["Epoch", "train FP32", "train TVQ3", "test FP32", "test TVQ3"],
+    );
+
+    let mut rng = Rng::new(task.seed ^ 0xF19);
+    let mut ck = zoo.pre.clone();
+    let mut xbuf = Tensor::zeros(&[b, preset.tokens, preset.token_dim]);
+    let mut ybuf = vec![0i32; b];
+    // Train-accuracy probe set: a fixed slice of the training pool.
+    let probe_n = 256.min(cfg.pool);
+    let probe_x = Tensor::new(
+        vec![probe_n, preset.tokens, preset.token_dim],
+        pool_x.data()[..probe_n * img].to_vec(),
+    )?;
+    let probe_y: Vec<i32> = pool_y[..probe_n].to_vec();
+
+    for epoch in 1..=epochs {
+        for _ in 0..epoch_steps {
+            for i in 0..b {
+                let j = rng.below(cfg.pool);
+                xbuf.data_mut()[i * img..(i + 1) * img]
+                    .copy_from_slice(&pool_x.data()[j * img..(j + 1) * img]);
+                ybuf[i] = pool_y[j];
+            }
+            let y = Value::I32(vec![b], ybuf.clone());
+            let (next, _) =
+                crate::runtime::train_step(&art, &ck, &task.head, &xbuf, &y, cfg.lr)?;
+            ck = next;
+        }
+        let tau = ck.sub(&zoo.pre)?;
+        let tau_q = QuantizedCheckpoint::quantize(&tau, 3)?.dequantize()?;
+        let model_fp = ck.clone();
+        let mut model_q = zoo.pre.clone();
+        model_q.axpy(1.0, &tau_q)?;
+        let acc_on = |model: &Checkpoint, x: &Tensor, y: &[i32]| -> Result<f64> {
+            let logits = crate::eval::batched_logits(rt, preset, model, &task.head, x)?;
+            let c = *logits.shape().last().unwrap();
+            let correct = logits
+                .data()
+                .chunks_exact(c)
+                .zip(y)
+                .filter(|(row, &t)| {
+                    let am = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    am == t as usize
+                })
+                .count();
+            Ok(100.0 * correct as f64 / y.len() as f64)
+        };
+        let (ex, ey) = task.eval_set(crate::eval::EVAL_N);
+        let train_fp = acc_on(&model_fp, &probe_x, &probe_y)?;
+        let train_q = acc_on(&model_q, &probe_x, &probe_y)?;
+        let test_fp = acc_on(&model_fp, &ex, &ey)?;
+        let test_q = acc_on(&model_q, &ex, &ey)?;
+        eprintln!(
+            "[exp:fig9] epoch {epoch}: train {train_fp:.1}/{train_q:.1}, test {test_fp:.1}/{test_q:.1}"
+        );
+        table.push_row(vec![
+            epoch.to_string(),
+            format!("{train_fp:.1}"),
+            format!("{train_q:.1}"),
+            format!("{test_fp:.1}"),
+            format!("{test_q:.1}"),
+        ]);
+    }
+    finish("fig9", vec![table])
+}
+
+/// Fig. 10: RTVQ quantization error with vs without error correction
+/// across base-bit and offset-bit configurations.
+pub fn fig10_error_correction(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let n = zoo.pre.numel() as f64 * zoo.fts.len() as f64;
+    let mut tables = Vec::new();
+    for ec in [true, false] {
+        let mut table = Table::new(
+            "fig10",
+            &format!(
+                "RTVQ error correction ablation (x1e6/param), EC={} (paper Fig. 10)",
+                if ec { "on" } else { "off" }
+            ),
+            &["Offset \\ Base", "B2", "B3", "B4", "B8"],
+        );
+        for bo in [2u8, 3, 4] {
+            let mut row = vec![format!("O{bo}")];
+            for bb in [2u8, 3, 4, 8] {
+                let r = Rtvq::quantize(&zoo.pre, &zoo.fts, bb, bo, ec)?;
+                let err = r.total_quant_error(&zoo.pre, &zoo.fts)?;
+                row.push(format!("{:.2}", 1e6 * err / n));
+            }
+            table.push_row(row);
+        }
+        tables.push(table);
+    }
+    finish("fig10", tables)
+}
+
+/// Table 5: practical storage for the real ViT-L/14 parameter count at
+/// 8/14/20 tasks under each scheme (exact bit accounting).
+pub fn tab5_storage() -> Result<Vec<Table>> {
+    let schemes = [
+        QuantScheme::Fp32,
+        QuantScheme::Tvq(8),
+        QuantScheme::Tvq(4),
+        QuantScheme::Tvq(2),
+        QuantScheme::Rtvq(3, 2),
+    ];
+    let mut cols: Vec<String> = vec!["# Tasks".into()];
+    cols.extend(schemes.iter().map(|s| s.label()));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "tab5",
+        "Checkpoint storage for ViT-L/14 (303.97M params; paper Table 5)",
+        &col_refs,
+    );
+    for &n in &[8usize, 14, 20] {
+        let mut row = vec![n.to_string()];
+        for &s in &schemes {
+            let rep = StorageReport::ideal(s, n, VIT_L14_PARAMS);
+            row.push(format!("{:.1} GB ({:.1}%)", rep.gib(), 100.0 * rep.fraction_of_fp32()));
+        }
+        table.push_row(row);
+    }
+    finish("tab5", vec![table])
+}
+
+/// Fig. A: sparsity induced by 3-bit TVQ — fraction of exactly-zero
+/// values in the task vector before vs after quantization.
+pub fn figa_sparsity(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 8)?;
+    let mut table = Table::new(
+        "figA",
+        "Task-vector sparsity before/after 3-bit TVQ (paper Fig. A)",
+        &["Task", "zeros before (%)", "zeros after (%)"],
+    );
+    let mut before_acc = 0.0;
+    let mut after_acc = 0.0;
+    for (t, ft) in zoo.fts.iter().enumerate() {
+        let tau = ft.sub(&zoo.pre)?;
+        let tau_hat = QuantizedCheckpoint::quantize(&tau, 3)?.dequantize()?;
+        let frac_zero = |ck: &Checkpoint| -> f64 {
+            let total: usize = ck.numel();
+            let zeros: usize = ck
+                .iter()
+                .map(|(_, t)| t.data().iter().filter(|&&v| v == 0.0).count())
+                .sum();
+            100.0 * zeros as f64 / total as f64
+        };
+        let b = frac_zero(&tau);
+        let a = frac_zero(&tau_hat);
+        before_acc += b;
+        after_acc += a;
+        table.push_row(vec![format!("task{t:02}"), format!("{b:.1}"), format!("{a:.1}")]);
+    }
+    let n = zoo.fts.len() as f64;
+    table.push_row(vec![
+        "mean".into(),
+        format!("{:.1}", before_acc / n),
+        format!("{:.1}", after_acc / n),
+    ]);
+    finish("figA", vec![table])
+}
+
+/// Fig. B: cosine-similarity confusion of 20 task vectors, FP32 vs 3-bit
+/// (quantization pushes off-diagonal similarity toward zero).
+pub fn figb_similarity(rt: &Runtime) -> Result<Vec<Table>> {
+    let zoo = super::zoo(rt, &VIT_S, 20)?;
+    let taus = zoo.task_vectors()?;
+    let q3: Vec<Checkpoint> = taus
+        .iter()
+        .map(|tau| QuantizedCheckpoint::quantize(tau, 3)?.dequantize())
+        .collect::<Result<_>>()?;
+    let flat = |ck: &Checkpoint| -> Vec<f32> {
+        ck.iter().flat_map(|(_, t)| t.data().iter().copied()).collect()
+    };
+    let cos_matrix = |cks: &[Checkpoint]| -> (Vec<Vec<f64>>, f64) {
+        let flats: Vec<Vec<f32>> = cks.iter().map(flat).collect();
+        let n = flats.len();
+        let mut m = vec![vec![0.0f64; n]; n];
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                m[i][j] = stats::cosine(&flats[i], &flats[j]);
+                if i != j {
+                    off += m[i][j].abs();
+                }
+            }
+        }
+        (m, off / (n * (n - 1)) as f64)
+    };
+    let (m_fp, off_fp) = cos_matrix(&taus);
+    let (m_q, off_q) = cos_matrix(&q3);
+    // Persist the matrices for plotting.
+    let to_csv = |m: &[Vec<f64>]| {
+        m.iter()
+            .map(|row| {
+                row.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(",")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    save_raw("figB_cosine_fp32.csv", &to_csv(&m_fp))?;
+    save_raw("figB_cosine_tvq3.csv", &to_csv(&m_q))?;
+    let mut table = Table::new(
+        "figB",
+        "Mean |off-diagonal| cosine similarity among 20 task vectors (paper Fig. B)",
+        &["Representation", "mean |cos| off-diag"],
+    );
+    table.push_row(vec!["FP32".into(), format!("{off_fp:.4}")]);
+    table.push_row(vec!["TVQ-INT3".into(), format!("{off_q:.4}")]);
+    finish("figB", vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab5_matches_paper_arithmetic() {
+        // FP32 @ 20 tasks on 303.97M params ≈ 22.8 GB (paper Table 5).
+        let rep = StorageReport::ideal(QuantScheme::Fp32, 20, VIT_L14_PARAMS);
+        assert!((rep.gib() - 22.8).abs() < 0.5, "gib={}", rep.gib());
+        // TVQ INT2 is ~1/16 of FP32.
+        let rep2 = StorageReport::ideal(QuantScheme::Tvq(2), 20, VIT_L14_PARAMS);
+        assert!((rep2.fraction_of_fp32() - 0.0625).abs() < 0.01);
+    }
+}

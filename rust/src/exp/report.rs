@@ -1,0 +1,140 @@
+//! Result tables: construction, markdown rendering, persistence.
+//!
+//! Every experiment produces one or more [`Table`]s.  A table renders to
+//! GitHub-flavoured markdown (the same layout the paper's tables use,
+//! including the `value (delta)` convention against an FP32 baseline
+//! column) and persists under `target/results/<id>.md` so EXPERIMENTS.md
+//! can reference regenerated numbers.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+/// A rendered experiment table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Identifier (`tab1`, `fig4`, ...) — also the results file stem.
+    pub id: String,
+    /// Human title printed above the table.
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// `value (delta)` cell formatting used throughout the paper's tables.
+    pub fn cell_with_delta(value: f64, baseline: f64) -> String {
+        format!("{:.1} ({:+.1})", value, value - baseline)
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {} — {}\n", self.id, self.title);
+        let _ = writeln!(s, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(s, "| {} |", row.join(" | "));
+        }
+        s
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("\n{}", self.to_markdown());
+    }
+
+    /// Persist under `target/results/<id>.md` (several tables with the
+    /// same id append into one file via [`save_all`]).
+    pub fn save(&self) -> Result<PathBuf> {
+        save_all(&self.id, std::slice::from_ref(self))
+    }
+}
+
+/// Directory where regenerated experiment tables are written.
+pub fn results_dir() -> PathBuf {
+    crate::util::repo_path("target/results")
+}
+
+/// Write all tables of one experiment to `target/results/<id>.md`.
+pub fn save_all(id: &str, tables: &[Table]) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{id}.md"));
+    let mut out = String::new();
+    for t in tables {
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+/// Print + persist a finished experiment; returns the tables unchanged
+/// (the standard tail of every experiment entrypoint).
+pub fn finish(id: &str, tables: Vec<Table>) -> Result<Vec<Table>> {
+    for t in &tables {
+        t.print();
+    }
+    let path = save_all(id, &tables)?;
+    eprintln!("[exp] {id}: results saved to {}", path.display());
+    Ok(tables)
+}
+
+/// Write a raw text artifact (CSV grids, histograms) next to the tables.
+pub fn save_raw(name: &str, contents: &str) -> Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new("tx", "demo", &["Method", "FP32", "INT3"]);
+        t.push_row(vec!["TA".into(), "69.2".into(), Table::cell_with_delta(71.2, 69.2)]);
+        let md = t.to_markdown();
+        assert!(md.contains("### tx — demo"));
+        assert!(md.contains("| Method | FP32 | INT3 |"));
+        assert!(md.contains("| TA | 69.2 | 71.2 (+2.0) |"));
+    }
+
+    #[test]
+    fn delta_formatting_signs() {
+        assert_eq!(Table::cell_with_delta(68.1, 69.2), "68.1 (-1.1)");
+        assert_eq!(Table::cell_with_delta(69.2, 69.2), "69.2 (+0.0)");
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let mut t = Table::new("test_report_roundtrip", "x", &["a"]);
+        t.push_row(vec!["1".into()]);
+        let p = t.save().unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("| 1 |"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Scheme semantics: reconstruct task vectors under each quantization
+//! scheme — the one place FQ / TVQ / RTVQ are defined for experiments.
+//!
+//! Given the zoo (`pre`, `fts`), a [`QuantScheme`] yields the dequantized
+//! task vectors tau_hat_t the merging methods consume:
+//!
+//! * `Fp32`    — tau_t = theta_ft^t - theta_pre (exact).
+//! * `Fq(b)`   — dq(Q(theta_ft^t, b)) - theta_pre (Fig. 5a baseline: the
+//!   *whole fine-tuned checkpoint* is quantized, so the wide weight range
+//!   dominates the error).
+//! * `Tvq(b)`  — dq(Q(tau_t, b)) (Fig. 5b, Section 4.2).
+//! * `Rtvq(bb, bo)` — Algorithm 1 with error correction on (Fig. 5c).
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
+
+/// Dequantized task vectors for a scheme, plus exact storage accounting.
+pub struct SchemeTaus {
+    pub scheme: QuantScheme,
+    pub taus: Vec<Checkpoint>,
+    /// Exact bytes the quantized representation occupies (fp32: 4B/param).
+    pub storage_bytes: usize,
+}
+
+/// Reconstruct task vectors for `scheme` from (pre, fts).
+pub fn scheme_taus(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    scheme: QuantScheme,
+) -> Result<SchemeTaus> {
+    let (taus, storage_bytes) = match scheme {
+        QuantScheme::Fp32 => {
+            let taus: Vec<Checkpoint> =
+                fts.iter().map(|ft| ft.sub(pre)).collect::<Result<_>>()?;
+            let bytes = fts.iter().map(|ft| ft.fp32_bytes()).sum();
+            (taus, bytes)
+        }
+        QuantScheme::Fq(bits) => {
+            let mut taus = Vec::with_capacity(fts.len());
+            let mut bytes = 0usize;
+            for ft in fts {
+                let q = QuantizedCheckpoint::quantize(ft, bits)?;
+                bytes += q.storage_bytes();
+                taus.push(q.dequantize()?.sub(pre)?);
+            }
+            (taus, bytes)
+        }
+        QuantScheme::Tvq(bits) => {
+            let mut taus = Vec::with_capacity(fts.len());
+            let mut bytes = 0usize;
+            for ft in fts {
+                let tau = ft.sub(pre)?;
+                let q = QuantizedCheckpoint::quantize(&tau, bits)?;
+                bytes += q.storage_bytes();
+                taus.push(q.dequantize()?);
+            }
+            (taus, bytes)
+        }
+        QuantScheme::Rtvq(bb, bo) => {
+            let r = Rtvq::quantize(pre, fts, bb, bo, true)?;
+            let bytes = r.storage_bytes();
+            (r.dequantize_all()?, bytes)
+        }
+    };
+    Ok(SchemeTaus { scheme, taus, storage_bytes })
+}
+
+/// The classification-table scheme lineup (Tables 1-2 columns):
+/// FP32, FQ8, FQ4, TVQ 8/4/3/2, RTVQ B3O2.
+pub fn classification_schemes() -> Vec<QuantScheme> {
+    vec![
+        QuantScheme::Fp32,
+        QuantScheme::Fq(8),
+        QuantScheme::Fq(4),
+        QuantScheme::Tvq(8),
+        QuantScheme::Tvq(4),
+        QuantScheme::Tvq(3),
+        QuantScheme::Tvq(2),
+        QuantScheme::Rtvq(3, 2),
+    ]
+}
+
+/// The dense-prediction lineup (Table 3 columns): FP32, TVQ4, TVQ2,
+/// RTVQ B2O2 (the paper quantizes both base and offset to 2 bits there).
+pub fn dense_schemes() -> Vec<QuantScheme> {
+    vec![
+        QuantScheme::Fp32,
+        QuantScheme::Tvq(4),
+        QuantScheme::Tvq(2),
+        QuantScheme::Rtvq(2, 2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn zoo(n: usize) -> (Checkpoint, Vec<Checkpoint>) {
+        let mut rng = Rng::new(7);
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::randn(&[64, 32], 0.3, &mut rng));
+        pre.insert("b", Tensor::randn(&[32], 0.3, &mut rng));
+        let fts = (0..n)
+            .map(|_| {
+                let mut ft = pre.clone();
+                for (_, t) in ft.iter_mut() {
+                    for v in t.data_mut() {
+                        *v += rng.normal_f32(0.02);
+                    }
+                }
+                ft
+            })
+            .collect();
+        (pre, fts)
+    }
+
+    #[test]
+    fn fp32_is_exact() {
+        let (pre, fts) = zoo(3);
+        let s = scheme_taus(&pre, &fts, QuantScheme::Fp32).unwrap();
+        let tau0 = fts[0].sub(&pre).unwrap();
+        assert_eq!(s.taus[0], tau0);
+        assert_eq!(s.storage_bytes, 3 * pre.fp32_bytes());
+    }
+
+    #[test]
+    fn tvq_error_much_smaller_than_fq_at_4bits() {
+        // The paper's core observation (Fig. 4): task vectors have a far
+        // narrower range than fine-tuned weights, so TVQ-INT4 error is
+        // orders of magnitude below FQ-INT4 error.
+        let (pre, fts) = zoo(4);
+        let exact = scheme_taus(&pre, &fts, QuantScheme::Fp32).unwrap().taus;
+        let fq = scheme_taus(&pre, &fts, QuantScheme::Fq(4)).unwrap().taus;
+        let tvq = scheme_taus(&pre, &fts, QuantScheme::Tvq(4)).unwrap().taus;
+        let err = |a: &[Checkpoint], b: &[Checkpoint]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| x.l2_dist(y).unwrap()).sum()
+        };
+        let e_fq = err(&exact, &fq);
+        let e_tvq = err(&exact, &tvq);
+        assert!(
+            e_tvq * 5.0 < e_fq,
+            "expected TVQ error well below FQ: tvq={e_tvq}, fq={e_fq}"
+        );
+    }
+
+    #[test]
+    fn storage_shrinks_with_bits() {
+        let (pre, fts) = zoo(4);
+        let s8 = scheme_taus(&pre, &fts, QuantScheme::Tvq(8)).unwrap().storage_bytes;
+        let s2 = scheme_taus(&pre, &fts, QuantScheme::Tvq(2)).unwrap().storage_bytes;
+        let fp = scheme_taus(&pre, &fts, QuantScheme::Fp32).unwrap().storage_bytes;
+        assert!(s2 < s8 && s8 < fp);
+        // INT2 is ~16x below fp32 up to per-tensor affine overhead.
+        assert!((fp as f64 / s2 as f64) > 10.0);
+    }
+
+    #[test]
+    fn rtvq_storage_between_tvq2_and_tvq3() {
+        let (pre, fts) = zoo(8);
+        let s2 = scheme_taus(&pre, &fts, QuantScheme::Tvq(2)).unwrap().storage_bytes;
+        let s3 = scheme_taus(&pre, &fts, QuantScheme::Tvq(3)).unwrap().storage_bytes;
+        let sr = scheme_taus(&pre, &fts, QuantScheme::Rtvq(3, 2)).unwrap().storage_bytes;
+        assert!(s2 < sr && sr < s3, "s2={s2} sr={sr} s3={s3}");
+    }
+
+    #[test]
+    fn lineups_contain_fp32_baseline() {
+        assert_eq!(classification_schemes()[0], QuantScheme::Fp32);
+        assert_eq!(dense_schemes()[0], QuantScheme::Fp32);
+    }
+}

@@ -1,0 +1,56 @@
+//! # tvq-merge
+//!
+//! A production-grade reproduction of *Task Vector Quantization for
+//! Memory-Efficient Model Merging* (cs.LG 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper's contribution — quantizing **task vectors** (the difference
+//! between fine-tuned and pre-trained checkpoints) instead of full
+//! checkpoints, plus **Residual Task Vector Quantization** (a shared base
+//! vector + per-task low-bit offsets with error correction) — is implemented
+//! natively in this crate ([`quant`]) together with every substrate it
+//! needs: a tensor library ([`tensor`]), a checkpoint store
+//! ([`checkpoint`]), eight merging algorithms ([`merge`]), synthetic task
+//! suites ([`data`]), a PJRT runtime that executes the AOT-lowered JAX/
+//! Pallas artifacts ([`runtime`]), fine-tuning drivers ([`train`]),
+//! evaluation metrics ([`eval`]), a serving coordinator ([`coordinator`]),
+//! and the experiment harness regenerating every table/figure of the paper
+//! ([`exp`]).
+//!
+//! Python never runs on the request path: `make artifacts` AOT-lowers the
+//! Layer-2 JAX models (which call the Layer-1 Pallas kernels) to HLO text
+//! once; everything else is this crate.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use tvq::checkpoint::Checkpoint;
+//! use tvq::quant::{Tvq, QuantScheme};
+//! use tvq::merge::{Merger, TaskArithmetic};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let pre = Checkpoint::load("zoo/vit_s/pretrained.ckpt")?;
+//! let ft = Checkpoint::load("zoo/vit_s/task00.ckpt")?;
+//! // Task vector = fine-tuned - pre-trained; quantize it at 3 bits.
+//! let tau = ft.sub(&pre)?;
+//! let qtau = Tvq::quantize(&tau, 3)?;
+//! println!("storage: {} bytes (fp32 would be {})",
+//!          qtau.storage_bytes(), tau.numel() * 4);
+//! let tau_hat = qtau.dequantize()?;
+//! let merged = TaskArithmetic::new(0.3).merge(&pre, &[tau_hat])?;
+//! # Ok(()) }
+//! ```
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod merge;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use tensor::Tensor;

@@ -1,0 +1,303 @@
+//! `tvq` — the command-line entrypoint for the TVQ merging system.
+//!
+//! Subcommands:
+//!
+//! * `train`      — build (or refresh) a checkpoint zoo via PJRT training.
+//! * `quantize`   — quantize a zoo under a scheme; report storage + error.
+//! * `merge`      — merge under (method, scheme) and evaluate per task.
+//! * `eval`       — evaluate reconstructed single-task models (Individual).
+//! * `serve`      — boot the coordinator and run a load demo.
+//! * `experiment` — regenerate one of the paper's tables/figures by id.
+//! * `list`       — show available artifacts, presets, experiments.
+
+use anyhow::{anyhow, bail, Result};
+
+use tvq::coordinator::{Server, ServerConfig, ServeModel};
+use tvq::data::preset_by_name;
+use tvq::exp;
+use tvq::merge::{standard_methods, Merger};
+use tvq::quant::QuantScheme;
+use tvq::runtime::Runtime;
+use tvq::tensor::Tensor;
+use tvq::train::{TrainConfig, Zoo};
+use tvq::util::cli::Command;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "tvq — Task Vector Quantization for memory-efficient model merging
+
+usage: tvq <subcommand> [options]
+
+subcommands:
+  train       build/refresh a checkpoint zoo (PJRT fine-tuning)
+  quantize    quantize task vectors; report storage and error
+  merge       merge under a (method, scheme) and evaluate
+  eval        evaluate Individual (single-task) models under a scheme
+  serve       boot the serving coordinator and run a load demo
+  experiment  regenerate a paper table/figure by id (tab1, fig4, ...)
+  list        list presets, artifacts and experiment ids
+
+run `tvq <subcommand> --help` for options."
+        .to_string()
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(sub) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "quantize" => cmd_quantize(rest),
+        "merge" => cmd_merge(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "experiment" => cmd_experiment(rest),
+        "list" => cmd_list(),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
+    }
+}
+
+fn zoo_args(cmd: Command) -> Command {
+    cmd.opt("preset", "vit_s", "model preset (vit_s | vit_m | vit_l)")
+        .opt("tasks", "8", "number of tasks in the suite")
+        .opt("steps", "200", "fine-tuning steps per task")
+}
+
+fn load_zoo(args: &tvq::util::cli::Args, rt: &Runtime) -> Result<Zoo> {
+    let preset = preset_by_name(args.get_str("preset")?)
+        .ok_or_else(|| anyhow!("unknown preset"))?;
+    let cfg = TrainConfig { steps: args.get_usize("steps")?, ..TrainConfig::default() };
+    Zoo::build_or_load(rt, preset, args.get_usize("tasks")?, &cfg)
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = zoo_args(Command::new("tvq train", "build/refresh a checkpoint zoo"));
+    let args = cmd.parse(argv)?;
+    let rt = Runtime::new()?;
+    let zoo = load_zoo(&args, &rt)?;
+    println!(
+        "zoo ready: preset {} | {} tasks | {} params/ckpt | {:.1} MiB fp32 total",
+        zoo.preset.name,
+        zoo.n_tasks(),
+        zoo.pre.numel(),
+        (zoo.n_tasks() * zoo.pre.fp32_bytes()) as f64 / (1024.0 * 1024.0),
+    );
+    Ok(())
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    let cmd = zoo_args(Command::new("tvq quantize", "quantize a zoo's task vectors"))
+        .opt("scheme", "tvq3", "fp32 | fq<b> | tvq<b> | rtvq<bb>o<bo>");
+    let args = cmd.parse(argv)?;
+    let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
+    let rt = Runtime::new()?;
+    let zoo = load_zoo(&args, &rt)?;
+    let st = exp::scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+    let taus = zoo.task_vectors()?;
+    let err: f64 = taus
+        .iter()
+        .zip(&st.taus)
+        .map(|(a, b)| a.l2_dist(b).unwrap_or(f64::NAN))
+        .sum();
+    let fp32 = zoo.n_tasks() * zoo.pre.fp32_bytes();
+    println!(
+        "{}: storage {} bytes ({:.1}% of fp32 {fp32}), total L2 error {err:.4e}, {:.3} effective bits/task",
+        scheme.label(),
+        st.storage_bytes,
+        100.0 * st.storage_bytes as f64 / fp32 as f64,
+        scheme.effective_bits(zoo.n_tasks()),
+    );
+    Ok(())
+}
+
+fn pick_method(name: &str) -> Result<Box<dyn Merger>> {
+    standard_methods()
+        .into_iter()
+        .find(|m| m.name().eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow!(
+                "unknown method {name:?}; available: {}",
+                standard_methods()
+                    .iter()
+                    .map(|m| m.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+}
+
+fn cmd_merge(argv: &[String]) -> Result<()> {
+    let cmd = zoo_args(Command::new("tvq merge", "merge and evaluate"))
+        .opt("scheme", "tvq3", "quantization scheme")
+        .opt("method", "task_arithmetic", "merging method");
+    let args = cmd.parse(argv)?;
+    let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
+    let method = pick_method(args.get_str("method")?)?;
+    let rt = Runtime::new()?;
+    let zoo = load_zoo(&args, &rt)?;
+    let st = exp::scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+    let merged = method.merge(&zoo.pre, &st.taus)?;
+    let accs = exp::classify::eval_merged(&rt, &zoo, &merged)?;
+    for (t, a) in accs.iter().enumerate() {
+        println!("task{t:02}: {a:.1}%");
+    }
+    println!(
+        "{} + {}: avg accuracy {:.1}%",
+        method.name(),
+        scheme.label(),
+        accs.iter().sum::<f64>() / accs.len() as f64
+    );
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cmd = zoo_args(Command::new("tvq eval", "evaluate Individual models"))
+        .opt("scheme", "fp32", "quantization scheme");
+    let args = cmd.parse(argv)?;
+    let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
+    let rt = Runtime::new()?;
+    let zoo = load_zoo(&args, &rt)?;
+    let acc = exp::classify::individual_accuracy(&rt, &zoo, scheme)?;
+    println!("Individual @ {}: avg accuracy {:.1}%", scheme.label(), acc);
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = zoo_args(Command::new("tvq serve", "serving-coordinator load demo"))
+        .opt("scheme", "tvq3", "quantization scheme")
+        .opt("method", "task_arithmetic", "merging method")
+        .opt("requests", "256", "total requests to issue")
+        .opt("clients", "4", "concurrent client threads")
+        .opt("executors", "2", "PJRT executor threads")
+        .opt("max-batch", "32", "max dynamic batch size")
+        .opt("max-delay-ms", "2", "batching deadline (ms)")
+        .opt("tcp", "", "serve over TCP at this address (e.g. 127.0.0.1:7070) and drive the demo load through it");
+    let args = cmd.parse(argv)?;
+    let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
+    let method = pick_method(args.get_str("method")?)?;
+    let rt = Runtime::new()?;
+    let zoo = load_zoo(&args, &rt)?;
+    let st = exp::scheme_taus(&zoo.pre, &zoo.fts, scheme)?;
+    let merged = std::sync::Arc::new(method.merge(&zoo.pre, &st.taus)?);
+    let heads = std::sync::Arc::new(
+        zoo.suite.tasks.iter().map(|t| t.head.clone()).collect::<Vec<_>>(),
+    );
+    let model = ServeModel { preset: zoo.preset, merged, heads };
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch")?,
+        max_delay: std::time::Duration::from_millis(args.get_u64("max-delay-ms")?),
+        queue_cap: 4096,
+        executors: args.get_usize("executors")?,
+    };
+    let server = std::sync::Arc::new(Server::start(cfg, model)?);
+    let n_req = args.get_usize("requests")?;
+    let clients = args.get_usize("clients")?.max(1);
+    let per = n_req / clients;
+    // Optional TCP front-end: clients go over the wire instead of the
+    // in-process API (same batching/metrics path underneath).
+    let tcp_addr = args.get("tcp").filter(|a| !a.is_empty()).map(String::from);
+    let front = match &tcp_addr {
+        Some(addr) => {
+            let f = tvq::coordinator::TcpFront::bind(addr, server.clone(), clients + 2)?;
+            println!("TCP front-end listening on {}", f.addr());
+            Some(f)
+        }
+        None => None,
+    };
+    println!(
+        "serving {} x {} requests through {} executors{}...",
+        clients,
+        per,
+        cfg.executors,
+        if front.is_some() { " over TCP" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let suite_tasks = zoo.suite.tasks.len();
+        let preset = zoo.preset;
+        let tcp = front.as_ref().map(|f| f.addr());
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            use std::io::{BufRead, BufReader, Write};
+            let mut rng = tvq::util::rng::Rng::new(0x5E4E + c as u64);
+            let mut conn = match tcp {
+                Some(addr) => {
+                    let stream = std::net::TcpStream::connect(addr)?;
+                    let reader = BufReader::new(stream.try_clone()?);
+                    Some((stream, reader))
+                }
+                None => None,
+            };
+            for _ in 0..per {
+                let task = rng.below(suite_tasks);
+                let x = Tensor::randn(&[preset.tokens, preset.token_dim], 1.0, &mut rng);
+                match conn.as_mut() {
+                    Some((stream, reader)) => {
+                        let xs: Vec<String> =
+                            x.data().iter().map(|v| format!("{v}")).collect();
+                        writeln!(stream, r#"{{"task": {task}, "x": [{}]}}"#, xs.join(","))?;
+                        let mut reply = String::new();
+                        reader.read_line(&mut reply)?;
+                        anyhow::ensure!(reply.contains("logits"), "bad reply: {reply}");
+                    }
+                    None => {
+                        let _ = s.infer(task, &x)?;
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("client panicked"))??;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!("{}", m.summary());
+    println!(
+        "throughput: {:.0} req/s over {:.2}s",
+        m.completed as f64 / dt,
+        dt
+    );
+    Ok(())
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tvq experiment", "regenerate a paper table/figure");
+    let args = cmd.parse(argv)?;
+    let Some(id) = args.positional.first() else {
+        bail!("usage: tvq experiment <id>; ids: {}", exp::EXPERIMENT_IDS.join(", "));
+    };
+    exp::run_experiment(id)?;
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("presets: vit_s, vit_m, vit_l (+ dense conv trunk)");
+    println!("experiments: {}", exp::EXPERIMENT_IDS.join(", "));
+    match Runtime::new().and_then(|rt| rt.available()) {
+        Ok(mut names) => {
+            names.sort();
+            println!("artifacts ({}):", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

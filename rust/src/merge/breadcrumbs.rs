@@ -1,0 +1,123 @@
+//! Model Breadcrumbs (Davari & Belilovsky, ECCV 2024): layer-wise masking
+//! that removes both extreme outliers (top beta fraction by magnitude) and
+//! negligible values (bottom gamma fraction) from each task vector before
+//! summing.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Breadcrumbs {
+    pub lambda: f32,
+    /// Fraction of largest-magnitude weights dropped per tensor.
+    pub beta: f64,
+    /// Fraction of smallest-magnitude weights dropped per tensor.
+    pub gamma: f64,
+}
+
+impl Default for Breadcrumbs {
+    fn default() -> Self {
+        Self { lambda: 0.3, beta: 0.01, gamma: 0.85 }
+    }
+}
+
+impl Breadcrumbs {
+    /// Keep only magnitudes inside (gamma-quantile, (1-beta)-quantile].
+    fn mask(&self, tau: &Checkpoint) -> Checkpoint {
+        let mut out = Checkpoint::new();
+        for (name, t) in tau.iter() {
+            let lo = t.abs_quantile(self.gamma);
+            let hi = t.abs_quantile(1.0 - self.beta);
+            out.insert(
+                name,
+                t.map(|x| {
+                    let a = x.abs();
+                    if a > lo && a <= hi {
+                        x
+                    } else {
+                        0.0
+                    }
+                }),
+            );
+        }
+        out
+    }
+}
+
+impl Merger for Breadcrumbs {
+    fn name(&self) -> &'static str {
+        "breadcrumbs"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        let mut out = pre.clone();
+        for tau in taus {
+            out.axpy(self.lambda, &self.mask(tau))?;
+        }
+        Ok(MergedModel::Shared(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+
+    #[test]
+    fn mask_drops_outliers_and_small_values() {
+        let (_, taus) = fixture(1, 14);
+        let bc = Breadcrumbs { lambda: 0.3, beta: 0.05, gamma: 0.5 };
+        let masked = bc.mask(&taus[0]);
+        for (name, t) in masked.iter() {
+            let src = taus[0].get(name).unwrap();
+            // Sparsity should be roughly gamma + beta.
+            let sp = t.sparsity();
+            assert!(
+                sp > 0.4 && sp < 0.75,
+                "{name}: sparsity {sp} out of expected band"
+            );
+            // Largest original magnitude must be gone.
+            let (_, hi_src) = src.map(|x| x.abs()).min_max();
+            let (_, hi_out) = t.map(|x| x.abs()).min_max();
+            assert!(hi_out < hi_src);
+        }
+    }
+
+    #[test]
+    fn beta_zero_gamma_zero_is_task_arithmetic() {
+        let (pre, taus) = fixture(2, 15);
+        let bc = Breadcrumbs { lambda: 0.3, beta: 0.0, gamma: 0.0 };
+        let m = bc.merge(&pre, &taus).unwrap();
+        let ta = super::super::TaskArithmetic::new(0.3)
+            .merge(&pre, &taus)
+            .unwrap();
+        // gamma=0 drops only values with |x| <= min magnitude... close to
+        // none for continuous data except exact min; allow tiny diff.
+        let d = m.for_task(0).l2_dist(ta.for_task(0)).unwrap();
+        let norm = ta.for_task(0).sub(&pre).unwrap();
+        let scale: f64 = norm.iter().map(|(_, t)| t.l2_norm()).sum();
+        assert!(d < 0.05 * scale.max(1e-9), "d={d}");
+    }
+
+    #[test]
+    fn masked_delta_is_subset_of_full_delta() {
+        let (pre, taus) = fixture(3, 16);
+        let bc = Breadcrumbs::default();
+        let m = bc.merge(&pre, &taus).unwrap();
+        let delta = m.for_task(0).sub(&pre).unwrap();
+        // Every nonzero coordinate of the merged delta must be explainable
+        // by the sum of masked taus (trivially true by construction; check
+        // the magnitude is bounded by sum of |tau| coordinates).
+        for (name, t) in delta.iter() {
+            for i in 0..t.numel() {
+                let bound: f32 = taus
+                    .iter()
+                    .map(|tau| tau.get(name).unwrap().data()[i].abs())
+                    .sum();
+                assert!(t.data()[i].abs() <= bc.lambda * bound + 1e-6);
+            }
+        }
+    }
+}

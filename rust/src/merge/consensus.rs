@@ -1,0 +1,133 @@
+//! Consensus Task Arithmetic (Wang et al., ICML 2024): TALL masks localize
+//! per-task information; weights used by >= k tasks ("general") are kept,
+//! selfish/catastrophic weights are dropped from the merged task vector.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ConsensusTa {
+    /// Final task-arithmetic coefficient.
+    pub lambda: f32,
+    /// TALL-mask hyperparameter: tau_t is "localized" where
+    /// |tau_t| >= lambda_tall * |tau_mtl - tau_t|.
+    pub lambda_tall: f32,
+    /// Minimum number of tasks that must claim a weight for consensus.
+    pub k: usize,
+}
+
+impl Default for ConsensusTa {
+    fn default() -> Self {
+        // lambda_tall = 0.2 sits at the permissive end of the TALL-mask
+        // range the paper sweeps ([0.2, 0.6]); with many near-orthogonal
+        // task vectors |tau_mtl - tau_t| ~ sqrt(T-1)|tau_t|, so stricter
+        // thresholds empty the consensus mask and collapse to theta_pre.
+        Self { lambda: 0.3, lambda_tall: 0.2, k: 2 }
+    }
+}
+
+impl Merger for ConsensusTa {
+    fn name(&self) -> &'static str {
+        "consensus_ta"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        if taus.is_empty() {
+            return Ok(MergedModel::Shared(pre.clone()));
+        }
+        // tau_mtl = sum_t tau_t
+        let mut tau_mtl = taus[0].clone();
+        for tau in &taus[1..] {
+            tau_mtl.axpy(1.0, tau)?;
+        }
+        let mut out = pre.clone();
+        for (name, out_t) in out.iter_mut() {
+            let mtl = tau_mtl.get(name)?;
+            let n = mtl.numel();
+            // Count TALL-mask votes per weight.
+            let mut votes = vec![0u32; n];
+            for tau in taus {
+                let t = tau.get(name)?;
+                for i in 0..n {
+                    let ti = t.data()[i];
+                    let rest = mtl.data()[i] - ti;
+                    if ti.abs() >= self.lambda_tall * rest.abs() {
+                        votes[i] += 1;
+                    }
+                }
+            }
+            let dst = out_t.data_mut();
+            for i in 0..n {
+                if votes[i] >= self.k as u32 {
+                    dst[i] += self.lambda * mtl.data()[i];
+                }
+            }
+        }
+        Ok(MergedModel::Shared(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn empty_is_identity() {
+        let (pre, _) = fixture(0, 10);
+        let m = ConsensusTa::default().merge(&pre, &[]).unwrap();
+        assert_eq!(m.for_task(0), &pre);
+    }
+
+    #[test]
+    fn consensus_keeps_shared_weights_drops_selfish() {
+        // Build 3 tasks over a 4-weight tensor:
+        //  w0: all tasks agree (shared) -> kept
+        //  w1: only task 0 uses it (selfish) -> dropped with k=2
+        //  w2, w3: unused.
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::zeros(&[4]));
+        let mk = |vals: [f32; 4]| {
+            let mut c = Checkpoint::new();
+            c.insert("w", Tensor::from_vec(vals.to_vec()));
+            c
+        };
+        let taus = vec![
+            mk([1.0, 2.0, 0.0, 0.0]),
+            mk([1.0, 0.0, 0.0, 0.0]),
+            mk([1.0, 0.0, 0.0, 0.0]),
+        ];
+        let m = ConsensusTa { lambda: 1.0, lambda_tall: 0.4, k: 2 }
+            .merge(&pre, &taus)
+            .unwrap();
+        let out = m.for_task(0).get("w").unwrap();
+        // w0: each tau=1, rest=2 -> 1 >= 0.4*2 -> all 3 vote -> kept (sum=3)
+        assert!((out.data()[0] - 3.0).abs() < 1e-6);
+        // w1: only task0 votes (2 >= 0) -> 1 vote < k=2 -> dropped
+        assert_eq!(out.data()[1], 0.0);
+        assert_eq!(out.data()[2], 0.0);
+    }
+
+    #[test]
+    fn merged_stays_close_to_task_arithmetic_subset() {
+        // Consensus output delta must be a masked version of lambda*tau_mtl:
+        // each coordinate either matches TA's delta or is zero.
+        let (pre, taus) = fixture(4, 11);
+        let cta = ConsensusTa::default();
+        let m = cta.merge(&pre, &taus).unwrap();
+        let ta = super::super::TaskArithmetic::new(cta.lambda)
+            .merge(&pre, &taus)
+            .unwrap();
+        let d_c = m.for_task(0).sub(&pre).unwrap();
+        let d_t = ta.for_task(0).sub(&pre).unwrap();
+        for (name, t) in d_c.iter() {
+            let full = d_t.get(name).unwrap();
+            for (a, b) in t.data().iter().zip(full.data()) {
+                assert!(*a == 0.0 || (a - b).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! DARE (Drop-And-REscale, Yu et al., ICML 2024) — the sparsification
+//! baseline the paper's related-work section cites alongside Ties: drop a
+//! random fraction p of each task vector's entries and rescale the
+//! survivors by 1/(1-p), keeping the merge an unbiased estimator of task
+//! arithmetic while decimating interference.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Dare {
+    /// Task-arithmetic coefficient applied after drop/rescale.
+    pub lambda: f32,
+    /// Fraction of entries dropped (the DARE paper sweeps up to 0.99).
+    pub drop_rate: f32,
+    /// Seed for the drop masks (deterministic merges).
+    pub seed: u64,
+}
+
+impl Default for Dare {
+    fn default() -> Self {
+        Self { lambda: 0.3, drop_rate: 0.9, seed: 0xDA7E }
+    }
+}
+
+impl Dare {
+    pub fn new(lambda: f32, drop_rate: f32, seed: u64) -> Self {
+        Self { lambda, drop_rate, seed }
+    }
+
+    /// Drop-and-rescale one task vector.
+    fn drop_rescale(&self, tau: &Checkpoint, rng: &mut Rng) -> Checkpoint {
+        let keep = 1.0 - self.drop_rate;
+        let rescale = if keep > 0.0 { 1.0 / keep } else { 0.0 };
+        let mut out = tau.clone();
+        for (_, t) in out.iter_mut() {
+            for v in t.data_mut() {
+                if rng.f32() < self.drop_rate {
+                    *v = 0.0;
+                } else {
+                    *v *= rescale;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Merger for Dare {
+    fn name(&self) -> &'static str {
+        "dare"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        let mut merged = pre.clone();
+        let mut rng = Rng::new(self.seed);
+        for (t, tau) in taus.iter().enumerate() {
+            let mut fork = rng.fork(t as u64);
+            let sparse = self.drop_rescale(tau, &mut fork);
+            merged.axpy(self.lambda, &sparse)?;
+        }
+        Ok(MergedModel::Shared(merged))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+
+    #[test]
+    fn zero_drop_equals_task_arithmetic() {
+        let (pre, taus) = fixture(3, 21);
+        let dare = Dare::new(0.3, 0.0, 1);
+        let ta = super::super::TaskArithmetic::new(0.3);
+        let a = dare.merge(&pre, &taus).unwrap();
+        let b = ta.merge(&pre, &taus).unwrap();
+        assert!(a.for_task(0).l2_dist(b.for_task(0)).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn drop_rate_controls_sparsity() {
+        let (_, taus) = fixture(1, 22);
+        let dare = Dare::new(0.3, 0.9, 2);
+        let mut rng = Rng::new(0);
+        let sparse = dare.drop_rescale(&taus[0], &mut rng);
+        let total: usize = sparse.numel();
+        let zeros: usize = sparse
+            .iter()
+            .map(|(_, t)| t.data().iter().filter(|&&v| v == 0.0).count())
+            .sum();
+        let frac = zeros as f64 / total as f64;
+        assert!((frac - 0.9).abs() < 0.05, "sparsity {frac} far from 0.9");
+    }
+
+    #[test]
+    fn rescale_preserves_expected_norm() {
+        // E[drop_rescale(tau)] = tau: the mean over many seeds converges.
+        let (_, taus) = fixture(1, 23);
+        let dare = Dare::new(0.3, 0.5, 3);
+        let mut acc = taus[0].scale(0.0);
+        let n = 64;
+        for s in 0..n {
+            let mut rng = Rng::new(s);
+            acc.axpy(1.0 / n as f32, &dare.drop_rescale(&taus[0], &mut rng))
+                .unwrap();
+        }
+        let rel = acc.l2_dist(&taus[0]).unwrap()
+            / taus[0].l2_dist(&taus[0].scale(0.0)).unwrap();
+        assert!(rel < 0.25, "mean of drop_rescale should approach tau (rel {rel})");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (pre, taus) = fixture(2, 24);
+        let a = Dare::default().merge(&pre, &taus).unwrap();
+        let b = Dare::default().merge(&pre, &taus).unwrap();
+        assert_eq!(a.for_task(0), b.for_task(0));
+    }
+}

@@ -1,0 +1,188 @@
+//! EMR-Merging (Huang et al., NeurIPS 2024): Elect a unified task vector,
+//! then per-task binary Masks and Rescaling factors modulate it at
+//! inference — tuning-free, but the output is a per-task model family.
+//!
+//! Elect: per parameter, the unified sign is the sign of sum_t tau_t; the
+//! unified magnitude is the maximum |tau_t| among sign-agreeing tasks.
+//! Mask:  M_t = 1[ sign(tau_t) == sign(tau_uni) && tau_t != 0 ].
+//! Rescale: lambda_t = sum|tau_t| / sum|M_t * tau_uni|.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EmrMerging;
+
+/// Intermediate representation exposing EMR's storage story (the unified
+/// vector is shared; masks are 1 bit/param/task; rescales are scalars).
+#[derive(Clone, Debug)]
+pub struct EmrArtifacts {
+    pub tau_uni: Checkpoint,
+    /// Per task: bit masks stored as Vec<bool> per tensor name order.
+    pub masks: Vec<Vec<bool>>,
+    pub rescales: Vec<f32>,
+}
+
+impl EmrMerging {
+    /// Compute the elect/mask/rescale decomposition.
+    pub fn artifacts(&self, taus: &[Checkpoint]) -> Result<EmrArtifacts> {
+        anyhow::ensure!(!taus.is_empty(), "EMR needs at least one task");
+        // Elect the unified task vector.
+        let mut tau_uni = taus[0].scale(0.0);
+        for (name, uni_t) in tau_uni.iter_mut() {
+            let n = uni_t.numel();
+            let dst = uni_t.data_mut();
+            for i in 0..n {
+                let mut sum = 0.0f64;
+                for tau in taus {
+                    sum += tau.get(name)?.data()[i] as f64;
+                }
+                let sign = if sum >= 0.0 { 1.0f32 } else { -1.0f32 };
+                let mut mag = 0.0f32;
+                for tau in taus {
+                    let v = tau.get(name)?.data()[i];
+                    if v.signum() == sign && v.abs() > mag {
+                        mag = v.abs();
+                    }
+                }
+                dst[i] = sign * mag;
+            }
+        }
+        // Per-task masks and rescales.
+        let mut masks = Vec::with_capacity(taus.len());
+        let mut rescales = Vec::with_capacity(taus.len());
+        for tau in taus {
+            let mut mask = Vec::with_capacity(tau.numel());
+            let mut sum_tau = 0.0f64;
+            let mut sum_masked_uni = 0.0f64;
+            for (name, t) in tau.iter() {
+                let uni = tau_uni.get(name)?;
+                for i in 0..t.numel() {
+                    let v = t.data()[i];
+                    let u = uni.data()[i];
+                    let m = v != 0.0 && v.signum() == u.signum();
+                    mask.push(m);
+                    sum_tau += v.abs() as f64;
+                    if m {
+                        sum_masked_uni += u.abs() as f64;
+                    }
+                }
+            }
+            let rescale = if sum_masked_uni > 0.0 {
+                (sum_tau / sum_masked_uni) as f32
+            } else {
+                1.0
+            };
+            masks.push(mask);
+            rescales.push(rescale);
+        }
+        Ok(EmrArtifacts { tau_uni, masks, rescales })
+    }
+
+    /// Reconstruct the model for task t: pre + lambda_t * (M_t ∘ tau_uni).
+    pub fn model_for_task(
+        &self,
+        pre: &Checkpoint,
+        art: &EmrArtifacts,
+        t: usize,
+    ) -> Result<Checkpoint> {
+        let mut out = pre.clone();
+        let mask = &art.masks[t];
+        let lam = art.rescales[t];
+        let mut off = 0usize;
+        for (name, out_t) in out.iter_mut() {
+            let uni = art.tau_uni.get(name)?;
+            let dst = out_t.data_mut();
+            for i in 0..dst.len() {
+                if mask[off + i] {
+                    dst[i] += lam * uni.data()[i];
+                }
+            }
+            off += dst.len();
+        }
+        Ok(out)
+    }
+}
+
+impl Merger for EmrMerging {
+    fn name(&self) -> &'static str {
+        "emr_merging"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        let art = self.artifacts(taus)?;
+        let models = (0..taus.len())
+            .map(|t| self.model_for_task(pre, &art, t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MergedModel::PerTask(models))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn single_task_mask_recovers_finetuned_closely() {
+        // With one task, tau_uni == tau, mask is all-nonzero entries,
+        // rescale == 1 -> model == fine-tuned checkpoint.
+        let (pre, taus) = fixture(1, 17);
+        let emr = EmrMerging;
+        let m = emr.merge(&pre, &taus[..1]).unwrap();
+        let ft = pre.add(&taus[0]).unwrap();
+        assert!(m.for_task(0).l2_dist(&ft).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn unified_magnitude_is_max_of_agreeing() {
+        let mk = |vals: [f32; 3]| {
+            let mut c = Checkpoint::new();
+            c.insert("w", Tensor::from_vec(vals.to_vec()));
+            c
+        };
+        let taus = vec![mk([1.0, -0.5, 0.2]), mk([3.0, -1.5, -0.4])];
+        let art = EmrMerging.artifacts(&taus).unwrap();
+        let uni = art.tau_uni.get("w").unwrap();
+        // w0: sum=4>0, max agreeing = 3; w1: sum=-2<0 -> -1.5;
+        // w2: sum=-0.2<0 -> -0.4
+        assert_eq!(uni.data(), &[3.0, -1.5, -0.4]);
+    }
+
+    #[test]
+    fn per_task_models_differ() {
+        let (pre, taus) = fixture(3, 18);
+        let m = EmrMerging.merge(&pre, &taus).unwrap();
+        assert_eq!(m.n_variants(), 3);
+        assert!(m.for_task(0).l2_dist(m.for_task(1)).unwrap() > 1e-6);
+    }
+
+    #[test]
+    fn rescale_restores_l1_mass() {
+        let (_, taus) = fixture(4, 19);
+        let art = EmrMerging.artifacts(&taus).unwrap();
+        for (t, tau) in taus.iter().enumerate() {
+            let mut sum_tau = 0.0f64;
+            for (_, x) in tau.iter() {
+                sum_tau += x.data().iter().map(|v| v.abs() as f64).sum::<f64>();
+            }
+            // ||lambda_t * M_t o tau_uni||_1 == ||tau_t||_1 by construction.
+            let mut off = 0usize;
+            let mut sum_masked = 0.0f64;
+            for (name, x) in tau.iter() {
+                let uni = art.tau_uni.get(name).unwrap();
+                for i in 0..x.numel() {
+                    if art.masks[t][off + i] {
+                        sum_masked += uni.data()[i].abs() as f64;
+                    }
+                }
+                off += x.numel();
+            }
+            let lhs = art.rescales[t] as f64 * sum_masked;
+            assert!((lhs - sum_tau).abs() / sum_tau < 1e-4);
+        }
+    }
+}

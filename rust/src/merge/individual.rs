@@ -1,0 +1,42 @@
+//! Individual baseline: no merging — each task keeps its own fine-tuned
+//! model (pre + tau_t). The upper bound on per-task accuracy and the
+//! memory-cost motivation for everything else.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Individual;
+
+impl Merger for Individual {
+    fn name(&self) -> &'static str {
+        "individual"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        let models = taus
+            .iter()
+            .map(|tau| pre.add(tau))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MergedModel::PerTask(models))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+
+    #[test]
+    fn reconstructs_each_finetuned_model() {
+        let (pre, taus) = fixture(3, 20);
+        let m = Individual.merge(&pre, &taus).unwrap();
+        assert_eq!(m.n_variants(), 3);
+        for (t, tau) in taus.iter().enumerate() {
+            let ft = pre.add(tau).unwrap();
+            assert!(m.for_task(t).l2_dist(&ft).unwrap() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! LiNeS (Wang et al., ICLR 2025): layer-increasing network scaling.
+//! Shallow layers keep small coefficients (protecting general features),
+//! deep layers get larger ones: lambda_l = alpha + beta * l / (L - 1).
+
+use anyhow::Result;
+
+use super::{layer_index, MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LiNeS {
+    /// Coefficient at the first layer.
+    pub alpha: f32,
+    /// Added linearly up to the last layer.
+    pub beta: f32,
+}
+
+impl Default for LiNeS {
+    fn default() -> Self {
+        Self { alpha: 0.1, beta: 0.4 }
+    }
+}
+
+impl LiNeS {
+    pub fn new(alpha: f32, beta: f32) -> Self {
+        Self { alpha, beta }
+    }
+
+    /// Per-tensor coefficient given the model's max layer index.
+    fn coeff(&self, name: &str, max_layer: usize) -> f32 {
+        let l = match layer_index(name) {
+            usize::MAX => max_layer,
+            l => l,
+        };
+        if max_layer == 0 {
+            self.alpha
+        } else {
+            self.alpha + self.beta * l as f32 / max_layer as f32
+        }
+    }
+}
+
+impl Merger for LiNeS {
+    fn name(&self) -> &'static str {
+        "lines"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        // Establish model depth from the parameter names.
+        let max_layer = pre
+            .names()
+            .map(layer_index)
+            .filter(|&l| l != usize::MAX)
+            .max()
+            .unwrap_or(0)
+            + 1; // ln_f sits one past the deepest block
+        let mut out = pre.clone();
+        for tau in taus {
+            for (name, t) in out.iter_mut() {
+                let c = self.coeff(name, max_layer);
+                t.axpy(c, tau.get(name)?)?;
+            }
+        }
+        Ok(MergedModel::Shared(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+
+    #[test]
+    fn coefficients_increase_with_depth() {
+        let l = LiNeS::new(0.1, 0.4);
+        let c_embed = l.coeff("embed/w", 3);
+        let c_blk0 = l.coeff("blk00/w", 3);
+        let c_blk1 = l.coeff("blk01/w", 3);
+        let c_lnf = l.coeff("ln_f/g", 3);
+        assert!(c_embed < c_blk0 && c_blk0 < c_blk1 && c_blk1 < c_lnf);
+        assert!((c_embed - 0.1).abs() < 1e-6);
+        assert!((c_lnf - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beta_zero_equals_task_arithmetic() {
+        let (pre, taus) = fixture(3, 8);
+        let m_lines = LiNeS::new(0.3, 0.0).merge(&pre, &taus).unwrap();
+        let m_ta = super::super::TaskArithmetic::new(0.3)
+            .merge(&pre, &taus)
+            .unwrap();
+        assert!(m_lines.for_task(0).l2_dist(m_ta.for_task(0)).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn shallow_layers_move_less() {
+        let (pre, taus) = fixture(2, 9);
+        let m = LiNeS::new(0.0, 1.0).merge(&pre, &taus).unwrap();
+        let delta = m.for_task(0).sub(&pre).unwrap();
+        // embed gets coefficient 0 -> unchanged
+        assert_eq!(delta.get("embed/w").unwrap().l2_norm(), 0.0);
+        // ln_f gets full coefficient -> moved
+        assert!(delta.get("ln_f/g").unwrap().l2_norm() > 0.0);
+    }
+}

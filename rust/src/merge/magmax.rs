@@ -1,0 +1,94 @@
+//! MagMax (Marczak et al., ECCV 2024): per-parameter maximum-magnitude
+//! selection across task vectors — the weight that changed most wins.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MagMax {
+    pub lambda: f32,
+}
+
+impl Default for MagMax {
+    fn default() -> Self {
+        // 0.5: max-magnitude election yields a single-task-scale vector;
+        // full strength (1.0) over-applies it across dissimilar tasks.
+        Self { lambda: 0.5 }
+    }
+}
+
+impl Merger for MagMax {
+    fn name(&self) -> &'static str {
+        "magmax"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        if taus.is_empty() {
+            return Ok(MergedModel::Shared(pre.clone()));
+        }
+        let mut out = pre.clone();
+        for (name, out_t) in out.iter_mut() {
+            let n = out_t.numel();
+            let dst = out_t.data_mut();
+            for i in 0..n {
+                let mut best = 0.0f32;
+                for tau in taus {
+                    let v = tau.get(name)?.data()[i];
+                    if v.abs() > best.abs() {
+                        best = v;
+                    }
+                }
+                dst[i] += self.lambda * best;
+            }
+        }
+        Ok(MergedModel::Shared(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn picks_largest_magnitude_per_weight() {
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::zeros(&[3]));
+        let mk = |vals: [f32; 3]| {
+            let mut c = Checkpoint::new();
+            c.insert("w", Tensor::from_vec(vals.to_vec()));
+            c
+        };
+        let taus = vec![mk([0.5, -2.0, 0.1]), mk([-1.0, 1.0, 0.05])];
+        let m = MagMax { lambda: 1.0 }.merge(&pre, &taus).unwrap();
+        assert_eq!(m.for_task(0).get("w").unwrap().data(), &[-1.0, -2.0, 0.1]);
+    }
+
+    #[test]
+    fn single_task_recovers_finetuned() {
+        let (pre, taus) = fixture(1, 12);
+        // At lambda = 1 a single task reconstructs the fine-tuned model.
+        let m = MagMax { lambda: 1.0 }.merge(&pre, &taus[..1]).unwrap();
+        let ft = pre.add(&taus[0]).unwrap();
+        assert!(m.for_task(0).l2_dist(&ft).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn merged_delta_magnitude_bounded_by_max_tau() {
+        let (pre, taus) = fixture(4, 13);
+        let m = MagMax::default().merge(&pre, &taus).unwrap();
+        let delta = m.for_task(0).sub(&pre).unwrap();
+        for (name, t) in delta.iter() {
+            for i in 0..t.numel() {
+                let max_mag = taus
+                    .iter()
+                    .map(|tau| tau.get(name).unwrap().data()[i].abs())
+                    .fold(0.0f32, f32::max);
+                assert!(t.data()[i].abs() <= max_mag + 1e-6);
+            }
+        }
+    }
+}

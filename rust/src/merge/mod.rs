@@ -1,0 +1,170 @@
+//! Model-merging algorithms (the frameworks the paper's quantization plugs
+//! into — Appendix A.2 reimplements all of them, and so do we).
+//!
+//! Every method consumes the pre-trained checkpoint plus the task vectors
+//! tau_t = theta_ft^t - theta_pre (full precision or dequantized — the
+//! paper's point is that quantization is transparent to the merger) and
+//! produces a [`MergedModel`].
+//!
+//! | method | module | output |
+//! |---|---|---|
+//! | Individual            | [`individual`]      | per-task |
+//! | Task Arithmetic [23]  | [`task_arithmetic`] | shared |
+//! | Ties-Merging [55]     | [`ties`]            | shared |
+//! | LiNeS [49]            | [`lines`]           | shared |
+//! | Consensus TA [48]     | [`consensus`]       | shared |
+//! | MagMax [34]           | [`magmax`]          | shared |
+//! | Breadcrumbs [12]      | [`breadcrumbs`]     | shared |
+//! | EMR-Merging [20]      | [`emr`]             | per-task |
+//! | AdaMerging [58]       | [`adamerging`]      | shared (test-time opt) |
+
+pub mod adamerging;
+pub mod breadcrumbs;
+pub mod consensus;
+pub mod dare;
+pub mod emr;
+pub mod individual;
+pub mod lines;
+pub mod magmax;
+pub mod task_arithmetic;
+pub mod ties;
+
+pub use adamerging::AdaMerging;
+pub use breadcrumbs::Breadcrumbs;
+pub use consensus::ConsensusTa;
+pub use dare::Dare;
+pub use emr::EmrMerging;
+pub use individual::Individual;
+pub use lines::LiNeS;
+pub use magmax::MagMax;
+pub use task_arithmetic::TaskArithmetic;
+pub use ties::Ties;
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+
+/// The result of merging: either one shared multi-task model or a
+/// per-task family (EMR-style mask-modulated models, or Individual).
+#[derive(Clone, Debug)]
+pub enum MergedModel {
+    Shared(Checkpoint),
+    PerTask(Vec<Checkpoint>),
+}
+
+impl MergedModel {
+    /// The model to evaluate on task `t`.
+    pub fn for_task(&self, t: usize) -> &Checkpoint {
+        match self {
+            MergedModel::Shared(ck) => ck,
+            MergedModel::PerTask(cks) => &cks[t],
+        }
+    }
+
+    pub fn n_variants(&self) -> usize {
+        match self {
+            MergedModel::Shared(_) => 1,
+            MergedModel::PerTask(cks) => cks.len(),
+        }
+    }
+}
+
+/// A merging algorithm over task vectors.
+pub trait Merger {
+    fn name(&self) -> &'static str;
+
+    /// Merge task vectors into a multi-task model.
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel>;
+}
+
+/// Layer index of a parameter name under the ViT naming scheme
+/// (`embed/*`, `pos` -> 0; `blkNN/*` -> NN+1; `ln_f/*` -> depth+1;
+/// anything else -> 0). Used by LiNeS' depth-linear scaling.
+pub fn layer_index(name: &str) -> usize {
+    if let Some(rest) = name.strip_prefix("blk") {
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if let Ok(i) = digits.parse::<usize>() {
+            return i + 1;
+        }
+    }
+    if name.starts_with("ln_f") {
+        return usize::MAX; // resolved against max depth by the caller
+    }
+    0
+}
+
+/// The default merging-method lineup used by the classification tables
+/// (Tables 1-2): everything except AdaMerging, which needs a test-time
+/// entropy oracle and is driven separately by the experiment harness.
+pub fn standard_methods() -> Vec<Box<dyn Merger>> {
+    vec![
+        Box::new(TaskArithmetic::default()),
+        Box::new(Ties::default()),
+        Box::new(LiNeS::default()),
+        Box::new(ConsensusTa::default()),
+        Box::new(EmrMerging::default()),
+    ]
+}
+
+/// The dense-prediction lineup (Table 3).
+pub fn dense_methods() -> Vec<Box<dyn Merger>> {
+    vec![
+        Box::new(TaskArithmetic::default()),
+        Box::new(Ties::default()),
+        Box::new(MagMax::default()),
+        Box::new(Breadcrumbs::default()),
+        Box::new(EmrMerging::default()),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Small synthetic (pre, taus) fixture shared by merge-method tests.
+    pub fn fixture(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+        let mut rng = Rng::new(seed);
+        let mut pre = Checkpoint::new();
+        pre.insert("blk00/w", Tensor::randn(&[16, 8], 0.3, &mut rng));
+        pre.insert("blk01/w", Tensor::randn(&[16, 8], 0.3, &mut rng));
+        pre.insert("embed/w", Tensor::randn(&[4, 16], 0.3, &mut rng));
+        pre.insert("ln_f/g", Tensor::randn(&[16], 0.3, &mut rng));
+        let taus = (0..n_tasks)
+            .map(|_| {
+                let mut tau = Checkpoint::new();
+                for (name, t) in pre.iter() {
+                    tau.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
+                }
+                tau
+            })
+            .collect();
+        (pre, taus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_index_parses_names() {
+        assert_eq!(layer_index("embed/w"), 0);
+        assert_eq!(layer_index("pos"), 0);
+        assert_eq!(layer_index("blk00/attn/wq"), 1);
+        assert_eq!(layer_index("blk07/mlp/w1"), 8);
+        assert_eq!(layer_index("ln_f/g"), usize::MAX);
+    }
+
+    #[test]
+    fn merged_model_for_task() {
+        let (pre, taus) = testutil::fixture(2, 0);
+        let shared = MergedModel::Shared(pre.clone());
+        assert_eq!(shared.n_variants(), 1);
+        assert_eq!(shared.for_task(0), shared.for_task(1));
+        let per = MergedModel::PerTask(taus.clone());
+        assert_eq!(per.n_variants(), 2);
+        assert_eq!(per.for_task(1), &taus[1]);
+    }
+}

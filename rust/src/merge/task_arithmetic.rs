@@ -1,0 +1,73 @@
+//! Task Arithmetic (Ilharco et al., ICLR 2023) — the foundational method:
+//! theta_MTL = theta_pre + lambda * sum_t tau_t with a single shared
+//! coefficient.
+
+use anyhow::Result;
+
+use super::{MergedModel, Merger};
+use crate::checkpoint::Checkpoint;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TaskArithmetic {
+    pub lambda: f32,
+}
+
+impl Default for TaskArithmetic {
+    fn default() -> Self {
+        // lambda = 0.3 is the standard validated value for 8-task ViT
+        // suites (paper Section 3.1 protocol).
+        Self { lambda: 0.3 }
+    }
+}
+
+impl TaskArithmetic {
+    pub fn new(lambda: f32) -> Self {
+        Self { lambda }
+    }
+}
+
+impl Merger for TaskArithmetic {
+    fn name(&self) -> &'static str {
+        "task_arithmetic"
+    }
+
+    fn merge(&self, pre: &Checkpoint, taus: &[Checkpoint]) -> Result<MergedModel> {
+        let mut out = pre.clone();
+        for tau in taus {
+            out.axpy(self.lambda, tau)?;
+        }
+        Ok(MergedModel::Shared(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::fixture;
+    use super::*;
+
+    #[test]
+    fn zero_tasks_returns_pre() {
+        let (pre, _) = fixture(0, 1);
+        let m = TaskArithmetic::default().merge(&pre, &[]).unwrap();
+        assert_eq!(m.for_task(0), &pre);
+    }
+
+    #[test]
+    fn single_task_lambda_one_recovers_finetuned() {
+        let (pre, taus) = fixture(1, 2);
+        let m = TaskArithmetic::new(1.0).merge(&pre, &taus).unwrap();
+        let ft = pre.add(&taus[0]).unwrap();
+        assert!(m.for_task(0).l2_dist(&ft).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn linearity_in_lambda() {
+        let (pre, taus) = fixture(3, 3);
+        let m1 = TaskArithmetic::new(0.2).merge(&pre, &taus).unwrap();
+        let m2 = TaskArithmetic::new(0.4).merge(&pre, &taus).unwrap();
+        // (m2 - pre) == 2 * (m1 - pre)
+        let d1 = m1.for_task(0).sub(&pre).unwrap();
+        let d2 = m2.for_task(0).sub(&pre).unwrap();
+        assert!(d2.l2_dist(&d1.scale(2.0)).unwrap() < 1e-5);
+    }
+}

@@ -1,0 +1,193 @@
+//! Asymmetric affine quantization (paper Eq. 1-2).
+//!
+//! Mirrors `python/compile/kernels/ref.py` bit-for-bit (same degenerate-
+//! range handling, same rounding), so codes produced here are exchangeable
+//! with the AOT Pallas quantize artifact — an equivalence the integration
+//! tests assert through PJRT.
+
+use anyhow::{bail, Result};
+
+/// Scale / zero-point pair mapping [min, max] onto [0, 2^bits - 1].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AffineParams {
+    pub scale: f32,
+    pub zp: f32,
+    pub bits: u8,
+}
+
+impl AffineParams {
+    /// Maximum code value (2^bits - 1).
+    #[inline]
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Compute parameters from a value range (Eq. 1).
+    ///
+    /// Degenerate range (constant tensor c): scale = |c| (or 1 if c == 0)
+    /// so the constant reconstructs exactly — matches ref.py.
+    pub fn from_range(min: f32, max: f32, bits: u8) -> Result<Self> {
+        if !(1..=8).contains(&bits) {
+            bail!("bits must be in 1..=8, got {bits}");
+        }
+        if !min.is_finite() || !max.is_finite() || min > max {
+            bail!("invalid range [{min}, {max}]");
+        }
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let span = max - min;
+        let scale = if span > 0.0 {
+            span / qmax
+        } else if min.abs() > 0.0 {
+            min.abs()
+        } else {
+            1.0
+        };
+        let zp = (-min / scale).round();
+        Ok(Self { scale, zp, bits })
+    }
+
+    /// Parameters for a data slice (per-tensor granularity).
+    pub fn from_slice(data: &[f32], bits: u8) -> Result<Self> {
+        if data.is_empty() {
+            bail!("cannot quantize empty tensor");
+        }
+        let (lo, hi) = crate::util::stats::min_max(data);
+        Self::from_range(lo, hi, bits)
+    }
+
+    /// Quantize one value to its integer code.
+    ///
+    /// `f32::round` lowers to a libm call on baseline x86-64 (no SSE4.1
+    /// roundss) and dominated the quantization profile; the biased
+    /// truncating cast below computes the identical round-half-away
+    /// result with two cheap vectorizable ops.
+    #[inline]
+    pub fn quantize_value(&self, x: f32) -> u32 {
+        let y = x / self.scale;
+        // round-half-away == f32::round, via truncating cast (no libm).
+        let r = (y + 0.5f32.copysign(y)) as i32 as f32;
+        (r + self.zp).clamp(0.0, self.qmax()) as u32
+    }
+
+    /// Dequantize one code (Eq. 2).
+    #[inline]
+    pub fn dequantize_code(&self, q: u32) -> f32 {
+        self.scale * (q as f32 - self.zp)
+    }
+
+    /// Quantize a slice into codes.  Hot path for checkpoint quantization:
+    /// hoists the reciprocal so the loop is mul+round+clamp (divides are
+    /// an order of magnitude slower than multiplies and don't pipeline).
+    pub fn quantize_slice(&self, data: &[f32]) -> Vec<u32> {
+        let inv = 1.0 / self.scale;
+        let zp = self.zp;
+        let qmax = self.qmax();
+        data.iter()
+            .map(|&x| {
+                let y = x * inv;
+                let r = (y + 0.5f32.copysign(y)) as i32 as f32;
+                (r + zp).clamp(0.0, qmax) as u32
+            })
+            .collect()
+    }
+
+    /// [`quantize_slice`](Self::quantize_slice) into an existing buffer
+    /// (no per-group allocation on the checkpoint-quantization path).
+    pub fn quantize_extend(&self, data: &[f32], out: &mut Vec<u32>) {
+        let inv = 1.0 / self.scale;
+        let zp = self.zp;
+        let qmax = self.qmax();
+        out.extend(data.iter().map(|&x| {
+            let y = x * inv;
+            let r = (y + 0.5f32.copysign(y)) as i32 as f32;
+            (r + zp).clamp(0.0, qmax) as u32
+        }));
+    }
+
+    /// Upper bound on the rounding error |x - dq(q(x))| for in-range x
+    /// (Eq. 3): scale / 2.
+    #[inline]
+    pub fn error_bound(&self) -> f32 {
+        self.scale / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, gen_vec, Config};
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(AffineParams::from_range(0.0, 1.0, 0).is_err());
+        assert!(AffineParams::from_range(0.0, 1.0, 9).is_err());
+        assert!(AffineParams::from_range(1.0, 0.0, 4).is_err());
+        assert!(AffineParams::from_range(f32::NAN, 1.0, 4).is_err());
+        assert!(AffineParams::from_slice(&[], 4).is_err());
+    }
+
+    #[test]
+    fn codes_cover_full_range() {
+        let p = AffineParams::from_range(-1.0, 1.0, 2).unwrap();
+        assert_eq!(p.quantize_value(-1.0), 0);
+        assert_eq!(p.quantize_value(1.0), 3);
+        // midpoint maps near the middle codes
+        let mid = p.quantize_value(0.0);
+        assert!(mid == 1 || mid == 2);
+    }
+
+    #[test]
+    fn roundtrip_error_within_eq3_bound() {
+        check(
+            Config { cases: 100, seed: 0xE93 },
+            |rng| {
+                let bits = 1 + rng.below(8) as u8;
+                let v = gen_vec(rng, 300, 0.05);
+                (bits, v)
+            },
+            |(bits, v)| {
+                let p = AffineParams::from_slice(v, *bits).map_err(|e| e.to_string())?;
+                let bound = p.error_bound() * (1.0 + 1e-4) + 1e-7;
+                for &x in v {
+                    let xh = p.dequantize_code(p.quantize_value(x));
+                    if (x - xh).abs() > bound {
+                        return Err(format!(
+                            "bits={bits} x={x} xh={xh} err={} bound={bound}",
+                            (x - xh).abs()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn constant_tensor_reconstructs_exactly() {
+        for c in [0.017f32, -3.5, 0.0] {
+            let p = AffineParams::from_slice(&[c, c, c], 2).unwrap();
+            let xh = p.dequantize_code(p.quantize_value(c));
+            assert!((xh - c).abs() < 1e-6, "c={c} xh={xh}");
+        }
+    }
+
+    #[test]
+    fn narrower_range_gives_smaller_error_bound() {
+        // The paper's key observation: error bound scales with range.
+        let wide = AffineParams::from_range(-1.0, 1.0, 3).unwrap();
+        let narrow = AffineParams::from_range(-0.1, 0.1, 3).unwrap();
+        assert!(narrow.error_bound() < wide.error_bound());
+        assert!((wide.error_bound() / narrow.error_bound() - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matches_python_ref_numerically() {
+        // Golden values computed with ref.py: x in [-0.2, 0.6], bits=3.
+        let p = AffineParams::from_range(-0.2, 0.6, 3).unwrap();
+        assert!((p.scale - 0.8 / 7.0).abs() < 1e-7);
+        assert_eq!(p.zp, 2.0); // round(0.2 / (0.8/7)) = round(1.75) = 2
+        assert_eq!(p.quantize_value(0.0), 2);
+        assert_eq!(p.quantize_value(0.6), 7);
+        assert_eq!(p.quantize_value(-0.2), 0);
+    }
+}

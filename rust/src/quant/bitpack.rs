@@ -1,0 +1,300 @@
+//! Dense bit-packed code storage.
+//!
+//! Quantized codes (1..=8 bits each) are packed contiguously into u64
+//! words, little-endian within the word; codes may straddle word
+//! boundaries (relevant for 3/5/6/7-bit widths).  This is the container
+//! that actually realizes the paper's storage savings — `storage_bytes`
+//! is exact, not estimated.
+
+use anyhow::{bail, Result};
+
+/// Decode full blocks of `CPB` codes (each `BITS` wide) from `BPB`-byte
+/// chunks of the packed byte stream; returns how many codes were written.
+/// The shifts are compile-time constants, so the inner loop unrolls.
+#[inline]
+fn unpack_byte_blocks<const BITS: usize, const BPB: usize, const CPB: usize>(
+    bytes: &[u8],
+    out: &mut [u32],
+) -> usize {
+    let mask = (1u64 << BITS) - 1;
+    let n_blocks = (out.len() / CPB).min(bytes.len() / BPB);
+    for (chunk, src) in out.chunks_exact_mut(CPB).zip(bytes.chunks_exact(BPB)) {
+        let mut buf = [0u8; 8];
+        buf[..BPB].copy_from_slice(src);
+        let v = u64::from_le_bytes(buf);
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = ((v >> (j * BITS)) & mask) as u32;
+        }
+    }
+    n_blocks * CPB
+}
+
+/// A packed vector of `len` codes of `bits` bits each.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitPacked {
+    bits: u8,
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitPacked {
+    /// Pack a slice of codes. Every code must fit in `bits` bits.
+    pub fn pack(codes: &[u32], bits: u8) -> Result<Self> {
+        if !(1..=8).contains(&bits) {
+            bail!("bits must be in 1..=8, got {bits}");
+        }
+        let maxcode = (1u32 << bits) - 1;
+        let total_bits = codes.len() * bits as usize;
+        let mut words = vec![0u64; total_bits.div_ceil(64)];
+        for (i, &c) in codes.iter().enumerate() {
+            if c > maxcode {
+                bail!("code {c} exceeds {bits}-bit range");
+            }
+            let bitpos = i * bits as usize;
+            let w = bitpos / 64;
+            let off = bitpos % 64;
+            words[w] |= (c as u64) << off;
+            if off + bits as usize > 64 {
+                words[w + 1] |= (c as u64) >> (64 - off);
+            }
+        }
+        Ok(Self { bits, len: codes.len(), words })
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exact payload size in bytes.
+    pub fn storage_bytes(&self) -> usize {
+        (self.len * self.bits as usize).div_ceil(8)
+    }
+
+    /// Random access to one code.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        let bits = self.bits as usize;
+        let bitpos = i * bits;
+        let w = bitpos / 64;
+        let off = bitpos % 64;
+        let mask = (1u64 << bits) - 1;
+        let mut v = self.words[w] >> off;
+        if off + bits > 64 {
+            v |= self.words[w + 1] << (64 - off);
+        }
+        (v & mask) as u32
+    }
+
+    /// Unpack every code into `out` (must be `len` long).  This is the
+    /// serving hot path (§Perf in EXPERIMENTS.md): widths dividing 64
+    /// take a word-aligned shift loop (no cross-word handling at all);
+    /// straddling widths (3/5/6/7) run through a u128 bitstream
+    /// accumulator — both avoid the per-code div/mod of the naive form.
+    pub fn unpack_into(&self, out: &mut [u32]) {
+        assert_eq!(out.len(), self.len);
+        let bits = self.bits as usize;
+        let mask = (1u64 << bits) - 1;
+        if 64 % bits == 0 {
+            // Aligned: each word holds exactly 64/bits codes.
+            let per = 64 / bits;
+            for (chunk, &w) in out.chunks_mut(per).zip(&self.words) {
+                let mut v = w;
+                for o in chunk {
+                    *o = (v & mask) as u32;
+                    v >>= bits;
+                }
+            }
+        } else {
+            // Straddling widths (3/5/6/7): the packed stream is byte-
+            // continuous (words are little-endian), and lcm(bits, 8) bits
+            // is a whole number of bytes holding a whole number of codes —
+            // e.g. 3 bytes = eight 3-bit codes.  Decode block-at-a-time
+            // from the byte view with fixed shifts (unrolled per width).
+            // SAFETY: a &[u64] reinterpreted as &[u8] is always valid
+            // (alignment 1, every byte initialized).
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    self.words.as_ptr() as *const u8,
+                    self.words.len() * 8,
+                )
+            };
+            let done = match self.bits {
+                3 => unpack_byte_blocks::<3, 3, 8>(bytes, out),
+                5 => unpack_byte_blocks::<5, 5, 8>(bytes, out),
+                6 => unpack_byte_blocks::<6, 3, 4>(bytes, out),
+                7 => unpack_byte_blocks::<7, 7, 8>(bytes, out),
+                _ => unreachable!("aligned widths handled above"),
+            };
+            for (i, o) in out[done..].iter_mut().enumerate() {
+                *o = self.get(done + i);
+            }
+        }
+    }
+
+    /// Allocate-and-unpack convenience.
+    pub fn unpack(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.len];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    /// Iterate codes without materializing a buffer.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Reinterpret the packed payload as little-endian i32 words — the
+    /// input convention of the `packed_merge_*` Pallas artifacts.  Only
+    /// valid for widths dividing 32 with a word-aligned code count.
+    pub fn to_i32_words(&self) -> Result<Vec<i32>> {
+        if 32 % self.bits as usize != 0 {
+            bail!("bits={} does not divide 32", self.bits);
+        }
+        let total_bits = self.len * self.bits as usize;
+        if total_bits % 32 != 0 {
+            bail!("code count {} not i32-word aligned at {} bits", self.len, self.bits);
+        }
+        let n_words = total_bits / 32;
+        let mut out = Vec::with_capacity(n_words);
+        for (i, &w) in self.words.iter().enumerate() {
+            out.push(w as u32 as i32);
+            if out.len() == n_words {
+                break;
+            }
+            out.push((w >> 32) as u32 as i32);
+            if out.len() == n_words {
+                break;
+            }
+            let _ = i;
+        }
+        Ok(out)
+    }
+
+    /// Serialize to bytes (for the .tvq container).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(13 + self.words.len() * 8);
+        out.push(self.bits);
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        out.extend_from_slice(&(self.words.len() as u32).to_le_bytes());
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize; returns (value, bytes consumed).
+    pub fn from_bytes(buf: &[u8]) -> Result<(Self, usize)> {
+        if buf.len() < 13 {
+            bail!("truncated BitPacked header");
+        }
+        let bits = buf[0];
+        let len = u64::from_le_bytes(buf[1..9].try_into().unwrap()) as usize;
+        let nwords = u32::from_le_bytes(buf[9..13].try_into().unwrap()) as usize;
+        let need = 13 + nwords * 8;
+        if buf.len() < need {
+            bail!("truncated BitPacked payload");
+        }
+        if !(1..=8).contains(&bits) {
+            bail!("invalid bits {bits}");
+        }
+        if nwords != (len * bits as usize).div_ceil(64) {
+            bail!("BitPacked word count inconsistent with len/bits");
+        }
+        let words = buf[13..need]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok((Self { bits, len, words }, need))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn pack_rejects_out_of_range() {
+        assert!(BitPacked::pack(&[4], 2).is_err());
+        assert!(BitPacked::pack(&[3], 2).is_ok());
+        assert!(BitPacked::pack(&[0], 0).is_err());
+        assert!(BitPacked::pack(&[0], 9).is_err());
+    }
+
+    #[test]
+    fn storage_is_exact() {
+        let p = BitPacked::pack(&vec![1u32; 1000], 3).unwrap();
+        assert_eq!(p.storage_bytes(), 375); // 3000 bits
+        let p = BitPacked::pack(&vec![1u32; 7], 2).unwrap();
+        assert_eq!(p.storage_bytes(), 2); // 14 bits -> 2 bytes
+    }
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        check(
+            Config { cases: 80, seed: 0xB17 },
+            |rng| {
+                let bits = 1 + rng.below(8) as u8;
+                let len = 1 + rng.below(500);
+                let maxcode = (1u32 << bits) - 1;
+                let codes: Vec<u32> =
+                    (0..len).map(|_| rng.below(maxcode as usize + 1) as u32).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| {
+                let p = BitPacked::pack(codes, *bits).map_err(|e| e.to_string())?;
+                if p.unpack() != *codes {
+                    return Err("unpack mismatch".into());
+                }
+                for (i, &c) in codes.iter().enumerate() {
+                    if p.get(i) != c {
+                        return Err(format!("get({i}) = {} != {c}", p.get(i)));
+                    }
+                }
+                let bytes = p.to_bytes();
+                let (q, used) = BitPacked::from_bytes(&bytes).map_err(|e| e.to_string())?;
+                if used != bytes.len() || q != p {
+                    return Err("serde roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn straddling_3bit_boundary() {
+        // 64/3 is non-integral: codes straddle word boundaries.
+        let codes: Vec<u32> = (0..100).map(|i| (i % 8) as u32).collect();
+        let p = BitPacked::pack(&codes, 3).unwrap();
+        assert_eq!(p.unpack(), codes);
+    }
+
+    #[test]
+    fn from_bytes_rejects_corrupt() {
+        let p = BitPacked::pack(&[1, 2, 3], 4).unwrap();
+        let mut bytes = p.to_bytes();
+        bytes[0] = 11; // invalid bits
+        assert!(BitPacked::from_bytes(&bytes).is_err());
+        assert!(BitPacked::from_bytes(&bytes[..5]).is_err());
+    }
+
+    #[test]
+    fn iter_matches_unpack() {
+        let codes: Vec<u32> = (0..77).map(|i| (i * 7 % 32) as u32).collect();
+        let p = BitPacked::pack(&codes, 5).unwrap();
+        let via_iter: Vec<u32> = p.iter().collect();
+        assert_eq!(via_iter, p.unpack());
+    }
+}

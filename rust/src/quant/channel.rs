@@ -1,0 +1,199 @@
+//! Per-channel (a.k.a. per-row) asymmetric quantization.
+//!
+//! The paper quantizes per tensor; finer granularities trade metadata for
+//! error.  This module provides the per-output-channel variant common in
+//! deployment stacks (one (scale, zp) per leading-dimension row of a 2-D
+//! weight), used by the granularity ablation (`tvq experiment ablG`):
+//!
+//!   per-tensor (1 pair)  <  per-group (N/g pairs)  <  per-channel (rows)
+//!
+//! in metadata cost, and the reverse in quantization error.
+
+use anyhow::{bail, Result};
+
+use super::affine::AffineParams;
+use super::bitpack::BitPacked;
+use crate::tensor::Tensor;
+
+/// A 2-D tensor quantized with one affine pair per row.
+#[derive(Clone, Debug)]
+pub struct ChannelQuantized {
+    pub bits: u8,
+    pub rows: usize,
+    pub cols: usize,
+    pub params: Vec<AffineParams>,
+    pub codes: BitPacked,
+}
+
+impl ChannelQuantized {
+    /// Quantize a `[rows, cols]` tensor row-wise at `bits`.
+    pub fn quantize(t: &Tensor, bits: u8) -> Result<Self> {
+        if t.shape().len() != 2 {
+            bail!("per-channel quantization needs a 2-D tensor, got {:?}", t.shape());
+        }
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let mut params = Vec::with_capacity(rows);
+        let mut codes = Vec::with_capacity(rows * cols);
+        for row in t.data().chunks_exact(cols) {
+            let p = AffineParams::from_slice(row, bits)?;
+            p.quantize_extend(row, &mut codes);
+            params.push(p);
+        }
+        Ok(Self { bits, rows, cols, params, codes: BitPacked::pack(&codes, bits)? })
+    }
+
+    /// Reconstruct the full-precision tensor.
+    pub fn dequantize(&self) -> Result<Tensor> {
+        let mut codes = vec![0u32; self.rows * self.cols];
+        self.codes.unpack_into(&mut codes);
+        let mut data = Vec::with_capacity(codes.len());
+        for (ri, chunk) in codes.chunks_exact(self.cols).enumerate() {
+            let p = &self.params[ri];
+            data.extend(chunk.iter().map(|&c| p.dequantize_code(c)));
+        }
+        Tensor::new(vec![self.rows, self.cols], data)
+    }
+
+    /// Exact storage: packed codes + one (scale, zp) pair per row.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.storage_bytes() + self.rows * 8
+    }
+
+    /// L2 reconstruction error against the source tensor.
+    pub fn quant_error(&self, src: &Tensor) -> Result<f64> {
+        let dq = self.dequantize()?;
+        Ok(crate::util::stats::l2_dist(src.data(), dq.data()))
+    }
+}
+
+/// Quantization granularity for the ablation experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    PerGroup(usize),
+    PerChannel,
+}
+
+impl Granularity {
+    pub fn label(&self) -> String {
+        match self {
+            Granularity::PerTensor => "per-tensor".into(),
+            Granularity::PerGroup(g) => format!("per-group({g})"),
+            Granularity::PerChannel => "per-channel".into(),
+        }
+    }
+}
+
+/// Quantize a flat view of `t` under `gran` at `bits`; returns
+/// (l2 error, exact storage bytes).  The granularity ablation's kernel.
+pub fn quantize_error_storage(t: &Tensor, bits: u8, gran: Granularity) -> Result<(f64, usize)> {
+    match gran {
+        Granularity::PerTensor => {
+            let p = AffineParams::from_slice(t.data(), bits)?;
+            let codes = p.quantize_slice(t.data());
+            let packed = BitPacked::pack(&codes, bits)?;
+            let err: f64 = t
+                .data()
+                .iter()
+                .zip(&codes)
+                .map(|(&x, &c)| {
+                    let d = (x - p.dequantize_code(c)) as f64;
+                    d * d
+                })
+                .sum();
+            Ok((err.sqrt(), packed.storage_bytes() + 8))
+        }
+        Granularity::PerGroup(g) => {
+            // Pad the flat vector to a multiple of g (zeros quantize free).
+            let mut data = t.data().to_vec();
+            let padded = data.len().div_ceil(g) * g;
+            data.resize(padded, 0.0);
+            let gq = super::group::GroupQuantized::quantize(&data, bits, g)?;
+            let dq = gq.dequantize();
+            let err: f64 = t
+                .data()
+                .iter()
+                .zip(&dq)
+                .map(|(&x, &y)| {
+                    let d = (x - y) as f64;
+                    d * d
+                })
+                .sum();
+            Ok((err.sqrt(), gq.storage_bytes()))
+        }
+        Granularity::PerChannel => {
+            let cq = ChannelQuantized::quantize(t, bits)?;
+            Ok((cq.quant_error(t)?, cq.storage_bytes()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor_with_hot_row() -> Tensor {
+        // Row 0 has a 10x wider range: per-channel should isolate it.
+        let mut rng = Rng::new(3);
+        let mut t = Tensor::randn(&[8, 64], 0.01, &mut rng);
+        for v in t.data_mut()[..64].iter_mut() {
+            *v *= 10.0;
+        }
+        t
+    }
+
+    #[test]
+    fn rejects_non_2d() {
+        assert!(ChannelQuantized::quantize(&Tensor::zeros(&[8]), 4).is_err());
+        assert!(ChannelQuantized::quantize(&Tensor::zeros(&[2, 2, 2]), 4).is_err());
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_outlier_rows() {
+        let t = tensor_with_hot_row();
+        let (e_tensor, _) = quantize_error_storage(&t, 3, Granularity::PerTensor).unwrap();
+        let (e_chan, _) = quantize_error_storage(&t, 3, Granularity::PerChannel).unwrap();
+        assert!(
+            e_chan < 0.8 * e_tensor,
+            "per-channel {e_chan} should be well below per-tensor {e_tensor}"
+        );
+    }
+
+    #[test]
+    fn granularity_storage_ordering() {
+        let t = tensor_with_hot_row();
+        let (_, s_tensor) = quantize_error_storage(&t, 3, Granularity::PerTensor).unwrap();
+        let (_, s_group) =
+            quantize_error_storage(&t, 3, Granularity::PerGroup(64)).unwrap();
+        let (_, s_chan) = quantize_error_storage(&t, 3, Granularity::PerChannel).unwrap();
+        assert!(s_tensor < s_chan);
+        assert_eq!(s_group, s_chan); // group=64 == row length here
+    }
+
+    #[test]
+    fn roundtrip_within_per_row_bound() {
+        let t = tensor_with_hot_row();
+        let cq = ChannelQuantized::quantize(&t, 4).unwrap();
+        let dq = cq.dequantize().unwrap();
+        for (ri, (row, back)) in t
+            .data()
+            .chunks_exact(64)
+            .zip(dq.data().chunks_exact(64))
+            .enumerate()
+        {
+            let bound = cq.params[ri].error_bound() + 1e-6;
+            for (a, b) in row.iter().zip(back) {
+                assert!((a - b).abs() <= bound, "row {ri}: |{a}-{b}| > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn storage_accounts_metadata() {
+        let t = Tensor::zeros(&[4, 16]);
+        let cq = ChannelQuantized::quantize(&t, 2).unwrap();
+        // 64 codes at 2 bits = 16 bytes payload + 4 rows * 8 B metadata.
+        assert_eq!(cq.storage_bytes(), 16 + 32);
+    }
+}

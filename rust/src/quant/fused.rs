@@ -1,0 +1,230 @@
+//! Native fused dequantize-and-merge — the Layer-3 serving hot path.
+//!
+//! Reconstructs `theta_merged = theta_pre + sum_t lam_t * dq(q_t)` straight
+//! from packed codes without materializing intermediate full-precision task
+//! vectors.  This is the Rust counterpart of the Layer-1 Pallas kernel (the
+//! integration tests check both against each other through PJRT); the
+//! serving coordinator uses whichever side of the boundary the model
+//! variant calls for.
+//!
+//! Performance notes (see EXPERIMENTS.md §Perf): the inner loop unpacks a
+//! whole 64-bit word of codes at a time and applies the affine transform
+//! with a fused multiply-add; for bit widths that divide 64 this avoids
+//! all cross-word handling in the common case.
+
+use anyhow::{bail, Result};
+
+use super::group::GroupQuantized;
+use super::tvq::QuantizedCheckpoint;
+use crate::checkpoint::Checkpoint;
+
+/// theta_pre + sum_t lams[t] * dq(taus[t]) over named tensors.
+pub fn dequant_merge_checkpoints(
+    pre: &Checkpoint,
+    taus: &[&QuantizedCheckpoint],
+    lams: &[f32],
+) -> Result<Checkpoint> {
+    if taus.len() != lams.len() {
+        bail!("taus/lams length mismatch: {} vs {}", taus.len(), lams.len());
+    }
+    let mut out = pre.clone();
+    // Scratch reused across tensors and tasks.
+    let mut codes: Vec<u32> = Vec::new();
+    for (name, acc) in out.iter_mut() {
+        for (qck, &lam) in taus.iter().zip(lams) {
+            let qt = qck
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("quantized ckpt missing {name:?}"))?;
+            if qt.numel() != acc.numel() {
+                bail!("tensor {name:?} numel mismatch");
+            }
+            codes.resize(qt.numel(), 0);
+            qt.codes.unpack_into(&mut codes);
+            let a = lam * qt.params.scale;
+            let b = -lam * qt.params.scale * qt.params.zp;
+            for (dst, &c) in acc.data_mut().iter_mut().zip(codes.iter()) {
+                *dst += a * c as f32 + b;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Flat-vector variant over group-quantized payloads (the same layout the
+/// Pallas artifact consumes). `out` starts as theta_pre and is accumulated
+/// in place.
+pub fn dequant_merge_flat(
+    pre: &[f32],
+    taus: &[&GroupQuantized],
+    lams: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    out.clear();
+    out.extend_from_slice(pre);
+    dequant_axpy(taus, lams, out)
+}
+
+/// Accumulate `out += sum_t lams[t] * dq(taus[t])` in place — the shared
+/// inner loop of the TVQ and RTVQ serving paths.
+pub fn dequant_axpy(
+    taus: &[&GroupQuantized],
+    lams: &[f32],
+    out: &mut [f32],
+) -> Result<()> {
+    if taus.len() != lams.len() {
+        bail!("taus/lams length mismatch");
+    }
+    let mut codes: Vec<u32> = Vec::new();
+    for (gq, &lam) in taus.iter().zip(lams) {
+        if gq.len() != out.len() {
+            bail!("flat length mismatch: {} vs {}", gq.len(), out.len());
+        }
+        codes.resize(gq.len(), 0);
+        gq.codes.unpack_into(&mut codes);
+        for (gi, chunk) in codes.chunks_exact(gq.group).enumerate() {
+            let a = lam * gq.scales[gi];
+            let b = -a * gq.zps[gi];
+            let base = gi * gq.group;
+            let dst = &mut out[base..base + gq.group];
+            for (d, &c) in dst.iter_mut().zip(chunk) {
+                *d += a * c as f32 + b;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// RTVQ serving path: fold the shared base in once (scaled by sum lam_t),
+/// then accumulate the per-task offsets — all in place, no intermediate
+/// full-precision copies.
+pub fn dequant_merge_rtvq_flat(
+    pre: &[f32],
+    base: &GroupQuantized,
+    offsets: &[&GroupQuantized],
+    lams: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let lam_sum: f32 = lams.iter().sum();
+    out.clear();
+    out.extend_from_slice(pre);
+    dequant_axpy(&[base], &[lam_sum], out)?;
+    dequant_axpy(offsets, lams, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantizedCheckpoint;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn ck(seed: u64, std: f32) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let mut c = Checkpoint::new();
+        c.insert("w", Tensor::randn(&[40, 30], std, &mut rng));
+        c.insert("b", Tensor::randn(&[30], std, &mut rng));
+        c
+    }
+
+    #[test]
+    fn fused_matches_naive_checkpoint_path() {
+        let pre = ck(0, 0.3);
+        let taus: Vec<Checkpoint> = (1..=4).map(|s| ck(s, 0.01)).collect();
+        let qs: Vec<QuantizedCheckpoint> = taus
+            .iter()
+            .map(|t| QuantizedCheckpoint::quantize(t, 4).unwrap())
+            .collect();
+        let qrefs: Vec<&QuantizedCheckpoint> = qs.iter().collect();
+        let lams = [0.3f32, 0.2, 0.1, 0.4];
+
+        let fused = dequant_merge_checkpoints(&pre, &qrefs, &lams).unwrap();
+
+        // Naive: dequantize then axpy.
+        let mut naive = pre.clone();
+        for (q, &lam) in qs.iter().zip(&lams) {
+            naive.axpy(lam, &q.dequantize().unwrap()).unwrap();
+        }
+        assert!(fused.l2_dist(&naive).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn fused_flat_matches_naive() {
+        let mut rng = Rng::new(7);
+        let n = 4096;
+        let group = 512;
+        let mut pre = vec![0.0f32; n];
+        rng.fill_normal(&mut pre, 0.3);
+        let taus: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 0.02);
+                v
+            })
+            .collect();
+        let qs: Vec<GroupQuantized> = taus
+            .iter()
+            .map(|t| GroupQuantized::quantize(t, 3, group).unwrap())
+            .collect();
+        let qrefs: Vec<&GroupQuantized> = qs.iter().collect();
+        let lams = [0.5f32, -0.2, 0.3];
+
+        let mut fused = Vec::new();
+        dequant_merge_flat(&pre, &qrefs, &lams, &mut fused).unwrap();
+
+        let mut naive = pre.clone();
+        for (q, &lam) in qs.iter().zip(&lams) {
+            for (d, v) in naive.iter_mut().zip(q.dequantize()) {
+                *d += lam * v;
+            }
+        }
+        for (a, b) in fused.iter().zip(&naive) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rtvq_flat_path_consistent() {
+        let mut rng = Rng::new(9);
+        let n = 2048;
+        let group = 1024;
+        let mut pre = vec![0.0f32; n];
+        rng.fill_normal(&mut pre, 0.3);
+        let mut base_v = vec![0.0f32; n];
+        rng.fill_normal(&mut base_v, 0.02);
+        let base = GroupQuantized::quantize(&base_v, 3, group).unwrap();
+        let offs: Vec<GroupQuantized> = (0..4)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 0.005);
+                GroupQuantized::quantize(&v, 2, group).unwrap()
+            })
+            .collect();
+        let orefs: Vec<&GroupQuantized> = offs.iter().collect();
+        let lams = [0.25f32; 4];
+
+        let mut got = Vec::new();
+        dequant_merge_rtvq_flat(&pre, &base, &orefs, &lams, &mut got).unwrap();
+
+        // Reference: tau_t = base + off_t merged conventionally.
+        let base_hat = base.dequantize();
+        let mut want = pre.clone();
+        for (off, &lam) in offs.iter().zip(&lams) {
+            let off_hat = off.dequantize();
+            for i in 0..n {
+                want[i] += lam * (base_hat[i] + off_hat[i]);
+            }
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let pre = vec![0.0f32; 1024];
+        let q = GroupQuantized::quantize(&vec![0.1f32; 2048], 2, 1024).unwrap();
+        let mut out = Vec::new();
+        assert!(dequant_merge_flat(&pre, &[&q], &[1.0], &mut out).is_err());
+        assert!(dequant_merge_flat(&pre, &[&q], &[1.0, 2.0], &mut out).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Task Vector Quantization — the paper's core contribution.
+//!
+//! * [`affine`] — asymmetric affine quantizer (Eq. 1-2) with the error
+//!   bound of Eq. 3 as a checked invariant.
+//! * [`bitpack`] — dense 1..=8-bit code containers (the actual storage).
+//! * [`tvq`] — per-tensor quantized checkpoints: quantize the *task
+//!   vector* tau = theta_ft - theta_pre (TVQ, Section 4.2) or the full
+//!   fine-tuned checkpoint (FQ baseline, Fig. 5a).
+//! * [`rtvq`] — Residual Task Vector Quantization (Section 4.3 /
+//!   Algorithm 1): shared base vector + per-task low-bit offsets, with
+//!   quantization-error correction (Eq. 6).
+//! * [`group`] — per-group quantization of flat parameter vectors, the
+//!   layout consumed by the AOT Pallas dequant-merge artifacts.
+//! * [`fused`] — native fused dequantize-and-merge (the L3 hot path).
+//! * [`storage`] — exact storage accounting / effective bits-per-task.
+
+pub mod affine;
+pub mod bitpack;
+pub mod channel;
+pub mod fused;
+pub mod group;
+pub mod rtvq;
+pub mod storage;
+pub mod tvq;
+
+pub use affine::AffineParams;
+pub use bitpack::BitPacked;
+pub use channel::{ChannelQuantized, Granularity};
+pub use group::GroupQuantized;
+pub use rtvq::Rtvq;
+pub use storage::StorageReport;
+pub use tvq::{QuantizedCheckpoint, QuantizedTensor, Tvq};
+
+/// Which object is quantized — used by benches/experiments to label rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// Full-precision baseline (no quantization).
+    Fp32,
+    /// Fine-tuned checkpoint quantization (the paper's FQ baseline).
+    Fq(u8),
+    /// Task vector quantization at the given bit width.
+    Tvq(u8),
+    /// Residual TVQ with (base_bits, offset_bits).
+    Rtvq(u8, u8),
+}
+
+impl QuantScheme {
+    pub fn label(&self) -> String {
+        match self {
+            QuantScheme::Fp32 => "FP32".into(),
+            QuantScheme::Fq(b) => format!("FQ{b}"),
+            QuantScheme::Tvq(b) => format!("TVQ-INT{b}"),
+            QuantScheme::Rtvq(bb, bo) => format!("RTVQ-B{bb}O{bo}"),
+        }
+    }
+
+    /// Effective bits per task for `n_tasks` tasks (RTVQ amortizes the
+    /// base vector: b_o + b_b / T, Section 4.3).
+    pub fn effective_bits(&self, n_tasks: usize) -> f64 {
+        match self {
+            QuantScheme::Fp32 => 32.0,
+            QuantScheme::Fq(b) | QuantScheme::Tvq(b) => *b as f64,
+            QuantScheme::Rtvq(bb, bo) => *bo as f64 + *bb as f64 / n_tasks as f64,
+        }
+    }
+
+    /// Parse a CLI spelling: `fp32`, `fq<b>`, `tvq<b>`, `rtvq<bb>o<bo>`
+    /// (also accepts the paper's `b3o2` form for RTVQ).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        let bits = |t: &str| -> anyhow::Result<u8> {
+            let b: u8 = t.parse().map_err(|_| anyhow::anyhow!("bad bit width {t:?}"))?;
+            if !(1..=8).contains(&b) {
+                anyhow::bail!("bit width {b} out of range 1..=8");
+            }
+            Ok(b)
+        };
+        if s == "fp32" {
+            Ok(QuantScheme::Fp32)
+        } else if let Some(rest) = s.strip_prefix("rtvq") {
+            let (bb, bo) = rest
+                .trim_start_matches('b')
+                .split_once('o')
+                .ok_or_else(|| anyhow::anyhow!("rtvq needs <base>o<offset>, e.g. rtvq3o2"))?;
+            Ok(QuantScheme::Rtvq(bits(bb)?, bits(bo)?))
+        } else if let Some(rest) = s.strip_prefix("b") {
+            // paper shorthand b3o2
+            let (bb, bo) = rest
+                .split_once('o')
+                .ok_or_else(|| anyhow::anyhow!("expected b<base>o<offset>"))?;
+            Ok(QuantScheme::Rtvq(bits(bb)?, bits(bo)?))
+        } else if let Some(rest) = s.strip_prefix("tvq") {
+            Ok(QuantScheme::Tvq(bits(rest)?))
+        } else if let Some(rest) = s.strip_prefix("fq") {
+            Ok(QuantScheme::Fq(bits(rest)?))
+        } else {
+            anyhow::bail!("unknown scheme {s:?} (fp32 | fq<b> | tvq<b> | rtvq<bb>o<bo>)")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(QuantScheme::Fp32.label(), "FP32");
+        assert_eq!(QuantScheme::Fq(8).label(), "FQ8");
+        assert_eq!(QuantScheme::Tvq(3).label(), "TVQ-INT3");
+        assert_eq!(QuantScheme::Rtvq(3, 2).label(), "RTVQ-B3O2");
+    }
+
+    #[test]
+    fn parse_schemes() {
+        assert_eq!(QuantScheme::parse("fp32").unwrap(), QuantScheme::Fp32);
+        assert_eq!(QuantScheme::parse("FQ8").unwrap(), QuantScheme::Fq(8));
+        assert_eq!(QuantScheme::parse("tvq3").unwrap(), QuantScheme::Tvq(3));
+        assert_eq!(QuantScheme::parse("rtvq3o2").unwrap(), QuantScheme::Rtvq(3, 2));
+        assert_eq!(QuantScheme::parse("rtvqb4o2").unwrap(), QuantScheme::Rtvq(4, 2));
+        assert_eq!(QuantScheme::parse("b3o2").unwrap(), QuantScheme::Rtvq(3, 2));
+        assert!(QuantScheme::parse("tvq9").is_err());
+        assert!(QuantScheme::parse("tvq0").is_err());
+        assert!(QuantScheme::parse("nope").is_err());
+    }
+
+    #[test]
+    fn effective_bits_matches_paper() {
+        // Paper Section 4.3: 8 tasks, B3O2 -> 2.375 bits/task;
+        // 14 -> ~2.214; 20 -> 2.15.
+        let s = QuantScheme::Rtvq(3, 2);
+        assert!((s.effective_bits(8) - 2.375).abs() < 1e-9);
+        assert!((s.effective_bits(20) - 2.15).abs() < 1e-9);
+        assert_eq!(QuantScheme::Tvq(4).effective_bits(8), 4.0);
+    }
+}

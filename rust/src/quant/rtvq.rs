@@ -1,0 +1,237 @@
+//! Residual Task Vector Quantization (paper Section 4.3, Algorithm 1).
+//!
+//! RTVQ decomposes each task vector into a shared **base vector**
+//! (theta_ft_avg - theta_pre, quantized once at `base_bits`) and per-task
+//! **offset vectors** (theta_ft^t - theta_ft_avg, quantized at
+//! `offset_bits`).  Because the base is shared, the effective bits/task is
+//! `b_o + b_b / T` (2.375 for B3O2 @ 8 tasks).
+//!
+//! **Error correction** (Eq. 6): the offsets are computed against the
+//! *quantized* base reconstruction theta_ft_avg_ec = Q(base) + theta_pre,
+//! so the base's quantization error is folded into what the offsets see
+//! and partially cancelled — Fig. 10's ablation toggles this.
+
+use anyhow::{bail, Result};
+
+use super::tvq::QuantizedCheckpoint;
+use crate::checkpoint::Checkpoint;
+
+/// A quantized RTVQ bundle for a suite of tasks.
+#[derive(Clone, Debug)]
+pub struct Rtvq {
+    pub base_bits: u8,
+    pub offset_bits: u8,
+    pub error_correction: bool,
+    /// Q(theta_ft_avg - theta_pre, base_bits) — stored once.
+    pub base: QuantizedCheckpoint,
+    /// Q(theta_ft^t - ref, offset_bits) per task.
+    pub offsets: Vec<QuantizedCheckpoint>,
+}
+
+impl Rtvq {
+    /// Quantize a task suite per Algorithm 1.
+    ///
+    /// `fts` are the fine-tuned checkpoints (NOT task vectors); the
+    /// decomposition needs theta_ft_avg, which only the checkpoints give.
+    pub fn quantize(
+        pre: &Checkpoint,
+        fts: &[Checkpoint],
+        base_bits: u8,
+        offset_bits: u8,
+        error_correction: bool,
+    ) -> Result<Self> {
+        if fts.is_empty() {
+            bail!("RTVQ needs at least one fine-tuned checkpoint");
+        }
+        // Alg.1 line 1: theta_ft_avg
+        let refs: Vec<&Checkpoint> = fts.iter().collect();
+        let ft_avg = Checkpoint::average(&refs)?;
+        // line 2: base vector
+        let base_vec = ft_avg.sub(pre)?;
+        // line 3 (quantize base; optionally correct the reference)
+        let base = QuantizedCheckpoint::quantize(&base_vec, base_bits)?;
+        let reference = if error_correction {
+            // theta_ft_avg_ec = Q(base) + theta_pre
+            base.dequantize()?.add(pre)?
+        } else {
+            ft_avg
+        };
+        // line 4-5: per-task offsets
+        let mut offsets = Vec::with_capacity(fts.len());
+        for ft in fts {
+            let off = ft.sub(&reference)?;
+            offsets.push(QuantizedCheckpoint::quantize(&off, offset_bits)?);
+        }
+        Ok(Self { base_bits, offset_bits, error_correction, base, offsets })
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Reconstruct task vector t: tau_hat_t = dq(offset_t) + dq(base)
+    /// (Alg. 1 line 5).
+    pub fn dequantize_task(&self, t: usize) -> Result<Checkpoint> {
+        if t >= self.offsets.len() {
+            bail!("task index {t} out of range ({} tasks)", self.offsets.len());
+        }
+        let base = self.base.dequantize()?;
+        self.offsets[t].dequantize()?.add(&base)
+    }
+
+    /// Reconstruct every task vector.
+    pub fn dequantize_all(&self) -> Result<Vec<Checkpoint>> {
+        let base = self.base.dequantize()?;
+        self.offsets
+            .iter()
+            .map(|off| off.dequantize()?.add(&base))
+            .collect()
+    }
+
+    /// Total storage: one base + T offsets (exact bytes).
+    pub fn storage_bytes(&self) -> usize {
+        self.base.storage_bytes()
+            + self.offsets.iter().map(|o| o.storage_bytes()).sum::<usize>()
+    }
+
+    /// Effective bits per task: b_o + b_b / T.
+    pub fn effective_bits(&self) -> f64 {
+        self.offset_bits as f64 + self.base_bits as f64 / self.n_tasks() as f64
+    }
+
+    /// Sum over tasks of ||tau_t - tau_hat_t||_2 (Fig. 4 metric).
+    pub fn total_quant_error(&self, pre: &Checkpoint, fts: &[Checkpoint]) -> Result<f64> {
+        if fts.len() != self.n_tasks() {
+            bail!("task count mismatch");
+        }
+        let mut acc = 0.0;
+        for (t, ft) in fts.iter().enumerate() {
+            let tau = ft.sub(pre)?;
+            let tau_hat = self.dequantize_task(t)?;
+            acc += tau.l2_dist(&tau_hat)?;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Build a synthetic suite: shared pre-trained + tasks that are all
+    /// near a common fine-tuned mode (the regime RTVQ exploits).
+    fn suite(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+        let mut rng = Rng::new(seed);
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::randn(&[64, 32], 0.3, &mut rng));
+        pre.insert("b", Tensor::randn(&[32], 0.1, &mut rng));
+        // Common drift (base) + small per-task offsets.
+        let mut drift = Checkpoint::new();
+        drift.insert("w", Tensor::randn(&[64, 32], 0.02, &mut rng));
+        drift.insert("b", Tensor::randn(&[32], 0.02, &mut rng));
+        let fts = (0..n_tasks)
+            .map(|_| {
+                let mut off = Checkpoint::new();
+                off.insert("w", Tensor::randn(&[64, 32], 0.005, &mut rng));
+                off.insert("b", Tensor::randn(&[32], 0.005, &mut rng));
+                pre.add(&drift).unwrap().add(&off).unwrap()
+            })
+            .collect();
+        (pre, fts)
+    }
+
+    #[test]
+    fn effective_bits_and_counts() {
+        let (pre, fts) = suite(8, 1);
+        let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        assert_eq!(r.n_tasks(), 8);
+        assert!((r.effective_bits() - 2.375).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rtvq_beats_low_bit_tvq_on_error() {
+        // Paper Eq. 5 / Fig. 4: at ~equal bits, RTVQ error < TVQ error.
+        let (pre, fts) = suite(8, 2);
+        let rtvq = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        let rtvq_err = rtvq.total_quant_error(&pre, &fts).unwrap();
+
+        let mut tvq_err = 0.0;
+        for ft in &fts {
+            let tau = ft.sub(&pre).unwrap();
+            let q = QuantizedCheckpoint::quantize(&tau, 2).unwrap();
+            tvq_err += q.quant_error(&tau).unwrap();
+        }
+        assert!(
+            rtvq_err < tvq_err,
+            "rtvq_err={rtvq_err} should beat 2-bit tvq_err={tvq_err}"
+        );
+    }
+
+    #[test]
+    fn error_correction_reduces_error() {
+        // Fig. 10: with-EC error <= without-EC error.
+        let (pre, fts) = suite(8, 3);
+        for (bb, bo) in [(2u8, 2u8), (3, 2), (4, 3)] {
+            let with_ec = Rtvq::quantize(&pre, &fts, bb, bo, true)
+                .unwrap()
+                .total_quant_error(&pre, &fts)
+                .unwrap();
+            let without = Rtvq::quantize(&pre, &fts, bb, bo, false)
+                .unwrap()
+                .total_quant_error(&pre, &fts)
+                .unwrap();
+            assert!(
+                with_ec <= without * 1.02,
+                "bb={bb} bo={bo}: ec={with_ec} > no-ec={without}"
+            );
+        }
+    }
+
+    #[test]
+    fn storage_amortizes_base() {
+        let (pre, fts) = suite(8, 4);
+        let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        // Per-task cost should be well below a 3-bit TVQ per task.
+        let tvq3: usize = fts
+            .iter()
+            .map(|ft| {
+                let tau = ft.sub(&pre).unwrap();
+                QuantizedCheckpoint::quantize(&tau, 3).unwrap().storage_bytes()
+            })
+            .sum();
+        assert!(r.storage_bytes() < tvq3, "{} vs {}", r.storage_bytes(), tvq3);
+    }
+
+    #[test]
+    fn dequantize_task_bounds_checked() {
+        let (pre, fts) = suite(2, 5);
+        let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        assert!(r.dequantize_task(1).is_ok());
+        assert!(r.dequantize_task(2).is_err());
+    }
+
+    #[test]
+    fn reconstruction_close_to_original_tau() {
+        let (pre, fts) = suite(4, 6);
+        let r = Rtvq::quantize(&pre, &fts, 8, 8, true).unwrap();
+        for (t, ft) in fts.iter().enumerate() {
+            let tau = ft.sub(&pre).unwrap();
+            let tau_hat = r.dequantize_task(t).unwrap();
+            let rel = tau.l2_dist(&tau_hat).unwrap() / tau.l2_norm_ck();
+            assert!(rel < 0.02, "task {t}: rel err {rel}");
+        }
+    }
+
+    impl Checkpoint {
+        fn l2_norm_ck(&self) -> f64 {
+            let mut acc = 0.0;
+            for (_, t) in self.iter() {
+                let n = t.l2_norm();
+                acc += n * n;
+            }
+            acc.sqrt()
+        }
+    }
+}

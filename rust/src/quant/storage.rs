@@ -1,0 +1,99 @@
+//! Storage accounting (paper Table 5).
+//!
+//! Computes exact and model-scaled storage for every quantization scheme,
+//! including the ViT-L/14 projection used to compare against the paper's
+//! 9.1 / 16.0 / 22.8 GB rows.
+
+use super::QuantScheme;
+
+/// Parameter counts for the paper's real backbones (for Table 5 scaling).
+pub const VIT_B32_PARAMS: usize = 87_849_216;
+pub const VIT_L14_PARAMS: usize = 303_966_208;
+
+/// Storage accounting for storing `n_tasks` task payloads of a model with
+/// `params` parameters under a given scheme.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageReport {
+    pub scheme: QuantScheme,
+    pub n_tasks: usize,
+    pub params: usize,
+    pub bytes: u64,
+}
+
+impl StorageReport {
+    /// Idealized (metadata-free) storage: what Table 5 reports.
+    pub fn ideal(scheme: QuantScheme, n_tasks: usize, params: usize) -> Self {
+        let bits_total: f64 = match scheme {
+            QuantScheme::Fp32 => 32.0 * params as f64 * n_tasks as f64,
+            QuantScheme::Fq(b) | QuantScheme::Tvq(b) => {
+                b as f64 * params as f64 * n_tasks as f64
+            }
+            QuantScheme::Rtvq(bb, bo) => {
+                // one base at bb bits + T offsets at bo bits
+                bb as f64 * params as f64 + bo as f64 * params as f64 * n_tasks as f64
+            }
+        };
+        Self {
+            scheme,
+            n_tasks,
+            params,
+            bytes: (bits_total / 8.0).ceil() as u64,
+        }
+    }
+
+    pub fn gib(&self) -> f64 {
+        self.bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+    }
+
+    /// Fraction of the FP32 baseline.
+    pub fn fraction_of_fp32(&self) -> f64 {
+        let fp32 = StorageReport::ideal(QuantScheme::Fp32, self.n_tasks, self.params);
+        self.bytes as f64 / fp32.bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_vit_l14_matches_paper_scale() {
+        // Paper Table 5: 8 tasks of ViT-L/14 at FP32 ~= 9.1 GB
+        // (1.14 GB per checkpoint).
+        let r = StorageReport::ideal(QuantScheme::Fp32, 8, VIT_L14_PARAMS);
+        assert!((r.gib() - 9.06).abs() < 0.2, "gib={}", r.gib());
+        let r20 = StorageReport::ideal(QuantScheme::Fp32, 20, VIT_L14_PARAMS);
+        assert!((r20.gib() - 22.65).abs() < 0.5, "gib={}", r20.gib());
+    }
+
+    #[test]
+    fn int2_is_16x_reduction() {
+        let fp32 = StorageReport::ideal(QuantScheme::Fp32, 20, VIT_L14_PARAMS);
+        let int2 = StorageReport::ideal(QuantScheme::Tvq(2), 20, VIT_L14_PARAMS);
+        let ratio = fp32.bytes as f64 / int2.bytes as f64;
+        assert!((ratio - 16.0).abs() < 0.01, "ratio={ratio}");
+        assert!((int2.fraction_of_fp32() - 0.0625).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rtvq_b3o2_fraction_matches_paper() {
+        // Paper: B3O2 keeps ~7.5% of FP32 at 8 tasks... exact:
+        // (3 + 2*8) / (32*8) = 19/256 = 7.42%
+        let r = StorageReport::ideal(QuantScheme::Rtvq(3, 2), 8, VIT_L14_PARAMS);
+        assert!((r.fraction_of_fp32() - 19.0 / 256.0).abs() < 1e-6);
+        // And it sits between INT2 and INT3 TVQ.
+        let int2 = StorageReport::ideal(QuantScheme::Tvq(2), 8, VIT_L14_PARAMS);
+        let int3 = StorageReport::ideal(QuantScheme::Tvq(3), 8, VIT_L14_PARAMS);
+        assert!(r.bytes > int2.bytes && r.bytes < int3.bytes);
+    }
+
+    #[test]
+    fn rtvq_per_task_cost_falls_with_more_tasks() {
+        let per_task = |t: usize| {
+            StorageReport::ideal(QuantScheme::Rtvq(3, 2), t, 1_000_000).bytes as f64
+                / t as f64
+        };
+        assert!(per_task(8) > per_task(14));
+        assert!(per_task(14) > per_task(20));
+    }
+}

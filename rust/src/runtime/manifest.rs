@@ -1,0 +1,206 @@
+//! Artifact manifest parsing — the JSON signature files emitted by
+//! `python/compile/aot.py` alongside each HLO text module.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype understood by the runtime (the artifacts use only these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Parsed manifest for one artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Trunk parameter layout (name, shape) in flattening order, when the
+    /// artifact takes a checkpoint.
+    pub params: Option<Vec<(String, Vec<usize>)>>,
+    pub meta: Json,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let name = v.req("name")?.as_str()?.to_string();
+        let inputs = v
+            .req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(IoSpec {
+                    name: e.req("name")?.as_str()?.to_string(),
+                    shape: e.req("shape")?.as_shape()?,
+                    dtype: Dtype::parse(e.req("dtype")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                Ok(IoSpec {
+                    name: format!("out{i}"),
+                    shape: e.req("shape")?.as_shape()?,
+                    dtype: Dtype::parse(e.req("dtype")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let params = match v.req("params")? {
+            Json::Null => None,
+            arr => Some(
+                arr.as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            e.req("name")?.as_str()?.to_string(),
+                            e.req("shape")?.as_shape()?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        };
+        let meta = v.req("meta")?.clone();
+        Ok(Manifest { name, inputs, outputs, params, meta })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// usize meta field accessor.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize().ok())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str().ok())
+    }
+
+    /// Validate runtime inputs against the declared signature.
+    pub fn validate_inputs(&self, inputs: &[super::Value]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&self.inputs) {
+            if v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input {:?} shape {:?} != expected {:?}",
+                    self.name,
+                    spec.name,
+                    v.shape(),
+                    spec.shape
+                );
+            }
+            if v.dtype() != spec.dtype {
+                bail!(
+                    "{}: input {:?} dtype {:?} != expected {:?}",
+                    self.name,
+                    spec.name,
+                    v.dtype(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Value;
+
+    const SAMPLE: &str = r#"{
+      "name": "toy_forward_b2",
+      "inputs": [
+        {"name": "param:w", "shape": [3, 4], "dtype": "f32"},
+        {"name": "x", "shape": [2, 3], "dtype": "f32"},
+        {"name": "y", "shape": [2], "dtype": "i32"}
+      ],
+      "outputs": [{"shape": [2, 4], "dtype": "f32"}],
+      "params": [{"name": "w", "shape": [3, 4]}],
+      "meta": {"batch": 2, "preset": "toy"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "toy_forward_b2");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[2].dtype, Dtype::I32);
+        assert_eq!(m.outputs[0].shape, vec![2, 4]);
+        assert_eq!(m.params.as_ref().unwrap()[0].0, "w");
+        assert_eq!(m.meta_usize("batch"), Some(2));
+        assert_eq!(m.meta_str("preset"), Some("toy"));
+    }
+
+    #[test]
+    fn null_params_allowed() {
+        let src = SAMPLE.replace(
+            r#""params": [{"name": "w", "shape": [3, 4]}]"#,
+            r#""params": null"#,
+        );
+        let m = Manifest::parse(&src).unwrap();
+        assert!(m.params.is_none());
+    }
+
+    #[test]
+    fn validate_inputs_catches_mismatches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let good = vec![
+            Value::F32(vec![3, 4], vec![0.0; 12]),
+            Value::F32(vec![2, 3], vec![0.0; 6]),
+            Value::I32(vec![2], vec![0, 1]),
+        ];
+        assert!(m.validate_inputs(&good).is_ok());
+        // wrong arity
+        assert!(m.validate_inputs(&good[..2]).is_err());
+        // wrong shape
+        let mut bad = good.clone();
+        bad[0] = Value::F32(vec![4, 3], vec![0.0; 12]);
+        assert!(m.validate_inputs(&bad).is_err());
+        // wrong dtype
+        let mut bad = good;
+        bad[2] = Value::F32(vec![2], vec![0.0; 2]);
+        assert!(m.validate_inputs(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let src = SAMPLE.replace("\"i32\"", "\"f64\"");
+        assert!(Manifest::parse(&src).is_err());
+    }
+}

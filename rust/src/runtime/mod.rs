@@ -1,0 +1,330 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! `make artifacts` leaves `artifacts/<name>.hlo.txt` (HLO text) and
+//! `<name>.json` (signature manifest) pairs; this module compiles them on
+//! the PJRT CPU client once ([`Runtime`] caches executables) and exposes
+//! typed entrypoints ([`Artifact::execute`], plus the model-level helpers
+//! [`forward_logits`], [`train_step`], [`merged_forward`]).
+//!
+//! Python is *never* involved here — the HLO text is the entire contract.
+
+mod manifest;
+
+pub use manifest::{Dtype, IoSpec, Manifest};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::quant::GroupQuantized;
+use crate::tensor::Tensor;
+
+/// A runtime input value (host side).
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(s, _) | Value::I32(s, _) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(..) => Dtype::F32,
+            Value::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            Value::F32(_, d) => d.len(),
+            Value::I32(_, d) => d.len(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(_, d) => xla::Literal::vec1(d).reshape(&dims)?,
+            Value::I32(_, d) => xla::Literal::vec1(d).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Value {
+        Value::F32(t.shape().to_vec(), t.data().to_vec())
+    }
+}
+
+/// A compiled artifact: manifest + PJRT executable.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with validated inputs; returns one (shape, data) per output.
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        self.manifest.validate_inputs(inputs)?;
+        let literals = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True: always a tuple.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.manifest.name,
+                self.manifest.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (part, spec) in parts.iter().zip(&self.manifest.outputs) {
+            let data: Vec<f32> = part.to_vec()?;
+            outs.push((spec.shape.clone(), data));
+        }
+        Ok(outs)
+    }
+
+    /// Batch size baked into this artifact (from meta), if any.
+    pub fn batch(&self) -> Option<usize> {
+        self.manifest.meta_usize("batch")
+    }
+}
+
+/// Artifact loader + compile cache bound to one PJRT client.
+///
+/// NOT `Send`: each coordinator executor thread builds its own `Runtime`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+impl Runtime {
+    /// CPU-client runtime over the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(crate::util::artifacts_dir())
+    }
+
+    pub fn with_dir(dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) a compiled artifact by name.
+    pub fn load(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let json_path = self.dir.join(format!("{name}.json"));
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let manifest = Manifest::load(&json_path)
+            .with_context(|| format!("loading manifest {}", json_path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let art = Rc::new(Artifact { manifest, exe });
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Names of all artifacts available on disk (from index.json).
+    pub fn available(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("index.json"))?;
+        let idx = crate::util::json::Json::parse(&text)?;
+        Ok(idx.as_obj()?.keys().cloned().collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model-level helpers shared by train/eval/coordinator
+// ---------------------------------------------------------------------------
+
+/// Pack a checkpoint into artifact inputs following the manifest's param
+/// layout (order + shapes are validated).
+pub fn pack_params(art: &Artifact, ck: &Checkpoint) -> Result<Vec<Value>> {
+    let params = art
+        .manifest
+        .params
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("{} takes no params", art.manifest.name))?;
+    let mut out = Vec::with_capacity(params.len());
+    for (name, shape) in params {
+        let t = ck.get(name)?;
+        if t.shape() != shape.as_slice() {
+            bail!(
+                "param {name:?} shape {:?} != manifest {:?}",
+                t.shape(),
+                shape
+            );
+        }
+        out.push(Value::from_tensor(t));
+    }
+    Ok(out)
+}
+
+/// Forward pass: logits (or dense prediction map) for one batch.
+pub fn forward_logits(
+    art: &Artifact,
+    ck: &Checkpoint,
+    head: &Tensor,
+    x: &Tensor,
+) -> Result<Tensor> {
+    let mut inputs = pack_params(art, ck)?;
+    inputs.push(Value::from_tensor(head));
+    inputs.push(Value::from_tensor(x));
+    let mut outs = art.execute(&inputs)?;
+    let (shape, data) = outs.remove(0);
+    Tensor::new(shape, data)
+}
+
+/// One SGD step through the train artifact; returns (updated ckpt, loss).
+pub fn train_step(
+    art: &Artifact,
+    ck: &Checkpoint,
+    head: &Tensor,
+    x: &Tensor,
+    y: &Value,
+    lr: f32,
+) -> Result<(Checkpoint, f32)> {
+    let mut inputs = pack_params(art, ck)?;
+    inputs.push(Value::from_tensor(head));
+    inputs.push(Value::from_tensor(x));
+    inputs.push(y.clone());
+    inputs.push(Value::F32(vec![1], vec![lr]));
+    let outs = art.execute(&inputs)?;
+    let params = art.manifest.params.as_ref().unwrap();
+    if outs.len() != params.len() + 1 {
+        bail!("train artifact output arity mismatch");
+    }
+    let mut new_ck = Checkpoint::new();
+    for ((name, _), (shape, data)) in params.iter().zip(&outs) {
+        new_ck.insert(name, Tensor::new(shape.clone(), data.clone())?);
+    }
+    let loss = outs.last().unwrap().1[0];
+    Ok((new_ck, loss))
+}
+
+/// The fused Pallas path: serve a batch straight from quantized task
+/// vectors via the `*_merged_forward_*` artifact.
+pub fn merged_forward(
+    art: &Artifact,
+    pre_flat: &[f32],
+    taus: &[&GroupQuantized],
+    lams: &[f32],
+    head: &Tensor,
+    x: &Tensor,
+) -> Result<Tensor> {
+    let t = taus.len();
+    anyhow::ensure!(t == lams.len(), "taus/lams mismatch");
+    let n = pre_flat.len();
+    let g = taus
+        .first()
+        .map(|q| q.n_groups())
+        .ok_or_else(|| anyhow::anyhow!("need at least one task"))?;
+    let mut q = Vec::with_capacity(t * n);
+    let mut scales = Vec::with_capacity(t * g);
+    let mut zps = Vec::with_capacity(t * g);
+    for gq in taus {
+        anyhow::ensure!(gq.len() == n, "flat length mismatch");
+        q.extend(gq.codes_f32());
+        scales.extend_from_slice(&gq.scales);
+        zps.extend_from_slice(&gq.zps);
+    }
+    let inputs = vec![
+        Value::F32(vec![n], pre_flat.to_vec()),
+        Value::F32(vec![t, n], q),
+        Value::F32(vec![t, g], scales),
+        Value::F32(vec![t, g], zps),
+        Value::F32(vec![t], lams.to_vec()),
+        Value::from_tensor(head),
+        Value::from_tensor(x),
+    ];
+    let mut outs = art.execute(&inputs)?;
+    let (shape, data) = outs.remove(0);
+    Tensor::new(shape, data)
+}
+
+/// Run a standalone `packed_merge_*` kernel artifact: merged parameters
+/// straight from bit-packed int32 payloads (32/bits codes per word) —
+/// the bandwidth-proportional variant of [`merged_forward`]'s q-as-f32
+/// convention.  `taus` must all be quantized at the artifact's bit width.
+pub fn packed_merge(
+    art: &Artifact,
+    pre_flat: &[f32],
+    taus: &[&GroupQuantized],
+    lams: &[f32],
+) -> Result<Vec<f32>> {
+    let t = taus.len();
+    anyhow::ensure!(t == lams.len(), "taus/lams mismatch");
+    let bits = art
+        .manifest
+        .meta_usize("bits")
+        .ok_or_else(|| anyhow::anyhow!("artifact missing bits meta"))? as u8;
+    let n = pre_flat.len();
+    let g = taus
+        .first()
+        .map(|q| q.n_groups())
+        .ok_or_else(|| anyhow::anyhow!("need at least one task"))?;
+    let mut words = Vec::new();
+    let mut scales = Vec::with_capacity(t * g);
+    let mut zps = Vec::with_capacity(t * g);
+    for gq in taus {
+        anyhow::ensure!(gq.bits == bits, "task quantized at {} bits, artifact wants {bits}", gq.bits);
+        anyhow::ensure!(gq.len() == n, "flat length mismatch");
+        words.extend(gq.codes.to_i32_words()?);
+        scales.extend_from_slice(&gq.scales);
+        zps.extend_from_slice(&gq.zps);
+    }
+    let nw = words.len() / t;
+    let inputs = vec![
+        Value::F32(vec![n], pre_flat.to_vec()),
+        Value::I32(vec![t, nw], words),
+        Value::F32(vec![t, g], scales),
+        Value::F32(vec![t, g], zps),
+        Value::F32(vec![t], lams.to_vec()),
+    ];
+    let mut outs = art.execute(&inputs)?;
+    Ok(outs.remove(0).1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes_and_dtypes() {
+        let v = Value::F32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), Dtype::F32);
+        assert_eq!(v.numel(), 6);
+        let w = Value::I32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(w.dtype(), Dtype::I32);
+    }
+}

@@ -1,0 +1,143 @@
+//! Dense f32 tensor substrate.
+//!
+//! The checkpoint/quantization/merging stack operates on named f32 tensors;
+//! this module provides the shaped container plus the (deliberately small)
+//! set of operations the system needs.  Heavy model compute never happens
+//! here — that is the PJRT runtime's job — so the focus is correctness and
+//! predictable performance of elementwise/checkpoint-scale math.
+
+mod ops;
+
+use anyhow::{bail, Result};
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Create from shape + data; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} implies {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// All-`v` tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// 1-D tensor from a vec.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    /// Random-normal tensor (mean 0, given std).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// 2-D indexing helper (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_full_from_vec() {
+        assert_eq!(Tensor::zeros(&[2, 2]).data(), &[0.0; 4]);
+        assert_eq!(Tensor::full(&[3], 2.5).data(), &[2.5; 3]);
+        let t = Tensor::from_vec(vec![1.0, 2.0]);
+        assert_eq!(t.shape(), &[2]);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4]);
+        assert!(t.clone().reshape(vec![2, 2]).is_ok());
+        assert!(t.reshape(vec![3]).is_err());
+    }
+
+    #[test]
+    fn randn_has_reasonable_std() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[10_000], 0.1, &mut rng);
+        let std = crate::util::stats::std_dev(
+            &t.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        assert!((std - 0.1).abs() < 0.01, "std={std}");
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Elementwise and reduction operations on [`Tensor`].
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+impl Tensor {
+    fn check_same_shape(&self, other: &Tensor) -> Result<()> {
+        if self.shape() != other.shape() {
+            bail!(
+                "shape mismatch: {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            );
+        }
+        Ok(())
+    }
+
+    /// Elementwise `self + other`.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.check_same_shape(other)?;
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor::new(self.shape().to_vec(), data)
+    }
+
+    /// Elementwise `self - other`.
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.check_same_shape(other)?;
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor::new(self.shape().to_vec(), data)
+    }
+
+    /// Elementwise `self * other` (Hadamard).
+    pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
+        self.check_same_shape(other)?;
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(a, b)| a * b)
+            .collect();
+        Tensor::new(self.shape().to_vec(), data)
+    }
+
+    /// `self * s` (scalar).
+    pub fn scale(&self, s: f32) -> Tensor {
+        let data = self.data().iter().map(|a| a * s).collect();
+        Tensor::new(self.shape().to_vec(), data).unwrap()
+    }
+
+    /// In-place `self += alpha * other` (the merge hot path primitive).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        self.check_same_shape(other)?;
+        for (a, b) in self.data_mut().iter_mut().zip(other.data()) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Sum of all elements (f64 accumulator).
+    pub fn sum(&self) -> f64 {
+        self.data().iter().map(|&x| x as f64).sum()
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f64 {
+        if self.numel() == 0 {
+            0.0
+        } else {
+            self.sum() / self.numel() as f64
+        }
+    }
+
+    /// (min, max) over all elements.
+    pub fn min_max(&self) -> (f32, f32) {
+        crate::util::stats::min_max(self.data())
+    }
+
+    /// L2 norm.
+    pub fn l2_norm(&self) -> f64 {
+        crate::util::stats::l2_norm(self.data())
+    }
+
+    /// L2 distance to another tensor.
+    pub fn l2_dist(&self, other: &Tensor) -> Result<f64> {
+        self.check_same_shape(other)?;
+        Ok(crate::util::stats::l2_dist(self.data(), other.data()))
+    }
+
+    /// Fraction of exactly-zero elements.
+    pub fn sparsity(&self) -> f64 {
+        if self.numel() == 0 {
+            return 0.0;
+        }
+        let zeros = self.data().iter().filter(|&&x| x == 0.0).count();
+        zeros as f64 / self.numel() as f64
+    }
+
+    /// Magnitude threshold below which `frac` of |values| fall
+    /// (used by Ties trimming / Breadcrumbs filtering).
+    pub fn abs_quantile(&self, frac: f64) -> f32 {
+        if self.numel() == 0 {
+            return 0.0;
+        }
+        let mut mags: Vec<f32> = self.data().iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((frac * (mags.len() - 1) as f64).round() as usize).min(mags.len() - 1);
+        mags[idx]
+    }
+
+    /// Apply a function elementwise, returning a new tensor.
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        let data = self.data().iter().map(|&x| f(x)).collect();
+        Tensor::new(self.shape().to_vec(), data).unwrap()
+    }
+
+    /// Binary zip-map.
+    pub fn zip<F: Fn(f32, f32) -> f32>(&self, other: &Tensor, f: F) -> Result<Tensor> {
+        self.check_same_shape(other)?;
+        let data = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Tensor::new(self.shape().to_vec(), data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::from_vec(v.to_vec())
+    }
+
+    #[test]
+    fn add_sub_mul_scale() {
+        let a = t(&[1.0, 2.0]);
+        let b = t(&[3.0, -1.0]);
+        assert_eq!(a.add(&b).unwrap().data(), &[4.0, 1.0]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-2.0, 3.0]);
+        assert_eq!(a.mul(&b).unwrap().data(), &[3.0, -2.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = t(&[1.0, 2.0]);
+        let b = t(&[1.0]);
+        assert!(a.add(&b).is_err());
+        assert!(a.sub(&b).is_err());
+        assert!(a.l2_dist(&b).is_err());
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = t(&[1.0, 1.0]);
+        a.axpy(0.5, &t(&[2.0, 4.0])).unwrap();
+        assert_eq!(a.data(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = t(&[1.0, -2.0, 3.0]);
+        assert_eq!(a.sum(), 2.0);
+        assert_eq!(a.min_max(), (-2.0, 3.0));
+        assert!((a.mean() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let a = t(&[0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(a.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn abs_quantile_monotone() {
+        let a = t(&[-4.0, 1.0, -2.0, 3.0]);
+        assert_eq!(a.abs_quantile(0.0), 1.0);
+        assert_eq!(a.abs_quantile(1.0), 4.0);
+        let q50 = a.abs_quantile(0.5);
+        assert!(q50 >= 1.0 && q50 <= 4.0);
+    }
+
+    #[test]
+    fn map_zip() {
+        let a = t(&[1.0, -2.0]);
+        assert_eq!(a.map(|x| x.abs()).data(), &[1.0, 2.0]);
+        let b = t(&[3.0, 5.0]);
+        assert_eq!(a.zip(&b, |x, y| x + y).unwrap().data(), &[4.0, 3.0]);
+    }
+}

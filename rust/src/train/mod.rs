@@ -1,0 +1,184 @@
+//! Fine-tuning drivers: produce the checkpoint zoo the paper merges.
+//!
+//! Training runs the AOT train-step artifact in a loop from Rust — the
+//! same HLO path the paper's authors would run under JAX, but with Python
+//! long gone.  The zoo (pre-trained trunk + per-task fine-tuned
+//! checkpoints + loss curves) is cached under `target/zoo/` keyed by
+//! preset and suite size so experiments share it.
+
+pub mod zoo;
+
+pub use zoo::{DenseZoo, Zoo};
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::data::classify::ClassifyTask;
+use crate::data::VitPreset;
+use crate::runtime::{self, Artifact, Runtime, Value};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Hyper-parameters for one fine-tuning run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Size of the (deterministic) training pool sampled from.
+    pub pool: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 200, lr: 0.5, pool: 4096, log_every: 50 }
+    }
+}
+
+/// Random-init a ViT trunk from the artifact's parameter manifest, using
+/// the same name-driven scheme as `python/compile/model.py::vit_init`
+/// (gains -> 1, biases -> 0, pos -> N(0, 0.02), weights -> N(0, fan_in^-1/2)).
+pub fn init_vit_checkpoint(art: &Artifact, rng: &mut Rng) -> Result<Checkpoint> {
+    let params = art
+        .manifest
+        .params
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("artifact has no param manifest"))?;
+    let mut ck = Checkpoint::new();
+    for (name, shape) in params {
+        let t = if name.ends_with("/g") {
+            Tensor::full(shape, 1.0)
+        } else if name.ends_with("/b") || name.ends_with("/bo") {
+            Tensor::zeros(shape)
+        } else if name == "pos" {
+            Tensor::randn(shape, 0.02, rng)
+        } else {
+            let fan_in = if shape.len() >= 2 {
+                shape[..shape.len() - 1].iter().product::<usize>()
+            } else {
+                shape[0]
+            };
+            Tensor::randn(shape, (fan_in as f32).powf(-0.5), rng)
+        };
+        ck.insert(name, t);
+    }
+    Ok(ck)
+}
+
+/// Fine-tune `init` on a classification task; returns (ckpt, loss curve).
+pub fn finetune_classify(
+    rt: &Runtime,
+    preset: &VitPreset,
+    init: &Checkpoint,
+    task: &ClassifyTask,
+    cfg: &TrainConfig,
+) -> Result<(Checkpoint, Vec<f32>)> {
+    let art = rt.load(&format!("{}_train_b{}", preset.name, preset.train_batch))?;
+    let b = preset.train_batch;
+    let (pool_x, pool_y) = task.train_pool(cfg.pool);
+    let img = preset.tokens * preset.token_dim;
+    let mut rng = Rng::new(task.seed ^ 0x7121_0001);
+    let mut ck = init.clone();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut xbuf = Tensor::zeros(&[b, preset.tokens, preset.token_dim]);
+    let mut ybuf = vec![0i32; b];
+    for _step in 0..cfg.steps {
+        // Sample a minibatch from the pool.
+        for i in 0..b {
+            let j = rng.below(cfg.pool);
+            xbuf.data_mut()[i * img..(i + 1) * img]
+                .copy_from_slice(&pool_x.data()[j * img..(j + 1) * img]);
+            ybuf[i] = pool_y[j];
+        }
+        let y = Value::I32(vec![b], ybuf.clone());
+        let (new_ck, loss) = runtime::train_step(&art, &ck, &task.head, &xbuf, &y, cfg.lr)?;
+        ck = new_ck;
+        losses.push(loss);
+    }
+    Ok((ck, losses))
+}
+
+/// Pre-train a trunk on the suite's generic task (the CLIP-pre-training
+/// stand-in). Returns (ckpt, loss curve).
+pub fn pretrain_classify(
+    rt: &Runtime,
+    preset: &VitPreset,
+    task: &ClassifyTask,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<(Checkpoint, Vec<f32>)> {
+    let art = rt.load(&format!("{}_train_b{}", preset.name, preset.train_batch))?;
+    let mut rng = Rng::new(seed);
+    let init = init_vit_checkpoint(&art, &mut rng)?;
+    finetune_classify(rt, preset, &init, task, cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Dense-prediction training
+// ---------------------------------------------------------------------------
+
+use crate::data::dense::{self, DenseTaskKind};
+use crate::data::DensePreset;
+
+/// Fine-tune the dense trunk on one task kind.
+pub fn finetune_dense(
+    rt: &Runtime,
+    preset: &DensePreset,
+    init: &Checkpoint,
+    kind: DenseTaskKind,
+    head: &Tensor,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<(Checkpoint, Vec<f32>)> {
+    let art = rt.load(&format!("dense_train_{}_b{}", kind.name(), preset.batch))?;
+    let mut rng = Rng::new(seed ^ 0xD3A5_0001);
+    let mut ck = init.clone();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        let batch = dense::generate_batch(preset, preset.batch, &mut rng);
+        let y = match kind {
+            DenseTaskKind::Seg => Value::I32(
+                vec![preset.batch, preset.height, preset.width],
+                batch.seg.clone(),
+            ),
+            DenseTaskKind::Depth => Value::from_tensor(&batch.depth),
+            DenseTaskKind::Normal => Value::from_tensor(&batch.normal),
+        };
+        let (new_ck, loss) = runtime::train_step(&art, &ck, head, &batch.x, &y, cfg.lr)?;
+        ck = new_ck;
+        losses.push(loss);
+    }
+    Ok((ck, losses))
+}
+
+/// Random-init the dense trunk from its artifact manifest.
+pub fn init_dense_checkpoint(art: &Artifact, rng: &mut Rng) -> Result<Checkpoint> {
+    let params = art
+        .manifest
+        .params
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("artifact has no param manifest"))?;
+    let mut ck = Checkpoint::new();
+    for (name, shape) in params {
+        let t = if name.ends_with("/b") {
+            Tensor::zeros(shape)
+        } else {
+            // conv kernels [kh, kw, cin, cout]
+            let fan_in: usize = shape[..shape.len() - 1].iter().product();
+            Tensor::randn(shape, (fan_in as f32).powf(-0.5), rng)
+        };
+        ck.insert(name, t);
+    }
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_config_default_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0 && c.lr > 0.0 && c.pool >= 32);
+    }
+}

@@ -1,0 +1,142 @@
+//! Checkpoint-zoo construction and caching.
+//!
+//! A [`Zoo`] is the full input of every merging experiment: the
+//! pre-trained trunk, the task suite, and one fine-tuned checkpoint per
+//! task.  Building one takes a few minutes of PJRT training, so zoos are
+//! cached under `target/zoo/<preset>_t<n>/` and shared by every bench and
+//! example.  Cached files are CRC-checked; corrupt entries rebuild.
+
+use anyhow::Result;
+
+use super::{finetune_classify, finetune_dense, init_dense_checkpoint, pretrain_classify,
+            TrainConfig};
+use crate::checkpoint::{Checkpoint, CheckpointStore};
+use crate::data::classify::TaskSuite;
+use crate::data::dense::{self, DenseTaskKind};
+use crate::data::{DensePreset, VitPreset, DENSE};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A classification checkpoint zoo.
+pub struct Zoo {
+    pub preset: &'static VitPreset,
+    pub suite: TaskSuite,
+    pub pre: Checkpoint,
+    pub fts: Vec<Checkpoint>,
+}
+
+impl Zoo {
+    /// Build (or load from cache) the zoo for `n_tasks` tasks.
+    pub fn build_or_load(
+        rt: &Runtime,
+        preset: &'static VitPreset,
+        n_tasks: usize,
+        cfg: &TrainConfig,
+    ) -> Result<Zoo> {
+        let suite = TaskSuite::new(preset, n_tasks, 1000);
+        let store = CheckpointStore::new(
+            crate::util::zoo_dir().join(format!("{}_t{}", preset.name, n_tasks)),
+        );
+        // Pre-train long and hard (the CLIP-scale ancestor), fine-tune
+        // short and gently — this reproduces the paper's Fig. 3 statistics
+        // (task-vector range an order of magnitude below the checkpoint's).
+        let pre_cfg = TrainConfig { steps: cfg.steps * 3, ..*cfg };
+        let ft_cfg = TrainConfig { lr: cfg.lr * 0.2, ..*cfg };
+        let pre = store.load_or_build("pretrained", || {
+            eprintln!("[zoo] pre-training {} trunk...", preset.name);
+            let (ck, losses) =
+                pretrain_classify(rt, preset, &suite.pretrain_task(), &pre_cfg, 0x9E3)?;
+            eprintln!(
+                "[zoo] pretrain loss {:.3} -> {:.3}",
+                losses.first().unwrap_or(&f32::NAN),
+                losses.last().unwrap_or(&f32::NAN)
+            );
+            Ok(ck)
+        })?;
+        let mut fts = Vec::with_capacity(n_tasks);
+        for (i, task) in suite.tasks.iter().enumerate() {
+            let ft = store.load_or_build(&format!("task{i:02}"), || {
+                eprintln!("[zoo] fine-tuning task {i:02}...");
+                let (ck, losses) = finetune_classify(rt, preset, &pre, task, &ft_cfg)?;
+                eprintln!(
+                    "[zoo] task{i:02} loss {:.3} -> {:.3}",
+                    losses.first().unwrap_or(&f32::NAN),
+                    losses.last().unwrap_or(&f32::NAN)
+                );
+                Ok(ck)
+            })?;
+            fts.push(ft);
+        }
+        Ok(Zoo { preset, suite, pre, fts })
+    }
+
+    /// Task vectors tau_t = theta_ft^t - theta_pre.
+    pub fn task_vectors(&self) -> Result<Vec<Checkpoint>> {
+        self.fts.iter().map(|ft| ft.sub(&self.pre)).collect()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.fts.len()
+    }
+}
+
+/// The dense-prediction zoo: shared conv trunk + 3 task checkpoints.
+pub struct DenseZoo {
+    pub preset: DensePreset,
+    pub pre: Checkpoint,
+    pub fts: Vec<(DenseTaskKind, Checkpoint)>,
+    pub heads: Vec<(DenseTaskKind, Tensor)>,
+}
+
+impl DenseZoo {
+    pub fn build_or_load(rt: &Runtime, cfg: &TrainConfig) -> Result<DenseZoo> {
+        let preset = DENSE;
+        let store = CheckpointStore::new(crate::util::zoo_dir().join("dense"));
+        let heads: Vec<(DenseTaskKind, Tensor)> = DenseTaskKind::all()
+            .into_iter()
+            .map(|k| (k, dense::dense_head(&preset, k, 2000)))
+            .collect();
+        // Pre-train: multi-task warmup (each task a full phase) so the
+        // fine-tuned models share a strong common ancestor, like ImageNet
+        // init; fine-tuning then runs gently (lower lr), which reproduces
+        // the paper's narrow-task-vector statistics on the dense trunk.
+        let ft_cfg = TrainConfig { lr: cfg.lr * 0.2, ..*cfg };
+        let pre = store.load_or_build("pretrained", || {
+            eprintln!("[zoo] pre-training dense trunk...");
+            let art = rt.load(&format!("dense_train_seg_b{}", preset.batch))?;
+            let mut rng = Rng::new(0xDE58);
+            let mut ck = init_dense_checkpoint(&art, &mut rng)?;
+            for (k, head) in &heads {
+                let (next, _) = finetune_dense(rt, &preset, &ck, *k, head, cfg, 77)?;
+                ck = next;
+            }
+            Ok(ck)
+        })?;
+        let mut fts = Vec::new();
+        for (k, head) in &heads {
+            let ft = store.load_or_build(k.name(), || {
+                eprintln!("[zoo] fine-tuning dense task {}...", k.name());
+                let (ck, losses) =
+                    finetune_dense(rt, &preset, &pre, *k, head, &ft_cfg, 100 + k.name().len() as u64)?;
+                eprintln!(
+                    "[zoo] dense {} loss {:.3} -> {:.3}",
+                    k.name(),
+                    losses.first().unwrap_or(&f32::NAN),
+                    losses.last().unwrap_or(&f32::NAN)
+                );
+                Ok(ck)
+            })?;
+            fts.push((*k, ft));
+        }
+        Ok(DenseZoo { preset, pre, fts, heads })
+    }
+
+    pub fn task_vectors(&self) -> Result<Vec<Checkpoint>> {
+        self.fts.iter().map(|(_, ft)| ft.sub(&self.pre)).collect()
+    }
+
+    pub fn head(&self, kind: DenseTaskKind) -> &Tensor {
+        &self.heads.iter().find(|(k, _)| *k == kind).unwrap().1
+    }
+}

@@ -1,0 +1,235 @@
+//! Criterion-style micro/macro benchmark runner (criterion itself is not
+//! available offline).  Used by every `harness = false` bench target.
+//!
+//! Features: warmup phase, fixed-duration measurement, mean/std/p50/p99
+//! reporting, throughput units, and a markdown table emitter so bench
+//! output can be pasted straight into EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// items/second, if `items` was provided.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|it| it / (self.mean_ns / 1e9))
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(200),
+            min_iters: 2,
+            max_iters: 1000,
+        }
+    }
+
+    /// Run `f` repeatedly and collect timing statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while (start.elapsed() < self.measure || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples_ns),
+            std_ns: stats::std_dev(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p99_ns: stats::percentile(&samples_ns, 99.0),
+            items: None,
+        }
+    }
+
+    /// Like [`run`], tagging each iteration as processing `items` items.
+    pub fn run_throughput<F: FnMut()>(&self, name: &str, items: f64, f: F) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.items = Some(items);
+        r
+    }
+}
+
+fn fmt_time(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print a table of bench results to stdout.
+pub fn report(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}",
+        "case", "iters", "mean", "p50", "p99", "throughput"
+    );
+    for r in results {
+        let tp = r
+            .throughput()
+            .map(|t| {
+                if t > 1e9 {
+                    format!("{:.2} G/s", t / 1e9)
+                } else if t > 1e6 {
+                    format!("{:.2} M/s", t / 1e6)
+                } else if t > 1e3 {
+                    format!("{:.2} K/s", t / 1e3)
+                } else {
+                    format!("{t:.1} /s")
+                }
+            })
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}",
+            r.name,
+            r.iters,
+            fmt_time(r.mean_ns),
+            fmt_time(r.p50_ns),
+            fmt_time(r.p99_ns),
+            tp
+        );
+    }
+}
+
+/// A minimal markdown table printer used by the paper-table benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n### {title}\n");
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let body = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ");
+            format!("| {body} |")
+        };
+        println!("{}", fmt_row(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", fmt_row(&sep));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 100_000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop", || {
+            acc = acc.wrapping_add(1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bench::quick();
+        let r = b.run_throughput("items", 100.0, || {
+            std::hint::black_box(42);
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_rejects_bad_width() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["only-one".into()])
+        }));
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Declarative command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag value` / `--flag=value` options with
+//! defaults, boolean switches, and auto-generated `--help` text — the
+//! subset the `tvq` binary needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One option specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get_str(name)?.parse()?)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get_str(name)?.parse()?)
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get_str(name)?.parse()?)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A command with options; `parse` consumes raw argv tokens.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_switch: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_switch: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_switch { "" } else { " <value>" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| if o.is_switch { String::new() } else { " (required)".into() });
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        bail!("switch --{name} does not take a value");
+                    }
+                    args.switches.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                        }
+                    };
+                    args.values.insert(name, value);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if !o.is_switch && o.default.is_none() && !args.values.contains_key(o.name) {
+                bail!("missing required option --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let cmd = Command::new("t", "test").opt("preset", "vit_s", "model preset");
+        let a = cmd.parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_str("preset").unwrap(), "vit_s");
+        let a = cmd.parse(&argv(&["--preset", "vit_m"])).unwrap();
+        assert_eq!(a.get_str("preset").unwrap(), "vit_m");
+        let a = cmd.parse(&argv(&["--preset=vit_l"])).unwrap();
+        assert_eq!(a.get_str("preset").unwrap(), "vit_l");
+    }
+
+    #[test]
+    fn required_and_switch() {
+        let cmd = Command::new("t", "test").req("out", "output").switch("verbose", "chatty");
+        assert!(cmd.parse(&argv(&[])).is_err());
+        let a = cmd.parse(&argv(&["--out", "x", "--verbose"])).unwrap();
+        assert_eq!(a.get_str("out").unwrap(), "x");
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("other"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let cmd = Command::new("t", "test");
+        assert!(cmd.parse(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_and_numbers() {
+        let cmd = Command::new("t", "test").opt("n", "8", "count");
+        let a = cmd.parse(&argv(&["file.txt", "--n", "20"])).unwrap();
+        assert_eq!(a.positional, vec!["file.txt"]);
+        assert_eq!(a.get_usize("n").unwrap(), 20);
+    }
+}

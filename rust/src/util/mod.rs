@@ -1,0 +1,26 @@
+//! Shared infrastructure substrates built in-house (the offline build
+//! environment resolves only `xla` + `anyhow`): deterministic RNG, JSON,
+//! statistics, a bench runner, a property-test harness, and a CLI parser.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Repo-root-relative path helper: resolves `rel` against the crate root
+/// (`CARGO_MANIFEST_DIR`) so binaries work from any working directory.
+pub fn repo_path(rel: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// Directory where generated model zoos are cached between runs.
+pub fn zoo_dir() -> std::path::PathBuf {
+    repo_path("target/zoo")
+}
+
+/// Directory holding the AOT artifacts produced by `make artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_path("artifacts")
+}

@@ -1,0 +1,95 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` randomized inputs drawn from a
+//! caller-supplied generator; on failure it reports the failing case index
+//! and the seed that reproduces it.  Deterministic: the root seed is fixed
+//! per call site, so CI failures replay locally.
+
+use super::rng::Rng;
+
+/// Configuration for a property check.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` inputs produced by `gen`.
+///
+/// Panics (test failure) with the reproducing seed if the property returns
+/// an `Err`. The generator receives a forked RNG per case.
+pub fn check<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: generate a random f32 vector with length in [1, max_len]
+/// and values N(0, scale).
+pub fn gen_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+    let len = 1 + rng.below(max_len);
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, scale);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config { cases: 10, seed: 1 },
+            |rng| rng.below(100),
+            |&x| {
+                count += 1;
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 10, seed: 2 },
+            |rng| rng.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("x={x}")) },
+        );
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let v = gen_vec(&mut rng, 17, 1.0);
+            assert!(!v.is_empty() && v.len() <= 17);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Coordinator integration: the real PJRT backend behind the server —
+//! batched serving returns the same logits as a direct forward call, under
+//! concurrency, for both shared and per-task merged models.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use tvq::checkpoint::Checkpoint;
+use tvq::coordinator::{Server, ServerConfig, ServeModel};
+use tvq::data::VIT_S;
+use tvq::merge::MergedModel;
+use tvq::runtime::{self, Runtime};
+use tvq::tensor::Tensor;
+use tvq::train;
+use tvq::util::rng::Rng;
+
+fn make_model(per_task: bool) -> (ServeModel, Checkpoint) {
+    let rt = Runtime::new().unwrap();
+    let art = rt.load("vit_s_forward_b8").unwrap();
+    let mut rng = Rng::new(0xC0);
+    let ck = train::init_vit_checkpoint(&art, &mut rng).unwrap();
+    let n_tasks = 3;
+    let merged = if per_task {
+        // Distinct per-task variants (EMR-style family).
+        MergedModel::PerTask(
+            (0..n_tasks)
+                .map(|t| {
+                    let mut v = ck.clone();
+                    for (_, tensor) in v.iter_mut() {
+                        for x in tensor.data_mut() {
+                            *x += 0.001 * (t as f32 + 1.0);
+                        }
+                    }
+                    v
+                })
+                .collect(),
+        )
+    } else {
+        MergedModel::Shared(ck.clone())
+    };
+    let heads: Vec<Tensor> = (0..n_tasks)
+        .map(|_| Tensor::randn(&[VIT_S.dim, VIT_S.n_classes], 0.1, &mut rng))
+        .collect();
+    (
+        ServeModel { preset: &VIT_S, merged: Arc::new(merged), heads: Arc::new(heads) },
+        ck,
+    )
+}
+
+fn direct_logits(model: &ServeModel, task: usize, x: &Tensor) -> Vec<f32> {
+    // Single-item forward through the b1 artifact (no batching).  One
+    // Runtime per thread: PJRT compilation is the expensive part.
+    thread_local! {
+        static RT: Runtime = Runtime::new().unwrap();
+    }
+    RT.with(|rt| {
+    let art = rt.load("vit_s_forward_b1").unwrap();
+    let x1 = Tensor::new(vec![1, VIT_S.tokens, VIT_S.token_dim], x.data().to_vec()).unwrap();
+    let logits = runtime::forward_logits(
+        &art,
+        model.merged.for_task(task),
+        &model.heads[task],
+        &x1,
+    )
+    .unwrap();
+    logits.data().to_vec()
+    })
+}
+
+#[test]
+fn served_logits_match_direct_forward() -> Result<()> {
+    let (model, _) = make_model(false);
+    let server = Server::start(ServerConfig::default(), model.clone())?;
+    let mut rng = Rng::new(1);
+    for task in 0..3 {
+        let x = Tensor::randn(&[VIT_S.tokens, VIT_S.token_dim], 1.0, &mut rng);
+        let served = server.infer(task, &x)?;
+        let direct = direct_logits(&model, task, &x);
+        assert_eq!(served.len(), direct.len());
+        for (a, b) in served.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-3, "served {a} vs direct {b}");
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn per_task_family_routes_to_the_right_variant() -> Result<()> {
+    let (model, _) = make_model(true);
+    let server = Server::start(ServerConfig::default(), model.clone())?;
+    let mut rng = Rng::new(2);
+    let x = Tensor::randn(&[VIT_S.tokens, VIT_S.token_dim], 1.0, &mut rng);
+    let mut outs = Vec::new();
+    for task in 0..3 {
+        let served = server.infer(task, &x)?;
+        let direct = direct_logits(&model, task, &x);
+        for (a, b) in served.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        outs.push(served);
+    }
+    // Different variants ⇒ different logits (same head index 0 vs 1 uses
+    // different heads anyway, so compare variants through task-0's head is
+    // unnecessary; distinct outputs suffice as a routing signal).
+    assert_ne!(outs[0], outs[1]);
+    Ok(())
+}
+
+#[test]
+fn concurrent_mixed_task_load_is_correct_and_batched() -> Result<()> {
+    let (model, _) = make_model(false);
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_delay: Duration::from_millis(4),
+        queue_cap: 4096,
+        executors: 2,
+    };
+    let server = Arc::new(Server::start(cfg, model.clone())?);
+    let model = Arc::new(model);
+    let clients = 6usize;
+    let per_client = 20usize;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let s = server.clone();
+        let m = model.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c as u64);
+            for _ in 0..per_client {
+                let task = rng.below(3);
+                let x = Tensor::randn(&[VIT_S.tokens, VIT_S.token_dim], 1.0, &mut rng);
+                let served = s.infer(task, &x).unwrap();
+                let direct = direct_logits(&m, task, &x);
+                for (a, b) in served.iter().zip(&direct) {
+                    assert!((a - b).abs() < 1e-3, "mismatch under load");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client panicked");
+    }
+    let m = server.metrics();
+    assert_eq!(m.completed, (clients * per_client) as u64);
+    assert_eq!(m.failed, 0);
+    assert!(
+        m.mean_batch_size > 1.0,
+        "expected dynamic batching to group requests (avg {:.2})",
+        m.mean_batch_size
+    );
+    Ok(())
+}

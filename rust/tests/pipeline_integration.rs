@@ -1,0 +1,179 @@
+//! End-to-end pipeline integration: train a miniature zoo through PJRT,
+//! quantize, merge, and evaluate — the whole paper loop at test scale.
+//!
+//! Uses a dedicated tiny TrainConfig (few steps) so the test finishes in
+//! seconds; numeric claims are kept qualitative (fine-tuning helps, TVQ
+//! error ≪ FQ error, RTVQ ≤ TVQ2) rather than matching table values.
+
+use anyhow::Result;
+
+use tvq::checkpoint::Checkpoint;
+use tvq::data::classify::TaskSuite;
+use tvq::data::VIT_S;
+use tvq::exp::scheme_taus;
+use tvq::merge::{standard_methods, Merger, TaskArithmetic};
+use tvq::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
+use tvq::runtime::Runtime;
+use tvq::train::{self, TrainConfig};
+
+const N_TASKS: usize = 3;
+
+/// One shared mini-zoo per test process (training is the expensive bit).
+fn mini_zoo() -> &'static (Checkpoint, Vec<Checkpoint>, TaskSuite) {
+    use std::sync::OnceLock;
+    static ZOO: OnceLock<(Checkpoint, Vec<Checkpoint>, TaskSuite)> = OnceLock::new();
+    ZOO.get_or_init(|| {
+        let rt = Runtime::new().expect("runtime");
+        let suite = TaskSuite::new(&VIT_S, N_TASKS, 4200);
+        let cfg = TrainConfig { steps: 60, pool: 512, ..TrainConfig::default() };
+        let (pre, _) =
+            train::pretrain_classify(&rt, &VIT_S, &suite.pretrain_task(), &cfg, 0xA11)
+                .expect("pretrain");
+        let fts: Vec<Checkpoint> = suite
+            .tasks
+            .iter()
+            .map(|t| {
+                train::finetune_classify(&rt, &VIT_S, &pre, t, &cfg)
+                    .expect("finetune")
+                    .0
+            })
+            .collect();
+        (pre, fts, suite)
+    })
+}
+
+#[test]
+fn finetuning_beats_pretrained_on_target_task() {
+    let (pre, fts, suite) = mini_zoo();
+    let rt = Runtime::new().unwrap();
+    for (t, task) in suite.tasks.iter().enumerate() {
+        let acc_pre = tvq::eval::classify_accuracy(&rt, &VIT_S, pre, task).unwrap();
+        let acc_ft = tvq::eval::classify_accuracy(&rt, &VIT_S, &fts[t], task).unwrap();
+        assert!(
+            acc_ft > acc_pre + 5.0,
+            "task {t}: fine-tuned {acc_ft:.1}% should beat pre-trained {acc_pre:.1}%"
+        );
+    }
+}
+
+#[test]
+fn task_vectors_have_narrow_range_observation() {
+    // The Fig. 3 observation must hold on genuinely-trained checkpoints.
+    let (pre, fts, _) = mini_zoo();
+    for ft in fts {
+        let tau = ft.sub(pre).unwrap();
+        let (flo, fhi) = ft.weight_range();
+        let (tlo, thi) = tau.weight_range();
+        let ratio = (fhi - flo) / (thi - tlo).max(1e-9);
+        assert!(
+            ratio > 3.0,
+            "expected task-vector range well below checkpoint range, ratio={ratio}"
+        );
+    }
+}
+
+#[test]
+fn tvq_error_below_fq_error_on_trained_zoo() {
+    let (pre, fts, _) = mini_zoo();
+    let exact = scheme_taus(pre, fts, QuantScheme::Fp32).unwrap().taus;
+    for bits in [2, 3, 4, 8] {
+        let fq = scheme_taus(pre, fts, QuantScheme::Fq(bits)).unwrap().taus;
+        let tvq = scheme_taus(pre, fts, QuantScheme::Tvq(bits)).unwrap().taus;
+        let err = |a: &[Checkpoint]| -> f64 {
+            exact.iter().zip(a).map(|(x, y)| x.l2_dist(y).unwrap()).sum()
+        };
+        assert!(
+            err(&tvq) < err(&fq),
+            "TVQ must beat FQ at {bits} bits: {} vs {}",
+            err(&tvq),
+            err(&fq)
+        );
+    }
+}
+
+#[test]
+fn rtvq_error_below_tvq2_at_similar_budget() {
+    // Eq. 5: the decomposition buys error reduction at ~equal bits.
+    let (pre, fts, _) = mini_zoo();
+    let mut tvq2_err = 0.0;
+    for ft in fts {
+        let tau = ft.sub(pre).unwrap();
+        let q = QuantizedCheckpoint::quantize(&tau, 2).unwrap();
+        tvq2_err += q.quant_error(&tau).unwrap();
+    }
+    let r = Rtvq::quantize(pre, fts, 3, 2, true).unwrap();
+    let rtvq_err = r.total_quant_error(pre, fts).unwrap();
+    assert!(
+        rtvq_err < tvq2_err,
+        "RTVQ-B3O2 ({rtvq_err}) must beat TVQ-INT2 ({tvq2_err})"
+    );
+}
+
+#[test]
+fn error_correction_reduces_rtvq_error() {
+    let (pre, fts, _) = mini_zoo();
+    for (bb, bo) in [(2u8, 2u8), (3, 2), (4, 3)] {
+        let with_ec = Rtvq::quantize(pre, fts, bb, bo, true)
+            .unwrap()
+            .total_quant_error(pre, fts)
+            .unwrap();
+        let without = Rtvq::quantize(pre, fts, bb, bo, false)
+            .unwrap()
+            .total_quant_error(pre, fts)
+            .unwrap();
+        assert!(
+            with_ec <= without * 1.02,
+            "EC should not hurt (B{bb}O{bo}): {with_ec} vs {without}"
+        );
+    }
+}
+
+#[test]
+fn every_merge_method_runs_on_trained_vectors_and_beats_chance() {
+    let (pre, fts, suite) = mini_zoo();
+    let rt = Runtime::new().unwrap();
+    let taus = scheme_taus(pre, fts, QuantScheme::Tvq(3)).unwrap().taus;
+    let chance = 100.0 / VIT_S.n_classes as f64;
+    for method in standard_methods() {
+        let merged = method.merge(pre, &taus).unwrap();
+        let mut acc = 0.0;
+        for (t, task) in suite.tasks.iter().enumerate() {
+            acc +=
+                tvq::eval::classify_accuracy(&rt, &VIT_S, merged.for_task(t), task).unwrap();
+        }
+        acc /= suite.tasks.len() as f64;
+        assert!(
+            acc > chance * 1.5,
+            "{} @ TVQ3 should beat chance ({chance:.0}%): got {acc:.1}%",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn quantized_merge_tracks_fp32_merge() -> Result<()> {
+    // The paper's headline: merging quantized task vectors performs like
+    // merging full-precision ones.  At mini-zoo scale we allow a loose
+    // band (10 accuracy points).
+    let (pre, fts, suite) = mini_zoo();
+    let rt = Runtime::new()?;
+    let ta = TaskArithmetic::default();
+    let mut accs = Vec::new();
+    for scheme in [QuantScheme::Fp32, QuantScheme::Tvq(4), QuantScheme::Rtvq(3, 2)] {
+        let taus = scheme_taus(pre, fts, scheme)?.taus;
+        let merged = ta.merge(pre, &taus)?;
+        let mut acc = 0.0;
+        for (t, task) in suite.tasks.iter().enumerate() {
+            acc += tvq::eval::classify_accuracy(&rt, &VIT_S, merged.for_task(t), task)?;
+        }
+        accs.push(acc / suite.tasks.len() as f64);
+    }
+    let fp32 = accs[0];
+    for (i, acc) in accs.iter().enumerate().skip(1) {
+        assert!(
+            (acc - fp32).abs() < 10.0,
+            "scheme {i} diverges from FP32 merge: {acc:.1} vs {fp32:.1}"
+        );
+    }
+    Ok(())
+}

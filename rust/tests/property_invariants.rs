@@ -1,0 +1,390 @@
+//! Cross-module property tests: the paper's equations as checked
+//! invariants over randomized inputs (quantizer error bound Eq. 3, RTVQ
+//! decomposition Eq. 4-5, merge-method algebra, packing round-trips).
+
+use tvq::checkpoint::Checkpoint;
+use tvq::merge::{EmrMerging, Individual, MergedModel, Merger, TaskArithmetic};
+use tvq::quant::{fused, AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint, Rtvq};
+use tvq::tensor::Tensor;
+use tvq::util::prop::{check, gen_vec, Config};
+use tvq::util::rng::Rng;
+
+fn rand_ck(rng: &mut Rng, std: f32) -> Checkpoint {
+    let mut ck = Checkpoint::new();
+    let shapes: &[&[usize]] = &[&[7, 5], &[13], &[3, 2, 4]];
+    for (i, shape) in shapes.iter().enumerate() {
+        ck.insert(&format!("t{i}"), Tensor::randn(shape, std, rng));
+    }
+    ck
+}
+
+#[test]
+fn prop_affine_error_bound_eq3() {
+    // |x - dq(q(x))| <= Delta/2 for every in-range value (Eq. 3).
+    check(
+        Config { cases: 128, seed: 0xE43 },
+        |rng| {
+            let bits = 1 + rng.below(8) as u8;
+            let v = gen_vec(rng, 300, 0.1);
+            (bits, v)
+        },
+        |(bits, v)| {
+            let p = AffineParams::from_slice(v, *bits).map_err(|e| e.to_string())?;
+            let bound = p.error_bound() as f64 + 1e-7;
+            for &x in v {
+                let xhat = p.dequantize_code(p.quantize_value(x)) as f64;
+                if (x as f64 - xhat).abs() > bound {
+                    return Err(format!(
+                        "bits={bits}: |{x} - {xhat}| > Delta/2 = {bound}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bitpack_roundtrip_arbitrary_lengths() {
+    check(
+        Config { cases: 128, seed: 0xB17 },
+        |rng| {
+            let bits = 1 + rng.below(8) as u8;
+            let len = rng.below(200);
+            let codes: Vec<u32> =
+                (0..len).map(|_| rng.next_u64() as u32 & ((1u32 << bits) - 1)).collect();
+            (bits, codes)
+        },
+        |(bits, codes)| {
+            let packed = BitPacked::pack(codes, *bits).map_err(|e| e.to_string())?;
+            if packed.unpack() != *codes {
+                return Err("unpack != original".into());
+            }
+            // Byte round-trip too.
+            let bytes = packed.to_bytes();
+            let (back, used) = BitPacked::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if used != bytes.len() || back.unpack() != *codes {
+                return Err("byte round-trip failed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_group_quantize_matches_per_group_affine() {
+    check(
+        Config { cases: 64, seed: 0x64 },
+        |rng| {
+            let group = [4usize, 8, 16][rng.below(3)];
+            let groups = 1 + rng.below(6);
+            let bits = 2 + rng.below(7) as u8;
+            let mut v = vec![0.0f32; group * groups];
+            rng.fill_normal(&mut v, 0.05);
+            (bits, group, v)
+        },
+        |(bits, group, v)| {
+            let gq = GroupQuantized::quantize(v, *bits, *group).map_err(|e| e.to_string())?;
+            let dq = gq.dequantize();
+            for (chunk_i, chunk) in v.chunks_exact(*group).enumerate() {
+                let p = AffineParams::from_slice(chunk, *bits).map_err(|e| e.to_string())?;
+                for (j, &x) in chunk.iter().enumerate() {
+                    let want = p.dequantize_code(p.quantize_value(x));
+                    let got = dq[chunk_i * group + j];
+                    if (want - got).abs() > 1e-6 {
+                        return Err(format!("group {chunk_i}[{j}]: {got} != {want}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_flat_merge_matches_naive() {
+    check(
+        Config { cases: 48, seed: 0xF0 },
+        |rng| {
+            let group = 8usize;
+            let n = group * (1 + rng.below(8));
+            let t = 1 + rng.below(4);
+            let bits = 2 + rng.below(7) as u8;
+            let mut pre = vec![0.0f32; n];
+            rng.fill_normal(&mut pre, 0.3);
+            let taus: Vec<Vec<f32>> = (0..t)
+                .map(|_| {
+                    let mut v = vec![0.0f32; n];
+                    rng.fill_normal(&mut v, 0.02);
+                    v
+                })
+                .collect();
+            let lams: Vec<f32> = (0..t).map(|_| rng.uniform(0.0, 1.0)).collect();
+            (bits, group, pre, taus, lams)
+        },
+        |(bits, group, pre, taus, lams)| {
+            let gqs: Vec<GroupQuantized> = taus
+                .iter()
+                .map(|v| GroupQuantized::quantize(v, *bits, *group).unwrap())
+                .collect();
+            let refs: Vec<&GroupQuantized> = gqs.iter().collect();
+            let mut fused_out = Vec::new();
+            fused::dequant_merge_flat(pre, &refs, lams, &mut fused_out)
+                .map_err(|e| e.to_string())?;
+            // Naive: dequantize each, accumulate.
+            let mut naive = pre.clone();
+            for (gq, lam) in gqs.iter().zip(lams) {
+                for (d, v) in naive.iter_mut().zip(gq.dequantize()) {
+                    *d += lam * v;
+                }
+            }
+            for (i, (a, b)) in fused_out.iter().zip(&naive).enumerate() {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("[{i}] fused {a} != naive {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tvq_checkpoint_error_within_eq3_budget() {
+    // Per-tensor: ||tau - tau_hat||_inf <= Delta/2 with Delta from the
+    // tensor's own range — the Eq. 3 bound lifted to checkpoints.
+    check(
+        Config { cases: 48, seed: 0x7C },
+        |rng| {
+            let bits = 2 + rng.below(7) as u8;
+            let std = rng.uniform(0.001, 0.2);
+            let mut fork = rng.fork(9);
+            (bits, rand_ck(&mut fork, std))
+        },
+        |(bits, ck)| {
+            let q = QuantizedCheckpoint::quantize(ck, *bits).map_err(|e| e.to_string())?;
+            let dq = q.dequantize().map_err(|e| e.to_string())?;
+            for (name, t) in ck.iter() {
+                let (lo, hi) = {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for &v in t.data() {
+                        lo = lo.min(v);
+                        hi = hi.max(v);
+                    }
+                    (lo, hi)
+                };
+                let delta = (hi - lo) / ((1u32 << *bits) - 1) as f32;
+                let bound = delta / 2.0 + 1e-6;
+                let back = dq.get(name).map_err(|e| e.to_string())?;
+                for (a, b) in t.data().iter().zip(back.data()) {
+                    if (a - b).abs() > bound {
+                        return Err(format!("{name}: |{a}-{b}| > {bound}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rtvq_reconstruction_identity_eq4() {
+    // With error correction, tau_hat_t = dq(offset_t) + dq(base) must
+    // approach tau_t as offset bits grow; at 8 bits the residual is tiny.
+    check(
+        Config { cases: 32, seed: 0x44 },
+        |rng| {
+            let mut fork = rng.fork(1);
+            let pre = rand_ck(&mut fork, 0.3);
+            let fts: Vec<Checkpoint> = (0..3)
+                .map(|i| {
+                    let mut ft = pre.clone();
+                    let mut r = fork.fork(i as u64);
+                    for (_, t) in ft.iter_mut() {
+                        for v in t.data_mut() {
+                            *v += r.normal_f32(0.02);
+                        }
+                    }
+                    ft
+                })
+                .collect();
+            (pre, fts)
+        },
+        |(pre, fts)| {
+            let r = Rtvq::quantize(pre, fts, 8, 8, true).map_err(|e| e.to_string())?;
+            for (t, ft) in fts.iter().enumerate() {
+                let tau = ft.sub(pre).unwrap();
+                let tau_hat = r.dequantize_task(t).map_err(|e| e.to_string())?;
+                let err = tau.l2_dist(&tau_hat).unwrap();
+                let norm = tau.l2_dist(&tau.scale(0.0)).unwrap();
+                if err > 0.02 * norm.max(1e-6) {
+                    return Err(format!("task {t}: rel err {}", err / norm));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rtvq_beats_tvq_at_two_bits_eq5() {
+    // Eq. 5 on random zoos whose offsets are much smaller than the shared
+    // drift — the regime the decomposition is designed for.
+    check(
+        Config { cases: 24, seed: 0x55 },
+        |rng| {
+            let mut fork = rng.fork(3);
+            let pre = rand_ck(&mut fork, 0.3);
+            // Shared drift + small per-task offsets.
+            let mut drift = pre.scale(0.0);
+            for (_, t) in drift.iter_mut() {
+                for v in t.data_mut() {
+                    *v = fork.normal_f32(0.05);
+                }
+            }
+            let fts: Vec<Checkpoint> = (0..4)
+                .map(|i| {
+                    let mut ft = pre.add(&drift).unwrap();
+                    let mut r = fork.fork(100 + i as u64);
+                    for (_, t) in ft.iter_mut() {
+                        for v in t.data_mut() {
+                            *v += r.normal_f32(0.01);
+                        }
+                    }
+                    ft
+                })
+                .collect();
+            (pre, fts)
+        },
+        |(pre, fts)| {
+            let mut tvq2 = 0.0;
+            for ft in fts {
+                let tau = ft.sub(pre).unwrap();
+                let q = QuantizedCheckpoint::quantize(&tau, 2).unwrap();
+                tvq2 += q.quant_error(&tau).unwrap();
+            }
+            let r = Rtvq::quantize(pre, fts, 3, 2, true).map_err(|e| e.to_string())?;
+            let rtvq = r.total_quant_error(pre, fts).unwrap();
+            if rtvq >= tvq2 {
+                return Err(format!("RTVQ {rtvq} >= TVQ2 {tvq2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_task_arithmetic_single_task_identity() {
+    // TA with one task: merged = pre + lambda * tau, exactly.
+    check(
+        Config { cases: 32, seed: 0x1A },
+        |rng| {
+            let mut fork = rng.fork(5);
+            let pre = rand_ck(&mut fork, 0.3);
+            let tau = rand_ck(&mut fork, 0.02);
+            let lam = fork.uniform(0.1, 1.0);
+            (pre, tau, lam)
+        },
+        |(pre, tau, lam)| {
+            let merged = TaskArithmetic::new(*lam)
+                .merge(pre, std::slice::from_ref(tau))
+                .map_err(|e| e.to_string())?;
+            let MergedModel::Shared(m) = merged else {
+                return Err("TA must be shared".into());
+            };
+            let mut want = pre.clone();
+            want.axpy(*lam, tau).unwrap();
+            for (name, t) in want.iter() {
+                let got = m.get(name).unwrap();
+                for (a, b) in t.data().iter().zip(got.data()) {
+                    if (a - b).abs() > 1e-5 {
+                        return Err(format!("{name}: {a} != {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_emr_single_task_reconstructs_finetuned_model() {
+    // With one task, EMR's mask keeps every nonzero coordinate with the
+    // elected sign and the rescale is 1 ⇒ model == pre + tau.
+    check(
+        Config { cases: 32, seed: 0xE1 },
+        |rng| {
+            let mut fork = rng.fork(7);
+            let pre = rand_ck(&mut fork, 0.3);
+            let tau = rand_ck(&mut fork, 0.02);
+            (pre, tau)
+        },
+        |(pre, tau)| {
+            let emr = EmrMerging;
+            let arts = emr.artifacts(std::slice::from_ref(tau)).map_err(|e| e.to_string())?;
+            let model = emr.model_for_task(pre, &arts, 0).map_err(|e| e.to_string())?;
+            let mut want = pre.clone();
+            want.axpy(1.0, tau).unwrap();
+            for (name, t) in want.iter() {
+                let got = model.get(name).unwrap();
+                for (a, b) in t.data().iter().zip(got.data()) {
+                    if (a - b).abs() > 1e-4 {
+                        return Err(format!("{name}: {a} != {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_individual_returns_per_task_models() {
+    check(
+        Config { cases: 16, seed: 0x1D },
+        |rng| {
+            let mut fork = rng.fork(11);
+            let pre = rand_ck(&mut fork, 0.3);
+            let taus: Vec<Checkpoint> =
+                (0..3).map(|_| rand_ck(&mut fork, 0.02)).collect();
+            (pre, taus)
+        },
+        |(pre, taus)| {
+            let merged = Individual::default().merge(pre, taus).map_err(|e| e.to_string())?;
+            if merged.n_variants() != taus.len() {
+                return Err("wrong variant count".into());
+            }
+            for (t, tau) in taus.iter().enumerate() {
+                let mut want = pre.clone();
+                want.axpy(1.0, tau).unwrap();
+                if merged.for_task(t) != &want {
+                    return Err(format!("task {t} model mismatch"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_flatten_roundtrip() {
+    check(
+        Config { cases: 48, seed: 0xF1 },
+        |rng| {
+            let mut fork = rng.fork(13);
+            let block = [1usize, 8, 64][fork.below(3)];
+            (rand_ck(&mut fork, 0.5), block)
+        },
+        |(ck, block)| {
+            let flat = ck.flatten_padded(*block);
+            if flat.len() % block != 0 || flat.len() < ck.numel() {
+                return Err("bad padding".into());
+            }
+            let back = ck.unflatten_like(&flat).map_err(|e| e.to_string())?;
+            if &back != ck {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
