@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate for the tvq crate.  Run from anywhere; fails fast.
+#
+#   ./ci.sh          # build + tests + fmt + clippy
+#   ./ci.sh --quick  # build + tests only
+#
+# The workspace vendors its only dependency (third_party/anyhow), so every
+# step below works fully offline (--offline keeps cargo from trying the
+# network on machines without a registry mirror).
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+CARGO_FLAGS=(--offline)
+
+echo "==> cargo build --release"
+cargo build --release "${CARGO_FLAGS[@]}"
+
+echo "==> cargo test -q"
+cargo test -q "${CARGO_FLAGS[@]}"
+
+if [[ "${1:-}" == "--quick" ]]; then
+    echo "ci: quick gate passed"
+    exit 0
+fi
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
+
+echo "ci: all gates passed"

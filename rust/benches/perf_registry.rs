@@ -1,0 +1,113 @@
+//! Performance bench for the packed task-vector registry: open (index
+//! only), lazy single-task load, full merge materialization from packed
+//! payloads, and the same merge from f32 `TVQC` checkpoints — the
+//! cold-start cost a serving node actually pays.
+//!
+//! Run: `cargo bench --bench perf_registry`
+
+use tvq::checkpoint::{Checkpoint, CheckpointStore};
+use tvq::merge::TaskArithmetic;
+use tvq::quant::QuantScheme;
+use tvq::registry::{
+    build_registry, merge_from_source, F32ZooSource, PackedRegistrySource, Registry,
+};
+use tvq::tensor::Tensor;
+use tvq::util::bench::{report, Bench};
+use tvq::util::rng::Rng;
+
+const N_TASKS: usize = 8;
+
+fn zoo(seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+    let mut rng = Rng::new(seed);
+    let mut pre = Checkpoint::new();
+    // ~0.6M params/ckpt: big enough that load/dequant dominates.
+    for blk in 0..4 {
+        pre.insert(&format!("blk{blk:02}/w"), Tensor::randn(&[384, 384], 0.3, &mut rng));
+    }
+    pre.insert("head/b", Tensor::randn(&[384], 0.1, &mut rng));
+    let fts = (0..N_TASKS)
+        .map(|_| {
+            let mut tau = Checkpoint::new();
+            for (name, t) in pre.iter() {
+                tau.insert(name, Tensor::randn(t.shape(), 0.01, &mut rng));
+            }
+            pre.add(&tau).unwrap()
+        })
+        .collect();
+    (pre, fts)
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let (pre, fts) = zoo(0xBE9C);
+    let params = pre.numel();
+    let dir = std::env::temp_dir().join("tvq_perf_registry");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Materialize both durable forms.
+    let store = CheckpointStore::new(dir.join("f32"));
+    for (t, ft) in fts.iter().enumerate() {
+        store.save(&format!("task{t:02}"), ft)?;
+    }
+    let path = dir.join("zoo.qtvc");
+    let summary = build_registry(&pre, &fts, QuantScheme::Tvq(4), &path)?;
+    eprintln!(
+        "[bench:registry] {} tasks x {params} params; registry {} B on disk",
+        N_TASKS, summary.file_bytes
+    );
+
+    let b = Bench::quick();
+    let mut results = Vec::new();
+
+    // Open = header + offset table only; independent of payload size.
+    results.push(b.run("registry_open_index", || {
+        std::hint::black_box(Registry::open(&path).unwrap());
+    }));
+
+    // One lazy task: seek + one section read + dequantize.
+    let reg = Registry::open(&path)?;
+    results.push(b.run_throughput("registry_lazy_task_vector", params as f64, || {
+        std::hint::black_box(reg.load_task_vector(3).unwrap());
+    }));
+
+    // Cold merge straight from packed payloads (all 8 tasks).
+    let ta = TaskArithmetic::default();
+    results.push(b.run_throughput(
+        "merge8_from_packed_registry",
+        (params * N_TASKS) as f64,
+        || {
+            let src = PackedRegistrySource::open(&path).unwrap();
+            std::hint::black_box(merge_from_source(&ta, &pre, &src, None).unwrap());
+        },
+    ));
+
+    // Same merge from f32 checkpoints loaded off disk (the old path).
+    results.push(b.run_throughput(
+        "merge8_from_f32_checkpoints",
+        (params * N_TASKS) as f64,
+        || {
+            let fts: Vec<Checkpoint> = (0..N_TASKS)
+                .map(|t| store.load(&format!("task{t:02}")).unwrap())
+                .collect();
+            let src = F32ZooSource::new(&pre, &fts);
+            std::hint::black_box(merge_from_source(&ta, &pre, &src, None).unwrap());
+        },
+    ));
+
+    // Subset materialization: 2 of 8 tasks, the lazy win.
+    results.push(b.run_throughput(
+        "merge2of8_from_packed_registry",
+        (params * 2) as f64,
+        || {
+            let src = PackedRegistrySource::open(&path).unwrap();
+            std::hint::black_box(
+                merge_from_source(&ta, &pre, &src, Some(&[2, 5])).unwrap(),
+            );
+        },
+    ));
+
+    report("registry load/merge", &results);
+    std::fs::remove_dir_all(&dir).ok();
+    eprintln!("[bench:registry] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -25,26 +25,7 @@ use crate::tensor::Tensor;
 const MAGIC: u32 = 0x4351_5654; // "TVQC"
 const VERSION: u32 = 1;
 
-fn crc32(bytes: &[u8]) -> u32 {
-    // CRC-32 (IEEE 802.3), table-driven.
-    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
-    let table = TABLE.get_or_init(|| {
-        let mut t = [0u32; 256];
-        for (i, e) in t.iter_mut().enumerate() {
-            let mut c = i as u32;
-            for _ in 0..8 {
-                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
-            }
-            *e = c;
-        }
-        t
-    });
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in bytes {
-        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
-}
+use crate::util::crc32;
 
 pub(super) fn save_checkpoint(ck: &Checkpoint, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -108,26 +89,44 @@ pub(super) fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
     fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?
         .read_to_end(&mut bytes)?;
+    // Validate the header (magic + version) before anything else so a
+    // wrong-format or future-version file gets a precise diagnostic
+    // instead of a downstream CRC/parse failure.
     if bytes.len() < 16 {
-        bail!("checkpoint file too small: {}", path.display());
+        bail!(
+            "truncated TVQC header in {}: {} bytes, need at least 16 \
+             (magic + version + count + crc)",
+            path.display(),
+            bytes.len()
+        );
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        bail!(
+            "not a TVQC checkpoint: {} (magic {magic:#010x}, expected {MAGIC:#010x})",
+            path.display()
+        );
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!(
+            "unsupported TVQC version {version} in {} (this build reads v{VERSION}; \
+             packed registries use the separate QTVC v2 format — see tvq::registry)",
+            path.display()
+        );
     }
     let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
     let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
     let got = crc32(body);
     if want != got {
         bail!(
-            "checkpoint CRC mismatch in {} (corrupt cache? delete and regenerate)",
+            "checkpoint CRC mismatch in {} (corrupt or truncated cache? \
+             delete and regenerate)",
             path.display()
         );
     }
-    let mut r = Reader { buf: body, pos: 0 };
-    if r.u32()? != MAGIC {
-        bail!("not a TVQC checkpoint: {}", path.display());
-    }
-    let version = r.u32()?;
-    if version != VERSION {
-        bail!("unsupported TVQC version {version}");
-    }
+    // Skip the 8 header bytes (magic + version) validated above.
+    let mut r = Reader { buf: body, pos: 8 };
     let count = r.u32()? as usize;
     let mut ck = Checkpoint::new();
     for _ in 0..count {
@@ -264,5 +263,52 @@ mod tests {
     fn crc32_known_vector() {
         // CRC-32 of "123456789" is 0xCBF43926.
         assert_eq!(super::crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn unknown_version_rejected_with_clear_error() {
+        let dir = std::env::temp_dir().join("tvq_store_test_ver");
+        let path = dir.join("x.ckpt");
+        sample().save(&path).unwrap();
+        // Bump the version field and re-seal the CRC so only the version
+        // check can fire (the file is otherwise intact).
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let body_len = bytes.len() - 4;
+        let crc = super::crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("unsupported TVQC version 99"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_header_rejected_with_clear_error() {
+        let dir = std::env::temp_dir().join("tvq_store_test_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.ckpt");
+        // 8 bytes: magic + version only — header cut short.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&super::MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&super::VERSION.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated TVQC header"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = std::env::temp_dir().join("tvq_store_test_magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.ckpt");
+        std::fs::write(&path, [0u8; 32]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a TVQC checkpoint"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -3,23 +3,56 @@
 //! A deployment typically keeps several merged variants warm (e.g. task
 //! arithmetic at TVQ-INT3 next to EMR at RTVQ-B3O2) while sharing one
 //! pre-trained trunk and the packed task-vector payloads.  The cache
-//! builds variants on first request and reports exactly how much memory
-//! each one holds.
+//! builds variants on first request — **once** per key even under
+//! concurrent misses (single-flight in-flight guard) — and reports
+//! exactly how much memory each one holds.
+//!
+//! Variants can be built from any
+//! [`TaskVectorSource`](crate::registry::TaskVectorSource); with the
+//! packed-registry backend the build reads only the quantized sections it
+//! needs, so a cold serving node goes registry-file → merged variant
+//! without ever materializing the f32 zoo
+//! ([`get_or_build_merged`](ModelCache::get_or_build_merged)).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::merge::MergedModel;
+use crate::checkpoint::Checkpoint;
+use crate::merge::{MergedModel, Merger};
+use crate::registry::{merge_from_source, TaskVectorSource};
 
 /// Cache key: (merge method name, scheme label).
 pub type VariantKey = (String, String);
+
+/// Single-flight ticket: waiters block on the condvar until the leader
+/// flips the flag.
+type Ticket = Arc<(Mutex<bool>, Condvar)>;
 
 /// Thread-safe build-on-miss cache of merged model variants.
 #[derive(Default)]
 pub struct ModelCache {
     inner: Mutex<HashMap<VariantKey, Arc<MergedModel>>>,
+    inflight: Mutex<HashMap<VariantKey, Ticket>>,
+}
+
+/// Clears the in-flight ticket and wakes waiters when the leader exits —
+/// including by error return or panic, so waiters never hang.
+struct TicketGuard<'a> {
+    cache: &'a ModelCache,
+    key: VariantKey,
+}
+
+impl Drop for TicketGuard<'_> {
+    fn drop(&mut self) {
+        let ticket = self.cache.inflight.lock().unwrap().remove(&self.key);
+        if let Some(t) = ticket {
+            let (done, cv) = &*t;
+            *done.lock().unwrap() = true;
+            cv.notify_all();
+        }
+    }
 }
 
 impl ModelCache {
@@ -28,19 +61,77 @@ impl ModelCache {
     }
 
     /// Get the cached variant, building it with `build` on a miss.
-    /// Concurrent misses on the same key may both build; the first insert
-    /// wins (builds are deterministic, so both results are identical).
+    ///
+    /// Concurrent misses on the same key build **once**: the first caller
+    /// becomes the leader, everyone else blocks until the leader
+    /// publishes (or fails — then one waiter takes over and rebuilds).
+    /// Builds run outside all cache locks, so slow builds of different
+    /// keys proceed in parallel.
     pub fn get_or_build<F>(&self, method: &str, scheme: &str, build: F) -> Result<Arc<MergedModel>>
     where
         F: FnOnce() -> Result<MergedModel>,
     {
         let key = (method.to_string(), scheme.to_string());
-        if let Some(m) = self.inner.lock().unwrap().get(&key) {
-            return Ok(m.clone());
+        let mut build = Some(build);
+        loop {
+            if let Some(m) = self.inner.lock().unwrap().get(&key) {
+                return Ok(m.clone());
+            }
+            // Miss: become the single-flight leader or wait for one.
+            let wait_on: Option<Ticket> = {
+                let mut inflight = self.inflight.lock().unwrap();
+                // Re-check the cache under the in-flight lock: a leader
+                // publishes *before* clearing its ticket, so no ticket +
+                // a cache hit here means the work already finished.
+                if let Some(m) = self.inner.lock().unwrap().get(&key) {
+                    return Ok(m.clone());
+                }
+                let existing = inflight.get(&key).cloned();
+                if existing.is_none() {
+                    inflight.insert(
+                        key.clone(),
+                        Arc::new((Mutex::new(false), Condvar::new())),
+                    );
+                }
+                existing
+            };
+            match wait_on {
+                Some(ticket) => {
+                    let (done, cv) = &*ticket;
+                    let mut done = done.lock().unwrap();
+                    while !*done {
+                        done = cv.wait(done).unwrap();
+                    }
+                    // Re-loop: cache hit if the leader succeeded; if it
+                    // failed, this thread may become the next leader.
+                }
+                None => {
+                    let _guard = TicketGuard { cache: self, key: key.clone() };
+                    let built = (build.take().expect("a caller leads at most once"))()?;
+                    let arc = Arc::new(built);
+                    self.inner.lock().unwrap().insert(key, arc.clone());
+                    return Ok(arc);
+                }
+            }
         }
-        let built = Arc::new(build()?);
-        let mut map = self.inner.lock().unwrap();
-        Ok(map.entry(key).or_insert(built).clone())
+    }
+
+    /// Build (or fetch) the variant for `merger` over `source`'s task
+    /// vectors, keyed by (method name, source identity).  The identity
+    /// ([`TaskVectorSource::source_id`]) qualifies the scheme label with
+    /// the backing artifact (registry path), so two zoos packed at the
+    /// same scheme never share a cached variant.  With a
+    /// [`PackedRegistrySource`](crate::registry::PackedRegistrySource)
+    /// this materializes a merged model straight from packed payloads.
+    pub fn get_or_build_merged(
+        &self,
+        merger: &dyn Merger,
+        pre: &Checkpoint,
+        source: &dyn TaskVectorSource,
+    ) -> Result<Arc<MergedModel>> {
+        self.get_or_build(merger.name(), &source.source_id(), || {
+            merge_from_source(merger, pre, source, None)
+        })
     }
 
     pub fn contains(&self, method: &str, scheme: &str) -> bool {
@@ -94,6 +185,8 @@ mod tests {
     use super::*;
     use crate::checkpoint::Checkpoint;
     use crate::tensor::Tensor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
 
     fn model() -> MergedModel {
         let mut ck = Checkpoint::new();
@@ -125,6 +218,9 @@ mod tests {
         let r = cache.get_or_build("ta", "x", || anyhow::bail!("boom"));
         assert!(r.is_err());
         assert!(cache.is_empty());
+        // The failed build must not leave a stuck in-flight ticket.
+        let ok = cache.get_or_build("ta", "x", || Ok(model()));
+        assert!(ok.is_ok());
     }
 
     #[test]
@@ -152,5 +248,70 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_misses_build_exactly_once() {
+        // The duplicate-build race: N threads miss the same key at once;
+        // the slow build must run exactly once.
+        let cache = Arc::new(ModelCache::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = cache.clone();
+            let b = builds.clone();
+            let bar = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                bar.wait();
+                let m = c
+                    .get_or_build("emr", "RTVQ-B3O2", || {
+                        b.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(40));
+                        Ok(model())
+                    })
+                    .unwrap();
+                assert_eq!(m.n_variants(), 1);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "concurrent misses double-built");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn failed_leader_hands_off_to_a_waiter() {
+        let cache = Arc::new(ModelCache::new());
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = cache.clone();
+            let a = attempts.clone();
+            let bar = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                bar.wait();
+                c.get_or_build("ta", "flaky", || {
+                    let n = a.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(20));
+                    if n == 0 {
+                        anyhow::bail!("first build fails")
+                    }
+                    Ok(model())
+                })
+                .is_ok()
+            }));
+        }
+        let oks = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .filter(|&ok| ok)
+            .count();
+        // Exactly the first leader fails; exactly one waiter rebuilds.
+        assert_eq!(oks, 3);
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+        assert!(cache.contains("ta", "flaky"));
     }
 }

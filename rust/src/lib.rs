@@ -10,7 +10,9 @@
 //! vector + per-task low-bit offsets with error correction) — is implemented
 //! natively in this crate ([`quant`]) together with every substrate it
 //! needs: a tensor library ([`tensor`]), a checkpoint store
-//! ([`checkpoint`]), eight merging algorithms ([`merge`]), synthetic task
+//! ([`checkpoint`]), the packed `QTVC` task-vector registry — quantized
+//! payloads as the durable, lazily-loaded serving artifact ([`registry`]) —
+//! eight merging algorithms ([`merge`]), synthetic task
 //! suites ([`data`]), a PJRT runtime that executes the AOT-lowered JAX/
 //! Pallas artifacts ([`runtime`]), fine-tuning drivers ([`train`]),
 //! evaluation metrics ([`eval`]), a serving coordinator ([`coordinator`]),
@@ -48,6 +50,7 @@ pub mod eval;
 pub mod exp;
 pub mod merge;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
 pub mod tensor;
 pub mod train;

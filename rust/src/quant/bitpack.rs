@@ -194,6 +194,51 @@ impl BitPacked {
         out
     }
 
+    /// Exact packed payload: the little-endian byte stream of the codes,
+    /// `storage_bytes()` long.  Unlike [`to_bytes`](Self::to_bytes) this
+    /// carries no header and no u64-word padding — it is the bit-exact
+    /// wire form the `QTVC` v2 registry stores, so on-disk size equals
+    /// `ceil(len * bits / 8)` to the byte.
+    pub fn packed_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.truncate(self.storage_bytes());
+        out
+    }
+
+    /// Inverse of [`packed_bytes`](Self::packed_bytes): rebuild from the
+    /// headerless byte stream.  `bytes` must be exactly
+    /// `ceil(len * bits / 8)` long; stray bits past the final code are
+    /// cleared so the result compares equal to the original `pack()`.
+    pub fn from_packed_bytes(bits: u8, len: usize, bytes: &[u8]) -> Result<Self> {
+        if !(1..=8).contains(&bits) {
+            bail!("bits must be in 1..=8, got {bits}");
+        }
+        let total_bits = len
+            .checked_mul(bits as usize)
+            .ok_or_else(|| anyhow::anyhow!("code count {len} at {bits} bits overflows"))?;
+        let nbytes = total_bits.div_ceil(8);
+        if bytes.len() != nbytes {
+            bail!(
+                "packed payload is {} bytes, expected {nbytes} for {len} codes at {bits} bits",
+                bytes.len()
+            );
+        }
+        let mut words = vec![0u64; total_bits.div_ceil(64)];
+        for (i, &b) in bytes.iter().enumerate() {
+            words[i / 8] |= (b as u64) << (8 * (i % 8));
+        }
+        let tail = total_bits % 64;
+        if tail != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+        Ok(Self { bits, len, words })
+    }
+
     /// Deserialize; returns (value, bytes consumed).
     pub fn from_bytes(buf: &[u8]) -> Result<(Self, usize)> {
         if buf.len() < 13 {
@@ -288,6 +333,54 @@ mod tests {
         bytes[0] = 11; // invalid bits
         assert!(BitPacked::from_bytes(&bytes).is_err());
         assert!(BitPacked::from_bytes(&bytes[..5]).is_err());
+    }
+
+    #[test]
+    fn packed_bytes_roundtrip_all_widths_adversarial_lengths() {
+        // Word-straddling widths (3/5/6/7 bits) are the dangerous cases:
+        // codes cross u64 boundaries, and the final byte is partial for
+        // most lengths.  Exercise every width over lengths chosen to land
+        // on and around word/byte boundaries.
+        for bits in 1u8..=8 {
+            let maxcode = (1u32 << bits) - 1;
+            for &len in &[1usize, 2, 3, 7, 8, 9, 21, 63, 64, 65, 127, 128, 129, 1000] {
+                let codes: Vec<u32> = (0..len)
+                    .map(|i| (i as u32).wrapping_mul(2654435761) & maxcode)
+                    .collect();
+                let p = BitPacked::pack(&codes, bits).unwrap();
+                let wire = p.packed_bytes();
+                assert_eq!(
+                    wire.len(),
+                    (len * bits as usize).div_ceil(8),
+                    "bits={bits} len={len}: wire not byte-exact"
+                );
+                let q = BitPacked::from_packed_bytes(bits, len, &wire).unwrap();
+                assert_eq!(q, p, "bits={bits} len={len}: struct mismatch");
+                assert_eq!(q.unpack(), codes, "bits={bits} len={len}: code mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn from_packed_bytes_validates_geometry() {
+        let p = BitPacked::pack(&[1, 2, 3, 4, 5], 3).unwrap();
+        let wire = p.packed_bytes();
+        assert!(BitPacked::from_packed_bytes(0, 5, &wire).is_err());
+        assert!(BitPacked::from_packed_bytes(9, 5, &wire).is_err());
+        assert!(BitPacked::from_packed_bytes(3, 6, &wire).is_err());
+        assert!(BitPacked::from_packed_bytes(3, 5, &wire[..1]).is_err());
+    }
+
+    #[test]
+    fn from_packed_bytes_clears_stray_tail_bits() {
+        // 3 codes x 3 bits = 9 bits -> 2 bytes with 7 stray bits in the
+        // second byte; a corrupted tail must not leak into equality.
+        let p = BitPacked::pack(&[7, 0, 7], 3).unwrap();
+        let mut wire = p.packed_bytes();
+        wire[1] |= 0xF0;
+        let q = BitPacked::from_packed_bytes(3, 3, &wire).unwrap();
+        assert_eq!(q, p);
+        assert_eq!(q.unpack(), vec![7, 0, 7]);
     }
 
     #[test]

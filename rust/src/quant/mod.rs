@@ -64,8 +64,11 @@ impl QuantScheme {
         }
     }
 
-    /// Parse a CLI spelling: `fp32`, `fq<b>`, `tvq<b>`, `rtvq<bb>o<bo>`
-    /// (also accepts the paper's `b3o2` form for RTVQ).
+    /// Parse a scheme spelling: `fp32`, `fq<b>`, `tvq<b>`, `rtvq<bb>o<bo>`.
+    /// Also accepts the paper's `b3o2` shorthand for RTVQ and the exact
+    /// [`label`](Self::label) spellings (`TVQ-INT3`, `RTVQ-B3O2`), so
+    /// `parse(label())` round-trips for every scheme — registries persist
+    /// labels and rely on this.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let s = s.trim().to_ascii_lowercase();
         let bits = |t: &str| -> anyhow::Result<u8> {
@@ -78,18 +81,22 @@ impl QuantScheme {
         if s == "fp32" {
             Ok(QuantScheme::Fp32)
         } else if let Some(rest) = s.strip_prefix("rtvq") {
+            // rtvq3o2 | rtvqb3o2 | rtvq-b3o2 (label spelling)
+            let rest = rest.strip_prefix('-').unwrap_or(rest);
             let (bb, bo) = rest
                 .trim_start_matches('b')
                 .split_once('o')
                 .ok_or_else(|| anyhow::anyhow!("rtvq needs <base>o<offset>, e.g. rtvq3o2"))?;
             Ok(QuantScheme::Rtvq(bits(bb)?, bits(bo)?))
-        } else if let Some(rest) = s.strip_prefix("b") {
+        } else if let Some(rest) = s.strip_prefix('b') {
             // paper shorthand b3o2
             let (bb, bo) = rest
                 .split_once('o')
                 .ok_or_else(|| anyhow::anyhow!("expected b<base>o<offset>"))?;
             Ok(QuantScheme::Rtvq(bits(bb)?, bits(bo)?))
         } else if let Some(rest) = s.strip_prefix("tvq") {
+            // tvq3 | tvq-int3 (label spelling)
+            let rest = rest.strip_prefix("-int").unwrap_or(rest);
             Ok(QuantScheme::Tvq(bits(rest)?))
         } else if let Some(rest) = s.strip_prefix("fq") {
             Ok(QuantScheme::Fq(bits(rest)?))
@@ -122,6 +129,26 @@ mod tests {
         assert!(QuantScheme::parse("tvq9").is_err());
         assert!(QuantScheme::parse("tvq0").is_err());
         assert!(QuantScheme::parse("nope").is_err());
+    }
+
+    #[test]
+    fn parse_label_roundtrip() {
+        // Registries persist `label()` strings; parse must invert them.
+        for scheme in [
+            QuantScheme::Fp32,
+            QuantScheme::Fq(8),
+            QuantScheme::Tvq(4),
+            QuantScheme::Tvq(3),
+            QuantScheme::Rtvq(3, 2),
+            QuantScheme::Rtvq(8, 1),
+        ] {
+            assert_eq!(
+                QuantScheme::parse(&scheme.label()).unwrap(),
+                scheme,
+                "label {:?} did not round-trip",
+                scheme.label()
+            );
+        }
     }
 
     #[test]

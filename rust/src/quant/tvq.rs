@@ -79,6 +79,12 @@ impl QuantizedCheckpoint {
         Ok(Self { bits, tensors })
     }
 
+    /// Assemble from already-quantized tensors — the decode path of the
+    /// `QTVC` v2 registry container (`crate::registry`).
+    pub fn from_tensors(bits: u8, tensors: BTreeMap<String, QuantizedTensor>) -> Self {
+        Self { bits, tensors }
+    }
+
     /// Reconstruct the full-precision approximation (Eq. 2 per tensor).
     pub fn dequantize(&self) -> Result<Checkpoint> {
         let mut ck = Checkpoint::new();

@@ -1,0 +1,401 @@
+//! `QTVC` v2 payload sections: the byte-level encoding of quantized task
+//! payloads (bit-packed codes + affine params + scheme metadata).
+//!
+//! A section is one self-contained payload; the registry index
+//! ([`super::index`]) records where each section lives and its CRC.  Two
+//! section bodies exist:
+//!
+//! * [`PayloadKind::TaskCheckpoint`] / [`PayloadKind::RtvqBase`] — a
+//!   per-tensor quantized checkpoint ([`QuantizedCheckpoint`]): TVQ task
+//!   vectors, RTVQ offsets, or the shared RTVQ base.
+//! * [`PayloadKind::Group`] — a flat per-group quantized vector
+//!   ([`GroupQuantized`]), the layout the AOT Pallas merge artifacts
+//!   consume directly.
+//!
+//! Codes are stored via [`BitPacked::packed_bytes`] — headerless and
+//! byte-exact (`ceil(len * bits / 8)` bytes), so file size tracks the
+//! paper's ideal storage arithmetic to within per-tensor metadata.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::quant::{AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint};
+use crate::quant::tvq::QuantizedTensor;
+
+/// Registry file magic: the bytes `"QTVC"` read as a little-endian u32.
+pub const MAGIC: u32 = 0x4356_5451;
+/// Registry format version.  v1 was the raw-f32 `TVQC` checkpoint
+/// container; packed registries start at v2.
+pub const VERSION: u32 = 2;
+
+/// What a section body contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// A per-task quantized checkpoint (TVQ task vector, RTVQ offset, or
+    /// FQ checkpoint).
+    TaskCheckpoint,
+    /// The shared RTVQ base vector (stored once, amortized across tasks).
+    RtvqBase,
+    /// A flat group-quantized vector (Pallas kernel layout).
+    Group,
+}
+
+impl PayloadKind {
+    pub fn to_u8(self) -> u8 {
+        match self {
+            PayloadKind::TaskCheckpoint => 0,
+            PayloadKind::RtvqBase => 1,
+            PayloadKind::Group => 2,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => PayloadKind::TaskCheckpoint,
+            1 => PayloadKind::RtvqBase,
+            2 => PayloadKind::Group,
+            other => bail!("unknown QTVC payload kind {other}"),
+        })
+    }
+}
+
+/// A decoded section body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Checkpoint(QuantizedCheckpoint),
+    Group(GroupQuantized),
+}
+
+impl Payload {
+    /// Parameter count carried by this payload.
+    pub fn numel(&self) -> usize {
+        match self {
+            Payload::Checkpoint(q) => q.numel(),
+            Payload::Group(g) => g.len(),
+        }
+    }
+
+    /// Encode to the section wire form for `kind`.
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Payload::Checkpoint(q) => encode_checkpoint_payload(q),
+            Payload::Group(g) => encode_group_payload(g),
+        }
+    }
+
+    /// Decode a section body according to its index `kind`.
+    pub fn decode(kind: PayloadKind, buf: &[u8]) -> Result<Payload> {
+        Ok(match kind {
+            PayloadKind::TaskCheckpoint | PayloadKind::RtvqBase => {
+                Payload::Checkpoint(decode_checkpoint_payload(buf)?)
+            }
+            PayloadKind::Group => Payload::Group(decode_group_payload(buf)?),
+        })
+    }
+}
+
+/// Little-endian read cursor over a section body.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated QTVC section at byte {} (wanted {n} more of {})",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    /// Bytes left to read — the bound every untrusted count must respect
+    /// before any allocation sized from it.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Encode a per-tensor quantized checkpoint:
+/// ```text
+///   bits u8, tensor_count u32
+///   per tensor (name order):
+///     name_len u32, name bytes
+///     ndim u32, dims u64 * ndim
+///     scale f32, zp f32
+///     packed codes: ceil(numel * bits / 8) bytes
+/// ```
+pub fn encode_checkpoint_payload(q: &QuantizedCheckpoint) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.push(q.bits);
+    buf.extend_from_slice(&(q.len() as u32).to_le_bytes());
+    for (name, qt) in q.iter() {
+        push_str(&mut buf, name);
+        buf.extend_from_slice(&(qt.shape.len() as u32).to_le_bytes());
+        for &d in &qt.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&qt.params.scale.to_le_bytes());
+        buf.extend_from_slice(&qt.params.zp.to_le_bytes());
+        buf.extend_from_slice(&qt.codes.packed_bytes());
+    }
+    buf
+}
+
+/// Inverse of [`encode_checkpoint_payload`]; the whole buffer must be
+/// consumed (trailing garbage is corruption).
+pub fn decode_checkpoint_payload(buf: &[u8]) -> Result<QuantizedCheckpoint> {
+    let mut c = Cursor::new(buf);
+    let bits = c.u8()?;
+    if !(1..=8).contains(&bits) {
+        bail!("QTVC checkpoint payload: invalid bit width {bits}");
+    }
+    let count = c.u32()? as usize;
+    let mut tensors = BTreeMap::new();
+    for _ in 0..count {
+        let name = c.str()?;
+        let ndim = c.u32()? as usize;
+        if ndim > 16 {
+            bail!("QTVC checkpoint payload: implausible ndim {ndim} for {name:?}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(c.u64()? as usize);
+        }
+        // Dims are untrusted: a crafted shape must fail cleanly, not
+        // overflow (debug panic / silent release wraparound).
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
+                anyhow::anyhow!("QTVC checkpoint payload: shape overflow for {name:?}")
+            })?;
+        let scale = c.f32()?;
+        let zp = c.f32()?;
+        let nbytes = numel
+            .checked_mul(bits as usize)
+            .ok_or_else(|| {
+                anyhow::anyhow!("QTVC checkpoint payload: code size overflow for {name:?}")
+            })?
+            .div_ceil(8);
+        let codes = BitPacked::from_packed_bytes(bits, numel, c.take(nbytes)?)?;
+        if tensors
+            .insert(
+                name.clone(),
+                QuantizedTensor { shape, params: AffineParams { scale, zp, bits }, codes },
+            )
+            .is_some()
+        {
+            bail!("QTVC checkpoint payload: duplicate tensor {name:?}");
+        }
+    }
+    if !c.done() {
+        bail!("QTVC checkpoint payload: trailing bytes after {count} tensors");
+    }
+    Ok(QuantizedCheckpoint::from_tensors(bits, tensors))
+}
+
+/// Encode a group-quantized flat vector:
+/// ```text
+///   bits u8, group u64, n_groups u64
+///   scales f32 * n_groups, zps f32 * n_groups
+///   packed codes: ceil(group * n_groups * bits / 8) bytes
+/// ```
+pub fn encode_group_payload(g: &GroupQuantized) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.push(g.bits);
+    buf.extend_from_slice(&(g.group as u64).to_le_bytes());
+    buf.extend_from_slice(&(g.n_groups() as u64).to_le_bytes());
+    for &s in &g.scales {
+        buf.extend_from_slice(&s.to_le_bytes());
+    }
+    for &z in &g.zps {
+        buf.extend_from_slice(&z.to_le_bytes());
+    }
+    buf.extend_from_slice(&g.codes.packed_bytes());
+    buf
+}
+
+/// Inverse of [`encode_group_payload`].
+pub fn decode_group_payload(buf: &[u8]) -> Result<GroupQuantized> {
+    let mut c = Cursor::new(buf);
+    let bits = c.u8()?;
+    if !(1..=8).contains(&bits) {
+        bail!("QTVC group payload: invalid bit width {bits}");
+    }
+    let group = c.u64()? as usize;
+    let n_groups = c.u64()? as usize;
+    if group == 0 {
+        bail!("QTVC group payload: zero group size");
+    }
+    // Untrusted counts: scales + zps occupy 8 bytes per group, so
+    // n_groups must fit what's actually left in the section before any
+    // allocation is sized from it.
+    if n_groups > c.remaining() / 8 {
+        bail!(
+            "QTVC group payload: n_groups {n_groups} exceeds section size ({} bytes left)",
+            c.remaining()
+        );
+    }
+    let mut scales = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        scales.push(c.f32()?);
+    }
+    let mut zps = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        zps.push(c.f32()?);
+    }
+    let len = group
+        .checked_mul(n_groups)
+        .ok_or_else(|| anyhow::anyhow!("QTVC group payload: group*n_groups overflows"))?;
+    let nbytes = len
+        .checked_mul(bits as usize)
+        .ok_or_else(|| anyhow::anyhow!("QTVC group payload: code size overflows"))?
+        .div_ceil(8);
+    let codes = BitPacked::from_packed_bytes(bits, len, c.take(nbytes)?)?;
+    if !c.done() {
+        bail!("QTVC group payload: trailing bytes");
+    }
+    Ok(GroupQuantized { bits, group, scales, zps, codes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn sample_q(bits: u8, seed: u64) -> QuantizedCheckpoint {
+        let mut rng = Rng::new(seed);
+        let mut ck = Checkpoint::new();
+        // Adversarial numels: word-straddling for 3/5/6/7-bit widths.
+        ck.insert("a/w", Tensor::randn(&[7, 9], 0.02, &mut rng));
+        ck.insert("b/w", Tensor::randn(&[65], 0.02, &mut rng));
+        ck.insert("c/w", Tensor::randn(&[3, 2, 4], 0.02, &mut rng));
+        QuantizedCheckpoint::quantize(&ck, bits).unwrap()
+    }
+
+    #[test]
+    fn checkpoint_payload_roundtrips_all_widths() {
+        for bits in 1u8..=8 {
+            let q = sample_q(bits, 100 + bits as u64);
+            let wire = encode_checkpoint_payload(&q);
+            let back = decode_checkpoint_payload(&wire).unwrap();
+            assert_eq!(back, q, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn group_payload_roundtrips() {
+        let mut rng = Rng::new(7);
+        let mut v = vec![0.0f32; 4096];
+        rng.fill_normal(&mut v, 0.05);
+        for bits in [2u8, 3, 4, 8] {
+            let g = GroupQuantized::quantize(&v, bits, 512).unwrap();
+            let wire = encode_group_payload(&g);
+            let back = decode_group_payload(&wire).unwrap();
+            assert_eq!(back, g, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let q = sample_q(4, 9);
+        let wire = encode_checkpoint_payload(&q);
+        // Truncation at every structural boundary fails cleanly.
+        assert!(decode_checkpoint_payload(&wire[..wire.len() - 1]).is_err());
+        assert!(decode_checkpoint_payload(&wire[..3]).is_err());
+        assert!(decode_checkpoint_payload(&[]).is_err());
+        // Trailing garbage is rejected too.
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(decode_checkpoint_payload(&padded).is_err());
+        // Invalid bit width.
+        let mut bad = wire;
+        bad[0] = 11;
+        assert!(decode_checkpoint_payload(&bad).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_adversarial_counts_without_allocating() {
+        // A group section claiming 2^61 groups in a 33-byte body must
+        // bail on the bounds check before sizing any allocation from it.
+        let mut wire = Vec::new();
+        wire.push(4u8); // bits
+        wire.extend_from_slice(&8u64.to_le_bytes()); // group
+        wire.extend_from_slice(&(1u64 << 61).to_le_bytes()); // n_groups
+        wire.extend_from_slice(&[0u8; 16]);
+        let err = decode_group_payload(&wire).unwrap_err().to_string();
+        assert!(err.contains("exceeds section size"), "got: {err}");
+
+        // A checkpoint tensor whose dims multiply past usize::MAX must
+        // bail on checked arithmetic, not wrap or panic.
+        let mut wire = Vec::new();
+        wire.push(4u8); // bits
+        wire.extend_from_slice(&1u32.to_le_bytes()); // tensor count
+        wire.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        wire.push(b'x');
+        wire.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        wire.extend_from_slice(&(1u64 << 33).to_le_bytes());
+        wire.extend_from_slice(&(1u64 << 33).to_le_bytes());
+        wire.extend_from_slice(&0f32.to_le_bytes()); // scale
+        wire.extend_from_slice(&0f32.to_le_bytes()); // zp
+        let err = decode_checkpoint_payload(&wire).unwrap_err().to_string();
+        assert!(err.contains("shape overflow"), "got: {err}");
+    }
+
+    #[test]
+    fn payload_enum_dispatch() {
+        let q = sample_q(3, 10);
+        let p = Payload::Checkpoint(q.clone());
+        let wire = p.encode();
+        let back = Payload::decode(PayloadKind::TaskCheckpoint, &wire).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(p.numel(), q.numel());
+        for kind in [PayloadKind::TaskCheckpoint, PayloadKind::RtvqBase, PayloadKind::Group] {
+            assert_eq!(PayloadKind::from_u8(kind.to_u8()).unwrap(), kind);
+        }
+        assert!(PayloadKind::from_u8(9).is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! The indexed multi-task registry file: header + offset table + lazy
+//! section reads.
+//!
+//! [`Registry::open`] reads and CRC-verifies **only** the header and
+//! offset table; payload sections are read on demand by absolute offset,
+//! so a merge request touching 3 of 20 tasks performs 3 section reads —
+//! the full zoo is never materialized.  See [`super`] (module docs) for
+//! the byte-level wire format.
+
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Context, Result};
+
+use super::container::{Payload, PayloadKind, MAGIC, VERSION};
+use crate::checkpoint::Checkpoint;
+use crate::quant::QuantScheme;
+use crate::util::crc32;
+
+/// Hard caps guarding against nonsense headers (corrupt or adversarial
+/// files must fail fast, not allocate gigabytes).
+const MAX_ENTRIES: usize = 1 << 20;
+const MAX_NAME_LEN: usize = 4096;
+
+/// One row of the registry offset table.
+#[derive(Clone, Debug)]
+pub struct IndexEntry {
+    pub name: String,
+    pub kind: PayloadKind,
+    /// Absolute file offset of the section body.
+    pub offset: u64,
+    /// Section body length in bytes.
+    pub length: u64,
+    /// CRC-32 of the section body.
+    pub crc: u32,
+}
+
+/// Incremental header reader that retains the raw bytes for the index CRC.
+struct HeaderReader<R: Read> {
+    inner: R,
+    raw: Vec<u8>,
+}
+
+impl<R: Read> HeaderReader<R> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        let start = self.raw.len();
+        self.raw.resize(start + n, 0);
+        self.inner
+            .read_exact(&mut self.raw[start..])
+            .map_err(|_| anyhow::anyhow!("truncated QTVC index at byte {start}"))?;
+        Ok(&self.raw[start..])
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self, max: usize) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > max {
+            bail!("QTVC index string length {n} exceeds cap {max}");
+        }
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+}
+
+/// An opened packed task-vector registry (index resident, payloads lazy).
+pub struct Registry {
+    path: PathBuf,
+    scheme: QuantScheme,
+    entries: Vec<IndexEntry>,
+    /// Indices into `entries` for per-task payloads, in file order.
+    tasks: Vec<usize>,
+    /// Index into `entries` for the shared RTVQ base, if present.
+    base: Option<usize>,
+    /// Dequantized RTVQ base, decoded at most once and shared by every
+    /// subsequent `load_task_vector` call.
+    base_cache: OnceLock<Checkpoint>,
+    index_bytes: u64,
+    file_bytes: u64,
+}
+
+impl Registry {
+    /// Open a registry: read and verify the header + offset table only.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Registry> {
+        let path = path.as_ref();
+        let file = fs::File::open(path)
+            .with_context(|| format!("opening registry {}", path.display()))?;
+        let file_bytes = file.metadata()?.len();
+        let mut r = HeaderReader { inner: std::io::BufReader::new(file), raw: Vec::new() };
+
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            bail!(
+                "not a QTVC registry: {} (magic {magic:#010x}, expected {MAGIC:#010x})",
+                path.display()
+            );
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!(
+                "unsupported QTVC version {version} in {} (this build reads v{VERSION})",
+                path.display()
+            );
+        }
+        let label = r.str(64)?;
+        let scheme = QuantScheme::parse(&label)
+            .with_context(|| format!("registry {} carries bad scheme label", path.display()))?;
+        let count = r.u32()? as usize;
+        if count > MAX_ENTRIES {
+            bail!("QTVC index claims {count} entries (cap {MAX_ENTRIES}) — corrupt header?");
+        }
+
+        let mut entries = Vec::with_capacity(count);
+        let mut tasks = Vec::new();
+        let mut base = None;
+        for i in 0..count {
+            let name = r.str(MAX_NAME_LEN)?;
+            let kind = PayloadKind::from_u8(r.u8()?)?;
+            let offset = r.u64()?;
+            let length = r.u64()?;
+            let crc = r.u32()?;
+            match offset.checked_add(length) {
+                Some(end) if end <= file_bytes => {}
+                _ => bail!(
+                    "QTVC entry {name:?} spans [{offset}, +{length}) beyond file size {file_bytes}"
+                ),
+            }
+            match kind {
+                PayloadKind::RtvqBase => {
+                    if base.replace(i).is_some() {
+                        bail!("QTVC registry has more than one RTVQ base section");
+                    }
+                }
+                PayloadKind::TaskCheckpoint | PayloadKind::Group => tasks.push(i),
+            }
+            entries.push(IndexEntry { name, kind, offset, length, crc });
+        }
+        // Read the trailing index CRC without folding it into `raw`.
+        let mut crc_buf = [0u8; 4];
+        r.inner
+            .read_exact(&mut crc_buf)
+            .map_err(|_| anyhow::anyhow!("truncated QTVC index (missing CRC)"))?;
+        let stored_crc = u32::from_le_bytes(crc_buf);
+        let index_end = r.raw.len() as u64 + 4;
+        if stored_crc != crc32(&r.raw) {
+            bail!(
+                "QTVC index CRC mismatch in {} (corrupt or truncated registry)",
+                path.display()
+            );
+        }
+        if matches!(scheme, QuantScheme::Rtvq(..)) && base.is_none() {
+            bail!("RTVQ registry {} is missing its base section", path.display());
+        }
+
+        Ok(Registry {
+            path: path.to_path_buf(),
+            scheme,
+            entries,
+            tasks,
+            base,
+            base_cache: OnceLock::new(),
+            index_bytes: index_end,
+            file_bytes,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn scheme(&self) -> QuantScheme {
+        self.scheme
+    }
+
+    /// Number of per-task payloads (the RTVQ base is not a task).
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.tasks.iter().map(|&i| self.entries[i].name.as_str()).collect()
+    }
+
+    /// Position of a task by name, if present.
+    pub fn task_index(&self, name: &str) -> Option<usize> {
+        self.tasks.iter().position(|&i| self.entries[i].name == name)
+    }
+
+    pub fn has_rtvq_base(&self) -> bool {
+        self.base.is_some()
+    }
+
+    /// Raw offset-table rows (diagnostics / accounting).
+    pub fn entries(&self) -> &[IndexEntry] {
+        &self.entries
+    }
+
+    /// Bytes occupied by the header + offset table (including its CRC).
+    pub fn index_bytes(&self) -> u64 {
+        self.index_bytes
+    }
+
+    /// Bytes occupied by all payload sections.
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.length).sum()
+    }
+
+    /// Total on-disk size recorded at open time.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// Read + CRC-verify one section body (one seek, one read).
+    fn read_section(&self, entry: &IndexEntry) -> Result<Vec<u8>> {
+        let mut f = fs::File::open(&self.path)
+            .with_context(|| format!("reopening registry {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(entry.offset))?;
+        let mut buf = vec![0u8; entry.length as usize];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("reading section {:?}", entry.name))?;
+        if crc32(&buf) != entry.crc {
+            bail!(
+                "QTVC section {:?} CRC mismatch in {} (corrupt registry)",
+                entry.name,
+                self.path.display()
+            );
+        }
+        Ok(buf)
+    }
+
+    /// Lazily load one task's quantized payload (no dequantization).
+    pub fn load_task_payload(&self, t: usize) -> Result<Payload> {
+        let &i = self
+            .tasks
+            .get(t)
+            .ok_or_else(|| anyhow::anyhow!("task index {t} out of range ({} tasks)", self.tasks.len()))?;
+        let entry = &self.entries[i];
+        Payload::decode(entry.kind, &self.read_section(entry)?)
+    }
+
+    /// Lazily load the shared RTVQ base payload.
+    pub fn load_base_payload(&self) -> Result<Payload> {
+        let i = self
+            .base
+            .ok_or_else(|| anyhow::anyhow!("registry has no RTVQ base section"))?;
+        let entry = &self.entries[i];
+        Payload::decode(entry.kind, &self.read_section(entry)?)
+    }
+
+    /// Dequantized RTVQ base, decoded once and cached.
+    fn base_checkpoint(&self) -> Result<&Checkpoint> {
+        if let Some(b) = self.base_cache.get() {
+            return Ok(b);
+        }
+        let ck = match self.load_base_payload()? {
+            Payload::Checkpoint(q) => q.dequantize()?,
+            Payload::Group(_) => bail!("RTVQ base must be a checkpoint payload"),
+        };
+        Ok(self.base_cache.get_or_init(|| ck))
+    }
+
+    /// Reconstruct task `t`'s full-precision task vector from its packed
+    /// payload alone: dq(offset) + dq(base) for RTVQ, dq(codes) for TVQ.
+    pub fn load_task_vector(&self, t: usize) -> Result<Checkpoint> {
+        let payload = self.load_task_payload(t)?;
+        let q = match payload {
+            Payload::Checkpoint(q) => q,
+            Payload::Group(_) => bail!(
+                "task {t} is a flat group payload; decode it via load_task_payload \
+                 (group payloads carry no tensor-shape template)"
+            ),
+        };
+        match self.scheme {
+            QuantScheme::Rtvq(..) => q.dequantize()?.add(self.base_checkpoint()?),
+            QuantScheme::Tvq(_) => q.dequantize(),
+            QuantScheme::Fq(_) => bail!(
+                "FQ registries store quantized checkpoints, not task vectors; \
+                 subtract the pre-trained trunk from load_task_payload's result"
+            ),
+            QuantScheme::Fp32 => bail!("fp32 zoos use the TVQC checkpoint store, not QTVC"),
+        }
+    }
+}

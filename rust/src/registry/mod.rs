@@ -1,0 +1,283 @@
+//! Packed task-vector registry — quantized payloads as the **durable,
+//! servable artifact**.
+//!
+//! The paper's storage claim (quantized task vectors need ~8% of
+//! full-precision bytes) only pays off if the *on-disk* zoo is packed.
+//! The v1 `TVQC` container ([`crate::checkpoint`]) stores raw f32
+//! tensors; this module adds the `QTVC` v2 registry: one indexed file per
+//! zoo holding bit-packed codes + affine params, loaded **lazily per
+//! task** so a merge request materializes only what it needs.
+//!
+//! # `QTVC` v2 wire format
+//!
+//! All integers little-endian.  One file = header + offset table +
+//! concatenated payload sections:
+//!
+//! ```text
+//! ┌──────────────────────────────────────────────────────────────────┐
+//! │ header                                                           │
+//! │   magic      u32 = 0x4356_5451   (bytes "QTVC")                  │
+//! │   version    u32 = 2                                             │
+//! │   scheme_len u32, scheme label bytes (e.g. "TVQ-INT4",           │
+//! │              "RTVQ-B3O2" — round-trips QuantScheme::parse)       │
+//! │   entry_cnt  u32                                                 │
+//! ├──────────────────────────────────────────────────────────────────┤
+//! │ offset table (entry_cnt rows)                                    │
+//! │   name_len u32, name bytes (UTF-8)                               │
+//! │   kind     u8   (0 task | 1 rtvq base | 2 group)                 │
+//! │   offset   u64  (absolute file offset of the section body)       │
+//! │   length   u64  (section body bytes)                             │
+//! │   crc      u32  (CRC-32 of the section body)                     │
+//! ├──────────────────────────────────────────────────────────────────┤
+//! │ index_crc  u32  (CRC-32 of every byte above)                     │
+//! ├──────────────────────────────────────────────────────────────────┤
+//! │ sections, back to back                                           │
+//! │   checkpoint payload (kind 0/1):                                 │
+//! │     bits u8, tensor_cnt u32, then per tensor (name order):       │
+//! │       name_len u32, name, ndim u32, dims u64*ndim,               │
+//! │       scale f32, zp f32, codes ceil(numel*bits/8) bytes          │
+//! │   group payload (kind 2):                                        │
+//! │     bits u8, group u64, n_groups u64,                            │
+//! │     scales f32*n_groups, zps f32*n_groups,                       │
+//! │     codes ceil(group*n_groups*bits/8) bytes                      │
+//! └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Codes are stored byte-exact (no u64 padding), so the file tracks
+//! [`StorageReport::ideal`](crate::quant::StorageReport::ideal) to within
+//! per-tensor metadata — [`DiskAccounting`] measures the gap from real
+//! files.
+//!
+//! # Versioning / compatibility policy
+//!
+//! * The magic distinguishes `QTVC` registries from v1 `TVQC`
+//!   checkpoints; each reader rejects the other's magic with a pointed
+//!   error naming the right API.
+//! * `version` is a hard gate: readers reject any version they were not
+//!   built for (no silent forward parsing).  Additive evolution must bump
+//!   the version; new payload kinds may be added without a bump only if
+//!   old readers can skip them via the offset table (they fail closed on
+//!   unknown `kind` today).
+//! * Per-section CRCs allow lazy readers to verify exactly the bytes
+//!   they touch; the index CRC catches truncation at open time.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use tvq::quant::QuantScheme;
+//! use tvq::registry::{build_registry, merge_from_source, DiskAccounting,
+//!                     PackedRegistrySource};
+//! use tvq::merge::TaskArithmetic;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let (pre, fts): (tvq::checkpoint::Checkpoint, Vec<tvq::checkpoint::Checkpoint>) = todo!();
+//! // Pack an 8-task zoo at TVQ-INT4 (~12.5% of f32 + metadata).
+//! let summary = build_registry(&pre, &fts, QuantScheme::Tvq(4), "zoo.qtvc")?;
+//! println!("{} bytes on disk", summary.file_bytes);
+//!
+//! // Serve from it: open the index, touch only the tasks you merge.
+//! let source = PackedRegistrySource::open("zoo.qtvc")?;
+//! let _merged = merge_from_source(
+//!     &TaskArithmetic::default(), &pre, &source, Some(&[0, 3, 5]))?;
+//!
+//! // Cross-check the bytes against the paper's ideal arithmetic.
+//! let acc = DiskAccounting::measure(source.registry())?;
+//! assert!(acc.matches_ideal(0.05));
+//! # Ok(()) }
+//! ```
+
+pub mod accounting;
+pub mod container;
+pub mod index;
+pub mod source;
+pub mod writer;
+
+pub use accounting::{f32_store_bytes, DiskAccounting};
+pub use container::{Payload, PayloadKind};
+pub use index::{IndexEntry, Registry};
+pub use source::{merge_from_source, F32ZooSource, PackedRegistrySource, TaskVectorSource};
+pub use writer::{build_registry, RegistryBuilder, WriteSummary};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+    use crate::merge::{Merger, TaskArithmetic};
+    use crate::quant::QuantScheme;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Synthetic zoo in the regime RTVQ exploits: common drift + small
+    /// per-task offsets.
+    fn suite(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+        let mut rng = Rng::new(seed);
+        let mut pre = Checkpoint::new();
+        pre.insert("blk00/w", Tensor::randn(&[48, 32], 0.3, &mut rng));
+        pre.insert("blk01/w", Tensor::randn(&[48, 32], 0.3, &mut rng));
+        pre.insert("head/b", Tensor::randn(&[33], 0.1, &mut rng));
+        let mut drift = Checkpoint::new();
+        for (name, t) in pre.iter() {
+            drift.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
+        }
+        let fts = (0..n_tasks)
+            .map(|_| {
+                let mut off = Checkpoint::new();
+                for (name, t) in pre.iter() {
+                    off.insert(name, Tensor::randn(t.shape(), 0.005, &mut rng));
+                }
+                pre.add(&drift).unwrap().add(&off).unwrap()
+            })
+            .collect();
+        (pre, fts)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tvq_registry_{name}"))
+    }
+
+    #[test]
+    fn tvq_registry_lazy_roundtrip_is_bit_exact() {
+        let (pre, fts) = suite(4, 11);
+        let dir = tmp("rt_tvq");
+        let path = dir.join("zoo.qtvc");
+        build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+
+        let reg = Registry::open(&path).unwrap();
+        assert_eq!(reg.n_tasks(), 4);
+        assert_eq!(reg.scheme(), QuantScheme::Tvq(4));
+        assert!(!reg.has_rtvq_base());
+        for (t, ft) in fts.iter().enumerate() {
+            let tau = ft.sub(&pre).unwrap();
+            // The lazily-loaded payload equals requantizing in memory —
+            // bit-exact, not approximately.
+            let q = crate::quant::QuantizedCheckpoint::quantize(&tau, 4).unwrap();
+            match reg.load_task_payload(t).unwrap() {
+                Payload::Checkpoint(back) => assert_eq!(back, q, "task {t}"),
+                other => panic!("unexpected payload {other:?}"),
+            }
+            assert_eq!(reg.load_task_vector(t).unwrap(), q.dequantize().unwrap());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rtvq_registry_reconstruction_matches_in_memory() {
+        let (pre, fts) = suite(4, 12);
+        let dir = tmp("rt_rtvq");
+        let path = dir.join("zoo.qtvc");
+        build_registry(&pre, &fts, QuantScheme::Rtvq(3, 2), &path).unwrap();
+
+        let reg = Registry::open(&path).unwrap();
+        assert!(reg.has_rtvq_base());
+        assert_eq!(reg.n_tasks(), 4);
+        let r = crate::quant::Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        for t in 0..4 {
+            let want = r.dequantize_task(t).unwrap();
+            let got = reg.load_task_vector(t).unwrap();
+            assert_eq!(got, want, "task {t}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_from_packed_source_matches_f32_source() {
+        let (pre, fts) = suite(5, 13);
+        let dir = tmp("merge_src");
+        let path = dir.join("zoo.qtvc");
+        build_registry(&pre, &fts, QuantScheme::Tvq(8), &path).unwrap();
+        let packed = PackedRegistrySource::open(&path).unwrap();
+        assert_eq!(packed.n_tasks(), 5);
+        assert_eq!(packed.scheme_label(), "TVQ-INT8");
+
+        // Merge a subset through the packed source...
+        let ta = TaskArithmetic::default();
+        let merged = merge_from_source(&ta, &pre, &packed, Some(&[1, 3])).unwrap();
+        // ...and the same subset from dequantized-in-memory vectors.
+        let taus: Vec<Checkpoint> = [1usize, 3]
+            .iter()
+            .map(|&t| {
+                let tau = fts[t].sub(&pre).unwrap();
+                crate::quant::QuantizedCheckpoint::quantize(&tau, 8)
+                    .unwrap()
+                    .dequantize()
+                    .unwrap()
+            })
+            .collect();
+        let want = ta.merge(&pre, &taus).unwrap();
+        match (&merged, &want) {
+            (
+                crate::merge::MergedModel::Shared(a),
+                crate::merge::MergedModel::Shared(b),
+            ) => assert_eq!(a, b),
+            _ => panic!("expected shared merges"),
+        }
+        // Out-of-range subsets are rejected.
+        assert!(merge_from_source(&ta, &pre, &packed, Some(&[7])).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_rejects_corruption_and_wrong_format() {
+        let (pre, fts) = suite(2, 14);
+        let dir = tmp("corrupt");
+        let path = dir.join("zoo.qtvc");
+        build_registry(&pre, &fts, QuantScheme::Tvq(3), &path).unwrap();
+
+        // Flip a byte in the index region: open() must fail.
+        let bytes = std::fs::read(&path).unwrap();
+        let mut bad = bytes.clone();
+        bad[20] ^= 0xFF;
+        let p_bad = dir.join("bad.qtvc");
+        std::fs::write(&p_bad, &bad).unwrap();
+        assert!(Registry::open(&p_bad).is_err());
+
+        // Flip a byte in a payload section: open() succeeds (lazy), the
+        // touched task fails its per-section CRC.
+        let mut bad2 = bytes.clone();
+        let n = bad2.len();
+        bad2[n - 3] ^= 0xFF;
+        let p_bad2 = dir.join("bad2.qtvc");
+        std::fs::write(&p_bad2, &bad2).unwrap();
+        let reg = Registry::open(&p_bad2).unwrap();
+        let last = reg.n_tasks() - 1;
+        assert!(reg.load_task_payload(last).is_err());
+        assert!(reg.load_task_payload(0).is_ok(), "untouched section must still read");
+
+        // A v1 TVQC checkpoint is not a registry, and vice versa.
+        let ckpt_path = dir.join("plain.ckpt");
+        pre.save(&ckpt_path).unwrap();
+        let err = Registry::open(&ckpt_path).unwrap_err().to_string();
+        assert!(err.contains("not a QTVC registry"), "got: {err}");
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a TVQC checkpoint"), "got: {err}");
+
+        // Truncated index.
+        let p_trunc = dir.join("trunc.qtvc");
+        std::fs::write(&p_trunc, &bytes[..10]).unwrap();
+        assert!(Registry::open(&p_trunc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn builder_validates_inputs() {
+        let (pre, fts) = suite(2, 15);
+        let tau = fts[0].sub(&pre).unwrap();
+        let q = crate::quant::QuantizedCheckpoint::quantize(&tau, 3).unwrap();
+        let dir = tmp("builder");
+
+        // Empty registry refused.
+        assert!(RegistryBuilder::new(QuantScheme::Tvq(3)).write(dir.join("e.qtvc")).is_err());
+        // Duplicate names refused.
+        let mut b = RegistryBuilder::new(QuantScheme::Tvq(3));
+        b.add_task("a", &q).unwrap();
+        assert!(b.add_task("a", &q).is_err());
+        // RTVQ without a base refused.
+        let mut b = RegistryBuilder::new(QuantScheme::Rtvq(3, 2));
+        b.add_task("a", &q).unwrap();
+        assert!(b.write(dir.join("r.qtvc")).is_err());
+        // Fp32 / Fq schemes refused outright.
+        assert!(build_registry(&pre, &fts, QuantScheme::Fp32, dir.join("f.qtvc")).is_err());
+        assert!(build_registry(&pre, &fts, QuantScheme::Fq(8), dir.join("q.qtvc")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,152 @@
+//! [`TaskVectorSource`] — where merge builds get their task vectors.
+//!
+//! Merging methods consume full-precision task vectors; *where those come
+//! from* is a deployment decision: a directory of raw f32 checkpoints
+//! (the debugging / training path) or a packed `QTVC` registry (the
+//! serving path, ~8-15% of the bytes).  This trait abstracts that choice
+//! so `merge/` and the coordinator's [`ModelCache`](crate::coordinator::ModelCache)
+//! build [`MergedModel`]s identically from either — and the packed
+//! backend loads **only** the tasks a request names.
+
+use anyhow::{bail, Result};
+
+use super::index::Registry;
+use crate::checkpoint::Checkpoint;
+use crate::merge::{MergedModel, Merger};
+
+/// A provider of full-precision task vectors, one per task.
+pub trait TaskVectorSource {
+    fn n_tasks(&self) -> usize;
+
+    /// Human-readable name of task `t` (used in diagnostics and cache keys).
+    fn task_name(&self, t: usize) -> String;
+
+    /// The full-precision task vector tau_t (exact or dequantized).
+    fn task_vector(&self, t: usize) -> Result<Checkpoint>;
+
+    /// Scheme label (`"FP32"`, `"TVQ-INT4"`, ...).
+    fn scheme_label(&self) -> String;
+
+    /// Identity of the backing artifact, used as the cache-key component
+    /// by [`ModelCache::get_or_build_merged`](crate::coordinator::ModelCache::get_or_build_merged).
+    /// Defaults to the scheme label alone; backends that can coexist with
+    /// others of the same scheme in one process (e.g. two registry files)
+    /// MUST qualify it, or different zoos would share one cached variant.
+    fn source_id(&self) -> String {
+        self.scheme_label()
+    }
+}
+
+/// The full-precision backend: an in-memory zoo of fine-tuned
+/// checkpoints; tau_t = ft_t - pre computed on demand.
+pub struct F32ZooSource<'a> {
+    pre: &'a Checkpoint,
+    fts: &'a [Checkpoint],
+}
+
+impl<'a> F32ZooSource<'a> {
+    pub fn new(pre: &'a Checkpoint, fts: &'a [Checkpoint]) -> Self {
+        Self { pre, fts }
+    }
+}
+
+impl TaskVectorSource for F32ZooSource<'_> {
+    fn n_tasks(&self) -> usize {
+        self.fts.len()
+    }
+
+    fn task_name(&self, t: usize) -> String {
+        format!("task{t:02}")
+    }
+
+    fn task_vector(&self, t: usize) -> Result<Checkpoint> {
+        match self.fts.get(t) {
+            Some(ft) => ft.sub(self.pre),
+            None => bail!("task index {t} out of range ({} tasks)", self.fts.len()),
+        }
+    }
+
+    fn scheme_label(&self) -> String {
+        "FP32".to_string()
+    }
+}
+
+/// The packed backend: a lazily-read `QTVC` registry.  Opening holds only
+/// the offset table in memory; each `task_vector` call reads exactly one
+/// section (plus, for RTVQ, the shared base on first touch).
+pub struct PackedRegistrySource {
+    registry: Registry,
+}
+
+impl PackedRegistrySource {
+    pub fn open<P: AsRef<std::path::Path>>(path: P) -> Result<Self> {
+        Ok(Self { registry: Registry::open(path)? })
+    }
+
+    pub fn from_registry(registry: Registry) -> Self {
+        Self { registry }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+}
+
+impl TaskVectorSource for PackedRegistrySource {
+    fn n_tasks(&self) -> usize {
+        self.registry.n_tasks()
+    }
+
+    fn task_name(&self, t: usize) -> String {
+        self.registry
+            .task_names()
+            .get(t)
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("task{t:02}"))
+    }
+
+    fn task_vector(&self, t: usize) -> Result<Checkpoint> {
+        self.registry.load_task_vector(t)
+    }
+
+    fn scheme_label(&self) -> String {
+        self.registry.scheme().label()
+    }
+
+    /// Scheme label qualified by the registry path: two registries packed
+    /// at the same scheme must not collide in a shared variant cache.
+    fn source_id(&self) -> String {
+        format!("{}:{}", self.registry.scheme().label(), self.registry.path().display())
+    }
+}
+
+/// Build a merged model from a source, touching only `tasks` (all tasks
+/// when `None`).  With a [`PackedRegistrySource`] this is the serving
+/// materialization path: index + the named sections are the only bytes
+/// read — the full f32 zoo never exists in memory or on disk.
+pub fn merge_from_source(
+    merger: &dyn Merger,
+    pre: &Checkpoint,
+    source: &dyn TaskVectorSource,
+    tasks: Option<&[usize]>,
+) -> Result<MergedModel> {
+    let indices: Vec<usize> = match tasks {
+        Some(ts) => {
+            for &t in ts {
+                if t >= source.n_tasks() {
+                    bail!("task index {t} out of range ({} tasks)", source.n_tasks());
+                }
+            }
+            ts.to_vec()
+        }
+        None => (0..source.n_tasks()).collect(),
+    };
+    if indices.is_empty() {
+        bail!("merge needs at least one task");
+    }
+    let taus: Vec<Checkpoint> = indices
+        .iter()
+        .map(|&t| source.task_vector(t))
+        .collect::<Result<_>>()?;
+    merger.merge(pre, &taus)
+}

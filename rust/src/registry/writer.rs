@@ -1,0 +1,197 @@
+//! Building and writing `QTVC` v2 registry files.
+//!
+//! [`RegistryBuilder`] assembles named quantized payloads and serializes
+//! them atomically (write-to-temp + rename, like the `TVQC` store);
+//! [`build_registry`] is the one-call path from a raw zoo `(pre, fts)` to
+//! a packed registry under any TVQ/RTVQ scheme.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::container::{encode_checkpoint_payload, PayloadKind, MAGIC, VERSION};
+use crate::checkpoint::Checkpoint;
+use crate::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
+use crate::util::crc32;
+
+/// Exact byte accounting returned by a registry write.
+#[derive(Clone, Debug)]
+pub struct WriteSummary {
+    pub path: PathBuf,
+    pub scheme: QuantScheme,
+    pub n_tasks: usize,
+    /// Total file size (== `index_bytes + payload_bytes`).
+    pub file_bytes: u64,
+    /// Header + offset table + index CRC.
+    pub index_bytes: u64,
+    /// Sum of all payload sections.
+    pub payload_bytes: u64,
+}
+
+struct PendingEntry {
+    name: String,
+    kind: PayloadKind,
+    body: Vec<u8>,
+}
+
+/// Assembles a registry in memory, then writes it in one pass.
+pub struct RegistryBuilder {
+    scheme: QuantScheme,
+    base: Option<PendingEntry>,
+    tasks: Vec<PendingEntry>,
+}
+
+impl RegistryBuilder {
+    pub fn new(scheme: QuantScheme) -> Self {
+        Self { scheme, base: None, tasks: Vec::new() }
+    }
+
+    fn check_name(&self, name: &str) -> Result<()> {
+        if name.is_empty() {
+            bail!("registry entry name must be non-empty");
+        }
+        if self.tasks.iter().any(|e| e.name == name) {
+            bail!("duplicate registry entry name {name:?}");
+        }
+        Ok(())
+    }
+
+    /// Add one task's quantized payload (a TVQ task vector, an RTVQ
+    /// offset, or an FQ checkpoint, depending on the scheme).
+    pub fn add_task(&mut self, name: &str, q: &QuantizedCheckpoint) -> Result<&mut Self> {
+        self.check_name(name)?;
+        self.tasks.push(PendingEntry {
+            name: name.to_string(),
+            kind: PayloadKind::TaskCheckpoint,
+            body: encode_checkpoint_payload(q),
+        });
+        Ok(self)
+    }
+
+    /// Set the shared RTVQ base payload (stored once, amortized).
+    pub fn set_rtvq_base(&mut self, q: &QuantizedCheckpoint) -> Result<&mut Self> {
+        if self.base.is_some() {
+            bail!("RTVQ base already set");
+        }
+        self.base = Some(PendingEntry {
+            name: "__rtvq_base__".to_string(),
+            kind: PayloadKind::RtvqBase,
+            body: encode_checkpoint_payload(q),
+        });
+        Ok(self)
+    }
+
+    /// Serialize to `path` (atomic: temp file + rename).
+    pub fn write<P: AsRef<Path>>(&self, path: P) -> Result<WriteSummary> {
+        let path = path.as_ref();
+        if self.tasks.is_empty() {
+            bail!("refusing to write an empty registry");
+        }
+        match self.scheme {
+            QuantScheme::Rtvq(..) if self.base.is_none() => {
+                bail!("RTVQ registry needs set_rtvq_base before write")
+            }
+            QuantScheme::Fp32 => bail!("fp32 zoos use the TVQC checkpoint store, not QTVC"),
+            _ => {}
+        }
+
+        // Entry order on disk: the shared base first, then tasks.
+        let entries: Vec<&PendingEntry> =
+            self.base.iter().chain(self.tasks.iter()).collect();
+
+        let label = self.scheme.label();
+        // Header prefix: magic + version + scheme label + entry count.
+        let mut index: Vec<u8> = Vec::new();
+        index.extend_from_slice(&MAGIC.to_le_bytes());
+        index.extend_from_slice(&VERSION.to_le_bytes());
+        index.extend_from_slice(&(label.len() as u32).to_le_bytes());
+        index.extend_from_slice(label.as_bytes());
+        index.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+
+        // The offset table's own size must be known before offsets can be
+        // assigned: each row is name_len(4) + name + kind(1) + offset(8)
+        // + length(8) + crc(4), and the table ends with a 4-byte CRC.
+        let rows_bytes: usize =
+            entries.iter().map(|e| 4 + e.name.len() + 1 + 8 + 8 + 4).sum();
+        let index_bytes = (index.len() + rows_bytes + 4) as u64;
+
+        let mut offset = index_bytes;
+        for e in &entries {
+            index.extend_from_slice(&(e.name.len() as u32).to_le_bytes());
+            index.extend_from_slice(e.name.as_bytes());
+            index.push(e.kind.to_u8());
+            index.extend_from_slice(&offset.to_le_bytes());
+            index.extend_from_slice(&(e.body.len() as u64).to_le_bytes());
+            index.extend_from_slice(&crc32(&e.body).to_le_bytes());
+            offset += e.body.len() as u64;
+        }
+        let index_crc = crc32(&index);
+        index.extend_from_slice(&index_crc.to_le_bytes());
+        debug_assert_eq!(index.len() as u64, index_bytes);
+
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&index)?;
+            for e in &entries {
+                f.write_all(&e.body)?;
+            }
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+
+        let payload_bytes: u64 = entries.iter().map(|e| e.body.len() as u64).sum();
+        Ok(WriteSummary {
+            path: path.to_path_buf(),
+            scheme: self.scheme,
+            n_tasks: self.tasks.len(),
+            file_bytes: index_bytes + payload_bytes,
+            index_bytes,
+            payload_bytes,
+        })
+    }
+}
+
+/// Quantize a zoo `(pre, fts)` under `scheme` and write the packed
+/// registry to `path`.  Task names default to `task00`, `task01`, ...
+///
+/// * `Tvq(b)`       — each task vector tau_t = ft_t - pre quantized at b bits.
+/// * `Rtvq(bb, bo)` — Algorithm 1 with error correction: one shared base
+///   at bb bits + per-task offsets at bo bits.
+/// * `Fq` / `Fp32`  — rejected: FQ payloads need the trunk at read time
+///   and fp32 zoos already have the TVQC store.
+pub fn build_registry<P: AsRef<Path>>(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    scheme: QuantScheme,
+    path: P,
+) -> Result<WriteSummary> {
+    if fts.is_empty() {
+        bail!("cannot build a registry from zero fine-tuned checkpoints");
+    }
+    let mut b = RegistryBuilder::new(scheme);
+    match scheme {
+        QuantScheme::Tvq(bits) => {
+            for (t, ft) in fts.iter().enumerate() {
+                let tau = ft.sub(pre)?;
+                b.add_task(&format!("task{t:02}"), &QuantizedCheckpoint::quantize(&tau, bits)?)?;
+            }
+        }
+        QuantScheme::Rtvq(bb, bo) => {
+            let r = Rtvq::quantize(pre, fts, bb, bo, true)?;
+            b.set_rtvq_base(&r.base)?;
+            for (t, off) in r.offsets.iter().enumerate() {
+                b.add_task(&format!("task{t:02}"), off)?;
+            }
+        }
+        QuantScheme::Fq(_) | QuantScheme::Fp32 => {
+            bail!("registries store packed task payloads; {:?} is not supported", scheme)
+        }
+    }
+    b.write(path)
+}

@@ -4,7 +4,10 @@
 
 use tvq::checkpoint::Checkpoint;
 use tvq::merge::{EmrMerging, Individual, MergedModel, Merger, TaskArithmetic};
-use tvq::quant::{fused, AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint, Rtvq};
+use tvq::quant::{
+    fused, AffineParams, BitPacked, GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq,
+};
+use tvq::registry::container::{decode_checkpoint_payload, encode_checkpoint_payload};
 use tvq::tensor::Tensor;
 use tvq::util::prop::{check, gen_vec, Config};
 use tvq::util::rng::Rng;
@@ -383,6 +386,96 @@ fn prop_checkpoint_flatten_roundtrip() {
             let back = ck.unflatten_like(&flat).map_err(|e| e.to_string())?;
             if &back != ck {
                 return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_scheme_parse_label_roundtrip() {
+    // Every scheme's label() must parse back to the same scheme —
+    // registries persist labels, so this is a wire-format invariant.
+    check(
+        Config { cases: 200, seed: 0x5CE3 },
+        |rng| {
+            let bb = 1 + rng.below(8) as u8;
+            let bo = 1 + rng.below(8) as u8;
+            match rng.below(4) {
+                0 => QuantScheme::Fp32,
+                1 => QuantScheme::Fq(bb),
+                2 => QuantScheme::Tvq(bb),
+                _ => QuantScheme::Rtvq(bb, bo),
+            }
+        },
+        |scheme| {
+            let label = scheme.label();
+            let back = QuantScheme::parse(&label)
+                .map_err(|e| format!("label {label:?} failed to parse: {e}"))?;
+            if back != *scheme {
+                return Err(format!("{label:?} parsed to {back:?}, not {scheme:?}"));
+            }
+            // Lower-cased CLI spelling must agree too.
+            let cli = label.to_ascii_lowercase();
+            if QuantScheme::parse(&cli).map_err(|e| e.to_string())? != *scheme {
+                return Err(format!("lowercase {cli:?} diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_scheme_parse_rejects_out_of_range() {
+    // Out-of-range widths must fail for every spelling family, including
+    // the paper's b<base>o<offset> shorthand.
+    for bad in [
+        "tvq0", "tvq9", "tvq16", "fq0", "fq9", "rtvq0o2", "rtvq3o0", "rtvq9o2",
+        "rtvq3o9", "b0o2", "b3o9", "tvq-int0", "tvq-int9", "rtvq-b9o2",
+    ] {
+        assert!(QuantScheme::parse(bad).is_err(), "{bad:?} should be rejected");
+    }
+    // And the paper's legal shorthand still parses.
+    assert_eq!(QuantScheme::parse("b3o2").unwrap(), QuantScheme::Rtvq(3, 2));
+}
+
+#[test]
+fn prop_registry_payload_bitpack_roundtrip() {
+    // Drive BitPacked through the QTVC v2 serialization path: random
+    // checkpoints at every width 1..=8 with adversarial tensor lengths
+    // (word-straddling 3/5/6/7-bit widths included), encoded to section
+    // bytes and decoded back — must be bit-exact, and the code stream
+    // must be byte-exact (no u64 padding on the wire).
+    check(
+        Config { cases: 96, seed: 0x9E61 },
+        |rng| {
+            let bits = 1 + rng.below(8) as u8;
+            // Lengths around word/byte boundaries for straddling widths.
+            let lens = [1usize, 3, 7, 8, 9, 21, 63, 64, 65, 85, 127, 129];
+            let n_tensors = 1 + rng.below(3);
+            let mut ck = Checkpoint::new();
+            for i in 0..n_tensors {
+                let len = lens[rng.below(lens.len())];
+                let mut v = vec![0.0f32; len];
+                rng.fill_normal(&mut v, 0.05);
+                ck.insert(&format!("t{i}"), Tensor::from_vec(v));
+            }
+            (bits, ck)
+        },
+        |(bits, ck)| {
+            let q = QuantizedCheckpoint::quantize(ck, *bits).map_err(|e| e.to_string())?;
+            let wire = encode_checkpoint_payload(&q);
+            let back = decode_checkpoint_payload(&wire).map_err(|e| e.to_string())?;
+            if back != q {
+                return Err(format!("payload round-trip mismatch at {bits} bits"));
+            }
+            // The wire form must carry exactly ceil(numel*bits/8) code
+            // bytes per tensor (plus metadata), never word-padded.
+            for (name, qt) in q.iter() {
+                let exact = (qt.numel() * *bits as usize).div_ceil(8);
+                if qt.codes.packed_bytes().len() != exact {
+                    return Err(format!("{name}: code bytes not exact"));
+                }
             }
             Ok(())
         },

@@ -1,0 +1,255 @@
+//! End-to-end registry acceptance: an 8-task zoo packed at TVQ-INT4 and
+//! RTVQ-B3O2 must
+//!
+//! 1. measure <= 15% of the f32 `TVQC` zoo bytes on real files,
+//! 2. match `StorageReport::ideal` to within a small metadata overhead,
+//! 3. round-trip bit-exactly through lazy per-task loads, and
+//! 4. feed `ModelCache` a merged variant straight from packed payloads —
+//!    with the f32 zoo files *deleted*, proving serving never needs them.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use tvq::checkpoint::{Checkpoint, CheckpointStore};
+use tvq::coordinator::ModelCache;
+use tvq::merge::{MergedModel, Merger, TaskArithmetic};
+use tvq::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
+use tvq::registry::{
+    build_registry, f32_store_bytes, merge_from_source, DiskAccounting,
+    PackedRegistrySource, Registry, TaskVectorSource,
+};
+use tvq::tensor::Tensor;
+use tvq::util::rng::Rng;
+
+const N_TASKS: usize = 8;
+
+/// Synthetic 8-task zoo big enough that metadata is a low-single-digit
+/// percent (24_832 params/ckpt), in the common-drift regime RTVQ expects.
+fn zoo(seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+    let mut rng = Rng::new(seed);
+    let mut pre = Checkpoint::new();
+    pre.insert("blk00/w", Tensor::randn(&[128, 96], 0.3, &mut rng));
+    pre.insert("blk01/w", Tensor::randn(&[128, 96], 0.3, &mut rng));
+    pre.insert("head/b", Tensor::randn(&[256], 0.1, &mut rng));
+    let mut drift = Checkpoint::new();
+    for (name, t) in pre.iter() {
+        drift.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
+    }
+    let fts = (0..N_TASKS)
+        .map(|_| {
+            let mut off = Checkpoint::new();
+            for (name, t) in pre.iter() {
+                off.insert(name, Tensor::randn(t.shape(), 0.005, &mut rng));
+            }
+            pre.add(&drift).unwrap().add(&off).unwrap()
+        })
+        .collect();
+    (pre, fts)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tvq_reg_it_{name}"))
+}
+
+#[test]
+fn packed_registry_meets_table5_storage_budget() {
+    let (pre, fts) = zoo(0xACC);
+    let dir = tmp("budget");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The f32 baseline: the full fine-tuned zoo as TVQC v1 files.
+    let store = CheckpointStore::new(dir.join("f32"));
+    for (t, ft) in fts.iter().enumerate() {
+        store.save(&format!("task{t:02}"), ft).unwrap();
+    }
+    let f32_bytes = f32_store_bytes(&store).unwrap();
+
+    for (scheme, max_frac) in
+        [(QuantScheme::Tvq(4), 0.15), (QuantScheme::Rtvq(3, 2), 0.15)]
+    {
+        let path = dir.join(format!("{}.qtvc", scheme.label()));
+        let summary = build_registry(&pre, &fts, scheme, &path).unwrap();
+        assert_eq!(summary.n_tasks, N_TASKS);
+        // Summary bookkeeping matches the real file byte-for-byte.
+        let real = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(summary.file_bytes, real, "{}: summary vs fs", scheme.label());
+        assert_eq!(
+            summary.index_bytes + summary.payload_bytes,
+            summary.file_bytes
+        );
+
+        // Acceptance: <= 15% of the f32 zoo's on-disk bytes.
+        let frac = real as f64 / f32_bytes as f64;
+        assert!(
+            frac <= max_frac,
+            "{}: {real} B is {:.1}% of f32 {f32_bytes} B (budget {:.0}%)",
+            scheme.label(),
+            100.0 * frac,
+            100.0 * max_frac
+        );
+
+        // Acceptance: matches StorageReport::ideal within metadata
+        // overhead (index + affine params + names: < 5% at this size).
+        let reg = Registry::open(&path).unwrap();
+        let acc = DiskAccounting::measure(&reg).unwrap();
+        assert_eq!(acc.params, pre.numel());
+        assert!(
+            acc.matches_ideal(0.05),
+            "{}: file {} vs ideal {} (+{:.2}%)",
+            scheme.label(),
+            acc.file_bytes,
+            acc.ideal_bytes,
+            100.0 * acc.overhead_fraction()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lazy_loads_are_bit_exact_for_both_schemes() {
+    let (pre, fts) = zoo(0xB17E);
+    let dir = tmp("bitexact");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // TVQ-INT4: every lazily-loaded payload equals in-memory quantization.
+    let p_tvq = dir.join("tvq4.qtvc");
+    build_registry(&pre, &fts, QuantScheme::Tvq(4), &p_tvq).unwrap();
+    let reg = Registry::open(&p_tvq).unwrap();
+    assert_eq!(reg.n_tasks(), N_TASKS);
+    for (t, ft) in fts.iter().enumerate() {
+        let tau = ft.sub(&pre).unwrap();
+        let want = QuantizedCheckpoint::quantize(&tau, 4).unwrap();
+        match reg.load_task_payload(t).unwrap() {
+            tvq::registry::Payload::Checkpoint(got) => {
+                assert_eq!(got, want, "task {t}: packed payload not bit-exact")
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        assert_eq!(
+            reg.load_task_vector(t).unwrap(),
+            want.dequantize().unwrap(),
+            "task {t}: dequantized vector not bit-exact"
+        );
+    }
+
+    // RTVQ-B3O2: lazy base + offset reconstruction equals Algorithm 1.
+    let p_rtvq = dir.join("rtvq3o2.qtvc");
+    build_registry(&pre, &fts, QuantScheme::Rtvq(3, 2), &p_rtvq).unwrap();
+    let reg = Registry::open(&p_rtvq).unwrap();
+    assert!(reg.has_rtvq_base());
+    let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+    for t in 0..N_TASKS {
+        assert_eq!(
+            reg.load_task_vector(t).unwrap(),
+            r.dequantize_task(t).unwrap(),
+            "task {t}: RTVQ reconstruction not bit-exact"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn model_cache_serves_from_packed_registry_without_f32_zoo() {
+    let (pre, fts) = zoo(0x5E2E);
+    let dir = tmp("serve");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Reference merge from in-memory dequantized task vectors.
+    let ta = TaskArithmetic::default();
+    let taus: Vec<Checkpoint> = fts
+        .iter()
+        .map(|ft| {
+            QuantizedCheckpoint::quantize(&ft.sub(&pre).unwrap(), 4)
+                .unwrap()
+                .dequantize()
+                .unwrap()
+        })
+        .collect();
+    let want = ta.merge(&pre, &taus).unwrap();
+
+    // Persist BOTH forms, then delete the f32 zoo before serving.
+    let store = CheckpointStore::new(dir.join("f32"));
+    for (t, ft) in fts.iter().enumerate() {
+        store.save(&format!("task{t:02}"), ft).unwrap();
+    }
+    let path = dir.join("zoo.qtvc");
+    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+    std::fs::remove_dir_all(dir.join("f32")).unwrap();
+    assert!(!dir.join("f32").exists(), "f32 zoo must be gone");
+
+    // The cache builds the variant from packed payloads alone — once,
+    // even under concurrent first requests.
+    let source = Arc::new(PackedRegistrySource::open(&path).unwrap());
+    assert_eq!(source.scheme_label(), "TVQ-INT4");
+    let cache = Arc::new(ModelCache::new());
+    let builds = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let cache = cache.clone();
+        let source = source.clone();
+        let builds = builds.clone();
+        let pre = pre.clone();
+        handles.push(std::thread::spawn(move || {
+            cache
+                .get_or_build("ta", &source.scheme_label(), || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    merge_from_source(
+                        &TaskArithmetic::default(),
+                        &pre,
+                        source.as_ref(),
+                        None,
+                    )
+                })
+                .unwrap()
+        }));
+    }
+    let merged: Vec<Arc<MergedModel>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(builds.load(Ordering::SeqCst), 1, "single-flight violated");
+    match (merged[0].as_ref(), &want) {
+        (MergedModel::Shared(a), MergedModel::Shared(b)) => {
+            assert_eq!(a, b, "packed-registry merge differs from in-memory merge")
+        }
+        _ => panic!("expected shared merged models"),
+    }
+
+    // Subset materialization: merging 3 named tasks touches only those
+    // sections and matches the equivalent in-memory subset merge.
+    let subset = [1usize, 4, 6];
+    let got = merge_from_source(&ta, &pre, source.as_ref(), Some(&subset)).unwrap();
+    let sub_taus: Vec<Checkpoint> = subset.iter().map(|&t| taus[t].clone()).collect();
+    let want_sub = ta.merge(&pre, &sub_taus).unwrap();
+    match (&got, &want_sub) {
+        (MergedModel::Shared(a), MergedModel::Shared(b)) => assert_eq!(a, b),
+        _ => panic!("expected shared merged models"),
+    }
+
+    // Convenience path: merger + source, keyed automatically by the
+    // source identity (scheme label qualified with the registry path).
+    let via_helper = cache
+        .get_or_build_merged(&ta, &pre, source.as_ref())
+        .unwrap();
+    let want_key = (ta.name().to_string(), source.source_id());
+    assert!(
+        cache.keys().contains(&want_key),
+        "missing cache key {want_key:?}; keys: {:?}",
+        cache.keys()
+    );
+    assert!(source.source_id().starts_with("TVQ-INT4:"));
+    match via_helper.as_ref() {
+        MergedModel::Shared(_) => {}
+        _ => panic!("expected a shared merge"),
+    }
+
+    // Two registries at the SAME scheme must not share a cached variant.
+    let path2 = dir.join("zoo2.qtvc");
+    let (pre2, fts2) = zoo(0xD1FF);
+    build_registry(&pre2, &fts2, QuantScheme::Tvq(4), &path2).unwrap();
+    let source2 = PackedRegistrySource::open(&path2).unwrap();
+    let other = cache.get_or_build_merged(&ta, &pre2, &source2).unwrap();
+    assert!(
+        !Arc::ptr_eq(&via_helper, &other),
+        "different registries at the same scheme shared one cached variant"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,264 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment resolves dependencies without network access, so
+//! the subset of `anyhow` this repository actually uses is vendored here:
+//!
+//! * [`Error`] — an erased error value carrying a message chain.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` (for
+//!   both `std` errors and [`Error`] itself) and on `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — macro constructors.
+//!
+//! Semantics match upstream for everything exercised in-tree: `{}` prints
+//! the outermost message, `{:#}` prints the full cause chain separated by
+//! `": "`, `{:?}` prints the chain as a "Caused by" list, and any
+//! `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::fmt;
+
+/// An erased error: an outermost message plus its cause chain.
+///
+/// Unlike upstream this stores the chain as rendered strings — the repo
+/// only ever formats errors, never downcasts them.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recent) message.
+    chain: Vec<String>,
+}
+
+/// `Result<T, Error>` by default; the second parameter keeps call sites
+/// like `Result<Vec<f32>, String>` valid.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn push_context(mut self, context: String) -> Self {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The cause chain, outermost first (rendered messages).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if f.alternate() {
+            for cause in &self.chain[1..] {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+mod ext {
+    /// Converts an error value into [`crate::Error`].  Implemented for
+    /// `std` errors and for `Error` itself; the two impls are disjoint
+    /// because `Error` deliberately does not implement
+    /// `std::error::Error` (same coherence trick as upstream anyhow).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (mirrors `anyhow::Context`).
+pub trait Context<T, E> {
+    /// Wrap the error with a new outermost message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Like [`Context::context`], evaluated lazily on the error path.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| {
+            ext::IntoError::into_error(e).push_context(context.to_string())
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::IntoError::into_error(e).push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tok:tt)*) => {
+        return Err($crate::anyhow!($($tok)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($tok:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tok)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("reading checkpoint")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading checkpoint");
+        assert_eq!(format!("{e:#}"), "reading checkpoint: disk on fire");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too large: {n}");
+            if n == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", n))
+        }
+        assert_eq!(fails(12).unwrap_err().to_string(), "n too large: 12");
+        assert_eq!(fails(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(fails(1).unwrap_err().to_string(), "fell through with 1");
+        let from_string = Error::msg(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_on_anyhow_error_and_option() {
+        let e = Result::<(), _>::Err(anyhow!("inner"))
+            .with_context(|| "outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let missing: Option<u32> = None;
+        let e = missing.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+}
