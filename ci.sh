@@ -24,10 +24,18 @@ if [[ "${1:-}" == "--quick" ]]; then
     exit 0
 fi
 
+echo "==> example packed_registry"
+cargo run --release "${CARGO_FLAGS[@]}" --example packed_registry > /dev/null
+
+echo "==> planner experiment tabP (smoke)"
+TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabP > /dev/null
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
 echo "==> cargo clippy -- -D warnings"
+# --all-targets covers the planner/ module (lib + its tests), the new
+# planner_integration test, and the tabP bench; warnings fail the gate.
 cargo clippy --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
 
 echo "ci: all gates passed"

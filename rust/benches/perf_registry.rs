@@ -1,15 +1,19 @@
 //! Performance bench for the packed task-vector registry: open (index
-//! only), lazy single-task load, full merge materialization from packed
-//! payloads, and the same merge from f32 `TVQC` checkpoints — the
-//! cold-start cost a serving node actually pays.
+//! only), lazy single-task load under both section-read modes (pread vs
+//! reopen-per-read), full merge materialization from packed payloads,
+//! the same merge from f32 `TVQC` checkpoints, and the planner's fused
+//! dequant-merge over a mixed-precision registry — the cold-start cost a
+//! serving node actually pays.
 //!
 //! Run: `cargo bench --bench perf_registry`
 
 use tvq::checkpoint::{Checkpoint, CheckpointStore};
 use tvq::merge::TaskArithmetic;
+use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
 use tvq::quant::QuantScheme;
 use tvq::registry::{
-    build_registry, merge_from_source, F32ZooSource, PackedRegistrySource, Registry,
+    build_registry, merge_from_source, uniform_registry_bytes, F32ZooSource, IoMode,
+    PackedRegistrySource, Registry,
 };
 use tvq::tensor::Tensor;
 use tvq::util::bench::{report, Bench};
@@ -64,10 +68,16 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(Registry::open(&path).unwrap());
     }));
 
-    // One lazy task: seek + one section read + dequantize.
-    let reg = Registry::open(&path)?;
-    results.push(b.run_throughput("registry_lazy_task_vector", params as f64, || {
+    // One lazy task: one section read + dequantize, under both IO
+    // modes — pread keeps a single handle (no open/seek per section),
+    // reopen is the conservative fallback path.
+    let reg = Registry::open_with_io(&path, IoMode::Pread)?;
+    results.push(b.run_throughput("registry_lazy_task_pread", params as f64, || {
         std::hint::black_box(reg.load_task_vector(3).unwrap());
+    }));
+    let reg_reopen = Registry::open_with_io(&path, IoMode::Reopen)?;
+    results.push(b.run_throughput("registry_lazy_task_reopen", params as f64, || {
+        std::hint::black_box(reg_reopen.load_task_vector(3).unwrap());
     }));
 
     // Cold merge straight from packed payloads (all 8 tasks).
@@ -103,6 +113,35 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(
                 merge_from_source(&ta, &pre, &src, Some(&[2, 5])).unwrap(),
             );
+        },
+    ));
+
+    // Planner path: compile a mixed-precision registry at the uniform
+    // TVQ-INT4 byte budget, then serve it through the fused
+    // dequant-merge over kind-2 group sections.
+    let budget = uniform_registry_bytes(&pre, &fts, QuantScheme::Tvq(4))?;
+    let planned_path = dir.join("planned.qtvc");
+    let cfg = PlannerConfig {
+        // A slimmer candidate set keeps the probe a one-off cost here.
+        tvq_bits: vec![2, 3, 4, 6],
+        rtvq_arms: vec![(3, 2), (4, 2)],
+        ..PlannerConfig::default()
+    };
+    let t_plan = std::time::Instant::now();
+    let (plan, summary) = build_planned_registry(&pre, &fts, budget, &cfg, &planned_path)?;
+    eprintln!(
+        "[bench:registry] planned registry: {} B of {} B budget in {:.1}s",
+        summary.file_bytes,
+        budget,
+        t_plan.elapsed().as_secs_f64()
+    );
+    let planned = Registry::open(&planned_path)?;
+    let lams = vec![0.3f32; plan.n_tasks()];
+    results.push(b.run_throughput(
+        "merge8_fused_from_planned_registry",
+        (params * N_TASKS) as f64,
+        || {
+            std::hint::black_box(fused_merge(&planned, &pre, &lams, None).unwrap());
         },
     ));
 

@@ -1,0 +1,13 @@
+//! Regenerates artifact `tabP`: planned mixed precision vs uniform
+//! schemes at the same measured byte budget (pack-planner companion to
+//! Table 5).
+//!
+//! Run: `cargo bench --bench tabP_planner` — equivalent to
+//! `tvq experiment tabP`; results land in `target/results/tabP.md`.
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    tvq::exp::run_experiment("tabP")?;
+    eprintln!("[bench:tabP] regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -7,6 +7,18 @@
 //! concurrent misses (single-flight in-flight guard) — and reports
 //! exactly how much memory each one holds.
 //!
+//! # Capacity bound + LRU eviction
+//!
+//! [`ModelCache::with_byte_cap`] bounds the resident fp32 bytes: every
+//! publish evicts least-recently-used variants (hits and publishes both
+//! refresh recency) until the cap holds.  Single-flight builds **in
+//! progress count against the cap** through their caller-supplied size
+//! estimate ([`get_or_build_sized`](ModelCache::get_or_build_sized));
+//! a publish therefore leaves headroom for concurrent leaders instead of
+//! filling the cap and forcing them to evict what was just built.  A
+//! single variant larger than the whole cap is still cached (refusing to
+//! serve it would be worse) — it simply becomes the next eviction victim.
+//!
 //! Variants can be built from any
 //! [`TaskVectorSource`](crate::registry::TaskVectorSource); with the
 //! packed-registry backend the build reads only the quantized sections it
@@ -30,22 +42,53 @@ pub type VariantKey = (String, String);
 /// flips the flag.
 type Ticket = Arc<(Mutex<bool>, Condvar)>;
 
+struct Entry {
+    model: Arc<MergedModel>,
+    bytes: usize,
+    /// Logical clock of the last hit or publish (LRU order).
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    entries: HashMap<VariantKey, Entry>,
+    tick: u64,
+    /// Estimated bytes of builds currently in flight (leaders register
+    /// their estimate for the duration of the build).
+    pending_bytes: usize,
+    evictions: u64,
+}
+
+impl CacheState {
+    fn resident(&self) -> usize {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+}
+
 /// Thread-safe build-on-miss cache of merged model variants.
 #[derive(Default)]
 pub struct ModelCache {
-    inner: Mutex<HashMap<VariantKey, Arc<MergedModel>>>,
+    state: Mutex<CacheState>,
     inflight: Mutex<HashMap<VariantKey, Ticket>>,
+    /// Resident-byte cap; `None` = unbounded.
+    cap: Option<usize>,
 }
 
 /// Clears the in-flight ticket and wakes waiters when the leader exits —
-/// including by error return or panic, so waiters never hang.
+/// including by error return or panic, so waiters never hang.  Also
+/// returns the leader's pending-size reservation.
 struct TicketGuard<'a> {
     cache: &'a ModelCache,
     key: VariantKey,
+    est_bytes: usize,
 }
 
 impl Drop for TicketGuard<'_> {
     fn drop(&mut self) {
+        {
+            let mut state = self.cache.state.lock().unwrap();
+            state.pending_bytes = state.pending_bytes.saturating_sub(self.est_bytes);
+        }
         let ticket = self.cache.inflight.lock().unwrap().remove(&self.key);
         if let Some(t) = ticket {
             let (done, cv) = &*t;
@@ -55,9 +98,73 @@ impl Drop for TicketGuard<'_> {
     }
 }
 
+fn model_bytes(m: &MergedModel) -> usize {
+    match m {
+        MergedModel::Shared(ck) => ck.fp32_bytes(),
+        MergedModel::PerTask(cks) => cks.iter().map(|c| c.fp32_bytes()).sum(),
+    }
+}
+
 impl ModelCache {
+    /// An unbounded cache (no eviction except [`evict`](Self::evict)).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A cache bounded to `cap` resident fp32 bytes with LRU eviction.
+    pub fn with_byte_cap(cap: usize) -> Self {
+        Self { cap: Some(cap), ..Self::default() }
+    }
+
+    pub fn byte_cap(&self) -> Option<usize> {
+        self.cap
+    }
+
+    /// Variants evicted by the capacity bound so far (manual
+    /// [`evict`](Self::evict) calls not included).
+    pub fn evictions(&self) -> u64 {
+        self.state.lock().unwrap().evictions
+    }
+
+    /// Cache hit: bump recency and clone the handle.
+    fn hit(state: &mut CacheState, key: &VariantKey) -> Option<Arc<MergedModel>> {
+        state.tick += 1;
+        let tick = state.tick;
+        state.entries.get_mut(key).map(|e| {
+            e.last_used = tick;
+            e.model.clone()
+        })
+    }
+
+    /// Insert the freshly built variant — atomically releasing the
+    /// leader's pending reservation, so its bytes are never counted
+    /// twice (estimate + resident) — then evict LRU entries until
+    /// resident bytes plus the *other* leaders' pending estimates fit
+    /// the cap.  The just-published key is never its own victim.
+    fn publish(&self, key: &VariantKey, model: Arc<MergedModel>, my_est: usize) {
+        let mut state = self.state.lock().unwrap();
+        state.pending_bytes = state.pending_bytes.saturating_sub(my_est);
+        state.tick += 1;
+        let tick = state.tick;
+        let bytes = model_bytes(&model);
+        state.entries.insert(key.clone(), Entry { model, bytes, last_used: tick });
+        let Some(cap) = self.cap else { return };
+        let pending_others = state.pending_bytes;
+        while state.resident() + pending_others > cap {
+            let victim = state
+                .entries
+                .iter()
+                .filter(|(k, _)| **k != *key)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    state.entries.remove(&k);
+                    state.evictions += 1;
+                }
+                None => break, // only the fresh entry left; keep it even oversized
+            }
+        }
     }
 
     /// Get the cached variant, building it with `build` on a miss.
@@ -71,11 +178,27 @@ impl ModelCache {
     where
         F: FnOnce() -> Result<MergedModel>,
     {
+        self.get_or_build_sized(method, scheme, 0, build)
+    }
+
+    /// [`get_or_build`](Self::get_or_build) with a size estimate for the
+    /// build in flight; the estimate counts against the byte cap while
+    /// the leader works, so concurrent publishes leave room for it.
+    pub fn get_or_build_sized<F>(
+        &self,
+        method: &str,
+        scheme: &str,
+        est_bytes: usize,
+        build: F,
+    ) -> Result<Arc<MergedModel>>
+    where
+        F: FnOnce() -> Result<MergedModel>,
+    {
         let key = (method.to_string(), scheme.to_string());
         let mut build = Some(build);
         loop {
-            if let Some(m) = self.inner.lock().unwrap().get(&key) {
-                return Ok(m.clone());
+            if let Some(m) = Self::hit(&mut self.state.lock().unwrap(), &key) {
+                return Ok(m);
             }
             // Miss: become the single-flight leader or wait for one.
             let wait_on: Option<Ticket> = {
@@ -83,8 +206,8 @@ impl ModelCache {
                 // Re-check the cache under the in-flight lock: a leader
                 // publishes *before* clearing its ticket, so no ticket +
                 // a cache hit here means the work already finished.
-                if let Some(m) = self.inner.lock().unwrap().get(&key) {
-                    return Ok(m.clone());
+                if let Some(m) = Self::hit(&mut self.state.lock().unwrap(), &key) {
+                    return Ok(m);
                 }
                 let existing = inflight.get(&key).cloned();
                 if existing.is_none() {
@@ -92,6 +215,7 @@ impl ModelCache {
                         key.clone(),
                         Arc::new((Mutex::new(false), Condvar::new())),
                     );
+                    self.state.lock().unwrap().pending_bytes += est_bytes;
                 }
                 existing
             };
@@ -106,10 +230,13 @@ impl ModelCache {
                     // failed, this thread may become the next leader.
                 }
                 None => {
-                    let _guard = TicketGuard { cache: self, key: key.clone() };
+                    let mut guard = TicketGuard { cache: self, key: key.clone(), est_bytes };
                     let built = (build.take().expect("a caller leads at most once"))()?;
                     let arc = Arc::new(built);
-                    self.inner.lock().unwrap().insert(key, arc.clone());
+                    self.publish(&key, arc.clone(), est_bytes);
+                    // publish released the reservation; the guard must
+                    // not subtract it a second time on drop.
+                    guard.est_bytes = 0;
                     return Ok(arc);
                 }
             }
@@ -123,26 +250,29 @@ impl ModelCache {
     /// same scheme never share a cached variant.  With a
     /// [`PackedRegistrySource`](crate::registry::PackedRegistrySource)
     /// this materializes a merged model straight from packed payloads.
+    /// The in-flight size estimate is one trunk (`pre.fp32_bytes()`) — a
+    /// lower bound for per-task mergers, exact for shared ones.
     pub fn get_or_build_merged(
         &self,
         merger: &dyn Merger,
         pre: &Checkpoint,
         source: &dyn TaskVectorSource,
     ) -> Result<Arc<MergedModel>> {
-        self.get_or_build(merger.name(), &source.source_id(), || {
+        self.get_or_build_sized(merger.name(), &source.source_id(), pre.fp32_bytes(), || {
             merge_from_source(merger, pre, source, None)
         })
     }
 
     pub fn contains(&self, method: &str, scheme: &str) -> bool {
-        self.inner
+        self.state
             .lock()
             .unwrap()
+            .entries
             .contains_key(&(method.to_string(), scheme.to_string()))
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.state.lock().unwrap().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -151,30 +281,23 @@ impl ModelCache {
 
     /// Evict one variant; returns whether it was present.
     pub fn evict(&self, method: &str, scheme: &str) -> bool {
-        self.inner
+        self.state
             .lock()
             .unwrap()
+            .entries
             .remove(&(method.to_string(), scheme.to_string()))
             .is_some()
     }
 
     /// Resident fp32 bytes across all cached variants.
     pub fn resident_bytes(&self) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .values()
-            .map(|m| match m.as_ref() {
-                MergedModel::Shared(ck) => ck.fp32_bytes(),
-                MergedModel::PerTask(cks) => cks.iter().map(|c| c.fp32_bytes()).sum(),
-            })
-            .sum()
+        self.state.lock().unwrap().resident()
     }
 
     /// Keys currently resident (sorted for deterministic output).
     pub fn keys(&self) -> Vec<VariantKey> {
         let mut keys: Vec<VariantKey> =
-            self.inner.lock().unwrap().keys().cloned().collect();
+            self.state.lock().unwrap().entries.keys().cloned().collect();
         keys.sort();
         keys
     }
@@ -186,13 +309,17 @@ mod tests {
     use crate::checkpoint::Checkpoint;
     use crate::tensor::Tensor;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
     use std::time::Duration;
 
+    /// 4x4 f32 = 64 resident bytes per variant.
     fn model() -> MergedModel {
         let mut ck = Checkpoint::new();
         ck.insert("w", Tensor::zeros(&[4, 4]));
         MergedModel::Shared(ck)
     }
+
+    const MODEL_BYTES: usize = 64;
 
     #[test]
     fn builds_once_then_hits() {
@@ -210,6 +337,7 @@ mod tests {
         assert_eq!(builds, 1);
         assert_eq!(cache.len(), 1);
         assert!(cache.contains("ta", "TVQ-INT3"));
+        assert_eq!(cache.byte_cap(), None);
     }
 
     #[test]
@@ -218,19 +346,82 @@ mod tests {
         let r = cache.get_or_build("ta", "x", || anyhow::bail!("boom"));
         assert!(r.is_err());
         assert!(cache.is_empty());
-        // The failed build must not leave a stuck in-flight ticket.
-        let ok = cache.get_or_build("ta", "x", || Ok(model()));
+        // The failed build must not leave a stuck in-flight ticket or a
+        // leaked pending reservation.
+        let ok = cache.get_or_build_sized("ta", "x", 1 << 20, || Ok(model()));
         assert!(ok.is_ok());
+        assert_eq!(cache.state.lock().unwrap().pending_bytes, 0);
     }
 
     #[test]
     fn evict_and_resident_bytes() {
         let cache = ModelCache::new();
         cache.get_or_build("ta", "FP32", || Ok(model())).unwrap();
-        assert_eq!(cache.resident_bytes(), 16 * 4);
+        assert_eq!(cache.resident_bytes(), MODEL_BYTES);
         assert!(cache.evict("ta", "FP32"));
         assert!(!cache.evict("ta", "FP32"));
         assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_under_cap() {
+        // Cap fits two variants exactly.
+        let cache = ModelCache::with_byte_cap(2 * MODEL_BYTES);
+        cache.get_or_build("ta", "a", || Ok(model())).unwrap();
+        cache.get_or_build("ta", "b", || Ok(model())).unwrap();
+        // Touch "a" so "b" becomes the LRU victim.
+        cache.get_or_build("ta", "a", || unreachable!("must hit")).unwrap();
+        cache.get_or_build("ta", "c", || Ok(model())).unwrap();
+        assert!(cache.contains("ta", "a"), "recently-used variant evicted");
+        assert!(!cache.contains("ta", "b"), "LRU variant survived past the cap");
+        assert!(cache.contains("ta", "c"));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.resident_bytes() <= 2 * MODEL_BYTES);
+    }
+
+    #[test]
+    fn oversized_variant_is_still_served() {
+        let cache = ModelCache::with_byte_cap(MODEL_BYTES / 2);
+        let m = cache.get_or_build("ta", "big", || Ok(model())).unwrap();
+        assert_eq!(m.n_variants(), 1);
+        // Kept despite exceeding the cap alone (never evict the fresh
+        // publish) — but it is the next victim.
+        assert!(cache.contains("ta", "big"));
+        cache.get_or_build("ta", "next", || Ok(model())).unwrap();
+        assert!(!cache.contains("ta", "big"));
+    }
+
+    #[test]
+    fn pending_builds_count_against_cap() {
+        // Cap fits two variants.  A slow build of A holds a reservation;
+        // publishing C must evict B (resident) rather than trust the
+        // full cap, so A lands without displacing anything.
+        let cache = Arc::new(ModelCache::with_byte_cap(2 * MODEL_BYTES));
+        let entered = Arc::new(Barrier::new(2));
+        let release = Arc::new(Barrier::new(2));
+        let c = cache.clone();
+        let (e2, r2) = (entered.clone(), release.clone());
+        let slow = std::thread::spawn(move || {
+            c.get_or_build_sized("ta", "A", MODEL_BYTES, || {
+                e2.wait(); // A's build is now in flight
+                r2.wait(); // ...and stays there until released
+                Ok(model())
+            })
+            .unwrap();
+        });
+        entered.wait();
+        cache.get_or_build("ta", "B", || Ok(model())).unwrap();
+        cache.get_or_build("ta", "C", || Ok(model())).unwrap();
+        // C's publish saw resident B + pending A: B had to go.
+        assert!(!cache.contains("ta", "B"), "pending build was not counted");
+        assert!(cache.contains("ta", "C"));
+        release.wait();
+        slow.join().unwrap();
+        assert!(cache.contains("ta", "A"));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.resident_bytes() <= 2 * MODEL_BYTES);
+        assert_eq!(cache.state.lock().unwrap().pending_bytes, 0);
     }
 
     #[test]
@@ -256,7 +447,7 @@ mod tests {
         // the slow build must run exactly once.
         let cache = Arc::new(ModelCache::new());
         let builds = Arc::new(AtomicUsize::new(0));
-        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let barrier = Arc::new(Barrier::new(8));
         let mut handles = Vec::new();
         for _ in 0..8 {
             let c = cache.clone();
@@ -285,7 +476,7 @@ mod tests {
     fn failed_leader_hands_off_to_a_waiter() {
         let cache = Arc::new(ModelCache::new());
         let attempts = Arc::new(AtomicUsize::new(0));
-        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let barrier = Arc::new(Barrier::new(4));
         let mut handles = Vec::new();
         for _ in 0..4 {
             let c = cache.clone();

@@ -1,0 +1,170 @@
+//! Table P: budget-planned mixed precision vs uniform schemes at equal
+//! measured byte cost (the pack-planner companion to Table 5).
+//!
+//! The claim under test is the planner's reason to exist: at the **same
+//! on-disk byte budget** as a uniform RTVQ-B3O2 registry (measured from
+//! real files, index and all), a sensitivity-planned mixed-precision
+//! registry reconstructs the task vectors with lower total error.  The
+//! zoo is deliberately heterogeneous across layers — per-layer task-
+//! vector scales spanning ~30x, which is what real fine-tuning produces
+//! (paper Fig. 3) and what uniform bit widths waste budget on.
+//!
+//! Runs without PJRT (like `tab5`): `tvq experiment tabP`, or in CI smoke
+//! mode with `TVQ_SMOKE=1` (smaller zoo, same assertions-by-table).
+
+use anyhow::Result;
+
+use super::report::{finish, Table};
+use crate::checkpoint::Checkpoint;
+use crate::planner::{build_planned_registry, PlannerConfig};
+use crate::quant::QuantScheme;
+use crate::registry::{build_registry, DiskAccounting, Registry};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// True when `TVQ_SMOKE` is set: shrink the zoo so CI finishes fast.
+fn smoke() -> bool {
+    std::env::var_os("TVQ_SMOKE").is_some()
+}
+
+/// Heterogeneous synthetic zoo: common drift + per-task offsets, with
+/// per-layer scales spanning ~30x.  Mirrors the regime the planner is
+/// built for; also used by `tvq registry pack --synthetic`.
+pub fn synthetic_planner_zoo(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+    let mut rng = Rng::new(seed);
+    let stds: &[f32] = if smoke() {
+        &[0.002, 0.008, 0.032, 0.064]
+    } else {
+        &[0.002, 0.004, 0.008, 0.016, 0.032, 0.064]
+    };
+    let shape: &[usize] = if smoke() { &[48, 32] } else { &[96, 64] };
+    let mut pre = Checkpoint::new();
+    for (i, _) in stds.iter().enumerate() {
+        pre.insert(&format!("blk{i:02}/w"), Tensor::randn(shape, 0.3, &mut rng));
+    }
+    let mut drift = Checkpoint::new();
+    for (i, &std) in stds.iter().enumerate() {
+        drift.insert(&format!("blk{i:02}/w"), Tensor::randn(shape, std, &mut rng));
+    }
+    let fts = (0..n_tasks)
+        .map(|_| {
+            let mut off = Checkpoint::new();
+            for (i, &std) in stds.iter().enumerate() {
+                off.insert(
+                    &format!("blk{i:02}/w"),
+                    Tensor::randn(shape, std * 0.4, &mut rng),
+                );
+            }
+            pre.add(&drift).unwrap().add(&off).unwrap()
+        })
+        .collect();
+    (pre, fts)
+}
+
+/// Sum over tasks of squared L2 reconstruction error, measured through
+/// the registry's own serving path (`load_task_vector`).
+fn registry_sse(reg: &Registry, pre: &Checkpoint, fts: &[Checkpoint]) -> Result<f64> {
+    let mut sse = 0.0;
+    for (t, ft) in fts.iter().enumerate() {
+        let tau = ft.sub(pre)?;
+        let d = tau.l2_dist(&reg.load_task_vector(t)?)?;
+        sse += d * d;
+    }
+    Ok(sse)
+}
+
+/// Regenerate Table P.
+pub fn tabp_planner() -> Result<Vec<Table>> {
+    let n_tasks = if smoke() { 4 } else { 8 };
+    let (pre, fts) = synthetic_planner_zoo(n_tasks, 0x7AB9);
+    let dir = crate::util::repo_path("target/results/tabP_files");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut table = Table::new(
+        "tabP",
+        "Planned mixed precision vs uniform schemes: real file bytes and \
+         total squared reconstruction error (lower is better)",
+        &["Scheme", "file bytes", "% of B3O2 budget", "total SSE"],
+    );
+
+    // Uniform baselines, measured from real files through the same
+    // serving path the planner will be judged on.
+    let mut budget = 0u64;
+    let mut uniform_rows = Vec::new();
+    for scheme in [
+        QuantScheme::Tvq(2),
+        QuantScheme::Tvq(3),
+        QuantScheme::Tvq(4),
+        QuantScheme::Rtvq(3, 2),
+    ] {
+        let path = dir.join(format!("{}.qtvc", scheme.label()));
+        build_registry(&pre, &fts, scheme, &path)?;
+        let reg = Registry::open(&path)?;
+        let acc = DiskAccounting::measure(&reg)?;
+        let sse = registry_sse(&reg, &pre, &fts)?;
+        if scheme == QuantScheme::Rtvq(3, 2) {
+            budget = acc.file_bytes;
+        }
+        uniform_rows.push((scheme.label(), acc.file_bytes, sse));
+    }
+    for (label, bytes, sse) in &uniform_rows {
+        table.push_row(vec![
+            label.clone(),
+            bytes.to_string(),
+            format!("{:.1}", 100.0 * *bytes as f64 / budget as f64),
+            format!("{sse:.4e}"),
+        ]);
+    }
+
+    // The planner, handed exactly the uniform RTVQ-B3O2 file bytes.
+    let cfg = PlannerConfig::default();
+    let path = dir.join("PLAN-MIXED.qtvc");
+    let (plan, summary) = build_planned_registry(&pre, &fts, budget, &cfg, &path)?;
+    let reg = Registry::open(&path)?;
+    let acc = DiskAccounting::measure(&reg)?;
+    let sse = registry_sse(&reg, &pre, &fts)?;
+    table.push_row(vec![
+        "PLAN-MIXED @ B3O2 budget".to_string(),
+        acc.file_bytes.to_string(),
+        format!("{:.1}", 100.0 * acc.file_bytes as f64 / budget as f64),
+        format!("{sse:.4e}"),
+    ]);
+    debug_assert_eq!(summary.file_bytes, acc.file_bytes);
+
+    // Where the budget went: the per-layer allocation.
+    let mut alloc = Table::new(
+        "tabP",
+        "Planner allocation: per-layer arm, byte share, probed error share",
+        &["Tensor", "arm", "bytes", "% of payload", "probed SSE"],
+    );
+    let total_cost: u64 = plan.assignments.iter().map(|a| a.cost_bytes).sum();
+    for (tensor, a) in plan.tensors.iter().zip(&plan.assignments) {
+        alloc.push_row(vec![
+            tensor.name.clone(),
+            a.arm.label(),
+            a.cost_bytes.to_string(),
+            format!("{:.1}", 100.0 * a.cost_bytes as f64 / total_cost as f64),
+            format!("{:.4e}", a.error),
+        ]);
+    }
+    finish("tabP", vec![table, alloc])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_layers_are_heterogeneous() {
+        let (pre, fts) = synthetic_planner_zoo(3, 1);
+        let tau = fts[0].sub(&pre).unwrap();
+        let norms: Vec<f64> = tau.iter().map(|(_, t)| t.l2_norm()).collect();
+        let (min, max) = norms
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &n| (lo.min(n), hi.max(n)));
+        assert!(
+            max / min > 5.0,
+            "layer scales too uniform for the experiment: {norms:?}"
+        );
+    }
+}

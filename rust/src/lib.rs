@@ -12,6 +12,8 @@
 //! needs: a tensor library ([`tensor`]), a checkpoint store
 //! ([`checkpoint`]), the packed `QTVC` task-vector registry — quantized
 //! payloads as the durable, lazily-loaded serving artifact ([`registry`]) —
+//! a budget-aware pack planner that compiles sensitivity-driven
+//! mixed-precision allocations into those registries ([`planner`]),
 //! eight merging algorithms ([`merge`]), synthetic task
 //! suites ([`data`]), a PJRT runtime that executes the AOT-lowered JAX/
 //! Pallas artifacts ([`runtime`]), fine-tuning drivers ([`train`]),
@@ -49,6 +51,7 @@ pub mod data;
 pub mod eval;
 pub mod exp;
 pub mod merge;
+pub mod planner;
 pub mod quant;
 pub mod registry;
 pub mod runtime;

@@ -7,16 +7,21 @@
 //! * `merge`      — merge under (method, scheme) and evaluate per task.
 //! * `eval`       — evaluate reconstructed single-task models (Individual).
 //! * `serve`      — boot the coordinator and run a load demo.
+//! * `registry`   — pack / inspect / verify `.qtvc` registries (with
+//!   `--budget` the pack planner allocates mixed precision).
 //! * `experiment` — regenerate one of the paper's tables/figures by id.
 //! * `list`       — show available artifacts, presets, experiments.
 
 use anyhow::{anyhow, bail, Result};
 
+use tvq::checkpoint::Checkpoint;
 use tvq::coordinator::{Server, ServerConfig, ServeModel};
 use tvq::data::preset_by_name;
 use tvq::exp;
 use tvq::merge::{standard_methods, Merger};
+use tvq::planner::{build_planned_registry, PlannerConfig};
 use tvq::quant::QuantScheme;
+use tvq::registry::{build_registry, uniform_registry_bytes, DiskAccounting, Registry};
 use tvq::runtime::Runtime;
 use tvq::tensor::Tensor;
 use tvq::train::{TrainConfig, Zoo};
@@ -41,6 +46,7 @@ subcommands:
   merge       merge under a (method, scheme) and evaluate
   eval        evaluate Individual (single-task) models under a scheme
   serve       boot the serving coordinator and run a load demo
+  registry    pack / inspect / verify packed .qtvc registries
   experiment  regenerate a paper table/figure by id (tab1, fig4, ...)
   list        list presets, artifacts and experiment ids
 
@@ -60,6 +66,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "merge" => cmd_merge(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "registry" => cmd_registry(rest),
         "experiment" => cmd_experiment(rest),
         "list" => cmd_list(),
         "--help" | "-h" | "help" => {
@@ -272,6 +279,196 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "throughput: {:.0} req/s over {:.2}s",
         m.completed as f64 / dt,
         dt
+    );
+    Ok(())
+}
+
+fn registry_usage() -> String {
+    "tvq registry — pack / inspect / verify packed .qtvc registries
+
+usage:
+  tvq registry pack --out <file> [--scheme tvq4 | --budget <bytes|scheme>]
+                    [--group 512] [--synthetic] [--preset .. --tasks .. --steps ..]
+  tvq registry inspect <file>
+  tvq registry verify <file>
+
+`pack --budget` invokes the sensitivity-driven pack planner: the budget
+is total file bytes, either a number (`1500000`) or a uniform scheme
+spelling (`rtvq3o2` = \"whatever that scheme would cost on disk\").
+`--synthetic` packs the built-in heterogeneous demo zoo instead of a
+PJRT-trained one (useful offline)."
+        .to_string()
+}
+
+fn cmd_registry(argv: &[String]) -> Result<()> {
+    let Some(action) = argv.first() else {
+        println!("{}", registry_usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match action.as_str() {
+        "pack" => cmd_registry_pack(rest),
+        "inspect" => cmd_registry_inspect(rest),
+        "verify" => cmd_registry_verify(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", registry_usage());
+            Ok(())
+        }
+        other => bail!("unknown registry action {other:?}\n\n{}", registry_usage()),
+    }
+}
+
+/// Resolve `--budget`: raw bytes, or a uniform scheme whose exact
+/// on-disk cost becomes the budget.
+fn parse_budget(spec: &str, pre: &Checkpoint, fts: &[Checkpoint]) -> Result<u64> {
+    if let Ok(bytes) = spec.parse::<u64>() {
+        return Ok(bytes);
+    }
+    let scheme = QuantScheme::parse(spec).map_err(|e| {
+        anyhow!("--budget {spec:?} is neither a byte count nor a scheme: {e}")
+    })?;
+    let bytes = uniform_registry_bytes(pre, fts, scheme)?;
+    println!("budget: {} B (= uniform {} on this zoo)", bytes, scheme.label());
+    Ok(bytes)
+}
+
+fn cmd_registry_pack(argv: &[String]) -> Result<()> {
+    let cmd = zoo_args(Command::new("tvq registry pack", "pack a zoo into a .qtvc registry"))
+        .req("out", "output .qtvc path")
+        .opt("scheme", "tvq4", "uniform scheme when no --budget is given")
+        .opt("budget", "", "planner byte budget: a number or a scheme spelling")
+        .opt("group", "512", "planner group-quantization width")
+        .switch("synthetic", "use the built-in heterogeneous demo zoo (no PJRT)");
+    let args = cmd.parse(argv)?;
+    let out = args.get_str("out")?.to_string();
+    let n_tasks = args.get_usize("tasks")?;
+
+    let (pre, fts) = if args.switch("synthetic") {
+        exp::planner::synthetic_planner_zoo(n_tasks, 0x7AB9)
+    } else {
+        let rt = Runtime::new()?;
+        let zoo = load_zoo(&args, &rt)?;
+        (zoo.pre.clone(), zoo.fts.clone())
+    };
+
+    let budget_spec = args.get_str("budget")?.to_string();
+    if budget_spec.is_empty() {
+        let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
+        let summary = build_registry(&pre, &fts, scheme, &out)?;
+        println!(
+            "packed {} tasks at {} -> {} ({} B: {} index + {} payload)",
+            summary.n_tasks,
+            scheme.label(),
+            out,
+            summary.file_bytes,
+            summary.index_bytes,
+            summary.payload_bytes
+        );
+        return Ok(());
+    }
+
+    let budget = parse_budget(&budget_spec, &pre, &fts)?;
+    let cfg = PlannerConfig { group: args.get_usize("group")?, ..PlannerConfig::default() };
+    let (plan, summary) = build_planned_registry(&pre, &fts, budget, &cfg, &out)?;
+    println!(
+        "planned {} tasks x {} tensors -> {} ({} B of {} B budget, total SSE {:.4e})",
+        plan.n_tasks(),
+        plan.n_tensors(),
+        out,
+        summary.file_bytes,
+        budget,
+        plan.total_error()
+    );
+    for (tensor, a) in plan.tensors.iter().zip(&plan.assignments) {
+        println!(
+            "  {:<20} {:<10} {:>9} B  SSE {:.4e}",
+            tensor.name,
+            a.arm.label(),
+            a.cost_bytes,
+            a.error
+        );
+    }
+    Ok(())
+}
+
+fn registry_path_arg(argv: &[String], action: &str) -> Result<String> {
+    let cmd = Command::new("tvq registry", "inspect/verify a .qtvc registry");
+    let args = cmd.parse(argv)?;
+    args.positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: tvq registry {action} <file.qtvc>"))
+}
+
+fn cmd_registry_inspect(argv: &[String]) -> Result<()> {
+    let path = registry_path_arg(argv, "inspect")?;
+    let reg = Registry::open(&path)?;
+    println!(
+        "{}: QTVC v{} {} | {} tasks | {} B ({} index + {} payload)",
+        path,
+        reg.version(),
+        reg.scheme().label(),
+        reg.n_tasks(),
+        reg.file_bytes(),
+        reg.index_bytes(),
+        reg.payload_bytes()
+    );
+    println!("{:<28} {:>5} {:>10} {:>10} {:>10}", "section", "kind", "offset", "bytes", "crc32");
+    for e in reg.entries() {
+        println!(
+            "{:<28} {:>5} {:>10} {:>10}   {:08x}",
+            e.name,
+            e.kind.to_u8(),
+            e.offset,
+            e.length,
+            e.crc
+        );
+    }
+    if let Some(plan) = reg.plan() {
+        println!(
+            "plan: budget {} B, planned {} B, total SSE {:.4e}",
+            plan.budget_bytes,
+            plan.planned_file_bytes(),
+            plan.total_error()
+        );
+        for (tensor, a) in plan.tensors.iter().zip(&plan.assignments) {
+            println!(
+                "  {:<20} {:<10} group {:<5} {:>9} B  SSE {:.4e}",
+                tensor.name,
+                a.arm.label(),
+                tensor.group,
+                a.cost_bytes,
+                a.error
+            );
+        }
+    }
+    let acc = DiskAccounting::measure(&reg)?;
+    println!(
+        "accounting: ideal {} B, overhead +{:.2}%, {:.1}% of fp32",
+        acc.ideal_bytes,
+        100.0 * acc.overhead_fraction(),
+        100.0 * acc.fraction_of_fp32()
+    );
+    Ok(())
+}
+
+fn cmd_registry_verify(argv: &[String]) -> Result<()> {
+    let path = registry_path_arg(argv, "verify")?;
+    // Open validates the header, offset table, index CRC and (for
+    // planned files) the plan section + section coverage.
+    let reg = Registry::open(&path)?;
+    // Decode every task end-to-end: reads each section (per-section CRC)
+    // and round-trips the quantized payloads through dequantization.
+    for t in 0..reg.n_tasks() {
+        reg.load_task_vector(t)
+            .map_err(|e| anyhow!("task {t} failed decode round-trip: {e:#}"))?;
+    }
+    println!(
+        "{}: OK ({} sections, {} tasks, {} B)",
+        path,
+        reg.entries().len(),
+        reg.n_tasks(),
+        reg.file_bytes()
     );
     Ok(())
 }

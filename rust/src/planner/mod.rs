@@ -1,0 +1,483 @@
+//! Budget-aware pack planner — sensitivity-driven mixed-precision
+//! allocation compiled into group-quantized registry payloads.
+//!
+//! The paper's memory claim (Section 4.4) rests on spending bits where
+//! quantization hurts most.  Uniform TVQ/RTVQ registries give every layer
+//! of every task the same width; this subsystem instead
+//!
+//! 1. **probes** per-layer sensitivity ([`sensitivity`]): the exact byte
+//!    cost and reconstruction error of every candidate arm — per-task
+//!    group quantization at 1..=8 bits and shared-base/offset RTVQ
+//!    splits — against the f32 task vectors;
+//! 2. **solves** the allocation ([`solve`]): greedy
+//!    marginal-error-per-byte over each tensor's convex cost/error
+//!    frontier, under a caller byte budget measured in real file bytes
+//!    (codes + group params + offset-table rows + the plan section
+//!    itself), degrading monotonically as the budget shrinks; and
+//! 3. **compiles** the winning [`PackPlan`] ([`plan`], which also
+//!    documents the kind-3 wire format) into a `QTVC` v3 registry of
+//!    kind-2 [`GroupQuantized`] sections — the first real producer for
+//!    that payload kind — served straight through the fused
+//!    dequant-merge path ([`fused_merge`]).
+//!
+//! # Quickstart: plan → pack → serve
+//!
+//! ```no_run
+//! use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
+//! use tvq::registry::{PackedRegistrySource, Registry};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let (pre, fts): (tvq::checkpoint::Checkpoint, Vec<tvq::checkpoint::Checkpoint>) = todo!();
+//! // Fit the zoo into 2 MiB of registry file, bits allocated by
+//! // sensitivity (the budget is total file bytes, index included).
+//! let (plan, summary) = build_planned_registry(
+//!     &pre, &fts, 2 << 20, &PlannerConfig::default(), "zoo.qtvc")?;
+//! assert!(summary.file_bytes <= 2 << 20);
+//! println!("{} B, total SSE {:.3e}", summary.file_bytes, plan.total_error());
+//!
+//! // Serve: group sections feed the fused dequant-merge kernel layout.
+//! let reg = Registry::open("zoo.qtvc")?;
+//! let merged = fused_merge(&reg, &pre, &vec![0.3; plan.n_tasks()], None)?;
+//! // Or through the generic source / ModelCache path:
+//! let _src = PackedRegistrySource::open("zoo.qtvc")?;
+//! # let _ = merged; Ok(()) }
+//! ```
+
+pub mod plan;
+pub mod sensitivity;
+pub mod solve;
+
+pub use plan::{Arm, Assignment, PackPlan, PlanTensor, SectionRole};
+pub use sensitivity::{probe, ArmStat, SensitivityProfile, TensorProfile};
+pub use solve::{min_feasible_bytes, solve};
+
+use anyhow::{bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::quant::fused::{dequant_merge_flat, dequant_merge_rtvq_flat};
+use crate::quant::GroupQuantized;
+use crate::registry::{Registry, RegistryBuilder, WriteSummary};
+use crate::tensor::Tensor;
+
+/// Candidate-arm configuration for the probe + solver.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Per-group quantization width (clamped per tensor to its numel).
+    /// Larger groups cost less scale/zp metadata; smaller groups adapt
+    /// better to local ranges.
+    pub group: usize,
+    /// Per-task group-quantization candidate widths.
+    pub tvq_bits: Vec<u8>,
+    /// Shared-base/offset candidate splits `(base_bits, offset_bits)`.
+    pub rtvq_arms: Vec<(u8, u8)>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        Self {
+            group: 512,
+            tvq_bits: vec![1, 2, 3, 4, 5, 6, 8],
+            rtvq_arms: vec![(2, 1), (3, 1), (2, 2), (3, 2), (4, 2), (4, 3)],
+        }
+    }
+}
+
+impl PlannerConfig {
+    pub fn check(&self) -> Result<()> {
+        if self.group == 0 {
+            bail!("planner group width must be >= 1");
+        }
+        if self.tvq_bits.is_empty() && self.rtvq_arms.is_empty() {
+            bail!("planner needs at least one candidate arm");
+        }
+        for &b in &self.tvq_bits {
+            if !(1..=8).contains(&b) {
+                bail!("tvq candidate bits {b} outside 1..=8");
+            }
+        }
+        for &(bb, bo) in &self.rtvq_arms {
+            if !(1..=8).contains(&bb) || !(1..=8).contains(&bo) {
+                bail!("rtvq candidate ({bb},{bo}) outside 1..=8");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Probe + solve: produce a [`PackPlan`] for the suite under
+/// `budget_bytes` total registry file bytes.
+pub fn plan_pack(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    budget_bytes: u64,
+    cfg: &PlannerConfig,
+) -> Result<PackPlan> {
+    let profile = probe(pre, fts, cfg)?;
+    solve(&profile, budget_bytes)
+}
+
+/// Flatten one tensor of `ck`, zero-padded to `padded` elements — shared
+/// by the probe, the writer, and the fused serve path so all three see
+/// byte-identical flat layouts (the plan's cost/error model depends on
+/// that agreement).  Refuses to *clip*: data longer than `padded` means
+/// the caller's shape bookkeeping is wrong.
+pub(crate) fn padded_flat(ck: &Checkpoint, name: &str, padded: usize) -> Result<Vec<f32>> {
+    let t = ck.get(name)?;
+    if t.numel() > padded {
+        bail!(
+            "tensor {name:?} has {} elements but the plan allots {padded} — \
+             stale plan for this checkpoint?",
+            t.numel()
+        );
+    }
+    let mut flat = Vec::with_capacity(padded);
+    flat.extend_from_slice(t.data());
+    flat.resize(padded, 0.0);
+    Ok(flat)
+}
+
+/// Task-mean flat of `tensor` across `taus` (theta_ft_avg - theta_pre at
+/// layer granularity) — the base the RTVQ arms decompose against.
+/// Shared by the probe and the writer so the plan's probed errors stay
+/// bit-for-bit representative of what gets packed.
+pub(crate) fn mean_flat(taus: &[Checkpoint], tensor: &PlanTensor) -> Result<Vec<f32>> {
+    let padded = tensor.padded();
+    let mut base = vec![0.0f32; padded];
+    for tau in taus {
+        let flat = padded_flat(tau, &tensor.name, padded)?;
+        for (b, x) in base.iter_mut().zip(flat) {
+            *b += x;
+        }
+    }
+    let inv = 1.0 / taus.len() as f32;
+    for b in base.iter_mut() {
+        *b *= inv;
+    }
+    Ok(base)
+}
+
+/// Quantize `flat - base_hat` at `bits` — the error-corrected RTVQ
+/// offset (paper Eq. 6: the base's quantization error is folded into
+/// what the offset sees).  Shared by the probe and the writer.
+pub(crate) fn quantize_offset(
+    flat: &[f32],
+    base_hat: &[f32],
+    bits: u8,
+    group: usize,
+) -> Result<GroupQuantized> {
+    let off: Vec<f32> = flat.iter().zip(base_hat).map(|(&x, &b)| x - b).collect();
+    GroupQuantized::quantize(&off, bits, group)
+}
+
+/// Compile `plan` against the suite into a `QTVC` v3 registry at `path`.
+///
+/// Quantization is re-derived deterministically from the same inputs the
+/// probe saw, so the written file's size equals
+/// [`PackPlan::planned_file_bytes`] **exactly** — the function errors if
+/// it does not, because that would mean the solver optimized a different
+/// file than the writer produced.
+pub fn write_planned_registry<P: AsRef<std::path::Path>>(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    plan: &PackPlan,
+    path: P,
+) -> Result<WriteSummary> {
+    plan.validate()?;
+    if fts.len() != plan.n_tasks() {
+        bail!(
+            "plan covers {} tasks but {} checkpoints were supplied",
+            plan.n_tasks(),
+            fts.len()
+        );
+    }
+    if pre.len() != plan.n_tensors() {
+        bail!(
+            "trunk has {} tensors but the plan covers {} — stale plan for \
+             this zoo?",
+            pre.len(),
+            plan.n_tensors()
+        );
+    }
+    // Per-tensor shape match, not just count: a same-count zoo with
+    // resized layers must fail here, never pack truncated/zero-padded
+    // task vectors that CRC-verify clean.
+    for tensor in &plan.tensors {
+        let t = pre.get(&tensor.name)?;
+        if t.shape() != &tensor.shape[..] {
+            bail!(
+                "tensor {:?}: trunk shape {:?} does not match plan shape {:?} — \
+                 stale plan for this zoo?",
+                tensor.name,
+                t.shape(),
+                tensor.shape
+            );
+        }
+    }
+    let taus: Vec<Checkpoint> = fts.iter().map(|ft| ft.sub(pre)).collect::<Result<_>>()?;
+
+    let mut builder = RegistryBuilder::new_planned();
+    builder.set_plan(plan)?;
+    // Bases first (tensor order), then task sections in (task, tensor)
+    // order — the same deterministic layout the cost model priced, built
+    // from the same shared helpers the probe measured with.
+    let mut base_hats: Vec<Option<Vec<f32>>> = vec![None; plan.n_tensors()];
+    for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
+        if let Arm::Rtvq { base_bits, .. } = a.arm {
+            let base = mean_flat(&taus, tensor)?;
+            let qbase = GroupQuantized::quantize(&base, base_bits, tensor.group)?;
+            base_hats[l] = Some(qbase.dequantize());
+            builder.add_group(&plan::base_section_name(&tensor.name), &qbase)?;
+        }
+    }
+    for (t, task_name) in plan.task_names.iter().enumerate() {
+        for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
+            let flat = padded_flat(&taus[t], &tensor.name, tensor.padded())?;
+            let gq = match a.arm {
+                Arm::Tvq { bits } => GroupQuantized::quantize(&flat, bits, tensor.group)?,
+                Arm::Rtvq { offset_bits, .. } => {
+                    let base_hat =
+                        base_hats[l].as_ref().expect("base quantized above for rtvq arms");
+                    quantize_offset(&flat, base_hat, offset_bits, tensor.group)?
+                }
+            };
+            builder.add_group(&plan::task_section_name(task_name, &tensor.name), &gq)?;
+        }
+    }
+    let summary = builder.write(path)?;
+    if summary.file_bytes != plan.planned_file_bytes() {
+        bail!(
+            "planned registry measured {} B but the plan predicted {} B — \
+             cost model and writer disagree",
+            summary.file_bytes,
+            plan.planned_file_bytes()
+        );
+    }
+    Ok(summary)
+}
+
+/// One-call path: probe, solve under `budget_bytes`, and write the
+/// planned registry to `path`.
+pub fn build_planned_registry<P: AsRef<std::path::Path>>(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    budget_bytes: u64,
+    cfg: &PlannerConfig,
+    path: P,
+) -> Result<(PackPlan, WriteSummary)> {
+    let plan = plan_pack(pre, fts, budget_bytes, cfg)?;
+    let summary = write_planned_registry(pre, fts, &plan, path)?;
+    Ok((plan, summary))
+}
+
+/// Fused dequantize-and-merge straight from a planned registry's kind-2
+/// sections: `theta_pre + sum_t lams[t] * tau_hat_t`, tensor by tensor,
+/// without materializing any per-task f32 task vector.
+///
+/// `tasks` selects a subset (all tasks when `None`); `lams` must have one
+/// coefficient per *selected* task.  TVQ-arm tensors accumulate through
+/// [`dequant_merge_flat`]; RTVQ-arm tensors fold the shared base in once
+/// scaled by `sum(lams)` via [`dequant_merge_rtvq_flat`].
+pub fn fused_merge(
+    reg: &Registry,
+    pre: &Checkpoint,
+    lams: &[f32],
+    tasks: Option<&[usize]>,
+) -> Result<Checkpoint> {
+    let plan = reg
+        .plan()
+        .ok_or_else(|| anyhow::anyhow!("fused_merge needs a planned (PLAN-MIXED) registry"))?;
+    let indices: Vec<usize> = match tasks {
+        Some(ts) => {
+            for &t in ts {
+                if t >= plan.n_tasks() {
+                    bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
+                }
+            }
+            ts.to_vec()
+        }
+        None => (0..plan.n_tasks()).collect(),
+    };
+    if indices.is_empty() {
+        bail!("merge needs at least one task");
+    }
+    if lams.len() != indices.len() {
+        bail!("{} lambdas for {} selected tasks", lams.len(), indices.len());
+    }
+    // The plan must cover the trunk exactly — a trunk with tensors the
+    // plan never saw would otherwise come back silently truncated
+    // (the generic merge path errors on the same mismatch).
+    if pre.len() != plan.n_tensors() {
+        bail!(
+            "pre-trained trunk has {} tensors but the plan covers {} — wrong \
+             trunk for this registry?",
+            pre.len(),
+            plan.n_tensors()
+        );
+    }
+
+    let mut out = Checkpoint::new();
+    let mut buf: Vec<f32> = Vec::new();
+    for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
+        let pre_t = pre.get(&tensor.name)?;
+        if pre_t.numel() != tensor.numel() || pre_t.shape() != &tensor.shape[..] {
+            bail!(
+                "pre-trained tensor {:?} shape {:?} does not match plan shape {:?}",
+                tensor.name,
+                pre_t.shape(),
+                tensor.shape
+            );
+        }
+        let pre_flat = padded_flat(pre, &tensor.name, tensor.padded())?;
+        let sections: Vec<GroupQuantized> = indices
+            .iter()
+            .map(|&t| reg.load_planned_task_section(t, l))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&GroupQuantized> = sections.iter().collect();
+        match a.arm {
+            Arm::Tvq { .. } => dequant_merge_flat(&pre_flat, &refs, lams, &mut buf)?,
+            Arm::Rtvq { .. } => {
+                let base = reg.load_planned_base_section(l)?;
+                dequant_merge_rtvq_flat(&pre_flat, &base, &refs, lams, &mut buf)?
+            }
+        }
+        buf.truncate(tensor.numel());
+        out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf.clone())?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Heterogeneous suite: per-layer tau scales spanning 25x, the regime
+    /// where mixed precision pays.
+    pub(crate) fn hetero_suite(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+        let mut rng = Rng::new(seed);
+        let stds = [0.002f32, 0.005, 0.02, 0.05];
+        let mut pre = Checkpoint::new();
+        for (i, _) in stds.iter().enumerate() {
+            pre.insert(&format!("blk{i:02}/w"), Tensor::randn(&[64, 48], 0.3, &mut rng));
+        }
+        let mut drift = Checkpoint::new();
+        for (i, &std) in stds.iter().enumerate() {
+            drift.insert(&format!("blk{i:02}/w"), Tensor::randn(&[64, 48], std, &mut rng));
+        }
+        let fts = (0..n_tasks)
+            .map(|_| {
+                let mut off = Checkpoint::new();
+                for (i, &std) in stds.iter().enumerate() {
+                    off.insert(
+                        &format!("blk{i:02}/w"),
+                        Tensor::randn(&[64, 48], std * 0.3, &mut rng),
+                    );
+                }
+                pre.add(&drift).unwrap().add(&off).unwrap()
+            })
+            .collect();
+        (pre, fts)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tvq_planner_{name}"))
+    }
+
+    fn small_cfg() -> PlannerConfig {
+        PlannerConfig {
+            group: 256,
+            tvq_bits: vec![1, 2, 3, 4, 6],
+            rtvq_arms: vec![(3, 1), (3, 2), (4, 2)],
+        }
+    }
+
+    #[test]
+    fn plan_writes_byte_exact_registry() {
+        let (pre, fts) = hetero_suite(4, 21);
+        let cfg = small_cfg();
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let budget = min_feasible_bytes(&profile) * 2;
+        let dir = tmp("exact");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("zoo.qtvc");
+        let (plan, summary) =
+            build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+        assert!(plan.planned_file_bytes() <= budget);
+        assert_eq!(summary.file_bytes, plan.planned_file_bytes());
+        assert_eq!(summary.file_bytes, std::fs::metadata(&path).unwrap().len());
+        assert_eq!(summary.n_tasks, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_allocation_is_uneven_across_heterogeneous_layers() {
+        let (pre, fts) = hetero_suite(4, 22);
+        let cfg = small_cfg();
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        // A mid-range budget forces a choice.
+        let min = min_feasible_bytes(&profile);
+        let plan = solve(&profile, min + (min / 2)).unwrap();
+        let bits_of = |a: &Assignment| match a.arm {
+            Arm::Tvq { bits } => bits,
+            Arm::Rtvq { offset_bits, .. } => offset_bits,
+        };
+        let quiet = bits_of(&plan.assignments[0]); // std 0.002
+        let loud = bits_of(&plan.assignments[3]); // std 0.05
+        assert!(
+            loud >= quiet,
+            "louder layer got fewer offset bits: loud={loud} quiet={quiet}"
+        );
+        // Across the sweep some pair must differ, else it's not mixed.
+        let all: Vec<u8> = plan.assignments.iter().map(bits_of).collect();
+        assert!(all.iter().any(|&b| b != all[0]), "allocation is uniform: {all:?}");
+    }
+
+    #[test]
+    fn fused_merge_matches_task_vector_reconstruction() {
+        let (pre, fts) = hetero_suite(4, 23);
+        let cfg = small_cfg();
+        let dir = tmp("fused");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("zoo.qtvc");
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let budget = min_feasible_bytes(&profile) * 2;
+        build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+        let reg = Registry::open(&path).unwrap();
+
+        // Reference: pre + sum lam * tau_hat from the generic lazy path.
+        let lams = [0.4f32, 0.1, 0.3, 0.2];
+        let mut want = pre.clone();
+        for (t, &lam) in lams.iter().enumerate() {
+            want.axpy(lam, &reg.load_task_vector(t).unwrap()).unwrap();
+        }
+        let got = fused_merge(&reg, &pre, &lams, None).unwrap();
+        assert!(
+            got.l2_dist(&want).unwrap() < 1e-4,
+            "fused path diverged: {}",
+            got.l2_dist(&want).unwrap()
+        );
+
+        // Subset selection with mismatched lambda count is rejected.
+        assert!(fused_merge(&reg, &pre, &lams, Some(&[0, 2])).is_err());
+        let sub = fused_merge(&reg, &pre, &[0.4, 0.3], Some(&[0, 2])).unwrap();
+        let mut want_sub = pre.clone();
+        want_sub.axpy(0.4, &reg.load_task_vector(0).unwrap()).unwrap();
+        want_sub.axpy(0.3, &reg.load_task_vector(2).unwrap()).unwrap();
+        assert!(sub.l2_dist(&want_sub).unwrap() < 1e-4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn plan_task_count_mismatch_rejected() {
+        let (pre, fts) = hetero_suite(3, 24);
+        let cfg = small_cfg();
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let plan = solve(&profile, min_feasible_bytes(&profile) * 2).unwrap();
+        let dir = tmp("mismatch");
+        let err = write_planned_registry(&pre, &fts[..2], &plan, dir.join("z.qtvc"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tasks"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,615 @@
+//! [`PackPlan`] — the serializable output of the budget-aware pack
+//! planner, and the exact byte arithmetic the solver optimizes against.
+//!
+//! A plan assigns every tensor (layer) of the task suite one quantization
+//! **arm**: either independent per-task group quantization at some bit
+//! width ([`Arm::Tvq`]) or a shared group-quantized base plus per-task
+//! low-bit offsets ([`Arm::Rtvq`], the paper's Section 4.3 decomposition
+//! applied per layer).  The registry writer compiles a plan into kind-2
+//! `GroupQuantized` sections — one per `(task, tensor)` slot plus one per
+//! RTVQ-arm base — and embeds the plan itself as the kind-3 metadata
+//! section so readers can map sections back to slots and reconstruct
+//! tensor shapes (group payloads alone carry none).
+//!
+//! # Plan wire format (kind-3 section body)
+//!
+//! All integers little-endian:
+//!
+//! ```text
+//!   version   u8  = 1
+//!   budget    u64 (bytes the plan was solved under)
+//!   task_cnt  u32, then per task:  name_len u32, name bytes
+//!   tensor_cnt u32, then per tensor:
+//!     name_len u32, name bytes
+//!     ndim u32, dims u64 * ndim
+//!     group u64                       (per-group quantization width)
+//!     arm_kind u8 (0 tvq | 1 rtvq), b1 u8, b2 u8
+//!     cost u64                        (exact bytes this arm adds)
+//!     error f64                       (probed sum-of-squares error)
+//! ```
+//!
+//! The body size depends only on names, shapes and counts — never on
+//! which arms were chosen — so the solver can account for the plan
+//! section itself exactly before solving.
+//!
+//! # Exact cost model
+//!
+//! Every candidate arm is priced in **real file bytes**, not ideal bits:
+//! packed codes + per-group scale/zp pairs + the offset-table rows of the
+//! sections the arm creates (and the base section, for RTVQ arms).
+//! [`PackPlan::planned_file_bytes`] is therefore a byte-exact prediction
+//! of the registry file the writer emits; `write_planned_registry`
+//! enforces the equality.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::registry::container::Cursor;
+
+/// Name of the kind-3 plan-metadata section in the registry index.
+pub const PLAN_SECTION_NAME: &str = "__plan__";
+/// Wire version of the plan body.
+pub const PLAN_WIRE_VERSION: u8 = 1;
+/// Shape-sanity cap shared with the checkpoint payload decoder.
+const MAX_NDIM: usize = 16;
+
+/// One quantization arm for a tensor, applied across every task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arm {
+    /// Each task's slice quantized independently at `bits`.
+    Tvq { bits: u8 },
+    /// One shared base at `base_bits` (the task-mean slice, stored once)
+    /// plus per-task offsets at `offset_bits`, with error correction:
+    /// offsets are computed against the *dequantized* base.
+    Rtvq { base_bits: u8, offset_bits: u8 },
+}
+
+impl Arm {
+    pub fn label(&self) -> String {
+        match self {
+            Arm::Tvq { bits } => format!("TVQ-INT{bits}"),
+            Arm::Rtvq { base_bits, offset_bits } => {
+                format!("RTVQ-B{base_bits}O{offset_bits}")
+            }
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        let ok = |b: u8| (1..=8).contains(&b);
+        match *self {
+            Arm::Tvq { bits } if ok(bits) => Ok(()),
+            Arm::Rtvq { base_bits, offset_bits } if ok(base_bits) && ok(offset_bits) => Ok(()),
+            other => bail!("pack plan arm {other:?} has bits outside 1..=8"),
+        }
+    }
+}
+
+/// One tensor (layer) the plan covers: its shape template and the group
+/// width its flat data is quantized at.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Per-group quantization width; `1 <= group <= numel`, chosen as
+    /// `min(config.group, numel)` so tiny tensors never pad past their
+    /// own length.
+    pub group: usize,
+}
+
+impl PlanTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Flat length after zero-padding up to a multiple of `group`.
+    pub fn padded(&self) -> usize {
+        self.numel().div_ceil(self.group) * self.group
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.padded() / self.group
+    }
+}
+
+/// The arm chosen for one tensor, with the probe's measurements.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Assignment {
+    pub arm: Arm,
+    /// Exact bytes this arm adds to the registry file (sections + rows).
+    pub cost_bytes: u64,
+    /// Probed reconstruction error: sum over tasks of squared L2 error.
+    pub error: f64,
+}
+
+/// Where one expected kind-2 section slots into the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionRole {
+    /// Shared base for tensor `tensor` (RTVQ arms only).
+    Base { tensor: usize },
+    /// Task `task`'s payload for tensor `tensor`.
+    Task { task: usize, tensor: usize },
+}
+
+/// A solved bit-allocation: one [`Assignment`] per tensor, under
+/// `budget_bytes`, for the named task suite.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackPlan {
+    pub budget_bytes: u64,
+    pub task_names: Vec<String>,
+    pub tensors: Vec<PlanTensor>,
+    /// One entry per tensor, same order as `tensors`.
+    pub assignments: Vec<Assignment>,
+}
+
+/// Exact encoded size of one kind-2 group section body:
+/// `bits u8 + group u64 + n_groups u64 + (scale,zp) f32 pairs + codes`.
+pub fn group_payload_bytes(padded: usize, bits: u8, group: usize) -> u64 {
+    debug_assert_eq!(padded % group, 0);
+    (17 + (padded / group) * 8 + (padded * bits as usize).div_ceil(8)) as u64
+}
+
+/// Exact offset-table row size for a section named `name`:
+/// `name_len u32 + name + kind u8 + offset u64 + length u64 + crc u32`.
+pub fn index_row_bytes(name: &str) -> u64 {
+    (4 + name.len() + 1 + 8 + 8 + 4) as u64
+}
+
+/// Registry section name for task `task_name`'s slice of `tensor_name`.
+pub fn task_section_name(task_name: &str, tensor_name: &str) -> String {
+    format!("{task_name}/{tensor_name}")
+}
+
+/// Registry section name for the shared base of `tensor_name`.
+pub fn base_section_name(tensor_name: &str) -> String {
+    format!("__base__/{tensor_name}")
+}
+
+/// Exact bytes arm `arm` adds to the file for `tensor` across
+/// `task_names`: section bodies plus their offset-table rows (plus the
+/// base section and its row for RTVQ arms).
+pub fn arm_cost_bytes(task_names: &[String], tensor: &PlanTensor, arm: Arm) -> u64 {
+    let padded = tensor.padded();
+    let per_task = |bits: u8| -> u64 {
+        task_names
+            .iter()
+            .map(|t| {
+                group_payload_bytes(padded, bits, tensor.group)
+                    + index_row_bytes(&task_section_name(t, &tensor.name))
+            })
+            .sum()
+    };
+    match arm {
+        Arm::Tvq { bits } => per_task(bits),
+        Arm::Rtvq { base_bits, offset_bits } => {
+            group_payload_bytes(padded, base_bits, tensor.group)
+                + index_row_bytes(&base_section_name(&tensor.name))
+                + per_task(offset_bits)
+        }
+    }
+}
+
+/// Exact size of the encoded plan body — depends only on names, shapes
+/// and counts, never on the chosen arms.
+pub fn plan_meta_bytes(task_names: &[String], tensors: &[PlanTensor]) -> u64 {
+    let tasks: usize = task_names.iter().map(|t| 4 + t.len()).sum();
+    let tensors_b: usize = tensors
+        .iter()
+        .map(|t| 4 + t.name.len() + 4 + 8 * t.shape.len() + 8 + 1 + 1 + 1 + 8 + 8)
+        .sum();
+    (1 + 8 + 4 + tasks + 4 + tensors_b) as u64
+}
+
+/// Registry bytes independent of the allocation: header, plan section
+/// (body + row), and the trailing index CRC.
+pub fn fixed_file_bytes(task_names: &[String], tensors: &[PlanTensor]) -> u64 {
+    let header = (4 + 4 + 4 + crate::registry::container::PLANNED_LABEL.len() + 4) as u64;
+    header
+        + index_row_bytes(PLAN_SECTION_NAME)
+        + plan_meta_bytes(task_names, tensors)
+        + 4
+}
+
+impl PackPlan {
+    pub fn n_tasks(&self) -> usize {
+        self.task_names.len()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Parameters per task payload (unpadded).
+    pub fn params_per_task(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Byte-exact prediction of the registry file this plan compiles to,
+    /// recomputed from the arms (not the stored per-arm costs).
+    pub fn planned_file_bytes(&self) -> u64 {
+        fixed_file_bytes(&self.task_names, &self.tensors)
+            + self
+                .tensors
+                .iter()
+                .zip(&self.assignments)
+                .map(|(t, a)| arm_cost_bytes(&self.task_names, t, a.arm))
+                .sum::<u64>()
+    }
+
+    /// Metadata-free code bytes — the planned analog of
+    /// [`StorageReport::ideal`](crate::quant::StorageReport::ideal).
+    pub fn ideal_code_bytes(&self) -> u64 {
+        let n_tasks = self.n_tasks();
+        self.tensors
+            .iter()
+            .zip(&self.assignments)
+            .map(|(t, a)| {
+                let padded = t.padded();
+                let codes = |bits: u8| ((padded * bits as usize).div_ceil(8)) as u64;
+                match a.arm {
+                    Arm::Tvq { bits } => n_tasks as u64 * codes(bits),
+                    Arm::Rtvq { base_bits, offset_bits } => {
+                        codes(base_bits) + n_tasks as u64 * codes(offset_bits)
+                    }
+                }
+            })
+            .sum()
+    }
+
+    /// Total probed reconstruction error (sum of squared L2 across all
+    /// tasks and tensors).
+    pub fn total_error(&self) -> f64 {
+        self.assignments.iter().map(|a| a.error).sum()
+    }
+
+    /// Every kind-2 section this plan expects, with its role — the
+    /// registry open path validates the file against exactly this set.
+    pub fn expected_sections(&self) -> Vec<(String, SectionRole)> {
+        let mut out = Vec::new();
+        for (l, (tensor, a)) in self.tensors.iter().zip(&self.assignments).enumerate() {
+            if matches!(a.arm, Arm::Rtvq { .. }) {
+                out.push((base_section_name(&tensor.name), SectionRole::Base { tensor: l }));
+            }
+        }
+        for (t, task) in self.task_names.iter().enumerate() {
+            for (l, tensor) in self.tensors.iter().enumerate() {
+                out.push((
+                    task_section_name(task, &tensor.name),
+                    SectionRole::Task { task: t, tensor: l },
+                ));
+            }
+        }
+        out
+    }
+
+    /// The (bits, group) pair a kind-2 section must decode to under this
+    /// plan, by role — the lazy loader cross-checks decoded geometry.
+    pub fn section_geometry(&self, role: SectionRole) -> (u8, usize, usize) {
+        let (l, bits) = match role {
+            SectionRole::Base { tensor } => match self.assignments[tensor].arm {
+                Arm::Rtvq { base_bits, .. } => (tensor, base_bits),
+                Arm::Tvq { .. } => unreachable!("base role on a TVQ arm"),
+            },
+            SectionRole::Task { tensor, .. } => match self.assignments[tensor].arm {
+                Arm::Tvq { bits } => (tensor, bits),
+                Arm::Rtvq { offset_bits, .. } => (tensor, offset_bits),
+            },
+        };
+        let t = &self.tensors[l];
+        (bits, t.group, t.padded())
+    }
+
+    /// Structural validation: counts, name rules, arm ranges, and stored
+    /// per-arm costs matching the byte arithmetic exactly.
+    pub fn validate(&self) -> Result<()> {
+        if self.task_names.is_empty() {
+            bail!("pack plan covers zero tasks");
+        }
+        if self.tensors.is_empty() {
+            bail!("pack plan covers zero tensors");
+        }
+        if self.assignments.len() != self.tensors.len() {
+            bail!(
+                "pack plan has {} assignments for {} tensors",
+                self.assignments.len(),
+                self.tensors.len()
+            );
+        }
+        let mut seen = HashSet::new();
+        for t in &self.task_names {
+            if t.is_empty() || t.contains('/') || t.starts_with("__") {
+                bail!("pack plan task name {t:?} (must be non-empty, no '/', no '__' prefix)");
+            }
+            if !seen.insert(t.as_str()) {
+                bail!("pack plan has duplicate task name {t:?}");
+            }
+        }
+        let mut seen = HashSet::new();
+        for (tensor, a) in self.tensors.iter().zip(&self.assignments) {
+            if tensor.name.is_empty() {
+                bail!("pack plan tensor name must be non-empty");
+            }
+            if !seen.insert(tensor.name.as_str()) {
+                bail!("pack plan has duplicate tensor name {:?}", tensor.name);
+            }
+            let numel = tensor.numel();
+            if numel == 0 {
+                bail!("pack plan tensor {:?} has zero elements", tensor.name);
+            }
+            if tensor.group == 0 || tensor.group > numel {
+                bail!(
+                    "pack plan tensor {:?}: group {} outside 1..={numel}",
+                    tensor.name,
+                    tensor.group
+                );
+            }
+            a.arm.check()?;
+            if !a.error.is_finite() || a.error < 0.0 {
+                bail!("pack plan tensor {:?}: non-finite error {}", tensor.name, a.error);
+            }
+            let want = arm_cost_bytes(&self.task_names, tensor, a.arm);
+            if a.cost_bytes != want {
+                bail!(
+                    "pack plan tensor {:?}: stored cost {} != computed {want}",
+                    tensor.name,
+                    a.cost_bytes
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the kind-3 section body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.push(PLAN_WIRE_VERSION);
+        buf.extend_from_slice(&self.budget_bytes.to_le_bytes());
+        buf.extend_from_slice(&(self.task_names.len() as u32).to_le_bytes());
+        for t in &self.task_names {
+            buf.extend_from_slice(&(t.len() as u32).to_le_bytes());
+            buf.extend_from_slice(t.as_bytes());
+        }
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (tensor, a) in self.tensors.iter().zip(&self.assignments) {
+            buf.extend_from_slice(&(tensor.name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(tensor.name.as_bytes());
+            buf.extend_from_slice(&(tensor.shape.len() as u32).to_le_bytes());
+            for &d in &tensor.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            buf.extend_from_slice(&(tensor.group as u64).to_le_bytes());
+            let (kind, b1, b2) = match a.arm {
+                Arm::Tvq { bits } => (0u8, bits, 0u8),
+                Arm::Rtvq { base_bits, offset_bits } => (1u8, base_bits, offset_bits),
+            };
+            buf.push(kind);
+            buf.push(b1);
+            buf.push(b2);
+            buf.extend_from_slice(&a.cost_bytes.to_le_bytes());
+            buf.extend_from_slice(&a.error.to_le_bytes());
+        }
+        debug_assert_eq!(
+            buf.len() as u64,
+            plan_meta_bytes(&self.task_names, &self.tensors)
+        );
+        buf
+    }
+
+    /// Decode and fully validate a kind-3 section body.
+    pub fn decode(buf: &[u8]) -> Result<PackPlan> {
+        let mut c = Cursor::new(buf);
+        let ver = c.u8()?;
+        if ver != PLAN_WIRE_VERSION {
+            bail!("pack plan wire version {ver} (this build reads v{PLAN_WIRE_VERSION})");
+        }
+        let budget_bytes = c.u64()?;
+        let task_cnt = c.u32()? as usize;
+        // Untrusted counts: every name costs >= 4 bytes on the wire.
+        if task_cnt > c.remaining() / 4 {
+            bail!("pack plan claims {task_cnt} tasks in a {}-byte body", buf.len());
+        }
+        let mut task_names = Vec::with_capacity(task_cnt);
+        for _ in 0..task_cnt {
+            task_names.push(c.str()?);
+        }
+        let tensor_cnt = c.u32()? as usize;
+        if tensor_cnt > c.remaining() / 4 {
+            bail!("pack plan claims {tensor_cnt} tensors in a {}-byte body", buf.len());
+        }
+        let mut tensors = Vec::with_capacity(tensor_cnt);
+        let mut assignments = Vec::with_capacity(tensor_cnt);
+        for _ in 0..tensor_cnt {
+            let name = c.str()?;
+            let ndim = c.u32()? as usize;
+            if ndim > MAX_NDIM {
+                bail!("pack plan tensor {name:?}: implausible ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u64()? as usize);
+            }
+            shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow::anyhow!("pack plan tensor {name:?}: shape overflow"))?;
+            let group = c.u64()? as usize;
+            let kind = c.u8()?;
+            let b1 = c.u8()?;
+            let b2 = c.u8()?;
+            let arm = match kind {
+                0 => {
+                    if b2 != 0 {
+                        bail!("pack plan tensor {name:?}: TVQ arm with offset bits {b2}");
+                    }
+                    Arm::Tvq { bits: b1 }
+                }
+                1 => Arm::Rtvq { base_bits: b1, offset_bits: b2 },
+                other => bail!("pack plan tensor {name:?}: unknown arm kind {other}"),
+            };
+            let cost_bytes = c.u64()?;
+            let error = c.f64()?;
+            tensors.push(PlanTensor { name, shape, group });
+            assignments.push(Assignment { arm, cost_bytes, error });
+        }
+        if !c.done() {
+            bail!("pack plan body has trailing bytes");
+        }
+        let plan = PackPlan { budget_bytes, task_names, tensors, assignments };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::GroupQuantized;
+    use crate::registry::container::encode_group_payload;
+    use crate::util::rng::Rng;
+
+    fn sample_plan() -> PackPlan {
+        let task_names = vec!["task00".to_string(), "task01".to_string()];
+        let tensors = vec![
+            PlanTensor { name: "blk00/w".into(), shape: vec![32, 16], group: 128 },
+            PlanTensor { name: "head/b".into(), shape: vec![33], group: 33 },
+        ];
+        let arms = [Arm::Tvq { bits: 4 }, Arm::Rtvq { base_bits: 3, offset_bits: 2 }];
+        let assignments = tensors
+            .iter()
+            .zip(arms)
+            .map(|(t, arm)| Assignment {
+                arm,
+                cost_bytes: arm_cost_bytes(&task_names, t, arm),
+                error: 0.25,
+            })
+            .collect();
+        PackPlan { budget_bytes: 1 << 20, task_names, tensors, assignments }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let plan = sample_plan();
+        plan.validate().unwrap();
+        let wire = plan.encode();
+        assert_eq!(
+            wire.len() as u64,
+            plan_meta_bytes(&plan.task_names, &plan.tensors),
+            "plan body size must be computable without encoding"
+        );
+        let back = PackPlan::decode(&wire).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn group_payload_bytes_matches_real_encoding() {
+        let mut rng = Rng::new(41);
+        for (len, bits, group) in [(512usize, 3u8, 128usize), (1024, 2, 256), (96, 7, 32)] {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 0.05);
+            let g = GroupQuantized::quantize(&v, bits, group).unwrap();
+            assert_eq!(
+                encode_group_payload(&g).len() as u64,
+                group_payload_bytes(len, bits, group),
+                "len={len} bits={bits} group={group}"
+            );
+        }
+    }
+
+    #[test]
+    fn padded_and_groups() {
+        let t = PlanTensor { name: "x".into(), shape: vec![100], group: 64 };
+        assert_eq!(t.numel(), 100);
+        assert_eq!(t.padded(), 128);
+        assert_eq!(t.n_groups(), 2);
+        let exact = PlanTensor { name: "y".into(), shape: vec![64, 2], group: 64 };
+        assert_eq!(exact.padded(), 128);
+    }
+
+    #[test]
+    fn expected_sections_cover_every_slot() {
+        let plan = sample_plan();
+        let sections = plan.expected_sections();
+        // One base (the rtvq-arm tensor) + 2 tasks x 2 tensors.
+        assert_eq!(sections.len(), 1 + 4);
+        assert!(sections
+            .iter()
+            .any(|(n, r)| n == "__base__/head/b" && *r == SectionRole::Base { tensor: 1 }));
+        assert!(sections
+            .iter()
+            .any(|(n, r)| n == "task01/blk00/w"
+                && *r == SectionRole::Task { task: 1, tensor: 0 }));
+        // Geometry lookups agree with the arms.
+        assert_eq!(plan.section_geometry(SectionRole::Base { tensor: 1 }), (3, 33, 33));
+        assert_eq!(
+            plan.section_geometry(SectionRole::Task { task: 0, tensor: 0 }),
+            (4, 128, 512)
+        );
+        assert_eq!(
+            plan.section_geometry(SectionRole::Task { task: 0, tensor: 1 }),
+            (2, 33, 33)
+        );
+    }
+
+    #[test]
+    fn planned_file_bytes_is_fixed_plus_arms() {
+        let plan = sample_plan();
+        let arms: u64 = plan.assignments.iter().map(|a| a.cost_bytes).sum();
+        assert_eq!(
+            plan.planned_file_bytes(),
+            fixed_file_bytes(&plan.task_names, &plan.tensors) + arms
+        );
+        assert!(plan.ideal_code_bytes() < plan.planned_file_bytes());
+        assert_eq!(plan.params_per_task(), 32 * 16 + 33);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_plans() {
+        let good = sample_plan();
+
+        let mut bad = good.clone();
+        bad.task_names[1] = "task00".into();
+        assert!(bad.validate().is_err(), "duplicate task name");
+
+        let mut bad = good.clone();
+        bad.task_names[0] = "a/b".into();
+        assert!(bad.validate().is_err(), "slash in task name");
+
+        let mut bad = good.clone();
+        bad.assignments[0].cost_bytes += 1;
+        assert!(bad.validate().is_err(), "cost mismatch");
+
+        let mut bad = good.clone();
+        bad.tensors[0].group = 0;
+        assert!(bad.validate().is_err(), "zero group");
+
+        let mut bad = good.clone();
+        bad.assignments[0].error = f64::NAN;
+        assert!(bad.validate().is_err(), "NaN error");
+
+        let mut bad = good.clone();
+        bad.assignments.pop();
+        assert!(bad.validate().is_err(), "assignment count");
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let wire = sample_plan().encode();
+        // Truncation at every prefix must fail cleanly, never panic.
+        for cut in [0usize, 1, 8, 12, 20, wire.len() - 1] {
+            assert!(PackPlan::decode(&wire[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(PackPlan::decode(&padded).is_err());
+        // Wrong wire version.
+        let mut bad = wire.clone();
+        bad[0] = 9;
+        assert!(PackPlan::decode(&bad).is_err());
+        // Absurd task count must bail before allocating.
+        let mut bad = wire;
+        bad[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = PackPlan::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("claims"), "got: {err}");
+    }
+}

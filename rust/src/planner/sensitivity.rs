@@ -1,0 +1,254 @@
+//! Quantization-sensitivity probing: measure, for every tensor (layer)
+//! of the task suite and every candidate [`Arm`], the exact byte cost and
+//! the reconstruction error the arm would incur.
+//!
+//! This is the paper's Section 4.4 observation made operational: layers
+//! differ by orders of magnitude in how much error a given bit width
+//! induces (the task-vector range varies per layer), so a fixed byte
+//! budget is better spent unevenly.  The probe quantizes each layer's
+//! flat per-task slices under each candidate arm — per-task group
+//! quantization ([`Arm::Tvq`]) and shared-base/residual splits
+//! ([`Arm::Rtvq`], error-corrected exactly like
+//! [`Rtvq::quantize`](crate::quant::Rtvq::quantize)) — and records the
+//! sum-of-squares reconstruction error next to the arm's exact file-byte
+//! cost from [`arm_cost_bytes`].  The solver ([`super::solve`]) then
+//! trades these off greedily.
+
+use anyhow::{bail, Result};
+
+use std::collections::HashMap;
+
+use super::plan::{arm_cost_bytes, Arm, PlanTensor};
+use super::{mean_flat, padded_flat, quantize_offset, PlannerConfig};
+use crate::checkpoint::Checkpoint;
+use crate::quant::GroupQuantized;
+
+/// One probed candidate for one tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct ArmStat {
+    pub arm: Arm,
+    /// Exact bytes the arm adds to the registry file.
+    pub cost_bytes: u64,
+    /// Sum over tasks of squared L2 reconstruction error.
+    pub error: f64,
+}
+
+/// All probed candidates for one tensor.
+#[derive(Clone, Debug)]
+pub struct TensorProfile {
+    pub tensor: PlanTensor,
+    /// One entry per candidate arm, in probe order.
+    pub arms: Vec<ArmStat>,
+}
+
+/// The full probe result the solver consumes.
+#[derive(Clone, Debug)]
+pub struct SensitivityProfile {
+    pub task_names: Vec<String>,
+    pub profiles: Vec<TensorProfile>,
+}
+
+fn sse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Probe every tensor of the suite under every candidate arm of `cfg`.
+///
+/// `fts` are fine-tuned checkpoints; task vectors tau_t = ft_t - pre are
+/// formed internally.  Task names follow the registry convention
+/// (`task00`, `task01`, ...).
+pub fn probe(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    cfg: &PlannerConfig,
+) -> Result<SensitivityProfile> {
+    if fts.is_empty() {
+        bail!("sensitivity probe needs at least one fine-tuned checkpoint");
+    }
+    cfg.check()?;
+    let task_names: Vec<String> = (0..fts.len()).map(|t| format!("task{t:02}")).collect();
+    let taus: Vec<Checkpoint> = fts.iter().map(|ft| ft.sub(pre)).collect::<Result<_>>()?;
+
+    let mut profiles = Vec::with_capacity(pre.len());
+    for (name, t) in pre.iter() {
+        let numel = t.numel();
+        if numel == 0 {
+            bail!("tensor {name:?} has zero elements; cannot plan it");
+        }
+        let tensor = PlanTensor {
+            name: name.to_string(),
+            shape: t.shape().to_vec(),
+            group: cfg.group.min(numel),
+        };
+        let padded = tensor.padded();
+        let group = tensor.group;
+
+        // Per-task padded flats and their task mean (the shared base the
+        // RTVQ arms decompose against) — via the same helpers the writer
+        // compiles with, so probed errors match packed payloads exactly.
+        let flats: Vec<Vec<f32>> = taus
+            .iter()
+            .map(|tau| padded_flat(tau, name, padded))
+            .collect::<Result<_>>()?;
+        let base = mean_flat(&taus, &tensor)?;
+
+        let mut arms = Vec::new();
+        for &bits in &cfg.tvq_bits {
+            let mut error = 0.0;
+            for flat in &flats {
+                let q = GroupQuantized::quantize(flat, bits, group)?;
+                error += sse(flat, &q.dequantize());
+            }
+            let arm = Arm::Tvq { bits };
+            arms.push(ArmStat {
+                arm,
+                cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
+                error,
+            });
+        }
+        // Dequantized bases are shared across arms with the same
+        // base_bits (the default config repeats each width), so each
+        // distinct width quantizes the base exactly once per tensor.
+        let mut hat_cache: HashMap<u8, Vec<f32>> = HashMap::new();
+        for &(base_bits, offset_bits) in &cfg.rtvq_arms {
+            if !hat_cache.contains_key(&base_bits) {
+                let qbase = GroupQuantized::quantize(&base, base_bits, group)?;
+                hat_cache.insert(base_bits, qbase.dequantize());
+            }
+            let base_hat = &hat_cache[&base_bits];
+            let mut error = 0.0;
+            for flat in &flats {
+                let qoff = quantize_offset(flat, base_hat, offset_bits, group)?;
+                let off_hat = qoff.dequantize();
+                let rec: Vec<f32> =
+                    off_hat.iter().zip(base_hat).map(|(&o, &b)| o + b).collect();
+                error += sse(flat, &rec);
+            }
+            let arm = Arm::Rtvq { base_bits, offset_bits };
+            arms.push(ArmStat {
+                arm,
+                cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
+                error,
+            });
+        }
+        // Fail closed on non-finite weights (diverged checkpoints): a
+        // NaN error must become a pointed Err here, not a solver panic.
+        for a in &arms {
+            if !a.error.is_finite() {
+                bail!(
+                    "tensor {name:?}: arm {} probed non-finite error {} \
+                     (non-finite weights in the task suite?)",
+                    a.arm.label(),
+                    a.error
+                );
+            }
+        }
+        profiles.push(TensorProfile { tensor, arms });
+    }
+    Ok(SensitivityProfile { task_names, profiles })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Common-drift suite: the regime where RTVQ arms shine.
+    fn suite(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+        let mut rng = Rng::new(seed);
+        let mut pre = Checkpoint::new();
+        pre.insert("blk00/w", Tensor::randn(&[48, 32], 0.3, &mut rng));
+        pre.insert("head/w", Tensor::randn(&[40, 10], 0.3, &mut rng));
+        let mut drift = Checkpoint::new();
+        for (name, t) in pre.iter() {
+            drift.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
+        }
+        let fts = (0..n_tasks)
+            .map(|_| {
+                let mut off = Checkpoint::new();
+                for (name, t) in pre.iter() {
+                    off.insert(name, Tensor::randn(t.shape(), 0.004, &mut rng));
+                }
+                pre.add(&drift).unwrap().add(&off).unwrap()
+            })
+            .collect();
+        (pre, fts)
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let (pre, fts) = suite(4, 1);
+        let cfg = PlannerConfig {
+            group: 128,
+            tvq_bits: vec![2, 4, 8],
+            rtvq_arms: vec![],
+        };
+        let prof = probe(&pre, &fts, &cfg).unwrap();
+        for p in &prof.profiles {
+            assert!(
+                p.arms[0].error > p.arms[1].error && p.arms[1].error > p.arms[2].error,
+                "{:?}: {:?}",
+                p.tensor.name,
+                p.arms.iter().map(|a| a.error).collect::<Vec<_>>()
+            );
+            assert!(
+                p.arms[0].cost_bytes < p.arms[1].cost_bytes
+                    && p.arms[1].cost_bytes < p.arms[2].cost_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn rtvq_arm_beats_matching_tvq_under_common_drift() {
+        // With a strong shared drift, a B3O2 arm should beat plain 2-bit
+        // TVQ on error while costing barely more (the base amortizes).
+        let (pre, fts) = suite(8, 2);
+        let cfg = PlannerConfig {
+            group: 128,
+            tvq_bits: vec![2],
+            rtvq_arms: vec![(3, 2)],
+        };
+        let prof = probe(&pre, &fts, &cfg).unwrap();
+        for p in &prof.profiles {
+            let tvq2 = &p.arms[0];
+            let rtvq = &p.arms[1];
+            assert!(
+                rtvq.error < tvq2.error,
+                "{}: rtvq {} vs tvq2 {}",
+                p.tensor.name,
+                rtvq.error,
+                tvq2.error
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_tensor_group_clamps_to_numel() {
+        let mut rng = Rng::new(3);
+        let mut pre = Checkpoint::new();
+        pre.insert("b", Tensor::randn(&[7], 0.1, &mut rng));
+        let mut ft = pre.clone();
+        for (_, t) in ft.iter_mut() {
+            for v in t.data_mut() {
+                *v += 0.01;
+            }
+        }
+        let cfg = PlannerConfig::default();
+        let prof = probe(&pre, &[ft], &cfg).unwrap();
+        assert_eq!(prof.profiles[0].tensor.group, 7);
+        assert_eq!(prof.profiles[0].tensor.padded(), 7);
+    }
+
+    #[test]
+    fn empty_suite_rejected() {
+        let (pre, _) = suite(1, 4);
+        assert!(probe(&pre, &[], &PlannerConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! The bit-allocation solver: greedy marginal-error-per-byte under an
+//! exact byte budget.
+//!
+//! Each tensor's probed arms ([`SensitivityProfile`]) are first reduced
+//! to their Pareto frontier (strictly less error for strictly more
+//! bytes), then to the frontier's lower convex hull so that successive
+//! upgrades have strictly decreasing error-reduction-per-byte.  The
+//! solver starts every tensor at its cheapest arm and walks a single
+//! globally-sorted sequence of upgrade moves (best gain first), stopping
+//! at the first move the budget cannot absorb.
+//!
+//! Because the move sequence is computed from the profile alone — the
+//! budget only decides how long a *prefix* of it is applied — the solver
+//! degrades **monotonically by construction**: for budgets `B1 >= B2`,
+//! `solve(B1)` applies a superset of `solve(B2)`'s moves, so its total
+//! error is never larger.  The planner's property tests pin exactly this.
+
+use anyhow::{bail, Result};
+
+use super::plan::{fixed_file_bytes, Assignment, PackPlan};
+use super::sensitivity::{ArmStat, SensitivityProfile};
+
+/// One upgrade step on a tensor's convex frontier.
+struct Move {
+    tensor: usize,
+    /// Index into the tensor's hull this move upgrades *to*.
+    step: usize,
+    dcost: u64,
+    derr: f64,
+    /// Error reduction per byte — the greedy key.
+    gain: f64,
+}
+
+/// Pareto frontier: sort by cost, keep arms that strictly improve error.
+fn pareto(arms: &[ArmStat]) -> Vec<ArmStat> {
+    let mut sorted: Vec<ArmStat> = arms.to_vec();
+    // total_cmp keeps the comparator total even on hand-built profiles
+    // with non-finite errors (probe() rejects those at the source).
+    sorted.sort_by(|a, b| {
+        a.cost_bytes.cmp(&b.cost_bytes).then(a.error.total_cmp(&b.error))
+    });
+    let mut front: Vec<ArmStat> = Vec::new();
+    for arm in sorted {
+        match front.last() {
+            Some(last) if arm.error >= last.error => {} // dominated
+            _ => front.push(arm),
+        }
+    }
+    front
+}
+
+/// Lower convex hull of a Pareto frontier (cost ascending, error strictly
+/// descending): drop points whose step gain is not strictly below the
+/// previous step's, so the greedy merge of per-tensor steps is globally
+/// optimal for the fractional relaxation.
+fn convex_hull(front: Vec<ArmStat>) -> Vec<ArmStat> {
+    let mut hull: Vec<ArmStat> = Vec::new();
+    for arm in front {
+        while hull.len() >= 2 {
+            let a = &hull[hull.len() - 2];
+            let b = &hull[hull.len() - 1];
+            let gain_ab = (a.error - b.error) / (b.cost_bytes - a.cost_bytes) as f64;
+            let gain_bc = (b.error - arm.error) / (arm.cost_bytes - b.cost_bytes) as f64;
+            if gain_bc >= gain_ab {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(arm);
+    }
+    hull
+}
+
+/// Solve the allocation for `budget_bytes` (total registry **file**
+/// bytes, index included).  Errors if even the cheapest feasible plan
+/// exceeds the budget, naming the minimum.
+pub fn solve(profile: &SensitivityProfile, budget_bytes: u64) -> Result<PackPlan> {
+    if profile.profiles.is_empty() {
+        bail!("cannot solve an empty sensitivity profile");
+    }
+    let hulls: Vec<Vec<ArmStat>> = profile
+        .profiles
+        .iter()
+        .map(|p| {
+            let hull = convex_hull(pareto(&p.arms));
+            if hull.is_empty() {
+                bail!("tensor {:?} probed zero candidate arms", p.tensor.name);
+            }
+            Ok(hull)
+        })
+        .collect::<Result<_>>()?;
+
+    let tensors: Vec<_> = profile.profiles.iter().map(|p| p.tensor.clone()).collect();
+    let fixed = fixed_file_bytes(&profile.task_names, &tensors);
+    let mut chosen: Vec<usize> = vec![0; hulls.len()];
+    let mut total: u64 = fixed + hulls.iter().map(|h| h[0].cost_bytes).sum::<u64>();
+    if total > budget_bytes {
+        bail!(
+            "budget {budget_bytes} B is below the minimum feasible plan \
+             ({total} B at the cheapest arms)"
+        );
+    }
+
+    // The budget-independent move sequence: every hull step of every
+    // tensor, best gain first.  Per-tensor hull gains strictly decrease,
+    // so the global sort preserves per-tensor step order; ties break
+    // deterministically by (tensor, step).
+    let mut moves: Vec<Move> = Vec::new();
+    for (l, hull) in hulls.iter().enumerate() {
+        for step in 1..hull.len() {
+            let dcost = hull[step].cost_bytes - hull[step - 1].cost_bytes;
+            let derr = hull[step - 1].error - hull[step].error;
+            moves.push(Move { tensor: l, step, dcost, derr, gain: derr / dcost as f64 });
+        }
+    }
+    moves.sort_by(|a, b| {
+        b.gain
+            .total_cmp(&a.gain)
+            .then(a.tensor.cmp(&b.tensor))
+            .then(a.step.cmp(&b.step))
+    });
+
+    for m in &moves {
+        if total + m.dcost > budget_bytes {
+            // Stop, don't skip: acceptance must depend only on the
+            // sequence prefix for the monotone-degradation guarantee.
+            break;
+        }
+        debug_assert_eq!(chosen[m.tensor], m.step - 1, "hull steps apply in order");
+        debug_assert!(m.derr >= 0.0);
+        chosen[m.tensor] = m.step;
+        total += m.dcost;
+    }
+
+    let assignments: Vec<Assignment> = hulls
+        .iter()
+        .zip(&chosen)
+        .map(|(hull, &i)| Assignment {
+            arm: hull[i].arm,
+            cost_bytes: hull[i].cost_bytes,
+            error: hull[i].error,
+        })
+        .collect();
+    let plan = PackPlan {
+        budget_bytes,
+        task_names: profile.task_names.clone(),
+        tensors,
+        assignments,
+    };
+    plan.validate()?;
+    debug_assert_eq!(plan.planned_file_bytes(), total);
+    if plan.planned_file_bytes() > budget_bytes {
+        bail!(
+            "solver bug: planned {} B exceeds budget {budget_bytes} B",
+            plan.planned_file_bytes()
+        );
+    }
+    Ok(plan)
+}
+
+/// The minimum budget any plan for `profile` can satisfy (cheapest arm
+/// everywhere) — useful for sizing sweeps and error messages.
+pub fn min_feasible_bytes(profile: &SensitivityProfile) -> u64 {
+    let tensors: Vec<_> = profile.profiles.iter().map(|p| p.tensor.clone()).collect();
+    fixed_file_bytes(&profile.task_names, &tensors)
+        + profile
+            .profiles
+            .iter()
+            .map(|p| p.arms.iter().map(|a| a.cost_bytes).min().unwrap_or(0))
+            .sum::<u64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::plan::{arm_cost_bytes, Arm, PlanTensor};
+    use crate::planner::sensitivity::TensorProfile;
+
+    /// Hand-built profile: two tensors with different sensitivity so the
+    /// solver must allocate unevenly.
+    fn profile() -> SensitivityProfile {
+        let task_names = vec!["task00".to_string(), "task01".to_string()];
+        let mk = |name: &str, numel: usize, errs: &[(u8, f64)]| {
+            let tensor =
+                PlanTensor { name: name.into(), shape: vec![numel], group: numel.min(64) };
+            let arms = errs
+                .iter()
+                .map(|&(bits, error)| {
+                    let arm = Arm::Tvq { bits };
+                    ArmStat {
+                        arm,
+                        cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
+                        error,
+                    }
+                })
+                .collect();
+            TensorProfile { tensor, arms }
+        };
+        SensitivityProfile {
+            task_names: task_names.clone(),
+            profiles: vec![
+                // "loud" tensor: error falls steeply with bits.
+                mk("loud", 1024, &[(1, 400.0), (2, 100.0), (4, 6.0), (8, 0.1)]),
+                // "quiet" tensor: nearly flat — extra bits are wasted.
+                mk("quiet", 1024, &[(1, 2.0), (2, 1.5), (4, 1.2), (8, 1.1)]),
+            ],
+        }
+    }
+
+    #[test]
+    fn pareto_drops_dominated_arms() {
+        let t = PlanTensor { name: "x".into(), shape: vec![64], group: 64 };
+        let names = vec!["task00".to_string()];
+        let mk = |bits: u8, error: f64| {
+            let arm = Arm::Tvq { bits };
+            ArmStat { arm, cost_bytes: arm_cost_bytes(&names, &t, arm), error }
+        };
+        // 3-bit with *worse* error than 2-bit is dominated.
+        let front = pareto(&[mk(2, 1.0), mk(3, 1.5), mk(4, 0.5)]);
+        assert_eq!(front.len(), 2);
+        assert_eq!(front[0].arm, Arm::Tvq { bits: 2 });
+        assert_eq!(front[1].arm, Arm::Tvq { bits: 4 });
+    }
+
+    #[test]
+    fn budget_is_respected_and_spent_on_the_loud_tensor() {
+        let prof = profile();
+        let min = min_feasible_bytes(&prof);
+        // Enough budget for one tensor to go high-bit, not both.
+        let extra = {
+            let t = &prof.profiles[0].tensor;
+            arm_cost_bytes(&prof.task_names, t, Arm::Tvq { bits: 8 })
+                - arm_cost_bytes(&prof.task_names, t, Arm::Tvq { bits: 1 })
+        };
+        let plan = solve(&prof, min + extra).unwrap();
+        assert!(plan.planned_file_bytes() <= min + extra);
+        // The loud tensor gets the bits; the quiet one stays cheap.
+        let loud_bits = match plan.assignments[0].arm {
+            Arm::Tvq { bits } => bits,
+            _ => unreachable!(),
+        };
+        let quiet_bits = match plan.assignments[1].arm {
+            Arm::Tvq { bits } => bits,
+            _ => unreachable!(),
+        };
+        assert!(
+            loud_bits > quiet_bits,
+            "loud={loud_bits} quiet={quiet_bits} (allocation must be uneven)"
+        );
+    }
+
+    #[test]
+    fn infeasible_budget_errors_with_minimum() {
+        let prof = profile();
+        let min = min_feasible_bytes(&prof);
+        let err = solve(&prof, min - 1).unwrap_err().to_string();
+        assert!(err.contains("minimum feasible"), "got: {err}");
+        assert!(solve(&prof, min).is_ok(), "exactly the minimum must be feasible");
+    }
+
+    #[test]
+    fn error_degrades_monotonically_as_budget_shrinks() {
+        let prof = profile();
+        let min = min_feasible_bytes(&prof);
+        let max = {
+            let worst: u64 = prof
+                .profiles
+                .iter()
+                .map(|p| p.arms.iter().map(|a| a.cost_bytes).max().unwrap())
+                .sum();
+            min + worst
+        };
+        let mut last_err = f64::INFINITY;
+        let mut last_bytes = 0u64;
+        let steps = 12u64;
+        for i in 0..=steps {
+            let budget = min + (max - min) * i / steps;
+            let plan = solve(&prof, budget).unwrap();
+            assert!(plan.planned_file_bytes() <= budget, "budget {budget} violated");
+            assert!(
+                plan.total_error() <= last_err,
+                "budget {budget}: error {} regressed above {last_err}",
+                plan.total_error()
+            );
+            assert!(plan.planned_file_bytes() >= last_bytes);
+            last_err = plan.total_error();
+            last_bytes = plan.planned_file_bytes();
+        }
+    }
+}

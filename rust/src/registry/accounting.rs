@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use super::container::RegistryScheme;
 use super::index::Registry;
 use crate::checkpoint::CheckpointStore;
 use crate::quant::{QuantScheme, StorageReport};
@@ -17,9 +18,10 @@ use crate::quant::{QuantScheme, StorageReport};
 /// Measured vs ideal storage for one registry file.
 #[derive(Clone, Copy, Debug)]
 pub struct DiskAccounting {
-    pub scheme: QuantScheme,
+    pub scheme: RegistryScheme,
     pub n_tasks: usize,
-    /// Parameters per task payload (decoded from the first section).
+    /// Parameters per task payload (decoded from the first section, or
+    /// summed from the plan for planned registries).
     pub params: usize,
     /// Total registry file size on disk.
     pub file_bytes: u64,
@@ -27,19 +29,33 @@ pub struct DiskAccounting {
     pub index_bytes: u64,
     /// Payload-section share of `file_bytes`.
     pub payload_bytes: u64,
-    /// Metadata-free ideal per [`StorageReport::ideal`] (what Table 5 reports).
+    /// Metadata-free ideal: [`StorageReport::ideal`] for uniform schemes
+    /// (what Table 5 reports), or the plan's code-only bytes
+    /// ([`PackPlan::ideal_code_bytes`](crate::planner::PackPlan::ideal_code_bytes))
+    /// for planned registries.
     pub ideal_bytes: u64,
 }
 
 impl DiskAccounting {
     /// Measure a registry: decodes exactly one task section to learn the
-    /// parameter count, everything else comes from the resident index.
+    /// parameter count (uniform) or reads the resident plan (planned);
+    /// everything else comes from the resident index.
     pub fn measure(reg: &Registry) -> Result<Self> {
         if reg.n_tasks() == 0 {
             bail!("cannot account an empty registry");
         }
-        let params = reg.load_task_payload(0)?.numel();
-        let ideal = StorageReport::ideal(reg.scheme(), reg.n_tasks(), params);
+        let (params, ideal_bytes) = match reg.scheme() {
+            RegistryScheme::Uniform(s) => {
+                let params = reg.load_task_payload(0)?.numel();
+                (params, StorageReport::ideal(s, reg.n_tasks(), params).bytes)
+            }
+            RegistryScheme::Planned => {
+                let plan = reg
+                    .plan()
+                    .ok_or_else(|| anyhow::anyhow!("planned registry without a plan"))?;
+                (plan.params_per_task(), plan.ideal_code_bytes())
+            }
+        };
         Ok(Self {
             scheme: reg.scheme(),
             n_tasks: reg.n_tasks(),
@@ -47,7 +63,7 @@ impl DiskAccounting {
             file_bytes: reg.file_bytes(),
             index_bytes: reg.index_bytes(),
             payload_bytes: reg.payload_bytes(),
-            ideal_bytes: ideal.bytes,
+            ideal_bytes,
         })
     }
 
@@ -118,7 +134,7 @@ mod tests {
     #[test]
     fn accounting_arithmetic() {
         let acc = DiskAccounting {
-            scheme: QuantScheme::Tvq(4),
+            scheme: RegistryScheme::Uniform(QuantScheme::Tvq(4)),
             n_tasks: 8,
             params: 1000,
             file_bytes: 4200,

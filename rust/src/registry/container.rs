@@ -25,9 +25,57 @@ use crate::quant::tvq::QuantizedTensor;
 
 /// Registry file magic: the bytes `"QTVC"` read as a little-endian u32.
 pub const MAGIC: u32 = 0x4356_5451;
-/// Registry format version.  v1 was the raw-f32 `TVQC` checkpoint
-/// container; packed registries start at v2.
+/// Registry format version for uniform-scheme registries.  v1 was the
+/// raw-f32 `TVQC` checkpoint container; packed registries start at v2.
 pub const VERSION: u32 = 2;
+/// Registry format version for plan-packed mixed-precision registries:
+/// v3 adds the kind-3 plan-metadata section and real kind-2 group
+/// payloads (see [`crate::planner`] for the plan wire format).
+pub const VERSION_PLANNED: u32 = 3;
+
+/// Header scheme label used by plan-packed mixed-precision registries
+/// (uniform registries store a [`QuantScheme`] label instead).
+pub const PLANNED_LABEL: &str = "PLAN-MIXED";
+
+/// What the registry as a whole stores: one uniform quantization scheme
+/// applied to every task, or a mixed-precision layout compiled from a
+/// [`PackPlan`](crate::planner::PackPlan).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegistryScheme {
+    /// Every payload quantized under one [`QuantScheme`] (QTVC v2).
+    Uniform(crate::quant::QuantScheme),
+    /// Budget-planned mixed precision: per-tensor group payloads whose
+    /// bit widths come from the embedded pack plan (QTVC v3).
+    Planned,
+}
+
+impl RegistryScheme {
+    /// Header label; `parse(label())` round-trips.
+    pub fn label(&self) -> String {
+        match self {
+            RegistryScheme::Uniform(s) => s.label(),
+            RegistryScheme::Planned => PLANNED_LABEL.to_string(),
+        }
+    }
+
+    /// Parse a registry header label: [`PLANNED_LABEL`] or any
+    /// [`QuantScheme`] spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == PLANNED_LABEL {
+            Ok(RegistryScheme::Planned)
+        } else {
+            Ok(RegistryScheme::Uniform(crate::quant::QuantScheme::parse(s)?))
+        }
+    }
+
+    /// The uniform scheme, if this is not a planned registry.
+    pub fn uniform(&self) -> Option<crate::quant::QuantScheme> {
+        match self {
+            RegistryScheme::Uniform(s) => Some(*s),
+            RegistryScheme::Planned => None,
+        }
+    }
+}
 
 /// What a section body contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +87,10 @@ pub enum PayloadKind {
     RtvqBase,
     /// A flat group-quantized vector (Pallas kernel layout).
     Group,
+    /// Pack-plan metadata (v3): the serialized
+    /// [`PackPlan`](crate::planner::PackPlan) that maps kind-2 sections
+    /// back to (task, tensor) slots and records the bit allocation.
+    Plan,
 }
 
 impl PayloadKind {
@@ -47,6 +99,7 @@ impl PayloadKind {
             PayloadKind::TaskCheckpoint => 0,
             PayloadKind::RtvqBase => 1,
             PayloadKind::Group => 2,
+            PayloadKind::Plan => 3,
         }
     }
 
@@ -55,6 +108,7 @@ impl PayloadKind {
             0 => PayloadKind::TaskCheckpoint,
             1 => PayloadKind::RtvqBase,
             2 => PayloadKind::Group,
+            3 => PayloadKind::Plan,
             other => bail!("unknown QTVC payload kind {other}"),
         })
     }
@@ -91,6 +145,10 @@ impl Payload {
                 Payload::Checkpoint(decode_checkpoint_payload(buf)?)
             }
             PayloadKind::Group => Payload::Group(decode_group_payload(buf)?),
+            PayloadKind::Plan => bail!(
+                "plan sections decode via PackPlan::decode (Registry::plan), \
+                 not Payload::decode"
+            ),
         })
     }
 }
@@ -133,6 +191,10 @@ impl<'a> Cursor<'a> {
 
     pub fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     pub fn str(&mut self) -> Result<String> {
@@ -393,9 +455,59 @@ mod tests {
         let back = Payload::decode(PayloadKind::TaskCheckpoint, &wire).unwrap();
         assert_eq!(back, p);
         assert_eq!(p.numel(), q.numel());
-        for kind in [PayloadKind::TaskCheckpoint, PayloadKind::RtvqBase, PayloadKind::Group] {
+        for kind in [
+            PayloadKind::TaskCheckpoint,
+            PayloadKind::RtvqBase,
+            PayloadKind::Group,
+            PayloadKind::Plan,
+        ] {
             assert_eq!(PayloadKind::from_u8(kind.to_u8()).unwrap(), kind);
         }
         assert!(PayloadKind::from_u8(9).is_err());
+        // Plan sections have no Payload decode — they carry a PackPlan.
+        assert!(Payload::decode(PayloadKind::Plan, &[]).is_err());
+    }
+
+    #[test]
+    fn registry_scheme_label_roundtrip() {
+        use crate::quant::QuantScheme;
+        for scheme in [
+            RegistryScheme::Uniform(QuantScheme::Tvq(4)),
+            RegistryScheme::Uniform(QuantScheme::Rtvq(3, 2)),
+            RegistryScheme::Planned,
+        ] {
+            assert_eq!(RegistryScheme::parse(&scheme.label()).unwrap(), scheme);
+        }
+        assert_eq!(RegistryScheme::Planned.uniform(), None);
+        assert_eq!(
+            RegistryScheme::Uniform(QuantScheme::Tvq(3)).uniform(),
+            Some(QuantScheme::Tvq(3))
+        );
+        assert!(RegistryScheme::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn group_payload_truncated_params_rejected() {
+        let mut rng = Rng::new(11);
+        let mut v = vec![0.0f32; 1024];
+        rng.fill_normal(&mut v, 0.05);
+        let g = GroupQuantized::quantize(&v, 3, 256).unwrap();
+        let wire = encode_group_payload(&g);
+        // Cut inside the scales/zps region: must fail cleanly.
+        assert!(decode_group_payload(&wire[..20]).is_err());
+        // Cut inside the packed codes: truncation error, no panic.
+        assert!(decode_group_payload(&wire[..wire.len() - 2]).is_err());
+        // Trailing garbage rejected.
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(decode_group_payload(&padded).is_err());
+        // Zero group size rejected before any division.
+        let mut zero = wire.clone();
+        zero[1..9].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode_group_payload(&zero).is_err());
+        // Invalid bit width.
+        let mut bad = wire;
+        bad[0] = 0;
+        assert!(decode_group_payload(&bad).is_err());
     }
 }

@@ -2,11 +2,21 @@
 //! section reads.
 //!
 //! [`Registry::open`] reads and CRC-verifies **only** the header and
-//! offset table; payload sections are read on demand by absolute offset,
-//! so a merge request touching 3 of 20 tasks performs 3 section reads —
-//! the full zoo is never materialized.  See [`super`] (module docs) for
-//! the byte-level wire format.
+//! offset table (plus, for plan-packed registries, the small kind-3 plan
+//! section that maps group sections back to `(task, tensor)` slots);
+//! payload sections are read on demand by absolute offset, so a merge
+//! request touching 3 of 20 tasks performs 3 section reads — the full
+//! zoo is never materialized.  See [`super`] (module docs) for the
+//! byte-level wire format and [`crate::planner`] for the plan section.
+//!
+//! Section reads go through one of two [`IoMode`]s: `Pread` keeps a
+//! single file handle open and reads each section with positioned I/O
+//! (`read_exact_at`, no seek, no reopen — the default on unix), while
+//! `Reopen` opens the file per read (the fallback everywhere else, and
+//! the pre-PR-2 behavior kept for comparison; `perf_registry` benches
+//! both).
 
+use std::collections::HashMap;
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
@@ -14,9 +24,13 @@ use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
 
-use super::container::{Payload, PayloadKind, MAGIC, VERSION};
+use super::container::{
+    Payload, PayloadKind, RegistryScheme, MAGIC, VERSION, VERSION_PLANNED,
+};
 use crate::checkpoint::Checkpoint;
-use crate::quant::QuantScheme;
+use crate::planner::{Arm, PackPlan, SectionRole};
+use crate::quant::{GroupQuantized, QuantScheme};
+use crate::tensor::Tensor;
 use crate::util::crc32;
 
 /// Hard caps guarding against nonsense headers (corrupt or adversarial
@@ -35,6 +49,61 @@ pub struct IndexEntry {
     pub length: u64,
     /// CRC-32 of the section body.
     pub crc: u32,
+}
+
+/// How payload sections are read off disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// One persistent handle + positioned reads (`read_exact_at`): no
+    /// seek, no reopen, safe under concurrent readers.  Unix only;
+    /// silently falls back to [`IoMode::Reopen`] elsewhere.
+    Pread,
+    /// Open the file for every section read (the conservative fallback).
+    Reopen,
+}
+
+enum SectionIo {
+    #[cfg(unix)]
+    Pread(fs::File),
+    Reopen,
+}
+
+impl SectionIo {
+    #[cfg_attr(not(unix), allow(unused_variables))]
+    fn new(path: &Path, mode: IoMode) -> Result<Self> {
+        match mode {
+            #[cfg(unix)]
+            IoMode::Pread => Ok(SectionIo::Pread(
+                fs::File::open(path)
+                    .with_context(|| format!("opening registry {}", path.display()))?,
+            )),
+            #[cfg(not(unix))]
+            IoMode::Pread => Ok(SectionIo::Reopen),
+            IoMode::Reopen => Ok(SectionIo::Reopen),
+        }
+    }
+
+    /// Fill `buf` with the section body (resizes to `entry.length`).
+    fn read_into(&self, path: &Path, entry: &IndexEntry, buf: &mut Vec<u8>) -> Result<()> {
+        buf.clear();
+        buf.resize(entry.length as usize, 0);
+        match self {
+            #[cfg(unix)]
+            SectionIo::Pread(f) => {
+                use std::os::unix::fs::FileExt;
+                f.read_exact_at(buf, entry.offset)
+                    .with_context(|| format!("reading section {:?}", entry.name))?;
+            }
+            SectionIo::Reopen => {
+                let mut f = fs::File::open(path)
+                    .with_context(|| format!("reopening registry {}", path.display()))?;
+                f.seek(SeekFrom::Start(entry.offset))?;
+                f.read_exact(buf)
+                    .with_context(|| format!("reading section {:?}", entry.name))?;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Incremental header reader that retains the raw bytes for the index CRC.
@@ -77,22 +146,41 @@ impl<R: Read> HeaderReader<R> {
 /// An opened packed task-vector registry (index resident, payloads lazy).
 pub struct Registry {
     path: PathBuf,
-    scheme: QuantScheme,
+    version: u32,
+    scheme: RegistryScheme,
     entries: Vec<IndexEntry>,
-    /// Indices into `entries` for per-task payloads, in file order.
+    /// Uniform registries: indices into `entries` for per-task payloads,
+    /// in file order.
     tasks: Vec<usize>,
-    /// Index into `entries` for the shared RTVQ base, if present.
+    /// Uniform RTVQ registries: index of the shared base section.
     base: Option<usize>,
     /// Dequantized RTVQ base, decoded at most once and shared by every
     /// subsequent `load_task_vector` call.
     base_cache: OnceLock<Checkpoint>,
+    /// Planned registries: the decoded kind-3 pack plan.
+    plan: Option<PackPlan>,
+    /// Planned registries: `[task][tensor] -> entries` index.
+    planned_tasks: Vec<Vec<usize>>,
+    /// Planned registries: `[tensor] -> entries` index of the shared base
+    /// (RTVQ-arm tensors only).
+    planned_bases: Vec<Option<usize>>,
+    /// Dequantized per-tensor bases, decoded at most once.
+    planned_base_cache: OnceLock<Vec<Option<Vec<f32>>>>,
+    io: SectionIo,
     index_bytes: u64,
     file_bytes: u64,
 }
 
 impl Registry {
-    /// Open a registry: read and verify the header + offset table only.
+    /// Open a registry with the platform-default [`IoMode`] (`Pread` on
+    /// unix, `Reopen` elsewhere).
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Registry> {
+        Self::open_with_io(path, IoMode::Pread)
+    }
+
+    /// Open a registry: read and verify the header + offset table (and,
+    /// for planned registries, the plan section) — payloads stay lazy.
+    pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<Registry> {
         let path = path.as_ref();
         let file = fs::File::open(path)
             .with_context(|| format!("opening registry {}", path.display()))?;
@@ -107,15 +195,25 @@ impl Registry {
             );
         }
         let version = r.u32()?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_PLANNED {
             bail!(
-                "unsupported QTVC version {version} in {} (this build reads v{VERSION})",
+                "unsupported QTVC version {version} in {} \
+                 (this build reads v{VERSION} and v{VERSION_PLANNED})",
                 path.display()
             );
         }
         let label = r.str(64)?;
-        let scheme = QuantScheme::parse(&label)
+        let scheme = RegistryScheme::parse(&label)
             .with_context(|| format!("registry {} carries bad scheme label", path.display()))?;
+        match (version, scheme) {
+            (VERSION, RegistryScheme::Uniform(_)) => {}
+            (VERSION_PLANNED, RegistryScheme::Planned) => {}
+            _ => bail!(
+                "registry {} pairs version {version} with scheme {label:?} \
+                 (uniform registries are v{VERSION}, planned are v{VERSION_PLANNED})",
+                path.display()
+            ),
+        }
         let count = r.u32()? as usize;
         if count > MAX_ENTRIES {
             bail!("QTVC index claims {count} entries (cap {MAX_ENTRIES}) — corrupt header?");
@@ -124,6 +222,7 @@ impl Registry {
         let mut entries = Vec::with_capacity(count);
         let mut tasks = Vec::new();
         let mut base = None;
+        let mut plan_idx = None;
         for i in 0..count {
             let name = r.str(MAX_NAME_LEN)?;
             let kind = PayloadKind::from_u8(r.u8()?)?;
@@ -136,13 +235,31 @@ impl Registry {
                     "QTVC entry {name:?} spans [{offset}, +{length}) beyond file size {file_bytes}"
                 ),
             }
-            match kind {
-                PayloadKind::RtvqBase => {
+            match (scheme, kind) {
+                (RegistryScheme::Uniform(_), PayloadKind::RtvqBase) => {
                     if base.replace(i).is_some() {
                         bail!("QTVC registry has more than one RTVQ base section");
                     }
                 }
-                PayloadKind::TaskCheckpoint | PayloadKind::Group => tasks.push(i),
+                (RegistryScheme::Uniform(_), PayloadKind::TaskCheckpoint) => tasks.push(i),
+                (RegistryScheme::Uniform(_), PayloadKind::Group | PayloadKind::Plan) => {
+                    bail!(
+                        "uniform registry {} contains a {kind:?} section {name:?} \
+                         (group/plan sections belong to PLAN-MIXED registries)",
+                        path.display()
+                    )
+                }
+                (RegistryScheme::Planned, PayloadKind::Plan) => {
+                    if plan_idx.replace(i).is_some() {
+                        bail!("planned registry has more than one plan section");
+                    }
+                }
+                (RegistryScheme::Planned, PayloadKind::Group) => {}
+                (RegistryScheme::Planned, other) => bail!(
+                    "planned registry {} contains a {other:?} section {name:?} \
+                     (only group + plan sections are valid)",
+                    path.display()
+                ),
             }
             entries.push(IndexEntry { name, kind, offset, length, crc });
         }
@@ -159,17 +276,85 @@ impl Registry {
                 path.display()
             );
         }
-        if matches!(scheme, QuantScheme::Rtvq(..)) && base.is_none() {
+        if matches!(scheme, RegistryScheme::Uniform(QuantScheme::Rtvq(..))) && base.is_none() {
             bail!("RTVQ registry {} is missing its base section", path.display());
         }
 
+        let io = SectionIo::new(path, mode)?;
+
+        // Planned registries: decode the plan now (it is the shape/slot
+        // template everything else needs) and bind every expected
+        // section to its index entry.
+        let (plan, planned_tasks, planned_bases) = match scheme {
+            RegistryScheme::Uniform(_) => (None, Vec::new(), Vec::new()),
+            RegistryScheme::Planned => {
+                let pi = plan_idx.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "planned registry {} is missing its plan section",
+                        path.display()
+                    )
+                })?;
+                let entry = &entries[pi];
+                let mut buf = Vec::new();
+                io.read_into(path, entry, &mut buf)?;
+                if crc32(&buf) != entry.crc {
+                    bail!(
+                        "QTVC plan section CRC mismatch in {} (corrupt registry)",
+                        path.display()
+                    );
+                }
+                let plan = PackPlan::decode(&buf).with_context(|| {
+                    format!("decoding plan section of {}", path.display())
+                })?;
+                let by_name: HashMap<&str, usize> = entries
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| (e.name.as_str(), i))
+                    .collect();
+                if by_name.len() != entries.len() {
+                    bail!("planned registry {} has duplicate section names", path.display());
+                }
+                let expected = plan.expected_sections();
+                if entries.len() != expected.len() + 1 {
+                    bail!(
+                        "planned registry {} has {} sections; the plan expects {} (+1 plan)",
+                        path.display(),
+                        entries.len(),
+                        expected.len()
+                    );
+                }
+                let mut planned_tasks =
+                    vec![vec![usize::MAX; plan.n_tensors()]; plan.n_tasks()];
+                let mut planned_bases = vec![None; plan.n_tensors()];
+                for (name, role) in expected {
+                    let &i = by_name.get(name.as_str()).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "planned registry {} is missing section {name:?}",
+                            path.display()
+                        )
+                    })?;
+                    match role {
+                        SectionRole::Base { tensor } => planned_bases[tensor] = Some(i),
+                        SectionRole::Task { task, tensor } => planned_tasks[task][tensor] = i,
+                    }
+                }
+                (Some(plan), planned_tasks, planned_bases)
+            }
+        };
+
         Ok(Registry {
             path: path.to_path_buf(),
+            version,
             scheme,
             entries,
             tasks,
             base,
             base_cache: OnceLock::new(),
+            plan,
+            planned_tasks,
+            planned_bases,
+            planned_base_cache: OnceLock::new(),
+            io,
             index_bytes: index_end,
             file_bytes,
         })
@@ -179,22 +364,43 @@ impl Registry {
         &self.path
     }
 
-    pub fn scheme(&self) -> QuantScheme {
+    /// Wire version this file was written at (2 uniform, 3 planned).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn scheme(&self) -> RegistryScheme {
         self.scheme
     }
 
-    /// Number of per-task payloads (the RTVQ base is not a task).
+    /// The uniform [`QuantScheme`], if this is not a planned registry.
+    pub fn uniform_scheme(&self) -> Option<QuantScheme> {
+        self.scheme.uniform()
+    }
+
+    /// The embedded pack plan, for planned registries.
+    pub fn plan(&self) -> Option<&PackPlan> {
+        self.plan.as_ref()
+    }
+
+    /// Number of tasks served by this registry.
     pub fn n_tasks(&self) -> usize {
-        self.tasks.len()
+        match &self.plan {
+            Some(p) => p.n_tasks(),
+            None => self.tasks.len(),
+        }
     }
 
     pub fn task_names(&self) -> Vec<&str> {
-        self.tasks.iter().map(|&i| self.entries[i].name.as_str()).collect()
+        match &self.plan {
+            Some(p) => p.task_names.iter().map(|s| s.as_str()).collect(),
+            None => self.tasks.iter().map(|&i| self.entries[i].name.as_str()).collect(),
+        }
     }
 
     /// Position of a task by name, if present.
     pub fn task_index(&self, name: &str) -> Option<usize> {
-        self.tasks.iter().position(|&i| self.entries[i].name == name)
+        self.task_names().iter().position(|&n| n == name)
     }
 
     pub fn has_rtvq_base(&self) -> bool {
@@ -221,26 +427,37 @@ impl Registry {
         self.file_bytes
     }
 
-    /// Read + CRC-verify one section body (one seek, one read).
-    fn read_section(&self, entry: &IndexEntry) -> Result<Vec<u8>> {
-        let mut f = fs::File::open(&self.path)
-            .with_context(|| format!("reopening registry {}", self.path.display()))?;
-        f.seek(SeekFrom::Start(entry.offset))?;
-        let mut buf = vec![0u8; entry.length as usize];
-        f.read_exact(&mut buf)
-            .with_context(|| format!("reading section {:?}", entry.name))?;
-        if crc32(&buf) != entry.crc {
+    /// Read + CRC-verify one section body into a caller buffer (one
+    /// positioned read in `Pread` mode; open + seek + read in `Reopen`).
+    fn read_section_into(&self, entry: &IndexEntry, buf: &mut Vec<u8>) -> Result<()> {
+        self.io.read_into(&self.path, entry, buf)?;
+        if crc32(buf) != entry.crc {
             bail!(
                 "QTVC section {:?} CRC mismatch in {} (corrupt registry)",
                 entry.name,
                 self.path.display()
             );
         }
+        Ok(())
+    }
+
+    /// Read + CRC-verify one section body into a fresh buffer.
+    fn read_section(&self, entry: &IndexEntry) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.read_section_into(entry, &mut buf)?;
         Ok(buf)
     }
 
     /// Lazily load one task's quantized payload (no dequantization).
+    /// Uniform registries only — planned tasks span several per-tensor
+    /// group sections.
     pub fn load_task_payload(&self, t: usize) -> Result<Payload> {
+        if self.plan.is_some() {
+            bail!(
+                "planned registries store per-tensor group sections; use \
+                 load_task_vector or load_planned_task_section"
+            );
+        }
         let &i = self
             .tasks
             .get(t)
@@ -249,7 +466,7 @@ impl Registry {
         Payload::decode(entry.kind, &self.read_section(entry)?)
     }
 
-    /// Lazily load the shared RTVQ base payload.
+    /// Lazily load the shared RTVQ base payload (uniform registries).
     pub fn load_base_payload(&self) -> Result<Payload> {
         let i = self
             .base
@@ -258,7 +475,64 @@ impl Registry {
         Payload::decode(entry.kind, &self.read_section(entry)?)
     }
 
-    /// Dequantized RTVQ base, decoded once and cached.
+    /// Decode one kind-2 section and cross-check its geometry against
+    /// what the plan says must be there.
+    fn load_planned_group(&self, entry_idx: usize, role: SectionRole) -> Result<GroupQuantized> {
+        let plan = self.plan.as_ref().expect("planned accessors gated on plan");
+        let entry = &self.entries[entry_idx];
+        let gq = match Payload::decode(entry.kind, &self.read_section(entry)?)? {
+            Payload::Group(g) => g,
+            other => bail!("section {:?} is not a group payload: {other:?}", entry.name),
+        };
+        let (bits, group, padded) = plan.section_geometry(role);
+        if gq.bits != bits || gq.group != group || gq.len() != padded {
+            bail!(
+                "section {:?} decodes to bits={} group={} len={} but the plan \
+                 requires bits={bits} group={group} len={padded}",
+                entry.name,
+                gq.bits,
+                gq.group,
+                gq.len()
+            );
+        }
+        Ok(gq)
+    }
+
+    /// Planned registries: task `t`'s group section for tensor `l`.
+    pub fn load_planned_task_section(&self, t: usize, l: usize) -> Result<GroupQuantized> {
+        let plan = self
+            .plan
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))?;
+        if t >= plan.n_tasks() {
+            bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
+        }
+        if l >= plan.n_tensors() {
+            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
+        }
+        self.load_planned_group(self.planned_tasks[t][l], SectionRole::Task { task: t, tensor: l })
+    }
+
+    /// Planned registries: the shared base section for tensor `l`
+    /// (RTVQ-arm tensors only).
+    pub fn load_planned_base_section(&self, l: usize) -> Result<GroupQuantized> {
+        let plan = self
+            .plan
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))?;
+        if l >= plan.n_tensors() {
+            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
+        }
+        let i = self.planned_bases[l].ok_or_else(|| {
+            anyhow::anyhow!(
+                "tensor {:?} has a TVQ arm — no shared base section",
+                plan.tensors[l].name
+            )
+        })?;
+        self.load_planned_group(i, SectionRole::Base { tensor: l })
+    }
+
+    /// Dequantized uniform RTVQ base, decoded once and cached.
     fn base_checkpoint(&self) -> Result<&Checkpoint> {
         if let Some(b) = self.base_cache.get() {
             return Ok(b);
@@ -270,9 +544,51 @@ impl Registry {
         Ok(self.base_cache.get_or_init(|| ck))
     }
 
+    /// Dequantized per-tensor planned bases, decoded once and cached.
+    fn planned_base_hats(&self) -> Result<&Vec<Option<Vec<f32>>>> {
+        if let Some(b) = self.planned_base_cache.get() {
+            return Ok(b);
+        }
+        let plan = self.plan.as_ref().expect("planned accessors gated on plan");
+        let mut hats = Vec::with_capacity(plan.n_tensors());
+        for l in 0..plan.n_tensors() {
+            hats.push(match self.planned_bases[l] {
+                Some(_) => Some(self.load_planned_base_section(l)?.dequantize()),
+                None => None,
+            });
+        }
+        Ok(self.planned_base_cache.get_or_init(|| hats))
+    }
+
     /// Reconstruct task `t`'s full-precision task vector from its packed
-    /// payload alone: dq(offset) + dq(base) for RTVQ, dq(codes) for TVQ.
+    /// payload(s) alone: dq(offset) + dq(base) for RTVQ, dq(codes) for
+    /// TVQ, and the per-tensor plan arms for planned registries.
     pub fn load_task_vector(&self, t: usize) -> Result<Checkpoint> {
+        if let Some(plan) = &self.plan {
+            if t >= plan.n_tasks() {
+                bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
+            }
+            let base_hats = self.planned_base_hats()?;
+            let mut out = Checkpoint::new();
+            let mut buf: Vec<f32> = Vec::new();
+            for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
+                let gq = self.load_planned_task_section(t, l)?;
+                buf.clear();
+                buf.resize(gq.len(), 0.0);
+                gq.dequantize_into(&mut buf);
+                if let Arm::Rtvq { .. } = a.arm {
+                    let base = base_hats[l]
+                        .as_ref()
+                        .expect("rtvq-arm tensors always carry a base");
+                    for (d, &b) in buf.iter_mut().zip(base) {
+                        *d += b;
+                    }
+                }
+                buf.truncate(tensor.numel());
+                out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf.clone())?);
+            }
+            return Ok(out);
+        }
         let payload = self.load_task_payload(t)?;
         let q = match payload {
             Payload::Checkpoint(q) => q,
@@ -282,13 +598,18 @@ impl Registry {
             ),
         };
         match self.scheme {
-            QuantScheme::Rtvq(..) => q.dequantize()?.add(self.base_checkpoint()?),
-            QuantScheme::Tvq(_) => q.dequantize(),
-            QuantScheme::Fq(_) => bail!(
+            RegistryScheme::Uniform(QuantScheme::Rtvq(..)) => {
+                q.dequantize()?.add(self.base_checkpoint()?)
+            }
+            RegistryScheme::Uniform(QuantScheme::Tvq(_)) => q.dequantize(),
+            RegistryScheme::Uniform(QuantScheme::Fq(_)) => bail!(
                 "FQ registries store quantized checkpoints, not task vectors; \
                  subtract the pre-trained trunk from load_task_payload's result"
             ),
-            QuantScheme::Fp32 => bail!("fp32 zoos use the TVQC checkpoint store, not QTVC"),
+            RegistryScheme::Uniform(QuantScheme::Fp32) => {
+                bail!("fp32 zoos use the TVQC checkpoint store, not QTVC")
+            }
+            RegistryScheme::Planned => unreachable!("handled above"),
         }
     }
 }

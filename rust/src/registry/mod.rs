@@ -48,6 +48,19 @@
 //! per-tensor metadata — [`DiskAccounting`] measures the gap from real
 //! files.
 //!
+//! # `QTVC` v3: plan-packed mixed precision
+//!
+//! v3 registries carry the `PLAN-MIXED` scheme label and two section
+//! kinds beyond v2: exactly one kind-3 **plan** section (a serialized
+//! [`PackPlan`](crate::planner::PackPlan); wire format documented in
+//! [`crate::planner::plan`]) and kind-2 **group** sections — one
+//! [`GroupQuantized`](crate::quant::GroupQuantized) payload per
+//! `(task, tensor)` slot named `task00/blk00/w`, plus one
+//! `__base__/<tensor>` section per RTVQ-arm tensor.  The plan is decoded
+//! at open (it is the shape/slot template); group payloads stay lazy and
+//! feed the fused dequant-merge path directly
+//! ([`crate::planner::fused_merge`]).
+//!
 //! # Versioning / compatibility policy
 //!
 //! * The magic distinguishes `QTVC` registries from v1 `TVQC`
@@ -55,9 +68,10 @@
 //!   error naming the right API.
 //! * `version` is a hard gate: readers reject any version they were not
 //!   built for (no silent forward parsing).  Additive evolution must bump
-//!   the version; new payload kinds may be added without a bump only if
-//!   old readers can skip them via the offset table (they fail closed on
-//!   unknown `kind` today).
+//!   the version — the kind-2/kind-3 producers did exactly that (v3);
+//!   uniform registries keep writing v2, and the version/scheme pairing
+//!   is itself validated (a v2 file may not contain group or plan
+//!   sections).
 //! * Per-section CRCs allow lazy readers to verify exactly the bytes
 //!   they touch; the index CRC catches truncation at open time.
 //!
@@ -93,10 +107,10 @@ pub mod source;
 pub mod writer;
 
 pub use accounting::{f32_store_bytes, DiskAccounting};
-pub use container::{Payload, PayloadKind};
-pub use index::{IndexEntry, Registry};
+pub use container::{Payload, PayloadKind, RegistryScheme};
+pub use index::{IndexEntry, IoMode, Registry};
 pub use source::{merge_from_source, F32ZooSource, PackedRegistrySource, TaskVectorSource};
-pub use writer::{build_registry, RegistryBuilder, WriteSummary};
+pub use writer::{build_registry, uniform_registry_bytes, RegistryBuilder, WriteSummary};
 
 #[cfg(test)]
 mod tests {
@@ -144,7 +158,10 @@ mod tests {
 
         let reg = Registry::open(&path).unwrap();
         assert_eq!(reg.n_tasks(), 4);
-        assert_eq!(reg.scheme(), QuantScheme::Tvq(4));
+        assert_eq!(reg.scheme(), RegistryScheme::Uniform(QuantScheme::Tvq(4)));
+        assert_eq!(reg.uniform_scheme(), Some(QuantScheme::Tvq(4)));
+        assert_eq!(reg.version(), 2);
+        assert!(reg.plan().is_none());
         assert!(!reg.has_rtvq_base());
         for (t, ft) in fts.iter().enumerate() {
             let tau = ft.sub(&pre).unwrap();
@@ -255,6 +272,63 @@ mod tests {
         let p_trunc = dir.join("trunc.qtvc");
         std::fs::write(&p_trunc, &bytes[..10]).unwrap();
         assert!(Registry::open(&p_trunc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn io_modes_read_identical_sections() {
+        let (pre, fts) = suite(3, 16);
+        let dir = tmp("iomode");
+        let path = dir.join("zoo.qtvc");
+        build_registry(&pre, &fts, QuantScheme::Tvq(3), &path).unwrap();
+        let pread = Registry::open_with_io(&path, IoMode::Pread).unwrap();
+        let reopen = Registry::open_with_io(&path, IoMode::Reopen).unwrap();
+        for t in 0..3 {
+            assert_eq!(
+                pread.load_task_vector(t).unwrap(),
+                reopen.load_task_vector(t).unwrap(),
+                "task {t}: pread and reopen paths disagree"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn planned_registry_roundtrips_through_generic_source() {
+        use crate::planner::{build_planned_registry, min_feasible_bytes, probe, PlannerConfig};
+
+        let (pre, fts) = suite(3, 17);
+        let dir = tmp("planned");
+        let path = dir.join("zoo.qtvc");
+        let cfg = PlannerConfig { group: 128, tvq_bits: vec![2, 4], rtvq_arms: vec![(3, 2)] };
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let budget = min_feasible_bytes(&profile) * 2;
+        let (plan, summary) =
+            build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+        assert_eq!(summary.scheme, RegistryScheme::Planned);
+
+        let reg = Registry::open(&path).unwrap();
+        assert_eq!(reg.scheme(), RegistryScheme::Planned);
+        assert_eq!(reg.version(), 3);
+        assert_eq!(reg.n_tasks(), 3);
+        assert_eq!(reg.plan().unwrap(), &plan);
+        // Per-task payload access is a uniform-registry API.
+        assert!(reg.load_task_payload(0).is_err());
+        // The generic source + merge path serves planned registries.
+        let src = PackedRegistrySource::open(&path).unwrap();
+        assert_eq!(src.scheme_label(), "PLAN-MIXED");
+        let ta = TaskArithmetic::default();
+        let merged = merge_from_source(&ta, &pre, &src, None).unwrap();
+        let taus: Vec<Checkpoint> =
+            (0..3).map(|t| reg.load_task_vector(t).unwrap()).collect();
+        let want = ta.merge(&pre, &taus).unwrap();
+        match (&merged, &want) {
+            (
+                crate::merge::MergedModel::Shared(a),
+                crate::merge::MergedModel::Shared(b),
+            ) => assert_eq!(a, b),
+            _ => panic!("expected shared merges"),
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

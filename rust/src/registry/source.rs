@@ -73,7 +73,10 @@ impl TaskVectorSource for F32ZooSource<'_> {
 
 /// The packed backend: a lazily-read `QTVC` registry.  Opening holds only
 /// the offset table in memory; each `task_vector` call reads exactly one
-/// section (plus, for RTVQ, the shared base on first touch).
+/// section (plus, for RTVQ, the shared base on first touch).  Plan-packed
+/// mixed-precision registries serve through the same interface — a
+/// `task_vector` call there reads the task's per-tensor group sections
+/// and reconstructs shapes from the embedded plan.
 pub struct PackedRegistrySource {
     registry: Registry,
 }

@@ -1,24 +1,33 @@
-//! Building and writing `QTVC` v2 registry files.
+//! Building and writing `QTVC` registry files.
 //!
 //! [`RegistryBuilder`] assembles named quantized payloads and serializes
 //! them atomically (write-to-temp + rename, like the `TVQC` store);
 //! [`build_registry`] is the one-call path from a raw zoo `(pre, fts)` to
-//! a packed registry under any TVQ/RTVQ scheme.
+//! a uniform packed registry under any TVQ/RTVQ scheme.  Plan-packed
+//! mixed-precision registries are assembled through
+//! [`RegistryBuilder::new_planned`] — normally via
+//! [`write_planned_registry`](crate::planner::write_planned_registry),
+//! which also enforces that the written bytes match the plan's cost model
+//! exactly.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::container::{encode_checkpoint_payload, PayloadKind, MAGIC, VERSION};
+use super::container::{
+    encode_checkpoint_payload, encode_group_payload, PayloadKind, RegistryScheme, MAGIC,
+    VERSION, VERSION_PLANNED,
+};
 use crate::checkpoint::Checkpoint;
-use crate::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
+use crate::planner::PackPlan;
+use crate::quant::{GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq};
 use crate::util::crc32;
 
 /// Exact byte accounting returned by a registry write.
 #[derive(Clone, Debug)]
 pub struct WriteSummary {
     pub path: PathBuf,
-    pub scheme: QuantScheme,
+    pub scheme: RegistryScheme,
     pub n_tasks: usize,
     /// Total file size (== `index_bytes + payload_bytes`).
     pub file_bytes: u64,
@@ -36,21 +45,46 @@ struct PendingEntry {
 
 /// Assembles a registry in memory, then writes it in one pass.
 pub struct RegistryBuilder {
-    scheme: QuantScheme,
+    scheme: RegistryScheme,
     base: Option<PendingEntry>,
     tasks: Vec<PendingEntry>,
+    /// Planned registries: kind-2 group sections, written in insertion
+    /// order after the plan section.
+    groups: Vec<PendingEntry>,
+    plan: Option<PendingEntry>,
+    plan_tasks: usize,
 }
 
 impl RegistryBuilder {
+    /// A uniform-scheme (v2) registry builder.
     pub fn new(scheme: QuantScheme) -> Self {
-        Self { scheme, base: None, tasks: Vec::new() }
+        Self {
+            scheme: RegistryScheme::Uniform(scheme),
+            base: None,
+            tasks: Vec::new(),
+            groups: Vec::new(),
+            plan: None,
+            plan_tasks: 0,
+        }
+    }
+
+    /// A plan-packed mixed-precision (v3) registry builder.
+    pub fn new_planned() -> Self {
+        Self {
+            scheme: RegistryScheme::Planned,
+            base: None,
+            tasks: Vec::new(),
+            groups: Vec::new(),
+            plan: None,
+            plan_tasks: 0,
+        }
     }
 
     fn check_name(&self, name: &str) -> Result<()> {
         if name.is_empty() {
             bail!("registry entry name must be non-empty");
         }
-        if self.tasks.iter().any(|e| e.name == name) {
+        if self.tasks.iter().chain(&self.groups).any(|e| e.name == name) {
             bail!("duplicate registry entry name {name:?}");
         }
         Ok(())
@@ -59,6 +93,9 @@ impl RegistryBuilder {
     /// Add one task's quantized payload (a TVQ task vector, an RTVQ
     /// offset, or an FQ checkpoint, depending on the scheme).
     pub fn add_task(&mut self, name: &str, q: &QuantizedCheckpoint) -> Result<&mut Self> {
+        if matches!(self.scheme, RegistryScheme::Planned) {
+            bail!("planned registries take group sections, not checkpoint payloads");
+        }
         self.check_name(name)?;
         self.tasks.push(PendingEntry {
             name: name.to_string(),
@@ -70,6 +107,9 @@ impl RegistryBuilder {
 
     /// Set the shared RTVQ base payload (stored once, amortized).
     pub fn set_rtvq_base(&mut self, q: &QuantizedCheckpoint) -> Result<&mut Self> {
+        if matches!(self.scheme, RegistryScheme::Planned) {
+            bail!("planned registries store per-tensor bases as group sections");
+        }
         if self.base.is_some() {
             bail!("RTVQ base already set");
         }
@@ -81,53 +121,87 @@ impl RegistryBuilder {
         Ok(self)
     }
 
+    /// Add one kind-2 group-quantized section (planned registries only).
+    pub fn add_group(&mut self, name: &str, g: &GroupQuantized) -> Result<&mut Self> {
+        if !matches!(self.scheme, RegistryScheme::Planned) {
+            bail!("group sections require a planned registry (RegistryBuilder::new_planned)");
+        }
+        if name == crate::planner::plan::PLAN_SECTION_NAME {
+            bail!("{name:?} is reserved for the plan section");
+        }
+        self.check_name(name)?;
+        self.groups.push(PendingEntry {
+            name: name.to_string(),
+            kind: PayloadKind::Group,
+            body: encode_group_payload(g),
+        });
+        Ok(self)
+    }
+
+    /// Embed the pack plan (planned registries only; exactly once).
+    pub fn set_plan(&mut self, plan: &PackPlan) -> Result<&mut Self> {
+        if !matches!(self.scheme, RegistryScheme::Planned) {
+            bail!("only planned registries carry a plan section");
+        }
+        if self.plan.is_some() {
+            bail!("plan section already set");
+        }
+        plan.validate()?;
+        self.plan = Some(PendingEntry {
+            name: crate::planner::plan::PLAN_SECTION_NAME.to_string(),
+            kind: PayloadKind::Plan,
+            body: plan.encode(),
+        });
+        self.plan_tasks = plan.n_tasks();
+        Ok(self)
+    }
+
+    /// Entry order on disk: plan first (planned), or base then tasks
+    /// (uniform), then group sections in insertion order.
+    fn entries(&self) -> Vec<&PendingEntry> {
+        self.plan
+            .iter()
+            .chain(self.base.iter())
+            .chain(self.tasks.iter())
+            .chain(self.groups.iter())
+            .collect()
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self.scheme {
+            RegistryScheme::Planned => {
+                if self.plan.is_none() {
+                    bail!("planned registry needs set_plan before write");
+                }
+                if self.groups.is_empty() {
+                    bail!("refusing to write a planned registry with no group sections");
+                }
+            }
+            RegistryScheme::Uniform(scheme) => {
+                if self.tasks.is_empty() {
+                    bail!("refusing to write an empty registry");
+                }
+                match scheme {
+                    QuantScheme::Rtvq(..) if self.base.is_none() => {
+                        bail!("RTVQ registry needs set_rtvq_base before write")
+                    }
+                    QuantScheme::Fp32 => {
+                        bail!("fp32 zoos use the TVQC checkpoint store, not QTVC")
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Serialize to `path` (atomic: temp file + rename).
     pub fn write<P: AsRef<Path>>(&self, path: P) -> Result<WriteSummary> {
         let path = path.as_ref();
-        if self.tasks.is_empty() {
-            bail!("refusing to write an empty registry");
-        }
-        match self.scheme {
-            QuantScheme::Rtvq(..) if self.base.is_none() => {
-                bail!("RTVQ registry needs set_rtvq_base before write")
-            }
-            QuantScheme::Fp32 => bail!("fp32 zoos use the TVQC checkpoint store, not QTVC"),
-            _ => {}
-        }
-
-        // Entry order on disk: the shared base first, then tasks.
-        let entries: Vec<&PendingEntry> =
-            self.base.iter().chain(self.tasks.iter()).collect();
-
-        let label = self.scheme.label();
-        // Header prefix: magic + version + scheme label + entry count.
-        let mut index: Vec<u8> = Vec::new();
-        index.extend_from_slice(&MAGIC.to_le_bytes());
-        index.extend_from_slice(&VERSION.to_le_bytes());
-        index.extend_from_slice(&(label.len() as u32).to_le_bytes());
-        index.extend_from_slice(label.as_bytes());
-        index.extend_from_slice(&(entries.len() as u32).to_le_bytes());
-
-        // The offset table's own size must be known before offsets can be
-        // assigned: each row is name_len(4) + name + kind(1) + offset(8)
-        // + length(8) + crc(4), and the table ends with a 4-byte CRC.
-        let rows_bytes: usize =
-            entries.iter().map(|e| 4 + e.name.len() + 1 + 8 + 8 + 4).sum();
-        let index_bytes = (index.len() + rows_bytes + 4) as u64;
-
-        let mut offset = index_bytes;
-        for e in &entries {
-            index.extend_from_slice(&(e.name.len() as u32).to_le_bytes());
-            index.extend_from_slice(e.name.as_bytes());
-            index.push(e.kind.to_u8());
-            index.extend_from_slice(&offset.to_le_bytes());
-            index.extend_from_slice(&(e.body.len() as u64).to_le_bytes());
-            index.extend_from_slice(&crc32(&e.body).to_le_bytes());
-            offset += e.body.len() as u64;
-        }
-        let index_crc = crc32(&index);
-        index.extend_from_slice(&index_crc.to_le_bytes());
-        debug_assert_eq!(index.len() as u64, index_bytes);
+        self.validate()?;
+        let entries = self.entries();
+        let (index, payload_bytes) = self.layout(&entries);
+        let index_bytes = index.len() as u64;
 
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -145,32 +219,75 @@ impl RegistryBuilder {
         }
         std::fs::rename(&tmp, path)?;
 
-        let payload_bytes: u64 = entries.iter().map(|e| e.body.len() as u64).sum();
         Ok(WriteSummary {
             path: path.to_path_buf(),
             scheme: self.scheme,
-            n_tasks: self.tasks.len(),
+            n_tasks: match self.scheme {
+                RegistryScheme::Planned => self.plan_tasks,
+                RegistryScheme::Uniform(_) => self.tasks.len(),
+            },
             file_bytes: index_bytes + payload_bytes,
             index_bytes,
             payload_bytes,
         })
     }
+
+    /// Exact file size this builder would write, without touching disk.
+    pub fn projected_file_bytes(&self) -> Result<u64> {
+        self.validate()?;
+        let entries = self.entries();
+        let (index, payload_bytes) = self.layout(&entries);
+        Ok(index.len() as u64 + payload_bytes)
+    }
+
+    /// Serialize the header + offset table; returns it with the total
+    /// payload byte count.
+    fn layout(&self, entries: &[&PendingEntry]) -> (Vec<u8>, u64) {
+        let label = self.scheme.label();
+        let version = match self.scheme {
+            RegistryScheme::Planned => VERSION_PLANNED,
+            RegistryScheme::Uniform(_) => VERSION,
+        };
+        // Header prefix: magic + version + scheme label + entry count.
+        let mut index: Vec<u8> = Vec::new();
+        index.extend_from_slice(&MAGIC.to_le_bytes());
+        index.extend_from_slice(&version.to_le_bytes());
+        index.extend_from_slice(&(label.len() as u32).to_le_bytes());
+        index.extend_from_slice(label.as_bytes());
+        index.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+
+        // The offset table's own size must be known before offsets can be
+        // assigned: each row is name_len(4) + name + kind(1) + offset(8)
+        // + length(8) + crc(4), and the table ends with a 4-byte CRC.
+        let rows_bytes: usize =
+            entries.iter().map(|e| 4 + e.name.len() + 1 + 8 + 8 + 4).sum();
+        let index_bytes = (index.len() + rows_bytes + 4) as u64;
+
+        let mut offset = index_bytes;
+        for e in entries {
+            index.extend_from_slice(&(e.name.len() as u32).to_le_bytes());
+            index.extend_from_slice(e.name.as_bytes());
+            index.push(e.kind.to_u8());
+            index.extend_from_slice(&offset.to_le_bytes());
+            index.extend_from_slice(&(e.body.len() as u64).to_le_bytes());
+            index.extend_from_slice(&crc32(&e.body).to_le_bytes());
+            offset += e.body.len() as u64;
+        }
+        let index_crc = crc32(&index);
+        index.extend_from_slice(&index_crc.to_le_bytes());
+        debug_assert_eq!(index.len() as u64, index_bytes);
+        let payload_bytes: u64 = entries.iter().map(|e| e.body.len() as u64).sum();
+        (index, payload_bytes)
+    }
 }
 
-/// Quantize a zoo `(pre, fts)` under `scheme` and write the packed
-/// registry to `path`.  Task names default to `task00`, `task01`, ...
-///
-/// * `Tvq(b)`       — each task vector tau_t = ft_t - pre quantized at b bits.
-/// * `Rtvq(bb, bo)` — Algorithm 1 with error correction: one shared base
-///   at bb bits + per-task offsets at bo bits.
-/// * `Fq` / `Fp32`  — rejected: FQ payloads need the trunk at read time
-///   and fp32 zoos already have the TVQC store.
-pub fn build_registry<P: AsRef<Path>>(
+/// Assemble (without writing) the uniform registry builder for a zoo —
+/// shared by [`build_registry`] and [`uniform_registry_bytes`].
+fn uniform_builder(
     pre: &Checkpoint,
     fts: &[Checkpoint],
     scheme: QuantScheme,
-    path: P,
-) -> Result<WriteSummary> {
+) -> Result<RegistryBuilder> {
     if fts.is_empty() {
         bail!("cannot build a registry from zero fine-tuned checkpoints");
     }
@@ -193,5 +310,38 @@ pub fn build_registry<P: AsRef<Path>>(
             bail!("registries store packed task payloads; {:?} is not supported", scheme)
         }
     }
-    b.write(path)
+    Ok(b)
+}
+
+/// Quantize a zoo `(pre, fts)` under `scheme` and write the packed
+/// registry to `path`.  Task names default to `task00`, `task01`, ...
+///
+/// * `Tvq(b)`       — each task vector tau_t = ft_t - pre quantized at b bits.
+/// * `Rtvq(bb, bo)` — Algorithm 1 with error correction: one shared base
+///   at bb bits + per-task offsets at bo bits.
+/// * `Fq` / `Fp32`  — rejected: FQ payloads need the trunk at read time
+///   and fp32 zoos already have the TVQC store.
+pub fn build_registry<P: AsRef<Path>>(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    scheme: QuantScheme,
+    path: P,
+) -> Result<WriteSummary> {
+    uniform_builder(pre, fts, scheme)?.write(path)
+}
+
+/// Exact file bytes the uniform registry for `(pre, fts, scheme)` would
+/// occupy, without writing it — the natural budget anchor for the pack
+/// planner ("fit into what RTVQ-B3O2 would cost").
+///
+/// Deliberately computed by assembling the real encoded payloads rather
+/// than closed-form arithmetic: it costs one extra quantization pass of
+/// the zoo, but it can never drift from the encoder, which is what the
+/// "budget anchor == actual uniform file bytes" guarantee rests on.
+pub fn uniform_registry_bytes(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    scheme: QuantScheme,
+) -> Result<u64> {
+    uniform_builder(pre, fts, scheme)?.projected_file_bytes()
 }

@@ -1,0 +1,285 @@
+//! Planner acceptance: the budget-aware pack planner must
+//!
+//! 1. fit a mixed-precision registry into the **measured** byte cost of
+//!    a uniform RTVQ-B3O2 registry while reconstructing the task vectors
+//!    with lower total error (the ISSUE-2 acceptance criterion),
+//! 2. respect any feasible budget exactly (written file bytes == planned
+//!    bytes <= budget) and degrade monotonically as budgets shrink,
+//! 3. round-trip kind-2 `GroupQuantized` sections producer → registry →
+//!    fused dequant-merge → served merged model through the `ModelCache`,
+//! 4. fail closed on corrupted plan / group sections and on writer
+//!    misuse.
+
+use std::sync::Arc;
+
+use tvq::checkpoint::Checkpoint;
+use tvq::coordinator::ModelCache;
+use tvq::exp::planner::synthetic_planner_zoo;
+use tvq::merge::{MergedModel, Merger, TaskArithmetic};
+use tvq::planner::{
+    build_planned_registry, fused_merge, min_feasible_bytes, probe, solve,
+    write_planned_registry, PlannerConfig,
+};
+use tvq::quant::{GroupQuantized, QuantScheme};
+use tvq::registry::{
+    build_registry, merge_from_source, DiskAccounting, PackedRegistrySource, Registry,
+    RegistryBuilder, TaskVectorSource,
+};
+
+const N_TASKS: usize = 8;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tvq_planner_it_{name}"))
+}
+
+/// Sum over tasks of squared L2 error between exact task vectors and the
+/// registry's reconstructions — measured through the serving path.
+fn registry_sse(reg: &Registry, pre: &Checkpoint, fts: &[Checkpoint]) -> f64 {
+    let mut sse = 0.0;
+    for (t, ft) in fts.iter().enumerate() {
+        let tau = ft.sub(pre).unwrap();
+        let d = tau.l2_dist(&reg.load_task_vector(t).unwrap()).unwrap();
+        sse += d * d;
+    }
+    sse
+}
+
+#[test]
+fn planned_registry_beats_uniform_rtvq_at_equal_budget() {
+    let (pre, fts) = synthetic_planner_zoo(N_TASKS, 0xACCE);
+    let dir = tmp("acceptance");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // The uniform baseline, measured from a real file.
+    let uniform_path = dir.join("rtvq3o2.qtvc");
+    build_registry(&pre, &fts, QuantScheme::Rtvq(3, 2), &uniform_path).unwrap();
+    let uniform = Registry::open(&uniform_path).unwrap();
+    let uniform_acc = DiskAccounting::measure(&uniform).unwrap();
+    let uniform_sse = registry_sse(&uniform, &pre, &fts);
+
+    // The planner, handed exactly that file's byte cost.
+    let planned_path = dir.join("planned.qtvc");
+    let (plan, summary) = build_planned_registry(
+        &pre,
+        &fts,
+        uniform_acc.file_bytes,
+        &PlannerConfig::default(),
+        &planned_path,
+    )
+    .unwrap();
+    let planned = Registry::open(&planned_path).unwrap();
+    let planned_acc = DiskAccounting::measure(&planned).unwrap();
+    let planned_sse = registry_sse(&planned, &pre, &fts);
+
+    // Acceptance: measured bytes <= the uniform file, error strictly lower.
+    assert!(
+        planned_acc.file_bytes <= uniform_acc.file_bytes,
+        "planned {} B exceeds uniform RTVQ-B3O2 {} B",
+        planned_acc.file_bytes,
+        uniform_acc.file_bytes
+    );
+    assert!(
+        planned_sse < uniform_sse,
+        "planned SSE {planned_sse:.4e} not below uniform {uniform_sse:.4e} \
+         at equal budget"
+    );
+    // The cost model is byte-exact against the real file.
+    assert_eq!(summary.file_bytes, plan.planned_file_bytes());
+    assert_eq!(summary.file_bytes, std::fs::metadata(&planned_path).unwrap().len());
+    assert_eq!(planned_acc.params, pre.numel());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn budgets_are_respected_exactly_and_degrade_monotonically() {
+    let (pre, fts) = synthetic_planner_zoo(4, 0xB0D6);
+    let cfg = PlannerConfig { group: 256, ..PlannerConfig::default() };
+    let profile = probe(&pre, &fts, &cfg).unwrap();
+    let min = min_feasible_bytes(&profile);
+    let dir = tmp("sweep");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Below the minimum: a pointed error, not a broken plan.
+    assert!(solve(&profile, min - 1).is_err());
+
+    let mut last_err = f64::INFINITY;
+    for (i, budget) in (0..6).map(|i| min + i * min / 3).enumerate() {
+        let plan = solve(&profile, budget).unwrap();
+        assert!(
+            plan.planned_file_bytes() <= budget,
+            "step {i}: planned {} B over budget {budget} B",
+            plan.planned_file_bytes()
+        );
+        // Each plan writes a file of exactly its planned size.
+        let path = dir.join(format!("b{i}.qtvc"));
+        let summary = write_planned_registry(&pre, &fts, &plan, &path).unwrap();
+        assert_eq!(summary.file_bytes, plan.planned_file_bytes());
+        // ...that round-trips to the same plan.
+        let reg = Registry::open(&path).unwrap();
+        assert_eq!(reg.plan().unwrap(), &plan);
+        // Monotone degradation: more budget never means more error.
+        assert!(
+            plan.total_error() <= last_err,
+            "step {i}: error {} regressed above {last_err}",
+            plan.total_error()
+        );
+        last_err = plan.total_error();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn group_sections_roundtrip_through_fused_merge_and_model_cache() {
+    let (pre, fts) = synthetic_planner_zoo(N_TASKS, 0x5E7E);
+    let dir = tmp("serve");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("planned.qtvc");
+    let cfg = PlannerConfig::default();
+    let profile = probe(&pre, &fts, &cfg).unwrap();
+    let budget = min_feasible_bytes(&profile) * 2;
+    let (plan, _) = build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+    let reg = Registry::open(&path).unwrap();
+
+    // Producer -> registry: every kind-2 section decodes to the exact
+    // GroupQuantized geometry the plan promised.
+    for t in 0..plan.n_tasks() {
+        for l in 0..plan.n_tensors() {
+            let gq: GroupQuantized = reg.load_planned_task_section(t, l).unwrap();
+            let tensor = &plan.tensors[l];
+            assert_eq!(gq.group, tensor.group);
+            assert_eq!(gq.len(), tensor.padded());
+        }
+    }
+
+    // Fused dequant-merge over group sections == the generic lazy path.
+    let ta = TaskArithmetic::default();
+    let lams = vec![ta.lambda; N_TASKS];
+    let fused = fused_merge(&reg, &pre, &lams, None).unwrap();
+    let mut want = pre.clone();
+    for t in 0..N_TASKS {
+        want.axpy(ta.lambda, &reg.load_task_vector(t).unwrap()).unwrap();
+    }
+    let dist = fused.l2_dist(&want).unwrap();
+    assert!(dist < 1e-3, "fused merge diverged from lazy path by {dist}");
+
+    // Served end-to-end: ModelCache builds the variant straight from the
+    // planned registry through the generic source interface.
+    let source = Arc::new(PackedRegistrySource::open(&path).unwrap());
+    assert_eq!(source.scheme_label(), "PLAN-MIXED");
+    assert!(source.source_id().starts_with("PLAN-MIXED:"));
+    let cache = ModelCache::new();
+    let served = cache.get_or_build_merged(&ta, &pre, source.as_ref()).unwrap();
+    let direct = merge_from_source(&ta, &pre, source.as_ref(), None).unwrap();
+    match (served.as_ref(), &direct) {
+        (MergedModel::Shared(a), MergedModel::Shared(b)) => {
+            assert_eq!(a, b, "cached variant differs from direct merge")
+        }
+        _ => panic!("expected shared merges"),
+    }
+    // And the served model is the fused result up to float association.
+    match served.as_ref() {
+        MergedModel::Shared(ck) => {
+            let d = ck.l2_dist(&fused).unwrap();
+            assert!(d < 1e-3, "served model diverged from fused merge by {d}");
+        }
+        _ => unreachable!(),
+    }
+    assert!(cache.contains(ta.name(), &source.source_id()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_planned_registries_fail_closed() {
+    let (pre, fts) = synthetic_planner_zoo(3, 0xC0AA);
+    let dir = tmp("corrupt");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("planned.qtvc");
+    let cfg = PlannerConfig { group: 256, ..PlannerConfig::default() };
+    let profile = probe(&pre, &fts, &cfg).unwrap();
+    build_planned_registry(&pre, &fts, min_feasible_bytes(&profile) * 2, &cfg, &path)
+        .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let reg = Registry::open(&path).unwrap();
+    let plan_len = reg
+        .entries()
+        .iter()
+        .find(|e| e.name == "__plan__")
+        .map(|e| (e.offset, e.length))
+        .unwrap();
+
+    // A flipped byte inside the plan section is caught at open (the plan
+    // is the slot/shape template — serving without it would be blind).
+    let mut bad = bytes.clone();
+    let plan_mid = (plan_len.0 + plan_len.1 / 2) as usize;
+    bad[plan_mid] ^= 0xFF;
+    let p_bad = dir.join("bad_plan.qtvc");
+    std::fs::write(&p_bad, &bad).unwrap();
+    assert!(Registry::open(&p_bad).is_err());
+
+    // A flipped byte in the *last* group section leaves open() fine
+    // (lazy) but fails that section's CRC on first touch.
+    let mut bad2 = bytes.clone();
+    let n = bad2.len();
+    bad2[n - 2] ^= 0xFF;
+    let p_bad2 = dir.join("bad_group.qtvc");
+    std::fs::write(&p_bad2, &bad2).unwrap();
+    let reg2 = Registry::open(&p_bad2).unwrap();
+    let last_t = reg2.n_tasks() - 1;
+    assert!(reg2.load_task_vector(last_t).is_err());
+    assert!(reg2.load_task_vector(0).is_ok(), "untouched sections must still serve");
+
+    // Truncation inside the index is caught at open.
+    let p_trunc = dir.join("trunc.qtvc");
+    std::fs::write(&p_trunc, &bytes[..24]).unwrap();
+    assert!(Registry::open(&p_trunc).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn planned_builder_rejects_misuse() {
+    let (pre, fts) = synthetic_planner_zoo(2, 0xAB);
+    let cfg = PlannerConfig { group: 256, ..PlannerConfig::default() };
+    let profile = probe(&pre, &fts, &cfg).unwrap();
+    let plan = solve(&profile, min_feasible_bytes(&profile) * 2).unwrap();
+    let dir = tmp("misuse");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Planned writes need a plan and at least one group section.
+    let b = RegistryBuilder::new_planned();
+    assert!(b.write(dir.join("a.qtvc")).is_err());
+    let mut b = RegistryBuilder::new_planned();
+    b.set_plan(&plan).unwrap();
+    assert!(b.set_plan(&plan).is_err(), "double set_plan");
+    assert!(b.write(dir.join("b.qtvc")).is_err(), "no group sections");
+
+    // Uniform builders reject group sections and plans; planned builders
+    // reject checkpoint payloads.
+    let tau = fts[0].sub(&pre).unwrap();
+    let q = tvq::quant::QuantizedCheckpoint::quantize(&tau, 3).unwrap();
+    let flat = vec![0.25f32; 256];
+    let gq = GroupQuantized::quantize(&flat, 3, 128).unwrap();
+    let mut uniform = RegistryBuilder::new(QuantScheme::Tvq(3));
+    assert!(uniform.add_group("g", &gq).is_err());
+    assert!(uniform.set_plan(&plan).is_err());
+    uniform.add_task("t0", &q).unwrap();
+    let mut planned = RegistryBuilder::new_planned();
+    assert!(planned.add_task("t0", &q).is_err());
+    assert!(planned.set_rtvq_base(&q).is_err());
+    assert!(planned.add_group("", &gq).is_err(), "empty name");
+    planned.add_group("g", &gq).unwrap();
+    assert!(planned.add_group("g", &gq).is_err(), "duplicate name");
+
+    // A planned file whose sections don't match its plan is rejected at
+    // open: write a registry with a plan but a wrong section set.
+    let mut mismatched = RegistryBuilder::new_planned();
+    mismatched.set_plan(&plan).unwrap();
+    mismatched.add_group("not/in/plan", &gq).unwrap();
+    let p = dir.join("mismatch.qtvc");
+    mismatched.write(&p).unwrap();
+    let err = Registry::open(&p).unwrap_err().to_string();
+    assert!(
+        err.contains("sections") || err.contains("missing"),
+        "open accepted a plan/section mismatch: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
