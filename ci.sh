@@ -30,6 +30,9 @@ cargo run --release "${CARGO_FLAGS[@]}" --example packed_registry > /dev/null
 echo "==> planner experiment tabP (smoke)"
 TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabP > /dev/null
 
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps "${CARGO_FLAGS[@]}" > /dev/null
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 

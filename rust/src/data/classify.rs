@@ -64,7 +64,7 @@ impl ClassifyTask {
         self.n_classes
     }
 
-    /// Sample a batch: returns (x [n, tokens, token_dim], labels [n]).
+    /// Sample a batch: returns (x `[n, tokens, token_dim]`, labels `[n]`).
     pub fn sample(&self, n: usize, rng: &mut Rng) -> (Tensor, Vec<i32>) {
         let mut x = Tensor::zeros(&[n, self.tokens, self.token_dim]);
         let mut y = Vec::with_capacity(n);

@@ -6,8 +6,15 @@
 //! real files, index and all), a sensitivity-planned mixed-precision
 //! registry reconstructs the task vectors with lower total error.  The
 //! zoo is deliberately heterogeneous across layers — per-layer task-
-//! vector scales spanning ~30x, which is what real fine-tuning produces
-//! (paper Fig. 3) and what uniform bit widths waste budget on.
+//! vector scales spanning ~30x (what real fine-tuning produces, paper
+//! Fig. 3) plus **localized** layers where each task touches only a
+//! small task-specific subset of weights — the regime the sparse
+//! (DARE / TALL) arms exploit.
+//!
+//! Since PR 3 the table also sweeps the planner down-budget with two
+//! candidate sets — dense arms only (the PR-2 planner) vs the full set
+//! with sparse arms — showing where the solver starts picking sparse
+//! arms and what that buys at equal real file bytes.
 //!
 //! Runs without PJRT (like `tab5`): `tvq experiment tabP`, or in CI smoke
 //! mode with `TVQ_SMOKE=1` (smaller zoo, same assertions-by-table).
@@ -16,7 +23,7 @@ use anyhow::Result;
 
 use super::report::{finish, Table};
 use crate::checkpoint::Checkpoint;
-use crate::planner::{build_planned_registry, PlannerConfig};
+use crate::planner::{probe, solve, write_planned_registry, PlannerConfig};
 use crate::quant::QuantScheme;
 use crate::registry::{build_registry, DiskAccounting, Registry};
 use crate::tensor::Tensor;
@@ -27,9 +34,12 @@ fn smoke() -> bool {
     std::env::var_os("TVQ_SMOKE").is_some()
 }
 
-/// Heterogeneous synthetic zoo: common drift + per-task offsets, with
-/// per-layer scales spanning ~30x.  Mirrors the regime the planner is
-/// built for; also used by `tvq registry pack --synthetic`.
+/// Heterogeneous synthetic zoo: common drift + per-task offsets with
+/// per-layer scales spanning ~30x, plus localized layers where each task
+/// perturbs only a small random subset of weights (no common drift) —
+/// approximately-sparse deltas like real fine-tuning produces.  Mirrors
+/// the regimes the planner's dense and sparse arms are built for; also
+/// used by `tvq registry pack --synthetic`.
 pub fn synthetic_planner_zoo(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
     let mut rng = Rng::new(seed);
     let stds: &[f32] = if smoke() {
@@ -37,14 +47,22 @@ pub fn synthetic_planner_zoo(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Chec
     } else {
         &[0.002, 0.004, 0.008, 0.016, 0.032, 0.064]
     };
+    let n_localized = if smoke() { 1 } else { 2 };
     let shape: &[usize] = if smoke() { &[48, 32] } else { &[96, 64] };
     let mut pre = Checkpoint::new();
     for (i, _) in stds.iter().enumerate() {
         pre.insert(&format!("blk{i:02}/w"), Tensor::randn(shape, 0.3, &mut rng));
     }
+    for i in 0..n_localized {
+        pre.insert(&format!("loc{i:02}/w"), Tensor::randn(shape, 0.3, &mut rng));
+    }
     let mut drift = Checkpoint::new();
     for (i, &std) in stds.iter().enumerate() {
         drift.insert(&format!("blk{i:02}/w"), Tensor::randn(shape, std, &mut rng));
+    }
+    for i in 0..n_localized {
+        // Localized layers share no drift: their deltas are per-task.
+        drift.insert(&format!("loc{i:02}/w"), Tensor::zeros(shape));
     }
     let fts = (0..n_tasks)
         .map(|_| {
@@ -54,6 +72,17 @@ pub fn synthetic_planner_zoo(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Chec
                     &format!("blk{i:02}/w"),
                     Tensor::randn(shape, std * 0.4, &mut rng),
                 );
+            }
+            // Localized layers: ~8% task-specific hot weights, the rest
+            // untouched — tau is approximately sparse, no shared base.
+            for i in 0..n_localized {
+                let mut t = Tensor::zeros(shape);
+                for v in t.data_mut() {
+                    if rng.f32() < 0.08 {
+                        *v = rng.normal_f32(0.08);
+                    }
+                }
+                off.insert(&format!("loc{i:02}/w"), t);
             }
             pre.add(&drift).unwrap().add(&off).unwrap()
         })
@@ -82,9 +111,10 @@ pub fn tabp_planner() -> Result<Vec<Table>> {
 
     let mut table = Table::new(
         "tabP",
-        "Planned mixed precision vs uniform schemes: real file bytes and \
-         total squared reconstruction error (lower is better)",
-        &["Scheme", "file bytes", "% of B3O2 budget", "total SSE"],
+        "Planned mixed precision (dense-only vs +sparse arms) vs uniform \
+         schemes: real file bytes and total squared reconstruction error \
+         (lower is better)",
+        &["Scheme", "file bytes", "% of B3O2 budget", "total SSE", "sparse arms"],
     );
 
     // Uniform baselines, measured from real files through the same
@@ -113,28 +143,51 @@ pub fn tabp_planner() -> Result<Vec<Table>> {
             bytes.to_string(),
             format!("{:.1}", 100.0 * *bytes as f64 / budget as f64),
             format!("{sse:.4e}"),
+            "-".to_string(),
         ]);
     }
 
-    // The planner, handed exactly the uniform RTVQ-B3O2 file bytes.
-    let cfg = PlannerConfig::default();
-    let path = dir.join("PLAN-MIXED.qtvc");
-    let (plan, summary) = build_planned_registry(&pre, &fts, budget, &cfg, &path)?;
-    let reg = Registry::open(&path)?;
-    let acc = DiskAccounting::measure(&reg)?;
-    let sse = registry_sse(&reg, &pre, &fts)?;
-    table.push_row(vec![
-        "PLAN-MIXED @ B3O2 budget".to_string(),
-        acc.file_bytes.to_string(),
-        format!("{:.1}", 100.0 * acc.file_bytes as f64 / budget as f64),
-        format!("{sse:.4e}"),
-    ]);
-    debug_assert_eq!(summary.file_bytes, acc.file_bytes);
+    // The planner sweep: dense-only candidates (the PR-2 set) vs the full
+    // set with DARE / TALL sparse arms, at the B3O2 budget and below it.
+    // Both plans at each step get exactly the same byte budget; every
+    // plan is compiled to a real file and measured through the serving
+    // path, so the SSE column is what a reader would actually get back.
+    let full_profile = probe(&pre, &fts, &PlannerConfig::default())?;
+    let dense_profile = probe(&pre, &fts, &PlannerConfig::dense_only())?;
+    let mut last_full_plan = None;
+    for (pct, num, den) in [(100u32, 1u64, 1u64), (70, 7, 10), (55, 11, 20)] {
+        let step_budget = budget * num / den;
+        for (tag, profile) in [("DENSE", &dense_profile), ("SPARSE", &full_profile)] {
+            let plan = solve(profile, step_budget)?;
+            let path = dir.join(format!("PLAN-{tag}-{pct}.qtvc"));
+            let summary = write_planned_registry(&pre, &fts, &plan, &path)?;
+            let reg = Registry::open(&path)?;
+            let sse = registry_sse(&reg, &pre, &fts)?;
+            let n_sparse =
+                plan.assignments.iter().filter(|a| a.arm.is_sparse()).count();
+            table.push_row(vec![
+                format!("PLAN-{tag} @ {pct}%"),
+                summary.file_bytes.to_string(),
+                format!("{:.1}", 100.0 * summary.file_bytes as f64 / budget as f64),
+                format!("{sse:.4e}"),
+                format!("{n_sparse}/{}", plan.n_tensors()),
+            ]);
+            if tag == "SPARSE" {
+                last_full_plan = Some((pct, plan));
+            }
+        }
+    }
 
-    // Where the budget went: the per-layer allocation.
+    // Where the tightest budget went: the per-layer allocation, arm
+    // family named per tensor (the sparse arms should own the localized
+    // layers).
+    let (pct, plan) = last_full_plan.expect("sweep ran");
     let mut alloc = Table::new(
         "tabP",
-        "Planner allocation: per-layer arm, byte share, probed error share",
+        &format!(
+            "Planner allocation at {pct}% of the B3O2 budget (full arm set): \
+             per-layer arm family, byte share, probed error"
+        ),
         &["Tensor", "arm", "bytes", "% of payload", "probed SSE"],
     );
     let total_cost: u64 = plan.assignments.iter().map(|a| a.cost_bytes).sum();
@@ -153,6 +206,19 @@ pub fn tabp_planner() -> Result<Vec<Table>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn localized_layers_have_sparse_taus() {
+        let (pre, fts) = synthetic_planner_zoo(3, 2);
+        let tau = fts[0].sub(&pre).unwrap();
+        let t = tau.get("loc00/w").unwrap();
+        let zeros = t.data().iter().filter(|&&v| v == 0.0).count();
+        let frac = zeros as f64 / t.numel() as f64;
+        assert!(
+            frac > 0.8,
+            "localized layer tau should be mostly zeros, got {frac:.2}"
+        );
+    }
 
     #[test]
     fn zoo_layers_are_heterogeneous() {

@@ -13,7 +13,9 @@
 //! ([`checkpoint`]), the packed `QTVC` task-vector registry — quantized
 //! payloads as the durable, lazily-loaded serving artifact ([`registry`]) —
 //! a budget-aware pack planner that compiles sensitivity-driven
-//! mixed-precision allocations into those registries ([`planner`]),
+//! mixed-precision allocations — dense TVQ/RTVQ arms plus sparse DARE
+//! drop-and-rescale and TALL-mask localization arms — into those
+//! registries ([`planner`]),
 //! eight merging algorithms ([`merge`]), synthetic task
 //! suites ([`data`]), a PJRT runtime that executes the AOT-lowered JAX/
 //! Pallas artifacts ([`runtime`]), fine-tuning drivers ([`train`]),
@@ -24,6 +26,11 @@
 //! Python never runs on the request path: `make artifacts` AOT-lowers the
 //! Layer-2 JAX models (which call the Layer-1 Pallas kernels) to HLO text
 //! once; everything else is this crate.
+//!
+//! Longer-form documentation lives under `docs/`: `ARCHITECTURE.md` (the
+//! build → plan → pack → serve pipeline mapped to modules),
+//! `WIRE_FORMAT.md` (the normative `QTVC` on-disk spec, section kinds
+//! 0–4), and `CLI.md` (every `tvq` subcommand with runnable examples).
 //!
 //! ## Quick tour
 //!

@@ -294,9 +294,14 @@ usage:
 
 `pack --budget` invokes the sensitivity-driven pack planner: the budget
 is total file bytes, either a number (`1500000`) or a uniform scheme
-spelling (`rtvq3o2` = \"whatever that scheme would cost on disk\").
-`--synthetic` packs the built-in heterogeneous demo zoo instead of a
-PJRT-trained one (useful offline)."
+spelling (`rtvq3o2` = \"whatever that scheme would cost on disk\").  The
+planner's candidate set includes sparse DARE / TALL-mask arms (kind-4
+sections, QTVC v4).  `--synthetic` packs the built-in heterogeneous demo
+zoo instead of a PJRT-trained one (useful offline).
+
+Run `tvq registry <action> --help` for per-action details; copy-pasteable
+walkthroughs live in docs/CLI.md, the byte-level file format in
+docs/WIRE_FORMAT.md."
         .to_string()
 }
 
@@ -333,12 +338,27 @@ fn parse_budget(spec: &str, pre: &Checkpoint, fts: &[Checkpoint]) -> Result<u64>
 }
 
 fn cmd_registry_pack(argv: &[String]) -> Result<()> {
-    let cmd = zoo_args(Command::new("tvq registry pack", "pack a zoo into a .qtvc registry"))
-        .req("out", "output .qtvc path")
-        .opt("scheme", "tvq4", "uniform scheme when no --budget is given")
-        .opt("budget", "", "planner byte budget: a number or a scheme spelling")
-        .opt("group", "512", "planner group-quantization width")
-        .switch("synthetic", "use the built-in heterogeneous demo zoo (no PJRT)");
+    let cmd = zoo_args(
+        Command::new("tvq registry pack", "pack a zoo into a .qtvc registry")
+            .long_about(
+                "Without --budget, packs every task at one uniform scheme (QTVC v2).
+With --budget, runs the sensitivity probe + solver over the full candidate
+set — per-task TVQ widths, shared-base RTVQ splits, and the sparse
+DARE / TALL-mask arms — and compiles the winning plan into a
+mixed-precision registry (QTVC v3, or v4 when sparse arms are chosen).
+The budget is total file bytes, index included, and is respected exactly.
+
+examples:
+  tvq registry pack --synthetic --out zoo.qtvc --scheme rtvq3o2
+  tvq registry pack --synthetic --budget rtvq3o2 --out planned.qtvc
+  tvq registry pack --synthetic --tasks 8 --budget 900000 --out small.qtvc",
+            ),
+    )
+    .req("out", "output .qtvc path")
+    .opt("scheme", "tvq4", "uniform scheme when no --budget is given")
+    .opt("budget", "", "planner byte budget: a number or a scheme spelling")
+    .opt("group", "512", "planner group-quantization width")
+    .switch("synthetic", "use the built-in heterogeneous demo zoo (no PJRT)");
     let args = cmd.parse(argv)?;
     let out = args.get_str("out")?.to_string();
     let n_tasks = args.get_usize("tasks")?;
@@ -391,8 +411,7 @@ fn cmd_registry_pack(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn registry_path_arg(argv: &[String], action: &str) -> Result<String> {
-    let cmd = Command::new("tvq registry", "inspect/verify a .qtvc registry");
+fn registry_path_arg(cmd: Command, argv: &[String], action: &str) -> Result<String> {
     let args = cmd.parse(argv)?;
     args.positional
         .first()
@@ -401,7 +420,21 @@ fn registry_path_arg(argv: &[String], action: &str) -> Result<String> {
 }
 
 fn cmd_registry_inspect(argv: &[String]) -> Result<()> {
-    let path = registry_path_arg(argv, "inspect")?;
+    let cmd = Command::new("tvq registry inspect", "dump a .qtvc registry's layout")
+        .long_about(
+            "Opens the registry (header + CRC'd offset table only; payloads stay on
+disk) and prints one row per section: name, kind (0 task checkpoint,
+1 RTVQ base, 2 group, 3 plan, 4 sparse), offset, length, CRC, and the
+arm family serving that section (e.g. TVQ-INT4, RTVQ-B3O2 base,
+TALL-K25B4).  For planned registries the embedded pack plan and its
+per-tensor allocation follow, then the disk accounting vs the
+metadata-free ideal.
+
+example:
+  tvq registry pack --synthetic --budget rtvq3o2 --out zoo.qtvc
+  tvq registry inspect zoo.qtvc",
+        );
+    let path = registry_path_arg(cmd, argv, "inspect")?;
     let reg = Registry::open(&path)?;
     println!(
         "{}: QTVC v{} {} | {} tasks | {} B ({} index + {} payload)",
@@ -413,15 +446,38 @@ fn cmd_registry_inspect(argv: &[String]) -> Result<()> {
         reg.index_bytes(),
         reg.payload_bytes()
     );
-    println!("{:<28} {:>5} {:>10} {:>10} {:>10}", "section", "kind", "offset", "bytes", "crc32");
+    // Arm family per section: from the plan for planned registries, from
+    // the scheme + kind for uniform ones.
+    let mut family: std::collections::HashMap<String, String> = std::collections::HashMap::new();
+    if let Some(plan) = reg.plan() {
+        family.insert(tvq::planner::plan::PLAN_SECTION_NAME.to_string(), "plan".to_string());
+        for (name, role) in plan.expected_sections() {
+            let (tensor, is_base) = match role {
+                tvq::planner::SectionRole::Base { tensor } => (tensor, true),
+                tvq::planner::SectionRole::Task { tensor, .. } => (tensor, false),
+            };
+            let label = plan.assignments[tensor].arm.label();
+            family.insert(name, if is_base { format!("{label} base") } else { label });
+        }
+    }
+    println!(
+        "{:<28} {:>5} {:>10} {:>10} {:>10}  {}",
+        "section", "kind", "offset", "bytes", "crc32", "arm"
+    );
     for e in reg.entries() {
+        let fam = family.get(&e.name).cloned().unwrap_or_else(|| match e.kind.to_u8() {
+            0 => reg.scheme().label(),
+            1 => "RTVQ base".to_string(),
+            _ => "-".to_string(),
+        });
         println!(
-            "{:<28} {:>5} {:>10} {:>10}   {:08x}",
+            "{:<28} {:>5} {:>10} {:>10}   {:08x}  {}",
             e.name,
             e.kind.to_u8(),
             e.offset,
             e.length,
-            e.crc
+            e.crc,
+            fam
         );
     }
     if let Some(plan) = reg.plan() {
@@ -453,7 +509,19 @@ fn cmd_registry_inspect(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_registry_verify(argv: &[String]) -> Result<()> {
-    let path = registry_path_arg(argv, "verify")?;
+    let cmd = Command::new("tvq registry verify", "decode-verify every section of a registry")
+        .long_about(
+            "Full read-path verification, strictest first: header magic/version/
+scheme pairing, offset-table bounds, index CRC, plan decode + section
+coverage (planned files), then every task's payload sections — each
+read CRC-checked and round-tripped through dequantization.  Any
+corruption (flipped byte, truncated bitmask, survivor-count mismatch,
+missing section) fails with a pointed error and a non-zero exit.
+
+example:
+  tvq registry verify zoo.qtvc && echo servable",
+        );
+    let path = registry_path_arg(cmd, argv, "verify")?;
     // Open validates the header, offset table, index CRC and (for
     // planned files) the plan section + section coverage.
     let reg = Registry::open(&path)?;
@@ -474,7 +542,19 @@ fn cmd_registry_verify(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
-    let cmd = Command::new("tvq experiment", "regenerate a paper table/figure");
+    let cmd = Command::new("tvq experiment", "regenerate a paper table/figure")
+        .long_about(
+            "Takes one experiment id, regenerates that table/figure, prints it and
+persists markdown under target/results/<id>.md.  `tab5` (storage) and
+`tabP` (pack planner: uniform vs dense-planned vs sparse-planned at
+equal byte budgets) run fully offline; every other id needs the PJRT
+runtime (`make artifacts`).  Set TVQ_SMOKE=1 to shrink tabP for CI.
+
+examples:
+  tvq experiment tabP
+  TVQ_SMOKE=1 tvq experiment tabP
+  tvq experiment tab1",
+        );
     let args = cmd.parse(argv)?;
     let Some(id) = args.positional.first() else {
         bail!("usage: tvq experiment <id>; ids: {}", exp::EXPERIMENT_IDS.join(", "));

@@ -20,7 +20,7 @@ pub struct EmrMerging;
 #[derive(Clone, Debug)]
 pub struct EmrArtifacts {
     pub tau_uni: Checkpoint,
-    /// Per task: bit masks stored as Vec<bool> per tensor name order.
+    /// Per task: bit masks stored as `Vec<bool>` per tensor name order.
     pub masks: Vec<Vec<bool>>,
     pub rescales: Vec<f32>,
 }

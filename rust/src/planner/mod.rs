@@ -7,17 +7,19 @@
 //!
 //! 1. **probes** per-layer sensitivity ([`sensitivity`]): the exact byte
 //!    cost and reconstruction error of every candidate arm — per-task
-//!    group quantization at 1..=8 bits and shared-base/offset RTVQ
-//!    splits — against the f32 task vectors;
+//!    group quantization at 1..=8 bits, shared-base/offset RTVQ splits,
+//!    and the sparse families (DARE drop-and-rescale, TALL-mask task
+//!    localization — masked-out weights at 0 bits) — against the f32
+//!    task vectors;
 //! 2. **solves** the allocation ([`solve`]): greedy
 //!    marginal-error-per-byte over each tensor's convex cost/error
 //!    frontier, under a caller byte budget measured in real file bytes
-//!    (codes + group params + offset-table rows + the plan section
-//!    itself), degrading monotonically as the budget shrinks; and
-//! 3. **compiles** the winning [`PackPlan`] ([`plan`], which also
-//!    documents the kind-3 wire format) into a `QTVC` v3 registry of
-//!    kind-2 [`GroupQuantized`] sections — the first real producer for
-//!    that payload kind — served straight through the fused
+//!    (codes + group params + bitmasks + offset-table rows + the plan
+//!    section itself), degrading monotonically as the budget shrinks; and
+//! 3. **compiles** the winning [`PackPlan`] ([`plan`]) into a `QTVC`
+//!    v3/v4 registry of kind-2 [`GroupQuantized`] and kind-4
+//!    [`SparseGroupQuantized`] sections (byte layout:
+//!    `docs/WIRE_FORMAT.md`), served straight through the fused
 //!    dequant-merge path ([`fused_merge`]).
 //!
 //! # Quickstart: plan → pack → serve
@@ -47,7 +49,7 @@ pub mod plan;
 pub mod sensitivity;
 pub mod solve;
 
-pub use plan::{Arm, Assignment, PackPlan, PlanTensor, SectionRole};
+pub use plan::{Arm, Assignment, PackPlan, PlanTensor, SectionRole, SectionSpec};
 pub use sensitivity::{probe, ArmStat, SensitivityProfile, TensorProfile};
 pub use solve::{min_feasible_bytes, solve};
 
@@ -55,9 +57,10 @@ use anyhow::{bail, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::quant::fused::{dequant_merge_flat, dequant_merge_rtvq_flat};
-use crate::quant::GroupQuantized;
+use crate::quant::{GroupQuantized, SparseGroupQuantized};
 use crate::registry::{Registry, RegistryBuilder, WriteSummary};
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// Candidate-arm configuration for the probe + solver.
 #[derive(Clone, Debug)]
@@ -70,6 +73,16 @@ pub struct PlannerConfig {
     pub tvq_bits: Vec<u8>,
     /// Shared-base/offset candidate splits `(base_bits, offset_bits)`.
     pub rtvq_arms: Vec<(u8, u8)>,
+    /// DARE sparsify-then-quantize candidates `(drop_pct, bits)`: drop a
+    /// deterministic pseudo-random `drop_pct`% of each task's entries,
+    /// rescale survivors by `dense/kept`, group-quantize at `bits`
+    /// (arXiv 2402.09997 applied as a storage arm).
+    pub dare_arms: Vec<(u8, u8)>,
+    /// TALL-mask-localized candidates `(keep_pct, bits)`: keep, per task,
+    /// the `keep_pct`% of entries with the highest task-localization
+    /// score against the multi-task vector; masked-out weights cost 0
+    /// bits (arXiv 2405.07813 applied as a storage arm).
+    pub tall_arms: Vec<(u8, u8)>,
 }
 
 impl Default for PlannerConfig {
@@ -78,16 +91,29 @@ impl Default for PlannerConfig {
             group: 512,
             tvq_bits: vec![1, 2, 3, 4, 5, 6, 8],
             rtvq_arms: vec![(2, 1), (3, 1), (2, 2), (3, 2), (4, 2), (4, 3)],
+            dare_arms: vec![(90, 4), (75, 3), (50, 2)],
+            tall_arms: vec![(50, 2), (50, 3), (25, 3), (25, 4), (12, 4)],
         }
     }
 }
 
 impl PlannerConfig {
+    /// The default candidate set restricted to the dense (TVQ / RTVQ)
+    /// families — the PR-2 planner, used as the comparison baseline in
+    /// `tabP` and the sparse-frontier tests.
+    pub fn dense_only() -> Self {
+        Self { dare_arms: Vec::new(), tall_arms: Vec::new(), ..Self::default() }
+    }
+
     pub fn check(&self) -> Result<()> {
         if self.group == 0 {
             bail!("planner group width must be >= 1");
         }
-        if self.tvq_bits.is_empty() && self.rtvq_arms.is_empty() {
+        if self.tvq_bits.is_empty()
+            && self.rtvq_arms.is_empty()
+            && self.dare_arms.is_empty()
+            && self.tall_arms.is_empty()
+        {
             bail!("planner needs at least one candidate arm");
         }
         for &b in &self.tvq_bits {
@@ -98,6 +124,14 @@ impl PlannerConfig {
         for &(bb, bo) in &self.rtvq_arms {
             if !(1..=8).contains(&bb) || !(1..=8).contains(&bo) {
                 bail!("rtvq candidate ({bb},{bo}) outside 1..=8");
+            }
+        }
+        for &(p, b) in self.dare_arms.iter().chain(&self.tall_arms) {
+            if !(1..=99).contains(&p) {
+                bail!("sparse candidate percentage {p} outside 1..=99");
+            }
+            if !(1..=8).contains(&b) {
+                bail!("sparse candidate bits {b} outside 1..=8");
             }
         }
         Ok(())
@@ -136,24 +170,114 @@ pub(crate) fn padded_flat(ck: &Checkpoint, name: &str, padded: usize) -> Result<
     Ok(flat)
 }
 
+/// Multi-task flat of `tensor`: the sum of every task's padded flat
+/// (tau_mtl at layer granularity) — what the TALL localization score is
+/// computed against.  Shared by the probe and the writer.
+pub(crate) fn sum_flat(taus: &[Checkpoint], tensor: &PlanTensor) -> Result<Vec<f32>> {
+    let padded = tensor.padded();
+    let mut acc = vec![0.0f32; padded];
+    for tau in taus {
+        let flat = padded_flat(tau, &tensor.name, padded)?;
+        for (b, x) in acc.iter_mut().zip(flat) {
+            *b += x;
+        }
+    }
+    Ok(acc)
+}
+
 /// Task-mean flat of `tensor` across `taus` (theta_ft_avg - theta_pre at
 /// layer granularity) — the base the RTVQ arms decompose against.
 /// Shared by the probe and the writer so the plan's probed errors stay
 /// bit-for-bit representative of what gets packed.
 pub(crate) fn mean_flat(taus: &[Checkpoint], tensor: &PlanTensor) -> Result<Vec<f32>> {
-    let padded = tensor.padded();
-    let mut base = vec![0.0f32; padded];
-    for tau in taus {
-        let flat = padded_flat(tau, &tensor.name, padded)?;
-        for (b, x) in base.iter_mut().zip(flat) {
-            *b += x;
-        }
-    }
+    let mut base = sum_flat(taus, tensor)?;
     let inv = 1.0 / taus.len() as f32;
     for b in base.iter_mut() {
         *b *= inv;
     }
     Ok(base)
+}
+
+/// Deterministic DARE drop mask: exactly `k` survivor indices out of
+/// `0..padded`, chosen by a seeded partial Fisher-Yates and returned in
+/// ascending order.  The seed derives from (tensor name, task index,
+/// drop rate) alone, so the probe and the writer — and any re-pack of the
+/// same suite — produce bit-identical masks.
+pub(crate) fn dare_keep_indices(
+    tensor_name: &str,
+    task: usize,
+    drop_pct: u8,
+    padded: usize,
+    k: usize,
+) -> Vec<usize> {
+    // FNV-1a over the tensor name, mixed with task index + drop rate.
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in tensor_name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let seed = h
+        ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((drop_pct as u64) << 56);
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<u32> = (0..padded as u32).collect();
+    for i in 0..k {
+        let j = i + rng.below(padded - i);
+        idx.swap(i, j);
+    }
+    let mut keep: Vec<usize> = idx[..k].iter().map(|&i| i as usize).collect();
+    keep.sort_unstable();
+    keep
+}
+
+/// TALL-mask keep set: the `k` indices with the highest localization
+/// score `|tau_t[i]| / (|tau_mtl[i] - tau_t[i]| + eps)` — sweeping k walks
+/// the same family TALL's lambda threshold does (the k-th score is the
+/// implied lambda).  Ties break by index; returned ascending.
+pub(crate) fn tall_keep_indices(flat: &[f32], mtl: &[f32], k: usize) -> Vec<usize> {
+    debug_assert_eq!(flat.len(), mtl.len());
+    debug_assert!(k >= 1 && k <= flat.len());
+    let score = |i: usize| {
+        let rest = (mtl[i] - flat[i]).abs();
+        flat[i].abs() / (rest + 1e-12)
+    };
+    let mut idx: Vec<usize> = (0..flat.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        score(b).total_cmp(&score(a)).then(a.cmp(&b))
+    });
+    let mut keep = idx[..k].to_vec();
+    keep.sort_unstable();
+    keep
+}
+
+/// Build the kind-4 sparse payload for one `(arm, tensor, task)` slot —
+/// the single code path the probe measures and the writer packs, so the
+/// plan's probed error and byte cost are exact for the written file.
+/// `mtl` is the multi-task flat, required for TALL arms.
+pub(crate) fn sparse_section(
+    arm: Arm,
+    tensor: &PlanTensor,
+    task: usize,
+    flat: &[f32],
+    mtl: Option<&[f32]>,
+) -> Result<SparseGroupQuantized> {
+    let padded = tensor.padded();
+    debug_assert_eq!(flat.len(), padded);
+    let k = arm
+        .survivors(padded)
+        .ok_or_else(|| anyhow::anyhow!("dense arm {} has no sparse section", arm.label()))?;
+    let (keep, bits) = match arm {
+        Arm::Dare { drop_pct, bits } => {
+            (dare_keep_indices(&tensor.name, task, drop_pct, padded, k), bits)
+        }
+        Arm::Tall { bits, .. } => {
+            let mtl = mtl.ok_or_else(|| {
+                anyhow::anyhow!("TALL arm needs the multi-task vector")
+            })?;
+            (tall_keep_indices(flat, mtl, k), bits)
+        }
+        _ => unreachable!("survivors() returned Some for a dense arm"),
+    };
+    SparseGroupQuantized::quantize_indices(flat, &keep, arm.rescale(padded, k), bits, tensor.group)
 }
 
 /// Quantize `flat - base_hat` at `bits` — the error-corrected RTVQ
@@ -169,7 +293,8 @@ pub(crate) fn quantize_offset(
     GroupQuantized::quantize(&off, bits, group)
 }
 
-/// Compile `plan` against the suite into a `QTVC` v3 registry at `path`.
+/// Compile `plan` against the suite into a `QTVC` v3 (dense arms) or v4
+/// (sparse arms) registry at `path`.
 ///
 /// Quantization is re-derived deterministically from the same inputs the
 /// probe saw, so the written file's size equals
@@ -219,28 +344,45 @@ pub fn write_planned_registry<P: AsRef<std::path::Path>>(
     builder.set_plan(plan)?;
     // Bases first (tensor order), then task sections in (task, tensor)
     // order — the same deterministic layout the cost model priced, built
-    // from the same shared helpers the probe measured with.
+    // from the same shared helpers the probe measured with.  RTVQ-arm
+    // tensors need their dequantized base; TALL-arm tensors need the
+    // multi-task vector the localization mask scores against.
     let mut base_hats: Vec<Option<Vec<f32>>> = vec![None; plan.n_tensors()];
+    let mut mtls: Vec<Option<Vec<f32>>> = vec![None; plan.n_tensors()];
     for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
-        if let Arm::Rtvq { base_bits, .. } = a.arm {
-            let base = mean_flat(&taus, tensor)?;
-            let qbase = GroupQuantized::quantize(&base, base_bits, tensor.group)?;
-            base_hats[l] = Some(qbase.dequantize());
-            builder.add_group(&plan::base_section_name(&tensor.name), &qbase)?;
+        match a.arm {
+            Arm::Rtvq { base_bits, .. } => {
+                let base = mean_flat(&taus, tensor)?;
+                let qbase = GroupQuantized::quantize(&base, base_bits, tensor.group)?;
+                base_hats[l] = Some(qbase.dequantize());
+                builder.add_group(&plan::base_section_name(&tensor.name), &qbase)?;
+            }
+            Arm::Tall { .. } => mtls[l] = Some(sum_flat(&taus, tensor)?),
+            Arm::Tvq { .. } | Arm::Dare { .. } => {}
         }
     }
     for (t, task_name) in plan.task_names.iter().enumerate() {
         for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
             let flat = padded_flat(&taus[t], &tensor.name, tensor.padded())?;
-            let gq = match a.arm {
-                Arm::Tvq { bits } => GroupQuantized::quantize(&flat, bits, tensor.group)?,
+            let name = plan::task_section_name(task_name, &tensor.name);
+            match a.arm {
+                Arm::Tvq { bits } => {
+                    builder
+                        .add_group(&name, &GroupQuantized::quantize(&flat, bits, tensor.group)?)?;
+                }
                 Arm::Rtvq { offset_bits, .. } => {
                     let base_hat =
                         base_hats[l].as_ref().expect("base quantized above for rtvq arms");
-                    quantize_offset(&flat, base_hat, offset_bits, tensor.group)?
+                    builder.add_group(
+                        &name,
+                        &quantize_offset(&flat, base_hat, offset_bits, tensor.group)?,
+                    )?;
                 }
-            };
-            builder.add_group(&plan::task_section_name(task_name, &tensor.name), &gq)?;
+                Arm::Dare { .. } | Arm::Tall { .. } => {
+                    let s = sparse_section(a.arm, tensor, t, &flat, mtls[l].as_deref())?;
+                    builder.add_sparse(&name, &s)?;
+                }
+            }
         }
     }
     let summary = builder.write(path)?;
@@ -269,14 +411,17 @@ pub fn build_planned_registry<P: AsRef<std::path::Path>>(
     Ok((plan, summary))
 }
 
-/// Fused dequantize-and-merge straight from a planned registry's kind-2
+/// Fused dequantize-and-merge straight from a planned registry's payload
 /// sections: `theta_pre + sum_t lams[t] * tau_hat_t`, tensor by tensor,
 /// without materializing any per-task f32 task vector.
 ///
 /// `tasks` selects a subset (all tasks when `None`); `lams` must have one
 /// coefficient per *selected* task.  TVQ-arm tensors accumulate through
 /// [`dequant_merge_flat`]; RTVQ-arm tensors fold the shared base in once
-/// scaled by `sum(lams)` via [`dequant_merge_rtvq_flat`].
+/// scaled by `sum(lams)` via [`dequant_merge_rtvq_flat`]; sparse-arm
+/// (DARE / TALL) tensors scatter-accumulate only their survivors via
+/// [`SparseGroupQuantized::axpy_into`] — masked-out weights never touch
+/// the accumulator.
 pub fn fused_merge(
     reg: &Registry,
     pre: &Checkpoint,
@@ -328,16 +473,27 @@ pub fn fused_merge(
             );
         }
         let pre_flat = padded_flat(pre, &tensor.name, tensor.padded())?;
-        let sections: Vec<GroupQuantized> = indices
-            .iter()
-            .map(|&t| reg.load_planned_task_section(t, l))
-            .collect::<Result<_>>()?;
-        let refs: Vec<&GroupQuantized> = sections.iter().collect();
         match a.arm {
-            Arm::Tvq { .. } => dequant_merge_flat(&pre_flat, &refs, lams, &mut buf)?,
-            Arm::Rtvq { .. } => {
-                let base = reg.load_planned_base_section(l)?;
-                dequant_merge_rtvq_flat(&pre_flat, &base, &refs, lams, &mut buf)?
+            Arm::Tvq { .. } | Arm::Rtvq { .. } => {
+                let sections: Vec<GroupQuantized> = indices
+                    .iter()
+                    .map(|&t| reg.load_planned_task_section(t, l))
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&GroupQuantized> = sections.iter().collect();
+                match a.arm {
+                    Arm::Tvq { .. } => dequant_merge_flat(&pre_flat, &refs, lams, &mut buf)?,
+                    _ => {
+                        let base = reg.load_planned_base_section(l)?;
+                        dequant_merge_rtvq_flat(&pre_flat, &base, &refs, lams, &mut buf)?
+                    }
+                }
+            }
+            Arm::Dare { .. } | Arm::Tall { .. } => {
+                buf.clear();
+                buf.extend_from_slice(&pre_flat);
+                for (&t, &lam) in indices.iter().zip(lams) {
+                    reg.load_planned_sparse_section(t, l)?.axpy_into(lam, &mut buf);
+                }
             }
         }
         buf.truncate(tensor.numel());
@@ -388,6 +544,8 @@ mod tests {
             group: 256,
             tvq_bits: vec![1, 2, 3, 4, 6],
             rtvq_arms: vec![(3, 1), (3, 2), (4, 2)],
+            dare_arms: vec![],
+            tall_arms: vec![],
         }
     }
 
@@ -420,6 +578,7 @@ mod tests {
         let bits_of = |a: &Assignment| match a.arm {
             Arm::Tvq { bits } => bits,
             Arm::Rtvq { offset_bits, .. } => offset_bits,
+            Arm::Dare { bits, .. } | Arm::Tall { bits, .. } => bits,
         };
         let quiet = bits_of(&plan.assignments[0]); // std 0.002
         let loud = bits_of(&plan.assignments[3]); // std 0.05
@@ -464,6 +623,68 @@ mod tests {
         want_sub.axpy(0.4, &reg.load_task_vector(0).unwrap()).unwrap();
         want_sub.axpy(0.3, &reg.load_task_vector(2).unwrap()).unwrap();
         assert!(sub.l2_dist(&want_sub).unwrap() < 1e-4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mask_helpers_are_deterministic_and_well_formed() {
+        // DARE: same (name, task, rate) -> same mask; different task ->
+        // different mask (overwhelmingly); indices ascending and unique.
+        let a = dare_keep_indices("blk00/w", 0, 90, 512, 52);
+        let b = dare_keep_indices("blk00/w", 0, 90, 512, 52);
+        assert_eq!(a, b, "dare mask must be deterministic");
+        assert_eq!(a.len(), 52);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "ascending + unique");
+        assert!(*a.last().unwrap() < 512);
+        let c = dare_keep_indices("blk00/w", 1, 90, 512, 52);
+        assert_ne!(a, c, "different tasks must get different masks");
+
+        // TALL: the top-k by |tau|/|mtl - tau| are kept.
+        let flat = [0.0f32, 5.0, 0.1, -4.0, 0.2, 0.0];
+        let mtl = [1.0f32, 5.5, 3.0, -4.1, 0.25, 0.0];
+        let keep = tall_keep_indices(&flat, &mtl, 3);
+        // Scores: idx1 = 5/0.5 = 10, idx3 = 4/0.1 = 40, idx4 = 0.2/0.05 = 4.
+        assert_eq!(keep, vec![1, 3, 4]);
+        assert_eq!(tall_keep_indices(&flat, &mtl, 1), vec![3]);
+    }
+
+    #[test]
+    fn sparse_plan_roundtrips_byte_exact_through_registry() {
+        let (pre, fts) = hetero_suite(3, 25);
+        // Force sparse arms everywhere: the candidate set has no dense arm.
+        let cfg = PlannerConfig {
+            group: 256,
+            tvq_bits: vec![],
+            rtvq_arms: vec![],
+            dare_arms: vec![(75, 3)],
+            tall_arms: vec![(25, 4), (50, 2)],
+        };
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let budget = min_feasible_bytes(&profile) * 2;
+        let dir = tmp("sparse_exact");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("zoo.qtvc");
+        let (plan, summary) = build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+        assert!(plan.has_sparse_arms());
+        assert_eq!(summary.file_bytes, plan.planned_file_bytes());
+        assert_eq!(summary.file_bytes, std::fs::metadata(&path).unwrap().len());
+
+        // The registry reopens as v4 with the same plan, and the fused
+        // path agrees with the lazy reconstruction path.
+        let reg = Registry::open(&path).unwrap();
+        assert_eq!(reg.version(), 4);
+        assert_eq!(reg.plan().unwrap(), &plan);
+        let lams = [0.5f32, 0.2, 0.3];
+        let mut want = pre.clone();
+        for (t, &lam) in lams.iter().enumerate() {
+            want.axpy(lam, &reg.load_task_vector(t).unwrap()).unwrap();
+        }
+        let got = fused_merge(&reg, &pre, &lams, None).unwrap();
+        assert!(
+            got.l2_dist(&want).unwrap() < 1e-4,
+            "sparse fused path diverged: {}",
+            got.l2_dist(&want).unwrap()
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -2,55 +2,48 @@
 //! planner, and the exact byte arithmetic the solver optimizes against.
 //!
 //! A plan assigns every tensor (layer) of the task suite one quantization
-//! **arm**: either independent per-task group quantization at some bit
-//! width ([`Arm::Tvq`]) or a shared group-quantized base plus per-task
-//! low-bit offsets ([`Arm::Rtvq`], the paper's Section 4.3 decomposition
-//! applied per layer).  The registry writer compiles a plan into kind-2
-//! `GroupQuantized` sections — one per `(task, tensor)` slot plus one per
-//! RTVQ-arm base — and embeds the plan itself as the kind-3 metadata
-//! section so readers can map sections back to slots and reconstruct
-//! tensor shapes (group payloads alone carry none).
+//! **arm**: independent per-task group quantization ([`Arm::Tvq`]), a
+//! shared group-quantized base plus per-task low-bit offsets
+//! ([`Arm::Rtvq`], the paper's Section 4.3 decomposition applied per
+//! layer), or one of the sparse families — DARE drop-and-rescale
+//! ([`Arm::Dare`], arXiv 2402.09997) and TALL-mask task localization
+//! ([`Arm::Tall`], arXiv 2405.07813) — where masked-out weights cost 0
+//! bits and only the survivors carry quantized codes.  The registry
+//! writer compiles a plan into kind-2 `GroupQuantized` / kind-4
+//! `SparseGroupQuantized` sections and embeds the plan itself as the
+//! kind-3 metadata section so readers can map sections back to
+//! `(task, tensor)` slots and reconstruct tensor shapes.
 //!
-//! # Plan wire format (kind-3 section body)
-//!
-//! All integers little-endian:
-//!
-//! ```text
-//!   version   u8  = 1
-//!   budget    u64 (bytes the plan was solved under)
-//!   task_cnt  u32, then per task:  name_len u32, name bytes
-//!   tensor_cnt u32, then per tensor:
-//!     name_len u32, name bytes
-//!     ndim u32, dims u64 * ndim
-//!     group u64                       (per-group quantization width)
-//!     arm_kind u8 (0 tvq | 1 rtvq), b1 u8, b2 u8
-//!     cost u64                        (exact bytes this arm adds)
-//!     error f64                       (probed sum-of-squares error)
-//! ```
-//!
-//! The body size depends only on names, shapes and counts — never on
-//! which arms were chosen — so the solver can account for the plan
-//! section itself exactly before solving.
+//! The normative byte-level layout of the plan body (wire v1 dense-only,
+//! v2 adds the sparse arm kinds) and of every section kind lives in
+//! `docs/WIRE_FORMAT.md`; this module implements it.  One property the
+//! solver depends on: the plan body size is a function of names, shapes
+//! and counts only — never of which arms were chosen — so the plan
+//! section is accounted exactly *before* solving.
 //!
 //! # Exact cost model
 //!
 //! Every candidate arm is priced in **real file bytes**, not ideal bits:
-//! packed codes + per-group scale/zp pairs + the offset-table rows of the
-//! sections the arm creates (and the base section, for RTVQ arms).
-//! [`PackPlan::planned_file_bytes`] is therefore a byte-exact prediction
-//! of the registry file the writer emits; `write_planned_registry`
-//! enforces the equality.
+//! packed codes + per-group scale/zp pairs + bitmasks (sparse arms) + the
+//! offset-table rows of the sections the arm creates (and the base
+//! section, for RTVQ arms).  [`PackPlan::planned_file_bytes`] is
+//! therefore a byte-exact prediction of the registry file the writer
+//! emits; `write_planned_registry` enforces the equality.
 
 use std::collections::HashSet;
 
 use anyhow::{bail, Result};
 
-use crate::registry::container::Cursor;
+use crate::registry::container::{Cursor, PayloadKind};
 
 /// Name of the kind-3 plan-metadata section in the registry index.
 pub const PLAN_SECTION_NAME: &str = "__plan__";
-/// Wire version of the plan body.
+/// Wire version of dense-arms-only plan bodies.
 pub const PLAN_WIRE_VERSION: u8 = 1;
+/// Wire version of plan bodies that use sparse (DARE / TALL) arms; the
+/// layout is byte-identical to v1, v2 merely admits arm kinds 2 and 3.
+/// Readers accept both.
+pub const PLAN_WIRE_VERSION_SPARSE: u8 = 2;
 /// Shape-sanity cap shared with the checkpoint payload decoder.
 const MAX_NDIM: usize = 16;
 
@@ -63,6 +56,17 @@ pub enum Arm {
     /// plus per-task offsets at `offset_bits`, with error correction:
     /// offsets are computed against the *dequantized* base.
     Rtvq { base_bits: u8, offset_bits: u8 },
+    /// DARE sparsify-then-quantize: a deterministic pseudo-random
+    /// `drop_pct`% of each task's entries are dropped, survivors are
+    /// rescaled by `dense/survivors` (the unbiased 1/(1-p)) and group-
+    /// quantized at `bits`.  Stored as a kind-4 sparse section per task.
+    Dare { drop_pct: u8, bits: u8 },
+    /// TALL-mask-localized allocation: per task, the `keep_pct`% of
+    /// entries with the highest task-localization score
+    /// |tau_t| / |tau_mtl - tau_t| (computed from the multi-task vector)
+    /// survive and are group-quantized at `bits`; the rest are stored at
+    /// 0 bits.  Stored as a kind-4 sparse section per task.
+    Tall { keep_pct: u8, bits: u8 },
 }
 
 impl Arm {
@@ -72,15 +76,53 @@ impl Arm {
             Arm::Rtvq { base_bits, offset_bits } => {
                 format!("RTVQ-B{base_bits}O{offset_bits}")
             }
+            Arm::Dare { drop_pct, bits } => format!("DARE-D{drop_pct}B{bits}"),
+            Arm::Tall { keep_pct, bits } => format!("TALL-K{keep_pct}B{bits}"),
+        }
+    }
+
+    /// True for the sparse families (kind-4 sections, plan wire v2).
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Arm::Dare { .. } | Arm::Tall { .. })
+    }
+
+    /// Exact survivor count per task section for a tensor of `padded`
+    /// flat elements — pure integer arithmetic shared by the probe, the
+    /// cost model and the writer, so all three agree to the byte.
+    /// `None` for dense arms.
+    pub fn survivors(&self, padded: usize) -> Option<usize> {
+        match *self {
+            Arm::Dare { drop_pct, .. } => {
+                Some(padded - padded * drop_pct as usize / 100)
+            }
+            Arm::Tall { keep_pct, .. } => {
+                Some((padded * keep_pct as usize / 100).max(1))
+            }
+            Arm::Tvq { .. } | Arm::Rtvq { .. } => None,
+        }
+    }
+
+    /// Survivor rescale factor: DARE's unbiased `dense/kept`; 1.0 for
+    /// TALL masks (localization keeps values as-is).
+    pub fn rescale(&self, padded: usize, survivors: usize) -> f32 {
+        match self {
+            Arm::Dare { .. } => padded as f32 / survivors as f32,
+            _ => 1.0,
         }
     }
 
     fn check(&self) -> Result<()> {
         let ok = |b: u8| (1..=8).contains(&b);
+        let pct = |p: u8| (1..=99).contains(&p);
         match *self {
             Arm::Tvq { bits } if ok(bits) => Ok(()),
             Arm::Rtvq { base_bits, offset_bits } if ok(base_bits) && ok(offset_bits) => Ok(()),
-            other => bail!("pack plan arm {other:?} has bits outside 1..=8"),
+            Arm::Dare { drop_pct, bits } if ok(bits) && pct(drop_pct) => Ok(()),
+            Arm::Tall { keep_pct, bits } if ok(bits) && pct(keep_pct) => Ok(()),
+            other => bail!(
+                "pack plan arm {other:?} has bits outside 1..=8 or percentage \
+                 outside 1..=99"
+            ),
         }
     }
 }
@@ -122,13 +164,26 @@ pub struct Assignment {
     pub error: f64,
 }
 
-/// Where one expected kind-2 section slots into the plan.
+/// Where one expected payload section slots into the plan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SectionRole {
     /// Shared base for tensor `tensor` (RTVQ arms only).
     Base { tensor: usize },
     /// Task `task`'s payload for tensor `tensor`.
     Task { task: usize, tensor: usize },
+}
+
+/// What a payload section must decode to, per the plan's arm for its
+/// slot — returned by [`PackPlan::section_spec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SectionSpec {
+    /// A kind-2 [`GroupQuantized`](crate::quant::GroupQuantized) payload
+    /// of `len` flat elements.
+    Dense { bits: u8, group: usize, len: usize },
+    /// A kind-4 [`SparseGroupQuantized`](crate::quant::SparseGroupQuantized)
+    /// payload: `dense_len` logical elements, exactly `survivors` of them
+    /// stored at `bits`.
+    Sparse { bits: u8, group: usize, dense_len: usize, survivors: usize },
 }
 
 /// A solved bit-allocation: one [`Assignment`] per tensor, under
@@ -149,6 +204,14 @@ pub fn group_payload_bytes(padded: usize, bits: u8, group: usize) -> u64 {
     (17 + (padded / group) * 8 + (padded * bits as usize).div_ceil(8)) as u64
 }
 
+/// Exact encoded size of one kind-4 sparse section body: `dense_len u64
+/// + n_survivors u64 + bitmask` followed by the embedded group payload
+/// of the survivors padded up to a multiple of the group width.
+pub fn sparse_payload_bytes(padded: usize, survivors: usize, bits: u8, group: usize) -> u64 {
+    let k_pad = survivors.div_ceil(group) * group;
+    16 + padded.div_ceil(8) as u64 + group_payload_bytes(k_pad, bits, group)
+}
+
 /// Exact offset-table row size for a section named `name`:
 /// `name_len u32 + name + kind u8 + offset u64 + length u64 + crc u32`.
 pub fn index_row_bytes(name: &str) -> u64 {
@@ -167,17 +230,19 @@ pub fn base_section_name(tensor_name: &str) -> String {
 
 /// Exact bytes arm `arm` adds to the file for `tensor` across
 /// `task_names`: section bodies plus their offset-table rows (plus the
-/// base section and its row for RTVQ arms).
+/// base section and its row for RTVQ arms).  Sparse arms have a fixed,
+/// data-independent survivor count ([`Arm::survivors`]), which is what
+/// keeps this a pure function the solver can price before quantizing.
 pub fn arm_cost_bytes(task_names: &[String], tensor: &PlanTensor, arm: Arm) -> u64 {
     let padded = tensor.padded();
-    let per_task = |bits: u8| -> u64 {
+    let rows = || -> u64 {
         task_names
             .iter()
-            .map(|t| {
-                group_payload_bytes(padded, bits, tensor.group)
-                    + index_row_bytes(&task_section_name(t, &tensor.name))
-            })
+            .map(|t| index_row_bytes(&task_section_name(t, &tensor.name)))
             .sum()
+    };
+    let per_task = |bits: u8| -> u64 {
+        task_names.len() as u64 * group_payload_bytes(padded, bits, tensor.group) + rows()
     };
     match arm {
         Arm::Tvq { bits } => per_task(bits),
@@ -185,6 +250,11 @@ pub fn arm_cost_bytes(task_names: &[String], tensor: &PlanTensor, arm: Arm) -> u
             group_payload_bytes(padded, base_bits, tensor.group)
                 + index_row_bytes(&base_section_name(&tensor.name))
                 + per_task(offset_bits)
+        }
+        Arm::Dare { bits, .. } | Arm::Tall { bits, .. } => {
+            let k = arm.survivors(padded).expect("sparse arm");
+            task_names.len() as u64 * sparse_payload_bytes(padded, k, bits, tensor.group)
+                + rows()
         }
     }
 }
@@ -237,7 +307,9 @@ impl PackPlan {
     }
 
     /// Metadata-free code bytes — the planned analog of
-    /// [`StorageReport::ideal`](crate::quant::StorageReport::ideal).
+    /// [`StorageReport::ideal`](crate::quant::StorageReport::ideal).  For
+    /// sparse arms the bitmask is payload (1 bit per dense element), the
+    /// per-group affine params are metadata.
     pub fn ideal_code_bytes(&self) -> u64 {
         let n_tasks = self.n_tasks();
         self.tensors
@@ -251,9 +323,21 @@ impl PackPlan {
                     Arm::Rtvq { base_bits, offset_bits } => {
                         codes(base_bits) + n_tasks as u64 * codes(offset_bits)
                     }
+                    Arm::Dare { bits, .. } | Arm::Tall { bits, .. } => {
+                        let k = a.arm.survivors(padded).expect("sparse arm");
+                        n_tasks as u64
+                            * (padded.div_ceil(8) + (k * bits as usize).div_ceil(8)) as u64
+                    }
                 }
             })
             .sum()
+    }
+
+    /// True when any tensor uses a sparse (DARE / TALL) arm — such plans
+    /// serialize at wire v2 and their registries carry kind-4 sections
+    /// (QTVC v4).
+    pub fn has_sparse_arms(&self) -> bool {
+        self.assignments.iter().any(|a| a.arm.is_sparse())
     }
 
     /// Total probed reconstruction error (sum of squared L2 across all
@@ -262,8 +346,9 @@ impl PackPlan {
         self.assignments.iter().map(|a| a.error).sum()
     }
 
-    /// Every kind-2 section this plan expects, with its role — the
-    /// registry open path validates the file against exactly this set.
+    /// Every payload section this plan expects (kind-2 dense / kind-4
+    /// sparse), with its role — the registry open path validates the
+    /// file's section set and per-row kinds against exactly this.
     pub fn expected_sections(&self) -> Vec<(String, SectionRole)> {
         let mut out = Vec::new();
         for (l, (tensor, a)) in self.tensors.iter().zip(&self.assignments).enumerate() {
@@ -282,21 +367,43 @@ impl PackPlan {
         out
     }
 
-    /// The (bits, group) pair a kind-2 section must decode to under this
-    /// plan, by role — the lazy loader cross-checks decoded geometry.
-    pub fn section_geometry(&self, role: SectionRole) -> (u8, usize, usize) {
-        let (l, bits) = match role {
-            SectionRole::Base { tensor } => match self.assignments[tensor].arm {
-                Arm::Rtvq { base_bits, .. } => (tensor, base_bits),
-                Arm::Tvq { .. } => unreachable!("base role on a TVQ arm"),
-            },
-            SectionRole::Task { tensor, .. } => match self.assignments[tensor].arm {
-                Arm::Tvq { bits } => (tensor, bits),
-                Arm::Rtvq { offset_bits, .. } => (tensor, offset_bits),
-            },
+    /// The exact payload a section must decode to under this plan, by
+    /// role — the lazy loader cross-checks decoded geometry against it.
+    pub fn section_spec(&self, role: SectionRole) -> SectionSpec {
+        let (l, arm) = match role {
+            SectionRole::Base { tensor } => (tensor, self.assignments[tensor].arm),
+            SectionRole::Task { tensor, .. } => (tensor, self.assignments[tensor].arm),
         };
         let t = &self.tensors[l];
-        (bits, t.group, t.padded())
+        let padded = t.padded();
+        let dense = |bits| SectionSpec::Dense { bits, group: t.group, len: padded };
+        match (role, arm) {
+            (SectionRole::Base { .. }, Arm::Rtvq { base_bits, .. }) => dense(base_bits),
+            (SectionRole::Base { .. }, other) => {
+                unreachable!("base role on a non-RTVQ arm {other:?}")
+            }
+            (_, Arm::Tvq { bits }) => dense(bits),
+            (_, Arm::Rtvq { offset_bits, .. }) => dense(offset_bits),
+            (_, arm @ (Arm::Dare { bits, .. } | Arm::Tall { bits, .. })) => {
+                SectionSpec::Sparse {
+                    bits,
+                    group: t.group,
+                    dense_len: padded,
+                    survivors: arm.survivors(padded).expect("sparse arm"),
+                }
+            }
+        }
+    }
+
+    /// The index-entry kind a section of `role` must carry: kind-2 group
+    /// payloads for dense arms and bases, kind-4 sparse payloads for
+    /// DARE / TALL task sections.  The open path validates the file's
+    /// offset table against this before any payload is read.
+    pub fn expected_section_kind(&self, role: SectionRole) -> PayloadKind {
+        match self.section_spec(role) {
+            SectionSpec::Dense { .. } => PayloadKind::Group,
+            SectionSpec::Sparse { .. } => PayloadKind::SparseGroup,
+        }
     }
 
     /// Structural validation: counts, name rules, arm ranges, and stored
@@ -359,10 +466,16 @@ impl PackPlan {
         Ok(())
     }
 
-    /// Serialize to the kind-3 section body.
+    /// Serialize to the kind-3 section body.  Dense-only plans stay at
+    /// wire v1 so files written by older builds and this one are
+    /// byte-identical; plans with sparse arms serialize at v2.
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::new();
-        buf.push(PLAN_WIRE_VERSION);
+        buf.push(if self.has_sparse_arms() {
+            PLAN_WIRE_VERSION_SPARSE
+        } else {
+            PLAN_WIRE_VERSION
+        });
         buf.extend_from_slice(&self.budget_bytes.to_le_bytes());
         buf.extend_from_slice(&(self.task_names.len() as u32).to_le_bytes());
         for t in &self.task_names {
@@ -381,6 +494,8 @@ impl PackPlan {
             let (kind, b1, b2) = match a.arm {
                 Arm::Tvq { bits } => (0u8, bits, 0u8),
                 Arm::Rtvq { base_bits, offset_bits } => (1u8, base_bits, offset_bits),
+                Arm::Dare { drop_pct, bits } => (2u8, bits, drop_pct),
+                Arm::Tall { keep_pct, bits } => (3u8, bits, keep_pct),
             };
             buf.push(kind);
             buf.push(b1);
@@ -395,12 +510,15 @@ impl PackPlan {
         buf
     }
 
-    /// Decode and fully validate a kind-3 section body.
+    /// Decode and fully validate a kind-3 section body (wire v1 or v2).
     pub fn decode(buf: &[u8]) -> Result<PackPlan> {
         let mut c = Cursor::new(buf);
         let ver = c.u8()?;
-        if ver != PLAN_WIRE_VERSION {
-            bail!("pack plan wire version {ver} (this build reads v{PLAN_WIRE_VERSION})");
+        if ver != PLAN_WIRE_VERSION && ver != PLAN_WIRE_VERSION_SPARSE {
+            bail!(
+                "pack plan wire version {ver} (this build reads v{PLAN_WIRE_VERSION} \
+                 and v{PLAN_WIRE_VERSION_SPARSE})"
+            );
         }
         let budget_bytes = c.u64()?;
         let task_cnt = c.u32()? as usize;
@@ -444,6 +562,12 @@ impl PackPlan {
                     Arm::Tvq { bits: b1 }
                 }
                 1 => Arm::Rtvq { base_bits: b1, offset_bits: b2 },
+                2 | 3 if ver == PLAN_WIRE_VERSION => bail!(
+                    "pack plan tensor {name:?}: sparse arm kind {kind} in a v1 \
+                     plan body (sparse arms require wire v2)"
+                ),
+                2 => Arm::Dare { drop_pct: b2, bits: b1 },
+                3 => Arm::Tall { keep_pct: b2, bits: b1 },
                 other => bail!("pack plan tensor {name:?}: unknown arm kind {other}"),
             };
             let cost_bytes = c.u64()?;
@@ -538,15 +662,22 @@ mod tests {
             .iter()
             .any(|(n, r)| n == "task01/blk00/w"
                 && *r == SectionRole::Task { task: 1, tensor: 0 }));
-        // Geometry lookups agree with the arms.
-        assert_eq!(plan.section_geometry(SectionRole::Base { tensor: 1 }), (3, 33, 33));
+        // Spec lookups agree with the arms.
         assert_eq!(
-            plan.section_geometry(SectionRole::Task { task: 0, tensor: 0 }),
-            (4, 128, 512)
+            plan.section_spec(SectionRole::Base { tensor: 1 }),
+            SectionSpec::Dense { bits: 3, group: 33, len: 33 }
         );
         assert_eq!(
-            plan.section_geometry(SectionRole::Task { task: 0, tensor: 1 }),
-            (2, 33, 33)
+            plan.section_spec(SectionRole::Task { task: 0, tensor: 0 }),
+            SectionSpec::Dense { bits: 4, group: 128, len: 512 }
+        );
+        assert_eq!(
+            plan.section_spec(SectionRole::Task { task: 0, tensor: 1 }),
+            SectionSpec::Dense { bits: 2, group: 33, len: 33 }
+        );
+        assert_eq!(
+            plan.expected_section_kind(SectionRole::Task { task: 0, tensor: 0 }),
+            PayloadKind::Group
         );
     }
 
@@ -589,6 +720,124 @@ mod tests {
         let mut bad = good.clone();
         bad.assignments.pop();
         assert!(bad.validate().is_err(), "assignment count");
+    }
+
+    fn sparse_plan() -> PackPlan {
+        let task_names = vec!["task00".to_string(), "task01".to_string()];
+        let tensors = vec![
+            PlanTensor { name: "blk00/w".into(), shape: vec![32, 16], group: 128 },
+            PlanTensor { name: "loc00/w".into(), shape: vec![30, 10], group: 100 },
+        ];
+        let arms = [Arm::Dare { drop_pct: 90, bits: 4 }, Arm::Tall { keep_pct: 25, bits: 3 }];
+        let assignments = tensors
+            .iter()
+            .zip(arms)
+            .map(|(t, arm)| Assignment {
+                arm,
+                cost_bytes: arm_cost_bytes(&task_names, t, arm),
+                error: 1.5,
+            })
+            .collect();
+        PackPlan { budget_bytes: 1 << 19, task_names, tensors, assignments }
+    }
+
+    #[test]
+    fn sparse_arm_survivor_arithmetic_is_exact() {
+        let dare = Arm::Dare { drop_pct: 90, bits: 4 };
+        assert_eq!(dare.survivors(512), Some(512 - 512 * 90 / 100));
+        assert_eq!(dare.survivors(1), Some(1), "tiny tensors keep >= 1 survivor");
+        let tall = Arm::Tall { keep_pct: 25, bits: 3 };
+        assert_eq!(tall.survivors(1000), Some(250));
+        assert_eq!(tall.survivors(3), Some(1));
+        assert!((dare.rescale(512, 52) - 512.0 / 52.0).abs() < 1e-6);
+        assert_eq!(tall.rescale(1000, 250), 1.0);
+        assert_eq!(Arm::Tvq { bits: 4 }.survivors(512), None);
+    }
+
+    #[test]
+    fn sparse_plan_roundtrips_at_wire_v2() {
+        let plan = sparse_plan();
+        plan.validate().unwrap();
+        assert!(plan.has_sparse_arms());
+        let wire = plan.encode();
+        assert_eq!(wire[0], PLAN_WIRE_VERSION_SPARSE);
+        assert_eq!(
+            wire.len() as u64,
+            plan_meta_bytes(&plan.task_names, &plan.tensors),
+            "plan body size must stay arm-independent"
+        );
+        let back = PackPlan::decode(&wire).unwrap();
+        assert_eq!(back, plan);
+        // Dense plans still serialize at v1 (byte-compatible with PR 2).
+        assert_eq!(sample_plan().encode()[0], PLAN_WIRE_VERSION);
+        // Spec lookups carry the survivor geometry.
+        assert_eq!(
+            plan.section_spec(SectionRole::Task { task: 1, tensor: 0 }),
+            SectionSpec::Sparse { bits: 4, group: 128, dense_len: 512, survivors: 52 }
+        );
+        assert_eq!(
+            plan.expected_section_kind(SectionRole::Task { task: 1, tensor: 0 }),
+            PayloadKind::SparseGroup
+        );
+    }
+
+    #[test]
+    fn sparse_arm_kind_rejected_in_v1_body() {
+        let mut wire = sparse_plan().encode();
+        assert_eq!(wire[0], PLAN_WIRE_VERSION_SPARSE);
+        wire[0] = PLAN_WIRE_VERSION;
+        let err = PackPlan::decode(&wire).unwrap_err().to_string();
+        assert!(err.contains("wire v2"), "got: {err}");
+    }
+
+    #[test]
+    fn sparse_payload_bytes_matches_real_encoding() {
+        use crate::quant::SparseGroupQuantized;
+        use crate::registry::container::encode_sparse_payload;
+        let mut rng = Rng::new(43);
+        for (padded, arm) in [
+            (512usize, Arm::Dare { drop_pct: 90, bits: 4 }),
+            (512, Arm::Tall { keep_pct: 25, bits: 3 }),
+            (100, Arm::Tall { keep_pct: 12, bits: 2 }),
+        ] {
+            let group = 64usize;
+            let mut v = vec![0.0f32; padded];
+            rng.fill_normal(&mut v, 0.05);
+            let k = arm.survivors(padded).unwrap();
+            let keep: Vec<usize> = (0..k).collect();
+            let (bits, pct) = match arm {
+                Arm::Dare { drop_pct, bits } => (bits, drop_pct),
+                Arm::Tall { keep_pct, bits } => (bits, keep_pct),
+                _ => unreachable!(),
+            };
+            let s = SparseGroupQuantized::quantize_indices(
+                &v,
+                &keep,
+                arm.rescale(padded, k),
+                bits,
+                group,
+            )
+            .unwrap();
+            assert_eq!(
+                encode_sparse_payload(&s).len() as u64,
+                sparse_payload_bytes(padded, k, bits, group),
+                "padded={padded} pct={pct} bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_sparse_percentages() {
+        let mut bad = sparse_plan();
+        bad.assignments[0].arm = Arm::Dare { drop_pct: 0, bits: 4 };
+        bad.assignments[0].cost_bytes =
+            arm_cost_bytes(&bad.task_names, &bad.tensors[0], bad.assignments[0].arm);
+        assert!(bad.validate().is_err(), "drop_pct 0");
+        let mut bad = sparse_plan();
+        bad.assignments[1].arm = Arm::Tall { keep_pct: 100, bits: 3 };
+        bad.assignments[1].cost_bytes =
+            arm_cost_bytes(&bad.task_names, &bad.tensors[1], bad.assignments[1].arm);
+        assert!(bad.validate().is_err(), "keep_pct 100");
     }
 
     #[test]

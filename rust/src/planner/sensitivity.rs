@@ -7,21 +7,29 @@
 //! induces (the task-vector range varies per layer), so a fixed byte
 //! budget is better spent unevenly.  The probe quantizes each layer's
 //! flat per-task slices under each candidate arm — per-task group
-//! quantization ([`Arm::Tvq`]) and shared-base/residual splits
+//! quantization ([`Arm::Tvq`]), shared-base/residual splits
 //! ([`Arm::Rtvq`], error-corrected exactly like
-//! [`Rtvq::quantize`](crate::quant::Rtvq::quantize)) — and records the
+//! [`Rtvq::quantize`](crate::quant::Rtvq::quantize)), and the sparse
+//! families ([`Arm::Dare`] drop-and-rescale, [`Arm::Tall`] task
+//! localization against the multi-task vector) — and records the
 //! sum-of-squares reconstruction error next to the arm's exact file-byte
 //! cost from [`arm_cost_bytes`].  The solver ([`super::solve`]) then
 //! trades these off greedily.
+//!
+//! Sparse arms are measured on exactly what would be served: survivors
+//! rescaled (DARE) or kept as-is (TALL), masked-out weights at 0 — so a
+//! DARE arm's SSE includes its rescale distortion, which is why the
+//! frontier only picks it where dropping genuinely beats low-bit codes.
 
 use anyhow::{bail, Result};
 
 use std::collections::HashMap;
 
 use super::plan::{arm_cost_bytes, Arm, PlanTensor};
-use super::{mean_flat, padded_flat, quantize_offset, PlannerConfig};
+use super::{mean_flat, padded_flat, quantize_offset, sparse_section, PlannerConfig};
 use crate::checkpoint::Checkpoint;
 use crate::quant::GroupQuantized;
+use crate::util::stats::sse;
 
 /// One probed candidate for one tensor.
 #[derive(Clone, Copy, Debug)]
@@ -46,16 +54,6 @@ pub struct TensorProfile {
 pub struct SensitivityProfile {
     pub task_names: Vec<String>,
     pub profiles: Vec<TensorProfile>,
-}
-
-fn sse(a: &[f32], b: &[f32]) -> f64 {
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| {
-            let d = (x - y) as f64;
-            d * d
-        })
-        .sum()
 }
 
 /// Probe every tensor of the suite under every candidate arm of `cfg`.
@@ -102,8 +100,9 @@ pub fn probe(
         for &bits in &cfg.tvq_bits {
             let mut error = 0.0;
             for flat in &flats {
-                let q = GroupQuantized::quantize(flat, bits, group)?;
-                error += sse(flat, &q.dequantize());
+                // Shared helper (quant::group) — the same pad+quantize+SSE
+                // path the granularity ablation measures with.
+                error += GroupQuantized::quantize(flat, bits, group)?.sse_against(flat);
             }
             let arm = Arm::Tvq { bits };
             arms.push(ArmStat {
@@ -131,6 +130,44 @@ pub fn probe(
                 error += sse(flat, &rec);
             }
             let arm = Arm::Rtvq { base_bits, offset_bits };
+            arms.push(ArmStat {
+                arm,
+                cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
+                error,
+            });
+        }
+        // Sparse arms: quantize through the same sparse_section path the
+        // writer packs, and measure the error of the *served* dense
+        // reconstruction (zeros at masked-out weights).  The multi-task
+        // vector is summed from the flats already in scope (same task
+        // order and element order as the writer's sum_flat, so the masks
+        // stay bit-identical).
+        let mtl = if cfg.tall_arms.is_empty() {
+            None
+        } else {
+            let mut acc = vec![0.0f32; padded];
+            for flat in &flats {
+                for (a, &x) in acc.iter_mut().zip(flat) {
+                    *a += x;
+                }
+            }
+            Some(acc)
+        };
+        let sparse_candidates = cfg
+            .dare_arms
+            .iter()
+            .map(|&(drop_pct, bits)| Arm::Dare { drop_pct, bits })
+            .chain(
+                cfg.tall_arms
+                    .iter()
+                    .map(|&(keep_pct, bits)| Arm::Tall { keep_pct, bits }),
+            );
+        for arm in sparse_candidates {
+            let mut error = 0.0;
+            for (t, flat) in flats.iter().enumerate() {
+                let s = sparse_section(arm, &tensor, t, flat, mtl.as_deref())?;
+                error += sse(flat, &s.dequantize());
+            }
             arms.push(ArmStat {
                 arm,
                 cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
@@ -189,6 +226,8 @@ mod tests {
             group: 128,
             tvq_bits: vec![2, 4, 8],
             rtvq_arms: vec![],
+            dare_arms: vec![],
+            tall_arms: vec![],
         };
         let prof = probe(&pre, &fts, &cfg).unwrap();
         for p in &prof.profiles {
@@ -214,6 +253,8 @@ mod tests {
             group: 128,
             tvq_bits: vec![2],
             rtvq_arms: vec![(3, 2)],
+            dare_arms: vec![],
+            tall_arms: vec![],
         };
         let prof = probe(&pre, &fts, &cfg).unwrap();
         for p in &prof.profiles {
@@ -226,6 +267,78 @@ mod tests {
                 rtvq.error,
                 tvq2.error
             );
+        }
+    }
+
+    #[test]
+    fn tall_arm_beats_dense_low_bits_on_localized_deltas() {
+        // Each task perturbs its own small subset of weights; TALL's
+        // localization mask keeps exactly those entries, so at a byte
+        // cost comparable to dense 2-bit codes it should reconstruct far
+        // better (the regime arXiv 2405.07813 exploits).
+        let mut rng = Rng::new(9);
+        let mut pre = Checkpoint::new();
+        pre.insert("loc/w", Tensor::randn(&[64, 32], 0.3, &mut rng));
+        let n = 64 * 32;
+        let fts: Vec<Checkpoint> = (0..4)
+            .map(|_| {
+                let mut ft = pre.clone();
+                for (_, t) in ft.iter_mut() {
+                    for v in t.data_mut().iter_mut().take(n) {
+                        if rng.f32() < 0.08 {
+                            *v += rng.normal_f32(0.1);
+                        }
+                    }
+                }
+                ft
+            })
+            .collect();
+        let cfg = PlannerConfig {
+            group: 256,
+            tvq_bits: vec![2],
+            rtvq_arms: vec![],
+            dare_arms: vec![],
+            tall_arms: vec![(25, 4)],
+        };
+        let prof = probe(&pre, &fts, &cfg).unwrap();
+        let p = &prof.profiles[0];
+        let tvq2 = &p.arms[0];
+        let tall = &p.arms[1];
+        assert!(matches!(tall.arm, Arm::Tall { .. }));
+        assert!(
+            tall.error < tvq2.error,
+            "tall {} should beat dense 2-bit {} on localized deltas",
+            tall.error,
+            tvq2.error
+        );
+        assert!(
+            tall.cost_bytes < tvq2.cost_bytes,
+            "tall mask+25%x4b ({} B) should undercut dense 2-bit ({} B)",
+            tall.cost_bytes,
+            tvq2.cost_bytes
+        );
+    }
+
+    #[test]
+    fn dare_arm_is_probed_with_rescale_distortion() {
+        let (pre, fts) = suite(3, 7);
+        let cfg = PlannerConfig {
+            group: 128,
+            tvq_bits: vec![4],
+            rtvq_arms: vec![],
+            dare_arms: vec![(50, 4)],
+            tall_arms: vec![],
+        };
+        let prof = probe(&pre, &fts, &cfg).unwrap();
+        for p in &prof.profiles {
+            let dare = &p.arms[1];
+            assert!(matches!(dare.arm, Arm::Dare { .. }));
+            // Dropping half of a dense Gaussian tau and rescaling x2 must
+            // cost real error — the probe measures the served vector, not
+            // the merge expectation.
+            assert!(dare.error > p.arms[0].error);
+            assert!(dare.cost_bytes < p.arms[0].cost_bytes);
+            assert!(dare.error.is_finite());
         }
     }
 

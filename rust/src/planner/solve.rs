@@ -251,6 +251,40 @@ mod tests {
     }
 
     #[test]
+    fn dominating_sparse_arm_enters_the_frontier() {
+        // A TALL arm cheaper than dense INT1 with lower error strictly
+        // dominates it: the solver's cheapest plan starts there, and a
+        // generous budget still upgrades away to the high-bit dense arm.
+        let task_names = vec!["task00".to_string()];
+        let tensor = PlanTensor { name: "loc".into(), shape: vec![1024], group: 64 };
+        let mk = |arm: Arm, error: f64| ArmStat {
+            arm,
+            cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
+            error,
+        };
+        let tall = Arm::Tall { keep_pct: 25, bits: 2 };
+        let arms = vec![
+            mk(Arm::Tvq { bits: 1 }, 100.0),
+            mk(tall, 20.0),
+            mk(Arm::Tvq { bits: 4 }, 1.0),
+        ];
+        assert!(
+            arms[1].cost_bytes < arms[0].cost_bytes,
+            "mask + 25% x 2b must undercut dense 1-bit for this test"
+        );
+        let prof = SensitivityProfile {
+            task_names,
+            profiles: vec![TensorProfile { tensor, arms }],
+        };
+        let min = min_feasible_bytes(&prof);
+        let at_min = solve(&prof, min).unwrap();
+        assert_eq!(at_min.assignments[0].arm, tall);
+        assert!(at_min.has_sparse_arms());
+        let roomy = solve(&prof, min * 4).unwrap();
+        assert_eq!(roomy.assignments[0].arm, Arm::Tvq { bits: 4 });
+    }
+
+    #[test]
     fn infeasible_budget_errors_with_minimum() {
         let prof = profile();
         let min = min_feasible_bytes(&prof);

@@ -104,22 +104,10 @@ pub fn quantize_error_storage(t: &Tensor, bits: u8, gran: Granularity) -> Result
             Ok((err.sqrt(), packed.storage_bytes() + 8))
         }
         Granularity::PerGroup(g) => {
-            // Pad the flat vector to a multiple of g (zeros quantize free).
-            let mut data = t.data().to_vec();
-            let padded = data.len().div_ceil(g) * g;
-            data.resize(padded, 0.0);
-            let gq = super::group::GroupQuantized::quantize(&data, bits, g)?;
-            let dq = gq.dequantize();
-            let err: f64 = t
-                .data()
-                .iter()
-                .zip(&dq)
-                .map(|(&x, &y)| {
-                    let d = (x - y) as f64;
-                    d * d
-                })
-                .sum();
-            Ok((err.sqrt(), gq.storage_bytes()))
+            // Shared with the planner's sensitivity probe: pad to a
+            // multiple of g (zeros quantize free), quantize, measure SSE.
+            let gq = super::group::GroupQuantized::quantize_padded(t.data(), bits, g)?;
+            Ok((gq.sse_against(t.data()).sqrt(), gq.storage_bytes()))
         }
         Granularity::PerChannel => {
             let cq = ChannelQuantized::quantize(t, bits)?;
@@ -169,6 +157,27 @@ mod tests {
         let (_, s_chan) = quantize_error_storage(&t, 3, Granularity::PerChannel).unwrap();
         assert!(s_tensor < s_chan);
         assert_eq!(s_group, s_chan); // group=64 == row length here
+    }
+
+    #[test]
+    fn per_group_arm_matches_planner_probe_arithmetic() {
+        // The ablation's per-group path and the planner probe both go
+        // through GroupQuantized::quantize_padded/sse_against now; pin
+        // that the ablation output equals the probe-style computation.
+        let t = tensor_with_hot_row();
+        let g = 48; // deliberately not dividing 8*64
+        let (err, bytes) = quantize_error_storage(&t, 3, Granularity::PerGroup(g)).unwrap();
+        let mut padded = t.data().to_vec();
+        padded.resize(padded.len().div_ceil(g) * g, 0.0);
+        let gq = super::super::group::GroupQuantized::quantize(&padded, 3, g).unwrap();
+        let sse: f64 = t
+            .data()
+            .iter()
+            .zip(gq.dequantize())
+            .map(|(&x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        assert!((err - sse.sqrt()).abs() < 1e-12, "{err} vs {}", sse.sqrt());
+        assert_eq!(bytes, gq.storage_bytes());
     }
 
     #[test]

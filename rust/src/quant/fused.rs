@@ -18,7 +18,7 @@ use super::group::GroupQuantized;
 use super::tvq::QuantizedCheckpoint;
 use crate::checkpoint::Checkpoint;
 
-/// theta_pre + sum_t lams[t] * dq(taus[t]) over named tensors.
+/// `theta_pre + sum_t lams[t] * dq(taus[t])` over named tensors.
 pub fn dequant_merge_checkpoints(
     pre: &Checkpoint,
     taus: &[&QuantizedCheckpoint],

@@ -51,6 +51,32 @@ impl GroupQuantized {
         })
     }
 
+    /// Quantize `data` after zero-padding it up to the next multiple of
+    /// `group` — the shared entry point for callers whose data is not
+    /// already group-aligned (the sensitivity probe pads per plan-tensor
+    /// geometry, the granularity ablation pads ad hoc; both must produce
+    /// byte-identical payloads for the planner's cost model to hold).
+    pub fn quantize_padded(data: &[f32], bits: u8, group: usize) -> Result<Self> {
+        if group == 0 {
+            bail!("group width must be >= 1");
+        }
+        let padded = data.len().div_ceil(group) * group;
+        if padded == data.len() {
+            return Self::quantize(data, bits, group);
+        }
+        let mut v = data.to_vec();
+        v.resize(padded, 0.0);
+        Self::quantize(&v, bits, group)
+    }
+
+    /// Sum of squared reconstruction error against the first `data.len()`
+    /// elements (any zero-padding tail beyond the source is ignored).
+    pub fn sse_against(&self, data: &[f32]) -> f64 {
+        assert!(data.len() <= self.len(), "source longer than quantized vector");
+        let dq = self.dequantize();
+        crate::util::stats::sse(data, &dq[..data.len()])
+    }
+
     pub fn len(&self) -> usize {
         self.codes.len()
     }
@@ -162,6 +188,32 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!(err_g < err_p, "group {err_g} vs per-tensor {err_p}");
+    }
+
+    #[test]
+    fn quantize_padded_pins_manual_padding() {
+        // The sensitivity probe (manual pad to plan geometry) and the
+        // granularity ablation (quantize_padded) must produce the exact
+        // same payload — the planner's byte/error model rides on it.
+        let mut rng = Rng::new(6);
+        for (len, bits, group) in [(100usize, 3u8, 64usize), (512, 2, 512), (7, 4, 16)] {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 0.05);
+            let mut manual = v.clone();
+            manual.resize(len.div_ceil(group) * group, 0.0);
+            let a = GroupQuantized::quantize(&manual, bits, group).unwrap();
+            let b = GroupQuantized::quantize_padded(&v, bits, group).unwrap();
+            assert_eq!(a, b, "len={len} bits={bits} group={group}");
+            // And the shared error helper matches the manual SSE.
+            let dq = a.dequantize();
+            let want: f64 = v
+                .iter()
+                .zip(&dq)
+                .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                .sum();
+            assert!((a.sse_against(&v) - want).abs() < 1e-12);
+        }
+        assert!(GroupQuantized::quantize_padded(&[0.0; 4], 3, 0).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //!   quantization-error correction (Eq. 6).
 //! * [`group`] — per-group quantization of flat parameter vectors, the
 //!   layout consumed by the AOT Pallas dequant-merge artifacts.
+//! * [`sparse`] — bitmask + group-quantized survivors, the payload behind
+//!   the planner's DARE / TALL-mask sparse arms (kind-4 sections).
 //! * [`fused`] — native fused dequantize-and-merge (the L3 hot path).
 //! * [`storage`] — exact storage accounting / effective bits-per-task.
 
@@ -20,6 +22,7 @@ pub mod channel;
 pub mod fused;
 pub mod group;
 pub mod rtvq;
+pub mod sparse;
 pub mod storage;
 pub mod tvq;
 
@@ -28,6 +31,7 @@ pub use bitpack::BitPacked;
 pub use channel::{ChannelQuantized, Granularity};
 pub use group::GroupQuantized;
 pub use rtvq::Rtvq;
+pub use sparse::SparseGroupQuantized;
 pub use storage::StorageReport;
 pub use tvq::{QuantizedCheckpoint, QuantizedTensor, Tvq};
 

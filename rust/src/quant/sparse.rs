@@ -1,0 +1,260 @@
+//! Sparse group quantization: a bitmask over a dense index space plus
+//! group-quantized survivor values.
+//!
+//! This is the payload behind the planner's sparse candidate arms (DARE
+//! drop-and-rescale, arXiv 2402.09997, and TALL-mask task localization,
+//! arXiv 2405.07813): large fractions of a task vector carry no task
+//! information, so masked-out weights are stored at **0 bits** — one mask
+//! bit each — and only the survivors pay for quantized codes.  Survivors
+//! are kept in ascending dense-index order, zero-padded up to a multiple
+//! of the group width, and quantized with the same [`GroupQuantized`]
+//! machinery the dense arms use, so the planner's byte arithmetic stays
+//! exact.
+//!
+//! On disk this is the `QTVC` kind-4 section (see `docs/WIRE_FORMAT.md`);
+//! the wire codec lives in [`crate::registry::container`].
+
+use anyhow::{bail, Result};
+
+use super::group::GroupQuantized;
+
+/// A sparse flat vector: `dense_len` logical f32s of which `n_survivors`
+/// are stored (group-quantized); the rest reconstruct as exactly 0.0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseGroupQuantized {
+    /// Logical (dense, padded) length the mask covers.
+    pub dense_len: usize,
+    /// Number of set bits in `mask` == number of stored survivor values.
+    pub n_survivors: usize,
+    /// LSB-first bitmask, `ceil(dense_len / 8)` bytes; bit `i` set means
+    /// dense index `i` is a survivor.  Bits past `dense_len` must be 0.
+    pub mask: Vec<u8>,
+    /// Survivor values in ascending dense-index order, zero-padded to a
+    /// multiple of `survivors.group` and group-quantized.
+    pub survivors: GroupQuantized,
+}
+
+impl SparseGroupQuantized {
+    /// Assemble from parts, validating every structural invariant — the
+    /// wire decoder funnels through here so corrupt sections fail closed.
+    pub fn new(
+        dense_len: usize,
+        n_survivors: usize,
+        mask: Vec<u8>,
+        survivors: GroupQuantized,
+    ) -> Result<Self> {
+        if dense_len == 0 {
+            bail!("sparse payload: zero dense length");
+        }
+        if n_survivors == 0 || n_survivors > dense_len {
+            bail!(
+                "sparse payload: survivor count {n_survivors} outside 1..={dense_len}"
+            );
+        }
+        if mask.len() != dense_len.div_ceil(8) {
+            bail!(
+                "sparse payload: truncated bitmask ({} bytes for dense length \
+                 {dense_len}, expected {})",
+                mask.len(),
+                dense_len.div_ceil(8)
+            );
+        }
+        let pop: usize = mask.iter().map(|b| b.count_ones() as usize).sum();
+        if pop != n_survivors {
+            bail!(
+                "sparse payload: bitmask/survivor-count mismatch (mask has {pop} \
+                 set bits, header claims {n_survivors})"
+            );
+        }
+        // Tail bits past dense_len must be clear (they would otherwise
+        // scatter out of bounds).
+        if dense_len % 8 != 0 {
+            let tail = mask[mask.len() - 1] >> (dense_len % 8);
+            if tail != 0 {
+                bail!("sparse payload: mask bits set past dense length {dense_len}");
+            }
+        }
+        let group = survivors.group;
+        if survivors.len() != n_survivors.div_ceil(group) * group {
+            bail!(
+                "sparse payload: survivor vector length {} does not match \
+                 {n_survivors} survivors padded to group {group}",
+                survivors.len()
+            );
+        }
+        Ok(Self { dense_len, n_survivors, mask, survivors })
+    }
+
+    /// Quantize the `keep` subset of `data` (ascending, unique dense
+    /// indices) at `bits`, scaling every survivor by `rescale` first
+    /// (DARE's 1/(1-p); 1.0 for plain localization masks).
+    pub fn quantize_indices(
+        data: &[f32],
+        keep: &[usize],
+        rescale: f32,
+        bits: u8,
+        group: usize,
+    ) -> Result<Self> {
+        if keep.is_empty() {
+            bail!("sparse quantization needs at least one survivor");
+        }
+        let mut mask = vec![0u8; data.len().div_ceil(8)];
+        let mut vals = Vec::with_capacity(keep.len());
+        let mut last = None;
+        for &i in keep {
+            if i >= data.len() {
+                bail!("survivor index {i} out of range ({} elements)", data.len());
+            }
+            if last.is_some_and(|l| i <= l) {
+                bail!("survivor indices must be ascending and unique");
+            }
+            last = Some(i);
+            mask[i / 8] |= 1 << (i % 8);
+            vals.push(data[i] * rescale);
+        }
+        let survivors = GroupQuantized::quantize_padded(&vals, bits, group)?;
+        Self::new(data.len(), keep.len(), mask, survivors)
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.survivors.bits
+    }
+
+    pub fn group(&self) -> usize {
+        self.survivors.group
+    }
+
+    /// Reconstruct the dense vector: 0.0 everywhere except survivors.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dense_len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Reconstruct into a caller buffer (overwrites all of `out`).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dense_len);
+        out.fill(0.0);
+        self.axpy_into(1.0, out);
+    }
+
+    /// Fused serve path: `out[i] += lam * value_i` for every survivor —
+    /// masked-out positions are untouched, so a merge accumulates sparse
+    /// tasks without materializing their dense reconstruction.
+    pub fn axpy_into(&self, lam: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dense_len);
+        let surv = self.survivors.dequantize();
+        let mut s = 0usize;
+        for (byte_i, &byte) in self.mask.iter().enumerate() {
+            let mut b = byte;
+            while b != 0 {
+                let bit = b.trailing_zeros() as usize;
+                out[byte_i * 8 + bit] += lam * surv[s];
+                s += 1;
+                b &= b - 1;
+            }
+        }
+        debug_assert_eq!(s, self.n_survivors);
+    }
+
+    /// Exact in-memory storage bytes: mask + survivor codes + affine params.
+    pub fn storage_bytes(&self) -> usize {
+        self.mask.len() + self.survivors.storage_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(len: usize, keep_every: usize, seed: u64) -> (Vec<f32>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 0.05);
+        let keep: Vec<usize> = (0..len).step_by(keep_every).collect();
+        (v, keep)
+    }
+
+    #[test]
+    fn roundtrip_scatters_survivors_and_zeros_the_rest() {
+        let (v, keep) = sample(1000, 3, 1);
+        let s = SparseGroupQuantized::quantize_indices(&v, &keep, 1.0, 4, 64).unwrap();
+        assert_eq!(s.n_survivors, keep.len());
+        let dq = s.dequantize();
+        assert_eq!(dq.len(), 1000);
+        let mut ki = 0;
+        for (i, &x) in dq.iter().enumerate() {
+            if ki < keep.len() && keep[ki] == i {
+                // Survivor: within the per-group quantization bound.
+                assert!((x - v[i]).abs() < 0.05, "survivor {i}: {x} vs {}", v[i]);
+                ki += 1;
+            } else {
+                assert_eq!(x, 0.0, "dropped index {i} must be exactly zero");
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_is_applied_to_survivors_only() {
+        let v = vec![1.0f32, 2.0, 3.0, 4.0];
+        let s = SparseGroupQuantized::quantize_indices(&v, &[1, 3], 2.0, 8, 2).unwrap();
+        let dq = s.dequantize();
+        assert_eq!(dq[0], 0.0);
+        assert!((dq[1] - 4.0).abs() < 0.1);
+        assert!((dq[3] - 8.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn axpy_accumulates_without_touching_dropped_positions() {
+        let (v, keep) = sample(256, 2, 2);
+        let s = SparseGroupQuantized::quantize_indices(&v, &keep, 1.0, 4, 64).unwrap();
+        let mut out = vec![7.0f32; 256];
+        s.axpy_into(0.5, &mut out);
+        let dq = s.dequantize();
+        for i in 0..256 {
+            assert!((out[i] - (7.0 + 0.5 * dq[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let (v, _) = sample(64, 2, 3);
+        // Empty / out-of-range / unsorted survivor sets.
+        assert!(SparseGroupQuantized::quantize_indices(&v, &[], 1.0, 4, 16).is_err());
+        assert!(SparseGroupQuantized::quantize_indices(&v, &[64], 1.0, 4, 16).is_err());
+        assert!(SparseGroupQuantized::quantize_indices(&v, &[3, 1], 1.0, 4, 16).is_err());
+        assert!(SparseGroupQuantized::quantize_indices(&v, &[1, 1], 1.0, 4, 16).is_err());
+
+        let good = SparseGroupQuantized::quantize_indices(&v, &[0, 9], 1.0, 4, 16).unwrap();
+        // Popcount mismatch.
+        let mut bad_mask = good.mask.clone();
+        bad_mask[0] |= 1 << 4;
+        assert!(SparseGroupQuantized::new(64, 2, bad_mask, good.survivors.clone()).is_err());
+        // Truncated mask.
+        assert!(SparseGroupQuantized::new(
+            64,
+            2,
+            good.mask[..4].to_vec(),
+            good.survivors.clone()
+        )
+        .is_err());
+        // Mask bit past the dense length.
+        let mut tail_mask = vec![0u8; 1];
+        tail_mask[0] = 0b1010_0000; // bits 5 and 7, dense_len = 6
+        let surv = GroupQuantized::quantize_padded(&[1.0, 2.0], 4, 2).unwrap();
+        assert!(SparseGroupQuantized::new(6, 2, tail_mask, surv.clone()).is_err());
+        // Survivor-vector length not matching the padded survivor count.
+        let long = GroupQuantized::quantize_padded(&[1.0; 40], 4, 8).unwrap();
+        let mut mask = vec![0u8; 8];
+        mask[0] = 0b11;
+        assert!(SparseGroupQuantized::new(64, 2, mask, long).is_err());
+    }
+
+    #[test]
+    fn storage_accounts_mask_and_survivors() {
+        let (v, keep) = sample(128, 4, 4);
+        let s = SparseGroupQuantized::quantize_indices(&v, &keep, 1.0, 2, 32).unwrap();
+        assert_eq!(s.storage_bytes(), 16 + s.survivors.storage_bytes());
+    }
+}

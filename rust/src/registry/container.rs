@@ -1,9 +1,9 @@
-//! `QTVC` v2 payload sections: the byte-level encoding of quantized task
+//! `QTVC` payload sections: the byte-level encoding of quantized task
 //! payloads (bit-packed codes + affine params + scheme metadata).
 //!
 //! A section is one self-contained payload; the registry index
-//! ([`super::index`]) records where each section lives and its CRC.  Two
-//! section bodies exist:
+//! ([`super::index`]) records where each section lives and its CRC.  The
+//! payload bodies (normative layouts: `docs/WIRE_FORMAT.md` §3):
 //!
 //! * [`PayloadKind::TaskCheckpoint`] / [`PayloadKind::RtvqBase`] — a
 //!   per-tensor quantized checkpoint ([`QuantizedCheckpoint`]): TVQ task
@@ -11,6 +11,10 @@
 //! * [`PayloadKind::Group`] — a flat per-group quantized vector
 //!   ([`GroupQuantized`]), the layout the AOT Pallas merge artifacts
 //!   consume directly.
+//! * [`PayloadKind::SparseGroup`] — bitmask + group-quantized survivors
+//!   ([`SparseGroupQuantized`]), the planner's sparse-arm payload.
+//! * [`PayloadKind::Plan`] — the embedded pack plan (decoded by
+//!   [`PackPlan::decode`](crate::planner::PackPlan::decode), not here).
 //!
 //! Codes are stored via [`BitPacked::packed_bytes`] — headerless and
 //! byte-exact (`ceil(len * bits / 8)` bytes), so file size tracks the
@@ -20,7 +24,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::quant::{AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint};
+use crate::quant::{
+    AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint, SparseGroupQuantized,
+};
 use crate::quant::tvq::QuantizedTensor;
 
 /// Registry file magic: the bytes `"QTVC"` read as a little-endian u32.
@@ -28,10 +34,16 @@ pub const MAGIC: u32 = 0x4356_5451;
 /// Registry format version for uniform-scheme registries.  v1 was the
 /// raw-f32 `TVQC` checkpoint container; packed registries start at v2.
 pub const VERSION: u32 = 2;
-/// Registry format version for plan-packed mixed-precision registries:
-/// v3 adds the kind-3 plan-metadata section and real kind-2 group
-/// payloads (see [`crate::planner`] for the plan wire format).
+/// Registry format version for plan-packed mixed-precision registries
+/// whose plans use dense arms only: v3 adds the kind-3 plan-metadata
+/// section and real kind-2 group payloads.
 pub const VERSION_PLANNED: u32 = 3;
+/// Registry format version for plan-packed registries whose plans use
+/// sparse (DARE / TALL) arms: v4 adds the kind-4 sparse sections.  Per
+/// the compat policy (`docs/WIRE_FORMAT.md`), additive section kinds bump
+/// the version so older readers reject the file at the header instead of
+/// choking on an unknown payload kind mid-read.
+pub const VERSION_SPARSE: u32 = 4;
 
 /// Header scheme label used by plan-packed mixed-precision registries
 /// (uniform registries store a [`QuantScheme`] label instead).
@@ -87,10 +99,14 @@ pub enum PayloadKind {
     RtvqBase,
     /// A flat group-quantized vector (Pallas kernel layout).
     Group,
-    /// Pack-plan metadata (v3): the serialized
-    /// [`PackPlan`](crate::planner::PackPlan) that maps kind-2 sections
+    /// Pack-plan metadata (v3+): the serialized
+    /// [`PackPlan`](crate::planner::PackPlan) that maps payload sections
     /// back to (task, tensor) slots and records the bit allocation.
     Plan,
+    /// A sparse flat vector (v4): bitmask + group-quantized survivors
+    /// ([`SparseGroupQuantized`]), produced by the planner's DARE / TALL
+    /// sparse arms.
+    SparseGroup,
 }
 
 impl PayloadKind {
@@ -100,6 +116,7 @@ impl PayloadKind {
             PayloadKind::RtvqBase => 1,
             PayloadKind::Group => 2,
             PayloadKind::Plan => 3,
+            PayloadKind::SparseGroup => 4,
         }
     }
 
@@ -109,6 +126,7 @@ impl PayloadKind {
             1 => PayloadKind::RtvqBase,
             2 => PayloadKind::Group,
             3 => PayloadKind::Plan,
+            4 => PayloadKind::SparseGroup,
             other => bail!("unknown QTVC payload kind {other}"),
         })
     }
@@ -119,14 +137,17 @@ impl PayloadKind {
 pub enum Payload {
     Checkpoint(QuantizedCheckpoint),
     Group(GroupQuantized),
+    SparseGroup(SparseGroupQuantized),
 }
 
 impl Payload {
-    /// Parameter count carried by this payload.
+    /// Parameter count carried by this payload (logical dense count for
+    /// sparse sections — what a merge touches, not what is stored).
     pub fn numel(&self) -> usize {
         match self {
             Payload::Checkpoint(q) => q.numel(),
             Payload::Group(g) => g.len(),
+            Payload::SparseGroup(s) => s.dense_len,
         }
     }
 
@@ -135,6 +156,7 @@ impl Payload {
         match self {
             Payload::Checkpoint(q) => encode_checkpoint_payload(q),
             Payload::Group(g) => encode_group_payload(g),
+            Payload::SparseGroup(s) => encode_sparse_payload(s),
         }
     }
 
@@ -145,6 +167,7 @@ impl Payload {
                 Payload::Checkpoint(decode_checkpoint_payload(buf)?)
             }
             PayloadKind::Group => Payload::Group(decode_group_payload(buf)?),
+            PayloadKind::SparseGroup => Payload::SparseGroup(decode_sparse_payload(buf)?),
             PayloadKind::Plan => bail!(
                 "plan sections decode via PackPlan::decode (Registry::plan), \
                  not Payload::decode"
@@ -361,6 +384,46 @@ pub fn decode_group_payload(buf: &[u8]) -> Result<GroupQuantized> {
     Ok(GroupQuantized { bits, group, scales, zps, codes })
 }
 
+/// Encode a sparse group-quantized vector (kind-4 section body):
+/// ```text
+///   dense_len u64, n_survivors u64
+///   mask: ceil(dense_len / 8) bytes (LSB-first)
+///   survivor group payload, as encode_group_payload
+/// ```
+pub fn encode_sparse_payload(s: &SparseGroupQuantized) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(s.dense_len as u64).to_le_bytes());
+    buf.extend_from_slice(&(s.n_survivors as u64).to_le_bytes());
+    buf.extend_from_slice(&s.mask);
+    buf.extend_from_slice(&encode_group_payload(&s.survivors));
+    buf
+}
+
+/// Inverse of [`encode_sparse_payload`]; every structural invariant —
+/// mask length, popcount vs survivor count, tail bits, survivor-vector
+/// geometry — is re-validated so corrupt sections fail closed.
+pub fn decode_sparse_payload(buf: &[u8]) -> Result<SparseGroupQuantized> {
+    let mut c = Cursor::new(buf);
+    let dense_len = c.u64()? as usize;
+    let n_survivors = c.u64()? as usize;
+    if dense_len == 0 {
+        bail!("QTVC sparse payload: zero dense length");
+    }
+    // Untrusted length: the mask must fit what is actually left in the
+    // section before any allocation is sized from it.
+    let mask_bytes = dense_len.div_ceil(8);
+    if mask_bytes > c.remaining() {
+        bail!(
+            "QTVC sparse payload: truncated bitmask ({} bytes left for a \
+             {mask_bytes}-byte mask over {dense_len} elements)",
+            c.remaining()
+        );
+    }
+    let mask = c.take(mask_bytes)?.to_vec();
+    let survivors = decode_group_payload(c.take(c.remaining())?)?;
+    SparseGroupQuantized::new(dense_len, n_survivors, mask, survivors)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,12 +523,79 @@ mod tests {
             PayloadKind::RtvqBase,
             PayloadKind::Group,
             PayloadKind::Plan,
+            PayloadKind::SparseGroup,
         ] {
             assert_eq!(PayloadKind::from_u8(kind.to_u8()).unwrap(), kind);
         }
         assert!(PayloadKind::from_u8(9).is_err());
         // Plan sections have no Payload decode — they carry a PackPlan.
         assert!(Payload::decode(PayloadKind::Plan, &[]).is_err());
+    }
+
+    fn sample_sparse(seed: u64) -> SparseGroupQuantized {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; 500];
+        rng.fill_normal(&mut v, 0.05);
+        let keep: Vec<usize> = (0..500).step_by(4).collect();
+        SparseGroupQuantized::quantize_indices(&v, &keep, 1.0, 3, 64).unwrap()
+    }
+
+    #[test]
+    fn sparse_payload_roundtrips() {
+        let s = sample_sparse(21);
+        let wire = encode_sparse_payload(&s);
+        let back = decode_sparse_payload(&wire).unwrap();
+        assert_eq!(back, s);
+        // Through the Payload enum too.
+        let p = Payload::SparseGroup(s.clone());
+        assert_eq!(p.numel(), 500);
+        let back = Payload::decode(PayloadKind::SparseGroup, &p.encode()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn sparse_payload_truncated_bitmask_rejected() {
+        let s = sample_sparse(22);
+        let wire = encode_sparse_payload(&s);
+        // Cut inside the bitmask region (mask starts at byte 16).
+        let err = decode_sparse_payload(&wire[..16 + s.mask.len() / 2])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated bitmask"), "got: {err}");
+        // Cut inside the survivor payload: clean error, no panic.
+        assert!(decode_sparse_payload(&wire[..wire.len() - 3]).is_err());
+        // Empty and header-only buffers.
+        assert!(decode_sparse_payload(&[]).is_err());
+        assert!(decode_sparse_payload(&wire[..16]).is_err());
+        // Trailing garbage is corruption.
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(decode_sparse_payload(&padded).is_err());
+    }
+
+    #[test]
+    fn sparse_payload_mask_survivor_mismatch_rejected() {
+        let s = sample_sparse(23);
+        let mut wire = encode_sparse_payload(&s);
+        // Set one extra mask bit: popcount no longer matches the header's
+        // survivor count.  (At the registry level the section CRC catches
+        // this first; the decoder must catch it even with a fixed CRC.)
+        wire[16] |= 0b10; // index 1 is not in the keep-every-4 set
+        let err = decode_sparse_payload(&wire).unwrap_err().to_string();
+        assert!(err.contains("bitmask/survivor-count mismatch"), "got: {err}");
+        // Survivor count claiming more than dense_len.
+        let mut bad = encode_sparse_payload(&s);
+        bad[8..16].copy_from_slice(&(501u64).to_le_bytes());
+        assert!(decode_sparse_payload(&bad).is_err());
+        // Zero dense length.
+        let mut bad = encode_sparse_payload(&s);
+        bad[0..8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode_sparse_payload(&bad).is_err());
+        // Absurd dense length must bail on the mask bound, not allocate.
+        let mut bad = encode_sparse_payload(&s);
+        bad[0..8].copy_from_slice(&(1u64 << 61).to_le_bytes());
+        let err = decode_sparse_payload(&bad).unwrap_err().to_string();
+        assert!(err.contains("truncated bitmask"), "got: {err}");
     }
 
     #[test]

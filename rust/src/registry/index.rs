@@ -25,11 +25,11 @@ use std::sync::OnceLock;
 use anyhow::{bail, Context, Result};
 
 use super::container::{
-    Payload, PayloadKind, RegistryScheme, MAGIC, VERSION, VERSION_PLANNED,
+    Payload, PayloadKind, RegistryScheme, MAGIC, VERSION, VERSION_PLANNED, VERSION_SPARSE,
 };
 use crate::checkpoint::Checkpoint;
-use crate::planner::{Arm, PackPlan, SectionRole};
-use crate::quant::{GroupQuantized, QuantScheme};
+use crate::planner::{Arm, PackPlan, SectionRole, SectionSpec};
+use crate::quant::{GroupQuantized, QuantScheme, SparseGroupQuantized};
 use crate::tensor::Tensor;
 use crate::util::crc32;
 
@@ -195,10 +195,10 @@ impl Registry {
             );
         }
         let version = r.u32()?;
-        if version != VERSION && version != VERSION_PLANNED {
+        if version != VERSION && version != VERSION_PLANNED && version != VERSION_SPARSE {
             bail!(
                 "unsupported QTVC version {version} in {} \
-                 (this build reads v{VERSION} and v{VERSION_PLANNED})",
+                 (this build reads v{VERSION}, v{VERSION_PLANNED} and v{VERSION_SPARSE})",
                 path.display()
             );
         }
@@ -207,10 +207,11 @@ impl Registry {
             .with_context(|| format!("registry {} carries bad scheme label", path.display()))?;
         match (version, scheme) {
             (VERSION, RegistryScheme::Uniform(_)) => {}
-            (VERSION_PLANNED, RegistryScheme::Planned) => {}
+            (VERSION_PLANNED | VERSION_SPARSE, RegistryScheme::Planned) => {}
             _ => bail!(
                 "registry {} pairs version {version} with scheme {label:?} \
-                 (uniform registries are v{VERSION}, planned are v{VERSION_PLANNED})",
+                 (uniform registries are v{VERSION}, planned are \
+                 v{VERSION_PLANNED}/v{VERSION_SPARSE})",
                 path.display()
             ),
         }
@@ -242,10 +243,13 @@ impl Registry {
                     }
                 }
                 (RegistryScheme::Uniform(_), PayloadKind::TaskCheckpoint) => tasks.push(i),
-                (RegistryScheme::Uniform(_), PayloadKind::Group | PayloadKind::Plan) => {
+                (
+                    RegistryScheme::Uniform(_),
+                    PayloadKind::Group | PayloadKind::Plan | PayloadKind::SparseGroup,
+                ) => {
                     bail!(
                         "uniform registry {} contains a {kind:?} section {name:?} \
-                         (group/plan sections belong to PLAN-MIXED registries)",
+                         (group/sparse/plan sections belong to PLAN-MIXED registries)",
                         path.display()
                     )
                 }
@@ -255,9 +259,18 @@ impl Registry {
                     }
                 }
                 (RegistryScheme::Planned, PayloadKind::Group) => {}
+                (RegistryScheme::Planned, PayloadKind::SparseGroup) => {
+                    if version != VERSION_SPARSE {
+                        bail!(
+                            "registry {} is v{version} but contains a kind-4 sparse \
+                             section {name:?} (sparse sections require v{VERSION_SPARSE})",
+                            path.display()
+                        );
+                    }
+                }
                 (RegistryScheme::Planned, other) => bail!(
                     "planned registry {} contains a {other:?} section {name:?} \
-                     (only group + plan sections are valid)",
+                     (only group/sparse + plan sections are valid)",
                     path.display()
                 ),
             }
@@ -306,6 +319,23 @@ impl Registry {
                 let plan = PackPlan::decode(&buf).with_context(|| {
                     format!("decoding plan section of {}", path.display())
                 })?;
+                // Version / arm-set consistency: sparse-arm plans live in
+                // v4 files and vice versa, so a reader can trust the
+                // header version before decoding any payload.
+                if plan.has_sparse_arms() && version != VERSION_SPARSE {
+                    bail!(
+                        "registry {} is v{version} but its plan uses sparse arms \
+                         (sparse-arm registries are v{VERSION_SPARSE})",
+                        path.display()
+                    );
+                }
+                if !plan.has_sparse_arms() && version == VERSION_SPARSE {
+                    bail!(
+                        "registry {} is v{VERSION_SPARSE} but its plan has no \
+                         sparse arms (dense-planned registries are v{VERSION_PLANNED})",
+                        path.display()
+                    );
+                }
                 let by_name: HashMap<&str, usize> = entries
                     .iter()
                     .enumerate()
@@ -333,6 +363,19 @@ impl Registry {
                             path.display()
                         )
                     })?;
+                    // The offset-table kind must match the arm family the
+                    // plan assigns this slot — a kind-2 section where the
+                    // plan demands kind-4 (or vice versa) fails at open,
+                    // before any payload byte is read.
+                    let want_kind = plan.expected_section_kind(role);
+                    if entries[i].kind != want_kind {
+                        bail!(
+                            "planned registry {}: section {name:?} has kind \
+                             {:?} but the plan requires {want_kind:?}",
+                            path.display(),
+                            entries[i].kind
+                        );
+                    }
                     match role {
                         SectionRole::Base { tensor } => planned_bases[tensor] = Some(i),
                         SectionRole::Task { task, tensor } => planned_tasks[task][tensor] = i,
@@ -364,7 +407,8 @@ impl Registry {
         &self.path
     }
 
-    /// Wire version this file was written at (2 uniform, 3 planned).
+    /// Wire version this file was written at (2 uniform, 3 dense-planned,
+    /// 4 sparse-planned).
     pub fn version(&self) -> u32 {
         self.version
     }
@@ -475,31 +519,82 @@ impl Registry {
         Payload::decode(entry.kind, &self.read_section(entry)?)
     }
 
-    /// Decode one kind-2 section and cross-check its geometry against
-    /// what the plan says must be there.
-    fn load_planned_group(&self, entry_idx: usize, role: SectionRole) -> Result<GroupQuantized> {
+    /// Decode one payload section and cross-check it against the exact
+    /// [`SectionSpec`] the plan demands for its slot.
+    fn load_planned_payload(&self, entry_idx: usize, role: SectionRole) -> Result<Payload> {
         let plan = self.plan.as_ref().expect("planned accessors gated on plan");
         let entry = &self.entries[entry_idx];
-        let gq = match Payload::decode(entry.kind, &self.read_section(entry)?)? {
-            Payload::Group(g) => g,
-            other => bail!("section {:?} is not a group payload: {other:?}", entry.name),
-        };
-        let (bits, group, padded) = plan.section_geometry(role);
-        if gq.bits != bits || gq.group != group || gq.len() != padded {
-            bail!(
-                "section {:?} decodes to bits={} group={} len={} but the plan \
-                 requires bits={bits} group={group} len={padded}",
-                entry.name,
-                gq.bits,
-                gq.group,
-                gq.len()
-            );
+        let payload = Payload::decode(entry.kind, &self.read_section(entry)?)?;
+        let spec = plan.section_spec(role);
+        match (&payload, spec) {
+            (Payload::Group(gq), SectionSpec::Dense { bits, group, len }) => {
+                if gq.bits != bits || gq.group != group || gq.len() != len {
+                    bail!(
+                        "section {:?} decodes to bits={} group={} len={} but the \
+                         plan requires bits={bits} group={group} len={len}",
+                        entry.name,
+                        gq.bits,
+                        gq.group,
+                        gq.len()
+                    );
+                }
+            }
+            (
+                Payload::SparseGroup(s),
+                SectionSpec::Sparse { bits, group, dense_len, survivors },
+            ) => {
+                if s.bits() != bits
+                    || s.group() != group
+                    || s.dense_len != dense_len
+                    || s.n_survivors != survivors
+                {
+                    bail!(
+                        "section {:?} decodes to bits={} group={} dense={} \
+                         survivors={} but the plan requires bits={bits} \
+                         group={group} dense={dense_len} survivors={survivors}",
+                        entry.name,
+                        s.bits(),
+                        s.group(),
+                        s.dense_len,
+                        s.n_survivors
+                    );
+                }
+            }
+            (other, spec) => bail!(
+                "section {:?} payload does not match the plan's {spec:?}: {other:?}",
+                entry.name
+            ),
         }
-        Ok(gq)
+        Ok(payload)
     }
 
-    /// Planned registries: task `t`'s group section for tensor `l`.
+    /// Planned registries: task `t`'s kind-2 group section for tensor `l`
+    /// (dense-arm tensors; sparse-arm tensors serve through
+    /// [`Registry::load_planned_sparse_section`]).
     pub fn load_planned_task_section(&self, t: usize, l: usize) -> Result<GroupQuantized> {
+        match self.load_planned_task_payload(t, l)? {
+            Payload::Group(g) => Ok(g),
+            _ => bail!(
+                "tensor index {l} has a sparse (DARE/TALL) arm; use \
+                 load_planned_sparse_section"
+            ),
+        }
+    }
+
+    /// Planned registries: task `t`'s kind-4 sparse section for tensor
+    /// `l` (DARE / TALL-arm tensors only).
+    pub fn load_planned_sparse_section(&self, t: usize, l: usize) -> Result<SparseGroupQuantized> {
+        match self.load_planned_task_payload(t, l)? {
+            Payload::SparseGroup(s) => Ok(s),
+            _ => bail!(
+                "tensor index {l} has a dense arm; use load_planned_task_section"
+            ),
+        }
+    }
+
+    /// Planned registries: task `t`'s payload for tensor `l`, whatever
+    /// kind the plan assigns that slot.
+    pub fn load_planned_task_payload(&self, t: usize, l: usize) -> Result<Payload> {
         let plan = self
             .plan
             .as_ref()
@@ -510,7 +605,7 @@ impl Registry {
         if l >= plan.n_tensors() {
             bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
         }
-        self.load_planned_group(self.planned_tasks[t][l], SectionRole::Task { task: t, tensor: l })
+        self.load_planned_payload(self.planned_tasks[t][l], SectionRole::Task { task: t, tensor: l })
     }
 
     /// Planned registries: the shared base section for tensor `l`
@@ -525,11 +620,14 @@ impl Registry {
         }
         let i = self.planned_bases[l].ok_or_else(|| {
             anyhow::anyhow!(
-                "tensor {:?} has a TVQ arm — no shared base section",
+                "tensor {:?} has no RTVQ arm — no shared base section",
                 plan.tensors[l].name
             )
         })?;
-        self.load_planned_group(i, SectionRole::Base { tensor: l })
+        match self.load_planned_payload(i, SectionRole::Base { tensor: l })? {
+            Payload::Group(g) => Ok(g),
+            other => bail!("base section decoded to a non-group payload: {other:?}"),
+        }
     }
 
     /// Dequantized uniform RTVQ base, decoded once and cached.
@@ -539,7 +637,7 @@ impl Registry {
         }
         let ck = match self.load_base_payload()? {
             Payload::Checkpoint(q) => q.dequantize()?,
-            Payload::Group(_) => bail!("RTVQ base must be a checkpoint payload"),
+            other => bail!("RTVQ base must be a checkpoint payload, got {other:?}"),
         };
         Ok(self.base_cache.get_or_init(|| ck))
     }
@@ -572,17 +670,26 @@ impl Registry {
             let mut out = Checkpoint::new();
             let mut buf: Vec<f32> = Vec::new();
             for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
-                let gq = self.load_planned_task_section(t, l)?;
                 buf.clear();
-                buf.resize(gq.len(), 0.0);
-                gq.dequantize_into(&mut buf);
-                if let Arm::Rtvq { .. } = a.arm {
-                    let base = base_hats[l]
-                        .as_ref()
-                        .expect("rtvq-arm tensors always carry a base");
-                    for (d, &b) in buf.iter_mut().zip(base) {
-                        *d += b;
+                buf.resize(tensor.padded(), 0.0);
+                match self.load_planned_task_payload(t, l)? {
+                    Payload::Group(gq) => {
+                        gq.dequantize_into(&mut buf);
+                        if let Arm::Rtvq { .. } = a.arm {
+                            let base = base_hats[l]
+                                .as_ref()
+                                .expect("rtvq-arm tensors always carry a base");
+                            for (d, &b) in buf.iter_mut().zip(base) {
+                                *d += b;
+                            }
+                        }
                     }
+                    // Sparse arms: survivors scatter into a zeroed dense
+                    // buffer; masked-out weights reconstruct as 0.
+                    Payload::SparseGroup(s) => s.dequantize_into(&mut buf),
+                    other => bail!(
+                        "planned task section decoded to an unexpected payload: {other:?}"
+                    ),
                 }
                 buf.truncate(tensor.numel());
                 out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf.clone())?);
@@ -592,9 +699,9 @@ impl Registry {
         let payload = self.load_task_payload(t)?;
         let q = match payload {
             Payload::Checkpoint(q) => q,
-            Payload::Group(_) => bail!(
-                "task {t} is a flat group payload; decode it via load_task_payload \
-                 (group payloads carry no tensor-shape template)"
+            _ => bail!(
+                "task {t} is a flat group/sparse payload; decode it via \
+                 load_task_payload (those payloads carry no tensor-shape template)"
             ),
         };
         match self.scheme {

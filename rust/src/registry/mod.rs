@@ -8,70 +8,43 @@
 //! zoo holding bit-packed codes + affine params, loaded **lazily per
 //! task** so a merge request materializes only what it needs.
 //!
-//! # `QTVC` v2 wire format
+//! # Wire format
 //!
-//! All integers little-endian.  One file = header + offset table +
-//! concatenated payload sections:
+//! The single normative byte-level spec — container header, offset
+//! table, section kinds 0–4, plan wire v1/v2, CRC and compatibility
+//! policy — lives in **`docs/WIRE_FORMAT.md`**.  In brief: one file =
+//! header + CRC'd offset table + concatenated payload sections, all
+//! integers little-endian.  Three file versions exist today:
 //!
-//! ```text
-//! ┌──────────────────────────────────────────────────────────────────┐
-//! │ header                                                           │
-//! │   magic      u32 = 0x4356_5451   (bytes "QTVC")                  │
-//! │   version    u32 = 2                                             │
-//! │   scheme_len u32, scheme label bytes (e.g. "TVQ-INT4",           │
-//! │              "RTVQ-B3O2" — round-trips QuantScheme::parse)       │
-//! │   entry_cnt  u32                                                 │
-//! ├──────────────────────────────────────────────────────────────────┤
-//! │ offset table (entry_cnt rows)                                    │
-//! │   name_len u32, name bytes (UTF-8)                               │
-//! │   kind     u8   (0 task | 1 rtvq base | 2 group)                 │
-//! │   offset   u64  (absolute file offset of the section body)       │
-//! │   length   u64  (section body bytes)                             │
-//! │   crc      u32  (CRC-32 of the section body)                     │
-//! ├──────────────────────────────────────────────────────────────────┤
-//! │ index_crc  u32  (CRC-32 of every byte above)                     │
-//! ├──────────────────────────────────────────────────────────────────┤
-//! │ sections, back to back                                           │
-//! │   checkpoint payload (kind 0/1):                                 │
-//! │     bits u8, tensor_cnt u32, then per tensor (name order):       │
-//! │       name_len u32, name, ndim u32, dims u64*ndim,               │
-//! │       scale f32, zp f32, codes ceil(numel*bits/8) bytes          │
-//! │   group payload (kind 2):                                        │
-//! │     bits u8, group u64, n_groups u64,                            │
-//! │     scales f32*n_groups, zps f32*n_groups,                       │
-//! │     codes ceil(group*n_groups*bits/8) bytes                      │
-//! └──────────────────────────────────────────────────────────────────┘
-//! ```
+//! * **v2 (uniform)** — one [`QuantScheme`](crate::quant::QuantScheme)
+//!   label; kind-0 task-checkpoint sections plus at most one kind-1 RTVQ
+//!   base.  Codes are stored byte-exact (no u64 padding), so the file
+//!   tracks [`StorageReport::ideal`](crate::quant::StorageReport::ideal)
+//!   to within per-tensor metadata — [`DiskAccounting`] measures the gap
+//!   from real files.
+//! * **v3 (`PLAN-MIXED`, dense arms)** — exactly one kind-3 **plan**
+//!   section (a serialized [`PackPlan`](crate::planner::PackPlan)) plus
+//!   kind-2 [`GroupQuantized`](crate::quant::GroupQuantized) sections,
+//!   one per `(task, tensor)` slot named `task00/blk00/w` and one
+//!   `__base__/<tensor>` per RTVQ-arm tensor.  The plan is decoded at
+//!   open (it is the shape/slot template); payloads stay lazy and feed
+//!   the fused dequant-merge path ([`crate::planner::fused_merge`]).
+//! * **v4 (`PLAN-MIXED`, sparse arms)** — v3 plus kind-4
+//!   [`SparseGroupQuantized`](crate::quant::SparseGroupQuantized)
+//!   sections (bitmask + group-quantized survivors) for tensors the plan
+//!   assigns a DARE or TALL sparse arm; the embedded plan uses wire v2.
 //!
-//! Codes are stored byte-exact (no u64 padding), so the file tracks
-//! [`StorageReport::ideal`](crate::quant::StorageReport::ideal) to within
-//! per-tensor metadata — [`DiskAccounting`] measures the gap from real
-//! files.
-//!
-//! # `QTVC` v3: plan-packed mixed precision
-//!
-//! v3 registries carry the `PLAN-MIXED` scheme label and two section
-//! kinds beyond v2: exactly one kind-3 **plan** section (a serialized
-//! [`PackPlan`](crate::planner::PackPlan); wire format documented in
-//! [`crate::planner::plan`]) and kind-2 **group** sections — one
-//! [`GroupQuantized`](crate::quant::GroupQuantized) payload per
-//! `(task, tensor)` slot named `task00/blk00/w`, plus one
-//! `__base__/<tensor>` section per RTVQ-arm tensor.  The plan is decoded
-//! at open (it is the shape/slot template); group payloads stay lazy and
-//! feed the fused dequant-merge path directly
-//! ([`crate::planner::fused_merge`]).
-//!
-//! # Versioning / compatibility policy
+//! # Versioning / compatibility policy (summary)
 //!
 //! * The magic distinguishes `QTVC` registries from v1 `TVQC`
 //!   checkpoints; each reader rejects the other's magic with a pointed
 //!   error naming the right API.
 //! * `version` is a hard gate: readers reject any version they were not
-//!   built for (no silent forward parsing).  Additive evolution must bump
-//!   the version — the kind-2/kind-3 producers did exactly that (v3);
-//!   uniform registries keep writing v2, and the version/scheme pairing
-//!   is itself validated (a v2 file may not contain group or plan
-//!   sections).
+//!   built for (no silent forward parsing).  Additive evolution bumps
+//!   the version — kind-2/3 did (v3), kind-4 did (v4) — and the
+//!   version/scheme/section pairing is itself validated at open (a v2
+//!   file may not contain group, plan or sparse sections; kind-4
+//!   sections and sparse-arm plans appear only in v4 files).
 //! * Per-section CRCs allow lazy readers to verify exactly the bytes
 //!   they touch; the index CRC catches truncation at open time.
 //!
@@ -300,7 +273,13 @@ mod tests {
         let (pre, fts) = suite(3, 17);
         let dir = tmp("planned");
         let path = dir.join("zoo.qtvc");
-        let cfg = PlannerConfig { group: 128, tvq_bits: vec![2, 4], rtvq_arms: vec![(3, 2)] };
+        let cfg = PlannerConfig {
+            group: 128,
+            tvq_bits: vec![2, 4],
+            rtvq_arms: vec![(3, 2)],
+            dare_arms: vec![],
+            tall_arms: vec![],
+        };
         let profile = probe(&pre, &fts, &cfg).unwrap();
         let budget = min_feasible_bytes(&profile) * 2;
         let (plan, summary) =

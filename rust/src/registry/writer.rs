@@ -15,12 +15,12 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::container::{
-    encode_checkpoint_payload, encode_group_payload, PayloadKind, RegistryScheme, MAGIC,
-    VERSION, VERSION_PLANNED,
+    encode_checkpoint_payload, encode_group_payload, encode_sparse_payload, PayloadKind,
+    RegistryScheme, MAGIC, VERSION, VERSION_PLANNED, VERSION_SPARSE,
 };
 use crate::checkpoint::Checkpoint;
 use crate::planner::PackPlan;
-use crate::quant::{GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq};
+use crate::quant::{GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq, SparseGroupQuantized};
 use crate::util::crc32;
 
 /// Exact byte accounting returned by a registry write.
@@ -138,6 +138,24 @@ impl RegistryBuilder {
         Ok(self)
     }
 
+    /// Add one kind-4 sparse section (planned registries only).  Any
+    /// sparse section bumps the written file to QTVC v4.
+    pub fn add_sparse(&mut self, name: &str, s: &SparseGroupQuantized) -> Result<&mut Self> {
+        if !matches!(self.scheme, RegistryScheme::Planned) {
+            bail!("sparse sections require a planned registry (RegistryBuilder::new_planned)");
+        }
+        if name == crate::planner::plan::PLAN_SECTION_NAME {
+            bail!("{name:?} is reserved for the plan section");
+        }
+        self.check_name(name)?;
+        self.groups.push(PendingEntry {
+            name: name.to_string(),
+            kind: PayloadKind::SparseGroup,
+            body: encode_sparse_payload(s),
+        });
+        Ok(self)
+    }
+
     /// Embed the pack plan (planned registries only; exactly once).
     pub fn set_plan(&mut self, plan: &PackPlan) -> Result<&mut Self> {
         if !matches!(self.scheme, RegistryScheme::Planned) {
@@ -244,7 +262,12 @@ impl RegistryBuilder {
     /// payload byte count.
     fn layout(&self, entries: &[&PendingEntry]) -> (Vec<u8>, u64) {
         let label = self.scheme.label();
+        let has_sparse = self
+            .groups
+            .iter()
+            .any(|e| e.kind == PayloadKind::SparseGroup);
         let version = match self.scheme {
+            RegistryScheme::Planned if has_sparse => VERSION_SPARSE,
             RegistryScheme::Planned => VERSION_PLANNED,
             RegistryScheme::Uniform(_) => VERSION,
         };

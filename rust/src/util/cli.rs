@@ -56,12 +56,21 @@ impl Args {
 pub struct Command {
     pub name: &'static str,
     pub about: &'static str,
+    /// Extended description printed by `--help` between the one-line
+    /// about and the option list (clap's `long_about`).
+    pub long_about: Option<&'static str>,
     opts: Vec<OptSpec>,
 }
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {
-        Self { name, about, opts: Vec::new() }
+        Self { name, about, long_about: None, opts: Vec::new() }
+    }
+
+    /// Attach the extended `--help` text (examples, semantics, caveats).
+    pub fn long_about(mut self, text: &'static str) -> Self {
+        self.long_about = Some(text);
+        self
     }
 
     pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
@@ -80,7 +89,12 @@ impl Command {
     }
 
     pub fn usage(&self) -> String {
-        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        let mut s = format!("{} — {}\n\n", self.name, self.about);
+        if let Some(long) = self.long_about {
+            s.push_str(long.trim_end());
+            s.push_str("\n\n");
+        }
+        s.push_str("options:\n");
         for o in &self.opts {
             let kind = if o.is_switch { "" } else { " <value>" };
             let def = o
@@ -174,6 +188,16 @@ mod tests {
         assert_eq!(a.get_str("out").unwrap(), "x");
         assert!(a.switch("verbose"));
         assert!(!a.switch("other"));
+    }
+
+    #[test]
+    fn long_about_appears_in_usage() {
+        let cmd = Command::new("t", "test").long_about("extended help\nwith examples");
+        let u = cmd.usage();
+        assert!(u.contains("extended help\nwith examples"));
+        assert!(u.contains("options:"));
+        // Without long_about, usage is unchanged in shape.
+        assert!(!Command::new("t", "test").usage().contains("extended"));
     }
 
     #[test]

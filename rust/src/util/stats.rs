@@ -57,6 +57,13 @@ pub fn l2_norm(xs: &[f32]) -> f64 {
 
 /// L2 distance between two slices (must be equal length).
 pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    sse(a, b).sqrt()
+}
+
+/// Sum of squared differences between two slices (must be equal length) —
+/// the reconstruction-error metric shared by the sensitivity probe, the
+/// granularity ablation, and the quantizer tests.
+pub fn sse(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter()
         .zip(b)
@@ -65,7 +72,6 @@ pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
             d * d
         })
         .sum::<f64>()
-        .sqrt()
 }
 
 /// Cosine similarity between two slices.

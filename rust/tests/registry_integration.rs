@@ -19,6 +19,7 @@ use tvq::registry::{
     PackedRegistrySource, Registry, TaskVectorSource,
 };
 use tvq::tensor::Tensor;
+use tvq::util::crc32;
 use tvq::util::rng::Rng;
 
 const N_TASKS: usize = 8;
@@ -145,6 +146,113 @@ fn lazy_loads_are_bit_exact_for_both_schemes() {
             "task {t}: RTVQ reconstruction not bit-exact"
         );
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Patch the body of section `name` inside a serialized registry, then
+/// re-stamp the section CRC in its offset-table row and the trailing
+/// index CRC — so the corruption reaches the payload *decoder* instead
+/// of being intercepted by the checksum layer.
+fn patch_section_with_fixed_crcs(bytes: &mut [u8], name: &str, patch: impl Fn(&mut [u8])) {
+    let u32_at = |b: &[u8], p: usize| u32::from_le_bytes(b[p..p + 4].try_into().unwrap());
+    let u64_at = |b: &[u8], p: usize| u64::from_le_bytes(b[p..p + 8].try_into().unwrap());
+    let scheme_len = u32_at(bytes, 8) as usize;
+    let entry_cnt = u32_at(bytes, 12 + scheme_len) as usize;
+    let mut pos = 16 + scheme_len;
+    let mut patched = false;
+    for _ in 0..entry_cnt {
+        let name_len = u32_at(bytes, pos) as usize;
+        let row_name =
+            std::str::from_utf8(&bytes[pos + 4..pos + 4 + name_len]).unwrap().to_string();
+        let off = u64_at(bytes, pos + 5 + name_len) as usize;
+        let len = u64_at(bytes, pos + 13 + name_len) as usize;
+        let crc_pos = pos + 21 + name_len;
+        if row_name == name {
+            patch(&mut bytes[off..off + len]);
+            let crc = crc32(&bytes[off..off + len]);
+            bytes[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+            patched = true;
+        }
+        pos = crc_pos + 4;
+    }
+    assert!(patched, "section {name:?} not found in index");
+    let index_crc = crc32(&bytes[..pos]);
+    bytes[pos..pos + 4].copy_from_slice(&index_crc.to_le_bytes());
+}
+
+#[test]
+fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
+    use tvq::exp::planner::synthetic_planner_zoo;
+    use tvq::planner::{build_planned_registry, PlannerConfig};
+
+    let (pre, fts) = synthetic_planner_zoo(3, 0x54A7);
+    let dir = tmp("sparse_corrupt");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("sparse.qtvc");
+    // Sparse-only candidate set: every task section is kind-4.
+    let cfg = PlannerConfig {
+        group: 256,
+        tvq_bits: vec![],
+        rtvq_arms: vec![],
+        dare_arms: vec![(75, 3)],
+        tall_arms: vec![(25, 4)],
+    };
+    let profile = tvq::planner::probe(&pre, &fts, &cfg).unwrap();
+    let budget = tvq::planner::min_feasible_bytes(&profile) * 2;
+    let (plan, _) = build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+    assert!(plan.has_sparse_arms());
+    let clean = std::fs::read(&path).unwrap();
+    let victim = format!("task00/{}", plan.tensors[0].name);
+
+    // 1. Bitmask bit flipped (CRCs restamped): the decoder's popcount vs
+    //    survivor-count cross-check must reject it — only for the
+    //    touched task; the others keep serving.
+    let mut bad = clean.clone();
+    // One bit, so the popcount is guaranteed to move off the header count.
+    patch_section_with_fixed_crcs(&mut bad, &victim, |body| body[16] ^= 0x01);
+    let p = dir.join("mask_flip.qtvc");
+    std::fs::write(&p, &bad).unwrap();
+    let reg = Registry::open(&p).unwrap();
+    let err = reg.load_task_vector(0).unwrap_err().to_string();
+    assert!(
+        err.contains("bitmask/survivor-count mismatch"),
+        "mask corruption not caught by the decoder: {err}"
+    );
+    assert!(reg.load_task_vector(1).is_ok(), "untouched task must still serve");
+
+    // 2. Survivor-count header inflated (CRCs restamped): same check,
+    //    other direction.
+    let mut bad = clean.clone();
+    patch_section_with_fixed_crcs(&mut bad, &victim, |body| {
+        let n = u64::from_le_bytes(body[8..16].try_into().unwrap());
+        body[8..16].copy_from_slice(&(n + 1).to_le_bytes());
+    });
+    let p = dir.join("count_bump.qtvc");
+    std::fs::write(&p, &bad).unwrap();
+    assert!(Registry::open(&p).unwrap().load_task_vector(0).is_err());
+
+    // 3. Dense length shrunk (CRCs restamped): the mask no longer spans
+    //    the claimed dense space — truncated-bitmask / geometry checks
+    //    must fire, never a scatter out of bounds.
+    let mut bad = clean.clone();
+    patch_section_with_fixed_crcs(&mut bad, &victim, |body| {
+        body[0..8].copy_from_slice(&8u64.to_le_bytes());
+    });
+    let p = dir.join("dense_shrink.qtvc");
+    std::fs::write(&p, &bad).unwrap();
+    assert!(Registry::open(&p).unwrap().load_task_vector(0).is_err());
+
+    // 4. Plain byte flip without restamping: the per-section CRC layer
+    //    catches it first (defense in depth).
+    let mut bad = clean.clone();
+    let n = bad.len();
+    bad[n - 5] ^= 0xFF;
+    let p = dir.join("crc_flip.qtvc");
+    std::fs::write(&p, &bad).unwrap();
+    let reg = Registry::open(&p).unwrap();
+    let last = reg.n_tasks() - 1;
+    let err = reg.load_task_vector(last).unwrap_err().to_string();
+    assert!(err.contains("CRC"), "expected a CRC failure, got: {err}");
     std::fs::remove_dir_all(&dir).ok();
 }
 
