@@ -1,44 +1,190 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate for the tvq crate.  Run from anywhere; fails fast.
+# Tier-1 CI gate for the tvq crate — staged, timed, selectable.
 #
-#   ./ci.sh          # build + tests + fmt + clippy
-#   ./ci.sh --quick  # build + tests only
+#   ./ci.sh                    # full gate: every stage below, in order
+#   ./ci.sh --quick            # quick gate: build + test only
+#   ./ci.sh --stage clippy     # run a single named stage
+#   ./ci.sh --list             # list stage names and what they run
 #
-# The workspace vendors its only dependency (third_party/anyhow), so every
-# step below works fully offline (--offline keeps cargo from trying the
-# network on machines without a registry mirror).
+# Stages (in order):
+#   preflight   toolchain sanity (cargo/rustc present) — pointed error if not
+#   build       cargo build --release
+#   test        cargo test -q
+#   example     packed_registry example end-to-end
+#   tabP        planner experiment smoke (TVQ_SMOKE=1)
+#   bench-diff  perf_registry bench -> BENCH_registry.json -> tvq bench diff
+#               against rust/benches/baselines/BENCH_registry.json (±20%;
+#               uncalibrated baselines record instead of gating, but the
+#               within-run mmap-vs-pread ordering invariants always apply)
+#   doc         cargo doc --no-deps with warnings denied
+#   fmt         cargo fmt --check
+#   clippy      cargo clippy --all-targets with warnings denied
+#
+# Every stage is timed; a summary table prints at the end (or on failure,
+# with the failing stage marked).  The workspace vendors its dependencies
+# (third_party/), so every step runs fully offline (--offline keeps cargo
+# off the network on machines without a registry mirror).
 
 set -euo pipefail
 cd "$(dirname "$0")"
 
 CARGO_FLAGS=(--offline)
+BENCH_TOLERANCE="${TVQ_BENCH_TOLERANCE:-0.20}"
 
-echo "==> cargo build --release"
-cargo build --release "${CARGO_FLAGS[@]}"
+STAGE_NAMES=(preflight build test example tabP bench-diff doc fmt clippy)
+QUICK_STAGES=(preflight build test)
 
-echo "==> cargo test -q"
-cargo test -q "${CARGO_FLAGS[@]}"
+declare -a RAN_STAGES=()
+declare -a RAN_TIMES=()
+declare -a RAN_STATUS=()
 
-if [[ "${1:-}" == "--quick" ]]; then
-    echo "ci: quick gate passed"
-    exit 0
-fi
+stage_preflight() {
+    # A bare `cargo: command not found` mid-gate helps nobody; fail here,
+    # once, with the fix spelled out.
+    local missing=()
+    command -v cargo >/dev/null 2>&1 || missing+=(cargo)
+    command -v rustc >/dev/null 2>&1 || missing+=(rustc)
+    if ((${#missing[@]})); then
+        echo "ci: preflight FAILED — Rust toolchain missing: ${missing[*]}" >&2
+        echo "    This gate needs cargo + rustc on PATH (any recent stable)." >&2
+        echo "    Install via rustup:  curl https://sh.rustup.rs -sSf | sh" >&2
+        echo "    or point PATH at an existing toolchain, then re-run ./ci.sh" >&2
+        return 2
+    fi
+    echo "toolchain: $(rustc --version) / $(cargo --version)"
+}
 
-echo "==> example packed_registry"
-cargo run --release "${CARGO_FLAGS[@]}" --example packed_registry > /dev/null
+stage_build() {
+    cargo build --release "${CARGO_FLAGS[@]}"
+}
 
-echo "==> planner experiment tabP (smoke)"
-TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabP > /dev/null
+stage_test() {
+    cargo test -q "${CARGO_FLAGS[@]}"
+}
 
-echo "==> cargo doc --no-deps (warnings denied)"
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps "${CARGO_FLAGS[@]}" > /dev/null
+stage_example() {
+    cargo run --release "${CARGO_FLAGS[@]}" --example packed_registry > /dev/null
+}
 
-echo "==> cargo fmt --check"
-cargo fmt --check
+stage_tabP() {
+    TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabP > /dev/null
+}
 
-echo "==> cargo clippy -- -D warnings"
-# --all-targets covers the planner/ module (lib + its tests), the new
-# planner_integration test, and the tabP bench; warnings fail the gate.
-cargo clippy --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
+stage_bench-diff() {
+    # && chain, not separate lines: run_stage calls stages inside an `if`,
+    # where bash suppresses errexit — without the chain a failed bench
+    # would still run the diff.
+    mkdir -p target \
+        && TVQ_BENCH_OUT=target/BENCH_registry.json \
+            cargo bench "${CARGO_FLAGS[@]}" --bench perf_registry \
+        && cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- bench diff \
+            --current target/BENCH_registry.json \
+            --baseline rust/benches/baselines/BENCH_registry.json \
+            --tolerance "${BENCH_TOLERANCE}"
+}
 
-echo "ci: all gates passed"
+stage_doc() {
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps "${CARGO_FLAGS[@]}" > /dev/null
+}
+
+stage_fmt() {
+    cargo fmt --check
+}
+
+stage_clippy() {
+    # --all-targets covers the lib, tests, examples and benches; warnings
+    # fail the gate.
+    cargo clippy --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
+}
+
+print_summary() {
+    local total=0
+    echo
+    echo "ci summary:"
+    printf '  %-12s %8s  %s\n' "stage" "time" "status"
+    local i
+    for i in "${!RAN_STAGES[@]}"; do
+        printf '  %-12s %7ss  %s\n' "${RAN_STAGES[$i]}" "${RAN_TIMES[$i]}" "${RAN_STATUS[$i]}"
+        total=$((total + ${RAN_TIMES[$i]}))
+    done
+    printf '  %-12s %7ss\n' "total" "${total}"
+}
+
+run_stage() {
+    local name="$1"
+    echo "==> stage ${name}"
+    local t0=${SECONDS}
+    if "stage_${name}"; then
+        RAN_STAGES+=("${name}"); RAN_TIMES+=($((SECONDS - t0))); RAN_STATUS+=("ok")
+    else
+        local rc=$?
+        RAN_STAGES+=("${name}"); RAN_TIMES+=($((SECONDS - t0))); RAN_STATUS+=("FAILED")
+        print_summary
+        echo "ci: stage ${name} failed (exit ${rc})" >&2
+        exit "${rc}"
+    fi
+}
+
+list_stages() {
+    # The stage table at the top of this file is the documentation; print
+    # the names machine-readably for --stage completion.
+    printf '%s\n' "${STAGE_NAMES[@]}"
+}
+
+main() {
+    local selection=("${STAGE_NAMES[@]}")
+    case "${1:-}" in
+        "") ;;
+        --quick)
+            selection=("${QUICK_STAGES[@]}")
+            ;;
+        --list)
+            list_stages
+            exit 0
+            ;;
+        --stage)
+            local want="${2:-}"
+            if [[ -z "${want}" ]]; then
+                echo "ci: --stage needs a name; one of: ${STAGE_NAMES[*]}" >&2
+                exit 2
+            fi
+            local found=""
+            for s in "${STAGE_NAMES[@]}"; do
+                [[ "$s" == "${want}" ]] && found=1
+            done
+            if [[ -z "${found}" ]]; then
+                echo "ci: unknown stage '${want}'; one of: ${STAGE_NAMES[*]}" >&2
+                exit 2
+            fi
+            # Preflight always runs first: a missing toolchain should
+            # never surface as a cryptic cargo error inside a stage.
+            if [[ "${want}" != preflight ]]; then
+                selection=(preflight "${want}")
+            else
+                selection=(preflight)
+            fi
+            ;;
+        --help|-h)
+            # Print the header comment block (everything up to the first
+            # non-comment line), stripped of its leading '# '.
+            awk 'NR > 1 { if (!/^#/) exit; sub(/^# ?/, ""); print }' "$0"
+            exit 0
+            ;;
+        *)
+            echo "ci: unknown option '$1' (try --help)" >&2
+            exit 2
+            ;;
+    esac
+
+    for s in "${selection[@]}"; do
+        run_stage "$s"
+    done
+    print_summary
+    case "${1:-}" in
+        --quick) echo "ci: quick gate passed" ;;
+        --stage) echo "ci: stage ${2} passed (partial run — not the full gate)" ;;
+        *)       echo "ci: all gates passed" ;;
+    esac
+}
+
+main "$@"

@@ -25,6 +25,20 @@
 //! needs, so a cold serving node goes registry-file → merged variant
 //! without ever materializing the f32 zoo
 //! ([`get_or_build_merged`](ModelCache::get_or_build_merged)).
+//!
+//! # Mapped vs owned source accounting
+//!
+//! Sources themselves occupy memory while serving, and the two kinds must
+//! not be conflated: a registry opened with `IoMode::Mmap` serves its
+//! payload bytes out of the **file mapping** (OS page cache, reclaimable
+//! under pressure — reported via
+//! [`source_mapped_bytes`](ModelCache::source_mapped_bytes), never charged
+//! against the cap), while its index and decoded base caches are **owned
+//! heap** (charged against the cap as an unevictable floor once the
+//! source is registered).  [`get_or_build_merged`](ModelCache::get_or_build_merged)
+//! registers its source automatically; eviction only ever removes merged
+//! variants, so a cap smaller than the registered source overhead simply
+//! leaves no room for cached models.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -49,6 +63,16 @@ struct Entry {
     last_used: u64,
 }
 
+/// Memory footprint of one registered task-vector source.
+#[derive(Clone, Copy, Default)]
+struct SourceFootprint {
+    /// Owned heap bytes (index + decoded base caches) — counted against
+    /// the cap.
+    owned: usize,
+    /// File-mapped bytes (page cache) — reported, never counted.
+    mapped: u64,
+}
+
 #[derive(Default)]
 struct CacheState {
     entries: HashMap<VariantKey, Entry>,
@@ -57,11 +81,21 @@ struct CacheState {
     /// their estimate for the duration of the build).
     pending_bytes: usize,
     evictions: u64,
+    /// Registered serving sources, keyed by source identity.
+    sources: HashMap<String, SourceFootprint>,
 }
 
 impl CacheState {
-    fn resident(&self) -> usize {
+    /// fp32 bytes held by cached variants alone.
+    fn variant_bytes(&self) -> usize {
         self.entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// Bytes charged against the cap: cached variants plus the owned
+    /// overhead of registered sources (mapped bytes excluded — they are
+    /// reclaimable page cache, not heap).
+    fn resident(&self) -> usize {
+        self.variant_bytes() + self.sources.values().map(|s| s.owned).sum::<usize>()
     }
 }
 
@@ -258,9 +292,16 @@ impl ModelCache {
         pre: &Checkpoint,
         source: &dyn TaskVectorSource,
     ) -> Result<Arc<MergedModel>> {
-        self.get_or_build_sized(merger.name(), &source.source_id(), pre.fp32_bytes(), || {
-            merge_from_source(merger, pre, source, None)
-        })
+        // Register before the build (so the source's owned floor is
+        // visible to concurrent publishes) and refresh after (the build
+        // may have warmed decoded base caches, growing the owned figure).
+        self.register_source(source);
+        let built =
+            self.get_or_build_sized(merger.name(), &source.source_id(), pre.fp32_bytes(), || {
+                merge_from_source(merger, pre, source, None)
+            })?;
+        self.register_source(source);
+        Ok(built)
     }
 
     pub fn contains(&self, method: &str, scheme: &str) -> bool {
@@ -289,9 +330,42 @@ impl ModelCache {
             .is_some()
     }
 
-    /// Resident fp32 bytes across all cached variants.
+    /// Resident fp32 bytes across all cached variants (registered source
+    /// overhead not included; see
+    /// [`source_overhead_bytes`](Self::source_overhead_bytes)).
     pub fn resident_bytes(&self) -> usize {
-        self.state.lock().unwrap().resident()
+        self.state.lock().unwrap().variant_bytes()
+    }
+
+    /// Record (or refresh) a serving source's memory footprint, keyed by
+    /// its identity: owned bytes join the capped total as an unevictable
+    /// floor, mapped bytes are tracked for observability only.  Re-register
+    /// after base caches warm up to keep the owned figure current;
+    /// [`get_or_build_merged`](Self::get_or_build_merged) does both
+    /// automatically.
+    pub fn register_source(&self, source: &dyn TaskVectorSource) {
+        let mut state = self.state.lock().unwrap();
+        state.sources.insert(
+            source.source_id(),
+            SourceFootprint {
+                owned: source.resident_overhead_bytes(),
+                mapped: source.mapped_bytes(),
+            },
+        );
+    }
+
+    /// Owned heap bytes pinned by registered sources (counted against the
+    /// byte cap).
+    pub fn source_overhead_bytes(&self) -> usize {
+        let state = self.state.lock().unwrap();
+        state.sources.values().map(|s| s.owned).sum()
+    }
+
+    /// File-mapped bytes served by registered sources (page cache;
+    /// reported, never charged against the cap).
+    pub fn source_mapped_bytes(&self) -> u64 {
+        let state = self.state.lock().unwrap();
+        state.sources.values().map(|s| s.mapped).sum()
     }
 
     /// Keys currently resident (sorted for deterministic output).
@@ -422,6 +496,85 @@ mod tests {
         assert_eq!(cache.len(), 2);
         assert!(cache.resident_bytes() <= 2 * MODEL_BYTES);
         assert_eq!(cache.state.lock().unwrap().pending_bytes, 0);
+    }
+
+    /// A fake serving source with a fixed memory footprint.
+    struct FakeSource {
+        id: &'static str,
+        owned: usize,
+        mapped: u64,
+    }
+
+    impl crate::registry::TaskVectorSource for FakeSource {
+        fn n_tasks(&self) -> usize {
+            1
+        }
+        fn task_name(&self, _t: usize) -> String {
+            "task00".into()
+        }
+        fn task_vector(&self, _t: usize) -> Result<Checkpoint> {
+            let mut ck = Checkpoint::new();
+            ck.insert("w", Tensor::zeros(&[4, 4]));
+            Ok(ck)
+        }
+        fn scheme_label(&self) -> String {
+            "FAKE".into()
+        }
+        fn source_id(&self) -> String {
+            self.id.into()
+        }
+        fn resident_overhead_bytes(&self) -> usize {
+            self.owned
+        }
+        fn mapped_bytes(&self) -> u64 {
+            self.mapped
+        }
+    }
+
+    #[test]
+    fn source_owned_bytes_count_against_cap_mapped_do_not() {
+        // Cap fits two variants with nothing else registered.
+        let cache = ModelCache::with_byte_cap(2 * MODEL_BYTES);
+        cache.get_or_build("ta", "a", || Ok(model())).unwrap();
+        cache.get_or_build("ta", "b", || Ok(model())).unwrap();
+        assert_eq!(cache.len(), 2);
+
+        // An mmap-backed source: huge mapped span, tiny owned overhead.
+        // Mapped bytes are page cache — registering it must NOT squeeze
+        // variants out.
+        cache.register_source(&FakeSource { id: "mmap", owned: 0, mapped: 1 << 30 });
+        cache.get_or_build("ta", "a", || unreachable!("must hit")).unwrap();
+        assert_eq!(cache.source_mapped_bytes(), 1 << 30);
+        assert_eq!(cache.source_overhead_bytes(), 0);
+        assert_eq!(cache.len(), 2, "mapped bytes wrongly charged against the cap");
+
+        // An owned-overhead source (pread-style decoded caches) is an
+        // unevictable floor: the next publish must evict a variant to
+        // stay under cap.
+        cache.register_source(&FakeSource { id: "owned", owned: MODEL_BYTES, mapped: 0 });
+        assert_eq!(cache.source_overhead_bytes(), MODEL_BYTES);
+        cache.get_or_build("ta", "c", || Ok(model())).unwrap();
+        assert_eq!(
+            cache.resident_bytes() + cache.source_overhead_bytes(),
+            2 * MODEL_BYTES,
+            "variants + source floor must fit the cap"
+        );
+        assert!(cache.contains("ta", "c"));
+        // Re-registering the same id refreshes in place, not double-counts.
+        cache.register_source(&FakeSource { id: "owned", owned: MODEL_BYTES / 2, mapped: 0 });
+        assert_eq!(cache.source_overhead_bytes(), MODEL_BYTES / 2);
+    }
+
+    #[test]
+    fn get_or_build_merged_registers_its_source() {
+        let cache = ModelCache::new();
+        let src = FakeSource { id: "auto", owned: 123, mapped: 456 };
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::zeros(&[4, 4]));
+        let ta = crate::merge::TaskArithmetic::default();
+        cache.get_or_build_merged(&ta, &pre, &src).unwrap();
+        assert_eq!(cache.source_overhead_bytes(), 123);
+        assert_eq!(cache.source_mapped_bytes(), 456);
     }
 
     #[test]

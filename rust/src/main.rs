@@ -48,6 +48,7 @@ subcommands:
   serve       boot the serving coordinator and run a load demo
   registry    pack / inspect / verify packed .qtvc registries
   experiment  regenerate a paper table/figure by id (tab1, fig4, ...)
+  bench       gate bench JSON reports (ci.sh bench-diff stage)
   list        list presets, artifacts and experiment ids
 
 run `tvq <subcommand> --help` for options."
@@ -68,6 +69,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "registry" => cmd_registry(rest),
         "experiment" => cmd_experiment(rest),
+        "bench" => cmd_bench(rest),
         "list" => cmd_list(),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -537,6 +539,86 @@ example:
         reg.entries().len(),
         reg.n_tasks(),
         reg.file_bytes()
+    );
+    Ok(())
+}
+
+fn bench_usage() -> String {
+    "tvq bench — machine-readable benchmark gating
+
+usage:
+  tvq bench diff --current <BENCH_x.json> [--baseline <file>] [--tolerance 0.20]
+
+`diff` enforces (1) the ordering invariants a bench declares about its own
+run (e.g. mmap section reads must not be slower than pread) and (2), when
+the baseline carries `calibrated: true`, per-case mean-time regressions
+beyond the tolerance.  Uncalibrated baselines record without gating, so a
+fresh machine class can bootstrap: run the bench, inspect, commit the
+fresh report with `calibrated: true`."
+        .to_string()
+}
+
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let Some(action) = argv.first() else {
+        println!("{}", bench_usage());
+        return Ok(());
+    };
+    match action.as_str() {
+        "diff" => cmd_bench_diff(&argv[1..]),
+        "--help" | "-h" | "help" => {
+            println!("{}", bench_usage());
+            Ok(())
+        }
+        other => bail!("unknown bench action {other:?}\n\n{}", bench_usage()),
+    }
+}
+
+fn cmd_bench_diff(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tvq bench diff", "gate a bench JSON report against a baseline")
+        .long_about(
+            "Reads the current run's BENCH_*.json, checks the within-run ordering
+invariants it declares, and — when the baseline file is calibrated —
+fails on any case whose mean time regressed past the tolerance.
+Exits non-zero on violation, so ci.sh can gate on it.
+
+example:
+  TVQ_BENCH_OUT=target/BENCH_registry.json cargo bench --bench perf_registry
+  tvq bench diff --current target/BENCH_registry.json \\
+                 --baseline rust/benches/baselines/BENCH_registry.json",
+        )
+        .req("current", "fresh BENCH_*.json from this run")
+        .opt("baseline", "", "committed baseline JSON (empty = invariants only)")
+        .opt("tolerance", "0.20", "relative tolerance (0.20 = +/-20%)");
+    let args = cmd.parse(argv)?;
+    let current_path = args.get_str("current")?;
+    let current = tvq::util::json::Json::parse(
+        &std::fs::read_to_string(current_path)
+            .map_err(|e| anyhow!("reading --current {current_path}: {e}"))?,
+    )?;
+    let baseline_path = args.get_str("baseline")?.to_string();
+    let baseline = if baseline_path.is_empty() {
+        None
+    } else {
+        Some(tvq::util::json::Json::parse(
+            &std::fs::read_to_string(&baseline_path)
+                .map_err(|e| anyhow!("reading --baseline {baseline_path}: {e}"))?,
+        )?)
+    };
+    let tolerance: f64 = args.get_str("tolerance")?.parse()?;
+    let report = tvq::util::benchcmp::diff_reports(&current, baseline.as_ref(), tolerance)?;
+    for note in &report.notes {
+        println!("  {note}");
+    }
+    if !report.ok() {
+        for f in &report.failures {
+            eprintln!("  {f}");
+        }
+        bail!("bench regression gate failed ({} violation(s))", report.failures.len());
+    }
+    println!(
+        "bench diff: OK ({} check(s), tolerance {:.0}%)",
+        report.notes.len(),
+        100.0 * tolerance
     );
     Ok(())
 }

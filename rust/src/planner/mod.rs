@@ -56,7 +56,6 @@ pub use solve::{min_feasible_bytes, solve};
 use anyhow::{bail, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::quant::fused::{dequant_merge_flat, dequant_merge_rtvq_flat};
 use crate::quant::{GroupQuantized, SparseGroupQuantized};
 use crate::registry::{Registry, RegistryBuilder, WriteSummary};
 use crate::tensor::Tensor;
@@ -413,15 +412,23 @@ pub fn build_planned_registry<P: AsRef<std::path::Path>>(
 
 /// Fused dequantize-and-merge straight from a planned registry's payload
 /// sections: `theta_pre + sum_t lams[t] * tau_hat_t`, tensor by tensor,
-/// without materializing any per-task f32 task vector.
+/// without materializing any per-task f32 task vector — and, under
+/// `IoMode::Mmap`, without copying a single payload byte: every section
+/// is decoded as a borrowed view ([`Registry::planned_task_view`]) and
+/// dequantized straight out of the file mapping.
 ///
 /// `tasks` selects a subset (all tasks when `None`); `lams` must have one
-/// coefficient per *selected* task.  TVQ-arm tensors accumulate through
-/// [`dequant_merge_flat`]; RTVQ-arm tensors fold the shared base in once
-/// scaled by `sum(lams)` via [`dequant_merge_rtvq_flat`]; sparse-arm
-/// (DARE / TALL) tensors scatter-accumulate only their survivors via
-/// [`SparseGroupQuantized::axpy_into`] — masked-out weights never touch
-/// the accumulator.
+/// coefficient per *selected* task.  TVQ-arm tensors accumulate per task
+/// through [`GroupQuantizedView::axpy_into`](crate::quant::GroupQuantizedView::axpy_into)
+/// (the same fused loop
+/// [`dequant_merge_flat`](crate::quant::fused::dequant_merge_flat) runs
+/// over owned payloads); RTVQ-arm tensors fold the shared base in once
+/// scaled by `sum(lams)` first (the
+/// [`dequant_merge_rtvq_flat`](crate::quant::fused::dequant_merge_rtvq_flat)
+/// order); sparse-arm (DARE / TALL) tensors scatter-accumulate only their
+/// survivors — masked-out weights never touch the accumulator.  The only
+/// allocations are the output tensors and three scratch buffers reused
+/// across every (task, tensor) pair.
 pub fn fused_merge(
     reg: &Registry,
     pre: &Checkpoint,
@@ -462,6 +469,13 @@ pub fn fused_merge(
 
     let mut out = Checkpoint::new();
     let mut buf: Vec<f32> = Vec::new();
+    // Serve-path scratches, reused across every (task, tensor) pair: the
+    // section scratch stays empty under IoMode::Mmap (sections are
+    // borrowed from the mapping), and codes/vals hold the per-section
+    // unpacked codes / dequantized survivor values.
+    let mut scratch = crate::registry::SectionScratch::default();
+    let mut codes: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
     for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
         let pre_t = pre.get(&tensor.name)?;
         if pre_t.numel() != tensor.numel() || pre_t.shape() != &tensor.shape[..] {
@@ -473,26 +487,30 @@ pub fn fused_merge(
             );
         }
         let pre_flat = padded_flat(pre, &tensor.name, tensor.padded())?;
+        buf.clear();
+        buf.extend_from_slice(&pre_flat);
         match a.arm {
-            Arm::Tvq { .. } | Arm::Rtvq { .. } => {
-                let sections: Vec<GroupQuantized> = indices
-                    .iter()
-                    .map(|&t| reg.load_planned_task_section(t, l))
-                    .collect::<Result<_>>()?;
-                let refs: Vec<&GroupQuantized> = sections.iter().collect();
-                match a.arm {
-                    Arm::Tvq { .. } => dequant_merge_flat(&pre_flat, &refs, lams, &mut buf)?,
-                    _ => {
-                        let base = reg.load_planned_base_section(l)?;
-                        dequant_merge_rtvq_flat(&pre_flat, &base, &refs, lams, &mut buf)?
-                    }
+            Arm::Tvq { .. } => {
+                for (&t, &lam) in indices.iter().zip(lams) {
+                    let view = reg.planned_task_view(t, l, &mut scratch)?;
+                    view.as_group()?.axpy_into(lam, &mut buf, &mut codes)?;
+                }
+            }
+            Arm::Rtvq { .. } => {
+                // Base first, scaled by sum(lams) — the same accumulation
+                // order dequant_merge_rtvq_flat uses — then the offsets.
+                let lam_sum: f32 = lams.iter().sum();
+                reg.planned_base_view(l, &mut scratch)?
+                    .axpy_into(lam_sum, &mut buf, &mut codes)?;
+                for (&t, &lam) in indices.iter().zip(lams) {
+                    let view = reg.planned_task_view(t, l, &mut scratch)?;
+                    view.as_group()?.axpy_into(lam, &mut buf, &mut codes)?;
                 }
             }
             Arm::Dare { .. } | Arm::Tall { .. } => {
-                buf.clear();
-                buf.extend_from_slice(&pre_flat);
                 for (&t, &lam) in indices.iter().zip(lams) {
-                    reg.load_planned_sparse_section(t, l)?.axpy_into(lam, &mut buf);
+                    let view = reg.planned_task_view(t, l, &mut scratch)?;
+                    view.as_sparse()?.axpy_into(lam, &mut buf, &mut codes, &mut vals);
                 }
             }
         }

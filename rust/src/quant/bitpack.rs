@@ -29,6 +29,109 @@ fn unpack_byte_blocks<const BITS: usize, const BPB: usize, const CPB: usize>(
     n_blocks * CPB
 }
 
+/// Decode all full byte-blocks of `out` for any 1..=8-bit width by
+/// dispatching to the right compile-time block shape: lcm(bits, 8) bits is
+/// a whole number of bytes holding a whole number of codes (1 byte = eight
+/// 1-bit codes, 3 bytes = eight 3-bit codes, ...).  Returns how many codes
+/// were decoded; the caller finishes the ragged tail code-by-code.
+#[inline]
+fn unpack_blocks(bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
+    match bits {
+        1 => unpack_byte_blocks::<1, 1, 8>(bytes, out),
+        2 => unpack_byte_blocks::<2, 1, 4>(bytes, out),
+        3 => unpack_byte_blocks::<3, 3, 8>(bytes, out),
+        4 => unpack_byte_blocks::<4, 1, 2>(bytes, out),
+        5 => unpack_byte_blocks::<5, 5, 8>(bytes, out),
+        6 => unpack_byte_blocks::<6, 3, 4>(bytes, out),
+        7 => unpack_byte_blocks::<7, 7, 8>(bytes, out),
+        8 => unpack_byte_blocks::<8, 1, 1>(bytes, out),
+        _ => unreachable!("bit widths are validated to 1..=8"),
+    }
+}
+
+/// A borrowed, zero-copy view over a packed code stream — the exact byte
+/// layout of [`BitPacked::packed_bytes`], decoded in place.  This is what
+/// the registry's mmap serving path hands out: the bytes stay in the file
+/// mapping and are never copied into an owned container.  Stray bits in
+/// the final byte past the last code are ignored (each decode masks per
+/// code), so a view over an untrusted section decodes identically to
+/// `BitPacked::from_packed_bytes` without the tail-clearing copy.
+#[derive(Clone, Copy, Debug)]
+pub struct BitPackedView<'a> {
+    bits: u8,
+    len: usize,
+    bytes: &'a [u8],
+}
+
+impl<'a> BitPackedView<'a> {
+    /// Borrow `bytes` as `len` codes of `bits` bits.  `bytes` must be
+    /// exactly `ceil(len * bits / 8)` long — the same geometry
+    /// [`BitPacked::from_packed_bytes`] enforces.
+    pub fn new(bits: u8, len: usize, bytes: &'a [u8]) -> Result<Self> {
+        if !(1..=8).contains(&bits) {
+            bail!("bits must be in 1..=8, got {bits}");
+        }
+        let total_bits = len
+            .checked_mul(bits as usize)
+            .ok_or_else(|| anyhow::anyhow!("code count {len} at {bits} bits overflows"))?;
+        let nbytes = total_bits.div_ceil(8);
+        if bytes.len() != nbytes {
+            bail!(
+                "packed payload is {} bytes, expected {nbytes} for {len} codes at {bits} bits",
+                bytes.len()
+            );
+        }
+        Ok(Self { bits, len, bytes })
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Random access to one code (a code spans at most two bytes).
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        let bits = self.bits as usize;
+        let bitpos = i * bits;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mask = (1u32 << bits) - 1;
+        let mut v = (self.bytes[byte] as u32) >> off;
+        if off + bits > 8 {
+            v |= (self.bytes[byte + 1] as u32) << (8 - off);
+        }
+        v & mask
+    }
+
+    /// Unpack every code into `out` (must be `len` long), straight from
+    /// the borrowed bytes — no intermediate word vector.
+    pub fn unpack_into(&self, out: &mut [u32]) {
+        assert_eq!(out.len(), self.len);
+        let done = unpack_blocks(self.bits, self.bytes, out);
+        for (i, o) in out[done..].iter_mut().enumerate() {
+            *o = self.get(done + i);
+        }
+    }
+
+    /// Materialize an owned [`BitPacked`] (stray tail bits cleared).
+    pub fn to_owned(self) -> BitPacked {
+        BitPacked::from_packed_bytes(self.bits, self.len, self.bytes)
+            .expect("view geometry validated at construction")
+    }
+}
+
 /// A packed vector of `len` codes of `bits` bits each.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitPacked {
@@ -130,13 +233,7 @@ impl BitPacked {
                     self.words.len() * 8,
                 )
             };
-            let done = match self.bits {
-                3 => unpack_byte_blocks::<3, 3, 8>(bytes, out),
-                5 => unpack_byte_blocks::<5, 5, 8>(bytes, out),
-                6 => unpack_byte_blocks::<6, 3, 4>(bytes, out),
-                7 => unpack_byte_blocks::<7, 7, 8>(bytes, out),
-                _ => unreachable!("aligned widths handled above"),
-            };
+            let done = unpack_blocks(self.bits, bytes, out);
             for (i, o) in out[done..].iter_mut().enumerate() {
                 *o = self.get(done + i);
             }
@@ -381,6 +478,58 @@ mod tests {
         let q = BitPacked::from_packed_bytes(3, 3, &wire).unwrap();
         assert_eq!(q, p);
         assert_eq!(q.unpack(), vec![7, 0, 7]);
+    }
+
+    #[test]
+    fn view_decodes_identically_to_owned_for_all_widths() {
+        // The zero-copy view must agree with the owned container on every
+        // width, including the word-straddling ones, over lengths landing
+        // on and around byte/word boundaries.
+        for bits in 1u8..=8 {
+            let maxcode = (1u32 << bits) - 1;
+            for &len in &[1usize, 7, 8, 9, 63, 64, 65, 129, 1000] {
+                let codes: Vec<u32> = (0..len)
+                    .map(|i| (i as u32).wrapping_mul(2654435761) & maxcode)
+                    .collect();
+                let p = BitPacked::pack(&codes, bits).unwrap();
+                let wire = p.packed_bytes();
+                let v = BitPackedView::new(bits, len, &wire).unwrap();
+                assert_eq!(v.bits(), bits);
+                assert_eq!(v.len(), len);
+                let mut out = vec![0u32; len];
+                v.unpack_into(&mut out);
+                assert_eq!(out, codes, "bits={bits} len={len}: unpack mismatch");
+                for (i, &c) in codes.iter().enumerate() {
+                    assert_eq!(v.get(i), c, "bits={bits} len={len}: get({i})");
+                }
+                assert_eq!(v.to_owned(), p, "bits={bits} len={len}: to_owned");
+            }
+        }
+    }
+
+    #[test]
+    fn view_ignores_stray_tail_bits() {
+        // 3 codes x 3 bits = 9 bits -> 2 bytes, 7 stray bits; the view
+        // must mask them out on read without mutating the source bytes.
+        let p = BitPacked::pack(&[7, 0, 7], 3).unwrap();
+        let mut wire = p.packed_bytes();
+        wire[1] |= 0xF0;
+        let v = BitPackedView::new(3, 3, &wire).unwrap();
+        let mut out = vec![0u32; 3];
+        v.unpack_into(&mut out);
+        assert_eq!(out, vec![7, 0, 7]);
+        assert_eq!(v.to_owned(), p);
+    }
+
+    #[test]
+    fn view_validates_geometry() {
+        let p = BitPacked::pack(&[1, 2, 3, 4, 5], 3).unwrap();
+        let wire = p.packed_bytes();
+        assert!(BitPackedView::new(0, 5, &wire).is_err());
+        assert!(BitPackedView::new(9, 5, &wire).is_err());
+        assert!(BitPackedView::new(3, 6, &wire).is_err());
+        assert!(BitPackedView::new(3, 5, &wire[..1]).is_err());
+        assert!(BitPackedView::new(3, usize::MAX, &wire).is_err());
     }
 
     #[test]

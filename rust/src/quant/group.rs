@@ -10,7 +10,7 @@
 use anyhow::{bail, Result};
 
 use super::affine::AffineParams;
-use super::bitpack::BitPacked;
+use super::bitpack::{BitPacked, BitPackedView};
 
 /// A flat vector quantized in fixed-size groups.
 #[derive(Clone, Debug, PartialEq)]
@@ -122,6 +122,153 @@ impl GroupQuantized {
     }
 }
 
+/// A borrowed, zero-copy view over a group-quantized vector in its wire
+/// layout: per-group affine params as raw little-endian f32 bytes plus a
+/// [`BitPackedView`] over the packed codes.  The registry's mmap serving
+/// path dequantizes straight out of this — scales/zps are decoded two
+/// `f32::from_le_bytes` per group (the section body carries no alignment
+/// guarantee, so the params cannot be reinterpreted as an `&[f32]`).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupQuantizedView<'a> {
+    bits: u8,
+    group: usize,
+    n_groups: usize,
+    /// `scales` then `zps`, 4 LE bytes per group each (`8 * n_groups` total).
+    params: &'a [u8],
+    codes: BitPackedView<'a>,
+}
+
+impl<'a> GroupQuantizedView<'a> {
+    /// Assemble from wire parts; `params` holds the scales then the zps
+    /// (4 bytes per group each) and `codes` must cover exactly
+    /// `group * n_groups` codes at `bits`.
+    pub fn new(
+        bits: u8,
+        group: usize,
+        n_groups: usize,
+        params: &'a [u8],
+        codes: BitPackedView<'a>,
+    ) -> Result<Self> {
+        if !(1..=8).contains(&bits) {
+            bail!("QTVC group payload: invalid bit width {bits}");
+        }
+        if group == 0 {
+            bail!("QTVC group payload: zero group size");
+        }
+        if params.len() != n_groups.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!("QTVC group payload: n_groups {n_groups} overflows")
+        })? {
+            bail!(
+                "QTVC group payload: {} param bytes for {n_groups} groups (want {})",
+                params.len(),
+                n_groups * 8
+            );
+        }
+        let len = group
+            .checked_mul(n_groups)
+            .ok_or_else(|| anyhow::anyhow!("QTVC group payload: group*n_groups overflows"))?;
+        if codes.bits() != bits || codes.len() != len {
+            bail!(
+                "QTVC group payload: code stream is {} codes at {} bits, want {len} at {bits}",
+                codes.len(),
+                codes.bits()
+            );
+        }
+        Ok(Self { bits, group, n_groups, params, codes })
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    #[inline]
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.group * self.n_groups
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n_groups == 0
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    #[inline]
+    pub fn scale(&self, gi: usize) -> f32 {
+        f32::from_le_bytes(self.params[gi * 4..gi * 4 + 4].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn zp(&self, gi: usize) -> f32 {
+        let base = self.n_groups * 4 + gi * 4;
+        f32::from_le_bytes(self.params[base..base + 4].try_into().unwrap())
+    }
+
+    /// `out[i] += lam * dq(self)[i]` — the fused serve-path accumulate,
+    /// decoding codes and params straight from the borrowed bytes.
+    /// `codes_scratch` is reused across calls (resized, never shrunk).
+    pub fn axpy_into(
+        &self,
+        lam: f32,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+    ) -> Result<()> {
+        if out.len() != self.len() {
+            bail!("flat length mismatch: {} vs {}", self.len(), out.len());
+        }
+        codes_scratch.resize(self.len(), 0);
+        self.codes.unpack_into(codes_scratch);
+        for (gi, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
+            let a = lam * self.scale(gi);
+            let b = -a * self.zp(gi);
+            let base = gi * self.group;
+            let dst = &mut out[base..base + self.group];
+            for (d, &c) in dst.iter_mut().zip(chunk) {
+                *d += a * c as f32 + b;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequantize into a caller buffer (overwrites all of `out`).
+    /// Bit-identical to [`GroupQuantized::dequantize_into`] — both compute
+    /// `scale * (code - zp)` — so a view-served reconstruction equals the
+    /// owned one exactly, not approximately.
+    pub fn dequantize_into(&self, out: &mut [f32], codes_scratch: &mut Vec<u32>) {
+        assert_eq!(out.len(), self.len());
+        codes_scratch.resize(self.len(), 0);
+        self.codes.unpack_into(codes_scratch);
+        for (gi, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
+            let scale = self.scale(gi);
+            let zp = self.zp(gi);
+            let base = gi * self.group;
+            for (j, &c) in chunk.iter().enumerate() {
+                out[base + j] = scale * (c as f32 - zp);
+            }
+        }
+    }
+
+    /// Materialize an owned [`GroupQuantized`] (decodes params + codes).
+    pub fn to_owned(self) -> GroupQuantized {
+        GroupQuantized {
+            bits: self.bits,
+            group: self.group,
+            scales: (0..self.n_groups).map(|g| self.scale(g)).collect(),
+            zps: (0..self.n_groups).map(|g| self.zp(g)).collect(),
+            codes: self.codes.to_owned(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +361,75 @@ mod tests {
             assert!((a.sse_against(&v) - want).abs() < 1e-12);
         }
         assert!(GroupQuantized::quantize_padded(&[0.0; 4], 3, 0).is_err());
+    }
+
+    /// Wire parts for a view over `g`: (params bytes, packed code bytes).
+    fn wire_parts(g: &GroupQuantized) -> (Vec<u8>, Vec<u8>) {
+        let mut params = Vec::new();
+        for &s in &g.scales {
+            params.extend_from_slice(&s.to_le_bytes());
+        }
+        for &z in &g.zps {
+            params.extend_from_slice(&z.to_le_bytes());
+        }
+        (params, g.codes.packed_bytes())
+    }
+
+    #[test]
+    fn view_matches_owned_bit_exactly() {
+        let mut rng = Rng::new(17);
+        for (len, bits, group) in [(4096usize, 3u8, 512usize), (1024, 2, 256), (640, 8, 64)] {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 0.05);
+            let g = GroupQuantized::quantize(&v, bits, group).unwrap();
+            let (params, code_bytes) = wire_parts(&g);
+            let codes = BitPackedView::new(bits, len, &code_bytes).unwrap();
+            let view =
+                GroupQuantizedView::new(bits, group, g.n_groups(), &params, codes).unwrap();
+            assert_eq!(view.len(), g.len());
+            assert_eq!(view.n_groups(), g.n_groups());
+            for gi in 0..g.n_groups() {
+                assert_eq!(view.scale(gi), g.scales[gi]);
+                assert_eq!(view.zp(gi), g.zps[gi]);
+            }
+            // Dequantization is bit-identical, not approximately equal.
+            let mut scratch = Vec::new();
+            let mut got = vec![0.0f32; len];
+            view.dequantize_into(&mut got, &mut scratch);
+            assert_eq!(got, g.dequantize(), "bits={bits} group={group}");
+            // The axpy accumulate agrees with the owned fused loop.
+            let mut acc = vec![1.0f32; len];
+            view.axpy_into(0.25, &mut acc, &mut scratch).unwrap();
+            let dq = g.dequantize();
+            for i in 0..len {
+                assert!((acc[i] - (1.0 + 0.25 * dq[i])).abs() < 1e-6);
+            }
+            // Owned materialization round-trips the whole struct.
+            assert_eq!(view.to_owned(), g);
+        }
+    }
+
+    #[test]
+    fn view_rejects_inconsistent_geometry() {
+        let mut rng = Rng::new(18);
+        let mut v = vec![0.0f32; 512];
+        rng.fill_normal(&mut v, 0.05);
+        let g = GroupQuantized::quantize(&v, 4, 128).unwrap();
+        let (params, code_bytes) = wire_parts(&g);
+        let codes = BitPackedView::new(4, 512, &code_bytes).unwrap();
+        // Bad bit width / zero group / params-vs-group-count mismatch /
+        // code-count mismatch all fail closed.
+        assert!(GroupQuantizedView::new(0, 128, 4, &params, codes).is_err());
+        assert!(GroupQuantizedView::new(4, 0, 4, &params, codes).is_err());
+        assert!(GroupQuantizedView::new(4, 128, 3, &params, codes).is_err());
+        assert!(GroupQuantizedView::new(4, 128, 4, &params[..24], codes).is_err());
+        assert!(GroupQuantizedView::new(4, 256, 4, &params, codes).is_err());
+        let mismatched = BitPackedView::new(2, 512, &code_bytes[..128]).unwrap();
+        assert!(GroupQuantizedView::new(4, 128, 4, &params, mismatched).is_err());
+        // A length mismatch in axpy is an error, not a panic.
+        let ok = GroupQuantizedView::new(4, 128, 4, &params, codes).unwrap();
+        let mut short = vec![0.0f32; 100];
+        assert!(ok.axpy_into(1.0, &mut short, &mut Vec::new()).is_err());
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //! * [`affine`] — asymmetric affine quantizer (Eq. 1-2) with the error
 //!   bound of Eq. 3 as a checked invariant.
 //! * [`bitpack`] — dense 1..=8-bit code containers (the actual storage).
+//!   Each packed container has a borrowed twin (`BitPackedView`,
+//!   `GroupQuantizedView`, `SparseGroupQuantizedView`) that decodes in
+//!   place from wire bytes — the registry's zero-copy mmap serve path.
 //! * [`tvq`] — per-tensor quantized checkpoints: quantize the *task
 //!   vector* tau = theta_ft - theta_pre (TVQ, Section 4.2) or the full
 //!   fine-tuned checkpoint (FQ baseline, Fig. 5a).
@@ -27,11 +30,11 @@ pub mod storage;
 pub mod tvq;
 
 pub use affine::AffineParams;
-pub use bitpack::BitPacked;
+pub use bitpack::{BitPacked, BitPackedView};
 pub use channel::{ChannelQuantized, Granularity};
-pub use group::GroupQuantized;
+pub use group::{GroupQuantized, GroupQuantizedView};
 pub use rtvq::Rtvq;
-pub use sparse::SparseGroupQuantized;
+pub use sparse::{SparseGroupQuantized, SparseGroupQuantizedView};
 pub use storage::StorageReport;
 pub use tvq::{QuantizedCheckpoint, QuantizedTensor, Tvq};
 

@@ -16,7 +16,75 @@
 
 use anyhow::{bail, Result};
 
-use super::group::GroupQuantized;
+use super::group::{GroupQuantized, GroupQuantizedView};
+
+/// Structural invariants shared by the owned container and the borrowed
+/// view: both funnel through here so a corrupt section fails closed with
+/// the same error no matter which decode path touched it first.
+fn validate_parts(
+    dense_len: usize,
+    n_survivors: usize,
+    mask: &[u8],
+    survivor_len: usize,
+    group: usize,
+) -> Result<()> {
+    if dense_len == 0 {
+        bail!("sparse payload: zero dense length");
+    }
+    if n_survivors == 0 || n_survivors > dense_len {
+        bail!(
+            "sparse payload: survivor count {n_survivors} outside 1..={dense_len}"
+        );
+    }
+    if mask.len() != dense_len.div_ceil(8) {
+        bail!(
+            "sparse payload: truncated bitmask ({} bytes for dense length \
+             {dense_len}, expected {})",
+            mask.len(),
+            dense_len.div_ceil(8)
+        );
+    }
+    let pop: usize = mask.iter().map(|b| b.count_ones() as usize).sum();
+    if pop != n_survivors {
+        bail!(
+            "sparse payload: bitmask/survivor-count mismatch (mask has {pop} \
+             set bits, header claims {n_survivors})"
+        );
+    }
+    // Tail bits past dense_len must be clear (they would otherwise
+    // scatter out of bounds).
+    if dense_len % 8 != 0 {
+        let tail = mask[mask.len() - 1] >> (dense_len % 8);
+        if tail != 0 {
+            bail!("sparse payload: mask bits set past dense length {dense_len}");
+        }
+    }
+    if survivor_len != n_survivors.div_ceil(group) * group {
+        bail!(
+            "sparse payload: survivor vector length {survivor_len} does not \
+             match {n_survivors} survivors padded to group {group}"
+        );
+    }
+    Ok(())
+}
+
+/// Scatter-accumulate survivors: `out[i] += lam * surv[s]` for each set
+/// mask bit, walking set bits byte-at-a-time.  Shared by the owned and
+/// borrowed serve paths.
+#[inline]
+fn scatter_axpy(mask: &[u8], surv: &[f32], n_survivors: usize, lam: f32, out: &mut [f32]) {
+    let mut s = 0usize;
+    for (byte_i, &byte) in mask.iter().enumerate() {
+        let mut b = byte;
+        while b != 0 {
+            let bit = b.trailing_zeros() as usize;
+            out[byte_i * 8 + bit] += lam * surv[s];
+            s += 1;
+            b &= b - 1;
+        }
+    }
+    debug_assert_eq!(s, n_survivors);
+}
 
 /// A sparse flat vector: `dense_len` logical f32s of which `n_survivors`
 /// are stored (group-quantized); the rest reconstruct as exactly 0.0.
@@ -43,45 +111,7 @@ impl SparseGroupQuantized {
         mask: Vec<u8>,
         survivors: GroupQuantized,
     ) -> Result<Self> {
-        if dense_len == 0 {
-            bail!("sparse payload: zero dense length");
-        }
-        if n_survivors == 0 || n_survivors > dense_len {
-            bail!(
-                "sparse payload: survivor count {n_survivors} outside 1..={dense_len}"
-            );
-        }
-        if mask.len() != dense_len.div_ceil(8) {
-            bail!(
-                "sparse payload: truncated bitmask ({} bytes for dense length \
-                 {dense_len}, expected {})",
-                mask.len(),
-                dense_len.div_ceil(8)
-            );
-        }
-        let pop: usize = mask.iter().map(|b| b.count_ones() as usize).sum();
-        if pop != n_survivors {
-            bail!(
-                "sparse payload: bitmask/survivor-count mismatch (mask has {pop} \
-                 set bits, header claims {n_survivors})"
-            );
-        }
-        // Tail bits past dense_len must be clear (they would otherwise
-        // scatter out of bounds).
-        if dense_len % 8 != 0 {
-            let tail = mask[mask.len() - 1] >> (dense_len % 8);
-            if tail != 0 {
-                bail!("sparse payload: mask bits set past dense length {dense_len}");
-            }
-        }
-        let group = survivors.group;
-        if survivors.len() != n_survivors.div_ceil(group) * group {
-            bail!(
-                "sparse payload: survivor vector length {} does not match \
-                 {n_survivors} survivors padded to group {group}",
-                survivors.len()
-            );
-        }
+        validate_parts(dense_len, n_survivors, &mask, survivors.len(), survivors.group)?;
         Ok(Self { dense_len, n_survivors, mask, survivors })
     }
 
@@ -144,22 +174,97 @@ impl SparseGroupQuantized {
     pub fn axpy_into(&self, lam: f32, out: &mut [f32]) {
         assert_eq!(out.len(), self.dense_len);
         let surv = self.survivors.dequantize();
-        let mut s = 0usize;
-        for (byte_i, &byte) in self.mask.iter().enumerate() {
-            let mut b = byte;
-            while b != 0 {
-                let bit = b.trailing_zeros() as usize;
-                out[byte_i * 8 + bit] += lam * surv[s];
-                s += 1;
-                b &= b - 1;
-            }
-        }
-        debug_assert_eq!(s, self.n_survivors);
+        scatter_axpy(&self.mask, &surv, self.n_survivors, lam, out);
     }
 
     /// Exact in-memory storage bytes: mask + survivor codes + affine params.
     pub fn storage_bytes(&self) -> usize {
         self.mask.len() + self.survivors.storage_bytes()
+    }
+}
+
+/// A borrowed, zero-copy view over a sparse section body: the bitmask and
+/// the survivor payload both stay in the backing bytes (the registry's
+/// file mapping); only the dequantized survivor values are materialized,
+/// into a caller-owned scratch reused across sections.  Construction runs
+/// the exact same structural validation as [`SparseGroupQuantized::new`],
+/// so corrupt sections fail closed identically on either path.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseGroupQuantizedView<'a> {
+    dense_len: usize,
+    n_survivors: usize,
+    mask: &'a [u8],
+    survivors: GroupQuantizedView<'a>,
+}
+
+impl<'a> SparseGroupQuantizedView<'a> {
+    pub fn new(
+        dense_len: usize,
+        n_survivors: usize,
+        mask: &'a [u8],
+        survivors: GroupQuantizedView<'a>,
+    ) -> Result<Self> {
+        validate_parts(dense_len, n_survivors, mask, survivors.len(), survivors.group())?;
+        Ok(Self { dense_len, n_survivors, mask, survivors })
+    }
+
+    #[inline]
+    pub fn dense_len(&self) -> usize {
+        self.dense_len
+    }
+
+    #[inline]
+    pub fn n_survivors(&self) -> usize {
+        self.n_survivors
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.survivors.bits()
+    }
+
+    #[inline]
+    pub fn group(&self) -> usize {
+        self.survivors.group()
+    }
+
+    /// Fused serve path: `out[i] += lam * value_i` for every survivor.
+    /// `codes_scratch` / `vals_scratch` are reused across sections.
+    pub fn axpy_into(
+        &self,
+        lam: f32,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+        vals_scratch: &mut Vec<f32>,
+    ) {
+        assert_eq!(out.len(), self.dense_len);
+        vals_scratch.resize(self.survivors.len(), 0.0);
+        self.survivors.dequantize_into(vals_scratch, codes_scratch);
+        scatter_axpy(self.mask, vals_scratch, self.n_survivors, lam, out);
+    }
+
+    /// Reconstruct into a caller buffer (overwrites all of `out`):
+    /// 0.0 everywhere except survivors — bit-identical to
+    /// [`SparseGroupQuantized::dequantize_into`].
+    pub fn dequantize_into(
+        &self,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+        vals_scratch: &mut Vec<f32>,
+    ) {
+        assert_eq!(out.len(), self.dense_len);
+        out.fill(0.0);
+        self.axpy_into(1.0, out, codes_scratch, vals_scratch);
+    }
+
+    /// Materialize an owned [`SparseGroupQuantized`].
+    pub fn to_owned(self) -> SparseGroupQuantized {
+        SparseGroupQuantized {
+            dense_len: self.dense_len,
+            n_survivors: self.n_survivors,
+            mask: self.mask.to_vec(),
+            survivors: self.survivors.to_owned(),
+        }
     }
 }
 
@@ -249,6 +354,77 @@ mod tests {
         let mut mask = vec![0u8; 8];
         mask[0] = 0b11;
         assert!(SparseGroupQuantized::new(64, 2, mask, long).is_err());
+    }
+
+    /// Assemble a borrowed view over the owned container's parts.
+    fn view_parts(s: &SparseGroupQuantized) -> (Vec<u8>, Vec<u8>) {
+        let g = &s.survivors;
+        let mut params = Vec::new();
+        for &sc in &g.scales {
+            params.extend_from_slice(&sc.to_le_bytes());
+        }
+        for &z in &g.zps {
+            params.extend_from_slice(&z.to_le_bytes());
+        }
+        (params, g.codes.packed_bytes())
+    }
+
+    #[test]
+    fn view_matches_owned_bit_exactly() {
+        use crate::quant::BitPackedView;
+        let (v, keep) = sample(1000, 3, 31);
+        let s = SparseGroupQuantized::quantize_indices(&v, &keep, 1.0, 4, 64).unwrap();
+        let (params, code_bytes) = view_parts(&s);
+        let codes = BitPackedView::new(4, s.survivors.len(), &code_bytes).unwrap();
+        let gview =
+            GroupQuantizedView::new(4, 64, s.survivors.n_groups(), &params, codes).unwrap();
+        let view =
+            SparseGroupQuantizedView::new(s.dense_len, s.n_survivors, &s.mask, gview).unwrap();
+        assert_eq!(view.dense_len(), 1000);
+        assert_eq!(view.n_survivors(), keep.len());
+        assert_eq!(view.bits(), 4);
+        assert_eq!(view.group(), 64);
+
+        let (mut codes_scratch, mut vals_scratch) = (Vec::new(), Vec::new());
+        let mut got = vec![0.0f32; 1000];
+        view.dequantize_into(&mut got, &mut codes_scratch, &mut vals_scratch);
+        assert_eq!(got, s.dequantize(), "view reconstruction must be bit-exact");
+
+        let mut acc = vec![2.0f32; 1000];
+        let mut want = vec![2.0f32; 1000];
+        view.axpy_into(0.5, &mut acc, &mut codes_scratch, &mut vals_scratch);
+        s.axpy_into(0.5, &mut want);
+        assert_eq!(acc, want, "view axpy must match the owned scatter path");
+
+        assert_eq!(view.to_owned(), s);
+    }
+
+    #[test]
+    fn view_validation_matches_owned() {
+        use crate::quant::BitPackedView;
+        let (v, keep) = sample(64, 4, 32);
+        let s = SparseGroupQuantized::quantize_indices(&v, &keep, 1.0, 4, 16).unwrap();
+        let (params, code_bytes) = view_parts(&s);
+        let codes = BitPackedView::new(4, s.survivors.len(), &code_bytes).unwrap();
+        let gview =
+            GroupQuantizedView::new(4, 16, s.survivors.n_groups(), &params, codes).unwrap();
+        // Popcount mismatch fails with the same message on both paths.
+        let mut bad_mask = s.mask.clone();
+        bad_mask[0] ^= 1 << 1;
+        let view_err = SparseGroupQuantizedView::new(64, s.n_survivors, &bad_mask, gview)
+            .unwrap_err()
+            .to_string();
+        let owned_err =
+            SparseGroupQuantized::new(64, s.n_survivors, bad_mask, s.survivors.clone())
+                .unwrap_err()
+                .to_string();
+        assert_eq!(view_err, owned_err);
+        assert!(view_err.contains("bitmask/survivor-count mismatch"));
+        // Truncated mask / shrunk dense length fail closed too.
+        assert!(
+            SparseGroupQuantizedView::new(64, s.n_survivors, &s.mask[..4], gview).is_err()
+        );
+        assert!(SparseGroupQuantizedView::new(8, s.n_survivors, &s.mask, gview).is_err());
     }
 
     #[test]

@@ -25,7 +25,8 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use crate::quant::{
-    AffineParams, BitPacked, GroupQuantized, QuantizedCheckpoint, SparseGroupQuantized,
+    AffineParams, BitPacked, BitPackedView, GroupQuantized, GroupQuantizedView,
+    QuantizedCheckpoint, SparseGroupQuantized, SparseGroupQuantizedView,
 };
 use crate::quant::tvq::QuantizedTensor;
 
@@ -173,6 +174,70 @@ impl Payload {
                  not Payload::decode"
             ),
         })
+    }
+}
+
+/// A decoded section body that *borrows* the section bytes — the zero-copy
+/// serve path.  Group and sparse bodies stay entirely in the backing bytes
+/// (a file mapping, in `IoMode::Mmap`); only checkpoint payloads (kind
+/// 0/1) materialize owned tensors, because their per-tensor `BTreeMap`
+/// template has no flat borrowed form.  Every validation the owned
+/// [`Payload::decode`] runs, runs here too — the owned decoders are in
+/// fact implemented as `view + to_owned`, so there is exactly one parse
+/// path for a section body.
+#[derive(Debug)]
+pub enum PayloadView<'a> {
+    Checkpoint(QuantizedCheckpoint),
+    Group(GroupQuantizedView<'a>),
+    SparseGroup(SparseGroupQuantizedView<'a>),
+}
+
+impl<'a> PayloadView<'a> {
+    /// Decode a section body according to its index `kind`, borrowing
+    /// group/sparse payloads from `buf`.
+    pub fn decode(kind: PayloadKind, buf: &'a [u8]) -> Result<PayloadView<'a>> {
+        Ok(match kind {
+            PayloadKind::TaskCheckpoint | PayloadKind::RtvqBase => {
+                PayloadView::Checkpoint(decode_checkpoint_payload(buf)?)
+            }
+            PayloadKind::Group => PayloadView::Group(decode_group_payload_view(buf)?),
+            PayloadKind::SparseGroup => {
+                PayloadView::SparseGroup(decode_sparse_payload_view(buf)?)
+            }
+            PayloadKind::Plan => bail!(
+                "plan sections decode via PackPlan::decode (Registry::plan), \
+                 not PayloadView::decode"
+            ),
+        })
+    }
+
+    /// Materialize the owned [`Payload`].
+    pub fn to_owned(&self) -> Payload {
+        match self {
+            PayloadView::Checkpoint(q) => Payload::Checkpoint(q.clone()),
+            // Explicit derefs: the views' inherent `to_owned(self)` takes
+            // the Copy value — through `&view` the blanket
+            // `ToOwned for T: Clone` would win resolution and hand back a
+            // view clone instead of the owned container.
+            PayloadView::Group(g) => Payload::Group((*g).to_owned()),
+            PayloadView::SparseGroup(s) => Payload::SparseGroup((*s).to_owned()),
+        }
+    }
+
+    /// The borrowed group payload, or an error naming what was found.
+    pub fn as_group(&self) -> Result<&GroupQuantizedView<'a>> {
+        match self {
+            PayloadView::Group(g) => Ok(g),
+            other => bail!("expected a group payload, got {other:?}"),
+        }
+    }
+
+    /// The borrowed sparse payload, or an error naming what was found.
+    pub fn as_sparse(&self) -> Result<&SparseGroupQuantizedView<'a>> {
+        match self {
+            PayloadView::SparseGroup(s) => Ok(s),
+            other => bail!("expected a sparse payload, got {other:?}"),
+        }
     }
 }
 
@@ -341,8 +406,10 @@ pub fn encode_group_payload(g: &GroupQuantized) -> Vec<u8> {
     buf
 }
 
-/// Inverse of [`encode_group_payload`].
-pub fn decode_group_payload(buf: &[u8]) -> Result<GroupQuantized> {
+/// Zero-copy inverse of [`encode_group_payload`]: scales, zps and codes
+/// all stay borrowed from `buf`.  This is the single parse path for kind-2
+/// bodies — the owned [`decode_group_payload`] materializes from it.
+pub fn decode_group_payload_view(buf: &[u8]) -> Result<GroupQuantizedView<'_>> {
     let mut c = Cursor::new(buf);
     let bits = c.u8()?;
     if !(1..=8).contains(&bits) {
@@ -362,14 +429,7 @@ pub fn decode_group_payload(buf: &[u8]) -> Result<GroupQuantized> {
             c.remaining()
         );
     }
-    let mut scales = Vec::with_capacity(n_groups);
-    for _ in 0..n_groups {
-        scales.push(c.f32()?);
-    }
-    let mut zps = Vec::with_capacity(n_groups);
-    for _ in 0..n_groups {
-        zps.push(c.f32()?);
-    }
+    let params = c.take(n_groups * 8)?;
     let len = group
         .checked_mul(n_groups)
         .ok_or_else(|| anyhow::anyhow!("QTVC group payload: group*n_groups overflows"))?;
@@ -377,11 +437,16 @@ pub fn decode_group_payload(buf: &[u8]) -> Result<GroupQuantized> {
         .checked_mul(bits as usize)
         .ok_or_else(|| anyhow::anyhow!("QTVC group payload: code size overflows"))?
         .div_ceil(8);
-    let codes = BitPacked::from_packed_bytes(bits, len, c.take(nbytes)?)?;
+    let codes = BitPackedView::new(bits, len, c.take(nbytes)?)?;
     if !c.done() {
         bail!("QTVC group payload: trailing bytes");
     }
-    Ok(GroupQuantized { bits, group, scales, zps, codes })
+    GroupQuantizedView::new(bits, group, n_groups, params, codes)
+}
+
+/// Inverse of [`encode_group_payload`].
+pub fn decode_group_payload(buf: &[u8]) -> Result<GroupQuantized> {
+    Ok(decode_group_payload_view(buf)?.to_owned())
 }
 
 /// Encode a sparse group-quantized vector (kind-4 section body):
@@ -399,10 +464,13 @@ pub fn encode_sparse_payload(s: &SparseGroupQuantized) -> Vec<u8> {
     buf
 }
 
-/// Inverse of [`encode_sparse_payload`]; every structural invariant —
-/// mask length, popcount vs survivor count, tail bits, survivor-vector
-/// geometry — is re-validated so corrupt sections fail closed.
-pub fn decode_sparse_payload(buf: &[u8]) -> Result<SparseGroupQuantized> {
+/// Zero-copy inverse of [`encode_sparse_payload`]: bitmask and survivor
+/// payload stay borrowed from `buf`.  Every structural invariant — mask
+/// length, popcount vs survivor count, tail bits, survivor-vector
+/// geometry — is re-validated so corrupt sections fail closed; this is
+/// the single parse path for kind-4 bodies (the owned
+/// [`decode_sparse_payload`] materializes from it).
+pub fn decode_sparse_payload_view(buf: &[u8]) -> Result<SparseGroupQuantizedView<'_>> {
     let mut c = Cursor::new(buf);
     let dense_len = c.u64()? as usize;
     let n_survivors = c.u64()? as usize;
@@ -419,9 +487,14 @@ pub fn decode_sparse_payload(buf: &[u8]) -> Result<SparseGroupQuantized> {
             c.remaining()
         );
     }
-    let mask = c.take(mask_bytes)?.to_vec();
-    let survivors = decode_group_payload(c.take(c.remaining())?)?;
-    SparseGroupQuantized::new(dense_len, n_survivors, mask, survivors)
+    let mask = c.take(mask_bytes)?;
+    let survivors = decode_group_payload_view(c.take(c.remaining())?)?;
+    SparseGroupQuantizedView::new(dense_len, n_survivors, mask, survivors)
+}
+
+/// Inverse of [`encode_sparse_payload`].
+pub fn decode_sparse_payload(buf: &[u8]) -> Result<SparseGroupQuantized> {
+    Ok(decode_sparse_payload_view(buf)?.to_owned())
 }
 
 #[cfg(test)]
@@ -596,6 +669,65 @@ mod tests {
         bad[0..8].copy_from_slice(&(1u64 << 61).to_le_bytes());
         let err = decode_sparse_payload(&bad).unwrap_err().to_string();
         assert!(err.contains("truncated bitmask"), "got: {err}");
+    }
+
+    #[test]
+    fn payload_view_decodes_identically_to_owned() {
+        // Group sections: the borrowed view and the owned decode agree
+        // bit-for-bit, and the view's dequantization matches the owned one.
+        let mut rng = Rng::new(41);
+        let mut v = vec![0.0f32; 2048];
+        rng.fill_normal(&mut v, 0.05);
+        let g = GroupQuantized::quantize(&v, 3, 256).unwrap();
+        let wire = encode_group_payload(&g);
+        let view = decode_group_payload_view(&wire).unwrap();
+        assert_eq!(view.to_owned(), g);
+        let mut scratch = Vec::new();
+        let mut out = vec![0.0f32; 2048];
+        view.dequantize_into(&mut out, &mut scratch);
+        assert_eq!(out, g.dequantize());
+
+        // Sparse sections, through the PayloadView dispatch.
+        let s = sample_sparse(42);
+        let wire = encode_sparse_payload(&s);
+        match PayloadView::decode(PayloadKind::SparseGroup, &wire).unwrap() {
+            PayloadView::SparseGroup(sv) => assert_eq!(sv.to_owned(), s),
+            other => panic!("unexpected view {other:?}"),
+        }
+        // Checkpoint payloads come back owned either way.
+        let q = sample_q(4, 43);
+        let wire = encode_checkpoint_payload(&q);
+        match PayloadView::decode(PayloadKind::TaskCheckpoint, &wire).unwrap() {
+            PayloadView::Checkpoint(back) => assert_eq!(back, q),
+            other => panic!("unexpected view {other:?}"),
+        }
+        // Plan sections have no view decode either.
+        assert!(PayloadView::decode(PayloadKind::Plan, &[]).is_err());
+        // as_group / as_sparse guards.
+        let gwire = encode_group_payload(&g);
+        let pv = PayloadView::decode(PayloadKind::Group, &gwire).unwrap();
+        assert!(pv.as_group().is_ok());
+        assert!(pv.as_sparse().is_err());
+    }
+
+    #[test]
+    fn view_and_owned_decoders_reject_corruption_identically() {
+        // The owned decoder is view + to_owned, so every corruption that
+        // fails one must fail the other with the same error.
+        let s = sample_sparse(44);
+        let wire = encode_sparse_payload(&s);
+        for cut in [0, 8, 16, 16 + s.mask.len() / 2, wire.len() - 3] {
+            let owned = decode_sparse_payload(&wire[..cut]).unwrap_err().to_string();
+            let viewed =
+                decode_sparse_payload_view(&wire[..cut]).unwrap_err().to_string();
+            assert_eq!(owned, viewed, "cut={cut}");
+        }
+        let mut bad = wire.clone();
+        bad[16] |= 0b10;
+        assert_eq!(
+            decode_sparse_payload(&bad).unwrap_err().to_string(),
+            decode_sparse_payload_view(&bad).unwrap_err().to_string()
+        );
     }
 
     #[test]

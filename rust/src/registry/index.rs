@@ -9,12 +9,17 @@
 //! zoo is never materialized.  See [`super`] (module docs) for the
 //! byte-level wire format and [`crate::planner`] for the plan section.
 //!
-//! Section reads go through one of two [`IoMode`]s: `Pread` keeps a
-//! single file handle open and reads each section with positioned I/O
-//! (`read_exact_at`, no seek, no reopen — the default on unix), while
-//! `Reopen` opens the file per read (the fallback everywhere else, and
-//! the pre-PR-2 behavior kept for comparison; `perf_registry` benches
-//! both).
+//! Section reads go through one of three [`IoMode`]s: `Mmap` maps the
+//! whole file once at open and hands out CRC-checked **borrowed** section
+//! slices (zero-copy: the decode views in [`crate::quant`] dequantize
+//! straight out of the mapping, no staging buffer — the default where
+//! supported), `Pread` keeps a single file handle open and reads each
+//! section with positioned I/O (`read_exact_at`, no seek, no reopen — the
+//! fallback when mapping fails or is unsupported), and `Reopen` opens the
+//! file per read (the conservative fallback everywhere else, and the
+//! pre-PR-2 behavior kept for comparison).  `perf_registry` benches all
+//! three; mapping-lifetime and mutation hazards are documented in
+//! `docs/WIRE_FORMAT.md` §7.
 
 use std::collections::HashMap;
 use std::fs;
@@ -25,11 +30,13 @@ use std::sync::OnceLock;
 use anyhow::{bail, Context, Result};
 
 use super::container::{
-    Payload, PayloadKind, RegistryScheme, MAGIC, VERSION, VERSION_PLANNED, VERSION_SPARSE,
+    Payload, PayloadKind, PayloadView, RegistryScheme, MAGIC, VERSION, VERSION_PLANNED,
+    VERSION_SPARSE,
 };
+use super::mmap::{self, Mmap};
 use crate::checkpoint::Checkpoint;
 use crate::planner::{Arm, PackPlan, SectionRole, SectionSpec};
-use crate::quant::{GroupQuantized, QuantScheme, SparseGroupQuantized};
+use crate::quant::{GroupQuantized, GroupQuantizedView, QuantScheme, SparseGroupQuantized};
 use crate::tensor::Tensor;
 use crate::util::crc32;
 
@@ -54,6 +61,12 @@ pub struct IndexEntry {
 /// How payload sections are read off disk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IoMode {
+    /// Map the whole file once (`mmap(2)`, read-only, private) and hand
+    /// out CRC-checked borrowed section slices — zero-copy: nothing is
+    /// staged, decode views read straight from the mapping.  64-bit unix
+    /// only; falls back to [`IoMode::Pread`] when mapping is unsupported
+    /// or refused ([`Registry::io_mode`] reports what actually happened).
+    Mmap,
     /// One persistent handle + positioned reads (`read_exact_at`): no
     /// seek, no reopen, safe under concurrent readers.  Unix only;
     /// silently falls back to [`IoMode::Reopen`] elsewhere.
@@ -62,7 +75,17 @@ pub enum IoMode {
     Reopen,
 }
 
+/// Reusable scratch for section reads.  In `Mmap` mode it stays empty
+/// (sections are borrowed from the mapping); in `Pread`/`Reopen` mode it
+/// is the single staging buffer, reused across reads so a steady-state
+/// serve loop allocates nothing per section.
+#[derive(Default)]
+pub struct SectionScratch {
+    buf: Vec<u8>,
+}
+
 enum SectionIo {
+    Mmap(Mmap),
     #[cfg(unix)]
     Pread(fs::File),
     Reopen,
@@ -72,6 +95,18 @@ impl SectionIo {
     #[cfg_attr(not(unix), allow(unused_variables))]
     fn new(path: &Path, mode: IoMode) -> Result<Self> {
         match mode {
+            IoMode::Mmap => {
+                if mmap::supported() {
+                    let file = fs::File::open(path)
+                        .with_context(|| format!("opening registry {}", path.display()))?;
+                    if let Ok(map) = Mmap::map(&file) {
+                        return Ok(SectionIo::Mmap(map));
+                    }
+                }
+                // Mapping unsupported or refused: fall back to the next
+                // cheapest mode for the platform.
+                Self::new(path, IoMode::Pread)
+            }
             #[cfg(unix)]
             IoMode::Pread => Ok(SectionIo::Pread(
                 fs::File::open(path)
@@ -83,26 +118,65 @@ impl SectionIo {
         }
     }
 
-    /// Fill `buf` with the section body (resizes to `entry.length`).
-    fn read_into(&self, path: &Path, entry: &IndexEntry, buf: &mut Vec<u8>) -> Result<()> {
-        buf.clear();
-        buf.resize(entry.length as usize, 0);
+    /// The [`IoMode`] actually in effect after fallbacks.
+    fn mode(&self) -> IoMode {
         match self {
+            SectionIo::Mmap(_) => IoMode::Mmap,
+            #[cfg(unix)]
+            SectionIo::Pread(_) => IoMode::Pread,
+            SectionIo::Reopen => IoMode::Reopen,
+        }
+    }
+
+    /// The raw (not yet CRC-checked) section body: borrowed straight from
+    /// the mapping in `Mmap` mode, read into `scratch` otherwise.
+    fn bytes_for<'a>(
+        &'a self,
+        path: &Path,
+        entry: &IndexEntry,
+        scratch: &'a mut Vec<u8>,
+    ) -> Result<&'a [u8]> {
+        match self {
+            SectionIo::Mmap(map) => {
+                // Entries were bounds-checked against the file size at
+                // open; re-check against the mapping defensively (a file
+                // that shrank between stat and map must fail closed, not
+                // slice out of bounds).
+                let oob = || {
+                    anyhow::anyhow!(
+                        "section {:?} spans past the {} mapped bytes of {}",
+                        entry.name,
+                        map.len(),
+                        path.display()
+                    )
+                };
+                let start = usize::try_from(entry.offset).map_err(|_| oob())?;
+                let end = start
+                    .checked_add(usize::try_from(entry.length).map_err(|_| oob())?)
+                    .filter(|&e| e <= map.len())
+                    .ok_or_else(oob)?;
+                Ok(&map.bytes()[start..end])
+            }
             #[cfg(unix)]
             SectionIo::Pread(f) => {
                 use std::os::unix::fs::FileExt;
-                f.read_exact_at(buf, entry.offset)
+                scratch.clear();
+                scratch.resize(entry.length as usize, 0);
+                f.read_exact_at(scratch, entry.offset)
                     .with_context(|| format!("reading section {:?}", entry.name))?;
+                Ok(&scratch[..])
             }
             SectionIo::Reopen => {
                 let mut f = fs::File::open(path)
                     .with_context(|| format!("reopening registry {}", path.display()))?;
+                scratch.clear();
+                scratch.resize(entry.length as usize, 0);
                 f.seek(SeekFrom::Start(entry.offset))?;
-                f.read_exact(buf)
+                f.read_exact(scratch)
                     .with_context(|| format!("reading section {:?}", entry.name))?;
+                Ok(&scratch[..])
             }
         }
-        Ok(())
     }
 }
 
@@ -172,10 +246,11 @@ pub struct Registry {
 }
 
 impl Registry {
-    /// Open a registry with the platform-default [`IoMode`] (`Pread` on
-    /// unix, `Reopen` elsewhere).
+    /// Open a registry with the platform-default [`IoMode`]: `Mmap` where
+    /// supported (64-bit unix), degrading automatically to `Pread` and
+    /// then `Reopen`.  [`Registry::io_mode`] reports what took effect.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Registry> {
-        Self::open_with_io(path, IoMode::Pread)
+        Self::open_with_io(path, IoMode::Mmap)
     }
 
     /// Open a registry: read and verify the header + offset table (and,
@@ -308,15 +383,15 @@ impl Registry {
                     )
                 })?;
                 let entry = &entries[pi];
-                let mut buf = Vec::new();
-                io.read_into(path, entry, &mut buf)?;
-                if crc32(&buf) != entry.crc {
+                let mut scratch = Vec::new();
+                let bytes = io.bytes_for(path, entry, &mut scratch)?;
+                if crc32(bytes) != entry.crc {
                     bail!(
                         "QTVC plan section CRC mismatch in {} (corrupt registry)",
                         path.display()
                     );
                 }
-                let plan = PackPlan::decode(&buf).with_context(|| {
+                let plan = PackPlan::decode(bytes).with_context(|| {
                     format!("decoding plan section of {}", path.display())
                 })?;
                 // Version / arm-set consistency: sparse-arm plans live in
@@ -413,6 +488,42 @@ impl Registry {
         self.version
     }
 
+    /// The [`IoMode`] actually in effect: `Mmap` requests degrade to
+    /// `Pread` (and `Pread` to `Reopen` off-unix) when unsupported, and
+    /// this reports where the fallback landed.
+    pub fn io_mode(&self) -> IoMode {
+        self.io.mode()
+    }
+
+    /// Bytes served through the file mapping: the whole file in `Mmap`
+    /// mode, 0 otherwise.  These are file-backed (reclaimable page cache),
+    /// not process heap — capacity accounting must not confuse the two.
+    pub fn mapped_bytes(&self) -> u64 {
+        match self.io.mode() {
+            IoMode::Mmap => self.file_bytes,
+            _ => 0,
+        }
+    }
+
+    /// Owned heap bytes this open registry pins for serving: the resident
+    /// index plus any decoded RTVQ base caches.  Payload bytes are *not*
+    /// here — they are either mapped ([`Registry::mapped_bytes`]) or
+    /// staged transiently per read.
+    pub fn resident_overhead_bytes(&self) -> usize {
+        let mut bytes = self.index_bytes as usize;
+        if let Some(ck) = self.base_cache.get() {
+            bytes += ck.fp32_bytes();
+        }
+        if let Some(hats) = self.planned_base_cache.get() {
+            bytes += hats
+                .iter()
+                .flatten()
+                .map(|v| v.len() * std::mem::size_of::<f32>())
+                .sum::<usize>();
+        }
+        bytes
+    }
+
     pub fn scheme(&self) -> RegistryScheme {
         self.scheme
     }
@@ -471,25 +582,26 @@ impl Registry {
         self.file_bytes
     }
 
-    /// Read + CRC-verify one section body into a caller buffer (one
-    /// positioned read in `Pread` mode; open + seek + read in `Reopen`).
-    fn read_section_into(&self, entry: &IndexEntry, buf: &mut Vec<u8>) -> Result<()> {
-        self.io.read_into(&self.path, entry, buf)?;
-        if crc32(buf) != entry.crc {
+    /// CRC-verified section bytes: **borrowed straight from the file
+    /// mapping** in `Mmap` mode (zero-copy — `scratch` is untouched),
+    /// staged into `scratch` under `Pread`/`Reopen`.  This is the no-copy
+    /// decode API the serve path is built on; the CRC is checked on every
+    /// access, so a lazily-touched corrupt section fails closed
+    /// identically in all three modes.
+    pub fn section_bytes<'a>(
+        &'a self,
+        entry: &IndexEntry,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<&'a [u8]> {
+        let bytes = self.io.bytes_for(&self.path, entry, &mut scratch.buf)?;
+        if crc32(bytes) != entry.crc {
             bail!(
                 "QTVC section {:?} CRC mismatch in {} (corrupt registry)",
                 entry.name,
                 self.path.display()
             );
         }
-        Ok(())
-    }
-
-    /// Read + CRC-verify one section body into a fresh buffer.
-    fn read_section(&self, entry: &IndexEntry) -> Result<Vec<u8>> {
-        let mut buf = Vec::new();
-        self.read_section_into(entry, &mut buf)?;
-        Ok(buf)
+        Ok(bytes)
     }
 
     /// Lazily load one task's quantized payload (no dequantization).
@@ -507,7 +619,8 @@ impl Registry {
             .get(t)
             .ok_or_else(|| anyhow::anyhow!("task index {t} out of range ({} tasks)", self.tasks.len()))?;
         let entry = &self.entries[i];
-        Payload::decode(entry.kind, &self.read_section(entry)?)
+        let mut scratch = SectionScratch::default();
+        Payload::decode(entry.kind, self.section_bytes(entry, &mut scratch)?)
     }
 
     /// Lazily load the shared RTVQ base payload (uniform registries).
@@ -516,37 +629,43 @@ impl Registry {
             .base
             .ok_or_else(|| anyhow::anyhow!("registry has no RTVQ base section"))?;
         let entry = &self.entries[i];
-        Payload::decode(entry.kind, &self.read_section(entry)?)
+        let mut scratch = SectionScratch::default();
+        Payload::decode(entry.kind, self.section_bytes(entry, &mut scratch)?)
     }
 
-    /// Decode one payload section and cross-check it against the exact
-    /// [`SectionSpec`] the plan demands for its slot.
-    fn load_planned_payload(&self, entry_idx: usize, role: SectionRole) -> Result<Payload> {
+    /// Decode one payload section as a borrowed view and cross-check it
+    /// against the exact [`SectionSpec`] the plan demands for its slot.
+    fn planned_view<'a>(
+        &'a self,
+        entry_idx: usize,
+        role: SectionRole,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<PayloadView<'a>> {
         let plan = self.plan.as_ref().expect("planned accessors gated on plan");
         let entry = &self.entries[entry_idx];
-        let payload = Payload::decode(entry.kind, &self.read_section(entry)?)?;
+        let view = PayloadView::decode(entry.kind, self.section_bytes(entry, scratch)?)?;
         let spec = plan.section_spec(role);
-        match (&payload, spec) {
-            (Payload::Group(gq), SectionSpec::Dense { bits, group, len }) => {
-                if gq.bits != bits || gq.group != group || gq.len() != len {
+        match (&view, spec) {
+            (PayloadView::Group(gq), SectionSpec::Dense { bits, group, len }) => {
+                if gq.bits() != bits || gq.group() != group || gq.len() != len {
                     bail!(
                         "section {:?} decodes to bits={} group={} len={} but the \
                          plan requires bits={bits} group={group} len={len}",
                         entry.name,
-                        gq.bits,
-                        gq.group,
+                        gq.bits(),
+                        gq.group(),
                         gq.len()
                     );
                 }
             }
             (
-                Payload::SparseGroup(s),
+                PayloadView::SparseGroup(s),
                 SectionSpec::Sparse { bits, group, dense_len, survivors },
             ) => {
                 if s.bits() != bits
                     || s.group() != group
-                    || s.dense_len != dense_len
-                    || s.n_survivors != survivors
+                    || s.dense_len() != dense_len
+                    || s.n_survivors() != survivors
                 {
                     bail!(
                         "section {:?} decodes to bits={} group={} dense={} \
@@ -555,8 +674,8 @@ impl Registry {
                         entry.name,
                         s.bits(),
                         s.group(),
-                        s.dense_len,
-                        s.n_survivors
+                        s.dense_len(),
+                        s.n_survivors()
                     );
                 }
             }
@@ -565,7 +684,63 @@ impl Registry {
                 entry.name
             ),
         }
-        Ok(payload)
+        Ok(view)
+    }
+
+    /// Planned registries: the borrowed view of task `t`'s payload for
+    /// tensor `l` — the zero-copy serve path.  In `Mmap` mode the view's
+    /// codes, params and bitmask all point into the file mapping; in
+    /// `Pread`/`Reopen` they point into `scratch`.  Every view is
+    /// CRC-verified and cross-checked against the plan's
+    /// [`SectionSpec`] before it is handed out.
+    pub fn planned_task_view<'a>(
+        &'a self,
+        t: usize,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<PayloadView<'a>> {
+        let plan = self
+            .plan
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))?;
+        if t >= plan.n_tasks() {
+            bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
+        }
+        if l >= plan.n_tensors() {
+            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
+        }
+        self.planned_view(
+            self.planned_tasks[t][l],
+            SectionRole::Task { task: t, tensor: l },
+            scratch,
+        )
+    }
+
+    /// Planned registries: the borrowed view of the shared base section
+    /// for tensor `l` (RTVQ-arm tensors only) — zero-copy counterpart of
+    /// [`Registry::load_planned_base_section`].
+    pub fn planned_base_view<'a>(
+        &'a self,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<GroupQuantizedView<'a>> {
+        let plan = self
+            .plan
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))?;
+        if l >= plan.n_tensors() {
+            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
+        }
+        let i = self.planned_bases[l].ok_or_else(|| {
+            anyhow::anyhow!(
+                "tensor {:?} has no RTVQ arm — no shared base section",
+                plan.tensors[l].name
+            )
+        })?;
+        match self.planned_view(i, SectionRole::Base { tensor: l }, scratch)? {
+            PayloadView::Group(g) => Ok(g),
+            other => bail!("base section decoded to a non-group payload: {other:?}"),
+        }
     }
 
     /// Planned registries: task `t`'s kind-2 group section for tensor `l`
@@ -593,41 +768,18 @@ impl Registry {
     }
 
     /// Planned registries: task `t`'s payload for tensor `l`, whatever
-    /// kind the plan assigns that slot.
+    /// kind the plan assigns that slot — the owned materialization of
+    /// [`Registry::planned_task_view`].
     pub fn load_planned_task_payload(&self, t: usize, l: usize) -> Result<Payload> {
-        let plan = self
-            .plan
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))?;
-        if t >= plan.n_tasks() {
-            bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
-        }
-        if l >= plan.n_tensors() {
-            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
-        }
-        self.load_planned_payload(self.planned_tasks[t][l], SectionRole::Task { task: t, tensor: l })
+        let mut scratch = SectionScratch::default();
+        Ok(self.planned_task_view(t, l, &mut scratch)?.to_owned())
     }
 
     /// Planned registries: the shared base section for tensor `l`
     /// (RTVQ-arm tensors only).
     pub fn load_planned_base_section(&self, l: usize) -> Result<GroupQuantized> {
-        let plan = self
-            .plan
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))?;
-        if l >= plan.n_tensors() {
-            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
-        }
-        let i = self.planned_bases[l].ok_or_else(|| {
-            anyhow::anyhow!(
-                "tensor {:?} has no RTVQ arm — no shared base section",
-                plan.tensors[l].name
-            )
-        })?;
-        match self.load_planned_payload(i, SectionRole::Base { tensor: l })? {
-            Payload::Group(g) => Ok(g),
-            other => bail!("base section decoded to a non-group payload: {other:?}"),
-        }
+        let mut scratch = SectionScratch::default();
+        Ok(self.planned_base_view(l, &mut scratch)?.to_owned())
     }
 
     /// Dequantized uniform RTVQ base, decoded once and cached.
@@ -669,12 +821,18 @@ impl Registry {
             let base_hats = self.planned_base_hats()?;
             let mut out = Checkpoint::new();
             let mut buf: Vec<f32> = Vec::new();
+            // One section scratch + decode scratches for the whole task:
+            // in Mmap mode every section is dequantized straight out of
+            // the mapping — no byte is staged or copied on this path.
+            let mut scratch = SectionScratch::default();
+            let mut codes: Vec<u32> = Vec::new();
+            let mut vals: Vec<f32> = Vec::new();
             for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
                 buf.clear();
                 buf.resize(tensor.padded(), 0.0);
-                match self.load_planned_task_payload(t, l)? {
-                    Payload::Group(gq) => {
-                        gq.dequantize_into(&mut buf);
+                match self.planned_task_view(t, l, &mut scratch)? {
+                    PayloadView::Group(gq) => {
+                        gq.dequantize_into(&mut buf, &mut codes);
                         if let Arm::Rtvq { .. } = a.arm {
                             let base = base_hats[l]
                                 .as_ref()
@@ -686,7 +844,9 @@ impl Registry {
                     }
                     // Sparse arms: survivors scatter into a zeroed dense
                     // buffer; masked-out weights reconstruct as 0.
-                    Payload::SparseGroup(s) => s.dequantize_into(&mut buf),
+                    PayloadView::SparseGroup(s) => {
+                        s.dequantize_into(&mut buf, &mut codes, &mut vals)
+                    }
                     other => bail!(
                         "planned task section decoded to an unexpected payload: {other:?}"
                     ),

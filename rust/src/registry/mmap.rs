@@ -1,0 +1,174 @@
+//! Read-only file memory mapping for the zero-copy registry serve path.
+//!
+//! The offline build vendors no `libc` crate, so the two syscalls the
+//! mapping needs (`mmap(2)` / `munmap(2)`) are declared directly against
+//! the platform C library every unix target already links.  The wrapper
+//! is deliberately tiny: map the whole file once, read-only and private,
+//! hand out `&[u8]`, unmap on drop.
+//!
+//! # Portability
+//!
+//! Enabled on 64-bit unix only: `PROT_READ == 1` and `MAP_PRIVATE == 2`
+//! hold across Linux, macOS and the BSDs, and on LP64 targets the
+//! `off_t` offset argument is 64-bit so the raw declaration below matches
+//! the libc ABI.  On 32-bit unix (where glibc's plain `mmap` takes a
+//! 32-bit offset) and on non-unix targets, [`supported()`] returns false
+//! and [`Registry`](super::Registry) falls back to positioned reads —
+//! callers never see a wrong-ABI call, just a clean fallback.
+//!
+//! # Lifetime / mutation hazards
+//!
+//! The mapping pins the file's *inode*, not its path: the registry
+//! writer's atomic rename-over replaces the path but leaves an existing
+//! mapping intact and consistent.  In-place truncation of the mapped file
+//! is the one hazard — touching pages past the new EOF raises `SIGBUS`,
+//! which no userspace bounds check can intercept.  Registry files are
+//! written via temp-file + rename and never modified in place, so the
+//! hazard requires an external actor; `docs/WIRE_FORMAT.md` §7 records
+//! the operational rule (replace registries by rename, never truncate).
+
+use std::fs;
+
+use anyhow::{bail, Result};
+
+/// Whether this target gets a real `mmap(2)` path.
+pub(crate) fn supported() -> bool {
+    cfg!(all(unix, target_pointer_width = "64"))
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    // Stable across Linux / macOS / BSD.
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A whole-file read-only mapping.
+pub(crate) struct Mmap {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only (PROT_READ) and private; the wrapper
+// exposes only shared `&[u8]` access, which is safe from any thread.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map all of `file` read-only.  Fails (cleanly, for the caller to
+    /// fall back on) for empty files, unsupported targets, or a refused
+    /// `mmap(2)`.
+    #[cfg_attr(not(all(unix, target_pointer_width = "64")), allow(unused_variables))]
+    pub fn map(file: &fs::File) -> Result<Self> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            bail!("refusing to map an empty file");
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("file too large to map on this target"))?;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            // SAFETY: fd is a valid open file descriptor for the lifetime
+            // of the call; len > 0; a private read-only mapping of a
+            // regular file has no aliasing requirements on our side.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                bail!("mmap(2) failed (len {len})");
+            }
+            Ok(Mmap { ptr: ptr as *const u8, len })
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            bail!("mmap unsupported on this target")
+        }
+    }
+
+    /// The mapped file bytes.
+    pub fn bytes(&self) -> &[u8] {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        // SAFETY: ptr is a live PROT_READ mapping of exactly `len` bytes,
+        // valid until munmap in Drop; no mutable aliases exist.
+        unsafe {
+            std::slice::from_raw_parts(self.ptr, self.len)
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        unreachable!("Mmap cannot be constructed on unsupported targets")
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: (ptr, len) is exactly what mmap returned; unmapping a
+        // private read-only mapping cannot fail in a way we could handle.
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_a_real_file_and_reads_it_back() {
+        if !supported() {
+            return;
+        }
+        let path = std::env::temp_dir().join("tvq_mmap_unit");
+        let body: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        {
+            let mut f = fs::File::create(&path).unwrap();
+            f.write_all(&body).unwrap();
+        }
+        let f = fs::File::open(&path).unwrap();
+        let m = Mmap::map(&f).unwrap();
+        assert_eq!(m.len(), body.len());
+        assert_eq!(m.bytes(), &body[..]);
+        drop(f); // mapping outlives the descriptor
+        assert_eq!(&m.bytes()[4096..4100], &body[4096..4100]);
+        drop(m);
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn refuses_empty_files() {
+        let path = std::env::temp_dir().join("tvq_mmap_empty");
+        fs::File::create(&path).unwrap();
+        let f = fs::File::open(&path).unwrap();
+        assert!(Mmap::map(&f).is_err());
+        fs::remove_file(&path).ok();
+    }
+}

@@ -76,12 +76,13 @@
 pub mod accounting;
 pub mod container;
 pub mod index;
+mod mmap;
 pub mod source;
 pub mod writer;
 
 pub use accounting::{f32_store_bytes, DiskAccounting};
-pub use container::{Payload, PayloadKind, RegistryScheme};
-pub use index::{IndexEntry, IoMode, Registry};
+pub use container::{Payload, PayloadKind, PayloadView, RegistryScheme};
+pub use index::{IndexEntry, IoMode, Registry, SectionScratch};
 pub use source::{merge_from_source, F32ZooSource, PackedRegistrySource, TaskVectorSource};
 pub use writer::{build_registry, uniform_registry_bytes, RegistryBuilder, WriteSummary};
 
@@ -254,13 +255,32 @@ mod tests {
         let dir = tmp("iomode");
         let path = dir.join("zoo.qtvc");
         build_registry(&pre, &fts, QuantScheme::Tvq(3), &path).unwrap();
+        let mmap = Registry::open_with_io(&path, IoMode::Mmap).unwrap();
         let pread = Registry::open_with_io(&path, IoMode::Pread).unwrap();
         let reopen = Registry::open_with_io(&path, IoMode::Reopen).unwrap();
+        // Requested modes take effect (mmap may legitimately fall back on
+        // exotic platforms, but then it must report the fallback).
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            assert_eq!(mmap.io_mode(), IoMode::Mmap);
+            assert_eq!(mmap.mapped_bytes(), mmap.file_bytes());
+        }
+        #[cfg(unix)]
+        assert_eq!(pread.io_mode(), IoMode::Pread);
+        assert_eq!(reopen.io_mode(), IoMode::Reopen);
+        assert_eq!(pread.mapped_bytes(), 0);
+        assert_eq!(reopen.mapped_bytes(), 0);
         for t in 0..3 {
+            let want = reopen.load_task_vector(t).unwrap();
             assert_eq!(
                 pread.load_task_vector(t).unwrap(),
-                reopen.load_task_vector(t).unwrap(),
+                want,
                 "task {t}: pread and reopen paths disagree"
+            );
+            assert_eq!(
+                mmap.load_task_vector(t).unwrap(),
+                want,
+                "task {t}: mmap and reopen paths disagree"
             );
         }
         std::fs::remove_dir_all(&dir).ok();

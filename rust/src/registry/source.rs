@@ -35,6 +35,23 @@ pub trait TaskVectorSource {
     fn source_id(&self) -> String {
         self.scheme_label()
     }
+
+    /// Owned heap bytes this source pins while serving (index tables,
+    /// decoded base caches).  Counted against a
+    /// [`ModelCache`](crate::coordinator::ModelCache) byte cap when the
+    /// source is registered there.  Defaults to 0 for sources that merely
+    /// borrow data owned elsewhere (e.g. [`F32ZooSource`]).
+    fn resident_overhead_bytes(&self) -> usize {
+        0
+    }
+
+    /// File-backed bytes this source serves through a memory mapping
+    /// (`IoMode::Mmap`).  These live in the OS page cache — reclaimable
+    /// under pressure — so capacity accounting reports them separately
+    /// and does **not** charge them against a heap byte cap.
+    fn mapped_bytes(&self) -> u64 {
+        0
+    }
 }
 
 /// The full-precision backend: an in-memory zoo of fine-tuned
@@ -120,6 +137,16 @@ impl TaskVectorSource for PackedRegistrySource {
     /// at the same scheme must not collide in a shared variant cache.
     fn source_id(&self) -> String {
         format!("{}:{}", self.registry.scheme().label(), self.registry.path().display())
+    }
+
+    /// The resident index + decoded base caches; payload bytes are
+    /// mapped or staged transiently, never pinned.
+    fn resident_overhead_bytes(&self) -> usize {
+        self.registry.resident_overhead_bytes()
+    }
+
+    fn mapped_bytes(&self) -> u64 {
+        self.registry.mapped_bytes()
     }
 }
 

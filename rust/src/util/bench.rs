@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// Result of one benchmark case.
@@ -31,6 +32,56 @@ impl BenchResult {
     pub fn throughput(&self) -> Option<f64> {
         self.items.map(|it| it / (self.mean_ns / 1e9))
     }
+
+    /// The machine-readable form written into `BENCH_*.json` files.
+    pub fn to_json(&self) -> Json {
+        let mut entries = vec![
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p99_ns", Json::num(self.p99_ns)),
+        ];
+        if let Some(items) = self.items {
+            entries.push(("items", Json::num(items)));
+        }
+        if let Some(tp) = self.throughput() {
+            entries.push(("throughput", Json::num(tp)));
+        }
+        Json::obj(entries)
+    }
+}
+
+/// Assemble the `BENCH_<name>.json` document: one object per case keyed
+/// by case name, a `calibrated: true` marker (committed baselines start
+/// uncalibrated until a real run replaces them — see
+/// [`crate::util::benchcmp`]), and the bench's self-declared ordering
+/// invariants (`require_not_slower`: pairs `[fast, slow]` asserting the
+/// first case's mean must not exceed the second's by more than the diff
+/// tolerance).
+pub fn json_report(
+    bench: &str,
+    results: &[BenchResult],
+    require_not_slower: &[(&str, &str)],
+) -> Json {
+    let cases = Json::Obj(
+        results
+            .iter()
+            .map(|r| (r.name.clone(), r.to_json()))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("calibrated", Json::Bool(true)),
+        ("cases", cases),
+        (
+            "require_not_slower",
+            Json::arr(
+                require_not_slower
+                    .iter()
+                    .map(|(a, b)| Json::arr([Json::str(a), Json::str(b)])),
+            ),
+        ),
+    ])
 }
 
 /// Benchmark runner configuration.
@@ -221,6 +272,26 @@ mod tests {
             std::hint::black_box(42);
         });
         assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let b = Bench::quick();
+        let r1 = b.run_throughput("fast_case", 100.0, || {
+            std::hint::black_box(42);
+        });
+        let r2 = b.run("slow_case", || {
+            std::hint::black_box(43);
+        });
+        let doc = json_report("perf_test", &[r1, r2], &[("fast_case", "slow_case")]);
+        let back = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(back.req("bench").unwrap().as_str().unwrap(), "perf_test");
+        assert_eq!(back.req("calibrated").unwrap(), &Json::Bool(true));
+        let cases = back.req("cases").unwrap();
+        assert!(cases.req("fast_case").unwrap().req("throughput").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cases.req("slow_case").unwrap().get("throughput").is_none());
+        let inv = back.req("require_not_slower").unwrap().as_arr().unwrap();
+        assert_eq!(inv[0].as_arr().unwrap()[0].as_str().unwrap(), "fast_case");
     }
 
     #[test]

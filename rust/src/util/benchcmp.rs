@@ -1,0 +1,202 @@
+//! Bench regression gate: diff a fresh `BENCH_*.json` against a committed
+//! baseline with a relative tolerance.
+//!
+//! Two classes of check, because wall-clock baselines do not travel
+//! between machines but *ratios within one run* do:
+//!
+//! 1. **Within-run ordering invariants** — the bench document declares
+//!    `require_not_slower: [[fast, slow], ...]` pairs; each asserts
+//!    `mean_ns(fast) <= mean_ns(slow) * (1 + tolerance)` *inside the
+//!    current run*.  These always apply, on any machine (this is how CI
+//!    enforces "Mmap section reads are at least as fast as Pread").
+//! 2. **Cross-run regressions** — per-case `mean_ns` must not exceed the
+//!    baseline's by more than the tolerance.  Applied only when the
+//!    baseline is marked `calibrated: true`: a freshly-seeded repo (or a
+//!    new machine class) commits an *uncalibrated* baseline, the first
+//!    real CI run reports the measured numbers, and the operator commits
+//!    them back with `calibrated` flipped — after which drift fails the
+//!    gate.  Getting faster never fails.
+//!
+//! Consumed by `tvq bench diff` (the `bench-diff` stage of `ci.sh`).
+
+use anyhow::{bail, Result};
+
+use super::json::Json;
+
+/// Outcome of one diff: human-readable notes plus hard failures.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    /// Informational lines (one per checked case / invariant).
+    pub notes: Vec<String>,
+    /// Tolerance violations; non-empty means the gate fails.
+    pub failures: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn mean_ns(doc: &Json, case: &str) -> Result<f64> {
+    doc.req("cases")?
+        .req(case)
+        .map_err(|_| anyhow::anyhow!("bench case {case:?} missing from report"))?
+        .req("mean_ns")?
+        .as_f64()
+}
+
+/// Diff `current` against `baseline` at `tolerance` (e.g. `0.20` =
+/// ±20%).  `baseline` may be `None` (no committed file yet) — then only
+/// the within-run invariants apply.
+pub fn diff_reports(current: &Json, baseline: Option<&Json>, tolerance: f64) -> Result<DiffReport> {
+    if !(0.0..10.0).contains(&tolerance) {
+        bail!("tolerance {tolerance} outside the sane range [0, 10)");
+    }
+    let mut report = DiffReport::default();
+
+    // 1. Within-run ordering invariants, declared by the bench itself.
+    if let Some(invariants) = current.get("require_not_slower") {
+        for pair in invariants.as_arr()? {
+            let pair = pair.as_arr()?;
+            if pair.len() != 2 {
+                bail!("require_not_slower entries must be [fast, slow] pairs");
+            }
+            let (fast, slow) = (pair[0].as_str()?, pair[1].as_str()?);
+            let (f, s) = (mean_ns(current, fast)?, mean_ns(current, slow)?);
+            let line = format!(
+                "invariant {fast} ({f:.0} ns) <= {slow} ({s:.0} ns) * {:.2}",
+                1.0 + tolerance
+            );
+            if f <= s * (1.0 + tolerance) {
+                report.notes.push(format!("ok: {line}"));
+            } else {
+                report.failures.push(format!("violated: {line}"));
+            }
+        }
+    }
+
+    // 2. Cross-run regression vs the committed baseline.
+    let Some(base) = baseline else {
+        report.notes.push("no baseline: within-run invariants only".into());
+        return Ok(report);
+    };
+    let calibrated = matches!(base.get("calibrated"), Some(Json::Bool(true)));
+    if !calibrated {
+        report.notes.push(
+            "baseline is uncalibrated: recording run only — commit the fresh \
+             report (calibrated: true) to arm the regression gate"
+                .into(),
+        );
+        return Ok(report);
+    }
+    for (case, entry) in base.req("cases")?.as_obj()? {
+        let base_ns = entry.req("mean_ns")?.as_f64()?;
+        let Ok(cur_ns) = mean_ns(current, case) else {
+            report
+                .failures
+                .push(format!("case {case:?} in baseline but missing from current run"));
+            continue;
+        };
+        let ratio = cur_ns / base_ns;
+        if ratio > 1.0 + tolerance {
+            report.failures.push(format!(
+                "regression: {case} {cur_ns:.0} ns vs baseline {base_ns:.0} ns \
+                 (x{ratio:.2} > x{:.2})",
+                1.0 + tolerance
+            ));
+        } else {
+            report.notes.push(format!("ok: {case} x{ratio:.2} of baseline"));
+        }
+    }
+    for (case, _) in current.req("cases")?.as_obj()? {
+        if base.req("cases")?.get(case).is_none() {
+            report
+                .notes
+                .push(format!("new case {case:?} (not in baseline; not gated)"));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(cases: &[(&str, f64)], calibrated: bool) -> Json {
+        let cases = Json::Obj(
+            cases
+                .iter()
+                .map(|(n, ns)| {
+                    (n.to_string(), Json::obj(vec![("mean_ns", Json::num(*ns))]))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::str("t")),
+            ("calibrated", Json::Bool(calibrated)),
+            ("cases", cases),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_regression_fails() {
+        let base = doc(&[("a", 100.0), ("b", 200.0)], true);
+        let good = doc(&[("a", 115.0), ("b", 150.0)], true);
+        let r = diff_reports(&good, Some(&base), 0.20).unwrap();
+        assert!(r.ok(), "failures: {:?}", r.failures);
+
+        let bad = doc(&[("a", 130.0), ("b", 200.0)], true);
+        let r = diff_reports(&bad, Some(&base), 0.20).unwrap();
+        assert!(!r.ok());
+        assert!(r.failures[0].contains("regression: a"), "{:?}", r.failures);
+    }
+
+    #[test]
+    fn uncalibrated_baseline_records_without_gating() {
+        let base = doc(&[("a", 1.0)], false);
+        let cur = doc(&[("a", 1e9)], true);
+        let r = diff_reports(&cur, Some(&base), 0.20).unwrap();
+        assert!(r.ok());
+        assert!(r.notes.iter().any(|n| n.contains("uncalibrated")));
+        // And no baseline at all is also non-fatal.
+        assert!(diff_reports(&cur, None, 0.20).unwrap().ok());
+    }
+
+    #[test]
+    fn missing_case_is_a_failure() {
+        let base = doc(&[("a", 100.0), ("gone", 50.0)], true);
+        let cur = doc(&[("a", 100.0)], true);
+        let r = diff_reports(&cur, Some(&base), 0.20).unwrap();
+        assert!(!r.ok());
+        assert!(r.failures[0].contains("missing from current run"));
+    }
+
+    #[test]
+    fn ordering_invariants_apply_within_run() {
+        let mut cur = doc(&[("mmap", 90.0), ("pread", 100.0)], true);
+        if let Json::Obj(m) = &mut cur {
+            m.insert(
+                "require_not_slower".into(),
+                Json::arr([Json::arr([Json::str("mmap"), Json::str("pread")])]),
+            );
+        }
+        let r = diff_reports(&cur, None, 0.20).unwrap();
+        assert!(r.ok(), "{:?}", r.failures);
+
+        // mmap 3x slower than pread: the invariant fires even with no
+        // baseline to compare against.
+        let mut bad = doc(&[("mmap", 300.0), ("pread", 100.0)], true);
+        if let Json::Obj(m) = &mut bad {
+            m.insert(
+                "require_not_slower".into(),
+                Json::arr([Json::arr([Json::str("mmap"), Json::str("pread")])]),
+            );
+        }
+        let r = diff_reports(&bad, None, 0.20).unwrap();
+        assert!(!r.ok());
+        assert!(r.failures[0].contains("violated"));
+        // Bad tolerance is rejected.
+        assert!(diff_reports(&bad, None, -1.0).is_err());
+    }
+}

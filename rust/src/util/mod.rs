@@ -3,6 +3,7 @@
 //! statistics, a bench runner, a property-test harness, and a CLI parser.
 
 pub mod bench;
+pub mod benchcmp;
 pub mod cli;
 pub mod json;
 pub mod prop;

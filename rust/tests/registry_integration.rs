@@ -15,12 +15,15 @@ use tvq::coordinator::ModelCache;
 use tvq::merge::{MergedModel, Merger, TaskArithmetic};
 use tvq::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
 use tvq::registry::{
-    build_registry, f32_store_bytes, merge_from_source, DiskAccounting,
+    build_registry, f32_store_bytes, merge_from_source, DiskAccounting, IoMode,
     PackedRegistrySource, Registry, TaskVectorSource,
 };
 use tvq::tensor::Tensor;
 use tvq::util::crc32;
 use tvq::util::rng::Rng;
+
+/// The three section-read modes, for every-mode sweeps.
+const IO_MODES: [IoMode; 3] = [IoMode::Mmap, IoMode::Pread, IoMode::Reopen];
 
 const N_TASKS: usize = 8;
 
@@ -253,6 +256,160 @@ fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     let last = reg.n_tasks() - 1;
     let err = reg.load_task_vector(last).unwrap_err().to_string();
     assert!(err.contains("CRC"), "expected a CRC failure, got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance bar for the zero-copy path: whatever corruption makes
+/// `Pread` fail must make `Mmap` fail with the *same* error, lazily, at
+/// the same access — never a panic, never a silently-served section.
+#[test]
+fn mmap_mode_fails_closed_identically_to_pread() {
+    let (pre, fts) = zoo(0x33A9);
+    let dir = tmp("mmap_failclosed");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("zoo.qtvc");
+    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+    let clean = std::fs::read(&path).unwrap();
+
+    // 1. Payload byte flipped: open succeeds in every mode (lazy), the
+    //    touched task fails its per-section CRC with an identical error,
+    //    and untouched tasks keep serving.
+    let mut bad = clean.clone();
+    let n = bad.len();
+    bad[n - 3] ^= 0xFF;
+    let p = dir.join("payload_flip.qtvc");
+    std::fs::write(&p, &bad).unwrap();
+    let mut errors = Vec::new();
+    for mode in IO_MODES {
+        let reg = Registry::open_with_io(&p, mode).unwrap();
+        let last = reg.n_tasks() - 1;
+        errors.push(reg.load_task_vector(last).unwrap_err().to_string());
+        assert!(
+            reg.load_task_vector(0).is_ok(),
+            "{mode:?}: untouched section must still serve"
+        );
+    }
+    assert!(errors[0].contains("CRC mismatch"), "got: {}", errors[0]);
+    assert_eq!(errors[0], errors[1], "mmap vs pread errors diverge");
+    assert_eq!(errors[1], errors[2], "pread vs reopen errors diverge");
+
+    // 2. Index byte flipped: open fails in every mode, same error.
+    let mut bad = clean.clone();
+    bad[20] ^= 0xFF;
+    let p = dir.join("index_flip.qtvc");
+    std::fs::write(&p, &bad).unwrap();
+    let open_errs: Vec<String> = IO_MODES
+        .iter()
+        .map(|&m| Registry::open_with_io(&p, m).unwrap_err().to_string())
+        .collect();
+    assert_eq!(open_errs[0], open_errs[1]);
+    assert_eq!(open_errs[1], open_errs[2]);
+
+    // 3. Truncated mid-index: open fails cleanly in every mode.
+    let p = dir.join("trunc_index.qtvc");
+    std::fs::write(&p, &clean[..24]).unwrap();
+    for mode in IO_MODES {
+        assert!(Registry::open_with_io(&p, mode).is_err(), "{mode:?}");
+    }
+
+    // 4. Truncated mid-payload: the index rows span past EOF, so open
+    //    fails at the bounds check — before any mapping or read.
+    let p = dir.join("trunc_payload.qtvc");
+    std::fs::write(&p, &clean[..clean.len() - 64]).unwrap();
+    for mode in IO_MODES {
+        let err = Registry::open_with_io(&p, mode).unwrap_err().to_string();
+        assert!(err.contains("beyond file size"), "{mode:?}: {err}");
+    }
+
+    // 5. Empty and sub-header files: clean error in every mode (the
+    //    mmap path must not trip over an unmappable zero-length file).
+    for (name, bytes) in [("empty.qtvc", &[][..]), ("tiny.qtvc", &clean[..3])] {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        for mode in IO_MODES {
+            assert!(Registry::open_with_io(&p, mode).is_err(), "{name} under {mode:?}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every mode must reconstruct identical bytes — uniform and planned
+/// (dense + sparse arms), through both the lazy and the fused serve path.
+#[test]
+fn all_io_modes_serve_identical_results() {
+    use tvq::exp::planner::synthetic_planner_zoo;
+    use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
+
+    let (pre, fts) = synthetic_planner_zoo(3, 0x10DE);
+    let dir = tmp("iomode_equiv");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("planned.qtvc");
+    // Full candidate set so dense, RTVQ and sparse arms all appear.
+    let cfg = PlannerConfig::default();
+    let profile = tvq::planner::probe(&pre, &fts, &cfg).unwrap();
+    let budget = tvq::planner::min_feasible_bytes(&profile) * 2;
+    build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+
+    let regs: Vec<Registry> = IO_MODES
+        .iter()
+        .map(|&m| Registry::open_with_io(&path, m).unwrap())
+        .collect();
+    let lams = [0.5f32, 0.2, 0.3];
+    let want_fused = fused_merge(&regs[1], &pre, &lams, None).unwrap();
+    for (reg, mode) in regs.iter().zip(IO_MODES) {
+        for t in 0..3 {
+            assert_eq!(
+                reg.load_task_vector(t).unwrap(),
+                regs[1].load_task_vector(t).unwrap(),
+                "{mode:?}: lazy task {t} diverged from pread"
+            );
+        }
+        let fused = fused_merge(reg, &pre, &lams, None).unwrap();
+        assert_eq!(
+            fused.l2_dist(&want_fused).unwrap(),
+            0.0,
+            "{mode:?}: fused merge diverged from pread"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Mapped payload bytes are page cache, not heap: the cache accounting
+/// must report them separately and charge only the owned overhead.
+#[test]
+fn packed_source_reports_mapped_vs_owned_footprint() {
+    let (pre, fts) = zoo(0x3A77);
+    let dir = tmp("footprint");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("zoo.qtvc");
+    build_registry(&pre, &fts, QuantScheme::Rtvq(3, 2), &path).unwrap();
+
+    let source = PackedRegistrySource::open(&path).unwrap();
+    let reg = source.registry();
+    if reg.io_mode() == IoMode::Mmap {
+        assert_eq!(source.mapped_bytes(), reg.file_bytes());
+    } else {
+        assert_eq!(source.mapped_bytes(), 0);
+    }
+    // Before any load: only the resident index is owned.
+    let cold = source.resident_overhead_bytes();
+    assert!(cold >= reg.index_bytes() as usize);
+    assert!(
+        (cold as u64) < reg.file_bytes(),
+        "owned overhead {cold} should be far below the {} file bytes",
+        reg.file_bytes()
+    );
+    // Serving an RTVQ task decodes + caches the shared base: the owned
+    // figure must grow by exactly that cache, never by payload bytes.
+    source.task_vector(0).unwrap();
+    let warm = source.resident_overhead_bytes();
+    assert_eq!(warm, cold + pre.fp32_bytes(), "base cache must be the only growth");
+
+    // And the cache rolls those numbers up per source id.
+    let cache = ModelCache::new();
+    cache.register_source(&source);
+    assert_eq!(cache.source_overhead_bytes(), warm);
+    assert_eq!(cache.source_mapped_bytes(), source.mapped_bytes());
     std::fs::remove_dir_all(&dir).ok();
 }
 
