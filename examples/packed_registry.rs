@@ -16,7 +16,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use tvq::checkpoint::{Checkpoint, CheckpointStore};
-use tvq::coordinator::{ModelCache, Server, ServerConfig};
+use tvq::coordinator::{Metrics, ModelCache, Server, ServerConfig};
 use tvq::data::VIT_S;
 use tvq::merge::{EmrMerging, MergedModel, TaskArithmetic};
 use tvq::quant::QuantScheme;
@@ -131,18 +131,27 @@ fn main() -> Result<()> {
 
     // -- 4. warm a variant cache straight from packed payloads -------------
     let cache = Arc::new(ModelCache::new());
+    // Merge builds run chunk-parallel on the shared worker pool; a
+    // metrics sink makes the realized speedup (pool busy / wall time)
+    // observable below.
+    let build_metrics = Arc::new(Metrics::new());
+    cache.set_metrics(build_metrics.clone());
     let source = Arc::new(PackedRegistrySource::open(&tvq_path)?);
     let rtvq_source = Arc::new(PackedRegistrySource::open(dir.join("RTVQ-B3O2.qtvc"))?);
     let t0 = Instant::now();
     cache.get_or_build_merged(&TaskArithmetic::default(), &pre, source.as_ref())?;
     cache.get_or_build_merged(&TaskArithmetic::default(), &pre, rtvq_source.as_ref())?;
     cache.get_or_build_merged(&EmrMerging, &pre, source.as_ref())?;
+    let builds = build_metrics.snapshot();
     println!(
         "\nmodel cache: {} variants built from packed payloads in {:.0} ms \
-         ({:.1} MiB fp32 resident)",
+         ({:.1} MiB fp32 resident; {} builds, x{:.2} parallel on {} threads)",
         cache.len(),
         t0.elapsed().as_secs_f64() * 1e3,
-        cache.resident_bytes() as f64 / (1024.0 * 1024.0)
+        cache.resident_bytes() as f64 / (1024.0 * 1024.0),
+        builds.merge_builds,
+        builds.merge_build_speedup(),
+        tvq::util::pool::Pool::global().threads(),
     );
     for (m, s) in cache.keys() {
         println!("  {m} @ {s}");

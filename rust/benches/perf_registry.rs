@@ -6,10 +6,16 @@
 //! mixed-precision registry — the cold-start cost a serving node actually
 //! pays.
 //!
+//! Thread scaling is benched explicitly: fused merge and registry build
+//! pinned to 1 / 2 / N pool threads (`merge8_fused_threads_*`,
+//! `registry_build_threads_*`), with "tN" meaning all cores on the
+//! running machine.
+//!
 //! Besides the human-readable table, the run writes a machine-readable
 //! `BENCH_registry.json` (path overridable via `TVQ_BENCH_OUT`) that
 //! `tvq bench diff` gates in CI: within-run ordering invariants (mmap
-//! section reads must not be slower than pread) always apply, per-case
+//! section reads must not be slower than pread, N-thread fused merge
+//! must not be slower than sequential) always apply, per-case
 //! regression vs the committed baseline applies once the baseline is
 //! calibrated.  See `rust/src/util/benchcmp.rs`.
 //!
@@ -17,14 +23,15 @@
 
 use tvq::checkpoint::{Checkpoint, CheckpointStore};
 use tvq::merge::TaskArithmetic;
-use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
+use tvq::planner::{build_planned_registry, fused_merge, fused_merge_with_pool, PlannerConfig};
 use tvq::quant::QuantScheme;
 use tvq::registry::{
-    build_registry, merge_from_source, uniform_registry_bytes, F32ZooSource, IoMode,
-    PackedRegistrySource, Registry, SectionScratch,
+    build_registry, build_registry_with_pool, merge_from_source, uniform_registry_bytes,
+    F32ZooSource, IoMode, PackedRegistrySource, Registry, SectionScratch,
 };
 use tvq::tensor::Tensor;
 use tvq::util::bench::{json_report, report, Bench};
+use tvq::util::pool::Pool;
 use tvq::util::rng::Rng;
 
 const N_TASKS: usize = 8;
@@ -194,20 +201,59 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Thread scaling: the same fused merge and a full registry build
+    // pinned to 1 / 2 / N worker threads.  Case names are machine-
+    // independent ("tN" = all cores, whatever N is here), so the
+    // committed baseline stays comparable across machine classes; the
+    // within-run invariant below gates that the N-thread fused merge is
+    // not slower than the sequential path.
+    let n_auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    eprintln!("[bench:registry] thread scaling: tN = {n_auto} threads");
+    let planned_mmap = Registry::open_with_io(&planned_path, IoMode::Mmap)?;
+    let build_path = dir.join("build_scaling.qtvc");
+    for (tag, width) in [("t1", 1usize), ("t2", 2), ("tN", n_auto)] {
+        let pool = Pool::new(width);
+        results.push(b.run_throughput(
+            &format!("merge8_fused_threads_{tag}"),
+            (params * N_TASKS) as f64,
+            || {
+                std::hint::black_box(
+                    fused_merge_with_pool(&planned_mmap, &pre, &lams, None, &pool).unwrap(),
+                );
+            },
+        ));
+        results.push(b.run_throughput(
+            &format!("registry_build_threads_{tag}"),
+            (params * N_TASKS) as f64,
+            || {
+                std::hint::black_box(
+                    build_registry_with_pool(&pre, &fts, QuantScheme::Tvq(4), &build_path, &pool)
+                        .unwrap(),
+                );
+            },
+        ));
+    }
+
     report("registry load/merge", &results);
 
     // Machine-readable report for the CI regression gate.  The declared
-    // invariant is exactly the acceptance bar: mmap section reads must
-    // not be slower than pread (within the diff tolerance).  The lazy
-    // and fused cases are recorded but not gated against each other —
-    // they are dominated by identical dequantize work, so mmap-vs-pread
-    // there is noise a shared CI runner would flake on.
+    // invariants are exactly the acceptance bars: mmap section reads
+    // must not be slower than pread, and the N-thread fused merge must
+    // not be slower than the sequential one (both within the diff
+    // tolerance — on a single-core runner tN degenerates to t1 and the
+    // invariant holds trivially).  The lazy and fused mmap-vs-pread
+    // cases are recorded but not gated against each other — they are
+    // dominated by identical dequantize work, so the gap there is noise
+    // a shared CI runner would flake on.
     let out = std::env::var("TVQ_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_registry.json".to_string());
     let doc = json_report(
         "perf_registry",
         &results,
-        &[("section_read_mmap", "section_read_pread")],
+        &[
+            ("section_read_mmap", "section_read_pread"),
+            ("merge8_fused_threads_tN", "merge8_fused_threads_t1"),
+        ],
     );
     std::fs::write(&out, doc.to_string_compact())?;
     eprintln!("[bench:registry] wrote {out}");

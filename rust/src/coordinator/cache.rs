@@ -41,13 +41,16 @@
 //! leaves no room for cached models.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::metrics::Metrics;
 use crate::checkpoint::Checkpoint;
 use crate::merge::{MergedModel, Merger};
-use crate::registry::{merge_from_source, TaskVectorSource};
+use crate::registry::{merge_from_source_with_pool, TaskVectorSource};
+use crate::util::pool::Pool;
 
 /// Cache key: (merge method name, scheme label).
 pub type VariantKey = (String, String);
@@ -106,6 +109,9 @@ pub struct ModelCache {
     inflight: Mutex<HashMap<VariantKey, Ticket>>,
     /// Resident-byte cap; `None` = unbounded.
     cap: Option<usize>,
+    /// Optional metrics sink: merge builds record wall/busy timing here
+    /// ([`ModelCache::set_metrics`]).
+    metrics: OnceLock<Arc<Metrics>>,
 }
 
 /// Clears the in-flight ticket and wakes waiters when the leader exits —
@@ -172,9 +178,10 @@ impl ModelCache {
 
     /// Insert the freshly built variant — atomically releasing the
     /// leader's pending reservation, so its bytes are never counted
-    /// twice (estimate + resident) — then evict LRU entries until
-    /// resident bytes plus the *other* leaders' pending estimates fit
-    /// the cap.  The just-published key is never its own victim.
+    /// twice (estimate + resident) — then run the cap walk against the
+    /// **actual** merged size.  This is where an in-flight size estimate
+    /// gets re-checked on completion: an underestimating build simply
+    /// evicts more here.  The just-published key is never its own victim.
     fn publish(&self, key: &VariantKey, model: Arc<MergedModel>, my_est: usize) {
         let mut state = self.state.lock().unwrap();
         state.pending_bytes = state.pending_bytes.saturating_sub(my_est);
@@ -182,13 +189,24 @@ impl ModelCache {
         let tick = state.tick;
         let bytes = model_bytes(&model);
         state.entries.insert(key.clone(), Entry { model, bytes, last_used: tick });
+        self.enforce_cap(&mut state, Some(key));
+    }
+
+    /// Evict LRU variants until resident bytes (variants + source floor)
+    /// plus in-flight build estimates fit the cap.  `protect` (a freshly
+    /// published key) is never chosen as a victim, and the last remaining
+    /// variant is never evicted either — once nothing (else) is
+    /// evictable, an over-cap state is tolerated: serving an oversized
+    /// variant beats refusing to, and evicting the sole survivor when a
+    /// registered source's unevictable floor alone exceeds the cap would
+    /// turn the cache into a 100%-miss rebuild loop.
+    fn enforce_cap(&self, state: &mut CacheState, protect: Option<&VariantKey>) {
         let Some(cap) = self.cap else { return };
-        let pending_others = state.pending_bytes;
-        while state.resident() + pending_others > cap {
+        while state.resident() + state.pending_bytes > cap && state.entries.len() > 1 {
             let victim = state
                 .entries
                 .iter()
-                .filter(|(k, _)| **k != *key)
+                .filter(|(k, _)| protect.map_or(true, |p| p != *k))
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| k.clone());
             match victim {
@@ -196,7 +214,7 @@ impl ModelCache {
                     state.entries.remove(&k);
                     state.evictions += 1;
                 }
-                None => break, // only the fresh entry left; keep it even oversized
+                None => break,
             }
         }
     }
@@ -285,7 +303,19 @@ impl ModelCache {
     /// [`PackedRegistrySource`](crate::registry::PackedRegistrySource)
     /// this materializes a merged model straight from packed payloads.
     /// The in-flight size estimate is one trunk (`pre.fp32_bytes()`) — a
-    /// lower bound for per-task mergers, exact for shared ones.
+    /// lower bound for per-task mergers, exact for shared ones; the
+    /// estimate is re-checked against the actual merged size on
+    /// completion (the publish's cap walk uses real bytes).
+    ///
+    /// The build routes its task-vector loads through the process-wide
+    /// shared [`Pool`] — sized once for the whole process, never a new
+    /// pool per build.  Single-flight semantics are unchanged: the pool
+    /// only parallelizes *inside* the one build that runs per key, and
+    /// each build's fan-out is bounded by the pool width.  With a
+    /// metrics sink attached
+    /// ([`set_metrics`](Self::set_metrics)) each build records its
+    /// wall/busy timing, from which the coordinator reports realized
+    /// parallel speedup.
     pub fn get_or_build_merged(
         &self,
         merger: &dyn Merger,
@@ -296,12 +326,33 @@ impl ModelCache {
         // visible to concurrent publishes) and refresh after (the build
         // may have warmed decoded base caches, growing the owned figure).
         self.register_source(source);
+        let pool = Pool::global();
         let built =
             self.get_or_build_sized(merger.name(), &source.source_id(), pre.fp32_bytes(), || {
-                merge_from_source(merger, pre, source, None)
+                // Leader-only, so single-flight yields one timing sample
+                // per build.  Pool busy time is an aggregate counter:
+                // the delta approximates this build's decode work (exact
+                // when builds don't overlap on the pool).
+                let wall = Instant::now();
+                let busy0 = pool.busy_ns();
+                let built = merge_from_source_with_pool(merger, pre, source, None, pool);
+                if let (Some(metrics), Ok(_)) = (self.metrics.get(), &built) {
+                    metrics.record_merge_build(
+                        wall.elapsed(),
+                        Duration::from_nanos(pool.busy_ns().saturating_sub(busy0)),
+                    );
+                }
+                built
             })?;
         self.register_source(source);
         Ok(built)
+    }
+
+    /// Attach a [`Metrics`] sink: every merge build completed through
+    /// [`get_or_build_merged`](Self::get_or_build_merged) records its
+    /// wall/busy timing there.  First call wins; later calls are no-ops.
+    pub fn set_metrics(&self, metrics: Arc<Metrics>) {
+        let _ = self.metrics.set(metrics);
     }
 
     pub fn contains(&self, method: &str, scheme: &str) -> bool {
@@ -342,7 +393,9 @@ impl ModelCache {
     /// floor, mapped bytes are tracked for observability only.  Re-register
     /// after base caches warm up to keep the owned figure current;
     /// [`get_or_build_merged`](Self::get_or_build_merged) does both
-    /// automatically.
+    /// automatically.  A refresh that *grows* the floor (decoded base
+    /// caches warmed during a build) runs the cap walk immediately, so
+    /// the correction lands now rather than at some future publish.
     pub fn register_source(&self, source: &dyn TaskVectorSource) {
         let mut state = self.state.lock().unwrap();
         state.sources.insert(
@@ -352,6 +405,7 @@ impl ModelCache {
                 mapped: source.mapped_bytes(),
             },
         );
+        self.enforce_cap(&mut state, None);
     }
 
     /// Owned heap bytes pinned by registered sources (counted against the
@@ -498,6 +552,42 @@ mod tests {
         assert_eq!(cache.state.lock().unwrap().pending_bytes, 0);
     }
 
+    #[test]
+    fn underestimating_build_corrects_cap_on_completion() {
+        // The in-flight estimate claims 0 bytes; the real model is a full
+        // MODEL_BYTES.  While it builds, other publishes legitimately
+        // fill the cap — completion must re-check against the actual
+        // size and evict, not trust the stale estimate.
+        let cache = Arc::new(ModelCache::with_byte_cap(2 * MODEL_BYTES));
+        let entered = Arc::new(Barrier::new(2));
+        let release = Arc::new(Barrier::new(2));
+        let c = cache.clone();
+        let (e2, r2) = (entered.clone(), release.clone());
+        let slow = std::thread::spawn(move || {
+            c.get_or_build_sized("ta", "under", 0, || {
+                e2.wait();
+                r2.wait();
+                Ok(model())
+            })
+            .unwrap();
+        });
+        entered.wait();
+        cache.get_or_build("ta", "b", || Ok(model())).unwrap();
+        cache.get_or_build("ta", "c", || Ok(model())).unwrap();
+        assert_eq!(cache.len(), 2, "estimate 0 must not block concurrent publishes");
+        release.wait();
+        slow.join().unwrap();
+        assert!(cache.contains("ta", "under"), "fresh publish must never self-evict");
+        assert!(
+            cache.resident_bytes() <= 2 * MODEL_BYTES,
+            "actual size must correct the cap on completion (resident {})",
+            cache.resident_bytes()
+        );
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.state.lock().unwrap().pending_bytes, 0);
+    }
+
     /// A fake serving source with a fixed memory footprint.
     struct FakeSource {
         id: &'static str,
@@ -566,8 +656,56 @@ mod tests {
     }
 
     #[test]
-    fn get_or_build_merged_registers_its_source() {
+    fn source_floor_growth_corrects_cap_on_refresh() {
+        let cache = ModelCache::with_byte_cap(2 * MODEL_BYTES);
+        cache.register_source(&FakeSource { id: "s", owned: 0, mapped: 0 });
+        cache.get_or_build("ta", "a", || Ok(model())).unwrap();
+        cache.get_or_build("ta", "b", || Ok(model())).unwrap();
+        assert_eq!(cache.len(), 2);
+        // The source's decoded base caches warm up (as during a merge
+        // build): the refreshed, larger floor must trigger the cap walk
+        // at registration time, not linger until a future publish.
+        cache.register_source(&FakeSource { id: "s", owned: MODEL_BYTES, mapped: 0 });
+        assert_eq!(cache.len(), 1, "grown source floor must evict immediately");
+        assert!(
+            cache.resident_bytes() + cache.source_overhead_bytes() <= 2 * MODEL_BYTES
+        );
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn sole_variant_survives_source_floor_exceeding_cap() {
+        // A source whose unevictable owned floor plus the one merged
+        // variant exceeds the cap: the publish tolerance keeps the
+        // oversized variant, and the register_source refresh right
+        // after it must NOT evict the sole survivor (that would make
+        // every request a full rebuild while freeing nothing the floor
+        // doesn't still occupy).
+        let cache = ModelCache::with_byte_cap(MODEL_BYTES + MODEL_BYTES / 2);
+        let src = FakeSource { id: "big-floor", owned: MODEL_BYTES, mapped: 0 };
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::zeros(&[4, 4]));
+        let ta = crate::merge::TaskArithmetic::default();
+        let builds = AtomicUsize::new(0);
+        for _ in 0..3 {
+            cache
+                .get_or_build_sized("ta", &src.source_id(), 0, || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    crate::registry::merge_from_source(&ta, &pre, &src, None)
+                })
+                .unwrap();
+            cache.register_source(&src);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "sole variant was evicted between hits");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn get_or_build_merged_registers_its_source_and_records_metrics() {
         let cache = ModelCache::new();
+        let metrics = Arc::new(crate::coordinator::Metrics::new());
+        cache.set_metrics(metrics.clone());
         let src = FakeSource { id: "auto", owned: 123, mapped: 456 };
         let mut pre = Checkpoint::new();
         pre.insert("w", Tensor::zeros(&[4, 4]));
@@ -575,6 +713,11 @@ mod tests {
         cache.get_or_build_merged(&ta, &pre, &src).unwrap();
         assert_eq!(cache.source_overhead_bytes(), 123);
         assert_eq!(cache.source_mapped_bytes(), 456);
+        // The (leader-only) build recorded exactly one timing sample...
+        assert_eq!(metrics.snapshot().merge_builds, 1);
+        // ...and a cache hit records nothing further.
+        cache.get_or_build_merged(&ta, &pre, &src).unwrap();
+        assert_eq!(metrics.snapshot().merge_builds, 1);
     }
 
     #[test]

@@ -15,6 +15,14 @@ pub struct Metrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batch_items: AtomicU64,
+    /// Merge builds completed through the model cache.
+    pub merge_builds: AtomicU64,
+    /// Total wall-clock time of those builds, microseconds.
+    merge_build_wall_us: AtomicU64,
+    /// Total worker-busy ("cpu") time of those builds, microseconds —
+    /// the pool-side decode/quantize time summed across threads, so
+    /// `busy / wall` is the realized parallel speedup.
+    merge_build_busy_us: AtomicU64,
     /// End-to-end latencies (submit -> response), bounded reservoir.
     latencies_us: Mutex<Vec<f64>>,
 }
@@ -43,6 +51,18 @@ impl Metrics {
         self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
     }
 
+    /// Record one merge build: `wall` is its elapsed time, `busy` the
+    /// worker-pool busy time it consumed across threads (approximate
+    /// when concurrent builds share the pool).  The snapshot reports
+    /// `busy / wall` as the realized parallel speedup.
+    pub fn record_merge_build(&self, wall: Duration, busy: Duration) {
+        self.merge_builds.fetch_add(1, Ordering::Relaxed);
+        self.merge_build_wall_us
+            .fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+        self.merge_build_busy_us
+            .fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
+    }
+
     /// Clear latency samples and batch counters (post-warmup reset so
     /// percentiles reflect steady state); monotone counters are kept.
     pub fn reset_window(&self) {
@@ -65,6 +85,8 @@ impl Metrics {
         };
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
+        let wall_us = self.merge_build_wall_us.load(Ordering::Relaxed);
+        let busy_us = self.merge_build_busy_us.load(Ordering::Relaxed);
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -79,6 +101,9 @@ impl Metrics {
             latency_mean_us: mean,
             latency_p50_us: p50,
             latency_p99_us: p99,
+            merge_builds: self.merge_builds.load(Ordering::Relaxed),
+            merge_build_wall_ms: wall_us as f64 / 1e3,
+            merge_build_busy_ms: busy_us as f64 / 1e3,
         }
     }
 }
@@ -95,12 +120,31 @@ pub struct MetricsSnapshot {
     pub latency_mean_us: f64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
+    pub merge_builds: u64,
+    /// Total wall-clock of merge builds, ms.
+    pub merge_build_wall_ms: f64,
+    /// Total worker-busy ("cpu") time of merge builds, ms.
+    pub merge_build_busy_ms: f64,
 }
 
 impl MetricsSnapshot {
+    /// Realized parallel speedup of merge builds: pool busy time over
+    /// wall time (~N = perfect scaling on N threads; 0.0 until a build
+    /// has been recorded).  Busy time counts only work executed through
+    /// the pool — build phases on the caller's thread (merge combine,
+    /// checkpoint assembly) add wall but not busy, so a fully sequential
+    /// build reports somewhat *below* 1.0 rather than exactly 1.0.
+    pub fn merge_build_speedup(&self) -> f64 {
+        if self.merge_build_wall_ms > 0.0 {
+            self.merge_build_busy_ms / self.merge_build_wall_ms
+        } else {
+            0.0
+        }
+    }
+
     /// One-line summary for logs/benches.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "submitted {} completed {} rejected {} failed {} | batches {} (avg {:.1}) | latency p50 {:.0}us p99 {:.0}us",
             self.submitted,
             self.completed,
@@ -110,7 +154,16 @@ impl MetricsSnapshot {
             self.mean_batch_size,
             self.latency_p50_us,
             self.latency_p99_us
-        )
+        );
+        if self.merge_builds > 0 {
+            s.push_str(&format!(
+                " | merge builds {} ({:.0} ms wall, x{:.2} parallel)",
+                self.merge_builds,
+                self.merge_build_wall_ms,
+                self.merge_build_speedup()
+            ));
+        }
+        s
     }
 }
 
@@ -134,6 +187,23 @@ mod tests {
         assert!((s.mean_batch_size - 3.0).abs() < 1e-9);
         assert!(s.latency_p50_us >= 100.0 && s.latency_p99_us <= 301.0);
         assert!(s.summary().contains("batches 2"));
+    }
+
+    #[test]
+    fn merge_build_timing_reports_speedup() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.merge_builds, 0);
+        assert_eq!(s.merge_build_speedup(), 0.0);
+        assert!(!s.summary().contains("merge builds"));
+        // Two builds, 10 ms wall each, 30 ms busy each -> x3 speedup.
+        m.record_merge_build(Duration::from_millis(10), Duration::from_millis(30));
+        m.record_merge_build(Duration::from_millis(10), Duration::from_millis(30));
+        let s = m.snapshot();
+        assert_eq!(s.merge_builds, 2);
+        assert!((s.merge_build_wall_ms - 20.0).abs() < 1e-9);
+        assert!((s.merge_build_speedup() - 3.0).abs() < 1e-9);
+        assert!(s.summary().contains("merge builds 2"), "{}", s.summary());
     }
 
     #[test]

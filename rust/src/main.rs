@@ -83,6 +83,22 @@ fn zoo_args(cmd: Command) -> Command {
     cmd.opt("preset", "vit_s", "model preset (vit_s | vit_m | vit_l)")
         .opt("tasks", "8", "number of tasks in the suite")
         .opt("steps", "200", "fine-tuning steps per task")
+        .opt(
+            "threads",
+            "0",
+            "decode/merge/pack worker threads (0 = auto: TVQ_THREADS, else all cores; 1 = sequential)",
+        )
+}
+
+/// Apply `--threads` to the process-wide worker pool.  Must run before
+/// the first hot-path call; 0 keeps the default (TVQ_THREADS env var,
+/// else available parallelism).
+fn init_threads(args: &tvq::util::cli::Args) -> Result<()> {
+    let n = args.get_usize("threads")?;
+    if n > 0 && !tvq::util::pool::Pool::init_global(n) {
+        eprintln!("warning: --threads {n} ignored (worker pool already initialized)");
+    }
+    Ok(())
 }
 
 fn load_zoo(args: &tvq::util::cli::Args, rt: &Runtime) -> Result<Zoo> {
@@ -95,6 +111,7 @@ fn load_zoo(args: &tvq::util::cli::Args, rt: &Runtime) -> Result<Zoo> {
 fn cmd_train(argv: &[String]) -> Result<()> {
     let cmd = zoo_args(Command::new("tvq train", "build/refresh a checkpoint zoo"));
     let args = cmd.parse(argv)?;
+    init_threads(&args)?;
     let rt = Runtime::new()?;
     let zoo = load_zoo(&args, &rt)?;
     println!(
@@ -111,6 +128,7 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
     let cmd = zoo_args(Command::new("tvq quantize", "quantize a zoo's task vectors"))
         .opt("scheme", "tvq3", "fp32 | fq<b> | tvq<b> | rtvq<bb>o<bo>");
     let args = cmd.parse(argv)?;
+    init_threads(&args)?;
     let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
     let rt = Runtime::new()?;
     let zoo = load_zoo(&args, &rt)?;
@@ -153,6 +171,7 @@ fn cmd_merge(argv: &[String]) -> Result<()> {
         .opt("scheme", "tvq3", "quantization scheme")
         .opt("method", "task_arithmetic", "merging method");
     let args = cmd.parse(argv)?;
+    init_threads(&args)?;
     let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
     let method = pick_method(args.get_str("method")?)?;
     let rt = Runtime::new()?;
@@ -176,6 +195,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let cmd = zoo_args(Command::new("tvq eval", "evaluate Individual models"))
         .opt("scheme", "fp32", "quantization scheme");
     let args = cmd.parse(argv)?;
+    init_threads(&args)?;
     let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
     let rt = Runtime::new()?;
     let zoo = load_zoo(&args, &rt)?;
@@ -195,6 +215,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("max-delay-ms", "2", "batching deadline (ms)")
         .opt("tcp", "", "serve over TCP at this address (e.g. 127.0.0.1:7070) and drive the demo load through it");
     let args = cmd.parse(argv)?;
+    init_threads(&args)?;
     let scheme = QuantScheme::parse(args.get_str("scheme")?)?;
     let method = pick_method(args.get_str("method")?)?;
     let rt = Runtime::new()?;
@@ -362,6 +383,7 @@ examples:
     .opt("group", "512", "planner group-quantization width")
     .switch("synthetic", "use the built-in heterogeneous demo zoo (no PJRT)");
     let args = cmd.parse(argv)?;
+    init_threads(&args)?;
     let out = args.get_str("out")?.to_string();
     let n_tasks = args.get_usize("tasks")?;
 

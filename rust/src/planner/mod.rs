@@ -50,15 +50,16 @@ pub mod sensitivity;
 pub mod solve;
 
 pub use plan::{Arm, Assignment, PackPlan, PlanTensor, SectionRole, SectionSpec};
-pub use sensitivity::{probe, ArmStat, SensitivityProfile, TensorProfile};
+pub use sensitivity::{probe, probe_with_pool, ArmStat, SensitivityProfile, TensorProfile};
 pub use solve::{min_feasible_bytes, solve};
 
 use anyhow::{bail, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::quant::{GroupQuantized, SparseGroupQuantized};
-use crate::registry::{Registry, RegistryBuilder, WriteSummary};
+use crate::registry::{PayloadView, Registry, RegistryBuilder, SectionScratch, WriteSummary};
 use crate::tensor::Tensor;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 /// Candidate-arm configuration for the probe + solver.
@@ -138,14 +139,28 @@ impl PlannerConfig {
 }
 
 /// Probe + solve: produce a [`PackPlan`] for the suite under
-/// `budget_bytes` total registry file bytes.
+/// `budget_bytes` total registry file bytes.  The probe fans out per
+/// tensor across the shared [`Pool`]; the solver is sequential (its
+/// greedy order is the algorithm).
 pub fn plan_pack(
     pre: &Checkpoint,
     fts: &[Checkpoint],
     budget_bytes: u64,
     cfg: &PlannerConfig,
 ) -> Result<PackPlan> {
-    let profile = probe(pre, fts, cfg)?;
+    plan_pack_with_pool(pre, fts, budget_bytes, cfg, Pool::global())
+}
+
+/// [`plan_pack`] on an explicit pool (thread-scaling benches and the
+/// determinism suite pin thread counts through this).
+pub fn plan_pack_with_pool(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    budget_bytes: u64,
+    cfg: &PlannerConfig,
+    pool: &Pool,
+) -> Result<PackPlan> {
+    let profile = sensitivity::probe_with_pool(pre, fts, cfg, pool)?;
     solve(&profile, budget_bytes)
 }
 
@@ -300,11 +315,27 @@ pub(crate) fn quantize_offset(
 /// [`PackPlan::planned_file_bytes`] **exactly** — the function errors if
 /// it does not, because that would mean the solver optimized a different
 /// file than the writer produced.
+///
+/// Per-slot quantization fans out across the shared [`Pool`]; sections
+/// are handed to the builder in the fixed (base, then `(task, tensor)`)
+/// index order regardless of completion order, so the written bytes are
+/// identical at every thread count.
 pub fn write_planned_registry<P: AsRef<std::path::Path>>(
     pre: &Checkpoint,
     fts: &[Checkpoint],
     plan: &PackPlan,
     path: P,
+) -> Result<WriteSummary> {
+    write_planned_registry_with_pool(pre, fts, plan, path, Pool::global())
+}
+
+/// [`write_planned_registry`] on an explicit pool.
+pub fn write_planned_registry_with_pool<P: AsRef<std::path::Path>>(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    plan: &PackPlan,
+    path: P,
+    pool: &Pool,
 ) -> Result<WriteSummary> {
     plan.validate()?;
     if fts.len() != plan.n_tasks() {
@@ -345,44 +376,76 @@ pub fn write_planned_registry<P: AsRef<std::path::Path>>(
     // order — the same deterministic layout the cost model priced, built
     // from the same shared helpers the probe measured with.  RTVQ-arm
     // tensors need their dequantized base; TALL-arm tensors need the
-    // multi-task vector the localization mask scores against.
-    let mut base_hats: Vec<Option<Vec<f32>>> = vec![None; plan.n_tensors()];
-    let mut mtls: Vec<Option<Vec<f32>>> = vec![None; plan.n_tensors()];
-    for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
-        match a.arm {
-            Arm::Rtvq { base_bits, .. } => {
-                let base = mean_flat(&taus, tensor)?;
-                let qbase = GroupQuantized::quantize(&base, base_bits, tensor.group)?;
-                base_hats[l] = Some(qbase.dequantize());
-                builder.add_group(&plan::base_section_name(&tensor.name), &qbase)?;
-            }
-            Arm::Tall { .. } => mtls[l] = Some(sum_flat(&taus, tensor)?),
-            Arm::Tvq { .. } | Arm::Dare { .. } => {}
+    // multi-task vector the localization mask scores against.  Both
+    // phases fan the quantization work out across the pool; section
+    // insertion stays a sequential walk in slot-index order, so the
+    // on-disk layout never depends on worker completion order.
+    struct TensorAux {
+        qbase: Option<GroupQuantized>,
+        base_hat: Option<Vec<f32>>,
+        mtl: Option<Vec<f32>>,
+    }
+    let aux: Vec<TensorAux> = pool.try_map(
+        plan.tensors.iter().zip(&plan.assignments).collect(),
+        |_, (tensor, a): (&PlanTensor, &Assignment)| {
+            Ok(match a.arm {
+                Arm::Rtvq { base_bits, .. } => {
+                    let base = mean_flat(&taus, tensor)?;
+                    let qbase = GroupQuantized::quantize(&base, base_bits, tensor.group)?;
+                    let base_hat = Some(qbase.dequantize());
+                    TensorAux { qbase: Some(qbase), base_hat, mtl: None }
+                }
+                Arm::Tall { .. } => TensorAux {
+                    qbase: None,
+                    base_hat: None,
+                    mtl: Some(sum_flat(&taus, tensor)?),
+                },
+                Arm::Tvq { .. } | Arm::Dare { .. } => {
+                    TensorAux { qbase: None, base_hat: None, mtl: None }
+                }
+            })
+        },
+    )?;
+    for (tensor, a) in plan.tensors.iter().zip(&aux) {
+        if let Some(qbase) = &a.qbase {
+            builder.add_group(&plan::base_section_name(&tensor.name), qbase)?;
         }
     }
-    for (t, task_name) in plan.task_names.iter().enumerate() {
-        for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
-            let flat = padded_flat(&taus[t], &tensor.name, tensor.padded())?;
-            let name = plan::task_section_name(task_name, &tensor.name);
-            match a.arm {
-                Arm::Tvq { bits } => {
-                    builder
-                        .add_group(&name, &GroupQuantized::quantize(&flat, bits, tensor.group)?)?;
-                }
-                Arm::Rtvq { offset_bits, .. } => {
-                    let base_hat =
-                        base_hats[l].as_ref().expect("base quantized above for rtvq arms");
-                    builder.add_group(
-                        &name,
-                        &quantize_offset(&flat, base_hat, offset_bits, tensor.group)?,
-                    )?;
-                }
-                Arm::Dare { .. } | Arm::Tall { .. } => {
-                    let s = sparse_section(a.arm, tensor, t, &flat, mtls[l].as_deref())?;
-                    builder.add_sparse(&name, &s)?;
-                }
+    enum Section {
+        Group(GroupQuantized),
+        Sparse(SparseGroupQuantized),
+    }
+    let slots: Vec<(usize, usize)> = (0..plan.n_tasks())
+        .flat_map(|t| (0..plan.n_tensors()).map(move |l| (t, l)))
+        .collect();
+    let sections: Vec<Section> = pool.try_map(slots, |_, (t, l)| {
+        let tensor = &plan.tensors[l];
+        let a = &plan.assignments[l];
+        let flat = padded_flat(&taus[t], &tensor.name, tensor.padded())?;
+        Ok(match a.arm {
+            Arm::Tvq { bits } => {
+                Section::Group(GroupQuantized::quantize(&flat, bits, tensor.group)?)
             }
-        }
+            Arm::Rtvq { offset_bits, .. } => {
+                let base_hat =
+                    aux[l].base_hat.as_ref().expect("base quantized above for rtvq arms");
+                Section::Group(quantize_offset(&flat, base_hat, offset_bits, tensor.group)?)
+            }
+            Arm::Dare { .. } | Arm::Tall { .. } => {
+                Section::Sparse(sparse_section(a.arm, tensor, t, &flat, aux[l].mtl.as_deref())?)
+            }
+        })
+    })?;
+    // Consume the sections as they are encoded: the builder holds its
+    // own encoded copy, so dropping each quantized payload here keeps
+    // peak memory at ~one payload set, not two.
+    for (i, section) in sections.into_iter().enumerate() {
+        let (t, l) = (i / plan.n_tensors(), i % plan.n_tensors());
+        let name = plan::task_section_name(&plan.task_names[t], &plan.tensors[l].name);
+        match section {
+            Section::Group(g) => builder.add_group(&name, &g)?,
+            Section::Sparse(s) => builder.add_sparse(&name, &s)?,
+        };
     }
     let summary = builder.write(path)?;
     if summary.file_bytes != plan.planned_file_bytes() {
@@ -419,21 +482,44 @@ pub fn build_planned_registry<P: AsRef<std::path::Path>>(
 ///
 /// `tasks` selects a subset (all tasks when `None`); `lams` must have one
 /// coefficient per *selected* task.  TVQ-arm tensors accumulate per task
-/// through [`GroupQuantizedView::axpy_into`](crate::quant::GroupQuantizedView::axpy_into)
+/// through [`GroupQuantizedView::axpy_groups_into`](crate::quant::GroupQuantizedView::axpy_groups_into)
 /// (the same fused loop
 /// [`dequant_merge_flat`](crate::quant::fused::dequant_merge_flat) runs
 /// over owned payloads); RTVQ-arm tensors fold the shared base in once
 /// scaled by `sum(lams)` first (the
 /// [`dequant_merge_rtvq_flat`](crate::quant::fused::dequant_merge_rtvq_flat)
 /// order); sparse-arm (DARE / TALL) tensors scatter-accumulate only their
-/// survivors — masked-out weights never touch the accumulator.  The only
-/// allocations are the output tensors and three scratch buffers reused
-/// across every (task, tensor) pair.
+/// survivors — masked-out weights never touch the accumulator.
+///
+/// # Parallelism and determinism
+///
+/// Each tensor's accumulator is sharded over **disjoint output ranges**
+/// (group-aligned for dense arms, mask-byte-aligned for sparse arms)
+/// across the shared [`Pool`]: every shard replays the full per-task
+/// axpy sequence over its own range, so each output element sees exactly
+/// the accumulation order of the sequential pass — merged floats are
+/// bit-identical at every thread count (no atomics-ordered reductions
+/// anywhere).  Section views are decoded and CRC-checked once per
+/// (task, tensor), exactly as often as the sequential path.  Tensors
+/// under 32Ki elements skip the worker spawn and run inline — the same
+/// shard math over the full range, so the cutoff never changes results.
 pub fn fused_merge(
     reg: &Registry,
     pre: &Checkpoint,
     lams: &[f32],
     tasks: Option<&[usize]>,
+) -> Result<Checkpoint> {
+    fused_merge_with_pool(reg, pre, lams, tasks, Pool::global())
+}
+
+/// [`fused_merge`] on an explicit pool (`Pool::sequential()` is the
+/// bit-exact reference path the determinism suite compares against).
+pub fn fused_merge_with_pool(
+    reg: &Registry,
+    pre: &Checkpoint,
+    lams: &[f32],
+    tasks: Option<&[usize]>,
+    pool: &Pool,
 ) -> Result<Checkpoint> {
     let plan = reg
         .plan()
@@ -468,14 +554,19 @@ pub fn fused_merge(
     }
 
     let mut out = Checkpoint::new();
-    let mut buf: Vec<f32> = Vec::new();
-    // Serve-path scratches, reused across every (task, tensor) pair: the
-    // section scratch stays empty under IoMode::Mmap (sections are
-    // borrowed from the mapping), and codes/vals hold the per-section
-    // unpacked codes / dequantized survivor values.
-    let mut scratch = crate::registry::SectionScratch::default();
-    let mut codes: Vec<u32> = Vec::new();
-    let mut vals: Vec<f32> = Vec::new();
+    // One section scratch per selected task (plus one for the shared
+    // base): under IoMode::Mmap they stay empty (views borrow the file
+    // mapping); under Pread/Reopen each stages its own section so every
+    // view for a tensor can be live at once while the shards run.
+    let mut scratches: Vec<SectionScratch> =
+        (0..indices.len() + 1).map(|_| SectionScratch::default()).collect();
+    // Tensors below this size run their single shard inline: the scoped
+    // spawn+join of a worker set costs more than decoding a small
+    // accumulator, and the pool is re-scoped per tensor.  Purely a
+    // latency heuristic — shard math is identical, so results are
+    // bit-exact on either path.
+    const MIN_PARALLEL_ELEMS: usize = 1 << 15;
+    let seq = Pool::sequential();
     for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
         let pre_t = pre.get(&tensor.name)?;
         if pre_t.numel() != tensor.numel() || pre_t.shape() != &tensor.shape[..] {
@@ -486,36 +577,59 @@ pub fn fused_merge(
                 tensor.shape
             );
         }
-        let pre_flat = padded_flat(pre, &tensor.name, tensor.padded())?;
-        buf.clear();
-        buf.extend_from_slice(&pre_flat);
+        let mut buf = padded_flat(pre, &tensor.name, tensor.padded())?;
+        // Decode + CRC-check every selected view once per tensor, then
+        // shard the accumulator; shards replay the same per-task order
+        // over disjoint ranges, so every element's float accumulation
+        // chain equals the sequential pass exactly.
+        let (base_scratch, task_scratches) = scratches.split_first_mut().expect("len >= 1");
+        let views: Vec<PayloadView> = indices
+            .iter()
+            .zip(task_scratches.iter_mut())
+            .map(|(&t, s)| reg.planned_task_view(t, l, s))
+            .collect::<Result<_>>()?;
+        let pool = if buf.len() < MIN_PARALLEL_ELEMS { &seq } else { pool };
         match a.arm {
             Arm::Tvq { .. } => {
-                for (&t, &lam) in indices.iter().zip(lams) {
-                    let view = reg.planned_task_view(t, l, &mut scratch)?;
-                    view.as_group()?.axpy_into(lam, &mut buf, &mut codes)?;
-                }
+                pool.for_each_shard(&mut buf, tensor.group, |start, shard| {
+                    let mut codes: Vec<u32> = Vec::new();
+                    let g0 = start / tensor.group;
+                    for (view, &lam) in views.iter().zip(lams) {
+                        view.as_group()?.axpy_groups_into(lam, g0, shard, &mut codes)?;
+                    }
+                    Ok(())
+                })?;
             }
             Arm::Rtvq { .. } => {
                 // Base first, scaled by sum(lams) — the same accumulation
                 // order dequant_merge_rtvq_flat uses — then the offsets.
                 let lam_sum: f32 = lams.iter().sum();
-                reg.planned_base_view(l, &mut scratch)?
-                    .axpy_into(lam_sum, &mut buf, &mut codes)?;
-                for (&t, &lam) in indices.iter().zip(lams) {
-                    let view = reg.planned_task_view(t, l, &mut scratch)?;
-                    view.as_group()?.axpy_into(lam, &mut buf, &mut codes)?;
-                }
+                let base = reg.planned_base_view(l, base_scratch)?;
+                pool.for_each_shard(&mut buf, tensor.group, |start, shard| {
+                    let mut codes: Vec<u32> = Vec::new();
+                    let g0 = start / tensor.group;
+                    base.axpy_groups_into(lam_sum, g0, shard, &mut codes)?;
+                    for (view, &lam) in views.iter().zip(lams) {
+                        view.as_group()?.axpy_groups_into(lam, g0, shard, &mut codes)?;
+                    }
+                    Ok(())
+                })?;
             }
             Arm::Dare { .. } | Arm::Tall { .. } => {
-                for (&t, &lam) in indices.iter().zip(lams) {
-                    let view = reg.planned_task_view(t, l, &mut scratch)?;
-                    view.as_sparse()?.axpy_into(lam, &mut buf, &mut codes, &mut vals);
-                }
+                pool.for_each_shard(&mut buf, 8, |start, shard| {
+                    let (mut codes, mut vals) = (Vec::new(), Vec::new());
+                    let byte0 = start / 8;
+                    for (view, &lam) in views.iter().zip(lams) {
+                        view.as_sparse()?
+                            .axpy_range_into(lam, byte0, shard, &mut codes, &mut vals);
+                    }
+                    Ok(())
+                })?;
             }
         }
+        drop(views);
         buf.truncate(tensor.numel());
-        out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf.clone())?);
+        out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf)?);
     }
     Ok(out)
 }

@@ -29,6 +29,8 @@ use super::plan::{arm_cost_bytes, Arm, PlanTensor};
 use super::{mean_flat, padded_flat, quantize_offset, sparse_section, PlannerConfig};
 use crate::checkpoint::Checkpoint;
 use crate::quant::GroupQuantized;
+use crate::tensor::Tensor;
+use crate::util::pool::Pool;
 use crate::util::stats::sse;
 
 /// One probed candidate for one tensor.
@@ -61,10 +63,25 @@ pub struct SensitivityProfile {
 /// `fts` are fine-tuned checkpoints; task vectors tau_t = ft_t - pre are
 /// formed internally.  Task names follow the registry convention
 /// (`task00`, `task01`, ...).
+///
+/// Tensors are probed independently and fanned out across the shared
+/// [`Pool`]; results return in tensor order and each tensor's arithmetic
+/// is self-contained, so the profile — and therefore every plan solved
+/// from it — is identical at every thread count.
 pub fn probe(
     pre: &Checkpoint,
     fts: &[Checkpoint],
     cfg: &PlannerConfig,
+) -> Result<SensitivityProfile> {
+    probe_with_pool(pre, fts, cfg, Pool::global())
+}
+
+/// [`probe`] on an explicit pool.
+pub fn probe_with_pool(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    cfg: &PlannerConfig,
+    pool: &Pool,
 ) -> Result<SensitivityProfile> {
     if fts.is_empty() {
         bail!("sensitivity probe needs at least one fine-tuned checkpoint");
@@ -73,122 +90,134 @@ pub fn probe(
     let task_names: Vec<String> = (0..fts.len()).map(|t| format!("task{t:02}")).collect();
     let taus: Vec<Checkpoint> = fts.iter().map(|ft| ft.sub(pre)).collect::<Result<_>>()?;
 
-    let mut profiles = Vec::with_capacity(pre.len());
-    for (name, t) in pre.iter() {
-        let numel = t.numel();
-        if numel == 0 {
-            bail!("tensor {name:?} has zero elements; cannot plan it");
-        }
-        let tensor = PlanTensor {
-            name: name.to_string(),
-            shape: t.shape().to_vec(),
-            group: cfg.group.min(numel),
-        };
-        let padded = tensor.padded();
-        let group = tensor.group;
-
-        // Per-task padded flats and their task mean (the shared base the
-        // RTVQ arms decompose against) — via the same helpers the writer
-        // compiles with, so probed errors match packed payloads exactly.
-        let flats: Vec<Vec<f32>> = taus
-            .iter()
-            .map(|tau| padded_flat(tau, name, padded))
-            .collect::<Result<_>>()?;
-        let base = mean_flat(&taus, &tensor)?;
-
-        let mut arms = Vec::new();
-        for &bits in &cfg.tvq_bits {
-            let mut error = 0.0;
-            for flat in &flats {
-                // Shared helper (quant::group) — the same pad+quantize+SSE
-                // path the granularity ablation measures with.
-                error += GroupQuantized::quantize(flat, bits, group)?.sse_against(flat);
-            }
-            let arm = Arm::Tvq { bits };
-            arms.push(ArmStat {
-                arm,
-                cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
-                error,
-            });
-        }
-        // Dequantized bases are shared across arms with the same
-        // base_bits (the default config repeats each width), so each
-        // distinct width quantizes the base exactly once per tensor.
-        let mut hat_cache: HashMap<u8, Vec<f32>> = HashMap::new();
-        for &(base_bits, offset_bits) in &cfg.rtvq_arms {
-            if !hat_cache.contains_key(&base_bits) {
-                let qbase = GroupQuantized::quantize(&base, base_bits, group)?;
-                hat_cache.insert(base_bits, qbase.dequantize());
-            }
-            let base_hat = &hat_cache[&base_bits];
-            let mut error = 0.0;
-            for flat in &flats {
-                let qoff = quantize_offset(flat, base_hat, offset_bits, group)?;
-                let off_hat = qoff.dequantize();
-                let rec: Vec<f32> =
-                    off_hat.iter().zip(base_hat).map(|(&o, &b)| o + b).collect();
-                error += sse(flat, &rec);
-            }
-            let arm = Arm::Rtvq { base_bits, offset_bits };
-            arms.push(ArmStat {
-                arm,
-                cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
-                error,
-            });
-        }
-        // Sparse arms: quantize through the same sparse_section path the
-        // writer packs, and measure the error of the *served* dense
-        // reconstruction (zeros at masked-out weights).  The multi-task
-        // vector is summed from the flats already in scope (same task
-        // order and element order as the writer's sum_flat, so the masks
-        // stay bit-identical).
-        let mtl = if cfg.tall_arms.is_empty() {
-            None
-        } else {
-            let mut acc = vec![0.0f32; padded];
-            for flat in &flats {
-                for (a, &x) in acc.iter_mut().zip(flat) {
-                    *a += x;
-                }
-            }
-            Some(acc)
-        };
-        let sparse_candidates = cfg
-            .dare_arms
-            .iter()
-            .map(|&(drop_pct, bits)| Arm::Dare { drop_pct, bits })
-            .chain(
-                cfg.tall_arms
-                    .iter()
-                    .map(|&(keep_pct, bits)| Arm::Tall { keep_pct, bits }),
-            );
-        for arm in sparse_candidates {
-            let mut error = 0.0;
-            for (t, flat) in flats.iter().enumerate() {
-                let s = sparse_section(arm, &tensor, t, flat, mtl.as_deref())?;
-                error += sse(flat, &s.dequantize());
-            }
-            arms.push(ArmStat {
-                arm,
-                cost_bytes: arm_cost_bytes(&task_names, &tensor, arm),
-                error,
-            });
-        }
-        // Fail closed on non-finite weights (diverged checkpoints): a
-        // NaN error must become a pointed Err here, not a solver panic.
-        for a in &arms {
-            if !a.error.is_finite() {
-                bail!(
-                    "tensor {name:?}: arm {} probed non-finite error {} \
-                     (non-finite weights in the task suite?)",
-                    a.arm.label(),
-                    a.error
-                );
-            }
-        }
-        profiles.push(TensorProfile { tensor, arms });
-    }
+    let tensors: Vec<(&str, &Tensor)> = pre.iter().collect();
+    let profiles = pool.try_map(tensors, |_, (name, t)| {
+        probe_tensor(name, t, &taus, &task_names, cfg)
+    })?;
     Ok(SensitivityProfile { task_names, profiles })
+}
+
+/// Probe one tensor under every candidate arm — the unit of work the
+/// pool fans out.
+fn probe_tensor(
+    name: &str,
+    t: &Tensor,
+    taus: &[Checkpoint],
+    task_names: &[String],
+    cfg: &PlannerConfig,
+) -> Result<TensorProfile> {
+    let numel = t.numel();
+    if numel == 0 {
+        bail!("tensor {name:?} has zero elements; cannot plan it");
+    }
+    let tensor = PlanTensor {
+        name: name.to_string(),
+        shape: t.shape().to_vec(),
+        group: cfg.group.min(numel),
+    };
+    let padded = tensor.padded();
+    let group = tensor.group;
+
+    // Per-task padded flats and their task mean (the shared base the
+    // RTVQ arms decompose against) — via the same helpers the writer
+    // compiles with, so probed errors match packed payloads exactly.
+    let flats: Vec<Vec<f32>> = taus
+        .iter()
+        .map(|tau| padded_flat(tau, name, padded))
+        .collect::<Result<_>>()?;
+    let base = mean_flat(taus, &tensor)?;
+
+    let mut arms = Vec::new();
+    for &bits in &cfg.tvq_bits {
+        let mut error = 0.0;
+        for flat in &flats {
+            // Shared helper (quant::group) — the same pad+quantize+SSE
+            // path the granularity ablation measures with.
+            error += GroupQuantized::quantize(flat, bits, group)?.sse_against(flat);
+        }
+        let arm = Arm::Tvq { bits };
+        arms.push(ArmStat {
+            arm,
+            cost_bytes: arm_cost_bytes(task_names, &tensor, arm),
+            error,
+        });
+    }
+    // Dequantized bases are shared across arms with the same
+    // base_bits (the default config repeats each width), so each
+    // distinct width quantizes the base exactly once per tensor.
+    let mut hat_cache: HashMap<u8, Vec<f32>> = HashMap::new();
+    for &(base_bits, offset_bits) in &cfg.rtvq_arms {
+        if !hat_cache.contains_key(&base_bits) {
+            let qbase = GroupQuantized::quantize(&base, base_bits, group)?;
+            hat_cache.insert(base_bits, qbase.dequantize());
+        }
+        let base_hat = &hat_cache[&base_bits];
+        let mut error = 0.0;
+        for flat in &flats {
+            let qoff = quantize_offset(flat, base_hat, offset_bits, group)?;
+            let off_hat = qoff.dequantize();
+            let rec: Vec<f32> =
+                off_hat.iter().zip(base_hat).map(|(&o, &b)| o + b).collect();
+            error += sse(flat, &rec);
+        }
+        let arm = Arm::Rtvq { base_bits, offset_bits };
+        arms.push(ArmStat {
+            arm,
+            cost_bytes: arm_cost_bytes(task_names, &tensor, arm),
+            error,
+        });
+    }
+    // Sparse arms: quantize through the same sparse_section path the
+    // writer packs, and measure the error of the *served* dense
+    // reconstruction (zeros at masked-out weights).  The multi-task
+    // vector is summed from the flats already in scope (same task
+    // order and element order as the writer's sum_flat, so the masks
+    // stay bit-identical).
+    let mtl = if cfg.tall_arms.is_empty() {
+        None
+    } else {
+        let mut acc = vec![0.0f32; padded];
+        for flat in &flats {
+            for (a, &x) in acc.iter_mut().zip(flat) {
+                *a += x;
+            }
+        }
+        Some(acc)
+    };
+    let sparse_candidates = cfg
+        .dare_arms
+        .iter()
+        .map(|&(drop_pct, bits)| Arm::Dare { drop_pct, bits })
+        .chain(
+            cfg.tall_arms
+                .iter()
+                .map(|&(keep_pct, bits)| Arm::Tall { keep_pct, bits }),
+        );
+    for arm in sparse_candidates {
+        let mut error = 0.0;
+        for (t, flat) in flats.iter().enumerate() {
+            let s = sparse_section(arm, &tensor, t, flat, mtl.as_deref())?;
+            error += sse(flat, &s.dequantize());
+        }
+        arms.push(ArmStat {
+            arm,
+            cost_bytes: arm_cost_bytes(task_names, &tensor, arm),
+            error,
+        });
+    }
+    // Fail closed on non-finite weights (diverged checkpoints): a
+    // NaN error must become a pointed Err here, not a solver panic.
+    for a in &arms {
+        if !a.error.is_finite() {
+            bail!(
+                "tensor {name:?}: arm {} probed non-finite error {} \
+                 (non-finite weights in the task suite?)",
+                a.arm.label(),
+                a.error
+            );
+        }
+    }
+    Ok(TensorProfile { tensor, arms })
 }
 
 #[cfg(test)]

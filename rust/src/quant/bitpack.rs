@@ -119,9 +119,38 @@ impl<'a> BitPackedView<'a> {
     /// the borrowed bytes — no intermediate word vector.
     pub fn unpack_into(&self, out: &mut [u32]) {
         assert_eq!(out.len(), self.len);
-        let done = unpack_blocks(self.bits, self.bytes, out);
-        for (i, o) in out[done..].iter_mut().enumerate() {
-            *o = self.get(done + i);
+        self.unpack_range_into(0, out);
+    }
+
+    /// Unpack codes `[start, start + out.len())` into `out` — the
+    /// range-addressable form of [`unpack_into`](Self::unpack_into).
+    /// Every code decodes with the same mask-and-shift arithmetic
+    /// regardless of which range reads it, so sharded readers reproduce
+    /// the full decode bit-for-bit (the parallel merge path relies on
+    /// this).  Arbitrary `start` is allowed; unaligned lead-in codes
+    /// decode one at a time until the bit cursor reaches a byte
+    /// boundary, then the block decoder takes over.
+    pub fn unpack_range_into(&self, start: usize, out: &mut [u32]) {
+        assert!(
+            start.checked_add(out.len()).is_some_and(|end| end <= self.len),
+            "code range [{start}, {start}+{}) outside 0..{}",
+            out.len(),
+            self.len
+        );
+        let bits = self.bits as usize;
+        let mut i = 0;
+        while i < out.len() && ((start + i) * bits) % 8 != 0 {
+            out[i] = self.get(start + i);
+            i += 1;
+        }
+        let aligned = &mut out[i..];
+        if aligned.is_empty() {
+            return;
+        }
+        let byte0 = ((start + i) * bits) / 8;
+        let done = unpack_blocks(self.bits, &self.bytes[byte0..], aligned);
+        for (j, o) in aligned[done..].iter_mut().enumerate() {
+            *o = self.get(start + i + done + j);
         }
     }
 
@@ -505,6 +534,46 @@ mod tests {
                 assert_eq!(v.to_owned(), p, "bits={bits} len={len}: to_owned");
             }
         }
+    }
+
+    #[test]
+    fn range_unpack_matches_full_unpack_for_all_widths() {
+        // Sharded decode must agree with the full decode for every width
+        // (including the word-straddling ones) at ranges starting on and
+        // off byte boundaries.
+        for bits in 1u8..=8 {
+            let maxcode = (1u32 << bits) - 1;
+            let len = 301usize;
+            let codes: Vec<u32> = (0..len)
+                .map(|i| (i as u32).wrapping_mul(2654435761) & maxcode)
+                .collect();
+            let p = BitPacked::pack(&codes, bits).unwrap();
+            let wire = p.packed_bytes();
+            let v = BitPackedView::new(bits, len, &wire).unwrap();
+            for &(start, count) in
+                &[(0usize, len), (1, 7), (3, 64), (8, 100), (64, 237), (299, 2), (150, 0)]
+            {
+                let mut out = vec![0u32; count];
+                v.unpack_range_into(start, &mut out);
+                assert_eq!(
+                    out,
+                    &codes[start..start + count],
+                    "bits={bits} range=[{start}, +{count})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn range_unpack_rejects_out_of_bounds() {
+        let p = BitPacked::pack(&[1, 2, 3, 4, 5], 3).unwrap();
+        let wire = p.packed_bytes();
+        let v = BitPackedView::new(3, 5, &wire).unwrap();
+        let r = std::panic::catch_unwind(|| {
+            let mut out = vec![0u32; 3];
+            v.unpack_range_into(4, &mut out);
+        });
+        assert!(r.is_err(), "range past len must panic, not decode garbage");
     }
 
     #[test]

@@ -225,12 +225,38 @@ impl<'a> GroupQuantizedView<'a> {
         if out.len() != self.len() {
             bail!("flat length mismatch: {} vs {}", self.len(), out.len());
         }
-        codes_scratch.resize(self.len(), 0);
-        self.codes.unpack_into(codes_scratch);
-        for (gi, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
+        self.axpy_groups_into(lam, 0, out, codes_scratch)
+    }
+
+    /// Sharded accumulate: `out[i] += lam * dq(self)[g0 * group + i]`
+    /// over the groups `[g0, g0 + out.len() / group)`.  `out` must be a
+    /// whole number of groups that fits inside the payload.  The
+    /// per-element arithmetic is the same `a * code + b` the full
+    /// [`axpy_into`](Self::axpy_into) runs (which delegates here), so a
+    /// set of disjoint shards reproduces the full pass bit-for-bit —
+    /// the parallel fused-merge invariant.
+    pub fn axpy_groups_into(
+        &self,
+        lam: f32,
+        g0: usize,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+    ) -> Result<()> {
+        if out.len() % self.group != 0 || g0 + out.len() / self.group > self.n_groups {
+            bail!(
+                "group shard [{g0}, +{} elems) does not tile the {} groups of {} elements",
+                out.len(),
+                self.n_groups,
+                self.group
+            );
+        }
+        codes_scratch.resize(out.len(), 0);
+        self.codes.unpack_range_into(g0 * self.group, codes_scratch);
+        for (li, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
+            let gi = g0 + li;
             let a = lam * self.scale(gi);
             let b = -a * self.zp(gi);
-            let base = gi * self.group;
+            let base = li * self.group;
             let dst = &mut out[base..base + self.group];
             for (d, &c) in dst.iter_mut().zip(chunk) {
                 *d += a * c as f32 + b;
@@ -245,12 +271,33 @@ impl<'a> GroupQuantizedView<'a> {
     /// owned one exactly, not approximately.
     pub fn dequantize_into(&self, out: &mut [f32], codes_scratch: &mut Vec<u32>) {
         assert_eq!(out.len(), self.len());
-        codes_scratch.resize(self.len(), 0);
-        self.codes.unpack_into(codes_scratch);
-        for (gi, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
+        self.dequantize_groups_into(0, out, codes_scratch);
+    }
+
+    /// Sharded dequantize: overwrite `out` with the decoded values of
+    /// groups `[g0, g0 + out.len() / group)`.  Same per-element
+    /// `scale * (code - zp)` as the full decode (which delegates here),
+    /// so sharded readers are bit-exact.
+    pub fn dequantize_groups_into(
+        &self,
+        g0: usize,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+    ) {
+        assert!(
+            out.len() % self.group == 0 && g0 + out.len() / self.group <= self.n_groups,
+            "group shard [{g0}, +{} elems) does not tile {} groups of {}",
+            out.len(),
+            self.n_groups,
+            self.group
+        );
+        codes_scratch.resize(out.len(), 0);
+        self.codes.unpack_range_into(g0 * self.group, codes_scratch);
+        for (li, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
+            let gi = g0 + li;
             let scale = self.scale(gi);
             let zp = self.zp(gi);
-            let base = gi * self.group;
+            let base = li * self.group;
             for (j, &c) in chunk.iter().enumerate() {
                 out[base + j] = scale * (c as f32 - zp);
             }
@@ -406,6 +453,54 @@ mod tests {
             }
             // Owned materialization round-trips the whole struct.
             assert_eq!(view.to_owned(), g);
+        }
+    }
+
+    #[test]
+    fn group_range_decode_matches_full_decode_bit_exactly() {
+        let mut rng = Rng::new(23);
+        for (len, bits, group) in [(4096usize, 3u8, 512usize), (1024, 5, 128), (640, 2, 64)] {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 0.05);
+            let g = GroupQuantized::quantize(&v, bits, group).unwrap();
+            let (params, code_bytes) = wire_parts(&g);
+            let codes = BitPackedView::new(bits, len, &code_bytes).unwrap();
+            let view =
+                GroupQuantizedView::new(bits, group, g.n_groups(), &params, codes).unwrap();
+            let mut scratch = Vec::new();
+
+            // Full reference via the owned decoder.
+            let full = g.dequantize();
+            let mut want_acc = vec![1.5f32; len];
+            view.axpy_into(0.75, &mut want_acc, &mut scratch).unwrap();
+
+            // Stitch the full buffers back together from disjoint group
+            // shards; every split must reproduce them bit-for-bit.
+            for n_shards in [1usize, 2, 3, g.n_groups()] {
+                let per = g.n_groups().div_ceil(n_shards);
+                let mut deq = vec![0.0f32; len];
+                let mut acc = vec![1.5f32; len];
+                let mut g0 = 0;
+                while g0 < g.n_groups() {
+                    let gn = per.min(g.n_groups() - g0);
+                    let lo = g0 * group;
+                    let hi = lo + gn * group;
+                    view.dequantize_groups_into(g0, &mut deq[lo..hi], &mut scratch);
+                    view.axpy_groups_into(0.75, g0, &mut acc[lo..hi], &mut scratch)
+                        .unwrap();
+                    g0 += gn;
+                }
+                assert_eq!(deq, full, "{n_shards} shards: dequantize diverged");
+                assert_eq!(acc, want_acc, "{n_shards} shards: axpy diverged");
+            }
+
+            // Misaligned / out-of-range shards fail closed.
+            let mut bad = vec![0.0f32; group + 1];
+            assert!(view.axpy_groups_into(1.0, 0, &mut bad, &mut scratch).is_err());
+            let mut last = vec![0.0f32; group];
+            assert!(view
+                .axpy_groups_into(1.0, g.n_groups(), &mut last, &mut scratch)
+                .is_err());
         }
     }
 

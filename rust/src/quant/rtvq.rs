@@ -15,6 +15,7 @@ use anyhow::{bail, Result};
 
 use super::tvq::QuantizedCheckpoint;
 use crate::checkpoint::Checkpoint;
+use crate::util::pool::Pool;
 
 /// A quantized RTVQ bundle for a suite of tasks.
 #[derive(Clone, Debug)]
@@ -40,6 +41,23 @@ impl Rtvq {
         offset_bits: u8,
         error_correction: bool,
     ) -> Result<Self> {
+        let pool = Pool::sequential();
+        Self::quantize_with_pool(pre, fts, base_bits, offset_bits, error_correction, &pool)
+    }
+
+    /// [`Rtvq::quantize`] with the per-task offset quantization (Alg. 1
+    /// lines 4-5) fanned out across `pool`.  Each offset is quantized
+    /// independently against the same reference and collected in task
+    /// order, so the bundle is bit-identical at every thread count — the
+    /// registry build path rides on this.
+    pub fn quantize_with_pool(
+        pre: &Checkpoint,
+        fts: &[Checkpoint],
+        base_bits: u8,
+        offset_bits: u8,
+        error_correction: bool,
+        pool: &Pool,
+    ) -> Result<Self> {
         if fts.is_empty() {
             bail!("RTVQ needs at least one fine-tuned checkpoint");
         }
@@ -57,11 +75,9 @@ impl Rtvq {
             ft_avg
         };
         // line 4-5: per-task offsets
-        let mut offsets = Vec::with_capacity(fts.len());
-        for ft in fts {
-            let off = ft.sub(&reference)?;
-            offsets.push(QuantizedCheckpoint::quantize(&off, offset_bits)?);
-        }
+        let offsets = pool.try_map(fts.iter().collect(), |_, ft: &Checkpoint| {
+            QuantizedCheckpoint::quantize(&ft.sub(&reference)?, offset_bits)
+        })?;
         Ok(Self { base_bits, offset_bits, error_correction, base, offsets })
     }
 

@@ -238,9 +238,59 @@ impl<'a> SparseGroupQuantizedView<'a> {
         vals_scratch: &mut Vec<f32>,
     ) {
         assert_eq!(out.len(), self.dense_len);
-        vals_scratch.resize(self.survivors.len(), 0.0);
-        self.survivors.dequantize_into(vals_scratch, codes_scratch);
-        scatter_axpy(self.mask, vals_scratch, self.n_survivors, lam, out);
+        self.axpy_range_into(lam, 0, out, codes_scratch, vals_scratch);
+    }
+
+    /// Sharded scatter-accumulate: `out` covers the dense index range
+    /// `[byte0 * 8, byte0 * 8 + out.len())`, which must start on a
+    /// mask-byte boundary and end on one (or at `dense_len`) — the shard
+    /// geometry the parallel fused merge carves.  The shard's survivor
+    /// values are located by prefix popcount and decoded through the
+    /// group-range decoder, so each survivor gets the exact same
+    /// `scale * (code - zp)` value as in the full pass
+    /// ([`axpy_into`](Self::axpy_into) delegates here with the full
+    /// range): disjoint shards reproduce it bit-for-bit.
+    pub fn axpy_range_into(
+        &self,
+        lam: f32,
+        byte0: usize,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+        vals_scratch: &mut Vec<f32>,
+    ) {
+        let start = byte0 * 8;
+        let end = start + out.len();
+        assert!(end <= self.dense_len, "dense range [{start}, {end}) past {}", self.dense_len);
+        assert!(
+            end == self.dense_len || end % 8 == 0,
+            "sparse shard must end on a mask-byte boundary or at dense_len"
+        );
+        // Survivor rank of the first in-range dense index.
+        let s_lo: usize = self.mask[..byte0].iter().map(|b| b.count_ones() as usize).sum();
+        let mask_range = &self.mask[byte0..end.div_ceil(8)];
+        let in_range: usize = mask_range.iter().map(|b| b.count_ones() as usize).sum();
+        if in_range == 0 {
+            return;
+        }
+        // Decode exactly the survivor groups covering [s_lo, s_lo + n).
+        let group = self.survivors.group();
+        let g0 = s_lo / group;
+        let g1 = (s_lo + in_range).div_ceil(group);
+        vals_scratch.resize((g1 - g0) * group, 0.0);
+        self.survivors
+            .dequantize_groups_into(g0, vals_scratch, codes_scratch);
+        let base = g0 * group;
+        let mut s = s_lo;
+        for (bi, &byte) in mask_range.iter().enumerate() {
+            let mut b = byte;
+            while b != 0 {
+                let bit = b.trailing_zeros() as usize;
+                out[bi * 8 + bit] += lam * vals_scratch[s - base];
+                s += 1;
+                b &= b - 1;
+            }
+        }
+        debug_assert_eq!(s, s_lo + in_range);
     }
 
     /// Reconstruct into a caller buffer (overwrites all of `out`):
@@ -397,6 +447,44 @@ mod tests {
         assert_eq!(acc, want, "view axpy must match the owned scatter path");
 
         assert_eq!(view.to_owned(), s);
+    }
+
+    #[test]
+    fn range_scatter_matches_full_scatter_bit_exactly() {
+        use crate::quant::BitPackedView;
+        // Irregular survivor pattern: clustered + sparse stretches, so
+        // shard boundaries cut through runs of set and clear bits.
+        let mut rng = Rng::new(77);
+        let mut v = vec![0.0f32; 1003];
+        rng.fill_normal(&mut v, 0.05);
+        let keep: Vec<usize> = (0..1003)
+            .filter(|&i| i % 7 == 0 || (100..140).contains(&i))
+            .collect();
+        let s = SparseGroupQuantized::quantize_indices(&v, &keep, 1.3, 3, 64).unwrap();
+        let (params, code_bytes) = view_parts(&s);
+        let codes = BitPackedView::new(3, s.survivors.len(), &code_bytes).unwrap();
+        let gview =
+            GroupQuantizedView::new(3, 64, s.survivors.n_groups(), &params, codes).unwrap();
+        let view =
+            SparseGroupQuantizedView::new(s.dense_len, s.n_survivors, &s.mask, gview).unwrap();
+
+        let (mut cs, mut vs) = (Vec::new(), Vec::new());
+        let mut want = vec![0.25f32; 1003];
+        view.axpy_into(0.5, &mut want, &mut cs, &mut vs);
+
+        // Stitch from mask-byte-aligned shards of several widths; every
+        // split must reproduce the full scatter exactly.
+        for shard_bytes in [1usize, 3, 16, 126] {
+            let mut got = vec![0.25f32; 1003];
+            let mut byte0 = 0;
+            while byte0 * 8 < 1003 {
+                let lo = byte0 * 8;
+                let hi = (lo + shard_bytes * 8).min(1003);
+                view.axpy_range_into(0.5, byte0, &mut got[lo..hi], &mut cs, &mut vs);
+                byte0 += shard_bytes;
+            }
+            assert_eq!(got, want, "shard_bytes={shard_bytes}: scatter diverged");
+        }
     }
 
     #[test]

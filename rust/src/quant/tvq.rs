@@ -87,9 +87,20 @@ impl QuantizedCheckpoint {
 
     /// Reconstruct the full-precision approximation (Eq. 2 per tensor).
     pub fn dequantize(&self) -> Result<Checkpoint> {
+        self.dequantize_with_pool(&crate::util::pool::Pool::sequential())
+    }
+
+    /// [`dequantize`](Self::dequantize) with the per-tensor decode fanned
+    /// out across `pool`.  Tensors decode independently and assemble in
+    /// name order, so the reconstruction is bit-identical at every
+    /// thread count — the registry's lazy serve path rides on this.
+    pub fn dequantize_with_pool(&self, pool: &crate::util::pool::Pool) -> Result<Checkpoint> {
+        let parts = pool.try_map(self.tensors.iter().collect(), |_, (name, qt)| {
+            Ok((name, qt.dequantize()?))
+        })?;
         let mut ck = Checkpoint::new();
-        for (name, qt) in &self.tensors {
-            ck.insert(name, qt.dequantize()?);
+        for (name, t) in parts {
+            ck.insert(name, t);
         }
         Ok(ck)
     }

@@ -813,23 +813,39 @@ impl Registry {
     /// Reconstruct task `t`'s full-precision task vector from its packed
     /// payload(s) alone: dq(offset) + dq(base) for RTVQ, dq(codes) for
     /// TVQ, and the per-tensor plan arms for planned registries.
+    /// Sequential; see [`Registry::load_task_vector_with_pool`] for the
+    /// chunk-parallel form (bit-identical output).
     pub fn load_task_vector(&self, t: usize) -> Result<Checkpoint> {
+        self.load_task_vector_with_pool(t, &crate::util::pool::Pool::sequential())
+    }
+
+    /// [`Registry::load_task_vector`] with per-tensor decode fanned out
+    /// across `pool`: planned registries dequantize each tensor's
+    /// section(s) as an independent job; uniform registries fan out the
+    /// per-tensor dequantize of the task payload.  Tensors assemble in a
+    /// fixed order and no job touches another's output, so the
+    /// reconstruction is bit-identical at every thread count.
+    pub fn load_task_vector_with_pool(
+        &self,
+        t: usize,
+        pool: &crate::util::pool::Pool,
+    ) -> Result<Checkpoint> {
         if let Some(plan) = &self.plan {
             if t >= plan.n_tasks() {
                 bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
             }
             let base_hats = self.planned_base_hats()?;
-            let mut out = Checkpoint::new();
-            let mut buf: Vec<f32> = Vec::new();
-            // One section scratch + decode scratches for the whole task:
-            // in Mmap mode every section is dequantized straight out of
-            // the mapping — no byte is staged or copied on this path.
-            let mut scratch = SectionScratch::default();
-            let mut codes: Vec<u32> = Vec::new();
-            let mut vals: Vec<f32> = Vec::new();
-            for (l, (tensor, a)) in plan.tensors.iter().zip(&plan.assignments).enumerate() {
-                buf.clear();
-                buf.resize(tensor.padded(), 0.0);
+            let slots: Vec<usize> = (0..plan.n_tensors()).collect();
+            let parts: Vec<Tensor> = pool.try_map(slots, |_, l| {
+                let tensor = &plan.tensors[l];
+                let a = &plan.assignments[l];
+                // Per-job scratches: in Mmap mode every section is
+                // dequantized straight out of the mapping — no byte is
+                // staged or copied on this path.
+                let mut scratch = SectionScratch::default();
+                let mut codes: Vec<u32> = Vec::new();
+                let mut vals: Vec<f32> = Vec::new();
+                let mut buf = vec![0.0f32; tensor.padded()];
                 match self.planned_task_view(t, l, &mut scratch)? {
                     PayloadView::Group(gq) => {
                         gq.dequantize_into(&mut buf, &mut codes);
@@ -852,7 +868,11 @@ impl Registry {
                     ),
                 }
                 buf.truncate(tensor.numel());
-                out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf.clone())?);
+                Tensor::new(tensor.shape.clone(), buf)
+            })?;
+            let mut out = Checkpoint::new();
+            for (tensor, part) in plan.tensors.iter().zip(parts) {
+                out.insert(&tensor.name, part);
             }
             return Ok(out);
         }
@@ -866,9 +886,9 @@ impl Registry {
         };
         match self.scheme {
             RegistryScheme::Uniform(QuantScheme::Rtvq(..)) => {
-                q.dequantize()?.add(self.base_checkpoint()?)
+                q.dequantize_with_pool(pool)?.add(self.base_checkpoint()?)
             }
-            RegistryScheme::Uniform(QuantScheme::Tvq(_)) => q.dequantize(),
+            RegistryScheme::Uniform(QuantScheme::Tvq(_)) => q.dequantize_with_pool(pool),
             RegistryScheme::Uniform(QuantScheme::Fq(_)) => bail!(
                 "FQ registries store quantized checkpoints, not task vectors; \
                  subtract the pre-trained trunk from load_task_payload's result"

@@ -83,8 +83,14 @@ pub mod writer;
 pub use accounting::{f32_store_bytes, DiskAccounting};
 pub use container::{Payload, PayloadKind, PayloadView, RegistryScheme};
 pub use index::{IndexEntry, IoMode, Registry, SectionScratch};
-pub use source::{merge_from_source, F32ZooSource, PackedRegistrySource, TaskVectorSource};
-pub use writer::{build_registry, uniform_registry_bytes, RegistryBuilder, WriteSummary};
+pub use source::{
+    merge_from_source, merge_from_source_with_pool, F32ZooSource, PackedRegistrySource,
+    TaskVectorSource,
+};
+pub use writer::{
+    build_registry, build_registry_with_pool, uniform_registry_bytes, RegistryBuilder,
+    WriteSummary,
+};
 
 #[cfg(test)]
 mod tests {

@@ -13,9 +13,15 @@ use anyhow::{bail, Result};
 use super::index::Registry;
 use crate::checkpoint::Checkpoint;
 use crate::merge::{MergedModel, Merger};
+use crate::util::pool::Pool;
 
 /// A provider of full-precision task vectors, one per task.
-pub trait TaskVectorSource {
+///
+/// `Sync` is a supertrait: the parallel merge path
+/// ([`merge_from_source_with_pool`]) fans per-task loads out across a
+/// [`Pool`], so every backend must be shareable across worker threads
+/// (all in-tree backends are — registries read through `&self`).
+pub trait TaskVectorSource: Sync {
     fn n_tasks(&self) -> usize;
 
     /// Human-readable name of task `t` (used in diagnostics and cache keys).
@@ -23,6 +29,17 @@ pub trait TaskVectorSource {
 
     /// The full-precision task vector tau_t (exact or dequantized).
     fn task_vector(&self, t: usize) -> Result<Checkpoint>;
+
+    /// [`task_vector`](Self::task_vector) with intra-task decode fanned
+    /// out across `pool` — used by the merge path when only one task is
+    /// requested (otherwise it parallelizes *across* tasks and keeps
+    /// each load sequential, bounding total thread count to the pool
+    /// width).  Backends without sub-task parallelism fall back to the
+    /// sequential load; outputs must be identical either way.
+    fn task_vector_with_pool(&self, t: usize, pool: &Pool) -> Result<Checkpoint> {
+        let _ = pool;
+        self.task_vector(t)
+    }
 
     /// Scheme label (`"FP32"`, `"TVQ-INT4"`, ...).
     fn scheme_label(&self) -> String;
@@ -129,6 +146,10 @@ impl TaskVectorSource for PackedRegistrySource {
         self.registry.load_task_vector(t)
     }
 
+    fn task_vector_with_pool(&self, t: usize, pool: &Pool) -> Result<Checkpoint> {
+        self.registry.load_task_vector_with_pool(t, pool)
+    }
+
     fn scheme_label(&self) -> String {
         self.registry.scheme().label()
     }
@@ -154,11 +175,31 @@ impl TaskVectorSource for PackedRegistrySource {
 /// when `None`).  With a [`PackedRegistrySource`] this is the serving
 /// materialization path: index + the named sections are the only bytes
 /// read — the full f32 zoo never exists in memory or on disk.
+///
+/// Task-vector loads (the decode-dominated part) fan out across the
+/// shared [`Pool`]; the merge combine itself stays on the caller's
+/// thread in task order, so the merged floats are bit-identical at
+/// every thread count.
 pub fn merge_from_source(
     merger: &dyn Merger,
     pre: &Checkpoint,
     source: &dyn TaskVectorSource,
     tasks: Option<&[usize]>,
+) -> Result<MergedModel> {
+    merge_from_source_with_pool(merger, pre, source, tasks, Pool::global())
+}
+
+/// [`merge_from_source`] on an explicit pool.  Multi-task requests
+/// parallelize *across* tasks (each load sequential); a single-task
+/// request parallelizes *inside* the load
+/// ([`TaskVectorSource::task_vector_with_pool`]) — either way the total
+/// worker count is bounded by the pool width.
+pub fn merge_from_source_with_pool(
+    merger: &dyn Merger,
+    pre: &Checkpoint,
+    source: &dyn TaskVectorSource,
+    tasks: Option<&[usize]>,
+    pool: &Pool,
 ) -> Result<MergedModel> {
     let indices: Vec<usize> = match tasks {
         Some(ts) => {
@@ -174,9 +215,10 @@ pub fn merge_from_source(
     if indices.is_empty() {
         bail!("merge needs at least one task");
     }
-    let taus: Vec<Checkpoint> = indices
-        .iter()
-        .map(|&t| source.task_vector(t))
-        .collect::<Result<_>>()?;
+    let taus: Vec<Checkpoint> = if indices.len() == 1 {
+        vec![source.task_vector_with_pool(indices[0], pool)?]
+    } else {
+        pool.try_map(indices, |_, t| source.task_vector(t))?
+    };
     merger.merge(pre, &taus)
 }

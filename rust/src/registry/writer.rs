@@ -22,6 +22,7 @@ use crate::checkpoint::Checkpoint;
 use crate::planner::PackPlan;
 use crate::quant::{GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq, SparseGroupQuantized};
 use crate::util::crc32;
+use crate::util::pool::Pool;
 
 /// Exact byte accounting returned by a registry write.
 #[derive(Clone, Debug)]
@@ -306,10 +307,14 @@ impl RegistryBuilder {
 
 /// Assemble (without writing) the uniform registry builder for a zoo —
 /// shared by [`build_registry`] and [`uniform_registry_bytes`].
+/// Per-task quantization fans out across `pool`; tasks are added to the
+/// builder in task-index order regardless of completion order, so the
+/// serialized bytes are identical at every thread count.
 fn uniform_builder(
     pre: &Checkpoint,
     fts: &[Checkpoint],
     scheme: QuantScheme,
+    pool: &Pool,
 ) -> Result<RegistryBuilder> {
     if fts.is_empty() {
         bail!("cannot build a registry from zero fine-tuned checkpoints");
@@ -317,13 +322,15 @@ fn uniform_builder(
     let mut b = RegistryBuilder::new(scheme);
     match scheme {
         QuantScheme::Tvq(bits) => {
-            for (t, ft) in fts.iter().enumerate() {
-                let tau = ft.sub(pre)?;
-                b.add_task(&format!("task{t:02}"), &QuantizedCheckpoint::quantize(&tau, bits)?)?;
+            let qs = pool.try_map(fts.iter().collect(), |_, ft: &Checkpoint| {
+                QuantizedCheckpoint::quantize(&ft.sub(pre)?, bits)
+            })?;
+            for (t, q) in qs.iter().enumerate() {
+                b.add_task(&format!("task{t:02}"), q)?;
             }
         }
         QuantScheme::Rtvq(bb, bo) => {
-            let r = Rtvq::quantize(pre, fts, bb, bo, true)?;
+            let r = Rtvq::quantize_with_pool(pre, fts, bb, bo, true, pool)?;
             b.set_rtvq_base(&r.base)?;
             for (t, off) in r.offsets.iter().enumerate() {
                 b.add_task(&format!("task{t:02}"), off)?;
@@ -344,13 +351,29 @@ fn uniform_builder(
 ///   at bb bits + per-task offsets at bo bits.
 /// * `Fq` / `Fp32`  — rejected: FQ payloads need the trunk at read time
 ///   and fp32 zoos already have the TVQC store.
+///
+/// Per-task quantization runs on the shared [`Pool`]; written bytes are
+/// thread-count-independent (see [`build_registry_with_pool`] to pin the
+/// width explicitly).
 pub fn build_registry<P: AsRef<Path>>(
     pre: &Checkpoint,
     fts: &[Checkpoint],
     scheme: QuantScheme,
     path: P,
 ) -> Result<WriteSummary> {
-    uniform_builder(pre, fts, scheme)?.write(path)
+    build_registry_with_pool(pre, fts, scheme, path, Pool::global())
+}
+
+/// [`build_registry`] on an explicit pool (thread-scaling benches and
+/// the determinism suite pin thread counts through this).
+pub fn build_registry_with_pool<P: AsRef<Path>>(
+    pre: &Checkpoint,
+    fts: &[Checkpoint],
+    scheme: QuantScheme,
+    path: P,
+    pool: &Pool,
+) -> Result<WriteSummary> {
+    uniform_builder(pre, fts, scheme, pool)?.write(path)
 }
 
 /// Exact file bytes the uniform registry for `(pre, fts, scheme)` would
@@ -366,5 +389,5 @@ pub fn uniform_registry_bytes(
     fts: &[Checkpoint],
     scheme: QuantScheme,
 ) -> Result<u64> {
-    uniform_builder(pre, fts, scheme)?.projected_file_bytes()
+    uniform_builder(pre, fts, scheme, Pool::global())?.projected_file_bytes()
 }

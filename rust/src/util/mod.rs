@@ -1,11 +1,13 @@
 //! Shared infrastructure substrates built in-house (the offline build
 //! environment resolves only `xla` + `anyhow`): deterministic RNG, JSON,
-//! statistics, a bench runner, a property-test harness, and a CLI parser.
+//! statistics, a bench runner, a property-test harness, a CLI parser,
+//! and the scoped worker pool behind the parallel decode/merge paths.
 
 pub mod bench;
 pub mod benchcmp;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

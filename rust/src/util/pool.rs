@@ -1,0 +1,373 @@
+//! Scoped worker pool for the decode/merge hot paths (rayon is
+//! unavailable offline; this is the std-only substitute).
+//!
+//! Group-quantized payloads decompose into independently decodable
+//! chunks, so every hot loop in the system — fused dequant-merge, lazy
+//! task reconstruction, registry build/pack, the planner's sensitivity
+//! probe — is a fan-out over independent work items or disjoint output
+//! ranges.  [`Pool`] provides exactly those two shapes:
+//!
+//! * [`Pool::map`] — run one closure per item, results returned in item
+//!   order (the fan-out shape: per-task quantization, per-tensor probe);
+//! * [`Pool::for_each_shard`] — split one `&mut [T]` into at most
+//!   `threads` contiguous, alignment-respecting shards and run a closure
+//!   on each (the sharded-output shape: per-tensor axpy over disjoint
+//!   group ranges).
+//!
+//! # Determinism contract
+//!
+//! The pool never performs reductions: outputs land in per-item slots
+//! (`map`) or disjoint sub-slices (`for_each_shard`), so results are
+//! **bit-identical for every thread count** as long as each item/shard
+//! computation is itself deterministic — which is how the callers are
+//! written (fixed accumulation order per output element, no
+//! atomics-ordered float sums).  The determinism suite in
+//! `rust/tests/pool_determinism.rs` pins this end to end.
+//!
+//! # Sequential mode
+//!
+//! A pool with `threads == 1` (or a single item/shard) runs every
+//! closure **inline on the caller's thread** — no worker is spawned, no
+//! channel is crossed.  This is the exact code path the parallel shards
+//! also execute, just over the full range, so `--threads 1` is both the
+//! determinism reference and the zero-overhead fallback.
+//!
+//! # Sizing
+//!
+//! [`Pool::global`] is the process-wide shared pool (the hot paths'
+//! default).  Its width is resolved once: `TVQ_THREADS` env var if set
+//! to a positive integer, else [`std::thread::available_parallelism`];
+//! the `tvq` CLI's `--threads` flag overrides both via
+//! [`Pool::init_global`] before first use.  Workers are *scoped* — threads
+//! live only for the duration of one `map`/`for_each_shard` call — so a
+//! shared pool costs nothing while idle and callers may also build
+//! throwaway pools ([`Pool::new`]) for tests and thread-scaling benches.
+//!
+//! Nested use (a `map` job calling back into the same pool) spawns
+//! additional scoped threads rather than deadlocking, but multiplies
+//! thread counts — the hot paths therefore parallelize at exactly one
+//! level (documented per call site).
+//!
+//! # Panics
+//!
+//! A panic inside a worker is caught at join and re-raised on the
+//! calling thread ([`std::panic::resume_unwind`]) after every other
+//! worker has finished — a poisoned shard can never be silently dropped.
+
+use std::panic;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+/// A fixed-width scoped worker pool.  See the module docs for the
+/// determinism and sequential-mode contracts.
+pub struct Pool {
+    threads: usize,
+    /// Total nanoseconds workers (and inline sequential runs) spent
+    /// executing closures — the "cpu" side of merge-build wall/cpu
+    /// timing.  Aggregate across all concurrent users of the pool.
+    busy_ns: AtomicU64,
+}
+
+impl Pool {
+    /// A pool running `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1), busy_ns: AtomicU64::new(0) }
+    }
+
+    /// The single-threaded pool: every closure runs inline.
+    pub fn sequential() -> Self {
+        Self::new(1)
+    }
+
+    /// The process-wide shared pool used by the hot-path default entry
+    /// points (`fused_merge`, `build_registry`, `probe`, ...).  Width:
+    /// [`Pool::init_global`] override > `TVQ_THREADS` > available
+    /// parallelism.
+    pub fn global() -> &'static Pool {
+        GLOBAL.get_or_init(|| Pool::new(default_threads()))
+    }
+
+    /// Fix the global pool's width (the CLI's `--threads`).  Returns
+    /// `false` if the global pool was already initialized — the override
+    /// must run before the first [`Pool::global`] call to take effect.
+    pub fn init_global(threads: usize) -> bool {
+        GLOBAL.set(Pool::new(threads)).is_ok()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Whether every closure runs inline on the caller's thread.
+    pub fn is_sequential(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Cumulative busy time across all closures this pool has executed,
+    /// in nanoseconds.  Sample before/after an operation to estimate its
+    /// parallel "cpu time" (approximate when several operations share
+    /// the pool concurrently).
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    fn timed<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.busy_ns
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        r
+    }
+
+    /// Run `f(index, item)` for every item, returning the outputs **in
+    /// item order**.  Sequential pools (or single-item inputs) run
+    /// inline, in order, on the caller's thread; parallel pools hand
+    /// items to scoped workers through a shared queue, so completion
+    /// order is arbitrary but the returned `Vec` never is.  A panicking
+    /// closure propagates to the caller after all workers finish.
+    pub fn map<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(usize, I) -> T + Sync,
+    {
+        let n = items.len();
+        if self.threads == 1 || n <= 1 {
+            return items
+                .into_iter()
+                .enumerate()
+                .map(|(i, item)| self.timed(|| f(i, item)))
+                .collect();
+        }
+        let queue = Mutex::new(items.into_iter().enumerate());
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let workers = self.threads.min(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| loop {
+                        // The closure runs outside the queue lock, so a
+                        // panicking job can never poison the queue for
+                        // its siblings.
+                        let job = queue.lock().unwrap().next();
+                        let Some((i, item)) = job else { break };
+                        let out = self.timed(|| f(i, item));
+                        *slots[i].lock().unwrap() = Some(out);
+                    })
+                })
+                .collect();
+            // Join everything first, then re-raise the first panic: an
+            // unwind must not race still-running siblings out of scope.
+            let mut panicked = None;
+            for h in handles {
+                if let Err(p) = h.join() {
+                    panicked.get_or_insert(p);
+                }
+            }
+            if let Some(p) = panicked {
+                panic::resume_unwind(p);
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .expect("every map slot is filled before the scope exits")
+            })
+            .collect()
+    }
+
+    /// Fallible [`Pool::map`]: runs every item (errors do not cancel
+    /// siblings — partial work must not leave skipped slots) and returns
+    /// the first error by item order, or all outputs.
+    pub fn try_map<I, T, F>(&self, items: Vec<I>, f: F) -> Result<Vec<T>>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(usize, I) -> Result<T> + Sync,
+    {
+        self.map(items, f).into_iter().collect()
+    }
+
+    /// Split `data` into at most `threads` contiguous shards — every
+    /// shard boundary a multiple of `align` elements — and run
+    /// `f(start, shard)` on each, where `start` is the shard's offset
+    /// into `data`.  Shards are disjoint `&mut` sub-slices: no two
+    /// closures ever touch the same element, which is what makes sharded
+    /// float accumulation bit-exact against the sequential pass.  With a
+    /// sequential pool (or a single shard) this is exactly one inline
+    /// `f(0, data)` call.  Returns the first shard error by offset
+    /// order.
+    pub fn for_each_shard<T, F>(&self, data: &mut [T], align: usize, f: F) -> Result<()>
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) -> Result<()> + Sync,
+    {
+        assert!(align >= 1, "shard alignment must be >= 1");
+        if data.is_empty() {
+            return Ok(());
+        }
+        let units = data.len().div_ceil(align);
+        let shards = self.threads.min(units);
+        if shards == 1 {
+            return self.timed(|| f(0, data));
+        }
+        // Evenly spread whole alignment units; the final shard absorbs
+        // the ragged tail.
+        let per = units.div_ceil(shards) * align;
+        let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(shards);
+        let mut rest = data;
+        let mut start = 0;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            parts.push((start, head));
+            start += take;
+            rest = tail;
+        }
+        self.map(parts, |_, (off, shard)| f(off, shard))
+            .into_iter()
+            .collect()
+    }
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// Default width for the global pool: `TVQ_THREADS` (positive integer)
+/// if set, else the machine's available parallelism, else 1.
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TVQ_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+        eprintln!("warning: ignoring invalid TVQ_THREADS={v:?} (want a positive integer)");
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn map_preserves_item_order_at_any_width() {
+        let items: Vec<usize> = (0..97).collect();
+        for threads in [1, 2, 3, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.map(items.clone(), |i, x| {
+                assert_eq!(i, x);
+                x * 3
+            });
+            assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline_on_the_caller() {
+        let pool = Pool::sequential();
+        assert!(pool.is_sequential());
+        let caller = std::thread::current().id();
+        let ids = pool.map(vec![(); 4], |_, _| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id == caller), "threads=1 must not spawn");
+        // And a single shard stays inline even on a wide pool.
+        let wide = Pool::new(8);
+        let mut data = [0u8; 4];
+        wide.for_each_shard(&mut data, 8, |_, shard| {
+            assert_eq!(std::thread::current().id(), caller);
+            shard.fill(1);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(data, [1; 4]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let pool = Pool::new(4);
+        let survivors = AtomicUsize::new(0);
+        let r = panic::catch_unwind(panic::AssertUnwindSafe(|| {
+            pool.map((0..32).collect::<Vec<usize>>(), |_, x| {
+                if x == 7 {
+                    panic!("shard 7 exploded");
+                }
+                survivors.fetch_add(1, Ordering::Relaxed);
+                x
+            });
+        }));
+        let payload = r.expect_err("worker panic must reach the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("(non-str payload)");
+        assert!(msg.contains("shard 7"), "got: {msg}");
+        // The pool stays usable after a panicked run.
+        assert_eq!(pool.map(vec![1, 2], |_, x| x + 1), vec![2, 3]);
+    }
+
+    #[test]
+    fn try_map_returns_first_error_by_item_order() {
+        let pool = Pool::new(4);
+        let err = pool
+            .try_map((0..16).collect::<Vec<usize>>(), |_, x| {
+                if x % 5 == 3 {
+                    anyhow::bail!("item {x} failed")
+                }
+                Ok(x)
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "item 3 failed");
+        let ok = pool.try_map(vec![1, 2], |_, x| Ok::<_, anyhow::Error>(x * 2)).unwrap();
+        assert_eq!(ok, vec![2, 4]);
+    }
+
+    #[test]
+    fn shards_are_aligned_disjoint_and_complete() {
+        // len = 103, align = 8: shard starts must be multiples of 8 and
+        // together the shards must cover every element exactly once.
+        for threads in [1, 2, 3, 5, 16, 64] {
+            let pool = Pool::new(threads);
+            let mut data = vec![0u32; 103];
+            pool.for_each_shard(&mut data, 8, |start, shard| {
+                assert_eq!(start % 8, 0, "shard start off alignment");
+                for (i, v) in shard.iter_mut().enumerate() {
+                    assert_eq!(*v, 0, "element visited twice");
+                    *v = (start + i) as u32 + 1;
+                }
+                Ok(())
+            })
+            .unwrap();
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "element {i} missed (threads={threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_errors_surface_in_offset_order() {
+        let pool = Pool::new(4);
+        let mut data = vec![0u8; 64];
+        let err = pool
+            .for_each_shard(&mut data, 1, |start, _| {
+                anyhow::bail!("shard at {start} failed")
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "shard at 0 failed");
+    }
+
+    #[test]
+    fn busy_ns_accumulates() {
+        let pool = Pool::new(2);
+        assert_eq!(pool.busy_ns(), 0);
+        pool.map(vec![(); 4], |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(pool.busy_ns() >= 4 * 2_000_000, "busy {} ns", pool.busy_ns());
+    }
+}

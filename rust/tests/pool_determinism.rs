@@ -1,0 +1,238 @@
+//! Determinism suite for the chunk-parallel decode/merge engine
+//! (ISSUE 5 acceptance): for every tested thread count, merged floats,
+//! written registry bytes, and chosen plans must be **bit-identical** to
+//! the sequential path — parallelism is a pure latency optimization,
+//! never a numerics change.
+//!
+//! Thread counts exercised: 1 (the sequential reference — runs inline on
+//! the caller, no workers), 2, and 8 (more workers than work items /
+//! shards on some tensors, so the ragged-split edge cases run too).
+
+use tvq::checkpoint::Checkpoint;
+use tvq::merge::{MergedModel, TaskArithmetic};
+use tvq::planner::{
+    fused_merge_with_pool, plan_pack_with_pool, probe_with_pool, write_planned_registry_with_pool,
+    PlannerConfig,
+};
+use tvq::quant::QuantScheme;
+use tvq::registry::{
+    build_registry_with_pool, merge_from_source_with_pool, IoMode, PackedRegistrySource, Registry,
+};
+use tvq::tensor::Tensor;
+use tvq::util::pool::Pool;
+use tvq::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Heterogeneous zoo: per-layer scales spanning 25x (so the planner
+/// mixes dense arm widths) plus a localized ~90%-zero-delta layer (so
+/// TALL/DARE sparse arms win somewhere and kind-4 sections are served).
+/// Tensors are sized above the fused-merge small-tensor inline
+/// threshold (32Ki elements) so the parallel shard path genuinely runs,
+/// and not group-divisible so the padding paths run too.
+fn suite(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+    let mut rng = Rng::new(seed);
+    let stds = [0.002f32, 0.02, 0.05];
+    let mut pre = Checkpoint::new();
+    for (i, _) in stds.iter().enumerate() {
+        pre.insert(&format!("blk{i:02}/w"), Tensor::randn(&[256, 160], 0.3, &mut rng));
+    }
+    pre.insert("loc/w", Tensor::randn(&[256, 128], 0.3, &mut rng));
+    let fts = (0..n_tasks)
+        .map(|_| {
+            let mut ft = pre.clone();
+            for (name, t) in ft.iter_mut() {
+                if name == "loc/w" {
+                    // Localized deltas: each task perturbs ~8% of entries.
+                    for v in t.data_mut() {
+                        if rng.f32() < 0.08 {
+                            *v += rng.normal_f32(0.1);
+                        }
+                    }
+                } else {
+                    let std = stds[name[3..5].parse::<usize>().unwrap()];
+                    for v in t.data_mut() {
+                        *v += rng.normal_f32(std);
+                    }
+                }
+            }
+            ft
+        })
+        .collect();
+    (pre, fts)
+}
+
+/// Candidate set covering all four arm families at a group width that
+/// does not divide the tensor sizes evenly (padding paths included).
+fn cfg() -> PlannerConfig {
+    PlannerConfig {
+        group: 384,
+        tvq_bits: vec![2, 3, 4],
+        rtvq_arms: vec![(3, 2)],
+        dare_arms: vec![(75, 3)],
+        tall_arms: vec![(25, 4)],
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tvq_pool_det_{name}"))
+}
+
+fn assert_ckpt_bit_eq(got: &Checkpoint, want: &Checkpoint, what: &str) {
+    // Checkpoint PartialEq is exact f32 equality per tensor — the
+    // assertion below is bitwise for all non-NaN data (and the suites
+    // here never produce NaN).
+    assert_eq!(got, want, "{what}: parallel result diverged from sequential");
+}
+
+#[test]
+fn plans_and_planned_registry_bytes_are_thread_count_invariant() {
+    let (pre, fts) = suite(4, 0x5E01);
+    let cfg = cfg();
+    let dir = tmp("plan");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Probe + solve at every width: identical profiles and plans.
+    let seq = Pool::sequential();
+    let ref_profile = probe_with_pool(&pre, &fts, &cfg, &seq).unwrap();
+    let budget = tvq::planner::min_feasible_bytes(&ref_profile) * 3 / 2;
+    let ref_plan = plan_pack_with_pool(&pre, &fts, budget, &cfg, &seq).unwrap();
+    assert!(ref_plan.has_sparse_arms(), "suite must exercise kind-4 arms");
+    for threads in THREADS {
+        let pool = Pool::new(threads);
+        let profile = probe_with_pool(&pre, &fts, &cfg, &pool).unwrap();
+        for (a, b) in ref_profile.profiles.iter().zip(&profile.profiles) {
+            assert_eq!(a.tensor.name, b.tensor.name);
+            for (x, y) in a.arms.iter().zip(&b.arms) {
+                assert_eq!(x.arm, y.arm, "threads={threads}");
+                assert_eq!(x.cost_bytes, y.cost_bytes, "threads={threads}");
+                assert_eq!(
+                    x.error.to_bits(),
+                    y.error.to_bits(),
+                    "threads={threads} {}: probed error not bit-identical",
+                    a.tensor.name
+                );
+            }
+        }
+        let plan = plan_pack_with_pool(&pre, &fts, budget, &cfg, &pool).unwrap();
+        assert_eq!(plan, ref_plan, "threads={threads}: chosen plan diverged");
+    }
+
+    // Compile the same plan at every width: byte-identical files.
+    let ref_path = dir.join("seq.qtvc");
+    write_planned_registry_with_pool(&pre, &fts, &ref_plan, &ref_path, &seq).unwrap();
+    let ref_bytes = std::fs::read(&ref_path).unwrap();
+    for threads in THREADS {
+        let pool = Pool::new(threads);
+        let path = dir.join(format!("t{threads}.qtvc"));
+        write_planned_registry_with_pool(&pre, &fts, &ref_plan, &path, &pool).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            ref_bytes,
+            "threads={threads}: planned registry bytes diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fused_merge_is_bit_exact_across_thread_counts_and_io_modes() {
+    let (pre, fts) = suite(4, 0x5E02);
+    let cfg = cfg();
+    let dir = tmp("fused");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("zoo.qtvc");
+    let seq = Pool::sequential();
+    let profile = probe_with_pool(&pre, &fts, &cfg, &seq).unwrap();
+    let budget = tvq::planner::min_feasible_bytes(&profile) * 3 / 2;
+    let plan = plan_pack_with_pool(&pre, &fts, budget, &cfg, &seq).unwrap();
+    assert!(plan.has_sparse_arms(), "fused path must cover sparse scatter shards");
+    write_planned_registry_with_pool(&pre, &fts, &plan, &path, &seq).unwrap();
+
+    let lams = [0.4f32, 0.1, 0.3, 0.2];
+    for mode in [IoMode::Mmap, IoMode::Pread] {
+        let reg = Registry::open_with_io(&path, mode).unwrap();
+        let want = fused_merge_with_pool(&reg, &pre, &lams, None, &seq).unwrap();
+        let want_sub =
+            fused_merge_with_pool(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &seq).unwrap();
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let got = fused_merge_with_pool(&reg, &pre, &lams, None, &pool).unwrap();
+            assert_ckpt_bit_eq(&got, &want, &format!("fused merge {mode:?} threads={threads}"));
+            let got_sub =
+                fused_merge_with_pool(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &pool).unwrap();
+            assert_ckpt_bit_eq(
+                &got_sub,
+                &want_sub,
+                &format!("fused subset merge {mode:?} threads={threads}"),
+            );
+        }
+    }
+
+    // Lazy per-task reconstruction rides the same shards.
+    let reg = Registry::open(&path).unwrap();
+    for t in 0..fts.len() {
+        let want = reg.load_task_vector_with_pool(t, &seq).unwrap();
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let got = reg.load_task_vector_with_pool(t, &pool).unwrap();
+            assert_ckpt_bit_eq(&got, &want, &format!("lazy task {t} threads={threads}"));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn uniform_registry_build_bytes_are_thread_count_invariant() {
+    let (pre, fts) = suite(5, 0x5E03);
+    let dir = tmp("build");
+    std::fs::remove_dir_all(&dir).ok();
+    for scheme in [QuantScheme::Tvq(3), QuantScheme::Rtvq(3, 2)] {
+        let seq_path = dir.join(format!("{}_t1.qtvc", scheme.label()));
+        build_registry_with_pool(&pre, &fts, scheme, &seq_path, &Pool::sequential()).unwrap();
+        let want = std::fs::read(&seq_path).unwrap();
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let path = dir.join(format!("{}_t{threads}.qtvc", scheme.label()));
+            build_registry_with_pool(&pre, &fts, scheme, &path, &pool).unwrap();
+            assert_eq!(
+                std::fs::read(&path).unwrap(),
+                want,
+                "{}: threads={threads} wrote different bytes",
+                scheme.label()
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn packed_source_merge_is_bit_exact_across_thread_counts() {
+    let (pre, fts) = suite(5, 0x5E04);
+    let dir = tmp("merge_src");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("zoo.qtvc");
+    build_registry_with_pool(&pre, &fts, QuantScheme::Tvq(4), &path, &Pool::sequential())
+        .unwrap();
+    let src = PackedRegistrySource::open(&path).unwrap();
+    let ta = TaskArithmetic::default();
+    let seq = Pool::sequential();
+    // All tasks (across-task fan-out) and a single task (within-task
+    // fan-out) both reduce to the sequential floats exactly.
+    for tasks in [None, Some(&[2usize][..]), Some(&[0usize, 3][..])] {
+        let want = merge_from_source_with_pool(&ta, &pre, &src, tasks, &seq).unwrap();
+        for threads in THREADS {
+            let pool = Pool::new(threads);
+            let got = merge_from_source_with_pool(&ta, &pre, &src, tasks, &pool).unwrap();
+            match (&got, &want) {
+                (MergedModel::Shared(a), MergedModel::Shared(b)) => assert_ckpt_bit_eq(
+                    a,
+                    b,
+                    &format!("packed merge tasks={tasks:?} threads={threads}"),
+                ),
+                _ => panic!("expected shared merges"),
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
