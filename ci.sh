@@ -2,7 +2,7 @@
 # Tier-1 CI gate for the tvq crate — staged, timed, selectable.
 #
 #   ./ci.sh                    # full gate: every stage below, in order
-#   ./ci.sh --quick            # quick gate: build + test only
+#   ./ci.sh --quick            # quick gate: build + test + control only
 #   ./ci.sh --stage clippy     # run a single named stage
 #   ./ci.sh --list             # list stage names and what they run
 #
@@ -10,6 +10,8 @@
 #   preflight   toolchain sanity (cargo/rustc present) — pointed error if not
 #   build       cargo build --release
 #   test        cargo test -q
+#   control     control-plane suite (hot-swap/drain) at smoke scale
+#               (TVQ_SMOKE=1 cargo test --test control_plane)
 #   example     packed_registry example end-to-end
 #   tabP        planner experiment smoke (TVQ_SMOKE=1)
 #   bench-diff  perf_registry bench -> BENCH_registry.json -> tvq bench diff
@@ -31,8 +33,8 @@ cd "$(dirname "$0")"
 CARGO_FLAGS=(--offline)
 BENCH_TOLERANCE="${TVQ_BENCH_TOLERANCE:-0.20}"
 
-STAGE_NAMES=(preflight build test example tabP bench-diff doc fmt clippy)
-QUICK_STAGES=(preflight build test)
+STAGE_NAMES=(preflight build test control example tabP bench-diff doc fmt clippy)
+QUICK_STAGES=(preflight build test control)
 
 declare -a RAN_STAGES=()
 declare -a RAN_TIMES=()
@@ -60,6 +62,13 @@ stage_build() {
 
 stage_test() {
     cargo test -q "${CARGO_FLAGS[@]}"
+}
+
+stage_control() {
+    # The full `test` stage already runs this suite at full scale; this
+    # named stage re-runs it at smoke scale so `--stage control` gives a
+    # fast, isolated signal on the hot-swap/drain machinery.
+    TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test control_plane
 }
 
 stage_example() {

@@ -41,6 +41,7 @@ fn main() -> Result<()> {
             max_delay: Duration::from_millis(delay_ms),
             queue_cap: 8192,
             executors,
+            ..Default::default()
         };
         let model = ServeModel {
             preset: zoo.preset,

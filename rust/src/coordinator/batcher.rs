@@ -22,22 +22,39 @@ pub struct Batch<T> {
     pub items: Vec<Staged<T>>,
 }
 
-/// Per-task pending queues with size/deadline flush rules.
+/// Per-task pending queues with size/deadline flush rules and an
+/// optional per-task depth bound ([`try_push`](Batcher::try_push)).
 #[derive(Debug)]
 pub struct Batcher<T> {
     queues: Vec<VecDeque<Staged<T>>>,
     pub max_batch: usize,
     pub max_delay: Duration,
+    /// Per-task staged-item bound enforced by `try_push`.
+    queue_cap: usize,
     len: usize,
 }
 
 impl<T> Batcher<T> {
+    /// An unbounded batcher (per-task cap `usize::MAX`).
     pub fn new(n_tasks: usize, max_batch: usize, max_delay: Duration) -> Self {
+        Self::with_queue_cap(n_tasks, max_batch, max_delay, usize::MAX)
+    }
+
+    /// A batcher whose per-task queues hold at most `queue_cap` staged
+    /// items; beyond that [`try_push`](Batcher::try_push) rejects.
+    pub fn with_queue_cap(
+        n_tasks: usize,
+        max_batch: usize,
+        max_delay: Duration,
+        queue_cap: usize,
+    ) -> Self {
         assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(queue_cap >= 1, "queue_cap must be >= 1");
         Self {
             queues: (0..n_tasks).map(|_| VecDeque::new()).collect(),
             max_batch,
             max_delay,
+            queue_cap,
             len: 0,
         }
     }
@@ -55,10 +72,29 @@ impl<T> Batcher<T> {
         self.len == 0
     }
 
-    /// Stage one request (caller enforces queue caps before this point).
+    /// Staged items for one task (its queue depth).
+    pub fn queue_len(&self, task: usize) -> usize {
+        self.queues[task].len()
+    }
+
+    /// Stage one request; panics if the task's queue is at cap (use
+    /// [`try_push`](Batcher::try_push) where overflow is expected).
     pub fn push(&mut self, task: usize, enqueued: Instant, payload: T) {
+        if self.try_push(task, enqueued, payload).is_err() {
+            panic!("batcher queue for task {task} is at cap {}", self.queue_cap);
+        }
+    }
+
+    /// Stage one request unless the task's queue is full; on overflow
+    /// the payload is handed back so the caller can reply with a typed
+    /// rejection instead of blocking.
+    pub fn try_push(&mut self, task: usize, enqueued: Instant, payload: T) -> Result<(), T> {
+        if self.queues[task].len() >= self.queue_cap {
+            return Err(payload);
+        }
         self.queues[task].push_back(Staged { task, enqueued, payload });
         self.len += 1;
+        Ok(())
     }
 
     /// Pop the next flushable batch at time `now`:
@@ -175,6 +211,24 @@ mod tests {
             sizes.push(batch.items.len());
         }
         assert_eq!(sizes, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn queue_cap_rejects_with_payload_returned() {
+        let mut b = Batcher::with_queue_cap(2, 8, Duration::from_secs(100), 2);
+        let now = t0();
+        assert!(b.try_push(0, now, 1u32).is_ok());
+        assert!(b.try_push(0, now, 2).is_ok());
+        // Task 0 is at cap: the payload comes back untouched.
+        assert_eq!(b.try_push(0, now, 3), Err(3));
+        assert_eq!(b.queue_len(0), 2);
+        // Caps are per task: task 1 still admits.
+        assert!(b.try_push(1, now, 4).is_ok());
+        assert_eq!(b.len(), 3);
+        // Flushing frees capacity.
+        let batch = b.pop_ready(now + Duration::from_secs(200)).unwrap();
+        assert_eq!(batch.items.len(), 2);
+        assert!(b.try_push(0, now, 5).is_ok());
     }
 
     #[test]

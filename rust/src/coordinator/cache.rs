@@ -408,6 +408,23 @@ impl ModelCache {
         self.enforce_cap(&mut state, None);
     }
 
+    /// Whether the node byte budget can take on `est_bytes` more
+    /// *unevictable* resident bytes.  The admission test is against the
+    /// floor the cap walk can never reclaim — registered source
+    /// overheads plus in-flight build reservations — not against
+    /// currently resident variants, which are evictable and would be
+    /// shed by [`enforce_cap`] to make room.  The control plane calls
+    /// this before `Loading` a variant: a registry whose overhead (plus
+    /// its estimated merged model) cannot fit even after evicting
+    /// everything is refused up front with a typed error instead of
+    /// thrashing the cache.  Uncapped caches admit everything.
+    pub fn can_admit(&self, est_bytes: usize) -> bool {
+        let Some(cap) = self.cap else { return true };
+        let state = self.state.lock().unwrap();
+        let floor: usize = state.sources.values().map(|s| s.owned).sum();
+        floor + state.pending_bytes + est_bytes <= cap
+    }
+
     /// Owned heap bytes pinned by registered sources (counted against the
     /// byte cap).
     pub fn source_overhead_bytes(&self) -> usize {
@@ -653,6 +670,29 @@ mod tests {
         // Re-registering the same id refreshes in place, not double-counts.
         cache.register_source(&FakeSource { id: "owned", owned: MODEL_BYTES / 2, mapped: 0 });
         assert_eq!(cache.source_overhead_bytes(), MODEL_BYTES / 2);
+    }
+
+    #[test]
+    fn can_admit_tests_the_unevictable_floor_only() {
+        // Uncapped: everything is admissible.
+        assert!(ModelCache::new().can_admit(usize::MAX));
+
+        let cache = ModelCache::with_byte_cap(2 * MODEL_BYTES);
+        assert!(cache.can_admit(2 * MODEL_BYTES));
+        assert!(!cache.can_admit(2 * MODEL_BYTES + 1));
+
+        // Resident variants are evictable and do not reduce headroom.
+        cache.get_or_build("ta", "a", || Ok(model())).unwrap();
+        cache.get_or_build("ta", "b", || Ok(model())).unwrap();
+        assert!(cache.can_admit(2 * MODEL_BYTES));
+
+        // Registered source overhead is an unevictable floor and does.
+        cache.register_source(&FakeSource { id: "s", owned: MODEL_BYTES, mapped: 0 });
+        assert!(cache.can_admit(MODEL_BYTES));
+        assert!(!cache.can_admit(MODEL_BYTES + 1));
+        // Mapped bytes are page cache, never charged.
+        cache.register_source(&FakeSource { id: "m", owned: 0, mapped: 1 << 30 });
+        assert!(cache.can_admit(MODEL_BYTES));
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Generation-pinned registry serving: atomic rename-swap + reload.
+//!
+//! A serving path (`/srv/models/zoo.qtvc`) outlives any single file at
+//! that path.  [`GenerationalRegistry`] models this directly: each opened
+//! file is a numbered [`Generation`] holding its own
+//! [`Registry`](crate::registry::Registry) (and therefore its own file
+//! mapping or handle — which pins the **inode**, not the path).  The swap
+//! protocol:
+//!
+//! 1. The publisher writes the replacement registry to the staged path
+//!    `<path>.next` ([`GenerationalRegistry::stage_path`]) on the same
+//!    filesystem.
+//! 2. [`publish_staged`](GenerationalRegistry::publish_staged) validates
+//!    that the staged file opens as a registry, atomically
+//!    `rename(2)`s it over the serving path, and re-opens the path as
+//!    generation N+1.  Validation happens **before** the rename — a
+//!    corrupt stage never replaces a healthy registry, and a failed
+//!    publish leaves generation N serving untouched.
+//! 3. New work pins generation N+1 ([`pin`](GenerationalRegistry::pin));
+//!    in-flight work keeps reading generation N bit-exactly through its
+//!    own `Arc<Generation>` — the old inode stays alive under the rename.
+//! 4. When the last pin drops, the `Arc` frees the old `Registry`, whose
+//!    `Mmap` RAII guard unmaps the old file — refcount-zero unmap, with
+//!    no explicit epoch machinery.
+//!
+//! This is exactly the mutation discipline `docs/WIRE_FORMAT.md` §7
+//! mandates ("replace by rename, never modify in place"), promoted from a
+//! hazard warning to the supported reload mechanism.
+//!
+//! Pinning requires an inode-holding I/O mode: `Mmap` and `Pread` both
+//! qualify (mapping / file handle survive the rename).  `Reopen` mode
+//! re-opens the *path* per section read and would observe the new file
+//! mid-request, so [`GenerationalRegistry::open_with_io`] refuses it.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, Weak};
+
+use anyhow::{bail, Context, Result};
+
+use crate::registry::{IoMode, PackedRegistrySource, Registry};
+
+/// Suffix of the staged next-generation file: publishing renames
+/// `<path>.next` over `<path>`.
+pub const STAGE_SUFFIX: &str = ".next";
+
+/// One opened registry file, numbered within its serving path.  Holding
+/// an `Arc<Generation>` pins the underlying mapping/handle: reads through
+/// it are bit-exact against this file even after the path is swapped.
+pub struct Generation {
+    number: u64,
+    source: PackedRegistrySource,
+}
+
+impl Generation {
+    /// Monotonic generation number (the first open is generation 1).
+    pub fn number(&self) -> u64 {
+        self.number
+    }
+
+    /// The generation's registry as a merge-ready task-vector source.
+    pub fn source(&self) -> &PackedRegistrySource {
+        &self.source
+    }
+
+    pub fn registry(&self) -> &Registry {
+        self.source.registry()
+    }
+}
+
+/// A serving path plus its current (and still-pinned past) generations.
+pub struct GenerationalRegistry {
+    path: PathBuf,
+    current: Mutex<Arc<Generation>>,
+    /// Weak handles to every generation ever installed, oldest first.
+    /// Upgradeable entries are still pinned by in-flight work; the
+    /// history is how tests (and status) observe refcount-zero unmap.
+    history: Mutex<Vec<Weak<Generation>>>,
+    /// Serializes publish/reload: open-validate-rename-install must not
+    /// interleave between two publishers.
+    publish_lock: Mutex<()>,
+}
+
+impl GenerationalRegistry {
+    /// Open `path` as generation 1 with the platform-default I/O mode
+    /// (`Mmap`, degrading to `Pread` — both inode-pinning).
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<GenerationalRegistry> {
+        Self::open_with_io(path, IoMode::Mmap)
+    }
+
+    /// [`open`](Self::open) with an explicit [`IoMode`].  `Reopen` is
+    /// refused: per-read path opens cannot pin a generation across a
+    /// rename-swap (a swapped path would feed a new file to an old
+    /// generation's in-flight reads).
+    pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<GenerationalRegistry> {
+        let path = path.as_ref().to_path_buf();
+        if mode == IoMode::Reopen {
+            bail!(
+                "IoMode::Reopen re-opens the path per read and cannot pin a \
+                 generation across a rename-swap; use Mmap or Pread for {}",
+                path.display()
+            );
+        }
+        let registry = Registry::open_with_io(&path, mode)?;
+        if registry.io_mode() == IoMode::Reopen {
+            bail!(
+                "registry {} fell back to IoMode::Reopen on this platform; \
+                 generational serving needs an inode-pinning mode (Mmap/Pread)",
+                path.display()
+            );
+        }
+        let first = Arc::new(Generation {
+            number: 1,
+            source: PackedRegistrySource::from_registry(registry),
+        });
+        Ok(GenerationalRegistry {
+            path,
+            history: Mutex::new(vec![Arc::downgrade(&first)]),
+            current: Mutex::new(first),
+            publish_lock: Mutex::new(()),
+        })
+    }
+
+    /// The serving path (what clients name; individual generations are
+    /// anonymous inodes behind it).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Where the next generation is staged: `<path>.next` on the same
+    /// filesystem, so the publish rename is atomic.
+    pub fn stage_path(&self) -> PathBuf {
+        let mut os = self.path.as_os_str().to_os_string();
+        os.push(STAGE_SUFFIX);
+        PathBuf::from(os)
+    }
+
+    /// Pin the current generation for one unit of work.  The returned
+    /// `Arc` keeps that generation's mapping alive (and its reads
+    /// bit-exact) until dropped, regardless of concurrent publishes.
+    pub fn pin(&self) -> Arc<Generation> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// The current generation number.
+    pub fn generation(&self) -> u64 {
+        self.current.lock().unwrap().number
+    }
+
+    /// Numbers of the generations still alive — the current one plus any
+    /// older ones pinned by in-flight work.  Prunes dead history as a
+    /// side effect; a single-element result means every superseded
+    /// mapping has been unmapped.
+    pub fn live_generations(&self) -> Vec<u64> {
+        let mut history = self.history.lock().unwrap();
+        history.retain(|w| w.strong_count() > 0);
+        history.iter().filter_map(|w| w.upgrade()).map(|g| g.number).collect()
+    }
+
+    /// Publish the staged file (`<path>.next`): validate, rename over the
+    /// serving path, install as generation N+1.  In-flight pins of
+    /// generation N are unaffected.  On error nothing changes and the
+    /// staged file is left in place for inspection.
+    pub fn publish_staged(&self) -> Result<u64> {
+        self.publish_file(&self.stage_path())
+    }
+
+    /// [`publish_staged`](Self::publish_staged) for an arbitrary staged
+    /// path (must be on the serving path's filesystem for the rename to
+    /// be atomic).
+    pub fn publish_file(&self, staged: &Path) -> Result<u64> {
+        let _publishing = self.publish_lock.lock().unwrap();
+        // Validate before touching the serving path: a corrupt stage must
+        // never replace a healthy registry.  Reopen mode avoids holding a
+        // second mapping of a file we are about to rename.
+        Registry::open_with_io(staged, IoMode::Reopen)
+            .with_context(|| format!("validating staged registry {}", staged.display()))?;
+        std::fs::rename(staged, &self.path).with_context(|| {
+            format!("renaming {} over {}", staged.display(), self.path.display())
+        })?;
+        self.install_next().with_context(|| {
+            format!(
+                "staged registry published over {} but re-opening it failed; \
+                 the previous generation keeps serving its (renamed-away) inode",
+                self.path.display()
+            )
+        })
+    }
+
+    /// Re-open the serving path in place as generation N+1 (the path was
+    /// replaced externally — e.g. by an orchestrator's own rename).  The
+    /// new file is opened **before** the swap is visible to new work, so
+    /// a broken file fails the reload and generation N keeps serving.
+    pub fn reload(&self) -> Result<u64> {
+        let _publishing = self.publish_lock.lock().unwrap();
+        self.install_next()
+    }
+
+    /// Open the serving path at the originally *requested* I/O mode and
+    /// make it current.  Caller holds `publish_lock`.
+    fn install_next(&self) -> Result<u64> {
+        let next = {
+            let current = self.current.lock().unwrap();
+            // Generation-aware reopen: same path, same requested mode,
+            // fallbacks re-evaluated for the new file.
+            let registry = current.registry().reopen()?;
+            Arc::new(Generation {
+                number: current.number + 1,
+                source: PackedRegistrySource::from_registry(registry),
+            })
+        };
+        let number = next.number;
+        self.history.lock().unwrap().push(Arc::downgrade(&next));
+        *self.current.lock().unwrap() = next;
+        Ok(number)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::planner::synthetic_planner_zoo;
+    use crate::quant::QuantScheme;
+    use crate::registry::build_registry;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tvq-gen-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn pack(dir: &Path, name: &str, seed: u64) -> PathBuf {
+        let (pre, fts) = synthetic_planner_zoo(3, seed);
+        let path = dir.join(name);
+        build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+        path
+    }
+
+    #[test]
+    fn reopen_mode_is_refused() {
+        let dir = tmpdir("reject-reopen");
+        let path = pack(&dir, "zoo.qtvc", 1);
+        let err = GenerationalRegistry::open_with_io(&path, IoMode::Reopen).unwrap_err();
+        assert!(err.to_string().contains("Reopen"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_staged_advances_generation_and_pins_hold_old_data() {
+        let dir = tmpdir("publish");
+        let path = pack(&dir, "zoo.qtvc", 1);
+        let served = GenerationalRegistry::open(&path).unwrap();
+        assert_eq!(served.generation(), 1);
+
+        // Pin generation 1 and remember its decode.
+        let pinned = served.pin();
+        let before = pinned.registry().load_task_vector(0).unwrap();
+
+        // Stage a different zoo and publish it.
+        let staged = pack(&dir, "zoo.qtvc.next", 2);
+        assert_eq!(staged, served.stage_path());
+        let n = served.publish_staged().unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(served.generation(), 2);
+        assert!(!staged.exists(), "publish consumes the staged file");
+
+        // The old pin still reads generation 1's bytes, bit-exactly.
+        let still = pinned.registry().load_task_vector(0).unwrap();
+        assert_eq!(before, still, "pinned generation changed under a publish");
+
+        // New pins see generation 2, whose data differs (different seed).
+        let fresh = served.pin().registry().load_task_vector(0).unwrap();
+        assert_ne!(before, fresh, "publish did not change served data");
+
+        // Both generations are live while the pin holds; dropping it
+        // releases generation 1 (refcount-zero unmap).
+        assert_eq!(served.live_generations(), vec![1, 2]);
+        drop(pinned);
+        drop(still);
+        assert_eq!(served.live_generations(), vec![2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_stage_never_replaces_a_healthy_registry() {
+        let dir = tmpdir("corrupt-stage");
+        let path = pack(&dir, "zoo.qtvc", 1);
+        let served = GenerationalRegistry::open(&path).unwrap();
+        std::fs::write(served.stage_path(), b"not a registry").unwrap();
+        let err = served.publish_staged().unwrap_err();
+        assert!(err.to_string().contains("validating"), "{err:#}");
+        // Nothing changed: generation 1 still serves, the stage remains
+        // for inspection, and the serving path still opens cleanly.
+        assert_eq!(served.generation(), 1);
+        assert!(served.stage_path().exists());
+        served.pin().registry().load_task_vector(0).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn publish_without_stage_is_an_error() {
+        let dir = tmpdir("no-stage");
+        let path = pack(&dir, "zoo.qtvc", 1);
+        let served = GenerationalRegistry::open(&path).unwrap();
+        assert!(served.publish_staged().is_err());
+        assert_eq!(served.generation(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,146 @@
+//! Control plane: merged variants as first-class, lifecycle-managed
+//! backends.
+//!
+//! Everything below this module is a library — registries decode bytes,
+//! mergers combine task vectors, the [`ModelCache`](super::ModelCache)
+//! holds what was built.  Operating a *fleet* of merged variants on one
+//! node needs a layer those pieces deliberately don't have: loading a new
+//! quantized registry without downtime, retiring a stale variant without
+//! dropping in-flight work, and shedding load explicitly instead of
+//! blocking.  That layer lives here, in three parts:
+//!
+//! * [`generation`] — registry hot-swap.  A [`GenerationalRegistry`]
+//!   serves one path through a monotonically numbered sequence of opened
+//!   generations; publishing renames a staged file over the serving path
+//!   and re-opens it, while in-flight requests keep reading the old
+//!   inode through their pinned generation (the mapping unmaps at
+//!   refcount zero).  This turns the `docs/WIRE_FORMAT.md` §7 mutation
+//!   hazard into the reload mechanism.
+//! * [`variant`] — the lifecycle state machine
+//!   (`Loading → Ready → Draining → Terminated`, plus `Failed` with the
+//!   error retained) and the bounded admission queue in front of each
+//!   variant's worker.
+//! * [`plane`] — the node-level owner: a [`ControlPlane`] holds the
+//!   variants and the shared `ModelCache`, enforces the node byte budget
+//!   at load time, and snapshots per-variant status for the
+//!   `tvq serve status` control API.
+//!
+//! Failure is always *typed* ([`ControlError`]): callers distinguish
+//! "queue full, retry elsewhere" from "variant draining, pick another"
+//! from "node over budget" without parsing strings.
+
+pub mod generation;
+pub mod plane;
+pub mod variant;
+
+pub use generation::{Generation, GenerationalRegistry, STAGE_SUFFIX};
+pub use plane::{ControlPlane, PlaneStatus, VariantStatus};
+pub use variant::{Variant, VariantConfig, VariantState};
+
+use std::fmt;
+use std::path::Path;
+
+/// Typed control-plane failures.  Every rejection the plane can issue is
+/// a distinct variant so callers (and the TCP front-end) can react
+/// structurally — retry, fail over, or surface — instead of matching on
+/// message text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ControlError {
+    /// The variant's bounded admission queue is full (backpressure):
+    /// retry later or route to another replica.
+    Overloaded { variant: String, queue_cap: usize },
+    /// The variant exists but is not `Ready` (draining, terminated,
+    /// failed, ...); `state` carries the lifecycle label.
+    VariantUnavailable { variant: String, state: String },
+    /// The drain deadline expired before this queued job ran; it was
+    /// flushed without touching a generation.
+    DrainDeadlineExpired { variant: String },
+    /// The node byte budget (the `ModelCache` cap) cannot admit this
+    /// variant's estimated resident footprint.
+    BudgetExceeded { variant: String, needed_bytes: usize, budget_bytes: usize },
+    /// A live (non-terminated) variant already holds this name.
+    DuplicateVariant { variant: String },
+    /// No variant under this name.
+    UnknownVariant { variant: String },
+    /// Loading or publishing the variant's registry failed; the message
+    /// is retained (and kept visible in `Failed` status for loads).
+    LoadFailed { variant: String, error: String },
+    /// The admitted job itself failed (decode error, merge error, ...).
+    JobFailed { error: String },
+}
+
+impl fmt::Display for ControlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ControlError::Overloaded { variant, queue_cap } => write!(
+                f,
+                "variant {variant:?} is overloaded (admission queue at cap {queue_cap})"
+            ),
+            ControlError::VariantUnavailable { variant, state } => {
+                write!(f, "variant {variant:?} is not accepting work (state: {state})")
+            }
+            ControlError::DrainDeadlineExpired { variant } => {
+                write!(f, "variant {variant:?} drain deadline expired before this job ran")
+            }
+            ControlError::BudgetExceeded { variant, needed_bytes, budget_bytes } => write!(
+                f,
+                "variant {variant:?} needs ~{needed_bytes} resident bytes but the node \
+                 budget admits only {budget_bytes}"
+            ),
+            ControlError::DuplicateVariant { variant } => {
+                write!(f, "a live variant named {variant:?} already exists")
+            }
+            ControlError::UnknownVariant { variant } => {
+                write!(f, "no variant named {variant:?}")
+            }
+            ControlError::LoadFailed { variant, error } => {
+                write!(f, "loading variant {variant:?} failed: {error}")
+            }
+            ControlError::JobFailed { error } => write!(f, "job failed: {error}"),
+        }
+    }
+}
+
+impl std::error::Error for ControlError {}
+
+/// True when `path` is a swap artifact rather than a servable registry:
+/// the writer's `.tmp` staging file (an interrupted atomic write) or the
+/// control plane's `.next` staged generation (not yet published).  Both
+/// are transient names a rename either consumes or abandons; tooling
+/// (`tvq registry verify`) refuses them with a pointed message instead
+/// of validating a file whose identity is about to change.
+pub fn is_swap_artifact(path: &Path) -> bool {
+    matches!(
+        path.extension().and_then(|e| e.to_str()),
+        Some("tmp") | Some("next")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_artifacts_are_recognized() {
+        assert!(is_swap_artifact(Path::new("zoo.tmp")));
+        assert!(is_swap_artifact(Path::new("zoo.qtvc.next")));
+        assert!(is_swap_artifact(Path::new("/srv/models/zoo.qtvc.next")));
+        assert!(!is_swap_artifact(Path::new("zoo.qtvc")));
+        assert!(!is_swap_artifact(Path::new("next.qtvc")));
+        assert!(!is_swap_artifact(Path::new("tmp")));
+    }
+
+    #[test]
+    fn errors_render_pointed_messages() {
+        let e = ControlError::Overloaded { variant: "a".into(), queue_cap: 8 };
+        assert!(e.to_string().contains("overloaded"));
+        let e = ControlError::VariantUnavailable { variant: "a".into(), state: "draining".into() };
+        assert!(e.to_string().contains("draining"));
+        let e = ControlError::BudgetExceeded {
+            variant: "a".into(),
+            needed_bytes: 100,
+            budget_bytes: 10,
+        };
+        assert!(e.to_string().contains("100") && e.to_string().contains("10"));
+    }
+}

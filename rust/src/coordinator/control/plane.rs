@@ -1,0 +1,480 @@
+//! The node-level control plane: owns the variants and the shared
+//! [`ModelCache`], enforces the byte budget at load time, and snapshots
+//! per-variant status for the `tvq serve status` control API.
+//!
+//! A [`ControlPlane`] maps variant names to slots.  A slot is either a
+//! live [`Variant`] (with its lifecycle state) or a retained load
+//! failure — a variant that never became `Ready` stays visible in
+//! status with its error, rather than vanishing.  Loads are refused
+//! *before* any registry bytes become resident when the estimated
+//! footprint does not fit under the cache's byte cap
+//! ([`ControlError::BudgetExceeded`]); admitted registries are
+//! registered as cache sources so their unevictable overhead counts
+//! against the node budget from then on.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::cache::ModelCache;
+use crate::coordinator::metrics::{VariantMetrics, VariantMetricsSnapshot};
+use crate::coordinator::tcp::StatusSource;
+use crate::util::json::Json;
+
+use super::generation::GenerationalRegistry;
+use super::variant::{Variant, VariantConfig, VariantState};
+use super::ControlError;
+
+enum Slot {
+    Live {
+        variant: Arc<Variant>,
+        /// The configured default drain deadline, used when
+        /// [`ControlPlane::drain_variant`] is called without an override.
+        drain_deadline: Duration,
+    },
+    /// A load that failed; the error is retained for status queries.
+    Failed { error: String },
+}
+
+/// Owner of a node's merged-variant fleet and its shared byte budget.
+pub struct ControlPlane {
+    cache: Arc<ModelCache>,
+    slots: Mutex<BTreeMap<String, Slot>>,
+}
+
+impl ControlPlane {
+    /// A plane sharing `cache` (and its byte cap) across all variants.
+    pub fn new(cache: Arc<ModelCache>) -> ControlPlane {
+        ControlPlane { cache, slots: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The shared model cache (merged variants and registry sources all
+    /// count against its cap).
+    pub fn cache(&self) -> &Arc<ModelCache> {
+        &self.cache
+    }
+
+    /// Load `path` as a new variant named `name` and bring it `Ready`.
+    ///
+    /// The `Loading` phase runs here: the registry is opened, its
+    /// unevictable overhead plus `cfg.est_model_bytes` is checked
+    /// against the cache budget, and only then does a worker start.  On
+    /// failure the error is retained as a `Failed` slot (visible in
+    /// status) *and* returned.  A live (non-terminated) variant under
+    /// the same name is a [`ControlError::DuplicateVariant`]; terminated
+    /// and failed slots are replaced.
+    pub fn load_variant(
+        &self,
+        name: &str,
+        path: &Path,
+        cfg: &VariantConfig,
+    ) -> Result<Arc<Variant>, ControlError> {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(Slot::Live { variant, .. }) = slots.get(name) {
+            if variant.state() != VariantState::Terminated {
+                return Err(ControlError::DuplicateVariant { variant: name.to_string() });
+            }
+        }
+        match self.load_locked(name, path, cfg) {
+            Ok(variant) => {
+                slots.insert(
+                    name.to_string(),
+                    Slot::Live { variant: variant.clone(), drain_deadline: cfg.drain_deadline },
+                );
+                Ok(variant)
+            }
+            Err(err) => {
+                // Loading → Failed: keep the error where status can see it.
+                slots.insert(name.to_string(), Slot::Failed { error: err.to_string() });
+                Err(err)
+            }
+        }
+    }
+
+    /// The open + budget-check + start sequence (caller holds the slot
+    /// map lock, which serializes loads against each other and against
+    /// status snapshots).
+    fn load_locked(
+        &self,
+        name: &str,
+        path: &Path,
+        cfg: &VariantConfig,
+    ) -> Result<Arc<Variant>, ControlError> {
+        let registry = GenerationalRegistry::open(path).map_err(|e| ControlError::LoadFailed {
+            variant: name.to_string(),
+            error: format!("{e:#}"),
+        })?;
+        // Budget gate: the registry's unevictable resident overhead plus
+        // the caller's estimate of the merged model it will build must
+        // fit under the cache cap alongside what is already pinned.
+        let pin = registry.pin();
+        let needed = pin.registry().resident_overhead_bytes() + cfg.est_model_bytes;
+        if !self.cache.can_admit(needed) {
+            return Err(ControlError::BudgetExceeded {
+                variant: name.to_string(),
+                needed_bytes: needed,
+                budget_bytes: self.cache.byte_cap().unwrap_or(usize::MAX),
+            });
+        }
+        self.cache.register_source(pin.source());
+        drop(pin);
+        let metrics = Arc::new(VariantMetrics::default());
+        Variant::start(name, Arc::new(registry), cfg, metrics).map_err(|e| {
+            ControlError::LoadFailed { variant: name.to_string(), error: format!("{e:#}") }
+        })
+    }
+
+    /// Look up a live variant.
+    pub fn get(&self, name: &str) -> Option<Arc<Variant>> {
+        match self.slots.lock().unwrap().get(name) {
+            Some(Slot::Live { variant, .. }) => Some(variant.clone()),
+            _ => None,
+        }
+    }
+
+    /// [`get`](Self::get) with a typed miss.
+    pub fn variant(&self, name: &str) -> Result<Arc<Variant>, ControlError> {
+        self.get(name).ok_or_else(|| ControlError::UnknownVariant { variant: name.to_string() })
+    }
+
+    /// Publish the variant's staged next generation (`<path>.next`):
+    /// validate, rename-swap, reload.  In-flight work keeps its pinned
+    /// generation; the variant's generation gauge advances.
+    pub fn publish_staged(&self, name: &str) -> Result<u64, ControlError> {
+        let variant = self.variant(name)?;
+        let generation = variant.registry().publish_staged().map_err(|e| {
+            ControlError::LoadFailed { variant: name.to_string(), error: format!("{e:#}") }
+        })?;
+        self.note_new_generation(&variant, generation);
+        Ok(generation)
+    }
+
+    /// Re-open a variant's serving path in place (the file was replaced
+    /// by an external rename) as the next generation.
+    pub fn reload_variant(&self, name: &str) -> Result<u64, ControlError> {
+        let variant = self.variant(name)?;
+        let generation = variant.registry().reload().map_err(|e| {
+            ControlError::LoadFailed { variant: name.to_string(), error: format!("{e:#}") }
+        })?;
+        self.note_new_generation(&variant, generation);
+        Ok(generation)
+    }
+
+    fn note_new_generation(&self, variant: &Variant, generation: u64) {
+        variant.metrics().generation.store(generation, Ordering::Relaxed);
+        // Same source id (same path + scheme): refreshes the cache's
+        // footprint entry to the new generation's overhead.
+        self.cache.register_source(variant.registry().pin().source());
+    }
+
+    /// Begin draining `name`.  `deadline: None` uses the deadline the
+    /// variant was loaded with.
+    pub fn drain_variant(
+        &self,
+        name: &str,
+        deadline: Option<Duration>,
+    ) -> Result<(), ControlError> {
+        let (variant, default_deadline) = match self.slots.lock().unwrap().get(name) {
+            Some(Slot::Live { variant, drain_deadline }) => (variant.clone(), *drain_deadline),
+            Some(Slot::Failed { .. }) | None => {
+                return Err(ControlError::UnknownVariant { variant: name.to_string() })
+            }
+        };
+        variant.drain(deadline.unwrap_or(default_deadline))
+    }
+
+    /// Remove a variant that has finished its lifecycle (`Terminated`)
+    /// or never started it (`Failed`).  Live variants must drain first —
+    /// removal never interrupts work.
+    pub fn remove_variant(&self, name: &str) -> Result<(), ControlError> {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get(name) {
+            None => Err(ControlError::UnknownVariant { variant: name.to_string() }),
+            Some(Slot::Failed { .. }) => {
+                slots.remove(name);
+                Ok(())
+            }
+            Some(Slot::Live { variant, .. }) => match variant.state() {
+                VariantState::Terminated => {
+                    slots.remove(name);
+                    Ok(())
+                }
+                state => Err(ControlError::VariantUnavailable {
+                    variant: name.to_string(),
+                    state: state.label().to_string(),
+                }),
+            },
+        }
+    }
+
+    /// Names of all slots, live and failed.
+    pub fn names(&self) -> Vec<String> {
+        self.slots.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Snapshot the whole plane: every variant's lifecycle state,
+    /// generation, queue metrics and resident footprint, plus the node
+    /// budget picture.
+    pub fn status(&self) -> PlaneStatus {
+        let slots = self.slots.lock().unwrap();
+        let variants = slots
+            .iter()
+            .map(|(name, slot)| match slot {
+                Slot::Live { variant, .. } => {
+                    let pin = variant.registry().pin();
+                    VariantStatus {
+                        name: name.clone(),
+                        state: variant.state().label().to_string(),
+                        error: match variant.state() {
+                            VariantState::Failed(e) => Some(e),
+                            _ => None,
+                        },
+                        generation: variant.registry().generation(),
+                        live_generations: variant.registry().live_generations(),
+                        resident_overhead_bytes: pin.registry().resident_overhead_bytes(),
+                        n_tasks: pin.registry().n_tasks(),
+                        metrics: variant.metrics().snapshot(),
+                    }
+                }
+                Slot::Failed { error } => VariantStatus {
+                    name: name.clone(),
+                    state: "failed".to_string(),
+                    error: Some(error.clone()),
+                    generation: 0,
+                    live_generations: Vec::new(),
+                    resident_overhead_bytes: 0,
+                    n_tasks: 0,
+                    metrics: VariantMetricsSnapshot::default(),
+                },
+            })
+            .collect();
+        PlaneStatus {
+            variants,
+            resident_bytes: self.cache.resident_bytes(),
+            source_overhead_bytes: self.cache.source_overhead_bytes(),
+            byte_cap: self.cache.byte_cap(),
+        }
+    }
+}
+
+impl StatusSource for ControlPlane {
+    fn status_json(&self) -> Json {
+        self.status().to_json()
+    }
+}
+
+/// One variant's row in a [`PlaneStatus`].
+#[derive(Clone, Debug)]
+pub struct VariantStatus {
+    pub name: String,
+    /// Lifecycle label (`loading`/`ready`/`draining`/`terminated`/`failed`).
+    pub state: String,
+    /// Retained error for failed loads / failed variants.
+    pub error: Option<String>,
+    /// Current generation number (0 for a failed load — none was opened).
+    pub generation: u64,
+    /// Generations still mapped: current plus any pinned by in-flight work.
+    pub live_generations: Vec<u64>,
+    /// The registry's unevictable resident bytes (index + plan caches).
+    pub resident_overhead_bytes: usize,
+    pub n_tasks: usize,
+    pub metrics: VariantMetricsSnapshot,
+}
+
+impl VariantStatus {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("state", Json::str(&self.state)),
+            ("generation", Json::num(self.generation as f64)),
+            (
+                "live_generations",
+                Json::arr(self.live_generations.iter().map(|g| Json::num(*g as f64))),
+            ),
+            ("resident_overhead_bytes", Json::num(self.resident_overhead_bytes as f64)),
+            ("n_tasks", Json::num(self.n_tasks as f64)),
+            ("admitted", Json::num(self.metrics.admitted as f64)),
+            ("rejected", Json::num(self.metrics.rejected as f64)),
+            ("completed", Json::num(self.metrics.completed as f64)),
+            ("drained", Json::num(self.metrics.drained as f64)),
+            ("queue_depth", Json::num(self.metrics.queue_depth as f64)),
+        ];
+        if let Some(error) = &self.error {
+            fields.push(("error", Json::str(error)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Snapshot of the whole plane (the `tvq serve status` payload).
+#[derive(Clone, Debug)]
+pub struct PlaneStatus {
+    pub variants: Vec<VariantStatus>,
+    /// Cache-resident bytes: merged variants plus source overheads.
+    pub resident_bytes: usize,
+    /// The unevictable floor contributed by registered registry sources.
+    pub source_overhead_bytes: usize,
+    pub byte_cap: Option<usize>,
+}
+
+impl PlaneStatus {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variants", Json::arr(self.variants.iter().map(|v| v.to_json()))),
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+            ("source_overhead_bytes", Json::num(self.source_overhead_bytes as f64)),
+            (
+                "byte_cap",
+                match self.byte_cap {
+                    Some(cap) => Json::num(cap as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Human-oriented multi-line rendering for the CLI.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        let cap = match self.byte_cap {
+            Some(cap) => format!("{:.1} MiB", cap as f64 / (1024.0 * 1024.0)),
+            None => "unbounded".to_string(),
+        };
+        s.push_str(&format!(
+            "node: resident {:.1} MiB (sources {:.1} MiB), budget {cap}\n",
+            self.resident_bytes as f64 / (1024.0 * 1024.0),
+            self.source_overhead_bytes as f64 / (1024.0 * 1024.0),
+        ));
+        for v in &self.variants {
+            s.push_str(&format!(
+                "  {:<16} {:<10} gen {:>2} (live {:?})  admitted {:>6}  rejected {:>4}  \
+                 completed {:>6}  drained {:>4}  depth {:>3}",
+                v.name,
+                v.state,
+                v.generation,
+                v.live_generations,
+                v.metrics.admitted,
+                v.metrics.rejected,
+                v.metrics.completed,
+                v.metrics.drained,
+                v.metrics.queue_depth,
+            ));
+            if let Some(error) = &v.error {
+                s.push_str(&format!("  error: {error}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::planner::synthetic_planner_zoo;
+    use crate::quant::QuantScheme;
+    use crate::registry::build_registry;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tvq-plane-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn pack(dir: &Path, name: &str, seed: u64) -> PathBuf {
+        let (pre, fts) = synthetic_planner_zoo(3, seed);
+        let path = dir.join(name);
+        build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+        path
+    }
+
+    #[test]
+    fn load_submit_drain_remove_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let path = pack(&dir, "zoo.qtvc", 7);
+        let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+        let v = plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap();
+        assert_eq!(v.state(), VariantState::Ready);
+
+        let rx = v.submit_task_vector(0).unwrap();
+        let tv = rx.recv().unwrap().unwrap();
+        assert!(tv.numel() > 0);
+
+        // Duplicate names are refused while the variant is live.
+        let err = plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap_err();
+        assert!(matches!(err, ControlError::DuplicateVariant { .. }));
+        // ... and so is removal.
+        assert!(matches!(
+            plane.remove_variant("zoo").unwrap_err(),
+            ControlError::VariantUnavailable { .. }
+        ));
+
+        plane.drain_variant("zoo", None).unwrap();
+        assert!(v.await_state(&VariantState::Terminated, Duration::from_secs(10)));
+        // Terminated variants reject admissions with a typed error.
+        assert!(matches!(
+            v.submit_task_vector(0).unwrap_err(),
+            ControlError::VariantUnavailable { .. }
+        ));
+        plane.remove_variant("zoo").unwrap();
+        assert!(plane.get("zoo").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_refusal_is_typed_and_retained() {
+        let dir = tmpdir("budget");
+        let path = pack(&dir, "zoo.qtvc", 7);
+        // A 1-byte budget cannot admit any registry overhead.
+        let plane = ControlPlane::new(Arc::new(ModelCache::with_byte_cap(1)));
+        let err = plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap_err();
+        assert!(matches!(err, ControlError::BudgetExceeded { .. }), "{err}");
+        // The failure is retained in status, not silently dropped.
+        let status = plane.status();
+        assert_eq!(status.variants.len(), 1);
+        assert_eq!(status.variants[0].state, "failed");
+        assert!(status.variants[0].error.as_ref().unwrap().contains("budget"));
+        // Nothing was registered against the budget.
+        assert_eq!(plane.cache().source_overhead_bytes(), 0);
+        // A roomier plane admits the same file and can replace the
+        // failed slot under the same name.
+        let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+        plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_and_missing_file_paths() {
+        let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+        assert!(matches!(
+            plane.variant("nope").unwrap_err(),
+            ControlError::UnknownVariant { .. }
+        ));
+        let err = plane
+            .load_variant("ghost", Path::new("/nonexistent/zoo.qtvc"), &VariantConfig::default())
+            .unwrap_err();
+        assert!(matches!(err, ControlError::LoadFailed { .. }));
+        let status = plane.status();
+        assert_eq!(status.variants[0].state, "failed");
+    }
+
+    #[test]
+    fn status_json_roundtrips() {
+        let dir = tmpdir("status-json");
+        let path = pack(&dir, "zoo.qtvc", 3);
+        let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+        plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap();
+        let rendered = plane.status().to_json().to_string_compact();
+        let parsed = Json::parse(&rendered).unwrap();
+        let variants = parsed.req("variants").unwrap().as_arr().unwrap();
+        assert_eq!(variants.len(), 1);
+        assert_eq!(variants[0].req("name").unwrap().as_str().unwrap(), "zoo");
+        assert_eq!(variants[0].req("state").unwrap().as_str().unwrap(), "ready");
+        assert_eq!(variants[0].req("generation").unwrap().as_usize().unwrap(), 1);
+        assert!(plane.status().summary().contains("zoo"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,400 @@
+//! Variant lifecycle: the state machine, the bounded admission queue,
+//! and the worker that executes admitted jobs against pinned generations.
+//!
+//! ```text
+//!            load ok                drain()             queue empty
+//!  Loading ──────────► Ready ─────────────► Draining ──────────────► Terminated
+//!     │                                        │ deadline expired:
+//!     │ load error / budget refusal            │ flush queued jobs with
+//!     ▼                                        │ DrainDeadlineExpired,
+//!  Failed (error retained)                     └──────► Terminated
+//! ```
+//!
+//! Admission ([`Variant::admit`]) happens under the state lock: the
+//! lifecycle check, the generation pin, and the `try_send` into the
+//! bounded queue are one atomic step, so no job can slip into a variant
+//! after it flips to `Draining`, and every admitted job carries the
+//! generation that was current at admission — a publish between
+//! admission and execution does not retarget it.  Rejections are typed:
+//! a full queue is [`ControlError::Overloaded`], a non-`Ready` state is
+//! [`ControlError::VariantUnavailable`].
+//!
+//! Draining drops the queue's sender: the worker keeps completing queued
+//! jobs until the channel reports disconnected (all work done → clean
+//! `Terminated`) or the drain deadline passes first (the remainder is
+//! flushed with [`ControlError::DrainDeadlineExpired`], each flushed
+//! job's generation pin released unread).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::generation::{Generation, GenerationalRegistry};
+use super::ControlError;
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::metrics::VariantMetrics;
+use crate::util::pool::Pool;
+
+/// Lifecycle states of a variant.  `Failed` retains the load error so
+/// status queries explain *why* a variant never became ready.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VariantState {
+    Loading,
+    Ready,
+    Draining,
+    Terminated,
+    Failed(String),
+}
+
+impl VariantState {
+    /// Stable lowercase label (status JSON, error messages).
+    pub fn label(&self) -> &'static str {
+        match self {
+            VariantState::Loading => "loading",
+            VariantState::Ready => "ready",
+            VariantState::Draining => "draining",
+            VariantState::Terminated => "terminated",
+            VariantState::Failed(_) => "failed",
+        }
+    }
+
+    /// Whether the lifecycle permits moving from `self` to `to`.
+    /// `Terminated` and `Failed` are terminal; the only cycle-free path
+    /// is Loading → Ready → Draining → Terminated.
+    pub fn can_transition(&self, to: &VariantState) -> bool {
+        use VariantState::*;
+        matches!(
+            (self, to),
+            (Loading, Ready) | (Loading, Failed(_)) | (Ready, Draining) | (Draining, Terminated)
+        )
+    }
+}
+
+/// Per-variant tuning knobs.
+#[derive(Clone, Debug)]
+pub struct VariantConfig {
+    /// Bounded admission-queue depth; beyond it `admit` rejects with
+    /// [`ControlError::Overloaded`] instead of blocking.
+    pub queue_cap: usize,
+    /// How long a draining variant may keep completing queued work
+    /// before the remainder is flushed with typed errors.
+    pub drain_deadline: Duration,
+    /// Estimated resident bytes of the merged variant this registry will
+    /// build, checked against the node byte budget at load time (0 = the
+    /// caller only wants the source overhead budgeted).
+    pub est_model_bytes: usize,
+}
+
+impl Default for VariantConfig {
+    fn default() -> Self {
+        Self {
+            queue_cap: 256,
+            drain_deadline: Duration::from_secs(1),
+            est_model_bytes: 0,
+        }
+    }
+}
+
+/// An admitted unit of work: the closure plus the generation pinned for
+/// it at admission time.
+struct Job {
+    pinned: Arc<Generation>,
+    run: Box<dyn FnOnce(Result<&Generation, ControlError>) + Send>,
+}
+
+/// State + sender, guarded together: admission checks the state and
+/// enqueues under one lock, drain flips the state and drops the sender
+/// under the same lock — no job can race past a `Draining` decision.
+struct Ctl {
+    state: VariantState,
+    tx: Option<SyncSender<Job>>,
+}
+
+struct Inner {
+    name: String,
+    registry: Arc<GenerationalRegistry>,
+    ctl: Mutex<Ctl>,
+    /// Set (before the state flips to Draining) to the instant after
+    /// which still-queued jobs are flushed instead of run.
+    drain_deadline_at: Mutex<Option<Instant>>,
+    metrics: Arc<VariantMetrics>,
+    queue_cap: usize,
+}
+
+impl Inner {
+    fn set_terminated(&self) {
+        let mut ctl = self.ctl.lock().unwrap();
+        // Normal path is Draining → Terminated; the worker also forces
+        // Terminated if it exits for any other reason, so a variant
+        // without a live worker can never report itself admittable.
+        ctl.state = VariantState::Terminated;
+        ctl.tx = None;
+    }
+}
+
+/// A lifecycle-managed serving variant: one generational registry, one
+/// bounded queue, one worker thread executing admitted jobs in order.
+pub struct Variant {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Variant {
+    /// Start a `Ready` variant serving `registry`.  (The `Loading` phase
+    /// — opening the registry, checking the byte budget — happens in
+    /// [`ControlPlane::load_variant`](super::ControlPlane::load_variant)
+    /// before a `Variant` exists; a failed load is retained there as a
+    /// `Failed` slot.)
+    pub fn start(
+        name: &str,
+        registry: Arc<GenerationalRegistry>,
+        cfg: &VariantConfig,
+        metrics: Arc<VariantMetrics>,
+    ) -> Result<Arc<Variant>> {
+        let queue_cap = cfg.queue_cap.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue_cap);
+        metrics.generation.store(registry.generation(), Ordering::Relaxed);
+        let inner = Arc::new(Inner {
+            name: name.to_string(),
+            registry,
+            ctl: Mutex::new(Ctl { state: VariantState::Ready, tx: Some(tx) }),
+            drain_deadline_at: Mutex::new(None),
+            metrics,
+            queue_cap,
+        });
+        let worker_inner = inner.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("tvq-variant-{name}"))
+            .spawn(move || worker_loop(worker_inner, rx))?;
+        Ok(Arc::new(Variant { inner, worker: Mutex::new(Some(worker)) }))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    pub fn state(&self) -> VariantState {
+        self.inner.ctl.lock().unwrap().state.clone()
+    }
+
+    pub fn registry(&self) -> &Arc<GenerationalRegistry> {
+        &self.inner.registry
+    }
+
+    pub fn metrics(&self) -> &VariantMetrics {
+        &self.inner.metrics
+    }
+
+    /// Admit one unit of work.  `run` executes on the variant's worker
+    /// thread against the generation pinned *now*; if the job is flushed
+    /// by a drain deadline it receives the typed error instead.  Returns
+    /// the typed rejection without enqueueing when the variant is not
+    /// `Ready` or its queue is full.
+    pub fn admit<F>(&self, run: F) -> Result<(), ControlError>
+    where
+        F: FnOnce(Result<&Generation, ControlError>) + Send + 'static,
+    {
+        let ctl = self.inner.ctl.lock().unwrap();
+        match &ctl.state {
+            VariantState::Ready => {}
+            other => {
+                self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ControlError::VariantUnavailable {
+                    variant: self.inner.name.clone(),
+                    state: other.label().to_string(),
+                });
+            }
+        }
+        let job = Job { pinned: self.inner.registry.pin(), run: Box::new(run) };
+        let tx = ctl.tx.as_ref().expect("a Ready variant keeps its sender");
+        // Count depth before the send: the worker decrements after
+        // receiving, and channel recv synchronizes-with this send.
+        self.inner.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(job) {
+            Ok(()) => {
+                self.inner.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(_)) => {
+                self.inner.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ControlError::Overloaded {
+                    variant: self.inner.name.clone(),
+                    queue_cap: self.inner.queue_cap,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.inner.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ControlError::VariantUnavailable {
+                    variant: self.inner.name.clone(),
+                    state: VariantState::Terminated.label().to_string(),
+                })
+            }
+        }
+    }
+
+    /// [`admit`](Self::admit) returning the job's value on a one-shot
+    /// channel: `f` runs on the worker with the pinned generation; a
+    /// drain flush delivers the typed error instead.
+    pub fn submit<T, F>(&self, f: F) -> Result<Receiver<Result<T, ControlError>>, ControlError>
+    where
+        T: Send + 'static,
+        F: FnOnce(&Generation) -> Result<T, ControlError> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.admit(move |generation| {
+            let _ = tx.send(match generation {
+                Ok(g) => f(g),
+                Err(e) => Err(e),
+            });
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit a task-vector reconstruction against the pinned
+    /// generation.  Decodes through the shared [`Pool`], so the result
+    /// is bit-exact at every thread count (the PR-5 determinism
+    /// contract).
+    pub fn submit_task_vector(
+        &self,
+        t: usize,
+    ) -> Result<Receiver<Result<Checkpoint, ControlError>>, ControlError> {
+        self.submit(move |generation| {
+            generation
+                .registry()
+                .load_task_vector_with_pool(t, Pool::global())
+                .map_err(|e| ControlError::JobFailed { error: format!("{e:#}") })
+        })
+    }
+
+    /// Begin draining: reject new admissions immediately, let queued and
+    /// in-flight work complete for up to `deadline`, then flush whatever
+    /// is still queued with [`ControlError::DrainDeadlineExpired`].  The
+    /// variant reaches `Terminated` either way; errors if it is not
+    /// currently `Ready`.
+    pub fn drain(&self, deadline: Duration) -> Result<(), ControlError> {
+        // The worker reads the deadline between jobs; publish it before
+        // the closed channel becomes observable.
+        *self.inner.drain_deadline_at.lock().unwrap() = Some(Instant::now() + deadline);
+        let mut ctl = self.inner.ctl.lock().unwrap();
+        if !ctl.state.can_transition(&VariantState::Draining) {
+            return Err(ControlError::VariantUnavailable {
+                variant: self.inner.name.clone(),
+                state: ctl.state.label().to_string(),
+            });
+        }
+        ctl.state = VariantState::Draining;
+        ctl.tx = None; // worker sees Disconnected once the queue empties
+        Ok(())
+    }
+
+    /// Block until the variant reaches `want` (polling; ops/test
+    /// helper).  Returns whether it got there within `timeout`.
+    pub fn await_state(&self, want: &VariantState, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        loop {
+            if self.state() == *want {
+                return true;
+            }
+            if t0.elapsed() >= timeout {
+                return self.state() == *want;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+impl Drop for Variant {
+    fn drop(&mut self) {
+        // Graceful by default: complete everything already admitted
+        // (mirrors Server::shutdown).  Already-draining/terminated
+        // variants just join.
+        let _ = self.drain(Duration::from_secs(60));
+        if let Some(handle) = self.worker.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, rx: Receiver<Job>) {
+    loop {
+        // Between jobs, an expired drain deadline flushes the remainder.
+        // The worker never blocks while a deadline is pending: a set
+        // deadline implies drain() already dropped the sender, so an
+        // empty queue returns Disconnected instead of parking.
+        let expired = inner
+            .drain_deadline_at
+            .lock()
+            .unwrap()
+            .is_some_and(|at| Instant::now() >= at);
+        if expired {
+            while let Ok(job) = rx.try_recv() {
+                inner.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                inner.metrics.drained.fetch_add(1, Ordering::Relaxed);
+                (job.run)(Err(ControlError::DrainDeadlineExpired {
+                    variant: inner.name.clone(),
+                }));
+                // job.pinned drops here without being read.
+            }
+            inner.set_terminated();
+            return;
+        }
+        match rx.recv() {
+            Ok(job) => {
+                inner.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                let Job { pinned, run } = job;
+                run(Ok(&pinned));
+                inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                // The in-flight pin releases only after the job ran.
+                drop(pinned);
+            }
+            Err(_) => {
+                // Sender dropped and queue fully consumed: every
+                // admitted job completed before the deadline.
+                inner.set_terminated();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transition_table_is_exact() {
+        use VariantState::*;
+        let states = [Loading, Ready, Draining, Terminated, Failed("e".into())];
+        let legal = [
+            (Loading, Ready),
+            (Loading, Failed("e".into())),
+            (Ready, Draining),
+            (Draining, Terminated),
+        ];
+        for from in &states {
+            for to in &states {
+                let want = legal.iter().any(|(f, t)| f == from && t == to);
+                assert_eq!(
+                    from.can_transition(to),
+                    want,
+                    "transition {from:?} -> {to:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(VariantState::Loading.label(), "loading");
+        assert_eq!(VariantState::Ready.label(), "ready");
+        assert_eq!(VariantState::Draining.label(), "draining");
+        assert_eq!(VariantState::Terminated.label(), "terminated");
+        assert_eq!(VariantState::Failed("x".into()).label(), "failed");
+    }
+}

@@ -4,6 +4,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Shared metrics registry (one per [`Server`](super::Server)).
@@ -167,6 +168,71 @@ impl MetricsSnapshot {
     }
 }
 
+/// Per-variant serving counters for the control plane (one per
+/// [`Variant`](super::control::Variant)): admission outcomes, drain
+/// flushes, queue depth, and the registry generation gauge.  All relaxed
+/// atomics — the admission queue's send/recv pairs provide the ordering
+/// that keeps `queue_depth` consistent.
+#[derive(Debug, Default)]
+pub struct VariantMetrics {
+    /// Jobs accepted into the bounded admission queue.
+    pub admitted: AtomicU64,
+    /// Typed rejections (queue full, variant not `Ready`).
+    pub rejected: AtomicU64,
+    /// Jobs the worker ran to completion.
+    pub completed: AtomicU64,
+    /// Queued jobs flushed with `DrainDeadlineExpired`.
+    pub drained: AtomicU64,
+    /// Jobs admitted but not yet picked up by the worker.
+    pub queue_depth: AtomicU64,
+    /// Current registry generation (gauge, updated on publish/reload).
+    pub generation: AtomicU64,
+}
+
+impl VariantMetrics {
+    pub fn snapshot(&self) -> VariantMetricsSnapshot {
+        VariantMetricsSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            drained: self.drained.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            generation: self.generation.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable per-variant counter view.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VariantMetricsSnapshot {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub drained: u64,
+    pub queue_depth: u64,
+    pub generation: u64,
+}
+
+impl MetricsSnapshot {
+    /// JSON rendering for the `tvq serve status` control API.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_batch_size", Json::num(self.mean_batch_size)),
+            ("latency_mean_us", Json::num(self.latency_mean_us)),
+            ("latency_p50_us", Json::num(self.latency_p50_us)),
+            ("latency_p99_us", Json::num(self.latency_p99_us)),
+            ("merge_builds", Json::num(self.merge_builds as f64)),
+            ("merge_build_wall_ms", Json::num(self.merge_build_wall_ms)),
+            ("merge_build_busy_ms", Json::num(self.merge_build_busy_ms)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +270,30 @@ mod tests {
         assert!((s.merge_build_wall_ms - 20.0).abs() < 1e-9);
         assert!((s.merge_build_speedup() - 3.0).abs() < 1e-9);
         assert!(s.summary().contains("merge builds 2"), "{}", s.summary());
+    }
+
+    #[test]
+    fn variant_metrics_snapshot_and_json() {
+        let v = VariantMetrics::default();
+        v.admitted.fetch_add(5, Ordering::Relaxed);
+        v.completed.fetch_add(4, Ordering::Relaxed);
+        v.rejected.fetch_add(2, Ordering::Relaxed);
+        v.drained.fetch_add(1, Ordering::Relaxed);
+        v.queue_depth.fetch_add(1, Ordering::Relaxed);
+        v.generation.store(3, Ordering::Relaxed);
+        let s = v.snapshot();
+        assert_eq!(
+            (s.admitted, s.rejected, s.completed, s.drained, s.queue_depth, s.generation),
+            (5, 2, 4, 1, 1, 3)
+        );
+
+        let m = Metrics::new();
+        m.submitted.fetch_add(7, Ordering::Relaxed);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.req("submitted").unwrap().as_usize().unwrap(), 7);
+        // Compact output reparses (the TCP status path round-trips it).
+        let re = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(re.req("rejected").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

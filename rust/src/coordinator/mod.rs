@@ -17,30 +17,54 @@
 //!                 response channel ◄────────┘  per-request one-shot
 //! ```
 //!
-//! * [`batcher`] — pure batching logic (size + deadline flush rules),
-//!   property-tested without threads.
+//! * [`batcher`] — pure batching logic (size + deadline flush rules,
+//!   bounded per-task queues), property-tested without threads.
 //! * [`server`] — the running service: router, executor pool, backpressure.
 //! * [`cache`] — merged-model cache keyed by (merge method, quant scheme),
 //!   so a fleet of model variants shares one pre-trained trunk in memory.
-//! * [`metrics`] — atomic counters + latency summary.
+//! * [`metrics`] — atomic counters + latency summary, plus the
+//!   per-variant counters the control plane reports.
+//! * [`control`] — the variant lifecycle layer above all of this:
+//!   generational registry hot-swap, graceful drain, admission control,
+//!   and the node byte budget (see its module docs).
 
 pub mod batcher;
 pub mod cache;
+pub mod control;
 pub mod metrics;
 pub mod server;
 pub mod tcp;
 
 pub use batcher::{Batch, Batcher};
 pub use cache::ModelCache;
+pub use control::{ControlError, ControlPlane, GenerationalRegistry, Variant, VariantConfig, VariantState};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Server, ServerConfig, ServeModel};
-pub use tcp::TcpFront;
+pub use server::{ServeError, Server, ServerConfig, ServeModel};
+pub use tcp::{StatusSource, TcpFront};
 
 /// Select the smallest serving bucket that fits `n` items, if any.
 /// Buckets are the batch sizes the AOT forward artifacts were lowered at
 /// (e.g. `[1, 8, 32]` for `vit_s`); inputs are padded up to the bucket.
 pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
     buckets.iter().copied().filter(|&b| b >= n).min()
+}
+
+/// Split `n` items into per-bucket chunk sizes when `n` exceeds the
+/// largest bucket: greedy full buckets of the maximum size, then
+/// [`pick_bucket`]-style padding for the remainder.  Returns `None` only
+/// when `buckets` is empty.  With `n == 0` the split is empty.
+pub fn bucket_chunks(buckets: &[usize], n: usize) -> Option<Vec<usize>> {
+    let max = buckets.iter().copied().max()?;
+    let mut chunks = Vec::new();
+    let mut left = n;
+    while left > max {
+        chunks.push(max);
+        left -= max;
+    }
+    if left > 0 {
+        chunks.push(left);
+    }
+    Some(chunks)
 }
 
 #[cfg(test)]
@@ -60,5 +84,24 @@ mod tests {
     #[test]
     fn bucket_selection_unordered_input() {
         assert_eq!(pick_bucket(&[32, 1, 8], 3), Some(8));
+    }
+
+    #[test]
+    fn oversized_batches_split_across_buckets() {
+        let buckets = [1usize, 8, 32];
+        // Within the largest bucket: one chunk, same as pick_bucket.
+        assert_eq!(bucket_chunks(&buckets, 5), Some(vec![5]));
+        assert_eq!(bucket_chunks(&buckets, 32), Some(vec![32]));
+        // Beyond it: greedy max-bucket chunks plus the remainder.
+        assert_eq!(bucket_chunks(&buckets, 33), Some(vec![32, 1]));
+        assert_eq!(bucket_chunks(&buckets, 70), Some(vec![32, 32, 6]));
+        // Every chunk is itself servable.
+        for chunk in bucket_chunks(&buckets, 100).unwrap() {
+            assert!(pick_bucket(&buckets, chunk).is_some());
+        }
+        // Degenerate inputs.
+        assert_eq!(bucket_chunks(&buckets, 0), Some(vec![]));
+        assert_eq!(bucket_chunks(&[], 5), None);
+        assert_eq!(bucket_chunks(&[32, 1, 8], 33), Some(vec![32, 1]));
     }
 }

@@ -16,7 +16,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::batcher::{Batch, Batcher};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::pick_bucket;
+use super::{bucket_chunks, pick_bucket};
 use crate::data::VitPreset;
 use crate::merge::MergedModel;
 use crate::tensor::Tensor;
@@ -40,12 +40,17 @@ impl ServeModel {
 /// Server tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// Max requests per formed batch (clamped to the largest AOT bucket).
+    /// Max requests per formed batch.  May exceed the largest AOT
+    /// bucket: executors split oversized batches across buckets.
     pub max_batch: usize,
     /// Max time a request may wait for batch-mates.
     pub max_delay: Duration,
     /// Ingress queue capacity; beyond this, `submit` rejects (backpressure).
     pub queue_cap: usize,
+    /// Per-task staged-request cap inside the router's batcher; beyond
+    /// it requests are answered with [`ServeError::Overloaded`] instead
+    /// of letting one hot task absorb the whole ingress queue.
+    pub task_queue_cap: usize,
     /// Executor threads (each owns a PJRT client).
     pub executors: usize,
 }
@@ -56,13 +61,42 @@ impl Default for ServerConfig {
             max_batch: 32,
             max_delay: Duration::from_millis(2),
             queue_cap: 1024,
+            task_queue_cap: 1024,
             executors: 2,
         }
     }
 }
 
+/// Typed per-request serving failures (what comes back on the response
+/// channel when a request cannot be answered with logits).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The task's staged queue hit `task_queue_cap`: shed load, retry.
+    Overloaded { task: usize },
+    /// The preset exposes no serve buckets at all (misconfiguration).
+    NoServeBucket { batch: usize },
+    /// The backend failed; the rendered error chain is retained.
+    Backend(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { task } => {
+                write!(f, "task {task} queue is full (per-task backpressure)")
+            }
+            ServeError::NoServeBucket { batch } => {
+                write!(f, "no serve bucket can hold a batch of {batch}")
+            }
+            ServeError::Backend(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Response payload: logits for one request.
-pub type InferResult = Result<Vec<f32>, String>;
+pub type InferResult = Result<Vec<f32>, ServeError>;
 
 /// What executors actually run. `infer` receives a padded `[bucket,
 /// tokens, token_dim]` tensor plus the number of valid rows and returns
@@ -144,13 +178,13 @@ impl Server {
         if cfg.executors == 0 {
             bail!("need at least one executor");
         }
-        let max_bucket = preset
-            .serve_buckets
-            .iter()
-            .copied()
-            .max()
-            .ok_or_else(|| anyhow!("preset has no serve buckets"))?;
-        let max_batch = cfg.max_batch.min(max_bucket).max(1);
+        if preset.serve_buckets.is_empty() {
+            bail!("preset has no serve buckets");
+        }
+        // Not clamped to the largest bucket: executors split oversized
+        // batches across buckets (`bucket_chunks`), so a max_batch above
+        // it just means fewer, larger router flushes.
+        let max_batch = cfg.max_batch.max(1);
 
         let metrics = Arc::new(Metrics::new());
         let (ingress_tx, ingress_rx) =
@@ -162,10 +196,19 @@ impl Server {
         // Router thread: stage + flush.
         let router_metrics = metrics.clone();
         let max_delay = cfg.max_delay;
+        let task_queue_cap = cfg.task_queue_cap.max(1);
         let router = std::thread::Builder::new()
             .name("tvq-router".into())
             .spawn(move || {
-                router_loop(ingress_rx, batch_tx, n_tasks, max_batch, max_delay, router_metrics)
+                router_loop(
+                    ingress_rx,
+                    batch_tx,
+                    n_tasks,
+                    max_batch,
+                    max_delay,
+                    task_queue_cap,
+                    router_metrics,
+                )
             })?;
 
         // Executor pool.
@@ -260,15 +303,33 @@ impl Drop for Server {
     }
 }
 
+/// Stage `item` for `task`, answering with a typed `Overloaded`
+/// rejection when the task's queue is at cap (per-task backpressure —
+/// one hot task cannot absorb the whole ingress queue).
+fn stage(
+    batcher: &mut Batcher<SubmitItem>,
+    task: usize,
+    item: SubmitItem,
+    metrics: &Metrics,
+) {
+    let at = item.submitted;
+    if let Err(item) = batcher.try_push(task, at, item) {
+        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = item.resp.send(Err(ServeError::Overloaded { task }));
+    }
+}
+
 fn router_loop(
     ingress: Receiver<(usize, SubmitItem)>,
     batch_tx: SyncSender<Batch<SubmitItem>>,
     n_tasks: usize,
     max_batch: usize,
     max_delay: Duration,
-    _metrics: Arc<Metrics>,
+    task_queue_cap: usize,
+    metrics: Arc<Metrics>,
 ) {
-    let mut batcher: Batcher<SubmitItem> = Batcher::new(n_tasks, max_batch, max_delay);
+    let mut batcher: Batcher<SubmitItem> =
+        Batcher::with_queue_cap(n_tasks, max_batch, max_delay, task_queue_cap);
     loop {
         // Sleep until the next deadline (or idle-poll at max_delay).
         let timeout = batcher
@@ -277,12 +338,10 @@ fn router_loop(
             .unwrap_or(max_delay.max(Duration::from_millis(1)));
         match ingress.recv_timeout(timeout) {
             Ok((task, item)) => {
-                let at = item.submitted;
-                batcher.push(task, at, item);
+                stage(&mut batcher, task, item, &metrics);
                 // Opportunistically drain everything already queued.
                 while let Ok((task, item)) = ingress.try_recv() {
-                    let at = item.submitted;
-                    batcher.push(task, at, item);
+                    stage(&mut batcher, task, item, &metrics);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -330,37 +389,46 @@ fn executor_loop<B, F>(
             }
         };
         let n = batch.items.len();
-        let bucket = match pick_bucket(preset.serve_buckets, n) {
-            Some(b) => b,
+        // A batch larger than the biggest AOT bucket is split into
+        // bucket-sized chunks and served back-to-back; `None` only when
+        // the preset has no buckets at all (guarded at start, but keep
+        // the typed rejection rather than a panic).
+        let chunk_sizes = match bucket_chunks(preset.serve_buckets, n) {
+            Some(c) => c,
             None => {
                 for s in batch.items {
-                    let _ = s.payload.resp.send(Err(format!(
-                        "batch of {n} exceeds largest serve bucket"
-                    )));
+                    let _ = s.payload.resp.send(Err(ServeError::NoServeBucket { batch: n }));
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
                 }
                 continue;
             }
         };
-        // Pack (padded) input tensor.
-        let mut x = Tensor::zeros(&[bucket, preset.tokens, preset.token_dim]);
-        for (i, s) in batch.items.iter().enumerate() {
-            x.data_mut()[i * img..(i + 1) * img].copy_from_slice(&s.payload.x);
-        }
-        metrics.record_batch(n);
-        match backend.infer(batch.task, &x, n) {
-            Ok(rows) => {
-                for (s, row) in batch.items.into_iter().zip(rows) {
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.record_latency(s.payload.submitted.elapsed());
-                    let _ = s.payload.resp.send(Ok(row));
-                }
+        let mut remaining = batch.items;
+        for chunk_len in chunk_sizes {
+            let rest = remaining.split_off(chunk_len);
+            let chunk = std::mem::replace(&mut remaining, rest);
+            let bucket = pick_bucket(preset.serve_buckets, chunk_len)
+                .expect("bucket_chunks only emits servable chunk sizes");
+            // Pack (padded) input tensor.
+            let mut x = Tensor::zeros(&[bucket, preset.tokens, preset.token_dim]);
+            for (i, s) in chunk.iter().enumerate() {
+                x.data_mut()[i * img..(i + 1) * img].copy_from_slice(&s.payload.x);
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for s in batch.items {
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = s.payload.resp.send(Err(msg.clone()));
+            metrics.record_batch(chunk_len);
+            match backend.infer(batch.task, &x, chunk_len) {
+                Ok(rows) => {
+                    for (s, row) in chunk.into_iter().zip(rows) {
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                        metrics.record_latency(s.payload.submitted.elapsed());
+                        let _ = s.payload.resp.send(Ok(row));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for s in chunk {
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = s.payload.resp.send(Err(ServeError::Backend(msg.clone())));
+                    }
                 }
             }
         }
@@ -421,6 +489,7 @@ mod tests {
             max_delay: Duration::from_millis(1),
             queue_cap: 4096,
             executors: 3,
+            ..Default::default()
         };
         let server = Arc::new(mock_server(cfg, 4));
         let mut handles = Vec::new();
@@ -459,6 +528,7 @@ mod tests {
             max_delay: Duration::from_millis(0),
             queue_cap: 1,
             executors: 1,
+            ..Default::default()
         };
         let server =
             Server::start_with_backend(cfg, &VIT_S, 1, || Ok(SlowBackend)).unwrap();
@@ -490,6 +560,76 @@ mod tests {
         assert_eq!(out[1], 0.0);
         // Submitting after shutdown fails.
         assert!(server.submit(0, &input(0.0)).is_err());
+    }
+
+    #[test]
+    fn oversized_batches_split_across_buckets_and_all_complete() {
+        // max_batch 40 exceeds VIT_S's largest bucket (32): the router
+        // may form a 40-item batch, which the executor must serve as
+        // bucket-sized chunks (32 + 8) rather than erroring.
+        let max_bucket = *VIT_S.serve_buckets.iter().max().unwrap();
+        let total = max_bucket + 8;
+        let cfg = ServerConfig {
+            max_batch: total,
+            // Large delay so all submissions coalesce into one flush.
+            max_delay: Duration::from_millis(200),
+            queue_cap: 4096,
+            executors: 1,
+            ..Default::default()
+        };
+        let server = mock_server(cfg, 1);
+        let img = (VIT_S.tokens * VIT_S.token_dim) as f32;
+        let pending: Vec<_> =
+            (0..total).map(|i| server.submit(0, &input(i as f32)).unwrap()).collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out, vec![i as f32 * img, 0.0], "request {i} got wrong logits");
+        }
+        let m = server.metrics();
+        assert_eq!(m.completed, total as u64);
+        assert_eq!(m.failed, 0);
+        assert!(m.batches >= 2, "expected the batch to split, got {} chunk(s)", m.batches);
+    }
+
+    #[test]
+    fn per_task_queue_cap_rejects_with_typed_error() {
+        // Block the single executor so staged requests pile up in the
+        // router's batcher, then overflow one task's bounded queue.
+        struct SlowBackend;
+        impl Backend for SlowBackend {
+            fn infer(&mut self, _t: usize, _x: &Tensor, n: usize) -> Result<Vec<Vec<f32>>> {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok(vec![vec![0.0]; n])
+            }
+        }
+        let cfg = ServerConfig {
+            max_batch: 1,
+            max_delay: Duration::from_millis(0),
+            queue_cap: 512,
+            task_queue_cap: 2,
+            executors: 1,
+        };
+        let server =
+            Server::start_with_backend(cfg, &VIT_S, 1, || Ok(SlowBackend)).unwrap();
+        let mut pending = Vec::new();
+        let mut overloaded = 0u64;
+        for _ in 0..64 {
+            // submit() itself stays Ok (ingress has room); rejections
+            // arrive typed on the response channel from the router.
+            pending.push(server.submit(0, &input(0.0)).unwrap());
+        }
+        for rx in pending {
+            match rx.recv().unwrap() {
+                Ok(_) => {}
+                Err(ServeError::Overloaded { task }) => {
+                    assert_eq!(task, 0);
+                    overloaded += 1;
+                }
+                Err(other) => panic!("unexpected error: {other}"),
+            }
+        }
+        assert!(overloaded > 0, "expected per-task overload rejections");
+        assert_eq!(server.metrics().rejected, overloaded);
     }
 
     #[test]

@@ -5,6 +5,17 @@
 //! Request:  `{"task": 3, "x": [f32; tokens*token_dim]}`
 //! Response: `{"logits": [f32; n_classes]}` or `{"error": "..."}`
 //!
+//! Control API (same wire, same framing):
+//!
+//! Request:  `{"cmd": "status"}`
+//! Response: `{"server": {...metrics...}, "control": {...variants...}}`
+//!
+//! The `control` key appears when the front-end was bound with a
+//! [`StatusSource`] (normally the
+//! [`ControlPlane`](super::control::ControlPlane)) via
+//! [`TcpFront::bind_with_status`]; a plain [`bind`](TcpFront::bind)
+//! reports server metrics only.
+//!
 //! One handler thread per connection (bounded by `max_conns`); each
 //! request is forwarded through [`Server::submit`], so batching,
 //! backpressure and metrics behave exactly as for in-process callers.
@@ -21,6 +32,13 @@ use super::server::Server;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
+/// Supplies the `control` section of a `{"cmd": "status"}` reply — the
+/// seam through which the control plane exposes per-variant state on
+/// the wire without [`TcpFront`] depending on it.
+pub trait StatusSource: Send + Sync {
+    fn status_json(&self) -> Json;
+}
+
 /// A running TCP front-end bound to a local address.
 pub struct TcpFront {
     addr: std::net::SocketAddr,
@@ -33,6 +51,17 @@ impl TcpFront {
     /// [`shutdown`](Self::shutdown). Accepts at most `max_conns`
     /// concurrent connections; extras are refused with an error line.
     pub fn bind(addr: &str, server: Arc<Server>, max_conns: usize) -> Result<TcpFront> {
+        Self::bind_with_status(addr, server, max_conns, None)
+    }
+
+    /// [`bind`](Self::bind) with a [`StatusSource`] whose snapshot is
+    /// embedded under `control` in `{"cmd": "status"}` replies.
+    pub fn bind_with_status(
+        addr: &str,
+        server: Arc<Server>,
+        max_conns: usize,
+        status: Option<Arc<dyn StatusSource>>,
+    ) -> Result<TcpFront> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -60,10 +89,11 @@ impl TcpFront {
                             let srv = server.clone();
                             let cd = conns.clone();
                             let st = stop2.clone();
+                            let stat = status.clone();
                             let _ = std::thread::Builder::new()
                                 .name("tvq-tcp-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_conn(stream, srv, st);
+                                    let _ = handle_conn(stream, srv, stat, st);
                                     cd.fetch_sub(1, Ordering::Relaxed);
                                 });
                         }
@@ -97,7 +127,12 @@ impl Drop for TcpFront {
     }
 }
 
-fn handle_conn(stream: TcpStream, server: Arc<Server>, stop: Arc<AtomicBool>) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    server: Arc<Server>,
+    status: Option<Arc<dyn StatusSource>>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -110,11 +145,8 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>, stop: Arc<AtomicBool>) ->
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
-                let reply = match handle_line(&line, &server) {
-                    Ok(logits) => {
-                        let arr = Json::arr(logits.into_iter().map(|v| Json::num(v as f64)));
-                        Json::obj(vec![("logits", arr)]).to_string_compact()
-                    }
+                let reply = match handle_line(&line, &server, status.as_deref()) {
+                    Ok(json) => json.to_string_compact(),
                     Err(e) => {
                         Json::obj(vec![("error", Json::str(&format!("{e:#}")))])
                             .to_string_compact()
@@ -133,8 +165,24 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>, stop: Arc<AtomicBool>) ->
     }
 }
 
-fn handle_line(line: &str, server: &Server) -> Result<Vec<f32>> {
+fn handle_line(
+    line: &str,
+    server: &Server,
+    status: Option<&dyn StatusSource>,
+) -> Result<Json> {
     let req = Json::parse(line).context("malformed JSON request")?;
+    if let Some(cmd) = req.get("cmd") {
+        return match cmd.as_str()? {
+            "status" => {
+                let mut fields = vec![("server", server.metrics().to_json())];
+                if let Some(s) = status {
+                    fields.push(("control", s.status_json()));
+                }
+                Ok(Json::obj(fields))
+            }
+            other => anyhow::bail!("unknown cmd {other:?} (supported: \"status\")"),
+        };
+    }
     let task = req.req("task")?.as_usize()?;
     let xs = req.req("x")?.as_arr()?;
     let data: Vec<f32> = xs
@@ -142,7 +190,11 @@ fn handle_line(line: &str, server: &Server) -> Result<Vec<f32>> {
         .map(|v| v.as_f64().map(|f| f as f32))
         .collect::<Result<_>>()?;
     let x = Tensor::from_vec(data);
-    server.infer(task, &x)
+    let logits = server.infer(task, &x)?;
+    Ok(Json::obj(vec![(
+        "logits",
+        Json::arr(logits.into_iter().map(|v| Json::num(v as f64))),
+    )]))
 }
 
 #[cfg(test)]
@@ -223,6 +275,59 @@ mod tests {
             assert!(reply.contains("logits"), "iter {i}: {reply}");
         }
         assert_eq!(server.metrics().completed, 5);
+    }
+
+    #[test]
+    fn status_command_reports_server_and_control_sections() {
+        struct FakePlane;
+        impl StatusSource for FakePlane {
+            fn status_json(&self) -> Json {
+                Json::obj(vec![("variants", Json::arr(vec![Json::str("zoo")]))])
+            }
+        }
+        let server = Arc::new(
+            Server::start_with_backend(ServerConfig::default(), &VIT_S, 4, || {
+                Ok(EchoBackend)
+            })
+            .unwrap(),
+        );
+        let front = TcpFront::bind_with_status(
+            "127.0.0.1:0",
+            server.clone(),
+            8,
+            Some(Arc::new(FakePlane)),
+        )
+        .unwrap();
+        // One real request first so the metrics are non-trivial.
+        let reply = roundtrip(front.addr(), &req_line(1, 3.0));
+        assert!(reply.contains("logits"), "reply: {reply}");
+        let reply = roundtrip(front.addr(), r#"{"cmd": "status"}"#);
+        let parsed = Json::parse(reply.trim()).unwrap();
+        let completed = parsed
+            .req("server")
+            .unwrap()
+            .req("completed")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(completed, 1, "reply: {reply}");
+        let control = parsed.req("control").unwrap();
+        assert_eq!(
+            control.req("variants").unwrap().as_arr().unwrap()[0].as_str().unwrap(),
+            "zoo"
+        );
+        // Unknown cmds get an error line, not a hang.
+        let reply = roundtrip(front.addr(), r#"{"cmd": "reboot"}"#);
+        assert!(reply.contains("error"), "reply: {reply}");
+    }
+
+    #[test]
+    fn status_without_source_omits_control() {
+        let (front, _server) = start();
+        let reply = roundtrip(front.addr(), r#"{"cmd": "status"}"#);
+        let parsed = Json::parse(reply.trim()).unwrap();
+        assert!(parsed.get("server").is_some(), "reply: {reply}");
+        assert!(parsed.get("control").is_none(), "reply: {reply}");
     }
 
     #[test]

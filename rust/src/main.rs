@@ -46,6 +46,7 @@ subcommands:
   merge       merge under a (method, scheme) and evaluate
   eval        evaluate Individual (single-task) models under a scheme
   serve       boot the serving coordinator and run a load demo
+              (subactions: `serve status`, `serve variants`)
   registry    pack / inspect / verify packed .qtvc registries
   experiment  regenerate a paper table/figure by id (tab1, fig4, ...)
   bench       gate bench JSON reports (ci.sh bench-diff stage)
@@ -205,7 +206,23 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
+    // Control-plane subactions ride under `serve`; anything else is the
+    // classic load demo.
+    match argv.first().map(String::as_str) {
+        Some("status") => return cmd_serve_status(&argv[1..]),
+        Some("variants") => return cmd_serve_variants(&argv[1..]),
+        _ => {}
+    }
     let cmd = zoo_args(Command::new("tvq serve", "serving-coordinator load demo"))
+        .long_about(
+            "Subactions:
+  tvq serve status   --addr <host:port>   query a running front-end's
+                                          {\"cmd\": \"status\"} control API
+  tvq serve variants <registry.qtvc> ...  offline control-plane demo:
+                                          load/serve/drain a variant
+
+Without a subaction, boots the in-process serving demo described below.",
+        )
         .opt("scheme", "tvq3", "quantization scheme")
         .opt("method", "task_arithmetic", "merging method")
         .opt("requests", "256", "total requests to issue")
@@ -231,6 +248,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_delay: std::time::Duration::from_millis(args.get_u64("max-delay-ms")?),
         queue_cap: 4096,
         executors: args.get_usize("executors")?,
+        ..Default::default()
     };
     let server = std::sync::Arc::new(Server::start(cfg, model)?);
     let n_req = args.get_usize("requests")?;
@@ -306,6 +324,124 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_status(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tvq serve status", "query a running front-end's control API")
+        .long_about(
+            "Connects to a TCP front-end (e.g. one started with
+`tvq serve --tcp 127.0.0.1:7070`), sends {\"cmd\": \"status\"} and prints
+the JSON reply: server metrics, plus per-variant control-plane state
+when the front-end was bound with one.",
+        )
+        .req("addr", "front-end address (host:port)");
+    let args = cmd.parse(argv)?;
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get_str("addr")?;
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+    writeln!(stream, r#"{{"cmd": "status"}}"#)?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    let parsed = tvq::util::json::Json::parse(reply.trim())
+        .map_err(|e| anyhow!("malformed status reply {reply:?}: {e}"))?;
+    if let Some(err) = parsed.get("error") {
+        bail!("front-end returned an error: {}", err.as_str().unwrap_or("?"));
+    }
+    println!("{}", parsed.to_string_compact());
+    Ok(())
+}
+
+fn cmd_serve_variants(argv: &[String]) -> Result<()> {
+    use tvq::coordinator::control::{ControlPlane, VariantConfig, VariantState};
+    use tvq::coordinator::ModelCache;
+
+    let cmd = Command::new(
+        "tvq serve variants",
+        "offline control-plane demo: load, serve, hot-swap-ready drain",
+    )
+    .long_about(
+        "Loads a packed .qtvc registry as a lifecycle-managed variant, runs a
+burst of task-vector reconstructions through its bounded admission
+queue, prints per-variant status (as `tvq serve status` would report
+it), then drains gracefully and awaits Terminated.
+
+example:
+  tvq registry pack --synthetic --out zoo.qtvc --scheme tvq4
+  tvq serve variants zoo.qtvc --requests 64",
+    )
+    .positional_help("<registry.qtvc>  packed registry to serve")
+    .opt("requests", "32", "task-vector reconstructions to submit")
+    .opt("budget-mb", "0", "node byte budget in MiB (0 = unbounded)")
+    .opt("queue-cap", "256", "bounded admission-queue depth")
+    .opt("drain-deadline-ms", "500", "graceful-drain deadline (ms)")
+    .opt(
+        "threads",
+        "0",
+        "decode worker threads (0 = auto: TVQ_THREADS, else all cores; 1 = sequential)",
+    );
+    let args = cmd.parse(argv)?;
+    init_threads(&args)?;
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: tvq serve variants <registry.qtvc> [options]"))?;
+
+    let budget_mb = args.get_usize("budget-mb")?;
+    let cache = std::sync::Arc::new(if budget_mb > 0 {
+        ModelCache::with_byte_cap(budget_mb << 20)
+    } else {
+        ModelCache::new()
+    });
+    let plane = ControlPlane::new(cache);
+    let cfg = VariantConfig {
+        queue_cap: args.get_usize("queue-cap")?.max(1),
+        drain_deadline: std::time::Duration::from_millis(args.get_u64("drain-deadline-ms")?),
+        est_model_bytes: 0,
+    };
+    let variant = plane
+        .load_variant("zoo", std::path::Path::new(&path), &cfg)
+        .map_err(|e| anyhow!("{e}"))?;
+    let n_tasks = variant.registry().pin().registry().n_tasks().max(1);
+    println!(
+        "variant \"zoo\" ready: {} tasks, generation {}",
+        n_tasks,
+        variant.registry().generation()
+    );
+
+    let n_req = args.get_usize("requests")?;
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..n_req {
+        match variant.submit_task_vector(i % n_tasks) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => {
+                rejected += 1;
+                eprintln!("request {i} rejected: {e}");
+            }
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(e)) => eprintln!("job failed: {e}"),
+            Err(_) => eprintln!("worker dropped a response"),
+        }
+    }
+    println!("completed {ok}/{n_req} reconstructions ({rejected} rejected at admission)");
+    print!("{}", plane.status().summary());
+
+    plane.drain_variant("zoo", None).map_err(|e| anyhow!("{e}"))?;
+    let deadline = std::time::Duration::from_millis(args.get_u64("drain-deadline-ms")?)
+        + std::time::Duration::from_secs(5);
+    if !variant.await_state(&VariantState::Terminated, deadline) {
+        bail!("variant did not reach Terminated within {deadline:?}");
+    }
+    println!("drained; final status:");
+    print!("{}", plane.status().summary());
+    Ok(())
+}
+
 fn registry_usage() -> String {
     "tvq registry — pack / inspect / verify packed .qtvc registries
 
@@ -314,6 +450,9 @@ usage:
                     [--group 512] [--synthetic] [--preset .. --tasks .. --steps ..]
   tvq registry inspect <file>
   tvq registry verify <file>
+
+`verify` refuses mid-swap artifacts (`*.tmp`, `*.next`) with a non-zero
+exit: validate the serving path, not a file a rename is about to consume.
 
 `pack --budget` invokes the sensitivity-driven pack planner: the budget
 is total file bytes, either a number (`1500000`) or a uniform scheme
@@ -457,7 +596,8 @@ metadata-free ideal.
 example:
   tvq registry pack --synthetic --budget rtvq3o2 --out zoo.qtvc
   tvq registry inspect zoo.qtvc",
-        );
+        )
+        .positional_help("<registry.qtvc>  packed registry to inspect");
     let path = registry_path_arg(cmd, argv, "inspect")?;
     let reg = Registry::open(&path)?;
     println!(
@@ -541,11 +681,23 @@ coverage (planned files), then every task's payload sections — each
 read CRC-checked and round-tripped through dequantization.  Any
 corruption (flipped byte, truncated bitmask, survivor-count mismatch,
 missing section) fails with a pointed error and a non-zero exit.
+Mid-swap artifacts (`.tmp` writer staging, `.next` staged generations)
+are refused outright — their identity is about to change under a rename.
 
 example:
   tvq registry verify zoo.qtvc && echo servable",
-        );
+        )
+        .positional_help("<registry.qtvc>  packed registry to verify");
     let path = registry_path_arg(cmd, argv, "verify")?;
+    if tvq::coordinator::control::is_swap_artifact(std::path::Path::new(&path)) {
+        bail!(
+            "{path} is a swap artifact, not a servable registry: `.tmp` is the \
+             writer's interrupted atomic-write staging file and `.next` is a \
+             staged next generation awaiting publish. Verify the serving path \
+             instead, or publish the stage first (rename it over the serving \
+             path); see docs/WIRE_FORMAT.md §7."
+        );
+    }
     // Open validates the header, offset table, index CRC and (for
     // planned files) the plan section + section coverage.
     let reg = Registry::open(&path)?;

@@ -241,6 +241,10 @@ pub struct Registry {
     /// Dequantized per-tensor bases, decoded at most once.
     planned_base_cache: OnceLock<Vec<Option<Vec<f32>>>>,
     io: SectionIo,
+    /// The [`IoMode`] the caller asked for (before fallbacks), so
+    /// [`Registry::reopen`] can re-evaluate the same request against a
+    /// replaced file.
+    requested_io: IoMode,
     index_bytes: u64,
     file_bytes: u64,
 }
@@ -473,6 +477,7 @@ impl Registry {
             planned_bases,
             planned_base_cache: OnceLock::new(),
             io,
+            requested_io: mode,
             index_bytes: index_end,
             file_bytes,
         })
@@ -493,6 +498,21 @@ impl Registry {
     /// this reports where the fallback landed.
     pub fn io_mode(&self) -> IoMode {
         self.io.mode()
+    }
+
+    /// The [`IoMode`] originally requested at open, before any fallback.
+    pub fn requested_io_mode(&self) -> IoMode {
+        self.requested_io
+    }
+
+    /// Open the same path again at the originally requested [`IoMode`],
+    /// re-evaluating fallbacks for whatever file now lives there.  This
+    /// is the generation-aware reload primitive: after an atomic
+    /// rename-swap the existing `Registry` keeps serving the old inode
+    /// through its mapping/handle, and `reopen` picks up the new file
+    /// under the same name (see `coordinator::control::generation`).
+    pub fn reopen(&self) -> Result<Registry> {
+        Self::open_with_io(&self.path, self.requested_io)
     }
 
     /// Bytes served through the file mapping: the whole file in `Mmap`

@@ -59,17 +59,26 @@ pub struct Command {
     /// Extended description printed by `--help` between the one-line
     /// about and the option list (clap's `long_about`).
     pub long_about: Option<&'static str>,
+    /// One-line description of the positional arguments (printed in
+    /// usage above the options; positionals are collected untyped).
+    pub positional_help: Option<&'static str>,
     opts: Vec<OptSpec>,
 }
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {
-        Self { name, about, long_about: None, opts: Vec::new() }
+        Self { name, about, long_about: None, positional_help: None, opts: Vec::new() }
     }
 
     /// Attach the extended `--help` text (examples, semantics, caveats).
     pub fn long_about(mut self, text: &'static str) -> Self {
         self.long_about = Some(text);
+        self
+    }
+
+    /// Describe the positional arguments (e.g. `"<registry.qtvc>"`).
+    pub fn positional_help(mut self, text: &'static str) -> Self {
+        self.positional_help = Some(text);
         self
     }
 
@@ -93,6 +102,9 @@ impl Command {
         if let Some(long) = self.long_about {
             s.push_str(long.trim_end());
             s.push_str("\n\n");
+        }
+        if let Some(pos) = self.positional_help {
+            s.push_str(&format!("arguments:\n  {pos}\n\n"));
         }
         s.push_str("options:\n");
         for o in &self.opts {
@@ -198,6 +210,15 @@ mod tests {
         assert!(u.contains("options:"));
         // Without long_about, usage is unchanged in shape.
         assert!(!Command::new("t", "test").usage().contains("extended"));
+    }
+
+    #[test]
+    fn positional_help_appears_in_usage() {
+        let cmd = Command::new("t", "test").positional_help("<registry.qtvc>  packed registry");
+        let u = cmd.usage();
+        assert!(u.contains("arguments:"));
+        assert!(u.contains("<registry.qtvc>"));
+        assert!(!Command::new("t", "test").usage().contains("arguments:"));
     }
 
     #[test]

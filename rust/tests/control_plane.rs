@@ -1,0 +1,260 @@
+//! Control-plane suite (ISSUE 6 acceptance): zero-downtime hot-swap and
+//! graceful drain.
+//!
+//! * Publishing generation G+1 while readers hammer the variant never
+//!   fails an in-flight G request: every concurrent result is bit-exact
+//!   against the G *or* G+1 baseline (no torn reads), every post-publish
+//!   request serves G+1 exactly, and the superseded mapping unmaps only
+//!   after its last reader drops (refcount-zero unmap).
+//! * Decodes through the control plane are bit-identical at every thread
+//!   count — the PR-5 determinism contract extends through the swap.
+//! * A `Draining` variant completes already-admitted work, then rejects
+//!   new admissions with a typed error; an expired drain deadline
+//!   flushes the still-queued remainder with
+//!   [`ControlError::DrainDeadlineExpired`].
+//!
+//! `TVQ_SMOKE=1` shrinks the reader load, not the assertions.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tvq::checkpoint::Checkpoint;
+use tvq::coordinator::control::{ControlError, ControlPlane, VariantConfig, VariantState};
+use tvq::coordinator::ModelCache;
+use tvq::exp::planner::synthetic_planner_zoo;
+use tvq::quant::QuantScheme;
+use tvq::registry::{build_registry, Registry};
+use tvq::util::pool::Pool;
+
+/// Thread counts per the PR-5 determinism contract: sequential
+/// reference, small, and more workers than work items.
+const THREADS: [usize; 3] = [1, 2, 8];
+const N_TASKS: usize = 3;
+
+fn smoke() -> bool {
+    std::env::var_os("TVQ_SMOKE").is_some()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tvq-ctl-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Pack a synthetic zoo at `dir/name` and return (path, per-task decoded
+/// baselines).  Baselines are decoded sequentially from a throwaway
+/// open, so they are independent of anything the control plane does.
+fn pack(dir: &Path, name: &str, seed: u64) -> (PathBuf, Vec<Checkpoint>) {
+    let (pre, fts) = synthetic_planner_zoo(N_TASKS, seed);
+    let path = dir.join(name);
+    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+    let reg = Registry::open(&path).unwrap();
+    let baselines = (0..N_TASKS).map(|t| reg.load_task_vector(t).unwrap()).collect();
+    (path, baselines)
+}
+
+/// Submit task `t` decoding through an explicit pool width and block for
+/// the result (the PR-5 contract: width never changes bits).
+fn decode_with_width(
+    variant: &tvq::coordinator::Variant,
+    t: usize,
+    threads: usize,
+) -> Checkpoint {
+    let rx = variant
+        .submit(move |generation| {
+            generation
+                .registry()
+                .load_task_vector_with_pool(t, &Pool::new(threads))
+                .map_err(|e| ControlError::JobFailed { error: format!("{e:#}") })
+        })
+        .unwrap();
+    rx.recv().unwrap().unwrap()
+}
+
+#[test]
+fn hot_swap_under_load_is_bit_exact_and_unmaps_on_last_pin() {
+    let dir = tmpdir("swap");
+    let (path, base_a) = pack(&dir, "zoo.qtvc", 11);
+    // Stage generation 2 directly at the publish path (`<path>.next`);
+    // its baselines are decoded before the swap and outlive the rename.
+    let (_staged, base_b) = pack(&dir, "zoo.qtvc.next", 22);
+
+    let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+    let cfg = VariantConfig { queue_cap: 4096, ..VariantConfig::default() };
+    let variant = plane.load_variant("zoo", &path, &cfg).unwrap();
+
+    // Pre-swap: generation 1 decodes bit-exactly at every pool width.
+    for &threads in &THREADS {
+        for t in 0..N_TASKS {
+            assert_eq!(
+                decode_with_width(&variant, t, threads),
+                base_a[t],
+                "gen 1 decode diverged at {threads} threads, task {t}"
+            );
+        }
+    }
+
+    // Readers hammer the variant while the main thread publishes G+1.
+    let n_readers = if smoke() { 2 } else { 4 };
+    let iters = if smoke() { 8 } else { 40 };
+    let readers: Vec<_> = (0..n_readers)
+        .map(|r| {
+            let variant = variant.clone();
+            std::thread::spawn(move || {
+                let mut out: Vec<(usize, Checkpoint)> = Vec::with_capacity(iters);
+                for i in 0..iters {
+                    let t = (r + i) % N_TASKS;
+                    let rx = variant.submit_task_vector(t).unwrap();
+                    out.push((t, rx.recv().unwrap().unwrap()));
+                }
+                out
+            })
+        })
+        .collect();
+
+    // Let the readers get in flight, then swap under them.
+    std::thread::sleep(Duration::from_millis(10));
+    let generation = plane.publish_staged("zoo").unwrap();
+    assert_eq!(generation, 2);
+    assert_eq!(variant.registry().generation(), 2);
+    assert_eq!(variant.metrics().generation.load(std::sync::atomic::Ordering::Relaxed), 2);
+
+    // Every concurrent result is bit-exact against one generation's
+    // baseline — a torn read would match neither.
+    for handle in readers {
+        for (t, got) in handle.join().unwrap() {
+            assert!(
+                got == base_a[t] || got == base_b[t],
+                "concurrent decode of task {t} matches neither generation bit-exactly"
+            );
+        }
+    }
+
+    // Post-publish, every request serves generation 2 — at every width.
+    for &threads in &THREADS {
+        for t in 0..N_TASKS {
+            assert_eq!(
+                decode_with_width(&variant, t, threads),
+                base_b[t],
+                "gen 2 decode diverged at {threads} threads, task {t}"
+            );
+        }
+    }
+
+    // With the last generation-1 pin dropped (all jobs completed above),
+    // the old mapping is gone: only generation 2 stays live.  Poll
+    // briefly — the worker drops the final pin just after replying.
+    let t0 = Instant::now();
+    while variant.registry().live_generations() != vec![2] {
+        assert!(t0.elapsed() < Duration::from_secs(10), "generation 1 never unmapped");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    drop(variant);
+    plane.drain_variant("zoo", Some(Duration::from_secs(10))).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drain_completes_admitted_work_then_rejects_new_admissions() {
+    let dir = tmpdir("drain-clean");
+    let (path, baselines) = pack(&dir, "zoo.qtvc", 5);
+    let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+    let variant = plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap();
+
+    // Queue a burst, then drain with a generous deadline: everything
+    // already admitted completes (bit-exactly), nothing is flushed.
+    let n_jobs = if smoke() { 4 } else { 16 };
+    let receivers: Vec<_> =
+        (0..n_jobs).map(|i| variant.submit_task_vector(i % N_TASKS).unwrap()).collect();
+    plane.drain_variant("zoo", Some(Duration::from_secs(30))).unwrap();
+    assert!(matches!(variant.state(), VariantState::Draining | VariantState::Terminated));
+
+    // New admissions are rejected with the typed error immediately.
+    let err = variant.submit_task_vector(0).unwrap_err();
+    assert!(
+        matches!(err, ControlError::VariantUnavailable { .. }),
+        "draining variant accepted new work: {err}"
+    );
+
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got, baselines[i % N_TASKS], "queued job {i} corrupted by drain");
+    }
+    assert!(variant.await_state(&VariantState::Terminated, Duration::from_secs(10)));
+
+    let m = variant.metrics().snapshot();
+    assert_eq!(m.completed, n_jobs as u64);
+    assert_eq!(m.drained, 0, "a clean drain flushed jobs it had time to run");
+    assert_eq!(m.queue_depth, 0);
+
+    // A terminated variant can be removed; the slot disappears.
+    plane.remove_variant("zoo").unwrap();
+    assert!(plane.get("zoo").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drain_deadline_expiry_flushes_queue_with_typed_errors() {
+    let dir = tmpdir("drain-expire");
+    let (path, _) = pack(&dir, "zoo.qtvc", 9);
+    let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+    let variant = plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap();
+
+    // Job 1 parks the worker on a gate until the test releases it; the
+    // `started` signal guarantees it is in flight (not merely queued)
+    // before anything else happens.
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let blocker = variant
+        .submit(move |_generation| {
+            started_tx.send(()).unwrap();
+            gate_rx.recv().ok();
+            Ok(())
+        })
+        .unwrap();
+    started_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+
+    // Queue more work behind the parked job, then drain with a deadline
+    // far shorter than the park.
+    let n_queued = if smoke() { 3 } else { 8 };
+    let queued: Vec<_> =
+        (0..n_queued).map(|i| variant.submit_task_vector(i % N_TASKS).unwrap()).collect();
+    plane.drain_variant("zoo", Some(Duration::from_millis(50))).unwrap();
+
+    // Let the deadline lapse while the worker is still parked, then
+    // release it.  The in-flight job completes normally; the queued
+    // remainder is flushed with the typed error.
+    std::thread::sleep(Duration::from_millis(120));
+    gate_tx.send(()).unwrap();
+
+    assert!(blocker.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+    for (i, rx) in queued.into_iter().enumerate() {
+        let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        match got {
+            Err(ControlError::DrainDeadlineExpired { ref variant }) => {
+                assert_eq!(variant, "zoo");
+            }
+            other => panic!("queued job {i} was not flushed with the typed error: {other:?}"),
+        }
+    }
+    assert!(variant.await_state(&VariantState::Terminated, Duration::from_secs(10)));
+
+    let m = variant.metrics().snapshot();
+    assert_eq!(m.completed, 1, "only the parked job had time to run");
+    assert_eq!(m.drained, n_queued as u64);
+    assert_eq!(m.queue_depth, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn swap_artifacts_are_refused_by_registry_open_guard() {
+    // `is_swap_artifact` is what `tvq registry verify` consults before
+    // opening; pin the contract here where the CLI behavior is specified.
+    use tvq::coordinator::control::is_swap_artifact;
+    assert!(is_swap_artifact(Path::new("/srv/zoo.qtvc.next")));
+    assert!(is_swap_artifact(Path::new("/srv/zoo.tmp")));
+    assert!(!is_swap_artifact(Path::new("/srv/zoo.qtvc")));
+}

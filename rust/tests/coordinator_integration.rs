@@ -124,6 +124,7 @@ fn concurrent_mixed_task_load_is_correct_and_batched() -> Result<()> {
         max_delay: Duration::from_millis(4),
         queue_cap: 4096,
         executors: 2,
+        ..Default::default()
     };
     let server = Arc::new(Server::start(cfg, model.clone())?);
     let model = Arc::new(model);
