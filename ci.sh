@@ -12,6 +12,9 @@
 #   test        cargo test -q
 #   control     control-plane suite (hot-swap/drain) at smoke scale
 #               (TVQ_SMOKE=1 cargo test --test control_plane)
+#   obs         observability suite: lock-free histograms, watch
+#               streaming, trace export
+#               (TVQ_SMOKE=1 cargo test --test obs_integration)
 #   example     packed_registry example end-to-end
 #   tabP        planner experiment smoke (TVQ_SMOKE=1)
 #   bench-diff  perf_registry bench -> BENCH_registry.json -> tvq bench diff
@@ -33,8 +36,8 @@ cd "$(dirname "$0")"
 CARGO_FLAGS=(--offline)
 BENCH_TOLERANCE="${TVQ_BENCH_TOLERANCE:-0.20}"
 
-STAGE_NAMES=(preflight build test control example tabP bench-diff doc fmt clippy)
-QUICK_STAGES=(preflight build test control)
+STAGE_NAMES=(preflight build test control obs example tabP bench-diff doc fmt clippy)
+QUICK_STAGES=(preflight build test control obs)
 
 declare -a RAN_STAGES=()
 declare -a RAN_TIMES=()
@@ -69,6 +72,13 @@ stage_control() {
     # named stage re-runs it at smoke scale so `--stage control` gives a
     # fast, isolated signal on the hot-swap/drain machinery.
     TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test control_plane
+}
+
+stage_obs() {
+    # Same pattern as `control`: the full `test` stage runs this suite
+    # too; the named stage gives an isolated signal on the histogram /
+    # watch-stream / trace-export acceptance criteria.
+    TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test obs_integration
 }
 
 stage_example() {

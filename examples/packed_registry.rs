@@ -9,6 +9,10 @@
 //! the merge request names.
 //!
 //! Run: `cargo run --release --example packed_registry`
+//!
+//! With `TVQ_TRACE=/tmp/trace.json` set, the run records spans across
+//! the registry / merge / cache / control layers and exports a Chrome
+//! trace-event file at exit (open in chrome://tracing or Perfetto).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -72,6 +76,9 @@ impl tvq::coordinator::server::Backend for ChecksumBackend {
 }
 
 fn main() -> Result<()> {
+    // Span tracing: honour TVQ_TRACE=<out.json> (the `tvq` binary's
+    // global `--trace` flag is the CLI equivalent).
+    let trace_out = tvq::obs::trace::init_from_env();
     let (pre, fts) = synth_zoo(0x9E61);
     let dir = std::env::temp_dir().join("tvq_packed_registry_demo");
     std::fs::remove_dir_all(&dir).ok();
@@ -194,6 +201,35 @@ fn main() -> Result<()> {
         m.completed as f64 / dt
     );
     println!("scheme served: {}", source.scheme_label());
+
+    // -- 6. control plane: lifecycle-managed variant over the same file ----
+    // (Also gives a TVQ_TRACE run its control-category spans: admit,
+    // service, drain.)
+    use tvq::coordinator::control::{ControlPlane, VariantConfig, VariantState};
+    let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+    let variant = plane
+        .load_variant("demo", &tvq_path, &VariantConfig::default())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rx = variant.submit_task_vector(1).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let tau = rx.recv()??;
+    plane.drain_variant("demo", None).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        variant.await_state(&VariantState::Terminated, std::time::Duration::from_secs(10)),
+        "variant did not terminate"
+    );
+    println!(
+        "control plane: variant admitted, reconstructed task01 ({} params), drained cleanly",
+        tau.numel()
+    );
+
     std::fs::remove_dir_all(&dir).ok();
+    if let Some(path) = trace_out {
+        tvq::obs::trace::flush_env()?;
+        println!(
+            "trace: wrote {} spans to {path} ({} dropped by ring caps)",
+            tvq::obs::trace::events().len(),
+            tvq::obs::trace::dropped()
+        );
+    }
     Ok(())
 }

@@ -49,6 +49,7 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use crate::checkpoint::Checkpoint;
 use crate::merge::{MergedModel, Merger};
+use crate::obs;
 use crate::registry::{merge_from_source_with_pool, TaskVectorSource};
 use crate::util::pool::Pool;
 
@@ -171,6 +172,7 @@ impl ModelCache {
         state.tick += 1;
         let tick = state.tick;
         state.entries.get_mut(key).map(|e| {
+            let _s = obs::span(obs::Category::Cache, "hit");
             e.last_used = tick;
             e.model.clone()
         })
@@ -211,6 +213,7 @@ impl ModelCache {
                 .map(|(k, _)| k.clone());
             match victim {
                 Some(k) => {
+                    let _s = obs::span(obs::Category::Cache, "evict");
                     state.entries.remove(&k);
                     state.evictions += 1;
                 }
@@ -283,7 +286,9 @@ impl ModelCache {
                 }
                 None => {
                     let mut guard = TicketGuard { cache: self, key: key.clone(), est_bytes };
+                    let build_span = obs::span(obs::Category::Cache, "build");
                     let built = (build.take().expect("a caller leads at most once"))()?;
+                    drop(build_span);
                     let arc = Arc::new(built);
                     self.publish(&key, arc.clone(), est_bytes);
                     // publish released the reservation; the guard must

@@ -37,6 +37,7 @@ use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs;
 use crate::registry::{IoMode, PackedRegistrySource, Registry};
 
 /// Suffix of the staged next-generation file: publishing renames
@@ -169,6 +170,7 @@ impl GenerationalRegistry {
     /// be atomic).
     pub fn publish_file(&self, staged: &Path) -> Result<u64> {
         let _publishing = self.publish_lock.lock().unwrap();
+        let _span = obs::span(obs::Category::Control, "publish");
         // Validate before touching the serving path: a corrupt stage must
         // never replace a healthy registry.  Reopen mode avoids holding a
         // second mapping of a file we are about to rename.
@@ -198,6 +200,7 @@ impl GenerationalRegistry {
     /// Open the serving path at the originally *requested* I/O mode and
     /// make it current.  Caller holds `publish_lock`.
     fn install_next(&self) -> Result<u64> {
+        let _span = obs::span(obs::Category::Control, "install_generation");
         let next = {
             let current = self.current.lock().unwrap();
             // Generation-aware reopen: same path, same requested mode,

@@ -21,6 +21,7 @@ use std::time::Duration;
 use crate::coordinator::cache::ModelCache;
 use crate::coordinator::metrics::{VariantMetrics, VariantMetricsSnapshot};
 use crate::coordinator::tcp::StatusSource;
+use crate::obs;
 use crate::util::json::Json;
 
 use super::generation::GenerationalRegistry;
@@ -102,6 +103,7 @@ impl ControlPlane {
         path: &Path,
         cfg: &VariantConfig,
     ) -> Result<Arc<Variant>, ControlError> {
+        let _span = obs::span(obs::Category::Control, "load_variant");
         let registry = GenerationalRegistry::open(path).map_err(|e| ControlError::LoadFailed {
             variant: name.to_string(),
             error: format!("{e:#}"),
@@ -163,6 +165,8 @@ impl ControlPlane {
     }
 
     fn note_new_generation(&self, variant: &Variant, generation: u64) {
+        let _span =
+            obs::span(obs::Category::Control, "generation_swap").with_arg("generation", generation);
         variant.metrics().generation.store(generation, Ordering::Relaxed);
         // Same source id (same path + scheme): refreshes the cache's
         // footprint entry to the new generation's overhead.
@@ -263,6 +267,49 @@ impl StatusSource for ControlPlane {
     fn status_json(&self) -> Json {
         self.status().to_json()
     }
+
+    /// Per-variant Prometheus families, labelled `variant="<name>"`.
+    fn prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write;
+        let status = self.status();
+        let mut family = |name: &str, ty: &str, get: &dyn Fn(&VariantStatus) -> f64| {
+            let _ = writeln!(out, "# TYPE tvq_variant_{name} {ty}");
+            for v in &status.variants {
+                let _ = writeln!(out, "tvq_variant_{name}{{variant=\"{}\"}} {}", v.name, get(v));
+            }
+        };
+        family("admitted_total", "counter", &|v| v.metrics.admitted as f64);
+        family("rejected_total", "counter", &|v| v.metrics.rejected as f64);
+        family("completed_total", "counter", &|v| v.metrics.completed as f64);
+        family("drained_total", "counter", &|v| v.metrics.drained as f64);
+        family("queue_depth", "gauge", &|v| v.metrics.queue_depth as f64);
+        family("generation", "gauge", &|v| v.generation as f64);
+        let _ = writeln!(out, "# TYPE tvq_variant_service_seconds summary");
+        for v in &status.variants {
+            let s = &v.metrics.service;
+            for (q, ns) in [(0.5, s.p50), (0.9, s.p90), (0.99, s.p99)] {
+                let _ = writeln!(
+                    out,
+                    "tvq_variant_service_seconds{{variant=\"{}\",quantile=\"{q}\"}} {}",
+                    v.name,
+                    ns as f64 / 1e9
+                );
+            }
+            let _ = writeln!(
+                out,
+                "tvq_variant_service_seconds_count{{variant=\"{}\"}} {}",
+                v.name, s.count
+            );
+            let _ = writeln!(
+                out,
+                "tvq_variant_service_seconds_sum{{variant=\"{}\"}} {}",
+                v.name,
+                s.sum as f64 / 1e9
+            );
+        }
+        let _ = writeln!(out, "# TYPE tvq_node_resident_bytes gauge");
+        let _ = writeln!(out, "tvq_node_resident_bytes {}", status.resident_bytes);
+    }
 }
 
 /// One variant's row in a [`PlaneStatus`].
@@ -300,6 +347,9 @@ impl VariantStatus {
             ("completed", Json::num(self.metrics.completed as f64)),
             ("drained", Json::num(self.metrics.drained as f64)),
             ("queue_depth", Json::num(self.metrics.queue_depth as f64)),
+            // Per-variant service-time histogram (µs), quantiles bounded
+            // by the log2-bucket relative error (see `obs::hist`).
+            ("service_us", self.metrics.service.to_json_scaled(1e3)),
         ];
         if let Some(error) = &self.error {
             fields.push(("error", Json::str(error)));

@@ -37,6 +37,7 @@ use super::generation::{Generation, GenerationalRegistry};
 use super::ControlError;
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::metrics::VariantMetrics;
+use crate::obs;
 use crate::util::pool::Pool;
 
 /// Lifecycle states of a variant.  `Failed` retains the load error so
@@ -198,6 +199,7 @@ impl Variant {
     where
         F: FnOnce(Result<&Generation, ControlError>) + Send + 'static,
     {
+        let _span = obs::span(obs::Category::Control, "admit");
         let ctl = self.inner.ctl.lock().unwrap();
         match &ctl.state {
             VariantState::Ready => {}
@@ -278,6 +280,7 @@ impl Variant {
     /// variant reaches `Terminated` either way; errors if it is not
     /// currently `Ready`.
     pub fn drain(&self, deadline: Duration) -> Result<(), ControlError> {
+        let _span = obs::span(obs::Category::Control, "drain");
         // The worker reads the deadline between jobs; publish it before
         // the closed channel becomes observable.
         *self.inner.drain_deadline_at.lock().unwrap() = Some(Instant::now() + deadline);
@@ -348,7 +351,11 @@ fn worker_loop(inner: Arc<Inner>, rx: Receiver<Job>) {
             Ok(job) => {
                 inner.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 let Job { pinned, run } = job;
+                let span = obs::span(obs::Category::Control, "service");
+                let t0 = Instant::now();
                 run(Ok(&pinned));
+                inner.metrics.service.record_ns(t0.elapsed());
+                drop(span);
                 inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
                 // The in-flight pin releases only after the job ran.
                 drop(pinned);

@@ -1,11 +1,21 @@
-//! Serving metrics: lock-free counters plus a bounded latency reservoir.
+//! Serving metrics: lock-free counters and histograms.
+//!
+//! Every record path — request latency, queue wait, merge builds,
+//! per-variant service time — is relaxed atomics only ([`Histogram`]
+//! buckets + counters).  The previous design funneled latencies
+//! through a `Mutex<Vec<f64>>` reservoir indexed by the independently
+//! incremented `completed` counter, so concurrent recorders clobbered
+//! arbitrary slots and `reset_window` desynced the cursor; the
+//! histogram migration removed the reservoir (and its `LATENCY_CAP`)
+//! entirely.  `concurrent_latency_recording_is_exact` pins the
+//! removal: N recorders on M threads must yield exactly N samples.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::obs::hist::{Histogram, HistogramSummary};
 use crate::util::json::Json;
-use crate::util::stats;
+use crate::util::pool::Pool;
 
 /// Shared metrics registry (one per [`Server`](super::Server)).
 #[derive(Debug, Default)]
@@ -24,27 +34,28 @@ pub struct Metrics {
     /// the pool-side decode/quantize time summed across threads, so
     /// `busy / wall` is the realized parallel speedup.
     merge_build_busy_us: AtomicU64,
-    /// End-to-end latencies (submit -> response), bounded reservoir.
-    latencies_us: Mutex<Vec<f64>>,
+    /// End-to-end latency (submit -> response), nanoseconds.
+    pub latency: Histogram,
+    /// Queue wait (submit -> executor pickup), nanoseconds.
+    pub queue_wait: Histogram,
+    /// Per-build merge wall time, nanoseconds.
+    pub merge_build: Histogram,
 }
-
-/// Cap on retained latency samples (reservoir keeps the newest).
-const LATENCY_CAP: usize = 65_536;
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one end-to-end request latency.  Lock-free (histogram
+    /// atomics only) — safe to call from any number of executors.
     pub fn record_latency(&self, d: Duration) {
-        let mut v = self.latencies_us.lock().unwrap();
-        if v.len() >= LATENCY_CAP {
-            // Overwrite cyclically: cheap, keeps recent behaviour visible.
-            let i = self.completed.load(Ordering::Relaxed) as usize % LATENCY_CAP;
-            v[i] = d.as_secs_f64() * 1e6;
-        } else {
-            v.push(d.as_secs_f64() * 1e6);
-        }
+        self.latency.record_ns(d);
+    }
+
+    /// Record one request's queue wait (submit -> executor pickup).
+    pub fn record_queue_wait(&self, d: Duration) {
+        self.queue_wait.record_ns(d);
     }
 
     pub fn record_batch(&self, items: usize) {
@@ -62,32 +73,31 @@ impl Metrics {
             .fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
         self.merge_build_busy_us
             .fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
+        self.merge_build.record_ns(wall);
     }
 
-    /// Clear latency samples and batch counters (post-warmup reset so
-    /// percentiles reflect steady state); monotone counters are kept.
+    /// Clear latency/queue-wait histograms and batch counters
+    /// (post-warmup reset so percentiles reflect steady state);
+    /// monotone counters and merge-build totals are kept.
     pub fn reset_window(&self) {
-        self.latencies_us.lock().unwrap().clear();
+        self.latency.reset();
+        self.queue_wait.reset();
         self.batches.store(0, Ordering::Relaxed);
         self.batch_items.store(0, Ordering::Relaxed);
     }
 
-    /// Consistent point-in-time view.
+    /// Consistent point-in-time view.  Pool-busy spread is sampled
+    /// from [`Pool::global`] (the hot paths' shared pool).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies_us.lock().unwrap();
-        let (p50, p99, mean) = if lat.is_empty() {
-            (0.0, 0.0, 0.0)
-        } else {
-            (
-                stats::percentile(&lat, 50.0),
-                stats::percentile(&lat, 99.0),
-                stats::mean(&lat),
-            )
-        };
+        let lat = self.latency.summary();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
         let wall_us = self.merge_build_wall_us.load(Ordering::Relaxed);
         let busy_us = self.merge_build_busy_us.load(Ordering::Relaxed);
+        let worker_busy = Pool::global().worker_busy_ns();
+        let (bmin, bmax, bsum) = worker_busy.iter().fold((u64::MAX, 0u64, 0u64), |(lo, hi, s), &b| {
+            (lo.min(b), hi.max(b), s + b)
+        });
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -99,12 +109,25 @@ impl Metrics {
             } else {
                 0.0
             },
-            latency_mean_us: mean,
-            latency_p50_us: p50,
-            latency_p99_us: p99,
+            latency_mean_us: lat.mean() / 1e3,
+            latency_p50_us: lat.p50 as f64 / 1e3,
+            latency_p90_us: lat.p90 as f64 / 1e3,
+            latency_p99_us: lat.p99 as f64 / 1e3,
+            latency_max_us: lat.max as f64 / 1e3,
+            latency_count: lat.count,
+            queue_wait: self.queue_wait.summary(),
             merge_builds: self.merge_builds.load(Ordering::Relaxed),
             merge_build_wall_ms: wall_us as f64 / 1e3,
             merge_build_busy_ms: busy_us as f64 / 1e3,
+            merge_build_hist: self.merge_build.summary(),
+            pool_workers: worker_busy.len(),
+            pool_busy_min_ms: if worker_busy.is_empty() { 0.0 } else { bmin as f64 / 1e6 },
+            pool_busy_max_ms: bmax as f64 / 1e6,
+            pool_busy_mean_ms: if worker_busy.is_empty() {
+                0.0
+            } else {
+                bsum as f64 / worker_busy.len() as f64 / 1e6
+            },
         }
     }
 }
@@ -120,12 +143,25 @@ pub struct MetricsSnapshot {
     pub mean_batch_size: f64,
     pub latency_mean_us: f64,
     pub latency_p50_us: f64,
+    pub latency_p90_us: f64,
     pub latency_p99_us: f64,
+    pub latency_max_us: f64,
+    pub latency_count: u64,
+    /// Queue-wait histogram summary, nanoseconds.
+    pub queue_wait: HistogramSummary,
     pub merge_builds: u64,
     /// Total wall-clock of merge builds, ms.
     pub merge_build_wall_ms: f64,
     /// Total worker-busy ("cpu") time of merge builds, ms.
     pub merge_build_busy_ms: f64,
+    /// Per-build wall-time histogram summary, nanoseconds.
+    pub merge_build_hist: HistogramSummary,
+    /// Global pool width and per-worker busy spread (shard-imbalance
+    /// signal: a max far above the mean means uneven shards).
+    pub pool_workers: usize,
+    pub pool_busy_min_ms: f64,
+    pub pool_busy_max_ms: f64,
+    pub pool_busy_mean_ms: f64,
 }
 
 impl MetricsSnapshot {
@@ -156,6 +192,12 @@ impl MetricsSnapshot {
             self.latency_p50_us,
             self.latency_p99_us
         );
+        if self.queue_wait.count > 0 {
+            s.push_str(&format!(
+                " | queue p50 {:.0}us",
+                self.queue_wait.p50 as f64 / 1e3
+            ));
+        }
         if self.merge_builds > 0 {
             s.push_str(&format!(
                 " | merge builds {} ({:.0} ms wall, x{:.2} parallel)",
@@ -164,15 +206,25 @@ impl MetricsSnapshot {
                 self.merge_build_speedup()
             ));
         }
+        if self.pool_busy_max_ms > 0.0 {
+            s.push_str(&format!(
+                " | {} workers busy {:.0}/{:.0}/{:.0} ms min/mean/max",
+                self.pool_workers,
+                self.pool_busy_min_ms,
+                self.pool_busy_mean_ms,
+                self.pool_busy_max_ms
+            ));
+        }
         s
     }
 }
 
 /// Per-variant serving counters for the control plane (one per
 /// [`Variant`](super::control::Variant)): admission outcomes, drain
-/// flushes, queue depth, and the registry generation gauge.  All relaxed
-/// atomics — the admission queue's send/recv pairs provide the ordering
-/// that keeps `queue_depth` consistent.
+/// flushes, queue depth, the registry generation gauge, and the
+/// service-time histogram.  All relaxed atomics — the admission
+/// queue's send/recv pairs provide the ordering that keeps
+/// `queue_depth` consistent.
 #[derive(Debug, Default)]
 pub struct VariantMetrics {
     /// Jobs accepted into the bounded admission queue.
@@ -187,6 +239,8 @@ pub struct VariantMetrics {
     pub queue_depth: AtomicU64,
     /// Current registry generation (gauge, updated on publish/reload).
     pub generation: AtomicU64,
+    /// Per-job service time in the variant worker, nanoseconds.
+    pub service: Histogram,
 }
 
 impl VariantMetrics {
@@ -198,6 +252,7 @@ impl VariantMetrics {
             drained: self.drained.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             generation: self.generation.load(Ordering::Relaxed),
+            service: self.service.summary(),
         }
     }
 }
@@ -211,10 +266,14 @@ pub struct VariantMetricsSnapshot {
     pub drained: u64,
     pub queue_depth: u64,
     pub generation: u64,
+    /// Service-time histogram summary, nanoseconds.
+    pub service: HistogramSummary,
 }
 
 impl MetricsSnapshot {
-    /// JSON rendering for the `tvq serve status` control API.
+    /// JSON rendering for the `tvq serve status` control API.  One
+    /// schema: every derived field the snapshot computes (speedup,
+    /// histogram quantiles, pool busy spread) appears here too.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("submitted", Json::num(self.submitted as f64)),
@@ -225,12 +284,105 @@ impl MetricsSnapshot {
             ("mean_batch_size", Json::num(self.mean_batch_size)),
             ("latency_mean_us", Json::num(self.latency_mean_us)),
             ("latency_p50_us", Json::num(self.latency_p50_us)),
+            ("latency_p90_us", Json::num(self.latency_p90_us)),
             ("latency_p99_us", Json::num(self.latency_p99_us)),
+            ("latency_max_us", Json::num(self.latency_max_us)),
+            ("latency_count", Json::num(self.latency_count as f64)),
+            ("queue_wait_us", self.queue_wait.to_json_scaled(1e3)),
             ("merge_builds", Json::num(self.merge_builds as f64)),
             ("merge_build_wall_ms", Json::num(self.merge_build_wall_ms)),
             ("merge_build_busy_ms", Json::num(self.merge_build_busy_ms)),
+            ("merge_build_speedup", Json::num(self.merge_build_speedup())),
+            ("merge_build_ms", self.merge_build_hist.to_json_scaled(1e6)),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("workers", Json::num(self.pool_workers as f64)),
+                    ("busy_min_ms", Json::num(self.pool_busy_min_ms)),
+                    ("busy_max_ms", Json::num(self.pool_busy_max_ms)),
+                    ("busy_mean_ms", Json::num(self.pool_busy_mean_ms)),
+                ]),
+            ),
         ])
     }
+
+    /// Prometheus text exposition for the `{"cmd": "metrics"}` API.
+    pub fn prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write;
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP tvq_{name} {help}");
+            let _ = writeln!(out, "# TYPE tvq_{name} counter");
+            let _ = writeln!(out, "tvq_{name} {v}");
+        };
+        counter("requests_submitted_total", "Requests accepted by the server.", self.submitted);
+        counter("requests_completed_total", "Requests answered successfully.", self.completed);
+        counter("requests_rejected_total", "Requests rejected at admission.", self.rejected);
+        counter("requests_failed_total", "Requests failed in execution.", self.failed);
+        counter("batches_total", "Batches executed.", self.batches);
+        counter("merge_builds_total", "Merge builds completed.", self.merge_builds);
+        let _ = writeln!(out, "# TYPE tvq_mean_batch_size gauge");
+        let _ = writeln!(out, "tvq_mean_batch_size {}", self.mean_batch_size);
+        let _ = writeln!(out, "# TYPE tvq_merge_build_speedup gauge");
+        let _ = writeln!(out, "tvq_merge_build_speedup {}", self.merge_build_speedup());
+        prometheus_summary_us(
+            out,
+            "request_latency",
+            "End-to-end request latency.",
+            &[
+                (0.5, self.latency_p50_us),
+                (0.9, self.latency_p90_us),
+                (0.99, self.latency_p99_us),
+            ],
+            self.latency_count,
+            self.latency_mean_us * self.latency_count as f64,
+        );
+        prometheus_summary_ns(out, "queue_wait", "Submit-to-executor queue wait.", &self.queue_wait);
+        prometheus_summary_ns(out, "merge_build", "Per-build merge wall time.", &self.merge_build_hist);
+        let _ = writeln!(out, "# TYPE tvq_pool_workers gauge");
+        let _ = writeln!(out, "tvq_pool_workers {}", self.pool_workers);
+        for (k, v) in [
+            ("min", self.pool_busy_min_ms),
+            ("max", self.pool_busy_max_ms),
+            ("mean", self.pool_busy_mean_ms),
+        ] {
+            let _ = writeln!(out, "tvq_pool_worker_busy_seconds{{stat=\"{k}\"}} {}", v / 1e3);
+        }
+    }
+}
+
+/// Prometheus summary block from a nanosecond [`HistogramSummary`],
+/// reported in seconds.
+pub fn prometheus_summary_ns(out: &mut String, name: &str, help: &str, h: &HistogramSummary) {
+    prometheus_summary_us(
+        out,
+        name,
+        help,
+        &[
+            (0.5, h.p50 as f64 / 1e3),
+            (0.9, h.p90 as f64 / 1e3),
+            (0.99, h.p99 as f64 / 1e3),
+        ],
+        h.count,
+        h.sum as f64 / 1e3,
+    );
+}
+
+fn prometheus_summary_us(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    quantiles_us: &[(f64, f64)],
+    count: u64,
+    sum_us: f64,
+) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP tvq_{name}_seconds {help}");
+    let _ = writeln!(out, "# TYPE tvq_{name}_seconds summary");
+    for (q, us) in quantiles_us {
+        let _ = writeln!(out, "tvq_{name}_seconds{{quantile=\"{q}\"}} {}", us / 1e6);
+    }
+    let _ = writeln!(out, "tvq_{name}_seconds_sum {}", sum_us / 1e6);
+    let _ = writeln!(out, "tvq_{name}_seconds_count {count}");
 }
 
 #[cfg(test)]
@@ -250,9 +402,27 @@ mod tests {
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 2);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.latency_count, 2);
         assert!((s.mean_batch_size - 3.0).abs() < 1e-9);
-        assert!(s.latency_p50_us >= 100.0 && s.latency_p99_us <= 301.0);
+        // Histogram quantiles: within the 12.5% relative bucket bound.
+        assert!(s.latency_p50_us >= 100.0 && s.latency_p50_us <= 112.5);
+        assert!(s.latency_p99_us >= 300.0 && s.latency_p99_us <= 337.5);
+        assert!(s.latency_max_us >= 300.0);
         assert!(s.summary().contains("batches 2"));
+    }
+
+    #[test]
+    fn queue_wait_histogram_records() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().queue_wait.count, 0);
+        m.record_queue_wait(Duration::from_micros(50));
+        m.record_queue_wait(Duration::from_micros(70));
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait.count, 2);
+        assert!(s.queue_wait.p50 >= 50_000);
+        assert!(s.summary().contains("queue p50"), "{}", s.summary());
+        m.reset_window();
+        assert_eq!(m.snapshot().queue_wait.count, 0);
     }
 
     #[test]
@@ -267,6 +437,7 @@ mod tests {
         m.record_merge_build(Duration::from_millis(10), Duration::from_millis(30));
         let s = m.snapshot();
         assert_eq!(s.merge_builds, 2);
+        assert_eq!(s.merge_build_hist.count, 2);
         assert!((s.merge_build_wall_ms - 20.0).abs() < 1e-9);
         assert!((s.merge_build_speedup() - 3.0).abs() < 1e-9);
         assert!(s.summary().contains("merge builds 2"), "{}", s.summary());
@@ -281,28 +452,71 @@ mod tests {
         v.drained.fetch_add(1, Ordering::Relaxed);
         v.queue_depth.fetch_add(1, Ordering::Relaxed);
         v.generation.store(3, Ordering::Relaxed);
+        v.service.record_ns(Duration::from_micros(40));
         let s = v.snapshot();
         assert_eq!(
             (s.admitted, s.rejected, s.completed, s.drained, s.queue_depth, s.generation),
             (5, 2, 4, 1, 1, 3)
         );
+        assert_eq!(s.service.count, 1);
 
         let m = Metrics::new();
         m.submitted.fetch_add(7, Ordering::Relaxed);
         let j = m.snapshot().to_json();
         assert_eq!(j.req("submitted").unwrap().as_usize().unwrap(), 7);
+        // The derived fields ship in the same schema.
+        assert!(j.req("merge_build_speedup").is_ok());
+        assert!(j.req("queue_wait_us").unwrap().req("p99").is_ok());
+        assert!(j.req("pool").unwrap().req("workers").is_ok());
         // Compact output reparses (the TCP status path round-trips it).
         let re = Json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(re.req("rejected").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]
-    fn latency_reservoir_is_bounded() {
+    fn concurrent_latency_recording_is_exact() {
+        // Pins the reservoir removal: the old Mutex<Vec> + cursor
+        // design lost samples under concurrency (recorders clobbered
+        // each other's slots via the shared `completed` index); the
+        // histogram must account for every single record.
         let m = Metrics::new();
-        for _ in 0..(LATENCY_CAP + 100) {
-            m.completed.fetch_add(1, Ordering::Relaxed);
-            m.record_latency(Duration::from_micros(10));
-        }
-        assert!(m.latencies_us.lock().unwrap().len() <= LATENCY_CAP);
+        let threads: u64 = 8;
+        let per: u64 = 4_000;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..per {
+                        m.completed.fetch_add(1, Ordering::Relaxed);
+                        m.record_latency(Duration::from_micros(10 + (i % 7)));
+                        m.record_queue_wait(Duration::from_nanos(100));
+                    }
+                });
+            }
+            // Snapshots taken mid-flight must never deadlock or panic.
+            let m = &m;
+            s.spawn(move || {
+                for _ in 0..100 {
+                    let _ = m.snapshot();
+                }
+            });
+        });
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, threads * per);
+        assert_eq!(s.queue_wait.count, threads * per);
+        assert_eq!(s.completed, threads * per);
+    }
+
+    #[test]
+    fn prometheus_exposition_renders() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(4, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(120));
+        let mut text = String::new();
+        m.snapshot().prometheus_into(&mut text);
+        assert!(text.contains("tvq_requests_submitted_total 4"));
+        assert!(text.contains("# TYPE tvq_request_latency_seconds summary"));
+        assert!(text.contains("tvq_request_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("tvq_request_latency_seconds_count 1"));
     }
 }

@@ -22,8 +22,11 @@
 //! * [`server`] — the running service: router, executor pool, backpressure.
 //! * [`cache`] — merged-model cache keyed by (merge method, quant scheme),
 //!   so a fleet of model variants shares one pre-trained trunk in memory.
-//! * [`metrics`] — atomic counters + latency summary, plus the
-//!   per-variant counters the control plane reports.
+//! * [`metrics`] — lock-free counters and log2-bucket histograms
+//!   (latency, queue wait, merge build — see [`crate::obs`]), plus the
+//!   per-variant counters the control plane reports.  The TCP front
+//!   serves them as `status` JSON, Prometheus text (`metrics`) and a
+//!   streaming NDJSON `watch` feed.
 //! * [`control`] — the variant lifecycle layer above all of this:
 //!   generational registry hot-swap, graceful drain, admission control,
 //!   and the node byte budget (see its module docs).

@@ -18,6 +18,7 @@ use super::batcher::{Batch, Batcher};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::{bucket_chunks, pick_bucket};
 use crate::data::VitPreset;
+use crate::obs::trace;
 use crate::merge::MergedModel;
 use crate::tensor::Tensor;
 
@@ -280,6 +281,13 @@ impl Server {
         self.metrics.snapshot()
     }
 
+    /// Shared handle to the live metrics registry — the watch stream
+    /// samples it on its own cadence instead of snapshotting per
+    /// request.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
     /// Reset latency/batch windows (e.g. after a warmup phase).
     pub fn reset_metrics_window(&self) {
         self.metrics.reset_window();
@@ -409,13 +417,19 @@ fn executor_loop<B, F>(
             let chunk = std::mem::replace(&mut remaining, rest);
             let bucket = pick_bucket(preset.serve_buckets, chunk_len)
                 .expect("bucket_chunks only emits servable chunk sizes");
-            // Pack (padded) input tensor.
+            // Pack (padded) input tensor.  Pickup time is the end of
+            // each item's queue wait (submit -> executor).
             let mut x = Tensor::zeros(&[bucket, preset.tokens, preset.token_dim]);
             for (i, s) in chunk.iter().enumerate() {
+                metrics.record_queue_wait(s.payload.submitted.elapsed());
                 x.data_mut()[i * img..(i + 1) * img].copy_from_slice(&s.payload.x);
             }
             metrics.record_batch(chunk_len);
-            match backend.infer(batch.task, &x, chunk_len) {
+            let infer_span = trace::span(trace::Category::Serve, "infer_batch")
+                .with_arg("items", chunk_len as u64);
+            let inferred = backend.infer(batch.task, &x, chunk_len);
+            drop(infer_span);
+            match inferred {
                 Ok(rows) => {
                     for (s, row) in chunk.into_iter().zip(rows) {
                         metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -472,6 +486,8 @@ mod tests {
         let m = server.metrics();
         assert_eq!(m.completed, 1);
         assert_eq!(m.failed, 0);
+        assert_eq!(m.latency_count, 1);
+        assert_eq!(m.queue_wait.count, 1, "executor records queue wait per item");
     }
 
     #[test]

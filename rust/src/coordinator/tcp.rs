@@ -10,6 +10,18 @@
 //! Request:  `{"cmd": "status"}`
 //! Response: `{"server": {...metrics...}, "control": {...variants...}}`
 //!
+//! Two further control commands break the one-line-reply shape:
+//!
+//! * `{"cmd": "metrics"}` replies with a Prometheus text exposition —
+//!   multiple lines, terminated by one blank line — then the
+//!   connection returns to request/reply framing.
+//! * `{"cmd": "watch", "interval_ms": N}` switches the connection into
+//!   streaming mode: the server pushes one newline-delimited JSON
+//!   *delta frame* every `N` ms (counters as deltas since the previous
+//!   frame, histogram quantiles and pool busy as gauges, per-variant
+//!   rows when a control plane is attached) until the client
+//!   disconnects or the front-end shuts down.
+//!
 //! The `control` key appears when the front-end was bound with a
 //! [`StatusSource`] (normally the
 //! [`ControlPlane`](super::control::ControlPlane)) via
@@ -20,14 +32,17 @@
 //! request is forwarded through [`Server::submit`], so batching,
 //! backpressure and metrics behave exactly as for in-process callers.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::metrics::MetricsSnapshot;
 use super::server::Server;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -37,6 +52,10 @@ use crate::util::json::Json;
 /// the wire without [`TcpFront`] depending on it.
 pub trait StatusSource: Send + Sync {
     fn status_json(&self) -> Json;
+
+    /// Append this source's Prometheus text exposition (per-variant
+    /// families) to `out`.  Default: contributes nothing.
+    fn prometheus_into(&self, _out: &mut String) {}
 }
 
 /// A running TCP front-end bound to a local address.
@@ -145,14 +164,26 @@ fn handle_conn(
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
-                let reply = match handle_line(&line, &server, status.as_deref()) {
-                    Ok(json) => json.to_string_compact(),
-                    Err(e) => {
+                match handle_line(&line, &server, status.as_deref()) {
+                    Ok(Reply::Line(json)) => writeln!(writer, "{}", json.to_string_compact())?,
+                    Ok(Reply::Text(text)) => {
+                        // Multi-line exposition, blank-line terminated so a
+                        // line-oriented client knows where it ends.
+                        writer.write_all(text.as_bytes())?;
+                        writeln!(writer)?;
+                    }
+                    Ok(Reply::Watch { interval }) => {
+                        // The connection becomes a push stream; it ends on
+                        // client disconnect or front-end shutdown.
+                        return watch_loop(&mut writer, interval, &server, status.as_deref(), &stop);
+                    }
+                    Err(e) => writeln!(
+                        writer,
+                        "{}",
                         Json::obj(vec![("error", Json::str(&format!("{e:#}")))])
                             .to_string_compact()
-                    }
-                };
-                writeln!(writer, "{reply}")?;
+                    )?,
+                }
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -165,11 +196,21 @@ fn handle_conn(
     }
 }
 
+/// How a handled request line is answered on the wire.
+enum Reply {
+    /// One JSON object on one line (the default framing).
+    Line(Json),
+    /// Pre-rendered multi-line text followed by one blank line.
+    Text(String),
+    /// Switch the connection into streaming-watch mode.
+    Watch { interval: Duration },
+}
+
 fn handle_line(
     line: &str,
     server: &Server,
     status: Option<&dyn StatusSource>,
-) -> Result<Json> {
+) -> Result<Reply> {
     let req = Json::parse(line).context("malformed JSON request")?;
     if let Some(cmd) = req.get("cmd") {
         return match cmd.as_str()? {
@@ -178,9 +219,28 @@ fn handle_line(
                 if let Some(s) = status {
                     fields.push(("control", s.status_json()));
                 }
-                Ok(Json::obj(fields))
+                Ok(Reply::Line(Json::obj(fields)))
             }
-            other => anyhow::bail!("unknown cmd {other:?} (supported: \"status\")"),
+            "metrics" => {
+                let mut out = String::new();
+                server.metrics().prometheus_into(&mut out);
+                if let Some(s) = status {
+                    s.prometheus_into(&mut out);
+                }
+                Ok(Reply::Text(out))
+            }
+            "watch" => {
+                let interval_ms = match req.get("interval_ms") {
+                    Some(v) => v.as_usize().context("watch interval_ms")?,
+                    None => 1_000,
+                };
+                // Floor keeps a zero/tiny interval from busy-spinning the
+                // handler thread against the snapshot locks.
+                Ok(Reply::Watch { interval: Duration::from_millis(interval_ms.max(10) as u64) })
+            }
+            other => anyhow::bail!(
+                "unknown cmd {other:?} (supported: \"status\", \"metrics\", \"watch\")"
+            ),
         };
     }
     let task = req.req("task")?.as_usize()?;
@@ -191,10 +251,123 @@ fn handle_line(
         .collect::<Result<_>>()?;
     let x = Tensor::from_vec(data);
     let logits = server.infer(task, &x)?;
-    Ok(Json::obj(vec![(
+    Ok(Reply::Line(Json::obj(vec![(
         "logits",
         Json::arr(logits.into_iter().map(|v| Json::num(v as f64))),
-    )]))
+    )])))
+}
+
+/// Per-variant counters remembered between watch frames, keyed by
+/// variant name, so the stream can report deltas.
+type VariantCounters = BTreeMap<String, (u64, u64, u64)>;
+
+/// Push one delta frame per interval until the client disconnects (the
+/// write fails) or the front-end stops.  The first frame's deltas are
+/// against a zero snapshot, i.e. the totals accumulated so far.
+fn watch_loop(
+    writer: &mut TcpStream,
+    interval: Duration,
+    server: &Server,
+    status: Option<&dyn StatusSource>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut prev = MetricsSnapshot::default();
+    let mut prev_variants = VariantCounters::new();
+    let mut seq = 0u64;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let cur = server.metrics();
+        let frame = watch_frame(seq, &prev, &cur, status, &mut prev_variants);
+        if writeln!(writer, "{}", frame.to_string_compact()).is_err() {
+            return Ok(()); // client went away — the normal way a watch ends
+        }
+        prev = cur;
+        seq += 1;
+        // Sleep in short slices so shutdown stays prompt even with a
+        // long interval.
+        let mut left = interval;
+        while !left.is_zero() {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            let slice = left.min(Duration::from_millis(100));
+            std::thread::sleep(slice);
+            left -= slice;
+        }
+    }
+}
+
+/// One newline-delimited JSON delta frame: monotone counters as deltas
+/// since the previous frame, histogram quantiles / pool busy /
+/// generation as gauges.
+fn watch_frame(
+    seq: u64,
+    prev: &MetricsSnapshot,
+    cur: &MetricsSnapshot,
+    status: Option<&dyn StatusSource>,
+    prev_variants: &mut VariantCounters,
+) -> Json {
+    let d = |c: u64, p: u64| Json::num(c.saturating_sub(p) as f64);
+    let server = Json::obj(vec![
+        ("submitted", d(cur.submitted, prev.submitted)),
+        ("completed", d(cur.completed, prev.completed)),
+        ("rejected", d(cur.rejected, prev.rejected)),
+        ("failed", d(cur.failed, prev.failed)),
+        ("batches", d(cur.batches, prev.batches)),
+        ("merge_builds", d(cur.merge_builds, prev.merge_builds)),
+        ("mean_batch_size", Json::num(cur.mean_batch_size)),
+        ("latency_p50_us", Json::num(cur.latency_p50_us)),
+        ("latency_p99_us", Json::num(cur.latency_p99_us)),
+        ("queue_wait_p50_us", Json::num(cur.queue_wait.p50 as f64 / 1e3)),
+        ("merge_build_speedup", Json::num(cur.merge_build_speedup())),
+        ("pool_busy_mean_ms", Json::num(cur.pool_busy_mean_ms)),
+    ]);
+    let mut fields = vec![("seq", Json::num(seq as f64)), ("server", server)];
+    if let Some(s) = status {
+        let variants = variant_rows(&s.status_json(), prev_variants);
+        fields.push(("variants", Json::arr(variants)));
+    }
+    Json::obj(fields)
+}
+
+/// Extract per-variant delta rows from a [`StatusSource`] snapshot.
+/// Tolerates arbitrary status shapes (rows without the expected fields
+/// are skipped) since the source is a trait object.
+fn variant_rows(status: &Json, prev: &mut VariantCounters) -> Vec<Json> {
+    let Some(variants) = status.get("variants").and_then(|v| v.as_arr().ok()) else {
+        return Vec::new();
+    };
+    let mut rows = Vec::new();
+    for v in variants {
+        let Some(name) = v.get("name").and_then(|n| n.as_str().ok()) else {
+            continue;
+        };
+        let counter = |key: &str| {
+            v.get(key).and_then(|x| x.as_f64().ok()).unwrap_or(0.0) as u64
+        };
+        let (admitted, completed, rejected) =
+            (counter("admitted"), counter("completed"), counter("rejected"));
+        let (pa, pc, pr) =
+            prev.insert(name.to_string(), (admitted, completed, rejected)).unwrap_or((0, 0, 0));
+        let mut row = vec![
+            ("name", Json::str(name)),
+            ("admitted", Json::num(admitted.saturating_sub(pa) as f64)),
+            ("completed", Json::num(completed.saturating_sub(pc) as f64)),
+            ("rejected", Json::num(rejected.saturating_sub(pr) as f64)),
+        ];
+        for gauge in ["state", "generation", "queue_depth"] {
+            if let Some(val) = v.get(gauge) {
+                row.push((gauge, val.clone()));
+            }
+        }
+        if let Some(p50) = v.get("service_us").and_then(|s| s.get("p50")) {
+            row.push(("service_p50_us", p50.clone()));
+        }
+        rows.push(Json::obj(row));
+    }
+    rows
 }
 
 #[cfg(test)]
@@ -319,6 +492,60 @@ mod tests {
         // Unknown cmds get an error line, not a hang.
         let reply = roundtrip(front.addr(), r#"{"cmd": "reboot"}"#);
         assert!(reply.contains("error"), "reply: {reply}");
+    }
+
+    #[test]
+    fn metrics_command_returns_prometheus_text() {
+        let (front, _server) = start();
+        let reply = roundtrip(front.addr(), &req_line(1, 2.0));
+        assert!(reply.contains("logits"), "reply: {reply}");
+        // The exposition is multi-line, blank-line terminated; read it
+        // all on one connection.
+        let mut conn = TcpStream::connect(front.addr()).unwrap();
+        writeln!(conn, r#"{{"cmd": "metrics"}}"#).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut text = String::new();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            if line.trim().is_empty() {
+                break;
+            }
+            text.push_str(&line);
+        }
+        assert!(text.contains("tvq_requests_completed_total 1"), "exposition:\n{text}");
+        assert!(text.contains("# TYPE tvq_request_latency_seconds summary"), "exposition:\n{text}");
+        assert!(
+            text.contains(r#"tvq_request_latency_seconds{quantile="0.5"}"#),
+            "exposition:\n{text}"
+        );
+    }
+
+    #[test]
+    fn watch_command_streams_delta_frames() {
+        let (front, _server) = start();
+        let reply = roundtrip(front.addr(), &req_line(0, 1.0));
+        assert!(reply.contains("logits"), "reply: {reply}");
+        let mut conn = TcpStream::connect(front.addr()).unwrap();
+        writeln!(conn, r#"{{"cmd": "watch", "interval_ms": 20}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut frames = Vec::new();
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            frames.push(Json::parse(line.trim()).unwrap());
+        }
+        // Frame 0 carries totals-so-far; frame 1 is a pure delta.
+        assert_eq!(frames[0].req("seq").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(frames[1].req("seq").unwrap().as_usize().unwrap(), 1);
+        let f0 = frames[0].req("server").unwrap();
+        assert_eq!(f0.req("completed").unwrap().as_usize().unwrap(), 1);
+        let f1 = frames[1].req("server").unwrap();
+        assert_eq!(f1.req("completed").unwrap().as_usize().unwrap(), 0);
+        // Dropping the client ends the stream server-side (no hang, no
+        // panic) — nothing further to assert; the handler thread exits
+        // on the failed write.
+        drop(conn);
     }
 
     #[test]

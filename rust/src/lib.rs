@@ -20,6 +20,7 @@
 //! suites ([`data`]), a PJRT runtime that executes the AOT-lowered JAX/
 //! Pallas artifacts ([`runtime`]), fine-tuning drivers ([`train`]),
 //! evaluation metrics ([`eval`]), a serving coordinator ([`coordinator`]),
+//! an observability layer — lock-free histograms and span tracing ([`obs`]) —
 //! and the experiment harness regenerating every table/figure of the paper
 //! ([`exp`]).
 //!
@@ -58,6 +59,7 @@ pub mod data;
 pub mod eval;
 pub mod exp;
 pub mod merge;
+pub mod obs;
 pub mod planner;
 pub mod quant;
 pub mod registry;

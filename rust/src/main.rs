@@ -28,8 +28,34 @@ use tvq::train::{TrainConfig, Zoo};
 use tvq::util::cli::Command;
 
 fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = dispatch(&argv) {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // Global `--trace <out.json>`: record spans for the whole run and
+    // export Chrome trace-event JSON at exit.  `TVQ_TRACE=<path>` is
+    // the environment equivalent (picked up when the flag is absent).
+    let trace_out = match argv.iter().position(|a| a == "--trace") {
+        Some(i) if i + 1 < argv.len() => {
+            let path = argv.remove(i + 1);
+            argv.remove(i);
+            tvq::obs::trace::enable();
+            Some(path)
+        }
+        Some(_) => {
+            eprintln!("error: --trace needs an output path (e.g. --trace trace.json)");
+            std::process::exit(2);
+        }
+        None => tvq::obs::trace::init_from_env(),
+    };
+    let result = dispatch(&argv);
+    if let Some(path) = &trace_out {
+        match tvq::obs::trace::export_to_file(path) {
+            Ok(()) => eprintln!(
+                "trace: wrote {} spans to {path} (open in chrome://tracing or Perfetto)",
+                tvq::obs::trace::events().len()
+            ),
+            Err(e) => eprintln!("warning: trace export to {path} failed: {e:#}"),
+        }
+    }
+    if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -46,11 +72,16 @@ subcommands:
   merge       merge under a (method, scheme) and evaluate
   eval        evaluate Individual (single-task) models under a scheme
   serve       boot the serving coordinator and run a load demo
-              (subactions: `serve status`, `serve variants`)
+              (subactions: `serve status`, `serve watch`,
+               `serve metrics`, `serve variants`)
   registry    pack / inspect / verify packed .qtvc registries
   experiment  regenerate a paper table/figure by id (tab1, fig4, ...)
   bench       gate bench JSON reports (ci.sh bench-diff stage)
   list        list presets, artifacts and experiment ids
+
+global options:
+  --trace <out.json>  record spans and export a Chrome trace-event file
+                      at exit (env: TVQ_TRACE=<out.json>)
 
 run `tvq <subcommand> --help` for options."
         .to_string()
@@ -210,6 +241,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     // classic load demo.
     match argv.first().map(String::as_str) {
         Some("status") => return cmd_serve_status(&argv[1..]),
+        Some("watch") => return cmd_serve_watch(&argv[1..]),
+        Some("metrics") => return cmd_serve_metrics(&argv[1..]),
         Some("variants") => return cmd_serve_variants(&argv[1..]),
         _ => {}
     }
@@ -218,6 +251,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "Subactions:
   tvq serve status   --addr <host:port>   query a running front-end's
                                           {\"cmd\": \"status\"} control API
+  tvq serve watch    --addr <host:port>   stream live metrics delta
+                                          frames (NDJSON) until ^C
+  tvq serve metrics  --addr <host:port>   one Prometheus text scrape
   tvq serve variants <registry.qtvc> ...  offline control-plane demo:
                                           load/serve/drain a variant
 
@@ -348,6 +384,69 @@ when the front-end was bound with one.",
     }
     println!("{}", parsed.to_string_compact());
     Ok(())
+}
+
+fn cmd_serve_watch(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tvq serve watch", "stream live metrics frames from a front-end")
+        .long_about(
+            "Connects to a TCP front-end, sends
+{\"cmd\": \"watch\", \"interval_ms\": N} and prints the pushed
+newline-delimited JSON delta frames (counters as deltas since the
+previous frame, quantiles/gauges as-is) until interrupted, the server
+stops, or --frames is reached.",
+        )
+        .req("addr", "front-end address (host:port)")
+        .opt("interval-ms", "1000", "frame interval (ms)")
+        .opt("frames", "0", "stop after this many frames (0 = run until interrupted)");
+    let args = cmd.parse(argv)?;
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get_str("addr")?;
+    let interval = args.get_u64("interval-ms")?;
+    let max_frames = args.get_usize("frames")?;
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+    writeln!(stream, r#"{{"cmd": "watch", "interval_ms": {interval}}}"#)?;
+    let mut reader = BufReader::new(stream);
+    let mut frames = 0usize;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // front-end shut down
+        }
+        println!("{}", line.trim_end());
+        frames += 1;
+        if max_frames > 0 && frames >= max_frames {
+            return Ok(());
+        }
+    }
+}
+
+fn cmd_serve_metrics(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tvq serve metrics", "scrape a front-end's Prometheus metrics")
+        .long_about(
+            "Connects to a TCP front-end, sends {\"cmd\": \"metrics\"} and prints
+the Prometheus text exposition (server counters, latency/queue-wait/
+merge-build summaries, pool busy, and per-variant families when a
+control plane is attached).",
+        )
+        .req("addr", "front-end address (host:port)");
+    let args = cmd.parse(argv)?;
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get_str("addr")?;
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow!("connecting to {addr}: {e}"))?;
+    writeln!(stream, r#"{{"cmd": "metrics"}}"#)?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        if line.trim().is_empty() {
+            return Ok(()); // blank-line terminator
+        }
+        print!("{line}");
+    }
 }
 
 fn cmd_serve_variants(argv: &[String]) -> Result<()> {

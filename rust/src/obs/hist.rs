@@ -1,0 +1,357 @@
+//! Lock-free log2-bucket histograms for hot-path timing.
+//!
+//! The serving stack records a latency on every request, every section
+//! read and every merge build; a mutex (or any shared cursor) on that
+//! path serializes recorders and — as the old `Metrics` reservoir
+//! demonstrated — invites lost updates.  [`Histogram`] is the
+//! replacement: a fixed array of `AtomicU64` buckets plus running
+//! count/sum/max, all updated with relaxed atomics.  Recording is three
+//! `fetch_add`s and one `fetch_max`; there is nothing to contend on but
+//! cache lines.
+//!
+//! # Bucket layout and error bound
+//!
+//! Values (u64, typically nanoseconds or bytes) map to buckets by a
+//! log2-with-linear-subdivision rule: values below [`SUBS`] get one
+//! exact bucket each; every higher power-of-two range `[2^k, 2^(k+1))`
+//! is split into [`SUBS`] equal sub-buckets.  A bucket's width is
+//! therefore at most `1/SUBS` of its lower bound, so any statistic that
+//! answers with a value *inside* the containing bucket — which is how
+//! [`Histogram::quantile`] answers — carries a **relative error of at
+//! most 1/SUBS = 12.5%**, independent of the distribution.
+//!
+//! Quantiles are estimated by rank-walking the bucket counts and
+//! returning the containing bucket's inclusive upper bound: exact for
+//! values `< SUBS`, within one bucket width otherwise.
+//!
+//! # Concurrency semantics
+//!
+//! `record` never loses an update: count, sum and the bucket increment
+//! are each atomic, so after all recorders finish, `count()` and
+//! `sum()` are exact.  A concurrent `snapshot`/`quantile` may observe a
+//! record "in flight" (bucket bumped, sum not yet) — point-in-time
+//! reads are approximate by design, totals are not.  `reset` is a
+//! non-atomic sweep intended for quiescent windows (post-warmup), not
+//! for use concurrent with recorders.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// log2 of the per-octave sub-bucket count.
+const LOG_SUBS: u32 = 3;
+/// Linear sub-buckets per power-of-two range; also the bound below
+/// which every value gets its own exact bucket.
+pub const SUBS: u64 = 1 << LOG_SUBS;
+/// Total bucket count: SUBS exact buckets + SUBS per octave for
+/// octaves 2^3 .. 2^63.  Covers all of u64.
+pub const BUCKETS: usize = (SUBS as usize) + (64 - LOG_SUBS as usize) * SUBS as usize;
+
+/// Bucket index for a value.  Monotone in `value`; every u64 maps to
+/// exactly one of the [`BUCKETS`] buckets.
+#[inline]
+pub fn bucket_index(value: u64) -> usize {
+    if value < SUBS {
+        return value as usize;
+    }
+    let top = 63 - value.leading_zeros(); // >= LOG_SUBS
+    let shift = top - LOG_SUBS;
+    let sub = (value >> shift) & (SUBS - 1);
+    ((top - LOG_SUBS) as u64 * SUBS + SUBS + sub) as usize
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `index`.  Every value in
+/// the range maps back to `index` under [`bucket_index`].
+#[inline]
+pub fn bucket_bounds(index: usize) -> (u64, u64) {
+    let i = index as u64;
+    if i < SUBS {
+        return (i, i);
+    }
+    let b = i - SUBS;
+    let shift = (b / SUBS) as u32;
+    let sub = b % SUBS;
+    let lo = (SUBS + sub) << shift;
+    let width_minus_1 = (1u64 << shift) - 1;
+    (lo, lo + width_minus_1)
+}
+
+/// A lock-free histogram: fixed `AtomicU64` buckets + count/sum/max.
+/// ~4 KiB; embed directly (no allocation) and share behind the owning
+/// struct's `Arc`.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value.  Lock-free: three relaxed `fetch_add`s and a
+    /// `fetch_max`; concurrent recorders never lose an update.
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (the stack's timing unit).
+    #[inline]
+    pub fn record_ns(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 { 0.0 } else { self.sum() as f64 / c as f64 }
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the inclusive upper bound
+    /// of the bucket containing the rank-`⌈q·count⌉` sample.  Exact for
+    /// values `< SUBS`; otherwise within one bucket width of the true
+    /// quantile (relative error ≤ 1/SUBS).  Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bounds(i).1;
+            }
+        }
+        bucket_bounds(BUCKETS - 1).1
+    }
+
+    /// Point-in-time summary (count / sum / max / p50 / p90 / p99).
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+
+    /// Zero every bucket and counter.  Not atomic as a whole: intended
+    /// for quiescent windows (post-warmup reset), where it leaves the
+    /// histogram exactly empty.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Immutable histogram summary.  Values carry the histogram's unit
+/// (nanoseconds for the serving-stack timing histograms).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+}
+
+impl HistogramSummary {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum as f64 / self.count as f64 }
+    }
+
+    /// JSON rendering with values divided by `scale` (e.g. 1e3 to
+    /// report a nanosecond histogram in microseconds).
+    pub fn to_json_scaled(&self, scale: f64) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean() / scale)),
+            ("p50", Json::num(self.p50 as f64 / scale)),
+            ("p90", Json::num(self.p90 as f64 / scale)),
+            ("p99", Json::num(self.p99 as f64 / scale)),
+            ("max", Json::num(self.max as f64 / scale)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_index_and_bounds_agree() {
+        // Every probe value must land in a bucket whose bounds contain
+        // it, and bucket bounds must tile u64 without gap or overlap.
+        for v in (0..1024).chain([1 << 20, u64::MAX / 3, u64::MAX - 1, u64::MAX]) {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "value {v} outside bucket {i} [{lo}, {hi}]");
+        }
+        let mut expected_lo = 0u64;
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expected_lo, "gap/overlap before bucket {i}");
+            assert!(hi >= lo);
+            if i + 1 < BUCKETS {
+                expected_lo = hi + 1;
+            } else {
+                assert_eq!(hi, u64::MAX, "last bucket must end at u64::MAX");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_recorded_value_lands_in_containing_bucket() {
+        prop::check(
+            prop::Config::default(),
+            |rng: &mut Rng| {
+                let shift = rng.below(64) as u32;
+                (rng.below(usize::MAX) as u64) >> shift
+            },
+            |&v| {
+                let i = bucket_index(v);
+                let (lo, hi) = bucket_bounds(i);
+                if lo <= v && v <= hi {
+                    Ok(())
+                } else {
+                    Err(format!("{v} -> bucket {i} [{lo}, {hi}]"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_quantile_within_one_bucket_width() {
+        prop::check(
+            prop::Config::default(),
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(200);
+                let vals: Vec<u64> =
+                    (0..n).map(|_| rng.below(1 << 20) as u64).collect();
+                let q = rng.below(101) as f64 / 100.0;
+                (vals, q)
+            },
+            |(vals, q)| {
+                let h = Histogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                let mut sorted = vals.clone();
+                sorted.sort_unstable();
+                let rank = ((q * vals.len() as f64).ceil() as usize)
+                    .clamp(1, vals.len());
+                let truth = sorted[rank - 1];
+                let est = h.quantile(*q);
+                // The estimate is the containing bucket's upper bound,
+                // so it must lie within that bucket's width of truth.
+                let (lo, hi) = bucket_bounds(bucket_index(truth));
+                if est < lo || est > hi {
+                    return Err(format!(
+                        "q={q}: est {est} outside truth bucket [{lo}, {hi}] (truth {truth})"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_recording_sums_exactly() {
+        // The whole point of the histogram migration: no recorder ever
+        // loses an update, unlike the old cursor-indexed reservoir.
+        let h = Histogram::new();
+        let threads = 8;
+        let per = 5_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..per {
+                        h.record(t * per + i);
+                    }
+                });
+            }
+        });
+        let n = threads * per;
+        assert_eq!(h.count(), n);
+        assert_eq!(h.sum(), n * (n - 1) / 2);
+        assert_eq!(h.max(), n - 1);
+    }
+
+    #[test]
+    fn quantiles_and_reset() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        for v in 0..8u64 {
+            h.record(v);
+        }
+        // Values < SUBS are exact.
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(0.5), 3);
+        assert_eq!(h.quantile(1.0), 7);
+        assert_eq!(h.mean(), 3.5);
+        let s = h.summary();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.max, 7);
+        let j = s.to_json_scaled(1.0);
+        assert_eq!(j.req("count").unwrap().as_usize().unwrap(), 8);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.summary(), HistogramSummary::default());
+    }
+}

@@ -1,0 +1,46 @@
+//! Observability: lock-free histograms, span tracing, process-wide
+//! stats.
+//!
+//! Three layers, all std-only:
+//!
+//! * [`hist`] — log2-bucket `AtomicU64` histograms with bounded
+//!   relative quantile error (≤ 12.5%); the record path is a handful
+//!   of relaxed atomics, safe on every hot path.
+//! * [`trace`] — span tracing into per-thread bounded ring buffers,
+//!   exported as Chrome trace-event JSON; one relaxed load per span
+//!   site when disabled.
+//! * [`stats`] — the process-wide histograms ([`stats()`]) for layers
+//!   below the coordinator (registry section reads), which have no
+//!   `Metrics` handle to record into.
+//!
+//! The serving stack threads these through every stage: request
+//! latency / queue wait / merge build live in
+//! `coordinator::Metrics`, per-variant service time in
+//! `coordinator::metrics::VariantMetrics`, per-worker busy in
+//! `util::Pool`, and section reads here.  `docs/ARCHITECTURE.md`
+//! ("Observability") maps the span categories and histogram set.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Histogram, HistogramSummary};
+pub use trace::{span, Category};
+
+use std::sync::OnceLock;
+
+/// Process-wide histograms for layers that predate (and must not
+/// depend on) the coordinator's `Metrics`.
+#[derive(Debug, Default)]
+pub struct GlobalStats {
+    /// Per-section read+CRC time, nanoseconds
+    /// (`registry::Registry::section_bytes`).
+    pub section_read_ns: Histogram,
+    /// Per-section bytes delivered by those reads.
+    pub section_read_bytes: Histogram,
+}
+
+/// The process-wide stats. Lazily initialized, never reset implicitly.
+pub fn stats() -> &'static GlobalStats {
+    static S: OnceLock<GlobalStats> = OnceLock::new();
+    S.get_or_init(GlobalStats::default)
+}

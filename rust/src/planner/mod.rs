@@ -56,6 +56,7 @@ pub use solve::{min_feasible_bytes, solve};
 use anyhow::{bail, Result};
 
 use crate::checkpoint::Checkpoint;
+use crate::obs;
 use crate::quant::{GroupQuantized, SparseGroupQuantized};
 use crate::registry::{PayloadView, Registry, RegistryBuilder, SectionScratch, WriteSummary};
 use crate::tensor::Tensor;
@@ -583,12 +584,15 @@ pub fn fused_merge_with_pool(
         // over disjoint ranges, so every element's float accumulation
         // chain equals the sequential pass exactly.
         let (base_scratch, task_scratches) = scratches.split_first_mut().expect("len >= 1");
+        let decode_span = obs::span(obs::Category::Merge, "view_decode").with_arg("tensor", l as u64);
         let views: Vec<PayloadView> = indices
             .iter()
             .zip(task_scratches.iter_mut())
             .map(|(&t, s)| reg.planned_task_view(t, l, s))
             .collect::<Result<_>>()?;
+        drop(decode_span);
         let pool = if buf.len() < MIN_PARALLEL_ELEMS { &seq } else { pool };
+        let axpy_span = obs::span(obs::Category::Merge, "axpy").with_arg("tensor", l as u64);
         match a.arm {
             Arm::Tvq { .. } => {
                 pool.for_each_shard(&mut buf, tensor.group, |start, shard| {
@@ -627,6 +631,7 @@ pub fn fused_merge_with_pool(
                 })?;
             }
         }
+        drop(axpy_span);
         drop(views);
         buf.truncate(tensor.numel());
         out.insert(&tensor.name, Tensor::new(tensor.shape.clone(), buf)?);

@@ -35,6 +35,7 @@ use super::container::{
 };
 use super::mmap::{self, Mmap};
 use crate::checkpoint::Checkpoint;
+use crate::obs;
 use crate::planner::{Arm, PackPlan, SectionRole, SectionSpec};
 use crate::quant::{GroupQuantized, GroupQuantizedView, QuantScheme, SparseGroupQuantized};
 use crate::tensor::Tensor;
@@ -261,6 +262,7 @@ impl Registry {
     /// for planned registries, the plan section) — payloads stay lazy.
     pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<Registry> {
         let path = path.as_ref();
+        let _span = obs::span(obs::Category::Registry, "registry_open");
         let file = fs::File::open(path)
             .with_context(|| format!("opening registry {}", path.display()))?;
         let file_bytes = file.metadata()?.len();
@@ -613,6 +615,12 @@ impl Registry {
         entry: &IndexEntry,
         scratch: &'a mut SectionScratch,
     ) -> Result<&'a [u8]> {
+        // Read + CRC time and delivered bytes feed the process-wide
+        // section-read histograms (serve-time reconstruction lives or
+        // dies on these); the span carries the byte count per read.
+        let _span =
+            obs::span(obs::Category::Registry, "section_read").with_arg("bytes", entry.length);
+        let t0 = std::time::Instant::now();
         let bytes = self.io.bytes_for(&self.path, entry, &mut scratch.buf)?;
         if crc32(bytes) != entry.crc {
             bail!(
@@ -621,6 +629,8 @@ impl Registry {
                 self.path.display()
             );
         }
+        obs::stats().section_read_ns.record_ns(t0.elapsed());
+        obs::stats().section_read_bytes.record(entry.length);
         Ok(bytes)
     }
 

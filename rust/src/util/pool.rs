@@ -61,20 +61,27 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs::trace;
+
 /// A fixed-width scoped worker pool.  See the module docs for the
 /// determinism and sequential-mode contracts.
 pub struct Pool {
     threads: usize,
-    /// Total nanoseconds workers (and inline sequential runs) spent
-    /// executing closures — the "cpu" side of merge-build wall/cpu
-    /// timing.  Aggregate across all concurrent users of the pool.
-    busy_ns: AtomicU64,
+    /// Nanoseconds spent executing closures, **per worker slot** — the
+    /// "cpu" side of merge-build wall/cpu timing, and the
+    /// shard-imbalance signal (a slot far above the others means
+    /// uneven shards).  Slot `w` accumulates what worker `w` of each
+    /// `map`/`for_each_shard` call executed; inline sequential runs
+    /// land in slot 0 (they run on the caller, which takes the place
+    /// of worker 0).  Aggregates across all concurrent users.
+    busy: Vec<AtomicU64>,
 }
 
 impl Pool {
     /// A pool running `threads` workers (clamped to at least 1).
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1), busy_ns: AtomicU64::new(0) }
+        let threads = threads.max(1);
+        Self { threads, busy: (0..threads).map(|_| AtomicU64::new(0)).collect() }
     }
 
     /// The single-threaded pool: every closure runs inline.
@@ -107,17 +114,25 @@ impl Pool {
     }
 
     /// Cumulative busy time across all closures this pool has executed,
-    /// in nanoseconds.  Sample before/after an operation to estimate its
-    /// parallel "cpu time" (approximate when several operations share
-    /// the pool concurrently).
+    /// in nanoseconds (summed over workers).  Sample before/after an
+    /// operation to estimate its parallel "cpu time" (approximate when
+    /// several operations share the pool concurrently).
     pub fn busy_ns(&self) -> u64 {
-        self.busy_ns.load(Ordering::Relaxed)
+        self.busy.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
-    fn timed<R>(&self, f: impl FnOnce() -> R) -> R {
+    /// Per-worker cumulative busy nanoseconds (one slot per worker;
+    /// inline sequential runs count toward slot 0).  The spread across
+    /// slots is the shard-imbalance signal surfaced in
+    /// `MetricsSnapshot` and the watch stream.
+    pub fn worker_busy_ns(&self) -> Vec<u64> {
+        self.busy.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    fn timed<R>(&self, worker: usize, f: impl FnOnce() -> R) -> R {
         let t = Instant::now();
         let r = f();
-        self.busy_ns
+        self.busy[worker]
             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         r
     }
@@ -139,7 +154,7 @@ impl Pool {
             return items
                 .into_iter()
                 .enumerate()
-                .map(|(i, item)| self.timed(|| f(i, item)))
+                .map(|(i, item)| self.timed(0, || f(i, item)))
                 .collect();
         }
         let queue = Mutex::new(items.into_iter().enumerate());
@@ -147,15 +162,22 @@ impl Pool {
         let workers = self.threads.min(n);
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    s.spawn(|| loop {
-                        // The closure runs outside the queue lock, so a
-                        // panicking job can never poison the queue for
-                        // its siblings.
-                        let job = queue.lock().unwrap().next();
-                        let Some((i, item)) = job else { break };
-                        let out = self.timed(|| f(i, item));
-                        *slots[i].lock().unwrap() = Some(out);
+                .map(|w| {
+                    let (queue, slots, f) = (&queue, &slots, &f);
+                    s.spawn(move || {
+                        // One span per worker per call: its duration is
+                        // the worker's wall time draining the queue.
+                        let _span = trace::span(trace::Category::Pool, "worker")
+                            .with_arg("worker", w as u64);
+                        loop {
+                            // The closure runs outside the queue lock,
+                            // so a panicking job can never poison the
+                            // queue for its siblings.
+                            let job = queue.lock().unwrap().next();
+                            let Some((i, item)) = job else { break };
+                            let out = self.timed(w, || f(i, item));
+                            *slots[i].lock().unwrap() = Some(out);
+                        }
                     })
                 })
                 .collect();
@@ -214,7 +236,7 @@ impl Pool {
         let units = data.len().div_ceil(align);
         let shards = self.threads.min(units);
         if shards == 1 {
-            return self.timed(|| f(0, data));
+            return self.timed(0, || f(0, data));
         }
         // Evenly spread whole alignment units; the final shard absorbs
         // the ragged tail.
@@ -369,5 +391,25 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(2));
         });
         assert!(pool.busy_ns() >= 4 * 2_000_000, "busy {} ns", pool.busy_ns());
+    }
+
+    #[test]
+    fn worker_busy_is_per_slot() {
+        let pool = Pool::new(3);
+        assert_eq!(pool.worker_busy_ns(), vec![0, 0, 0]);
+        pool.map(vec![(); 6], |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let per = pool.worker_busy_ns();
+        assert_eq!(per.len(), 3);
+        assert_eq!(per.iter().sum::<u64>(), pool.busy_ns());
+        // Sequential (inline) runs land in slot 0.
+        let seq = Pool::sequential();
+        seq.map(vec![(); 2], |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let per = seq.worker_busy_ns();
+        assert_eq!(per.len(), 1);
+        assert!(per[0] >= 2_000_000, "inline busy {} ns", per[0]);
     }
 }

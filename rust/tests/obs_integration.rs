@@ -1,0 +1,177 @@
+//! Observability suite (ISSUE 7 acceptance):
+//!
+//! * `{"cmd": "watch"}` streams ≥2 incremental NDJSON delta frames to a
+//!   raw TCP client, and the client disconnecting ends the stream
+//!   without wedging the front-end.
+//! * A traced run touching registry / merge / cache / control layers
+//!   exports Chrome trace-event JSON that reparses with `util::json`
+//!   and contains spans from all four categories.
+//! * `{"cmd": "status"}` carries the derived observability fields
+//!   (histogram quantiles, merge-build speedup, pool busy spread).
+//!
+//! The suite is already smoke-sized; `TVQ_SMOKE=1` changes nothing.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Result;
+use tvq::coordinator::control::{ControlPlane, VariantConfig, VariantState};
+use tvq::coordinator::server::Backend;
+use tvq::coordinator::{ModelCache, Server, ServerConfig, TcpFront};
+use tvq::data::VIT_S;
+use tvq::exp::planner::synthetic_planner_zoo;
+use tvq::merge::TaskArithmetic;
+use tvq::quant::QuantScheme;
+use tvq::registry::{build_registry, PackedRegistrySource, Registry};
+use tvq::tensor::Tensor;
+use tvq::util::json::Json;
+
+struct EchoBackend;
+impl Backend for EchoBackend {
+    fn infer(&mut self, task: usize, x: &Tensor, n: usize) -> Result<Vec<Vec<f32>>> {
+        let img = x.numel() / x.shape()[0];
+        Ok((0..n).map(|i| vec![x.data()[i * img], task as f32]).collect())
+    }
+}
+
+fn start_front() -> (TcpFront, Arc<Server>) {
+    let server = Arc::new(
+        Server::start_with_backend(ServerConfig::default(), &VIT_S, 4, || Ok(EchoBackend))
+            .unwrap(),
+    );
+    let front = TcpFront::bind("127.0.0.1:0", server.clone(), 8).unwrap();
+    (front, server)
+}
+
+fn infer_line(task: usize) -> String {
+    let n = VIT_S.tokens * VIT_S.token_dim;
+    format!(r#"{{"task": {task}, "x": [{}]}}"#, vec!["0.5"; n].join(","))
+}
+
+fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, "{line}").unwrap();
+    let mut reply = String::new();
+    BufReader::new(conn).read_line(&mut reply).unwrap();
+    reply
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tvq-obs-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn pack(dir: &Path, name: &str, seed: u64) -> PathBuf {
+    let (pre, fts) = synthetic_planner_zoo(3, seed);
+    let path = dir.join(name);
+    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+    path
+}
+
+#[test]
+fn watch_streams_incremental_frames_then_disconnects_cleanly() {
+    let (mut front, _server) = start_front();
+    // One request up front so the first frame carries real totals.
+    let reply = roundtrip(front.addr(), &infer_line(1));
+    assert!(reply.contains("logits"), "reply: {reply}");
+
+    let mut conn = TcpStream::connect(front.addr()).unwrap();
+    writeln!(conn, r#"{{"cmd": "watch", "interval_ms": 20}}"#).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut frames = Vec::new();
+    for i in 0..3 {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "stream ended before frame {i}");
+        frames.push(Json::parse(line.trim()).unwrap());
+    }
+    assert!(frames.len() >= 2, "need at least two incremental frames");
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.req("seq").unwrap().as_usize().unwrap(), i, "frame {i} out of order");
+        assert!(f.req("server").unwrap().get("latency_p50_us").is_some());
+    }
+    // Frame 0 reports totals so far; later frames report pure deltas.
+    let completed = |f: &Json| f.req("server").unwrap().req("completed").unwrap().as_usize();
+    assert_eq!(completed(&frames[0]).unwrap(), 1);
+    assert_eq!(completed(&frames[1]).unwrap(), 0);
+
+    // Client disconnect ends the watch without wedging the front-end:
+    // a fresh connection still gets served.
+    drop(reader);
+    drop(conn);
+    let reply = roundtrip(front.addr(), &infer_line(2));
+    assert!(reply.contains("logits"), "post-watch reply: {reply}");
+    front.shutdown();
+}
+
+#[test]
+fn traced_run_exports_chrome_json_covering_four_categories() {
+    let dir = tmpdir("trace");
+    let path = pack(&dir, "zoo.qtvc", 11);
+
+    tvq::obs::trace::clear();
+    tvq::obs::trace::enable();
+
+    // Registry spans: open + section reads.
+    let reg = Registry::open(&path).unwrap();
+    reg.load_task_vector(0).unwrap();
+
+    // Merge + cache spans: a fused merge built through the model cache.
+    let (pre, _fts) = synthetic_planner_zoo(3, 11);
+    let cache = Arc::new(ModelCache::new());
+    let source = PackedRegistrySource::open(&path).unwrap();
+    cache.get_or_build_merged(&TaskArithmetic::default(), &pre, &source).unwrap();
+
+    // Control spans: variant lifecycle (load/admit/service/drain).
+    let plane = ControlPlane::new(Arc::new(ModelCache::new()));
+    let variant = plane.load_variant("zoo", &path, &VariantConfig::default()).unwrap();
+    let rx = variant.submit_task_vector(0).unwrap();
+    rx.recv().unwrap().unwrap();
+    plane.drain_variant("zoo", None).unwrap();
+    assert!(variant.await_state(&VariantState::Terminated, std::time::Duration::from_secs(10)));
+
+    tvq::obs::trace::disable();
+    let out = dir.join("trace.json");
+    tvq::obs::trace::export_to_file(out.to_str().unwrap()).unwrap();
+
+    // The exported file must reparse with our own JSON parser and carry
+    // complete events from all four instrumented layers.
+    let text = std::fs::read_to_string(&out).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "trace exported no events");
+    let mut cats = std::collections::BTreeSet::new();
+    for ev in events {
+        assert_eq!(ev.req("ph").unwrap().as_str().unwrap(), "X");
+        assert!(ev.req("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ev.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+        cats.insert(ev.req("cat").unwrap().as_str().unwrap().to_string());
+    }
+    for needed in ["registry", "merge", "cache", "control"] {
+        assert!(cats.contains(needed), "missing category {needed:?}; saw {cats:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn status_json_carries_quantiles_and_speedup() {
+    let (front, _server) = start_front();
+    for t in 0..4 {
+        let reply = roundtrip(front.addr(), &infer_line(t));
+        assert!(reply.contains("logits"), "reply: {reply}");
+    }
+    let reply = roundtrip(front.addr(), r#"{"cmd": "status"}"#);
+    let parsed = Json::parse(reply.trim()).unwrap();
+    let server = parsed.req("server").unwrap();
+    assert_eq!(server.req("completed").unwrap().as_usize().unwrap(), 4);
+    assert!(server.req("latency_p50_us").unwrap().as_f64().unwrap() > 0.0);
+    assert!(server.req("latency_p99_us").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(server.req("latency_count").unwrap().as_usize().unwrap(), 4);
+    // Present even when zero: one schema for the status payload.
+    assert!(server.req("merge_build_speedup").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(server.req("queue_wait_us").unwrap().get("p50").is_some());
+    assert!(server.req("pool").unwrap().get("workers").is_some());
+}
