@@ -15,12 +15,17 @@
 #   obs         observability suite: lock-free histograms, watch
 #               streaming, trace export
 #               (TVQ_SMOKE=1 cargo test --test obs_integration)
+#   dynmerge    dynamic-merging suite: routed delta patches bit-identical
+#               to full re-merges, router determinism
+#               (TVQ_SMOKE=1 cargo test --test dynamic_merge)
 #   example     packed_registry example end-to-end
-#   tabP        planner experiment smoke (TVQ_SMOKE=1)
+#   tabP        planner + dynamic-merge experiment smoke (TVQ_SMOKE=1,
+#               runs `experiment tabP` then `experiment tabR`)
 #   bench-diff  perf_registry bench -> BENCH_registry.json -> tvq bench diff
 #               against rust/benches/baselines/BENCH_registry.json (±20%;
 #               uncalibrated baselines record instead of gating, but the
-#               within-run mmap-vs-pread ordering invariants always apply)
+#               within-run ordering invariants — mmap vs pread, threaded
+#               vs sequential, delta patch vs full re-merge — always apply)
 #   doc         cargo doc --no-deps with warnings denied
 #   fmt         cargo fmt --check
 #   clippy      cargo clippy --all-targets with warnings denied
@@ -36,8 +41,8 @@ cd "$(dirname "$0")"
 CARGO_FLAGS=(--offline)
 BENCH_TOLERANCE="${TVQ_BENCH_TOLERANCE:-0.20}"
 
-STAGE_NAMES=(preflight build test control obs example tabP bench-diff doc fmt clippy)
-QUICK_STAGES=(preflight build test control obs)
+STAGE_NAMES=(preflight build test control obs dynmerge example tabP bench-diff doc fmt clippy)
+QUICK_STAGES=(preflight build test control obs dynmerge)
 
 declare -a RAN_STAGES=()
 declare -a RAN_TIMES=()
@@ -81,12 +86,21 @@ stage_obs() {
     TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test obs_integration
 }
 
+stage_dynmerge() {
+    # Same pattern as `control` / `obs`: the full `test` stage runs this
+    # suite too; the named stage gives an isolated signal on the routed
+    # delta-patch bit-exactness contract.
+    TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test dynamic_merge
+}
+
 stage_example() {
     cargo run --release "${CARGO_FLAGS[@]}" --example packed_registry > /dev/null
 }
 
 stage_tabP() {
-    TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabP > /dev/null
+    # && chain for the same errexit-suppression reason as bench-diff.
+    TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabP > /dev/null \
+        && TVQ_SMOKE=1 cargo run --release "${CARGO_FLAGS[@]}" --bin tvq -- experiment tabR > /dev/null
 }
 
 stage_bench-diff() {

@@ -15,14 +15,16 @@
 //! `BENCH_registry.json` (path overridable via `TVQ_BENCH_OUT`) that
 //! `tvq bench diff` gates in CI: within-run ordering invariants (mmap
 //! section reads must not be slower than pread, N-thread fused merge
-//! must not be slower than sequential) always apply, per-case
-//! regression vs the committed baseline applies once the baseline is
-//! calibrated.  See `rust/src/util/benchcmp.rs`.
+//! must not be slower than sequential, and a one-task routed delta
+//! patch must not be slower than the full re-merge it replaces) always
+//! apply, per-case regression vs the committed baseline applies once
+//! the baseline is calibrated.  See `rust/src/util/benchcmp.rs`.
 //!
 //! Run: `cargo bench --bench perf_registry`
 
 use tvq::checkpoint::{Checkpoint, CheckpointStore};
-use tvq::merge::TaskArithmetic;
+use tvq::coordinator::router::{merge_spec_with_pool, MergeSpec};
+use tvq::merge::{MergedModel, TaskArithmetic};
 use tvq::planner::{build_planned_registry, fused_merge, fused_merge_with_pool, PlannerConfig};
 use tvq::quant::QuantScheme;
 use tvq::registry::{
@@ -234,6 +236,34 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // Dynamic routing: the one-task delta patch the ModelCache serves on
+    // a warm neighbor (clone cached floats + decode one tau + one axpy)
+    // vs the full canonical re-merge of the same 4-task spec.  The patch
+    // touches 1/4 of the task vectors, so within one run it must not be
+    // slower than the re-merge — that ordering is the whole point of
+    // delta patching, and the invariant below gates it.
+    let src = PackedRegistrySource::open(&path)?;
+    let spec = MergeSpec::new(&[0, 1, 2, 3], &[0.3, 0.2, -0.1, 0.25])?;
+    let (parent_spec, patch_task, patch_lam) = spec.parent().expect("4-task spec has a parent");
+    let pool = Pool::global();
+    let parent = match merge_spec_with_pool(&parent_spec, &pre, &src, pool)? {
+        MergedModel::Shared(ck) => ck,
+        _ => unreachable!("routed merges are shared"),
+    };
+    results.push(b.run_throughput("routed_patch_one_task", params as f64, || {
+        let tau = src.registry().load_task_vector_with_pool(patch_task, pool).unwrap();
+        let mut out = parent.clone();
+        out.axpy(patch_lam, &tau).unwrap();
+        std::hint::black_box(out);
+    }));
+    results.push(b.run_throughput(
+        "routed_full_remerge_4task",
+        (params * spec.len()) as f64,
+        || {
+            std::hint::black_box(merge_spec_with_pool(&spec, &pre, &src, pool).unwrap());
+        },
+    ));
+
     report("registry load/merge", &results);
 
     // Machine-readable report for the CI regression gate.  The declared
@@ -253,6 +283,7 @@ fn main() -> anyhow::Result<()> {
         &[
             ("section_read_mmap", "section_read_pread"),
             ("merge8_fused_threads_tN", "merge8_fused_threads_t1"),
+            ("routed_patch_one_task", "routed_full_remerge_4task"),
         ],
     );
     std::fs::write(&out, doc.to_string_compact())?;

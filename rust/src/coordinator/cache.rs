@@ -47,6 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::metrics::Metrics;
+use super::router::{merge_spec_with_pool, MergeSpec};
 use crate::checkpoint::Checkpoint;
 use crate::merge::{MergedModel, Merger};
 use crate::obs;
@@ -349,6 +350,75 @@ impl ModelCache {
                 }
                 built
             })?;
+        self.register_source(source);
+        Ok(built)
+    }
+
+    /// Build (or fetch) the routed dynamic variant for `spec` — the
+    /// incremental-merge serving path.
+    ///
+    /// On a miss the leader first looks for the spec's one-step patch
+    /// ancestor ([`MergeSpec::parent`](super::router::MergeSpec::parent):
+    /// the same request minus its highest task) among cached variants.
+    /// If present, the new variant is `parent + lambda_t * tau_t` — one
+    /// task-vector decode plus one signed axpy over the cached floats,
+    /// instead of a full re-merge.  Because the canonical routed merge
+    /// ([`merge_spec_with_pool`](super::router::merge_spec_with_pool))
+    /// accumulates sequentially in ascending task order, the patch
+    /// replays exactly its final accumulation step: **every** variant
+    /// this method serves — patched or fully merged, at any thread
+    /// count — is bit-identical to the canonical full merge of its spec,
+    /// so patch chains (A -> B -> back to A) return byte-identical
+    /// floats.  Pinned by `tests/dynamic_merge.rs`.
+    ///
+    /// Patches record [`Metrics::record_delta_patch`]; full builds
+    /// record [`Metrics::record_merge_build`], as elsewhere.
+    /// Single-flight, capacity and source-registration semantics are
+    /// those of [`get_or_build_merged`](Self::get_or_build_merged).
+    pub fn get_or_merge_routed(
+        &self,
+        spec: &MergeSpec,
+        pre: &Checkpoint,
+        source: &dyn TaskVectorSource,
+    ) -> Result<Arc<MergedModel>> {
+        self.register_source(source);
+        let source_id = source.source_id();
+        let (method, scheme) = spec.variant_key(&source_id);
+        let pool = Pool::global();
+        let built = self.get_or_build_sized(&method, &scheme, pre.fp32_bytes(), || {
+            // One-task delta patch: the parent lookup is a plain cache
+            // hit (bumping its recency, so a live patch lineage resists
+            // eviction).  The parent Arc is cloned out under the lock
+            // and the patch itself runs lock-free.
+            if let Some((parent, t, lam)) = spec.parent() {
+                let parent_key = parent.variant_key(&source_id);
+                let base = Self::hit(&mut self.state.lock().unwrap(), &parent_key);
+                if let Some(base) = base {
+                    if let MergedModel::Shared(cached) = &*base {
+                        let _s = obs::span(obs::Category::Cache, "delta_patch");
+                        let wall = Instant::now();
+                        let tau = source.task_vector_with_pool(t, pool)?;
+                        let mut out = cached.clone();
+                        out.axpy(lam, &tau)?;
+                        if let Some(metrics) = self.metrics.get() {
+                            metrics.record_delta_patch(wall.elapsed());
+                        }
+                        return Ok(MergedModel::Shared(out));
+                    }
+                }
+            }
+            // No cached neighbor: full canonical merge.
+            let wall = Instant::now();
+            let busy0 = pool.busy_ns();
+            let built = merge_spec_with_pool(spec, pre, source, pool);
+            if let (Some(metrics), Ok(_)) = (self.metrics.get(), &built) {
+                metrics.record_merge_build(
+                    wall.elapsed(),
+                    Duration::from_nanos(pool.busy_ns().saturating_sub(busy0)),
+                );
+            }
+            built
+        })?;
         self.register_source(source);
         Ok(built)
     }
@@ -763,6 +833,107 @@ mod tests {
         // ...and a cache hit records nothing further.
         cache.get_or_build_merged(&ta, &pre, &src).unwrap();
         assert_eq!(metrics.snapshot().merge_builds, 1);
+    }
+
+    /// A deterministic multi-task source for routed-merge tests.
+    struct RoutedZoo {
+        taus: Vec<Checkpoint>,
+    }
+
+    impl RoutedZoo {
+        fn new(n_tasks: usize) -> Self {
+            let taus = (0..n_tasks)
+                .map(|t| {
+                    let mut rng = crate::util::rng::Rng::new(90 + t as u64);
+                    let mut ck = Checkpoint::new();
+                    ck.insert("w", Tensor::randn(&[6, 6], 0.05, &mut rng));
+                    ck
+                })
+                .collect();
+            Self { taus }
+        }
+    }
+
+    impl crate::registry::TaskVectorSource for RoutedZoo {
+        fn n_tasks(&self) -> usize {
+            self.taus.len()
+        }
+        fn task_name(&self, t: usize) -> String {
+            format!("task{t:02}")
+        }
+        fn task_vector(&self, t: usize) -> Result<Checkpoint> {
+            Ok(self.taus[t].clone())
+        }
+        fn scheme_label(&self) -> String {
+            "FAKE".into()
+        }
+        fn source_id(&self) -> String {
+            "routed-zoo".into()
+        }
+    }
+
+    fn bits_equal(a: &Checkpoint, b: &Checkpoint) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b.iter()).all(|((na, ta), (nb, tb))| {
+                na == nb
+                    && ta.data().len() == tb.data().len()
+                    && ta
+                        .data()
+                        .iter()
+                        .zip(tb.data())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+    }
+
+    #[test]
+    fn routed_patch_is_bit_identical_to_full_merge() {
+        let zoo = RoutedZoo::new(3);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::randn(&[6, 6], 0.1, &mut rng));
+
+        let warm = ModelCache::new();
+        let metrics = Arc::new(crate::coordinator::Metrics::new());
+        warm.set_metrics(metrics.clone());
+        let parent = MergeSpec::new(&[0, 1], &[0.3, 0.2]).unwrap();
+        let child = MergeSpec::new(&[0, 1, 2], &[0.3, 0.2, -0.1]).unwrap();
+        warm.get_or_merge_routed(&parent, &pre, &zoo).unwrap();
+        let patched = warm.get_or_merge_routed(&child, &pre, &zoo).unwrap();
+        assert_eq!(metrics.snapshot().merge_builds, 1, "parent was a full build");
+        assert_eq!(metrics.snapshot().delta_patches, 1, "child must patch, not re-merge");
+
+        // A cold cache full-merges the same spec: bytes must match.
+        let cold = ModelCache::new();
+        let full = cold.get_or_merge_routed(&child, &pre, &zoo).unwrap();
+        assert!(bits_equal(patched.for_task(0), full.for_task(0)));
+        // Repeat requests hit, recording nothing further.
+        warm.get_or_merge_routed(&child, &pre, &zoo).unwrap();
+        assert_eq!(metrics.snapshot().delta_patches, 1);
+    }
+
+    #[test]
+    fn patch_requires_identical_prefix_lambdas() {
+        // A prefix at *different* lambdas is a different parent key, so
+        // the request full-merges instead of patching off the wrong base.
+        let zoo = RoutedZoo::new(3);
+        let mut pre = Checkpoint::new();
+        pre.insert("w", Tensor::zeros(&[6, 6]));
+        let cache = ModelCache::new();
+        let metrics = Arc::new(crate::coordinator::Metrics::new());
+        cache.set_metrics(metrics.clone());
+        cache
+            .get_or_merge_routed(&MergeSpec::new(&[0, 1], &[0.3, 0.2]).unwrap(), &pre, &zoo)
+            .unwrap();
+        cache
+            .get_or_merge_routed(
+                &MergeSpec::new(&[0, 1, 2], &[0.3, 0.25, -0.1]).unwrap(),
+                &pre,
+                &zoo,
+            )
+            .unwrap();
+        let s = metrics.snapshot();
+        assert_eq!(s.merge_builds, 2);
+        assert_eq!(s.delta_patches, 0);
     }
 
     #[test]

@@ -34,12 +34,20 @@ pub struct Metrics {
     /// the pool-side decode/quantize time summed across threads, so
     /// `busy / wall` is the realized parallel speedup.
     merge_build_busy_us: AtomicU64,
+    /// One-task delta patches served by the model cache in place of a
+    /// full re-merge (see `ModelCache::get_or_merge_routed`).
+    pub delta_patches: AtomicU64,
+    /// Total wall-clock time of those patches, microseconds.
+    delta_patch_wall_us: AtomicU64,
     /// End-to-end latency (submit -> response), nanoseconds.
     pub latency: Histogram,
     /// Queue wait (submit -> executor pickup), nanoseconds.
     pub queue_wait: Histogram,
     /// Per-build merge wall time, nanoseconds.
     pub merge_build: Histogram,
+    /// Per-patch wall time, nanoseconds (one task-vector decode + one
+    /// axpy — compare against `merge_build` for the patch win).
+    pub delta_patch: Histogram,
 }
 
 impl Metrics {
@@ -74,6 +82,16 @@ impl Metrics {
         self.merge_build_busy_us
             .fetch_add(busy.as_micros() as u64, Ordering::Relaxed);
         self.merge_build.record_ns(wall);
+    }
+
+    /// Record one incremental delta patch: a cached neighbor variant was
+    /// promoted to the requested one by a single signed axpy instead of
+    /// a full re-merge.
+    pub fn record_delta_patch(&self, wall: Duration) {
+        self.delta_patches.fetch_add(1, Ordering::Relaxed);
+        self.delta_patch_wall_us
+            .fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+        self.delta_patch.record_ns(wall);
     }
 
     /// Clear latency/queue-wait histograms and batch counters
@@ -120,6 +138,9 @@ impl Metrics {
             merge_build_wall_ms: wall_us as f64 / 1e3,
             merge_build_busy_ms: busy_us as f64 / 1e3,
             merge_build_hist: self.merge_build.summary(),
+            delta_patches: self.delta_patches.load(Ordering::Relaxed),
+            delta_patch_wall_ms: self.delta_patch_wall_us.load(Ordering::Relaxed) as f64 / 1e3,
+            delta_patch_hist: self.delta_patch.summary(),
             pool_workers: worker_busy.len(),
             pool_busy_min_ms: if worker_busy.is_empty() { 0.0 } else { bmin as f64 / 1e6 },
             pool_busy_max_ms: bmax as f64 / 1e6,
@@ -156,6 +177,12 @@ pub struct MetricsSnapshot {
     pub merge_build_busy_ms: f64,
     /// Per-build wall-time histogram summary, nanoseconds.
     pub merge_build_hist: HistogramSummary,
+    /// One-task delta patches served in place of full re-merges.
+    pub delta_patches: u64,
+    /// Total wall-clock of delta patches, ms.
+    pub delta_patch_wall_ms: f64,
+    /// Per-patch wall-time histogram summary, nanoseconds.
+    pub delta_patch_hist: HistogramSummary,
     /// Global pool width and per-worker busy spread (shard-imbalance
     /// signal: a max far above the mean means uneven shards).
     pub pool_workers: usize,
@@ -204,6 +231,12 @@ impl MetricsSnapshot {
                 self.merge_builds,
                 self.merge_build_wall_ms,
                 self.merge_build_speedup()
+            ));
+        }
+        if self.delta_patches > 0 {
+            s.push_str(&format!(
+                " | delta patches {} ({:.0} ms wall)",
+                self.delta_patches, self.delta_patch_wall_ms
             ));
         }
         if self.pool_busy_max_ms > 0.0 {
@@ -294,6 +327,9 @@ impl MetricsSnapshot {
             ("merge_build_busy_ms", Json::num(self.merge_build_busy_ms)),
             ("merge_build_speedup", Json::num(self.merge_build_speedup())),
             ("merge_build_ms", self.merge_build_hist.to_json_scaled(1e6)),
+            ("delta_patches", Json::num(self.delta_patches as f64)),
+            ("delta_patch_wall_ms", Json::num(self.delta_patch_wall_ms)),
+            ("delta_patch_ms", self.delta_patch_hist.to_json_scaled(1e6)),
             (
                 "pool",
                 Json::obj(vec![
@@ -320,6 +356,11 @@ impl MetricsSnapshot {
         counter("requests_failed_total", "Requests failed in execution.", self.failed);
         counter("batches_total", "Batches executed.", self.batches);
         counter("merge_builds_total", "Merge builds completed.", self.merge_builds);
+        counter(
+            "delta_patches_total",
+            "One-task delta patches served instead of full re-merges.",
+            self.delta_patches,
+        );
         let _ = writeln!(out, "# TYPE tvq_mean_batch_size gauge");
         let _ = writeln!(out, "tvq_mean_batch_size {}", self.mean_batch_size);
         let _ = writeln!(out, "# TYPE tvq_merge_build_speedup gauge");
@@ -338,6 +379,7 @@ impl MetricsSnapshot {
         );
         prometheus_summary_ns(out, "queue_wait", "Submit-to-executor queue wait.", &self.queue_wait);
         prometheus_summary_ns(out, "merge_build", "Per-build merge wall time.", &self.merge_build_hist);
+        prometheus_summary_ns(out, "delta_patch", "Per-patch incremental merge wall time.", &self.delta_patch_hist);
         let _ = writeln!(out, "# TYPE tvq_pool_workers gauge");
         let _ = writeln!(out, "tvq_pool_workers {}", self.pool_workers);
         for (k, v) in [
@@ -441,6 +483,29 @@ mod tests {
         assert!((s.merge_build_wall_ms - 20.0).abs() < 1e-9);
         assert!((s.merge_build_speedup() - 3.0).abs() < 1e-9);
         assert!(s.summary().contains("merge builds 2"), "{}", s.summary());
+    }
+
+    #[test]
+    fn delta_patch_timing_records() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.delta_patches, 0);
+        assert!(!s.summary().contains("delta patches"));
+        m.record_delta_patch(Duration::from_millis(2));
+        m.record_delta_patch(Duration::from_millis(3));
+        let s = m.snapshot();
+        assert_eq!(s.delta_patches, 2);
+        assert_eq!(s.delta_patch_hist.count, 2);
+        assert!((s.delta_patch_wall_ms - 5.0).abs() < 1e-9);
+        assert!(s.summary().contains("delta patches 2"), "{}", s.summary());
+        // One schema: JSON and Prometheus carry the same fields.
+        let j = s.to_json();
+        assert_eq!(j.req("delta_patches").unwrap().as_usize().unwrap(), 2);
+        assert!(j.req("delta_patch_ms").unwrap().req("p99").is_ok());
+        let mut text = String::new();
+        s.prometheus_into(&mut text);
+        assert!(text.contains("tvq_delta_patches_total 2"));
+        assert!(text.contains("# TYPE tvq_delta_patch_seconds summary"));
     }
 
     #[test]

@@ -22,6 +22,14 @@
 //! * [`server`] — the running service: router, executor pool, backpressure.
 //! * [`cache`] — merged-model cache keyed by (merge method, quant scheme),
 //!   so a fleet of model variants shares one pre-trained trunk in memory.
+//!   Doubles as the incremental-merge engine: routed requests that differ
+//!   from a cached variant by one appended task are served by a single
+//!   signed axpy over the cached floats instead of a full re-merge
+//!   ([`ModelCache::get_or_merge_routed`]), bit-identically.
+//! * [`router`] — per-request dynamic merging: canonicalizes a declared
+//!   task subset + lambdas into a deterministic [`MergeSpec`]/variant
+//!   key, and defines the canonical ascending-order merge those variants
+//!   are built by.
 //! * [`metrics`] — lock-free counters and log2-bucket histograms
 //!   (latency, queue wait, merge build — see [`crate::obs`]), plus the
 //!   per-variant counters the control plane reports.  The TCP front
@@ -35,6 +43,7 @@ pub mod batcher;
 pub mod cache;
 pub mod control;
 pub mod metrics;
+pub mod router;
 pub mod server;
 pub mod tcp;
 
@@ -42,6 +51,7 @@ pub use batcher::{Batch, Batcher};
 pub use cache::ModelCache;
 pub use control::{ControlError, ControlPlane, GenerationalRegistry, Variant, VariantConfig, VariantState};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{MergeSpec, Router};
 pub use server::{ServeError, Server, ServerConfig, ServeModel};
 pub use tcp::{StatusSource, TcpFront};
 

@@ -1,0 +1,250 @@
+//! Per-request dynamic merging: route a declared task subset + merge
+//! coefficients to a deterministic variant key.
+//!
+//! A static deployment warms a handful of named variants; a *dynamic*
+//! one lets each request declare which tasks it wants composed and at
+//! what strengths ("tasks 2 and 5 at 0.3, drop task 7").  The router
+//! turns that declaration into a canonical [`MergeSpec`] — sorted unique
+//! task indices, coefficients carried bit-exactly — so every equivalent
+//! request (any argument order, any lambda that round-trips to the same
+//! f32 bits) lands on the **same** [`VariantKey`] and therefore the same
+//! cached model, single-flight build, and delta-patch lineage
+//! ([`ModelCache::get_or_merge_routed`](super::ModelCache::get_or_merge_routed)).
+//!
+//! The routed merge semantics are task arithmetic with per-task
+//! coefficients:
+//!
+//! ```text
+//! theta = theta_pre + sum_i lambda_i * tau_{t_i}      (ascending t_i)
+//! ```
+//!
+//! accumulated **sequentially in ascending task order** — the canonical
+//! accumulation every serving path replays, which is what makes a
+//! one-task delta patch (`cached + lambda_t * tau_t`) bit-identical to
+//! the full re-merge it replaces (see [`merge_spec_with_pool`]).
+
+use anyhow::{bail, Result};
+
+use super::cache::VariantKey;
+use crate::checkpoint::Checkpoint;
+use crate::merge::MergedModel;
+use crate::registry::TaskVectorSource;
+use crate::util::pool::Pool;
+
+/// Method name under which routed dynamic variants are cached; keeps
+/// them in a separate key namespace from named static mergers
+/// (`"task_arithmetic"`, `"ties"`, ...).
+pub const DYNAMIC_METHOD: &str = "dynmerge";
+
+/// A canonical merge request: unique task indices in ascending order,
+/// each with its signed coefficient.  Equality of specs is equality of
+/// served bytes — the lambdas compare by `f32::to_bits`, so `0.3` and
+/// `0.2 + 0.1` (which differ in the last ulp) are *different* variants,
+/// exactly as they would be different float outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergeSpec {
+    /// `(task index, lambda)`, strictly ascending by task index.
+    pairs: Vec<(usize, f32)>,
+}
+
+impl MergeSpec {
+    /// Canonicalize a request: `tasks[i]` merges at `lambdas[i]`.
+    /// Rejects empty requests, length mismatches, duplicate tasks and
+    /// non-finite coefficients (NaN lambdas would break key equality).
+    pub fn new(tasks: &[usize], lambdas: &[f32]) -> Result<Self> {
+        if tasks.is_empty() {
+            bail!("merge request names no tasks");
+        }
+        if tasks.len() != lambdas.len() {
+            bail!(
+                "merge request names {} tasks but {} lambdas",
+                tasks.len(),
+                lambdas.len()
+            );
+        }
+        let mut pairs: Vec<(usize, f32)> = Vec::with_capacity(tasks.len());
+        for (&t, &lam) in tasks.iter().zip(lambdas) {
+            if !lam.is_finite() {
+                bail!("task {t} has a non-finite lambda ({lam})");
+            }
+            pairs.push((t, lam));
+        }
+        pairs.sort_by_key(|&(t, _)| t);
+        if let Some(w) = pairs.windows(2).find(|w| w[0].0 == w[1].0) {
+            bail!("merge request names task {} twice", w[0].0);
+        }
+        Ok(Self { pairs })
+    }
+
+    /// `(task, lambda)` pairs, strictly ascending by task index.
+    pub fn pairs(&self) -> &[(usize, f32)] {
+        &self.pairs
+    }
+
+    /// Number of tasks in the request.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Task indices, ascending.
+    pub fn tasks(&self) -> Vec<usize> {
+        self.pairs.iter().map(|&(t, _)| t).collect()
+    }
+
+    /// The one-step patch ancestor: this spec with its **highest** task
+    /// dropped, plus the dropped `(task, lambda)`.  `None` for
+    /// single-task specs.  The canonical merge accumulates in ascending
+    /// task order, so `merge(self) == merge(parent) + lambda * tau` holds
+    /// bit-for-bit — dropping any *other* task would not commute.
+    pub fn parent(&self) -> Option<(MergeSpec, usize, f32)> {
+        if self.pairs.len() < 2 {
+            return None;
+        }
+        let mut pairs = self.pairs.clone();
+        let (t, lam) = pairs.pop().expect("len >= 2");
+        Some((MergeSpec { pairs }, t, lam))
+    }
+
+    /// The canonical key fragment: `t<idx>*<lambda bits as hex>` joined
+    /// with `+`.  Bit-exact and order-independent — the router's
+    /// determinism contract.
+    pub fn key_fragment(&self) -> String {
+        let mut s = String::new();
+        for (i, &(t, lam)) in self.pairs.iter().enumerate() {
+            if i > 0 {
+                s.push('+');
+            }
+            s.push_str(&format!("t{t}*{:08x}", lam.to_bits()));
+        }
+        s
+    }
+
+    /// The [`ModelCache`](super::ModelCache) key this spec resolves to
+    /// over a given source.  Qualified by the source identity so two
+    /// registries packed at the same scheme never share a routed variant.
+    pub fn variant_key(&self, source_id: &str) -> VariantKey {
+        (DYNAMIC_METHOD.to_string(), format!("{source_id}|{}", self.key_fragment()))
+    }
+}
+
+/// Validates requests against a source's task count and produces
+/// canonical [`MergeSpec`]s.  Stateless beyond the bound task count —
+/// routing the same request twice yields byte-identical keys.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    n_tasks: usize,
+}
+
+impl Router {
+    pub fn new(n_tasks: usize) -> Self {
+        Self { n_tasks }
+    }
+
+    /// Task count this router validates against.
+    pub fn n_tasks(&self) -> usize {
+        self.n_tasks
+    }
+
+    /// Canonicalize and validate one request.
+    pub fn route(&self, tasks: &[usize], lambdas: &[f32]) -> Result<MergeSpec> {
+        let spec = MergeSpec::new(tasks, lambdas)?;
+        if let Some(&(t, _)) = spec.pairs().last() {
+            if t >= self.n_tasks {
+                bail!("task index {t} out of range ({} tasks)", self.n_tasks);
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// The canonical routed merge: task-vector loads fan out across `pool`,
+/// the accumulate runs on the caller's thread **sequentially in
+/// ascending task order** — so the merged floats are bit-identical at
+/// every thread count, and bit-identical to a one-task delta patch of
+/// the spec's [`parent`](MergeSpec::parent) (the patch replays exactly
+/// the final accumulation step).
+pub fn merge_spec_with_pool(
+    spec: &MergeSpec,
+    pre: &Checkpoint,
+    source: &dyn TaskVectorSource,
+    pool: &Pool,
+) -> Result<MergedModel> {
+    for &(t, _) in spec.pairs() {
+        if t >= source.n_tasks() {
+            bail!("task index {t} out of range ({} tasks)", source.n_tasks());
+        }
+    }
+    // Mirrors merge_from_source_with_pool: one task parallelizes inside
+    // the load, several parallelize across tasks — either way each tau
+    // is bit-identical to its sequential decode.
+    let taus: Vec<Checkpoint> = if spec.len() == 1 {
+        vec![source.task_vector_with_pool(spec.pairs()[0].0, pool)?]
+    } else {
+        pool.try_map(spec.tasks(), |_, t| source.task_vector(t))?
+    };
+    let mut out = pre.clone();
+    for (&(_, lam), tau) in spec.pairs().iter().zip(&taus) {
+        out.axpy(lam, tau)?;
+    }
+    Ok(MergedModel::Shared(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_order_independent() {
+        let router = Router::new(8);
+        let a = router.route(&[5, 2, 7], &[0.1, 0.3, -0.2]).unwrap();
+        let b = router.route(&[2, 7, 5], &[0.3, -0.2, 0.1]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.variant_key("src"), b.variant_key("src"));
+        assert_eq!(a.tasks(), vec![2, 5, 7]);
+        // Routing the same request again yields the identical key.
+        let c = router.route(&[5, 2, 7], &[0.1, 0.3, -0.2]).unwrap();
+        assert_eq!(a.variant_key("src"), c.variant_key("src"));
+    }
+
+    #[test]
+    fn key_is_bit_exact_in_lambda_and_qualified_by_source() {
+        let router = Router::new(4);
+        let a = router.route(&[1], &[0.3]).unwrap();
+        let b = router.route(&[1], &[0.2 + 0.1]).unwrap(); // differs in the last ulp
+        assert_ne!(0.3f32.to_bits(), (0.2f32 + 0.1f32).to_bits());
+        assert_ne!(a.variant_key("src"), b.variant_key("src"));
+        assert_eq!(a.key_fragment(), format!("t1*{:08x}", 0.3f32.to_bits()));
+        // Same spec over two sources must not collide.
+        assert_ne!(a.variant_key("zoo-a"), a.variant_key("zoo-b"));
+        assert_eq!(a.variant_key("zoo-a").0, DYNAMIC_METHOD);
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected() {
+        let router = Router::new(4);
+        let err = |r: Result<MergeSpec>| r.unwrap_err().to_string();
+        assert!(err(router.route(&[], &[])).contains("no tasks"));
+        assert!(err(router.route(&[0, 1], &[0.3])).contains("2 tasks but 1 lambdas"));
+        assert!(err(router.route(&[1, 1], &[0.3, 0.2])).contains("task 1 twice"));
+        assert!(err(router.route(&[4], &[0.3])).contains("out of range"));
+        assert!(err(router.route(&[0], &[f32::NAN])).contains("non-finite"));
+        assert!(err(router.route(&[0], &[f32::INFINITY])).contains("non-finite"));
+    }
+
+    #[test]
+    fn parent_drops_the_highest_task_only() {
+        let spec = MergeSpec::new(&[7, 2, 5], &[-0.2, 0.3, 0.1]).unwrap();
+        let (parent, t, lam) = spec.parent().unwrap();
+        assert_eq!(t, 7);
+        assert_eq!(lam, -0.2);
+        assert_eq!(parent.tasks(), vec![2, 5]);
+        let (grand, t2, _) = parent.parent().unwrap();
+        assert_eq!(t2, 5);
+        assert_eq!(grand.tasks(), vec![2]);
+        assert!(grand.parent().is_none(), "single-task specs have no patch base");
+    }
+}

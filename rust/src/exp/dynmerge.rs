@@ -1,0 +1,180 @@
+//! Table R: routed per-request dynamic merging vs static variant
+//! serving at equal bytes (the serving companion to Table P).
+//!
+//! The claim under test is the router + delta-patch engine's reason to
+//! exist: a node holding **one** packed registry can serve an open-ended
+//! family of `(task subset, lambdas)` variants — each built on first
+//! request, each one-task extension served as a single signed axpy over
+//! a cached neighbor — where a static deployment must pre-materialize
+//! (and pay fp32 bytes for) every variant it might be asked for.  Every
+//! served variant is checked bit-for-bit against an independent
+//! from-scratch canonical merge; the table reports how each request was
+//! served (full build / delta patch / cache hit) and what the two
+//! strategies pay in bytes for the same variant family.
+//!
+//! Runs without PJRT (like `tab5`/`tabP`): `tvq experiment tabR`, or in
+//! CI smoke mode with `TVQ_SMOKE=1` (smaller zoo, same assertions).
+
+use anyhow::Result;
+
+use super::planner::synthetic_planner_zoo;
+use super::report::{finish, Table};
+use crate::coordinator::router::merge_spec_with_pool;
+use crate::coordinator::{ModelCache, Router};
+use crate::planner::{probe, solve, write_planned_registry, PlannerConfig};
+use crate::registry::PackedRegistrySource;
+use crate::util::pool::Pool;
+
+fn smoke() -> bool {
+    std::env::var_os("TVQ_SMOKE").is_some()
+}
+
+/// The deterministic request script: a growing patch chain over the
+/// first tasks (each step appends the next task — the delta-patch fast
+/// path), a revisit of the chain head (cache hit), then a disjoint
+/// subset and a lambda retune (both full merges: no cached neighbor).
+/// Returned as `(tasks, lambdas)` pairs fed through the [`Router`].
+pub fn request_script(n_tasks: usize) -> Vec<(Vec<usize>, Vec<f32>)> {
+    assert!(n_tasks >= 4, "script needs at least 4 tasks, got {n_tasks}");
+    let lam = 0.3f32;
+    let mut reqs = Vec::new();
+    // Chain: {0}, {0,1}, ..., {0..chain_len-1} — every step after the
+    // first has its predecessor cached.
+    let chain_len = n_tasks.min(4);
+    for k in 1..=chain_len {
+        let tasks: Vec<usize> = (0..k).collect();
+        reqs.push((tasks, vec![lam; k]));
+    }
+    // Revisit the full chain (pure cache hit).
+    reqs.push(((0..chain_len).collect(), vec![lam; chain_len]));
+    // A disjoint pair: no neighbor, full merge.
+    reqs.push((vec![n_tasks - 1, n_tasks - 2], vec![0.2, -0.1]));
+    // Retune the chain's lambdas: same subset, different coefficients —
+    // a different variant that must NOT patch off the old chain.
+    reqs.push(((0..chain_len).collect(), vec![lam * 0.5; chain_len]));
+    reqs
+}
+
+/// Regenerate Table R.
+pub fn tabr_dynamic() -> Result<Vec<Table>> {
+    let n_tasks = if smoke() { 4 } else { 8 };
+    let (pre, fts) = synthetic_planner_zoo(n_tasks, 0xD19A);
+    let dir = crate::util::repo_path("target/results/tabR_files");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir)?;
+
+    // Pack the zoo once; the whole variant family serves from this file.
+    let profile = probe(&pre, &fts, &PlannerConfig::default())?;
+    let plan = solve(&profile, u64::MAX)?;
+    let path = dir.join("zoo.qtvc");
+    let summary = write_planned_registry(&pre, &fts, &plan, &path)?;
+    let source = PackedRegistrySource::open(&path)?;
+
+    let cache = ModelCache::new();
+    let metrics = std::sync::Arc::new(crate::coordinator::Metrics::new());
+    cache.set_metrics(metrics.clone());
+    let router = Router::new(n_tasks);
+    let pool = Pool::global();
+
+    let mut table = Table::new(
+        "tabR",
+        "Routed dynamic merging over one packed registry: how each \
+         request was served, and bit-exactness vs an independent \
+         from-scratch merge of the same spec",
+        &["Request", "tasks", "served via", "wall ms", "bit-exact"],
+    );
+
+    let mut distinct_variants = 0usize;
+    for (i, (tasks, lambdas)) in request_script(n_tasks).iter().enumerate() {
+        let spec = router.route(tasks, lambdas)?;
+        let before = metrics.snapshot();
+        let t0 = std::time::Instant::now();
+        let served = cache.get_or_merge_routed(&spec, &pre, &source)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let after = metrics.snapshot();
+        let via = if after.delta_patches > before.delta_patches {
+            distinct_variants += 1;
+            "delta patch"
+        } else if after.merge_builds > before.merge_builds {
+            distinct_variants += 1;
+            "full build"
+        } else {
+            "cache hit"
+        };
+        // Independent canonical merge of the same spec, from scratch.
+        let reference = merge_spec_with_pool(&spec, &pre, &source, pool)?;
+        let mismatched = served
+            .for_task(0)
+            .iter()
+            .zip(reference.for_task(0).iter())
+            .flat_map(|((_, a), (_, b))| a.data().iter().zip(b.data()))
+            .filter(|(x, y)| x.to_bits() != y.to_bits())
+            .count();
+        anyhow::ensure!(
+            mismatched == 0,
+            "request {i} served {mismatched} floats differing from the canonical merge"
+        );
+        table.push_row(vec![
+            format!("r{i}"),
+            format!("{tasks:?}"),
+            via.to_string(),
+            format!("{wall_ms:.2}"),
+            "yes".to_string(),
+        ]);
+    }
+
+    // Equal-bytes comparison: what each strategy pays to hold this
+    // variant family.  Static serving materializes every distinct
+    // variant in fp32; the dynamic node holds the packed registry plus
+    // whatever the cache currently pins (LRU-bounded in production).
+    let static_bytes = distinct_variants * pre.fp32_bytes();
+    let s = metrics.snapshot();
+    let mut bytes = Table::new(
+        "tabR",
+        "Bytes to serve the same variant family: static pre-materialized \
+         fp32 variants vs one packed registry + dynamic cache",
+        &["Strategy", "bytes", "variants", "full builds", "delta patches"],
+    );
+    bytes.push_row(vec![
+        "static fp32 variants".into(),
+        static_bytes.to_string(),
+        distinct_variants.to_string(),
+        distinct_variants.to_string(),
+        "-".into(),
+    ]);
+    bytes.push_row(vec![
+        "dynamic (registry + cache)".into(),
+        (summary.file_bytes as usize + cache.resident_bytes()).to_string(),
+        distinct_variants.to_string(),
+        s.merge_builds.to_string(),
+        s.delta_patches.to_string(),
+    ]);
+    anyhow::ensure!(
+        s.delta_patches >= 1,
+        "the chained request script must exercise the delta-patch path"
+    );
+    finish("tabR", vec![table, bytes])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_script_exercises_patch_hit_and_miss() {
+        let reqs = request_script(8);
+        // Chain steps 2.. have their predecessor issued first.
+        for k in 1..4 {
+            assert_eq!(reqs[k].0, (0..=k).collect::<Vec<_>>());
+            assert_eq!(reqs[k - 1].0, (0..k).collect::<Vec<_>>());
+        }
+        // The revisit duplicates the chain head exactly.
+        assert_eq!(reqs[4], reqs[3]);
+        // The retune shares the subset but not the lambdas.
+        let last = reqs.last().unwrap();
+        assert_eq!(last.0, reqs[3].0);
+        assert_ne!(last.1, reqs[3].1);
+        // Scripts are deterministic.
+        assert_eq!(request_script(8), request_script(8));
+    }
+}

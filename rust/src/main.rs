@@ -542,23 +542,30 @@ example:
 }
 
 fn registry_usage() -> String {
-    "tvq registry — pack / inspect / verify packed .qtvc registries
+    "tvq registry — pack / inspect / verify / route packed .qtvc registries
 
 usage:
   tvq registry pack --out <file> [--scheme tvq4 | --budget <bytes|scheme>]
                     [--group 512] [--synthetic] [--preset .. --tasks .. --steps ..]
   tvq registry inspect <file>
   tvq registry verify <file>
+  tvq registry route <file> --tasks 0,2,5 [--lambdas 0.3,0.3,-0.1] [--chain]
 
 `verify` refuses mid-swap artifacts (`*.tmp`, `*.next`) with a non-zero
 exit: validate the serving path, not a file a rename is about to consume.
+
+`route` maps a dynamic merge request (task subset + per-task lambdas)
+to its canonical variant key and serves it through the incremental-merge
+cache; `--chain` issues every prefix first, so each later request is
+served as a one-task delta patch instead of a full re-merge.
 
 `pack --budget` invokes the sensitivity-driven pack planner: the budget
 is total file bytes, either a number (`1500000`) or a uniform scheme
 spelling (`rtvq3o2` = \"whatever that scheme would cost on disk\").  The
 planner's candidate set includes sparse DARE / TALL-mask arms (kind-4
-sections, QTVC v4).  `--synthetic` packs the built-in heterogeneous demo
-zoo instead of a PJRT-trained one (useful offline).
+sections, QTVC v4) and 1-bit binary-switch arms (kind-5 sections,
+QTVC v5).  `--synthetic` packs the built-in heterogeneous demo zoo
+instead of a PJRT-trained one (useful offline).
 
 Run `tvq registry <action> --help` for per-action details; copy-pasteable
 walkthroughs live in docs/CLI.md, the byte-level file format in
@@ -576,6 +583,7 @@ fn cmd_registry(argv: &[String]) -> Result<()> {
         "pack" => cmd_registry_pack(rest),
         "inspect" => cmd_registry_inspect(rest),
         "verify" => cmd_registry_verify(rest),
+        "route" => cmd_registry_route(rest),
         "--help" | "-h" | "help" => {
             println!("{}", registry_usage());
             Ok(())
@@ -604,9 +612,10 @@ fn cmd_registry_pack(argv: &[String]) -> Result<()> {
             .long_about(
                 "Without --budget, packs every task at one uniform scheme (QTVC v2).
 With --budget, runs the sensitivity probe + solver over the full candidate
-set — per-task TVQ widths, shared-base RTVQ splits, and the sparse
-DARE / TALL-mask arms — and compiles the winning plan into a
-mixed-precision registry (QTVC v3, or v4 when sparse arms are chosen).
+set — per-task TVQ widths, shared-base RTVQ splits, the sparse
+DARE / TALL-mask arms, and the 1-bit binary-switch arms — and compiles
+the winning plan into a mixed-precision registry (QTVC v3; v4 when
+sparse arms are chosen, v5 when 1-bit arms are).
 The budget is total file bytes, index included, and is respected exactly.
 
 examples:
@@ -686,7 +695,8 @@ fn cmd_registry_inspect(argv: &[String]) -> Result<()> {
         .long_about(
             "Opens the registry (header + CRC'd offset table only; payloads stay on
 disk) and prints one row per section: name, kind (0 task checkpoint,
-1 RTVQ base, 2 group, 3 plan, 4 sparse), offset, length, CRC, and the
+1 RTVQ base, 2 group, 3 plan, 4 sparse, 5 binary switch), offset,
+length, CRC, and the
 arm family serving that section (e.g. TVQ-INT4, RTVQ-B3O2 base,
 TALL-K25B4).  For planned registries the embedded pack plan and its
 per-tensor allocation follow, then the disk accounting vs the
@@ -767,6 +777,109 @@ example:
         acc.ideal_bytes,
         100.0 * acc.overhead_fraction(),
         100.0 * acc.fraction_of_fp32()
+    );
+    Ok(())
+}
+
+fn cmd_registry_route(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "tvq registry route",
+        "route a dynamic merge request through the incremental-merge cache",
+    )
+    .long_about(
+        "Canonicalizes the request (sorted unique task indices, bit-exact
+lambdas) into its variant key and serves it from the registry through
+the routed merge engine.  The composition is served over a zero trunk —
+the result is the composed task vector sum lambda_i * tau_i, which is
+what the registry alone can provide (the pre-trained trunk ships
+separately in a deployment).
+
+With --chain, every prefix of the (sorted) request is issued first:
+request k+1 then differs from cached request k by one appended task, so
+the engine serves it as a single signed axpy over the cached floats (a
+delta patch) instead of a full re-merge — the per-request log shows
+which path each one took, and the summary line the patch/build counts.
+
+examples:
+  tvq registry pack --synthetic --budget rtvq3o2 --out zoo.qtvc
+  tvq registry route zoo.qtvc --tasks 0,2,5
+  tvq registry route zoo.qtvc --tasks 0,1,2,3 --lambdas 0.3,0.3,0.2,-0.1 --chain",
+    )
+    .opt("tasks", "", "comma-separated task indices to compose (required)")
+    .opt("lambdas", "", "comma-separated per-task coefficients (default 0.3 each)")
+    .switch("chain", "issue every prefix first: a delta-patch walk up the request")
+    .positional_help("<registry.qtvc>  packed registry to serve from");
+    let args = cmd.parse(argv)?;
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: tvq registry route <file.qtvc> --tasks 0,2,5"))?;
+    let tasks_spec = args.get_str("tasks")?.to_string();
+    if tasks_spec.is_empty() {
+        bail!("--tasks is required (e.g. --tasks 0,2,5)");
+    }
+    let tasks: Vec<usize> = tasks_spec
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("bad task index {s:?}: {e}")))
+        .collect::<Result<_>>()?;
+    let lambdas_spec = args.get_str("lambdas")?.to_string();
+    let lambdas: Vec<f32> = if lambdas_spec.is_empty() {
+        vec![0.3; tasks.len()]
+    } else {
+        lambdas_spec
+            .split(',')
+            .map(|s| s.trim().parse::<f32>().map_err(|e| anyhow!("bad lambda {s:?}: {e}")))
+            .collect::<Result<_>>()?
+    };
+
+    let source = tvq::registry::PackedRegistrySource::open(&path)?;
+    let router = tvq::coordinator::Router::new(source.n_tasks());
+    let spec = router.route(&tasks, &lambdas)?;
+    // Zero trunk with the registry's tensor geometry: the served model is
+    // the composed task vector itself.
+    let pre = source.task_vector(spec.pairs()[0].0)?.scale(0.0);
+    let cache = tvq::coordinator::ModelCache::new();
+    let metrics = std::sync::Arc::new(tvq::coordinator::Metrics::new());
+    cache.set_metrics(metrics.clone());
+
+    let mut requests: Vec<tvq::coordinator::MergeSpec> = Vec::new();
+    if args.switch("chain") {
+        for k in 1..spec.len() {
+            let prefix = &spec.pairs()[..k];
+            let ts: Vec<usize> = prefix.iter().map(|&(t, _)| t).collect();
+            let ls: Vec<f32> = prefix.iter().map(|&(_, l)| l).collect();
+            requests.push(router.route(&ts, &ls)?);
+        }
+    }
+    requests.push(spec);
+    for spec in &requests {
+        let before = metrics.snapshot();
+        let t0 = std::time::Instant::now();
+        let served = cache.get_or_merge_routed(spec, &pre, &source)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let after = metrics.snapshot();
+        let via = if after.delta_patches > before.delta_patches {
+            "delta patch"
+        } else if after.merge_builds > before.merge_builds {
+            "full build"
+        } else {
+            "cache hit"
+        };
+        let (_, key) = spec.variant_key(&source.source_id());
+        println!(
+            "{key}\n  tasks {:?} -> {via} in {wall_ms:.2} ms ({} tensors)",
+            spec.tasks(),
+            served.for_task(0).len()
+        );
+    }
+    let s = metrics.snapshot();
+    println!(
+        "served {} request(s): {} full build(s), {} delta patch(es), {} resident B",
+        requests.len(),
+        s.merge_builds,
+        s.delta_patches,
+        cache.resident_bytes()
     );
     Ok(())
 }
@@ -900,14 +1013,16 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     let cmd = Command::new("tvq experiment", "regenerate a paper table/figure")
         .long_about(
             "Takes one experiment id, regenerates that table/figure, prints it and
-persists markdown under target/results/<id>.md.  `tab5` (storage) and
+persists markdown under target/results/<id>.md.  `tab5` (storage),
 `tabP` (pack planner: uniform vs dense-planned vs sparse-planned at
-equal byte budgets) run fully offline; every other id needs the PJRT
-runtime (`make artifacts`).  Set TVQ_SMOKE=1 to shrink tabP for CI.
+equal byte budgets) and `tabR` (routed dynamic merging vs static
+variant serving, bit-exactness audited) run fully offline; every other
+id needs the PJRT runtime (`make artifacts`).  Set TVQ_SMOKE=1 to
+shrink tabP/tabR for CI.
 
 examples:
   tvq experiment tabP
-  TVQ_SMOKE=1 tvq experiment tabP
+  TVQ_SMOKE=1 tvq experiment tabR
   tvq experiment tab1",
         );
     let args = cmd.parse(argv)?;

@@ -8,18 +8,19 @@
 //! 1. **probes** per-layer sensitivity ([`sensitivity`]): the exact byte
 //!    cost and reconstruction error of every candidate arm — per-task
 //!    group quantization at 1..=8 bits, shared-base/offset RTVQ splits,
-//!    and the sparse families (DARE drop-and-rescale, TALL-mask task
-//!    localization — masked-out weights at 0 bits) — against the f32
-//!    task vectors;
+//!    the sparse families (DARE drop-and-rescale, TALL-mask task
+//!    localization — masked-out weights at 0 bits), and the 1-bit binary
+//!    switch (sign bitmap + scales, after 1bit-Merging / Binary Task
+//!    Switch) — against the f32 task vectors;
 //! 2. **solves** the allocation ([`solve`]): greedy
 //!    marginal-error-per-byte over each tensor's convex cost/error
 //!    frontier, under a caller byte budget measured in real file bytes
 //!    (codes + group params + bitmasks + offset-table rows + the plan
 //!    section itself), degrading monotonically as the budget shrinks; and
 //! 3. **compiles** the winning [`PackPlan`] ([`plan`]) into a `QTVC`
-//!    v3/v4 registry of kind-2 [`GroupQuantized`] and kind-4
-//!    [`SparseGroupQuantized`] sections (byte layout:
-//!    `docs/WIRE_FORMAT.md`), served straight through the fused
+//!    v3/v4/v5 registry of kind-2 [`GroupQuantized`], kind-4
+//!    [`SparseGroupQuantized`] and kind-5 [`BinarySwitch`] sections (byte
+//!    layout: `docs/WIRE_FORMAT.md`), served straight through the fused
 //!    dequant-merge path ([`fused_merge`]).
 //!
 //! # Quickstart: plan → pack → serve
@@ -57,7 +58,7 @@ use anyhow::{bail, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::obs;
-use crate::quant::{GroupQuantized, SparseGroupQuantized};
+use crate::quant::{BinarySwitch, GroupQuantized, SparseGroupQuantized};
 use crate::registry::{PayloadView, Registry, RegistryBuilder, SectionScratch, WriteSummary};
 use crate::tensor::Tensor;
 use crate::util::pool::Pool;
@@ -84,6 +85,13 @@ pub struct PlannerConfig {
     /// score against the multi-task vector; masked-out weights cost 0
     /// bits (arXiv 2405.07813 applied as a storage arm).
     pub tall_arms: Vec<(u8, u8)>,
+    /// 1-bit binary-switch candidates, one per scale granularity:
+    /// `false` = per-group scales, `true` = one per-tensor scale
+    /// (1bit-Merging, arXiv 2502.10743; Binary Task Switch,
+    /// arXiv 2412.00054 — applied as a storage arm).  The cheapest arm
+    /// in the frontier and the payload the dynamic-merge path flips per
+    /// request.
+    pub onebit_arms: Vec<bool>,
 }
 
 impl Default for PlannerConfig {
@@ -94,6 +102,7 @@ impl Default for PlannerConfig {
             rtvq_arms: vec![(2, 1), (3, 1), (2, 2), (3, 2), (4, 2), (4, 3)],
             dare_arms: vec![(90, 4), (75, 3), (50, 2)],
             tall_arms: vec![(50, 2), (50, 3), (25, 3), (25, 4), (12, 4)],
+            onebit_arms: vec![false, true],
         }
     }
 }
@@ -103,7 +112,12 @@ impl PlannerConfig {
     /// families — the PR-2 planner, used as the comparison baseline in
     /// `tabP` and the sparse-frontier tests.
     pub fn dense_only() -> Self {
-        Self { dare_arms: Vec::new(), tall_arms: Vec::new(), ..Self::default() }
+        Self {
+            dare_arms: Vec::new(),
+            tall_arms: Vec::new(),
+            onebit_arms: Vec::new(),
+            ..Self::default()
+        }
     }
 
     pub fn check(&self) -> Result<()> {
@@ -114,8 +128,15 @@ impl PlannerConfig {
             && self.rtvq_arms.is_empty()
             && self.dare_arms.is_empty()
             && self.tall_arms.is_empty()
+            && self.onebit_arms.is_empty()
         {
             bail!("planner needs at least one candidate arm");
+        }
+        if self.onebit_arms.len() > 2 {
+            bail!("onebit candidates repeat a scale granularity (at most [false, true])");
+        }
+        if self.onebit_arms.len() == 2 && self.onebit_arms[0] == self.onebit_arms[1] {
+            bail!("onebit candidates repeat a scale granularity (at most [false, true])");
         }
         for &b in &self.tvq_bits {
             if !(1..=8).contains(&b) {
@@ -295,6 +316,18 @@ pub(crate) fn sparse_section(
     SparseGroupQuantized::quantize_indices(flat, &keep, arm.rescale(padded, k), bits, tensor.group)
 }
 
+/// Build the kind-5 binary payload for one `(arm, tensor)` slot — the
+/// single code path the probe measures and the writer packs, so the
+/// plan's probed error and byte cost are exact for the written file.
+pub(crate) fn binary_section(arm: Arm, tensor: &PlanTensor, flat: &[f32]) -> Result<BinarySwitch> {
+    let padded = tensor.padded();
+    debug_assert_eq!(flat.len(), padded);
+    let group = arm
+        .binary_group(padded, tensor.group)
+        .ok_or_else(|| anyhow::anyhow!("non-binary arm {} has no binary section", arm.label()))?;
+    BinarySwitch::quantize(flat, group)
+}
+
 /// Quantize `flat - base_hat` at `bits` — the error-corrected RTVQ
 /// offset (paper Eq. 6: the base's quantization error is folded into
 /// what the offset sees).  Shared by the probe and the writer.
@@ -308,8 +341,8 @@ pub(crate) fn quantize_offset(
     GroupQuantized::quantize(&off, bits, group)
 }
 
-/// Compile `plan` against the suite into a `QTVC` v3 (dense arms) or v4
-/// (sparse arms) registry at `path`.
+/// Compile `plan` against the suite into a `QTVC` v3 (dense arms), v4
+/// (sparse arms) or v5 (binary arms) registry at `path`.
 ///
 /// Quantization is re-derived deterministically from the same inputs the
 /// probe saw, so the written file's size equals
@@ -401,7 +434,7 @@ pub fn write_planned_registry_with_pool<P: AsRef<std::path::Path>>(
                     base_hat: None,
                     mtl: Some(sum_flat(&taus, tensor)?),
                 },
-                Arm::Tvq { .. } | Arm::Dare { .. } => {
+                Arm::Tvq { .. } | Arm::Dare { .. } | Arm::OneBit { .. } => {
                     TensorAux { qbase: None, base_hat: None, mtl: None }
                 }
             })
@@ -415,6 +448,7 @@ pub fn write_planned_registry_with_pool<P: AsRef<std::path::Path>>(
     enum Section {
         Group(GroupQuantized),
         Sparse(SparseGroupQuantized),
+        Binary(BinarySwitch),
     }
     let slots: Vec<(usize, usize)> = (0..plan.n_tasks())
         .flat_map(|t| (0..plan.n_tensors()).map(move |l| (t, l)))
@@ -435,6 +469,7 @@ pub fn write_planned_registry_with_pool<P: AsRef<std::path::Path>>(
             Arm::Dare { .. } | Arm::Tall { .. } => {
                 Section::Sparse(sparse_section(a.arm, tensor, t, &flat, aux[l].mtl.as_deref())?)
             }
+            Arm::OneBit { .. } => Section::Binary(binary_section(a.arm, tensor, &flat)?),
         })
     })?;
     // Consume the sections as they are encoded: the builder holds its
@@ -446,6 +481,7 @@ pub fn write_planned_registry_with_pool<P: AsRef<std::path::Path>>(
         match section {
             Section::Group(g) => builder.add_group(&name, &g)?,
             Section::Sparse(s) => builder.add_sparse(&name, &s)?,
+            Section::Binary(b) => builder.add_binary(&name, &b)?,
         };
     }
     let summary = builder.write(path)?;
@@ -490,7 +526,10 @@ pub fn build_planned_registry<P: AsRef<std::path::Path>>(
 /// scaled by `sum(lams)` first (the
 /// [`dequant_merge_rtvq_flat`](crate::quant::fused::dequant_merge_rtvq_flat)
 /// order); sparse-arm (DARE / TALL) tensors scatter-accumulate only their
-/// survivors — masked-out weights never touch the accumulator.
+/// survivors — masked-out weights never touch the accumulator; binary-arm
+/// (OneBit) tensors accumulate `lam * (±scale)` per element straight off
+/// the sign bitmap
+/// ([`BinarySwitchView::axpy_range_into`](crate::quant::BinarySwitchView::axpy_range_into)).
 ///
 /// # Parallelism and determinism
 ///
@@ -630,6 +669,17 @@ pub fn fused_merge_with_pool(
                     Ok(())
                 })?;
             }
+            Arm::OneBit { .. } => {
+                // Sign-byte-aligned shards: each element's increment is
+                // lam * scale(g) computed identically in every shard.
+                pool.for_each_shard(&mut buf, 8, |start, shard| {
+                    let byte0 = start / 8;
+                    for (view, &lam) in views.iter().zip(lams) {
+                        view.as_binary()?.axpy_range_into(lam, byte0, shard);
+                    }
+                    Ok(())
+                })?;
+            }
         }
         drop(axpy_span);
         drop(views);
@@ -683,6 +733,7 @@ mod tests {
             rtvq_arms: vec![(3, 1), (3, 2), (4, 2)],
             dare_arms: vec![],
             tall_arms: vec![],
+            onebit_arms: vec![],
         }
     }
 
@@ -716,6 +767,7 @@ mod tests {
             Arm::Tvq { bits } => bits,
             Arm::Rtvq { offset_bits, .. } => offset_bits,
             Arm::Dare { bits, .. } | Arm::Tall { bits, .. } => bits,
+            Arm::OneBit { .. } => 1,
         };
         let quiet = bits_of(&plan.assignments[0]); // std 0.002
         let loud = bits_of(&plan.assignments[3]); // std 0.05
@@ -795,6 +847,7 @@ mod tests {
             rtvq_arms: vec![],
             dare_arms: vec![(75, 3)],
             tall_arms: vec![(25, 4), (50, 2)],
+            onebit_arms: vec![],
         };
         let profile = probe(&pre, &fts, &cfg).unwrap();
         let budget = min_feasible_bytes(&profile) * 2;
@@ -820,6 +873,48 @@ mod tests {
         assert!(
             got.l2_dist(&want).unwrap() < 1e-4,
             "sparse fused path diverged: {}",
+            got.l2_dist(&want).unwrap()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn onebit_plan_roundtrips_byte_exact_through_registry() {
+        let (pre, fts) = hetero_suite(3, 26);
+        // Force binary arms everywhere: the candidate set has nothing else.
+        let cfg = PlannerConfig {
+            group: 256,
+            tvq_bits: vec![],
+            rtvq_arms: vec![],
+            dare_arms: vec![],
+            tall_arms: vec![],
+            onebit_arms: vec![false, true],
+        };
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let budget = min_feasible_bytes(&profile) * 2;
+        let dir = tmp("onebit_exact");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("zoo.qtvc");
+        let (plan, summary) = build_planned_registry(&pre, &fts, budget, &cfg, &path).unwrap();
+        assert!(plan.has_onebit_arms());
+        assert_eq!(summary.file_bytes, plan.planned_file_bytes());
+        assert_eq!(summary.file_bytes, std::fs::metadata(&path).unwrap().len());
+
+        // The registry reopens as v5 with the same plan, and the fused
+        // path agrees with the lazy reconstruction path bit-for-bit
+        // (both reconstruct the same ±scale values).
+        let reg = Registry::open(&path).unwrap();
+        assert_eq!(reg.version(), 5);
+        assert_eq!(reg.plan().unwrap(), &plan);
+        let lams = [0.5f32, 0.2, 0.3];
+        let mut want = pre.clone();
+        for (t, &lam) in lams.iter().enumerate() {
+            want.axpy(lam, &reg.load_task_vector(t).unwrap()).unwrap();
+        }
+        let got = fused_merge(&reg, &pre, &lams, None).unwrap();
+        assert!(
+            got.l2_dist(&want).unwrap() < 1e-4,
+            "binary fused path diverged: {}",
             got.l2_dist(&want).unwrap()
         );
         std::fs::remove_dir_all(&dir).ok();

@@ -8,14 +8,18 @@
 //! layer), or one of the sparse families — DARE drop-and-rescale
 //! ([`Arm::Dare`], arXiv 2402.09997) and TALL-mask task localization
 //! ([`Arm::Tall`], arXiv 2405.07813) — where masked-out weights cost 0
-//! bits and only the survivors carry quantized codes.  The registry
-//! writer compiles a plan into kind-2 `GroupQuantized` / kind-4
-//! `SparseGroupQuantized` sections and embeds the plan itself as the
-//! kind-3 metadata section so readers can map sections back to
-//! `(task, tensor)` slots and reconstruct tensor shapes.
+//! bits and only the survivors carry quantized codes — or the 1-bit
+//! binary switch ([`Arm::OneBit`], after 1bit-Merging / Binary Task
+//! Switch), where a task's slice collapses to a sign bitmap plus scales.
+//! The registry writer compiles a plan into kind-2 `GroupQuantized` /
+//! kind-4 `SparseGroupQuantized` / kind-5 `BinarySwitch` sections and
+//! embeds the plan itself as the kind-3 metadata section so readers can
+//! map sections back to `(task, tensor)` slots and reconstruct tensor
+//! shapes.
 //!
 //! The normative byte-level layout of the plan body (wire v1 dense-only,
-//! v2 adds the sparse arm kinds) and of every section kind lives in
+//! v2 adds the sparse arm kinds, v3 the binary arm kind) and of every
+//! section kind lives in
 //! `docs/WIRE_FORMAT.md`; this module implements it.  One property the
 //! solver depends on: the plan body size is a function of names, shapes
 //! and counts only — never of which arms were chosen — so the plan
@@ -44,6 +48,10 @@ pub const PLAN_WIRE_VERSION: u8 = 1;
 /// layout is byte-identical to v1, v2 merely admits arm kinds 2 and 3.
 /// Readers accept both.
 pub const PLAN_WIRE_VERSION_SPARSE: u8 = 2;
+/// Wire version of plan bodies that use the 1-bit binary arm; again
+/// byte-identical layout, v3 merely admits arm kind 4 (and, like v2, the
+/// sparse kinds).
+pub const PLAN_WIRE_VERSION_BINARY: u8 = 3;
 /// Shape-sanity cap shared with the checkpoint payload decoder.
 const MAX_NDIM: usize = 16;
 
@@ -67,6 +75,13 @@ pub enum Arm {
     /// survive and are group-quantized at `bits`; the rest are stored at
     /// 0 bits.  Stored as a kind-4 sparse section per task.
     Tall { keep_pct: u8, bits: u8 },
+    /// 1-bit binary switch (1bit-Merging, arXiv 2502.10743; Binary Task
+    /// Switch, arXiv 2412.00054): each task's slice collapses to a sign
+    /// bitmap plus mean-|x| scales — per group, or one per tensor when
+    /// `per_tensor_scale`.  Stored as a kind-5 binary section per task;
+    /// the cheapest arm and the payload the dynamic-merge router flips
+    /// per request.
+    OneBit { per_tensor_scale: bool },
 }
 
 impl Arm {
@@ -78,12 +93,19 @@ impl Arm {
             }
             Arm::Dare { drop_pct, bits } => format!("DARE-D{drop_pct}B{bits}"),
             Arm::Tall { keep_pct, bits } => format!("TALL-K{keep_pct}B{bits}"),
+            Arm::OneBit { per_tensor_scale: true } => "1BIT-T".to_string(),
+            Arm::OneBit { per_tensor_scale: false } => "1BIT-G".to_string(),
         }
     }
 
     /// True for the sparse families (kind-4 sections, plan wire v2).
     pub fn is_sparse(&self) -> bool {
         matches!(self, Arm::Dare { .. } | Arm::Tall { .. })
+    }
+
+    /// True for the 1-bit binary switch (kind-5 sections, plan wire v3).
+    pub fn is_binary(&self) -> bool {
+        matches!(self, Arm::OneBit { .. })
     }
 
     /// Exact survivor count per task section for a tensor of `padded`
@@ -98,7 +120,20 @@ impl Arm {
             Arm::Tall { keep_pct, .. } => {
                 Some((padded * keep_pct as usize / 100).max(1))
             }
-            Arm::Tvq { .. } | Arm::Rtvq { .. } => None,
+            Arm::Tvq { .. } | Arm::Rtvq { .. } | Arm::OneBit { .. } => None,
+        }
+    }
+
+    /// The group width a binary arm's scales cover for a tensor of
+    /// `padded` flat elements and plan group `group`: the tensor's group,
+    /// or the whole tensor for a single per-tensor scale.  `None` for
+    /// non-binary arms.
+    pub fn binary_group(&self, padded: usize, group: usize) -> Option<usize> {
+        match *self {
+            Arm::OneBit { per_tensor_scale } => {
+                Some(if per_tensor_scale { padded } else { group })
+            }
+            _ => None,
         }
     }
 
@@ -119,6 +154,7 @@ impl Arm {
             Arm::Rtvq { base_bits, offset_bits } if ok(base_bits) && ok(offset_bits) => Ok(()),
             Arm::Dare { drop_pct, bits } if ok(bits) && pct(drop_pct) => Ok(()),
             Arm::Tall { keep_pct, bits } if ok(bits) && pct(keep_pct) => Ok(()),
+            Arm::OneBit { .. } => Ok(()),
             other => bail!(
                 "pack plan arm {other:?} has bits outside 1..=8 or percentage \
                  outside 1..=99"
@@ -184,6 +220,10 @@ pub enum SectionSpec {
     /// payload: `dense_len` logical elements, exactly `survivors` of them
     /// stored at `bits`.
     Sparse { bits: u8, group: usize, dense_len: usize, survivors: usize },
+    /// A kind-5 [`BinarySwitch`](crate::quant::BinarySwitch) payload of
+    /// `len` flat elements with one scale per `group` (== `len` for a
+    /// per-tensor scale).
+    Binary { group: usize, len: usize },
 }
 
 /// A solved bit-allocation: one [`Assignment`] per tensor, under
@@ -210,6 +250,13 @@ pub fn group_payload_bytes(padded: usize, bits: u8, group: usize) -> u64 {
 pub fn sparse_payload_bytes(padded: usize, survivors: usize, bits: u8, group: usize) -> u64 {
     let k_pad = survivors.div_ceil(group) * group;
     16 + padded.div_ceil(8) as u64 + group_payload_bytes(k_pad, bits, group)
+}
+
+/// Exact encoded size of one kind-5 binary section body:
+/// `group u64 + n_groups u64 + scales f32 * n_groups + sign bitmap`.
+pub fn binary_payload_bytes(padded: usize, group: usize) -> u64 {
+    debug_assert_eq!(padded % group, 0);
+    (16 + (padded / group) * 4 + padded.div_ceil(8)) as u64
 }
 
 /// Exact offset-table row size for a section named `name`:
@@ -255,6 +302,10 @@ pub fn arm_cost_bytes(task_names: &[String], tensor: &PlanTensor, arm: Arm) -> u
             let k = arm.survivors(padded).expect("sparse arm");
             task_names.len() as u64 * sparse_payload_bytes(padded, k, bits, tensor.group)
                 + rows()
+        }
+        Arm::OneBit { .. } => {
+            let g = arm.binary_group(padded, tensor.group).expect("binary arm");
+            task_names.len() as u64 * binary_payload_bytes(padded, g) + rows()
         }
     }
 }
@@ -328,16 +379,25 @@ impl PackPlan {
                         n_tasks as u64
                             * (padded.div_ceil(8) + (k * bits as usize).div_ceil(8)) as u64
                     }
+                    // The sign bitmap is the payload; scales are metadata.
+                    Arm::OneBit { .. } => n_tasks as u64 * padded.div_ceil(8) as u64,
                 }
             })
             .sum()
     }
 
     /// True when any tensor uses a sparse (DARE / TALL) arm — such plans
-    /// serialize at wire v2 and their registries carry kind-4 sections
-    /// (QTVC v4).
+    /// serialize at wire v2+ and their registries carry kind-4 sections
+    /// (QTVC v4, or v5 alongside binary arms).
     pub fn has_sparse_arms(&self) -> bool {
         self.assignments.iter().any(|a| a.arm.is_sparse())
+    }
+
+    /// True when any tensor uses the 1-bit binary arm — such plans
+    /// serialize at wire v3 and their registries carry kind-5 sections
+    /// (QTVC v5).
+    pub fn has_onebit_arms(&self) -> bool {
+        self.assignments.iter().any(|a| a.arm.is_binary())
     }
 
     /// Total probed reconstruction error (sum of squared L2 across all
@@ -392,17 +452,23 @@ impl PackPlan {
                     survivors: arm.survivors(padded).expect("sparse arm"),
                 }
             }
+            (_, arm @ Arm::OneBit { .. }) => SectionSpec::Binary {
+                group: arm.binary_group(padded, t.group).expect("binary arm"),
+                len: padded,
+            },
         }
     }
 
     /// The index-entry kind a section of `role` must carry: kind-2 group
     /// payloads for dense arms and bases, kind-4 sparse payloads for
-    /// DARE / TALL task sections.  The open path validates the file's
-    /// offset table against this before any payload is read.
+    /// DARE / TALL task sections, kind-5 binary payloads for OneBit task
+    /// sections.  The open path validates the file's offset table against
+    /// this before any payload is read.
     pub fn expected_section_kind(&self, role: SectionRole) -> PayloadKind {
         match self.section_spec(role) {
             SectionSpec::Dense { .. } => PayloadKind::Group,
             SectionSpec::Sparse { .. } => PayloadKind::SparseGroup,
+            SectionSpec::Binary { .. } => PayloadKind::BinarySwitch,
         }
     }
 
@@ -468,10 +534,13 @@ impl PackPlan {
 
     /// Serialize to the kind-3 section body.  Dense-only plans stay at
     /// wire v1 so files written by older builds and this one are
-    /// byte-identical; plans with sparse arms serialize at v2.
+    /// byte-identical; plans with sparse arms serialize at v2, plans with
+    /// binary arms at v3.
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::new();
-        buf.push(if self.has_sparse_arms() {
+        buf.push(if self.has_onebit_arms() {
+            PLAN_WIRE_VERSION_BINARY
+        } else if self.has_sparse_arms() {
             PLAN_WIRE_VERSION_SPARSE
         } else {
             PLAN_WIRE_VERSION
@@ -496,6 +565,7 @@ impl PackPlan {
                 Arm::Rtvq { base_bits, offset_bits } => (1u8, base_bits, offset_bits),
                 Arm::Dare { drop_pct, bits } => (2u8, bits, drop_pct),
                 Arm::Tall { keep_pct, bits } => (3u8, bits, keep_pct),
+                Arm::OneBit { per_tensor_scale } => (4u8, 1u8, per_tensor_scale as u8),
             };
             buf.push(kind);
             buf.push(b1);
@@ -510,14 +580,18 @@ impl PackPlan {
         buf
     }
 
-    /// Decode and fully validate a kind-3 section body (wire v1 or v2).
+    /// Decode and fully validate a kind-3 section body (wire v1, v2 or
+    /// v3).
     pub fn decode(buf: &[u8]) -> Result<PackPlan> {
         let mut c = Cursor::new(buf);
         let ver = c.u8()?;
-        if ver != PLAN_WIRE_VERSION && ver != PLAN_WIRE_VERSION_SPARSE {
+        if ver != PLAN_WIRE_VERSION
+            && ver != PLAN_WIRE_VERSION_SPARSE
+            && ver != PLAN_WIRE_VERSION_BINARY
+        {
             bail!(
-                "pack plan wire version {ver} (this build reads v{PLAN_WIRE_VERSION} \
-                 and v{PLAN_WIRE_VERSION_SPARSE})"
+                "pack plan wire version {ver} (this build reads \
+                 v{PLAN_WIRE_VERSION}..=v{PLAN_WIRE_VERSION_BINARY})"
             );
         }
         let budget_bytes = c.u64()?;
@@ -568,6 +642,19 @@ impl PackPlan {
                 ),
                 2 => Arm::Dare { drop_pct: b2, bits: b1 },
                 3 => Arm::Tall { keep_pct: b2, bits: b1 },
+                4 if ver != PLAN_WIRE_VERSION_BINARY => bail!(
+                    "pack plan tensor {name:?}: binary arm kind 4 in a v{ver} \
+                     plan body (binary arms require wire v3)"
+                ),
+                4 => {
+                    if b1 != 1 || b2 > 1 {
+                        bail!(
+                            "pack plan tensor {name:?}: binary arm with bits \
+                             {b1} / scale flag {b2} (expected 1 / 0..=1)"
+                        );
+                    }
+                    Arm::OneBit { per_tensor_scale: b2 == 1 }
+                }
                 other => bail!("pack plan tensor {name:?}: unknown arm kind {other}"),
             };
             let cost_bytes = c.u64()?;
@@ -822,6 +909,90 @@ mod tests {
                 encode_sparse_payload(&s).len() as u64,
                 sparse_payload_bytes(padded, k, bits, group),
                 "padded={padded} pct={pct} bits={bits}"
+            );
+        }
+    }
+
+    fn onebit_plan() -> PackPlan {
+        let task_names = vec!["task00".to_string(), "task01".to_string()];
+        let tensors = vec![
+            PlanTensor { name: "blk00/w".into(), shape: vec![32, 16], group: 128 },
+            PlanTensor { name: "head/b".into(), shape: vec![33], group: 33 },
+        ];
+        let arms = [
+            Arm::OneBit { per_tensor_scale: false },
+            Arm::OneBit { per_tensor_scale: true },
+        ];
+        let assignments = tensors
+            .iter()
+            .zip(arms)
+            .map(|(t, arm)| Assignment {
+                arm,
+                cost_bytes: arm_cost_bytes(&task_names, t, arm),
+                error: 2.0,
+            })
+            .collect();
+        PackPlan { budget_bytes: 1 << 18, task_names, tensors, assignments }
+    }
+
+    #[test]
+    fn onebit_plan_roundtrips_at_wire_v3() {
+        let plan = onebit_plan();
+        plan.validate().unwrap();
+        assert!(plan.has_onebit_arms());
+        assert!(!plan.has_sparse_arms());
+        let wire = plan.encode();
+        assert_eq!(wire[0], PLAN_WIRE_VERSION_BINARY);
+        assert_eq!(
+            wire.len() as u64,
+            plan_meta_bytes(&plan.task_names, &plan.tensors),
+            "plan body size must stay arm-independent"
+        );
+        let back = PackPlan::decode(&wire).unwrap();
+        assert_eq!(back, plan);
+        // Per-group vs per-tensor scale geometry in the spec lookups.
+        assert_eq!(
+            plan.section_spec(SectionRole::Task { task: 0, tensor: 0 }),
+            SectionSpec::Binary { group: 128, len: 512 }
+        );
+        assert_eq!(
+            plan.section_spec(SectionRole::Task { task: 1, tensor: 1 }),
+            SectionSpec::Binary { group: 33, len: 33 }
+        );
+        assert_eq!(
+            plan.expected_section_kind(SectionRole::Task { task: 0, tensor: 0 }),
+            PayloadKind::BinarySwitch
+        );
+        assert_eq!(Arm::OneBit { per_tensor_scale: false }.label(), "1BIT-G");
+        assert_eq!(Arm::OneBit { per_tensor_scale: true }.label(), "1BIT-T");
+        // The ideal-code accounting counts exactly the sign bitmaps.
+        assert_eq!(plan.ideal_code_bytes(), 2 * (512u64.div_ceil(8) + 33u64.div_ceil(8)));
+    }
+
+    #[test]
+    fn binary_arm_kind_rejected_below_wire_v3() {
+        let mut wire = onebit_plan().encode();
+        assert_eq!(wire[0], PLAN_WIRE_VERSION_BINARY);
+        for ver in [PLAN_WIRE_VERSION, PLAN_WIRE_VERSION_SPARSE] {
+            wire[0] = ver;
+            let err = PackPlan::decode(&wire).unwrap_err().to_string();
+            assert!(err.contains("wire v3"), "ver={ver}: got {err}");
+        }
+    }
+
+    #[test]
+    fn binary_payload_bytes_matches_real_encoding() {
+        use crate::quant::BinarySwitch;
+        use crate::registry::container::encode_binary_payload;
+        let mut rng = Rng::new(47);
+        for (padded, group) in [(512usize, 128usize), (512, 512), (96, 32), (33, 33)] {
+            let mut v = vec![0.0f32; padded];
+            rng.fill_normal(&mut v, 0.05);
+            let b = BinarySwitch::quantize(&v, group).unwrap();
+            assert_eq!(
+                encode_binary_payload(&b).len() as u64,
+                binary_payload_bytes(padded, group),
+                "padded={padded} group={group}"
             );
         }
     }

@@ -11,10 +11,11 @@
 //! ([`Arm::Rtvq`], error-corrected exactly like
 //! [`Rtvq::quantize`](crate::quant::Rtvq::quantize)), and the sparse
 //! families ([`Arm::Dare`] drop-and-rescale, [`Arm::Tall`] task
-//! localization against the multi-task vector) — and records the
-//! sum-of-squares reconstruction error next to the arm's exact file-byte
-//! cost from [`arm_cost_bytes`].  The solver ([`super::solve`]) then
-//! trades these off greedily.
+//! localization against the multi-task vector), and the 1-bit binary
+//! switch ([`Arm::OneBit`], measured on its served ±scale reconstruction)
+//! — and records the sum-of-squares reconstruction error next to the
+//! arm's exact file-byte cost from [`arm_cost_bytes`].  The solver
+//! ([`super::solve`]) then trades these off greedily.
 //!
 //! Sparse arms are measured on exactly what would be served: survivors
 //! rescaled (DARE) or kept as-is (TALL), masked-out weights at 0 — so a
@@ -26,7 +27,9 @@ use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 use super::plan::{arm_cost_bytes, Arm, PlanTensor};
-use super::{mean_flat, padded_flat, quantize_offset, sparse_section, PlannerConfig};
+use super::{
+    binary_section, mean_flat, padded_flat, quantize_offset, sparse_section, PlannerConfig,
+};
 use crate::checkpoint::Checkpoint;
 use crate::quant::GroupQuantized;
 use crate::tensor::Tensor;
@@ -205,6 +208,21 @@ fn probe_tensor(
             error,
         });
     }
+    // Binary arms: quantize through the same binary_section path the
+    // writer packs, and measure the served ±scale reconstruction.
+    for &per_tensor_scale in &cfg.onebit_arms {
+        let arm = Arm::OneBit { per_tensor_scale };
+        let mut error = 0.0;
+        for flat in &flats {
+            let b = binary_section(arm, &tensor, flat)?;
+            error += sse(flat, &b.dequantize());
+        }
+        arms.push(ArmStat {
+            arm,
+            cost_bytes: arm_cost_bytes(task_names, &tensor, arm),
+            error,
+        });
+    }
     // Fail closed on non-finite weights (diverged checkpoints): a
     // NaN error must become a pointed Err here, not a solver panic.
     for a in &arms {
@@ -257,6 +275,7 @@ mod tests {
             rtvq_arms: vec![],
             dare_arms: vec![],
             tall_arms: vec![],
+            onebit_arms: vec![],
         };
         let prof = probe(&pre, &fts, &cfg).unwrap();
         for p in &prof.profiles {
@@ -284,6 +303,7 @@ mod tests {
             rtvq_arms: vec![(3, 2)],
             dare_arms: vec![],
             tall_arms: vec![],
+            onebit_arms: vec![],
         };
         let prof = probe(&pre, &fts, &cfg).unwrap();
         for p in &prof.profiles {
@@ -328,6 +348,7 @@ mod tests {
             rtvq_arms: vec![],
             dare_arms: vec![],
             tall_arms: vec![(25, 4)],
+            onebit_arms: vec![],
         };
         let prof = probe(&pre, &fts, &cfg).unwrap();
         let p = &prof.profiles[0];
@@ -357,6 +378,7 @@ mod tests {
             rtvq_arms: vec![],
             dare_arms: vec![(50, 4)],
             tall_arms: vec![],
+            onebit_arms: vec![],
         };
         let prof = probe(&pre, &fts, &cfg).unwrap();
         for p in &prof.profiles {
@@ -368,6 +390,42 @@ mod tests {
             assert!(dare.error > p.arms[0].error);
             assert!(dare.cost_bytes < p.arms[0].cost_bytes);
             assert!(dare.error.is_finite());
+        }
+    }
+
+    #[test]
+    fn onebit_arm_is_probed_as_the_cheapest_candidate() {
+        let (pre, fts) = suite(3, 8);
+        let cfg = PlannerConfig {
+            group: 128,
+            tvq_bits: vec![1, 4],
+            rtvq_arms: vec![],
+            dare_arms: vec![],
+            tall_arms: vec![],
+            onebit_arms: vec![false, true],
+        };
+        let prof = probe(&pre, &fts, &cfg).unwrap();
+        for p in &prof.profiles {
+            let tvq1 = &p.arms[0];
+            let tvq4 = &p.arms[1];
+            let per_group = &p.arms[2];
+            let per_tensor = &p.arms[3];
+            assert_eq!(per_group.arm, Arm::OneBit { per_tensor_scale: false });
+            assert_eq!(per_tensor.arm, Arm::OneBit { per_tensor_scale: true });
+            // 1-bit codes with no zero points undercut even 1-bit affine
+            // TVQ (which carries scale+zp pairs), and the per-tensor
+            // scale undercuts per-group.
+            assert!(per_group.cost_bytes < tvq1.cost_bytes);
+            assert!(per_tensor.cost_bytes < per_group.cost_bytes);
+            assert!(per_tensor.cost_bytes < tvq4.cost_bytes);
+            // More scales can't hurt reconstruction.
+            assert!(per_group.error <= per_tensor.error);
+            assert!(per_group.error.is_finite() && per_tensor.error.is_finite());
+            // Cost bookkeeping is the shared byte-exact arithmetic.
+            assert_eq!(
+                per_group.cost_bytes,
+                arm_cost_bytes(&prof.task_names, &p.tensor, per_group.arm)
+            );
         }
     }
 

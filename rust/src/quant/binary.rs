@@ -1,0 +1,414 @@
+//! 1-bit binary task-vector switches: a sign bitmap plus per-group (or
+//! per-tensor) scales.
+//!
+//! This is the payload behind the planner's [`Arm::OneBit`] candidate and
+//! the serve-time dynamic-merge path: 1bit-Merging (arXiv 2502.10743)
+//! and Binary Task Switch (arXiv 2412.00054) show task vectors survive
+//! binarization — element `i` reconstructs as `±scale(group_of(i))`, the
+//! sign from one bitmap bit, so a task costs ~1 bit/weight and flipping
+//! it on or off per request is a single signed axpy.  The scale is the
+//! L2-optimal magnitude for fixed signs: the mean absolute value over
+//! the group (one group spanning the whole tensor = per-tensor scale).
+//!
+//! On disk this is the `QTVC` kind-5 section (see `docs/WIRE_FORMAT.md`);
+//! the wire codec lives in [`crate::registry::container`].
+//!
+//! [`Arm::OneBit`]: crate::planner::Arm::OneBit
+
+use anyhow::{bail, Result};
+
+/// Structural invariants shared by the owned container and the borrowed
+/// view: both funnel through here so a corrupt section fails closed with
+/// the same error no matter which decode path touched it first.
+fn validate_parts(group: usize, n_groups: usize, signs: &[u8]) -> Result<usize> {
+    if group == 0 {
+        bail!("binary payload: zero group width");
+    }
+    if n_groups == 0 {
+        bail!("binary payload: zero scale count");
+    }
+    let len = group
+        .checked_mul(n_groups)
+        .ok_or_else(|| anyhow::anyhow!("binary payload: length {group}x{n_groups} overflows"))?;
+    if signs.len() != len.div_ceil(8) {
+        bail!(
+            "binary payload: truncated sign bitmap ({} bytes for length \
+             {len}, expected {})",
+            signs.len(),
+            len.div_ceil(8)
+        );
+    }
+    // Tail bits past len must be clear: the encoding is canonical, and a
+    // re-stamped CRC over garbage tail bits must still fail closed.
+    if len % 8 != 0 {
+        let tail = signs[signs.len() - 1] >> (len % 8);
+        if tail != 0 {
+            bail!("binary payload: sign bits set past length {len}");
+        }
+    }
+    Ok(len)
+}
+
+/// Accumulate `out[k] += lam * (±scale)` over the dense element range
+/// `[start, start + out.len())`.  The per-group coefficient is computed
+/// as `a = lam * scale(g)` exactly once per group touched — identical
+/// arithmetic whatever range carves the call, so disjoint shards
+/// reproduce the full pass bit-for-bit.
+#[inline]
+fn axpy_range(
+    group: usize,
+    scale_of: impl Fn(usize) -> f32,
+    signs: &[u8],
+    lam: f32,
+    start: usize,
+    out: &mut [f32],
+) {
+    let mut gi = usize::MAX;
+    let mut a = 0.0f32;
+    for (k, o) in out.iter_mut().enumerate() {
+        let i = start + k;
+        let g = i / group;
+        if g != gi {
+            gi = g;
+            a = lam * scale_of(g);
+        }
+        let bit = (signs[i / 8] >> (i % 8)) & 1;
+        *o += if bit == 1 { a } else { -a };
+    }
+}
+
+/// A binarized flat vector: `group * scales.len()` logical f32s, each
+/// reconstructing as `+scale` or `-scale` of its group, the sign from
+/// one bitmap bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BinarySwitch {
+    /// Elements covered by each scale (== the full length for a single
+    /// per-tensor scale).
+    pub group: usize,
+    /// One scale per group, in group order (mean |x| of the group).
+    pub scales: Vec<f32>,
+    /// LSB-first sign bitmap, `ceil(len / 8)` bytes; bit `i` set means
+    /// element `i` is `+scale`, clear means `-scale`.  Bits past the
+    /// length must be 0.
+    pub signs: Vec<u8>,
+}
+
+impl BinarySwitch {
+    /// Assemble from parts, validating every structural invariant — the
+    /// wire decoder funnels through here so corrupt sections fail closed.
+    pub fn new(group: usize, scales: Vec<f32>, signs: Vec<u8>) -> Result<Self> {
+        validate_parts(group, scales.len(), &signs)?;
+        Ok(Self { group, scales, signs })
+    }
+
+    /// Binarize `data` (length a multiple of `group`, as planner flats
+    /// are): per group, scale = mean |x| and sign bit = `x >= 0`.
+    pub fn quantize(data: &[f32], group: usize) -> Result<Self> {
+        if group == 0 {
+            bail!("binary quantization: zero group width");
+        }
+        if data.is_empty() || data.len() % group != 0 {
+            bail!(
+                "binary quantization: length {} is not a positive multiple \
+                 of group {group}",
+                data.len()
+            );
+        }
+        let n_groups = data.len() / group;
+        let mut scales = Vec::with_capacity(n_groups);
+        let mut signs = vec![0u8; data.len().div_ceil(8)];
+        for (g, chunk) in data.chunks_exact(group).enumerate() {
+            let mean_abs: f32 =
+                chunk.iter().map(|x| x.abs() as f64).sum::<f64>() as f32 / group as f32;
+            scales.push(mean_abs);
+            for (j, &x) in chunk.iter().enumerate() {
+                if x >= 0.0 {
+                    let i = g * group + j;
+                    signs[i / 8] |= 1 << (i % 8);
+                }
+            }
+        }
+        Self::new(group, scales, signs)
+    }
+
+    /// Logical element count (`group * scales.len()`).
+    pub fn len(&self) -> usize {
+        self.group * self.scales.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Reconstruct the dense vector: `±scale` per element.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.axpy_into(1.0, &mut out);
+        out
+    }
+
+    /// Fused serve path: `out[i] += lam * (±scale)` for every element.
+    pub fn axpy_into(&self, lam: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        axpy_range(self.group, |g| self.scales[g], &self.signs, lam, 0, out);
+    }
+
+    /// Exact in-memory storage bytes: sign bitmap + scales.
+    pub fn storage_bytes(&self) -> usize {
+        self.signs.len() + self.scales.len() * 4
+    }
+}
+
+/// A borrowed, zero-copy view over a binary section body: the scale
+/// table and the sign bitmap both stay in the backing bytes (the
+/// registry's file mapping); scales decode per access from raw LE bytes.
+/// Construction runs the exact same structural validation as
+/// [`BinarySwitch::new`], so corrupt sections fail closed identically on
+/// either path.
+#[derive(Clone, Copy, Debug)]
+pub struct BinarySwitchView<'a> {
+    group: usize,
+    n_groups: usize,
+    /// Raw little-endian scale table: 4 bytes per group.
+    scales: &'a [u8],
+    signs: &'a [u8],
+}
+
+impl<'a> BinarySwitchView<'a> {
+    pub fn new(group: usize, n_groups: usize, scales: &'a [u8], signs: &'a [u8]) -> Result<Self> {
+        if scales.len() != n_groups * 4 {
+            bail!(
+                "binary payload: scale table is {} bytes for {n_groups} \
+                 groups (expected {})",
+                scales.len(),
+                n_groups * 4
+            );
+        }
+        validate_parts(group, n_groups, signs)?;
+        Ok(Self { group, n_groups, scales, signs })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.group * self.n_groups
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    #[inline]
+    fn scale(&self, g: usize) -> f32 {
+        f32::from_le_bytes(self.scales[g * 4..g * 4 + 4].try_into().unwrap())
+    }
+
+    /// Fused serve path: `out[i] += lam * (±scale)` for every element.
+    pub fn axpy_into(&self, lam: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        self.axpy_range_into(lam, 0, out);
+    }
+
+    /// Sharded accumulate: `out` covers the dense element range
+    /// `[byte0 * 8, byte0 * 8 + out.len())`, which must start on a
+    /// sign-byte boundary and end on one (or at the full length) — the
+    /// shard geometry the parallel fused merge carves.  Each element's
+    /// increment is `lam * scale(g)` with the sign applied afterwards,
+    /// computed identically in every shard, so disjoint shards reproduce
+    /// the full pass bit-for-bit.
+    pub fn axpy_range_into(&self, lam: f32, byte0: usize, out: &mut [f32]) {
+        let start = byte0 * 8;
+        let end = start + out.len();
+        assert!(end <= self.len(), "element range [{start}, {end}) past {}", self.len());
+        assert!(
+            end == self.len() || end % 8 == 0,
+            "binary shard must end on a sign-byte boundary or at the full length"
+        );
+        axpy_range(self.group, |g| self.scale(g), self.signs, lam, start, out);
+    }
+
+    /// Reconstruct into a caller buffer (overwrites all of `out`) —
+    /// bit-identical to [`BinarySwitch::dequantize`].
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len());
+        out.fill(0.0);
+        self.axpy_into(1.0, out);
+    }
+
+    /// Materialize an owned [`BinarySwitch`].
+    pub fn to_owned(self) -> BinarySwitch {
+        let scales =
+            (0..self.n_groups).map(|g| self.scale(g)).collect();
+        BinarySwitch { group: self.group, scales, signs: self.signs.to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 0.05);
+        v
+    }
+
+    fn scale_bytes(b: &BinarySwitch) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &s in &b.scales {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_preserves_signs_and_group_magnitude() {
+        let v = sample(512, 1);
+        let b = BinarySwitch::quantize(&v, 64).unwrap();
+        assert_eq!(b.len(), 512);
+        assert_eq!(b.n_groups(), 8);
+        let dq = b.dequantize();
+        for (i, (&x, &r)) in v.iter().zip(&dq).enumerate() {
+            assert_eq!(
+                r >= 0.0,
+                x >= 0.0,
+                "element {i}: sign flipped ({x} -> {r})"
+            );
+            let g = i / 64;
+            assert_eq!(r.abs(), b.scales[g], "element {i}: magnitude is not the group scale");
+        }
+    }
+
+    #[test]
+    fn per_tensor_scale_is_a_single_group() {
+        let v = sample(96, 2);
+        let b = BinarySwitch::quantize(&v, 96).unwrap();
+        assert_eq!(b.n_groups(), 1);
+        let mean_abs: f32 = v.iter().map(|x| x.abs() as f64).sum::<f64>() as f32 / 96.0;
+        assert_eq!(b.scales[0], mean_abs);
+    }
+
+    #[test]
+    fn axpy_accumulates_the_signed_scale() {
+        let v = sample(256, 3);
+        let b = BinarySwitch::quantize(&v, 32).unwrap();
+        let mut out = vec![7.0f32; 256];
+        b.axpy_into(0.5, &mut out);
+        let dq = b.dequantize();
+        for i in 0..256 {
+            assert_eq!(out[i], 7.0 + 0.5 * dq[i]);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let v = sample(64, 4);
+        assert!(BinarySwitch::quantize(&v, 0).is_err());
+        assert!(BinarySwitch::quantize(&v[..60], 64).is_err());
+        assert!(BinarySwitch::quantize(&[], 8).is_err());
+
+        let good = BinarySwitch::quantize(&v, 16).unwrap();
+        // Truncated sign bitmap.
+        assert!(BinarySwitch::new(16, good.scales.clone(), good.signs[..4].to_vec()).is_err());
+        // Scale-count mismatch against the bitmap.
+        assert!(BinarySwitch::new(16, good.scales[..2].to_vec(), good.signs.clone()).is_err());
+        // Zero groups / zero group width.
+        assert!(BinarySwitch::new(16, Vec::new(), good.signs.clone()).is_err());
+        assert!(BinarySwitch::new(0, good.scales.clone(), good.signs.clone()).is_err());
+        // Sign bits set past the logical length.
+        let mut tail = vec![0u8; 1];
+        tail[0] = 0b1110_0000; // bits 5..8 set, len = 5
+        assert!(BinarySwitch::new(5, vec![0.1], tail).is_err());
+    }
+
+    #[test]
+    fn view_matches_owned_bit_exactly() {
+        let v = sample(1000, 5);
+        let b = BinarySwitch::quantize(&v, 125).unwrap();
+        let params = scale_bytes(&b);
+        let view = BinarySwitchView::new(125, b.n_groups(), &params, &b.signs).unwrap();
+        assert_eq!(view.len(), 1000);
+        assert_eq!(view.group(), 125);
+
+        let mut got = vec![0.0f32; 1000];
+        view.dequantize_into(&mut got);
+        assert_eq!(got, b.dequantize(), "view reconstruction must be bit-exact");
+
+        let mut acc = vec![2.0f32; 1000];
+        let mut want = vec![2.0f32; 1000];
+        view.axpy_into(0.5, &mut acc);
+        b.axpy_into(0.5, &mut want);
+        assert_eq!(acc, want, "view axpy must match the owned path");
+
+        assert_eq!(view.to_owned(), b);
+    }
+
+    #[test]
+    fn range_axpy_matches_full_axpy_bit_exactly() {
+        // Length not a multiple of 8, group not a multiple of 8: shard
+        // boundaries cut through groups and the bitmap tail byte.
+        let v = sample(1005, 6);
+        let b = BinarySwitch::quantize(&v, 67).unwrap();
+        let params = scale_bytes(&b);
+        let view = BinarySwitchView::new(67, b.n_groups(), &params, &b.signs).unwrap();
+
+        let mut want = vec![0.25f32; 1005];
+        view.axpy_into(-0.75, &mut want);
+
+        for shard_bytes in [1usize, 3, 16, 126] {
+            let mut got = vec![0.25f32; 1005];
+            let mut byte0 = 0;
+            while byte0 * 8 < 1005 {
+                let lo = byte0 * 8;
+                let hi = (lo + shard_bytes * 8).min(1005);
+                view.axpy_range_into(-0.75, byte0, &mut got[lo..hi]);
+                byte0 += shard_bytes;
+            }
+            assert_eq!(got, want, "shard_bytes={shard_bytes}: accumulate diverged");
+        }
+    }
+
+    #[test]
+    fn view_validation_matches_owned() {
+        let v = sample(64, 7);
+        let b = BinarySwitch::quantize(&v, 16).unwrap();
+        let params = scale_bytes(&b);
+        // Truncated bitmap fails with the same message on both paths.
+        let view_err = BinarySwitchView::new(16, b.n_groups(), &params, &b.signs[..4])
+            .unwrap_err()
+            .to_string();
+        let owned_err = BinarySwitch::new(16, b.scales.clone(), b.signs[..4].to_vec())
+            .unwrap_err()
+            .to_string();
+        assert_eq!(view_err, owned_err);
+        assert!(view_err.contains("truncated sign bitmap"));
+        // Scale-table length mismatch is view-specific (the owned side
+        // holds decoded f32s) but still fails closed.
+        assert!(BinarySwitchView::new(16, b.n_groups(), &params[..params.len() - 1], &b.signs)
+            .is_err());
+        assert!(BinarySwitchView::new(16, b.n_groups() + 1, &params, &b.signs).is_err());
+    }
+
+    #[test]
+    fn storage_accounts_bitmap_and_scales() {
+        let v = sample(128, 8);
+        let b = BinarySwitch::quantize(&v, 32).unwrap();
+        assert_eq!(b.storage_bytes(), 16 + 4 * 4);
+    }
+}

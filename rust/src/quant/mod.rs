@@ -16,10 +16,14 @@
 //!   layout consumed by the AOT Pallas dequant-merge artifacts.
 //! * [`sparse`] — bitmask + group-quantized survivors, the payload behind
 //!   the planner's DARE / TALL-mask sparse arms (kind-4 sections).
+//! * [`binary`] — 1-bit sign bitmap + per-group scales, the payload
+//!   behind the planner's OneBit arm and the serve-time dynamic-merge
+//!   switches (kind-5 sections).
 //! * [`fused`] — native fused dequantize-and-merge (the L3 hot path).
 //! * [`storage`] — exact storage accounting / effective bits-per-task.
 
 pub mod affine;
+pub mod binary;
 pub mod bitpack;
 pub mod channel;
 pub mod fused;
@@ -30,6 +34,7 @@ pub mod storage;
 pub mod tvq;
 
 pub use affine::AffineParams;
+pub use binary::{BinarySwitch, BinarySwitchView};
 pub use bitpack::{BitPacked, BitPackedView};
 pub use channel::{ChannelQuantized, Granularity};
 pub use group::{GroupQuantized, GroupQuantizedView};

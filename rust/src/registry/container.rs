@@ -13,6 +13,9 @@
 //!   consume directly.
 //! * [`PayloadKind::SparseGroup`] — bitmask + group-quantized survivors
 //!   ([`SparseGroupQuantized`]), the planner's sparse-arm payload.
+//! * [`PayloadKind::BinarySwitch`] — sign bitmap + per-group scales
+//!   ([`BinarySwitch`]), the planner's 1-bit OneBit-arm payload and the
+//!   dynamic-merge switch sections.
 //! * [`PayloadKind::Plan`] — the embedded pack plan (decoded by
 //!   [`PackPlan::decode`](crate::planner::PackPlan::decode), not here).
 //!
@@ -25,8 +28,8 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use crate::quant::{
-    AffineParams, BitPacked, BitPackedView, GroupQuantized, GroupQuantizedView,
-    QuantizedCheckpoint, SparseGroupQuantized, SparseGroupQuantizedView,
+    AffineParams, BinarySwitch, BinarySwitchView, BitPacked, BitPackedView, GroupQuantized,
+    GroupQuantizedView, QuantizedCheckpoint, SparseGroupQuantized, SparseGroupQuantizedView,
 };
 use crate::quant::tvq::QuantizedTensor;
 
@@ -45,6 +48,10 @@ pub const VERSION_PLANNED: u32 = 3;
 /// the version so older readers reject the file at the header instead of
 /// choking on an unknown payload kind mid-read.
 pub const VERSION_SPARSE: u32 = 4;
+/// Registry format version for plan-packed registries whose plans use the
+/// 1-bit OneBit arm: v5 adds the kind-5 binary-switch sections (and, like
+/// v4, admits kind-4 sparse sections alongside).
+pub const VERSION_BINARY: u32 = 5;
 
 /// Header scheme label used by plan-packed mixed-precision registries
 /// (uniform registries store a [`QuantScheme`] label instead).
@@ -108,6 +115,10 @@ pub enum PayloadKind {
     /// ([`SparseGroupQuantized`]), produced by the planner's DARE / TALL
     /// sparse arms.
     SparseGroup,
+    /// A 1-bit flat vector (v5): sign bitmap + per-group scales
+    /// ([`BinarySwitch`]), produced by the planner's OneBit arm — the
+    /// dynamic-merge task switches.
+    BinarySwitch,
 }
 
 impl PayloadKind {
@@ -118,6 +129,7 @@ impl PayloadKind {
             PayloadKind::Group => 2,
             PayloadKind::Plan => 3,
             PayloadKind::SparseGroup => 4,
+            PayloadKind::BinarySwitch => 5,
         }
     }
 
@@ -128,6 +140,7 @@ impl PayloadKind {
             2 => PayloadKind::Group,
             3 => PayloadKind::Plan,
             4 => PayloadKind::SparseGroup,
+            5 => PayloadKind::BinarySwitch,
             other => bail!("unknown QTVC payload kind {other}"),
         })
     }
@@ -139,6 +152,7 @@ pub enum Payload {
     Checkpoint(QuantizedCheckpoint),
     Group(GroupQuantized),
     SparseGroup(SparseGroupQuantized),
+    Binary(BinarySwitch),
 }
 
 impl Payload {
@@ -149,6 +163,7 @@ impl Payload {
             Payload::Checkpoint(q) => q.numel(),
             Payload::Group(g) => g.len(),
             Payload::SparseGroup(s) => s.dense_len,
+            Payload::Binary(b) => b.len(),
         }
     }
 
@@ -158,6 +173,7 @@ impl Payload {
             Payload::Checkpoint(q) => encode_checkpoint_payload(q),
             Payload::Group(g) => encode_group_payload(g),
             Payload::SparseGroup(s) => encode_sparse_payload(s),
+            Payload::Binary(b) => encode_binary_payload(b),
         }
     }
 
@@ -169,6 +185,7 @@ impl Payload {
             }
             PayloadKind::Group => Payload::Group(decode_group_payload(buf)?),
             PayloadKind::SparseGroup => Payload::SparseGroup(decode_sparse_payload(buf)?),
+            PayloadKind::BinarySwitch => Payload::Binary(decode_binary_payload(buf)?),
             PayloadKind::Plan => bail!(
                 "plan sections decode via PackPlan::decode (Registry::plan), \
                  not Payload::decode"
@@ -190,11 +207,12 @@ pub enum PayloadView<'a> {
     Checkpoint(QuantizedCheckpoint),
     Group(GroupQuantizedView<'a>),
     SparseGroup(SparseGroupQuantizedView<'a>),
+    Binary(BinarySwitchView<'a>),
 }
 
 impl<'a> PayloadView<'a> {
     /// Decode a section body according to its index `kind`, borrowing
-    /// group/sparse payloads from `buf`.
+    /// group/sparse/binary payloads from `buf`.
     pub fn decode(kind: PayloadKind, buf: &'a [u8]) -> Result<PayloadView<'a>> {
         Ok(match kind {
             PayloadKind::TaskCheckpoint | PayloadKind::RtvqBase => {
@@ -203,6 +221,9 @@ impl<'a> PayloadView<'a> {
             PayloadKind::Group => PayloadView::Group(decode_group_payload_view(buf)?),
             PayloadKind::SparseGroup => {
                 PayloadView::SparseGroup(decode_sparse_payload_view(buf)?)
+            }
+            PayloadKind::BinarySwitch => {
+                PayloadView::Binary(decode_binary_payload_view(buf)?)
             }
             PayloadKind::Plan => bail!(
                 "plan sections decode via PackPlan::decode (Registry::plan), \
@@ -221,6 +242,7 @@ impl<'a> PayloadView<'a> {
             // view clone instead of the owned container.
             PayloadView::Group(g) => Payload::Group((*g).to_owned()),
             PayloadView::SparseGroup(s) => Payload::SparseGroup((*s).to_owned()),
+            PayloadView::Binary(b) => Payload::Binary((*b).to_owned()),
         }
     }
 
@@ -237,6 +259,15 @@ impl<'a> PayloadView<'a> {
         match self {
             PayloadView::SparseGroup(s) => Ok(s),
             other => bail!("expected a sparse payload, got {other:?}"),
+        }
+    }
+
+    /// The borrowed binary-switch payload, or an error naming what was
+    /// found.
+    pub fn as_binary(&self) -> Result<&BinarySwitchView<'a>> {
+        match self {
+            PayloadView::Binary(b) => Ok(b),
+            other => bail!("expected a binary-switch payload, got {other:?}"),
         }
     }
 }
@@ -497,6 +528,53 @@ pub fn decode_sparse_payload(buf: &[u8]) -> Result<SparseGroupQuantized> {
     Ok(decode_sparse_payload_view(buf)?.to_owned())
 }
 
+/// Encode a binary-switch vector (kind-5 section body):
+/// ```text
+///   group u64, n_groups u64
+///   scales f32 * n_groups
+///   signs: ceil(group * n_groups / 8) bytes (LSB-first; tail bits 0)
+/// ```
+pub fn encode_binary_payload(b: &BinarySwitch) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(b.group as u64).to_le_bytes());
+    buf.extend_from_slice(&(b.n_groups() as u64).to_le_bytes());
+    for &s in &b.scales {
+        buf.extend_from_slice(&s.to_le_bytes());
+    }
+    buf.extend_from_slice(&b.signs);
+    buf
+}
+
+/// Zero-copy inverse of [`encode_binary_payload`]: scale table and sign
+/// bitmap stay borrowed from `buf`.  Every structural invariant — scale
+/// count vs bitmap length, tail bits, overflow on `group * n_groups` — is
+/// validated so corrupt sections fail closed; this is the single parse
+/// path for kind-5 bodies (the owned [`decode_binary_payload`]
+/// materializes from it).
+pub fn decode_binary_payload_view(buf: &[u8]) -> Result<BinarySwitchView<'_>> {
+    let mut c = Cursor::new(buf);
+    let group = c.u64()? as usize;
+    let n_groups = c.u64()? as usize;
+    // Untrusted count: the scale table occupies 4 bytes per group, so
+    // n_groups must fit what is actually left in the section before any
+    // slice is sized from it.
+    if n_groups > c.remaining() / 4 {
+        bail!(
+            "QTVC binary payload: n_groups {n_groups} exceeds section size \
+             ({} bytes left)",
+            c.remaining()
+        );
+    }
+    let scales = c.take(n_groups * 4)?;
+    let signs = c.take(c.remaining())?;
+    BinarySwitchView::new(group, n_groups, scales, signs)
+}
+
+/// Inverse of [`encode_binary_payload`].
+pub fn decode_binary_payload(buf: &[u8]) -> Result<BinarySwitch> {
+    Ok(decode_binary_payload_view(buf)?.to_owned())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -597,6 +675,7 @@ mod tests {
             PayloadKind::Group,
             PayloadKind::Plan,
             PayloadKind::SparseGroup,
+            PayloadKind::BinarySwitch,
         ] {
             assert_eq!(PayloadKind::from_u8(kind.to_u8()).unwrap(), kind);
         }
@@ -728,6 +807,116 @@ mod tests {
             decode_sparse_payload(&bad).unwrap_err().to_string(),
             decode_sparse_payload_view(&bad).unwrap_err().to_string()
         );
+    }
+
+    fn sample_binary(seed: u64) -> BinarySwitch {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; 300];
+        rng.fill_normal(&mut v, 0.05);
+        BinarySwitch::quantize(&v, 60).unwrap()
+    }
+
+    #[test]
+    fn binary_payload_roundtrips() {
+        let b = sample_binary(31);
+        let wire = encode_binary_payload(&b);
+        // Byte-exact wire size: 16-byte header + scales + sign bitmap.
+        assert_eq!(wire.len(), 16 + 4 * b.n_groups() + b.signs.len());
+        let back = decode_binary_payload(&wire).unwrap();
+        assert_eq!(back, b);
+        // Through the Payload enum too.
+        let p = Payload::Binary(b.clone());
+        assert_eq!(p.numel(), 300);
+        let back = Payload::decode(PayloadKind::BinarySwitch, &p.encode()).unwrap();
+        assert_eq!(back, p);
+        // And the zero-copy view path: identical container, identical
+        // reconstruction, as_binary guard behaves.
+        let pv = PayloadView::decode(PayloadKind::BinarySwitch, &wire).unwrap();
+        assert_eq!(pv.to_owned(), p);
+        let view = pv.as_binary().unwrap();
+        let mut out = vec![0.0f32; 300];
+        view.dequantize_into(&mut out);
+        assert_eq!(out, b.dequantize());
+        assert!(pv.as_group().is_err());
+        assert!(pv.as_sparse().is_err());
+        let gwire = {
+            let mut rng = Rng::new(32);
+            let mut v = vec![0.0f32; 512];
+            rng.fill_normal(&mut v, 0.05);
+            encode_group_payload(&GroupQuantized::quantize(&v, 3, 64).unwrap())
+        };
+        assert!(PayloadView::decode(PayloadKind::Group, &gwire).unwrap().as_binary().is_err());
+    }
+
+    #[test]
+    fn binary_payload_rejects_corruption() {
+        let b = sample_binary(33);
+        let wire = encode_binary_payload(&b);
+        // Cut inside the sign bitmap: pointed truncation error.
+        let err = decode_binary_payload(&wire[..wire.len() - 3]).unwrap_err().to_string();
+        assert!(err.contains("truncated sign bitmap"), "got: {err}");
+        // Cut inside the scale table, header-only, and empty buffers.
+        assert!(decode_binary_payload(&wire[..20]).is_err());
+        assert!(decode_binary_payload(&wire[..16]).is_err());
+        assert!(decode_binary_payload(&[]).is_err());
+        // Trailing garbage is corruption.
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(decode_binary_payload(&padded).is_err());
+        // Scale-count mismatch against the bitmap (decoder-level: the
+        // registry CRC catches a re-stamp first, the decoder must catch
+        // it even with a fixed CRC).
+        let mut bad = wire.clone();
+        bad[8..16].copy_from_slice(&4u64.to_le_bytes()); // 5 groups -> 4
+        assert!(decode_binary_payload(&bad).is_err());
+        // Zero group width / zero scale count.
+        let mut bad = wire.clone();
+        bad[0..8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode_binary_payload(&bad).is_err());
+        let mut bad = wire.clone();
+        bad[8..16].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode_binary_payload(&bad).is_err());
+        // Sign bits set past the logical length: non-canonical tail.
+        let mut v = vec![0.0f32; 5];
+        v[0] = 1.0;
+        let small = BinarySwitch::quantize(&v, 5).unwrap();
+        let mut bad = encode_binary_payload(&small);
+        let last = bad.len() - 1;
+        bad[last] |= 0b1110_0000;
+        let err = decode_binary_payload(&bad).unwrap_err().to_string();
+        assert!(err.contains("past length"), "got: {err}");
+    }
+
+    #[test]
+    fn binary_payload_rejects_adversarial_counts_without_allocating() {
+        // A 2^61 group count in a 20-byte body must bail on the bounds
+        // check before sizing any slice from it; a group width that
+        // overflows group * n_groups must bail on checked arithmetic.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&8u64.to_le_bytes()); // group
+        wire.extend_from_slice(&(1u64 << 61).to_le_bytes()); // n_groups
+        wire.extend_from_slice(&[0u8; 4]);
+        let err = decode_binary_payload(&wire).unwrap_err().to_string();
+        assert!(err.contains("exceeds section size"), "got: {err}");
+
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u64::MAX.to_le_bytes()); // group
+        wire.extend_from_slice(&2u64.to_le_bytes()); // n_groups
+        wire.extend_from_slice(&[0u8; 8]); // 2 scales
+        let err = decode_binary_payload(&wire).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "got: {err}");
+    }
+
+    #[test]
+    fn binary_view_and_owned_decoders_reject_corruption_identically() {
+        let b = sample_binary(34);
+        let wire = encode_binary_payload(&b);
+        for cut in [0, 8, 16, 16 + 2, wire.len() - 3] {
+            let owned = decode_binary_payload(&wire[..cut]).unwrap_err().to_string();
+            let viewed =
+                decode_binary_payload_view(&wire[..cut]).unwrap_err().to_string();
+            assert_eq!(owned, viewed, "cut={cut}");
+        }
     }
 
     #[test]

@@ -30,8 +30,8 @@ use std::sync::OnceLock;
 use anyhow::{bail, Context, Result};
 
 use super::container::{
-    Payload, PayloadKind, PayloadView, RegistryScheme, MAGIC, VERSION, VERSION_PLANNED,
-    VERSION_SPARSE,
+    Payload, PayloadKind, PayloadView, RegistryScheme, MAGIC, VERSION, VERSION_BINARY,
+    VERSION_PLANNED, VERSION_SPARSE,
 };
 use super::mmap::{self, Mmap};
 use crate::checkpoint::Checkpoint;
@@ -276,10 +276,15 @@ impl Registry {
             );
         }
         let version = r.u32()?;
-        if version != VERSION && version != VERSION_PLANNED && version != VERSION_SPARSE {
+        if version != VERSION
+            && version != VERSION_PLANNED
+            && version != VERSION_SPARSE
+            && version != VERSION_BINARY
+        {
             bail!(
                 "unsupported QTVC version {version} in {} \
-                 (this build reads v{VERSION}, v{VERSION_PLANNED} and v{VERSION_SPARSE})",
+                 (this build reads v{VERSION}, v{VERSION_PLANNED}, v{VERSION_SPARSE} \
+                 and v{VERSION_BINARY})",
                 path.display()
             );
         }
@@ -288,11 +293,11 @@ impl Registry {
             .with_context(|| format!("registry {} carries bad scheme label", path.display()))?;
         match (version, scheme) {
             (VERSION, RegistryScheme::Uniform(_)) => {}
-            (VERSION_PLANNED | VERSION_SPARSE, RegistryScheme::Planned) => {}
+            (VERSION_PLANNED | VERSION_SPARSE | VERSION_BINARY, RegistryScheme::Planned) => {}
             _ => bail!(
                 "registry {} pairs version {version} with scheme {label:?} \
                  (uniform registries are v{VERSION}, planned are \
-                 v{VERSION_PLANNED}/v{VERSION_SPARSE})",
+                 v{VERSION_PLANNED}/v{VERSION_SPARSE}/v{VERSION_BINARY})",
                 path.display()
             ),
         }
@@ -326,11 +331,14 @@ impl Registry {
                 (RegistryScheme::Uniform(_), PayloadKind::TaskCheckpoint) => tasks.push(i),
                 (
                     RegistryScheme::Uniform(_),
-                    PayloadKind::Group | PayloadKind::Plan | PayloadKind::SparseGroup,
+                    PayloadKind::Group
+                    | PayloadKind::Plan
+                    | PayloadKind::SparseGroup
+                    | PayloadKind::BinarySwitch,
                 ) => {
                     bail!(
                         "uniform registry {} contains a {kind:?} section {name:?} \
-                         (group/sparse/plan sections belong to PLAN-MIXED registries)",
+                         (group/sparse/binary/plan sections belong to PLAN-MIXED registries)",
                         path.display()
                     )
                 }
@@ -341,17 +349,29 @@ impl Registry {
                 }
                 (RegistryScheme::Planned, PayloadKind::Group) => {}
                 (RegistryScheme::Planned, PayloadKind::SparseGroup) => {
-                    if version != VERSION_SPARSE {
+                    // Highest section kind wins the header version, so
+                    // sparse sections are legal in v4 *and* v5 files.
+                    if version != VERSION_SPARSE && version != VERSION_BINARY {
                         bail!(
                             "registry {} is v{version} but contains a kind-4 sparse \
-                             section {name:?} (sparse sections require v{VERSION_SPARSE})",
+                             section {name:?} (sparse sections require \
+                             v{VERSION_SPARSE}/v{VERSION_BINARY})",
+                            path.display()
+                        );
+                    }
+                }
+                (RegistryScheme::Planned, PayloadKind::BinarySwitch) => {
+                    if version != VERSION_BINARY {
+                        bail!(
+                            "registry {} is v{version} but contains a kind-5 binary-switch \
+                             section {name:?} (binary sections require v{VERSION_BINARY})",
                             path.display()
                         );
                     }
                 }
                 (RegistryScheme::Planned, other) => bail!(
                     "planned registry {} contains a {other:?} section {name:?} \
-                     (only group/sparse + plan sections are valid)",
+                     (only group/sparse/binary + plan sections are valid)",
                     path.display()
                 ),
             }
@@ -400,13 +420,34 @@ impl Registry {
                 let plan = PackPlan::decode(bytes).with_context(|| {
                     format!("decoding plan section of {}", path.display())
                 })?;
-                // Version / arm-set consistency: sparse-arm plans live in
-                // v4 files and vice versa, so a reader can trust the
-                // header version before decoding any payload.
-                if plan.has_sparse_arms() && version != VERSION_SPARSE {
+                // Version / arm-set consistency: the header version is the
+                // plan's highest arm family (binary > sparse > dense), so a
+                // reader can trust the header version before decoding any
+                // payload.  Sparse arms are legal inside v5 files — a plan
+                // may mix 1-bit and sparse slots — but the reverse is not:
+                // a v4 file must carry no binary arms.
+                if plan.has_onebit_arms() && version != VERSION_BINARY {
+                    bail!(
+                        "registry {} is v{version} but its plan uses 1-bit binary \
+                         arms (binary-arm registries are v{VERSION_BINARY})",
+                        path.display()
+                    );
+                }
+                if !plan.has_onebit_arms() && version == VERSION_BINARY {
+                    bail!(
+                        "registry {} is v{VERSION_BINARY} but its plan has no \
+                         1-bit binary arms (sparse-planned registries are \
+                         v{VERSION_SPARSE}, dense-planned v{VERSION_PLANNED})",
+                        path.display()
+                    );
+                }
+                if plan.has_sparse_arms()
+                    && version != VERSION_SPARSE
+                    && version != VERSION_BINARY
+                {
                     bail!(
                         "registry {} is v{version} but its plan uses sparse arms \
-                         (sparse-arm registries are v{VERSION_SPARSE})",
+                         (sparse-arm registries are v{VERSION_SPARSE}/v{VERSION_BINARY})",
                         path.display()
                     );
                 }
@@ -490,7 +531,7 @@ impl Registry {
     }
 
     /// Wire version this file was written at (2 uniform, 3 dense-planned,
-    /// 4 sparse-planned).
+    /// 4 sparse-planned, 5 binary-planned).
     pub fn version(&self) -> u32 {
         self.version
     }
@@ -709,6 +750,17 @@ impl Registry {
                     );
                 }
             }
+            (PayloadView::Binary(b), SectionSpec::Binary { group, len }) => {
+                if b.group() != group || b.len() != len {
+                    bail!(
+                        "section {:?} decodes to group={} len={} but the \
+                         plan requires group={group} len={len}",
+                        entry.name,
+                        b.group(),
+                        b.len()
+                    );
+                }
+            }
             (other, spec) => bail!(
                 "section {:?} payload does not match the plan's {spec:?}: {other:?}",
                 entry.name
@@ -893,6 +945,9 @@ impl Registry {
                     PayloadView::SparseGroup(s) => {
                         s.dequantize_into(&mut buf, &mut codes, &mut vals)
                     }
+                    // 1-bit arms: ±scale per sign bit, straight from the
+                    // mapped bitmap.
+                    PayloadView::Binary(b) => b.dequantize_into(&mut buf),
                     other => bail!(
                         "planned task section decoded to an unexpected payload: {other:?}"
                     ),

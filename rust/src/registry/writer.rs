@@ -15,12 +15,15 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::container::{
-    encode_checkpoint_payload, encode_group_payload, encode_sparse_payload, PayloadKind,
-    RegistryScheme, MAGIC, VERSION, VERSION_PLANNED, VERSION_SPARSE,
+    encode_binary_payload, encode_checkpoint_payload, encode_group_payload,
+    encode_sparse_payload, PayloadKind, RegistryScheme, MAGIC, VERSION, VERSION_BINARY,
+    VERSION_PLANNED, VERSION_SPARSE,
 };
 use crate::checkpoint::Checkpoint;
 use crate::planner::PackPlan;
-use crate::quant::{GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq, SparseGroupQuantized};
+use crate::quant::{
+    BinarySwitch, GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq, SparseGroupQuantized,
+};
 use crate::util::crc32;
 use crate::util::pool::Pool;
 
@@ -157,6 +160,24 @@ impl RegistryBuilder {
         Ok(self)
     }
 
+    /// Add one kind-5 binary-switch section (planned registries only).
+    /// Any binary section bumps the written file to QTVC v5.
+    pub fn add_binary(&mut self, name: &str, b: &BinarySwitch) -> Result<&mut Self> {
+        if !matches!(self.scheme, RegistryScheme::Planned) {
+            bail!("binary sections require a planned registry (RegistryBuilder::new_planned)");
+        }
+        if name == crate::planner::plan::PLAN_SECTION_NAME {
+            bail!("{name:?} is reserved for the plan section");
+        }
+        self.check_name(name)?;
+        self.groups.push(PendingEntry {
+            name: name.to_string(),
+            kind: PayloadKind::BinarySwitch,
+            body: encode_binary_payload(b),
+        });
+        Ok(self)
+    }
+
     /// Embed the pack plan (planned registries only; exactly once).
     pub fn set_plan(&mut self, plan: &PackPlan) -> Result<&mut Self> {
         if !matches!(self.scheme, RegistryScheme::Planned) {
@@ -267,7 +288,14 @@ impl RegistryBuilder {
             .groups
             .iter()
             .any(|e| e.kind == PayloadKind::SparseGroup);
+        let has_binary = self
+            .groups
+            .iter()
+            .any(|e| e.kind == PayloadKind::BinarySwitch);
+        // Highest section kind wins: v5 files may also carry kind-4
+        // sections, per the compat policy.
         let version = match self.scheme {
+            RegistryScheme::Planned if has_binary => VERSION_BINARY,
             RegistryScheme::Planned if has_sparse => VERSION_SPARSE,
             RegistryScheme::Planned => VERSION_PLANNED,
             RegistryScheme::Uniform(_) => VERSION,

@@ -1,0 +1,281 @@
+//! One home for the fixture code the nine integration suites used to
+//! copy-paste: synthetic zoos, temp-dir naming, registry packing, the
+//! CRC-restamping corruption helpers, and the PJRT / bit-exactness
+//! utilities.  Every suite compiles this module independently and uses
+//! its own subset, hence the file-wide `dead_code` allowance.
+
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
+
+use tvq::checkpoint::Checkpoint;
+use tvq::planner::{probe, solve, write_planned_registry, PackPlan, PlannerConfig};
+use tvq::quant::QuantScheme;
+use tvq::registry::{build_registry, IoMode, Registry};
+use tvq::runtime::Runtime;
+use tvq::tensor::Tensor;
+use tvq::util::crc32;
+use tvq::util::rng::Rng;
+
+/// Thread counts per the PR-5 determinism contract: 1 is the sequential
+/// reference (runs inline on the caller, no workers), 2 is the smallest
+/// real pool, 8 gives more workers than work items / shards on some
+/// tensors so the ragged-split edge cases run too.
+pub const THREADS: [usize; 3] = [1, 2, 8];
+
+/// The three section-read modes, for every-mode sweeps.
+pub const IO_MODES: [IoMode; 3] = [IoMode::Mmap, IoMode::Pread, IoMode::Reopen];
+
+/// True when the suite runs under the CI smoke gate (`TVQ_SMOKE=1`):
+/// shrink the load, never the assertions.
+pub fn smoke() -> bool {
+    std::env::var_os("TVQ_SMOKE").is_some()
+}
+
+/// Deterministic per-test scratch path (not created): distinct suites
+/// pass distinct prefixes so concurrent `cargo test` binaries never
+/// collide.  Callers `remove_dir_all(..).ok()` at entry and exit.
+pub fn tmp(suite: &str, name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tvq_{suite}_{name}"))
+}
+
+/// Created per-process scratch directory (pid-suffixed) for suites that
+/// want the directory to exist up front.
+pub fn tmpdir(suite: &str, tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tvq-{suite}-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Synthetic zoo in the common-drift regime RTVQ expects: a shared drift
+/// plus small per-task offsets, big enough (24_832 params/ckpt) that
+/// registry metadata is a low-single-digit percent of payload bytes.
+pub fn drift_zoo(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+    let mut rng = Rng::new(seed);
+    let mut pre = Checkpoint::new();
+    pre.insert("blk00/w", Tensor::randn(&[128, 96], 0.3, &mut rng));
+    pre.insert("blk01/w", Tensor::randn(&[128, 96], 0.3, &mut rng));
+    pre.insert("head/b", Tensor::randn(&[256], 0.1, &mut rng));
+    let mut drift = Checkpoint::new();
+    for (name, t) in pre.iter() {
+        drift.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
+    }
+    let fts = (0..n_tasks)
+        .map(|_| {
+            let mut off = Checkpoint::new();
+            for (name, t) in pre.iter() {
+                off.insert(name, Tensor::randn(t.shape(), 0.005, &mut rng));
+            }
+            pre.add(&drift).unwrap().add(&off).unwrap()
+        })
+        .collect();
+    (pre, fts)
+}
+
+/// Heterogeneous zoo for planner / determinism suites: per-layer scales
+/// spanning 25x (so the planner mixes dense arm widths) plus a localized
+/// ~8%-perturbed layer (so TALL/DARE sparse arms win somewhere and
+/// kind-4 sections are served).  Tensors are sized above the fused-merge
+/// small-tensor inline threshold (32Ki elements) so the parallel shard
+/// path genuinely runs, and not group-divisible so padding paths run too.
+pub fn het_zoo(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
+    let mut rng = Rng::new(seed);
+    let stds = [0.002f32, 0.02, 0.05];
+    let mut pre = Checkpoint::new();
+    for (i, _) in stds.iter().enumerate() {
+        pre.insert(&format!("blk{i:02}/w"), Tensor::randn(&[256, 160], 0.3, &mut rng));
+    }
+    pre.insert("loc/w", Tensor::randn(&[256, 128], 0.3, &mut rng));
+    let fts = (0..n_tasks)
+        .map(|_| {
+            let mut ft = pre.clone();
+            for (name, t) in ft.iter_mut() {
+                if name == "loc/w" {
+                    // Localized deltas: each task perturbs ~8% of entries.
+                    for v in t.data_mut() {
+                        if rng.f32() < 0.08 {
+                            *v += rng.normal_f32(0.1);
+                        }
+                    }
+                } else {
+                    let std = stds[name[3..5].parse::<usize>().unwrap()];
+                    for v in t.data_mut() {
+                        *v += rng.normal_f32(std);
+                    }
+                }
+            }
+            ft
+        })
+        .collect();
+    (pre, fts)
+}
+
+/// Candidate set covering all four arm families at a group width that
+/// does not divide the [`het_zoo`] tensor sizes evenly (padding paths
+/// included).
+pub fn het_cfg() -> PlannerConfig {
+    PlannerConfig {
+        group: 384,
+        tvq_bits: vec![2, 3, 4],
+        rtvq_arms: vec![(3, 2)],
+        dare_arms: vec![(75, 3)],
+        tall_arms: vec![(25, 4)],
+        onebit_arms: vec![],
+    }
+}
+
+/// Candidate set with nothing but the 1-bit OneBit arms, forcing every
+/// tensor onto a kind-5 binary-switch section (and the file onto v5).
+pub fn onebit_cfg(group: usize) -> PlannerConfig {
+    PlannerConfig {
+        group,
+        tvq_bits: vec![],
+        rtvq_arms: vec![],
+        dare_arms: vec![],
+        tall_arms: vec![],
+        onebit_arms: vec![false, true],
+    }
+}
+
+/// Small random checkpoint (mixed ranks, 74 params) for property tests.
+pub fn rand_ck(rng: &mut Rng, std: f32) -> Checkpoint {
+    let mut ck = Checkpoint::new();
+    let shapes: &[&[usize]] = &[&[7, 5], &[13], &[3, 2, 4]];
+    for (i, shape) in shapes.iter().enumerate() {
+        ck.insert(&format!("t{i}"), Tensor::randn(shape, std, rng));
+    }
+    ck
+}
+
+/// Pack a TVQ-INT4 registry of a small synthetic zoo at `dir/name` and
+/// return `(path, per-task decoded baselines)`.  Baselines are decoded
+/// sequentially from a throwaway open, so they are independent of
+/// anything the caller's control plane / cache later does.
+pub fn pack_tvq4(dir: &Path, name: &str, n_tasks: usize, seed: u64) -> (PathBuf, Vec<Checkpoint>) {
+    let (pre, fts) = tvq::exp::planner::synthetic_planner_zoo(n_tasks, seed);
+    let path = dir.join(name);
+    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
+    let reg = Registry::open(&path).unwrap();
+    let baselines = (0..n_tasks).map(|t| reg.load_task_vector(t).unwrap()).collect();
+    (path, baselines)
+}
+
+/// Probe + solve (unbounded budget) + write a plan-packed registry of a
+/// synthetic planner zoo under `cfg`; returns the file path, the zoo and
+/// the chosen plan.
+pub fn pack_planned(
+    dir: &Path,
+    name: &str,
+    n_tasks: usize,
+    seed: u64,
+    cfg: &PlannerConfig,
+) -> (PathBuf, Checkpoint, Vec<Checkpoint>, PackPlan) {
+    let (pre, fts) = tvq::exp::planner::synthetic_planner_zoo(n_tasks, seed);
+    let profile = probe(&pre, &fts, cfg).unwrap();
+    let plan = solve(&profile, u64::MAX).unwrap();
+    let path = dir.join(name);
+    write_planned_registry(&pre, &fts, &plan, &path).unwrap();
+    (path, pre, fts, plan)
+}
+
+/// PJRT skip helper: integration suites skip — not fail — when the
+/// runtime can't start (offline builds use the vendored `xla` stub,
+/// which has no client).
+pub fn runtime() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e:#}");
+            None
+        }
+    }
+}
+
+/// Patch the body of section `name` inside a serialized registry, then
+/// re-stamp the section CRC in its offset-table row and the trailing
+/// index CRC — so the corruption reaches the payload *decoder* instead
+/// of being intercepted by the checksum layer.
+pub fn patch_section_with_fixed_crcs(bytes: &mut [u8], name: &str, patch: impl Fn(&mut [u8])) {
+    let u32_at = |b: &[u8], p: usize| u32::from_le_bytes(b[p..p + 4].try_into().unwrap());
+    let u64_at = |b: &[u8], p: usize| u64::from_le_bytes(b[p..p + 8].try_into().unwrap());
+    let scheme_len = u32_at(bytes, 8) as usize;
+    let entry_cnt = u32_at(bytes, 12 + scheme_len) as usize;
+    let mut pos = 16 + scheme_len;
+    let mut patched = false;
+    for _ in 0..entry_cnt {
+        let name_len = u32_at(bytes, pos) as usize;
+        let row_name =
+            std::str::from_utf8(&bytes[pos + 4..pos + 4 + name_len]).unwrap().to_string();
+        let off = u64_at(bytes, pos + 5 + name_len) as usize;
+        let len = u64_at(bytes, pos + 13 + name_len) as usize;
+        let crc_pos = pos + 21 + name_len;
+        if row_name == name {
+            patch(&mut bytes[off..off + len]);
+            let crc = crc32(&bytes[off..off + len]);
+            bytes[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+            patched = true;
+        }
+        pos = crc_pos + 4;
+    }
+    assert!(patched, "section {name:?} not found in index");
+    let index_crc = crc32(&bytes[..pos]);
+    bytes[pos..pos + 4].copy_from_slice(&index_crc.to_le_bytes());
+}
+
+/// Recompute and re-stamp the trailing index CRC after an in-place edit
+/// of the header or offset table (adversarial wire tests use this to
+/// make corruption reach the semantic validators, not the checksum).
+pub fn restamp_index_crc(bytes: &mut [u8]) {
+    let u32_at = |b: &[u8], p: usize| u32::from_le_bytes(b[p..p + 4].try_into().unwrap());
+    let scheme_len = u32_at(bytes, 8) as usize;
+    let entry_cnt = u32_at(bytes, 12 + scheme_len) as usize;
+    let mut pos = 16 + scheme_len;
+    for _ in 0..entry_cnt {
+        let name_len = u32_at(bytes, pos) as usize;
+        // name_len u32 + name + kind u8 + offset u64 + length u64 + crc u32.
+        pos += 25 + name_len;
+    }
+    let index_crc = crc32(&bytes[..pos]);
+    bytes[pos..pos + 4].copy_from_slice(&index_crc.to_le_bytes());
+}
+
+/// Overwrite the header format version (u32 at byte 4) and re-stamp the
+/// index CRC — for "right sections, wrong version" adversarial files.
+pub fn rewrite_header_version(bytes: &mut [u8], version: u32) {
+    bytes[4..8].copy_from_slice(&version.to_le_bytes());
+    restamp_index_crc(bytes);
+}
+
+/// Exact-f32 checkpoint equality with a labelled panic (Checkpoint
+/// PartialEq is exact per-element f32 equality — bitwise for all
+/// non-NaN data, and these suites never produce NaN).
+pub fn assert_ckpt_bit_eq(got: &Checkpoint, want: &Checkpoint, what: &str) {
+    assert_eq!(got, want, "{what}: result diverged from reference");
+}
+
+/// True when two checkpoints carry bit-for-bit identical floats (the
+/// `to_bits` comparison also distinguishes -0.0 from 0.0, which
+/// PartialEq would conflate).
+pub fn bits_equal(a: &Checkpoint, b: &Checkpoint) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.iter().zip(b.iter()).all(|((na, ta), (nb, tb))| {
+        na == nb
+            && ta.shape() == tb.shape()
+            && ta.data().iter().zip(tb.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    })
+}
+
+/// Sum over tasks of squared L2 error between exact task vectors and the
+/// registry's reconstructions — measured through the serving path.
+pub fn registry_sse(reg: &Registry, pre: &Checkpoint, fts: &[Checkpoint]) -> f64 {
+    let mut sse = 0.0;
+    for (t, ft) in fts.iter().enumerate() {
+        let tau = ft.sub(pre).unwrap();
+        let d = tau.l2_dist(&reg.load_task_vector(t).unwrap()).unwrap();
+        sse += d * d;
+    }
+    sse
+}

@@ -1,0 +1,5 @@
+//! Shared fixtures for the integration suites (`mod common;` in each
+//! suite file; `Cargo.toml` sets `autotests = false`, so this directory
+//! is never compiled as a test target of its own).
+
+pub mod fixtures;

@@ -20,39 +20,25 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+mod common;
+
+use common::fixtures::{smoke, THREADS};
 use tvq::checkpoint::Checkpoint;
 use tvq::coordinator::control::{ControlError, ControlPlane, VariantConfig, VariantState};
 use tvq::coordinator::ModelCache;
-use tvq::exp::planner::synthetic_planner_zoo;
-use tvq::quant::QuantScheme;
-use tvq::registry::{build_registry, Registry};
 use tvq::util::pool::Pool;
 
-/// Thread counts per the PR-5 determinism contract: sequential
-/// reference, small, and more workers than work items.
-const THREADS: [usize; 3] = [1, 2, 8];
 const N_TASKS: usize = 3;
 
-fn smoke() -> bool {
-    std::env::var_os("TVQ_SMOKE").is_some()
-}
-
 fn tmpdir(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("tvq-ctl-{tag}-{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
+    common::fixtures::tmpdir("ctl", tag)
 }
 
 /// Pack a synthetic zoo at `dir/name` and return (path, per-task decoded
 /// baselines).  Baselines are decoded sequentially from a throwaway
 /// open, so they are independent of anything the control plane does.
 fn pack(dir: &Path, name: &str, seed: u64) -> (PathBuf, Vec<Checkpoint>) {
-    let (pre, fts) = synthetic_planner_zoo(N_TASKS, seed);
-    let path = dir.join(name);
-    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
-    let reg = Registry::open(&path).unwrap();
-    let baselines = (0..N_TASKS).map(|t| reg.load_task_vector(t).unwrap()).collect();
-    (path, baselines)
+    common::fixtures::pack_tvq4(dir, name, N_TASKS, seed)
 }
 
 /// Submit task `t` decoding through an explicit pool width and block for

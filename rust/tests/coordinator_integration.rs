@@ -16,16 +16,12 @@ use tvq::tensor::Tensor;
 use tvq::train;
 use tvq::util::rng::Rng;
 
+mod common;
+
 /// PJRT is optional in offline builds (the vendored `xla` stub has no
 /// client); tests skip — not fail — when the runtime can't start.
 fn make_model(per_task: bool) -> Option<(ServeModel, Checkpoint)> {
-    let rt = match Runtime::new() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping PJRT coordinator test: {e:#}");
-            return None;
-        }
-    };
+    let rt = common::fixtures::runtime()?;
     let art = rt.load("vit_s_forward_b8").unwrap();
     let mut rng = Rng::new(0xC0);
     let ck = train::init_vit_checkpoint(&art, &mut rng).unwrap();

@@ -1,0 +1,220 @@
+//! Dynamic-merging suite (ISSUE 8 acceptance): the per-request routed
+//! serving path — router → [`MergeSpec`] → `ModelCache` delta patch —
+//! must be a pure latency optimization, never a numerics change.
+//!
+//! * The canonical routed merge ([`merge_spec_with_pool`]) is
+//!   bit-identical across thread counts 1/2/8 and across `Mmap`/`Pread`
+//!   section reads, over a **kind-5 binary-switch** (v5) registry — the
+//!   newest wire format serves through the routed path from day one.
+//! * A one-task delta patch (`cached + lambda_t * tau_t`) is
+//!   bit-identical to the full re-merge it replaces, along growing
+//!   chains and A -> B -> A revisits (byte-identical on return),
+//!   verified against a cold cache that full-merges every spec.
+//! * Requests are classified as patches vs full builds exactly as the
+//!   cache documents (observed through `Metrics`), and the router is
+//!   deterministic: permuted argument orders land on the same variant.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::fixtures::{bits_equal, onebit_cfg, pack_planned, THREADS};
+use tvq::coordinator::router::merge_spec_with_pool;
+use tvq::coordinator::{Metrics, ModelCache, Router};
+use tvq::merge::MergedModel;
+use tvq::registry::{IoMode, PackedRegistrySource, Registry, TaskVectorSource};
+use tvq::util::pool::Pool;
+
+const N_TASKS: usize = 4;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    common::fixtures::tmp("dynmerge", name)
+}
+
+/// Distinct, sign-mixed lambdas — no two tasks share a coefficient, so
+/// an accidentally swapped accumulation order cannot cancel out.
+const LAMS: [f32; 4] = [0.4, -0.15, 0.3, 0.2];
+
+fn spec_for(router: &Router, tasks: &[usize]) -> tvq::coordinator::MergeSpec {
+    let lams: Vec<f32> = tasks.iter().map(|&t| LAMS[t]).collect();
+    router.route(tasks, &lams).unwrap()
+}
+
+#[test]
+fn routed_merge_is_bit_exact_across_threads_and_io_modes() {
+    let dir = tmp("canonical");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path, pre, _fts, plan) =
+        pack_planned(&dir, "zoo.qtvc", N_TASKS, 0xD1A0, &onebit_cfg(256));
+    assert!(plan.has_onebit_arms(), "suite must serve kind-5 sections");
+    let router = Router::new(N_TASKS);
+    let specs = [
+        spec_for(&router, &[2]),
+        spec_for(&router, &[0, 2]),
+        spec_for(&router, &[0, 1, 2, 3]),
+    ];
+
+    // Sequential Mmap is the reference for every (mode, threads) cell.
+    let reference = PackedRegistrySource::open(&path).unwrap();
+    assert_eq!(reference.registry().version(), 5, "onebit-only plan must write v5");
+    let seq = Pool::sequential();
+    for spec in &specs {
+        let want = match merge_spec_with_pool(spec, &pre, &reference, &seq).unwrap() {
+            MergedModel::Shared(ck) => ck,
+            other => panic!("routed merges are shared, got {} variants", other.n_variants()),
+        };
+        for mode in [IoMode::Mmap, IoMode::Pread] {
+            let source =
+                PackedRegistrySource::from_registry(Registry::open_with_io(&path, mode).unwrap());
+            for threads in THREADS {
+                let got =
+                    merge_spec_with_pool(spec, &pre, &source, &Pool::new(threads)).unwrap();
+                assert!(
+                    bits_equal(got.for_task(0), &want),
+                    "routed merge of {:?} diverged at {mode:?} threads={threads}",
+                    spec.tasks()
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn delta_patch_chain_is_bit_identical_to_full_remerge() {
+    let dir = tmp("chain");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path, pre, _fts, _plan) =
+        pack_planned(&dir, "zoo.qtvc", N_TASKS, 0xD1A1, &onebit_cfg(256));
+    let source = PackedRegistrySource::open(&path).unwrap();
+    let router = Router::new(N_TASKS);
+
+    // Growing chain: {0} -> {0,1} -> {0,1,2} -> {0,1,2,3}.  The warm
+    // cache full-builds once, then patches each extension; a cold cache
+    // full-merges every spec.  Bytes must agree at every link.
+    let chain: Vec<_> =
+        (1..=N_TASKS).map(|k| spec_for(&router, &(0..k).collect::<Vec<_>>())).collect();
+    let warm = ModelCache::new();
+    let metrics = Arc::new(Metrics::new());
+    warm.set_metrics(metrics.clone());
+    let mut served = Vec::new();
+    for spec in &chain {
+        served.push(warm.get_or_merge_routed(spec, &pre, &source).unwrap());
+    }
+    let s = metrics.snapshot();
+    assert_eq!(s.merge_builds, 1, "only the chain root is a full build");
+    assert_eq!(s.delta_patches, (N_TASKS - 1) as u64, "each extension must patch");
+
+    for (spec, patched) in chain.iter().zip(&served) {
+        let cold = ModelCache::new();
+        let full = cold.get_or_merge_routed(spec, &pre, &source).unwrap();
+        assert!(
+            bits_equal(patched.for_task(0), full.for_task(0)),
+            "patched {:?} diverged from cold full re-merge",
+            spec.tasks()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn a_b_a_revisits_serve_byte_identical_floats() {
+    let dir = tmp("aba");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path, pre, _fts, _plan) =
+        pack_planned(&dir, "zoo.qtvc", N_TASKS, 0xD1A2, &onebit_cfg(256));
+    let source = PackedRegistrySource::open(&path).unwrap();
+    let router = Router::new(N_TASKS);
+    let a = spec_for(&router, &[0, 1]);
+    let b = spec_for(&router, &[0, 1, 2]);
+
+    let cache = ModelCache::new();
+    let metrics = Arc::new(Metrics::new());
+    cache.set_metrics(metrics.clone());
+    let first_a = cache.get_or_merge_routed(&a, &pre, &source).unwrap();
+    let first_b = cache.get_or_merge_routed(&b, &pre, &source).unwrap();
+    // Revisit A: a plain hit — the same bytes, with nothing recorded.
+    let again_a = cache.get_or_merge_routed(&a, &pre, &source).unwrap();
+    assert!(bits_equal(again_a.for_task(0), first_a.for_task(0)), "A -> B -> A revisit");
+    let s = metrics.snapshot();
+    assert_eq!((s.merge_builds, s.delta_patches), (1, 1), "revisit must not rebuild");
+
+    // Evict A and request it again: the rebuild (a fresh full merge —
+    // A is B's *parent*, so B is never its patch base) must reproduce
+    // the original bytes exactly.
+    let (method, scheme) = a.variant_key(&source.source_id());
+    assert!(cache.evict(&method, &scheme), "A was cached");
+    let rebuilt_a = cache.get_or_merge_routed(&a, &pre, &source).unwrap();
+    assert!(bits_equal(rebuilt_a.for_task(0), first_a.for_task(0)), "A rebuild after evict");
+    assert_eq!(metrics.snapshot().merge_builds, 2, "rebuild is a full build");
+
+    // And B, still cached, is untouched by A's eviction.
+    let again_b = cache.get_or_merge_routed(&b, &pre, &source).unwrap();
+    assert!(bits_equal(again_b.for_task(0), first_b.for_task(0)));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn router_permutations_land_on_the_same_cached_variant() {
+    let dir = tmp("router");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path, pre, _fts, _plan) =
+        pack_planned(&dir, "zoo.qtvc", N_TASKS, 0xD1A3, &onebit_cfg(256));
+    let source = PackedRegistrySource::open(&path).unwrap();
+    let router = Router::new(N_TASKS);
+
+    let cache = ModelCache::new();
+    let metrics = Arc::new(Metrics::new());
+    cache.set_metrics(metrics.clone());
+    let orders: [&[usize]; 3] = [&[0, 2, 3], &[3, 0, 2], &[2, 3, 0]];
+    let mut served = Vec::new();
+    for tasks in orders {
+        let lams: Vec<f32> = tasks.iter().map(|&t| LAMS[t]).collect();
+        let spec = router.route(tasks, &lams).unwrap();
+        served.push(cache.get_or_merge_routed(&spec, &pre, &source).unwrap());
+    }
+    // One variant, built once; every permutation serves the same Arc.
+    assert_eq!(cache.len(), 1, "permutations must not mint new variants");
+    assert_eq!(metrics.snapshot().merge_builds, 1);
+    assert!(Arc::ptr_eq(&served[0], &served[1]) && Arc::ptr_eq(&served[0], &served[2]));
+
+    // Out-of-range and malformed requests never reach the cache.
+    assert!(router.route(&[N_TASKS], &[0.1]).is_err());
+    assert!(router.route(&[0, 0], &[0.1, 0.2]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn disjoint_subsets_full_build_and_lambda_prefix_mismatch_never_patches() {
+    let dir = tmp("classify");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path, pre, _fts, _plan) =
+        pack_planned(&dir, "zoo.qtvc", N_TASKS, 0xD1A4, &onebit_cfg(256));
+    let source = PackedRegistrySource::open(&path).unwrap();
+    let router = Router::new(N_TASKS);
+
+    let cache = ModelCache::new();
+    let metrics = Arc::new(Metrics::new());
+    cache.set_metrics(metrics.clone());
+    // Disjoint subsets share no patch ancestor: both full-build.
+    cache.get_or_merge_routed(&spec_for(&router, &[0, 1]), &pre, &source).unwrap();
+    cache.get_or_merge_routed(&spec_for(&router, &[2, 3]), &pre, &source).unwrap();
+    // Same task prefix at a different lambda is a different parent key:
+    // full build, never a patch off the wrong base.
+    let shifted = router.route(&[0, 1, 2], &[LAMS[0], LAMS[1] + 0.05, LAMS[2]]).unwrap();
+    cache.get_or_merge_routed(&shifted, &pre, &source).unwrap();
+    let s = metrics.snapshot();
+    assert_eq!(s.merge_builds, 3);
+    assert_eq!(s.delta_patches, 0, "nothing here is a valid patch");
+
+    // The shifted variant still matches its own canonical merge.
+    let want = merge_spec_with_pool(&shifted, &pre, &source, &Pool::sequential()).unwrap();
+    let got = cache.get_or_merge_routed(&shifted, &pre, &source).unwrap();
+    assert!(bits_equal(got.for_task(0), want.for_task(0)));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -23,10 +23,11 @@ use tvq::coordinator::{ModelCache, Server, ServerConfig, TcpFront};
 use tvq::data::VIT_S;
 use tvq::exp::planner::synthetic_planner_zoo;
 use tvq::merge::TaskArithmetic;
-use tvq::quant::QuantScheme;
-use tvq::registry::{build_registry, PackedRegistrySource, Registry};
+use tvq::registry::{PackedRegistrySource, Registry};
 use tvq::tensor::Tensor;
 use tvq::util::json::Json;
+
+mod common;
 
 struct EchoBackend;
 impl Backend for EchoBackend {
@@ -59,16 +60,11 @@ fn roundtrip(addr: std::net::SocketAddr, line: &str) -> String {
 }
 
 fn tmpdir(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("tvq-obs-{tag}-{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
+    common::fixtures::tmpdir("obs", tag)
 }
 
 fn pack(dir: &Path, name: &str, seed: u64) -> PathBuf {
-    let (pre, fts) = synthetic_planner_zoo(3, seed);
-    let path = dir.join(name);
-    build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
-    path
+    common::fixtures::pack_tvq4(dir, name, 3, seed).0
 }
 
 #[test]

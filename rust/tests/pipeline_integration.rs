@@ -18,6 +18,8 @@ use tvq::train::{self, TrainConfig};
 
 const N_TASKS: usize = 3;
 
+mod common;
+
 /// One shared mini-zoo per test process (training is the expensive bit).
 /// Returns `None` — and every test skips — when PJRT is unavailable
 /// (offline builds use the vendored `xla` stub, which has no client).
@@ -25,13 +27,7 @@ fn mini_zoo() -> Option<&'static (Checkpoint, Vec<Checkpoint>, TaskSuite)> {
     use std::sync::OnceLock;
     static ZOO: OnceLock<Option<(Checkpoint, Vec<Checkpoint>, TaskSuite)>> = OnceLock::new();
     ZOO.get_or_init(|| {
-        let rt = match Runtime::new() {
-            Ok(rt) => rt,
-            Err(e) => {
-                eprintln!("skipping PJRT pipeline tests: {e:#}");
-                return None;
-            }
-        };
+        let rt = common::fixtures::runtime()?;
         let suite = TaskSuite::new(&VIT_S, N_TASKS, 4200);
         let cfg = TrainConfig { steps: 60, pool: 512, ..TrainConfig::default() };
         let (pre, _) =

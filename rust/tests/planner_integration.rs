@@ -16,9 +16,11 @@
 //!    and on v2 (sparse-arm) plans whose kind-4 sections are missing or
 //!    of the wrong kind.
 
+mod common;
+
 use std::sync::Arc;
 
-use tvq::checkpoint::Checkpoint;
+use common::fixtures::registry_sse;
 use tvq::coordinator::ModelCache;
 use tvq::exp::planner::synthetic_planner_zoo;
 use tvq::merge::{MergedModel, Merger, TaskArithmetic};
@@ -35,19 +37,7 @@ use tvq::registry::{
 const N_TASKS: usize = 8;
 
 fn tmp(name: &str) -> std::path::PathBuf {
-    std::env::temp_dir().join(format!("tvq_planner_it_{name}"))
-}
-
-/// Sum over tasks of squared L2 error between exact task vectors and the
-/// registry's reconstructions — measured through the serving path.
-fn registry_sse(reg: &Registry, pre: &Checkpoint, fts: &[Checkpoint]) -> f64 {
-    let mut sse = 0.0;
-    for (t, ft) in fts.iter().enumerate() {
-        let tau = ft.sub(pre).unwrap();
-        let d = tau.l2_dist(&reg.load_task_vector(t).unwrap()).unwrap();
-        sse += d * d;
-    }
-    sse
+    common::fixtures::tmp("planner_it", name)
 }
 
 #[test]

@@ -8,81 +8,21 @@
 //! the caller, no workers), 2, and 8 (more workers than work items /
 //! shards on some tensors, so the ragged-split edge cases run too).
 
-use tvq::checkpoint::Checkpoint;
+mod common;
+
+use common::fixtures::{assert_ckpt_bit_eq, het_cfg as cfg, het_zoo as suite, THREADS};
 use tvq::merge::{MergedModel, TaskArithmetic};
 use tvq::planner::{
     fused_merge_with_pool, plan_pack_with_pool, probe_with_pool, write_planned_registry_with_pool,
-    PlannerConfig,
 };
 use tvq::quant::QuantScheme;
 use tvq::registry::{
     build_registry_with_pool, merge_from_source_with_pool, IoMode, PackedRegistrySource, Registry,
 };
-use tvq::tensor::Tensor;
 use tvq::util::pool::Pool;
-use tvq::util::rng::Rng;
-
-const THREADS: [usize; 3] = [1, 2, 8];
-
-/// Heterogeneous zoo: per-layer scales spanning 25x (so the planner
-/// mixes dense arm widths) plus a localized ~90%-zero-delta layer (so
-/// TALL/DARE sparse arms win somewhere and kind-4 sections are served).
-/// Tensors are sized above the fused-merge small-tensor inline
-/// threshold (32Ki elements) so the parallel shard path genuinely runs,
-/// and not group-divisible so the padding paths run too.
-fn suite(n_tasks: usize, seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
-    let mut rng = Rng::new(seed);
-    let stds = [0.002f32, 0.02, 0.05];
-    let mut pre = Checkpoint::new();
-    for (i, _) in stds.iter().enumerate() {
-        pre.insert(&format!("blk{i:02}/w"), Tensor::randn(&[256, 160], 0.3, &mut rng));
-    }
-    pre.insert("loc/w", Tensor::randn(&[256, 128], 0.3, &mut rng));
-    let fts = (0..n_tasks)
-        .map(|_| {
-            let mut ft = pre.clone();
-            for (name, t) in ft.iter_mut() {
-                if name == "loc/w" {
-                    // Localized deltas: each task perturbs ~8% of entries.
-                    for v in t.data_mut() {
-                        if rng.f32() < 0.08 {
-                            *v += rng.normal_f32(0.1);
-                        }
-                    }
-                } else {
-                    let std = stds[name[3..5].parse::<usize>().unwrap()];
-                    for v in t.data_mut() {
-                        *v += rng.normal_f32(std);
-                    }
-                }
-            }
-            ft
-        })
-        .collect();
-    (pre, fts)
-}
-
-/// Candidate set covering all four arm families at a group width that
-/// does not divide the tensor sizes evenly (padding paths included).
-fn cfg() -> PlannerConfig {
-    PlannerConfig {
-        group: 384,
-        tvq_bits: vec![2, 3, 4],
-        rtvq_arms: vec![(3, 2)],
-        dare_arms: vec![(75, 3)],
-        tall_arms: vec![(25, 4)],
-    }
-}
 
 fn tmp(name: &str) -> std::path::PathBuf {
-    std::env::temp_dir().join(format!("tvq_pool_det_{name}"))
-}
-
-fn assert_ckpt_bit_eq(got: &Checkpoint, want: &Checkpoint, what: &str) {
-    // Checkpoint PartialEq is exact f32 equality per tensor — the
-    // assertion below is bitwise for all non-NaN data (and the suites
-    // here never produce NaN).
-    assert_eq!(got, want, "{what}: parallel result diverged from sequential");
+    common::fixtures::tmp("pool_det", name)
 }
 
 #[test]

@@ -12,14 +12,9 @@ use tvq::tensor::Tensor;
 use tvq::util::prop::{check, gen_vec, Config};
 use tvq::util::rng::Rng;
 
-fn rand_ck(rng: &mut Rng, std: f32) -> Checkpoint {
-    let mut ck = Checkpoint::new();
-    let shapes: &[&[usize]] = &[&[7, 5], &[13], &[3, 2, 4]];
-    for (i, shape) in shapes.iter().enumerate() {
-        ck.insert(&format!("t{i}"), Tensor::randn(shape, std, rng));
-    }
-    ck
-}
+mod common;
+
+use common::fixtures::rand_ck;
 
 #[test]
 fn prop_affine_error_bound_eq3() {

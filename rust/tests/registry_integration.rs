@@ -7,9 +7,12 @@
 //! 4. feed `ModelCache` a merged variant straight from packed payloads —
 //!    with the f32 zoo files *deleted*, proving serving never needs them.
 
+mod common;
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use common::fixtures::{drift_zoo, patch_section_with_fixed_crcs, IO_MODES};
 use tvq::checkpoint::{Checkpoint, CheckpointStore};
 use tvq::coordinator::ModelCache;
 use tvq::merge::{MergedModel, Merger, TaskArithmetic};
@@ -18,41 +21,17 @@ use tvq::registry::{
     build_registry, f32_store_bytes, merge_from_source, DiskAccounting, IoMode,
     PackedRegistrySource, Registry, TaskVectorSource,
 };
-use tvq::tensor::Tensor;
-use tvq::util::crc32;
-use tvq::util::rng::Rng;
-
-/// The three section-read modes, for every-mode sweeps.
-const IO_MODES: [IoMode; 3] = [IoMode::Mmap, IoMode::Pread, IoMode::Reopen];
 
 const N_TASKS: usize = 8;
 
-/// Synthetic 8-task zoo big enough that metadata is a low-single-digit
-/// percent (24_832 params/ckpt), in the common-drift regime RTVQ expects.
+/// The suite's standard 8-task common-drift zoo (see
+/// [`common::fixtures::drift_zoo`]).
 fn zoo(seed: u64) -> (Checkpoint, Vec<Checkpoint>) {
-    let mut rng = Rng::new(seed);
-    let mut pre = Checkpoint::new();
-    pre.insert("blk00/w", Tensor::randn(&[128, 96], 0.3, &mut rng));
-    pre.insert("blk01/w", Tensor::randn(&[128, 96], 0.3, &mut rng));
-    pre.insert("head/b", Tensor::randn(&[256], 0.1, &mut rng));
-    let mut drift = Checkpoint::new();
-    for (name, t) in pre.iter() {
-        drift.insert(name, Tensor::randn(t.shape(), 0.02, &mut rng));
-    }
-    let fts = (0..N_TASKS)
-        .map(|_| {
-            let mut off = Checkpoint::new();
-            for (name, t) in pre.iter() {
-                off.insert(name, Tensor::randn(t.shape(), 0.005, &mut rng));
-            }
-            pre.add(&drift).unwrap().add(&off).unwrap()
-        })
-        .collect();
-    (pre, fts)
+    drift_zoo(N_TASKS, seed)
 }
 
 fn tmp(name: &str) -> std::path::PathBuf {
-    std::env::temp_dir().join(format!("tvq_reg_it_{name}"))
+    common::fixtures::tmp("reg_it", name)
 }
 
 #[test]
@@ -152,37 +131,6 @@ fn lazy_loads_are_bit_exact_for_both_schemes() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
-/// Patch the body of section `name` inside a serialized registry, then
-/// re-stamp the section CRC in its offset-table row and the trailing
-/// index CRC — so the corruption reaches the payload *decoder* instead
-/// of being intercepted by the checksum layer.
-fn patch_section_with_fixed_crcs(bytes: &mut [u8], name: &str, patch: impl Fn(&mut [u8])) {
-    let u32_at = |b: &[u8], p: usize| u32::from_le_bytes(b[p..p + 4].try_into().unwrap());
-    let u64_at = |b: &[u8], p: usize| u64::from_le_bytes(b[p..p + 8].try_into().unwrap());
-    let scheme_len = u32_at(bytes, 8) as usize;
-    let entry_cnt = u32_at(bytes, 12 + scheme_len) as usize;
-    let mut pos = 16 + scheme_len;
-    let mut patched = false;
-    for _ in 0..entry_cnt {
-        let name_len = u32_at(bytes, pos) as usize;
-        let row_name =
-            std::str::from_utf8(&bytes[pos + 4..pos + 4 + name_len]).unwrap().to_string();
-        let off = u64_at(bytes, pos + 5 + name_len) as usize;
-        let len = u64_at(bytes, pos + 13 + name_len) as usize;
-        let crc_pos = pos + 21 + name_len;
-        if row_name == name {
-            patch(&mut bytes[off..off + len]);
-            let crc = crc32(&bytes[off..off + len]);
-            bytes[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
-            patched = true;
-        }
-        pos = crc_pos + 4;
-    }
-    assert!(patched, "section {name:?} not found in index");
-    let index_crc = crc32(&bytes[..pos]);
-    bytes[pos..pos + 4].copy_from_slice(&index_crc.to_le_bytes());
-}
-
 #[test]
 fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     use tvq::exp::planner::synthetic_planner_zoo;
@@ -256,6 +204,103 @@ fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     let last = reg.n_tasks() - 1;
     let err = reg.load_task_vector(last).unwrap_err().to_string();
     assert!(err.contains("CRC"), "expected a CRC failure, got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kind-5 binary-switch sections must fail closed under adversarial
+/// corruption whose CRCs have been re-stamped (so the bytes reach the
+/// semantic validators, not the checksum layer) — and `tvq registry
+/// verify`, which delegates to this exact read path, must reject every
+/// such file with a non-zero exit.
+#[test]
+fn binary_sections_fail_closed_even_when_crcs_are_restamped() {
+    use common::fixtures::{onebit_cfg, pack_planned, rewrite_header_version};
+
+    let dir = tmp("binary_corrupt");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    // OneBit-only candidate set: every task section is kind-5, file is v5.
+    let (path, _pre, _fts, plan) =
+        pack_planned(&dir, "binary.qtvc", 3, 0x1B17, &onebit_cfg(256));
+    assert!(plan.has_onebit_arms());
+    assert_eq!(Registry::open(&path).unwrap().version(), 5);
+    let clean = std::fs::read(&path).unwrap();
+    let victim = format!("task00/{}", plan.tensors[0].name);
+
+    // 1. Group-width header inflated (CRCs restamped): the claimed
+    //    logical length outgrows the stored sign bitmap — the decoder's
+    //    truncated-bitmap check must reject it, only for the touched
+    //    task; the others keep serving.
+    let mut bad = clean.clone();
+    patch_section_with_fixed_crcs(&mut bad, &victim, |body| {
+        let group = u64::from_le_bytes(body[0..8].try_into().unwrap());
+        body[0..8].copy_from_slice(&(group * 2).to_le_bytes());
+    });
+    let p_trunc = dir.join("sign_trunc.qtvc");
+    std::fs::write(&p_trunc, &bad).unwrap();
+    let reg = Registry::open(&p_trunc).unwrap();
+    let err = reg.load_task_vector(0).unwrap_err().to_string();
+    assert!(
+        err.contains("truncated sign bitmap") || err.contains("len"),
+        "inflated group not caught by the decoder: {err}"
+    );
+    assert!(reg.load_task_vector(1).is_ok(), "untouched task must still serve");
+
+    // 2. Scale-count header inflated (CRCs restamped): the scale table
+    //    would overrun the section — the untrusted-count guard or the
+    //    scale-table/bitmap length cross-check must fire, never an OOB.
+    let mut bad = clean.clone();
+    patch_section_with_fixed_crcs(&mut bad, &victim, |body| {
+        let n = u64::from_le_bytes(body[8..16].try_into().unwrap());
+        body[8..16].copy_from_slice(&(n + 1).to_le_bytes());
+    });
+    let p_scales = dir.join("scale_bump.qtvc");
+    std::fs::write(&p_scales, &bad).unwrap();
+    let err = Registry::open(&p_scales)
+        .unwrap()
+        .load_task_vector(0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("binary payload"), "scale-count corruption escaped: {err}");
+
+    // 3. Kind-5 sections in a file re-labelled v4 (index CRC restamped):
+    //    the per-entry kind/version pairing must reject it at open —
+    //    binary sections require v5.
+    let mut bad = clean.clone();
+    rewrite_header_version(&mut bad, 4);
+    let p_v4 = dir.join("v4_with_kind5.qtvc");
+    std::fs::write(&p_v4, &bad).unwrap();
+    let err = Registry::open(&p_v4).unwrap_err().to_string();
+    assert!(
+        err.contains("v5") || err.contains("binary"),
+        "v4 file carrying kind-5 sections was accepted: {err}"
+    );
+
+    // 4. `tvq registry verify` is specified to delegate to this read
+    //    path: it must accept the clean file and reject every corrupt
+    //    one above with a non-zero exit and a pointed stderr.
+    let verify = |p: &std::path::Path| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_tvq"))
+            .args(["registry", "verify"])
+            .arg(p)
+            .output()
+            .expect("spawn tvq registry verify")
+    };
+    assert!(verify(&path).status.success(), "verify rejected the clean v5 registry");
+    for p in [&p_trunc, &p_scales, &p_v4] {
+        let out = verify(p);
+        assert!(
+            !out.status.success(),
+            "verify accepted corrupt {}: {}",
+            p.display(),
+            String::from_utf8_lossy(&out.stdout)
+        );
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("error"),
+            "verify gave no pointed error for {}",
+            p.display()
+        );
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 

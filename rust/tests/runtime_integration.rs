@@ -9,22 +9,16 @@ use anyhow::Result;
 use tvq::checkpoint::Checkpoint;
 use tvq::data::{VIT_S, VIT_M};
 use tvq::quant::{fused, GroupQuantized};
-use tvq::runtime::{self, Runtime, Value};
+use tvq::runtime::{self, Value};
 use tvq::tensor::Tensor;
 use tvq::train;
 use tvq::util::rng::Rng;
 
+mod common;
+
 /// PJRT is optional in offline builds (the vendored `xla` stub has no
 /// client); these tests skip — not fail — when the runtime can't start.
-fn runtime() -> Option<Runtime> {
-    match Runtime::new() {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("skipping PJRT test: {e:#}");
-            None
-        }
-    }
-}
+use common::fixtures::runtime;
 
 #[test]
 fn index_lists_all_artifacts_and_they_load() {
