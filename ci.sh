@@ -18,6 +18,9 @@
 #   dynmerge    dynamic-merging suite: routed delta patches bit-identical
 #               to full re-merges, router determinism
 #               (TVQ_SMOKE=1 cargo test --test dynamic_merge)
+#   shard       sharded-registry suite: MANIFEST.qtvm round-trip, tier-0
+#               vs tier-1 bit-exactness, fail-closed corruption quartet
+#               (TVQ_SMOKE=1 cargo test --test sharded_registry)
 #   example     packed_registry example end-to-end
 #   tabP        planner + dynamic-merge experiment smoke (TVQ_SMOKE=1,
 #               runs `experiment tabP` then `experiment tabR`)
@@ -25,7 +28,8 @@
 #               against rust/benches/baselines/BENCH_registry.json (±20%;
 #               uncalibrated baselines record instead of gating, but the
 #               within-run ordering invariants — mmap vs pread, threaded
-#               vs sequential, delta patch vs full re-merge — always apply)
+#               vs sequential, delta patch vs full re-merge, cached
+#               remote section fetch vs 2x local — always apply)
 #   doc         cargo doc --no-deps with warnings denied
 #   fmt         cargo fmt --check
 #   clippy      cargo clippy --all-targets with warnings denied
@@ -41,8 +45,8 @@ cd "$(dirname "$0")"
 CARGO_FLAGS=(--offline)
 BENCH_TOLERANCE="${TVQ_BENCH_TOLERANCE:-0.20}"
 
-STAGE_NAMES=(preflight build test control obs dynmerge example tabP bench-diff doc fmt clippy)
-QUICK_STAGES=(preflight build test control obs dynmerge)
+STAGE_NAMES=(preflight build test control obs dynmerge shard example tabP bench-diff doc fmt clippy)
+QUICK_STAGES=(preflight build test control obs dynmerge shard)
 
 declare -a RAN_STAGES=()
 declare -a RAN_TIMES=()
@@ -91,6 +95,14 @@ stage_dynmerge() {
     # suite too; the named stage gives an isolated signal on the routed
     # delta-patch bit-exactness contract.
     TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test dynamic_merge
+}
+
+stage_shard() {
+    # Sharded registries (ISSUE 9): manifest round-trip + dedup, tier-0
+    # vs tier-1 bit-exactness across thread counts, the fail-closed
+    # corruption quartet erroring identically across tiers, and the
+    # generational manifest swap.
+    TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test sharded_registry
 }
 
 stage_example() {

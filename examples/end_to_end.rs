@@ -29,6 +29,7 @@ use tvq::quant::{QuantScheme, Rtvq, QuantizedCheckpoint};
 use tvq::runtime::Runtime;
 use tvq::tensor::Tensor;
 use tvq::train::{self, TrainConfig};
+use tvq::util::exec::ExecCtx;
 use tvq::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -76,7 +77,7 @@ fn main() -> Result<()> {
     let tau0 = fts[0].sub(&pre)?;
     let q = QuantizedCheckpoint::quantize(&tau0, 3)?;
     println!("TVQ-INT3 task0 L2 err: {:.5}", q.quant_error(&tau0)?);
-    let r = Rtvq::quantize(&pre, &fts, 3, 2, true)?;
+    let r = Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential())?;
     println!("RTVQ-B3O2 total err:   {:.5}", r.total_quant_error(&pre, &fts)?);
 
     // ------------------------------------------------ 3+4. MERGE + EVAL

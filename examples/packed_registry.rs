@@ -29,6 +29,7 @@ use tvq::registry::{
     TaskVectorSource,
 };
 use tvq::tensor::Tensor;
+use tvq::util::exec::ExecCtx;
 use tvq::util::rng::Rng;
 
 const N_TASKS: usize = 8;
@@ -129,7 +130,7 @@ fn main() -> Result<()> {
         reg.file_bytes()
     );
     let t0 = Instant::now();
-    let tau3 = reg.load_task_vector(3)?;
+    let tau3 = reg.load_task_vector(3, &ExecCtx::sequential())?;
     println!(
         "lazy-loaded task03 ({} params) in {:.1} ms — other sections untouched",
         tau3.numel(),

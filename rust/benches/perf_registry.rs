@@ -22,17 +22,22 @@
 //!
 //! Run: `cargo bench --bench perf_registry`
 
+use std::sync::Arc;
+
 use tvq::checkpoint::{Checkpoint, CheckpointStore};
-use tvq::coordinator::router::{merge_spec_with_pool, MergeSpec};
+use tvq::coordinator::router::{merge_spec, MergeSpec};
+use tvq::coordinator::{SectionFetchPool, TcpFront};
 use tvq::merge::{MergedModel, TaskArithmetic};
-use tvq::planner::{build_planned_registry, fused_merge, fused_merge_with_pool, PlannerConfig};
+use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
 use tvq::quant::QuantScheme;
 use tvq::registry::{
-    build_registry, build_registry_with_pool, merge_from_source, uniform_registry_bytes,
-    F32ZooSource, IoMode, PackedRegistrySource, Registry, SectionScratch,
+    build_registry, build_registry_with_pool, merge_from_source, shard_registry,
+    uniform_registry_bytes, F32ZooSource, IoMode, OpenOptions, PackedRegistrySource, Registry,
+    SectionScratch, ShardOptions, ShardedRegistry,
 };
 use tvq::tensor::Tensor;
 use tvq::util::bench::{json_report, report, Bench};
+use tvq::util::exec::ExecCtx;
 use tvq::util::pool::Pool;
 use tvq::util::rng::Rng;
 
@@ -93,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         [("mmap", IoMode::Mmap), ("pread", IoMode::Pread), ("reopen", IoMode::Reopen)];
     let mut regs: Vec<(&str, Registry)> = Vec::new();
     for (name, mode) in modes {
-        regs.push((name, Registry::open_with_io(&path, mode)?));
+        regs.push((name, Registry::open_with(&path, OpenOptions::new().io(mode))?));
     }
     for (name, reg) in &regs {
         eprintln!("[bench:registry] requested {name}: effective {:?}", reg.io_mode());
@@ -126,7 +131,7 @@ fn main() -> anyhow::Result<()> {
             &format!("lazy_task_{name}"),
             params as f64,
             || {
-                std::hint::black_box(reg.load_task_vector(3).unwrap());
+                std::hint::black_box(reg.load_task_vector(3, &ExecCtx::sequential()).unwrap());
             },
         ));
     }
@@ -138,7 +143,9 @@ fn main() -> anyhow::Result<()> {
         (params * N_TASKS) as f64,
         || {
             let src = PackedRegistrySource::open(&path).unwrap();
-            std::hint::black_box(merge_from_source(&ta, &pre, &src, None).unwrap());
+            std::hint::black_box(
+                merge_from_source(&ta, &pre, &src, None, &ExecCtx::default()).unwrap(),
+            );
         },
     ));
 
@@ -151,7 +158,9 @@ fn main() -> anyhow::Result<()> {
                 .map(|t| store.load(&format!("task{t:02}")).unwrap())
                 .collect();
             let src = F32ZooSource::new(&pre, &fts);
-            std::hint::black_box(merge_from_source(&ta, &pre, &src, None).unwrap());
+            std::hint::black_box(
+                merge_from_source(&ta, &pre, &src, None, &ExecCtx::default()).unwrap(),
+            );
         },
     ));
 
@@ -162,7 +171,7 @@ fn main() -> anyhow::Result<()> {
         || {
             let src = PackedRegistrySource::open(&path).unwrap();
             std::hint::black_box(
-                merge_from_source(&ta, &pre, &src, Some(&[2, 5])).unwrap(),
+                merge_from_source(&ta, &pre, &src, Some(&[2, 5]), &ExecCtx::default()).unwrap(),
             );
         },
     ));
@@ -193,12 +202,14 @@ fn main() -> anyhow::Result<()> {
     );
     let lams = vec![0.3f32; plan.n_tasks()];
     for (name, mode) in [("mmap", IoMode::Mmap), ("pread", IoMode::Pread)] {
-        let planned = Registry::open_with_io(&planned_path, mode)?;
+        let planned = Registry::open_with(&planned_path, OpenOptions::new().io(mode))?;
         results.push(b.run_throughput(
             &format!("merge8_fused_planned_{name}"),
             (params * N_TASKS) as f64,
             || {
-                std::hint::black_box(fused_merge(&planned, &pre, &lams, None).unwrap());
+                std::hint::black_box(
+                    fused_merge(&planned, &pre, &lams, None, &ExecCtx::default()).unwrap(),
+                );
             },
         ));
     }
@@ -211,7 +222,7 @@ fn main() -> anyhow::Result<()> {
     // not slower than the sequential path.
     let n_auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     eprintln!("[bench:registry] thread scaling: tN = {n_auto} threads");
-    let planned_mmap = Registry::open_with_io(&planned_path, IoMode::Mmap)?;
+    let planned_mmap = Registry::open_with(&planned_path, OpenOptions::new().io(IoMode::Mmap))?;
     let build_path = dir.join("build_scaling.qtvc");
     for (tag, width) in [("t1", 1usize), ("t2", 2), ("tN", n_auto)] {
         let pool = Pool::new(width);
@@ -219,8 +230,9 @@ fn main() -> anyhow::Result<()> {
             &format!("merge8_fused_threads_{tag}"),
             (params * N_TASKS) as f64,
             || {
+                let ctx = ExecCtx::with_pool(&pool);
                 std::hint::black_box(
-                    fused_merge_with_pool(&planned_mmap, &pre, &lams, None, &pool).unwrap(),
+                    fused_merge(&planned_mmap, &pre, &lams, None, &ctx).unwrap(),
                 );
             },
         ));
@@ -246,12 +258,13 @@ fn main() -> anyhow::Result<()> {
     let spec = MergeSpec::new(&[0, 1, 2, 3], &[0.3, 0.2, -0.1, 0.25])?;
     let (parent_spec, patch_task, patch_lam) = spec.parent().expect("4-task spec has a parent");
     let pool = Pool::global();
-    let parent = match merge_spec_with_pool(&parent_spec, &pre, &src, pool)? {
+    let ctx = ExecCtx::with_pool(pool);
+    let parent = match merge_spec(&parent_spec, &pre, &src, &ctx)? {
         MergedModel::Shared(ck) => ck,
         _ => unreachable!("routed merges are shared"),
     };
     results.push(b.run_throughput("routed_patch_one_task", params as f64, || {
-        let tau = src.registry().load_task_vector_with_pool(patch_task, pool).unwrap();
+        let tau = src.registry().load_task_vector(patch_task, &ctx).unwrap();
         let mut out = parent.clone();
         out.axpy(patch_lam, &tau).unwrap();
         std::hint::black_box(out);
@@ -260,9 +273,51 @@ fn main() -> anyhow::Result<()> {
         "routed_full_remerge_4task",
         (params * spec.len()) as f64,
         || {
-            std::hint::black_box(merge_spec_with_pool(&spec, &pre, &src, pool).unwrap());
+            std::hint::black_box(merge_spec(&spec, &pre, &src, &ctx).unwrap());
         },
     ));
+
+    // Tiered section fetch (ISSUE 9): one verified planned-section read
+    // from tier 0 (local shard mmap) vs tier 1 (a live TCP fetch-server)
+    // with a warm LRU chunk cache.  A cache hit is a map probe + copy,
+    // so cached-remote must stay within 2x of a local read; the diff
+    // gate has one global tolerance, so the invariant compares the
+    // remote case against `section_fetch_local_x2` — two local fetches
+    // per iteration, i.e. exactly the 2x bound.
+    let shard_dir = dir.join("shards");
+    std::fs::create_dir_all(&shard_dir)?;
+    let shard_src = Registry::open(&planned_path)?;
+    let shards = shard_registry(&shard_src, &shard_dir, &ShardOptions::default())?;
+    eprintln!(
+        "[bench:registry] sharded planned registry: {} sections, {} unique chunks, {} B",
+        shards.n_sections,
+        shards.n_unique_chunks,
+        shards.total_bytes()
+    );
+    let fetch_pool = Arc::new(SectionFetchPool::open(&shards.manifest_path, 2)?);
+    let mut front = TcpFront::bind_sections("127.0.0.1:0", fetch_pool, 8)?;
+    let local = ShardedRegistry::open(&shards.manifest_path)?;
+    let remote = ShardedRegistry::open_remote(
+        &shards.manifest_path,
+        &front.addr().to_string(),
+        64 << 20,
+        OpenOptions::default(),
+    )?;
+    remote.load_task_vector(0, &ExecCtx::sequential())?; // warm the chunk cache
+    let mut scratch = SectionScratch::default();
+    results.push(b.run("section_fetch_local", || {
+        std::hint::black_box(local.planned_task_view(0, 0, &mut scratch).unwrap());
+    }));
+    let mut scratch = SectionScratch::default();
+    results.push(b.run("section_fetch_local_x2", || {
+        std::hint::black_box(local.planned_task_view(0, 0, &mut scratch).unwrap());
+        std::hint::black_box(local.planned_task_view(0, 0, &mut scratch).unwrap());
+    }));
+    let mut scratch = SectionScratch::default();
+    results.push(b.run("section_fetch_remote_cached", || {
+        std::hint::black_box(remote.planned_task_view(0, 0, &mut scratch).unwrap());
+    }));
+    front.shutdown();
 
     report("registry load/merge", &results);
 
@@ -284,6 +339,7 @@ fn main() -> anyhow::Result<()> {
             ("section_read_mmap", "section_read_pread"),
             ("merge8_fused_threads_tN", "merge8_fused_threads_t1"),
             ("routed_patch_one_task", "routed_full_remerge_4task"),
+            ("section_fetch_remote_cached", "section_fetch_local_x2"),
         ],
     );
     std::fs::write(&out, doc.to_string_compact())?;

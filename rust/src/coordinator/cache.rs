@@ -47,11 +47,12 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::router::{merge_spec_with_pool, MergeSpec};
+use super::router::{merge_spec, MergeSpec};
 use crate::checkpoint::Checkpoint;
 use crate::merge::{MergedModel, Merger};
 use crate::obs;
-use crate::registry::{merge_from_source_with_pool, TaskVectorSource};
+use crate::registry::{merge_from_source, TaskVectorSource};
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 
 /// Cache key: (merge method name, scheme label).
@@ -341,7 +342,8 @@ impl ModelCache {
                 // when builds don't overlap on the pool).
                 let wall = Instant::now();
                 let busy0 = pool.busy_ns();
-                let built = merge_from_source_with_pool(merger, pre, source, None, pool);
+                let ctx = ExecCtx::with_pool(pool).traced("cache_merge_build");
+                let built = merge_from_source(merger, pre, source, None, &ctx);
                 if let (Some(metrics), Ok(_)) = (self.metrics.get(), &built) {
                     metrics.record_merge_build(
                         wall.elapsed(),
@@ -363,7 +365,7 @@ impl ModelCache {
     /// If present, the new variant is `parent + lambda_t * tau_t` — one
     /// task-vector decode plus one signed axpy over the cached floats,
     /// instead of a full re-merge.  Because the canonical routed merge
-    /// ([`merge_spec_with_pool`](super::router::merge_spec_with_pool))
+    /// ([`merge_spec`](super::router::merge_spec))
     /// accumulates sequentially in ascending task order, the patch
     /// replays exactly its final accumulation step: **every** variant
     /// this method serves — patched or fully merged, at any thread
@@ -410,7 +412,8 @@ impl ModelCache {
             // No cached neighbor: full canonical merge.
             let wall = Instant::now();
             let busy0 = pool.busy_ns();
-            let built = merge_spec_with_pool(spec, pre, source, pool);
+            let ctx = ExecCtx::with_pool(pool).traced("routed_merge_build");
+            let built = merge_spec(spec, pre, source, &ctx);
             if let (Some(metrics), Ok(_)) = (self.metrics.get(), &built) {
                 metrics.record_merge_build(
                     wall.elapsed(),
@@ -806,7 +809,7 @@ mod tests {
             cache
                 .get_or_build_sized("ta", &src.source_id(), 0, || {
                     builds.fetch_add(1, Ordering::SeqCst);
-                    crate::registry::merge_from_source(&ta, &pre, &src, None)
+                    crate::registry::merge_from_source(&ta, &pre, &src, None, &ExecCtx::default())
                 })
                 .unwrap();
             cache.register_source(&src);

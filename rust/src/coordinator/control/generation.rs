@@ -30,7 +30,15 @@
 //! Pinning requires an inode-holding I/O mode: `Mmap` and `Pread` both
 //! qualify (mapping / file handle survive the rename).  `Reopen` mode
 //! re-opens the *path* per section read and would observe the new file
-//! mid-request, so [`GenerationalRegistry::open_with_io`] refuses it.
+//! mid-request, so [`GenerationalRegistry::open_with`] refuses it.
+//!
+//! Sharded zoos get the same discipline through
+//! [`GenerationalManifest`]: the `MANIFEST.qtvm` file is the unit of
+//! swap (staged at `MANIFEST.qtvm.next`, validated, renamed), while the
+//! shard files it references are immutable and content-addressed —
+//! publishers add new shard files rather than rewriting old ones, and
+//! every chunk read is CRC- and content-hash-verified, so a manifest
+//! can never silently serve bytes from the wrong shard vintage.
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, Weak};
@@ -38,7 +46,10 @@ use std::sync::{Arc, Mutex, Weak};
 use anyhow::{bail, Context, Result};
 
 use crate::obs;
-use crate::registry::{IoMode, PackedRegistrySource, Registry};
+use crate::registry::{
+    IoMode, OpenOptions, PackedRegistrySource, Registry, ShardedRegistry, ShardedSource, Validation,
+};
+use crate::util::exec::ExecCtx;
 
 /// Suffix of the staged next-generation file: publishing renames
 /// `<path>.next` over `<path>`.
@@ -82,26 +93,26 @@ pub struct GenerationalRegistry {
 }
 
 impl GenerationalRegistry {
-    /// Open `path` as generation 1 with the platform-default I/O mode
+    /// Open `path` as generation 1 with the default [`OpenOptions`]
     /// (`Mmap`, degrading to `Pread` — both inode-pinning).
     pub fn open<P: AsRef<Path>>(path: P) -> Result<GenerationalRegistry> {
-        Self::open_with_io(path, IoMode::Mmap)
+        Self::open_with(path, OpenOptions::default())
     }
 
-    /// [`open`](Self::open) with an explicit [`IoMode`].  `Reopen` is
-    /// refused: per-read path opens cannot pin a generation across a
-    /// rename-swap (a swapped path would feed a new file to an old
-    /// generation's in-flight reads).
-    pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<GenerationalRegistry> {
+    /// [`open`](Self::open) with explicit [`OpenOptions`].
+    /// `IoMode::Reopen` is refused: per-read path opens cannot pin a
+    /// generation across a rename-swap (a swapped path would feed a new
+    /// file to an old generation's in-flight reads).
+    pub fn open_with<P: AsRef<Path>>(path: P, opts: OpenOptions) -> Result<GenerationalRegistry> {
         let path = path.as_ref().to_path_buf();
-        if mode == IoMode::Reopen {
+        if opts.io_mode() == IoMode::Reopen {
             bail!(
                 "IoMode::Reopen re-opens the path per read and cannot pin a \
                  generation across a rename-swap; use Mmap or Pread for {}",
                 path.display()
             );
         }
-        let registry = Registry::open_with_io(&path, mode)?;
+        let registry = Registry::open_with(&path, opts)?;
         if registry.io_mode() == IoMode::Reopen {
             bail!(
                 "registry {} fell back to IoMode::Reopen on this platform; \
@@ -119,6 +130,13 @@ impl GenerationalRegistry {
             current: Mutex::new(first),
             publish_lock: Mutex::new(()),
         })
+    }
+
+    /// [`open`](Self::open) with an explicit [`IoMode`] — the PR-6
+    /// spelling, superseded by [`open_with`](Self::open_with).
+    #[deprecated(note = "use GenerationalRegistry::open_with(path, OpenOptions::new().io(mode))")]
+    pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<GenerationalRegistry> {
+        Self::open_with(path, OpenOptions::new().io(mode))
     }
 
     /// The serving path (what clients name; individual generations are
@@ -174,7 +192,7 @@ impl GenerationalRegistry {
         // Validate before touching the serving path: a corrupt stage must
         // never replace a healthy registry.  Reopen mode avoids holding a
         // second mapping of a file we are about to rename.
-        Registry::open_with_io(staged, IoMode::Reopen)
+        Registry::open_with(staged, OpenOptions::new().io(IoMode::Reopen))
             .with_context(|| format!("validating staged registry {}", staged.display()))?;
         std::fs::rename(staged, &self.path).with_context(|| {
             format!("renaming {} over {}", staged.display(), self.path.display())
@@ -218,6 +236,171 @@ impl GenerationalRegistry {
     }
 }
 
+/// One opened sharded-zoo manifest, numbered within its serving path.
+/// The `Arc<ManifestGeneration>` pins the opened [`ShardedRegistry`]
+/// (manifest index pages, decoded base cache, any opened shard handles);
+/// the shard files themselves are immutable, so a pin stays bit-exact
+/// even while newer manifests are published beside it.
+pub struct ManifestGeneration {
+    number: u64,
+    reg: Arc<ShardedRegistry>,
+}
+
+impl ManifestGeneration {
+    /// Monotonic generation number (the first open is generation 1).
+    pub fn number(&self) -> u64 {
+        self.number
+    }
+
+    pub fn registry(&self) -> &ShardedRegistry {
+        &self.reg
+    }
+
+    /// The generation's sharded zoo as a merge-ready task-vector source.
+    pub fn source(&self) -> ShardedSource {
+        ShardedSource::new(self.reg.clone())
+    }
+}
+
+/// [`GenerationalRegistry`]'s twin for sharded zoos: the serving path is
+/// a `MANIFEST.qtvm`, the staged next generation is `MANIFEST.qtvm.next`
+/// in the same directory, and publishing validates-then-renames exactly
+/// like the packed-file swap.  Validation opens the staged manifest as a
+/// tier-0 [`ShardedRegistry`] at [`Validation::Deep`] — every referenced
+/// chunk is fetched and CRC/content-hash checked — so a manifest naming
+/// a missing shard, a truncated page, or a stale chunk address can never
+/// replace a healthy generation.
+///
+/// Shard files are *not* part of the swap: they are content-addressed
+/// and immutable, so successive generations may share them (dedup across
+/// publishes), and a publisher only ever adds new ones.
+pub struct GenerationalManifest {
+    path: PathBuf,
+    opts: OpenOptions,
+    current: Mutex<Arc<ManifestGeneration>>,
+    history: Mutex<Vec<Weak<ManifestGeneration>>>,
+    publish_lock: Mutex<()>,
+}
+
+impl GenerationalManifest {
+    /// Open `path` (a `MANIFEST.qtvm`) as generation 1 with the default
+    /// [`OpenOptions`].
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<GenerationalManifest> {
+        Self::open_with(path, OpenOptions::default())
+    }
+
+    /// [`open`](Self::open) with explicit [`OpenOptions`].  `Reopen` is
+    /// refused for the same reason as
+    /// [`GenerationalRegistry::open_with`]: shard reads must pin inodes,
+    /// not paths, across a publish.
+    pub fn open_with<P: AsRef<Path>>(path: P, opts: OpenOptions) -> Result<GenerationalManifest> {
+        let path = path.as_ref().to_path_buf();
+        if opts.io_mode() == IoMode::Reopen {
+            bail!(
+                "IoMode::Reopen re-opens shard paths per read and cannot pin a \
+                 generation across a manifest swap; use Mmap or Pread for {}",
+                path.display()
+            );
+        }
+        let reg = ShardedRegistry::open_with(&path, opts)?;
+        let first = Arc::new(ManifestGeneration { number: 1, reg: Arc::new(reg) });
+        Ok(GenerationalManifest {
+            path,
+            opts,
+            history: Mutex::new(vec![Arc::downgrade(&first)]),
+            current: Mutex::new(first),
+            publish_lock: Mutex::new(()),
+        })
+    }
+
+    /// The serving manifest path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Where the next manifest is staged: `<path>.next` in the manifest's
+    /// own directory, so the publish rename is atomic and the staged
+    /// manifest resolves shard names against the same shard set.
+    pub fn stage_path(&self) -> PathBuf {
+        let mut os = self.path.as_os_str().to_os_string();
+        os.push(STAGE_SUFFIX);
+        PathBuf::from(os)
+    }
+
+    /// Pin the current generation for one unit of work.
+    pub fn pin(&self) -> Arc<ManifestGeneration> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// The current generation number.
+    pub fn generation(&self) -> u64 {
+        self.current.lock().unwrap().number
+    }
+
+    /// Numbers of the generations still alive (current plus any pinned
+    /// older ones), pruning dead history as a side effect.
+    pub fn live_generations(&self) -> Vec<u64> {
+        let mut history = self.history.lock().unwrap();
+        history.retain(|w| w.strong_count() > 0);
+        history.iter().filter_map(|w| w.upgrade()).map(|g| g.number).collect()
+    }
+
+    /// Publish the staged manifest (`<path>.next`): deep-validate it
+    /// against the shard set, rename over the serving path, install as
+    /// generation N+1.  On error nothing changes and the staged file is
+    /// left in place for inspection.
+    pub fn publish_staged(&self) -> Result<u64> {
+        self.publish_file(&self.stage_path())
+    }
+
+    /// [`publish_staged`](Self::publish_staged) for an arbitrary staged
+    /// manifest path (must be in the serving manifest's directory: the
+    /// rename must be atomic and shard names resolve relative to the
+    /// manifest).
+    pub fn publish_file(&self, staged: &Path) -> Result<u64> {
+        let _publishing = self.publish_lock.lock().unwrap();
+        let _span = obs::span(obs::Category::Control, "publish_manifest");
+        // Deep validation fetches and verifies every chunk the staged
+        // manifest references — Reopen mode so no shard mapping outlives
+        // the check.
+        ShardedRegistry::open_with(
+            staged,
+            OpenOptions::new().io(IoMode::Reopen).validation(Validation::Deep),
+        )
+        .with_context(|| format!("validating staged manifest {}", staged.display()))?;
+        std::fs::rename(staged, &self.path).with_context(|| {
+            format!("renaming {} over {}", staged.display(), self.path.display())
+        })?;
+        self.install_next().with_context(|| {
+            format!(
+                "staged manifest published over {} but re-opening it failed; \
+                 the previous generation keeps serving its pinned shards",
+                self.path.display()
+            )
+        })
+    }
+
+    /// Re-open the serving manifest in place as generation N+1 (the path
+    /// was replaced externally).
+    pub fn reload(&self) -> Result<u64> {
+        let _publishing = self.publish_lock.lock().unwrap();
+        self.install_next()
+    }
+
+    fn install_next(&self) -> Result<u64> {
+        let _span = obs::span(obs::Category::Control, "install_manifest_generation");
+        let next = {
+            let current = self.current.lock().unwrap();
+            let reg = ShardedRegistry::open_with(&self.path, self.opts)?;
+            Arc::new(ManifestGeneration { number: current.number + 1, reg: Arc::new(reg) })
+        };
+        let number = next.number;
+        self.history.lock().unwrap().push(Arc::downgrade(&next));
+        *self.current.lock().unwrap() = next;
+        Ok(number)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,7 +425,8 @@ mod tests {
     fn reopen_mode_is_refused() {
         let dir = tmpdir("reject-reopen");
         let path = pack(&dir, "zoo.qtvc", 1);
-        let err = GenerationalRegistry::open_with_io(&path, IoMode::Reopen).unwrap_err();
+        let err = GenerationalRegistry::open_with(&path, OpenOptions::new().io(IoMode::Reopen))
+            .unwrap_err();
         assert!(err.to_string().contains("Reopen"), "{err:#}");
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -256,7 +440,7 @@ mod tests {
 
         // Pin generation 1 and remember its decode.
         let pinned = served.pin();
-        let before = pinned.registry().load_task_vector(0).unwrap();
+        let before = pinned.registry().load_task_vector(0, &ExecCtx::sequential()).unwrap();
 
         // Stage a different zoo and publish it.
         let staged = pack(&dir, "zoo.qtvc.next", 2);
@@ -267,11 +451,11 @@ mod tests {
         assert!(!staged.exists(), "publish consumes the staged file");
 
         // The old pin still reads generation 1's bytes, bit-exactly.
-        let still = pinned.registry().load_task_vector(0).unwrap();
+        let still = pinned.registry().load_task_vector(0, &ExecCtx::sequential()).unwrap();
         assert_eq!(before, still, "pinned generation changed under a publish");
 
         // New pins see generation 2, whose data differs (different seed).
-        let fresh = served.pin().registry().load_task_vector(0).unwrap();
+        let fresh = served.pin().registry().load_task_vector(0, &ExecCtx::sequential()).unwrap();
         assert_ne!(before, fresh, "publish did not change served data");
 
         // Both generations are live while the pin holds; dropping it
@@ -295,7 +479,7 @@ mod tests {
         // for inspection, and the serving path still opens cleanly.
         assert_eq!(served.generation(), 1);
         assert!(served.stage_path().exists());
-        served.pin().registry().load_task_vector(0).unwrap();
+        served.pin().registry().load_task_vector(0, &ExecCtx::sequential()).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -33,7 +33,9 @@ pub mod generation;
 pub mod plane;
 pub mod variant;
 
-pub use generation::{Generation, GenerationalRegistry, STAGE_SUFFIX};
+pub use generation::{
+    Generation, GenerationalManifest, GenerationalRegistry, ManifestGeneration, STAGE_SUFFIX,
+};
 pub use plane::{ControlPlane, PlaneStatus, VariantStatus};
 pub use variant::{Variant, VariantConfig, VariantState};
 

@@ -38,7 +38,7 @@ use super::ControlError;
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::metrics::VariantMetrics;
 use crate::obs;
-use crate::util::pool::Pool;
+use crate::util::exec::ExecCtx;
 
 /// Lifecycle states of a variant.  `Failed` retains the load error so
 /// status queries explain *why* a variant never became ready.
@@ -259,9 +259,9 @@ impl Variant {
     }
 
     /// Submit a task-vector reconstruction against the pinned
-    /// generation.  Decodes through the shared [`Pool`], so the result
-    /// is bit-exact at every thread count (the PR-5 determinism
-    /// contract).
+    /// generation.  Decodes through the default [`ExecCtx`] (shared
+    /// global pool), so the result is bit-exact at every thread count
+    /// (the PR-5 determinism contract).
     pub fn submit_task_vector(
         &self,
         t: usize,
@@ -269,7 +269,7 @@ impl Variant {
         self.submit(move |generation| {
             generation
                 .registry()
-                .load_task_vector_with_pool(t, Pool::global())
+                .load_task_vector(t, &ExecCtx::default())
                 .map_err(|e| ControlError::JobFailed { error: format!("{e:#}") })
         })
     }

@@ -1,0 +1,244 @@
+//! Section-fetch executor: the server half of tier-1 registry serving.
+//!
+//! A fetch server node owns the shard files of one sharded zoo and
+//! answers `{"cmd": "fetch_section"}` requests from remote
+//! [`ShardedRegistry`](crate::registry::ShardedRegistry) clients (see
+//! [`TcpFront::bind_sections`](super::tcp::TcpFront::bind_sections)).
+//! Chunk reads are cheap but jittery (page-cache hit vs. cold pread), so
+//! the executor follows the bounded-mailbox pool idiom the in-process
+//! [`Server`](super::server::Server) uses for inference:
+//!
+//! * `workers` threads, each owning a **bounded** mpsc mailbox
+//!   ([`MAILBOX_DEPTH`] jobs deep) and a shared handle set over the
+//!   shard files;
+//! * connection handlers dispatch round-robin across mailboxes; a full
+//!   mailbox makes `send` **block the dispatching connection**, which is
+//!   the backpressure story — slow disks surface as slow replies, never
+//!   as unbounded queue growth;
+//! * the deep queue (rather than depth-1 rendezvous) keeps workers fed
+//!   across the reply latency of their previous job.
+//!
+//! Replies carry the raw chunk bytes plus the server's CRC of what it
+//! read.  The server deliberately does **not** verify chunks against a
+//! manifest: the client verifies length, CRC32 *and* content hash
+//! against its own manifest ([`ShardedRegistry`] does this identically
+//! for every tier), so a corrupt or stale shard on the server fails
+//! closed at the client with the same error it would raise locally.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::obs;
+use crate::registry::{IoMode, LocalShardStore, Manifest};
+use crate::util::json::Json;
+
+/// Jobs a worker mailbox holds before `send` blocks the dispatcher.
+pub const MAILBOX_DEPTH: usize = 128;
+
+/// What a section server hands the TCP front: resolve one chunk range to
+/// its raw bytes, and describe itself for `{"cmd": "status"}`.
+pub trait SectionProvider: Send + Sync {
+    /// The raw bytes of `[offset, offset+length)` in shard `shard`.
+    /// Range-validated against the shard table; **not** CRC-verified
+    /// (the client verifies against its manifest).
+    fn fetch_section(&self, shard: u32, offset: u64, length: u64) -> Result<Vec<u8>>;
+
+    /// Status snapshot for the front-end's `status` command.
+    fn status_json(&self) -> Json;
+}
+
+/// One queued fetch: the range plus a rendezvous channel for the reply.
+struct Job {
+    shard: u32,
+    offset: u64,
+    length: u64,
+    reply: SyncSender<Result<Vec<u8>>>,
+}
+
+/// The bounded-mailbox fetch executor over one manifest's shard set.
+pub struct SectionFetchPool {
+    manifest_path: PathBuf,
+    n_shards: usize,
+    mailboxes: Vec<SyncSender<Job>>,
+    next: AtomicUsize,
+    served: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SectionFetchPool {
+    /// Open `manifest_path` (a `MANIFEST.qtvm`), validate its header, and
+    /// start `workers` fetch threads over its shard files.  Shards are
+    /// opened lazily on first touch; a missing shard errors per-request,
+    /// not at startup (a serving node may hold a manifest whose cold
+    /// shards are still syncing).
+    pub fn open(manifest_path: &Path, workers: usize) -> Result<SectionFetchPool> {
+        let manifest = Manifest::read(manifest_path)
+            .with_context(|| format!("opening manifest {}", manifest_path.display()))?;
+        let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+        let store = Arc::new(LocalShardStore::open(dir, manifest.shards(), IoMode::Mmap));
+        let workers = workers.max(1);
+        let served = Arc::new(AtomicU64::new(0));
+        let errors = Arc::new(AtomicU64::new(0));
+        let mut mailboxes = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = sync_channel::<Job>(MAILBOX_DEPTH);
+            mailboxes.push(tx);
+            let st = store.clone();
+            let sv = served.clone();
+            let er = errors.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("tvq-fetch-{w}"))
+                    .spawn(move || fetch_worker(rx, st, sv, er))?,
+            );
+        }
+        Ok(SectionFetchPool {
+            manifest_path: manifest_path.to_path_buf(),
+            n_shards: manifest.shards().len(),
+            mailboxes,
+            next: AtomicUsize::new(0),
+            served,
+            errors,
+            workers: handles,
+        })
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    /// `(served, errored)` request totals.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.served.load(Ordering::Relaxed), self.errors.load(Ordering::Relaxed))
+    }
+}
+
+/// Worker body: drain the mailbox until every sender is gone.  Reply
+/// sends ignore a vanished requester (connection dropped mid-fetch).
+fn fetch_worker(
+    rx: Receiver<Job>,
+    store: Arc<LocalShardStore>,
+    served: Arc<AtomicU64>,
+    errors: Arc<AtomicU64>,
+) {
+    while let Ok(job) = rx.recv() {
+        let _span = obs::span(obs::Category::Registry, "serve_section")
+            .with_arg("bytes", job.length);
+        let result = store.read_chunk(job.shard, job.offset, job.length);
+        match &result {
+            Ok(_) => served.fetch_add(1, Ordering::Relaxed),
+            Err(_) => errors.fetch_add(1, Ordering::Relaxed),
+        };
+        let _ = job.reply.send(result);
+    }
+}
+
+impl SectionProvider for SectionFetchPool {
+    fn fetch_section(&self, shard: u32, offset: u64, length: u64) -> Result<Vec<u8>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let job = Job { shard, offset, length, reply: reply_tx };
+        // Round-robin dispatch; a full mailbox blocks *this* caller
+        // (per-connection backpressure) while other connections keep
+        // dispatching to their own workers.
+        let w = self.next.fetch_add(1, Ordering::Relaxed) % self.mailboxes.len();
+        if self.mailboxes[w].send(job).is_err() {
+            anyhow::bail!("section fetch pool is shut down");
+        }
+        reply_rx.recv().context("fetch worker dropped the reply")?
+    }
+
+    fn status_json(&self) -> Json {
+        let (served, errors) = self.stats();
+        Json::obj(vec![
+            ("role", Json::str("section-server")),
+            ("manifest", Json::str(&self.manifest_path.display().to_string())),
+            ("shards", Json::num(self.n_shards as f64)),
+            ("workers", Json::num(self.workers() as f64)),
+            ("served", Json::num(served as f64)),
+            ("errors", Json::num(errors as f64)),
+        ])
+    }
+}
+
+impl Drop for SectionFetchPool {
+    fn drop(&mut self) {
+        // Closing every mailbox ends each worker's recv loop.
+        self.mailboxes.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::{fnv64, shard_registry, ShardOptions, MANIFEST_FILE_NAME};
+    use crate::util::crc32;
+
+    fn shard_fixture(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tvq-fetchpool-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (pre, fts) = crate::exp::planner::synthetic_planner_zoo(3, 11);
+        let zoo = dir.join("zoo.qtvc");
+        let plan = crate::planner::plan_pack(
+            &pre,
+            &fts,
+            u64::MAX,
+            &crate::planner::PlannerConfig::default(),
+        )
+        .unwrap();
+        crate::planner::write_planned_registry(&pre, &fts, &plan, &zoo).unwrap();
+        let src = crate::registry::Registry::open(&zoo).unwrap();
+        shard_registry(&src, &dir, &ShardOptions { n_shards: 2, ..Default::default() }).unwrap();
+        dir
+    }
+
+    #[test]
+    fn pool_serves_chunks_and_counts() {
+        let dir = shard_fixture("serve");
+        let manifest_path = dir.join(MANIFEST_FILE_NAME);
+        let manifest = Manifest::read(&manifest_path).unwrap();
+        let rows = manifest.read_page(&manifest_path, 0).unwrap();
+        let pool = SectionFetchPool::open(&manifest_path, 2).unwrap();
+        for row in rows.iter().take(4) {
+            let c = &row.chunk;
+            let bytes = pool.fetch_section(c.shard, c.offset, c.length).unwrap();
+            assert_eq!(bytes.len() as u64, c.length);
+            assert_eq!(crc32(&bytes), c.crc, "chunk {:?}", row.name);
+            assert_eq!(fnv64(&bytes), c.hash, "chunk {:?}", row.name);
+        }
+        let (served, errors) = pool.stats();
+        assert_eq!(served, rows.len().min(4) as u64);
+        assert_eq!(errors, 0);
+        let status = pool.status_json();
+        assert_eq!(status.req("shards").unwrap().as_usize().unwrap(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_of_range_and_bad_shard_error_without_killing_workers() {
+        let dir = shard_fixture("range");
+        let manifest_path = dir.join(MANIFEST_FILE_NAME);
+        let pool = SectionFetchPool::open(&manifest_path, 1).unwrap();
+        let err = pool.fetch_section(99, 8, 4).unwrap_err();
+        assert!(err.to_string().contains("shard 99"), "{err:#}");
+        let err = pool.fetch_section(0, 0, 4).unwrap_err();
+        assert!(err.to_string().contains("outside shard"), "{err:#}");
+        // The worker survives errors: a valid fetch still succeeds.
+        let manifest = Manifest::read(&manifest_path).unwrap();
+        let c = manifest.read_page(&manifest_path, 0).unwrap()[0].chunk;
+        assert!(pool.fetch_section(c.shard, c.offset, c.length).is_ok());
+        assert_eq!(pool.stats().1, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

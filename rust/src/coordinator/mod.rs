@@ -38,10 +38,15 @@
 //! * [`control`] — the variant lifecycle layer above all of this:
 //!   generational registry hot-swap, graceful drain, admission control,
 //!   and the node byte budget (see its module docs).
+//! * [`fetch`] — the tier-1 section server: a bounded-mailbox executor
+//!   pool ([`SectionFetchPool`]) answering `fetch_section` requests over
+//!   the shard files of one sharded zoo, exposed on the wire through
+//!   [`TcpFront::bind_sections`].
 
 pub mod batcher;
 pub mod cache;
 pub mod control;
+pub mod fetch;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -49,7 +54,11 @@ pub mod tcp;
 
 pub use batcher::{Batch, Batcher};
 pub use cache::ModelCache;
-pub use control::{ControlError, ControlPlane, GenerationalRegistry, Variant, VariantConfig, VariantState};
+pub use control::{
+    ControlError, ControlPlane, GenerationalManifest, GenerationalRegistry, Variant,
+    VariantConfig, VariantState,
+};
+pub use fetch::{SectionFetchPool, SectionProvider};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{MergeSpec, Router};
 pub use server::{ServeError, Server, ServerConfig, ServeModel};

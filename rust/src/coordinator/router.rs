@@ -21,7 +21,7 @@
 //! accumulated **sequentially in ascending task order** — the canonical
 //! accumulation every serving path replays, which is what makes a
 //! one-task delta patch (`cached + lambda_t * tau_t`) bit-identical to
-//! the full re-merge it replaces (see [`merge_spec_with_pool`]).
+//! the full re-merge it replaces (see [`merge_spec`]).
 
 use anyhow::{bail, Result};
 
@@ -29,6 +29,7 @@ use super::cache::VariantKey;
 use crate::checkpoint::Checkpoint;
 use crate::merge::MergedModel;
 use crate::registry::TaskVectorSource;
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 
 /// Method name under which routed dynamic variants are cached; keeps
@@ -161,26 +162,28 @@ impl Router {
     }
 }
 
-/// The canonical routed merge: task-vector loads fan out across `pool`,
-/// the accumulate runs on the caller's thread **sequentially in
-/// ascending task order** — so the merged floats are bit-identical at
-/// every thread count, and bit-identical to a one-task delta patch of
-/// the spec's [`parent`](MergeSpec::parent) (the patch replays exactly
-/// the final accumulation step).
-pub fn merge_spec_with_pool(
+/// The canonical routed merge: task-vector loads fan out across the
+/// [`ExecCtx`]'s pool, the accumulate runs on the caller's thread
+/// **sequentially in ascending task order** — so the merged floats are
+/// bit-identical at every thread count, and bit-identical to a one-task
+/// delta patch of the spec's [`parent`](MergeSpec::parent) (the patch
+/// replays exactly the final accumulation step).
+pub fn merge_spec(
     spec: &MergeSpec,
     pre: &Checkpoint,
     source: &dyn TaskVectorSource,
-    pool: &Pool,
+    ctx: &ExecCtx,
 ) -> Result<MergedModel> {
+    let _op = ctx.op_span(crate::obs::Category::Merge);
+    let pool = ctx.pool();
     for &(t, _) in spec.pairs() {
         if t >= source.n_tasks() {
             bail!("task index {t} out of range ({} tasks)", source.n_tasks());
         }
     }
-    // Mirrors merge_from_source_with_pool: one task parallelizes inside
-    // the load, several parallelize across tasks — either way each tau
-    // is bit-identical to its sequential decode.
+    // Mirrors merge_from_source: one task parallelizes inside the load,
+    // several parallelize across tasks — either way each tau is
+    // bit-identical to its sequential decode.
     let taus: Vec<Checkpoint> = if spec.len() == 1 {
         vec![source.task_vector_with_pool(spec.pairs()[0].0, pool)?]
     } else {
@@ -191,6 +194,18 @@ pub fn merge_spec_with_pool(
         out.axpy(lam, tau)?;
     }
     Ok(MergedModel::Shared(out))
+}
+
+/// [`merge_spec`] on an explicit pool — the PR-7 twin, superseded by
+/// [`ExecCtx`].
+#[deprecated(note = "use merge_spec(spec, pre, source, &ExecCtx::with_pool(pool))")]
+pub fn merge_spec_with_pool(
+    spec: &MergeSpec,
+    pre: &Checkpoint,
+    source: &dyn TaskVectorSource,
+    pool: &Pool,
+) -> Result<MergedModel> {
+    merge_spec(spec, pre, source, &ExecCtx::with_pool(pool))
 }
 
 #[cfg(test)]

@@ -28,9 +28,19 @@
 //! [`TcpFront::bind_with_status`]; a plain [`bind`](TcpFront::bind)
 //! reports server metrics only.
 //!
+//! A front bound with [`TcpFront::bind_sections`] speaks one more
+//! command — the tier-1 registry fetch protocol — and is the only
+//! reply that breaks pure line framing with a *binary* body:
+//!
+//! Request:  `{"cmd": "fetch_section", "shard": S, "offset": O, "length": L}`
+//! Response: `{"ok": true, "length": L, "crc": C}` + exactly `L` raw
+//!           bytes, or an `{"error": "..."}` line with no body.
+//!
 //! One handler thread per connection (bounded by `max_conns`); each
-//! request is forwarded through [`Server::submit`], so batching,
-//! backpressure and metrics behave exactly as for in-process callers.
+//! inference request is forwarded through [`Server::submit`], so
+//! batching, backpressure and metrics behave exactly as for in-process
+//! callers, and each section fetch through the bounded-mailbox
+//! [`SectionProvider`](super::fetch::SectionProvider) pool.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -42,9 +52,11 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::fetch::SectionProvider;
 use super::metrics::MetricsSnapshot;
 use super::server::Server;
 use crate::tensor::Tensor;
+use crate::util::crc32;
 use crate::util::json::Json;
 
 /// Supplies the `control` section of a `{"cmd": "status"}` reply — the
@@ -81,6 +93,28 @@ impl TcpFront {
         max_conns: usize,
         status: Option<Arc<dyn StatusSource>>,
     ) -> Result<TcpFront> {
+        Self::bind_inner(addr, Some(server), max_conns, status, None)
+    }
+
+    /// Bind a **section server**: no inference backend, just the tier-1
+    /// registry fetch protocol (`fetch_section`) plus `status` answered
+    /// from the provider.  Inference / metrics / watch requests get a
+    /// pointed error line.
+    pub fn bind_sections(
+        addr: &str,
+        provider: Arc<dyn SectionProvider>,
+        max_conns: usize,
+    ) -> Result<TcpFront> {
+        Self::bind_inner(addr, None, max_conns, None, Some(provider))
+    }
+
+    fn bind_inner(
+        addr: &str,
+        server: Option<Arc<Server>>,
+        max_conns: usize,
+        status: Option<Arc<dyn StatusSource>>,
+        sections: Option<Arc<dyn SectionProvider>>,
+    ) -> Result<TcpFront> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -109,10 +143,11 @@ impl TcpFront {
                             let cd = conns.clone();
                             let st = stop2.clone();
                             let stat = status.clone();
+                            let sect = sections.clone();
                             let _ = std::thread::Builder::new()
                                 .name("tvq-tcp-conn".into())
                                 .spawn(move || {
-                                    let _ = handle_conn(stream, srv, stat, st);
+                                    let _ = handle_conn(stream, srv, stat, sect, st);
                                     cd.fetch_sub(1, Ordering::Relaxed);
                                 });
                         }
@@ -148,8 +183,9 @@ impl Drop for TcpFront {
 
 fn handle_conn(
     stream: TcpStream,
-    server: Arc<Server>,
+    server: Option<Arc<Server>>,
     status: Option<Arc<dyn StatusSource>>,
+    sections: Option<Arc<dyn SectionProvider>>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
@@ -164,7 +200,8 @@ fn handle_conn(
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
-                match handle_line(&line, &server, status.as_deref()) {
+                match handle_line(&line, server.as_deref(), status.as_deref(), sections.as_deref())
+                {
                     Ok(Reply::Line(json)) => writeln!(writer, "{}", json.to_string_compact())?,
                     Ok(Reply::Text(text)) => {
                         // Multi-line exposition, blank-line terminated so a
@@ -172,10 +209,19 @@ fn handle_conn(
                         writer.write_all(text.as_bytes())?;
                         writeln!(writer)?;
                     }
+                    Ok(Reply::Blob(header, body)) => {
+                        // The one framing exception: a JSON header line
+                        // followed by exactly `length` raw bytes.
+                        writeln!(writer, "{}", header.to_string_compact())?;
+                        writer.write_all(&body)?;
+                        writer.flush()?;
+                    }
                     Ok(Reply::Watch { interval }) => {
                         // The connection becomes a push stream; it ends on
-                        // client disconnect or front-end shutdown.
-                        return watch_loop(&mut writer, interval, &server, status.as_deref(), &stop);
+                        // client disconnect or front-end shutdown.  (A
+                        // watch is only reachable with a server bound.)
+                        let srv = server.as_deref().expect("watch requires a server");
+                        return watch_loop(&mut writer, interval, srv, status.as_deref(), &stop);
                     }
                     Err(e) => writeln!(
                         writer,
@@ -202,34 +248,51 @@ enum Reply {
     Line(Json),
     /// Pre-rendered multi-line text followed by one blank line.
     Text(String),
+    /// A JSON header line followed by the raw bytes it describes
+    /// (section fetch replies).
+    Blob(Json, Vec<u8>),
     /// Switch the connection into streaming-watch mode.
     Watch { interval: Duration },
 }
 
 fn handle_line(
     line: &str,
-    server: &Server,
+    server: Option<&Server>,
     status: Option<&dyn StatusSource>,
+    sections: Option<&dyn SectionProvider>,
 ) -> Result<Reply> {
     let req = Json::parse(line).context("malformed JSON request")?;
+    let need_server = |server: Option<&Server>, cmd: &str| {
+        server.ok_or_else(|| {
+            anyhow::anyhow!("{cmd} needs an inference server; this endpoint serves sections only")
+        })
+    };
     if let Some(cmd) = req.get("cmd") {
         return match cmd.as_str()? {
             "status" => {
-                let mut fields = vec![("server", server.metrics().to_json())];
+                let mut fields = Vec::new();
+                if let Some(srv) = server {
+                    fields.push(("server", srv.metrics().to_json()));
+                }
                 if let Some(s) = status {
                     fields.push(("control", s.status_json()));
+                }
+                if let Some(p) = sections {
+                    fields.push(("sections", p.status_json()));
                 }
                 Ok(Reply::Line(Json::obj(fields)))
             }
             "metrics" => {
+                let srv = need_server(server, "metrics")?;
                 let mut out = String::new();
-                server.metrics().prometheus_into(&mut out);
+                srv.metrics().prometheus_into(&mut out);
                 if let Some(s) = status {
                     s.prometheus_into(&mut out);
                 }
                 Ok(Reply::Text(out))
             }
             "watch" => {
+                need_server(server, "watch")?;
                 let interval_ms = match req.get("interval_ms") {
                     Some(v) => v.as_usize().context("watch interval_ms")?,
                     None => 1_000,
@@ -238,8 +301,26 @@ fn handle_line(
                 // handler thread against the snapshot locks.
                 Ok(Reply::Watch { interval: Duration::from_millis(interval_ms.max(10) as u64) })
             }
+            "fetch_section" => {
+                let p = sections.ok_or_else(|| {
+                    anyhow::anyhow!("this endpoint has no section store (no manifest attached)")
+                })?;
+                let shard = req.req("shard")?.as_usize()? as u32;
+                let offset = req.req("offset")?.as_usize()? as u64;
+                let length = req.req("length")?.as_usize()? as u64;
+                // Provider errors flow to the generic error line, relayed
+                // verbatim to the client's bail.
+                let body = p.fetch_section(shard, offset, length)?;
+                let header = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("length", Json::num(body.len() as f64)),
+                    ("crc", Json::num(crc32(&body) as f64)),
+                ]);
+                Ok(Reply::Blob(header, body))
+            }
             other => anyhow::bail!(
-                "unknown cmd {other:?} (supported: \"status\", \"metrics\", \"watch\")"
+                "unknown cmd {other:?} (supported: \"status\", \"metrics\", \"watch\", \
+                 \"fetch_section\")"
             ),
         };
     }
@@ -250,6 +331,7 @@ fn handle_line(
         .map(|v| v.as_f64().map(|f| f as f32))
         .collect::<Result<_>>()?;
     let x = Tensor::from_vec(data);
+    let server = need_server(server, "inference")?;
     let logits = server.infer(task, &x)?;
     Ok(Reply::Line(Json::obj(vec![(
         "logits",
@@ -555,6 +637,52 @@ mod tests {
         let parsed = Json::parse(reply.trim()).unwrap();
         assert!(parsed.get("server").is_some(), "reply: {reply}");
         assert!(parsed.get("control").is_none(), "reply: {reply}");
+    }
+
+    #[test]
+    fn section_endpoint_serves_blobs_and_refuses_inference() {
+        struct OneChunk;
+        impl SectionProvider for OneChunk {
+            fn fetch_section(&self, shard: u32, offset: u64, length: u64) -> Result<Vec<u8>> {
+                if shard != 0 {
+                    anyhow::bail!("fetch_section references shard {shard} of 1");
+                }
+                Ok((offset..offset + length).map(|b| b as u8).collect())
+            }
+            fn status_json(&self) -> Json {
+                Json::obj(vec![("role", Json::str("section-server"))])
+            }
+        }
+        let front = TcpFront::bind_sections("127.0.0.1:0", Arc::new(OneChunk), 4).unwrap();
+        let mut conn = TcpStream::connect(front.addr()).unwrap();
+        writeln!(conn, r#"{{"cmd":"fetch_section","shard":0,"offset":3,"length":4}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut header = String::new();
+        reader.read_line(&mut header).unwrap();
+        let parsed = Json::parse(header.trim()).unwrap();
+        assert_eq!(parsed.req("length").unwrap().as_usize().unwrap(), 4, "header: {header}");
+        let mut body = [0u8; 4];
+        std::io::Read::read_exact(&mut reader, &mut body).unwrap();
+        assert_eq!(body, [3, 4, 5, 6]);
+        assert_eq!(
+            parsed.req("crc").unwrap().as_f64().unwrap() as u32,
+            crate::util::crc32(&body)
+        );
+        // Provider errors come back as a plain error line, verbatim.
+        writeln!(conn, r#"{{"cmd":"fetch_section","shard":9,"offset":0,"length":1}}"#).unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("shard 9"), "reply: {reply}");
+        // No inference server behind this endpoint.
+        writeln!(conn, r#"{{"task": 0, "x": [1.0]}}"#).unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("sections only"), "reply: {reply}");
+        // Status still answers, from the provider.
+        writeln!(conn, r#"{{"cmd":"status"}}"#).unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains("section-server"), "reply: {reply}");
     }
 
     #[test]

@@ -19,10 +19,11 @@ use anyhow::Result;
 
 use super::planner::synthetic_planner_zoo;
 use super::report::{finish, Table};
-use crate::coordinator::router::merge_spec_with_pool;
+use crate::coordinator::router::merge_spec;
 use crate::coordinator::{ModelCache, Router};
 use crate::planner::{probe, solve, write_planned_registry, PlannerConfig};
 use crate::registry::PackedRegistrySource;
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 
 fn smoke() -> bool {
@@ -102,7 +103,7 @@ pub fn tabr_dynamic() -> Result<Vec<Table>> {
             "cache hit"
         };
         // Independent canonical merge of the same spec, from scratch.
-        let reference = merge_spec_with_pool(&spec, &pre, &source, pool)?;
+        let reference = merge_spec(&spec, &pre, &source, &ExecCtx::with_pool(pool))?;
         let mismatched = served
             .for_task(0)
             .iter()

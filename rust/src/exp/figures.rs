@@ -9,6 +9,7 @@ use crate::data::VIT_S;
 use crate::quant::{QuantScheme, QuantizedCheckpoint, Rtvq, StorageReport};
 use crate::quant::storage::VIT_L14_PARAMS;
 use crate::runtime::Runtime;
+use crate::util::exec::ExecCtx;
 use crate::util::stats;
 
 /// Fig. 3: weight range of the fine-tuned checkpoint vs its task vector —
@@ -107,7 +108,8 @@ pub fn fig4_quant_error(rt: &Runtime) -> Result<Vec<Table>> {
     // bits/task = b + (b+1)/8, slightly above b like the paper's 2.375).
     let mut rtvq_row = vec!["RTVQ (B=b+1,O=b)".to_string()];
     for &b in &bits {
-        let r = Rtvq::quantize(&zoo.pre, &zoo.fts, (b + 1).min(8), b, true)?;
+        let r =
+            Rtvq::quantize(&zoo.pre, &zoo.fts, (b + 1).min(8), b, true, &ExecCtx::sequential())?;
         let err = r.total_quant_error(&zoo.pre, &zoo.fts)?;
         rtvq_row.push(format!("{:.2}", 1e6 * err / (taus.len() as f64 * n_params)));
     }
@@ -284,7 +286,7 @@ pub fn fig10_error_correction(rt: &Runtime) -> Result<Vec<Table>> {
         for bo in [2u8, 3, 4] {
             let mut row = vec![format!("O{bo}")];
             for bb in [2u8, 3, 4, 8] {
-                let r = Rtvq::quantize(&zoo.pre, &zoo.fts, bb, bo, ec)?;
+                let r = Rtvq::quantize(&zoo.pre, &zoo.fts, bb, bo, ec, &ExecCtx::sequential())?;
                 let err = r.total_quant_error(&zoo.pre, &zoo.fts)?;
                 row.push(format!("{:.2}", 1e6 * err / n));
             }

@@ -27,6 +27,7 @@ use crate::planner::{probe, solve, write_planned_registry, PlannerConfig};
 use crate::quant::QuantScheme;
 use crate::registry::{build_registry, DiskAccounting, Registry};
 use crate::tensor::Tensor;
+use crate::util::exec::ExecCtx;
 use crate::util::rng::Rng;
 
 /// True when `TVQ_SMOKE` is set: shrink the zoo so CI finishes fast.
@@ -96,7 +97,7 @@ fn registry_sse(reg: &Registry, pre: &Checkpoint, fts: &[Checkpoint]) -> Result<
     let mut sse = 0.0;
     for (t, ft) in fts.iter().enumerate() {
         let tau = ft.sub(pre)?;
-        let d = tau.l2_dist(&reg.load_task_vector(t)?)?;
+        let d = tau.l2_dist(&reg.load_task_vector(t, &ExecCtx::sequential())?)?;
         sse += d * d;
     }
     Ok(sse)

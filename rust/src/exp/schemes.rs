@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::checkpoint::Checkpoint;
 use crate::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
+use crate::util::exec::ExecCtx;
 
 /// Dequantized task vectors for a scheme, plus exact storage accounting.
 pub struct SchemeTaus {
@@ -59,7 +60,7 @@ pub fn scheme_taus(
             (taus, bytes)
         }
         QuantScheme::Rtvq(bb, bo) => {
-            let r = Rtvq::quantize(pre, fts, bb, bo, true)?;
+            let r = Rtvq::quantize(pre, fts, bb, bo, true, &ExecCtx::sequential())?;
             let bytes = r.storage_bytes();
             (r.dequantize_all()?, bytes)
         }

@@ -26,6 +26,7 @@ use tvq::runtime::Runtime;
 use tvq::tensor::Tensor;
 use tvq::train::{TrainConfig, Zoo};
 use tvq::util::cli::Command;
+use tvq::util::exec::ExecCtx;
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -550,9 +551,17 @@ usage:
   tvq registry inspect <file>
   tvq registry verify <file>
   tvq registry route <file> --tasks 0,2,5 [--lambdas 0.3,0.3,-0.1] [--chain]
+  tvq registry shard <file> --out <dir> [--shards 4] [--page-rows 64]
+  tvq registry fetch-serve <dir/MANIFEST.qtvm> [--addr 127.0.0.1:7843]
+                           [--workers 4]
 
 `verify` refuses mid-swap artifacts (`*.tmp`, `*.next`) with a non-zero
 exit: validate the serving path, not a file a rename is about to consume.
+
+`shard` splits a plan-packed registry into content-addressed shard files
+plus a `MANIFEST.qtvm` (identical sections dedup across shards);
+`fetch-serve` exposes a sharded zoo's chunks to remote tier-1 readers
+over the `fetch_section` TCP protocol.
 
 `route` maps a dynamic merge request (task subset + per-task lambdas)
 to its canonical variant key and serves it through the incremental-merge
@@ -584,6 +593,8 @@ fn cmd_registry(argv: &[String]) -> Result<()> {
         "inspect" => cmd_registry_inspect(rest),
         "verify" => cmd_registry_verify(rest),
         "route" => cmd_registry_route(rest),
+        "shard" => cmd_registry_shard(rest),
+        "fetch-serve" => cmd_registry_fetch_serve(rest),
         "--help" | "-h" | "help" => {
             println!("{}", registry_usage());
             Ok(())
@@ -916,7 +927,7 @@ example:
     // Decode every task end-to-end: reads each section (per-section CRC)
     // and round-trips the quantized payloads through dequantization.
     for t in 0..reg.n_tasks() {
-        reg.load_task_vector(t)
+        reg.load_task_vector(t, &ExecCtx::sequential())
             .map_err(|e| anyhow!("task {t} failed decode round-trip: {e:#}"))?;
     }
     println!(
@@ -926,6 +937,121 @@ example:
         reg.n_tasks(),
         reg.file_bytes()
     );
+    Ok(())
+}
+
+fn cmd_registry_shard(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "tvq registry shard",
+        "split a plan-packed registry into content-addressed shards + manifest",
+    )
+    .long_about(
+        "Reads a plan-packed (PLAN-MIXED) registry and writes its sections as
+content-addressed chunks across N shard files (`shard-xx.qtvs`), plus a
+`MANIFEST.qtvm` with a paged index mapping every section to its chunk
+(shard, offset, length, CRC-32, FNV-64 content hash).  Byte-identical
+sections — shared RTVQ bases, duplicated deltas — are stored once and
+referenced from every row that needs them, so a zoo with shared bases
+shards to fewer bytes than the monolithic file.
+
+The sharded zoo round-trips bit-exactly: open the manifest with
+ShardedRegistry (tier 0) or serve it remotely with `fetch-serve`
+(tier 1); fused merges and routed dynamic merges produce floats
+identical to the single-file registry.
+
+examples:
+  tvq registry pack --synthetic --budget rtvq3o2 --out zoo.qtvc
+  tvq registry shard zoo.qtvc --out zoo-shards --shards 4",
+    )
+    .req("out", "output directory for the manifest + shard files")
+    .opt("shards", "4", "number of shard files")
+    .opt("page-rows", "64", "manifest index rows per page")
+    .positional_help("<registry.qtvc>  plan-packed registry to shard");
+    let args = cmd.parse(argv)?;
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: tvq registry shard <file.qtvc> --out <dir>"))?;
+    let out_dir = std::path::PathBuf::from(args.get_str("out")?);
+    let opts = tvq::registry::ShardOptions {
+        n_shards: args.get_usize("shards")?,
+        page_rows: args.get_usize("page-rows")?,
+    };
+    let src = Registry::open(&path)?;
+    std::fs::create_dir_all(&out_dir)?;
+    let summary = tvq::registry::shard_registry(&src, &out_dir, &opts)?;
+    println!(
+        "sharded {} -> {} ({} shard files)",
+        path,
+        summary.manifest_path.display(),
+        summary.shard_paths.len()
+    );
+    println!(
+        "  {} sections, {} unique chunks, {} dedup hit(s)",
+        summary.n_sections, summary.n_unique_chunks, summary.n_dedup_hits
+    );
+    println!(
+        "  {} B total ({} B shards + {} B manifest) vs {} B monolithic ({:+.1}%)",
+        summary.total_bytes(),
+        summary.shard_bytes,
+        summary.manifest_bytes,
+        summary.source_bytes,
+        100.0 * (summary.total_bytes() as f64 / summary.source_bytes as f64 - 1.0)
+    );
+    Ok(())
+}
+
+fn cmd_registry_fetch_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "tvq registry fetch-serve",
+        "serve a sharded zoo's chunks to remote tier-1 readers over TCP",
+    )
+    .long_about(
+        "Binds the `fetch_section` protocol over one sharded zoo: each request
+names a (shard, offset, length) range from the client's manifest and
+gets the raw bytes back (the client verifies CRC-32 + content hash
+against its own manifest, so a stale or corrupt shard here fails closed
+at the reader exactly as it would locally).  Requests dispatch
+round-robin into a bounded-mailbox worker pool; full mailboxes block
+the dispatching connection (backpressure), never grow a queue.
+
+examples:
+  tvq registry shard zoo.qtvc --out zoo-shards
+  tvq registry fetch-serve zoo-shards/MANIFEST.qtvm --addr 127.0.0.1:7843",
+    )
+    .opt("addr", "127.0.0.1:7843", "address to bind")
+    .opt("workers", "4", "fetch worker threads")
+    .opt("max-conns", "64", "concurrent connection cap")
+    .opt("duration-secs", "0", "serve for N seconds then exit (0 = forever)")
+    .positional_help("<dir/MANIFEST.qtvm>  manifest of the sharded zoo to serve");
+    let args = cmd.parse(argv)?;
+    let manifest = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: tvq registry fetch-serve <dir/MANIFEST.qtvm>"))?;
+    let pool = std::sync::Arc::new(tvq::coordinator::SectionFetchPool::open(
+        std::path::Path::new(&manifest),
+        args.get_usize("workers")?,
+    )?);
+    let front = tvq::coordinator::TcpFront::bind_sections(
+        args.get_str("addr")?,
+        pool.clone(),
+        args.get_usize("max-conns")?,
+    )?;
+    println!("serving sections of {} on {}", manifest, front.addr());
+    let duration = args.get_usize("duration-secs")?;
+    if duration == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(60));
+            let (served, errors) = pool.stats();
+            println!("served {served} chunk(s), {errors} error(s)");
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration as u64));
+    let (served, errors) = pool.stats();
+    println!("done: served {served} chunk(s), {errors} error(s)");
     Ok(())
 }
 

@@ -28,6 +28,7 @@
 //! ```no_run
 //! use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
 //! use tvq::registry::{PackedRegistrySource, Registry};
+//! use tvq::util::exec::ExecCtx;
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! # let (pre, fts): (tvq::checkpoint::Checkpoint, Vec<tvq::checkpoint::Checkpoint>) = todo!();
@@ -40,7 +41,7 @@
 //!
 //! // Serve: group sections feed the fused dequant-merge kernel layout.
 //! let reg = Registry::open("zoo.qtvc")?;
-//! let merged = fused_merge(&reg, &pre, &vec![0.3; plan.n_tasks()], None)?;
+//! let merged = fused_merge(&reg, &pre, &vec![0.3; plan.n_tasks()], None, &ExecCtx::default())?;
 //! // Or through the generic source / ModelCache path:
 //! let _src = PackedRegistrySource::open("zoo.qtvc")?;
 //! # let _ = merged; Ok(()) }
@@ -54,13 +55,16 @@ pub use plan::{Arm, Assignment, PackPlan, PlanTensor, SectionRole, SectionSpec};
 pub use sensitivity::{probe, probe_with_pool, ArmStat, SensitivityProfile, TensorProfile};
 pub use solve::{min_feasible_bytes, solve};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::obs;
 use crate::quant::{BinarySwitch, GroupQuantized, SparseGroupQuantized};
-use crate::registry::{PayloadView, Registry, RegistryBuilder, SectionScratch, WriteSummary};
+use crate::registry::{
+    PayloadView, PlannedSectionSource, Registry, RegistryBuilder, SectionScratch, WriteSummary,
+};
 use crate::tensor::Tensor;
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
@@ -543,27 +547,27 @@ pub fn build_planned_registry<P: AsRef<std::path::Path>>(
 /// (task, tensor), exactly as often as the sequential path.  Tensors
 /// under 32Ki elements skip the worker spawn and run inline — the same
 /// shard math over the full range, so the cutoff never changes results.
-pub fn fused_merge(
-    reg: &Registry,
+///
+/// # Execution
+///
+/// The [`ExecCtx`] selects the pool (`ExecCtx::sequential()` is the
+/// bit-exact reference path the determinism suite compares against) and
+/// an optional trace label; `reg` is any [`PlannedSectionSource`] — the
+/// monolithic [`Registry`] and the sharded
+/// [`ShardedRegistry`](crate::registry::ShardedRegistry) (tier 0 or
+/// tier 1) produce bit-identical merges through this one body.
+pub fn fused_merge<S: PlannedSectionSource + ?Sized>(
+    reg: &S,
     pre: &Checkpoint,
     lams: &[f32],
     tasks: Option<&[usize]>,
+    ctx: &ExecCtx,
 ) -> Result<Checkpoint> {
-    fused_merge_with_pool(reg, pre, lams, tasks, Pool::global())
-}
-
-/// [`fused_merge`] on an explicit pool (`Pool::sequential()` is the
-/// bit-exact reference path the determinism suite compares against).
-pub fn fused_merge_with_pool(
-    reg: &Registry,
-    pre: &Checkpoint,
-    lams: &[f32],
-    tasks: Option<&[usize]>,
-    pool: &Pool,
-) -> Result<Checkpoint> {
+    let _op = ctx.op_span(obs::Category::Merge);
+    let pool = ctx.pool();
     let plan = reg
-        .plan()
-        .ok_or_else(|| anyhow::anyhow!("fused_merge needs a planned (PLAN-MIXED) registry"))?;
+        .pack_plan()
+        .context("fused_merge needs a planned (PLAN-MIXED) registry")?;
     let indices: Vec<usize> = match tasks {
         Some(ts) => {
             for &t in ts {
@@ -689,6 +693,19 @@ pub fn fused_merge_with_pool(
     Ok(out)
 }
 
+/// [`fused_merge`] on an explicit pool — the PR-5 twin, superseded by
+/// [`ExecCtx`].
+#[deprecated(note = "use fused_merge(reg, pre, lams, tasks, &ExecCtx::with_pool(pool))")]
+pub fn fused_merge_with_pool(
+    reg: &Registry,
+    pre: &Checkpoint,
+    lams: &[f32],
+    tasks: Option<&[usize]>,
+    pool: &Pool,
+) -> Result<Checkpoint> {
+    fused_merge(reg, pre, lams, tasks, &ExecCtx::with_pool(pool))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -796,9 +813,9 @@ mod tests {
         let lams = [0.4f32, 0.1, 0.3, 0.2];
         let mut want = pre.clone();
         for (t, &lam) in lams.iter().enumerate() {
-            want.axpy(lam, &reg.load_task_vector(t).unwrap()).unwrap();
+            want.axpy(lam, &reg.load_task_vector(t, &ExecCtx::sequential()).unwrap()).unwrap();
         }
-        let got = fused_merge(&reg, &pre, &lams, None).unwrap();
+        let got = fused_merge(&reg, &pre, &lams, None, &ExecCtx::default()).unwrap();
         assert!(
             got.l2_dist(&want).unwrap() < 1e-4,
             "fused path diverged: {}",
@@ -806,11 +823,11 @@ mod tests {
         );
 
         // Subset selection with mismatched lambda count is rejected.
-        assert!(fused_merge(&reg, &pre, &lams, Some(&[0, 2])).is_err());
-        let sub = fused_merge(&reg, &pre, &[0.4, 0.3], Some(&[0, 2])).unwrap();
+        assert!(fused_merge(&reg, &pre, &lams, Some(&[0, 2]), &ExecCtx::default()).is_err());
+        let sub = fused_merge(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &ExecCtx::default()).unwrap();
         let mut want_sub = pre.clone();
-        want_sub.axpy(0.4, &reg.load_task_vector(0).unwrap()).unwrap();
-        want_sub.axpy(0.3, &reg.load_task_vector(2).unwrap()).unwrap();
+        want_sub.axpy(0.4, &reg.load_task_vector(0, &ExecCtx::sequential()).unwrap()).unwrap();
+        want_sub.axpy(0.3, &reg.load_task_vector(2, &ExecCtx::sequential()).unwrap()).unwrap();
         assert!(sub.l2_dist(&want_sub).unwrap() < 1e-4);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -867,9 +884,9 @@ mod tests {
         let lams = [0.5f32, 0.2, 0.3];
         let mut want = pre.clone();
         for (t, &lam) in lams.iter().enumerate() {
-            want.axpy(lam, &reg.load_task_vector(t).unwrap()).unwrap();
+            want.axpy(lam, &reg.load_task_vector(t, &ExecCtx::sequential()).unwrap()).unwrap();
         }
-        let got = fused_merge(&reg, &pre, &lams, None).unwrap();
+        let got = fused_merge(&reg, &pre, &lams, None, &ExecCtx::default()).unwrap();
         assert!(
             got.l2_dist(&want).unwrap() < 1e-4,
             "sparse fused path diverged: {}",
@@ -909,9 +926,9 @@ mod tests {
         let lams = [0.5f32, 0.2, 0.3];
         let mut want = pre.clone();
         for (t, &lam) in lams.iter().enumerate() {
-            want.axpy(lam, &reg.load_task_vector(t).unwrap()).unwrap();
+            want.axpy(lam, &reg.load_task_vector(t, &ExecCtx::sequential()).unwrap()).unwrap();
         }
-        let got = fused_merge(&reg, &pre, &lams, None).unwrap();
+        let got = fused_merge(&reg, &pre, &lams, None, &ExecCtx::default()).unwrap();
         assert!(
             got.l2_dist(&want).unwrap() < 1e-4,
             "binary fused path diverged: {}",

@@ -15,6 +15,7 @@ use anyhow::{bail, Result};
 
 use super::tvq::QuantizedCheckpoint;
 use crate::checkpoint::Checkpoint;
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 
 /// A quantized RTVQ bundle for a suite of tasks.
@@ -34,30 +35,21 @@ impl Rtvq {
     ///
     /// `fts` are the fine-tuned checkpoints (NOT task vectors); the
     /// decomposition needs theta_ft_avg, which only the checkpoints give.
+    ///
+    /// The [`ExecCtx`] selects the pool the per-task offset quantization
+    /// (Alg. 1 lines 4-5) fans out on.  Each offset is quantized
+    /// independently against the same reference and collected in task
+    /// order, so the bundle is bit-identical at every thread count — the
+    /// registry build path rides on this.
     pub fn quantize(
         pre: &Checkpoint,
         fts: &[Checkpoint],
         base_bits: u8,
         offset_bits: u8,
         error_correction: bool,
+        ctx: &ExecCtx,
     ) -> Result<Self> {
-        let pool = Pool::sequential();
-        Self::quantize_with_pool(pre, fts, base_bits, offset_bits, error_correction, &pool)
-    }
-
-    /// [`Rtvq::quantize`] with the per-task offset quantization (Alg. 1
-    /// lines 4-5) fanned out across `pool`.  Each offset is quantized
-    /// independently against the same reference and collected in task
-    /// order, so the bundle is bit-identical at every thread count — the
-    /// registry build path rides on this.
-    pub fn quantize_with_pool(
-        pre: &Checkpoint,
-        fts: &[Checkpoint],
-        base_bits: u8,
-        offset_bits: u8,
-        error_correction: bool,
-        pool: &Pool,
-    ) -> Result<Self> {
+        let pool = ctx.pool();
         if fts.is_empty() {
             bail!("RTVQ needs at least one fine-tuned checkpoint");
         }
@@ -79,6 +71,21 @@ impl Rtvq {
             QuantizedCheckpoint::quantize(&ft.sub(&reference)?, offset_bits)
         })?;
         Ok(Self { base_bits, offset_bits, error_correction, base, offsets })
+    }
+
+    /// [`Rtvq::quantize`] on an explicit pool — the PR-5 twin, superseded
+    /// by [`ExecCtx`].
+    #[deprecated(note = "use Rtvq::quantize(..., &ExecCtx::with_pool(pool))")]
+    pub fn quantize_with_pool(
+        pre: &Checkpoint,
+        fts: &[Checkpoint],
+        base_bits: u8,
+        offset_bits: u8,
+        error_correction: bool,
+        pool: &Pool,
+    ) -> Result<Self> {
+        let ctx = ExecCtx::with_pool(pool);
+        Self::quantize(pre, fts, base_bits, offset_bits, error_correction, &ctx)
     }
 
     pub fn n_tasks(&self) -> usize {
@@ -161,7 +168,7 @@ mod tests {
     #[test]
     fn effective_bits_and_counts() {
         let (pre, fts) = suite(8, 1);
-        let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        let r = Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential()).unwrap();
         assert_eq!(r.n_tasks(), 8);
         assert!((r.effective_bits() - 2.375).abs() < 1e-9);
     }
@@ -170,7 +177,7 @@ mod tests {
     fn rtvq_beats_low_bit_tvq_on_error() {
         // Paper Eq. 5 / Fig. 4: at ~equal bits, RTVQ error < TVQ error.
         let (pre, fts) = suite(8, 2);
-        let rtvq = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        let rtvq = Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential()).unwrap();
         let rtvq_err = rtvq.total_quant_error(&pre, &fts).unwrap();
 
         let mut tvq_err = 0.0;
@@ -190,11 +197,11 @@ mod tests {
         // Fig. 10: with-EC error <= without-EC error.
         let (pre, fts) = suite(8, 3);
         for (bb, bo) in [(2u8, 2u8), (3, 2), (4, 3)] {
-            let with_ec = Rtvq::quantize(&pre, &fts, bb, bo, true)
+            let with_ec = Rtvq::quantize(&pre, &fts, bb, bo, true, &ExecCtx::sequential())
                 .unwrap()
                 .total_quant_error(&pre, &fts)
                 .unwrap();
-            let without = Rtvq::quantize(&pre, &fts, bb, bo, false)
+            let without = Rtvq::quantize(&pre, &fts, bb, bo, false, &ExecCtx::sequential())
                 .unwrap()
                 .total_quant_error(&pre, &fts)
                 .unwrap();
@@ -208,7 +215,7 @@ mod tests {
     #[test]
     fn storage_amortizes_base() {
         let (pre, fts) = suite(8, 4);
-        let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        let r = Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential()).unwrap();
         // Per-task cost should be well below a 3-bit TVQ per task.
         let tvq3: usize = fts
             .iter()
@@ -223,7 +230,7 @@ mod tests {
     #[test]
     fn dequantize_task_bounds_checked() {
         let (pre, fts) = suite(2, 5);
-        let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        let r = Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential()).unwrap();
         assert!(r.dequantize_task(1).is_ok());
         assert!(r.dequantize_task(2).is_err());
     }
@@ -231,7 +238,7 @@ mod tests {
     #[test]
     fn reconstruction_close_to_original_tau() {
         let (pre, fts) = suite(4, 6);
-        let r = Rtvq::quantize(&pre, &fts, 8, 8, true).unwrap();
+        let r = Rtvq::quantize(&pre, &fts, 8, 8, true, &ExecCtx::sequential()).unwrap();
         for (t, ft) in fts.iter().enumerate() {
             let tau = ft.sub(&pre).unwrap();
             let tau_hat = r.dequantize_task(t).unwrap();

@@ -36,10 +36,10 @@ use super::container::{
 use super::mmap::{self, Mmap};
 use crate::checkpoint::Checkpoint;
 use crate::obs;
-use crate::planner::{Arm, PackPlan, SectionRole, SectionSpec};
+use crate::planner::{PackPlan, SectionRole, SectionSpec};
 use crate::quant::{GroupQuantized, GroupQuantizedView, QuantScheme, SparseGroupQuantized};
-use crate::tensor::Tensor;
 use crate::util::crc32;
+use crate::util::exec::ExecCtx;
 
 /// Hard caps guarding against nonsense headers (corrupt or adversarial
 /// files must fail fast, not allocate gigabytes).
@@ -85,7 +85,18 @@ pub struct SectionScratch {
     buf: Vec<u8>,
 }
 
-enum SectionIo {
+impl SectionScratch {
+    /// The staging buffer itself — shared with the sharded-registry store
+    /// layer ([`super::store`]), which stages fetched chunks here.
+    pub(crate) fn buf_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+/// Positioned-read backend for one on-disk file, shared by the monolithic
+/// registry and the shard files of a sharded registry
+/// ([`super::store::LocalShardStore`]).
+pub(crate) enum SectionIo {
     Mmap(Mmap),
     #[cfg(unix)]
     Pread(fs::File),
@@ -94,7 +105,7 @@ enum SectionIo {
 
 impl SectionIo {
     #[cfg_attr(not(unix), allow(unused_variables))]
-    fn new(path: &Path, mode: IoMode) -> Result<Self> {
+    pub(crate) fn new(path: &Path, mode: IoMode) -> Result<Self> {
         match mode {
             IoMode::Mmap => {
                 if mmap::supported() {
@@ -137,23 +148,36 @@ impl SectionIo {
         entry: &IndexEntry,
         scratch: &'a mut Vec<u8>,
     ) -> Result<&'a [u8]> {
+        self.read_range(path, &entry.name, entry.offset, entry.length, scratch)
+    }
+
+    /// The raw bytes at `[offset, offset+length)`: borrowed from the
+    /// mapping in `Mmap` mode, read into `scratch` otherwise.  `what`
+    /// names the range in error messages (a section name or chunk label).
+    pub(crate) fn read_range<'a>(
+        &'a self,
+        path: &Path,
+        what: &str,
+        offset: u64,
+        length: u64,
+        scratch: &'a mut Vec<u8>,
+    ) -> Result<&'a [u8]> {
         match self {
             SectionIo::Mmap(map) => {
-                // Entries were bounds-checked against the file size at
+                // Ranges were bounds-checked against the file size at
                 // open; re-check against the mapping defensively (a file
                 // that shrank between stat and map must fail closed, not
                 // slice out of bounds).
                 let oob = || {
                     anyhow::anyhow!(
-                        "section {:?} spans past the {} mapped bytes of {}",
-                        entry.name,
+                        "section {what:?} spans past the {} mapped bytes of {}",
                         map.len(),
                         path.display()
                     )
                 };
-                let start = usize::try_from(entry.offset).map_err(|_| oob())?;
+                let start = usize::try_from(offset).map_err(|_| oob())?;
                 let end = start
-                    .checked_add(usize::try_from(entry.length).map_err(|_| oob())?)
+                    .checked_add(usize::try_from(length).map_err(|_| oob())?)
                     .filter(|&e| e <= map.len())
                     .ok_or_else(oob)?;
                 Ok(&map.bytes()[start..end])
@@ -162,33 +186,50 @@ impl SectionIo {
             SectionIo::Pread(f) => {
                 use std::os::unix::fs::FileExt;
                 scratch.clear();
-                scratch.resize(entry.length as usize, 0);
-                f.read_exact_at(scratch, entry.offset)
-                    .with_context(|| format!("reading section {:?}", entry.name))?;
+                scratch.resize(length as usize, 0);
+                f.read_exact_at(scratch, offset)
+                    .with_context(|| format!("reading section {what:?}"))?;
                 Ok(&scratch[..])
             }
             SectionIo::Reopen => {
                 let mut f = fs::File::open(path)
                     .with_context(|| format!("reopening registry {}", path.display()))?;
                 scratch.clear();
-                scratch.resize(entry.length as usize, 0);
-                f.seek(SeekFrom::Start(entry.offset))?;
+                scratch.resize(length as usize, 0);
+                f.seek(SeekFrom::Start(offset))?;
                 f.read_exact(scratch)
-                    .with_context(|| format!("reading section {:?}", entry.name))?;
+                    .with_context(|| format!("reading section {what:?}"))?;
                 Ok(&scratch[..])
             }
+        }
+    }
+
+    /// The [`IoMode`] actually in effect after fallbacks — also used by
+    /// the shard store to report which backend each shard file landed on.
+    pub(crate) fn effective_mode(&self) -> IoMode {
+        self.mode()
+    }
+
+    /// Bytes served through a file mapping by this backend (0 unless
+    /// `Mmap` took effect); `file_bytes` is the caller-known file size.
+    pub(crate) fn mapped_len(&self, file_bytes: u64) -> u64 {
+        match self {
+            SectionIo::Mmap(_) => file_bytes,
+            _ => 0,
         }
     }
 }
 
 /// Incremental header reader that retains the raw bytes for the index CRC.
-struct HeaderReader<R: Read> {
-    inner: R,
-    raw: Vec<u8>,
+/// Shared with [`super::manifest`], whose `MANIFEST.qtvm` header uses the
+/// same length-prefixed little-endian primitives and trailing-CRC scheme.
+pub(crate) struct HeaderReader<R: Read> {
+    pub(crate) inner: R,
+    pub(crate) raw: Vec<u8>,
 }
 
 impl<R: Read> HeaderReader<R> {
-    fn take(&mut self, n: usize) -> Result<&[u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&[u8]> {
         let start = self.raw.len();
         self.raw.resize(start + n, 0);
         self.inner
@@ -197,24 +238,168 @@ impl<R: Read> HeaderReader<R> {
         Ok(&self.raw[start..])
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn str(&mut self, max: usize) -> Result<String> {
+    pub(crate) fn str(&mut self, max: usize) -> Result<String> {
         let n = self.u32()? as usize;
         if n > max {
             bail!("QTVC index string length {n} exceeds cap {max}");
         }
         Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+}
+
+/// Cross-check a decoded payload view against the exact [`SectionSpec`]
+/// the plan demands for its slot.  Shared verbatim by the monolithic
+/// [`Registry`] and the sharded registry ([`super::store`]) so a
+/// spec-mismatched section produces the identical error from every tier.
+pub(crate) fn check_view_against_spec(
+    view: &PayloadView<'_>,
+    spec: SectionSpec,
+    name: &str,
+) -> Result<()> {
+    match (view, spec) {
+        (PayloadView::Group(gq), SectionSpec::Dense { bits, group, len }) => {
+            if gq.bits() != bits || gq.group() != group || gq.len() != len {
+                bail!(
+                    "section {name:?} decodes to bits={} group={} len={} but the \
+                     plan requires bits={bits} group={group} len={len}",
+                    gq.bits(),
+                    gq.group(),
+                    gq.len()
+                );
+            }
+        }
+        (
+            PayloadView::SparseGroup(s),
+            SectionSpec::Sparse { bits, group, dense_len, survivors },
+        ) => {
+            if s.bits() != bits
+                || s.group() != group
+                || s.dense_len() != dense_len
+                || s.n_survivors() != survivors
+            {
+                bail!(
+                    "section {name:?} decodes to bits={} group={} dense={} \
+                     survivors={} but the plan requires bits={bits} \
+                     group={group} dense={dense_len} survivors={survivors}",
+                    s.bits(),
+                    s.group(),
+                    s.dense_len(),
+                    s.n_survivors()
+                );
+            }
+        }
+        (PayloadView::Binary(b), SectionSpec::Binary { group, len }) => {
+            if b.group() != group || b.len() != len {
+                bail!(
+                    "section {name:?} decodes to group={} len={} but the \
+                     plan requires group={group} len={len}",
+                    b.group(),
+                    b.len()
+                );
+            }
+        }
+        (other, spec) => bail!(
+            "section {name:?} payload does not match the plan's {spec:?}: {other:?}"
+        ),
+    }
+    Ok(())
+}
+
+/// How much of the file [`Registry::open_with`] verifies before handing
+/// the registry out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Validation {
+    /// Header, offset table and (for planned registries) the plan section
+    /// — the default.  Payload CRCs are still checked lazily on every
+    /// access, so corruption fails closed either way; `Index` just defers
+    /// the cost to first touch.
+    Index,
+    /// Additionally read and CRC-verify **every** payload section at open.
+    /// This is what the control plane's publish gate wants: a staged
+    /// generation is rejected before the swap if any byte of it is bad.
+    Deep,
+}
+
+/// Builder-style options for [`Registry::open_with`] — the single opening
+/// API behind which the PR-2 io-mode variants and the control-plane
+/// reopen path now live.
+///
+/// ```no_run
+/// use tvq::registry::{IoMode, OpenOptions, Registry, Validation};
+/// # fn main() -> anyhow::Result<()> {
+/// let reg = Registry::open_with(
+///     "zoo.qtvc",
+///     OpenOptions::new().io(IoMode::Pread).validation(Validation::Deep),
+/// )?;
+/// # Ok(()) }
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct OpenOptions {
+    io: IoMode,
+    validation: Validation,
+    paged_index: bool,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions { io: IoMode::Mmap, validation: Validation::Index, paged_index: true }
+    }
+}
+
+impl OpenOptions {
+    /// Platform defaults: `Mmap` (with automatic fallback), index-only
+    /// validation, paged manifest index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Section I/O backend to request (fallbacks still apply; see
+    /// [`IoMode`]).
+    pub fn io(mut self, mode: IoMode) -> Self {
+        self.io = mode;
+        self
+    }
+
+    /// Validation depth at open ([`Validation`]).
+    pub fn validation(mut self, v: Validation) -> Self {
+        self.validation = v;
+        self
+    }
+
+    /// Whether a sharded registry loads its manifest row pages lazily
+    /// (`true`, the default) or eagerly CRC-verifies all of them at open.
+    /// Monolithic `.qtvc` files keep their whole offset table resident
+    /// either way — the flag only affects `ShardedRegistry`.
+    pub fn paged_index(mut self, paged: bool) -> Self {
+        self.paged_index = paged;
+        self
+    }
+
+    /// The requested [`IoMode`].
+    pub fn io_mode(&self) -> IoMode {
+        self.io
+    }
+
+    /// The requested [`Validation`] depth.
+    pub fn validation_depth(&self) -> Validation {
+        self.validation
+    }
+
+    /// Whether the manifest index pages lazily.
+    pub fn wants_paged_index(&self) -> bool {
+        self.paged_index
     }
 }
 
@@ -242,26 +427,36 @@ pub struct Registry {
     /// Dequantized per-tensor bases, decoded at most once.
     planned_base_cache: OnceLock<Vec<Option<Vec<f32>>>>,
     io: SectionIo,
-    /// The [`IoMode`] the caller asked for (before fallbacks), so
+    /// The [`OpenOptions`] the caller asked for (before fallbacks), so
     /// [`Registry::reopen`] can re-evaluate the same request against a
     /// replaced file.
-    requested_io: IoMode,
+    opts: OpenOptions,
     index_bytes: u64,
     file_bytes: u64,
 }
 
 impl Registry {
-    /// Open a registry with the platform-default [`IoMode`]: `Mmap` where
-    /// supported (64-bit unix), degrading automatically to `Pread` and
-    /// then `Reopen`.  [`Registry::io_mode`] reports what took effect.
+    /// Open a registry with the default [`OpenOptions`]: `Mmap` where
+    /// supported (64-bit unix, degrading automatically to `Pread` and
+    /// then `Reopen`), index-only validation.  [`Registry::io_mode`]
+    /// reports what took effect.
     pub fn open<P: AsRef<Path>>(path: P) -> Result<Registry> {
-        Self::open_with_io(path, IoMode::Mmap)
+        Self::open_with(path, OpenOptions::default())
+    }
+
+    /// Open a registry at an explicit [`IoMode`].
+    #[deprecated(note = "use Registry::open_with(path, OpenOptions::new().io(mode))")]
+    pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<Registry> {
+        Self::open_with(path, OpenOptions::new().io(mode))
     }
 
     /// Open a registry: read and verify the header + offset table (and,
-    /// for planned registries, the plan section) — payloads stay lazy.
-    pub fn open_with_io<P: AsRef<Path>>(path: P, mode: IoMode) -> Result<Registry> {
+    /// for planned registries, the plan section) — payloads stay lazy
+    /// unless `opts` asks for [`Validation::Deep`], which additionally
+    /// CRC-verifies every payload section before returning.
+    pub fn open_with<P: AsRef<Path>>(path: P, opts: OpenOptions) -> Result<Registry> {
         let path = path.as_ref();
+        let mode = opts.io_mode();
         let _span = obs::span(obs::Category::Registry, "registry_open");
         let file = fs::File::open(path)
             .with_context(|| format!("opening registry {}", path.display()))?;
@@ -507,7 +702,7 @@ impl Registry {
             }
         };
 
-        Ok(Registry {
+        let reg = Registry {
             path: path.to_path_buf(),
             version,
             scheme,
@@ -520,10 +715,22 @@ impl Registry {
             planned_bases,
             planned_base_cache: OnceLock::new(),
             io,
-            requested_io: mode,
+            opts,
             index_bytes: index_end,
             file_bytes,
-        })
+        };
+        if opts.validation_depth() == Validation::Deep {
+            // Publish-gate mode: touch (and thereby CRC-verify) every
+            // payload section now, so a corrupt byte anywhere rejects the
+            // open instead of surfacing mid-serve.
+            let mut scratch = SectionScratch::default();
+            for entry in &reg.entries {
+                reg.section_bytes(entry, &mut scratch).with_context(|| {
+                    format!("deep-validating registry {}", reg.path.display())
+                })?;
+            }
+        }
+        Ok(reg)
     }
 
     pub fn path(&self) -> &Path {
@@ -545,17 +752,23 @@ impl Registry {
 
     /// The [`IoMode`] originally requested at open, before any fallback.
     pub fn requested_io_mode(&self) -> IoMode {
-        self.requested_io
+        self.opts.io_mode()
     }
 
-    /// Open the same path again at the originally requested [`IoMode`],
-    /// re-evaluating fallbacks for whatever file now lives there.  This
-    /// is the generation-aware reload primitive: after an atomic
-    /// rename-swap the existing `Registry` keeps serving the old inode
-    /// through its mapping/handle, and `reopen` picks up the new file
-    /// under the same name (see `coordinator::control::generation`).
+    /// The full [`OpenOptions`] this registry was opened with.
+    pub fn open_options(&self) -> OpenOptions {
+        self.opts
+    }
+
+    /// Open the same path again at the originally requested
+    /// [`OpenOptions`], re-evaluating fallbacks for whatever file now
+    /// lives there.  This is the generation-aware reload primitive: after
+    /// an atomic rename-swap the existing `Registry` keeps serving the
+    /// old inode through its mapping/handle, and `reopen` picks up the
+    /// new file under the same name (see
+    /// `coordinator::control::generation`).
     pub fn reopen(&self) -> Result<Registry> {
-        Self::open_with_io(&self.path, self.requested_io)
+        Self::open_with(&self.path, self.opts)
     }
 
     /// Bytes served through the file mapping: the whole file in `Mmap`
@@ -715,57 +928,7 @@ impl Registry {
         let plan = self.plan.as_ref().expect("planned accessors gated on plan");
         let entry = &self.entries[entry_idx];
         let view = PayloadView::decode(entry.kind, self.section_bytes(entry, scratch)?)?;
-        let spec = plan.section_spec(role);
-        match (&view, spec) {
-            (PayloadView::Group(gq), SectionSpec::Dense { bits, group, len }) => {
-                if gq.bits() != bits || gq.group() != group || gq.len() != len {
-                    bail!(
-                        "section {:?} decodes to bits={} group={} len={} but the \
-                         plan requires bits={bits} group={group} len={len}",
-                        entry.name,
-                        gq.bits(),
-                        gq.group(),
-                        gq.len()
-                    );
-                }
-            }
-            (
-                PayloadView::SparseGroup(s),
-                SectionSpec::Sparse { bits, group, dense_len, survivors },
-            ) => {
-                if s.bits() != bits
-                    || s.group() != group
-                    || s.dense_len() != dense_len
-                    || s.n_survivors() != survivors
-                {
-                    bail!(
-                        "section {:?} decodes to bits={} group={} dense={} \
-                         survivors={} but the plan requires bits={bits} \
-                         group={group} dense={dense_len} survivors={survivors}",
-                        entry.name,
-                        s.bits(),
-                        s.group(),
-                        s.dense_len(),
-                        s.n_survivors()
-                    );
-                }
-            }
-            (PayloadView::Binary(b), SectionSpec::Binary { group, len }) => {
-                if b.group() != group || b.len() != len {
-                    bail!(
-                        "section {:?} decodes to group={} len={} but the \
-                         plan requires group={group} len={len}",
-                        entry.name,
-                        b.group(),
-                        b.len()
-                    );
-                }
-            }
-            (other, spec) => bail!(
-                "section {:?} payload does not match the plan's {spec:?}: {other:?}",
-                entry.name
-            ),
-        }
+        check_view_against_spec(&view, plan.section_spec(role), &entry.name)?;
         Ok(view)
     }
 
@@ -895,71 +1058,19 @@ impl Registry {
     /// Reconstruct task `t`'s full-precision task vector from its packed
     /// payload(s) alone: dq(offset) + dq(base) for RTVQ, dq(codes) for
     /// TVQ, and the per-tensor plan arms for planned registries.
-    /// Sequential; see [`Registry::load_task_vector_with_pool`] for the
-    /// chunk-parallel form (bit-identical output).
-    pub fn load_task_vector(&self, t: usize) -> Result<Checkpoint> {
-        self.load_task_vector_with_pool(t, &crate::util::pool::Pool::sequential())
-    }
-
-    /// [`Registry::load_task_vector`] with per-tensor decode fanned out
-    /// across `pool`: planned registries dequantize each tensor's
-    /// section(s) as an independent job; uniform registries fan out the
-    /// per-tensor dequantize of the task payload.  Tensors assemble in a
-    /// fixed order and no job touches another's output, so the
-    /// reconstruction is bit-identical at every thread count.
-    pub fn load_task_vector_with_pool(
-        &self,
-        t: usize,
-        pool: &crate::util::pool::Pool,
-    ) -> Result<Checkpoint> {
-        if let Some(plan) = &self.plan {
-            if t >= plan.n_tasks() {
-                bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
-            }
-            let base_hats = self.planned_base_hats()?;
-            let slots: Vec<usize> = (0..plan.n_tensors()).collect();
-            let parts: Vec<Tensor> = pool.try_map(slots, |_, l| {
-                let tensor = &plan.tensors[l];
-                let a = &plan.assignments[l];
-                // Per-job scratches: in Mmap mode every section is
-                // dequantized straight out of the mapping — no byte is
-                // staged or copied on this path.
-                let mut scratch = SectionScratch::default();
-                let mut codes: Vec<u32> = Vec::new();
-                let mut vals: Vec<f32> = Vec::new();
-                let mut buf = vec![0.0f32; tensor.padded()];
-                match self.planned_task_view(t, l, &mut scratch)? {
-                    PayloadView::Group(gq) => {
-                        gq.dequantize_into(&mut buf, &mut codes);
-                        if let Arm::Rtvq { .. } = a.arm {
-                            let base = base_hats[l]
-                                .as_ref()
-                                .expect("rtvq-arm tensors always carry a base");
-                            for (d, &b) in buf.iter_mut().zip(base) {
-                                *d += b;
-                            }
-                        }
-                    }
-                    // Sparse arms: survivors scatter into a zeroed dense
-                    // buffer; masked-out weights reconstruct as 0.
-                    PayloadView::SparseGroup(s) => {
-                        s.dequantize_into(&mut buf, &mut codes, &mut vals)
-                    }
-                    // 1-bit arms: ±scale per sign bit, straight from the
-                    // mapped bitmap.
-                    PayloadView::Binary(b) => b.dequantize_into(&mut buf),
-                    other => bail!(
-                        "planned task section decoded to an unexpected payload: {other:?}"
-                    ),
-                }
-                buf.truncate(tensor.numel());
-                Tensor::new(tensor.shape.clone(), buf)
-            })?;
-            let mut out = Checkpoint::new();
-            for (tensor, part) in plan.tensors.iter().zip(parts) {
-                out.insert(&tensor.name, part);
-            }
-            return Ok(out);
+    ///
+    /// Per-tensor decode fans out across `ctx`'s pool: planned registries
+    /// dequantize each tensor's section(s) as an independent job; uniform
+    /// registries fan out the per-tensor dequantize of the task payload.
+    /// Tensors assemble in a fixed order and no job touches another's
+    /// output, so the reconstruction is bit-identical at every thread
+    /// count.
+    pub fn load_task_vector(&self, t: usize, ctx: &ExecCtx) -> Result<Checkpoint> {
+        let _op = ctx.op_span(obs::Category::Registry);
+        if self.plan.is_some() {
+            // Planned decode is shared with the sharded registry (one
+            // code path, bit-identical output across tiers).
+            return super::store::planned_task_vector(self, t, ctx.pool());
         }
         let payload = self.load_task_payload(t)?;
         let q = match payload {
@@ -971,9 +1082,9 @@ impl Registry {
         };
         match self.scheme {
             RegistryScheme::Uniform(QuantScheme::Rtvq(..)) => {
-                q.dequantize_with_pool(pool)?.add(self.base_checkpoint()?)
+                q.dequantize_with_pool(ctx.pool())?.add(self.base_checkpoint()?)
             }
-            RegistryScheme::Uniform(QuantScheme::Tvq(_)) => q.dequantize_with_pool(pool),
+            RegistryScheme::Uniform(QuantScheme::Tvq(_)) => q.dequantize_with_pool(ctx.pool()),
             RegistryScheme::Uniform(QuantScheme::Fq(_)) => bail!(
                 "FQ registries store quantized checkpoints, not task vectors; \
                  subtract the pre-trained trunk from load_task_payload's result"
@@ -983,5 +1094,48 @@ impl Registry {
             }
             RegistryScheme::Planned => unreachable!("handled above"),
         }
+    }
+
+    /// [`Registry::load_task_vector`] over an explicit pool.
+    #[deprecated(note = "use load_task_vector(t, &ExecCtx::with_pool(pool))")]
+    pub fn load_task_vector_with_pool(
+        &self,
+        t: usize,
+        pool: &crate::util::pool::Pool,
+    ) -> Result<Checkpoint> {
+        self.load_task_vector(t, &ExecCtx::with_pool(pool))
+    }
+}
+
+impl super::store::PlannedSectionSource for Registry {
+    fn pack_plan(&self) -> Result<&PackPlan> {
+        self.plan
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("not a planned registry"))
+    }
+
+    fn planned_task_view<'a>(
+        &'a self,
+        t: usize,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<PayloadView<'a>> {
+        Registry::planned_task_view(self, t, l, scratch)
+    }
+
+    fn planned_base_view<'a>(
+        &'a self,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<GroupQuantizedView<'a>> {
+        Registry::planned_base_view(self, l, scratch)
+    }
+
+    fn planned_base_hats(&self) -> Result<&[Option<Vec<f32>>]> {
+        Registry::planned_base_hats(self).map(|v| v.as_slice())
+    }
+
+    fn source_path(&self) -> &Path {
+        &self.path
     }
 }

@@ -1,0 +1,754 @@
+//! The `MANIFEST.qtvm` sharded-registry wire format: content-addressed
+//! section chunks spread across shard files, behind a paged row index.
+//!
+//! A monolithic `.qtvc` file holds every section of every task plus one
+//! resident offset table — fine for hundreds of tasks, hostile at fleet
+//! scale where a serve node touches a handful of tasks out of thousands.
+//! Sharding splits the same sections into N `*.qtvs` shard files and one
+//! small `MANIFEST.qtvm` that maps section **names** to **chunks**
+//! `(shard, offset, length, crc, content-hash)`:
+//!
+//! * **Content addressing / dedup** — two sections with byte-identical
+//!   bodies (shared RTVQ bases, TALL mtl masks, duplicated deltas) point
+//!   at one chunk; the bytes are stored once.  [`shard_registry`]
+//!   confirms every hash hit with a full byte compare, so an FNV
+//!   collision can never silently alias two different sections.
+//! * **Paged index** — rows are sorted by name and grouped into fixed
+//!   CRC'd pages behind a tiny directory; opening a sharded zoo reads
+//!   the header + directory only, and a lookup loads (and caches) just
+//!   the one page it needs.  See `docs/WIRE_FORMAT.md` §"MANIFEST.qtvm".
+//! * **Tier independence** — a chunk address is meaningful without the
+//!   shard file in hand (the manifest records every shard's size), so
+//!   the same manifest drives tier-0 local reads and tier-1 TCP fetches
+//!   ([`super::store`]), with identical fail-closed verification.
+//!
+//! Byte layout (all little-endian, strings are `u32` length + UTF-8):
+//!
+//! ```text
+//! magic "QTVM"  u32          version u32 (=1)
+//! scheme        str          (must be "PLAN-MIXED")
+//! source_version u32         (the .qtvc version sharded from: 3/4/5)
+//! plan_len u32  plan bytes   plan_crc u32   (verbatim kind-3 plan body)
+//! shard_cnt u32  { name str, file_bytes u64 } * shard_cnt
+//! row_cnt   u64
+//! page_cnt  u32  { first str, rows u32, offset u64, length u64, crc u32 } *
+//! index_crc u32              (CRC-32 of all preceding bytes)
+//! page bodies: { name str, kind u8, shard u32, offset u64,
+//!                length u64, crc u32, hash u64 } * rows, per page
+//! ```
+//!
+//! Shard files are 8 bytes of header (magic "QTVS" u32, version u32)
+//! followed by raw chunk bodies at the offsets the manifest records.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::container::{
+    Cursor, PayloadKind, RegistryScheme, VERSION_BINARY, VERSION_PLANNED, VERSION_SPARSE,
+};
+use super::index::{HeaderReader, Registry, SectionScratch};
+use crate::obs;
+use crate::planner::PackPlan;
+use crate::util::crc32;
+
+/// `"QTVM"` little-endian.
+pub const MANIFEST_MAGIC: u32 = 0x4D56_5451;
+/// Manifest wire version this build reads and writes.
+pub const MANIFEST_VERSION: u32 = 1;
+/// `"QTVS"` little-endian — shard-file magic.
+pub const SHARD_MAGIC: u32 = 0x5356_5451;
+/// Shard-file wire version.
+pub const SHARD_VERSION: u32 = 1;
+/// Shard files carry an 8-byte header (magic + version) before chunk 0.
+pub const SHARD_HEADER_BYTES: u64 = 8;
+/// Canonical manifest file name inside a sharded-zoo directory.
+pub const MANIFEST_FILE_NAME: &str = "MANIFEST.qtvm";
+/// Default rows per index page (a page is the unit of lazy index load).
+pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// Hard caps guarding against nonsense headers, mirroring the monolithic
+/// registry's fail-fast posture.
+const MAX_SHARDS: usize = 1 << 10;
+const MAX_PAGES: usize = 1 << 20;
+const MAX_ROWS: u64 = 1 << 20;
+const MAX_NAME_LEN: usize = 4096;
+const MAX_PLAN_BYTES: usize = 1 << 28;
+
+/// FNV-1a 64-bit — the chunk content hash.  Dedup candidates found by
+/// hash are always confirmed by a full byte compare before aliasing, and
+/// readers re-hash every fetched chunk, so FNV's weakness as a
+/// cryptographic hash costs nothing here.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The content-addressed location of one section body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkAddr {
+    /// Index into the manifest's shard table.
+    pub shard: u32,
+    /// Absolute offset of the chunk body inside the shard file.
+    pub offset: u64,
+    /// Chunk body length in bytes.
+    pub length: u64,
+    /// CRC-32 of the chunk body.
+    pub crc: u32,
+    /// FNV-1a 64 of the chunk body — the dedup/content address.
+    pub hash: u64,
+}
+
+/// One row of the paged manifest index: section name → chunk.
+#[derive(Clone, Debug)]
+pub struct ManifestRow {
+    pub name: String,
+    pub kind: PayloadKind,
+    pub chunk: ChunkAddr,
+}
+
+/// One shard file as the manifest records it.
+#[derive(Clone, Debug)]
+pub struct ShardMeta {
+    /// File name relative to the manifest's directory (no path
+    /// separators — validated at read).
+    pub name: String,
+    /// Total shard size including the 8-byte header; chunk ranges are
+    /// validated against this without touching the shard itself.
+    pub file_bytes: u64,
+}
+
+/// Directory entry for one index page.
+#[derive(Clone, Debug)]
+pub struct PageMeta {
+    /// Name of the page's first row (pages partition the sorted row
+    /// space, so the directory alone binary-searches to the right page).
+    pub first: String,
+    /// Rows in this page.
+    pub rows: u32,
+    /// Absolute offset of the page body inside the manifest file.
+    pub offset: u64,
+    /// Page body length in bytes.
+    pub length: u64,
+    /// CRC-32 of the page body.
+    pub crc: u32,
+}
+
+/// A decoded `MANIFEST.qtvm` header: everything except the row pages,
+/// which load lazily through [`Manifest::read_page`].
+pub struct Manifest {
+    scheme: RegistryScheme,
+    source_version: u32,
+    plan: PackPlan,
+    shards: Vec<ShardMeta>,
+    row_cnt: u64,
+    pages: Vec<PageMeta>,
+    /// Bytes of header + directory + trailing CRC.
+    header_bytes: u64,
+    /// Manifest file size at read time (bounds pages).
+    file_bytes: u64,
+}
+
+impl Manifest {
+    /// Read and verify the manifest header + page directory (CRC'd as a
+    /// unit); page bodies stay on disk until [`Manifest::read_page`].
+    pub fn read(path: &Path) -> Result<Manifest> {
+        let _span = obs::span(obs::Category::Registry, "manifest_open");
+        let file = fs::File::open(path)
+            .with_context(|| format!("opening manifest {}", path.display()))?;
+        let file_bytes = file.metadata()?.len();
+        let mut r = HeaderReader { inner: std::io::BufReader::new(file), raw: Vec::new() };
+
+        let magic = r.u32()?;
+        if magic != MANIFEST_MAGIC {
+            bail!(
+                "not a QTVM manifest: {} (magic {magic:#010x}, expected {MANIFEST_MAGIC:#010x})",
+                path.display()
+            );
+        }
+        let version = r.u32()?;
+        if version != MANIFEST_VERSION {
+            bail!(
+                "unsupported QTVM version {version} in {} (this build reads v{MANIFEST_VERSION})",
+                path.display()
+            );
+        }
+        let label = r.str(64)?;
+        let scheme = RegistryScheme::parse(&label)
+            .with_context(|| format!("manifest {} carries bad scheme label", path.display()))?;
+        if scheme != RegistryScheme::Planned {
+            bail!(
+                "manifest {} carries uniform scheme {label:?}; only PLAN-MIXED \
+                 registries shard (uniform zoos have no per-tensor sections to chunk)",
+                path.display()
+            );
+        }
+        let source_version = r.u32()?;
+        if source_version != VERSION_PLANNED
+            && source_version != VERSION_SPARSE
+            && source_version != VERSION_BINARY
+        {
+            bail!(
+                "manifest {} claims source version {source_version} (planned \
+                 registries are v{VERSION_PLANNED}/v{VERSION_SPARSE}/v{VERSION_BINARY})",
+                path.display()
+            );
+        }
+
+        let plan_len = r.u32()? as usize;
+        if plan_len > MAX_PLAN_BYTES {
+            bail!("QTVM plan section claims {plan_len} bytes (cap {MAX_PLAN_BYTES})");
+        }
+        let plan_bytes = r.take(plan_len)?.to_vec();
+        let plan_crc = r.u32()?;
+        if crc32(&plan_bytes) != plan_crc {
+            bail!(
+                "QTVM plan section CRC mismatch in {} (corrupt manifest)",
+                path.display()
+            );
+        }
+        let plan = PackPlan::decode(&plan_bytes)
+            .with_context(|| format!("decoding plan embedded in {}", path.display()))?;
+        // Same version/arm-set consistency contract as Registry::open_with:
+        // the recorded source version must match the plan's arm families.
+        if plan.has_onebit_arms() != (source_version == VERSION_BINARY) {
+            bail!(
+                "manifest {} source version {source_version} disagrees with its \
+                 plan's 1-bit arm set (binary-arm registries are v{VERSION_BINARY})",
+                path.display()
+            );
+        }
+        if plan.has_sparse_arms()
+            && source_version != VERSION_SPARSE
+            && source_version != VERSION_BINARY
+        {
+            bail!(
+                "manifest {} source version {source_version} disagrees with its \
+                 plan's sparse arm set (sparse-arm registries are \
+                 v{VERSION_SPARSE}/v{VERSION_BINARY})",
+                path.display()
+            );
+        }
+
+        let shard_cnt = r.u32()? as usize;
+        if shard_cnt == 0 || shard_cnt > MAX_SHARDS {
+            bail!("QTVM manifest claims {shard_cnt} shards (must be 1..={MAX_SHARDS})");
+        }
+        let mut shards = Vec::with_capacity(shard_cnt);
+        for _ in 0..shard_cnt {
+            let name = r.str(MAX_NAME_LEN)?;
+            if name.is_empty()
+                || name == "."
+                || name == ".."
+                || name.contains('/')
+                || name.contains('\\')
+            {
+                bail!(
+                    "QTVM shard name {name:?} is not a plain file name \
+                     (manifest-relative, no path separators)"
+                );
+            }
+            let file_bytes = r.u64()?;
+            if file_bytes < SHARD_HEADER_BYTES {
+                bail!(
+                    "QTVM shard {name:?} claims {file_bytes} bytes, below the \
+                     {SHARD_HEADER_BYTES}-byte shard header"
+                );
+            }
+            shards.push(ShardMeta { name, file_bytes });
+        }
+
+        let row_cnt = r.u64()?;
+        if row_cnt > MAX_ROWS {
+            bail!("QTVM manifest claims {row_cnt} rows (cap {MAX_ROWS}) — corrupt header?");
+        }
+        let expected = plan.expected_sections();
+        if row_cnt != expected.len() as u64 {
+            bail!(
+                "manifest {} indexes {row_cnt} sections; its plan expects {}",
+                path.display(),
+                expected.len()
+            );
+        }
+
+        let page_cnt = r.u32()? as usize;
+        if page_cnt > MAX_PAGES {
+            bail!("QTVM manifest claims {page_cnt} index pages (cap {MAX_PAGES})");
+        }
+        let mut pages = Vec::with_capacity(page_cnt);
+        for _ in 0..page_cnt {
+            let first = r.str(MAX_NAME_LEN)?;
+            let rows = r.u32()?;
+            let offset = r.u64()?;
+            let length = r.u64()?;
+            let crc = r.u32()?;
+            if rows == 0 {
+                bail!("QTVM index page {first:?} claims 0 rows");
+            }
+            pages.push(PageMeta { first, rows, offset, length, crc });
+        }
+
+        let mut crc_buf = [0u8; 4];
+        r.inner
+            .read_exact(&mut crc_buf)
+            .map_err(|_| anyhow::anyhow!("truncated QTVM manifest (missing index CRC)"))?;
+        if u32::from_le_bytes(crc_buf) != crc32(&r.raw) {
+            bail!(
+                "QTVM index CRC mismatch in {} (corrupt or truncated manifest)",
+                path.display()
+            );
+        }
+        let header_bytes = r.raw.len() as u64 + 4;
+
+        // Directory invariants: strictly ascending firsts (binary-search
+        // correctness), page bodies inside the file past the header, and
+        // row counts summing to the declared total.
+        for w in pages.windows(2) {
+            if w[0].first >= w[1].first {
+                bail!(
+                    "QTVM index pages out of order ({:?} then {:?}) — corrupt directory",
+                    w[0].first,
+                    w[1].first
+                );
+            }
+        }
+        let mut rows_total = 0u64;
+        for pg in &pages {
+            match pg.offset.checked_add(pg.length) {
+                Some(end) if pg.offset >= header_bytes && end <= file_bytes => {}
+                _ => bail!(
+                    "QTVM index page {:?} spans [{}, +{}) outside the manifest \
+                     file ({} bytes, {header_bytes}-byte header)",
+                    pg.first,
+                    pg.offset,
+                    pg.length,
+                    file_bytes
+                ),
+            }
+            rows_total += u64::from(pg.rows);
+        }
+        if rows_total != row_cnt {
+            bail!(
+                "QTVM index pages carry {rows_total} rows but the header \
+                 declares {row_cnt}"
+            );
+        }
+
+        Ok(Manifest {
+            scheme,
+            source_version,
+            plan,
+            shards,
+            row_cnt,
+            pages,
+            header_bytes,
+            file_bytes,
+        })
+    }
+
+    pub fn scheme(&self) -> RegistryScheme {
+        self.scheme
+    }
+
+    /// Wire version of the `.qtvc` registry this manifest was sharded
+    /// from (3 dense-planned, 4 sparse, 5 binary).
+    pub fn source_version(&self) -> u32 {
+        self.source_version
+    }
+
+    pub fn plan(&self) -> &PackPlan {
+        &self.plan
+    }
+
+    pub fn shards(&self) -> &[ShardMeta] {
+        &self.shards
+    }
+
+    pub fn pages(&self) -> &[PageMeta] {
+        &self.pages
+    }
+
+    pub fn row_count(&self) -> u64 {
+        self.row_cnt
+    }
+
+    /// Bytes of resident header + directory (what an open costs before
+    /// any page loads).
+    pub fn header_bytes(&self) -> u64 {
+        self.header_bytes
+    }
+
+    /// Index of the page that would hold `name`, by directory binary
+    /// search — `None` when `name` sorts before every page.
+    pub fn page_for(&self, name: &str) -> Option<usize> {
+        let n = self.pages.partition_point(|pg| pg.first.as_str() <= name);
+        n.checked_sub(1)
+    }
+
+    /// Read, CRC-verify and decode one index page from the manifest file.
+    /// Every row is validated against the shard table before it is handed
+    /// out, so a chunk address from a verified page is always in range.
+    pub fn read_page(&self, path: &Path, p: usize) -> Result<Vec<ManifestRow>> {
+        let pg = self
+            .pages
+            .get(p)
+            .ok_or_else(|| {
+                anyhow::anyhow!("page index {p} out of range ({} pages)", self.pages.len())
+            })?;
+        let mut f = fs::File::open(path)
+            .with_context(|| format!("reopening manifest {}", path.display()))?;
+        f.seek(SeekFrom::Start(pg.offset))?;
+        let mut buf = vec![0u8; pg.length as usize];
+        f.read_exact(&mut buf).map_err(|_| {
+            anyhow::anyhow!(
+                "truncated QTVM index page {:?} in {} (corrupt manifest)",
+                pg.first,
+                path.display()
+            )
+        })?;
+        if crc32(&buf) != pg.crc {
+            bail!(
+                "QTVM index page {:?} CRC mismatch in {} (corrupt manifest)",
+                pg.first,
+                path.display()
+            );
+        }
+        let mut c = Cursor::new(&buf);
+        let mut rows: Vec<ManifestRow> = Vec::with_capacity(pg.rows as usize);
+        for _ in 0..pg.rows {
+            let name = c.str()?;
+            if name.len() > MAX_NAME_LEN {
+                bail!("QTVM row name exceeds {MAX_NAME_LEN} bytes");
+            }
+            let kind = PayloadKind::from_u8(c.u8()?)?;
+            if kind == PayloadKind::Plan {
+                bail!(
+                    "QTVM row {name:?} claims a plan-kind chunk (the plan is \
+                     embedded in the manifest header, never a chunk)"
+                );
+            }
+            let shard = c.u32()?;
+            let offset = c.u64()?;
+            let length = c.u64()?;
+            let crc = c.u32()?;
+            let hash = c.u64()?;
+            let meta = self.shards.get(shard as usize).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "QTVM row {name:?} references shard {shard} of {}",
+                    self.shards.len()
+                )
+            })?;
+            match offset.checked_add(length) {
+                Some(end) if offset >= SHARD_HEADER_BYTES && end <= meta.file_bytes => {}
+                _ => bail!(
+                    "QTVM row {name:?} chunk spans [{offset}, +{length}) outside \
+                     shard {:?} ({} bytes)",
+                    meta.name,
+                    meta.file_bytes
+                ),
+            }
+            if let Some(prev) = rows.last() {
+                if prev.name.as_str() >= name.as_str() {
+                    bail!(
+                        "QTVM index page {:?} rows out of order ({:?} then {name:?})",
+                        pg.first,
+                        prev.name
+                    );
+                }
+            } else if name != pg.first {
+                bail!(
+                    "QTVM index page starts with row {name:?} but the directory \
+                     says {:?}",
+                    pg.first
+                );
+            }
+            rows.push(ManifestRow {
+                name,
+                kind,
+                chunk: ChunkAddr { shard, offset, length, crc, hash },
+            });
+        }
+        if !c.done() {
+            bail!(
+                "QTVM index page {:?} carries {} trailing bytes past its rows",
+                pg.first,
+                c.remaining()
+            );
+        }
+        if let Some(next) = self.pages.get(p + 1) {
+            if rows.last().map(|r| r.name.as_str()) >= Some(next.first.as_str()) {
+                bail!(
+                    "QTVM index page {:?} overlaps the next page ({:?})",
+                    pg.first,
+                    next.first
+                );
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Manifest file size recorded at read time.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+}
+
+/// Knobs for [`shard_registry`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardOptions {
+    /// Number of shard files to spread unique chunks across.
+    pub n_shards: usize,
+    /// Rows per index page.
+    pub page_rows: usize,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        ShardOptions { n_shards: 4, page_rows: DEFAULT_PAGE_ROWS }
+    }
+}
+
+/// What [`shard_registry`] produced, for reporting and assertions.
+#[derive(Clone, Debug)]
+pub struct ShardSummary {
+    pub manifest_path: PathBuf,
+    pub shard_paths: Vec<PathBuf>,
+    /// Sections indexed (manifest rows).
+    pub n_sections: usize,
+    /// Unique chunks actually stored.
+    pub n_unique_chunks: usize,
+    /// Rows that aliased an earlier row's chunk (dedup hits).
+    pub n_dedup_hits: usize,
+    /// Total bytes across all shard files (headers included).
+    pub shard_bytes: u64,
+    /// Manifest file bytes.
+    pub manifest_bytes: u64,
+    /// The monolithic source registry's size, for the savings headline.
+    pub source_bytes: u64,
+}
+
+impl ShardSummary {
+    /// Total on-disk footprint of the sharded zoo.
+    pub fn total_bytes(&self) -> u64 {
+        self.shard_bytes + self.manifest_bytes
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    push_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
+/// Split a planned (`PLAN-MIXED`) registry into `opts.n_shards` shard
+/// files plus a `MANIFEST.qtvm` under `out_dir`, deduplicating
+/// byte-identical section bodies by content hash.  Every section is read
+/// back CRC-verified from the source before it is chunked, and both
+/// outputs are written atomically (`.tmp` + rename), so a crash mid-shard
+/// never leaves a half-valid manifest behind.
+pub fn shard_registry(src: &Registry, out_dir: &Path, opts: &ShardOptions) -> Result<ShardSummary> {
+    let _span = obs::span(obs::Category::Registry, "registry_shard");
+    if src.plan().is_none() {
+        bail!(
+            "only PLAN-MIXED registries shard; {} is {:?} — repack it with \
+             `tvq registry pack --planned` first",
+            src.path().display(),
+            src.scheme().label()
+        );
+    }
+    if opts.n_shards == 0 || opts.n_shards > MAX_SHARDS {
+        bail!("shard count {} out of range (1..={MAX_SHARDS})", opts.n_shards);
+    }
+    if opts.page_rows == 0 {
+        bail!("page_rows must be at least 1");
+    }
+    fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard directory {}", out_dir.display()))?;
+
+    // The verbatim plan body rides inside the manifest header, so a
+    // sharded zoo opens without touching any shard file.
+    let mut scratch = SectionScratch::default();
+    let plan_entry = src
+        .entries()
+        .iter()
+        .find(|e| e.kind == PayloadKind::Plan)
+        .expect("planned registries always carry a plan section");
+    let plan_bytes = src.section_bytes(plan_entry, &mut scratch)?.to_vec();
+
+    // Sections in sorted-name order (the manifest's row order).
+    let mut sections: Vec<&super::index::IndexEntry> =
+        src.entries().iter().filter(|e| e.kind != PayloadKind::Plan).collect();
+    sections.sort_by(|a, b| a.name.cmp(&b.name));
+
+    let mut shard_bufs: Vec<Vec<u8>> = (0..opts.n_shards)
+        .map(|_| {
+            let mut b = Vec::new();
+            push_u32(&mut b, SHARD_MAGIC);
+            push_u32(&mut b, SHARD_VERSION);
+            b
+        })
+        .collect();
+    // hash -> chunks already stored with that hash (usually exactly one;
+    // more only under an FNV collision between distinct bodies).
+    let mut by_hash: HashMap<u64, Vec<ChunkAddr>> = HashMap::new();
+    let mut rows: Vec<ManifestRow> = Vec::with_capacity(sections.len());
+    let mut next_shard = 0usize;
+    let mut n_unique = 0usize;
+    let mut n_dups = 0usize;
+
+    for entry in sections {
+        let bytes = src.section_bytes(entry, &mut scratch)?;
+        let hash = fnv64(bytes);
+        let existing = by_hash.get(&hash).and_then(|cands| {
+            cands.iter().copied().find(|c| {
+                c.length == bytes.len() as u64 && {
+                    let buf = &shard_bufs[c.shard as usize];
+                    let start = c.offset as usize;
+                    &buf[start..start + bytes.len()] == bytes
+                }
+            })
+        });
+        let chunk = match existing {
+            Some(c) => {
+                n_dups += 1;
+                c
+            }
+            None => {
+                let shard = next_shard;
+                next_shard = (next_shard + 1) % opts.n_shards;
+                let buf = &mut shard_bufs[shard];
+                let offset = buf.len() as u64;
+                buf.extend_from_slice(bytes);
+                n_unique += 1;
+                let c = ChunkAddr {
+                    shard: shard as u32,
+                    offset,
+                    length: bytes.len() as u64,
+                    crc: entry.crc,
+                    hash,
+                };
+                by_hash.entry(hash).or_default().push(c);
+                c
+            }
+        };
+        rows.push(ManifestRow { name: entry.name.clone(), kind: entry.kind, chunk });
+    }
+
+    // Shard files first: a manifest must never exist before the chunks
+    // it points at.
+    let width = if opts.n_shards > 100 { 4 } else { 2 };
+    let mut shard_paths = Vec::with_capacity(opts.n_shards);
+    let mut shard_metas = Vec::with_capacity(opts.n_shards);
+    let mut shard_bytes_total = 0u64;
+    for (i, buf) in shard_bufs.iter().enumerate() {
+        let name = format!("shard-{i:0width$}.qtvs");
+        let path = out_dir.join(&name);
+        write_atomic(&path, buf)?;
+        shard_bytes_total += buf.len() as u64;
+        shard_metas.push(ShardMeta { name, file_bytes: buf.len() as u64 });
+        shard_paths.push(path);
+    }
+
+    // Manifest header + directory, two-pass: directory offsets are
+    // fixed-width, so serialize once with zeros to learn the header
+    // length, then again with real page offsets.
+    let page_bodies: Vec<Vec<u8>> = rows
+        .chunks(opts.page_rows)
+        .map(|page| {
+            let mut b = Vec::new();
+            for row in page {
+                push_str(&mut b, &row.name);
+                b.push(row.kind.to_u8());
+                push_u32(&mut b, row.chunk.shard);
+                push_u64(&mut b, row.chunk.offset);
+                push_u64(&mut b, row.chunk.length);
+                push_u32(&mut b, row.chunk.crc);
+                push_u64(&mut b, row.chunk.hash);
+            }
+            b
+        })
+        .collect();
+    let page_firsts: Vec<&str> =
+        rows.chunks(opts.page_rows).map(|page| page[0].name.as_str()).collect();
+    let page_rows_cnt: Vec<u32> =
+        rows.chunks(opts.page_rows).map(|page| page.len() as u32).collect();
+
+    let encode_header = |offsets: &[u64]| -> Vec<u8> {
+        let mut h = Vec::new();
+        push_u32(&mut h, MANIFEST_MAGIC);
+        push_u32(&mut h, MANIFEST_VERSION);
+        push_str(&mut h, &src.scheme().label());
+        push_u32(&mut h, src.version());
+        push_u32(&mut h, plan_bytes.len() as u32);
+        h.extend_from_slice(&plan_bytes);
+        push_u32(&mut h, crc32(&plan_bytes));
+        push_u32(&mut h, shard_metas.len() as u32);
+        for m in &shard_metas {
+            push_str(&mut h, &m.name);
+            push_u64(&mut h, m.file_bytes);
+        }
+        push_u64(&mut h, rows.len() as u64);
+        push_u32(&mut h, page_bodies.len() as u32);
+        for (i, body) in page_bodies.iter().enumerate() {
+            push_str(&mut h, page_firsts[i]);
+            push_u32(&mut h, page_rows_cnt[i]);
+            push_u64(&mut h, offsets.get(i).copied().unwrap_or(0));
+            push_u64(&mut h, body.len() as u64);
+            push_u32(&mut h, crc32(body));
+        }
+        h
+    };
+    let header_len = encode_header(&vec![0; page_bodies.len()]).len() as u64 + 4;
+    let mut offsets = Vec::with_capacity(page_bodies.len());
+    let mut at = header_len;
+    for body in &page_bodies {
+        offsets.push(at);
+        at += body.len() as u64;
+    }
+    let mut manifest_bytes = encode_header(&offsets);
+    let index_crc = crc32(&manifest_bytes);
+    push_u32(&mut manifest_bytes, index_crc);
+    for body in &page_bodies {
+        manifest_bytes.extend_from_slice(body);
+    }
+
+    let manifest_path = out_dir.join(MANIFEST_FILE_NAME);
+    write_atomic(&manifest_path, &manifest_bytes)?;
+
+    Ok(ShardSummary {
+        manifest_path,
+        shard_paths,
+        n_sections: rows.len(),
+        n_unique_chunks: n_unique,
+        n_dedup_hits: n_dups,
+        shard_bytes: shard_bytes_total,
+        manifest_bytes: manifest_bytes.len() as u64,
+        source_bytes: src.file_bytes(),
+    })
+}

@@ -55,6 +55,7 @@
 //! use tvq::registry::{build_registry, merge_from_source, DiskAccounting,
 //!                     PackedRegistrySource};
 //! use tvq::merge::TaskArithmetic;
+//! use tvq::util::exec::ExecCtx;
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! # let (pre, fts): (tvq::checkpoint::Checkpoint, Vec<tvq::checkpoint::Checkpoint>) = todo!();
@@ -65,7 +66,8 @@
 //! // Serve from it: open the index, touch only the tasks you merge.
 //! let source = PackedRegistrySource::open("zoo.qtvc")?;
 //! let _merged = merge_from_source(
-//!     &TaskArithmetic::default(), &pre, &source, Some(&[0, 3, 5]))?;
+//!     &TaskArithmetic::default(), &pre, &source, Some(&[0, 3, 5]),
+//!     &ExecCtx::default())?;
 //!
 //! // Cross-check the bytes against the paper's ideal arithmetic.
 //! let acc = DiskAccounting::measure(source.registry())?;
@@ -76,16 +78,26 @@
 pub mod accounting;
 pub mod container;
 pub mod index;
+pub mod manifest;
 mod mmap;
 pub mod source;
+pub mod store;
 pub mod writer;
 
 pub use accounting::{f32_store_bytes, DiskAccounting};
 pub use container::{Payload, PayloadKind, PayloadView, RegistryScheme};
-pub use index::{IndexEntry, IoMode, Registry, SectionScratch};
+pub use index::{IndexEntry, IoMode, OpenOptions, Registry, SectionScratch, Validation};
+pub use manifest::{
+    fnv64, shard_registry, ChunkAddr, Manifest, ManifestRow, PageMeta, ShardMeta, ShardOptions,
+    ShardSummary, MANIFEST_FILE_NAME,
+};
 pub use source::{
     merge_from_source, merge_from_source_with_pool, F32ZooSource, PackedRegistrySource,
     TaskVectorSource,
+};
+pub use store::{
+    LocalShardStore, PlannedSectionSource, RemoteStore, SectionStore, ShardedRegistry,
+    ShardedSource,
 };
 pub use writer::{
     build_registry, build_registry_with_pool, uniform_registry_bytes, RegistryBuilder,
@@ -99,6 +111,7 @@ mod tests {
     use crate::merge::{Merger, TaskArithmetic};
     use crate::quant::QuantScheme;
     use crate::tensor::Tensor;
+    use crate::util::exec::ExecCtx;
     use crate::util::rng::Rng;
 
     /// Synthetic zoo in the regime RTVQ exploits: common drift + small
@@ -152,7 +165,8 @@ mod tests {
                 Payload::Checkpoint(back) => assert_eq!(back, q, "task {t}"),
                 other => panic!("unexpected payload {other:?}"),
             }
-            assert_eq!(reg.load_task_vector(t).unwrap(), q.dequantize().unwrap());
+            let got = reg.load_task_vector(t, &ExecCtx::sequential()).unwrap();
+            assert_eq!(got, q.dequantize().unwrap());
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -167,10 +181,11 @@ mod tests {
         let reg = Registry::open(&path).unwrap();
         assert!(reg.has_rtvq_base());
         assert_eq!(reg.n_tasks(), 4);
-        let r = crate::quant::Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+        let r = crate::quant::Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential())
+            .unwrap();
         for t in 0..4 {
             let want = r.dequantize_task(t).unwrap();
-            let got = reg.load_task_vector(t).unwrap();
+            let got = reg.load_task_vector(t, &ExecCtx::sequential()).unwrap();
             assert_eq!(got, want, "task {t}");
         }
         std::fs::remove_dir_all(&dir).ok();
@@ -188,7 +203,8 @@ mod tests {
 
         // Merge a subset through the packed source...
         let ta = TaskArithmetic::default();
-        let merged = merge_from_source(&ta, &pre, &packed, Some(&[1, 3])).unwrap();
+        let merged =
+            merge_from_source(&ta, &pre, &packed, Some(&[1, 3]), &ExecCtx::default()).unwrap();
         // ...and the same subset from dequantized-in-memory vectors.
         let taus: Vec<Checkpoint> = [1usize, 3]
             .iter()
@@ -209,7 +225,7 @@ mod tests {
             _ => panic!("expected shared merges"),
         }
         // Out-of-range subsets are rejected.
-        assert!(merge_from_source(&ta, &pre, &packed, Some(&[7])).is_err());
+        assert!(merge_from_source(&ta, &pre, &packed, Some(&[7]), &ExecCtx::default()).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -261,9 +277,9 @@ mod tests {
         let dir = tmp("iomode");
         let path = dir.join("zoo.qtvc");
         build_registry(&pre, &fts, QuantScheme::Tvq(3), &path).unwrap();
-        let mmap = Registry::open_with_io(&path, IoMode::Mmap).unwrap();
-        let pread = Registry::open_with_io(&path, IoMode::Pread).unwrap();
-        let reopen = Registry::open_with_io(&path, IoMode::Reopen).unwrap();
+        let mmap = Registry::open_with(&path, OpenOptions::new().io(IoMode::Mmap)).unwrap();
+        let pread = Registry::open_with(&path, OpenOptions::new().io(IoMode::Pread)).unwrap();
+        let reopen = Registry::open_with(&path, OpenOptions::new().io(IoMode::Reopen)).unwrap();
         // Requested modes take effect (mmap may legitimately fall back on
         // exotic platforms, but then it must report the fallback).
         #[cfg(all(unix, target_pointer_width = "64"))]
@@ -277,14 +293,14 @@ mod tests {
         assert_eq!(pread.mapped_bytes(), 0);
         assert_eq!(reopen.mapped_bytes(), 0);
         for t in 0..3 {
-            let want = reopen.load_task_vector(t).unwrap();
+            let want = reopen.load_task_vector(t, &ExecCtx::sequential()).unwrap();
             assert_eq!(
-                pread.load_task_vector(t).unwrap(),
+                pread.load_task_vector(t, &ExecCtx::sequential()).unwrap(),
                 want,
                 "task {t}: pread and reopen paths disagree"
             );
             assert_eq!(
-                mmap.load_task_vector(t).unwrap(),
+                mmap.load_task_vector(t, &ExecCtx::sequential()).unwrap(),
                 want,
                 "task {t}: mmap and reopen paths disagree"
             );
@@ -305,6 +321,7 @@ mod tests {
             rtvq_arms: vec![(3, 2)],
             dare_arms: vec![],
             tall_arms: vec![],
+            onebit_arms: vec![],
         };
         let profile = probe(&pre, &fts, &cfg).unwrap();
         let budget = min_feasible_bytes(&profile) * 2;
@@ -323,9 +340,9 @@ mod tests {
         let src = PackedRegistrySource::open(&path).unwrap();
         assert_eq!(src.scheme_label(), "PLAN-MIXED");
         let ta = TaskArithmetic::default();
-        let merged = merge_from_source(&ta, &pre, &src, None).unwrap();
+        let merged = merge_from_source(&ta, &pre, &src, None, &ExecCtx::default()).unwrap();
         let taus: Vec<Checkpoint> =
-            (0..3).map(|t| reg.load_task_vector(t).unwrap()).collect();
+            (0..3).map(|t| reg.load_task_vector(t, &ExecCtx::sequential()).unwrap()).collect();
         let want = ta.merge(&pre, &taus).unwrap();
         match (&merged, &want) {
             (

@@ -13,6 +13,7 @@ use anyhow::{bail, Result};
 use super::index::Registry;
 use crate::checkpoint::Checkpoint;
 use crate::merge::{MergedModel, Merger};
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 
 /// A provider of full-precision task vectors, one per task.
@@ -143,11 +144,11 @@ impl TaskVectorSource for PackedRegistrySource {
     }
 
     fn task_vector(&self, t: usize) -> Result<Checkpoint> {
-        self.registry.load_task_vector(t)
+        self.registry.load_task_vector(t, &ExecCtx::sequential())
     }
 
     fn task_vector_with_pool(&self, t: usize, pool: &Pool) -> Result<Checkpoint> {
-        self.registry.load_task_vector_with_pool(t, pool)
+        self.registry.load_task_vector(t, &ExecCtx::with_pool(pool))
     }
 
     fn scheme_label(&self) -> String {
@@ -177,30 +178,21 @@ impl TaskVectorSource for PackedRegistrySource {
 /// read — the full f32 zoo never exists in memory or on disk.
 ///
 /// Task-vector loads (the decode-dominated part) fan out across the
-/// shared [`Pool`]; the merge combine itself stays on the caller's
+/// [`ExecCtx`]'s pool; the merge combine itself stays on the caller's
 /// thread in task order, so the merged floats are bit-identical at
-/// every thread count.
+/// every thread count.  Multi-task requests parallelize *across* tasks
+/// (each load sequential); a single-task request parallelizes *inside*
+/// the load ([`TaskVectorSource::task_vector_with_pool`]) — either way
+/// the total worker count is bounded by the pool width.
 pub fn merge_from_source(
     merger: &dyn Merger,
     pre: &Checkpoint,
     source: &dyn TaskVectorSource,
     tasks: Option<&[usize]>,
+    ctx: &ExecCtx,
 ) -> Result<MergedModel> {
-    merge_from_source_with_pool(merger, pre, source, tasks, Pool::global())
-}
-
-/// [`merge_from_source`] on an explicit pool.  Multi-task requests
-/// parallelize *across* tasks (each load sequential); a single-task
-/// request parallelizes *inside* the load
-/// ([`TaskVectorSource::task_vector_with_pool`]) — either way the total
-/// worker count is bounded by the pool width.
-pub fn merge_from_source_with_pool(
-    merger: &dyn Merger,
-    pre: &Checkpoint,
-    source: &dyn TaskVectorSource,
-    tasks: Option<&[usize]>,
-    pool: &Pool,
-) -> Result<MergedModel> {
+    let _op = ctx.op_span(crate::obs::Category::Merge);
+    let pool = ctx.pool();
     let indices: Vec<usize> = match tasks {
         Some(ts) => {
             for &t in ts {
@@ -221,4 +213,17 @@ pub fn merge_from_source_with_pool(
         pool.try_map(indices, |_, t| source.task_vector(t))?
     };
     merger.merge(pre, &taus)
+}
+
+/// [`merge_from_source`] on an explicit pool — the PR-5 twin, superseded
+/// by [`ExecCtx`].
+#[deprecated(note = "use merge_from_source(..., &ExecCtx::with_pool(pool))")]
+pub fn merge_from_source_with_pool(
+    merger: &dyn Merger,
+    pre: &Checkpoint,
+    source: &dyn TaskVectorSource,
+    tasks: Option<&[usize]>,
+    pool: &Pool,
+) -> Result<MergedModel> {
+    merge_from_source(merger, pre, source, tasks, &ExecCtx::with_pool(pool))
 }

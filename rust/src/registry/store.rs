@@ -1,0 +1,1062 @@
+//! Tiered section stores and the sharded registry reader.
+//!
+//! A [`ShardedRegistry`] is the fleet-scale twin of [`Registry`](super::Registry): it
+//! opens a `MANIFEST.qtvm` (header + page directory only — the row pages
+//! load lazily, see [`super::manifest`]) and reads section chunks
+//! through a [`SectionStore`] tier:
+//!
+//! * **tier 0** — [`LocalShardStore`]: shard files on local disk, read
+//!   through the same mmap/pread/reopen [`IoMode`] ladder as the
+//!   monolithic registry.
+//! * **tier 1** — [`RemoteStore`]: chunks fetched over TCP from a
+//!   `tvq registry fetch-serve` node (`{"cmd":"fetch_section"}` on
+//!   `TcpFront`), with an LRU byte-capped local chunk cache keyed by
+//!   content hash and a background prefetch worker that warms hot tasks.
+//!
+//! Every chunk is verified identically regardless of tier — length, then
+//! CRC-32, then FNV-64 content hash, all recorded by the manifest — so a
+//! corrupt byte produces the **same error** whether it came off a local
+//! mmap or a socket, and the bit-exactness contract of the decode paths
+//! (shared with [`Registry`](super::Registry) through [`PlannedSectionSource`]) holds
+//! across tiers and thread counts.
+//!
+//! Prefetch policy: a task becomes *hot* on its second section read; its
+//! remaining chunks are queued to the store's prefetch worker, filtered
+//! by the PR-7 section-read histogram (chunks larger than 4x the
+//! process-wide p90 section read are skipped, so one huge outlier tensor
+//! cannot monopolize the cache).  See `docs/ARCHITECTURE.md` §"Tiered
+//! fetch".
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use super::container::{PayloadView, RegistryScheme};
+use super::index::{
+    check_view_against_spec, IoMode, OpenOptions, SectionIo, SectionScratch, Validation,
+};
+use super::manifest::{
+    fnv64, ChunkAddr, Manifest, ManifestRow, ShardMeta, SHARD_HEADER_BYTES, SHARD_MAGIC,
+    SHARD_VERSION,
+};
+use crate::checkpoint::Checkpoint;
+use crate::obs;
+use crate::planner::plan::{base_section_name, task_section_name};
+use crate::planner::{Arm, PackPlan, SectionRole};
+use crate::quant::GroupQuantizedView;
+use crate::tensor::Tensor;
+use crate::util::crc32;
+use crate::util::exec::ExecCtx;
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+
+/// Reads on a task after which its remaining sections are prefetched.
+const HOT_TASK_READS: u32 = 2;
+/// Prefetch queue depth; excess requests are dropped, never blocked on.
+const PREFETCH_QUEUE: usize = 256;
+/// Hot chunks larger than this multiple of the p90 section read are not
+/// prefetched.
+const PREFETCH_P90_FACTOR: u64 = 4;
+
+/// A planned (`PLAN-MIXED`) source of per-slot section views — the
+/// abstraction [`crate::planner::fused_merge`] and the shared
+/// task-vector decode run against, implemented by both the monolithic
+/// [`Registry`](super::Registry) and [`ShardedRegistry`].  One decode path, two storage
+/// layouts: bit-exactness across tiers falls out by construction.
+pub trait PlannedSectionSource: Sync {
+    /// The embedded pack plan; errors for non-planned sources.
+    fn pack_plan(&self) -> Result<&PackPlan>;
+
+    /// Borrowed, CRC-verified, spec-cross-checked view of task `t`'s
+    /// payload for tensor `l`.
+    fn planned_task_view<'a>(
+        &'a self,
+        t: usize,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<PayloadView<'a>>;
+
+    /// Borrowed view of the shared RTVQ base section for tensor `l`.
+    fn planned_base_view<'a>(
+        &'a self,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<GroupQuantizedView<'a>>;
+
+    /// Dequantized per-tensor bases, decoded at most once and cached by
+    /// the implementation.
+    fn planned_base_hats(&self) -> Result<&[Option<Vec<f32>>]>;
+
+    /// The backing artifact's path, for error messages.
+    fn source_path(&self) -> &Path;
+}
+
+/// Decode every RTVQ-arm tensor's shared base — the cache-fill body both
+/// [`PlannedSectionSource`] implementations run exactly once.
+pub(crate) fn decode_planned_base_hats<S: PlannedSectionSource + ?Sized>(
+    src: &S,
+) -> Result<Vec<Option<Vec<f32>>>> {
+    let plan = src.pack_plan()?;
+    let mut scratch = SectionScratch::default();
+    let mut hats = Vec::with_capacity(plan.n_tensors());
+    for l in 0..plan.n_tensors() {
+        hats.push(match plan.assignments[l].arm {
+            Arm::Rtvq { .. } => {
+                Some(src.planned_base_view(l, &mut scratch)?.to_owned().dequantize())
+            }
+            _ => None,
+        });
+    }
+    Ok(hats)
+}
+
+/// Reconstruct task `t`'s full-precision task vector from a planned
+/// source, one pool job per tensor.  Tensors assemble in plan order and
+/// no job touches another's output, so the reconstruction is
+/// bit-identical at every thread count *and* across storage tiers (the
+/// sharded tiers feed this same loop).
+pub(crate) fn planned_task_vector<S: PlannedSectionSource + ?Sized>(
+    src: &S,
+    t: usize,
+    pool: &Pool,
+) -> Result<Checkpoint> {
+    let plan = src.pack_plan()?;
+    if t >= plan.n_tasks() {
+        bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
+    }
+    let base_hats = src.planned_base_hats()?;
+    let slots: Vec<usize> = (0..plan.n_tensors()).collect();
+    let parts: Vec<Tensor> = pool.try_map(slots, |_, l| {
+        let tensor = &plan.tensors[l];
+        let a = &plan.assignments[l];
+        // Per-job scratches: in Mmap mode every section is dequantized
+        // straight out of the mapping — no byte is staged or copied on
+        // this path.
+        let mut scratch = SectionScratch::default();
+        let mut codes: Vec<u32> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        let mut buf = vec![0.0f32; tensor.padded()];
+        match src.planned_task_view(t, l, &mut scratch)? {
+            PayloadView::Group(gq) => {
+                gq.dequantize_into(&mut buf, &mut codes);
+                if let Arm::Rtvq { .. } = a.arm {
+                    let base = base_hats[l]
+                        .as_ref()
+                        .expect("rtvq-arm tensors always carry a base");
+                    for (d, &b) in buf.iter_mut().zip(base) {
+                        *d += b;
+                    }
+                }
+            }
+            // Sparse arms: survivors scatter into a zeroed dense buffer;
+            // masked-out weights reconstruct as 0.
+            PayloadView::SparseGroup(s) => s.dequantize_into(&mut buf, &mut codes, &mut vals),
+            // 1-bit arms: ±scale per sign bit, straight from the bitmap.
+            PayloadView::Binary(b) => b.dequantize_into(&mut buf),
+            other => bail!("planned task section decoded to an unexpected payload: {other:?}"),
+        }
+        buf.truncate(tensor.numel());
+        Tensor::new(tensor.shape.clone(), buf)
+    })?;
+    let mut out = Checkpoint::new();
+    for (tensor, part) in plan.tensors.iter().zip(parts) {
+        out.insert(&tensor.name, part);
+    }
+    Ok(out)
+}
+
+/// Where section chunks physically come from.  Implementations return
+/// **raw, unverified** bytes; [`ShardedRegistry`] layers the identical
+/// length/CRC/hash verification on top of every tier.
+pub trait SectionStore: Send + Sync {
+    /// 0 = local shard files, 1 = remote TCP fetch.
+    fn tier(&self) -> u8;
+
+    /// The raw chunk body: borrowed from a mapping where possible,
+    /// staged into `scratch` otherwise.
+    fn fetch<'a>(
+        &'a self,
+        name: &str,
+        chunk: &ChunkAddr,
+        scratch: &'a mut Vec<u8>,
+    ) -> Result<&'a [u8]>;
+
+    /// Queue chunks for background warming.  Best-effort: stores without
+    /// a cache (tier 0) ignore it, and a full queue drops requests.
+    fn prefetch(&self, chunks: Vec<(String, ChunkAddr)>) {
+        let _ = chunks;
+    }
+
+    /// `(hits, misses)` of the store's chunk cache, if it has one.
+    fn cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// File-backed bytes served through memory mappings (tier 0 mmap).
+    fn mapped_bytes(&self) -> u64 {
+        0
+    }
+}
+
+struct ShardHandle {
+    path: PathBuf,
+    file_bytes: u64,
+    io: SectionIo,
+}
+
+/// Tier 0: shard files in a local directory, opened lazily (a reader
+/// touching 3 tasks of a 64-shard zoo opens only the shards those tasks'
+/// chunks live in) and validated on first open: existence, exact size
+/// against the manifest, and the `QTVS` header.
+pub struct LocalShardStore {
+    dir: PathBuf,
+    metas: Vec<ShardMeta>,
+    io_mode: IoMode,
+    handles: Vec<OnceLock<ShardHandle>>,
+}
+
+impl LocalShardStore {
+    /// `dir` is the manifest's directory; `metas` its shard table.
+    pub fn open(dir: &Path, metas: &[ShardMeta], io_mode: IoMode) -> LocalShardStore {
+        LocalShardStore {
+            dir: dir.to_path_buf(),
+            metas: metas.to_vec(),
+            io_mode,
+            handles: metas.iter().map(|_| OnceLock::new()).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.metas.len()
+    }
+
+    fn handle(&self, shard: u32) -> Result<&ShardHandle> {
+        let meta = self.metas.get(shard as usize).ok_or_else(|| {
+            anyhow::anyhow!("chunk references shard {shard} of {}", self.metas.len())
+        })?;
+        let cell = &self.handles[shard as usize];
+        if let Some(h) = cell.get() {
+            return Ok(h);
+        }
+        let built = self.open_shard(meta)?;
+        Ok(cell.get_or_init(|| built))
+    }
+
+    fn open_shard(&self, meta: &ShardMeta) -> Result<ShardHandle> {
+        let path = self.dir.join(&meta.name);
+        let len = match fs::metadata(&path) {
+            Ok(m) => m.len(),
+            Err(_) => bail!(
+                "shard file {} is missing (the manifest lists it at {} bytes)",
+                path.display(),
+                meta.file_bytes
+            ),
+        };
+        if len != meta.file_bytes {
+            bail!(
+                "shard file {} is {len} bytes but the manifest records {} \
+                 (stale or swapped shard)",
+                path.display(),
+                meta.file_bytes
+            );
+        }
+        let io = SectionIo::new(&path, self.io_mode)?;
+        let mut tmp = Vec::new();
+        let header = io.read_range(&path, "shard header", 0, 8, &mut tmp)?;
+        let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+        if magic != SHARD_MAGIC {
+            bail!(
+                "not a QTVS shard: {} (magic {magic:#010x}, expected {SHARD_MAGIC:#010x})",
+                path.display()
+            );
+        }
+        if version != SHARD_VERSION {
+            bail!(
+                "unsupported QTVS version {version} in {} (this build reads v{SHARD_VERSION})",
+                path.display()
+            );
+        }
+        Ok(ShardHandle { path, file_bytes: meta.file_bytes, io })
+    }
+
+    /// Raw range read for the fetch server: validates the range against
+    /// the manifest's shard size, nothing more (the requesting client
+    /// verifies CRC + hash against *its* manifest).
+    pub fn read_chunk(&self, shard: u32, offset: u64, length: u64) -> Result<Vec<u8>> {
+        let meta = self.metas.get(shard as usize).ok_or_else(|| {
+            anyhow::anyhow!("fetch_section references shard {shard} of {}", self.metas.len())
+        })?;
+        match offset.checked_add(length) {
+            Some(end) if offset >= SHARD_HEADER_BYTES && end <= meta.file_bytes => {}
+            _ => bail!(
+                "fetch_section range [{offset}, +{length}) outside shard {:?} ({} bytes)",
+                meta.name,
+                meta.file_bytes
+            ),
+        }
+        let h = self.handle(shard)?;
+        let mut buf = Vec::new();
+        let bytes = h.io.read_range(&h.path, "fetched chunk", offset, length, &mut buf)?.to_vec();
+        Ok(bytes)
+    }
+}
+
+impl SectionStore for LocalShardStore {
+    fn tier(&self) -> u8 {
+        0
+    }
+
+    fn fetch<'a>(
+        &'a self,
+        name: &str,
+        chunk: &ChunkAddr,
+        scratch: &'a mut Vec<u8>,
+    ) -> Result<&'a [u8]> {
+        let h = self.handle(chunk.shard)?;
+        h.io.read_range(&h.path, name, chunk.offset, chunk.length, scratch)
+    }
+
+    fn mapped_bytes(&self) -> u64 {
+        self.handles
+            .iter()
+            .filter_map(|c| c.get())
+            .map(|h| h.io.mapped_len(h.file_bytes))
+            .sum()
+    }
+}
+
+/// LRU chunk cache keyed by content hash: dedup'd sections (shared
+/// bases) occupy one slot no matter how many rows alias them.
+struct ChunkCache {
+    map: HashMap<u64, (Vec<u8>, u64)>,
+    bytes: usize,
+    cap: usize,
+    tick: u64,
+}
+
+impl ChunkCache {
+    fn new(cap: usize) -> ChunkCache {
+        ChunkCache { map: HashMap::new(), bytes: 0, cap, tick: 0 }
+    }
+
+    fn get(&mut self, hash: u64) -> Option<&Vec<u8>> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&hash) {
+            Some((bytes, last)) => {
+                *last = tick;
+                Some(&*bytes)
+            }
+            None => None,
+        }
+    }
+
+    fn contains(&self, hash: u64) -> bool {
+        self.map.contains_key(&hash)
+    }
+
+    fn insert(&mut self, hash: u64, bytes: Vec<u8>) {
+        if bytes.len() > self.cap || self.map.contains_key(&hash) {
+            return;
+        }
+        while self.bytes + bytes.len() > self.cap {
+            // O(n) victim scan — caches hold at most a few thousand
+            // chunks, and eviction is off the hit path.
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, last))| *last)
+                .map(|(&h, _)| h);
+            match victim {
+                Some(h) => {
+                    if let Some((b, _)) = self.map.remove(&h) {
+                        self.bytes -= b.len();
+                    }
+                }
+                None => break,
+            }
+        }
+        self.tick += 1;
+        self.bytes += bytes.len();
+        self.map.insert(hash, (bytes, self.tick));
+    }
+}
+
+struct RemoteShared {
+    addr: String,
+    cache: Mutex<ChunkCache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    prefetched: AtomicU64,
+    prefetch_dropped: AtomicU64,
+}
+
+struct FetchConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl FetchConn {
+    fn connect(addr: &str) -> Result<FetchConn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to section server {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone().context("cloning fetch stream")?;
+        Ok(FetchConn { reader: BufReader::new(stream), writer })
+    }
+
+    /// One request/response exchange.  Transport failures surface as
+    /// `std::io::Error` (retriable); server-reported errors surface as
+    /// plain messages, **verbatim**, so tier-1 callers see exactly what
+    /// tier 0 would have said for the same fault.
+    fn request(&mut self, chunk: &ChunkAddr, out: &mut Vec<u8>) -> Result<()> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("fetch_section")),
+            ("shard", Json::num(chunk.shard as f64)),
+            ("offset", Json::num(chunk.offset as f64)),
+            ("length", Json::num(chunk.length as f64)),
+        ]);
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "section server closed the connection",
+            )
+            .into());
+        }
+        let reply = Json::parse(line.trim_end())
+            .with_context(|| format!("parsing fetch reply {line:?}"))?;
+        if let Some(err) = reply.get("error") {
+            bail!("{}", err.as_str().unwrap_or("unknown section-server error"));
+        }
+        let length = reply.req("length")?.as_f64()? as u64;
+        if length != chunk.length {
+            bail!(
+                "section server returned {length} bytes for a {}-byte chunk",
+                chunk.length
+            );
+        }
+        out.clear();
+        out.resize(length as usize, 0);
+        self.reader.read_exact(out)?;
+        Ok(())
+    }
+}
+
+/// Tier 1: chunks fetched over TCP, cached locally (LRU, byte-capped,
+/// keyed by content hash), with a background prefetch worker on its own
+/// connection.  Transport errors reconnect-and-retry once; errors the
+/// *server* reports (missing shard, bad range) are relayed verbatim so
+/// tier-1 failures read identically to tier 0.
+pub struct RemoteStore {
+    shared: Arc<RemoteShared>,
+    conn: Mutex<Option<FetchConn>>,
+    prefetch_tx: Option<SyncSender<(String, ChunkAddr)>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RemoteStore {
+    /// Connect eagerly (fast failure on a bad address) and start the
+    /// prefetch worker.  `cache_bytes` caps the local chunk cache.
+    pub fn connect(addr: &str, cache_bytes: usize) -> Result<RemoteStore> {
+        let conn = FetchConn::connect(addr)?;
+        let shared = Arc::new(RemoteShared {
+            addr: addr.to_string(),
+            cache: Mutex::new(ChunkCache::new(cache_bytes)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            prefetch_dropped: AtomicU64::new(0),
+        });
+        let (tx, rx) = sync_channel::<(String, ChunkAddr)>(PREFETCH_QUEUE);
+        let worker_shared = shared.clone();
+        let worker = std::thread::Builder::new()
+            .name("tvq-prefetch".to_string())
+            .spawn(move || prefetch_loop(worker_shared, rx))
+            .context("spawning prefetch worker")?;
+        Ok(RemoteStore {
+            shared,
+            conn: Mutex::new(Some(conn)),
+            prefetch_tx: Some(tx),
+            worker: Some(worker),
+        })
+    }
+
+    /// `(prefetched, dropped)` counters of the background warmer.
+    pub fn prefetch_stats(&self) -> (u64, u64) {
+        (
+            self.shared.prefetched.load(Ordering::Relaxed),
+            self.shared.prefetch_dropped.load(Ordering::Relaxed),
+        )
+    }
+
+    fn fetch_uncached(&self, chunk: &ChunkAddr, out: &mut Vec<u8>) -> Result<()> {
+        let mut guard = self.conn.lock().unwrap();
+        fetch_on(&self.shared.addr, &mut guard, chunk, out)
+    }
+}
+
+/// Fetch through an optional persistent connection, reconnecting and
+/// retrying exactly once on transport errors.  Server-reported errors
+/// are final (the server already looked at its disk).
+fn fetch_on(
+    addr: &str,
+    slot: &mut Option<FetchConn>,
+    chunk: &ChunkAddr,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    for attempt in 0..2 {
+        if slot.is_none() {
+            *slot = Some(FetchConn::connect(addr)?);
+        }
+        match slot.as_mut().expect("just ensured").request(chunk, out) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                let transport = e.downcast_ref::<std::io::Error>().is_some();
+                if transport {
+                    *slot = None;
+                    if attempt == 0 {
+                        continue;
+                    }
+                }
+                return Err(e);
+            }
+        }
+    }
+    unreachable!("loop returns on every path")
+}
+
+fn prefetch_loop(shared: Arc<RemoteShared>, rx: Receiver<(String, ChunkAddr)>) {
+    let mut conn: Option<FetchConn> = None;
+    let mut buf = Vec::new();
+    while let Ok((_name, chunk)) = rx.recv() {
+        if shared.cache.lock().unwrap().contains(chunk.hash) {
+            continue;
+        }
+        match fetch_on(&shared.addr, &mut conn, &chunk, &mut buf) {
+            Ok(()) => {
+                // Verify before caching: a corrupt prefetched chunk must
+                // not turn into a poisoned cache hit.
+                if buf.len() as u64 == chunk.length
+                    && crc32(&buf) == chunk.crc
+                    && fnv64(&buf) == chunk.hash
+                {
+                    shared.cache.lock().unwrap().insert(chunk.hash, buf.clone());
+                    shared.prefetched.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    shared.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(_) => {
+                shared.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl SectionStore for RemoteStore {
+    fn tier(&self) -> u8 {
+        1
+    }
+
+    fn fetch<'a>(
+        &'a self,
+        _name: &str,
+        chunk: &ChunkAddr,
+        scratch: &'a mut Vec<u8>,
+    ) -> Result<&'a [u8]> {
+        {
+            let mut cache = self.shared.cache.lock().unwrap();
+            if let Some(bytes) = cache.get(chunk.hash) {
+                scratch.clear();
+                scratch.extend_from_slice(bytes);
+                drop(cache);
+                self.shared.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(&scratch[..]);
+            }
+        }
+        self.shared.misses.fetch_add(1, Ordering::Relaxed);
+        self.fetch_uncached(chunk, scratch)?;
+        // Cache whatever arrived; the registry's verification layer runs
+        // next either way, and a bad insert fails identically on re-read.
+        self.shared
+            .cache
+            .lock()
+            .unwrap()
+            .insert(chunk.hash, scratch.clone());
+        Ok(&scratch[..])
+    }
+
+    fn prefetch(&self, chunks: Vec<(String, ChunkAddr)>) {
+        let Some(tx) = &self.prefetch_tx else { return };
+        for item in chunks {
+            match tx.try_send(item) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                    self.shared.prefetch_dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        (
+            self.shared.hits.load(Ordering::Relaxed),
+            self.shared.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Drop for RemoteStore {
+    fn drop(&mut self) {
+        // Close the queue, then join the worker so no thread outlives
+        // the store (its connection dies with it).
+        drop(self.prefetch_tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A sharded registry: `MANIFEST.qtvm` + chunks through a tier store.
+/// The serving twin of [`Registry`](super::Registry) for fleet-scale zoos — same planned
+/// accessors, same verification, same bit-exact decode (shared via
+/// [`PlannedSectionSource`]), but the index pages lazily and the bytes
+/// can live across shard files or across the network.
+pub struct ShardedRegistry {
+    manifest_path: PathBuf,
+    manifest: Manifest,
+    store: Arc<dyn SectionStore>,
+    /// Lazily loaded, CRC-verified index pages.
+    pages: Mutex<HashMap<usize, Arc<Vec<ManifestRow>>>>,
+    planned_base_cache: OnceLock<Vec<Option<Vec<f32>>>>,
+    /// Per-task section-read counters driving hot-task prefetch.
+    task_reads: Vec<AtomicU32>,
+    opts: OpenOptions,
+}
+
+impl ShardedRegistry {
+    /// Open over tier 0 (local shard files next to the manifest) with
+    /// default [`OpenOptions`].
+    pub fn open<P: AsRef<Path>>(manifest_path: P) -> Result<ShardedRegistry> {
+        Self::open_with(manifest_path, OpenOptions::default())
+    }
+
+    /// Open over tier 0 with explicit options ([`IoMode`] selects how
+    /// shard files are read; [`Validation::Deep`] verifies every chunk;
+    /// `paged_index(false)` eagerly loads + CRC-verifies all index pages).
+    pub fn open_with<P: AsRef<Path>>(
+        manifest_path: P,
+        opts: OpenOptions,
+    ) -> Result<ShardedRegistry> {
+        let manifest_path = manifest_path.as_ref();
+        let manifest = Manifest::read(manifest_path)?;
+        let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+        let store = Arc::new(LocalShardStore::open(dir, manifest.shards(), opts.io_mode()));
+        Self::open_with_store(manifest_path, manifest, store, opts)
+    }
+
+    /// Open over tier 1: the (small) manifest is read locally, chunks
+    /// come from a `tvq registry fetch-serve` node at `addr`, cached
+    /// locally under a `cache_bytes` LRU cap.
+    pub fn open_remote<P: AsRef<Path>>(
+        manifest_path: P,
+        addr: &str,
+        cache_bytes: usize,
+        opts: OpenOptions,
+    ) -> Result<ShardedRegistry> {
+        let manifest_path = manifest_path.as_ref();
+        let manifest = Manifest::read(manifest_path)?;
+        let store = Arc::new(RemoteStore::connect(addr, cache_bytes)?);
+        Self::open_with_store(manifest_path, manifest, store, opts)
+    }
+
+    /// Open over an explicit store (the general constructor).
+    pub fn open_with_store(
+        manifest_path: &Path,
+        manifest: Manifest,
+        store: Arc<dyn SectionStore>,
+        opts: OpenOptions,
+    ) -> Result<ShardedRegistry> {
+        let n_tasks = manifest.plan().n_tasks();
+        let reg = ShardedRegistry {
+            manifest_path: manifest_path.to_path_buf(),
+            manifest,
+            store,
+            pages: Mutex::new(HashMap::new()),
+            planned_base_cache: OnceLock::new(),
+            task_reads: (0..n_tasks).map(|_| AtomicU32::new(0)).collect(),
+            opts,
+        };
+        if !opts.wants_paged_index() || opts.validation_depth() == Validation::Deep {
+            for p in 0..reg.manifest.pages().len() {
+                reg.page(p)?;
+            }
+        }
+        if opts.validation_depth() == Validation::Deep {
+            reg.validate_deep()?;
+        }
+        Ok(reg)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn manifest_path(&self) -> &Path {
+        &self.manifest_path
+    }
+
+    pub fn plan(&self) -> &PackPlan {
+        self.manifest.plan()
+    }
+
+    pub fn scheme(&self) -> RegistryScheme {
+        self.manifest.scheme()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.manifest.plan().n_tasks()
+    }
+
+    pub fn task_names(&self) -> Vec<&str> {
+        self.manifest.plan().task_names.iter().map(|s| s.as_str()).collect()
+    }
+
+    pub fn task_index(&self, name: &str) -> Option<usize> {
+        self.manifest.plan().task_names.iter().position(|n| n == name)
+    }
+
+    /// 0 for local shard files, 1 for remote fetch.
+    pub fn tier(&self) -> u8 {
+        self.store.tier()
+    }
+
+    /// `(hits, misses)` of the store's chunk cache (all zeros on tier 0).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.store.cache_stats()
+    }
+
+    /// Owned heap bytes pinned for serving: manifest header + loaded
+    /// index pages + decoded base caches (mirrors
+    /// [`Registry::resident_overhead_bytes`](super::Registry::resident_overhead_bytes)).
+    pub fn resident_overhead_bytes(&self) -> usize {
+        let mut bytes = self.manifest.header_bytes() as usize;
+        for rows in self.pages.lock().unwrap().values() {
+            bytes += rows
+                .iter()
+                .map(|r| r.name.len() + std::mem::size_of::<ManifestRow>())
+                .sum::<usize>();
+        }
+        if let Some(hats) = self.planned_base_cache.get() {
+            bytes += hats
+                .iter()
+                .flatten()
+                .map(|v| v.len() * std::mem::size_of::<f32>())
+                .sum::<usize>();
+        }
+        bytes
+    }
+
+    /// File-backed bytes served through shard mappings (tier 0 mmap).
+    pub fn mapped_bytes(&self) -> u64 {
+        self.store.mapped_bytes()
+    }
+
+    fn page(&self, p: usize) -> Result<Arc<Vec<ManifestRow>>> {
+        if let Some(rows) = self.pages.lock().unwrap().get(&p) {
+            return Ok(rows.clone());
+        }
+        let rows = Arc::new(self.manifest.read_page(&self.manifest_path, p)?);
+        Ok(self
+            .pages
+            .lock()
+            .unwrap()
+            .entry(p)
+            .or_insert_with(|| rows.clone())
+            .clone())
+    }
+
+    fn lookup(&self, name: &str) -> Result<ManifestRow> {
+        let missing = || {
+            anyhow::anyhow!(
+                "sharded registry {} has no section {name:?}",
+                self.manifest_path.display()
+            )
+        };
+        let p = self.manifest.page_for(name).ok_or_else(missing)?;
+        let rows = self.page(p)?;
+        match rows.binary_search_by(|r| r.name.as_str().cmp(name)) {
+            Ok(i) => Ok(rows[i].clone()),
+            Err(_) => Err(missing()),
+        }
+    }
+
+    /// The tier-independent verification wrapper: every chunk read —
+    /// local or remote, demand or validation — passes length, CRC-32 and
+    /// FNV-64 checks against the manifest row before a byte is decoded,
+    /// and feeds the same section-read histograms as the monolithic
+    /// registry.
+    fn chunk_bytes<'a>(
+        &'a self,
+        row: &ManifestRow,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<&'a [u8]> {
+        let _span = obs::span(obs::Category::Registry, "section_read")
+            .with_arg("bytes", row.chunk.length);
+        let t0 = std::time::Instant::now();
+        let bytes = self.store.fetch(&row.name, &row.chunk, scratch.buf_mut())?;
+        if bytes.len() as u64 != row.chunk.length {
+            bail!(
+                "QTVC section {:?} fetched {} bytes but the manifest records {} \
+                 (corrupt fetch)",
+                row.name,
+                bytes.len(),
+                row.chunk.length
+            );
+        }
+        if crc32(bytes) != row.chunk.crc {
+            bail!(
+                "QTVC section {:?} CRC mismatch in {} (corrupt registry)",
+                row.name,
+                self.manifest_path.display()
+            );
+        }
+        if fnv64(bytes) != row.chunk.hash {
+            bail!(
+                "QTVC section {:?} content-hash mismatch in {} (chunk aliasing corruption)",
+                row.name,
+                self.manifest_path.display()
+            );
+        }
+        obs::stats().section_read_ns.record_ns(t0.elapsed());
+        obs::stats().section_read_bytes.record(row.chunk.length);
+        Ok(bytes)
+    }
+
+    /// Borrowed, verified view of task `t`'s payload for tensor `l` —
+    /// same contract (and same spec cross-check) as
+    /// [`Registry::planned_task_view`](super::Registry::planned_task_view).
+    pub fn planned_task_view<'a>(
+        &'a self,
+        t: usize,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<PayloadView<'a>> {
+        let plan = self.manifest.plan();
+        if t >= plan.n_tasks() {
+            bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
+        }
+        if l >= plan.n_tensors() {
+            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
+        }
+        let name = task_section_name(&plan.task_names[t], &plan.tensors[l].name);
+        let row = self.lookup(&name)?;
+        let view = PayloadView::decode(row.kind, self.chunk_bytes(&row, scratch)?)?;
+        check_view_against_spec(
+            &view,
+            plan.section_spec(SectionRole::Task { task: t, tensor: l }),
+            &row.name,
+        )?;
+        self.note_task_read(t);
+        Ok(view)
+    }
+
+    /// Borrowed view of the shared base section for tensor `l` — same
+    /// contract as [`Registry::planned_base_view`](super::Registry::planned_base_view).
+    pub fn planned_base_view<'a>(
+        &'a self,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<GroupQuantizedView<'a>> {
+        let plan = self.manifest.plan();
+        if l >= plan.n_tensors() {
+            bail!("tensor index {l} out of range ({} tensors)", plan.n_tensors());
+        }
+        if !matches!(plan.assignments[l].arm, Arm::Rtvq { .. }) {
+            bail!(
+                "tensor {:?} has no RTVQ arm — no shared base section",
+                plan.tensors[l].name
+            );
+        }
+        let name = base_section_name(&plan.tensors[l].name);
+        let row = self.lookup(&name)?;
+        let view = PayloadView::decode(row.kind, self.chunk_bytes(&row, scratch)?)?;
+        let spec = plan.section_spec(SectionRole::Base { tensor: l });
+        check_view_against_spec(&view, spec, &row.name)?;
+        match view {
+            PayloadView::Group(g) => Ok(g),
+            other => bail!("base section decoded to a non-group payload: {other:?}"),
+        }
+    }
+
+    /// Reconstruct task `t`'s full-precision task vector — the sharded
+    /// twin of [`Registry::load_task_vector`](super::Registry::load_task_vector),
+    /// running the identical shared decode loop.
+    pub fn load_task_vector(&self, t: usize, ctx: &ExecCtx) -> Result<Checkpoint> {
+        let _op = ctx.op_span(obs::Category::Registry);
+        planned_task_vector(self, t, ctx.pool())
+    }
+
+    /// Fetch-and-verify every chunk plus a full row-vs-plan binding
+    /// check — the publish gate for sharded generations.
+    fn validate_deep(&self) -> Result<()> {
+        let plan = self.manifest.plan();
+        let mut scratch = SectionScratch::default();
+        for (name, role) in plan.expected_sections() {
+            let row = self.lookup(&name).with_context(|| {
+                format!("deep-validating manifest {}", self.manifest_path.display())
+            })?;
+            let want_kind = plan.expected_section_kind(role);
+            if row.kind != want_kind {
+                bail!(
+                    "sharded registry {}: section {name:?} has kind {:?} but the \
+                     plan requires {want_kind:?}",
+                    self.manifest_path.display(),
+                    row.kind
+                );
+            }
+            self.chunk_bytes(&row, &mut scratch).with_context(|| {
+                format!("deep-validating manifest {}", self.manifest_path.display())
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Count a section read against task `t`; on the read that makes the
+    /// task *hot*, queue its chunks for background prefetch (sized-
+    /// filtered by the process-wide section-read p90).
+    fn note_task_read(&self, t: usize) {
+        let prev = self.task_reads[t].fetch_add(1, Ordering::Relaxed);
+        if prev + 1 != HOT_TASK_READS {
+            return;
+        }
+        let plan = self.manifest.plan();
+        let hist = &obs::stats().section_read_bytes;
+        let size_cap = if hist.count() == 0 {
+            u64::MAX
+        } else {
+            hist.quantile(0.9).saturating_mul(PREFETCH_P90_FACTOR).max(1)
+        };
+        let mut batch = Vec::new();
+        for l in 0..plan.n_tensors() {
+            let name = task_section_name(&plan.task_names[t], &plan.tensors[l].name);
+            if let Ok(row) = self.lookup(&name) {
+                if row.chunk.length <= size_cap {
+                    batch.push((row.name, row.chunk));
+                }
+            }
+        }
+        if !batch.is_empty() {
+            self.store.prefetch(batch);
+        }
+    }
+}
+
+impl PlannedSectionSource for ShardedRegistry {
+    fn pack_plan(&self) -> Result<&PackPlan> {
+        Ok(self.manifest.plan())
+    }
+
+    fn planned_task_view<'a>(
+        &'a self,
+        t: usize,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<PayloadView<'a>> {
+        ShardedRegistry::planned_task_view(self, t, l, scratch)
+    }
+
+    fn planned_base_view<'a>(
+        &'a self,
+        l: usize,
+        scratch: &'a mut SectionScratch,
+    ) -> Result<GroupQuantizedView<'a>> {
+        ShardedRegistry::planned_base_view(self, l, scratch)
+    }
+
+    fn planned_base_hats(&self) -> Result<&[Option<Vec<f32>>]> {
+        if let Some(h) = self.planned_base_cache.get() {
+            return Ok(h);
+        }
+        let hats = decode_planned_base_hats(self)?;
+        Ok(self.planned_base_cache.get_or_init(|| hats))
+    }
+
+    fn source_path(&self) -> &Path {
+        &self.manifest_path
+    }
+}
+
+/// [`TaskVectorSource`](super::TaskVectorSource) over a sharded registry
+/// — plugs a sharded zoo into `merge_from_source`, [`crate::coordinator::ModelCache`]
+/// and the dynamic-merge router exactly like a monolithic one.
+pub struct ShardedSource {
+    reg: Arc<ShardedRegistry>,
+}
+
+impl ShardedSource {
+    pub fn new(reg: Arc<ShardedRegistry>) -> ShardedSource {
+        ShardedSource { reg }
+    }
+
+    pub fn registry(&self) -> &ShardedRegistry {
+        &self.reg
+    }
+}
+
+impl super::TaskVectorSource for ShardedSource {
+    fn n_tasks(&self) -> usize {
+        self.reg.n_tasks()
+    }
+
+    fn task_name(&self, t: usize) -> String {
+        self.reg
+            .plan()
+            .task_names
+            .get(t)
+            .cloned()
+            .unwrap_or_else(|| format!("task{t:02}"))
+    }
+
+    fn task_vector(&self, t: usize) -> Result<Checkpoint> {
+        self.reg.load_task_vector(t, &ExecCtx::sequential())
+    }
+
+    fn task_vector_with_pool(&self, t: usize, pool: &Pool) -> Result<Checkpoint> {
+        self.reg.load_task_vector(t, &ExecCtx::with_pool(pool))
+    }
+
+    fn scheme_label(&self) -> String {
+        self.reg.scheme().label()
+    }
+
+    /// Qualified by manifest path *and* tier: a local and a remote view
+    /// of the same zoo must not share cached variants blindly.
+    fn source_id(&self) -> String {
+        format!(
+            "{}:{}#tier{}",
+            self.reg.scheme().label(),
+            self.reg.manifest_path().display(),
+            self.reg.tier()
+        )
+    }
+
+    fn resident_overhead_bytes(&self) -> usize {
+        self.reg.resident_overhead_bytes()
+    }
+
+    fn mapped_bytes(&self) -> u64 {
+        self.reg.mapped_bytes()
+    }
+}

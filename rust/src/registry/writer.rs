@@ -25,6 +25,7 @@ use crate::quant::{
     BinarySwitch, GroupQuantized, QuantScheme, QuantizedCheckpoint, Rtvq, SparseGroupQuantized,
 };
 use crate::util::crc32;
+use crate::util::exec::ExecCtx;
 use crate::util::pool::Pool;
 
 /// Exact byte accounting returned by a registry write.
@@ -358,7 +359,7 @@ fn uniform_builder(
             }
         }
         QuantScheme::Rtvq(bb, bo) => {
-            let r = Rtvq::quantize_with_pool(pre, fts, bb, bo, true, pool)?;
+            let r = Rtvq::quantize(pre, fts, bb, bo, true, &ExecCtx::with_pool(pool))?;
             b.set_rtvq_base(&r.base)?;
             for (t, off) in r.offsets.iter().enumerate() {
                 b.add_task(&format!("task{t:02}"), off)?;

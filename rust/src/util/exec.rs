@@ -1,0 +1,122 @@
+//! [`ExecCtx`] — the single execution-context parameter behind every
+//! merge/decode/quantize entry point.
+//!
+//! PR 5 grew `*_with_pool` twins next to each parallelizable operation
+//! (`fused_merge` / `fused_merge_with_pool`, `load_task_vector` /
+//! `load_task_vector_with_pool`, ...).  Two entry points per operation
+//! scales badly: every new knob (tracing, priorities, quotas) would
+//! double the surface again.  `ExecCtx` collapses the pair: one public
+//! entry point per operation takes `&ExecCtx`, and the context carries
+//! the pool choice plus an optional trace label.  The old twins survive
+//! only as thin `#[deprecated]` shims.
+//!
+//! The determinism contract is unchanged: every operation taking an
+//! `ExecCtx` produces bit-identical floats at every pool width, so the
+//! context selects *where the cycles run*, never *what comes out*.
+//!
+//! ```no_run
+//! use tvq::util::exec::ExecCtx;
+//! use tvq::util::pool::Pool;
+//!
+//! let ctx = ExecCtx::default();          // shared global pool
+//! let seq = ExecCtx::sequential();       // single-threaded reference path
+//! let pool = Pool::new(4);
+//! let four = ExecCtx::with_pool(&pool);  // explicit width
+//! let traced = ExecCtx::default().traced("cache_merge_build");
+//! # let _ = (ctx, seq, four, traced);
+//! ```
+
+use crate::obs;
+use crate::util::pool::Pool;
+
+/// Execution context for parallelizable registry / merge / quantize
+/// operations: which [`Pool`] runs the work, and an optional span label
+/// under which the operation reports itself to the tracing layer.
+#[derive(Clone, Copy)]
+pub struct ExecCtx<'p> {
+    pool: &'p Pool,
+    trace: Option<&'static str>,
+}
+
+impl Default for ExecCtx<'static> {
+    /// The shared global pool (width from `--threads` / `TVQ_THREADS`),
+    /// no extra tracing — what the serve path wants.
+    fn default() -> Self {
+        ExecCtx { pool: Pool::global(), trace: None }
+    }
+}
+
+impl<'p> ExecCtx<'p> {
+    /// Context over an explicit pool (thread-scaling benches and the
+    /// determinism suites pin widths through this).
+    pub fn with_pool(pool: &'p Pool) -> ExecCtx<'p> {
+        ExecCtx { pool, trace: None }
+    }
+
+    /// The single-threaded reference context — bit-exact twin of every
+    /// parallel width, and the default for small one-shot loads where a
+    /// worker spawn costs more than the decode.
+    pub fn sequential() -> ExecCtx<'static> {
+        static SEQ: std::sync::OnceLock<Pool> = std::sync::OnceLock::new();
+        ExecCtx { pool: SEQ.get_or_init(Pool::sequential), trace: None }
+    }
+
+    /// Attach a trace label: the operation entered with this context
+    /// opens one [`obs::span`] named `label` for its whole duration, so
+    /// call sites (cache fill, routed patch, publish validation) show up
+    /// attributed in trace exports.  Without a label no extra span is
+    /// emitted — identical overhead to the pre-`ExecCtx` paths.
+    pub fn traced(mut self, label: &'static str) -> Self {
+        self.trace = Some(label);
+        self
+    }
+
+    /// The pool operations fan work out on.
+    pub fn pool(&self) -> &'p Pool {
+        self.pool
+    }
+
+    /// The trace label, if one was attached via [`ExecCtx::traced`].
+    pub fn trace_label(&self) -> Option<&'static str> {
+        self.trace
+    }
+
+    /// The operation-level span for this context, if tracing was
+    /// requested.  Held by entry points for their full duration.
+    pub(crate) fn op_span(&self, cat: obs::Category) -> Option<obs::SpanGuard> {
+        self.trace.map(|label| obs::span(cat, label))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contexts_report_their_pools() {
+        assert_eq!(ExecCtx::default().pool().threads(), Pool::global().threads());
+        assert!(ExecCtx::sequential().pool().is_sequential());
+        let pool = Pool::new(3);
+        assert_eq!(ExecCtx::with_pool(&pool).pool().threads(), 3);
+    }
+
+    #[test]
+    fn sequential_context_is_shared_and_stable() {
+        let a = ExecCtx::sequential();
+        let b = ExecCtx::sequential();
+        assert!(std::ptr::eq(a.pool(), b.pool()), "one static sequential pool");
+    }
+
+    #[test]
+    fn trace_label_round_trips() {
+        let ctx = ExecCtx::default();
+        assert!(ctx.trace_label().is_none());
+        assert!(ctx.op_span(crate::obs::Category::Merge).is_none());
+        let t = ctx.traced("unit_test_op");
+        assert_eq!(t.trace_label(), Some("unit_test_op"));
+        // With a label the span guard materializes (a no-op unless the
+        // process-wide tracer is enabled — either way it must not panic).
+        let g = t.op_span(crate::obs::Category::Merge);
+        assert!(g.is_some());
+    }
+}

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod benchcmp;
 pub mod cli;
+pub mod exec;
 pub mod json;
 pub mod pool;
 pub mod prop;

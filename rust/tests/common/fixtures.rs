@@ -11,10 +11,11 @@ use std::path::{Path, PathBuf};
 use tvq::checkpoint::Checkpoint;
 use tvq::planner::{probe, solve, write_planned_registry, PackPlan, PlannerConfig};
 use tvq::quant::QuantScheme;
-use tvq::registry::{build_registry, IoMode, Registry};
+use tvq::registry::{build_registry, shard_registry, IoMode, Registry, ShardOptions, ShardSummary};
 use tvq::runtime::Runtime;
 use tvq::tensor::Tensor;
 use tvq::util::crc32;
+use tvq::util::exec::ExecCtx;
 use tvq::util::rng::Rng;
 
 /// Thread counts per the PR-5 determinism contract: 1 is the sequential
@@ -157,7 +158,8 @@ pub fn pack_tvq4(dir: &Path, name: &str, n_tasks: usize, seed: u64) -> (PathBuf,
     let path = dir.join(name);
     build_registry(&pre, &fts, QuantScheme::Tvq(4), &path).unwrap();
     let reg = Registry::open(&path).unwrap();
-    let baselines = (0..n_tasks).map(|t| reg.load_task_vector(t).unwrap()).collect();
+    let ctx = ExecCtx::sequential();
+    let baselines = (0..n_tasks).map(|t| reg.load_task_vector(t, &ctx).unwrap()).collect();
     (path, baselines)
 }
 
@@ -177,6 +179,30 @@ pub fn pack_planned(
     let path = dir.join(name);
     write_planned_registry(&pre, &fts, &plan, &path).unwrap();
     (path, pre, fts, plan)
+}
+
+/// Shard-zoo fixture (ISSUE 9 acceptance): plan-pack a zoo in which
+/// task 1 is a byte-for-byte clone of task 0 — identical deltas
+/// quantize to identical section bodies, so content-addressed chunk
+/// dedup must fire when the file is split into shards — then shard it
+/// into `dir`.  Returns the monolithic path, the manifest path, the
+/// zoo, and the shard summary.
+pub fn shard_zoo(
+    dir: &Path,
+    n_tasks: usize,
+    seed: u64,
+    opts: &ShardOptions,
+) -> (PathBuf, PathBuf, Checkpoint, Vec<Checkpoint>, ShardSummary) {
+    assert!(n_tasks >= 2, "the shard zoo clones task 0 into task 1");
+    let (pre, mut fts) = tvq::exp::planner::synthetic_planner_zoo(n_tasks, seed);
+    fts[1] = fts[0].clone();
+    let profile = probe(&pre, &fts, &PlannerConfig::default()).unwrap();
+    let plan = solve(&profile, u64::MAX).unwrap();
+    let path = dir.join("zoo.qtvc");
+    write_planned_registry(&pre, &fts, &plan, &path).unwrap();
+    let src = Registry::open(&path).unwrap();
+    let summary = shard_registry(&src, dir, opts).unwrap();
+    (path, summary.manifest_path.clone(), pre, fts, summary)
 }
 
 /// PJRT skip helper: integration suites skip — not fail — when the
@@ -274,7 +300,7 @@ pub fn registry_sse(reg: &Registry, pre: &Checkpoint, fts: &[Checkpoint]) -> f64
     let mut sse = 0.0;
     for (t, ft) in fts.iter().enumerate() {
         let tau = ft.sub(pre).unwrap();
-        let d = tau.l2_dist(&reg.load_task_vector(t).unwrap()).unwrap();
+        let d = tau.l2_dist(&reg.load_task_vector(t, &ExecCtx::sequential()).unwrap()).unwrap();
         sse += d * d;
     }
     sse

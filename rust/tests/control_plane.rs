@@ -26,6 +26,7 @@ use common::fixtures::{smoke, THREADS};
 use tvq::checkpoint::Checkpoint;
 use tvq::coordinator::control::{ControlError, ControlPlane, VariantConfig, VariantState};
 use tvq::coordinator::ModelCache;
+use tvq::util::exec::ExecCtx;
 use tvq::util::pool::Pool;
 
 const N_TASKS: usize = 3;
@@ -52,7 +53,7 @@ fn decode_with_width(
         .submit(move |generation| {
             generation
                 .registry()
-                .load_task_vector_with_pool(t, &Pool::new(threads))
+                .load_task_vector(t, &ExecCtx::with_pool(&Pool::new(threads)))
                 .map_err(|e| ControlError::JobFailed { error: format!("{e:#}") })
         })
         .unwrap();

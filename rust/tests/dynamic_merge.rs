@@ -2,7 +2,7 @@
 //! serving path — router → [`MergeSpec`] → `ModelCache` delta patch —
 //! must be a pure latency optimization, never a numerics change.
 //!
-//! * The canonical routed merge ([`merge_spec_with_pool`]) is
+//! * The canonical routed merge ([`merge_spec`]) is
 //!   bit-identical across thread counts 1/2/8 and across `Mmap`/`Pread`
 //!   section reads, over a **kind-5 binary-switch** (v5) registry — the
 //!   newest wire format serves through the routed path from day one.
@@ -19,10 +19,11 @@ mod common;
 use std::sync::Arc;
 
 use common::fixtures::{bits_equal, onebit_cfg, pack_planned, THREADS};
-use tvq::coordinator::router::merge_spec_with_pool;
+use tvq::coordinator::router::merge_spec;
 use tvq::coordinator::{Metrics, ModelCache, Router};
 use tvq::merge::MergedModel;
-use tvq::registry::{IoMode, PackedRegistrySource, Registry, TaskVectorSource};
+use tvq::registry::{IoMode, OpenOptions, PackedRegistrySource, Registry, TaskVectorSource};
+use tvq::util::exec::ExecCtx;
 use tvq::util::pool::Pool;
 
 const N_TASKS: usize = 4;
@@ -60,16 +61,17 @@ fn routed_merge_is_bit_exact_across_threads_and_io_modes() {
     assert_eq!(reference.registry().version(), 5, "onebit-only plan must write v5");
     let seq = Pool::sequential();
     for spec in &specs {
-        let want = match merge_spec_with_pool(spec, &pre, &reference, &seq).unwrap() {
+        let want = match merge_spec(spec, &pre, &reference, &ExecCtx::with_pool(&seq)).unwrap() {
             MergedModel::Shared(ck) => ck,
             other => panic!("routed merges are shared, got {} variants", other.n_variants()),
         };
         for mode in [IoMode::Mmap, IoMode::Pread] {
-            let source =
-                PackedRegistrySource::from_registry(Registry::open_with_io(&path, mode).unwrap());
+            let source = PackedRegistrySource::from_registry(
+                Registry::open_with(&path, OpenOptions::new().io(mode)).unwrap(),
+            );
             for threads in THREADS {
-                let got =
-                    merge_spec_with_pool(spec, &pre, &source, &Pool::new(threads)).unwrap();
+                let ctx = ExecCtx::with_pool(&Pool::new(threads));
+                let got = merge_spec(spec, &pre, &source, &ctx).unwrap();
                 assert!(
                     bits_equal(got.for_task(0), &want),
                     "routed merge of {:?} diverged at {mode:?} threads={threads}",
@@ -213,7 +215,7 @@ fn disjoint_subsets_full_build_and_lambda_prefix_mismatch_never_patches() {
     assert_eq!(s.delta_patches, 0, "nothing here is a valid patch");
 
     // The shifted variant still matches its own canonical merge.
-    let want = merge_spec_with_pool(&shifted, &pre, &source, &Pool::sequential()).unwrap();
+    let want = merge_spec(&shifted, &pre, &source, &ExecCtx::sequential()).unwrap();
     let got = cache.get_or_merge_routed(&shifted, &pre, &source).unwrap();
     assert!(bits_equal(got.for_task(0), want.for_task(0)));
     std::fs::remove_dir_all(&dir).ok();

@@ -25,6 +25,7 @@ use tvq::exp::planner::synthetic_planner_zoo;
 use tvq::merge::TaskArithmetic;
 use tvq::registry::{PackedRegistrySource, Registry};
 use tvq::tensor::Tensor;
+use tvq::util::exec::ExecCtx;
 use tvq::util::json::Json;
 
 mod common;
@@ -113,7 +114,7 @@ fn traced_run_exports_chrome_json_covering_four_categories() {
 
     // Registry spans: open + section reads.
     let reg = Registry::open(&path).unwrap();
-    reg.load_task_vector(0).unwrap();
+    reg.load_task_vector(0, &ExecCtx::sequential()).unwrap();
 
     // Merge + cache spans: a fused merge built through the model cache.
     let (pre, _fts) = synthetic_planner_zoo(3, 11);

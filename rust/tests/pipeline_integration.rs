@@ -15,6 +15,7 @@ use tvq::merge::{standard_methods, Merger, TaskArithmetic};
 use tvq::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
 use tvq::runtime::Runtime;
 use tvq::train::{self, TrainConfig};
+use tvq::util::exec::ExecCtx;
 
 const N_TASKS: usize = 3;
 
@@ -106,7 +107,7 @@ fn rtvq_error_below_tvq2_at_similar_budget() {
         let q = QuantizedCheckpoint::quantize(&tau, 2).unwrap();
         tvq2_err += q.quant_error(&tau).unwrap();
     }
-    let r = Rtvq::quantize(pre, fts, 3, 2, true).unwrap();
+    let r = Rtvq::quantize(pre, fts, 3, 2, true, &ExecCtx::sequential()).unwrap();
     let rtvq_err = r.total_quant_error(pre, fts).unwrap();
     assert!(
         rtvq_err < tvq2_err,
@@ -118,11 +119,11 @@ fn rtvq_error_below_tvq2_at_similar_budget() {
 fn error_correction_reduces_rtvq_error() {
     let Some((pre, fts, _)) = mini_zoo() else { return };
     for (bb, bo) in [(2u8, 2u8), (3, 2), (4, 3)] {
-        let with_ec = Rtvq::quantize(pre, fts, bb, bo, true)
+        let with_ec = Rtvq::quantize(pre, fts, bb, bo, true, &ExecCtx::sequential())
             .unwrap()
             .total_quant_error(pre, fts)
             .unwrap();
-        let without = Rtvq::quantize(pre, fts, bb, bo, false)
+        let without = Rtvq::quantize(pre, fts, bb, bo, false, &ExecCtx::sequential())
             .unwrap()
             .total_quant_error(pre, fts)
             .unwrap();

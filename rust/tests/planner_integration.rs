@@ -33,6 +33,7 @@ use tvq::registry::{
     build_registry, merge_from_source, DiskAccounting, PackedRegistrySource, Registry,
     RegistryBuilder, TaskVectorSource,
 };
+use tvq::util::exec::ExecCtx;
 
 const N_TASKS: usize = 8;
 
@@ -152,10 +153,10 @@ fn group_sections_roundtrip_through_fused_merge_and_model_cache() {
     // Fused dequant-merge over group sections == the generic lazy path.
     let ta = TaskArithmetic::default();
     let lams = vec![ta.lambda; N_TASKS];
-    let fused = fused_merge(&reg, &pre, &lams, None).unwrap();
+    let fused = fused_merge(&reg, &pre, &lams, None, &ExecCtx::default()).unwrap();
     let mut want = pre.clone();
     for t in 0..N_TASKS {
-        want.axpy(ta.lambda, &reg.load_task_vector(t).unwrap()).unwrap();
+        want.axpy(ta.lambda, &reg.load_task_vector(t, &ExecCtx::sequential()).unwrap()).unwrap();
     }
     let dist = fused.l2_dist(&want).unwrap();
     assert!(dist < 1e-3, "fused merge diverged from lazy path by {dist}");
@@ -167,7 +168,7 @@ fn group_sections_roundtrip_through_fused_merge_and_model_cache() {
     assert!(source.source_id().starts_with("PLAN-MIXED:"));
     let cache = ModelCache::new();
     let served = cache.get_or_build_merged(&ta, &pre, source.as_ref()).unwrap();
-    let direct = merge_from_source(&ta, &pre, source.as_ref(), None).unwrap();
+    let direct = merge_from_source(&ta, &pre, source.as_ref(), None, &ExecCtx::default()).unwrap();
     match (served.as_ref(), &direct) {
         (MergedModel::Shared(a), MergedModel::Shared(b)) => {
             assert_eq!(a, b, "cached variant differs from direct merge")
@@ -374,8 +375,11 @@ fn corrupted_planned_registries_fail_closed() {
     std::fs::write(&p_bad2, &bad2).unwrap();
     let reg2 = Registry::open(&p_bad2).unwrap();
     let last_t = reg2.n_tasks() - 1;
-    assert!(reg2.load_task_vector(last_t).is_err());
-    assert!(reg2.load_task_vector(0).is_ok(), "untouched sections must still serve");
+    assert!(reg2.load_task_vector(last_t, &ExecCtx::sequential()).is_err());
+    assert!(
+        reg2.load_task_vector(0, &ExecCtx::sequential()).is_ok(),
+        "untouched sections must still serve"
+    );
 
     // Truncation inside the index is caught at open.
     let p_trunc = dir.join("trunc.qtvc");

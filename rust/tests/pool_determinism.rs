@@ -13,12 +13,14 @@ mod common;
 use common::fixtures::{assert_ckpt_bit_eq, het_cfg as cfg, het_zoo as suite, THREADS};
 use tvq::merge::{MergedModel, TaskArithmetic};
 use tvq::planner::{
-    fused_merge_with_pool, plan_pack_with_pool, probe_with_pool, write_planned_registry_with_pool,
+    fused_merge, plan_pack_with_pool, probe_with_pool, write_planned_registry_with_pool,
 };
 use tvq::quant::QuantScheme;
 use tvq::registry::{
-    build_registry_with_pool, merge_from_source_with_pool, IoMode, PackedRegistrySource, Registry,
+    build_registry_with_pool, merge_from_source, IoMode, OpenOptions, PackedRegistrySource,
+    Registry,
 };
+use tvq::util::exec::ExecCtx;
 use tvq::util::pool::Pool;
 
 fn tmp(name: &str) -> std::path::PathBuf {
@@ -91,16 +93,17 @@ fn fused_merge_is_bit_exact_across_thread_counts_and_io_modes() {
 
     let lams = [0.4f32, 0.1, 0.3, 0.2];
     for mode in [IoMode::Mmap, IoMode::Pread] {
-        let reg = Registry::open_with_io(&path, mode).unwrap();
-        let want = fused_merge_with_pool(&reg, &pre, &lams, None, &seq).unwrap();
+        let reg = Registry::open_with(&path, OpenOptions::new().io(mode)).unwrap();
+        let want = fused_merge(&reg, &pre, &lams, None, &ExecCtx::with_pool(&seq)).unwrap();
         let want_sub =
-            fused_merge_with_pool(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &seq).unwrap();
+            fused_merge(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &ExecCtx::with_pool(&seq)).unwrap();
         for threads in THREADS {
             let pool = Pool::new(threads);
-            let got = fused_merge_with_pool(&reg, &pre, &lams, None, &pool).unwrap();
+            let got = fused_merge(&reg, &pre, &lams, None, &ExecCtx::with_pool(&pool)).unwrap();
             assert_ckpt_bit_eq(&got, &want, &format!("fused merge {mode:?} threads={threads}"));
+            let ctx = ExecCtx::with_pool(&pool);
             let got_sub =
-                fused_merge_with_pool(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &pool).unwrap();
+                fused_merge(&reg, &pre, &[0.4, 0.3], Some(&[0, 2]), &ctx).unwrap();
             assert_ckpt_bit_eq(
                 &got_sub,
                 &want_sub,
@@ -112,10 +115,10 @@ fn fused_merge_is_bit_exact_across_thread_counts_and_io_modes() {
     // Lazy per-task reconstruction rides the same shards.
     let reg = Registry::open(&path).unwrap();
     for t in 0..fts.len() {
-        let want = reg.load_task_vector_with_pool(t, &seq).unwrap();
+        let want = reg.load_task_vector(t, &ExecCtx::with_pool(&seq)).unwrap();
         for threads in THREADS {
             let pool = Pool::new(threads);
-            let got = reg.load_task_vector_with_pool(t, &pool).unwrap();
+            let got = reg.load_task_vector(t, &ExecCtx::with_pool(&pool)).unwrap();
             assert_ckpt_bit_eq(&got, &want, &format!("lazy task {t} threads={threads}"));
         }
     }
@@ -160,10 +163,11 @@ fn packed_source_merge_is_bit_exact_across_thread_counts() {
     // All tasks (across-task fan-out) and a single task (within-task
     // fan-out) both reduce to the sequential floats exactly.
     for tasks in [None, Some(&[2usize][..]), Some(&[0usize, 3][..])] {
-        let want = merge_from_source_with_pool(&ta, &pre, &src, tasks, &seq).unwrap();
+        let want = merge_from_source(&ta, &pre, &src, tasks, &ExecCtx::with_pool(&seq)).unwrap();
         for threads in THREADS {
             let pool = Pool::new(threads);
-            let got = merge_from_source_with_pool(&ta, &pre, &src, tasks, &pool).unwrap();
+            let got =
+                merge_from_source(&ta, &pre, &src, tasks, &ExecCtx::with_pool(&pool)).unwrap();
             match (&got, &want) {
                 (MergedModel::Shared(a), MergedModel::Shared(b)) => assert_ckpt_bit_eq(
                     a,

@@ -9,6 +9,7 @@ use tvq::quant::{
 };
 use tvq::registry::container::{decode_checkpoint_payload, encode_checkpoint_payload};
 use tvq::tensor::Tensor;
+use tvq::util::exec::ExecCtx;
 use tvq::util::prop::{check, gen_vec, Config};
 use tvq::util::rng::Rng;
 
@@ -209,7 +210,8 @@ fn prop_rtvq_reconstruction_identity_eq4() {
             (pre, fts)
         },
         |(pre, fts)| {
-            let r = Rtvq::quantize(pre, fts, 8, 8, true).map_err(|e| e.to_string())?;
+            let r = Rtvq::quantize(pre, fts, 8, 8, true, &ExecCtx::sequential())
+                .map_err(|e| e.to_string())?;
             for (t, ft) in fts.iter().enumerate() {
                 let tau = ft.sub(pre).unwrap();
                 let tau_hat = r.dequantize_task(t).map_err(|e| e.to_string())?;
@@ -261,7 +263,8 @@ fn prop_rtvq_beats_tvq_at_two_bits_eq5() {
                 let q = QuantizedCheckpoint::quantize(&tau, 2).unwrap();
                 tvq2 += q.quant_error(&tau).unwrap();
             }
-            let r = Rtvq::quantize(pre, fts, 3, 2, true).map_err(|e| e.to_string())?;
+            let r = Rtvq::quantize(pre, fts, 3, 2, true, &ExecCtx::sequential())
+                .map_err(|e| e.to_string())?;
             let rtvq = r.total_quant_error(pre, fts).unwrap();
             if rtvq >= tvq2 {
                 return Err(format!("RTVQ {rtvq} >= TVQ2 {tvq2}"));

@@ -18,9 +18,10 @@ use tvq::coordinator::ModelCache;
 use tvq::merge::{MergedModel, Merger, TaskArithmetic};
 use tvq::quant::{QuantScheme, QuantizedCheckpoint, Rtvq};
 use tvq::registry::{
-    build_registry, f32_store_bytes, merge_from_source, DiskAccounting, IoMode,
+    build_registry, f32_store_bytes, merge_from_source, DiskAccounting, IoMode, OpenOptions,
     PackedRegistrySource, Registry, TaskVectorSource,
 };
+use tvq::util::exec::ExecCtx;
 
 const N_TASKS: usize = 8;
 
@@ -109,7 +110,7 @@ fn lazy_loads_are_bit_exact_for_both_schemes() {
             other => panic!("unexpected payload {other:?}"),
         }
         assert_eq!(
-            reg.load_task_vector(t).unwrap(),
+            reg.load_task_vector(t, &ExecCtx::sequential()).unwrap(),
             want.dequantize().unwrap(),
             "task {t}: dequantized vector not bit-exact"
         );
@@ -120,10 +121,10 @@ fn lazy_loads_are_bit_exact_for_both_schemes() {
     build_registry(&pre, &fts, QuantScheme::Rtvq(3, 2), &p_rtvq).unwrap();
     let reg = Registry::open(&p_rtvq).unwrap();
     assert!(reg.has_rtvq_base());
-    let r = Rtvq::quantize(&pre, &fts, 3, 2, true).unwrap();
+    let r = Rtvq::quantize(&pre, &fts, 3, 2, true, &ExecCtx::sequential()).unwrap();
     for t in 0..N_TASKS {
         assert_eq!(
-            reg.load_task_vector(t).unwrap(),
+            reg.load_task_vector(t, &ExecCtx::sequential()).unwrap(),
             r.dequantize_task(t).unwrap(),
             "task {t}: RTVQ reconstruction not bit-exact"
         );
@@ -164,12 +165,15 @@ fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     let p = dir.join("mask_flip.qtvc");
     std::fs::write(&p, &bad).unwrap();
     let reg = Registry::open(&p).unwrap();
-    let err = reg.load_task_vector(0).unwrap_err().to_string();
+    let err = reg.load_task_vector(0, &ExecCtx::sequential()).unwrap_err().to_string();
     assert!(
         err.contains("bitmask/survivor-count mismatch"),
         "mask corruption not caught by the decoder: {err}"
     );
-    assert!(reg.load_task_vector(1).is_ok(), "untouched task must still serve");
+    assert!(
+        reg.load_task_vector(1, &ExecCtx::sequential()).is_ok(),
+        "untouched task must still serve"
+    );
 
     // 2. Survivor-count header inflated (CRCs restamped): same check,
     //    other direction.
@@ -180,7 +184,7 @@ fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     });
     let p = dir.join("count_bump.qtvc");
     std::fs::write(&p, &bad).unwrap();
-    assert!(Registry::open(&p).unwrap().load_task_vector(0).is_err());
+    assert!(Registry::open(&p).unwrap().load_task_vector(0, &ExecCtx::sequential()).is_err());
 
     // 3. Dense length shrunk (CRCs restamped): the mask no longer spans
     //    the claimed dense space — truncated-bitmask / geometry checks
@@ -191,7 +195,7 @@ fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     });
     let p = dir.join("dense_shrink.qtvc");
     std::fs::write(&p, &bad).unwrap();
-    assert!(Registry::open(&p).unwrap().load_task_vector(0).is_err());
+    assert!(Registry::open(&p).unwrap().load_task_vector(0, &ExecCtx::sequential()).is_err());
 
     // 4. Plain byte flip without restamping: the per-section CRC layer
     //    catches it first (defense in depth).
@@ -202,7 +206,7 @@ fn sparse_sections_fail_closed_even_when_crcs_are_restamped() {
     std::fs::write(&p, &bad).unwrap();
     let reg = Registry::open(&p).unwrap();
     let last = reg.n_tasks() - 1;
-    let err = reg.load_task_vector(last).unwrap_err().to_string();
+    let err = reg.load_task_vector(last, &ExecCtx::sequential()).unwrap_err().to_string();
     assert!(err.contains("CRC"), "expected a CRC failure, got: {err}");
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -239,12 +243,15 @@ fn binary_sections_fail_closed_even_when_crcs_are_restamped() {
     let p_trunc = dir.join("sign_trunc.qtvc");
     std::fs::write(&p_trunc, &bad).unwrap();
     let reg = Registry::open(&p_trunc).unwrap();
-    let err = reg.load_task_vector(0).unwrap_err().to_string();
+    let err = reg.load_task_vector(0, &ExecCtx::sequential()).unwrap_err().to_string();
     assert!(
         err.contains("truncated sign bitmap") || err.contains("len"),
         "inflated group not caught by the decoder: {err}"
     );
-    assert!(reg.load_task_vector(1).is_ok(), "untouched task must still serve");
+    assert!(
+        reg.load_task_vector(1, &ExecCtx::sequential()).is_ok(),
+        "untouched task must still serve"
+    );
 
     // 2. Scale-count header inflated (CRCs restamped): the scale table
     //    would overrun the section — the untrusted-count guard or the
@@ -258,7 +265,7 @@ fn binary_sections_fail_closed_even_when_crcs_are_restamped() {
     std::fs::write(&p_scales, &bad).unwrap();
     let err = Registry::open(&p_scales)
         .unwrap()
-        .load_task_vector(0)
+        .load_task_vector(0, &ExecCtx::sequential())
         .unwrap_err()
         .to_string();
     assert!(err.contains("binary payload"), "scale-count corruption escaped: {err}");
@@ -326,11 +333,11 @@ fn mmap_mode_fails_closed_identically_to_pread() {
     std::fs::write(&p, &bad).unwrap();
     let mut errors = Vec::new();
     for mode in IO_MODES {
-        let reg = Registry::open_with_io(&p, mode).unwrap();
+        let reg = Registry::open_with(&p, OpenOptions::new().io(mode)).unwrap();
         let last = reg.n_tasks() - 1;
-        errors.push(reg.load_task_vector(last).unwrap_err().to_string());
+        errors.push(reg.load_task_vector(last, &ExecCtx::sequential()).unwrap_err().to_string());
         assert!(
-            reg.load_task_vector(0).is_ok(),
+            reg.load_task_vector(0, &ExecCtx::sequential()).is_ok(),
             "{mode:?}: untouched section must still serve"
         );
     }
@@ -345,7 +352,7 @@ fn mmap_mode_fails_closed_identically_to_pread() {
     std::fs::write(&p, &bad).unwrap();
     let open_errs: Vec<String> = IO_MODES
         .iter()
-        .map(|&m| Registry::open_with_io(&p, m).unwrap_err().to_string())
+        .map(|&m| Registry::open_with(&p, OpenOptions::new().io(m)).unwrap_err().to_string())
         .collect();
     assert_eq!(open_errs[0], open_errs[1]);
     assert_eq!(open_errs[1], open_errs[2]);
@@ -354,7 +361,7 @@ fn mmap_mode_fails_closed_identically_to_pread() {
     let p = dir.join("trunc_index.qtvc");
     std::fs::write(&p, &clean[..24]).unwrap();
     for mode in IO_MODES {
-        assert!(Registry::open_with_io(&p, mode).is_err(), "{mode:?}");
+        assert!(Registry::open_with(&p, OpenOptions::new().io(mode)).is_err(), "{mode:?}");
     }
 
     // 4. Truncated mid-payload: the index rows span past EOF, so open
@@ -362,7 +369,7 @@ fn mmap_mode_fails_closed_identically_to_pread() {
     let p = dir.join("trunc_payload.qtvc");
     std::fs::write(&p, &clean[..clean.len() - 64]).unwrap();
     for mode in IO_MODES {
-        let err = Registry::open_with_io(&p, mode).unwrap_err().to_string();
+        let err = Registry::open_with(&p, OpenOptions::new().io(mode)).unwrap_err().to_string();
         assert!(err.contains("beyond file size"), "{mode:?}: {err}");
     }
 
@@ -372,7 +379,10 @@ fn mmap_mode_fails_closed_identically_to_pread() {
         let p = dir.join(name);
         std::fs::write(&p, bytes).unwrap();
         for mode in IO_MODES {
-            assert!(Registry::open_with_io(&p, mode).is_err(), "{name} under {mode:?}");
+            assert!(
+                Registry::open_with(&p, OpenOptions::new().io(mode)).is_err(),
+                "{name} under {mode:?}"
+            );
         }
     }
     std::fs::remove_dir_all(&dir).ok();
@@ -397,19 +407,19 @@ fn all_io_modes_serve_identical_results() {
 
     let regs: Vec<Registry> = IO_MODES
         .iter()
-        .map(|&m| Registry::open_with_io(&path, m).unwrap())
+        .map(|&m| Registry::open_with(&path, OpenOptions::new().io(m)).unwrap())
         .collect();
     let lams = [0.5f32, 0.2, 0.3];
-    let want_fused = fused_merge(&regs[1], &pre, &lams, None).unwrap();
+    let want_fused = fused_merge(&regs[1], &pre, &lams, None, &ExecCtx::sequential()).unwrap();
     for (reg, mode) in regs.iter().zip(IO_MODES) {
         for t in 0..3 {
             assert_eq!(
-                reg.load_task_vector(t).unwrap(),
-                regs[1].load_task_vector(t).unwrap(),
+                reg.load_task_vector(t, &ExecCtx::sequential()).unwrap(),
+                regs[1].load_task_vector(t, &ExecCtx::sequential()).unwrap(),
                 "{mode:?}: lazy task {t} diverged from pread"
             );
         }
-        let fused = fused_merge(reg, &pre, &lams, None).unwrap();
+        let fused = fused_merge(reg, &pre, &lams, None, &ExecCtx::sequential()).unwrap();
         assert_eq!(
             fused.l2_dist(&want_fused).unwrap(),
             0.0,
@@ -508,6 +518,7 @@ fn model_cache_serves_from_packed_registry_without_f32_zoo() {
                         &pre,
                         source.as_ref(),
                         None,
+                        &ExecCtx::default(),
                     )
                 })
                 .unwrap()
@@ -526,7 +537,8 @@ fn model_cache_serves_from_packed_registry_without_f32_zoo() {
     // Subset materialization: merging 3 named tasks touches only those
     // sections and matches the equivalent in-memory subset merge.
     let subset = [1usize, 4, 6];
-    let got = merge_from_source(&ta, &pre, source.as_ref(), Some(&subset)).unwrap();
+    let got =
+        merge_from_source(&ta, &pre, source.as_ref(), Some(&subset), &ExecCtx::default()).unwrap();
     let sub_taus: Vec<Checkpoint> = subset.iter().map(|&t| taus[t].clone()).collect();
     let want_sub = ta.merge(&pre, &sub_taus).unwrap();
     match (&got, &want_sub) {

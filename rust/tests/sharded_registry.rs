@@ -1,0 +1,409 @@
+//! Sharded-registry suite (ISSUE 9 acceptance): `MANIFEST.qtvm` +
+//! tiered section fetch.
+//!
+//! * Sharding a planned zoo with duplicated deltas dedups byte-identical
+//!   section bodies, and the sharded footprint undercuts the monolithic
+//!   file.
+//! * `fused_merge` and per-task decodes over the sharded store are
+//!   bit-identical to the single-file registry at every thread count,
+//!   whether chunks arrive from tier 0 (local shard mmap) or tier 1 (a
+//!   live TCP fetch-server with an LRU chunk cache).
+//! * Routed merges through [`ShardedSource`] match the monolithic
+//!   [`PackedRegistrySource`] path bit-for-bit.
+//! * Fail-closed: a missing shard file, a CRC-corrupt chunk, a
+//!   content-hash (aliasing) mismatch and a truncated paged index all
+//!   error — with the *same* message on both tiers, because every check
+//!   runs client-side against the client's manifest.
+//! * [`GenerationalManifest`] swaps a manifest atomically: a pinned
+//!   generation keeps serving its original shard inodes bit-exact while
+//!   the published generation serves the new zoo.
+//!
+//! `TVQ_SMOKE=1` shrinks the thread sweep, never the assertions.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+mod common;
+
+use common::fixtures::{assert_ckpt_bit_eq, bits_equal, shard_zoo, smoke};
+use tvq::checkpoint::Checkpoint;
+use tvq::coordinator::router::MergeSpec;
+use tvq::coordinator::{GenerationalManifest, ModelCache, SectionFetchPool, TcpFront};
+use tvq::planner::fused_merge;
+use tvq::registry::{
+    Manifest, ManifestRow, OpenOptions, PackedRegistrySource, Registry, SectionScratch,
+    ShardOptions, ShardedRegistry, ShardedSource,
+};
+use tvq::util::crc32;
+use tvq::util::exec::ExecCtx;
+use tvq::util::pool::Pool;
+
+const N_TASKS: usize = 3;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    common::fixtures::tmpdir("shardreg", tag)
+}
+
+fn opts2() -> ShardOptions {
+    ShardOptions { n_shards: 2, ..ShardOptions::default() }
+}
+
+/// Thread widths for the determinism sweeps (smoke drops the widest).
+fn threads() -> &'static [usize] {
+    if smoke() {
+        &[1, 2]
+    } else {
+        &[1, 2, 8]
+    }
+}
+
+/// Sequentially decoded per-task baselines from the monolithic file.
+fn baselines(path: &Path, n_tasks: usize) -> Vec<Checkpoint> {
+    let reg = Registry::open(path).unwrap();
+    let ctx = ExecCtx::sequential();
+    (0..n_tasks).map(|t| reg.load_task_vector(t, &ctx).unwrap()).collect()
+}
+
+/// Serve `manifest` over a loopback fetch-server and open a tier-1
+/// registry against it.  The front must outlive the registry's reads.
+fn open_tier1(manifest: &Path) -> (TcpFront, ShardedRegistry) {
+    let pool = Arc::new(SectionFetchPool::open(manifest, 2).unwrap());
+    let front = TcpFront::bind_sections("127.0.0.1:0", pool, 8).unwrap();
+    let reg = ShardedRegistry::open_remote(
+        manifest,
+        &front.addr().to_string(),
+        32 << 20,
+        OpenOptions::default(),
+    )
+    .unwrap();
+    (front, reg)
+}
+
+/// First task-payload row (name `task/tensor`, not `__base__/...`) of
+/// the manifest, plus its `(task, tensor)` indices in the plan.
+fn first_task_row(manifest: &Path) -> (ManifestRow, usize, usize) {
+    let m = Manifest::read(manifest).unwrap();
+    for p in 0..m.pages().len() {
+        for row in m.read_page(manifest, p).unwrap() {
+            let Some((task, tensor)) = row.name.split_once('/') else { continue };
+            let Some(t) = m.plan().task_names.iter().position(|n| n == task) else { continue };
+            let l = m
+                .plan()
+                .tensors
+                .iter()
+                .position(|tn| tn.name == tensor)
+                .expect("row tensor must be in the plan");
+            return (row, t, l);
+        }
+    }
+    panic!("manifest has no task rows");
+}
+
+#[test]
+fn sharding_dedups_identical_sections_below_monolithic_bytes() {
+    let dir = tmpdir("dedup");
+    let (path, manifest, _pre, _fts, summary) = shard_zoo(&dir, N_TASKS, 11, &opts2());
+    assert!(
+        summary.n_dedup_hits > 0,
+        "task 1 clones task 0, so at least its sections must alias existing chunks"
+    );
+    assert_eq!(summary.n_sections, summary.n_unique_chunks + summary.n_dedup_hits);
+    assert!(
+        summary.total_bytes() < summary.source_bytes,
+        "dedup must beat the monolithic file: {} sharded vs {} monolithic",
+        summary.total_bytes(),
+        summary.source_bytes
+    );
+
+    // The cloned task round-trips to the same floats through the alias.
+    let base = baselines(&path, N_TASKS);
+    let sharded = ShardedRegistry::open(&manifest).unwrap();
+    assert_eq!(sharded.n_tasks(), N_TASKS);
+    let ctx = ExecCtx::sequential();
+    for (t, want) in base.iter().enumerate() {
+        let got = sharded.load_task_vector(t, &ctx).unwrap();
+        assert_ckpt_bit_eq(&got, want, &format!("sharded decode of task {t}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn round_trip_is_bit_exact_across_tiers_and_threads() {
+    let dir = tmpdir("roundtrip");
+    let (path, manifest, pre, _fts, _summary) = shard_zoo(&dir, N_TASKS, 13, &opts2());
+    let base = baselines(&path, N_TASKS);
+    let mono = Registry::open(&path).unwrap();
+    let lams = [0.35f32, -0.2, 0.4];
+    let want = fused_merge(&mono, &pre, &lams, None, &ExecCtx::sequential()).unwrap();
+    let want_sub =
+        fused_merge(&mono, &pre, &[0.5, 0.25], Some(&[0, 2]), &ExecCtx::sequential()).unwrap();
+
+    let tier0 = ShardedRegistry::open(&manifest).unwrap();
+    let (mut front, tier1) = open_tier1(&manifest);
+    for (tier, reg) in [("tier0", &tier0), ("tier1", &tier1)] {
+        for &width in threads() {
+            let pool = Pool::new(width);
+            let ctx = ExecCtx::with_pool(&pool);
+            let got = fused_merge(reg, &pre, &lams, None, &ctx).unwrap();
+            assert_ckpt_bit_eq(&got, &want, &format!("fused merge {tier} threads={width}"));
+            let got_sub = fused_merge(reg, &pre, &[0.5, 0.25], Some(&[0, 2]), &ctx).unwrap();
+            assert_ckpt_bit_eq(
+                &got_sub,
+                &want_sub,
+                &format!("subset fused merge {tier} threads={width}"),
+            );
+            for (t, want_t) in base.iter().enumerate() {
+                let got_t = reg.load_task_vector(t, &ctx).unwrap();
+                assert_ckpt_bit_eq(
+                    &got_t,
+                    want_t,
+                    &format!("task {t} {tier} threads={width}"),
+                );
+            }
+        }
+    }
+    let (hits, misses) = tier1.cache_stats();
+    assert!(hits > 0, "repeated tier-1 reads must hit the chunk cache");
+    assert!(misses > 0, "first tier-1 reads must miss the chunk cache");
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn routed_merge_over_sharded_source_matches_single_file() {
+    let dir = tmpdir("routed");
+    let (path, manifest, pre, _fts, _summary) = shard_zoo(&dir, N_TASKS, 17, &opts2());
+    let spec = MergeSpec::new(&[0, 2], &[0.4, 0.25]).unwrap();
+
+    let mono = PackedRegistrySource::open(&path).unwrap();
+    let want = ModelCache::new().get_or_merge_routed(&spec, &pre, &mono).unwrap();
+
+    let tier0 = ShardedSource::new(Arc::new(ShardedRegistry::open(&manifest).unwrap()));
+    let (mut front, remote) = open_tier1(&manifest);
+    let tier1 = ShardedSource::new(Arc::new(remote));
+    for (name, src) in [("tier0", &tier0), ("tier1", &tier1)] {
+        let got = ModelCache::new().get_or_merge_routed(&spec, &pre, src).unwrap();
+        assert!(
+            bits_equal(got.for_task(0), want.for_task(0)),
+            "routed merge over {name} sharded source diverged from single-file"
+        );
+    }
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_shard_file_fails_closed_identically_across_tiers() {
+    let dir = tmpdir("missing");
+    let (_path, manifest, _pre, _fts, summary) = shard_zoo(&dir, N_TASKS, 19, &opts2());
+
+    // Open everything lazily first (no reads), then pull a shard out.
+    let tier0 = ShardedRegistry::open(&manifest).unwrap();
+    let (mut front, tier1) = open_tier1(&manifest);
+    std::fs::remove_file(&summary.shard_paths[0]).unwrap();
+
+    let ctx = ExecCtx::sequential();
+    let probe = |reg: &ShardedRegistry| -> String {
+        for t in 0..N_TASKS {
+            if let Err(e) = reg.load_task_vector(t, &ctx) {
+                return format!("{e:#}");
+            }
+        }
+        panic!("a zoo missing a shard file must fail some task decode");
+    };
+    let e0 = probe(&tier0);
+    let e1 = probe(&tier1);
+    assert!(e0.contains("is missing"), "tier-0 error names the cause: {e0}");
+    assert_eq!(e0, e1, "tiers must fail closed with the same error");
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crc_corrupt_chunk_fails_closed_identically_across_tiers() {
+    let dir = tmpdir("crc");
+    let (_path, manifest, _pre, _fts, summary) = shard_zoo(&dir, N_TASKS, 23, &opts2());
+    let (row, t, l) = first_task_row(&manifest);
+
+    // Flip one payload byte on disk before anything maps the shard.  The
+    // fetch-server serves the corrupt bytes blindly; detection is the
+    // *client's* job on both tiers.
+    let shard_path = &summary.shard_paths[row.chunk.shard as usize];
+    let mut bytes = std::fs::read(shard_path).unwrap();
+    bytes[(row.chunk.offset + row.chunk.length / 2) as usize] ^= 0xFF;
+    std::fs::write(shard_path, &bytes).unwrap();
+
+    let tier0 = ShardedRegistry::open(&manifest).unwrap();
+    let (mut front, tier1) = open_tier1(&manifest);
+    let mut scratch = SectionScratch::default();
+    let e0 = format!("{:#}", tier0.planned_task_view(t, l, &mut scratch).unwrap_err());
+    let e1 = format!("{:#}", tier1.planned_task_view(t, l, &mut scratch).unwrap_err());
+    assert!(e0.contains("CRC mismatch"), "tier-0 error names the cause: {e0}");
+    assert_eq!(e0, e1, "tiers must fail closed with the same error");
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Flip one byte of `name`'s content hash inside its manifest page, then
+/// re-stamp the page CRC in the directory and the trailing index CRC —
+/// so the corruption reaches the chunk verifier, not the checksum layer.
+fn corrupt_row_hash(manifest: &Path, name: &str) {
+    let m = Manifest::read(manifest).unwrap();
+    let pg = m.pages()[m.page_for(name).unwrap()].clone();
+    let mut bytes = std::fs::read(manifest).unwrap();
+    let (start, end) = (pg.offset as usize, (pg.offset + pg.length) as usize);
+    let mut pos = start;
+    loop {
+        assert!(pos < end, "row {name:?} not found in its page");
+        let name_len =
+            u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let row_name = std::str::from_utf8(&bytes[pos + 4..pos + 4 + name_len]).unwrap();
+        // Fixed row tail: kind u8, shard u32, offset u64, length u64,
+        // crc u32, hash u64 = 33 bytes.
+        let tail = pos + 4 + name_len;
+        if row_name == name {
+            bytes[tail + 25] ^= 0xFF;
+            break;
+        }
+        pos = tail + 33;
+    }
+    let page_crc = crc32(&bytes[start..end]);
+    // The directory entry is `first str, rows u32, offset u64,
+    // length u64, crc u32`; locate it by its unique offset+length pair.
+    let header_end = m.header_bytes() as usize;
+    let mut pat = Vec::with_capacity(16);
+    pat.extend_from_slice(&pg.offset.to_le_bytes());
+    pat.extend_from_slice(&pg.length.to_le_bytes());
+    let at = bytes[..header_end - 4]
+        .windows(16)
+        .position(|w| w == &pat[..])
+        .expect("page directory entry");
+    bytes[at + 16..at + 20].copy_from_slice(&page_crc.to_le_bytes());
+    let index_crc = crc32(&bytes[..header_end - 4]);
+    bytes[header_end - 4..header_end].copy_from_slice(&index_crc.to_le_bytes());
+    std::fs::write(manifest, &bytes).unwrap();
+}
+
+#[test]
+fn content_hash_mismatch_fails_closed_identically_across_tiers() {
+    let dir = tmpdir("hash");
+    let (_path, manifest, _pre, _fts, _summary) = shard_zoo(&dir, N_TASKS, 29, &opts2());
+    let (row, t, l) = first_task_row(&manifest);
+    corrupt_row_hash(&manifest, &row.name);
+
+    let tier0 = ShardedRegistry::open(&manifest).unwrap();
+    let (mut front, tier1) = open_tier1(&manifest);
+    let mut scratch = SectionScratch::default();
+    let e0 = format!("{:#}", tier0.planned_task_view(t, l, &mut scratch).unwrap_err());
+    let e1 = format!("{:#}", tier1.planned_task_view(t, l, &mut scratch).unwrap_err());
+    assert!(e0.contains("content-hash mismatch"), "tier-0 error names the cause: {e0}");
+    assert_eq!(e0, e1, "tiers must fail closed with the same error");
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_paged_index_fails_closed() {
+    let dir = tmpdir("trunc");
+    let (_path, manifest, _pre, _fts, _summary) = shard_zoo(&dir, N_TASKS, 31, &opts2());
+
+    // Lazy opens read the header + directory only; truncate the page
+    // bodies out from under them afterwards.
+    let tier0 = ShardedRegistry::open(&manifest).unwrap();
+    let (mut front, tier1) = open_tier1(&manifest);
+    let header_bytes = Manifest::read(&manifest).unwrap().header_bytes();
+    let f = std::fs::OpenOptions::new().write(true).open(&manifest).unwrap();
+    f.set_len(header_bytes).unwrap();
+    drop(f);
+
+    let ctx = ExecCtx::sequential();
+    let e0 = format!("{:#}", tier0.load_task_vector(0, &ctx).unwrap_err());
+    let e1 = format!("{:#}", tier1.load_task_vector(0, &ctx).unwrap_err());
+    assert!(e0.contains("truncated QTVM index page"), "lazy page read names the cause: {e0}");
+    assert_eq!(e0, e1, "tiers must fail closed with the same error");
+
+    // A fresh open sees the page spans fall outside the file and refuses.
+    let e = format!("{:#}", ShardedRegistry::open(&manifest).unwrap_err());
+    assert!(e.contains("outside the manifest"), "fresh open fails closed: {e}");
+    front.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn generational_manifest_swap_pins_old_shards_and_serves_new() {
+    let dir_a = tmpdir("swap_a");
+    let dir_b = tmpdir("swap_b");
+    let (path_a, manifest_a, _pre_a, _fts_a, _sa) = shard_zoo(&dir_a, N_TASKS, 37, &opts2());
+    let (path_b, _manifest_b, _pre_b, _fts_b, sb) = shard_zoo(&dir_b, N_TASKS, 41, &opts2());
+    let base_a = baselines(&path_a, N_TASKS);
+    let base_b = baselines(&path_b, N_TASKS);
+
+    let gm = GenerationalManifest::open(&manifest_a).unwrap();
+    let g1 = gm.pin();
+    let ctx = ExecCtx::sequential();
+    // Decode every task now so generation 1 maps every shard inode.
+    for (t, want) in base_a.iter().enumerate() {
+        let got = g1.registry().load_task_vector(t, &ctx).unwrap();
+        assert_ckpt_bit_eq(&got, want, &format!("gen-1 task {t} before swap"));
+    }
+
+    // Stage zoo B over zoo A's directory: shard files land under their
+    // manifest-recorded names via write-to-temp + rename, so generation
+    // 1's mapped inodes survive the directory-entry swap untouched.
+    for shard in &sb.shard_paths {
+        let name = shard.file_name().unwrap();
+        let tmp = dir_a.join("incoming.tmpswap");
+        std::fs::write(&tmp, std::fs::read(shard).unwrap()).unwrap();
+        std::fs::rename(&tmp, dir_a.join(name)).unwrap();
+    }
+    std::fs::copy(&sb.manifest_path, gm.stage_path()).unwrap();
+    let published = gm.publish_staged().unwrap();
+    assert_eq!(published, g1.number() + 1, "publish bumps the generation number");
+
+    let g2 = gm.pin();
+    assert_eq!(g2.number(), published);
+    for (t, want) in base_b.iter().enumerate() {
+        let got = g2.registry().load_task_vector(t, &ctx).unwrap();
+        assert_ckpt_bit_eq(&got, want, &format!("gen-2 task {t} after swap"));
+    }
+    // The superseded generation still serves zoo A bit-exact from its
+    // pinned inodes — shard immutability is what makes the swap safe.
+    for (t, want) in base_a.iter().enumerate() {
+        let got = g1.registry().load_task_vector(t, &ctx).unwrap();
+        assert_ckpt_bit_eq(&got, want, &format!("gen-1 task {t} after swap"));
+    }
+    let live = gm.live_generations();
+    assert!(
+        live.contains(&g1.number()) && live.contains(&g2.number()),
+        "both pinned generations stay live: {live:?}"
+    );
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+/// The PR-9 API collapse keeps the `*_with_pool` twins as thin shims;
+/// they must stay bit-identical to the canonical [`ExecCtx`] entry
+/// points until they are removed.
+#[test]
+#[allow(deprecated)]
+fn deprecated_pool_shims_match_canonical_entry_points() {
+    use tvq::planner::fused_merge_with_pool;
+    use tvq::registry::IoMode;
+
+    let dir = tmpdir("shims");
+    let (path, _manifest, pre, _fts, _summary) = shard_zoo(&dir, N_TASKS, 43, &opts2());
+    let pool = Pool::new(2);
+    let reg = Registry::open_with_io(&path, IoMode::Pread).unwrap();
+    let canon = Registry::open_with(&path, OpenOptions::new().io(IoMode::Pread)).unwrap();
+    assert_eq!(reg.io_mode(), canon.io_mode(), "open shim matches OpenOptions");
+
+    let lams = [0.3f32, 0.1, -0.2];
+    let want = fused_merge(&canon, &pre, &lams, None, &ExecCtx::with_pool(&pool)).unwrap();
+    let got = fused_merge_with_pool(&reg, &pre, &lams, None, &pool).unwrap();
+    assert_ckpt_bit_eq(&got, &want, "fused_merge_with_pool shim");
+
+    let via_shim = reg.load_task_vector_with_pool(1, &pool).unwrap();
+    let via_ctx = canon.load_task_vector(1, &ExecCtx::with_pool(&pool)).unwrap();
+    assert_ckpt_bit_eq(&via_shim, &via_ctx, "load_task_vector_with_pool shim");
+    std::fs::remove_dir_all(&dir).ok();
+}
