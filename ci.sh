@@ -21,6 +21,12 @@
 #   shard       sharded-registry suite: MANIFEST.qtvm round-trip, tier-0
 #               vs tier-1 bit-exactness, fail-closed corruption quartet
 #               (TVQ_SMOKE=1 cargo test --test sharded_registry)
+#   simd        SIMD kernel parity: scalar vs every detected vector
+#               kernel bit-identical on all four dispatched primitives,
+#               run under both auto detection and TVQ_SIMD=off, plus
+#               pool_determinism with SIMD active; chains the Python
+#               cross-runtime byte-parity test when python3+jax exist
+#               (cargo test --test simd_parity / --test pool_determinism)
 #   example     packed_registry example end-to-end
 #   tabP        planner + dynamic-merge experiment smoke (TVQ_SMOKE=1,
 #               runs `experiment tabP` then `experiment tabR`)
@@ -45,8 +51,8 @@ cd "$(dirname "$0")"
 CARGO_FLAGS=(--offline)
 BENCH_TOLERANCE="${TVQ_BENCH_TOLERANCE:-0.20}"
 
-STAGE_NAMES=(preflight build test control obs dynmerge shard example tabP bench-diff doc fmt clippy)
-QUICK_STAGES=(preflight build test control obs dynmerge shard)
+STAGE_NAMES=(preflight build test control obs dynmerge shard simd example tabP bench-diff doc fmt clippy)
+QUICK_STAGES=(preflight build test control obs dynmerge shard simd)
 
 declare -a RAN_STAGES=()
 declare -a RAN_TIMES=()
@@ -103,6 +109,27 @@ stage_shard() {
     # corruption quartet erroring identically across tiers, and the
     # generational manifest swap.
     TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test sharded_registry
+}
+
+stage_simd() {
+    # SIMD dequant-axpy parity (ISSUE 10): every detected kernel must be
+    # bit-identical to the scalar reference, both under auto detection
+    # and with vector kernels forced off (TVQ_SIMD=off exercises the
+    # env-override path and the scalar dispatch), and pool_determinism
+    # must stay green with SIMD active — the "any thread count × any
+    # kernel" contract.  The simd_parity run also exports the
+    # cross-runtime fixture (target/parity/) consumed by the Python
+    # byte-parity test, which chains here when python3 + jax exist.
+    # && chain for the run_stage errexit-suppression reason above.
+    TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test simd_parity \
+        && TVQ_SMOKE=1 TVQ_SIMD=off cargo test -q "${CARGO_FLAGS[@]}" --test simd_parity \
+        && TVQ_SMOKE=1 cargo test -q "${CARGO_FLAGS[@]}" --test pool_determinism \
+        && if command -v python3 > /dev/null 2>&1 \
+                && python3 -c 'import pytest, jax' > /dev/null 2>&1; then
+            (cd python && python3 -m pytest -q tests/test_packed_merge_parity.py)
+        else
+            echo "simd: python3+jax unavailable — skipping cross-runtime byte parity"
+        fi
 }
 
 stage_example() {

@@ -1,0 +1,121 @@
+"""Cross-runtime byte parity: Rust-packed sections vs the Python kernels.
+
+``cargo test --test simd_parity`` (the ``export_python_parity_fixtures``
+test) writes Rust-packed section payloads plus the Rust scalar-kernel
+decode as f32 goldens under ``target/parity/``.  This suite decodes the
+same bytes through ``packed_merge`` (kind-2 dense) and a numpy replay of
+the sparse scatter (kind-4) and asserts the floats are **byte**-equal —
+not allclose — pinning the wire format and the dequant arithmetic across
+the two runtimes.
+
+Skips pointedly when the fixture has not been generated or when jax is
+unavailable in this environment.
+"""
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax", reason="jax not installed; packed_merge parity needs it")
+jnp = jax.numpy
+
+from compile.kernels import packed_merge as pm  # noqa: E402
+
+
+def _fixture_dir() -> Path:
+    env = os.environ.get("TVQ_PARITY_DIR")
+    if env:
+        return Path(env)
+    return Path(__file__).resolve().parents[2] / "target" / "parity"
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    d = _fixture_dir()
+    manifest = d / "manifest.json"
+    if not manifest.exists():
+        pytest.skip(
+            f"parity fixture missing at {d}; run `cargo test --test simd_parity` "
+            "(export_python_parity_fixtures) first"
+        )
+    return d, json.loads(manifest.read_text())
+
+
+def _read(d: Path, name: str, dtype):
+    return np.fromfile(d / name, dtype=dtype)
+
+
+def test_kind2_unpack_matches_rust_codes(fixture):
+    """`unpack_codes` over Rust `to_i32_words()` output recovers the
+    exact code stream Rust packed."""
+    d, m = fixture
+    spec = m["kind2"]
+    n, bits = spec["n"], spec["bits"]
+    words = _read(d, "kind2_words.bin", np.dtype("<i4"))
+    codes = _read(d, "kind2_codes.bin", np.uint8)
+    assert words.shape[0] == n * bits // 32
+    got = np.asarray(pm.unpack_codes(jnp.asarray(words[None, :]), bits, n))[0]
+    np.testing.assert_array_equal(got.astype(np.uint8), codes)
+
+
+def test_kind2_dense_decode_byte_parity(fixture):
+    """Pallas packed kernel (pre=0, one task, lam=1) byte-equals the
+    Rust scalar dequant golden."""
+    d, m = fixture
+    spec = m["kind2"]
+    n, group, bits = spec["n"], spec["group"], spec["bits"]
+    words = jnp.asarray(_read(d, "kind2_words.bin", np.dtype("<i4"))[None, :])
+    scales = jnp.asarray(_read(d, "kind2_scales.bin", np.dtype("<f4"))[None, :])
+    zps = jnp.asarray(_read(d, "kind2_zps.bin", np.dtype("<f4"))[None, :])
+    golden = _read(d, "kind2_golden.bin", np.dtype("<f4"))
+    assert scales.shape[1] == spec["n_groups"] == n // group
+
+    pre = jnp.zeros(n, dtype=jnp.float32)
+    lams = jnp.ones(1, dtype=jnp.float32)
+    got = np.asarray(
+        pm.packed_dequant_merge(pre, words, scales, zps, lams, bits=bits, block=group),
+        dtype=np.float32,
+    )
+    # Byte equality: identical IEEE bit patterns, not just allclose.
+    np.testing.assert_array_equal(got.view(np.uint32), golden.view(np.uint32))
+
+
+def test_kind4_sparse_decode_byte_parity(fixture):
+    """Kind-4: unpack the survivor payload with the Python word decoder,
+    dequantize in f32, scatter by the LSB-first bitmask — byte-equal to
+    the Rust scalar decode."""
+    d, m = fixture
+    spec = m["kind4"]
+    dense_len = spec["dense_len"]
+    n_surv = spec["n_survivors"]
+    padded = spec["padded_survivors"]
+    group, bits = spec["group"], spec["bits"]
+    mask = _read(d, "kind4_mask.bin", np.uint8)
+    words = _read(d, "kind4_words.bin", np.dtype("<i4"))
+    scales = _read(d, "kind4_scales.bin", np.dtype("<f4"))
+    zps = _read(d, "kind4_zps.bin", np.dtype("<f4"))
+    golden = _read(d, "kind4_golden.bin", np.dtype("<f4"))
+    assert padded == spec["n_groups"] * group
+    assert mask.shape[0] == (dense_len + 7) // 8
+
+    q = np.asarray(pm.unpack_codes(jnp.asarray(words[None, :]), bits, padded))[0]
+    # Same per-element arithmetic as the Rust scalar kernel:
+    # scale * (code - zp), all in f32 (mul is commutative bit-exactly).
+    q_f = q.astype(np.float32)
+    zp_e = np.repeat(zps, group)
+    scale_e = np.repeat(scales, group)
+    vals = (q_f - zp_e) * scale_e
+
+    # LSB-first mask bits -> survivor positions, ascending.
+    bits_lsb = np.unpackbits(mask, bitorder="little")[:dense_len]
+    positions = np.nonzero(bits_lsb)[0]
+    assert positions.shape[0] == n_surv
+
+    dense = np.zeros(dense_len, dtype=np.float32)
+    # Rust dequantizes by accumulating into a zero buffer (`0.0 + v`),
+    # which normalizes -0.0 to +0.0; replay the same op.
+    dense[positions] = np.float32(0.0) + vals[:n_surv]
+    np.testing.assert_array_equal(dense.view(np.uint32), golden.view(np.uint32))

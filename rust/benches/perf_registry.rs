@@ -15,7 +15,8 @@
 //! `BENCH_registry.json` (path overridable via `TVQ_BENCH_OUT`) that
 //! `tvq bench diff` gates in CI: within-run ordering invariants (mmap
 //! section reads must not be slower than pread, N-thread fused merge
-//! must not be slower than sequential, and a one-task routed delta
+//! must not be slower than sequential, the SIMD-kernel fused merge must
+//! not be slower than the scalar one at t1, and a one-task routed delta
 //! patch must not be slower than the full re-merge it replaces) always
 //! apply, per-case regression vs the committed baseline applies once
 //! the baseline is calibrated.  See `rust/src/util/benchcmp.rs`.
@@ -29,7 +30,7 @@ use tvq::coordinator::router::{merge_spec, MergeSpec};
 use tvq::coordinator::{SectionFetchPool, TcpFront};
 use tvq::merge::{MergedModel, TaskArithmetic};
 use tvq::planner::{build_planned_registry, fused_merge, PlannerConfig};
-use tvq::quant::QuantScheme;
+use tvq::quant::{simd, Kernel, QuantScheme};
 use tvq::registry::{
     build_registry, build_registry_with_pool, merge_from_source, shard_registry,
     uniform_registry_bytes, F32ZooSource, IoMode, OpenOptions, PackedRegistrySource, Registry,
@@ -248,6 +249,64 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // SIMD kernel dispatch (ISSUE 10): the same fused merge pinned to
+    // one thread under the scalar reference kernel vs the detected SIMD
+    // kernel.  Output floats are bit-identical (simd_parity.rs proves
+    // it); the invariant below gates that the SIMD kernel is not slower
+    // than scalar at t1.  Under `TVQ_SIMD=off` both cases run scalar and
+    // the invariant holds trivially.
+    let kern = simd::active();
+    eprintln!("[bench:registry] simd kernel: {} (of {:?})", kern.label(),
+        simd::detected().iter().map(|k| k.label()).collect::<Vec<_>>());
+    let pool1 = Pool::new(1);
+    for (tag, k) in [("scalar", Kernel::Scalar), ("simd", kern)] {
+        let ctx = ExecCtx::with_pool(&pool1).with_kernel(k);
+        results.push(b.run_throughput(
+            &format!("fused_merge_{tag}"),
+            (params * N_TASKS) as f64,
+            || {
+                std::hint::black_box(
+                    fused_merge(&planned_mmap, &pre, &lams, None, &ctx).unwrap(),
+                );
+            },
+        ));
+    }
+
+    // Per-primitive microbenches: the four dispatched inner loops on a
+    // 64Ki-element working set, scalar vs the active kernel.  Recorded
+    // for the regression baseline but not gated pairwise — at this size
+    // a shared runner's noise floor would flake on the small deltas.
+    {
+        const N: usize = 1 << 16;
+        let packed = vec![0xA7u8; N / 2]; // width-4 codes
+        let mut codes = vec![0u32; N];
+        let dst0: Vec<f32> = (0..N).map(|i| i as f32 * 0.25).collect();
+        let code_words: Vec<u32> = (0..N as u32).map(|i| i % 256).collect();
+        let mask = vec![0xEDu8; N / 8];
+        let vals = vec![0.125f32; N + simd::SPARSE_VALS_SLACK];
+        let signs = vec![0x5Bu8; N / 8];
+        for (tag, k) in [("scalar", Kernel::Scalar), ("simd", kern)] {
+            results.push(b.run_throughput(&format!("unpack_w4_{tag}"), N as f64, || {
+                std::hint::black_box(simd::unpack_blocks(k, 4, &packed, &mut codes));
+            }));
+            let mut dst = dst0.clone();
+            results.push(b.run_throughput(&format!("axpy_affine_{tag}"), N as f64, || {
+                simd::axpy_affine(k, 0.125, -0.5, &code_words, &mut dst);
+                std::hint::black_box(&mut dst);
+            }));
+            let mut out = dst0.clone();
+            results.push(b.run_throughput(&format!("sparse_scatter_{tag}"), N as f64, || {
+                simd::sparse_scatter_axpy(k, 0.5, &mask, &vals, 0, &mut out);
+                std::hint::black_box(&mut out);
+            }));
+            let mut acc = dst0.clone();
+            results.push(b.run_throughput(&format!("signed_axpy_{tag}"), N as f64, || {
+                simd::signed_axpy(k, 0.25, &signs, 0, &mut acc);
+                std::hint::black_box(&mut acc);
+            }));
+        }
+    }
+
     // Dynamic routing: the one-task delta patch the ModelCache serves on
     // a warm neighbor (clone cached floats + decode one tau + one axpy)
     // vs the full canonical re-merge of the same 4-task spec.  The patch
@@ -338,6 +397,7 @@ fn main() -> anyhow::Result<()> {
         &[
             ("section_read_mmap", "section_read_pread"),
             ("merge8_fused_threads_tN", "merge8_fused_threads_t1"),
+            ("fused_merge_simd", "fused_merge_scalar"),
             ("routed_patch_one_task", "routed_full_remerge_4task"),
             ("section_fetch_remote_cached", "section_fetch_local_x2"),
         ],

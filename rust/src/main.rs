@@ -84,6 +84,12 @@ global options:
   --trace <out.json>  record spans and export a Chrome trace-event file
                       at exit (env: TVQ_TRACE=<out.json>)
 
+environment:
+  TVQ_SIMD=off|sse4|avx2|neon  pin the decode/merge SIMD kernel
+                               (default: best detected; every kernel is
+                               bit-identical to the scalar reference)
+  TVQ_THREADS=<n>              default worker-pool width
+
 run `tvq <subcommand> --help` for options."
         .to_string()
 }
@@ -303,11 +309,12 @@ Without a subaction, boots the in-process serving demo described below.",
         None => None,
     };
     println!(
-        "serving {} x {} requests through {} executors{}...",
+        "serving {} x {} requests through {} executors{} (simd kernel: {})...",
         clients,
         per,
         cfg.executors,
-        if front.is_some() { " over TCP" } else { "" }
+        if front.is_some() { " over TCP" } else { "" },
+        tvq::quant::simd::active().label()
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -1162,6 +1169,13 @@ examples:
 fn cmd_list() -> Result<()> {
     println!("presets: vit_s, vit_m, vit_l (+ dense conv trunk)");
     println!("experiments: {}", exp::EXPERIMENT_IDS.join(", "));
+    let kernels: Vec<&str> =
+        tvq::quant::simd::detected().iter().map(|k| k.label()).collect();
+    println!(
+        "simd kernels: {} (active: {}; override with TVQ_SIMD)",
+        kernels.join(", "),
+        tvq::quant::simd::active().label()
+    );
     match Runtime::new().and_then(|rt| rt.available()) {
         Ok(mut names) => {
             names.sort();

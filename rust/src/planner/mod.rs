@@ -551,8 +551,10 @@ pub fn build_planned_registry<P: AsRef<std::path::Path>>(
 /// # Execution
 ///
 /// The [`ExecCtx`] selects the pool (`ExecCtx::sequential()` is the
-/// bit-exact reference path the determinism suite compares against) and
-/// an optional trace label; `reg` is any [`PlannedSectionSource`] — the
+/// bit-exact reference path the determinism suite compares against),
+/// the SIMD kernel the inner loops dispatch over (every kernel is
+/// bit-identical to scalar — see [`crate::quant::simd`]), and an
+/// optional trace label; `reg` is any [`PlannedSectionSource`] — the
 /// monolithic [`Registry`] and the sharded
 /// [`ShardedRegistry`](crate::registry::ShardedRegistry) (tier 0 or
 /// tier 1) produce bit-identical merges through this one body.
@@ -565,6 +567,7 @@ pub fn fused_merge<S: PlannedSectionSource + ?Sized>(
 ) -> Result<Checkpoint> {
     let _op = ctx.op_span(obs::Category::Merge);
     let pool = ctx.pool();
+    let kern = ctx.kernel();
     let plan = reg
         .pack_plan()
         .context("fused_merge needs a planned (PLAN-MIXED) registry")?;
@@ -642,7 +645,7 @@ pub fn fused_merge<S: PlannedSectionSource + ?Sized>(
                     let mut codes: Vec<u32> = Vec::new();
                     let g0 = start / tensor.group;
                     for (view, &lam) in views.iter().zip(lams) {
-                        view.as_group()?.axpy_groups_into(lam, g0, shard, &mut codes)?;
+                        view.as_group()?.axpy_groups_into_k(kern, lam, g0, shard, &mut codes)?;
                     }
                     Ok(())
                 })?;
@@ -655,9 +658,9 @@ pub fn fused_merge<S: PlannedSectionSource + ?Sized>(
                 pool.for_each_shard(&mut buf, tensor.group, |start, shard| {
                     let mut codes: Vec<u32> = Vec::new();
                     let g0 = start / tensor.group;
-                    base.axpy_groups_into(lam_sum, g0, shard, &mut codes)?;
+                    base.axpy_groups_into_k(kern, lam_sum, g0, shard, &mut codes)?;
                     for (view, &lam) in views.iter().zip(lams) {
-                        view.as_group()?.axpy_groups_into(lam, g0, shard, &mut codes)?;
+                        view.as_group()?.axpy_groups_into_k(kern, lam, g0, shard, &mut codes)?;
                     }
                     Ok(())
                 })?;
@@ -668,7 +671,7 @@ pub fn fused_merge<S: PlannedSectionSource + ?Sized>(
                     let byte0 = start / 8;
                     for (view, &lam) in views.iter().zip(lams) {
                         view.as_sparse()?
-                            .axpy_range_into(lam, byte0, shard, &mut codes, &mut vals);
+                            .axpy_range_into_k(kern, lam, byte0, shard, &mut codes, &mut vals);
                     }
                     Ok(())
                 })?;
@@ -679,7 +682,7 @@ pub fn fused_merge<S: PlannedSectionSource + ?Sized>(
                 pool.for_each_shard(&mut buf, 8, |start, shard| {
                     let byte0 = start / 8;
                     for (view, &lam) in views.iter().zip(lams) {
-                        view.as_binary()?.axpy_range_into(lam, byte0, shard);
+                        view.as_binary()?.axpy_range_into_k(kern, lam, byte0, shard);
                     }
                     Ok(())
                 })?;

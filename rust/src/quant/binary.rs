@@ -223,14 +223,27 @@ impl<'a> BinarySwitchView<'a> {
         self.axpy_range_into(lam, 0, out);
     }
 
-    /// Sharded accumulate: `out` covers the dense element range
-    /// `[byte0 * 8, byte0 * 8 + out.len())`, which must start on a
-    /// sign-byte boundary and end on one (or at the full length) — the
-    /// shard geometry the parallel fused merge carves.  Each element's
-    /// increment is `lam * scale(g)` with the sign applied afterwards,
-    /// computed identically in every shard, so disjoint shards reproduce
-    /// the full pass bit-for-bit.
+    /// Sharded accumulate over the process-wide active kernel: `out`
+    /// covers the dense element range `[byte0 * 8, byte0 * 8 +
+    /// out.len())`, which must start on a sign-byte boundary and end on
+    /// one (or at the full length) — the shard geometry the parallel
+    /// fused merge carves.
     pub fn axpy_range_into(&self, lam: f32, byte0: usize, out: &mut [f32]) {
+        self.axpy_range_into_k(super::simd::active(), lam, byte0, out);
+    }
+
+    /// [`axpy_range_into`](Self::axpy_range_into) over an explicit
+    /// kernel.  Each element's increment is `lam * scale(g)` with the
+    /// sign applied afterwards (an exact sign-bit flip on every
+    /// kernel), computed identically in every shard, so disjoint shards
+    /// reproduce the full pass bit-for-bit on any kernel.
+    pub fn axpy_range_into_k(
+        &self,
+        kernel: super::simd::Kernel,
+        lam: f32,
+        byte0: usize,
+        out: &mut [f32],
+    ) {
         let start = byte0 * 8;
         let end = start + out.len();
         assert!(end <= self.len(), "element range [{start}, {end}) past {}", self.len());
@@ -238,15 +251,36 @@ impl<'a> BinarySwitchView<'a> {
             end == self.len() || end % 8 == 0,
             "binary shard must end on a sign-byte boundary or at the full length"
         );
-        axpy_range(self.group, |g| self.scale(g), self.signs, lam, start, out);
+        if kernel == super::simd::Kernel::Scalar {
+            axpy_range(self.group, |g| self.scale(g), self.signs, lam, start, out);
+            return;
+        }
+        // Vector path: one signed-axpy call per group overlapping the
+        // range, so `a = lam * scale(g)` is computed exactly once per
+        // group touched — the same op sequence as the scalar walk.
+        let mut i = start;
+        while i < end {
+            let g = i / self.group;
+            let g_end = ((g + 1) * self.group).min(end);
+            let a = lam * self.scale(g);
+            super::simd::signed_axpy(kernel, a, self.signs, i, &mut out[i - start..g_end - start]);
+            i = g_end;
+        }
     }
 
     /// Reconstruct into a caller buffer (overwrites all of `out`) —
     /// bit-identical to [`BinarySwitch::dequantize`].
     pub fn dequantize_into(&self, out: &mut [f32]) {
+        self.dequantize_into_k(super::simd::active(), out);
+    }
+
+    /// [`dequantize_into`](Self::dequantize_into) over an explicit
+    /// kernel (the serve paths thread
+    /// [`ExecCtx::kernel`](crate::util::exec::ExecCtx::kernel) here).
+    pub fn dequantize_into_k(&self, kernel: super::simd::Kernel, out: &mut [f32]) {
         assert_eq!(out.len(), self.len());
         out.fill(0.0);
-        self.axpy_into(1.0, out);
+        self.axpy_range_into_k(kernel, 1.0, 0, out);
     }
 
     /// Materialize an owned [`BinarySwitch`].

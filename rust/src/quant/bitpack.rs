@@ -34,8 +34,13 @@ fn unpack_byte_blocks<const BITS: usize, const BPB: usize, const CPB: usize>(
 /// a whole number of bytes holding a whole number of codes (1 byte = eight
 /// 1-bit codes, 3 bytes = eight 3-bit codes, ...).  Returns how many codes
 /// were decoded; the caller finishes the ragged tail code-by-code.
+///
+/// This is the `Kernel::Scalar` block decoder — the determinism
+/// reference the SIMD unpack kernels in [`crate::quant::simd`] are
+/// pinned against (all kernels produce identical integer codes, so any
+/// of them may decode any prefix).
 #[inline]
-fn unpack_blocks(bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
+pub(crate) fn unpack_blocks_scalar(bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
     match bits {
         1 => unpack_byte_blocks::<1, 1, 8>(bytes, out),
         2 => unpack_byte_blocks::<2, 1, 4>(bytes, out),
@@ -123,14 +128,28 @@ impl<'a> BitPackedView<'a> {
     }
 
     /// Unpack codes `[start, start + out.len())` into `out` — the
-    /// range-addressable form of [`unpack_into`](Self::unpack_into).
-    /// Every code decodes with the same mask-and-shift arithmetic
-    /// regardless of which range reads it, so sharded readers reproduce
-    /// the full decode bit-for-bit (the parallel merge path relies on
-    /// this).  Arbitrary `start` is allowed; unaligned lead-in codes
-    /// decode one at a time until the bit cursor reaches a byte
-    /// boundary, then the block decoder takes over.
+    /// range-addressable form of [`unpack_into`](Self::unpack_into),
+    /// over the process-wide active kernel
+    /// ([`simd::active`](crate::quant::simd::active)).
     pub fn unpack_range_into(&self, start: usize, out: &mut [u32]) {
+        self.unpack_range_into_k(crate::quant::simd::active(), start, out);
+    }
+
+    /// [`unpack_range_into`](Self::unpack_range_into) over an explicit
+    /// decode kernel.  Every code decodes with the same mask-and-shift
+    /// arithmetic regardless of which range reads it **or which kernel
+    /// decodes it** (codes are exact integers), so sharded readers
+    /// reproduce the full decode bit-for-bit on any kernel (the
+    /// parallel merge path relies on this).  Arbitrary `start` is
+    /// allowed; unaligned lead-in codes decode one at a time until the
+    /// bit cursor reaches a byte boundary, then the block decoder takes
+    /// over.
+    pub fn unpack_range_into_k(
+        &self,
+        kernel: crate::quant::simd::Kernel,
+        start: usize,
+        out: &mut [u32],
+    ) {
         assert!(
             start.checked_add(out.len()).is_some_and(|end| end <= self.len),
             "code range [{start}, {start}+{}) outside 0..{}",
@@ -148,7 +167,7 @@ impl<'a> BitPackedView<'a> {
             return;
         }
         let byte0 = ((start + i) * bits) / 8;
-        let done = unpack_blocks(self.bits, &self.bytes[byte0..], aligned);
+        let done = crate::quant::simd::unpack_blocks(kernel, self.bits, &self.bytes[byte0..], aligned);
         for (j, o) in aligned[done..].iter_mut().enumerate() {
             *o = self.get(start + i + done + j);
         }
@@ -262,7 +281,7 @@ impl BitPacked {
                     self.words.len() * 8,
                 )
             };
-            let done = unpack_blocks(self.bits, bytes, out);
+            let done = unpack_blocks_scalar(self.bits, bytes, out);
             for (i, o) in out[done..].iter_mut().enumerate() {
                 *o = self.get(done + i);
             }

@@ -27,6 +27,7 @@ pub fn dequant_merge_checkpoints(
     if taus.len() != lams.len() {
         bail!("taus/lams length mismatch: {} vs {}", taus.len(), lams.len());
     }
+    let kernel = super::simd::active();
     let mut out = pre.clone();
     // Scratch reused across tensors and tasks.
     let mut codes: Vec<u32> = Vec::new();
@@ -42,9 +43,7 @@ pub fn dequant_merge_checkpoints(
             qt.codes.unpack_into(&mut codes);
             let a = lam * qt.params.scale;
             let b = -lam * qt.params.scale * qt.params.zp;
-            for (dst, &c) in acc.data_mut().iter_mut().zip(codes.iter()) {
-                *dst += a * c as f32 + b;
-            }
+            super::simd::axpy_affine(kernel, a, b, &codes, acc.data_mut());
         }
     }
     Ok(out)
@@ -65,7 +64,9 @@ pub fn dequant_merge_flat(
 }
 
 /// Accumulate `out += sum_t lams[t] * dq(taus[t])` in place — the shared
-/// inner loop of the TVQ and RTVQ serving paths.
+/// inner loop of the TVQ and RTVQ serving paths, dispatched over the
+/// process-wide active SIMD kernel (the affine axpy is elementwise, so
+/// every kernel is bit-identical to the scalar reference).
 pub fn dequant_axpy(
     taus: &[&GroupQuantized],
     lams: &[f32],
@@ -74,6 +75,7 @@ pub fn dequant_axpy(
     if taus.len() != lams.len() {
         bail!("taus/lams length mismatch");
     }
+    let kernel = super::simd::active();
     let mut codes: Vec<u32> = Vec::new();
     for (gq, &lam) in taus.iter().zip(lams) {
         if gq.len() != out.len() {
@@ -85,10 +87,7 @@ pub fn dequant_axpy(
             let a = lam * gq.scales[gi];
             let b = -a * gq.zps[gi];
             let base = gi * gq.group;
-            let dst = &mut out[base..base + gq.group];
-            for (d, &c) in dst.iter_mut().zip(chunk) {
-                *d += a * c as f32 + b;
-            }
+            super::simd::axpy_affine(kernel, a, b, chunk, &mut out[base..base + gq.group]);
         }
     }
     Ok(())

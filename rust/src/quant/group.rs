@@ -229,14 +229,29 @@ impl<'a> GroupQuantizedView<'a> {
     }
 
     /// Sharded accumulate: `out[i] += lam * dq(self)[g0 * group + i]`
-    /// over the groups `[g0, g0 + out.len() / group)`.  `out` must be a
-    /// whole number of groups that fits inside the payload.  The
-    /// per-element arithmetic is the same `a * code + b` the full
-    /// [`axpy_into`](Self::axpy_into) runs (which delegates here), so a
-    /// set of disjoint shards reproduces the full pass bit-for-bit —
-    /// the parallel fused-merge invariant.
+    /// over the groups `[g0, g0 + out.len() / group)`, on the
+    /// process-wide active kernel.
     pub fn axpy_groups_into(
         &self,
+        lam: f32,
+        g0: usize,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+    ) -> Result<()> {
+        self.axpy_groups_into_k(super::simd::active(), lam, g0, out, codes_scratch)
+    }
+
+    /// [`axpy_groups_into`](Self::axpy_groups_into) over an explicit
+    /// kernel.  `out` must be a whole number of groups that fits inside
+    /// the payload.  The per-element arithmetic is the same
+    /// `a * code + b` the full [`axpy_into`](Self::axpy_into) runs
+    /// (which delegates here) — and every SIMD kernel replays that op
+    /// sequence per lane — so a set of disjoint shards reproduces the
+    /// full pass bit-for-bit on any kernel: the parallel fused-merge
+    /// invariant, extended to "any thread count × any kernel".
+    pub fn axpy_groups_into_k(
+        &self,
+        kernel: super::simd::Kernel,
         lam: f32,
         g0: usize,
         out: &mut [f32],
@@ -251,16 +266,13 @@ impl<'a> GroupQuantizedView<'a> {
             );
         }
         codes_scratch.resize(out.len(), 0);
-        self.codes.unpack_range_into(g0 * self.group, codes_scratch);
+        self.codes.unpack_range_into_k(kernel, g0 * self.group, codes_scratch);
         for (li, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
             let gi = g0 + li;
             let a = lam * self.scale(gi);
             let b = -a * self.zp(gi);
             let base = li * self.group;
-            let dst = &mut out[base..base + self.group];
-            for (d, &c) in dst.iter_mut().zip(chunk) {
-                *d += a * c as f32 + b;
-            }
+            super::simd::axpy_affine(kernel, a, b, chunk, &mut out[base..base + self.group]);
         }
         Ok(())
     }
@@ -274,12 +286,38 @@ impl<'a> GroupQuantizedView<'a> {
         self.dequantize_groups_into(0, out, codes_scratch);
     }
 
+    /// [`dequantize_into`](Self::dequantize_into) over an explicit
+    /// kernel (the serve paths thread
+    /// [`ExecCtx::kernel`](crate::util::exec::ExecCtx::kernel) here).
+    pub fn dequantize_into_k(
+        &self,
+        kernel: super::simd::Kernel,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+    ) {
+        assert_eq!(out.len(), self.len());
+        self.dequantize_groups_into_k(kernel, 0, out, codes_scratch);
+    }
+
     /// Sharded dequantize: overwrite `out` with the decoded values of
-    /// groups `[g0, g0 + out.len() / group)`.  Same per-element
-    /// `scale * (code - zp)` as the full decode (which delegates here),
-    /// so sharded readers are bit-exact.
+    /// groups `[g0, g0 + out.len() / group)`, on the process-wide
+    /// active kernel.
     pub fn dequantize_groups_into(
         &self,
+        g0: usize,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+    ) {
+        self.dequantize_groups_into_k(super::simd::active(), g0, out, codes_scratch);
+    }
+
+    /// [`dequantize_groups_into`](Self::dequantize_groups_into) over an
+    /// explicit kernel.  Same per-element `scale * (code - zp)` as the
+    /// full decode (which delegates here) on every kernel, so sharded
+    /// readers are bit-exact.
+    pub fn dequantize_groups_into_k(
+        &self,
+        kernel: super::simd::Kernel,
         g0: usize,
         out: &mut [f32],
         codes_scratch: &mut Vec<u32>,
@@ -292,15 +330,13 @@ impl<'a> GroupQuantizedView<'a> {
             self.group
         );
         codes_scratch.resize(out.len(), 0);
-        self.codes.unpack_range_into(g0 * self.group, codes_scratch);
+        self.codes.unpack_range_into_k(kernel, g0 * self.group, codes_scratch);
         for (li, chunk) in codes_scratch.chunks_exact(self.group).enumerate() {
             let gi = g0 + li;
             let scale = self.scale(gi);
             let zp = self.zp(gi);
             let base = li * self.group;
-            for (j, &c) in chunk.iter().enumerate() {
-                out[base + j] = scale * (c as f32 - zp);
-            }
+            super::simd::dequant_affine(kernel, scale, zp, chunk, &mut out[base..base + self.group]);
         }
     }
 

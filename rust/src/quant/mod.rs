@@ -20,6 +20,9 @@
 //!   behind the planner's OneBit arm and the serve-time dynamic-merge
 //!   switches (kind-5 sections).
 //! * [`fused`] — native fused dequantize-and-merge (the L3 hot path).
+//! * [`simd`] — runtime-dispatched SIMD kernels behind the decode/axpy
+//!   hot loops (AVX2 / SSE4.1 / NEON), bit-identical to the scalar
+//!   reference on every lane.
 //! * [`storage`] — exact storage accounting / effective bits-per-task.
 
 pub mod affine;
@@ -29,6 +32,7 @@ pub mod channel;
 pub mod fused;
 pub mod group;
 pub mod rtvq;
+pub mod simd;
 pub mod sparse;
 pub mod storage;
 pub mod tvq;
@@ -39,6 +43,7 @@ pub use bitpack::{BitPacked, BitPackedView};
 pub use channel::{ChannelQuantized, Granularity};
 pub use group::{GroupQuantized, GroupQuantizedView};
 pub use rtvq::Rtvq;
+pub use simd::Kernel;
 pub use sparse::{SparseGroupQuantized, SparseGroupQuantizedView};
 pub use storage::StorageReport;
 pub use tvq::{QuantizedCheckpoint, QuantizedTensor, Tvq};

@@ -1,0 +1,395 @@
+//! Runtime-dispatched SIMD kernels for the four serve-path primitives.
+//!
+//! Since PR 5 the pool fans fused merge across disjoint output shards,
+//! but every per-shard inner loop — low-bit unpack, group dequant-axpy,
+//! sparse scatter-axpy, 1-bit sign-axpy — was scalar Rust, so
+//! single-core throughput capped the fleet.  This module adds explicit
+//! `#[target_feature]` kernels (AVX2 and SSE4.1 on x86_64, NEON on
+//! aarch64) behind a table chosen **once** at startup and threaded
+//! through [`ExecCtx`](crate::util::exec::ExecCtx).
+//!
+//! # Determinism contract
+//!
+//! The PR-5 contract — bit-identical f32 output at every thread count —
+//! extends here to *any thread count × any kernel*: every SIMD kernel
+//! must produce **bit-identical** output to the scalar path, which stays
+//! the reference (`threads=1 × scalar`).  This is possible because all
+//! four primitives are purely elementwise: accumulation across tasks
+//! happens sequentially in the caller's per-task loop, and no kernel
+//! performs a cross-lane reduction.  Each SIMD lane therefore issues the
+//! *same IEEE-754 op sequence* as the scalar loop for its element:
+//!
+//! * unpack: integer shift/mask — exact by construction;
+//! * group axpy: `t = a * code; t = t + b; d = d + t` (never a fused
+//!   multiply-add intrinsic — rustc does not contract the scalar form,
+//!   so an FMA kernel would round differently);
+//! * dequant: `t = code - zp; o = scale * t`;
+//! * binary: `±a` is a sign-bit XOR (exact for every value, including
+//!   NaN scales) followed by one add;
+//! * sparse scatter: the masked-scatter kernels blend **original
+//!   output bits** back into untouched lanes — adding `lam * 0.0`
+//!   would flip `-0.0` to `+0.0` and break exactness.
+//!
+//! Group boundaries make lane-order preservation cheap: dense shards are
+//! group-aligned and sparse/binary shards are mask-byte-aligned (PR-5
+//! geometry), so per-group coefficients change only at positions a
+//! vector never straddles mid-register without the kernel re-deriving
+//! them exactly as the scalar loop would.
+//!
+//! `rust/tests/simd_parity.rs` pins the contract for every kernel
+//! [`detected`] on the running machine; `TVQ_SIMD=off|sse4|avx2|neon`
+//! overrides the automatic choice for A/B testing.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+mod tables;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// One decode-kernel implementation.  Values are only ever produced for
+/// kernels the running CPU supports (see [`active`] / [`detected`] /
+/// [`Kernel::parse`]); the dispatchers debug-assert availability before
+/// entering a `#[target_feature]` body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar loops — the determinism reference on every arch.
+    Scalar,
+    /// x86_64 SSE4.1: 4-wide f32, nibble/byte unpack.
+    Sse41,
+    /// x86_64 AVX2: 8-wide f32, variable-shift unpack, masked scatter.
+    Avx2,
+    /// aarch64 NEON: 4-wide f32, nibble/byte unpack.
+    Neon,
+}
+
+impl Kernel {
+    /// Stable lowercase label (bench rows, logs, `TVQ_SIMD` values).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Sse41 => "sse4",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+
+    /// Whether this kernel can run on the current CPU.
+    pub fn is_available(&self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse41 => std::arch::is_x86_feature_detected!("sse4.1"),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Parse a `TVQ_SIMD` value; `None` means "auto" (best available).
+    /// Unknown or unavailable selections fall back to auto so a stale
+    /// env var can never wedge serving (the caller warns).
+    fn parse(v: &str) -> Option<Kernel> {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "0" => Some(Kernel::Scalar),
+            "sse4" | "sse4.1" | "sse41" => Some(Kernel::Sse41),
+            "avx2" => Some(Kernel::Avx2),
+            "neon" => Some(Kernel::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Best kernel the CPU supports, in preference order.
+fn best_available() -> Kernel {
+    for k in [Kernel::Avx2, Kernel::Neon, Kernel::Sse41] {
+        if k.is_available() {
+            return k;
+        }
+    }
+    Kernel::Scalar
+}
+
+/// The process-wide kernel choice, resolved exactly once: the `TVQ_SIMD`
+/// override if set, valid, and available on this CPU, else the best
+/// detected kernel.  Every [`ExecCtx`](crate::util::exec::ExecCtx)
+/// defaults to this, so all serve paths agree on one kernel unless a
+/// caller pins another explicitly.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("TVQ_SIMD") {
+        Err(_) => best_available(),
+        Ok(v) if v.trim().is_empty() || v.trim().eq_ignore_ascii_case("auto") => best_available(),
+        Ok(v) => match Kernel::parse(&v) {
+            Some(k) if k.is_available() => k,
+            Some(k) => {
+                eprintln!(
+                    "tvq: TVQ_SIMD={v} requests the {} kernel, which this CPU \
+                     does not support; using {}",
+                    k.label(),
+                    best_available().label()
+                );
+                best_available()
+            }
+            None => {
+                eprintln!(
+                    "tvq: unknown TVQ_SIMD value {v:?} (want off|sse4|avx2|neon|auto); \
+                     using {}",
+                    best_available().label()
+                );
+                best_available()
+            }
+        },
+    })
+}
+
+/// Every kernel usable on this machine, scalar first — the set the
+/// parity suite checks against the scalar reference.
+pub fn detected() -> Vec<Kernel> {
+    let mut out = vec![Kernel::Scalar];
+    for k in [Kernel::Sse41, Kernel::Avx2, Kernel::Neon] {
+        if k.is_available() {
+            out.push(k);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched primitives.  Each takes the kernel explicitly (callers get it
+// from `ExecCtx::kernel()`); the scalar arms are the exact loops the quant
+// views ran before this module existed.
+// ---------------------------------------------------------------------------
+
+/// Decode leading whole byte-blocks of `out` from `bytes` (codes of
+/// `bits` width, LSB-first), returning how many codes were written.  The
+/// caller finishes the ragged tail code-by-code, so a kernel may stop at
+/// any block multiple it likes; every decoded prefix is exact integers,
+/// identical across kernels.  Odd widths (3/5/6/7) always take the
+/// scalar block decoder.
+pub fn unpack_blocks(k: Kernel, bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
+    debug_assert!(k.is_available());
+    match k {
+        Kernel::Scalar => super::bitpack::unpack_blocks_scalar(bits, bytes, out),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse41 => unsafe { x86::unpack_blocks_sse41(bits, bytes, out) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::unpack_blocks_avx2(bits, bytes, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::unpack_blocks_neon(bits, bytes, out) },
+        #[allow(unreachable_patterns)]
+        _ => super::bitpack::unpack_blocks_scalar(bits, bytes, out),
+    }
+}
+
+/// `dst[i] += a * codes[i] + b` — the fused group-axpy inner loop.  The
+/// per-group coefficients `a = lam * scale`, `b = -a * zp` are computed
+/// by the caller exactly as the scalar path always has.
+pub fn axpy_affine(k: Kernel, a: f32, b: f32, codes: &[u32], dst: &mut [f32]) {
+    debug_assert!(k.is_available());
+    debug_assert_eq!(codes.len(), dst.len());
+    match k {
+        Kernel::Scalar => axpy_affine_scalar(a, b, codes, dst),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse41 => unsafe { x86::axpy_affine_sse41(a, b, codes, dst) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::axpy_affine_avx2(a, b, codes, dst) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::axpy_affine_neon(a, b, codes, dst) },
+        #[allow(unreachable_patterns)]
+        _ => axpy_affine_scalar(a, b, codes, dst),
+    }
+}
+
+#[inline]
+pub(crate) fn axpy_affine_scalar(a: f32, b: f32, codes: &[u32], dst: &mut [f32]) {
+    for (d, &c) in dst.iter_mut().zip(codes) {
+        *d += a * c as f32 + b;
+    }
+}
+
+/// `out[i] = scale * (codes[i] - zp)` — the group dequantize inner loop.
+pub fn dequant_affine(k: Kernel, scale: f32, zp: f32, codes: &[u32], out: &mut [f32]) {
+    debug_assert!(k.is_available());
+    debug_assert_eq!(codes.len(), out.len());
+    match k {
+        Kernel::Scalar => dequant_affine_scalar(scale, zp, codes, out),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse41 => unsafe { x86::dequant_affine_sse41(scale, zp, codes, out) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::dequant_affine_avx2(scale, zp, codes, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::dequant_affine_neon(scale, zp, codes, out) },
+        #[allow(unreachable_patterns)]
+        _ => dequant_affine_scalar(scale, zp, codes, out),
+    }
+}
+
+#[inline]
+pub(crate) fn dequant_affine_scalar(scale: f32, zp: f32, codes: &[u32], out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = scale * (c as f32 - zp);
+    }
+}
+
+/// Sparse scatter-accumulate over one mask-byte-aligned dense range:
+/// for each set bit `j` of `mask[bi]`, `out[bi*8 + j] += lam * vals[r]`
+/// where `r` starts at `first_rank` and increments in ascending
+/// bit order.  `out` may end mid-byte (the final partial mask byte);
+/// masked-out lanes keep their exact original bits.  The AVX2 kernel
+/// reads an 8-float `vals` window per byte — callers over-allocate
+/// `vals` by [`SPARSE_VALS_SLACK`] so the window never runs off the end
+/// (the kernel still guards and falls back per-byte, so any geometry is
+/// memory-safe).
+pub fn sparse_scatter_axpy(
+    k: Kernel,
+    lam: f32,
+    mask: &[u8],
+    vals: &[f32],
+    first_rank: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(k.is_available());
+    debug_assert!(out.len() <= mask.len() * 8);
+    match k {
+        Kernel::Scalar => sparse_scatter_axpy_scalar(lam, mask, vals, first_rank, out),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse41 => unsafe { x86::sparse_scatter_axpy_sse41(lam, mask, vals, first_rank, out) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::sparse_scatter_axpy_avx2(lam, mask, vals, first_rank, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::sparse_scatter_axpy_neon(lam, mask, vals, first_rank, out) },
+        #[allow(unreachable_patterns)]
+        _ => sparse_scatter_axpy_scalar(lam, mask, vals, first_rank, out),
+    }
+}
+
+/// Extra f32 slots callers append to a survivor-values scratch so the
+/// vector kernels' 8-wide window loads stay in bounds on the last group.
+/// The slack is never *indexed* (only lanes blended away read it), so
+/// its contents are irrelevant.
+pub const SPARSE_VALS_SLACK: usize = 8;
+
+#[inline]
+pub(crate) fn sparse_scatter_axpy_scalar(
+    lam: f32,
+    mask: &[u8],
+    vals: &[f32],
+    first_rank: usize,
+    out: &mut [f32],
+) {
+    let mut r = first_rank;
+    for (bi, &byte) in mask.iter().enumerate() {
+        let mut b = byte;
+        while b != 0 {
+            let bit = b.trailing_zeros() as usize;
+            out[bi * 8 + bit] += lam * vals[r];
+            r += 1;
+            b &= b - 1;
+        }
+    }
+}
+
+/// 1-bit signed accumulate over one group's dense element range:
+/// `out[j] += if sign_bit(start + j) { a } else { -a }`, sign bits read
+/// LSB-first from `signs` at absolute element indices.  The caller has
+/// already folded `a = lam * scale(group)`, so all elements of the call
+/// share one coefficient; kernels handle bit-cursor alignment
+/// internally (scalar lead-in/tail around whole sign bytes).
+pub fn signed_axpy(k: Kernel, a: f32, signs: &[u8], start: usize, out: &mut [f32]) {
+    debug_assert!(k.is_available());
+    debug_assert!(start + out.len() <= signs.len() * 8);
+    match k {
+        Kernel::Scalar => signed_axpy_scalar(a, signs, start, out),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse41 => unsafe { x86::signed_axpy_sse41(a, signs, start, out) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::signed_axpy_avx2(a, signs, start, out) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { neon::signed_axpy_neon(a, signs, start, out) },
+        #[allow(unreachable_patterns)]
+        _ => signed_axpy_scalar(a, signs, start, out),
+    }
+}
+
+#[inline]
+pub(crate) fn signed_axpy_scalar(a: f32, signs: &[u8], start: usize, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let i = start + j;
+        let bit = (signs[i / 8] >> (i % 8)) & 1;
+        *o += if bit == 1 { a } else { -a };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_round_trip_through_parse() {
+        for k in [Kernel::Scalar, Kernel::Sse41, Kernel::Avx2, Kernel::Neon] {
+            assert_eq!(Kernel::parse(k.label()), Some(k), "{}", k.label());
+        }
+        assert_eq!(Kernel::parse("off"), Some(Kernel::Scalar));
+        assert_eq!(Kernel::parse("SSE4.1"), Some(Kernel::Sse41));
+        assert_eq!(Kernel::parse("bogus"), None);
+        assert_eq!(Kernel::parse("auto"), None, "auto is handled before parse");
+    }
+
+    #[test]
+    fn detected_always_includes_scalar_and_only_available_kernels() {
+        let ks = detected();
+        assert_eq!(ks[0], Kernel::Scalar);
+        for k in &ks {
+            assert!(k.is_available(), "{} listed but unavailable", k.label());
+        }
+        assert!(ks.len() <= 3, "at most scalar + two per-arch kernels");
+    }
+
+    #[test]
+    fn active_is_stable_and_available() {
+        let a = active();
+        assert!(a.is_available());
+        assert_eq!(active(), a, "OnceLock: one choice per process");
+    }
+
+    #[test]
+    fn scalar_primitives_match_reference_loops() {
+        // The scalar arms ARE the reference; pin their arithmetic shape
+        // so a refactor can't silently change the op order every SIMD
+        // kernel mirrors.
+        let codes = [0u32, 3, 7, 255, 128, 1, 64, 9, 2];
+        let mut dst = vec![0.5f32; codes.len()];
+        axpy_affine(Kernel::Scalar, 0.25, -0.75, &codes, &mut dst);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(dst[i], 0.5 + (0.25 * c as f32 + -0.75));
+        }
+        let mut out = vec![0.0f32; codes.len()];
+        dequant_affine(Kernel::Scalar, 0.125, 3.5, &codes, &mut out);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(out[i], 0.125 * (c as f32 - 3.5));
+        }
+        // Signed axpy: -a must be an exact sign flip.
+        let signs = [0b1010_0110u8, 0xFF];
+        let mut acc = vec![1.0f32; 10];
+        signed_axpy(Kernel::Scalar, 0.5, &signs, 3, &mut acc);
+        for (j, &v) in acc.iter().enumerate() {
+            let i = 3 + j;
+            let bit = (signs[i / 8] >> (i % 8)) & 1;
+            assert_eq!(v, 1.0 + if bit == 1 { 0.5 } else { -0.5 });
+        }
+        // Sparse scatter: untouched positions keep their bits (incl. -0.0).
+        let mask = [0b0000_0101u8];
+        let vals = [10.0f32, 20.0];
+        let mut o = vec![-0.0f32; 8];
+        sparse_scatter_axpy(Kernel::Scalar, 1.0, &mask, &vals, 0, &mut o);
+        assert_eq!(o[0], 10.0);
+        assert_eq!(o[2], 20.0);
+        assert!(o[1].is_sign_negative() && o[1] == 0.0, "untouched lane keeps -0.0");
+    }
+}

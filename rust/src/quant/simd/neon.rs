@@ -1,0 +1,142 @@
+//! aarch64 NEON kernels (4-wide f32).
+//!
+//! Same lane-exactness rules as the x86 kernels: explicit `vmul` +
+//! `vadd` pairs (never `vmla`/`vfma`, which fuse), `±a` as a sign-bit
+//! XOR, and scalar fallbacks wherever a vector path would have to
+//! change the op sequence.  See [`super`] for the determinism contract.
+//!
+//! # Safety
+//!
+//! `#[target_feature(enable = "neon")]` — NEON is baseline on aarch64,
+//! but callers still route through the detected-kernel dispatchers.
+
+use std::arch::aarch64::*;
+
+use super::tables;
+use crate::quant::bitpack::unpack_blocks_scalar;
+
+/// Zero-extend 8 byte codes to 8 u32s.
+#[target_feature(enable = "neon")]
+unsafe fn widen_8_bytes(v: uint8x8_t, out: *mut u32) {
+    let w = vmovl_u8(v);
+    vst1q_u32(out, vmovl_u16(vget_low_u16(w)));
+    vst1q_u32(out.add(4), vmovl_u16(vget_high_u16(w)));
+}
+
+/// Decode full blocks for width 4 (nibble split + zip, 16 codes per 8
+/// bytes) and width 8 (byte zero-extension); other widths fall back to
+/// the scalar block decoder.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn unpack_blocks_neon(bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
+    match bits {
+        4 => {
+            let n = (out.len() / 16).min(bytes.len() / 8);
+            for i in 0..n {
+                let v = vld1_u8(bytes.as_ptr().add(i * 8));
+                let lo = vand_u8(v, vdup_n_u8(0x0F));
+                let hi = vshr_n_u8::<4>(v);
+                // lo0,hi0,lo1,hi1,... == c0,c1,c2,c3,... in stream order.
+                let z = vzip_u8(lo, hi);
+                widen_8_bytes(z.0, out.as_mut_ptr().add(i * 16));
+                widen_8_bytes(z.1, out.as_mut_ptr().add(i * 16 + 8));
+            }
+            n * 16
+        }
+        8 => {
+            let n = (out.len() / 8).min(bytes.len() / 8);
+            for i in 0..n {
+                let v = vld1_u8(bytes.as_ptr().add(i * 8));
+                widen_8_bytes(v, out.as_mut_ptr().add(i * 8));
+            }
+            n * 8
+        }
+        _ => unpack_blocks_scalar(bits, bytes, out),
+    }
+}
+
+/// `dst[i] += a * codes[i] + b`, 4 lanes at a time.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy_affine_neon(a: f32, b: f32, codes: &[u32], dst: &mut [f32]) {
+    let a4 = vdupq_n_f32(a);
+    let b4 = vdupq_n_f32(b);
+    let n = dst.len() / 4 * 4;
+    for i in (0..n).step_by(4) {
+        let c = vld1q_u32(codes.as_ptr().add(i));
+        // Codes are <= 255: the unsigned convert equals `c as f32`.
+        let cf = vcvtq_f32_u32(c);
+        let t = vaddq_f32(vmulq_f32(a4, cf), b4);
+        let d = vld1q_f32(dst.as_ptr().add(i));
+        vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, t));
+    }
+    super::axpy_affine_scalar(a, b, &codes[n..], &mut dst[n..]);
+}
+
+/// `out[i] = scale * (codes[i] - zp)`, 4 lanes at a time.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dequant_affine_neon(scale: f32, zp: f32, codes: &[u32], out: &mut [f32]) {
+    let s4 = vdupq_n_f32(scale);
+    let z4 = vdupq_n_f32(zp);
+    let n = out.len() / 4 * 4;
+    for i in (0..n).step_by(4) {
+        let c = vld1q_u32(codes.as_ptr().add(i));
+        let cf = vcvtq_f32_u32(c);
+        let t = vsubq_f32(cf, z4);
+        vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(s4, t));
+    }
+    super::dequant_affine_scalar(scale, zp, &codes[n..], &mut out[n..]);
+}
+
+/// Survivor scatter: saturated (0xFF) mask bytes take two 4-wide axpys;
+/// partial bytes walk bits exactly like the scalar kernel.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn sparse_scatter_axpy_neon(
+    lam: f32,
+    mask: &[u8],
+    vals: &[f32],
+    first_rank: usize,
+    out: &mut [f32],
+) {
+    let lam4 = vdupq_n_f32(lam);
+    let mut rank = first_rank;
+    for (bi, &byte) in mask.iter().enumerate() {
+        let o = bi * 8;
+        if byte == 0xFF && o + 8 <= out.len() && rank + 8 <= vals.len() {
+            for half in 0..2 {
+                let p = o + half * 4;
+                let v = vld1q_f32(vals.as_ptr().add(rank + half * 4));
+                let d = vld1q_f32(out.as_ptr().add(p));
+                vst1q_f32(out.as_mut_ptr().add(p), vaddq_f32(d, vmulq_f32(lam4, v)));
+            }
+            rank += 8;
+        } else {
+            let mut b = byte;
+            while b != 0 {
+                let bit = b.trailing_zeros() as usize;
+                out[o + bit] += lam * vals[rank];
+                rank += 1;
+                b &= b - 1;
+            }
+        }
+    }
+}
+
+/// One-group signed accumulate, two 4-lane halves per sign byte.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn signed_axpy_neon(a: f32, signs: &[u8], start: usize, out: &mut [f32]) {
+    let h = ((8 - start % 8) % 8).min(out.len());
+    super::signed_axpy_scalar(a, signs, start, &mut out[..h]);
+    let a4 = vreinterpretq_u32_f32(vdupq_n_f32(a));
+    let mut j = h;
+    while j + 8 <= out.len() {
+        let byte = signs[(start + j) / 8] as usize;
+        let row = tables::SIGN_FLIP[byte].as_ptr();
+        for half in 0..2 {
+            let flip = vld1q_u32(row.add(half * 4));
+            let v = vreinterpretq_f32_u32(veorq_u32(a4, flip));
+            let d = vld1q_f32(out.as_ptr().add(j + half * 4));
+            vst1q_f32(out.as_mut_ptr().add(j + half * 4), vaddq_f32(d, v));
+        }
+        j += 8;
+    }
+    super::signed_axpy_scalar(a, signs, start + j, &mut out[j..]);
+}

@@ -1,0 +1,110 @@
+//! Per-mask-byte lookup tables for the vector kernels, built at compile
+//! time.  All three are indexed by one LSB-first mask/sign byte and give
+//! one 8-lane row (lane `j` = bit `j`), so a kernel turns a byte of
+//! bitmap into vector operands with a single unaligned row load.
+
+/// Sparse survivor expansion: lane `j` holds the *rank offset* of bit
+/// `j` within its byte (the popcount of bits `0..j`) when bit `j` is
+/// set, else 0.  `permute(vals_window, row)` then places `vals[rank]`
+/// into each survivor lane; non-survivor lanes pick up garbage that the
+/// blend discards.
+#[cfg(target_arch = "x86_64")]
+pub(super) static EXPAND_IDX: [[u32; 8]; 256] = build_expand_idx();
+
+#[cfg(target_arch = "x86_64")]
+const fn build_expand_idx() -> [[u32; 8]; 256] {
+    let mut t = [[0u32; 8]; 256];
+    let mut m = 0usize;
+    while m < 256 {
+        let mut rank = 0u32;
+        let mut j = 0usize;
+        while j < 8 {
+            if (m >> j) & 1 == 1 {
+                t[m][j] = rank;
+                rank += 1;
+            }
+            j += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+/// Survivor lane mask: all-ones where the bit is set, zero elsewhere —
+/// the blend selector that writes computed lanes and preserves the
+/// exact original bits of untouched lanes.
+#[cfg(target_arch = "x86_64")]
+pub(super) static LANE_MASK: [[u32; 8]; 256] = build_lane_mask();
+
+#[cfg(target_arch = "x86_64")]
+const fn build_lane_mask() -> [[u32; 8]; 256] {
+    let mut t = [[0u32; 8]; 256];
+    let mut m = 0usize;
+    while m < 256 {
+        let mut j = 0usize;
+        while j < 8 {
+            if (m >> j) & 1 == 1 {
+                t[m][j] = u32::MAX;
+            }
+            j += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+/// 1-bit sign expansion: lane `j` is `0` where the sign bit is set
+/// (element reconstructs as `+a`) and the f32 sign-bit mask
+/// `0x8000_0000` where clear (`-a`).  XOR-ing a broadcast `a` with a
+/// row computes `±a` as an exact bit flip — identical to the scalar
+/// `-a` for every value including NaN and denormal scales.
+pub(super) static SIGN_FLIP: [[u32; 8]; 256] = build_sign_flip();
+
+const fn build_sign_flip() -> [[u32; 8]; 256] {
+    let mut t = [[0u32; 8]; 256];
+    let mut m = 0usize;
+    while m < 256 {
+        let mut j = 0usize;
+        while j < 8 {
+            if (m >> j) & 1 == 0 {
+                t[m][j] = 0x8000_0000;
+            }
+            j += 1;
+        }
+        m += 1;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_flip_rows_match_bit_semantics() {
+        for m in 0usize..256 {
+            for j in 0..8 {
+                let want = if (m >> j) & 1 == 1 { 0 } else { 0x8000_0000 };
+                assert_eq!(SIGN_FLIP[m][j], want, "byte {m:#04x} lane {j}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn expand_rows_are_prefix_popcounts() {
+        for m in 0usize..256 {
+            let mut rank = 0u32;
+            for j in 0..8 {
+                if (m >> j) & 1 == 1 {
+                    assert_eq!(EXPAND_IDX[m][j], rank, "byte {m:#04x} lane {j}");
+                    assert_eq!(LANE_MASK[m][j], u32::MAX);
+                    rank += 1;
+                } else {
+                    assert_eq!(LANE_MASK[m][j], 0);
+                }
+            }
+            assert_eq!(rank, (m as u8).count_ones());
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! x86_64 kernels: AVX2 (8-wide) and SSE4.1 (4-wide).
+//!
+//! Every function here replays the scalar op sequence lane-by-lane —
+//! separate multiply and add, never an FMA intrinsic (rustc does not
+//! contract the scalar loops, so a fused kernel would round
+//! differently) — and the masked-scatter kernel blends the *original*
+//! output bits back into untouched lanes rather than adding zeros
+//! (adding `lam * 0.0` would turn `-0.0` into `+0.0`).  See the module
+//! docs in [`super`] for the full determinism argument.
+//!
+//! # Safety
+//!
+//! All functions are `#[target_feature]`-gated and must only be called
+//! after the matching `is_x86_feature_detected!` check — the dispatchers
+//! in [`super`] guarantee that (kernels come from `active()` /
+//! `detected()` / a validated `TVQ_SIMD` parse).
+
+use std::arch::x86_64::*;
+
+use super::tables;
+use crate::quant::bitpack::unpack_blocks_scalar;
+
+// ---------------------------------------------------------------------------
+// AVX2
+// ---------------------------------------------------------------------------
+
+/// Decode full 8-code blocks for widths 1/2/4 (one broadcast word,
+/// per-lane variable shifts) and width 8 (byte zero-extension); odd
+/// widths fall back to the scalar block decoder.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn unpack_blocks_avx2(bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
+    let (bpb, mask, shifts): (usize, i32, __m256i) = match bits {
+        1 => (1, 0x1, _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7)),
+        2 => (2, 0x3, _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14)),
+        4 => (4, 0xF, _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28)),
+        8 => {
+            let n = (out.len() / 8).min(bytes.len() / 8);
+            for i in 0..n {
+                let v = _mm_loadl_epi64(bytes.as_ptr().add(i * 8) as *const __m128i);
+                let w = _mm256_cvtepu8_epi32(v);
+                _mm256_storeu_si256(out.as_mut_ptr().add(i * 8) as *mut __m256i, w);
+            }
+            return n * 8;
+        }
+        _ => return unpack_blocks_scalar(bits, bytes, out),
+    };
+    let mask8 = _mm256_set1_epi32(mask);
+    // `bpb` little-endian bytes hold 8 codes (8 * bits bits); broadcast
+    // them as one word and shift each lane to its own code.
+    let n = (out.len() / 8).min(bytes.len() / bpb);
+    for i in 0..n {
+        let mut w = 0u32;
+        for (s, &b) in bytes[i * bpb..(i + 1) * bpb].iter().enumerate() {
+            w |= (b as u32) << (8 * s);
+        }
+        let v = _mm256_srlv_epi32(_mm256_set1_epi32(w as i32), shifts);
+        _mm256_storeu_si256(
+            out.as_mut_ptr().add(i * 8) as *mut __m256i,
+            _mm256_and_si256(v, mask8),
+        );
+    }
+    n * 8
+}
+
+/// `dst[i] += a * codes[i] + b`, 8 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy_affine_avx2(a: f32, b: f32, codes: &[u32], dst: &mut [f32]) {
+    let a8 = _mm256_set1_ps(a);
+    let b8 = _mm256_set1_ps(b);
+    let n = dst.len() / 8 * 8;
+    for i in (0..n).step_by(8) {
+        let c = _mm256_loadu_si256(codes.as_ptr().add(i) as *const __m256i);
+        // Codes are <= 255, so the signed epi32 convert equals `c as f32`.
+        let cf = _mm256_cvtepi32_ps(c);
+        let t = _mm256_add_ps(_mm256_mul_ps(a8, cf), b8);
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, t));
+    }
+    super::axpy_affine_scalar(a, b, &codes[n..], &mut dst[n..]);
+}
+
+/// `out[i] = scale * (codes[i] - zp)`, 8 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dequant_affine_avx2(scale: f32, zp: f32, codes: &[u32], out: &mut [f32]) {
+    let s8 = _mm256_set1_ps(scale);
+    let z8 = _mm256_set1_ps(zp);
+    let n = out.len() / 8 * 8;
+    for i in (0..n).step_by(8) {
+        let c = _mm256_loadu_si256(codes.as_ptr().add(i) as *const __m256i);
+        let cf = _mm256_cvtepi32_ps(c);
+        let t = _mm256_sub_ps(cf, z8);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(s8, t));
+    }
+    super::dequant_affine_scalar(scale, zp, &codes[n..], &mut out[n..]);
+}
+
+/// Masked survivor scatter: per mask byte, expand the next `popcount`
+/// survivor values into their bit lanes (rank table + permute), compute
+/// `out + lam * val` on all 8, and blend so only survivor lanes change.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sparse_scatter_axpy_avx2(
+    lam: f32,
+    mask: &[u8],
+    vals: &[f32],
+    first_rank: usize,
+    out: &mut [f32],
+) {
+    let lam8 = _mm256_set1_ps(lam);
+    let mut rank = first_rank;
+    for (bi, &byte) in mask.iter().enumerate() {
+        if byte == 0 {
+            continue;
+        }
+        let o = bi * 8;
+        if o + 8 <= out.len() && rank + 8 <= vals.len() {
+            let m = byte as usize;
+            let idx = _mm256_loadu_si256(tables::EXPAND_IDX[m].as_ptr() as *const __m256i);
+            let keep = _mm256_loadu_si256(tables::LANE_MASK[m].as_ptr() as *const __m256i);
+            // The window read may cover up to 8 - popcount slack floats
+            // past this byte's survivors; those lanes are blended away.
+            let window = _mm256_loadu_ps(vals.as_ptr().add(rank));
+            let expanded = _mm256_permutevar8x32_ps(window, idx);
+            let orig = _mm256_loadu_ps(out.as_ptr().add(o));
+            let sum = _mm256_add_ps(orig, _mm256_mul_ps(lam8, expanded));
+            let res = _mm256_blendv_ps(orig, sum, _mm256_castsi256_ps(keep));
+            _mm256_storeu_ps(out.as_mut_ptr().add(o), res);
+            rank += byte.count_ones() as usize;
+        } else {
+            // Final partial output byte / exhausted slack: scalar walk.
+            let mut b = byte;
+            while b != 0 {
+                let bit = b.trailing_zeros() as usize;
+                out[o + bit] += lam * vals[rank];
+                rank += 1;
+                b &= b - 1;
+            }
+        }
+    }
+}
+
+/// One-group signed accumulate: `out[j] += ±a` from the sign bitmap,
+/// whole sign bytes as `xor(a, flip_row)` + add, scalar at the edges.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn signed_axpy_avx2(a: f32, signs: &[u8], start: usize, out: &mut [f32]) {
+    let h = ((8 - start % 8) % 8).min(out.len());
+    super::signed_axpy_scalar(a, signs, start, &mut out[..h]);
+    let a8 = _mm256_set1_ps(a);
+    let mut j = h;
+    while j + 8 <= out.len() {
+        let byte = signs[(start + j) / 8] as usize;
+        let flip = _mm256_loadu_si256(tables::SIGN_FLIP[byte].as_ptr() as *const __m256i);
+        let v = _mm256_xor_ps(a8, _mm256_castsi256_ps(flip));
+        let d = _mm256_loadu_ps(out.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(d, v));
+        j += 8;
+    }
+    super::signed_axpy_scalar(a, signs, start + j, &mut out[j..]);
+}
+
+// ---------------------------------------------------------------------------
+// SSE4.1
+// ---------------------------------------------------------------------------
+
+/// Decode full blocks for width 4 (nibble split + byte interleave, 16
+/// codes per 8 bytes) and width 8 (byte zero-extension); widths 1/2 and
+/// the odd widths fall back to the scalar block decoder (the AVX2
+/// variable-shift trick has no cheap SSE equivalent).
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn unpack_blocks_sse41(bits: u8, bytes: &[u8], out: &mut [u32]) -> usize {
+    match bits {
+        4 => {
+            let lo_mask = _mm_set1_epi8(0x0F);
+            let n = (out.len() / 16).min(bytes.len() / 8);
+            for i in 0..n {
+                let v = _mm_loadl_epi64(bytes.as_ptr().add(i * 8) as *const __m128i);
+                let lo = _mm_and_si128(v, lo_mask);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), lo_mask);
+                // lo0,hi0,lo1,hi1,... == c0,c1,c2,c3,... in stream order.
+                let inter = _mm_unpacklo_epi8(lo, hi);
+                widen_16_bytes(inter, out.as_mut_ptr().add(i * 16));
+            }
+            n * 16
+        }
+        8 => {
+            let n = (out.len() / 16).min(bytes.len() / 16);
+            for i in 0..n {
+                let v = _mm_loadu_si128(bytes.as_ptr().add(i * 16) as *const __m128i);
+                widen_16_bytes(v, out.as_mut_ptr().add(i * 16));
+            }
+            n * 16
+        }
+        _ => unpack_blocks_scalar(bits, bytes, out),
+    }
+}
+
+/// Zero-extend 16 packed byte codes to 16 u32s.
+#[target_feature(enable = "sse4.1")]
+unsafe fn widen_16_bytes(v: __m128i, out: *mut u32) {
+    _mm_storeu_si128(out as *mut __m128i, _mm_cvtepu8_epi32(v));
+    _mm_storeu_si128(out.add(4) as *mut __m128i, _mm_cvtepu8_epi32(_mm_srli_si128::<4>(v)));
+    _mm_storeu_si128(out.add(8) as *mut __m128i, _mm_cvtepu8_epi32(_mm_srli_si128::<8>(v)));
+    _mm_storeu_si128(out.add(12) as *mut __m128i, _mm_cvtepu8_epi32(_mm_srli_si128::<12>(v)));
+}
+
+/// `dst[i] += a * codes[i] + b`, 4 lanes at a time.
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn axpy_affine_sse41(a: f32, b: f32, codes: &[u32], dst: &mut [f32]) {
+    let a4 = _mm_set1_ps(a);
+    let b4 = _mm_set1_ps(b);
+    let n = dst.len() / 4 * 4;
+    for i in (0..n).step_by(4) {
+        let c = _mm_loadu_si128(codes.as_ptr().add(i) as *const __m128i);
+        let cf = _mm_cvtepi32_ps(c);
+        let t = _mm_add_ps(_mm_mul_ps(a4, cf), b4);
+        let d = _mm_loadu_ps(dst.as_ptr().add(i));
+        _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_add_ps(d, t));
+    }
+    super::axpy_affine_scalar(a, b, &codes[n..], &mut dst[n..]);
+}
+
+/// `out[i] = scale * (codes[i] - zp)`, 4 lanes at a time.
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn dequant_affine_sse41(scale: f32, zp: f32, codes: &[u32], out: &mut [f32]) {
+    let s4 = _mm_set1_ps(scale);
+    let z4 = _mm_set1_ps(zp);
+    let n = out.len() / 4 * 4;
+    for i in (0..n).step_by(4) {
+        let c = _mm_loadu_si128(codes.as_ptr().add(i) as *const __m128i);
+        let cf = _mm_cvtepi32_ps(c);
+        let t = _mm_sub_ps(cf, z4);
+        _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(s4, t));
+    }
+    super::dequant_affine_scalar(scale, zp, &codes[n..], &mut out[n..]);
+}
+
+/// Survivor scatter: saturated (0xFF) mask bytes — the common case for
+/// mild sparsity — take two 4-wide axpys; partial bytes walk bits
+/// exactly like the scalar kernel.
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn sparse_scatter_axpy_sse41(
+    lam: f32,
+    mask: &[u8],
+    vals: &[f32],
+    first_rank: usize,
+    out: &mut [f32],
+) {
+    let lam4 = _mm_set1_ps(lam);
+    let mut rank = first_rank;
+    for (bi, &byte) in mask.iter().enumerate() {
+        let o = bi * 8;
+        if byte == 0xFF && o + 8 <= out.len() && rank + 8 <= vals.len() {
+            for half in 0..2 {
+                let p = o + half * 4;
+                let v = _mm_loadu_ps(vals.as_ptr().add(rank + half * 4));
+                let d = _mm_loadu_ps(out.as_ptr().add(p));
+                _mm_storeu_ps(out.as_mut_ptr().add(p), _mm_add_ps(d, _mm_mul_ps(lam4, v)));
+            }
+            rank += 8;
+        } else {
+            let mut b = byte;
+            while b != 0 {
+                let bit = b.trailing_zeros() as usize;
+                out[o + bit] += lam * vals[rank];
+                rank += 1;
+                b &= b - 1;
+            }
+        }
+    }
+}
+
+/// One-group signed accumulate, two 4-lane halves per sign byte.
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn signed_axpy_sse41(a: f32, signs: &[u8], start: usize, out: &mut [f32]) {
+    let h = ((8 - start % 8) % 8).min(out.len());
+    super::signed_axpy_scalar(a, signs, start, &mut out[..h]);
+    let a4 = _mm_set1_ps(a);
+    let mut j = h;
+    while j + 8 <= out.len() {
+        let byte = signs[(start + j) / 8] as usize;
+        let row = tables::SIGN_FLIP[byte].as_ptr();
+        for half in 0..2 {
+            let flip = _mm_loadu_si128(row.add(half * 4) as *const __m128i);
+            let v = _mm_xor_ps(a4, _mm_castsi128_ps(flip));
+            let d = _mm_loadu_ps(out.as_ptr().add(j + half * 4));
+            _mm_storeu_ps(out.as_mut_ptr().add(j + half * 4), _mm_add_ps(d, v));
+        }
+        j += 8;
+    }
+    super::signed_axpy_scalar(a, signs, start + j, &mut out[j..]);
+}

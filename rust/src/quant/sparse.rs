@@ -241,17 +241,34 @@ impl<'a> SparseGroupQuantizedView<'a> {
         self.axpy_range_into(lam, 0, out, codes_scratch, vals_scratch);
     }
 
-    /// Sharded scatter-accumulate: `out` covers the dense index range
+    /// Sharded scatter-accumulate over the process-wide active kernel:
+    /// `out` covers the dense index range
     /// `[byte0 * 8, byte0 * 8 + out.len())`, which must start on a
     /// mask-byte boundary and end on one (or at `dense_len`) — the shard
-    /// geometry the parallel fused merge carves.  The shard's survivor
-    /// values are located by prefix popcount and decoded through the
-    /// group-range decoder, so each survivor gets the exact same
-    /// `scale * (code - zp)` value as in the full pass
-    /// ([`axpy_into`](Self::axpy_into) delegates here with the full
-    /// range): disjoint shards reproduce it bit-for-bit.
+    /// geometry the parallel fused merge carves.
     pub fn axpy_range_into(
         &self,
+        lam: f32,
+        byte0: usize,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+        vals_scratch: &mut Vec<f32>,
+    ) {
+        self.axpy_range_into_k(super::simd::active(), lam, byte0, out, codes_scratch, vals_scratch);
+    }
+
+    /// [`axpy_range_into`](Self::axpy_range_into) over an explicit
+    /// kernel.  The shard's survivor values are located by prefix
+    /// popcount and decoded through the group-range decoder, so each
+    /// survivor gets the exact same `scale * (code - zp)` value as in
+    /// the full pass ([`axpy_into`](Self::axpy_into) delegates here
+    /// with the full range), and the scatter kernels touch survivor
+    /// lanes with the exact scalar op pair (`mul`, `add`) while
+    /// preserving the original bits of masked-out lanes: disjoint
+    /// shards reproduce the full pass bit-for-bit on any kernel.
+    pub fn axpy_range_into_k(
+        &self,
+        kernel: super::simd::Kernel,
         lam: f32,
         byte0: usize,
         out: &mut [f32],
@@ -272,25 +289,25 @@ impl<'a> SparseGroupQuantizedView<'a> {
         if in_range == 0 {
             return;
         }
-        // Decode exactly the survivor groups covering [s_lo, s_lo + n).
+        // Decode exactly the survivor groups covering [s_lo, s_lo + n),
+        // over-allocating the scratch by the vector window slack (the
+        // slack is only read by lanes the scatter kernel blends away,
+        // so its stale contents never reach the output).
         let group = self.survivors.group();
         let g0 = s_lo / group;
         let g1 = (s_lo + in_range).div_ceil(group);
-        vals_scratch.resize((g1 - g0) * group, 0.0);
+        let need = (g1 - g0) * group;
+        vals_scratch.resize(need + super::simd::SPARSE_VALS_SLACK, 0.0);
         self.survivors
-            .dequantize_groups_into(g0, vals_scratch, codes_scratch);
-        let base = g0 * group;
-        let mut s = s_lo;
-        for (bi, &byte) in mask_range.iter().enumerate() {
-            let mut b = byte;
-            while b != 0 {
-                let bit = b.trailing_zeros() as usize;
-                out[bi * 8 + bit] += lam * vals_scratch[s - base];
-                s += 1;
-                b &= b - 1;
-            }
-        }
-        debug_assert_eq!(s, s_lo + in_range);
+            .dequantize_groups_into_k(kernel, g0, &mut vals_scratch[..need], codes_scratch);
+        super::simd::sparse_scatter_axpy(
+            kernel,
+            lam,
+            mask_range,
+            vals_scratch,
+            s_lo - g0 * group,
+            out,
+        );
     }
 
     /// Reconstruct into a caller buffer (overwrites all of `out`):
@@ -302,9 +319,22 @@ impl<'a> SparseGroupQuantizedView<'a> {
         codes_scratch: &mut Vec<u32>,
         vals_scratch: &mut Vec<f32>,
     ) {
+        self.dequantize_into_k(super::simd::active(), out, codes_scratch, vals_scratch);
+    }
+
+    /// [`dequantize_into`](Self::dequantize_into) over an explicit
+    /// kernel (the serve paths thread
+    /// [`ExecCtx::kernel`](crate::util::exec::ExecCtx::kernel) here).
+    pub fn dequantize_into_k(
+        &self,
+        kernel: super::simd::Kernel,
+        out: &mut [f32],
+        codes_scratch: &mut Vec<u32>,
+        vals_scratch: &mut Vec<f32>,
+    ) {
         assert_eq!(out.len(), self.dense_len);
         out.fill(0.0);
-        self.axpy_into(1.0, out, codes_scratch, vals_scratch);
+        self.axpy_range_into_k(kernel, 1.0, 0, out, codes_scratch, vals_scratch);
     }
 
     /// Materialize an owned [`SparseGroupQuantized`].

@@ -1070,7 +1070,7 @@ impl Registry {
         if self.plan.is_some() {
             // Planned decode is shared with the sharded registry (one
             // code path, bit-identical output across tiers).
-            return super::store::planned_task_vector(self, t, ctx.pool());
+            return super::store::planned_task_vector(self, t, ctx);
         }
         let payload = self.load_task_payload(t)?;
         let q = match payload {

@@ -121,19 +121,21 @@ pub(crate) fn decode_planned_base_hats<S: PlannedSectionSource + ?Sized>(
 /// source, one pool job per tensor.  Tensors assemble in plan order and
 /// no job touches another's output, so the reconstruction is
 /// bit-identical at every thread count *and* across storage tiers (the
-/// sharded tiers feed this same loop).
+/// sharded tiers feed this same loop); each section decodes through the
+/// context's SIMD kernel, itself bit-identical to the scalar reference.
 pub(crate) fn planned_task_vector<S: PlannedSectionSource + ?Sized>(
     src: &S,
     t: usize,
-    pool: &Pool,
+    ctx: &ExecCtx,
 ) -> Result<Checkpoint> {
     let plan = src.pack_plan()?;
     if t >= plan.n_tasks() {
         bail!("task index {t} out of range ({} tasks)", plan.n_tasks());
     }
+    let kern = ctx.kernel();
     let base_hats = src.planned_base_hats()?;
     let slots: Vec<usize> = (0..plan.n_tensors()).collect();
-    let parts: Vec<Tensor> = pool.try_map(slots, |_, l| {
+    let parts: Vec<Tensor> = ctx.pool().try_map(slots, |_, l| {
         let tensor = &plan.tensors[l];
         let a = &plan.assignments[l];
         // Per-job scratches: in Mmap mode every section is dequantized
@@ -145,7 +147,7 @@ pub(crate) fn planned_task_vector<S: PlannedSectionSource + ?Sized>(
         let mut buf = vec![0.0f32; tensor.padded()];
         match src.planned_task_view(t, l, &mut scratch)? {
             PayloadView::Group(gq) => {
-                gq.dequantize_into(&mut buf, &mut codes);
+                gq.dequantize_into_k(kern, &mut buf, &mut codes);
                 if let Arm::Rtvq { .. } = a.arm {
                     let base = base_hats[l]
                         .as_ref()
@@ -157,9 +159,11 @@ pub(crate) fn planned_task_vector<S: PlannedSectionSource + ?Sized>(
             }
             // Sparse arms: survivors scatter into a zeroed dense buffer;
             // masked-out weights reconstruct as 0.
-            PayloadView::SparseGroup(s) => s.dequantize_into(&mut buf, &mut codes, &mut vals),
+            PayloadView::SparseGroup(s) => {
+                s.dequantize_into_k(kern, &mut buf, &mut codes, &mut vals)
+            }
             // 1-bit arms: ±scale per sign bit, straight from the bitmap.
-            PayloadView::Binary(b) => b.dequantize_into(&mut buf),
+            PayloadView::Binary(b) => b.dequantize_into_k(kern, &mut buf),
             other => bail!("planned task section decoded to an unexpected payload: {other:?}"),
         }
         buf.truncate(tensor.numel());
@@ -905,7 +909,7 @@ impl ShardedRegistry {
     /// running the identical shared decode loop.
     pub fn load_task_vector(&self, t: usize, ctx: &ExecCtx) -> Result<Checkpoint> {
         let _op = ctx.op_span(obs::Category::Registry);
-        planned_task_vector(self, t, ctx.pool())
+        planned_task_vector(self, t, ctx)
     }
 
     /// Fetch-and-verify every chunk plus a full row-vs-plan binding

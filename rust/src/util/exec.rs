@@ -27,22 +27,26 @@
 //! ```
 
 use crate::obs;
+use crate::quant::simd::Kernel;
 use crate::util::pool::Pool;
 
 /// Execution context for parallelizable registry / merge / quantize
-/// operations: which [`Pool`] runs the work, and an optional span label
-/// under which the operation reports itself to the tracing layer.
+/// operations: which [`Pool`] runs the work, which SIMD [`Kernel`]
+/// drives the decode/axpy inner loops, and an optional span label under
+/// which the operation reports itself to the tracing layer.
 #[derive(Clone, Copy)]
 pub struct ExecCtx<'p> {
     pool: &'p Pool,
+    kernel: Kernel,
     trace: Option<&'static str>,
 }
 
 impl Default for ExecCtx<'static> {
-    /// The shared global pool (width from `--threads` / `TVQ_THREADS`),
-    /// no extra tracing — what the serve path wants.
+    /// The shared global pool (width from `--threads` / `TVQ_THREADS`)
+    /// and the detected SIMD kernel (overridable via `TVQ_SIMD`), no
+    /// extra tracing — what the serve path wants.
     fn default() -> Self {
-        ExecCtx { pool: Pool::global(), trace: None }
+        ExecCtx { pool: Pool::global(), kernel: crate::quant::simd::active(), trace: None }
     }
 }
 
@@ -50,7 +54,7 @@ impl<'p> ExecCtx<'p> {
     /// Context over an explicit pool (thread-scaling benches and the
     /// determinism suites pin widths through this).
     pub fn with_pool(pool: &'p Pool) -> ExecCtx<'p> {
-        ExecCtx { pool, trace: None }
+        ExecCtx { pool, kernel: crate::quant::simd::active(), trace: None }
     }
 
     /// The single-threaded reference context — bit-exact twin of every
@@ -58,7 +62,21 @@ impl<'p> ExecCtx<'p> {
     /// worker spawn costs more than the decode.
     pub fn sequential() -> ExecCtx<'static> {
         static SEQ: std::sync::OnceLock<Pool> = std::sync::OnceLock::new();
-        ExecCtx { pool: SEQ.get_or_init(Pool::sequential), trace: None }
+        ExecCtx {
+            pool: SEQ.get_or_init(Pool::sequential),
+            kernel: crate::quant::simd::active(),
+            trace: None,
+        }
+    }
+
+    /// Pin the SIMD kernel for operations entered with this context —
+    /// the parity suites compare `with_kernel(Kernel::Scalar)` against
+    /// each detected kernel.  Panics if `kernel` is not available on
+    /// this CPU (the dispatchers would hit undefined instructions).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        assert!(kernel.is_available(), "kernel {} not available on this CPU", kernel.label());
+        self.kernel = kernel;
+        self
     }
 
     /// Attach a trace label: the operation entered with this context
@@ -74,6 +92,11 @@ impl<'p> ExecCtx<'p> {
     /// The pool operations fan work out on.
     pub fn pool(&self) -> &'p Pool {
         self.pool
+    }
+
+    /// The SIMD kernel driving the decode/axpy inner loops.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// The trace label, if one was attached via [`ExecCtx::traced`].
@@ -98,6 +121,17 @@ mod tests {
         assert!(ExecCtx::sequential().pool().is_sequential());
         let pool = Pool::new(3);
         assert_eq!(ExecCtx::with_pool(&pool).pool().threads(), 3);
+    }
+
+    #[test]
+    fn kernel_defaults_to_active_and_pins() {
+        assert_eq!(ExecCtx::default().kernel(), crate::quant::simd::active());
+        let scalar = ExecCtx::sequential().with_kernel(Kernel::Scalar);
+        assert_eq!(scalar.kernel(), Kernel::Scalar);
+        // Every detected kernel is accepted by the builder.
+        for k in crate::quant::simd::detected() {
+            assert_eq!(ExecCtx::default().with_kernel(k).kernel(), k);
+        }
     }
 
     #[test]

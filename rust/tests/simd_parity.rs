@@ -1,0 +1,446 @@
+//! SIMD kernel parity (ISSUE 10): every kernel [`detected`] on the
+//! running machine must produce **bit-identical** f32 output to the
+//! scalar reference for all four dispatched primitives — low-bit
+//! unpack, group dequant/axpy, sparse scatter-axpy, 1-bit signed axpy —
+//! across every width 1..=8, unaligned range starts, group-boundary
+//! straddles, and NaN / denormal / signed-zero scales.  Together with
+//! `pool_determinism.rs` this pins the extended contract: merged floats
+//! are identical at *any thread count × any kernel*, with `threads=1 ×
+//! scalar` the reference.
+//!
+//! The suite doubles as the producer of the cross-runtime parity
+//! fixture: `export_python_parity_fixtures` writes Rust-packed section
+//! bytes plus scalar-decoded goldens under `target/parity/`, which
+//! `python/tests/test_packed_merge_parity.py` decodes through the
+//! Pallas `packed_merge` kernels and compares byte-for-byte.
+//!
+//! [`detected`]: tvq::quant::simd::detected
+
+mod common;
+
+use common::fixtures::{assert_ckpt_bit_eq, het_cfg, het_zoo, onebit_cfg, tmp, THREADS};
+use tvq::planner::{fused_merge, probe, solve, write_planned_registry};
+use tvq::quant::simd::{self, Kernel};
+use tvq::quant::{
+    BinarySwitch, BinarySwitchView, BitPacked, BitPackedView, GroupQuantized,
+    GroupQuantizedView, SparseGroupQuantized, SparseGroupQuantizedView,
+};
+use tvq::registry::Registry;
+use tvq::util::exec::ExecCtx;
+use tvq::util::pool::Pool;
+use tvq::util::rng::Rng;
+
+/// Serialize a group payload's wire params (scales then zps, 4 LE bytes
+/// per group each — the kind-2 section layout).
+fn group_params(gq: &GroupQuantized) -> Vec<u8> {
+    let mut out = Vec::with_capacity(gq.n_groups() * 8);
+    for &s in &gq.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    for &z in &gq.zps {
+        out.extend_from_slice(&z.to_le_bytes());
+    }
+    out
+}
+
+fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rand_codes(rng: &mut Rng, len: usize, bits: u8) -> Vec<u32> {
+    (0..len).map(|_| rng.below(1usize << bits) as u32).collect()
+}
+
+#[test]
+fn unpack_range_parity_all_widths_starts_and_lengths() {
+    let mut rng = Rng::new(0x51D0);
+    let len = 1013; // not a multiple of any block size; ragged tails everywhere
+    for bits in 1u8..=8 {
+        let codes = rand_codes(&mut rng, len, bits);
+        let packed = BitPacked::pack(&codes, bits).unwrap();
+        let bytes = packed.packed_bytes();
+        let view = BitPackedView::new(bits, len, &bytes).unwrap();
+        for k in simd::detected() {
+            for &start in &[0usize, 1, 3, 7, 8, 13, 64, 129] {
+                for &n in &[0usize, 1, 5, 8, 16, 31, 257, len - start] {
+                    if start + n > len {
+                        continue;
+                    }
+                    let mut got = vec![u32::MAX; n];
+                    view.unpack_range_into_k(k, start, &mut got);
+                    assert_eq!(
+                        got,
+                        &codes[start..start + n],
+                        "kernel {} bits {bits} range [{start}, +{n})",
+                        k.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn unpack_blocks_decodes_an_exact_prefix() {
+    // The dispatched block decoder may stop at any kernel-specific block
+    // multiple; whatever prefix it claims must be exact.
+    let mut rng = Rng::new(0x51D1);
+    let len = 777;
+    for bits in 1u8..=8 {
+        let codes = rand_codes(&mut rng, len, bits);
+        let packed = BitPacked::pack(&codes, bits).unwrap();
+        let bytes = packed.packed_bytes();
+        for k in simd::detected() {
+            let mut out = vec![u32::MAX; len];
+            let done = simd::unpack_blocks(k, bits, &bytes, &mut out);
+            assert!(done <= len, "kernel {} bits {bits}: done {done} > {len}", k.label());
+            assert_eq!(
+                &out[..done],
+                &codes[..done],
+                "kernel {} bits {bits}: prefix of {done} codes diverged",
+                k.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn group_axpy_and_dequant_parity_across_shards() {
+    let mut rng = Rng::new(0x51D2);
+    // Group widths that straddle (96) and align with (128/256) the 4/8/16
+    // lane blocks the kernels use.
+    for &(len, group) in &[(1024usize, 128usize), (960, 96), (768, 256)] {
+        let mut data = vec![0.0f32; len];
+        rng.fill_normal(&mut data, 0.05);
+        for &bits in &[2u8, 3, 4, 8] {
+            let gq = GroupQuantized::quantize(&data, bits, group).unwrap();
+            let params = group_params(&gq);
+            let bytes = gq.codes.packed_bytes();
+            let view = GroupQuantizedView::new(
+                bits,
+                group,
+                gq.n_groups(),
+                &params,
+                BitPackedView::new(bits, len, &bytes).unwrap(),
+            )
+            .unwrap();
+            let n_groups = gq.n_groups();
+            let mut codes = Vec::new();
+
+            // Scalar reference: one full-range pass of each op.
+            let mut want_axpy = vec![0.25f32; len];
+            view.axpy_groups_into_k(Kernel::Scalar, -0.75, 0, &mut want_axpy, &mut codes)
+                .unwrap();
+            let mut want_dq = vec![0.0f32; len];
+            view.dequantize_groups_into_k(Kernel::Scalar, 0, &mut want_dq, &mut codes);
+
+            for k in simd::detected() {
+                // Full range and group-aligned shards of 1 / 3 groups.
+                for &shard_groups in &[n_groups, 1, 3] {
+                    let mut got_axpy = vec![0.25f32; len];
+                    let mut got_dq = vec![0.0f32; len];
+                    let mut g0 = 0;
+                    while g0 < n_groups {
+                        let g1 = (g0 + shard_groups).min(n_groups);
+                        let (lo, hi) = (g0 * group, g1 * group);
+                        view.axpy_groups_into_k(k, -0.75, g0, &mut got_axpy[lo..hi], &mut codes)
+                            .unwrap();
+                        view.dequantize_groups_into_k(k, g0, &mut got_dq[lo..hi], &mut codes);
+                        g0 = g1;
+                    }
+                    assert_eq!(
+                        f32_bits(&got_axpy),
+                        f32_bits(&want_axpy),
+                        "axpy: kernel {} bits {bits} group {group} shard {shard_groups}",
+                        k.label()
+                    );
+                    assert_eq!(
+                        f32_bits(&got_dq),
+                        f32_bits(&want_dq),
+                        "dequant: kernel {} bits {bits} group {group} shard {shard_groups}",
+                        k.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn group_axpy_parity_with_nan_and_denormal_scales() {
+    // Corrupt-adjacent params the wire can carry: NaN, denormal, zero and
+    // negative scales / zero points.  Kernels must propagate them with
+    // the exact bits the scalar loop produces.
+    let mut rng = Rng::new(0x51D3);
+    let (len, group, bits) = (64usize, 8usize, 4u8);
+    let codes = rand_codes(&mut rng, len, bits);
+    let packed = BitPacked::pack(&codes, bits).unwrap();
+    let bytes = packed.packed_bytes();
+    let scales = [f32::NAN, 1.0e-42, 0.0, -0.0, -3.5, f32::MIN_POSITIVE, 7.25, 1.5e-40];
+    let zps = [0.0f32, 7.5, f32::NAN, 3.0, -2.0, 1.0e-41, 15.0, 0.5];
+    let mut params = Vec::new();
+    for s in scales {
+        params.extend_from_slice(&s.to_le_bytes());
+    }
+    for z in zps {
+        params.extend_from_slice(&z.to_le_bytes());
+    }
+    let view = GroupQuantizedView::new(
+        bits,
+        group,
+        8,
+        &params,
+        BitPackedView::new(bits, len, &bytes).unwrap(),
+    )
+    .unwrap();
+    let mut codes_scratch = Vec::new();
+    let mut want = vec![0.5f32; len];
+    view.axpy_groups_into_k(Kernel::Scalar, 0.375, 0, &mut want, &mut codes_scratch).unwrap();
+    let mut want_dq = vec![0.0f32; len];
+    view.dequantize_groups_into_k(Kernel::Scalar, 0, &mut want_dq, &mut codes_scratch);
+    for k in simd::detected() {
+        let mut got = vec![0.5f32; len];
+        view.axpy_groups_into_k(k, 0.375, 0, &mut got, &mut codes_scratch).unwrap();
+        assert_eq!(f32_bits(&got), f32_bits(&want), "axpy special scales: {}", k.label());
+        let mut got_dq = vec![0.0f32; len];
+        view.dequantize_groups_into_k(k, 0, &mut got_dq, &mut codes_scratch);
+        assert_eq!(f32_bits(&got_dq), f32_bits(&want_dq), "dequant special: {}", k.label());
+    }
+}
+
+#[test]
+fn sparse_scatter_parity_with_mixed_mask_density() {
+    let mut rng = Rng::new(0x51D4);
+    let dense_len = 1000; // ends mid mask byte
+    let mut data = vec![0.0f32; dense_len];
+    rng.fill_normal(&mut data, 0.1);
+    // Saturated head (0xFF bytes → the vector fast path), then stretches
+    // of every-3rd and every-7th survivors (partial bytes), then a final
+    // survivor inside the ragged tail byte.
+    let mut keep: Vec<usize> = (0..128).collect();
+    keep.extend((130..500).step_by(3));
+    keep.extend((502..996).step_by(7));
+    keep.push(999);
+    let s = SparseGroupQuantized::quantize_indices(&data, &keep, 1.0, 4, 32).unwrap();
+    let params = group_params(&s.survivors);
+    let sbytes = s.survivors.codes.packed_bytes();
+    let sview = GroupQuantizedView::new(
+        4,
+        32,
+        s.survivors.n_groups(),
+        &params,
+        BitPackedView::new(4, s.survivors.len(), &sbytes).unwrap(),
+    )
+    .unwrap();
+    let view =
+        SparseGroupQuantizedView::new(dense_len, s.n_survivors, &s.mask, sview).unwrap();
+
+    // Accumulator pre-filled with a mix of values including -0.0: the
+    // scatter must leave every masked-out lane's bits untouched.
+    let prefill: Vec<f32> = (0..dense_len)
+        .map(|i| if i % 5 == 0 { -0.0 } else { (i as f32) * 0.125 - 40.0 })
+        .collect();
+
+    let (mut codes, mut vals) = (Vec::new(), Vec::new());
+    let mut want = prefill.clone();
+    view.axpy_range_into_k(Kernel::Scalar, -0.6, 0, &mut want, &mut codes, &mut vals);
+
+    for k in simd::detected() {
+        // Full range plus byte-aligned shards of 1 / 2 / 17 mask bytes.
+        for &shard_bytes in &[125usize, 1, 2, 17] {
+            let mut got = prefill.clone();
+            let mut byte0 = 0;
+            while byte0 * 8 < dense_len {
+                let lo = byte0 * 8;
+                let hi = (lo + shard_bytes * 8).min(dense_len);
+                view.axpy_range_into_k(k, -0.6, byte0, &mut got[lo..hi], &mut codes, &mut vals);
+                byte0 += shard_bytes;
+            }
+            assert_eq!(
+                f32_bits(&got),
+                f32_bits(&want),
+                "sparse scatter: kernel {} shard_bytes {shard_bytes}",
+                k.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn binary_signed_parity_with_straddling_groups_and_special_scales() {
+    let mut rng = Rng::new(0x51D5);
+    // Group 67 never aligns with sign bytes: every vector call crosses a
+    // group boundary mid-byte somewhere.
+    let (len, group) = (1005usize, 67usize);
+    let mut data = vec![0.0f32; len];
+    rng.fill_normal(&mut data, 0.05);
+    let b = BinarySwitch::quantize(&data, group).unwrap();
+    // Replace a few scales with special values the wire could carry.
+    let mut scales = b.scales.clone();
+    scales[0] = f32::NAN;
+    scales[3] = 1.0e-42;
+    scales[7] = 0.0;
+    scales[11] = -0.0;
+    let mut params = Vec::new();
+    for &s in &scales {
+        params.extend_from_slice(&s.to_le_bytes());
+    }
+    let view = BinarySwitchView::new(group, b.n_groups(), &params, &b.signs).unwrap();
+
+    let mut want = vec![0.25f32; len];
+    view.axpy_range_into_k(Kernel::Scalar, -0.75, 0, &mut want);
+
+    for k in simd::detected() {
+        for &shard_bytes in &[126usize, 1, 3, 16] {
+            let mut got = vec![0.25f32; len];
+            let mut byte0 = 0;
+            while byte0 * 8 < len {
+                let lo = byte0 * 8;
+                let hi = (lo + shard_bytes * 8).min(len);
+                view.axpy_range_into_k(k, -0.75, byte0, &mut got[lo..hi]);
+                byte0 += shard_bytes;
+            }
+            assert_eq!(
+                f32_bits(&got),
+                f32_bits(&want),
+                "binary: kernel {} shard_bytes {shard_bytes}",
+                k.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_merge_bit_identical_across_kernels_and_threads() {
+    // End to end: planned registries covering every section family —
+    // het_cfg plans dense kind-2 / residual / sparse kind-4 arms,
+    // onebit_cfg forces every tensor onto kind-5 binary switches —
+    // merged under every detected kernel at every pool width, must
+    // reproduce the threads=1 × scalar reference exactly.
+    let dir = tmp("simd_parity", "e2e");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (pre, fts) = het_zoo(4, 0x51D6);
+    let lams = [0.3f32, -0.2, 0.15, 0.4];
+
+    for (tag, cfg) in [("het", het_cfg()), ("onebit", onebit_cfg(384))] {
+        let profile = probe(&pre, &fts, &cfg).unwrap();
+        let plan = solve(&profile, u64::MAX).unwrap();
+        let path = dir.join(format!("planned_{tag}.qtvc"));
+        write_planned_registry(&pre, &fts, &plan, &path).unwrap();
+        let reg = Registry::open(&path).unwrap();
+
+        let seq_scalar = ExecCtx::sequential().with_kernel(Kernel::Scalar);
+        let reference = fused_merge(&reg, &pre, &lams, None, &seq_scalar).unwrap();
+        let tau_ref = reg.load_task_vector(1, &seq_scalar).unwrap();
+
+        for k in simd::detected() {
+            for &t in &THREADS {
+                let pool = Pool::new(t);
+                let ctx = ExecCtx::with_pool(&pool).with_kernel(k);
+                let merged = fused_merge(&reg, &pre, &lams, None, &ctx).unwrap();
+                assert_ckpt_bit_eq(
+                    &merged,
+                    &reference,
+                    &format!("fused_merge[{tag}] kernel={} threads={t}", k.label()),
+                );
+                let tau = reg.load_task_vector(1, &ctx).unwrap();
+                assert_ckpt_bit_eq(
+                    &tau,
+                    &tau_ref,
+                    &format!("load_task_vector[{tag}] kernel={} threads={t}", k.label()),
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Write the cross-runtime parity fixture: Rust-packed kind-2 and
+/// kind-4 payload bytes (codes as little-endian i32 words — the Pallas
+/// `packed_merge` input convention), their wire params, and the
+/// scalar-kernel decode as the f32 golden.
+/// `python/tests/test_packed_merge_parity.py` loads these and asserts
+/// the Python decode is byte-identical.  Output dir: `TVQ_PARITY_DIR`,
+/// default `target/parity/` under the cargo workspace.
+#[test]
+fn export_python_parity_fixtures() {
+    let dir = std::env::var("TVQ_PARITY_DIR").unwrap_or_else(|_| {
+        format!("{}/target/parity", env!("CARGO_MANIFEST_DIR"))
+    });
+    let dir = std::path::PathBuf::from(dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(0x9A71);
+
+    let f32s_to_le = |v: &[f32]| -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    };
+
+    // kind-2: group-quantized dense payload, 4-bit, group 128.
+    let (n2, group2, bits2) = (1024usize, 128usize, 4u8);
+    let mut data = vec![0.0f32; n2];
+    rng.fill_normal(&mut data, 0.05);
+    let gq = GroupQuantized::quantize(&data, bits2, group2).unwrap();
+    let gq_bytes = gq.codes.packed_bytes();
+    let gq_view = BitPackedView::new(bits2, n2, &gq_bytes).unwrap();
+    let words: Vec<u8> =
+        gq.codes.to_i32_words().unwrap().iter().flat_map(|w| w.to_le_bytes()).collect();
+    let codes_u8: Vec<u8> = gq.codes.iter().map(|c| c as u8).collect();
+    let params2 = group_params(&gq);
+    let view2 = GroupQuantizedView::new(bits2, group2, gq.n_groups(), &params2, gq_view).unwrap();
+    let mut golden2 = vec![0.0f32; n2];
+    let mut scratch = Vec::new();
+    view2.dequantize_into_k(Kernel::Scalar, &mut golden2, &mut scratch);
+    std::fs::write(dir.join("kind2_words.bin"), &words).unwrap();
+    std::fs::write(dir.join("kind2_codes.bin"), &codes_u8).unwrap();
+    std::fs::write(dir.join("kind2_scales.bin"), f32s_to_le(&gq.scales)).unwrap();
+    std::fs::write(dir.join("kind2_zps.bin"), f32s_to_le(&gq.zps)).unwrap();
+    std::fs::write(dir.join("kind2_golden.bin"), f32s_to_le(&golden2)).unwrap();
+
+    // kind-4: sparse payload — bitmask + 4-bit group-quantized survivors
+    // (group 32, so the padded survivor count stays i32-word aligned).
+    let (n4, group4, bits4) = (512usize, 32usize, 4u8);
+    let mut dense = vec![0.0f32; n4];
+    rng.fill_normal(&mut dense, 0.1);
+    let mut keep: Vec<usize> = (0..64).collect();
+    keep.extend((66..n4).step_by(3));
+    let s = SparseGroupQuantized::quantize_indices(&dense, &keep, 1.0, bits4, group4).unwrap();
+    let s_bytes = s.survivors.codes.packed_bytes();
+    let s_codes = BitPackedView::new(bits4, s.survivors.len(), &s_bytes).unwrap();
+    let s_words: Vec<u8> =
+        s.survivors.codes.to_i32_words().unwrap().iter().flat_map(|w| w.to_le_bytes()).collect();
+    let params4 = group_params(&s.survivors);
+    let sview = GroupQuantizedView::new(bits4, group4, s.survivors.n_groups(), &params4, s_codes)
+        .unwrap();
+    let view4 = SparseGroupQuantizedView::new(n4, s.n_survivors, &s.mask, sview).unwrap();
+    let mut golden4 = vec![0.0f32; n4];
+    let (mut codes, mut vals) = (Vec::new(), Vec::new());
+    view4.dequantize_into_k(Kernel::Scalar, &mut golden4, &mut codes, &mut vals);
+    std::fs::write(dir.join("kind4_mask.bin"), &s.mask).unwrap();
+    std::fs::write(dir.join("kind4_words.bin"), &s_words).unwrap();
+    std::fs::write(dir.join("kind4_scales.bin"), f32s_to_le(&s.survivors.scales)).unwrap();
+    std::fs::write(dir.join("kind4_zps.bin"), f32s_to_le(&s.survivors.zps)).unwrap();
+    std::fs::write(dir.join("kind4_golden.bin"), f32s_to_le(&golden4)).unwrap();
+
+    let manifest = format!(
+        concat!(
+            "{{\n",
+            "  \"kind2\": {{\"n\": {}, \"group\": {}, \"bits\": {}, \"n_groups\": {}}},\n",
+            "  \"kind4\": {{\"dense_len\": {}, \"n_survivors\": {}, \"padded_survivors\": {}, ",
+            "\"group\": {}, \"bits\": {}, \"n_groups\": {}}}\n",
+            "}}\n"
+        ),
+        n2,
+        group2,
+        bits2,
+        gq.n_groups(),
+        n4,
+        s.n_survivors,
+        s.survivors.len(),
+        group4,
+        bits4,
+        s.survivors.n_groups(),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    eprintln!("[simd_parity] wrote python parity fixture to {}", dir.display());
+}
